@@ -1,0 +1,63 @@
+//! Device-selection demo (paper §4.4): built-in and plug-in filters.
+//!
+//! Run with: `cargo run --release --example device_filter`
+
+use cf4rs::ccl::{Context, Device, Filter, FilterChain};
+
+fn show(label: &str, devs: &[Device]) {
+    println!("{label}:");
+    for d in devs {
+        println!(
+            "  - {} ({} CUs, wg multiple {})",
+            d.name().unwrap(),
+            d.max_compute_units().unwrap(),
+            d.preferred_wg_multiple().unwrap(),
+        );
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // No filters: everything in the system.
+    show("all devices", &FilterChain::new().select());
+
+    // Independent filter: GPUs only.
+    show("GPUs", &FilterChain::new().add(Filter::type_gpu()).select());
+
+    // Independent filter: vendor substring (case-insensitive).
+    show(
+        "NVIDIA-profile devices",
+        &FilterChain::new().add(Filter::vendor_contains("nvidia")).select(),
+    );
+
+    // Dependent filter: the device with the most compute units.
+    show(
+        "most compute units",
+        &FilterChain::new().add(Filter::most_compute_units()).select(),
+    );
+
+    // Plug-in filter (a closure): wavefront/warp of at least 64 —
+    // exactly the extension mechanism the paper describes.
+    show(
+        "custom plug-in (wg multiple >= 64)",
+        &FilterChain::new()
+            .add_indep(|d| d.preferred_wg_multiple().unwrap_or(0) >= 64)
+            .select(),
+    );
+
+    // Chains compose: GPUs, then second match only.
+    show(
+        "second GPU",
+        &FilterChain::new().add(Filter::type_gpu()).add(Filter::index(1)).select(),
+    );
+
+    // And a context can be built straight from a chain.
+    let ctx = Context::new_from_filters(
+        FilterChain::new().add(Filter::name_contains("7970")),
+    )?;
+    println!(
+        "context created on: {} ({} device(s))",
+        ctx.device(0)?.name()?,
+        ctx.num_devices()
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Profiler walk-through (paper §4.3): aggregates, per-event info,
+//! instants, overlaps, the Fig. 3 summary, and the Fig. 5 export.
+//!
+//! Run with: `cargo run --release --example profile_demo`
+
+use cf4rs::ccl::prof::{AggSort, OverlapSort, SortDir};
+use cf4rs::ccl::{Arg, Buffer, Context, Prof, Program, Queue};
+use cf4rs::rawcl::types::MemFlags;
+
+const N: usize = 65536;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Slow-motion simulation so the timeline follows the device model
+    // (see DESIGN.md §2 — interesting charts need model-dominated time).
+    std::env::set_var("CF4RS_SIM_TIMESCALE", "0.02");
+
+    let ctx = Context::new_gpu()?;
+    let dev = ctx.device(0)?;
+    let q_compute = Queue::new_profiled(&ctx, dev)?;
+    let q_io = Queue::new_profiled(&ctx, dev)?;
+
+    let prg = Program::new_from_artifacts(&ctx, &["init_n65536", "rng_n65536"])?;
+    prg.build()?;
+    let kinit = prg.kernel("prng_init")?;
+    let krng = prg.kernel("prng_step")?;
+
+    let a = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8)?;
+    let b = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8)?;
+
+    let mut prof = Prof::new();
+    prof.start();
+
+    // seed
+    let (gws, lws) = kinit.suggest_worksizes(dev, &[N])?;
+    let ev = kinit.set_args_and_enqueue_ndrange(
+        &q_compute, &gws, Some(&lws), &[],
+        &[Arg::buf(&a), Arg::priv_u32(N as u32)],
+    )?;
+    ev.set_name("SEED")?;
+
+    // Three compute steps; each read of the previous batch overlaps the
+    // next kernel because it runs on the other queue.
+    krng.set_arg(0, &Arg::priv_u32(N as u32))?;
+    let mut host = vec![0u8; N * 8];
+    let mut prev = ev;
+    let (mut front, mut back) = (&a, &b);
+    for _ in 0..3 {
+        let kev = krng.set_args_and_enqueue_ndrange(
+            &q_compute, &gws, Some(&lws), &[prev],
+            &[Arg::skip(), Arg::buf(front), Arg::buf(back)],
+        )?;
+        kev.set_name("STEP")?;
+        let rev = front.enqueue_read(&q_io, 0, &mut host, &[prev])?;
+        rev.set_name("FETCH")?;
+        prev = kev;
+        std::mem::swap(&mut front, &mut back);
+    }
+    q_compute.finish()?;
+    q_io.finish()?;
+    prof.stop();
+
+    // Analyse.
+    prof.add_queue("Compute", &q_compute);
+    prof.add_queue("IO", &q_io);
+    prof.calc()?;
+
+    // 1. Aggregates.
+    println!("aggregate event times:");
+    for agg in prof.aggs()? {
+        println!(
+            "  {:<12} {:>3} event(s) {:>10} ns total ({:.1}%)",
+            agg.name,
+            agg.count,
+            agg.abs_time,
+            agg.rel_time * 100.0
+        );
+    }
+
+    // 2. Per-event info.
+    println!("\nfirst three events:");
+    for info in prof.infos()?.iter().take(3) {
+        println!(
+            "  [{:<7}] {:<12} start={} end={} dur={}ns",
+            info.queue,
+            info.name,
+            info.t_start,
+            info.t_end,
+            info.duration()
+        );
+    }
+
+    // 3. Overlaps (only possible across queues).
+    println!("\noverlaps:");
+    for ov in prof.overlaps()? {
+        println!("  {} × {} : {} ns", ov.event1, ov.event2, ov.duration);
+    }
+
+    // 4. The Fig. 3 summary.
+    println!(
+        "{}",
+        prof.summary(
+            (AggSort::Time, SortDir::Desc),
+            (OverlapSort::Duration, SortDir::Desc)
+        )?
+    );
+
+    // 5. The Fig. 5 export (plot with: cf4rs plot-events /tmp/demo.tsv).
+    prof.export_tsv("/tmp/cf4rs_profile_demo.tsv")?;
+    println!("export written to /tmp/cf4rs_profile_demo.tsv");
+    Ok(())
+}

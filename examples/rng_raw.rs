@@ -1,0 +1,395 @@
+//! Massive PRNG example — pure `rawcl` realisation (paper listing S1).
+//!
+//! Mirrors `rng_ocl.c` section by section: manual platform discovery,
+//! manual device-info queries (two-call dance), manual kernel-source
+//! loading, manual build-log retrieval, manual work-size calculation,
+//! per-argument `set_kernel_arg` calls, a hand-managed event array for
+//! profiling, and an explicit release block for every object.
+//!
+//! Usage: rng_raw [numrn] [iters]   (stream goes to stdout)
+//! Env:   CF4RS_DEVICE=0|1|2  CF4RS_ARTIFACTS=dir  CF4RS_DISCARD=1
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use cf4rs::coordinator::Semaphore;
+use cf4rs::rawcl::*;
+
+/* Number of random numbers in buffer at each time. */
+const NUMRN_DEFAULT: usize = 1 << 16;
+
+/* Number of iterations producing random numbers. */
+const NUMITER_DEFAULT: usize = 16;
+
+/* Error handling macro. */
+macro_rules! handle_error {
+    ($status:expr) => {
+        if $status != CL_SUCCESS {
+            eprintln!(
+                "\nrawcl error {} ({}) at line {}",
+                $status,
+                status_name($status),
+                line!()
+            );
+            std::process::exit(1);
+        }
+    };
+}
+
+/* Information shared between main thread and data transfer/output thread. */
+struct BufShare {
+    /* Device buffers. */
+    bufdev1: MemH,
+    bufdev2: MemH,
+    /* Command queue for data transfers. */
+    cq: QueueH,
+    /* Array of memory transfer events (kernel events kept by main). */
+    read_evts: Mutex<Vec<EventH>>,
+    /* Possible transfer error. */
+    status: Mutex<ClStatus>,
+    /* Number of random numbers in buffer. */
+    numrn: usize,
+    /* Number of iterations producing random numbers. */
+    numiter: usize,
+    /* Buffer size in bytes. */
+    bufsize: usize,
+    /* Discard output instead of writing to stdout? */
+    discard: bool,
+}
+
+/* Thread semaphores. */
+struct Sems {
+    rng: Semaphore,
+    comm: Semaphore,
+}
+
+/* Write random numbers directly (as binary) to stdout. */
+fn rng_out(bufs: Arc<BufShare>, sems: Arc<Sems>) {
+    /* Host buffer. */
+    let mut bufhost = vec![0u8; bufs.bufsize];
+
+    /* Get initial buffers. */
+    let mut bufdev1 = bufs.bufdev1;
+    let mut bufdev2 = bufs.bufdev2;
+
+    let stdout = std::io::stdout();
+
+    /* Read random numbers and write them to stdout. */
+    for _ in 0..bufs.numiter {
+        /* Wait for RNG kernel from previous iteration before proceeding
+         * with next read. */
+        sems.rng.wait();
+
+        /* Read data from device buffer into host buffer. */
+        let mut evt = EventH::NULL;
+        let status = enqueue_read_buffer(
+            bufs.cq, bufdev1, true, 0, &mut bufhost, &[], Some(&mut evt),
+        );
+
+        /* Signal that read for current iteration is over. */
+        sems.comm.post();
+
+        /* If error occurred in read, terminate thread and let main
+         * thread handle error. */
+        if status != CL_SUCCESS {
+            *bufs.status.lock().unwrap() = status;
+            return;
+        }
+        bufs.read_evts.lock().unwrap().push(evt);
+
+        /* Write raw random numbers to stdout. */
+        if !bufs.discard {
+            let mut out = stdout.lock();
+            out.write_all(&bufhost).ok();
+            out.flush().ok();
+        }
+
+        /* Swap buffers. */
+        std::mem::swap(&mut bufdev1, &mut bufdev2);
+    }
+}
+
+fn main() {
+    /* Parse command-line arguments. */
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let numrn: usize = args
+        .first()
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(NUMRN_DEFAULT);
+    let numiter: usize = args
+        .get(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(NUMITER_DEFAULT);
+    let bufsize = numrn * 8;
+    let rws = numrn;
+    let discard = std::env::var("CF4RS_DISCARD").is_ok();
+
+    /* Which device? Default: first GPU found while cycling platforms. */
+    let want_device: Option<u32> =
+        std::env::var("CF4RS_DEVICE").ok().and_then(|v| v.parse().ok());
+
+    /* Determine number of platforms. */
+    let mut nplatfs = 0u32;
+    let status = get_platform_ids(0, None, Some(&mut nplatfs));
+    handle_error!(status);
+
+    /* Get existing platforms. */
+    let mut platfs = vec![PlatformId(0); nplatfs as usize];
+    let status = get_platform_ids(nplatfs, Some(&mut platfs), None);
+    handle_error!(status);
+
+    /* Cycle through platforms until a GPU device is found. */
+    let mut dev: Option<DeviceId> = None;
+    for &p in &platfs {
+        let mut ndevs = 0u32;
+        let status = get_device_ids(p, DeviceType::GPU, 0, None, Some(&mut ndevs));
+        if status == CL_DEVICE_NOT_FOUND {
+            continue;
+        }
+        handle_error!(status);
+        if ndevs > 0 {
+            /* If so, get first device. */
+            let mut ids = vec![DeviceId(0); ndevs as usize];
+            let status = get_device_ids(p, DeviceType::GPU, ndevs, Some(&mut ids), None);
+            handle_error!(status);
+            dev = Some(ids[0]);
+            break;
+        }
+    }
+    /* Environment override for benchmarking. */
+    if let Some(d) = want_device {
+        dev = Some(DeviceId(d));
+    }
+    /* If no GPU device was found, give up. */
+    let dev = dev.expect("no GPU device found");
+
+    /* Get device name (size query, then data query). */
+    let mut infosize = 0usize;
+    let status = get_device_info(dev, DeviceInfo::Name, None, Some(&mut infosize));
+    handle_error!(status);
+    let mut info = Vec::with_capacity(infosize);
+    let status = get_device_info(dev, DeviceInfo::Name, Some(&mut info), None);
+    handle_error!(status);
+    let dev_name = String::from_utf8_lossy(&info).into_owned();
+
+    /* Create context. */
+    let mut status = CL_SUCCESS;
+    let ctx = create_context(&[dev], &mut status);
+    handle_error!(status);
+
+    /* Create command queues (profiling enabled). */
+    let cq_main = create_command_queue(ctx, dev, QueueProps::PROFILING_ENABLE, &mut status);
+    handle_error!(status);
+    let cq_comms = create_command_queue(ctx, dev, QueueProps::PROFILING_ENABLE, &mut status);
+    handle_error!(status);
+
+    /* Read kernel sources into strings (no native file loading in the
+     * raw API). */
+    let art_dir = std::env::var("CF4RS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let kernel_filenames = [
+        format!("{art_dir}/init_n{numrn}.hlo.txt"),
+        format!("{art_dir}/rng_n{numrn}.hlo.txt"),
+    ];
+    let mut ksources = Vec::with_capacity(2);
+    for f in &kernel_filenames {
+        match std::fs::read_to_string(f) {
+            Ok(src) => ksources.push(src),
+            Err(e) => {
+                eprintln!("cannot read kernel source {f}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    /* Create program. */
+    let prg = create_program_with_source(ctx, &ksources, &mut status);
+    handle_error!(status);
+
+    /* Build program; print build log in case of error. */
+    let status = build_program(prg, None, "");
+    if status == CL_BUILD_PROGRAM_FAILURE {
+        let mut log = String::new();
+        let status2 = get_program_build_log(prg, &mut log);
+        handle_error!(status2);
+        eprintln!("Error building program:\n{log}");
+        std::process::exit(1);
+    } else {
+        handle_error!(status);
+    }
+
+    /* Create init kernel. */
+    let mut status = CL_SUCCESS;
+    let kinit = create_kernel(prg, "prng_init", &mut status);
+    handle_error!(status);
+
+    /* Create rng kernel. */
+    let krng = create_kernel(prg, "prng_step", &mut status);
+    handle_error!(status);
+
+    /* Determine work sizes for each kernel. Minimum-LOC approach: use
+     * the preferred work-group multiple and round up — no multiple
+     * dimensions, no fallbacks (compare ccl's suggest_worksizes). */
+    let mut lws1 = 0usize;
+    let status = get_kernel_work_group_info(
+        kinit, dev, KernelWorkGroupInfo::PreferredWorkGroupSizeMultiple, &mut lws1,
+    );
+    handle_error!(status);
+    let gws1 = rws.div_ceil(lws1) * lws1;
+    let mut lws2 = 0usize;
+    let status = get_kernel_work_group_info(
+        krng, dev, KernelWorkGroupInfo::PreferredWorkGroupSizeMultiple, &mut lws2,
+    );
+    handle_error!(status);
+    let gws2 = rws.div_ceil(lws2) * lws2;
+
+    /* Create device buffers. */
+    let mut status = CL_SUCCESS;
+    let bufdev1 = create_buffer(ctx, MemFlags::READ_WRITE, bufsize, None, &mut status);
+    handle_error!(status);
+    let bufdev2 = create_buffer(ctx, MemFlags::READ_WRITE, bufsize, None, &mut status);
+    handle_error!(status);
+
+    /* Print information. */
+    eprintln!();
+    eprintln!(" * Device name                    : {dev_name}");
+    eprintln!(" * Global/local work sizes (init): {gws1}/{lws1}");
+    eprintln!(" * Global/local work sizes (rng) : {gws2}/{lws2}");
+    eprintln!(" * Number of iterations          : {numiter}");
+
+    /* Shared state + semaphores. */
+    let bufs = Arc::new(BufShare {
+        bufdev1,
+        bufdev2,
+        cq: cq_comms,
+        read_evts: Mutex::new(Vec::with_capacity(numiter)),
+        status: Mutex::new(CL_SUCCESS),
+        numrn,
+        numiter,
+        bufsize,
+        discard,
+    });
+    let sems = Arc::new(Sems { rng: Semaphore::new(1), comm: Semaphore::new(1) });
+
+    /* Start profiling (wall clock). */
+    let time0 = std::time::Instant::now();
+
+    /* Set arguments for initialization kernel. */
+    let status = set_kernel_arg(kinit, 0, &ArgValue::Buffer(bufdev1));
+    handle_error!(status);
+    let status = set_kernel_arg(
+        kinit, 1, &ArgValue::Scalar((numrn as u32).to_le_bytes().to_vec()),
+    );
+    handle_error!(status);
+
+    /* Invoke kernel for initializing random numbers. */
+    let mut evt_kinit = EventH::NULL;
+    let status = enqueue_ndrange_kernel(
+        cq_main, kinit, 1, &[gws1], Some(&[lws1]), &[], Some(&mut evt_kinit),
+    );
+    handle_error!(status);
+
+    /* Set fixed argument of RNG kernel (number of rn in buffer). */
+    let status = set_kernel_arg(
+        krng, 0, &ArgValue::Scalar((numrn as u32).to_le_bytes().to_vec()),
+    );
+    handle_error!(status);
+
+    /* Wait for initialization to finish. */
+    let status = finish(cq_main);
+    handle_error!(status);
+
+    /* Invoke thread to output random numbers to stdout. */
+    let comms_th = {
+        let (b, s) = (bufs.clone(), sems.clone());
+        std::thread::spawn(move || rng_out(b, s))
+    };
+
+    /* Produce random numbers; store kernel events for profiling. */
+    let mut rng_evts: Vec<EventH> = Vec::with_capacity(numiter);
+    let mut bufdev1 = bufdev1;
+    let mut bufdev2 = bufdev2;
+    for _ in 0..numiter.saturating_sub(1) {
+        /* Set RNG kernel arguments (the swapped buffers). */
+        let status = set_kernel_arg(krng, 1, &ArgValue::Buffer(bufdev1));
+        handle_error!(status);
+        let status = set_kernel_arg(krng, 2, &ArgValue::Buffer(bufdev2));
+        handle_error!(status);
+
+        /* Wait for read from previous iteration. */
+        sems.comm.wait();
+
+        /* Handle possible errors in comms thread. */
+        let st = *bufs.status.lock().unwrap();
+        handle_error!(st);
+
+        /* Run random number generation kernel. */
+        let mut evt = EventH::NULL;
+        let status = enqueue_ndrange_kernel(
+            cq_main, krng, 1, &[gws2], Some(&[lws2]), &[], Some(&mut evt),
+        );
+        handle_error!(status);
+        rng_evts.push(evt);
+
+        /* Wait for random number generation kernel to finish. */
+        let status = finish(cq_main);
+        handle_error!(status);
+
+        /* Signal that RNG kernel from previous iteration is over. */
+        sems.rng.post();
+
+        /* Swap buffers. */
+        std::mem::swap(&mut bufdev1, &mut bufdev2);
+    }
+
+    /* Wait for output thread to finish. */
+    comms_th.join().unwrap();
+    let st = *bufs.status.lock().unwrap();
+    handle_error!(st);
+
+    /* Stop profiling and show elapsed time. */
+    let dt = time0.elapsed().as_secs_f64();
+    eprintln!(" * Total elapsed time             : {dt:e}s");
+
+    /* Basic profiling calculations: query each event one by one (we do
+     * not calculate overlaps — compare the cf4ocl profiler). */
+    let event_total = |evts: &[EventH]| -> u64 {
+        let mut total = 0u64;
+        for &e in evts {
+            let mut tstart = 0u64;
+            let mut tend = 0u64;
+            let status = get_event_profiling_info(e, ProfilingInfo::Start, &mut tstart);
+            handle_error!(status);
+            let status = get_event_profiling_info(e, ProfilingInfo::End, &mut tend);
+            handle_error!(status);
+            total += tend - tstart;
+        }
+        total
+    };
+    let tkinit = event_total(&[evt_kinit]);
+    let tkrng = event_total(&rng_evts);
+    let read_evts = bufs.read_evts.lock().unwrap().clone();
+    let tcomms = event_total(&read_evts);
+
+    /* Show basic profiling info. */
+    eprintln!(" * Total time in 'init' kernel        : {:e}s", tkinit as f64 * 1e-9);
+    eprintln!(" * Total time in 'rng' kernel         : {:e}s", tkrng as f64 * 1e-9);
+    eprintln!(" * Total time fetching data from dev  : {:e}s", tcomms as f64 * 1e-9);
+    eprintln!();
+
+    /* Destroy rawcl objects — every single one, by hand. */
+    release_event(evt_kinit);
+    for e in rng_evts {
+        release_event(e);
+    }
+    for e in read_evts {
+        release_event(e);
+    }
+    release_mem_object(bufdev1);
+    release_mem_object(bufdev2);
+    release_kernel(kinit);
+    release_kernel(krng);
+    release_program(prg);
+    release_command_queue(cq_main);
+    release_command_queue(cq_comms);
+    release_context(ctx);
+}

@@ -1,0 +1,43 @@
+//! Random-stream consumer: runs the PRNG service and feeds the stream to
+//! the built-in statistical screen (the paper pipes to Dieharder; see
+//! DESIGN.md for the substitution).
+//!
+//! Run with: `cargo run --release --example rng_stream -- [numrn] [iters]`
+
+use cf4rs::coordinator::{run_ccl, stats, RngConfig, Sink};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let numrn: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(1 << 16);
+    let iters: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(8);
+
+    let mut cfg = RngConfig::new(numrn, iters);
+    cfg.device_index = 1; // GTX 1080 profile, like the paper's first rig
+    cfg.sink = Sink::Sample(numrn);
+
+    eprintln!("generating {} random bytes ({numrn} u64 x {iters} iters)...", 8 * numrn * iters);
+    let out = run_ccl(&cfg).map_err(|e| e.to_string())?;
+    eprintln!(
+        "done in {:.3}s ({:.1} MiB/s)",
+        out.wall.as_secs_f64(),
+        out.total_bytes as f64 / (1 << 20) as f64 / out.wall.as_secs_f64()
+    );
+
+    // Statistical screen over the sampled batch.
+    println!("statistical screen over {} words:", out.sample.len());
+    let mut all_passed = true;
+    for (name, r) in stats::screen(&out.sample) {
+        println!(
+            "  {:<10} statistic={:<12.4} {}",
+            name,
+            r.statistic,
+            if r.passed { "PASS" } else { "FAIL" }
+        );
+        all_passed &= r.passed;
+    }
+    if !all_passed {
+        return Err("statistical screen failed".into());
+    }
+    println!("stream looks random (screening level)");
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""Build-time Python package for cf4rs (never imported at runtime).
+
+Layer 2 (JAX graphs) lives in :mod:`compile.model`; Layer 1 (Pallas
+kernels) in :mod:`compile.kernels`; the AOT lowering driver in
+:mod:`compile.aot`.
+
+u64 support requires x64 mode, enabled here before any jax import runs a
+trace.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

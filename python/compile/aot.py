@@ -1,0 +1,158 @@
+"""AOT lowering driver: JAX graphs → HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); Rust layer 3 then loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO **text** — not ``.serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+Artifacts (``artifacts/`` at the repo root)::
+
+    init_n{N}.hlo.txt      prng_init    ()            -> (u64[N],)
+    rng_n{N}.hlo.txt       prng_step    (u64[N],)     -> (u64[N],)
+    rngk{K}_n{N}.hlo.txt   multi_step   (u64[N],)     -> (u64[N],)
+    vecadd_n{N}.hlo.txt    vecadd       (f32[N], f32[N]) -> (f32[N],)
+    saxpy_n{N}.hlo.txt     saxpy        (f32[], f32[N], f32[N]) -> (f32[N],)
+    manifest.tsv           one line per artifact (see MANIFEST_HEADER)
+
+The manifest is the Rust side's *program source index*: ``rawcl`` programs
+are created from these files and the manifest describes each "kernel"
+(entry point) signature, playing the role of OpenCL kernel metadata
+queries.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Problem-size ladder. The paper sweeps n = 2^12 .. 2^24; on the CPU
+# interpret-mode substrate we emit 2^12 .. 2^20 by default (the harness
+# documents the scaling in EXPERIMENTS.md). 2^22/2^24 can be added with
+# --sizes for long runs.
+DEFAULT_SIZES = [2**12, 2**14, 2**16, 2**18, 2**20]
+MULTI_K = 16
+VEC_SIZES = [1024, 4096]
+
+MANIFEST_HEADER = "name\tkind\tn\tk\tdtype\tnum_inputs\tnum_outputs\tfile"
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jitted-and-lowered function to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _u64(n: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((n,), jax.numpy.uint64)
+
+
+def _f32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jax.numpy.float32)
+
+
+def artifact_plan(sizes, multi_k=MULTI_K, vec_sizes=None):
+    """Yield (name, kind, n, k, dtype, lower_thunk, n_in, n_out) tuples."""
+    vec_sizes = VEC_SIZES if vec_sizes is None else vec_sizes
+    for n in sizes:
+        yield (
+            f"init_n{n}", "init", n, 0, "u64",
+            lambda n=n: jax.jit(functools.partial(model.prng_init, n)).lower(),
+            0, 1,
+        )
+        yield (
+            f"rng_n{n}", "rng", n, 1, "u64",
+            lambda n=n: jax.jit(model.prng_step).lower(_u64(n)),
+            1, 1,
+        )
+        yield (
+            f"rngk{multi_k}_n{n}", "rng_multi", n, multi_k, "u64",
+            lambda n=n: jax.jit(
+                functools.partial(model.prng_multi_step, k=multi_k)
+            ).lower(_u64(n)),
+            1, 1,
+        )
+    for n in vec_sizes:
+        yield (
+            f"vecadd_n{n}", "vecadd", n, 0, "f32",
+            lambda n=n: jax.jit(model.vecadd).lower(_f32((n,)), _f32((n,))),
+            2, 1,
+        )
+        yield (
+            f"saxpy_n{n}", "saxpy", n, 0, "f32",
+            lambda n=n: jax.jit(model.saxpy).lower(
+                _f32(()), _f32((n,)), _f32((n,))
+            ),
+            3, 1,
+        )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--sizes", type=int, nargs="*", default=DEFAULT_SIZES,
+        help="PRNG state-vector sizes (elements; multiples of 1024)",
+    )
+    ap.add_argument("--multi-k", type=int, default=MULTI_K)
+    args = ap.parse_args(argv)
+
+    # `--out` may be a file path like ../artifacts/model.hlo.txt (Makefile
+    # stamp) — in that case emit into its directory.
+    out_dir = args.out
+    stamp = None
+    if out_dir.endswith(".txt"):
+        stamp = out_dir
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    rows = []
+    t_total = time.time()
+    for name, kind, n, k, dtype, thunk, n_in, n_out in artifact_plan(
+        args.sizes, args.multi_k
+    ):
+        t0 = time.time()
+        text = to_hlo_text(thunk())
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append(
+            f"{name}\t{kind}\t{n}\t{k}\t{dtype}\t{n_in}\t{n_out}\t{fname}"
+        )
+        print(
+            f"  lowered {name:18s} {len(text):>9d} chars"
+            f"  ({time.time() - t0:.2f}s)",
+            file=sys.stderr,
+        )
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write(MANIFEST_HEADER + "\n")
+        f.write("\n".join(rows) + "\n")
+
+    if stamp:
+        # Makefile freshness stamp: points at the manifest.
+        with open(stamp, "w") as f:
+            f.write("see manifest.tsv\n")
+
+    print(
+        f"wrote {len(rows)} artifacts + manifest to {out_dir}"
+        f" in {time.time() - t_total:.1f}s",
+        file=sys.stderr,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

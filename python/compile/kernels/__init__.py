@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the cf4rs PRNG workload.
+
+These are the two device kernels of the paper's §5 example (listings S4 and
+S5), rethought for the TPU programming model (see DESIGN.md
+§Hardware-Adaptation) and executed here in interpret mode so the lowered
+HLO runs on the CPU PJRT backend:
+
+* :mod:`.hash_init` — seed initialisation by integer hashing of the global
+  index (listing S4's Jenkins 6-shift low word + Wang hash high word).
+* :mod:`.xorshift` — the xorshift u64 PRNG step (listing S5).
+
+:mod:`.ref` holds pure-jnp oracles used by the pytest suite.
+"""
+
+from . import hash_init, ref, xorshift  # noqa: F401

@@ -1,0 +1,106 @@
+"""Seed-initialisation Pallas kernel (paper listing S4, ``init.cl``).
+
+Each logical work-item hashes its own global index twice:
+
+* the **low 32 bits** come from Bob Jenkins' 6-shift integer hash
+  (the constants in listing S4, http://www.burtleburtle.net/bob/hash/integer.html);
+* the **high 32 bits** come from Thomas Wang's integer hash applied to the
+  low word.
+
+The two words are packed into one ``uint64`` exactly like the paper's
+``uint2`` view of a ``ulong`` on a little-endian device (``.x`` = low).
+
+TPU adaptation (DESIGN.md §4): the OpenCL version assigns one work-item per
+element; here one *grid step* owns one VMEM-resident block of
+``BLOCK``-many elements and the hash chain runs lane-parallel on the VPU.
+There is no input buffer — indices are derived from the grid position with
+``broadcasted_iota``, which mirrors ``get_global_id(0)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One grid step hashes one (8, 128)-aligned vector of elements. The block
+# is adaptive: up to 32768 elements (256 KiB of u64 output tile — in+out
+# tiles total 512 KiB, comfortably inside a TPU core's ~16 MiB of VMEM
+# with headroom for double buffering),
+# shrinking to `n` for small problems. Larger blocks mean fewer grid steps,
+# which matters doubly here: on a real TPU it amortises the HBM↔VMEM
+# schedule; under interpret=True it cuts the XLA while-loop trip count
+# (EXPERIMENTS.md §Perf: L1 block-shape iteration).
+BLOCK = 1024
+MAX_BLOCK = 32768
+
+
+def block_for(n: int) -> int:
+    """Largest power-of-two block <= MAX_BLOCK that divides n."""
+    b = min(n, MAX_BLOCK)
+    while n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+# Jenkins 6-shift constants, in listing-S4 order.
+_J = (0x7ED55D16, 0xC761C23C, 0x165667B1, 0xD3A2646C, 0xFD7046C5, 0xB55A4F09)
+_WANG_MUL = 0x27D4EB2D
+
+_U32 = jnp.uint32
+_U64 = jnp.uint64
+
+
+def jenkins6(a: jax.Array) -> jax.Array:
+    """Jenkins 6-shift hash over uint32 (wrapping arithmetic)."""
+    a = a.astype(_U32)
+    a = (a + _U32(_J[0])) + (a << 12)
+    a = (a ^ _U32(_J[1])) ^ (a >> 19)
+    a = (a + _U32(_J[2])) + (a << 5)
+    a = (a + _U32(_J[3])) ^ (a << 9)
+    a = (a + _U32(_J[4])) + (a << 3)
+    a = (a - _U32(_J[5])) - (a >> 16)
+    return a
+
+
+def wang(a: jax.Array) -> jax.Array:
+    """Thomas Wang 32-bit integer hash (listing S4's high-word scramble)."""
+    a = a.astype(_U32)
+    a = (a ^ _U32(61)) ^ (a >> 16)
+    a = a + (a << 3)
+    a = a ^ (a >> 4)
+    a = a * _U32(_WANG_MUL)
+    a = a ^ (a >> 15)
+    return a
+
+
+def _init_kernel(o_ref) -> None:
+    """Pallas body: hash the global element indices of this block."""
+    blk = o_ref.shape[0]
+    base = pl.program_id(0).astype(_U32) * _U32(blk)
+    gid = base + jax.lax.broadcasted_iota(_U32, (blk,), 0)
+    low = jenkins6(gid)
+    high = wang(low)
+    o_ref[...] = low.astype(_U64) | (high.astype(_U64) << _U64(32))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def init_seeds(n: int) -> jax.Array:
+    """Produce the first batch of ``n`` random u64 values / PRNG seeds.
+
+    Equivalent to launching listing S4's ``init`` kernel with a global work
+    size of ``n``. ``n`` must be a multiple of :data:`BLOCK` (the AOT
+    recipe only emits such sizes; the paper's ``suggest_worksizes`` rounds
+    the same way on the host side).
+    """
+    if n % BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of BLOCK={BLOCK}")
+    blk = block_for(n)
+    return pl.pallas_call(
+        _init_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), _U64),
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        grid=(n // blk,),
+        interpret=True,
+    )()

@@ -1,0 +1,79 @@
+"""Pure-jnp (and pure-python) oracles for the Pallas kernels.
+
+Two independence levels:
+
+* ``*_jnp`` — vectorised jnp implementations with no Pallas involvement;
+  used for array-level ``assert_array_equal`` against the kernels.
+* ``*_py`` — scalar python-int implementations (no jax at all, explicit
+  masking); used to spot-check individual elements so a systematic jnp
+  dtype bug cannot hide in both sides.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M32 = 0xFFFFFFFF
+_M64 = 0xFFFFFFFFFFFFFFFF
+
+
+# --------------------------------------------------------------------------
+# jnp oracles
+# --------------------------------------------------------------------------
+
+def init_seeds_jnp(n: int) -> jnp.ndarray:
+    """Vectorised oracle for :func:`kernels.hash_init.init_seeds`."""
+    from . import hash_init
+
+    gid = jnp.arange(n, dtype=jnp.uint32)
+    low = hash_init.jenkins6(gid)
+    high = hash_init.wang(low)
+    return low.astype(jnp.uint64) | (high.astype(jnp.uint64) << jnp.uint64(32))
+
+
+def rng_step_jnp(state: jnp.ndarray) -> jnp.ndarray:
+    """Vectorised oracle for :func:`kernels.xorshift.rng_step`."""
+    from . import xorshift
+
+    return xorshift.xorshift_update(state)
+
+
+# --------------------------------------------------------------------------
+# scalar python oracles (jax-free arithmetic)
+# --------------------------------------------------------------------------
+
+def jenkins6_py(a: int) -> int:
+    a &= _M32
+    a = ((a + 0x7ED55D16) + (a << 12)) & _M32
+    a = ((a ^ 0xC761C23C) ^ (a >> 19)) & _M32
+    a = ((a + 0x165667B1) + (a << 5)) & _M32
+    a = ((a + 0xD3A2646C) ^ (a << 9)) & _M32
+    a = ((a + 0xFD7046C5) + (a << 3)) & _M32
+    a = ((a - 0xB55A4F09) - (a >> 16)) & _M32
+    return a
+
+
+def wang_py(a: int) -> int:
+    a &= _M32
+    a = ((a ^ 61) ^ (a >> 16)) & _M32
+    a = (a + (a << 3)) & _M32
+    a = (a ^ (a >> 4)) & _M32
+    a = (a * 0x27D4EB2D) & _M32
+    a = (a ^ (a >> 15)) & _M32
+    return a
+
+
+def init_seed_py(gid: int) -> int:
+    """Scalar oracle: the u64 seed for one global index."""
+    low = jenkins6_py(gid)
+    high = wang_py(low)
+    return (high << 32) | low
+
+
+def xorshift_py(state: int) -> int:
+    """Scalar oracle: one xorshift (21, 35, 4) step."""
+    state &= _M64
+    state ^= (state << 21) & _M64
+    state ^= state >> 35
+    state ^= (state << 4) & _M64
+    return state

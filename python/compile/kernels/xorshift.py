@@ -1,0 +1,90 @@
+"""Xorshift PRNG-step Pallas kernel (paper listing S5, ``rng.cl``).
+
+Marsaglia xorshift over u64 with the paper's shift triple ``(21, 35, 4)``:
+
+    state ^= state << 21
+    state ^= state >> 35
+    state ^= state <<  4
+
+One kernel invocation advances every element of the state vector by one
+step — the device-side half of the paper's double-buffering scheme (the
+host swaps the two state buffers between invocations).
+
+TPU adaptation (DESIGN.md §4): the kernel is memory-bound (16 B moved per
+element per step). ``BlockSpec`` streams one ``BLOCK``-element tile of the
+state through VMEM per grid step; the three xor-shift updates are VPU
+bit-ops on the resident tile, so the HBM schedule (read tile, write tile)
+is exactly the OpenCL version's global-memory traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Same tile geometry as hash_init (see its block-size notes): adaptive up
+# to 8192 elements = 64 KiB in + 64 KiB out per grid step resident in VMEM.
+BLOCK = 1024
+
+SHIFTS = (21, 35, 4)
+
+_U64 = jnp.uint64
+
+
+def xorshift_update(state: jax.Array) -> jax.Array:
+    """One xorshift step on a u64 array (shared by kernel and oracle)."""
+    a, b, c = SHIFTS
+    state = state ^ (state << _U64(a))
+    state = state ^ (state >> _U64(b))
+    state = state ^ (state << _U64(c))
+    return state
+
+
+def _rng_kernel(in_ref, o_ref) -> None:
+    """Pallas body: advance one VMEM-resident tile of PRNG state."""
+    o_ref[...] = xorshift_update(in_ref[...])
+
+
+def _call(n: int, body, num_in: int):
+    from .hash_init import block_for
+
+    blk = block_for(n)
+    in_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((n,), _U64),
+        in_specs=[in_spec] * num_in,
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        grid=(n // blk,),
+        interpret=True,
+    )
+
+
+@jax.jit
+def rng_step(state: jax.Array) -> jax.Array:
+    """Advance the whole PRNG state vector by one batch step.
+
+    Equivalent to launching listing S5's ``rng`` kernel once: reads the
+    "in" buffer, writes the "out" buffer. Buffer swapping is the host's
+    job, as in the paper.
+    """
+    (n,) = state.shape
+    if n % BLOCK != 0:
+        raise ValueError(f"n={n} must be a multiple of BLOCK={BLOCK}")
+    return _call(n, _rng_kernel, 1)(state)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def rng_multi_step(state: jax.Array, k: int) -> jax.Array:
+    """Advance the state vector by ``k`` batch steps in one dispatch.
+
+    Fusion artifact used by the performance pass (EXPERIMENTS.md §Perf):
+    amortises host→device dispatch over ``k`` kernel steps. Semantically
+    equal to ``k`` successive :func:`rng_step` calls (the intermediate
+    batches are not materialised — callers that must emit every batch keep
+    using the single-step artifact).
+    """
+    return jax.lax.fori_loop(0, k, lambda _, s: rng_step(s), state)

@@ -1,0 +1,48 @@
+"""Layer-2 JAX compute graphs for cf4rs.
+
+Every public function here is a *device program* in the paper's sense: a
+unit that the host (Rust layer 3) builds once from an AOT-lowered artifact
+and then enqueues on command queues. The PRNG graphs call the Layer-1
+Pallas kernels so the kernels lower into the same HLO module.
+
+Graphs:
+
+* :func:`prng_init` — listing S4: produce the first batch of ``n`` random
+  u64 values (which double as the seeds of the next batch).
+* :func:`prng_step` — listing S5: advance the state vector one step
+  (device-side half of the double-buffering loop).
+* :func:`prng_multi_step` — fused ``k``-step variant (perf artifact).
+* :func:`vecadd` / :func:`saxpy` — small f32 graphs used by the
+  quickstart example and the runtime smoke tests.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels import hash_init, xorshift
+
+
+def prng_init(n: int) -> jax.Array:
+    """First batch of ``n`` random u64 values (also the next seeds)."""
+    return hash_init.init_seeds(n)
+
+
+def prng_step(state: jax.Array) -> jax.Array:
+    """One xorshift batch step over the full state vector."""
+    return xorshift.rng_step(state)
+
+
+def prng_multi_step(state: jax.Array, k: int) -> jax.Array:
+    """``k`` fused xorshift batch steps (one host dispatch)."""
+    return xorshift.rng_multi_step(state, k)
+
+
+def vecadd(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Elementwise f32 addition — the quickstart graph."""
+    return x + y
+
+
+def saxpy(a: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """``a*x + y`` with scalar ``a`` — exercises mixed-rank inputs."""
+    return a * x + y

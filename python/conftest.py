@@ -1,0 +1,6 @@
+"""Make the build-time `compile` package importable from pytest."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

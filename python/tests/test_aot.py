@@ -1,0 +1,77 @@
+"""AOT path: artifact plan, HLO text properties, manifest integrity."""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestArtifactPlan:
+    def test_covers_all_kinds_per_size(self):
+        plan = list(aot.artifact_plan([2048, 4096]))
+        kinds = [p[1] for p in plan]
+        assert kinds.count("init") == 2
+        assert kinds.count("rng") == 2
+        assert kinds.count("rng_multi") == 2
+        assert "vecadd" in kinds and "saxpy" in kinds
+
+    def test_names_encode_size_and_k(self):
+        plan = {p[0]: p for p in aot.artifact_plan([2048], multi_k=8)}
+        assert "rngk8_n2048" in plan
+        assert plan["rngk8_n2048"][3] == 8
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def lowered(self):
+        plan = {p[0]: p for p in aot.artifact_plan([1024])}
+        return {
+            name: aot.to_hlo_text(p[5]())
+            for name, p in plan.items()
+            if name in ("init_n1024", "rng_n1024", "vecadd_n1024")
+        }
+
+    def test_hlo_is_text_with_entry_layout(self, lowered):
+        for name, text in lowered.items():
+            assert text.startswith("HloModule"), name
+            assert "entry_computation_layout" in text, name
+
+    def test_rng_signature(self, lowered):
+        # One u64[1024] parameter, tuple result (return_tuple=True).
+        head = lowered["rng_n1024"].splitlines()[0]
+        assert "(u64[1024]{0})->(u64[1024]{0})" in head.replace(" ", "")
+
+    def test_init_has_no_parameters(self, lowered):
+        head = lowered["init_n1024"].splitlines()[0]
+        assert "()->(u64[1024]{0})" in head.replace(" ", "")
+
+    def test_vecadd_signature(self, lowered):
+        head = lowered["vecadd_n1024"].splitlines()[0]
+        assert "(f32[1024]{0},f32[1024]{0})->(f32[1024]{0})" in head.replace(
+            " ", ""
+        )
+
+
+class TestMain:
+    def test_writes_artifacts_and_manifest(self, tmp_path):
+        out = tmp_path / "arts"
+        rc = aot.main(["--out", str(out), "--sizes", "1024"])
+        assert rc == 0
+        names = sorted(os.listdir(out))
+        assert "manifest.tsv" in names
+        lines = (out / "manifest.tsv").read_text().strip().splitlines()
+        assert lines[0] == aot.MANIFEST_HEADER
+        rows = [l.split("\t") for l in lines[1:]]
+        # every manifest row points at an existing file
+        for row in rows:
+            assert (out / row[7]).exists()
+        kinds = {r[1] for r in rows}
+        assert kinds == {"init", "rng", "rng_multi", "vecadd", "saxpy"}
+
+    def test_stamp_file_mode(self, tmp_path):
+        stamp = tmp_path / "arts" / "model.hlo.txt"
+        rc = aot.main(["--out", str(stamp), "--sizes", "1024"])
+        assert rc == 0
+        assert stamp.exists()
+        assert (tmp_path / "arts" / "manifest.tsv").exists()

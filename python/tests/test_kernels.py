@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs pure-jnp and scalar-python oracles.
+
+The paper's contract for the device code (listings S4/S5) is bit-exact
+integer arithmetic, so every comparison here is exact equality — there is
+no tolerance anywhere.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hash_init, ref, xorshift
+
+BLOCK = hash_init.BLOCK
+
+# Small multiples of the block size; hypothesis sweeps these.
+sizes = st.integers(min_value=1, max_value=8).map(lambda k: k * BLOCK)
+
+
+# ---------------------------------------------------------------------------
+# init kernel (listing S4)
+# ---------------------------------------------------------------------------
+
+class TestInitKernel:
+    @settings(deadline=None, max_examples=8)
+    @given(n=sizes)
+    def test_matches_jnp_oracle(self, n):
+        np.testing.assert_array_equal(
+            np.asarray(hash_init.init_seeds(n)),
+            np.asarray(ref.init_seeds_jnp(n)),
+        )
+
+    @settings(deadline=None, max_examples=32)
+    @given(gid=st.integers(min_value=0, max_value=2 * BLOCK - 1))
+    def test_matches_scalar_oracle(self, gid):
+        out = hash_init.init_seeds(2 * BLOCK)
+        assert int(out[gid]) == ref.init_seed_py(gid)
+
+    def test_low_word_is_jenkins_high_word_is_wang(self):
+        out = hash_init.init_seeds(BLOCK)
+        v = int(out[123])
+        low, high = v & 0xFFFFFFFF, v >> 32
+        assert low == ref.jenkins6_py(123)
+        assert high == ref.wang_py(low)
+
+    def test_rejects_unaligned_size(self):
+        with pytest.raises(ValueError, match="multiple of BLOCK"):
+            hash_init.init_seeds(BLOCK + 1)
+
+    def test_deterministic(self):
+        a = hash_init.init_seeds(BLOCK)
+        b = hash_init.init_seeds(BLOCK)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_all_distinct(self):
+        # Hash of distinct gids should not collide in a small range.
+        out = np.asarray(hash_init.init_seeds(4 * BLOCK))
+        assert len(np.unique(out)) == out.size
+
+    def test_bit_balance(self):
+        # Crude monobit check: across 4096 seeds, each of the 64 bit
+        # positions should be set in 35–65 % of values.
+        out = np.asarray(hash_init.init_seeds(4 * BLOCK)).view(np.uint64)
+        for bit in range(64):
+            frac = ((out >> np.uint64(bit)) & np.uint64(1)).mean()
+            assert 0.35 < frac < 0.65, f"bit {bit} unbalanced: {frac}"
+
+
+# ---------------------------------------------------------------------------
+# rng kernel (listing S5)
+# ---------------------------------------------------------------------------
+
+class TestRngKernel:
+    @settings(deadline=None, max_examples=8)
+    @given(n=sizes, seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_matches_jnp_oracle(self, n, seed):
+        rng = np.random.default_rng(seed)
+        state = rng.integers(0, 2**64, size=n, dtype=np.uint64)
+        np.testing.assert_array_equal(
+            np.asarray(xorshift.rng_step(jnp.asarray(state))),
+            np.asarray(ref.rng_step_jnp(jnp.asarray(state))),
+        )
+
+    @settings(deadline=None, max_examples=32)
+    @given(x=st.integers(min_value=0, max_value=2**64 - 1))
+    def test_matches_scalar_oracle(self, x):
+        state = jnp.full((BLOCK,), jnp.uint64(x))
+        out = xorshift.rng_step(state)
+        assert int(out[0]) == ref.xorshift_py(x)
+
+    def test_zero_is_fixed_point(self):
+        # xorshift is linear: 0 maps to 0 (why seeds must be hashed first).
+        state = jnp.zeros((BLOCK,), jnp.uint64)
+        assert int(xorshift.rng_step(state)[0]) == 0
+
+    def test_bijective_on_sample(self):
+        # xorshift with a full-period triple is a bijection on u64\{0}:
+        # distinct inputs must give distinct outputs.
+        state = hash_init.init_seeds(4 * BLOCK)
+        out = np.asarray(xorshift.rng_step(state))
+        assert len(np.unique(out)) == out.size
+
+    @settings(deadline=None, max_examples=6)
+    @given(k=st.integers(min_value=1, max_value=8))
+    def test_multi_step_equals_repeated_single(self, k):
+        state = hash_init.init_seeds(BLOCK)
+        fused = xorshift.rng_multi_step(state, k)
+        step = state
+        for _ in range(k):
+            step = xorshift.rng_step(step)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(step))
+
+    def test_rejects_unaligned_size(self):
+        with pytest.raises(ValueError, match="multiple of BLOCK"):
+            xorshift.rng_step(jnp.zeros((BLOCK + 5,), jnp.uint64))
+
+    def test_shift_triple_matches_paper(self):
+        assert xorshift.SHIFTS == (21, 35, 4)

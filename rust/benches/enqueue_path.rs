@@ -1,0 +1,73 @@
+//! Enqueue-path microbenchmarks: the per-command host cost of the raw
+//! substrate vs the framework (the mechanism behind Fig. 4's small-n
+//! regime), plus the cost of the framework's event tracking.
+
+use cf4rs::ccl::{Arg, Buffer, Context, Program, Queue};
+use cf4rs::harness::microbench::bench_per_op;
+use cf4rs::rawcl::types::MemFlags;
+use cf4rs::rawcl::{self, ArgValue, QueueProps};
+
+const N: usize = 4096;
+const OPS: u32 = 64;
+
+fn main() {
+    println!("== enqueue-path microbench (n={N}, {OPS} launches/sample) ==");
+
+    // framework path
+    {
+        let ctx = Context::new_gpu().unwrap();
+        let dev = ctx.device(0).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let prg = Program::new_from_artifacts(&ctx, &["rng_n4096"]).unwrap();
+        prg.build().unwrap();
+        let k = prg.kernel("prng_step").unwrap();
+        let a = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+        let b = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+        bench_per_op("ccl: set_args_and_enqueue_ndrange", 2, 12, OPS, || {
+            for _ in 0..OPS {
+                k.set_args_and_enqueue_ndrange(
+                    &q,
+                    &[N],
+                    None,
+                    &[],
+                    &[Arg::priv_u32(N as u32), Arg::buf(&a), Arg::buf(&b)],
+                )
+                .unwrap();
+            }
+            q.finish().unwrap();
+            q.clear_events();
+        });
+    }
+
+    // raw path
+    {
+        let mut st = 0;
+        let ctx = rawcl::create_context(&[rawcl::DeviceId(1)], &mut st);
+        let q = rawcl::create_command_queue(ctx, rawcl::DeviceId(1), QueueProps::PROFILING_ENABLE, &mut st);
+        let man = cf4rs::runtime::Manifest::discover().unwrap();
+        let src = std::fs::read_to_string(&man.get("rng_n4096").unwrap().path).unwrap();
+        let prg = rawcl::create_program_with_source(ctx, &[src], &mut st);
+        rawcl::build_program(prg, None, "");
+        let k = rawcl::create_kernel(prg, "prng_step", &mut st);
+        let a = rawcl::create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+        let b = rawcl::create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+        let narg = ArgValue::Scalar((N as u32).to_le_bytes().to_vec());
+        bench_per_op("raw: set_kernel_arg x3 + enqueue", 2, 12, OPS, || {
+            for _ in 0..OPS {
+                rawcl::set_kernel_arg(k, 0, &narg);
+                rawcl::set_kernel_arg(k, 1, &ArgValue::Buffer(a));
+                rawcl::set_kernel_arg(k, 2, &ArgValue::Buffer(b));
+                let mut evt = rawcl::EventH::NULL;
+                rawcl::enqueue_ndrange_kernel(q, k, 1, &[N], None, &[], Some(&mut evt));
+                rawcl::release_event(evt);
+            }
+            rawcl::finish(q);
+        });
+        rawcl::release_mem_object(a);
+        rawcl::release_mem_object(b);
+        rawcl::release_kernel(k);
+        rawcl::release_program(prg);
+        rawcl::release_command_queue(q);
+        rawcl::release_context(ctx);
+    }
+}

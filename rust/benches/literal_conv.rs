@@ -1,0 +1,29 @@
+//! Buffer ⇄ literal marshalling cost: the native device's per-launch
+//! data-movement tax (bytes → Literal → PJRT → Literal → bytes).
+
+use cf4rs::harness::microbench::bench;
+use cf4rs::runtime::literal::{
+    bytes_from_u64, literal_from_bytes, literal_to_bytes, u64_from_bytes, ElemType,
+};
+
+fn main() {
+    println!("== literal conversion ==");
+    for n in [4096usize, 65536, 1 << 20] {
+        let v: Vec<u64> = (0..n as u64).collect();
+        let bytes = bytes_from_u64(&v);
+        bench(&format!("bytes->literal u64[{n}]"), 2, 9, || {
+            let lit = literal_from_bytes(ElemType::U64, &bytes, false).unwrap();
+            std::hint::black_box(lit.element_count());
+        });
+        let lit = literal_from_bytes(ElemType::U64, &bytes, false).unwrap();
+        bench(&format!("literal->bytes u64[{n}]"), 2, 9, || {
+            let b = literal_to_bytes(ElemType::U64, &lit).unwrap();
+            std::hint::black_box(b.len());
+        });
+        bench(&format!("u64 vec encode+decode [{n}]"), 2, 9, || {
+            let b = bytes_from_u64(&v);
+            let w = u64_from_bytes(&b).unwrap();
+            std::hint::black_box(w.len());
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! `cargo bench` entry for E3 (Fig. 4): a reduced overhead sweep.
+//! The full paper sweep runs via `cf4rs bench overhead`.
+
+use cf4rs::harness::overhead::{render, sweep, SweepOpts};
+
+fn main() {
+    println!("== Fig. 4 overhead sweep (reduced; full: `cf4rs bench overhead`) ==");
+    let mut opts = SweepOpts::quick();
+    opts.runs = 6;
+    match sweep(&opts) {
+        Ok(cells) => print!("{}", render(&cells)),
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Profiler analysis scaling: `calc()`-equivalent cost (aggregation +
+//! sweep-line overlaps + union) on synthetic event sets of growing size.
+//! This is the "computationally expensive" step the paper calls out in
+//! §6.2 — the dominant framework overhead at large iteration counts.
+
+use cf4rs::ccl::prof::info::ProfInfo;
+use cf4rs::ccl::prof::overlap::{compute_overlaps, effective_total};
+use cf4rs::harness::microbench::bench;
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+
+fn synthetic_infos(n: usize) -> Vec<ProfInfo> {
+    let mut s = init_seed(7);
+    let mut infos = Vec::with_capacity(n);
+    let mut cursors = [0u64; 2];
+    for i in 0..n {
+        s = xorshift(s);
+        let q = (i % 2) as usize;
+        let start = cursors[q] + s % 40;
+        s = xorshift(s);
+        let end = start + 1 + s % 150;
+        cursors[q] = end.saturating_sub(30); // force frequent overlaps
+        infos.push(ProfInfo {
+            name: if q == 0 { "RNG_KERNEL" } else { "READ_BUFFER" }.into(),
+            queue: if q == 0 { "Main" } else { "Comms" }.into(),
+            t_queued: start,
+            t_submit: start,
+            t_start: start,
+            t_end: end,
+        });
+    }
+    infos
+}
+
+fn main() {
+    println!("== profiler calc scaling ==");
+    for n in [1_000usize, 10_000, 100_000] {
+        let infos = synthetic_infos(n);
+        bench(&format!("overlaps+union over {n} events"), 1, 7, || {
+            let ov = compute_overlaps(&infos);
+            let eff = effective_total(&infos);
+            std::hint::black_box((ov.len(), eff));
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! End-to-end queue throughput on both backends: commands/second through
+//! one in-order queue, and PRNG service MiB/s (the headline §5 metric).
+
+use cf4rs::ccl::{Buffer, Context, Device, Queue};
+use cf4rs::coordinator::{run_ccl, RngConfig, Sink};
+use cf4rs::harness::microbench::{bench, bench_per_op};
+use cf4rs::rawcl::types::{DeviceId, MemFlags};
+
+fn main() {
+    println!("== queue throughput ==");
+
+    // fill-command round trips on the sim device (pure coordination)
+    {
+        let ctx = Context::new_gpu().unwrap();
+        let dev = ctx.device(0).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let b = Buffer::new(&ctx, MemFlags::READ_WRITE, 4096).unwrap();
+        bench_per_op("sim queue: enqueue_fill x64 + finish", 2, 10, 64, || {
+            for _ in 0..64 {
+                b.enqueue_fill(&q, &[0xA5], 0, 4096, &[]).unwrap();
+            }
+            q.finish().unwrap();
+            q.clear_events();
+        });
+    }
+
+    // native PJRT kernel dispatch
+    {
+        let dev = Device::from_id(DeviceId(0)).unwrap();
+        let ctx = Context::new_from_devices(&[dev]).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let prg =
+            cf4rs::ccl::Program::new_from_artifacts(&ctx, &["rng_n4096"]).unwrap();
+        prg.build().unwrap();
+        let k = prg.kernel("prng_step").unwrap();
+        let a = Buffer::new(&ctx, MemFlags::READ_WRITE, 4096 * 8).unwrap();
+        let b2 = Buffer::new(&ctx, MemFlags::READ_WRITE, 4096 * 8).unwrap();
+        bench_per_op("native PJRT: rng_n4096 dispatch", 2, 10, 16, || {
+            use cf4rs::ccl::Arg;
+            for _ in 0..16 {
+                k.set_args_and_enqueue_ndrange(
+                    &q,
+                    &[4096],
+                    None,
+                    &[],
+                    &[Arg::priv_u32(4096), Arg::buf(&a), Arg::buf(&b2)],
+                )
+                .unwrap();
+            }
+            q.finish().unwrap();
+            q.clear_events();
+        });
+    }
+
+    // large-n sim service: stresses the sim kernel execution path
+    {
+        let mut cfg = RngConfig::new(1 << 20, 4);
+        cfg.device_index = 1;
+        cfg.profile = false;
+        cfg.sink = Sink::Discard;
+        bench("rng service n=2^20 i=4 (gtx1080sim)", 1, 5, || {
+            run_ccl(&cfg).unwrap();
+        });
+    }
+
+    // end-to-end service throughput (the paper's headline workload)
+    for (dev, name) in [(1u32, "gtx1080sim"), (0u32, "native")] {
+        let mut cfg = RngConfig::new(65536, 8);
+        cfg.device_index = dev;
+        cfg.profile = false;
+        cfg.sink = Sink::Discard;
+        let bytes = 8.0 * 65536.0 * 8.0;
+        let r = bench(&format!("rng service n=65536 i=8 ({name})"), 1, 5, || {
+            run_ccl(&cfg).unwrap();
+        });
+        let mibs = bytes / r.median().as_secs_f64() / (1 << 20) as f64;
+        println!("    -> {mibs:.1} MiB/s");
+    }
+}
+// (perf-pass addition) large-n sim service — stresses the sim kernel
+// execution path whose copies the perf pass eliminates.

@@ -1,0 +1,105 @@
+//! Buffer wrapper (`CCLBuffer`, a concrete `CCLMemObj`).
+
+use crate::rawcl;
+use crate::rawcl::types::{MemFlags, MemH};
+
+use super::context::Context;
+use super::errors::{check, CclResult};
+use super::event::Event;
+use super::queue::Queue;
+use super::wrapper::LiveToken;
+
+/// Owning wrapper for a device buffer.
+pub struct Buffer {
+    h: MemH,
+    size: usize,
+    _live: LiveToken,
+}
+
+impl Buffer {
+    /// `ccl_buffer_new(ctx, flags, size, NULL, &err)`.
+    pub fn new(ctx: &Context, flags: MemFlags, size: usize) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_buffer(ctx.handle(), flags, size, None, &mut st);
+        check(st, "creating buffer")?;
+        Ok(Self { h, size, _live: LiveToken::new() })
+    }
+
+    /// Create + initialise from host data (`CL_MEM_COPY_HOST_PTR`).
+    pub fn from_slice(ctx: &Context, flags: MemFlags, data: &[u8]) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_buffer(
+            ctx.handle(),
+            flags | MemFlags::COPY_HOST_PTR,
+            data.len(),
+            Some(data),
+            &mut st,
+        );
+        check(st, "creating initialised buffer")?;
+        Ok(Self { h, size: data.len(), _live: LiveToken::new() })
+    }
+
+    pub fn handle(&self) -> MemH {
+        self.h
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Blocking read (`ccl_buffer_enqueue_read(buf, cq, CL_TRUE, ...)`).
+    ///
+    /// The generated event is tracked by the queue for profiling and is
+    /// also returned for dependency chaining.
+    pub fn enqueue_read(
+        &self,
+        queue: &Queue,
+        offset: usize,
+        dst: &mut [u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        queue.enqueue_read_buffer(self, offset, dst, wait)
+    }
+
+    /// Blocking write (`ccl_buffer_enqueue_write`).
+    pub fn enqueue_write(
+        &self,
+        queue: &Queue,
+        offset: usize,
+        src: &[u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        queue.enqueue_write_buffer(self, offset, src, wait)
+    }
+
+    /// Device-side copy (`ccl_buffer_enqueue_copy`).
+    pub fn enqueue_copy(
+        &self,
+        queue: &Queue,
+        dst: &Buffer,
+        src_offset: usize,
+        dst_offset: usize,
+        len: usize,
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        queue.enqueue_copy_buffer(self, dst, src_offset, dst_offset, len, wait)
+    }
+
+    /// Pattern fill (`ccl_buffer_enqueue_fill`).
+    pub fn enqueue_fill(
+        &self,
+        queue: &Queue,
+        pattern: &[u8],
+        offset: usize,
+        len: usize,
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        queue.enqueue_fill_buffer(self, pattern, offset, len, wait)
+    }
+}
+
+impl Drop for Buffer {
+    fn drop(&mut self) {
+        rawcl::release_mem_object(self.h);
+    }
+}

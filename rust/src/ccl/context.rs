@@ -1,0 +1,151 @@
+//! Context wrapper (`CCLContext`).
+//!
+//! Compare the paper's one-liner (listing S2, line 182):
+//!
+//! ```no_run
+//! # use cf4rs::ccl::Context;
+//! let ctx = Context::new_gpu().unwrap();
+//! let dev = ctx.device(0).unwrap();
+//! ```
+//!
+//! with the platform/device loop of listing S1 (reproduced by
+//! `examples/rng_raw.rs`).
+
+use crate::rawcl;
+use crate::rawcl::types::{ContextH, DeviceId, DeviceType};
+
+use super::device::Device;
+use super::errors::{check, CclError, CclResult};
+use super::selector::{Filter, FilterChain};
+use super::wrapper::LiveToken;
+
+/// Owning wrapper for a substrate context.
+pub struct Context {
+    h: ContextH,
+    devices: Vec<Device>,
+    _live: LiveToken,
+}
+
+impl Context {
+    /// Context with all GPU devices of the first GPU-bearing platform
+    /// (`ccl_context_new_gpu`).
+    pub fn new_gpu() -> CclResult<Self> {
+        Self::new_from_type(DeviceType::GPU)
+    }
+
+    /// Context with all CPU devices (`ccl_context_new_cpu`).
+    pub fn new_cpu() -> CclResult<Self> {
+        Self::new_from_type(DeviceType::CPU)
+    }
+
+    /// Context from a device-type filter (`ccl_context_new_from_type`).
+    pub fn new_from_type(t: DeviceType) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_context_from_type(t, &mut st);
+        check(st, "creating context from device type")?;
+        Self::from_handle(h)
+    }
+
+    /// Context from explicit devices (`ccl_context_new_from_devices`).
+    pub fn new_from_devices(devs: &[Device]) -> CclResult<Self> {
+        let ids: Vec<DeviceId> = devs.iter().map(|d| d.id()).collect();
+        let mut st = 0;
+        let h = rawcl::create_context(&ids, &mut st);
+        check(st, "creating context from device list")?;
+        Self::from_handle(h)
+    }
+
+    /// Context from a filter chain (`ccl_context_new_from_filters`).
+    ///
+    /// A `same_platform` dependent filter is appended automatically, as
+    /// contexts cannot span platforms.
+    pub fn new_from_filters(chain: FilterChain) -> CclResult<Self> {
+        let devs = chain.add(Filter::same_platform()).select_nonempty()?;
+        Self::new_from_devices(&devs)
+    }
+
+    fn from_handle(h: ContextH) -> CclResult<Self> {
+        let mut ids = Vec::new();
+        check(rawcl::get_context_devices(h, &mut ids), "querying context devices")?;
+        let devices = ids.into_iter().map(|id| Device { id }).collect();
+        Ok(Self { h, devices, _live: LiveToken::new() })
+    }
+
+    /// The raw handle (cf4ocl always lets you unwrap).
+    pub fn handle(&self) -> ContextH {
+        self.h
+    }
+
+    /// Number of devices in the context.
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The i-th device (`ccl_context_get_device`).
+    pub fn device(&self, i: usize) -> CclResult<Device> {
+        self.devices.get(i).copied().ok_or_else(|| {
+            CclError::framework(format!(
+                "device index {i} out of range (context has {})",
+                self.devices.len()
+            ))
+        })
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+}
+
+impl Drop for Context {
+    fn drop(&mut self) {
+        rawcl::release_context(self.h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_gpu_selects_simcl() {
+        let ctx = Context::new_gpu().unwrap();
+        assert_eq!(ctx.num_devices(), 2);
+        assert!(ctx.device(0).unwrap().is_gpu());
+        assert!(ctx.device(2).is_err());
+    }
+
+    #[test]
+    fn new_cpu_selects_native() {
+        let ctx = Context::new_cpu().unwrap();
+        assert_eq!(ctx.num_devices(), 1);
+        assert_eq!(ctx.device(0).unwrap().name().unwrap(), "cf4rs PJRT CPU");
+    }
+
+    #[test]
+    fn from_filters_single_device() {
+        let ctx = Context::new_from_filters(
+            FilterChain::new().add(Filter::name_contains("1080")),
+        )
+        .unwrap();
+        assert_eq!(ctx.num_devices(), 1);
+    }
+
+    #[test]
+    fn from_filters_appends_same_platform() {
+        // No filter at all: all 3 devices span 2 platforms; same_platform
+        // must cut to the first platform only.
+        let ctx = Context::new_from_filters(FilterChain::new()).unwrap();
+        assert_eq!(ctx.num_devices(), 1, "must not span platforms");
+    }
+
+    #[test]
+    fn handle_released_on_drop() {
+        let h = {
+            let ctx = Context::new_gpu().unwrap();
+            ctx.handle()
+        };
+        // After drop the substrate must consider the handle dead.
+        let mut devs = Vec::new();
+        assert_ne!(rawcl::get_context_devices(h, &mut devs), rawcl::CL_SUCCESS);
+    }
+}

@@ -1,0 +1,152 @@
+//! Device wrapper (`CCLDevice`): typed info queries.
+//!
+//! Devices are process-lifetime objects in the substrate, so the wrapper
+//! is a cheap `Copy` handle with typed accessors replacing the raw
+//! size/data query dance (compare `rawcl::get_device_info`).
+
+use crate::rawcl::device::{decode, get_device_info};
+use crate::rawcl::error::CL_SUCCESS;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::types::{DeviceId, DeviceInfo, DeviceType};
+
+use super::errors::{CclError, CclResult};
+
+/// Wrapper for one compute device.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct Device {
+    pub(crate) id: DeviceId,
+}
+
+impl Device {
+    /// Wrap a raw device id (validating it exists).
+    pub fn from_id(id: DeviceId) -> CclResult<Self> {
+        if crate::rawcl::device::device(id).is_none() {
+            return Err(CclError::framework(format!("no such device: {id:?}")));
+        }
+        Ok(Self { id })
+    }
+
+    /// All devices in the system, across platforms.
+    pub fn all() -> Vec<Device> {
+        crate::rawcl::device::devices()
+            .iter()
+            .map(|d| Device { id: d.id })
+            .collect()
+    }
+
+    /// The raw id — always accessible, like cf4ocl's unwrap functions.
+    pub fn id(&self) -> DeviceId {
+        self.id
+    }
+
+    fn info_bytes(&self, param: DeviceInfo) -> CclResult<Vec<u8>> {
+        let mut buf = Vec::new();
+        let st = get_device_info(self.id, param, Some(&mut buf), None);
+        if st != CL_SUCCESS {
+            return Err(CclError::from_status(st, format!("querying {param:?}")));
+        }
+        Ok(buf)
+    }
+
+    /// Device name (`ccl_device_get_info_array(dev, CL_DEVICE_NAME, ...)`).
+    pub fn name(&self) -> CclResult<String> {
+        Ok(decode::as_string(&self.info_bytes(DeviceInfo::Name)?))
+    }
+
+    pub fn vendor(&self) -> CclResult<String> {
+        Ok(decode::as_string(&self.info_bytes(DeviceInfo::Vendor)?))
+    }
+
+    pub fn version(&self) -> CclResult<String> {
+        Ok(decode::as_string(&self.info_bytes(DeviceInfo::Version)?))
+    }
+
+    pub fn device_type(&self) -> CclResult<DeviceType> {
+        Ok(DeviceType(decode::as_u64(&self.info_bytes(DeviceInfo::Type)?)))
+    }
+
+    pub fn max_compute_units(&self) -> CclResult<u32> {
+        Ok(decode::as_u32(&self.info_bytes(DeviceInfo::MaxComputeUnits)?))
+    }
+
+    pub fn max_work_group_size(&self) -> CclResult<usize> {
+        Ok(decode::as_u64(&self.info_bytes(DeviceInfo::MaxWorkGroupSize)?) as usize)
+    }
+
+    pub fn preferred_wg_multiple(&self) -> CclResult<usize> {
+        Ok(decode::as_u64(&self.info_bytes(DeviceInfo::PreferredWorkGroupSizeMultiple)?)
+            as usize)
+    }
+
+    pub fn max_work_item_dimensions(&self) -> CclResult<u32> {
+        Ok(decode::as_u32(&self.info_bytes(DeviceInfo::MaxWorkItemDimensions)?))
+    }
+
+    pub fn max_work_item_sizes(&self) -> CclResult<Vec<usize>> {
+        Ok(decode::as_usize_vec(&self.info_bytes(DeviceInfo::MaxWorkItemSizes)?))
+    }
+
+    pub fn global_mem_size(&self) -> CclResult<u64> {
+        Ok(decode::as_u64(&self.info_bytes(DeviceInfo::GlobalMemSize)?))
+    }
+
+    pub fn local_mem_size(&self) -> CclResult<u64> {
+        Ok(decode::as_u64(&self.info_bytes(DeviceInfo::LocalMemSize)?))
+    }
+
+    pub fn max_clock_frequency(&self) -> CclResult<u32> {
+        Ok(decode::as_u32(&self.info_bytes(DeviceInfo::MaxClockFrequency)?))
+    }
+
+    /// cf4rs extension: which backend runs kernels for this device.
+    pub fn backend(&self) -> CclResult<BackendKind> {
+        let s = decode::as_string(&self.info_bytes(DeviceInfo::BackendKind)?);
+        Ok(if s == "native" { BackendKind::Native } else { BackendKind::Simulated })
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        self.device_type()
+            .map(|t| t.intersects(DeviceType::GPU))
+            .unwrap_or(false)
+    }
+
+    pub fn is_cpu(&self) -> bool {
+        self.device_type()
+            .map(|t| t.intersects(DeviceType::CPU))
+            .unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_queries() {
+        let d = Device::from_id(DeviceId(1)).unwrap();
+        assert_eq!(d.name().unwrap(), "SimCL GTX 1080");
+        assert_eq!(d.max_compute_units().unwrap(), 20);
+        assert_eq!(d.preferred_wg_multiple().unwrap(), 32);
+        assert!(d.is_gpu());
+        assert!(!d.is_cpu());
+        assert_eq!(d.backend().unwrap(), BackendKind::Simulated);
+    }
+
+    #[test]
+    fn native_device_is_cpu() {
+        let d = Device::from_id(DeviceId(0)).unwrap();
+        assert!(d.is_cpu());
+        assert_eq!(d.backend().unwrap(), BackendKind::Native);
+        assert!(d.max_work_item_sizes().unwrap().len() == 3);
+    }
+
+    #[test]
+    fn all_lists_three() {
+        assert_eq!(Device::all().len(), 3);
+    }
+
+    #[test]
+    fn invalid_id_rejected() {
+        assert!(Device::from_id(DeviceId(9)).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Device query module (paper §4.4): name → query table powering the
+//! `devinfo` utility and custom queries from client code.
+
+use super::device::Device;
+use super::errors::{CclError, CclResult};
+
+/// One queryable parameter: CLI name, description, and formatter.
+pub struct QueryParam {
+    pub name: &'static str,
+    pub description: &'static str,
+    fetch: fn(&Device) -> CclResult<String>,
+}
+
+impl QueryParam {
+    pub fn query(&self, dev: &Device) -> CclResult<String> {
+        (self.fetch)(&dev.clone())
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// The known-parameter table (`ccl_devquery_info_map`).
+pub fn known_params() -> &'static [QueryParam] {
+    &[
+        QueryParam {
+            name: "name",
+            description: "Device name",
+            fetch: |d| d.name(),
+        },
+        QueryParam {
+            name: "vendor",
+            description: "Device vendor",
+            fetch: |d| d.vendor(),
+        },
+        QueryParam {
+            name: "version",
+            description: "Device (driver) version string",
+            fetch: |d| d.version(),
+        },
+        QueryParam {
+            name: "type",
+            description: "Device type (CPU/GPU/...)",
+            fetch: |d| {
+                let t = d.device_type()?;
+                Ok(if t.intersects(crate::rawcl::types::DeviceType::GPU) {
+                    "GPU".to_string()
+                } else if t.intersects(crate::rawcl::types::DeviceType::CPU) {
+                    "CPU".to_string()
+                } else {
+                    "OTHER".to_string()
+                })
+            },
+        },
+        QueryParam {
+            name: "max_compute_units",
+            description: "Number of compute units",
+            fetch: |d| Ok(d.max_compute_units()?.to_string()),
+        },
+        QueryParam {
+            name: "max_work_group_size",
+            description: "Maximum work-group size",
+            fetch: |d| Ok(d.max_work_group_size()?.to_string()),
+        },
+        QueryParam {
+            name: "preferred_work_group_size_multiple",
+            description: "Preferred work-group size multiple",
+            fetch: |d| Ok(d.preferred_wg_multiple()?.to_string()),
+        },
+        QueryParam {
+            name: "max_work_item_sizes",
+            description: "Maximum work-item sizes per dimension",
+            fetch: |d| Ok(format!("{:?}", d.max_work_item_sizes()?)),
+        },
+        QueryParam {
+            name: "global_mem_size",
+            description: "Global memory size",
+            fetch: |d| Ok(fmt_bytes(d.global_mem_size()?)),
+        },
+        QueryParam {
+            name: "local_mem_size",
+            description: "Local (shared) memory size",
+            fetch: |d| Ok(fmt_bytes(d.local_mem_size()?)),
+        },
+        QueryParam {
+            name: "max_clock_frequency",
+            description: "Maximum clock frequency (MHz)",
+            fetch: |d| Ok(d.max_clock_frequency()?.to_string()),
+        },
+        QueryParam {
+            name: "backend",
+            description: "cf4rs backend (native PJRT / simulated)",
+            fetch: |d| Ok(format!("{:?}", d.backend()?)),
+        },
+    ]
+}
+
+/// Query one parameter by (case-insensitive, prefix-tolerant) name —
+/// cf4ocl's `ccl_devquery_prefix` behaviour.
+pub fn query_by_name(dev: &Device, name: &str) -> CclResult<String> {
+    let lname = name.to_lowercase();
+    let params = known_params();
+    // exact match first
+    if let Some(p) = params.iter().find(|p| p.name == lname) {
+        return p.query(dev);
+    }
+    // then unique prefix
+    let matches: Vec<&QueryParam> =
+        params.iter().filter(|p| p.name.starts_with(&lname)).collect();
+    match matches.len() {
+        1 => matches[0].query(dev),
+        0 => Err(CclError::framework(format!("unknown device parameter {name:?}"))),
+        n => Err(CclError::framework(format!(
+            "ambiguous device parameter {name:?} ({n} matches)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::types::DeviceId;
+
+    fn gtx() -> Device {
+        Device::from_id(DeviceId(1)).unwrap()
+    }
+
+    #[test]
+    fn table_is_nonempty_and_queryable() {
+        let d = gtx();
+        for p in known_params() {
+            let v = p.query(&d).unwrap();
+            assert!(!v.is_empty(), "param {} returned empty", p.name);
+        }
+    }
+
+    #[test]
+    fn query_by_exact_name() {
+        assert_eq!(query_by_name(&gtx(), "max_compute_units").unwrap(), "20");
+        assert_eq!(query_by_name(&gtx(), "type").unwrap(), "GPU");
+    }
+
+    #[test]
+    fn query_by_unique_prefix() {
+        assert_eq!(query_by_name(&gtx(), "vend").unwrap(), "SimCL (NVIDIA profile)");
+    }
+
+    #[test]
+    fn ambiguous_prefix_rejected() {
+        // "max_" matches several parameters.
+        let err = query_by_name(&gtx(), "max_").unwrap_err();
+        assert!(err.message.contains("ambiguous"));
+    }
+
+    #[test]
+    fn unknown_name_rejected() {
+        assert!(query_by_name(&gtx(), "quantum_flux").is_err());
+    }
+
+    #[test]
+    fn bytes_formatter() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(96 << 10), "96.0 KiB");
+        assert_eq!(fmt_bytes(8 << 30), "8.0 GiB");
+    }
+}

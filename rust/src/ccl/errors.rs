@@ -1,0 +1,122 @@
+//! Comprehensive error reporting (paper §3.2, §4.1, §4.4).
+//!
+//! cf4ocl reports errors two ways: via return values and via an optional
+//! error object carrying a code, a domain and a human-readable message.
+//! In Rust the `Result` return *is* the error object, so [`CclError`]
+//! plays the role of `CCLErr`: it carries the originating status code,
+//! the domain, and a formatted message — and every fallible framework
+//! function returns `CclResult<T>`.
+
+use std::fmt;
+
+use crate::rawcl::error::{status_name, ClStatus};
+
+/// Where an error originated (`GQuark` domains in cf4ocl).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorDomain {
+    /// Propagated substrate (OpenCL-level) error.
+    Rawcl,
+    /// Framework-level error (bad usage of the ccl API itself).
+    Ccl,
+    /// Artifact/build-system error (missing manifest, bad HLO, ...).
+    Artifacts,
+}
+
+impl fmt::Display for ErrorDomain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Self::Rawcl => "rawcl",
+            Self::Ccl => "ccl",
+            Self::Artifacts => "artifacts",
+        })
+    }
+}
+
+/// The framework error object (cf4ocl's `CCLErr`).
+#[derive(Debug, Clone)]
+pub struct CclError {
+    /// The substrate status code, when the error came from `rawcl`
+    /// (`CL_SUCCESS` for purely framework-level errors).
+    pub code: ClStatus,
+    pub domain: ErrorDomain,
+    pub message: String,
+}
+
+impl CclError {
+    /// Wrap a substrate status code with context.
+    pub fn from_status(code: ClStatus, context: impl Into<String>) -> Self {
+        let context = context.into();
+        Self {
+            code,
+            domain: ErrorDomain::Rawcl,
+            message: format!("{}: {} ({})", context, status_name(code), code),
+        }
+    }
+
+    /// A framework-level error with no substrate code.
+    pub fn framework(message: impl Into<String>) -> Self {
+        Self { code: 0, domain: ErrorDomain::Ccl, message: message.into() }
+    }
+
+    /// An artifact/build-path error.
+    pub fn artifacts(message: impl Into<String>) -> Self {
+        Self { code: 0, domain: ErrorDomain::Artifacts, message: message.into() }
+    }
+
+    /// The symbolic name of the substrate code (errors-module function).
+    pub fn code_name(&self) -> &'static str {
+        status_name(self.code)
+    }
+}
+
+impl fmt::Display for CclError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.domain, self.message)
+    }
+}
+
+impl std::error::Error for CclError {}
+
+/// Framework result type.
+pub type CclResult<T> = Result<T, CclError>;
+
+/// Convert a substrate status to a result, with lazy context.
+pub fn check(code: ClStatus, context: &str) -> CclResult<()> {
+    if code == crate::rawcl::error::CL_SUCCESS {
+        Ok(())
+    } else {
+        Err(CclError::from_status(code, context))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::error::*;
+
+    #[test]
+    fn from_status_formats_name_and_code() {
+        let e = CclError::from_status(CL_BUILD_PROGRAM_FAILURE, "building program");
+        assert_eq!(e.code, CL_BUILD_PROGRAM_FAILURE);
+        assert_eq!(e.domain, ErrorDomain::Rawcl);
+        assert!(e.message.contains("CL_BUILD_PROGRAM_FAILURE"));
+        assert!(e.message.contains("-11"));
+        assert!(e.to_string().contains("[rawcl]"));
+    }
+
+    #[test]
+    fn check_passes_success() {
+        assert!(check(CL_SUCCESS, "x").is_ok());
+        let e = check(CL_INVALID_KERNEL, "creating kernel").unwrap_err();
+        assert_eq!(e.code, CL_INVALID_KERNEL);
+        assert!(e.message.starts_with("creating kernel"));
+    }
+
+    #[test]
+    fn framework_errors_have_no_code() {
+        let e = CclError::framework("no devices matched the filter chain");
+        assert_eq!(e.code, 0);
+        assert_eq!(e.domain, ErrorDomain::Ccl);
+        assert_eq!(e.code_name(), "CL_SUCCESS");
+    }
+}

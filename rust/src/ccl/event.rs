@@ -1,0 +1,121 @@
+//! Event wrapper (`CCLEvent`).
+//!
+//! Events returned by the framework's enqueue functions are **owned by
+//! the queue wrapper** (paper §4.1: objects obtained from non-constructor
+//! methods must not be destroyed by client code), so this wrapper is a
+//! cheap non-owning handle with typed accessors.
+
+use crate::rawcl;
+use crate::rawcl::types::{CommandType, EventH, ProfilingInfo};
+
+use super::errors::{check, CclResult};
+
+/// Owning wrapper for a *user event* (`CCLUserEvent`): an event the host
+/// completes, used to gate device commands on host-side conditions.
+pub struct UserEvent {
+    ev: Event,
+    _live: super::wrapper::LiveToken,
+}
+
+impl UserEvent {
+    /// `ccl_user_event_new(ctx, &err)`.
+    pub fn new(ctx: &super::context::Context) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_user_event(ctx.handle(), &mut st);
+        check(st, "creating user event")?;
+        Ok(Self { ev: Event::new(h), _live: super::wrapper::LiveToken::new() })
+    }
+
+    /// The plain event view (for wait lists).
+    pub fn event(&self) -> Event {
+        self.ev
+    }
+
+    /// `ccl_user_event_set_status(evt, CL_COMPLETE, &err)`.
+    pub fn complete(&self) -> CclResult<()> {
+        check(rawcl::set_user_event_status(self.ev.h, 0), "completing user event")
+    }
+
+    /// Complete with a negative error status, failing dependants.
+    pub fn fail(&self, code: i32) -> CclResult<()> {
+        check(rawcl::set_user_event_status(self.ev.h, code), "failing user event")
+    }
+}
+
+impl Drop for UserEvent {
+    fn drop(&mut self) {
+        rawcl::release_event(self.ev.h);
+    }
+}
+
+/// Non-owning event wrapper.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct Event {
+    pub(crate) h: EventH,
+}
+
+impl Event {
+    pub(crate) fn new(h: EventH) -> Self {
+        Self { h }
+    }
+
+    pub fn handle(&self) -> EventH {
+        self.h
+    }
+
+    /// Name the event for profiling aggregation
+    /// (`ccl_event_set_name(evt, "RNG_KERNEL")`).
+    pub fn set_name(&self, name: &str) -> CclResult<()> {
+        check(rawcl::set_event_name(self.h, name), "naming event")
+    }
+
+    /// Block until the command completes.
+    pub fn wait(&self) -> CclResult<()> {
+        check(rawcl::wait_for_events(&[self.h]), "waiting on event")
+    }
+
+    pub fn command_type(&self) -> CclResult<CommandType> {
+        let mut t = CommandType::Marker;
+        check(rawcl::get_event_command_type(self.h, &mut t), "querying command type")?;
+        Ok(t)
+    }
+
+    fn prof(&self, p: ProfilingInfo) -> CclResult<u64> {
+        let mut v = 0u64;
+        check(
+            rawcl::get_event_profiling_info(self.h, p, &mut v),
+            "querying event profiling info",
+        )?;
+        Ok(v)
+    }
+
+    pub fn time_queued(&self) -> CclResult<u64> {
+        self.prof(ProfilingInfo::Queued)
+    }
+
+    pub fn time_submit(&self) -> CclResult<u64> {
+        self.prof(ProfilingInfo::Submit)
+    }
+
+    pub fn time_start(&self) -> CclResult<u64> {
+        self.prof(ProfilingInfo::Start)
+    }
+
+    pub fn time_end(&self) -> CclResult<u64> {
+        self.prof(ProfilingInfo::End)
+    }
+
+    /// Duration (END − START); requires a profiling queue + completion.
+    pub fn duration(&self) -> CclResult<u64> {
+        Ok(self.time_end()?.saturating_sub(self.time_start()?))
+    }
+
+    /// Wait for several events at once (`ccl_event_wait`).
+    pub fn wait_all(events: &[Event]) -> CclResult<()> {
+        if events.is_empty() {
+            return Ok(());
+        }
+        let hs: Vec<EventH> = events.iter().map(|e| e.h).collect();
+        check(rawcl::wait_for_events(&hs), "waiting on event list")
+    }
+}

@@ -1,0 +1,231 @@
+//! Image wrapper (`CCLImage`, the other concrete `CCLMemObj` of Fig. 1).
+
+use crate::rawcl;
+use crate::rawcl::image::{ImageDesc, ImageFormat};
+use crate::rawcl::types::{EventH, MemFlags, MemH};
+
+use super::context::Context;
+use super::errors::{check, CclResult};
+use super::event::Event;
+use super::queue::Queue;
+use super::wrapper::LiveToken;
+
+/// Owning wrapper for a 2D image.
+pub struct Image {
+    h: MemH,
+    desc: ImageDesc,
+    _live: LiveToken,
+}
+
+impl Image {
+    /// `ccl_image_new` (2D).
+    pub fn new_2d(
+        ctx: &Context,
+        flags: MemFlags,
+        format: ImageFormat,
+        width: usize,
+        height: usize,
+    ) -> CclResult<Self> {
+        let desc = ImageDesc { format, width, height };
+        let mut st = 0;
+        let h = rawcl::create_image2d(ctx.handle(), flags, desc, None, &mut st);
+        check(st, "creating 2D image")?;
+        Ok(Self { h, desc, _live: LiveToken::new() })
+    }
+
+    /// Create + initialise from packed host pixels.
+    pub fn from_pixels(
+        ctx: &Context,
+        flags: MemFlags,
+        format: ImageFormat,
+        width: usize,
+        height: usize,
+        pixels: &[u8],
+    ) -> CclResult<Self> {
+        let desc = ImageDesc { format, width, height };
+        let mut st = 0;
+        let h = rawcl::create_image2d(
+            ctx.handle(),
+            flags | MemFlags::COPY_HOST_PTR,
+            desc,
+            Some(pixels),
+            &mut st,
+        );
+        check(st, "creating initialised 2D image")?;
+        Ok(Self { h, desc, _live: LiveToken::new() })
+    }
+
+    pub fn handle(&self) -> MemH {
+        self.h
+    }
+
+    pub fn desc(&self) -> ImageDesc {
+        self.desc
+    }
+
+    /// Blocking rectangular read (`ccl_image_enqueue_read`); `dst`
+    /// receives tightly packed rows.
+    pub fn enqueue_read(
+        &self,
+        queue: &Queue,
+        origin: (usize, usize),
+        region: (usize, usize),
+        dst: &mut [u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_read_image(
+                queue.handle(),
+                self.h,
+                true,
+                origin,
+                region,
+                dst,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing image read",
+        )?;
+        Ok(queue.track_kernel_event(evt))
+    }
+
+    /// Blocking rectangular write (`ccl_image_enqueue_write`).
+    pub fn enqueue_write(
+        &self,
+        queue: &Queue,
+        origin: (usize, usize),
+        region: (usize, usize),
+        src: &[u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_write_image(
+                queue.handle(),
+                self.h,
+                true,
+                origin,
+                region,
+                src,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing image write",
+        )?;
+        Ok(queue.track_kernel_event(evt))
+    }
+
+    /// Fill a rectangle with one pixel (`ccl_image_enqueue_fill`).
+    pub fn enqueue_fill(
+        &self,
+        queue: &Queue,
+        pixel: &[u8],
+        origin: (usize, usize),
+        region: (usize, usize),
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_fill_image(
+                queue.handle(),
+                self.h,
+                pixel,
+                origin,
+                region,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing image fill",
+        )?;
+        Ok(queue.track_kernel_event(evt))
+    }
+}
+
+impl Drop for Image {
+    fn drop(&mut self) {
+        rawcl::release_image(self.h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_roundtrip_through_queue() {
+        let ctx = Context::new_gpu().unwrap();
+        let dev = ctx.device(0).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let img =
+            Image::new_2d(&ctx, MemFlags::READ_WRITE, ImageFormat::R_U8, 16, 8).unwrap();
+        assert_eq!(img.desc().byte_len(), 128);
+
+        // fill a band, write a block, read back the composition
+        img.enqueue_fill(&q, &[0xAA], (0, 0), (16, 8), &[]).unwrap();
+        img.enqueue_write(&q, (4, 2), (2, 2), &[1, 2, 3, 4], &[]).unwrap();
+        let mut out = vec![0u8; 16];
+        let ev = img.enqueue_read(&q, (4, 1), (4, 4), &mut out, &[]).unwrap();
+        ev.set_name("IMG_READ").unwrap();
+        // row 0 of the read (image row 1) is still the fill value
+        assert_eq!(&out[0..4], &[0xAA; 4]);
+        // rows 1-2 contain the written block at columns 0-1
+        assert_eq!(&out[4..6], &[1, 2]);
+        assert_eq!(&out[8..10], &[3, 4]);
+        assert_eq!(&out[6..8], &[0xAA; 2]);
+        q.finish().unwrap();
+    }
+
+    #[test]
+    fn rgba_f32_pixels() {
+        let ctx = Context::new_gpu().unwrap();
+        let dev = ctx.device(0).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let px: Vec<u8> = [1.0f32, 0.5, 0.25, 1.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let img = Image::new_2d(&ctx, MemFlags::READ_WRITE, ImageFormat::RGBA_F32, 4, 4)
+            .unwrap();
+        img.enqueue_fill(&q, &px, (1, 1), (2, 2), &[]).unwrap();
+        let mut out = vec![0u8; 16];
+        img.enqueue_read(&q, (2, 2), (1, 1), &mut out, &[]).unwrap();
+        assert_eq!(out, px);
+    }
+
+    #[test]
+    fn from_pixels_initialises() {
+        let ctx = Context::new_gpu().unwrap();
+        let dev = ctx.device(0).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let data: Vec<u8> = (0..64).collect();
+        let img = Image::from_pixels(
+            &ctx,
+            MemFlags::READ_ONLY,
+            ImageFormat::R_U8,
+            8,
+            8,
+            &data,
+        )
+        .unwrap();
+        let mut out = vec![0u8; 8];
+        img.enqueue_read(&q, (0, 3), (8, 1), &mut out, &[]).unwrap();
+        assert_eq!(out, (24..32).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn size_mismatches_are_errors() {
+        let ctx = Context::new_gpu().unwrap();
+        let dev = ctx.device(0).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let img =
+            Image::new_2d(&ctx, MemFlags::READ_WRITE, ImageFormat::R_U8, 4, 4).unwrap();
+        let mut small = vec![0u8; 3];
+        assert!(img.enqueue_read(&q, (0, 0), (2, 2), &mut small, &[]).is_err());
+        assert!(img.enqueue_write(&q, (0, 0), (2, 2), &[0u8; 5], &[]).is_err());
+        assert!(img.enqueue_fill(&q, &[0u8; 2], (0, 0), (1, 1), &[]).is_err());
+    }
+}

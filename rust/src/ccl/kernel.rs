@@ -1,0 +1,228 @@
+//! Kernel wrapper (`CCLKernel`): argument helpers + the one-call
+//! `set_args_and_enqueue_ndrange` API the paper showcases (§6.1).
+//!
+//! ```no_run
+//! # use cf4rs::ccl::{Arg, Context, Program, Queue};
+//! # let ctx = Context::new_gpu().unwrap();
+//! # let q = Queue::new_profiled(&ctx, ctx.device(0).unwrap()).unwrap();
+//! # let prg = Program::new_from_artifacts(&ctx, &["rng_n4096"]).unwrap();
+//! # prg.build().unwrap();
+//! # let krng = prg.kernel("prng_step").unwrap();
+//! # let (buf1, buf2) = (cf4rs::ccl::Buffer::new(&ctx, cf4rs::rawcl::MemFlags::READ_WRITE, 4096*8).unwrap(), cf4rs::ccl::Buffer::new(&ctx, cf4rs::rawcl::MemFlags::READ_WRITE, 4096*8).unwrap());
+//! let evt = krng.set_args_and_enqueue_ndrange(
+//!     &q, &[4096], None, &[],
+//!     &[Arg::priv_u32(4096), Arg::buf(&buf1), Arg::buf(&buf2)],
+//! ).unwrap();
+//! ```
+
+use crate::rawcl;
+use crate::rawcl::types::{EventH, KernelH, KernelWorkGroupInfo};
+
+use super::buffer::Buffer;
+use super::device::Device;
+use super::errors::{check, CclError, CclResult};
+use super::event::Event;
+use super::queue::Queue;
+use super::worksize;
+use super::wrapper::LiveToken;
+
+/// One kernel argument in the variadic-style API.
+///
+/// * [`Arg::Buf`] — a buffer argument;
+/// * [`Arg::Priv`] — a private scalar by bytes (`ccl_arg_priv`);
+/// * [`Arg::Skip`] — keep the previously-set value (`ccl_arg_skip`),
+///   used for constant arguments set once outside a loop.
+pub enum Arg<'a> {
+    Buf(&'a Buffer),
+    Priv(Vec<u8>),
+    Skip,
+}
+
+impl<'a> Arg<'a> {
+    pub fn buf(b: &'a Buffer) -> Self {
+        Arg::Buf(b)
+    }
+
+    /// `ccl_arg_priv(x, cl_uint)`.
+    pub fn priv_u32(x: u32) -> Self {
+        Arg::Priv(x.to_le_bytes().to_vec())
+    }
+
+    pub fn priv_u64(x: u64) -> Self {
+        Arg::Priv(x.to_le_bytes().to_vec())
+    }
+
+    pub fn priv_f32(x: f32) -> Self {
+        Arg::Priv(x.to_le_bytes().to_vec())
+    }
+
+    /// `ccl_arg_skip`.
+    pub fn skip() -> Self {
+        Arg::Skip
+    }
+}
+
+/// Kernel wrapper. Owning when created standalone ([`Kernel::new`]);
+/// non-owning when obtained from a program (`Program::kernel`), matching
+/// cf4ocl's ownership rules.
+pub struct Kernel {
+    h: KernelH,
+    owned: bool,
+    _live: Option<LiveToken>,
+}
+
+impl Kernel {
+    /// Standalone constructor (`ccl_kernel_new`): caller-owned.
+    pub fn new(prg: &super::program::Program, name: &str) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_kernel(prg.handle(), name, &mut st);
+        check(st, &format!("creating kernel {name:?}"))?;
+        Ok(Self { h, owned: true, _live: Some(LiveToken::new()) })
+    }
+
+    pub(crate) fn non_owning(h: KernelH) -> Self {
+        Self { h, owned: false, _live: None }
+    }
+
+    pub fn handle(&self) -> KernelH {
+        self.h
+    }
+
+    /// Kernel function name.
+    pub fn name(&self) -> CclResult<String> {
+        let mut s = String::new();
+        check(rawcl::get_kernel_function_name(self.h, &mut s), "querying kernel name")?;
+        Ok(s)
+    }
+
+    pub fn num_args(&self) -> CclResult<usize> {
+        let mut n = 0;
+        check(rawcl::get_kernel_num_args(self.h, &mut n), "querying kernel arg count")?;
+        Ok(n)
+    }
+
+    /// `ccl_kernel_set_arg` with the [`Arg`] helpers.
+    pub fn set_arg(&self, index: usize, arg: &Arg<'_>) -> CclResult<()> {
+        let value = match arg {
+            Arg::Buf(b) => rawcl::ArgValue::Buffer(b.handle()),
+            Arg::Priv(bytes) => rawcl::ArgValue::Scalar(bytes.clone()),
+            Arg::Skip => return Ok(()),
+        };
+        check(
+            rawcl::set_kernel_arg(self.h, index, &value),
+            &format!("setting kernel arg {index}"),
+        )
+    }
+
+    /// Set several args at once, honouring [`Arg::Skip`].
+    pub fn set_args(&self, args: &[Arg<'_>]) -> CclResult<()> {
+        for (i, a) in args.iter().enumerate() {
+            self.set_arg(i, a)?;
+        }
+        Ok(())
+    }
+
+    /// `ccl_kernel_enqueue_ndrange`: launch with the current arguments.
+    pub fn enqueue_ndrange(
+        &self,
+        queue: &Queue,
+        gws: &[usize],
+        lws: Option<&[usize]>,
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_ndrange_kernel(
+                queue.handle(),
+                self.h,
+                gws.len() as u32,
+                gws,
+                lws,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing kernel",
+        )?;
+        Ok(queue.track_kernel_event(evt))
+    }
+
+    /// The paper's flagship single-call API
+    /// (`ccl_kernel_set_args_and_enqueue_ndrange`): set all arguments and
+    /// launch in one statement.
+    pub fn set_args_and_enqueue_ndrange(
+        &self,
+        queue: &Queue,
+        gws: &[usize],
+        lws: Option<&[usize]>,
+        wait: &[Event],
+        args: &[Arg<'_>],
+    ) -> CclResult<Event> {
+        self.set_args(args)?;
+        self.enqueue_ndrange(queue, gws, lws, wait)
+    }
+
+    /// `ccl_kernel_suggest_worksizes`: fill appropriate global/local work
+    /// sizes for `rws` real work on `dev` (paper §6.1; handles the
+    /// preferred-multiple query, the pre-2.0 divisibility rule and
+    /// multiple dimensions).
+    pub fn suggest_worksizes(
+        &self,
+        dev: Device,
+        rws: &[usize],
+    ) -> CclResult<(Vec<usize>, Vec<usize>)> {
+        worksize::suggest_worksizes(Some(self), dev, rws)
+    }
+
+    /// Preferred work-group size multiple for `dev`.
+    pub fn preferred_wg_multiple(&self, dev: Device) -> CclResult<usize> {
+        let mut v = 0;
+        check(
+            rawcl::get_kernel_work_group_info(
+                self.h,
+                dev.id(),
+                KernelWorkGroupInfo::PreferredWorkGroupSizeMultiple,
+                &mut v,
+            ),
+            "querying preferred work-group multiple",
+        )?;
+        Ok(v)
+    }
+
+    /// Maximum work-group size for `dev`.
+    pub fn max_work_group_size(&self, dev: Device) -> CclResult<usize> {
+        let mut v = 0;
+        check(
+            rawcl::get_kernel_work_group_info(
+                self.h,
+                dev.id(),
+                KernelWorkGroupInfo::WorkGroupSize,
+                &mut v,
+            ),
+            "querying kernel max work-group size",
+        )?;
+        Ok(v)
+    }
+}
+
+impl Drop for Kernel {
+    fn drop(&mut self) {
+        if self.owned {
+            rawcl::release_kernel(self.h);
+        }
+    }
+}
+
+/// Validation shared with `worksize`: a zero-dim launch is meaningless.
+pub(crate) fn check_dims(rws: &[usize]) -> CclResult<()> {
+    if rws.is_empty() || rws.len() > 3 {
+        return Err(CclError::framework(format!(
+            "work size must have 1-3 dimensions, got {}",
+            rws.len()
+        )));
+    }
+    if rws.iter().any(|&r| r == 0) {
+        return Err(CclError::framework("zero-sized work dimension"));
+    }
+    Ok(())
+}

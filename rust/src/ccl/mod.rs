@@ -1,0 +1,49 @@
+//! # `ccl` — the cf4rs framework (the paper's contribution)
+//!
+//! An object-oriented wrapper layer over [`crate::rawcl`] mirroring
+//! cf4ocl's design (paper §3–§4):
+//!
+//! * one-to-one wrapper classes with clear constructor/destructor
+//!   semantics ([`Context`], [`Queue`], [`Program`], [`Kernel`],
+//!   [`Buffer`], [`Event`]) — Fig. 1's class hierarchy, with Rust RAII
+//!   playing the role of the `*_destroy` functions;
+//! * automatic management of intermediate objects: queues keep their
+//!   events, programs keep their kernels, info queries return typed
+//!   values instead of raw bytes;
+//! * a flexible device-selection mechanism ([`selector`]) with plug-in
+//!   filters;
+//! * comprehensive error reporting ([`errors`]);
+//! * integrated profiling with aggregation and overlap detection
+//!   ([`prof`]);
+//! * a versatile device-query table ([`devquery`]) and a platforms
+//!   module ([`platforms`]).
+
+pub mod buffer;
+pub mod context;
+pub mod device;
+pub mod devquery;
+pub mod errors;
+pub mod event;
+pub mod image;
+pub mod kernel;
+pub mod platforms;
+pub mod prof;
+pub mod program;
+pub mod queue;
+pub mod selector;
+pub mod worksize;
+pub mod wrapper;
+
+pub use buffer::Buffer;
+pub use context::Context;
+pub use device::Device;
+pub use errors::{CclError, CclResult, ErrorDomain};
+pub use event::{Event, UserEvent};
+pub use image::Image;
+pub use kernel::{Arg, Kernel};
+pub use prof::Prof;
+pub use program::Program;
+pub use queue::Queue;
+pub use selector::{Filter, FilterChain};
+pub use worksize::suggest_worksizes;
+pub use wrapper::memcheck;

@@ -1,0 +1,71 @@
+//! Platforms module (paper §4.4): works with the *set* of available
+//! platforms, unlike the platform wrapper which works with one.
+
+use crate::rawcl;
+use crate::rawcl::types::{PlatformId, PlatformInfo};
+
+use super::device::Device;
+use super::errors::{check, CclResult};
+
+/// Info snapshot of one platform plus its devices.
+pub struct PlatformDesc {
+    pub id: PlatformId,
+    pub name: String,
+    pub vendor: String,
+    pub version: String,
+    pub devices: Vec<Device>,
+}
+
+/// `ccl_platforms_new`: snapshot all platforms in the system.
+pub fn all() -> CclResult<Vec<PlatformDesc>> {
+    let mut n = 0u32;
+    check(rawcl::get_platform_ids(0, None, Some(&mut n)), "counting platforms")?;
+    let mut ids = vec![PlatformId(0); n as usize];
+    check(rawcl::get_platform_ids(n, Some(&mut ids), None), "listing platforms")?;
+    let mut out = Vec::with_capacity(ids.len());
+    for id in ids {
+        let get = |param: PlatformInfo| -> CclResult<String> {
+            let mut buf = Vec::new();
+            check(
+                rawcl::get_platform_info(id, param, Some(&mut buf), None),
+                "querying platform info",
+            )?;
+            Ok(String::from_utf8_lossy(&buf).into_owned())
+        };
+        let name = get(PlatformInfo::Name)?;
+        let vendor = get(PlatformInfo::Vendor)?;
+        let version = get(PlatformInfo::Version)?;
+        let devices = crate::rawcl::platform::platform_devices(id)
+            .unwrap_or_default()
+            .into_iter()
+            .map(|d| Device { id: d.id })
+            .collect();
+        out.push(PlatformDesc { id, name, vendor, version, devices });
+    }
+    Ok(out)
+}
+
+/// Number of platforms (`ccl_platforms_count`).
+pub fn count() -> CclResult<usize> {
+    Ok(all()?.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_has_both_platforms() {
+        let ps = all().unwrap();
+        assert_eq!(ps.len(), 2);
+        assert!(ps[0].name.contains("PJRT"));
+        assert!(ps[1].name.contains("SimCL"));
+        assert_eq!(ps[0].devices.len(), 1);
+        assert_eq!(ps[1].devices.len(), 2);
+    }
+
+    #[test]
+    fn count_matches() {
+        assert_eq!(count().unwrap(), 2);
+    }
+}

@@ -1,0 +1,143 @@
+//! Profile export (paper §4.3): a table of per-event info —
+//! queue name, start instant, end instant, event name — consumable by
+//! the `plot_events` utility (Fig. 5).
+
+use std::path::Path;
+
+use super::info::ProfInfo;
+use crate::ccl::errors::{CclError, CclResult};
+
+pub const EXPORT_HEADER: &str = "queue\tstart\tend\tname";
+
+/// Serialise per-event records to the export TSV format.
+pub fn to_tsv(infos: &[ProfInfo]) -> String {
+    let mut out = String::with_capacity(infos.len() * 48 + 32);
+    out.push_str(EXPORT_HEADER);
+    out.push('\n');
+    // Sorted by start instant — the natural timeline order.
+    let mut sorted: Vec<&ProfInfo> = infos.iter().collect();
+    sorted.sort_by_key(|i| i.t_start);
+    for i in sorted {
+        out.push_str(&format!("{}\t{}\t{}\t{}\n", i.queue, i.t_start, i.t_end, i.name));
+    }
+    out
+}
+
+/// Write the export table to a file (`ccl_prof_export_info_file`).
+pub fn write_file(infos: &[ProfInfo], path: impl AsRef<Path>) -> CclResult<()> {
+    std::fs::write(path.as_ref(), to_tsv(infos)).map_err(|e| {
+        CclError::framework(format!(
+            "writing profile export {}: {e}",
+            path.as_ref().display()
+        ))
+    })
+}
+
+/// Parse an export table (used by the `plot_events` utility).
+pub fn parse_tsv(text: &str) -> CclResult<Vec<ProfInfo>> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == EXPORT_HEADER => {}
+        other => {
+            return Err(CclError::framework(format!(
+                "bad export header: {other:?} (want {EXPORT_HEADER:?})"
+            )))
+        }
+    }
+    let mut out = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            return Err(CclError::framework(format!(
+                "export line {}: want 4 columns, got {}",
+                ln + 2,
+                cols.len()
+            )));
+        }
+        let parse = |s: &str| -> CclResult<u64> {
+            s.parse().map_err(|_| {
+                CclError::framework(format!("export line {}: bad number {s:?}", ln + 2))
+            })
+        };
+        let start = parse(cols[1])?;
+        let end = parse(cols[2])?;
+        out.push(ProfInfo {
+            name: cols[3].to_string(),
+            queue: cols[0].to_string(),
+            t_queued: start,
+            t_submit: start,
+            t_start: start,
+            t_end: end,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<ProfInfo> {
+        vec![
+            ProfInfo {
+                name: "RNG_KERNEL".into(),
+                queue: "Main".into(),
+                t_queued: 10,
+                t_submit: 11,
+                t_start: 12,
+                t_end: 40,
+            },
+            ProfInfo {
+                name: "READ_BUFFER".into(),
+                queue: "Comms".into(),
+                t_queued: 1,
+                t_submit: 2,
+                t_start: 3,
+                t_end: 50,
+            },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let tsv = to_tsv(&sample());
+        let parsed = parse_tsv(&tsv).unwrap();
+        assert_eq!(parsed.len(), 2);
+        // to_tsv sorts by start: READ_BUFFER first
+        assert_eq!(parsed[0].name, "READ_BUFFER");
+        assert_eq!(parsed[0].t_start, 3);
+        assert_eq!(parsed[1].queue, "Main");
+        assert_eq!(parsed[1].t_end, 40);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(parse_tsv("nope\n").is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let bad = format!("{EXPORT_HEADER}\nq\t1\t2\n");
+        assert!(parse_tsv(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let bad = format!("{EXPORT_HEADER}\nq\tx\t2\tname\n");
+        assert!(parse_tsv(&bad).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cf4rs_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prof.tsv");
+        write_file(&sample(), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(parse_tsv(&text).unwrap().len(), 2);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! Profiling data types (paper §4.3): `CCLProfInfo`, `CCLProfInst`,
+//! `CCLProfAgg` and their sort orders.
+
+/// Non-aggregate, per-event information (`CCLProfInfo`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfInfo {
+    /// Event name (user-assigned, or command-type name).
+    pub name: String,
+    /// Name of the queue the event ran on (as given to `add_queue`).
+    pub queue: String,
+    /// Profiling instants, ns on the process profiling clock.
+    pub t_queued: u64,
+    pub t_submit: u64,
+    pub t_start: u64,
+    pub t_end: u64,
+}
+
+impl ProfInfo {
+    pub fn duration(&self) -> u64 {
+        self.t_end.saturating_sub(self.t_start)
+    }
+}
+
+/// Which endpoint a [`ProfInst`] marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstType {
+    Start,
+    End,
+}
+
+/// One event instant (`CCLProfInst`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfInst {
+    pub name: String,
+    pub queue: String,
+    pub itype: InstType,
+    pub instant: u64,
+    /// Index into the `ProfInfo` list this instant belongs to.
+    pub event_index: usize,
+}
+
+/// Aggregated times for all events with the same name (`CCLProfAgg`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfAgg {
+    pub name: String,
+    /// Total (absolute) time in ns.
+    pub abs_time: u64,
+    /// Fraction of the summed duration of all events (0..=1).
+    pub rel_time: f64,
+    /// Number of events aggregated.
+    pub count: usize,
+}
+
+/// Overlap between two (named) events (`CCLProfOverlap`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfOverlap {
+    pub event1: String,
+    pub event2: String,
+    /// Total overlapped time in ns.
+    pub duration: u64,
+}
+
+/// Sort key for aggregates (paper: `CCL_PROF_AGG_SORT_TIME` etc.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggSort {
+    Time,
+    Name,
+}
+
+/// Sort key for overlaps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapSort {
+    Duration,
+    Name,
+}
+
+/// Sort direction (`CCL_PROF_SORT_ASC`/`DESC`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SortDir {
+    Asc,
+    Desc,
+}
+
+pub fn sort_aggs(aggs: &mut [ProfAgg], key: AggSort, dir: SortDir) {
+    aggs.sort_by(|a, b| {
+        let ord = match key {
+            AggSort::Time => a.abs_time.cmp(&b.abs_time),
+            AggSort::Name => a.name.cmp(&b.name),
+        };
+        match dir {
+            SortDir::Asc => ord,
+            SortDir::Desc => ord.reverse(),
+        }
+    });
+}
+
+pub fn sort_overlaps(ovs: &mut [ProfOverlap], key: OverlapSort, dir: SortDir) {
+    ovs.sort_by(|a, b| {
+        let ord = match key {
+            OverlapSort::Duration => a.duration.cmp(&b.duration),
+            OverlapSort::Name => (&a.event1, &a.event2).cmp(&(&b.event1, &b.event2)),
+        };
+        match dir {
+            SortDir::Asc => ord,
+            SortDir::Desc => ord.reverse(),
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg(name: &str, t: u64) -> ProfAgg {
+        ProfAgg { name: name.into(), abs_time: t, rel_time: 0.0, count: 1 }
+    }
+
+    #[test]
+    fn agg_sorting() {
+        let mut v = vec![agg("b", 10), agg("a", 30), agg("c", 20)];
+        sort_aggs(&mut v, AggSort::Time, SortDir::Desc);
+        assert_eq!(v[0].name, "a");
+        assert_eq!(v[2].name, "b");
+        sort_aggs(&mut v, AggSort::Name, SortDir::Asc);
+        assert_eq!(v[0].name, "a");
+        assert_eq!(v[2].name, "c");
+    }
+
+    #[test]
+    fn overlap_sorting() {
+        let mut v = vec![
+            ProfOverlap { event1: "x".into(), event2: "y".into(), duration: 5 },
+            ProfOverlap { event1: "a".into(), event2: "b".into(), duration: 9 },
+        ];
+        sort_overlaps(&mut v, OverlapSort::Duration, SortDir::Desc);
+        assert_eq!(v[0].duration, 9);
+        sort_overlaps(&mut v, OverlapSort::Name, SortDir::Asc);
+        assert_eq!(v[0].event1, "a");
+    }
+
+    #[test]
+    fn info_duration_saturates() {
+        let i = ProfInfo {
+            name: "e".into(),
+            queue: "q".into(),
+            t_queued: 0,
+            t_submit: 0,
+            t_start: 10,
+            t_end: 5,
+        };
+        assert_eq!(i.duration(), 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Integrated profiler (`CCLProf`, paper §4.3).
+//!
+//! Usage mirrors the paper (listing S2, lines 252–325):
+//!
+//! ```no_run
+//! # use cf4rs::ccl::{Context, Queue, prof::Prof};
+//! # let ctx = Context::new_gpu().unwrap();
+//! # let dev = ctx.device(0).unwrap();
+//! # let cq_main = Queue::new_profiled(&ctx, dev).unwrap();
+//! # let cq_comms = Queue::new_profiled(&ctx, dev).unwrap();
+//! let mut prof = Prof::new();
+//! prof.start();
+//! // ... enqueue kernels and transfers on the queues ...
+//! prof.stop();
+//! prof.add_queue("Main", &cq_main);
+//! prof.add_queue("Comms", &cq_comms);
+//! prof.calc().unwrap();
+//! eprintln!("{}", prof.summary_default());
+//! ```
+//!
+//! Because [`Queue`](crate::ccl::Queue) wrappers track every event they
+//! generate, no client-side event bookkeeping is needed — the decisive
+//! difference from the raw-API profiling code in listing S1 (lines
+//! 455–523), which also cannot compute overlaps.
+
+pub mod export;
+pub mod info;
+pub mod overlap;
+pub mod summary;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+pub use info::{
+    AggSort, InstType, OverlapSort, ProfAgg, ProfInfo, ProfInst, ProfOverlap, SortDir,
+};
+
+use crate::rawcl::clock;
+
+use super::errors::{CclError, CclResult};
+use super::queue::Queue;
+
+/// The profiler object.
+#[derive(Default)]
+pub struct Prof {
+    queues: Vec<(String, Vec<super::event::Event>)>,
+    t_start: Option<u64>,
+    t_stop: Option<u64>,
+    infos: Vec<ProfInfo>,
+    aggs: Vec<ProfAgg>,
+    insts: Vec<ProfInst>,
+    overlaps: Vec<ProfOverlap>,
+    effective_ns: u64,
+    calculated: bool,
+}
+
+impl Prof {
+    /// `ccl_prof_new`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `ccl_prof_start`: begin the host wall-clock window.
+    pub fn start(&mut self) {
+        self.t_start = Some(clock::now_ns());
+    }
+
+    /// `ccl_prof_stop`.
+    pub fn stop(&mut self) {
+        self.t_stop = Some(clock::now_ns());
+    }
+
+    /// Host wall-clock seconds between `start` and `stop`
+    /// (`ccl_prof_time_elapsed`).
+    pub fn time_elapsed(&self) -> f64 {
+        self.elapsed_ns() as f64 * 1e-9
+    }
+
+    fn elapsed_ns(&self) -> u64 {
+        match (self.t_start, self.t_stop) {
+            (Some(a), Some(b)) => b.saturating_sub(a),
+            _ => 0,
+        }
+    }
+
+    /// `ccl_prof_add_queue`: harvest a queue's tracked events.
+    ///
+    /// The queue wrapper keeps its events alive; the profiler snapshots
+    /// them here and reads their timestamps in [`calc`](Self::calc).
+    pub fn add_queue(&mut self, name: impl Into<String>, queue: &Queue) {
+        self.queues.push((name.into(), queue.events()));
+    }
+
+    /// `ccl_prof_calc`: run the profiling analysis.
+    pub fn calc(&mut self) -> CclResult<()> {
+        if self.calculated {
+            return Err(CclError::framework("profiling already calculated"));
+        }
+        let mut infos = Vec::new();
+        for (qname, events) in &self.queues {
+            for ev in events {
+                // Markers and incomplete events are skipped; any other
+                // profiling failure (e.g. queue without the profiling
+                // flag) is a real error, as in cf4ocl.
+                use crate::rawcl::types::CommandType;
+                let cmd = ev.command_type().map_err(|e| {
+                    CclError::framework(format!("event vanished during calc: {e}"))
+                })?;
+                if cmd == CommandType::Marker {
+                    continue;
+                }
+                let t_start = ev.time_start()?;
+                let t_end = ev.time_end()?;
+                infos.push(ProfInfo {
+                    name: event_display_name(ev),
+                    queue: qname.clone(),
+                    t_queued: ev.time_queued()?,
+                    t_submit: ev.time_submit()?,
+                    t_start,
+                    t_end,
+                });
+            }
+        }
+
+        // Aggregates by name.
+        let mut agg_map: HashMap<String, (u64, usize)> = HashMap::new();
+        let mut total: u64 = 0;
+        for i in &infos {
+            let d = i.duration();
+            let e = agg_map.entry(i.name.clone()).or_insert((0, 0));
+            e.0 += d;
+            e.1 += 1;
+            total += d;
+        }
+        let mut aggs: Vec<ProfAgg> = agg_map
+            .into_iter()
+            .map(|(name, (abs_time, count))| ProfAgg {
+                name,
+                abs_time,
+                rel_time: if total > 0 { abs_time as f64 / total as f64 } else { 0.0 },
+                count,
+            })
+            .collect();
+        aggs.sort_by(|a, b| b.abs_time.cmp(&a.abs_time));
+
+        // Instants.
+        let mut insts = Vec::with_capacity(infos.len() * 2);
+        for (idx, i) in infos.iter().enumerate() {
+            insts.push(ProfInst {
+                name: i.name.clone(),
+                queue: i.queue.clone(),
+                itype: InstType::Start,
+                instant: i.t_start,
+                event_index: idx,
+            });
+            insts.push(ProfInst {
+                name: i.name.clone(),
+                queue: i.queue.clone(),
+                itype: InstType::End,
+                instant: i.t_end,
+                event_index: idx,
+            });
+        }
+        insts.sort_by_key(|i| i.instant);
+
+        self.overlaps = overlap::compute_overlaps(&infos);
+        self.effective_ns = overlap::effective_total(&infos);
+        self.aggs = aggs;
+        self.insts = insts;
+        self.infos = infos;
+        self.calculated = true;
+        Ok(())
+    }
+
+    fn ensure_calculated(&self) -> CclResult<()> {
+        if self.calculated {
+            Ok(())
+        } else {
+            Err(CclError::framework("call calc() before accessing results"))
+        }
+    }
+
+    /// Aggregate event information (`CCLProfAgg` iteration).
+    pub fn aggs(&self) -> CclResult<&[ProfAgg]> {
+        self.ensure_calculated()?;
+        Ok(&self.aggs)
+    }
+
+    /// Non-aggregate event information (`CCLProfInfo` iteration).
+    pub fn infos(&self) -> CclResult<&[ProfInfo]> {
+        self.ensure_calculated()?;
+        Ok(&self.infos)
+    }
+
+    /// Event instants (`CCLProfInst` iteration).
+    pub fn instants(&self) -> CclResult<&[ProfInst]> {
+        self.ensure_calculated()?;
+        Ok(&self.insts)
+    }
+
+    /// Event overlaps (`CCLProfOverlap` iteration).
+    pub fn overlaps(&self) -> CclResult<&[ProfOverlap]> {
+        self.ensure_calculated()?;
+        Ok(&self.overlaps)
+    }
+
+    /// Union length of all event intervals, ns.
+    pub fn effective_ns(&self) -> CclResult<u64> {
+        self.ensure_calculated()?;
+        Ok(self.effective_ns)
+    }
+
+    /// `ccl_prof_get_summary` with explicit sort flags.
+    pub fn summary(
+        &self,
+        agg_sort: (AggSort, SortDir),
+        ov_sort: (OverlapSort, SortDir),
+    ) -> CclResult<String> {
+        self.ensure_calculated()?;
+        Ok(summary::render(
+            &self.aggs,
+            &self.overlaps,
+            self.effective_ns,
+            self.elapsed_ns(),
+            agg_sort,
+            ov_sort,
+        ))
+    }
+
+    /// Summary with the paper's flags: aggregates by time desc, overlaps
+    /// by duration desc.
+    pub fn summary_default(&self) -> String {
+        self.summary(
+            (AggSort::Time, SortDir::Desc),
+            (OverlapSort::Duration, SortDir::Desc),
+        )
+        .unwrap_or_else(|e| format!("<{e}>"))
+    }
+
+    /// `ccl_prof_export_info_file`: write the Fig. 5 input table.
+    pub fn export_tsv(&self, path: impl AsRef<Path>) -> CclResult<()> {
+        self.ensure_calculated()?;
+        export::write_file(&self.infos, path)
+    }
+
+    /// In-memory export (testing + piping).
+    pub fn export_string(&self) -> CclResult<String> {
+        self.ensure_calculated()?;
+        Ok(export::to_tsv(&self.infos))
+    }
+}
+
+fn event_display_name(ev: &super::event::Event) -> String {
+    crate::rawcl::event::lookup(ev.handle())
+        .map(|o| o.display_name())
+        .unwrap_or_else(|| "UNKNOWN".to_string())
+}

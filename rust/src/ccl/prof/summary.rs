@@ -1,0 +1,180 @@
+//! Text summary (`ccl_prof_get_summary`) — the Fig. 3 report.
+
+use super::info::{
+    sort_aggs, sort_overlaps, AggSort, OverlapSort, ProfAgg, ProfOverlap, SortDir,
+};
+
+/// Render the profiling summary in the paper's Fig. 3 layout.
+pub fn render(
+    aggs: &[ProfAgg],
+    overlaps: &[ProfOverlap],
+    effective_ns: u64,
+    elapsed_ns: u64,
+    agg_sort: (AggSort, SortDir),
+    ov_sort: (OverlapSort, SortDir),
+) -> String {
+    let mut aggs = aggs.to_vec();
+    sort_aggs(&mut aggs, agg_sort.0, agg_sort.1);
+    let mut overlaps = overlaps.to_vec();
+    sort_overlaps(&mut overlaps, ov_sort.0, ov_sort.1);
+
+    let sec = |ns: u64| ns as f64 * 1e-9;
+    let mut s = String::new();
+    s.push_str("\n Aggregate times by event  :\n");
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+    s.push_str(
+        "   | Event name                     | Rel. time (%) | Abs. time (s)  |\n",
+    );
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+    let mut total_abs = 0u64;
+    for a in &aggs {
+        s.push_str(&format!(
+            "   | {:<30} | {:>13.4} | {:>14.4e} |\n",
+            truncate(&a.name, 30),
+            a.rel_time * 100.0,
+            sec(a.abs_time),
+        ));
+        total_abs += a.abs_time;
+    }
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+    s.push_str(&format!(
+        "   |                                |         Total | {:>14.4e} |\n",
+        sec(total_abs)
+    ));
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+
+    s.push_str(" Event overlaps            :\n");
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+    s.push_str(
+        "   | Event 1                | Event 2                | Overlap (s)   |\n",
+    );
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+    let mut total_ov = 0u64;
+    for o in &overlaps {
+        s.push_str(&format!(
+            "   | {:<22} | {:<22} | {:>13.4e} |\n",
+            truncate(&o.event1, 22),
+            truncate(&o.event2, 22),
+            sec(o.duration),
+        ));
+        total_ov += o.duration;
+    }
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+    s.push_str(&format!(
+        "   |                        |                  Total | {:>13.4e} |\n",
+        sec(total_ov)
+    ));
+    s.push_str(
+        "   ------------------------------------------------------------------\n",
+    );
+
+    s.push_str(&format!(
+        " Tot. of all events (eff.) : {:e}s\n",
+        sec(effective_ns)
+    ));
+    s.push_str(&format!(" Total elapsed time        : {:e}s\n", sec(elapsed_ns)));
+    if elapsed_ns > 0 {
+        s.push_str(&format!(
+            " Time spent in device      : {:.2}%\n",
+            sec(effective_ns) / sec(elapsed_ns) * 100.0
+        ));
+    }
+    s
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n.saturating_sub(1)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_figure3_shape() {
+        let aggs = vec![
+            ProfAgg {
+                name: "READ_BUFFER".into(),
+                abs_time: 6_652_100_000,
+                rel_time: 0.890810,
+                count: 10000,
+            },
+            ProfAgg {
+                name: "RNG_KERNEL".into(),
+                abs_time: 815_400_000,
+                rel_time: 0.109182,
+                count: 9999,
+            },
+            ProfAgg {
+                name: "INIT_KERNEL".into(),
+                abs_time: 60_000,
+                rel_time: 0.000008,
+                count: 1,
+            },
+        ];
+        let ovs = vec![ProfOverlap {
+            event1: "RNG_KERNEL".into(),
+            event2: "READ_BUFFER".into(),
+            duration: 15_790_000,
+        }];
+        let out = render(
+            &aggs,
+            &ovs,
+            7_451_659_000,
+            9_054_619_000,
+            (AggSort::Time, SortDir::Desc),
+            (OverlapSort::Duration, SortDir::Desc),
+        );
+        assert!(out.contains("READ_BUFFER"));
+        assert!(out.contains("89.0810"));
+        assert!(out.contains("RNG_KERNEL"));
+        assert!(out.contains("Tot. of all events (eff.)"));
+        assert!(out.contains("Total elapsed time"));
+        // READ_BUFFER (89%) sorted above RNG_KERNEL (10.9%)
+        let ri = out.find("READ_BUFFER").unwrap();
+        let ki = out.find("RNG_KERNEL").unwrap();
+        assert!(ri < ki);
+    }
+
+    #[test]
+    fn name_sort_asc_reorders() {
+        let aggs = vec![
+            ProfAgg { name: "Z".into(), abs_time: 100, rel_time: 0.9, count: 1 },
+            ProfAgg { name: "A".into(), abs_time: 10, rel_time: 0.1, count: 1 },
+        ];
+        let out = render(
+            &aggs,
+            &[],
+            110,
+            200,
+            (AggSort::Name, SortDir::Asc),
+            (OverlapSort::Name, SortDir::Asc),
+        );
+        assert!(out.find("| A").unwrap() < out.find("| Z").unwrap());
+    }
+
+    #[test]
+    fn truncates_long_names() {
+        assert_eq!(truncate("short", 30), "short");
+        let long = "x".repeat(64);
+        assert_eq!(truncate(&long, 30).chars().count(), 30);
+    }
+}

@@ -1,0 +1,162 @@
+//! Program wrapper (`CCLProgram`).
+//!
+//! Compare (paper listing S2, lines 199–212):
+//!
+//! ```no_run
+//! # use cf4rs::ccl::{Context, Program};
+//! # let ctx = Context::new_gpu().unwrap();
+//! let prg = Program::new_from_source_files(
+//!     &ctx,
+//!     &["artifacts/init_n4096.hlo.txt", "artifacts/rng_n4096.hlo.txt"],
+//! ).unwrap();
+//! prg.build().unwrap();
+//! let kinit = prg.kernel("prng_init").unwrap();
+//! ```
+//!
+//! with the ~50-line load/create/build/log dance of listing S1
+//! (`examples/rng_raw.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::rawcl;
+use crate::rawcl::error::CL_BUILD_PROGRAM_FAILURE;
+use crate::rawcl::types::{KernelH, ProgramH};
+use crate::runtime::{ArtifactKind, Manifest};
+
+use super::context::Context;
+use super::errors::{check, CclError, CclResult};
+use super::kernel::Kernel;
+use super::wrapper::LiveToken;
+
+/// Owning wrapper for a program.
+pub struct Program {
+    h: ProgramH,
+    /// Kernels created through [`kernel`](Self::kernel) — owned by the
+    /// program wrapper, mirroring `ccl_program_get_kernel` semantics.
+    kernels: Mutex<HashMap<String, KernelH>>,
+    _live: LiveToken,
+}
+
+impl Program {
+    /// `ccl_program_new_from_sources`: in-memory HLO texts.
+    pub fn new_from_sources(ctx: &Context, sources: &[String]) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_program_with_source(ctx.handle(), sources, &mut st);
+        check(st, "creating program from source")?;
+        Ok(Self { h, kernels: Mutex::new(HashMap::new()), _live: LiveToken::new() })
+    }
+
+    /// `ccl_program_new_from_source_files`: loads each file for you —
+    /// functionality OpenCL itself lacks (paper §6.1).
+    pub fn new_from_source_files<P: AsRef<Path>>(
+        ctx: &Context,
+        paths: &[P],
+    ) -> CclResult<Self> {
+        let mut sources = Vec::with_capacity(paths.len());
+        for p in paths {
+            let p = p.as_ref();
+            let text = std::fs::read_to_string(p).map_err(|e| {
+                CclError::artifacts(format!("reading kernel file {}: {e}", p.display()))
+            })?;
+            sources.push(text);
+        }
+        Self::new_from_sources(ctx, &sources)
+    }
+
+    /// cf4rs extension: create from named artifacts in the manifest
+    /// (the usual path for applications built on the AOT pipeline).
+    pub fn new_from_artifacts(ctx: &Context, names: &[&str]) -> CclResult<Self> {
+        let man = Manifest::discover()
+            .map_err(|e| CclError::artifacts(format!("{e:#}")))?;
+        let mut paths = Vec::with_capacity(names.len());
+        for n in names {
+            let art = man.get(n).ok_or_else(|| {
+                CclError::artifacts(format!("artifact {n:?} not in manifest"))
+            })?;
+            paths.push(art.path.clone());
+        }
+        Self::new_from_source_files(ctx, &paths)
+    }
+
+    /// cf4rs extension: pick artifacts by kind + problem size.
+    pub fn new_from_kinds(
+        ctx: &Context,
+        kinds: &[(ArtifactKind, usize)],
+    ) -> CclResult<Self> {
+        let man = Manifest::discover()
+            .map_err(|e| CclError::artifacts(format!("{e:#}")))?;
+        let mut paths = Vec::with_capacity(kinds.len());
+        for (kind, n) in kinds {
+            let art = man.find(*kind, *n).ok_or_else(|| {
+                CclError::artifacts(format!(
+                    "no artifact of kind {kind} with n={n} \
+                     (run `make artifacts` with --sizes {n})"
+                ))
+            })?;
+            paths.push(art.path.clone());
+        }
+        Self::new_from_source_files(ctx, &paths)
+    }
+
+    pub fn handle(&self) -> ProgramH {
+        self.h
+    }
+
+    /// `ccl_program_build(prg, NULL, &err)`.
+    pub fn build(&self) -> CclResult<()> {
+        self.build_with_options("")
+    }
+
+    /// Build with OpenCL-style options (`-Dk=16`).
+    pub fn build_with_options(&self, options: &str) -> CclResult<()> {
+        let st = rawcl::build_program(self.h, None, options);
+        if st == CL_BUILD_PROGRAM_FAILURE {
+            // Keep the code; the caller typically prints the build log
+            // (paper listing S2, lines 206–212).
+            return Err(CclError::from_status(st, "building program"));
+        }
+        check(st, "building program")
+    }
+
+    /// `ccl_program_get_build_log`.
+    pub fn build_log(&self) -> CclResult<String> {
+        let mut log = String::new();
+        check(rawcl::get_program_build_log(self.h, &mut log), "querying build log")?;
+        Ok(log)
+    }
+
+    /// Kernel names available after a successful build.
+    pub fn kernel_names(&self) -> CclResult<Vec<String>> {
+        let mut names = Vec::new();
+        check(
+            rawcl::get_program_kernel_names(self.h, &mut names),
+            "querying kernel names",
+        )?;
+        Ok(names)
+    }
+
+    /// `ccl_program_get_kernel`: a kernel owned by the program (cached —
+    /// repeated calls return the same kernel object).
+    pub fn kernel(&self, name: &str) -> CclResult<Kernel> {
+        let mut cache = self.kernels.lock().unwrap();
+        if let Some(&h) = cache.get(name) {
+            return Ok(Kernel::non_owning(h));
+        }
+        let mut st = 0;
+        let h = rawcl::create_kernel(self.h, name, &mut st);
+        check(st, &format!("creating kernel {name:?}"))?;
+        cache.insert(name.to_string(), h);
+        Ok(Kernel::non_owning(h))
+    }
+}
+
+impl Drop for Program {
+    fn drop(&mut self) {
+        for (_, h) in self.kernels.lock().unwrap().drain() {
+            rawcl::release_kernel(h);
+        }
+        rawcl::release_program(self.h);
+    }
+}

@@ -1,0 +1,238 @@
+//! Command-queue wrapper (`CCLQueue`).
+//!
+//! The decisive convenience over the raw API (paper §4.3): the queue
+//! wrapper **keeps every event it generates**, so profiling needs no
+//! client-side event bookkeeping — `Prof::add_queue` simply harvests the
+//! queue's event list. (In listing S1 the host must allocate and manage
+//! an event array by hand; in listing S2 it doesn't.)
+
+use std::sync::Mutex;
+
+use crate::rawcl;
+use crate::rawcl::types::{DeviceId, EventH, QueueH, QueueProps};
+
+use super::buffer::Buffer;
+use super::context::Context;
+use super::device::Device;
+use super::errors::{check, CclError, CclResult};
+use super::event::Event;
+use super::wrapper::LiveToken;
+
+/// Owning wrapper for a command queue.
+pub struct Queue {
+    h: QueueH,
+    device: Device,
+    props: QueueProps,
+    /// Every event generated through this wrapper (owned; released on
+    /// drop). This is what makes "just add the queue to the profiler"
+    /// possible.
+    events: Mutex<Vec<EventH>>,
+    _live: LiveToken,
+}
+
+impl Queue {
+    /// `ccl_queue_new(ctx, dev, CL_QUEUE_PROFILING_ENABLE, &err)`.
+    pub fn new(ctx: &Context, dev: Device, props: QueueProps) -> CclResult<Self> {
+        let mut st = 0;
+        let h = rawcl::create_command_queue(ctx.handle(), dev.id(), props, &mut st);
+        check(st, "creating command queue")?;
+        Ok(Self {
+            h,
+            device: dev,
+            props,
+            events: Mutex::new(Vec::new()),
+            _live: LiveToken::new(),
+        })
+    }
+
+    /// Profiling-enabled queue (the common case in the paper).
+    pub fn new_profiled(ctx: &Context, dev: Device) -> CclResult<Self> {
+        Self::new(ctx, dev, QueueProps::PROFILING_ENABLE)
+    }
+
+    pub fn handle(&self) -> QueueH {
+        self.h
+    }
+
+    pub fn device(&self) -> Device {
+        self.device
+    }
+
+    pub fn profiling_enabled(&self) -> bool {
+        self.props.contains(QueueProps::PROFILING_ENABLE)
+    }
+
+    /// Snapshot of all events this queue has generated (for the
+    /// profiler). Events remain owned by the queue.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().iter().map(|&h| Event::new(h)).collect()
+    }
+
+    /// Number of tracked events.
+    pub fn num_events(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// Forget tracked events (frees them; used by long-running services
+    /// between profiling windows).
+    pub fn clear_events(&self) {
+        let mut evs = self.events.lock().unwrap();
+        for h in evs.drain(..) {
+            rawcl::release_event(h);
+        }
+    }
+
+    fn track(&self, h: EventH) -> Event {
+        self.events.lock().unwrap().push(h);
+        Event::new(h)
+    }
+
+    /// `ccl_queue_finish`.
+    pub fn finish(&self) -> CclResult<()> {
+        check(rawcl::finish(self.h), "finishing queue")
+    }
+
+    /// `ccl_queue_flush`.
+    pub fn flush(&self) -> CclResult<()> {
+        check(rawcl::flush(self.h), "flushing queue")
+    }
+
+    /// Enqueue a marker that waits on `wait`.
+    pub fn enqueue_marker(&self, wait: &[Event]) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_marker(self.h, &hs, Some(&mut evt)),
+            "enqueueing marker",
+        )?;
+        Ok(self.track(evt))
+    }
+
+    // -- buffer commands (called via the Buffer wrapper) ----------------
+
+    pub(crate) fn enqueue_read_buffer(
+        &self,
+        buf: &Buffer,
+        offset: usize,
+        dst: &mut [u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_read_buffer(
+                self.h,
+                buf.handle(),
+                true,
+                offset,
+                dst,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing buffer read",
+        )?;
+        Ok(self.track(evt))
+    }
+
+    pub(crate) fn enqueue_write_buffer(
+        &self,
+        buf: &Buffer,
+        offset: usize,
+        src: &[u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_write_buffer(
+                self.h,
+                buf.handle(),
+                true,
+                offset,
+                src,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing buffer write",
+        )?;
+        Ok(self.track(evt))
+    }
+
+    pub(crate) fn enqueue_copy_buffer(
+        &self,
+        src: &Buffer,
+        dst: &Buffer,
+        src_off: usize,
+        dst_off: usize,
+        len: usize,
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_copy_buffer(
+                self.h,
+                src.handle(),
+                dst.handle(),
+                src_off,
+                dst_off,
+                len,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing buffer copy",
+        )?;
+        Ok(self.track(evt))
+    }
+
+    pub(crate) fn enqueue_fill_buffer(
+        &self,
+        buf: &Buffer,
+        pattern: &[u8],
+        offset: usize,
+        len: usize,
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_fill_buffer(
+                self.h,
+                buf.handle(),
+                pattern,
+                offset,
+                len,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing buffer fill",
+        )?;
+        Ok(self.track(evt))
+    }
+
+    /// Internal: record a kernel event enqueued by the kernel wrapper.
+    pub(crate) fn track_kernel_event(&self, h: EventH) -> Event {
+        self.track(h)
+    }
+
+    /// Queue must belong to the given context's platform; helper for
+    /// validation in higher layers.
+    pub fn device_id(&self) -> DeviceId {
+        self.device.id()
+    }
+}
+
+impl Drop for Queue {
+    fn drop(&mut self) {
+        // Make sure the worker is idle before tearing events down.
+        let _ = rawcl::finish(self.h);
+        self.clear_events();
+        rawcl::release_command_queue(self.h);
+    }
+}
+
+/// Convenience used by examples: propagate one queue error into a
+/// `CclError` with a custom message.
+pub fn queue_error(msg: &str) -> CclError {
+    CclError::framework(msg.to_string())
+}

@@ -1,0 +1,212 @@
+//! Device selector (paper §4.4): a plug-in filter mechanism.
+//!
+//! Filters come in two kinds, as in cf4ocl:
+//!
+//! * **independent** — accept/reject one device on its own merits
+//!   (type, vendor, name, backend);
+//! * **dependent** — look at the whole candidate list at once (e.g. "keep
+//!   only devices sharing the platform of the first candidate", which is
+//!   what context creation needs, or "keep the device with most CUs").
+//!
+//! Client code can extend the mechanism with closures — the "plug-in
+//! filters" of the paper.
+
+use crate::rawcl::types::DeviceType;
+
+use super::device::Device;
+use super::errors::{CclError, CclResult};
+
+/// A filter step in the chain.
+pub enum Filter {
+    /// Keep devices for which the predicate holds.
+    Independent(Box<dyn Fn(&Device) -> bool>),
+    /// Transform the whole candidate list.
+    Dependent(Box<dyn Fn(Vec<Device>) -> Vec<Device>>),
+}
+
+impl Filter {
+    // ---- built-in independent filters (cf4ocl's ccl_devsel_indep_*) ----
+
+    pub fn type_is(t: DeviceType) -> Self {
+        Filter::Independent(Box::new(move |d| {
+            d.device_type().map(|dt| dt.intersects(t)).unwrap_or(false)
+        }))
+    }
+
+    pub fn type_gpu() -> Self {
+        Self::type_is(DeviceType::GPU)
+    }
+
+    pub fn type_cpu() -> Self {
+        Self::type_is(DeviceType::CPU)
+    }
+
+    /// Case-insensitive substring match on the device name.
+    pub fn name_contains(sub: impl Into<String>) -> Self {
+        let sub = sub.into().to_lowercase();
+        Filter::Independent(Box::new(move |d| {
+            d.name().map(|n| n.to_lowercase().contains(&sub)).unwrap_or(false)
+        }))
+    }
+
+    /// Case-insensitive substring match on the vendor.
+    pub fn vendor_contains(sub: impl Into<String>) -> Self {
+        let sub = sub.into().to_lowercase();
+        Filter::Independent(Box::new(move |d| {
+            d.vendor().map(|v| v.to_lowercase().contains(&sub)).unwrap_or(false)
+        }))
+    }
+
+    // ---- built-in dependent filters (cf4ocl's ccl_devsel_dep_*) ----
+
+    /// Keep the i-th candidate only (cf4ocl's "index" filter).
+    pub fn index(i: usize) -> Self {
+        Filter::Dependent(Box::new(move |devs| {
+            devs.into_iter().skip(i).take(1).collect()
+        }))
+    }
+
+    /// Keep only candidates on the same platform as the first one
+    /// (context devices must share a platform).
+    pub fn same_platform() -> Self {
+        Filter::Dependent(Box::new(|devs| {
+            let Some(first) = devs.first() else { return devs };
+            let p = crate::rawcl::device::device(first.id()).unwrap().platform;
+            devs.into_iter()
+                .filter(|d| crate::rawcl::device::device(d.id()).unwrap().platform == p)
+                .collect()
+        }))
+    }
+
+    /// Keep the single device with the most compute units.
+    pub fn most_compute_units() -> Self {
+        Filter::Dependent(Box::new(|devs| {
+            devs.into_iter()
+                .max_by_key(|d| d.max_compute_units().unwrap_or(0))
+                .into_iter()
+                .collect()
+        }))
+    }
+}
+
+/// An ordered chain of filters applied to the system device list.
+#[derive(Default)]
+pub struct FilterChain {
+    filters: Vec<Filter>,
+}
+
+impl FilterChain {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a filter (builder style).
+    pub fn add(mut self, f: Filter) -> Self {
+        self.filters.push(f);
+        self
+    }
+
+    /// Plug-in convenience: add an independent closure filter.
+    pub fn add_indep(self, f: impl Fn(&Device) -> bool + 'static) -> Self {
+        self.add(Filter::Independent(Box::new(f)))
+    }
+
+    /// Plug-in convenience: add a dependent closure filter.
+    pub fn add_dep(self, f: impl Fn(Vec<Device>) -> Vec<Device> + 'static) -> Self {
+        self.add(Filter::Dependent(Box::new(f)))
+    }
+
+    /// Run the chain over all system devices.
+    pub fn select(&self) -> Vec<Device> {
+        let mut devs = Device::all();
+        for f in &self.filters {
+            devs = match f {
+                Filter::Independent(p) => devs.into_iter().filter(|d| p(d)).collect(),
+                Filter::Dependent(t) => t(devs),
+            };
+            if devs.is_empty() {
+                break;
+            }
+        }
+        devs
+    }
+
+    /// Like [`select`](Self::select) but requiring ≥1 result.
+    pub fn select_nonempty(&self) -> CclResult<Vec<Device>> {
+        let devs = self.select();
+        if devs.is_empty() {
+            Err(CclError::framework("no device matched the filter chain"))
+        } else {
+            Ok(devs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_filter_selects_sim_pair() {
+        let devs = FilterChain::new().add(Filter::type_gpu()).select();
+        assert_eq!(devs.len(), 2);
+        assert!(devs.iter().all(|d| d.is_gpu()));
+    }
+
+    #[test]
+    fn name_filter() {
+        let devs = FilterChain::new().add(Filter::name_contains("7970")).select();
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].name().unwrap(), "SimCL HD 7970");
+    }
+
+    #[test]
+    fn vendor_filter_case_insensitive() {
+        let devs = FilterChain::new().add(Filter::vendor_contains("NVIDIA")).select();
+        assert_eq!(devs.len(), 1);
+    }
+
+    #[test]
+    fn index_filter_after_type() {
+        let devs = FilterChain::new()
+            .add(Filter::type_gpu())
+            .add(Filter::index(1))
+            .select();
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].name().unwrap(), "SimCL HD 7970");
+    }
+
+    #[test]
+    fn most_cus_picks_hd7970() {
+        let devs = FilterChain::new()
+            .add(Filter::type_gpu())
+            .add(Filter::most_compute_units())
+            .select();
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].max_compute_units().unwrap(), 32);
+    }
+
+    #[test]
+    fn plugin_closure_filter() {
+        // Custom plug-in: keep devices with a warp/wavefront ≥ 64.
+        let devs = FilterChain::new()
+            .add_indep(|d| d.preferred_wg_multiple().unwrap_or(0) >= 64)
+            .select();
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].name().unwrap(), "SimCL HD 7970");
+    }
+
+    #[test]
+    fn empty_chain_returns_all() {
+        assert_eq!(FilterChain::new().select().len(), 3);
+    }
+
+    #[test]
+    fn nonempty_error_message() {
+        let err = FilterChain::new()
+            .add(Filter::name_contains("no-such-device"))
+            .select_nonempty()
+            .unwrap_err();
+        assert!(err.message.contains("no device matched"));
+    }
+}

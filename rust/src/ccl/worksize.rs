@@ -1,0 +1,164 @@
+//! `suggest_worksizes` — the work-size heuristic of paper §6.1.
+//!
+//! Given the *real work size* (how many work-items the problem actually
+//! needs per dimension), produce:
+//!
+//! * a local work size (LWS) that is a multiple of the device/kernel
+//!   preferred work-group multiple, within per-dimension and total
+//!   work-group limits;
+//! * a global work size (GWS) that covers the real work size and is a
+//!   multiple of the LWS in every dimension (the pre-OpenCL-2.0 rule).
+//!
+//! Unlike the minimum-LOC approach of listing S1 (which only handles one
+//! dimension and requires the preferred-multiple query to exist), this
+//! handles multiple dimensions and devices/kernels that cannot report a
+//! preferred multiple (falling back to a power-of-two heuristic).
+
+use super::device::Device;
+use super::errors::CclResult;
+use super::kernel::{check_dims, Kernel};
+
+/// Round `x` up to the next multiple of `m`.
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Compute suggested (gws, lws) for `rws` real work on `dev`.
+///
+/// `kernel` refines the limits when given (kernel-specific work-group
+/// info); `None` falls back to device limits only — the situation OpenCL
+/// 1.0 hosts are stuck with, which cf4ocl handles uniformly.
+pub fn suggest_worksizes(
+    kernel: Option<&Kernel>,
+    dev: Device,
+    rws: &[usize],
+) -> CclResult<(Vec<usize>, Vec<usize>)> {
+    check_dims(rws)?;
+    let dims = rws.len();
+
+    // Preferred multiple: kernel query when possible, else device, else 8.
+    let pref = match kernel {
+        Some(k) => k.preferred_wg_multiple(dev).or_else(|_| dev.preferred_wg_multiple())?,
+        None => dev.preferred_wg_multiple().unwrap_or(8),
+    }
+    .max(1);
+
+    // Work-group capacity limits.
+    let max_wg = match kernel {
+        Some(k) => k
+            .max_work_group_size(dev)
+            .or_else(|_| dev.max_work_group_size())?,
+        None => dev.max_work_group_size()?,
+    };
+    let max_item = dev.max_work_item_sizes()?;
+
+    // Start with a 1-item group and grow dimension 0 in units of the
+    // preferred multiple, then grow higher dimensions by powers of two,
+    // never exceeding per-dimension limits, the total work-group limit,
+    // or (rounded-up) real work.
+    let mut lws = vec![1usize; dims];
+    lws[0] = pref.min(max_item[0]).min(max_wg).min(round_up(rws[0], pref));
+    // Grow dim 0 first (coalescing dimension on GPUs).
+    while lws[0] * 2 <= max_item[0]
+        && product(&lws) * 2 <= max_wg
+        && lws[0] * 2 <= round_up(rws[0], pref)
+    {
+        lws[0] *= 2;
+    }
+    // Then higher dimensions.
+    for d in 1..dims {
+        while lws[d] * 2 <= max_item[d]
+            && product(&lws) * 2 <= max_wg
+            && lws[d] * 2 <= rws[d].next_power_of_two()
+        {
+            lws[d] *= 2;
+        }
+    }
+
+    let gws: Vec<usize> = rws.iter().zip(&lws).map(|(&r, &l)| round_up(r, l)).collect();
+    Ok((gws, lws))
+}
+
+fn product(v: &[usize]) -> usize {
+    v.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::types::DeviceId;
+
+    fn gtx() -> Device {
+        Device::from_id(DeviceId(1)).unwrap()
+    }
+
+    fn hd() -> Device {
+        Device::from_id(DeviceId(2)).unwrap()
+    }
+
+    #[test]
+    fn one_dim_exact_multiple() {
+        let (gws, lws) = suggest_worksizes(None, gtx(), &[1 << 20]).unwrap();
+        assert_eq!(gws[0] % lws[0], 0);
+        assert!(gws[0] >= 1 << 20);
+        assert_eq!(lws[0] % 32, 0, "lws must honour the warp multiple");
+        assert!(lws[0] <= 1024);
+    }
+
+    #[test]
+    fn one_dim_ragged_size_rounds_up() {
+        let (gws, lws) = suggest_worksizes(None, gtx(), &[1000]).unwrap();
+        assert!(gws[0] >= 1000);
+        assert_eq!(gws[0] % lws[0], 0);
+    }
+
+    #[test]
+    fn small_work_small_groups() {
+        let (gws, lws) = suggest_worksizes(None, gtx(), &[16]).unwrap();
+        assert_eq!(lws[0], 32, "one preferred multiple");
+        assert_eq!(gws[0], 32);
+    }
+
+    #[test]
+    fn respects_smaller_hd7970_limits() {
+        let (gws, lws) = suggest_worksizes(None, hd(), &[1 << 20]).unwrap();
+        assert!(lws[0] <= 256, "HD 7970 max work-group is 256");
+        assert_eq!(lws[0] % 64, 0, "wavefront multiple");
+        assert_eq!(gws[0] % lws[0], 0);
+    }
+
+    #[test]
+    fn two_dims_product_within_wg_limit() {
+        let (gws, lws) = suggest_worksizes(None, gtx(), &[1920, 1080]).unwrap();
+        assert!(lws[0] * lws[1] <= 1024);
+        for d in 0..2 {
+            assert_eq!(gws[d] % lws[d], 0);
+            assert!(gws[d] >= [1920, 1080][d]);
+        }
+    }
+
+    #[test]
+    fn three_dims_supported() {
+        let (gws, lws) = suggest_worksizes(None, hd(), &[64, 64, 8]).unwrap();
+        assert_eq!(gws.len(), 3);
+        assert!(lws.iter().product::<usize>() <= 256);
+        for d in 0..3 {
+            assert_eq!(gws[d] % lws[d], 0);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        assert!(suggest_worksizes(None, gtx(), &[]).is_err());
+        assert!(suggest_worksizes(None, gtx(), &[1, 1, 1, 1]).is_err());
+        assert!(suggest_worksizes(None, gtx(), &[0]).is_err());
+    }
+
+    #[test]
+    fn native_cpu_profile_works_too() {
+        let dev = Device::from_id(DeviceId(0)).unwrap();
+        let (gws, lws) = suggest_worksizes(None, dev, &[4096]).unwrap();
+        assert_eq!(gws[0] % lws[0], 0);
+        assert!(gws[0] >= 4096);
+    }
+}

@@ -1,0 +1,63 @@
+//! Common wrapper behaviour (the paper's abstract `CCLWrapper` class).
+//!
+//! Every owning framework wrapper registers itself here on construction
+//! and deregisters on drop, giving [`memcheck`] — the Rust analogue of
+//! `ccl_wrapper_memcheck()` which the paper's example asserts before
+//! exit (listing S2, line 354).
+
+use std::sync::atomic::{AtomicIsize, Ordering};
+
+static LIVE_WRAPPERS: AtomicIsize = AtomicIsize::new(0);
+
+/// RAII token counted by [`memcheck`]. Owning wrappers hold one.
+#[derive(Debug)]
+pub struct LiveToken(());
+
+impl LiveToken {
+    pub fn new() -> Self {
+        LIVE_WRAPPERS.fetch_add(1, Ordering::Relaxed);
+        Self(())
+    }
+}
+
+impl Default for LiveToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for LiveToken {
+    fn drop(&mut self) {
+        LIVE_WRAPPERS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// True iff no owning framework wrappers are alive.
+///
+/// Like `ccl_wrapper_memcheck()`, this is a debugging aid: call it after
+/// destroying everything you created to verify nothing leaked.
+pub fn memcheck() -> bool {
+    LIVE_WRAPPERS.load(Ordering::Relaxed) == 0
+}
+
+/// Current number of live wrappers (diagnostics).
+pub fn live_wrappers() -> isize {
+    LIVE_WRAPPERS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_counts_up_and_down() {
+        let before = live_wrappers();
+        let t1 = LiveToken::new();
+        let t2 = LiveToken::new();
+        assert_eq!(live_wrappers(), before + 2);
+        drop(t1);
+        assert_eq!(live_wrappers(), before + 1);
+        drop(t2);
+        assert_eq!(live_wrappers(), before);
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer-3 coordinator: the paper's §5 application pattern as reusable
+//! library pieces.
+//!
+//! * [`sem`] — the counting semaphore of listing S3 (`cp_sem.h`).
+//! * [`pipeline`] — the Fig. 2 double-buffered producer/consumer pattern
+//!   as a generic reusable abstraction.
+//! * [`rng_service`] — the massive-PRNG service (Fig. 2's two-thread,
+//!   two-queue, double-buffered pipeline) in both realisations: on the
+//!   `ccl` framework and on the raw substrate.
+//! * [`stats`] — statistical screening of the output stream (the
+//!   Dieharder substitution, see DESIGN.md).
+
+pub mod pipeline;
+pub mod rng_service;
+pub mod sem;
+pub mod stats;
+
+pub use pipeline::{run_double_buffered, PipelineError};
+pub use rng_service::{run_ccl, run_raw, RngConfig, RunOutcome, Sink};
+pub use sem::Semaphore;

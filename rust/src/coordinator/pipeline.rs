@@ -1,0 +1,202 @@
+//! Generic double-buffered producer/consumer pipeline — the §5 / Fig. 2
+//! pattern as a reusable abstraction.
+//!
+//! The PRNG service hard-codes this structure for fidelity with the
+//! paper's listings; this module exposes it generically so applications
+//! can pipeline *any* "produce batch on device / consume batch on host"
+//! workload over two command queues with the same semaphore discipline:
+//!
+//! * the producer runs on the caller's thread (it owns kernel launches);
+//! * the consumer runs on a spawned scope thread;
+//! * `sem_ready` gates the consumer on the producer (batch published),
+//!   `sem_free` gates the producer on the consumer (buffer reusable);
+//! * both closures receive the *slot index* (0/1) of the buffer to use —
+//!   buffer swapping is the pipeline's job, not the closures'.
+
+use super::sem::Semaphore;
+
+/// Errors from either side of the pipeline.
+#[derive(Debug)]
+pub enum PipelineError<E> {
+    Producer(E),
+    Consumer(E),
+    /// A side panicked.
+    Panicked,
+}
+
+/// Run `iters` iterations of a double-buffered pipeline.
+///
+/// `produce(iter, slot)` publishes batch `iter` into buffer `slot`;
+/// `consume(iter, slot)` drains batch `iter` from buffer `slot`. The
+/// pipeline guarantees: consume(i, s) happens-after produce(i, s), and
+/// produce(i+1, s') happens-after consume(i-1, s') — the §5 overlap
+/// window of exactly one batch in flight per direction.
+///
+/// `produce` is called for iterations `0..iters` and `consume` for
+/// `0..iters`; iteration 0's produce happens before the consumer starts
+/// (the paper's init-kernel special case).
+pub fn run_double_buffered<E: Send>(
+    iters: usize,
+    mut produce: impl FnMut(usize, usize) -> Result<(), E> + Send,
+    mut consume: impl FnMut(usize, usize) -> Result<(), E> + Send,
+) -> Result<(), PipelineError<E>> {
+    if iters == 0 {
+        return Ok(());
+    }
+    let sem_ready = Semaphore::new(0);
+    let sem_free = Semaphore::new(1); // one batch headroom
+    let dead = std::sync::atomic::AtomicBool::new(false);
+    let mut producer_err: Option<E> = None;
+    let consumer_res: std::sync::Mutex<Option<Result<(), E>>> =
+        std::sync::Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        let consumer = {
+            let (sem_ready, sem_free, consumer_res, dead) =
+                (&sem_ready, &sem_free, &consumer_res, &dead);
+            let consume = &mut consume;
+            scope.spawn(move || {
+                for i in 0..iters {
+                    sem_ready.wait();
+                    // Producer aborted: the post was a shutdown signal,
+                    // not a published batch.
+                    if dead.load(std::sync::atomic::Ordering::SeqCst) {
+                        return;
+                    }
+                    let r = consume(i, i % 2);
+                    sem_free.post();
+                    if r.is_err() {
+                        *consumer_res.lock().unwrap() = Some(r);
+                        return;
+                    }
+                }
+                *consumer_res.lock().unwrap() = Some(Ok(()));
+            })
+        };
+
+        for i in 0..iters {
+            sem_free.wait();
+            // Bail out promptly if the consumer died.
+            if matches!(&*consumer_res.lock().unwrap(), Some(Err(_))) {
+                break;
+            }
+            match produce(i, i % 2) {
+                Ok(()) => sem_ready.post(),
+                Err(e) => {
+                    producer_err = Some(e);
+                    // Signal shutdown and unblock the consumer.
+                    dead.store(true, std::sync::atomic::Ordering::SeqCst);
+                    sem_ready.post();
+                    break;
+                }
+            }
+        }
+        let _ = consumer;
+    });
+
+    if let Some(e) = producer_err {
+        return Err(PipelineError::Producer(e));
+    }
+    match consumer_res.into_inner().unwrap() {
+        Some(Ok(())) => Ok(()),
+        Some(Err(e)) => Err(PipelineError::Consumer(e)),
+        None => Err(PipelineError::Panicked),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn batches_flow_in_order_with_overlap_window() {
+        // Shared "device buffers": two slots.
+        let slots = [Mutex::new(0usize), Mutex::new(0usize)];
+        let log = Mutex::new(Vec::new());
+        let r = run_double_buffered::<()>(
+            10,
+            |i, s| {
+                *slots[s].lock().unwrap() = i * 100;
+                log.lock().unwrap().push(format!("P{i}"));
+                Ok(())
+            },
+            |i, s| {
+                assert_eq!(*slots[s].lock().unwrap(), i * 100, "batch {i} garbled");
+                log.lock().unwrap().push(format!("C{i}"));
+                Ok(())
+            },
+        );
+        assert!(r.is_ok());
+        let log = log.into_inner().unwrap();
+        // every C_i after P_i; every P_{i+2} after C_i (slot reuse rule)
+        let pos = |tag: &str| log.iter().position(|x| x == tag).unwrap();
+        for i in 0..10 {
+            assert!(pos(&format!("P{i}")) < pos(&format!("C{i}")));
+            if i + 2 < 10 {
+                assert!(
+                    pos(&format!("C{i}")) < pos(&format!("P{}", i + 2)),
+                    "slot reused before drained"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn producer_error_propagates() {
+        let consumed = AtomicUsize::new(0);
+        let r = run_double_buffered(
+            10,
+            |i, _| if i == 3 { Err("boom") } else { Ok(()) },
+            |_, _| {
+                consumed.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+        );
+        assert!(matches!(r, Err(PipelineError::Producer("boom"))));
+        assert!(consumed.load(Ordering::SeqCst) <= 4);
+    }
+
+    #[test]
+    fn consumer_error_propagates_and_stops_producer() {
+        let produced = AtomicUsize::new(0);
+        let r = run_double_buffered(
+            100,
+            |_, _| {
+                produced.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+            |i, _| if i == 2 { Err("sink full") } else { Ok(()) },
+        );
+        assert!(matches!(r, Err(PipelineError::Consumer("sink full"))));
+        assert!(
+            produced.load(Ordering::SeqCst) < 100,
+            "producer should stop early"
+        );
+    }
+
+    #[test]
+    fn zero_iterations_is_noop() {
+        let r = run_double_buffered::<()>(0, |_, _| unreachable!(), |_, _| unreachable!());
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn single_iteration() {
+        let done = AtomicUsize::new(0);
+        run_double_buffered::<()>(
+            1,
+            |_, s| {
+                assert_eq!(s, 0);
+                Ok(())
+            },
+            |_, _| {
+                done.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+}

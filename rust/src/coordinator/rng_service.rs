@@ -1,0 +1,435 @@
+//! The massive-PRNG service (paper §5) as a library.
+//!
+//! Two host threads (main = kernels, comms = device→host reads + output),
+//! two command queues, device-side double buffering, semaphore
+//! synchronisation — exactly the structure of Fig. 2. Both realisations
+//! are provided:
+//!
+//! * [`run_ccl`] — built on the `ccl` framework (listing S2's logic);
+//! * [`run_raw`] — built directly on the `rawcl` substrate (listing
+//!   S1's logic, with manual event bookkeeping).
+//!
+//! The §6.2 overhead harness runs both over the paper's parameter sweep;
+//! the standalone `examples/rng_{ccl,raw}.rs` programs mirror the same
+//! logic as self-contained sources for the §6.1 LOC comparison.
+
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::ccl::{self, Arg};
+use crate::rawcl;
+use crate::rawcl::types::{DeviceId, MemFlags, QueueProps};
+use crate::runtime::{ArtifactKind, Manifest};
+
+use super::sem::Semaphore;
+
+/// Where the generated random bytes go.
+pub enum Sink {
+    /// Drop them (the §6.2 benchmark redirects to /dev/null).
+    Discard,
+    /// Keep the first `n` words for validation.
+    Sample(usize),
+    /// Stream to a writer (the real §5 use case).
+    Writer(Mutex<Box<dyn Write + Send>>),
+}
+
+/// Service configuration (the example's `n` and `i` CLI parameters).
+pub struct RngConfig {
+    /// Random numbers per iteration (`n`); must match an artifact size.
+    pub numrn: usize,
+    /// Iterations producing random numbers (`i`).
+    pub iters: usize,
+    /// Flat device index (0 = native CPU, 1/2 = simulated GPUs).
+    pub device_index: u32,
+    /// Enable event profiling (the WITH_PROFILING build flag).
+    pub profile: bool,
+    pub sink: Sink,
+}
+
+impl RngConfig {
+    pub fn new(numrn: usize, iters: usize) -> Self {
+        Self {
+            numrn,
+            iters,
+            device_index: 1,
+            profile: true,
+            sink: Sink::Discard,
+        }
+    }
+}
+
+/// What a run produced.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub wall: Duration,
+    pub total_bytes: u64,
+    /// Fig. 3-style summary (ccl path, when profiling).
+    pub prof_summary: Option<String>,
+    /// Fig. 5 export table (ccl path, when profiling).
+    pub prof_export: Option<String>,
+    /// Basic per-category totals in ns (raw path, when profiling):
+    /// (init kernel, rng kernels, reads).
+    pub raw_prof: Option<(u64, u64, u64)>,
+    /// Sampled first batch (when `Sink::Sample`).
+    pub sample: Vec<u64>,
+}
+
+fn sink_consume(sink: &Sink, sample_out: &mut Vec<u64>, bytes: &[u8]) {
+    match sink {
+        Sink::Discard => {}
+        Sink::Sample(n) => {
+            if sample_out.is_empty() {
+                sample_out.extend(
+                    bytes
+                        .chunks_exact(8)
+                        .take(*n)
+                        .map(|c| u64::from_le_bytes(c.try_into().unwrap())),
+                );
+            }
+        }
+        Sink::Writer(w) => {
+            let _ = w.lock().unwrap().write_all(bytes);
+        }
+    }
+}
+
+/// The cf4rs-framework realisation (listing S2).
+pub fn run_ccl(cfg: &RngConfig) -> ccl::CclResult<RunOutcome> {
+    let n = cfg.numrn;
+    let dev = ccl::Device::from_id(DeviceId(cfg.device_index))?;
+    let ctx = ccl::Context::new_from_devices(&[dev])?;
+    let props = if cfg.profile {
+        QueueProps::PROFILING_ENABLE
+    } else {
+        QueueProps::empty()
+    };
+    let cq_main = ccl::Queue::new(&ctx, dev, props)?;
+    let cq_comms = ccl::Queue::new(&ctx, dev, props)?;
+
+    let prg = ccl::Program::new_from_kinds(
+        &ctx,
+        &[(ArtifactKind::Init, n), (ArtifactKind::Rng, n)],
+    )?;
+    prg.build()?;
+    let kinit = prg.kernel("prng_init")?;
+    let krng = prg.kernel("prng_step")?;
+
+    let bufdev1 = ccl::Buffer::new(&ctx, MemFlags::READ_WRITE, n * 8)?;
+    let bufdev2 = ccl::Buffer::new(&ctx, MemFlags::READ_WRITE, n * 8)?;
+
+    let (gws, lws) = kinit.suggest_worksizes(dev, &[n])?;
+
+    let sem_rng = Semaphore::new(1);
+    let sem_comm = Semaphore::new(1);
+    let mut sample = Vec::new();
+    let comms_err: Mutex<Option<ccl::CclError>> = Mutex::new(None);
+
+    let t0 = Instant::now();
+    let mut prof = ccl::Prof::new();
+    prof.start();
+
+    // init kernel (seeds + first batch)
+    let evt = kinit.set_args_and_enqueue_ndrange(
+        &cq_main,
+        &gws,
+        Some(&lws),
+        &[],
+        &[Arg::buf(&bufdev1), Arg::priv_u32(n as u32)],
+    )?;
+    evt.set_name("INIT_KERNEL")?;
+
+    // fixed rng arg (set once; skipped in the loop)
+    krng.set_arg(0, &Arg::priv_u32(n as u32))?;
+    cq_main.finish()?;
+
+    std::thread::scope(|scope| -> ccl::CclResult<()> {
+        // comms thread: read each batch and push it to the sink
+        let comms = {
+            let (b1, b2) = (&bufdev1, &bufdev2);
+            let (sem_rng, sem_comm) = (&sem_rng, &sem_comm);
+            let (cq, sink) = (&cq_comms, &cfg.sink);
+            let (sample, comms_err) = (&mut sample, &comms_err);
+            let iters = cfg.iters;
+            scope.spawn(move || {
+                let mut host = vec![0u8; n * 8];
+                let mut front = b1;
+                let mut back = b2;
+                for _ in 0..iters {
+                    sem_rng.wait();
+                    let r = front.enqueue_read(cq, 0, &mut host, &[]);
+                    sem_comm.post();
+                    match r {
+                        Ok(ev) => {
+                            let _ = ev.set_name("READ_BUFFER");
+                        }
+                        Err(e) => {
+                            *comms_err.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    }
+                    sink_consume(sink, sample, &host);
+                    std::mem::swap(&mut front, &mut back);
+                }
+            })
+        };
+
+        // main thread: produce the next batches
+        let mut front = &bufdev1;
+        let mut back = &bufdev2;
+        for _ in 0..cfg.iters.saturating_sub(1) {
+            sem_comm.wait();
+            if let Some(e) = comms_err.lock().unwrap().take() {
+                return Err(e);
+            }
+            let evt = krng.set_args_and_enqueue_ndrange(
+                &cq_main,
+                &gws,
+                Some(&lws),
+                &[],
+                &[Arg::skip(), Arg::buf(front), Arg::buf(back)],
+            )?;
+            evt.set_name("RNG_KERNEL")?;
+            cq_main.finish()?;
+            sem_rng.post();
+            std::mem::swap(&mut front, &mut back);
+        }
+        comms.join().map_err(|_| ccl::CclError::framework("comms thread panicked"))?;
+        Ok(())
+    })?;
+    if let Some(e) = comms_err.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    cq_main.finish()?;
+    cq_comms.finish()?;
+    prof.stop();
+    let wall = t0.elapsed();
+
+    let (prof_summary, prof_export) = if cfg.profile {
+        prof.add_queue("Main", &cq_main);
+        prof.add_queue("Comms", &cq_comms);
+        prof.calc()?;
+        (Some(prof.summary_default()), Some(prof.export_string()?))
+    } else {
+        (None, None)
+    };
+
+    Ok(RunOutcome {
+        wall,
+        total_bytes: (8 * n * cfg.iters) as u64,
+        prof_summary,
+        prof_export,
+        raw_prof: None,
+        sample,
+    })
+}
+
+/// The pure-substrate realisation (listing S1), with the raw API's
+/// manual status handling and event bookkeeping.
+pub fn run_raw(cfg: &RngConfig) -> Result<RunOutcome, String> {
+    use rawcl::*;
+
+    let n = cfg.numrn;
+    macro_rules! chk {
+        ($st:expr, $what:expr) => {
+            if $st != CL_SUCCESS {
+                return Err(format!("{}: {} ({})", $what, status_name($st), $st));
+            }
+        };
+    }
+
+    // device + context (the listing's platform loop lives in the raw
+    // example; here the device index is explicit)
+    let dev = DeviceId(cfg.device_index);
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[dev], &mut st);
+    chk!(st, "create context");
+
+    let props = if cfg.profile {
+        QueueProps::PROFILING_ENABLE
+    } else {
+        QueueProps::empty()
+    };
+    let cq_main = create_command_queue(ctx, dev, props, &mut st);
+    chk!(st, "create main queue");
+    let cq_comms = create_command_queue(ctx, dev, props, &mut st);
+    chk!(st, "create comms queue");
+
+    // kernel sources from the manifest (the listing reads .cl files)
+    let man = Manifest::discover().map_err(|e| format!("{e:#}"))?;
+    let mut sources = Vec::new();
+    for kind in [ArtifactKind::Init, ArtifactKind::Rng] {
+        let art = man
+            .find(kind, n)
+            .ok_or_else(|| format!("no {kind} artifact for n={n}"))?;
+        sources
+            .push(std::fs::read_to_string(&art.path).map_err(|e| e.to_string())?);
+    }
+    let prg = create_program_with_source(ctx, &sources, &mut st);
+    chk!(st, "create program");
+    let st2 = build_program(prg, None, "");
+    if st2 == CL_BUILD_PROGRAM_FAILURE {
+        let mut log = String::new();
+        get_program_build_log(prg, &mut log);
+        return Err(format!("build failure:\n{log}"));
+    }
+    chk!(st2, "build program");
+
+    let kinit = create_kernel(prg, "prng_init", &mut st);
+    chk!(st, "create init kernel");
+    let krng = create_kernel(prg, "prng_step", &mut st);
+    chk!(st, "create rng kernel");
+
+    let bufdev1 = create_buffer(ctx, MemFlags::READ_WRITE, n * 8, None, &mut st);
+    chk!(st, "create buffer 1");
+    let bufdev2 = create_buffer(ctx, MemFlags::READ_WRITE, n * 8, None, &mut st);
+    chk!(st, "create buffer 2");
+
+    // work sizes: the listing's minimum-LOC approach
+    let mut lws = 0usize;
+    chk!(
+        get_kernel_work_group_info(
+            kinit,
+            dev,
+            KernelWorkGroupInfo::PreferredWorkGroupSizeMultiple,
+            &mut lws
+        ),
+        "work group info"
+    );
+    let gws = n.div_ceil(lws) * lws;
+
+    // manual event storage (listing S1 line 373)
+    let mut read_events: Vec<EventH> = Vec::with_capacity(cfg.iters);
+    let mut rng_events: Vec<EventH> = Vec::with_capacity(cfg.iters);
+    let read_events_mx = Mutex::new(&mut read_events);
+
+    let sem_rng = Semaphore::new(1);
+    let sem_comm = Semaphore::new(1);
+    let mut sample = Vec::new();
+    let comms_err: Mutex<Option<String>> = Mutex::new(None);
+
+    let t0 = Instant::now();
+
+    // init kernel
+    let narg = ArgValue::Scalar((n as u32).to_le_bytes().to_vec());
+    chk!(set_kernel_arg(kinit, 0, &ArgValue::Buffer(bufdev1)), "init arg 0");
+    chk!(set_kernel_arg(kinit, 1, &narg), "init arg 1");
+    let mut evt_kinit = EventH::NULL;
+    chk!(
+        enqueue_ndrange_kernel(cq_main, kinit, 1, &[gws], Some(&[lws]), &[], Some(&mut evt_kinit)),
+        "enqueue init"
+    );
+    chk!(set_kernel_arg(krng, 0, &narg), "rng arg 0");
+    chk!(finish(cq_main), "finish after init");
+
+    std::thread::scope(|scope| {
+        // comms thread
+        let comms = {
+            let (sem_rng, sem_comm) = (&sem_rng, &sem_comm);
+            let (sink, sample) = (&cfg.sink, &mut sample);
+            let (comms_err, read_events_mx) = (&comms_err, &read_events_mx);
+            let iters = cfg.iters;
+            scope.spawn(move || {
+                let mut host = vec![0u8; n * 8];
+                let (mut front, mut back) = (bufdev1, bufdev2);
+                for _ in 0..iters {
+                    sem_rng.wait();
+                    let mut evt = EventH::NULL;
+                    let st = enqueue_read_buffer(
+                        cq_comms, front, true, 0, &mut host, &[], Some(&mut evt),
+                    );
+                    sem_comm.post();
+                    if st != CL_SUCCESS {
+                        *comms_err.lock().unwrap() =
+                            Some(format!("read: {}", status_name(st)));
+                        return;
+                    }
+                    read_events_mx.lock().unwrap().push(evt);
+                    sink_consume(sink, sample, &host);
+                    std::mem::swap(&mut front, &mut back);
+                }
+            })
+        };
+
+        // main thread
+        let (mut front, mut back) = (bufdev1, bufdev2);
+        for _ in 0..cfg.iters.saturating_sub(1) {
+            sem_comm.wait();
+            if comms_err.lock().unwrap().is_some() {
+                break;
+            }
+            let mut evt = EventH::NULL;
+            let st1 = set_kernel_arg(krng, 1, &ArgValue::Buffer(front));
+            let st2 = set_kernel_arg(krng, 2, &ArgValue::Buffer(back));
+            let st3 = enqueue_ndrange_kernel(
+                cq_main, krng, 1, &[gws], Some(&[lws]), &[], Some(&mut evt),
+            );
+            let st4 = finish(cq_main);
+            sem_rng.post();
+            if st1 != CL_SUCCESS || st2 != CL_SUCCESS || st3 != CL_SUCCESS || st4 != CL_SUCCESS {
+                *comms_err.lock().unwrap() = Some("kernel loop failure".into());
+                break;
+            }
+            rng_events.push(evt);
+            std::mem::swap(&mut front, &mut back);
+        }
+        comms.join().ok();
+    });
+    if let Some(e) = comms_err.lock().unwrap().take() {
+        return Err(e);
+    }
+    finish(cq_main);
+    finish(cq_comms);
+    let wall = t0.elapsed();
+
+    // basic profiling totals (the listing's WITH_PROFILING block):
+    // query each stored event one by one — no overlap detection.
+    let raw_prof = if cfg.profile {
+        let total = |evts: &[EventH]| -> u64 {
+            evts.iter()
+                .map(|&e| {
+                    let (mut s, mut t) = (0u64, 0u64);
+                    get_event_profiling_info(e, ProfilingInfo::Start, &mut s);
+                    get_event_profiling_info(e, ProfilingInfo::End, &mut t);
+                    t.saturating_sub(s)
+                })
+                .sum()
+        };
+        let tkinit = total(&[evt_kinit]);
+        let tkrng = total(&rng_events);
+        let tcomms = total(&read_events);
+        Some((tkinit, tkrng, tcomms))
+    } else {
+        None
+    };
+
+    // manual release of every object (the listing's cleanup block)
+    release_event(evt_kinit);
+    for e in rng_events.iter().chain(read_events.iter()) {
+        release_event(*e);
+    }
+    release_mem_object(bufdev1);
+    release_mem_object(bufdev2);
+    release_kernel(kinit);
+    release_kernel(krng);
+    release_program(prg);
+    release_command_queue(cq_main);
+    release_command_queue(cq_comms);
+    release_context(ctx);
+
+    Ok(RunOutcome {
+        wall,
+        total_bytes: (8 * n * cfg.iters) as u64,
+        prof_summary: None,
+        prof_export: None,
+        raw_prof,
+        sample,
+    })
+}
+
+/// Expected value of sample element `i` after the first batch: the init
+/// kernel's output (the first batch *is* the seed batch).
+pub fn expected_first_batch(i: usize) -> u64 {
+    rawcl::simexec::init_seed(i as u32)
+}

@@ -1,0 +1,106 @@
+//! Counting semaphore — the Rust analogue of the paper's `cp_sem.h`
+//! compatibility header (listing S3).
+//!
+//! The §5 example synchronises its two host threads with POSIX
+//! semaphores; std Rust has no stable counting semaphore, so this is the
+//! same ~40-line portability shim the paper ships, in safe Rust.
+
+use std::sync::{Condvar, Mutex};
+
+/// A counting semaphore.
+pub struct Semaphore {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    /// `cp_sem_init(&sem, val)`.
+    pub fn new(val: usize) -> Self {
+        Self { count: Mutex::new(val), cv: Condvar::new() }
+    }
+
+    /// `cp_sem_wait`: block while the count is zero, then decrement.
+    pub fn wait(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c == 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c -= 1;
+    }
+
+    /// `cp_sem_post`: increment and wake one waiter.
+    pub fn post(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        drop(c);
+        self.cv.notify_one();
+    }
+
+    /// Non-blocking variant (used by shutdown paths).
+    pub fn try_wait(&self) -> bool {
+        let mut c = self.count.lock().unwrap();
+        if *c == 0 {
+            false
+        } else {
+            *c -= 1;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn init_value_allows_that_many_waits() {
+        let s = Semaphore::new(2);
+        assert!(s.try_wait());
+        assert!(s.try_wait());
+        assert!(!s.try_wait());
+        s.post();
+        assert!(s.try_wait());
+    }
+
+    #[test]
+    fn wait_blocks_until_post() {
+        let s = Arc::new(Semaphore::new(0));
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            s2.wait();
+            42
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.post();
+        assert_eq!(t.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn ping_pong_between_threads() {
+        // The §5 pattern: two semaphores alternating two workers.
+        let a = Arc::new(Semaphore::new(1));
+        let b = Arc::new(Semaphore::new(0));
+        let (a2, b2) = (a.clone(), b.clone());
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        let t = std::thread::spawn(move || {
+            for i in 0..5 {
+                a2.wait();
+                log2.lock().unwrap().push(format!("A{i}"));
+                b2.post();
+            }
+        });
+        for i in 0..5 {
+            b.wait();
+            log.lock().unwrap().push(format!("B{i}"));
+            a.post();
+        }
+        t.join().unwrap();
+        let l = log.lock().unwrap();
+        assert_eq!(
+            *l,
+            vec!["A0", "B0", "A1", "B1", "A2", "B2", "A3", "B3", "A4", "B4"]
+        );
+    }
+}

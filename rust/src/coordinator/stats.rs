@@ -1,0 +1,137 @@
+//! Statistical checks for the PRNG output stream.
+//!
+//! The paper pipes the stream into Dieharder; that is an external
+//! binary, so cf4rs ships built-in screening tests instead (DESIGN.md
+//! substitution map): monobit, byte chi-square, and the Wald–Wolfowitz
+//! runs test. These are screening tests — they catch broken generators
+//! (e.g. unhashed sequential seeds), not subtle statistical flaws.
+
+/// Result of one test: statistic + pass verdict at ~4σ.
+#[derive(Debug, Clone, Copy)]
+pub struct TestResult {
+    pub statistic: f64,
+    pub passed: bool,
+}
+
+/// Monobit test: fraction of set bits should be ~0.5. The statistic is
+/// the normalised deviation |ones - n/2| / sqrt(n/4) (≈ N(0,1)).
+pub fn monobit(bytes: &[u8]) -> TestResult {
+    let nbits = (bytes.len() * 8) as f64;
+    let ones: u64 = bytes.iter().map(|b| b.count_ones() as u64).sum();
+    let z = ((ones as f64) - nbits / 2.0).abs() / (nbits / 4.0).sqrt();
+    TestResult { statistic: z, passed: z < 4.0 }
+}
+
+/// Chi-square over byte values: 255 degrees of freedom, mean 255,
+/// std ≈ √510 ≈ 22.6; pass within ±4σ.
+pub fn byte_chi2(bytes: &[u8]) -> TestResult {
+    let mut counts = [0u64; 256];
+    for &b in bytes {
+        counts[b as usize] += 1;
+    }
+    let expected = bytes.len() as f64 / 256.0;
+    let chi2: f64 = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expected;
+            d * d / expected
+        })
+        .sum();
+    let z = (chi2 - 255.0).abs() / (2.0 * 255.0f64).sqrt();
+    TestResult { statistic: chi2, passed: z < 4.0 }
+}
+
+/// Wald–Wolfowitz runs test on the bit sequence of `bytes` (sampled at
+/// the u64 MSB to keep it O(n/8) yet sensitive to stuck states).
+pub fn runs_msb(words: &[u64]) -> TestResult {
+    let n = words.len();
+    if n < 32 {
+        return TestResult { statistic: 0.0, passed: true };
+    }
+    let bits: Vec<bool> = words.iter().map(|w| w >> 63 == 1).collect();
+    let n1 = bits.iter().filter(|&&b| b).count() as f64;
+    let n0 = n as f64 - n1;
+    if n1 == 0.0 || n0 == 0.0 {
+        return TestResult { statistic: f64::INFINITY, passed: false };
+    }
+    let runs = 1 + bits.windows(2).filter(|w| w[0] != w[1]).count();
+    let mean = 2.0 * n1 * n0 / (n1 + n0) + 1.0;
+    let var = (mean - 1.0) * (mean - 2.0) / (n1 + n0 - 1.0);
+    let z = ((runs as f64) - mean).abs() / var.sqrt();
+    TestResult { statistic: z, passed: z < 4.0 }
+}
+
+/// Run the whole screening battery over a u64 stream.
+pub fn screen(words: &[u64]) -> Vec<(&'static str, TestResult)> {
+    let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    vec![
+        ("monobit", monobit(&bytes)),
+        ("byte_chi2", byte_chi2(&bytes)),
+        ("runs_msb", runs_msb(words)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::simexec;
+
+    fn prng_stream(n: usize, steps: usize) -> Vec<u64> {
+        let mut v: Vec<u64> = (0..n).map(|i| simexec::init_seed(i as u32)).collect();
+        for _ in 0..steps {
+            for x in v.iter_mut() {
+                *x = simexec::xorshift(*x);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn prng_stream_passes_battery() {
+        let words = prng_stream(1 << 14, 3);
+        for (name, r) in screen(&words) {
+            assert!(r.passed, "{name} failed: statistic {}", r.statistic);
+        }
+    }
+
+    #[test]
+    fn raw_hashed_seeds_pass_monobit() {
+        // Even the unstepped hash output should look uniform.
+        let words = prng_stream(1 << 14, 0);
+        assert!(monobit(&bytes_of(&words)).passed);
+    }
+
+    #[test]
+    fn sequential_integers_fail() {
+        // The reason listing S4 hashes the gid: raw counters are not
+        // random. All three tests must reject them.
+        let words: Vec<u64> = (0..(1u64 << 14)).collect();
+        let results = screen(&words);
+        assert!(
+            results.iter().any(|(_, r)| !r.passed),
+            "sequential integers passed the battery: {results:?}"
+        );
+    }
+
+    #[test]
+    fn constant_stream_fails_runs() {
+        let words = vec![u64::MAX; 4096];
+        assert!(!runs_msb(&words).passed);
+    }
+
+    #[test]
+    fn zero_stream_fails() {
+        let words = vec![0u64; 4096];
+        let r = screen(&words);
+        assert!(r.iter().filter(|(_, t)| !t.passed).count() >= 2);
+    }
+
+    #[test]
+    fn tiny_input_vacuously_passes_runs() {
+        assert!(runs_msb(&[1, 2, 3]).passed);
+    }
+
+    fn bytes_of(words: &[u64]) -> Vec<u8> {
+        words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+}

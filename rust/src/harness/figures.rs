@@ -1,0 +1,69 @@
+//! E2 / E4: regenerate Fig. 3 (profiling summary) and Fig. 5 (queue
+//! utilization chart) from live runs of the PRNG service.
+
+use crate::coordinator::{run_ccl, RngConfig, Sink};
+use crate::utils::plot_events;
+
+/// E2 — Fig. 3: run the service with profiling and return the summary.
+///
+/// The paper's run is n=2^24, i=10^4 on a GTX 1080; scaled here to the
+/// artifact ladder with the slow-motion timescale so the timeline is
+/// model-dominated (see DESIGN.md).
+pub fn figure3(n: usize, iters: usize) -> Result<String, String> {
+    std::env::set_var("CF4RS_SIM_TIMESCALE", "0.02");
+    let mut cfg = RngConfig::new(n, iters);
+    cfg.device_index = 1; // GTX 1080 profile
+    cfg.profile = true;
+    cfg.sink = Sink::Discard;
+    let out = run_ccl(&cfg).map_err(|e| e.to_string())?;
+    let mut s = format!(
+        "## E2 — Fig. 3 profiling summary (n={n}, i={iters}, gtx1080sim)\n"
+    );
+    s.push_str(&out.prof_summary.ok_or("no summary produced")?);
+    Ok(s)
+}
+
+/// E4 — Fig. 5: run the service, export the profile, render the chart.
+/// Returns (report text, export tsv, svg).
+pub fn figure5(n: usize, iters: usize) -> Result<(String, String, String), String> {
+    std::env::set_var("CF4RS_SIM_TIMESCALE", "0.02");
+    let mut cfg = RngConfig::new(n, iters);
+    cfg.device_index = 1;
+    cfg.profile = true;
+    cfg.sink = Sink::Discard;
+    let out = run_ccl(&cfg).map_err(|e| e.to_string())?;
+    let tsv = out.prof_export.ok_or("no export produced")?;
+    let infos =
+        crate::ccl::prof::export::parse_tsv(&tsv).map_err(|e| e.to_string())?;
+    let chart =
+        plot_events::render_text(&infos, 100).map_err(|e| e.to_string())?;
+    let svg = plot_events::render_svg(&infos).map_err(|e| e.to_string())?;
+    let mut s = format!(
+        "## E4 — Fig. 5 queue utilization chart (n={n}, i={iters}, gtx1080sim)\n"
+    );
+    s.push_str(&chart);
+    Ok((s, tsv, svg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure3_summary_has_paper_rows() {
+        let s = figure3(65536, 6).unwrap();
+        assert!(s.contains("READ_BUFFER"));
+        assert!(s.contains("RNG_KERNEL"));
+        assert!(s.contains("INIT_KERNEL"));
+        assert!(s.contains("Event overlaps"));
+    }
+
+    #[test]
+    fn figure5_chart_shows_both_queues() {
+        let (report, tsv, svg) = figure5(65536, 4).unwrap();
+        assert!(report.contains("Main |"));
+        assert!(report.contains("Comms |"));
+        assert!(tsv.starts_with("queue\tstart\tend\tname"));
+        assert!(svg.starts_with("<svg"));
+    }
+}

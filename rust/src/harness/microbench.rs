@@ -1,0 +1,113 @@
+//! Minimal benchmarking helper for the `cargo bench` targets.
+//!
+//! The offline vendor set has no criterion, so this provides the small
+//! subset the benches need: warmup, N timed samples, and a
+//! median/mean/min report — enough to make regressions visible and to
+//! feed EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    /// One-line report (ns for sub-ms results, ms otherwise).
+    pub fn report(&self) -> String {
+        let fmt = |d: Duration| {
+            if d < Duration::from_millis(1) {
+                format!("{:>9} ns", d.as_nanos())
+            } else {
+                format!("{:>9.3} ms", d.as_secs_f64() * 1e3)
+            }
+        };
+        format!(
+            "{:<44} median {}  mean {}  min {}  ({} samples)",
+            self.name,
+            fmt(self.median()),
+            fmt(self.mean()),
+            fmt(self.min()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` `samples` times after `warmup` unmeasured runs.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed());
+    }
+    let r = BenchResult { name: name.to_string(), samples: out };
+    println!("{}", r.report());
+    r
+}
+
+/// Like [`bench`] but `f` performs `inner_iters` operations per call;
+/// the report is per-operation.
+pub fn bench_per_op(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    inner_iters: u32,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed() / inner_iters);
+    }
+    let r = BenchResult { name: name.to_string(), samples: out };
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_stats() {
+        let r = bench("noop", 1, 9, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 9);
+        assert!(r.min() <= r.median());
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn per_op_divides() {
+        let r = bench_per_op("sleepy", 0, 3, 10, || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        // 100 µs / 10 ops = ~10 µs/op
+        assert!(r.median() < Duration::from_micros(100));
+    }
+}

@@ -1,0 +1,140 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§6) — see DESIGN.md §3 for the experiment index.
+//!
+//! * `bench loc`      — E1, the §6.1 LOC comparison table;
+//! * `bench overhead` — E3+E5, the Fig. 4 overhead sweep + trend checks;
+//! * `bench figure3`  — E2, the Fig. 3 profiling summary;
+//! * `bench figure5`  — E4, the Fig. 5 queue utilization chart;
+//! * `bench all`      — everything, written to `results/`.
+
+pub mod figures;
+pub mod loc;
+pub mod microbench;
+pub mod overhead;
+
+use std::path::Path;
+
+fn write_result(name: &str, content: &str) {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir).ok();
+    let path = dir.join(name);
+    if std::fs::write(&path, content).is_ok() {
+        eprintln!("  wrote {}", path.display());
+    }
+}
+
+/// `cf4rs bench` entrypoint.
+pub fn main(args: &[String]) -> i32 {
+    let Some(which) = args.first() else {
+        eprintln!("usage: cf4rs bench loc|overhead|figure3|figure5|ablation|all [--quick]");
+        return 2;
+    };
+    let quick = args.iter().any(|a| a == "--quick");
+
+    fn run_loc() {
+        let r = loc::report();
+        print!("{r}");
+        write_result("loc.md", &r);
+    }
+    fn run_overhead(quick: bool) -> bool {
+        let opts = if quick {
+            overhead::SweepOpts::quick()
+        } else {
+            overhead::SweepOpts::paper()
+        };
+        match overhead::sweep(&opts) {
+            Ok(cells) => {
+                let r = overhead::render(&cells);
+                print!("{r}");
+                write_result("overhead.md", &r);
+                // machine-readable series for replotting
+                let mut csv = String::from("device,n,iters,t_raw,t_ccl,ratio,min,max\n");
+                for c in &cells {
+                    csv.push_str(&format!(
+                        "{},{},{},{:.6},{:.6},{:.4},{:.4},{:.4}\n",
+                        c.device_name, c.n, c.iters, c.t_raw, c.t_ccl, c.ratio,
+                        c.ratio_min, c.ratio_max
+                    ));
+                }
+                write_result("overhead.csv", &csv);
+                true
+            }
+            Err(e) => {
+                eprintln!("overhead: {e}");
+                false
+            }
+        }
+    }
+    fn run_fig3(quick: bool) -> bool {
+        let (n, i) = if quick { (65536, 6) } else { (262144, 16) };
+        match figures::figure3(n, i) {
+            Ok(s) => {
+                print!("{s}");
+                write_result("figure3.txt", &s);
+                true
+            }
+            Err(e) => {
+                eprintln!("figure3: {e}");
+                false
+            }
+        }
+    }
+    fn run_fig5(quick: bool) -> bool {
+        let (n, i) = if quick { (65536, 4) } else { (1048576, 8) };
+        match figures::figure5(n, i) {
+            Ok((report, tsv, svg)) => {
+                print!("{report}");
+                write_result("figure5.txt", &report);
+                write_result("figure5.tsv", &tsv);
+                write_result("figure5.svg", &svg);
+                true
+            }
+            Err(e) => {
+                eprintln!("figure5: {e}");
+                false
+            }
+        }
+    }
+
+    fn run_ablation(quick: bool) -> bool {
+        match overhead::profiling_ablation(quick) {
+            Ok(s) => {
+                print!("{s}");
+                write_result("ablation_profiling.md", &s);
+                true
+            }
+            Err(e) => {
+                eprintln!("ablation: {e}");
+                false
+            }
+        }
+    }
+
+    let ok = match which.as_str() {
+        "loc" => {
+            run_loc();
+            true
+        }
+        "ablation" => run_ablation(quick),
+        "overhead" => run_overhead(quick),
+        "figure3" => run_fig3(quick),
+        "figure5" => run_fig5(quick),
+        "all" => {
+            run_loc();
+            let a = run_fig3(quick);
+            let b = run_fig5(quick);
+            let c = run_overhead(quick);
+            let d = run_ablation(quick);
+            a && b && c && d
+        }
+        other => {
+            eprintln!("unknown bench {other:?}");
+            return 2;
+        }
+    };
+    if ok {
+        0
+    } else {
+        1
+    }
+}

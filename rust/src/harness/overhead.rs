@@ -1,0 +1,339 @@
+//! §6.2 / Fig. 4 overhead study: cf4rs vs raw-substrate implementation
+//! across the paper's parameter sweep.
+//!
+//! Protocol (paper Fig. 4 caption): for each (device, n, i) run each
+//! implementation `runs` times, drop the fastest and slowest run, and
+//! average the rest; the reported value is the ratio of mean run times
+//! with min/max error bars. A ratio > 1 means the cf4rs realisation took
+//! longer (framework overhead); ≈ 1 means the overhead is masked by
+//! device work.
+//!
+//! Scaling note (EXPERIMENTS.md): the paper sweeps n = 2^12..2^24 and
+//! i = 10^2..10^4 on real GPUs. On this substrate the same *shape* is
+//! produced with n = 2^12..2^20 (the artifact ladder) and
+//! i = {10, 32, 100}, because the simulated device executes reference
+//! kernels on the host: larger i still multiplies the per-iteration
+//! profiling/event cost (exposing overhead) and larger n still grows
+//! device work faster than framework work (masking it).
+
+use std::time::Duration;
+
+use crate::coordinator::{run_ccl, run_raw, RngConfig, Sink};
+use crate::runtime::Manifest;
+
+/// One cell of the Fig. 4 sweep.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub device_index: u32,
+    pub device_name: &'static str,
+    pub n: usize,
+    pub iters: usize,
+    /// Mean run time of the raw realisation (min/max-trimmed), seconds.
+    pub t_raw: f64,
+    /// Mean run time of the cf4rs realisation, seconds.
+    pub t_ccl: f64,
+    /// Overhead ratio t_ccl / t_raw (the Fig. 4 y-value; > 1 = slower).
+    pub ratio: f64,
+    /// Error bars: (min, max) observed per-run ratio.
+    pub ratio_min: f64,
+    pub ratio_max: f64,
+}
+
+/// Sweep parameters.
+pub struct SweepOpts {
+    pub devices: Vec<(u32, &'static str)>,
+    pub sizes: Vec<usize>,
+    pub iters: Vec<usize>,
+    pub runs: usize,
+}
+
+impl SweepOpts {
+    /// Full sweep (several minutes).
+    pub fn paper() -> Self {
+        let sizes = Manifest::discover()
+            .map(|m| m.rng_sizes())
+            .unwrap_or_else(|_| vec![4096, 65536]);
+        Self {
+            devices: vec![(1, "gtx1080sim"), (2, "hd7970sim")],
+            sizes,
+            iters: vec![10, 32, 100],
+            runs: 10,
+        }
+    }
+
+    /// Reduced sweep for CI / `--quick`.
+    pub fn quick() -> Self {
+        Self {
+            devices: vec![(1, "gtx1080sim")],
+            sizes: vec![4096, 65536],
+            iters: vec![4, 16],
+            runs: 4,
+        }
+    }
+}
+
+fn trimmed_mean(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trimmed: &[f64] = if xs.len() > 2 { &xs[1..xs.len() - 1] } else { &xs };
+    trimmed.iter().sum::<f64>() / trimmed.len() as f64
+}
+
+fn time_runs(
+    runs: usize,
+    mut run_once: impl FnMut() -> Result<Duration, String>,
+) -> Result<Vec<f64>, String> {
+    let mut out = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        out.push(run_once()?.as_secs_f64());
+    }
+    Ok(out)
+}
+
+/// Run one sweep cell.
+pub fn measure_cell(
+    device_index: u32,
+    device_name: &'static str,
+    n: usize,
+    iters: usize,
+    runs: usize,
+) -> Result<Cell, String> {
+    let mk_cfg = || {
+        let mut c = RngConfig::new(n, iters);
+        c.device_index = device_index;
+        c.profile = true; // the paper's worst case: profiling on
+        c.sink = Sink::Discard; // stdout > /dev/null
+        c
+    };
+    // Time the *whole* run — including the profiling analysis, which the
+    // paper explicitly calls out as cf4ocl's worst case (the overlap
+    // calculation runs over every recorded event).
+    let raw_times = time_runs(runs, || {
+        let t0 = std::time::Instant::now();
+        run_raw(&mk_cfg())?;
+        Ok(t0.elapsed())
+    })?;
+    let ccl_times = time_runs(runs, || {
+        let t0 = std::time::Instant::now();
+        run_ccl(&mk_cfg()).map_err(|e| e.to_string())?;
+        Ok(t0.elapsed())
+    })?;
+    let t_raw = trimmed_mean(raw_times.clone());
+    let t_ccl = trimmed_mean(ccl_times.clone());
+    // Error bars from extreme per-mean ratios.
+    let rmin = ccl_times.iter().cloned().fold(f64::MAX, f64::min)
+        / raw_times.iter().cloned().fold(f64::MIN, f64::max);
+    let rmax = ccl_times.iter().cloned().fold(f64::MIN, f64::max)
+        / raw_times.iter().cloned().fold(f64::MAX, f64::min);
+    Ok(Cell {
+        device_index,
+        device_name,
+        n,
+        iters,
+        t_raw,
+        t_ccl,
+        ratio: t_ccl / t_raw,
+        ratio_min: rmin,
+        ratio_max: rmax,
+    })
+}
+
+/// Run the whole sweep, reporting progress on stderr.
+pub fn sweep(opts: &SweepOpts) -> Result<Vec<Cell>, String> {
+    let mut cells = Vec::new();
+    for &(dev, name) in &opts.devices {
+        for &n in &opts.sizes {
+            for &iters in &opts.iters {
+                eprintln!("  measuring dev={name} n={n} i={iters} ({} runs x2)...", opts.runs);
+                cells.push(measure_cell(dev, name, n, iters, opts.runs)?);
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the Fig. 4 table (one block per device × i, series over n).
+pub fn render(cells: &[Cell]) -> String {
+    let mut out = String::new();
+    out.push_str("## E3 — §6.2 / Fig. 4 overhead of cf4rs vs raw realisation\n");
+    out.push_str("ratio = t_ccl / t_raw (trimmed means; >1 ⇒ framework overhead)\n\n");
+    let mut devices: Vec<&str> = cells.iter().map(|c| c.device_name).collect();
+    devices.dedup();
+    for dev in devices {
+        let mut iters: Vec<usize> = cells
+            .iter()
+            .filter(|c| c.device_name == dev)
+            .map(|c| c.iters)
+            .collect();
+        iters.sort_unstable();
+        iters.dedup();
+        for i in iters {
+            out.push_str(&format!("### {dev}, i = {i}\n"));
+            out.push_str(
+                "| n | t_raw (s) | t_ccl (s) | ratio | min | max |\n|---|---|---|---|---|---|\n",
+            );
+            for c in cells.iter().filter(|c| c.device_name == dev && c.iters == i) {
+                out.push_str(&format!(
+                    "| {} | {:.4} | {:.4} | {:.3} | {:.3} | {:.3} |\n",
+                    c.n, c.t_raw, c.t_ccl, c.ratio, c.ratio_min, c.ratio_max
+                ));
+            }
+            out.push('\n');
+        }
+    }
+    out.push_str(&trends(cells));
+    out
+}
+
+/// E5: the paper's qualitative claims about the overhead trends.
+pub fn trends(cells: &[Cell]) -> String {
+    let mut out = String::new();
+    out.push_str("### E5 — trend checks (paper §6.2 claims)\n");
+    // Claim 1: for fixed device+i, overhead falls (or stays flat) as n
+    // grows — compare the smallest and largest n.
+    let mut ok1 = 0;
+    let mut tot1 = 0;
+    let keys: Vec<(u32, usize)> = {
+        let mut v: Vec<(u32, usize)> =
+            cells.iter().map(|c| (c.device_index, c.iters)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for (dev, i) in &keys {
+        let mut series: Vec<&Cell> = cells
+            .iter()
+            .filter(|c| c.device_index == *dev && c.iters == *i)
+            .collect();
+        series.sort_by_key(|c| c.n);
+        if series.len() >= 2 {
+            tot1 += 1;
+            let first = series.first().unwrap().ratio;
+            let last = series.last().unwrap().ratio;
+            if last <= first + 0.05 {
+                ok1 += 1;
+            }
+        }
+    }
+    out.push_str(&format!(
+        "- overhead masked at larger n: {ok1}/{tot1} (dev,i) series \
+         have ratio(max n) <= ratio(min n) + 0.05\n"
+    ));
+    // Claim 2: overhead tends to grow with i (more events => more
+    // expensive overlap analysis) — compare smallest and largest i at
+    // the smallest n (where device work masks least).
+    let mut ok2 = 0;
+    let mut tot2 = 0;
+    let devs: Vec<u32> = {
+        let mut v: Vec<u32> = cells.iter().map(|c| c.device_index).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for dev in &devs {
+        let min_n = cells
+            .iter()
+            .filter(|c| c.device_index == *dev)
+            .map(|c| c.n)
+            .min()
+            .unwrap();
+        let mut series: Vec<&Cell> = cells
+            .iter()
+            .filter(|c| c.device_index == *dev && c.n == min_n)
+            .collect();
+        series.sort_by_key(|c| c.iters);
+        if series.len() >= 2 {
+            tot2 += 1;
+            if series.last().unwrap().ratio >= series.first().unwrap().ratio - 0.05 {
+                ok2 += 1;
+            }
+        }
+    }
+    out.push_str(&format!(
+        "- overhead exposed at larger i: {ok2}/{tot2} devices have \
+         ratio(max i) >= ratio(min i) - 0.05 at the smallest n\n"
+    ));
+    // Claim 3: mean ratio stays small — "effectively negligible".
+    let mean: f64 = cells.iter().map(|c| c.ratio).sum::<f64>() / cells.len().max(1) as f64;
+    out.push_str(&format!(
+        "- mean overhead ratio across all cells: {mean:.3} (paper: close to 1)\n"
+    ));
+    out
+}
+
+/// Ablation (DESIGN.md §6 design-choice): what does the integrated
+/// profiler itself cost? Runs the ccl service with profiling on vs off
+/// on one device and reports the ratio per (n, i) cell.
+pub fn profiling_ablation(quick: bool) -> Result<String, String> {
+    let (sizes, iters, runs) = if quick {
+        (vec![4096usize, 65536], vec![8usize, 32], 4)
+    } else {
+        (vec![4096usize, 65536, 262144], vec![10usize, 32, 100], 8)
+    };
+    let mut out = String::from(
+        "## Ablation — integrated profiling cost (ccl service, gtx1080sim)\n\
+         ratio = t(profile on, incl. calc) / t(profile off)\n\n\
+         | n | i | t_off (s) | t_on (s) | ratio |\n|---|---|---|---|---|\n",
+    );
+    for &n in &sizes {
+        for &i in &iters {
+            let run_with = |profile: bool| -> Result<f64, String> {
+                let times = time_runs(runs, || {
+                    let mut c = RngConfig::new(n, i);
+                    c.device_index = 1;
+                    c.profile = profile;
+                    c.sink = Sink::Discard;
+                    let t0 = std::time::Instant::now();
+                    run_ccl(&c).map_err(|e| e.to_string())?;
+                    Ok(t0.elapsed())
+                })?;
+                Ok(trimmed_mean(times))
+            };
+            let t_off = run_with(false)?;
+            let t_on = run_with(true)?;
+            out.push_str(&format!(
+                "| {n} | {i} | {t_off:.4} | {t_on:.4} | {:.3} |\n",
+                t_on / t_off
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        assert_eq!(trimmed_mean(vec![100.0, 1.0, 2.0, 3.0, 0.0]), 2.0);
+        assert_eq!(trimmed_mean(vec![5.0]), 5.0);
+        assert_eq!(trimmed_mean(vec![1.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn single_cell_end_to_end() {
+        let c = measure_cell(1, "gtx1080sim", 4096, 3, 3).unwrap();
+        assert!(c.t_raw > 0.0 && c.t_ccl > 0.0);
+        assert!(c.ratio > 0.1 && c.ratio < 10.0, "wild ratio {}", c.ratio);
+        assert!(c.ratio_min <= c.ratio_max);
+    }
+
+    #[test]
+    fn render_contains_table() {
+        let cell = Cell {
+            device_index: 1,
+            device_name: "gtx1080sim",
+            n: 4096,
+            iters: 10,
+            t_raw: 0.01,
+            t_ccl: 0.011,
+            ratio: 1.1,
+            ratio_min: 1.0,
+            ratio_max: 1.2,
+        };
+        let r = render(&[cell]);
+        assert!(r.contains("Fig. 4"));
+        assert!(r.contains("| 4096 |"));
+        assert!(r.contains("trend checks"));
+    }
+}

@@ -1,0 +1,31 @@
+//! # cf4rs — a Rust framework for heterogeneous compute
+//!
+//! Reproduction of *cf4ocl: a C framework for OpenCL* (Fachada, Lopes,
+//! Martins & Rosa, Science of Computer Programming, 2017) on a
+//! Rust + JAX + Pallas / PJRT stack.
+//!
+//! The crate is organised in the same two components as the paper
+//! (§3.1): the **library** and the **utilities**, plus the substrate the
+//! library wraps:
+//!
+//! * [`rawcl`] — the low-level, verbose, C-style compute host API that
+//!   plays the role OpenCL plays in the paper (substrate; every call
+//!   returns an integer status code and takes out-params).
+//! * [`runtime`] — the PJRT bridge: loads AOT-lowered HLO artifacts and
+//!   executes them on the CPU PJRT client (the "native" device).
+//! * [`ccl`] — the framework itself (the paper's contribution): wrapper
+//!   classes, device selection, error management and integrated
+//!   multi-queue profiling.
+//! * [`coordinator`] — the double-buffered streaming pipeline of §5 and
+//!   the PRNG service built on it.
+//! * [`harness`] — benchmark drivers that regenerate every table and
+//!   figure of the paper's evaluation (§6).
+//! * [`utils`] — the three command-line utilities (`devinfo`, `cclc`,
+//!   `plot_events`).
+
+pub mod ccl;
+pub mod coordinator;
+pub mod harness;
+pub mod rawcl;
+pub mod runtime;
+pub mod utils;

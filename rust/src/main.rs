@@ -1,0 +1,142 @@
+//! `cf4rs` — command-line entry point.
+//!
+//! Subcommands:
+//! * `devinfo`      — the paper's `ccl_devinfo` utility;
+//! * `cclc`         — the paper's `ccl_c` offline compiler/analyzer;
+//! * `plot-events`  — the paper's `ccl_plot_events` chart generator;
+//! * `rng`          — run the §5 PRNG service (ccl or raw realisation);
+//! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
+//!   `overhead`, `figure3`, `figure5`.
+
+use cf4rs::coordinator::{run_ccl, run_raw, RngConfig, Sink};
+use cf4rs::harness;
+use cf4rs::utils::{cclc, devinfo, plot_events};
+
+fn usage() -> i32 {
+    eprintln!(
+        "usage: cf4rs <command> [args]\n\
+         commands:\n\
+         \x20 devinfo [-a] [-d N] [-c p1,p2] [--list]   query devices\n\
+         \x20 cclc build|analyze|link [opts] FILE...    offline kernel tool\n\
+         \x20 plot-events FILE.tsv [--svg OUT]          queue utilization chart\n\
+         \x20 rng [--raw] [--numrn N] [--iters I] [--device D]\n\
+         \x20     [--no-profile] [--summary] [--export FILE] [--stdout]\n\
+         \x20 bench loc|overhead|figure3|figure5 [args] regenerate paper results"
+    );
+    2
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        std::process::exit(usage());
+    };
+    let rest = &args[1..];
+    let code = match cmd.as_str() {
+        "devinfo" => devinfo::main(rest),
+        "cclc" => cclc::main(rest),
+        "plot-events" => plot_events::main(rest),
+        "rng" => rng_main(rest),
+        "bench" => harness::main(rest),
+        "-h" | "--help" | "help" => usage(),
+        other => {
+            eprintln!("unknown command {other:?}");
+            usage()
+        }
+    };
+    std::process::exit(code);
+}
+
+/// `cf4rs rng`: the §5 service from the command line.
+fn rng_main(args: &[String]) -> i32 {
+    let mut numrn = 1 << 16;
+    let mut iters = 16usize;
+    let mut device = 1u32;
+    let mut raw = false;
+    let mut profile = true;
+    let mut want_summary = false;
+    let mut export: Option<String> = None;
+    let mut to_stdout = false;
+
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut next = |what: &str| -> Result<String, String> {
+            it.next().cloned().ok_or(format!("{what} needs a value"))
+        };
+        let r: Result<(), String> = (|| {
+            match a.as_str() {
+                "--raw" => raw = true,
+                "--numrn" | "-n" => numrn = next("--numrn")?.parse().map_err(|e| format!("{e}"))?,
+                "--iters" | "-i" => iters = next("--iters")?.parse().map_err(|e| format!("{e}"))?,
+                "--device" | "-d" => device = next("--device")?.parse().map_err(|e| format!("{e}"))?,
+                "--no-profile" => profile = false,
+                "--summary" => want_summary = true,
+                "--export" => export = Some(next("--export")?),
+                "--stdout" => to_stdout = true,
+                other => return Err(format!("unknown rng option {other:?}")),
+            }
+            Ok(())
+        })();
+        if let Err(e) = r {
+            eprintln!("rng: {e}");
+            return 2;
+        }
+    }
+
+    let mut cfg = RngConfig::new(numrn, iters);
+    cfg.device_index = device;
+    cfg.profile = profile;
+    cfg.sink = if to_stdout {
+        Sink::Writer(std::sync::Mutex::new(Box::new(std::io::stdout())))
+    } else {
+        Sink::Discard
+    };
+
+    eprintln!(" * Implementation            : {}", if raw { "raw" } else { "cf4rs" });
+    eprintln!(" * Random numbers / iteration: {numrn}");
+    eprintln!(" * Iterations                : {iters}");
+    eprintln!(" * Device index              : {device}");
+
+    if raw {
+        match run_raw(&cfg) {
+            Ok(out) => {
+                eprintln!(" * Total elapsed time        : {:e}s", out.wall.as_secs_f64());
+                if let Some((tkinit, tkrng, tcomms)) = out.raw_prof {
+                    eprintln!(" * Total time in 'init' kernel       : {:e}s", tkinit as f64 * 1e-9);
+                    eprintln!(" * Total time in 'rng' kernel        : {:e}s", tkrng as f64 * 1e-9);
+                    eprintln!(" * Total time fetching data from dev : {:e}s", tcomms as f64 * 1e-9);
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("rng(raw): {e}");
+                1
+            }
+        }
+    } else {
+        match run_ccl(&cfg) {
+            Ok(out) => {
+                eprintln!(" * Total elapsed time        : {:e}s", out.wall.as_secs_f64());
+                if want_summary {
+                    if let Some(s) = &out.prof_summary {
+                        eprintln!("{s}");
+                    }
+                }
+                if let Some(path) = export {
+                    if let Some(tsv) = &out.prof_export {
+                        if let Err(e) = std::fs::write(&path, tsv) {
+                            eprintln!("rng: writing {path}: {e}");
+                            return 1;
+                        }
+                        eprintln!(" * Profile exported to {path}");
+                    }
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("rng(ccl): {e}");
+                1
+            }
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Memory objects: device buffers backed by host byte storage.
+//!
+//! On the native (CPU PJRT) device, "device memory" and host memory share
+//! an address space, so the backing store is simply a `Vec<u8>` guarded
+//! by a mutex. Simulated devices use the same storage but charge
+//! transfer time through the timing model (see `queue.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use super::context;
+use super::error::*;
+use super::registry::{self, Obj};
+use super::types::{ContextH, MemFlags, MemH};
+
+/// Internal buffer object.
+pub struct BufferObj {
+    pub ctx: ContextH,
+    pub flags: MemFlags,
+    pub size: usize,
+    pub data: Mutex<Vec<u8>>,
+}
+
+impl BufferObj {
+    /// Snapshot `len` bytes at `offset` (used by kernel input marshalling
+    /// and read commands).
+    pub fn read_range(&self, offset: usize, len: usize) -> Option<Vec<u8>> {
+        let data = self.data.lock().unwrap();
+        data.get(offset..offset + len).map(|s| s.to_vec())
+    }
+
+    /// Overwrite `src.len()` bytes at `offset`.
+    pub fn write_range(&self, offset: usize, src: &[u8]) -> bool {
+        let mut data = self.data.lock().unwrap();
+        match data.get_mut(offset..offset + src.len()) {
+            Some(dst) => {
+                dst.copy_from_slice(src);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Run `f` over `src[src_off..][..len]` and `dst[dst_off..][..dlen]`
+/// with both buffer locks held — the zero-copy path for simulated
+/// kernel execution (EXPERIMENTS.md §Perf). Locks are acquired in
+/// address order to prevent deadlock; `None` if ranges are out of
+/// bounds or `src` and `dst` are the same buffer (callers fall back to
+/// the copying path).
+pub fn with_src_dst<R>(
+    src: &BufferObj,
+    dst: &BufferObj,
+    src_off: usize,
+    len: usize,
+    dst_off: usize,
+    dlen: usize,
+    f: impl FnOnce(&[u8], &mut [u8]) -> R,
+) -> Option<R> {
+    if std::ptr::eq(src, dst) {
+        return None;
+    }
+    // Address-ordered locking.
+    let (first, second) = if (src as *const BufferObj) < (dst as *const BufferObj) {
+        (&src.data, &dst.data)
+    } else {
+        (&dst.data, &src.data)
+    };
+    let g1 = first.lock().unwrap();
+    let g2 = second.lock().unwrap();
+    // Re-associate the guards with their roles.
+    let (sg, mut dg) = if std::ptr::eq(first, &src.data) { (g1, g2) } else { (g2, g1) };
+    let s = sg.get(src_off..src_off + len)?;
+    // SAFETY-free reborrow: both guards are distinct mutexes (checked
+    // above), so `sg` and `dg` alias different allocations.
+    let d = dg.get_mut(dst_off..dst_off + dlen)?;
+    Some(f(s, d))
+}
+
+/// `clCreateBuffer`.
+///
+/// `host_data` models `CL_MEM_COPY_HOST_PTR`: when provided, it
+/// initialises the buffer and must be exactly `size` bytes.
+pub fn create_buffer(
+    ctx: ContextH,
+    flags: MemFlags,
+    size: usize,
+    host_data: Option<&[u8]>,
+    status: &mut ClStatus,
+) -> MemH {
+    if context::lookup(ctx).is_none() {
+        *status = CL_INVALID_CONTEXT;
+        return MemH::NULL;
+    }
+    if size == 0 {
+        *status = CL_INVALID_BUFFER_SIZE;
+        return MemH::NULL;
+    }
+    let wants_copy = flags.contains(MemFlags::COPY_HOST_PTR);
+    if wants_copy != host_data.is_some() {
+        // host pointer without the flag (or vice versa) is invalid.
+        *status = CL_INVALID_VALUE;
+        return MemH::NULL;
+    }
+    let data = match host_data {
+        Some(src) => {
+            if src.len() != size {
+                *status = CL_INVALID_VALUE;
+                return MemH::NULL;
+            }
+            src.to_vec()
+        }
+        None => vec![0u8; size],
+    };
+    let obj = Arc::new(BufferObj { ctx, flags, size, data: Mutex::new(data) });
+    *status = CL_SUCCESS;
+    MemH(registry::insert(Obj::Buffer(obj)))
+}
+
+pub fn retain_mem_object(mem: MemH) -> ClStatus {
+    if registry::get_buffer(mem.0).is_none() {
+        return CL_INVALID_MEM_OBJECT;
+    }
+    if registry::retain(mem.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_MEM_OBJECT
+    }
+}
+
+pub fn release_mem_object(mem: MemH) -> ClStatus {
+    if registry::get_buffer(mem.0).is_none() {
+        return CL_INVALID_MEM_OBJECT;
+    }
+    if registry::release(mem.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_MEM_OBJECT
+    }
+}
+
+/// `clGetMemObjectInfo` (size + flags subset).
+pub fn get_mem_object_size(mem: MemH, size: &mut usize) -> ClStatus {
+    let Some(b) = registry::get_buffer(mem.0) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    *size = b.size;
+    CL_SUCCESS
+}
+
+pub(crate) fn lookup(mem: MemH) -> Option<Arc<BufferObj>> {
+    registry::get_buffer(mem.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::types::DeviceId;
+
+    fn ctx() -> ContextH {
+        let mut st = CL_SUCCESS;
+        let c = context::create_context(&[DeviceId(0)], &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        c
+    }
+
+    #[test]
+    fn create_zeroed_buffer() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let m = create_buffer(c, MemFlags::READ_WRITE, 64, None, &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        let b = lookup(m).unwrap();
+        assert_eq!(b.read_range(0, 64).unwrap(), vec![0u8; 64]);
+        assert_eq!(release_mem_object(m), CL_SUCCESS);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn copy_host_ptr_initialises() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let src = vec![7u8; 16];
+        let m = create_buffer(
+            c,
+            MemFlags::READ_WRITE | MemFlags::COPY_HOST_PTR,
+            16,
+            Some(&src),
+            &mut st,
+        );
+        assert_eq!(st, CL_SUCCESS);
+        assert_eq!(lookup(m).unwrap().read_range(4, 4).unwrap(), vec![7u8; 4]);
+        release_mem_object(m);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn flag_pointer_mismatch_rejected() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let src = vec![0u8; 8];
+        // data without flag
+        assert!(create_buffer(c, MemFlags::READ_WRITE, 8, Some(&src), &mut st).is_null());
+        assert_eq!(st, CL_INVALID_VALUE);
+        // flag without data
+        assert!(create_buffer(
+            c,
+            MemFlags::READ_WRITE | MemFlags::COPY_HOST_PTR,
+            8,
+            None,
+            &mut st
+        )
+        .is_null());
+        assert_eq!(st, CL_INVALID_VALUE);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn zero_size_rejected() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        assert!(create_buffer(c, MemFlags::READ_WRITE, 0, None, &mut st).is_null());
+        assert_eq!(st, CL_INVALID_BUFFER_SIZE);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn out_of_range_access_detected() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let m = create_buffer(c, MemFlags::READ_WRITE, 8, None, &mut st);
+        let b = lookup(m).unwrap();
+        assert!(b.read_range(4, 8).is_none());
+        assert!(!b.write_range(7, &[1, 2]));
+        assert!(b.write_range(6, &[1, 2]));
+        release_mem_object(m);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn mem_size_query() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let m = create_buffer(c, MemFlags::READ_ONLY, 128, None, &mut st);
+        let mut sz = 0usize;
+        assert_eq!(get_mem_object_size(m, &mut sz), CL_SUCCESS);
+        assert_eq!(sz, 128);
+        release_mem_object(m);
+        assert_eq!(get_mem_object_size(m, &mut sz), CL_INVALID_MEM_OBJECT);
+        context::release_context(c);
+    }
+}

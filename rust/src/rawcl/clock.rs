@@ -1,0 +1,68 @@
+//! Process-epoch nanosecond clock and precise sleeping.
+//!
+//! OpenCL event profiling exposes `cl_ulong` device timestamps in
+//! nanoseconds from an unspecified epoch. `rawcl` uses one process-wide
+//! monotonic epoch so timestamps from different queues/devices are
+//! directly comparable (which the profiler's overlap detection needs).
+
+use std::time::{Duration, Instant};
+
+fn epoch() -> Instant {
+    static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process profiling epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Sleep for `ns` nanoseconds with sub-OS-quantum precision.
+///
+/// `thread::sleep` has ~50 µs granularity on Linux; simulated device
+/// commands are often shorter. Sleep coarsely for the bulk and spin for
+/// the tail so simulated timelines keep their shape at µs scale.
+pub fn precise_sleep(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let start = Instant::now();
+    let total = Duration::from_nanos(ns);
+    // Leave a 120 µs tail to burn by spinning.
+    const SPIN_TAIL: Duration = Duration::from_micros(120);
+    if total > SPIN_TAIL {
+        std::thread::sleep(total - SPIN_TAIL);
+    }
+    while start.elapsed() < total {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn precise_sleep_hits_target() {
+        let t0 = Instant::now();
+        precise_sleep(300_000); // 300 µs
+        let dt = t0.elapsed().as_nanos() as u64;
+        assert!(dt >= 300_000, "slept only {dt} ns");
+        // Allow generous upper slack for loaded CI machines.
+        assert!(dt < 20_000_000, "slept {dt} ns, way over target");
+    }
+
+    #[test]
+    fn zero_sleep_returns_immediately() {
+        let t0 = Instant::now();
+        precise_sleep(0);
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,175 @@
+//! Contexts: a set of devices sharing buffers and programs.
+
+use std::sync::Arc;
+
+use super::device;
+use super::error::*;
+use super::registry::{self, Obj};
+use super::types::{ContextH, DeviceId, DeviceType, PlatformId};
+
+/// Internal context object.
+pub struct ContextObj {
+    pub devices: Vec<DeviceId>,
+}
+
+impl ContextObj {
+    #[cfg(test)]
+    pub fn for_tests() -> Self {
+        Self { devices: vec![DeviceId(0)] }
+    }
+}
+
+/// `clCreateContext`: from an explicit device list.
+pub fn create_context(devices_in: &[DeviceId], status: &mut ClStatus) -> ContextH {
+    if devices_in.is_empty() {
+        *status = CL_INVALID_VALUE;
+        return ContextH::NULL;
+    }
+    // All devices must exist and share a platform (OpenCL requirement).
+    let mut platform: Option<PlatformId> = None;
+    for &d in devices_in {
+        let Some(dev) = device::device(d) else {
+            *status = CL_INVALID_DEVICE;
+            return ContextH::NULL;
+        };
+        match platform {
+            None => platform = Some(dev.platform),
+            Some(p) if p == dev.platform => {}
+            Some(_) => {
+                *status = CL_INVALID_DEVICE;
+                return ContextH::NULL;
+            }
+        }
+    }
+    let obj = Arc::new(ContextObj { devices: devices_in.to_vec() });
+    *status = CL_SUCCESS;
+    ContextH(registry::insert(Obj::Context(obj)))
+}
+
+/// `clCreateContextFromType`: first platform containing a matching device
+/// wins; all its matching devices join the context.
+pub fn create_context_from_type(dtype: DeviceType, status: &mut ClStatus) -> ContextH {
+    for (pi, _) in super::platform::platforms().iter().enumerate() {
+        let mut n = 0u32;
+        let st = device::get_device_ids(PlatformId(pi as u32), dtype, 0, None, Some(&mut n));
+        if st == CL_SUCCESS && n > 0 {
+            let mut ids = vec![DeviceId(0); n as usize];
+            device::get_device_ids(
+                PlatformId(pi as u32),
+                dtype,
+                n,
+                Some(&mut ids),
+                None,
+            );
+            return create_context(&ids, status);
+        }
+    }
+    *status = CL_DEVICE_NOT_FOUND;
+    ContextH::NULL
+}
+
+/// `clRetainContext` / `clReleaseContext`.
+pub fn retain_context(ctx: ContextH) -> ClStatus {
+    if registry::get_context(ctx.0).is_none() {
+        return CL_INVALID_CONTEXT;
+    }
+    if registry::retain(ctx.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_CONTEXT
+    }
+}
+
+pub fn release_context(ctx: ContextH) -> ClStatus {
+    if registry::get_context(ctx.0).is_none() {
+        return CL_INVALID_CONTEXT;
+    }
+    if registry::release(ctx.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_CONTEXT
+    }
+}
+
+/// Context info: number of devices and the device list.
+pub fn get_context_devices(ctx: ContextH, out: &mut Vec<DeviceId>) -> ClStatus {
+    let Some(c) = registry::get_context(ctx.0) else {
+        return CL_INVALID_CONTEXT;
+    };
+    out.clear();
+    out.extend_from_slice(&c.devices);
+    CL_SUCCESS
+}
+
+/// Internal accessor for other substrate modules.
+pub(crate) fn lookup(ctx: ContextH) -> Option<Arc<ContextObj>> {
+    registry::get_context(ctx.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_release() {
+        let mut st = CL_SUCCESS;
+        let ctx = create_context(&[DeviceId(1), DeviceId(2)], &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        assert!(!ctx.is_null());
+        let mut devs = Vec::new();
+        assert_eq!(get_context_devices(ctx, &mut devs), CL_SUCCESS);
+        assert_eq!(devs, vec![DeviceId(1), DeviceId(2)]);
+        assert_eq!(release_context(ctx), CL_SUCCESS);
+        assert_eq!(release_context(ctx), CL_INVALID_CONTEXT);
+    }
+
+    #[test]
+    fn from_type_gpu_lands_on_simcl() {
+        let mut st = CL_SUCCESS;
+        let ctx = create_context_from_type(DeviceType::GPU, &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        let mut devs = Vec::new();
+        get_context_devices(ctx, &mut devs);
+        assert_eq!(devs.len(), 2);
+        release_context(ctx);
+    }
+
+    #[test]
+    fn from_type_cpu_lands_on_native() {
+        let mut st = CL_SUCCESS;
+        let ctx = create_context_from_type(DeviceType::CPU, &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        let mut devs = Vec::new();
+        get_context_devices(ctx, &mut devs);
+        assert_eq!(devs, vec![DeviceId(0)]);
+        release_context(ctx);
+    }
+
+    #[test]
+    fn mixed_platform_context_rejected() {
+        let mut st = CL_SUCCESS;
+        let ctx = create_context(&[DeviceId(0), DeviceId(1)], &mut st);
+        assert_eq!(st, CL_INVALID_DEVICE);
+        assert!(ctx.is_null());
+    }
+
+    #[test]
+    fn empty_device_list_rejected() {
+        let mut st = CL_SUCCESS;
+        assert!(create_context(&[], &mut st).is_null());
+        assert_eq!(st, CL_INVALID_VALUE);
+    }
+
+    #[test]
+    fn retain_increases_lifetime() {
+        let mut st = CL_SUCCESS;
+        let ctx = create_context(&[DeviceId(0)], &mut st);
+        assert_eq!(retain_context(ctx), CL_SUCCESS);
+        assert_eq!(release_context(ctx), CL_SUCCESS);
+        // still alive after one release (refcount was 2)
+        let mut devs = Vec::new();
+        assert_eq!(get_context_devices(ctx, &mut devs), CL_SUCCESS);
+        assert_eq!(release_context(ctx), CL_SUCCESS);
+        assert_eq!(get_context_devices(ctx, &mut devs), CL_INVALID_CONTEXT);
+    }
+}

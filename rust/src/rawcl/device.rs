@@ -1,0 +1,242 @@
+//! Device table and `clGetDeviceInfo`-style queries.
+
+use super::error::*;
+use super::profile::{self, BackendKind, DeviceProfile};
+use super::types::{DeviceId, DeviceInfo, DeviceType, PlatformId};
+
+/// One device: a profile bound to a platform.
+pub struct Device {
+    pub id: DeviceId,
+    pub platform: PlatformId,
+    pub profile: DeviceProfile,
+}
+
+/// The process-wide device table. Index == `DeviceId.0`.
+pub fn devices() -> &'static [Device] {
+    static TABLE: std::sync::OnceLock<Vec<Device>> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        vec![
+            Device {
+                id: DeviceId(0),
+                platform: PlatformId(0),
+                profile: profile::native_cpu(),
+            },
+            Device {
+                id: DeviceId(1),
+                platform: PlatformId(1),
+                profile: profile::gtx1080_sim(),
+            },
+            Device {
+                id: DeviceId(2),
+                platform: PlatformId(1),
+                profile: profile::hd7970_sim(),
+            },
+        ]
+    })
+}
+
+/// Look up a device by id.
+pub fn device(id: DeviceId) -> Option<&'static Device> {
+    devices().get(id.0 as usize)
+}
+
+/// `clGetDeviceIDs`: list devices of `dtype` on `platform`.
+pub fn get_device_ids(
+    platform: PlatformId,
+    dtype: DeviceType,
+    num_entries: u32,
+    ids: Option<&mut [DeviceId]>,
+    num_devices: Option<&mut u32>,
+) -> ClStatus {
+    let Some(devs) = super::platform::platform_devices(platform) else {
+        return CL_INVALID_PLATFORM;
+    };
+    let matching: Vec<DeviceId> = devs
+        .iter()
+        .filter(|d| {
+            dtype.contains(DeviceType::ALL) && dtype.0 == DeviceType::ALL.0
+                || dtype.intersects(d.profile.device_type)
+        })
+        .map(|d| d.id)
+        .collect();
+    if matching.is_empty() {
+        if let Some(n) = num_devices {
+            *n = 0;
+        }
+        return CL_DEVICE_NOT_FOUND;
+    }
+    if let Some(n) = num_devices {
+        *n = matching.len() as u32;
+    }
+    if let Some(out) = ids {
+        if num_entries == 0 {
+            return CL_INVALID_VALUE;
+        }
+        let n = (num_entries as usize).min(matching.len()).min(out.len());
+        out[..n].copy_from_slice(&matching[..n]);
+    }
+    CL_SUCCESS
+}
+
+/// Encode a device-info value as raw little-endian bytes (strings UTF-8).
+fn encode_info(profile: &DeviceProfile, param: DeviceInfo) -> Vec<u8> {
+    match param {
+        DeviceInfo::Name => profile.name.as_bytes().to_vec(),
+        DeviceInfo::Vendor => profile.vendor.as_bytes().to_vec(),
+        DeviceInfo::Version => profile.version.as_bytes().to_vec(),
+        DeviceInfo::DriverVersion => b"cf4rs 2.1.0".to_vec(),
+        DeviceInfo::Extensions => b"ccl_khr_aot_hlo".to_vec(),
+        DeviceInfo::Type => profile.device_type.0.to_le_bytes().to_vec(),
+        DeviceInfo::MaxComputeUnits => profile.compute_units.to_le_bytes().to_vec(),
+        DeviceInfo::MaxWorkGroupSize => {
+            (profile.max_work_group_size as u64).to_le_bytes().to_vec()
+        }
+        DeviceInfo::PreferredWorkGroupSizeMultiple => {
+            (profile.preferred_wg_multiple as u64).to_le_bytes().to_vec()
+        }
+        DeviceInfo::MaxWorkItemDimensions => {
+            profile.max_work_item_dims.to_le_bytes().to_vec()
+        }
+        DeviceInfo::MaxWorkItemSizes => {
+            let mut v = Vec::with_capacity(24);
+            for d in profile.max_work_item_sizes {
+                v.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            v
+        }
+        DeviceInfo::GlobalMemSize => profile.global_mem_size.to_le_bytes().to_vec(),
+        DeviceInfo::LocalMemSize => profile.local_mem_size.to_le_bytes().to_vec(),
+        DeviceInfo::MaxMemAllocSize => {
+            (profile.global_mem_size / 4).to_le_bytes().to_vec()
+        }
+        DeviceInfo::MaxClockFrequency => profile.max_clock_mhz.to_le_bytes().to_vec(),
+        DeviceInfo::Available => 1u32.to_le_bytes().to_vec(),
+        DeviceInfo::BackendKind => match profile.backend {
+            BackendKind::Native => b"native".to_vec(),
+            BackendKind::Simulated => b"simulated".to_vec(),
+        },
+    }
+}
+
+/// `clGetDeviceInfo`: size/data dance over raw bytes.
+pub fn get_device_info(
+    id: DeviceId,
+    param: DeviceInfo,
+    value: Option<&mut Vec<u8>>,
+    size_ret: Option<&mut usize>,
+) -> ClStatus {
+    let Some(dev) = device(id) else {
+        return CL_INVALID_DEVICE;
+    };
+    let bytes = encode_info(&dev.profile, param);
+    if let Some(sz) = size_ret {
+        *sz = bytes.len();
+    }
+    if let Some(out) = value {
+        out.clear();
+        out.extend_from_slice(&bytes);
+    }
+    CL_SUCCESS
+}
+
+/// Decode helpers for callers of `get_device_info` (the raw API returns
+/// bytes; decoding is the caller's burden, as in OpenCL).
+pub mod decode {
+    pub fn as_string(bytes: &[u8]) -> String {
+        String::from_utf8_lossy(bytes).into_owned()
+    }
+
+    pub fn as_u32(bytes: &[u8]) -> u32 {
+        u32::from_le_bytes(bytes[..4].try_into().unwrap())
+    }
+
+    pub fn as_u64(bytes: &[u8]) -> u64 {
+        u64::from_le_bytes(bytes[..8].try_into().unwrap())
+    }
+
+    pub fn as_usize_vec(bytes: &[u8]) -> Vec<usize> {
+        bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_devices_total() {
+        assert_eq!(devices().len(), 3);
+    }
+
+    #[test]
+    fn gpu_filter_finds_sim_devices_only() {
+        let mut n = 0u32;
+        let st = get_device_ids(PlatformId(1), DeviceType::GPU, 0, None, Some(&mut n));
+        assert_eq!(st, CL_SUCCESS);
+        assert_eq!(n, 2);
+        // Platform 0 has no GPU.
+        let st = get_device_ids(PlatformId(0), DeviceType::GPU, 0, None, Some(&mut n));
+        assert_eq!(st, CL_DEVICE_NOT_FOUND);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn cpu_filter_finds_native() {
+        let mut ids = [DeviceId(99); 4];
+        let mut n = 0u32;
+        let st = get_device_ids(
+            PlatformId(0),
+            DeviceType::CPU,
+            4,
+            Some(&mut ids),
+            Some(&mut n),
+        );
+        assert_eq!(st, CL_SUCCESS);
+        assert_eq!(n, 1);
+        assert_eq!(ids[0], DeviceId(0));
+    }
+
+    #[test]
+    fn all_filter_matches_everything() {
+        let mut n = 0u32;
+        get_device_ids(PlatformId(1), DeviceType::ALL, 0, None, Some(&mut n));
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn info_string_and_numeric() {
+        let mut buf = Vec::new();
+        assert_eq!(
+            get_device_info(DeviceId(1), DeviceInfo::Name, Some(&mut buf), None),
+            CL_SUCCESS
+        );
+        assert_eq!(decode::as_string(&buf), "SimCL GTX 1080");
+        get_device_info(DeviceId(1), DeviceInfo::MaxComputeUnits, Some(&mut buf), None);
+        assert_eq!(decode::as_u32(&buf), 20);
+        get_device_info(
+            DeviceId(2),
+            DeviceInfo::PreferredWorkGroupSizeMultiple,
+            Some(&mut buf),
+            None,
+        );
+        assert_eq!(decode::as_u64(&buf), 64);
+    }
+
+    #[test]
+    fn work_item_sizes_decode() {
+        let mut buf = Vec::new();
+        get_device_info(DeviceId(1), DeviceInfo::MaxWorkItemSizes, Some(&mut buf), None);
+        assert_eq!(decode::as_usize_vec(&buf), vec![1024, 1024, 64]);
+    }
+
+    #[test]
+    fn invalid_device_rejected() {
+        assert_eq!(
+            get_device_info(DeviceId(42), DeviceInfo::Name, None, None),
+            CL_INVALID_DEVICE
+        );
+    }
+}

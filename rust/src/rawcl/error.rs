@@ -1,0 +1,125 @@
+//! OpenCL-style integer status codes.
+//!
+//! The substrate keeps OpenCL's error model verbatim: every API call
+//! returns (or out-params) an `i32`, `0` is success, negative values are
+//! errors. The framework layer ([`crate::ccl::errors`]) is what turns
+//! these into human-readable structured errors — exactly the paper's
+//! split (§4.4 "errors module").
+
+/// Status code type (`cl_int` in OpenCL).
+pub type ClStatus = i32;
+
+pub const CL_SUCCESS: ClStatus = 0;
+pub const CL_DEVICE_NOT_FOUND: ClStatus = -1;
+pub const CL_DEVICE_NOT_AVAILABLE: ClStatus = -2;
+pub const CL_COMPILER_NOT_AVAILABLE: ClStatus = -3;
+pub const CL_MEM_OBJECT_ALLOCATION_FAILURE: ClStatus = -4;
+pub const CL_OUT_OF_RESOURCES: ClStatus = -5;
+pub const CL_OUT_OF_HOST_MEMORY: ClStatus = -6;
+pub const CL_PROFILING_INFO_NOT_AVAILABLE: ClStatus = -7;
+pub const CL_MEM_COPY_OVERLAP: ClStatus = -8;
+pub const CL_BUILD_PROGRAM_FAILURE: ClStatus = -11;
+pub const CL_MISALIGNED_SUB_BUFFER_OFFSET: ClStatus = -13;
+pub const CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST: ClStatus = -14;
+pub const CL_INVALID_VALUE: ClStatus = -30;
+pub const CL_INVALID_DEVICE_TYPE: ClStatus = -31;
+pub const CL_INVALID_PLATFORM: ClStatus = -32;
+pub const CL_INVALID_DEVICE: ClStatus = -33;
+pub const CL_INVALID_CONTEXT: ClStatus = -34;
+pub const CL_INVALID_QUEUE_PROPERTIES: ClStatus = -35;
+pub const CL_INVALID_COMMAND_QUEUE: ClStatus = -36;
+pub const CL_INVALID_MEM_OBJECT: ClStatus = -38;
+pub const CL_INVALID_BINARY: ClStatus = -42;
+pub const CL_INVALID_BUILD_OPTIONS: ClStatus = -43;
+pub const CL_INVALID_PROGRAM: ClStatus = -44;
+pub const CL_INVALID_PROGRAM_EXECUTABLE: ClStatus = -45;
+pub const CL_INVALID_KERNEL_NAME: ClStatus = -46;
+pub const CL_INVALID_KERNEL_DEFINITION: ClStatus = -47;
+pub const CL_INVALID_KERNEL: ClStatus = -48;
+pub const CL_INVALID_ARG_INDEX: ClStatus = -49;
+pub const CL_INVALID_ARG_VALUE: ClStatus = -50;
+pub const CL_INVALID_ARG_SIZE: ClStatus = -51;
+pub const CL_INVALID_KERNEL_ARGS: ClStatus = -52;
+pub const CL_INVALID_WORK_DIMENSION: ClStatus = -53;
+pub const CL_INVALID_WORK_GROUP_SIZE: ClStatus = -54;
+pub const CL_INVALID_WORK_ITEM_SIZE: ClStatus = -55;
+pub const CL_INVALID_GLOBAL_OFFSET: ClStatus = -56;
+pub const CL_INVALID_EVENT_WAIT_LIST: ClStatus = -57;
+pub const CL_INVALID_EVENT: ClStatus = -58;
+pub const CL_INVALID_OPERATION: ClStatus = -59;
+pub const CL_INVALID_BUFFER_SIZE: ClStatus = -61;
+pub const CL_INVALID_GLOBAL_WORK_SIZE: ClStatus = -63;
+
+/// Convert a status code to its symbolic name (the paper's "errors
+/// module" single function, §4.4).
+pub fn status_name(code: ClStatus) -> &'static str {
+    match code {
+        CL_SUCCESS => "CL_SUCCESS",
+        CL_DEVICE_NOT_FOUND => "CL_DEVICE_NOT_FOUND",
+        CL_DEVICE_NOT_AVAILABLE => "CL_DEVICE_NOT_AVAILABLE",
+        CL_COMPILER_NOT_AVAILABLE => "CL_COMPILER_NOT_AVAILABLE",
+        CL_MEM_OBJECT_ALLOCATION_FAILURE => "CL_MEM_OBJECT_ALLOCATION_FAILURE",
+        CL_OUT_OF_RESOURCES => "CL_OUT_OF_RESOURCES",
+        CL_OUT_OF_HOST_MEMORY => "CL_OUT_OF_HOST_MEMORY",
+        CL_PROFILING_INFO_NOT_AVAILABLE => "CL_PROFILING_INFO_NOT_AVAILABLE",
+        CL_MEM_COPY_OVERLAP => "CL_MEM_COPY_OVERLAP",
+        CL_BUILD_PROGRAM_FAILURE => "CL_BUILD_PROGRAM_FAILURE",
+        CL_MISALIGNED_SUB_BUFFER_OFFSET => "CL_MISALIGNED_SUB_BUFFER_OFFSET",
+        CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST => {
+            "CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST"
+        }
+        CL_INVALID_VALUE => "CL_INVALID_VALUE",
+        CL_INVALID_DEVICE_TYPE => "CL_INVALID_DEVICE_TYPE",
+        CL_INVALID_PLATFORM => "CL_INVALID_PLATFORM",
+        CL_INVALID_DEVICE => "CL_INVALID_DEVICE",
+        CL_INVALID_CONTEXT => "CL_INVALID_CONTEXT",
+        CL_INVALID_QUEUE_PROPERTIES => "CL_INVALID_QUEUE_PROPERTIES",
+        CL_INVALID_COMMAND_QUEUE => "CL_INVALID_COMMAND_QUEUE",
+        CL_INVALID_MEM_OBJECT => "CL_INVALID_MEM_OBJECT",
+        CL_INVALID_BINARY => "CL_INVALID_BINARY",
+        CL_INVALID_BUILD_OPTIONS => "CL_INVALID_BUILD_OPTIONS",
+        CL_INVALID_PROGRAM => "CL_INVALID_PROGRAM",
+        CL_INVALID_PROGRAM_EXECUTABLE => "CL_INVALID_PROGRAM_EXECUTABLE",
+        CL_INVALID_KERNEL_NAME => "CL_INVALID_KERNEL_NAME",
+        CL_INVALID_KERNEL_DEFINITION => "CL_INVALID_KERNEL_DEFINITION",
+        CL_INVALID_KERNEL => "CL_INVALID_KERNEL",
+        CL_INVALID_ARG_INDEX => "CL_INVALID_ARG_INDEX",
+        CL_INVALID_ARG_VALUE => "CL_INVALID_ARG_VALUE",
+        CL_INVALID_ARG_SIZE => "CL_INVALID_ARG_SIZE",
+        CL_INVALID_KERNEL_ARGS => "CL_INVALID_KERNEL_ARGS",
+        CL_INVALID_WORK_DIMENSION => "CL_INVALID_WORK_DIMENSION",
+        CL_INVALID_WORK_GROUP_SIZE => "CL_INVALID_WORK_GROUP_SIZE",
+        CL_INVALID_WORK_ITEM_SIZE => "CL_INVALID_WORK_ITEM_SIZE",
+        CL_INVALID_GLOBAL_OFFSET => "CL_INVALID_GLOBAL_OFFSET",
+        CL_INVALID_EVENT_WAIT_LIST => "CL_INVALID_EVENT_WAIT_LIST",
+        CL_INVALID_EVENT => "CL_INVALID_EVENT",
+        CL_INVALID_OPERATION => "CL_INVALID_OPERATION",
+        CL_INVALID_BUFFER_SIZE => "CL_INVALID_BUFFER_SIZE",
+        CL_INVALID_GLOBAL_WORK_SIZE => "CL_INVALID_GLOBAL_WORK_SIZE",
+        _ => "UNKNOWN_CL_ERROR",
+    }
+}
+
+/// True iff `code` signals success.
+pub fn is_success(code: ClStatus) -> bool {
+    code == CL_SUCCESS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_for_known_codes() {
+        assert_eq!(status_name(CL_SUCCESS), "CL_SUCCESS");
+        assert_eq!(status_name(CL_BUILD_PROGRAM_FAILURE), "CL_BUILD_PROGRAM_FAILURE");
+        assert_eq!(status_name(CL_INVALID_KERNEL_ARGS), "CL_INVALID_KERNEL_ARGS");
+        assert_eq!(status_name(-9999), "UNKNOWN_CL_ERROR");
+    }
+
+    #[test]
+    fn success_predicate() {
+        assert!(is_success(CL_SUCCESS));
+        assert!(!is_success(CL_DEVICE_NOT_FOUND));
+    }
+}

@@ -1,0 +1,368 @@
+//! Events: command lifecycle + profiling timestamps.
+//!
+//! Every enqueued command yields an event. Events carry the four OpenCL
+//! profiling instants (QUEUED, SUBMIT, START, END), an execution status
+//! (`CL_QUEUED..CL_COMPLETE` or a negative error), and — as a cf4rs
+//! extension the framework layer builds on — an optional user-assigned
+//! name (`ccl_event_set_name` in the paper).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::clock;
+use super::error::*;
+use super::registry::{self, Obj};
+use super::types::{CommandType, EventH, ProfilingInfo, QueueH, CL_COMPLETE, CL_QUEUED, CL_RUNNING, CL_SUBMITTED};
+
+/// Timestamp slots, indexed by [`ProfilingInfo`].
+#[derive(Default, Clone, Copy)]
+pub struct Timestamps {
+    pub queued: u64,
+    pub submit: u64,
+    pub start: u64,
+    pub end: u64,
+}
+
+struct EventState {
+    status: i32,
+    ts: Timestamps,
+    name: Option<String>,
+}
+
+/// Internal event object.
+pub struct EventObj {
+    pub cmd: CommandType,
+    pub queue: QueueH,
+    /// Whether the owning queue had profiling enabled at enqueue time.
+    pub profiling: bool,
+    state: Mutex<EventState>,
+    cv: Condvar,
+}
+
+impl EventObj {
+    pub fn new(cmd: CommandType, queue: QueueH, profiling: bool) -> Arc<Self> {
+        let ev = Arc::new(Self {
+            cmd,
+            queue,
+            profiling,
+            state: Mutex::new(EventState {
+                status: CL_QUEUED,
+                ts: Timestamps::default(),
+                name: None,
+            }),
+            cv: Condvar::new(),
+        });
+        ev.stamp_queued();
+        ev
+    }
+
+    pub fn stamp_queued(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.ts.queued = clock::now_ns();
+        st.status = CL_QUEUED;
+    }
+
+    pub fn mark_submitted(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.ts.submit = clock::now_ns();
+        st.status = CL_SUBMITTED;
+    }
+
+    pub fn mark_running(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.ts.start = clock::now_ns();
+        st.status = CL_RUNNING;
+    }
+
+    /// Complete successfully (status CL_COMPLETE) or with a negative
+    /// error code; wakes all waiters.
+    pub fn complete(&self, status: i32) {
+        self.complete_at(status, clock::now_ns());
+    }
+
+    /// Complete with an explicit END timestamp. Simulated devices use
+    /// this to report the *model-predicted* duration even when the
+    /// host-side reference execution took longer (DESIGN.md §2: the
+    /// simulated timeline is what the paper's figures depend on).
+    pub fn complete_at(&self, status: i32, end_ns: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.ts.end = end_ns.max(st.ts.start);
+        st.status = if status == CL_SUCCESS { CL_COMPLETE } else { status };
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Block until the event reaches CL_COMPLETE or error; returns the
+    /// final status.
+    pub fn wait(&self) -> i32 {
+        let mut st = self.state.lock().unwrap();
+        while st.status > CL_COMPLETE {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.status
+    }
+
+    pub fn status(&self) -> i32 {
+        self.state.lock().unwrap().status
+    }
+
+    pub fn timestamps(&self) -> Timestamps {
+        self.state.lock().unwrap().ts
+    }
+
+    pub fn set_name(&self, name: &str) {
+        self.state.lock().unwrap().name = Some(name.to_string());
+    }
+
+    /// User name, or the command-type name (paper §4.3 aggregation rule).
+    pub fn display_name(&self) -> String {
+        let st = self.state.lock().unwrap();
+        st.name.clone().unwrap_or_else(|| self.cmd.display_name().to_string())
+    }
+
+    pub fn user_name(&self) -> Option<String> {
+        self.state.lock().unwrap().name.clone()
+    }
+}
+
+/// Register an event and hand out its handle.
+pub fn register(ev: Arc<EventObj>) -> EventH {
+    EventH(registry::insert(Obj::Event(ev)))
+}
+
+/// `clCreateUserEvent`: an event the *host* completes, used to gate
+/// enqueued commands on host-side conditions (cf4ocl wraps these as
+/// `CCLUserEvent`).
+pub fn create_user_event(ctx: super::types::ContextH, status: &mut ClStatus) -> EventH {
+    if super::context::lookup(ctx).is_none() {
+        *status = CL_INVALID_CONTEXT;
+        return EventH::NULL;
+    }
+    let ev = EventObj::new(CommandType::User, QueueH::NULL, false);
+    ev.mark_submitted();
+    *status = CL_SUCCESS;
+    register(ev)
+}
+
+/// `clSetUserEventStatus`: complete a user event with `CL_COMPLETE` (0)
+/// or a negative error. May only be called once per event.
+pub fn set_user_event_status(event: EventH, exec_status: i32) -> ClStatus {
+    let Some(ev) = registry::get_event(event.0) else {
+        return CL_INVALID_EVENT;
+    };
+    if ev.cmd != CommandType::User {
+        return CL_INVALID_EVENT;
+    }
+    if exec_status > 0 {
+        return CL_INVALID_VALUE;
+    }
+    if ev.status() <= CL_COMPLETE {
+        // already terminal
+        return CL_INVALID_OPERATION;
+    }
+    ev.mark_running();
+    ev.complete(exec_status);
+    CL_SUCCESS
+}
+
+/// `clWaitForEvents`.
+pub fn wait_for_events(events: &[EventH]) -> ClStatus {
+    if events.is_empty() {
+        return CL_INVALID_VALUE;
+    }
+    let mut objs = Vec::with_capacity(events.len());
+    for &e in events {
+        match registry::get_event(e.0) {
+            Some(o) => objs.push(o),
+            None => return CL_INVALID_EVENT,
+        }
+    }
+    let mut worst = CL_SUCCESS;
+    for o in objs {
+        let st = o.wait();
+        if st < 0 {
+            worst = CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST;
+        }
+    }
+    worst
+}
+
+/// `clGetEventProfilingInfo`.
+pub fn get_event_profiling_info(
+    event: EventH,
+    param: ProfilingInfo,
+    value: &mut u64,
+) -> ClStatus {
+    let Some(ev) = registry::get_event(event.0) else {
+        return CL_INVALID_EVENT;
+    };
+    if !ev.profiling {
+        return CL_PROFILING_INFO_NOT_AVAILABLE;
+    }
+    if ev.status() != CL_COMPLETE {
+        return CL_PROFILING_INFO_NOT_AVAILABLE;
+    }
+    let ts = ev.timestamps();
+    *value = match param {
+        ProfilingInfo::Queued => ts.queued,
+        ProfilingInfo::Submit => ts.submit,
+        ProfilingInfo::Start => ts.start,
+        ProfilingInfo::End => ts.end,
+    };
+    CL_SUCCESS
+}
+
+/// `clGetEventInfo` subset: command type + status.
+pub fn get_event_command_type(event: EventH, out: &mut CommandType) -> ClStatus {
+    let Some(ev) = registry::get_event(event.0) else {
+        return CL_INVALID_EVENT;
+    };
+    *out = ev.cmd;
+    CL_SUCCESS
+}
+
+pub fn get_event_status(event: EventH, out: &mut i32) -> ClStatus {
+    let Some(ev) = registry::get_event(event.0) else {
+        return CL_INVALID_EVENT;
+    };
+    *out = ev.status();
+    CL_SUCCESS
+}
+
+/// cf4rs extension: name an event for profiling aggregation.
+pub fn set_event_name(event: EventH, name: &str) -> ClStatus {
+    let Some(ev) = registry::get_event(event.0) else {
+        return CL_INVALID_EVENT;
+    };
+    ev.set_name(name);
+    CL_SUCCESS
+}
+
+pub fn retain_event(event: EventH) -> ClStatus {
+    if registry::get_event(event.0).is_none() {
+        return CL_INVALID_EVENT;
+    }
+    if registry::retain(event.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_EVENT
+    }
+}
+
+pub fn release_event(event: EventH) -> ClStatus {
+    if registry::get_event(event.0).is_none() {
+        return CL_INVALID_EVENT;
+    }
+    if registry::release(event.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_EVENT
+    }
+}
+
+pub(crate) fn lookup(event: EventH) -> Option<Arc<EventObj>> {
+    registry::get_event(event.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make(profiling: bool) -> (EventH, Arc<EventObj>) {
+        let ev = EventObj::new(CommandType::NdRangeKernel, QueueH(7), profiling);
+        (register(ev.clone()), ev)
+    }
+
+    #[test]
+    fn lifecycle_timestamps_are_ordered() {
+        let (h, ev) = make(true);
+        ev.mark_submitted();
+        ev.mark_running();
+        ev.complete(CL_SUCCESS);
+        let ts = ev.timestamps();
+        assert!(ts.queued <= ts.submit);
+        assert!(ts.submit <= ts.start);
+        assert!(ts.start <= ts.end);
+        let mut v = 0u64;
+        assert_eq!(get_event_profiling_info(h, ProfilingInfo::End, &mut v), CL_SUCCESS);
+        assert_eq!(v, ts.end);
+        release_event(h);
+    }
+
+    #[test]
+    fn profiling_unavailable_without_flag() {
+        let (h, ev) = make(false);
+        ev.complete(CL_SUCCESS);
+        let mut v = 0u64;
+        assert_eq!(
+            get_event_profiling_info(h, ProfilingInfo::Start, &mut v),
+            CL_PROFILING_INFO_NOT_AVAILABLE
+        );
+        release_event(h);
+    }
+
+    #[test]
+    fn profiling_unavailable_before_completion() {
+        let (h, _ev) = make(true);
+        let mut v = 0u64;
+        assert_eq!(
+            get_event_profiling_info(h, ProfilingInfo::Start, &mut v),
+            CL_PROFILING_INFO_NOT_AVAILABLE
+        );
+        release_event(h);
+    }
+
+    #[test]
+    fn wait_unblocks_on_complete() {
+        let (h, ev) = make(true);
+        let ev2 = ev.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            ev2.mark_submitted();
+            ev2.mark_running();
+            ev2.complete(CL_SUCCESS);
+        });
+        assert_eq!(wait_for_events(&[h]), CL_SUCCESS);
+        t.join().unwrap();
+        release_event(h);
+    }
+
+    #[test]
+    fn wait_propagates_errors() {
+        let (h, ev) = make(true);
+        ev.complete(CL_OUT_OF_RESOURCES);
+        assert_eq!(
+            wait_for_events(&[h]),
+            CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST
+        );
+        release_event(h);
+    }
+
+    #[test]
+    fn naming_and_default_name() {
+        let (h, ev) = make(true);
+        assert_eq!(ev.display_name(), "NDRANGE_KERNEL");
+        assert_eq!(set_event_name(h, "RNG_KERNEL"), CL_SUCCESS);
+        assert_eq!(ev.display_name(), "RNG_KERNEL");
+        assert_eq!(ev.user_name().as_deref(), Some("RNG_KERNEL"));
+        ev.complete(CL_SUCCESS);
+        release_event(h);
+    }
+
+    #[test]
+    fn empty_wait_list_invalid() {
+        assert_eq!(wait_for_events(&[]), CL_INVALID_VALUE);
+    }
+
+    #[test]
+    fn dead_event_invalid() {
+        let (h, ev) = make(true);
+        ev.complete(CL_SUCCESS);
+        release_event(h);
+        let mut v = 0u64;
+        assert_eq!(
+            get_event_profiling_info(h, ProfilingInfo::End, &mut v),
+            CL_INVALID_EVENT
+        );
+        assert_eq!(wait_for_events(&[h]), CL_INVALID_EVENT);
+    }
+}

@@ -1,0 +1,284 @@
+//! HLO-text header parsing — "kernel source" introspection.
+//!
+//! A `rawcl` program source is the text of one HLO module. This parser
+//! extracts the module name and entry signature from the first line:
+//!
+//! ```text
+//! HloModule jit_prng_step, entry_computation_layout={(u64[4096]{0})->(u64[4096]{0})}
+//! ```
+//!
+//! which is everything the substrate needs to expose kernels by name and
+//! validate kernel arguments — the analogue of what an OpenCL driver
+//! learns when it parses a `.cl` source.
+
+use crate::runtime::literal::ElemType;
+
+/// One parameter or result slot of the entry computation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub dtype: ElemType,
+    /// Dimensions; empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// Parsed module header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloMeta {
+    /// Module name with any `jit_` prefix stripped — the "kernel name".
+    pub name: String,
+    pub params: Vec<TensorMeta>,
+    pub results: Vec<TensorMeta>,
+}
+
+impl HloMeta {
+    /// Principal problem size: the element count of the first result.
+    pub fn problem_size(&self) -> usize {
+        self.results.first().map(|r| r.element_count()).unwrap_or(0)
+    }
+}
+
+/// Error type for header parsing (plain string detail; the substrate maps
+/// it to `CL_INVALID_BINARY` / build-log entries).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "HLO header parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(msg: impl Into<String>) -> ParseError {
+    ParseError(msg.into())
+}
+
+/// Parse the `HloModule` header line of an HLO text module.
+pub fn parse_header(text: &str) -> Result<HloMeta, ParseError> {
+    let line = text
+        .lines()
+        .find(|l| !l.trim().is_empty())
+        .ok_or_else(|| err("empty module text"))?;
+    let rest = line
+        .strip_prefix("HloModule ")
+        .ok_or_else(|| err(format!("first line is not an HloModule header: {line:?}")))?;
+
+    // Module name: up to the first ',' (or whole line if no attributes).
+    let (raw_name, attrs) = match rest.find(',') {
+        Some(i) => (&rest[..i], &rest[i + 1..]),
+        None => (rest, ""),
+    };
+    let name = raw_name
+        .trim()
+        .strip_prefix("jit_")
+        .unwrap_or(raw_name.trim())
+        .to_string();
+    if name.is_empty() {
+        return Err(err("empty module name"));
+    }
+
+    // entry_computation_layout={(...)->(...)}
+    let marker = "entry_computation_layout={";
+    let Some(start) = attrs.find(marker) else {
+        // Hand-written modules may omit the layout — treat as no-signature.
+        return Ok(HloMeta { name, params: vec![], results: vec![] });
+    };
+    let sig = &attrs[start + marker.len()..];
+    let end = matching_brace(sig)
+        .ok_or_else(|| err("unterminated entry_computation_layout"))?;
+    let sig = &sig[..end];
+    let arrow = sig
+        .find("->")
+        .ok_or_else(|| err("no -> in entry_computation_layout"))?;
+    let params = parse_tensor_list(&sig[..arrow])?;
+    let results = parse_tensor_list(&sig[arrow + 2..])?;
+    Ok(HloMeta { name, params, results })
+}
+
+/// Index of the `}` closing the layout (the layout itself contains `{0}`
+/// layout annotations, so we must count depth).
+fn matching_brace(s: &str) -> Option<usize> {
+    let mut depth = 1usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse `(u64[4096]{0}, f32[])` — a parenthesised tensor list.
+fn parse_tensor_list(s: &str) -> Result<Vec<TensorMeta>, ParseError> {
+    let s = s.trim();
+    let s = s
+        .strip_prefix('(')
+        .and_then(|t| t.strip_suffix(')'))
+        .ok_or_else(|| err(format!("tensor list not parenthesised: {s:?}")))?;
+    let mut out = Vec::new();
+    for part in split_top_level(s) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse_tensor(part)?);
+    }
+    Ok(out)
+}
+
+/// Split on commas that are not inside `[]`/`{}` groups.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' | '{' | '(' => depth += 1,
+            ']' | '}' | ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+/// Parse `u64[4096]{0}` / `f32[]` / `f32[2,3]{1,0}`.
+fn parse_tensor(s: &str) -> Result<TensorMeta, ParseError> {
+    let bracket = s
+        .find('[')
+        .ok_or_else(|| err(format!("no dims bracket in tensor {s:?}")))?;
+    let dtype = ElemType::parse(&s[..bracket])
+        .map_err(|e| err(format!("tensor {s:?}: {e}")))?;
+    let rest = &s[bracket + 1..];
+    let close = rest
+        .find(']')
+        .ok_or_else(|| err(format!("unterminated dims in tensor {s:?}")))?;
+    let dims_str = &rest[..close];
+    let dims = if dims_str.is_empty() {
+        vec![]
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| err(format!("bad dim {d:?} in tensor {s:?}")))
+            })
+            .collect::<Result<Vec<_>, _>>()?
+    };
+    Ok(TensorMeta { dtype, dims })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_rng_header() {
+        let m = parse_header(
+            "HloModule jit_prng_step, entry_computation_layout=\
+             {(u64[4096]{0})->(u64[4096]{0})}\n\nENTRY e {}\n",
+        )
+        .unwrap();
+        assert_eq!(m.name, "prng_step");
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.params[0].dims, vec![4096]);
+        assert_eq!(m.params[0].dtype, ElemType::U64);
+        assert_eq!(m.problem_size(), 4096);
+    }
+
+    #[test]
+    fn parses_no_param_init() {
+        let m = parse_header(
+            "HloModule jit_prng_init, entry_computation_layout={()->(u64[1024]{0})}",
+        )
+        .unwrap();
+        assert_eq!(m.name, "prng_init");
+        assert!(m.params.is_empty());
+        assert_eq!(m.results[0].element_count(), 1024);
+    }
+
+    #[test]
+    fn parses_scalar_param_saxpy() {
+        let m = parse_header(
+            "HloModule jit_saxpy, entry_computation_layout=\
+             {(f32[], f32[1024]{0}, f32[1024]{0})->(f32[1024]{0})}",
+        )
+        .unwrap();
+        assert_eq!(m.name, "saxpy");
+        assert_eq!(m.params.len(), 3);
+        assert!(m.params[0].is_scalar());
+        assert_eq!(m.params[0].byte_len(), 4);
+        assert_eq!(m.params[1].element_count(), 1024);
+    }
+
+    #[test]
+    fn parses_multidim() {
+        let m = parse_header(
+            "HloModule jit_mm, entry_computation_layout=\
+             {(f32[2,3]{1,0})->(f32[3,2]{1,0})}",
+        )
+        .unwrap();
+        assert_eq!(m.params[0].dims, vec![2, 3]);
+        assert_eq!(m.results[0].element_count(), 6);
+    }
+
+    #[test]
+    fn header_without_layout_is_tolerated() {
+        let m = parse_header("HloModule handwritten\nENTRY e {}\n").unwrap();
+        assert_eq!(m.name, "handwritten");
+        assert!(m.params.is_empty() && m.results.is_empty());
+    }
+
+    #[test]
+    fn rejects_non_hlo_text() {
+        assert!(parse_header("__kernel void rng() {}").is_err());
+        assert!(parse_header("").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let r = parse_header(
+            "HloModule m, entry_computation_layout={(c128[4]{0})->(c128[4]{0})}",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_when_present() {
+        let Ok(man) = crate::runtime::Manifest::discover() else { return };
+        for art in man.iter_sorted() {
+            let text = std::fs::read_to_string(&art.path).unwrap();
+            let meta = parse_header(&text).unwrap();
+            assert_eq!(meta.problem_size(), art.n, "artifact {}", art.name);
+            assert_eq!(meta.params.len(), art.num_inputs, "artifact {}", art.name);
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Image memory objects (`cl_mem` images) — the substrate behind the
+//! paper's `CCLImage` class (Fig. 1: `CCLMemObj` ⇐ `CCLBuffer`/`CCLImage`).
+//!
+//! 2D images only, with a small format set; images here are host-side
+//! structured memory with rectangular (origin/region) transfers — the
+//! part of the OpenCL image API the wrapper hierarchy actually models.
+//! No kernel in the PRNG application samples images (true of the paper's
+//! example as well); they are exercised through transfer commands.
+
+use std::sync::Arc;
+
+use super::buffer::BufferObj;
+use super::context;
+use super::error::*;
+use super::registry::{self, Obj};
+use super::types::{ContextH, MemFlags, MemH};
+
+/// Supported image channel formats.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum ImageFormat {
+    /// Single channel, 8-bit unsigned (CL_R / CL_UNSIGNED_INT8).
+    R_U8,
+    /// Single channel, 32-bit float (CL_R / CL_FLOAT).
+    R_F32,
+    /// Four channels, 8-bit unsigned (CL_RGBA / CL_UNORM_INT8).
+    RGBA_U8,
+    /// Four channels, 32-bit float (CL_RGBA / CL_FLOAT).
+    RGBA_F32,
+}
+
+impl ImageFormat {
+    /// Bytes per pixel.
+    pub fn pixel_size(self) -> usize {
+        match self {
+            Self::R_U8 => 1,
+            Self::R_F32 => 4,
+            Self::RGBA_U8 => 4,
+            Self::RGBA_F32 => 16,
+        }
+    }
+}
+
+/// 2D image descriptor.
+#[derive(Copy, Clone, Debug)]
+pub struct ImageDesc {
+    pub format: ImageFormat,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl ImageDesc {
+    pub fn row_pitch(&self) -> usize {
+        self.width * self.format.pixel_size()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.row_pitch() * self.height
+    }
+}
+
+/// Internal image object: a buffer plus 2D shape metadata. Sharing the
+/// buffer body mirrors how cf4ocl factors common `CCLMemObj` behaviour.
+pub struct ImageObj {
+    pub desc: ImageDesc,
+    pub mem: BufferObj,
+}
+
+/// `clCreateImage` (2D).
+pub fn create_image2d(
+    ctx: ContextH,
+    flags: MemFlags,
+    desc: ImageDesc,
+    host_data: Option<&[u8]>,
+    status: &mut ClStatus,
+) -> MemH {
+    if context::lookup(ctx).is_none() {
+        *status = CL_INVALID_CONTEXT;
+        return MemH::NULL;
+    }
+    if desc.width == 0 || desc.height == 0 {
+        *status = CL_INVALID_VALUE;
+        return MemH::NULL;
+    }
+    let len = desc.byte_len();
+    let wants_copy = flags.contains(MemFlags::COPY_HOST_PTR);
+    if wants_copy != host_data.is_some() {
+        *status = CL_INVALID_VALUE;
+        return MemH::NULL;
+    }
+    let data = match host_data {
+        Some(src) if src.len() == len => src.to_vec(),
+        Some(_) => {
+            *status = CL_INVALID_VALUE;
+            return MemH::NULL;
+        }
+        None => vec![0u8; len],
+    };
+    let obj = Arc::new(ImageObj {
+        desc,
+        mem: BufferObj {
+            ctx,
+            flags,
+            size: len,
+            data: std::sync::Mutex::new(data),
+        },
+    });
+    *status = CL_SUCCESS;
+    MemH(registry::insert(Obj::Image(obj)))
+}
+
+/// Validate an (origin, region) rectangle against the image bounds.
+fn check_rect(desc: &ImageDesc, origin: (usize, usize), region: (usize, usize)) -> bool {
+    region.0 > 0
+        && region.1 > 0
+        && origin.0 + region.0 <= desc.width
+        && origin.1 + region.1 <= desc.height
+}
+
+/// Row-by-row rectangular copy out of the image into `dst` (tightly
+/// packed rows). Returns false on bounds errors.
+pub(crate) fn read_rect(
+    img: &ImageObj,
+    origin: (usize, usize),
+    region: (usize, usize),
+    dst: &mut [u8],
+) -> bool {
+    if !check_rect(&img.desc, origin, region) {
+        return false;
+    }
+    let ps = img.desc.format.pixel_size();
+    let row_bytes = region.0 * ps;
+    if dst.len() != row_bytes * region.1 {
+        return false;
+    }
+    let data = img.mem.data.lock().unwrap();
+    let pitch = img.desc.row_pitch();
+    for r in 0..region.1 {
+        let src_off = (origin.1 + r) * pitch + origin.0 * ps;
+        dst[r * row_bytes..(r + 1) * row_bytes]
+            .copy_from_slice(&data[src_off..src_off + row_bytes]);
+    }
+    true
+}
+
+/// Row-by-row rectangular copy from `src` (tightly packed) into the image.
+pub(crate) fn write_rect(
+    img: &ImageObj,
+    origin: (usize, usize),
+    region: (usize, usize),
+    src: &[u8],
+) -> bool {
+    if !check_rect(&img.desc, origin, region) {
+        return false;
+    }
+    let ps = img.desc.format.pixel_size();
+    let row_bytes = region.0 * ps;
+    if src.len() != row_bytes * region.1 {
+        return false;
+    }
+    let mut data = img.mem.data.lock().unwrap();
+    let pitch = img.desc.row_pitch();
+    for r in 0..region.1 {
+        let dst_off = (origin.1 + r) * pitch + origin.0 * ps;
+        data[dst_off..dst_off + row_bytes]
+            .copy_from_slice(&src[r * row_bytes..(r + 1) * row_bytes]);
+    }
+    true
+}
+
+/// Fill a rectangle with one pixel value.
+pub(crate) fn fill_rect(
+    img: &ImageObj,
+    origin: (usize, usize),
+    region: (usize, usize),
+    pixel: &[u8],
+) -> bool {
+    let ps = img.desc.format.pixel_size();
+    if pixel.len() != ps || !check_rect(&img.desc, origin, region) {
+        return false;
+    }
+    let mut data = img.mem.data.lock().unwrap();
+    let pitch = img.desc.row_pitch();
+    for r in 0..region.1 {
+        for c in 0..region.0 {
+            let off = (origin.1 + r) * pitch + (origin.0 + c) * ps;
+            data[off..off + ps].copy_from_slice(pixel);
+        }
+    }
+    true
+}
+
+/// `clGetImageInfo` subset.
+pub fn get_image_desc(mem: MemH, out: &mut Option<ImageDesc>) -> ClStatus {
+    let Some(img) = registry::get_image(mem.0) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    *out = Some(img.desc);
+    CL_SUCCESS
+}
+
+pub fn retain_image(mem: MemH) -> ClStatus {
+    if registry::get_image(mem.0).is_none() {
+        return CL_INVALID_MEM_OBJECT;
+    }
+    if registry::retain(mem.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_MEM_OBJECT
+    }
+}
+
+pub fn release_image(mem: MemH) -> ClStatus {
+    if registry::get_image(mem.0).is_none() {
+        return CL_INVALID_MEM_OBJECT;
+    }
+    if registry::release(mem.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_MEM_OBJECT
+    }
+}
+
+pub(crate) fn lookup(mem: MemH) -> Option<Arc<ImageObj>> {
+    registry::get_image(mem.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::types::DeviceId;
+
+    fn ctx() -> ContextH {
+        let mut st = CL_SUCCESS;
+        context::create_context(&[DeviceId(1)], &mut st)
+    }
+
+    fn desc() -> ImageDesc {
+        ImageDesc { format: ImageFormat::R_U8, width: 8, height: 4 }
+    }
+
+    #[test]
+    fn create_and_describe() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let img = create_image2d(c, MemFlags::READ_WRITE, desc(), None, &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        let mut d = None;
+        assert_eq!(get_image_desc(img, &mut d), CL_SUCCESS);
+        assert_eq!(d.unwrap().byte_len(), 32);
+        release_image(img);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn rect_roundtrip() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let img = create_image2d(c, MemFlags::READ_WRITE, desc(), None, &mut st);
+        let obj = lookup(img).unwrap();
+        // write a 2x2 block at (3,1)
+        assert!(write_rect(&obj, (3, 1), (2, 2), &[1, 2, 3, 4]));
+        let mut out = vec![0u8; 4];
+        assert!(read_rect(&obj, (3, 1), (2, 2), &mut out));
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        // pixels outside the rect untouched
+        let mut full = vec![0u8; 32];
+        assert!(read_rect(&obj, (0, 0), (8, 4), &mut full));
+        assert_eq!(full.iter().filter(|&&b| b != 0).count(), 4);
+        release_image(img);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn fill_rect_sets_pixels() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let d = ImageDesc { format: ImageFormat::RGBA_U8, width: 4, height: 4 };
+        let img = create_image2d(c, MemFlags::READ_WRITE, d, None, &mut st);
+        let obj = lookup(img).unwrap();
+        assert!(fill_rect(&obj, (1, 1), (2, 2), &[9, 8, 7, 6]));
+        let mut out = vec![0u8; 4];
+        assert!(read_rect(&obj, (2, 2), (1, 1), &mut out));
+        assert_eq!(out, vec![9, 8, 7, 6]);
+        // wrong pixel size rejected
+        assert!(!fill_rect(&obj, (0, 0), (1, 1), &[1, 2]));
+        release_image(img);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn bounds_violations_rejected() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let img = create_image2d(c, MemFlags::READ_WRITE, desc(), None, &mut st);
+        let obj = lookup(img).unwrap();
+        let mut out = vec![0u8; 8];
+        assert!(!read_rect(&obj, (7, 0), (2, 4), &mut out), "x overflow");
+        assert!(!read_rect(&obj, (0, 3), (2, 4), &mut out), "y overflow");
+        assert!(!read_rect(&obj, (0, 0), (0, 1), &mut out), "zero region");
+        // dst size mismatch
+        let mut small = vec![0u8; 3];
+        assert!(!read_rect(&obj, (0, 0), (2, 2), &mut small));
+        release_image(img);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn host_ptr_init_and_validation() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let data: Vec<u8> = (0..32).collect();
+        let img = create_image2d(
+            c,
+            MemFlags::READ_WRITE | MemFlags::COPY_HOST_PTR,
+            desc(),
+            Some(&data),
+            &mut st,
+        );
+        assert_eq!(st, CL_SUCCESS);
+        let obj = lookup(img).unwrap();
+        let mut out = vec![0u8; 8];
+        assert!(read_rect(&obj, (0, 1), (8, 1), &mut out));
+        assert_eq!(out, (8..16).collect::<Vec<u8>>());
+        // wrong-sized host data
+        let bad = create_image2d(
+            c,
+            MemFlags::READ_WRITE | MemFlags::COPY_HOST_PTR,
+            desc(),
+            Some(&[0u8; 5]),
+            &mut st,
+        );
+        assert!(bad.is_null());
+        assert_eq!(st, CL_INVALID_VALUE);
+        release_image(img);
+        context::release_context(c);
+    }
+
+    #[test]
+    fn buffer_and_image_handles_are_distinct_types() {
+        let c = ctx();
+        let mut st = CL_SUCCESS;
+        let img = create_image2d(c, MemFlags::READ_WRITE, desc(), None, &mut st);
+        // a buffer lookup on an image handle must fail (CL_INVALID_MEM_OBJECT)
+        assert!(crate::rawcl::buffer::lookup(img).is_none());
+        assert!(lookup(img).is_some());
+        release_image(img);
+        context::release_context(c);
+    }
+}

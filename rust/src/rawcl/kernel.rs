@@ -1,0 +1,299 @@
+//! Kernel objects: argument state + work-group queries.
+//!
+//! `clSetKernelArg` is stateful and positional; the queue snapshots the
+//! argument vector at enqueue time (so the host may immediately reuse the
+//! kernel object, as the paper's double-buffering loop does).
+
+use std::sync::{Arc, Mutex};
+
+use super::device;
+use super::error::*;
+use super::kernelspec::ArgRole;
+use super::program::{self, BuiltKernel};
+use super::registry::{self, Obj};
+use super::types::{DeviceId, KernelH, KernelWorkGroupInfo, MemH, ProgramH};
+
+/// A value set for one argument slot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    Buffer(MemH),
+    /// Private scalar passed by bytes (like `clSetKernelArg(size, ptr)`).
+    Scalar(Vec<u8>),
+}
+
+/// Internal kernel object.
+pub struct KernelObj {
+    pub built: BuiltKernel,
+    pub program: ProgramH,
+    args: Mutex<Vec<Option<ArgValue>>>,
+}
+
+impl KernelObj {
+    pub fn snapshot_args(&self) -> Vec<Option<ArgValue>> {
+        self.args.lock().unwrap().clone()
+    }
+}
+
+/// `clCreateKernel`.
+pub fn create_kernel(prg: ProgramH, name: &str, status: &mut ClStatus) -> KernelH {
+    let Some(p) = program::lookup(prg) else {
+        *status = CL_INVALID_PROGRAM;
+        return KernelH::NULL;
+    };
+    if p.build_status() != program::BuildStatus::Success {
+        *status = CL_INVALID_PROGRAM_EXECUTABLE;
+        return KernelH::NULL;
+    }
+    let Some(built) = p.kernel(name) else {
+        *status = CL_INVALID_KERNEL_NAME;
+        return KernelH::NULL;
+    };
+    let nargs = built.spec.num_args();
+    let obj = Arc::new(KernelObj {
+        built,
+        program: prg,
+        args: Mutex::new(vec![None; nargs]),
+    });
+    *status = CL_SUCCESS;
+    KernelH(registry::insert(Obj::Kernel(obj)))
+}
+
+/// `clCreateKernelsInProgram`.
+pub fn create_kernels_in_program(prg: ProgramH, out: &mut Vec<KernelH>) -> ClStatus {
+    let Some(p) = program::lookup(prg) else {
+        return CL_INVALID_PROGRAM;
+    };
+    if p.build_status() != program::BuildStatus::Success {
+        return CL_INVALID_PROGRAM_EXECUTABLE;
+    }
+    out.clear();
+    for name in p.kernel_names() {
+        let mut st = CL_SUCCESS;
+        let k = create_kernel(prg, &name, &mut st);
+        if st != CL_SUCCESS {
+            return st;
+        }
+        out.push(k);
+    }
+    CL_SUCCESS
+}
+
+/// `clSetKernelArg` — validates index, size, and role compatibility.
+pub fn set_kernel_arg(kernel: KernelH, index: usize, value: &ArgValue) -> ClStatus {
+    let Some(k) = registry::get_kernel(kernel.0) else {
+        return CL_INVALID_KERNEL;
+    };
+    let Some(role) = k.built.spec.args.get(index) else {
+        return CL_INVALID_ARG_INDEX;
+    };
+    match (role, value) {
+        (ArgRole::BufferInput { .. } | ArgRole::BufferOutput { .. }, ArgValue::Buffer(m)) => {
+            if super::buffer::lookup(*m).is_none() {
+                return CL_INVALID_ARG_VALUE;
+            }
+        }
+        (ArgRole::BakedScalar { bytes, .. }, ArgValue::Scalar(v)) => {
+            if v.len() != *bytes {
+                return CL_INVALID_ARG_SIZE;
+            }
+        }
+        (ArgRole::ScalarInput { dtype }, ArgValue::Scalar(v)) => {
+            if v.len() != dtype.size_bytes() {
+                return CL_INVALID_ARG_SIZE;
+            }
+        }
+        _ => return CL_INVALID_ARG_VALUE,
+    }
+    k.args.lock().unwrap()[index] = Some(value.clone());
+    CL_SUCCESS
+}
+
+/// `clGetKernelWorkGroupInfo`.
+pub fn get_kernel_work_group_info(
+    kernel: KernelH,
+    dev: DeviceId,
+    param: KernelWorkGroupInfo,
+    value: &mut usize,
+) -> ClStatus {
+    if registry::get_kernel(kernel.0).is_none() {
+        return CL_INVALID_KERNEL;
+    }
+    let Some(d) = device::device(dev) else {
+        return CL_INVALID_DEVICE;
+    };
+    *value = match param {
+        KernelWorkGroupInfo::WorkGroupSize => d.profile.max_work_group_size,
+        KernelWorkGroupInfo::PreferredWorkGroupSizeMultiple => {
+            d.profile.preferred_wg_multiple
+        }
+    };
+    CL_SUCCESS
+}
+
+/// `clGetKernelInfo(CL_KERNEL_FUNCTION_NAME | CL_KERNEL_NUM_ARGS)`.
+pub fn get_kernel_function_name(kernel: KernelH, name: &mut String) -> ClStatus {
+    let Some(k) = registry::get_kernel(kernel.0) else {
+        return CL_INVALID_KERNEL;
+    };
+    *name = k.built.spec.name.clone();
+    CL_SUCCESS
+}
+
+pub fn get_kernel_num_args(kernel: KernelH, num: &mut usize) -> ClStatus {
+    let Some(k) = registry::get_kernel(kernel.0) else {
+        return CL_INVALID_KERNEL;
+    };
+    *num = k.built.spec.num_args();
+    CL_SUCCESS
+}
+
+pub fn retain_kernel(kernel: KernelH) -> ClStatus {
+    if registry::get_kernel(kernel.0).is_none() {
+        return CL_INVALID_KERNEL;
+    }
+    if registry::retain(kernel.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_KERNEL
+    }
+}
+
+pub fn release_kernel(kernel: KernelH) -> ClStatus {
+    if registry::get_kernel(kernel.0).is_none() {
+        return CL_INVALID_KERNEL;
+    }
+    if registry::release(kernel.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_KERNEL
+    }
+}
+
+pub(crate) fn lookup(kernel: KernelH) -> Option<Arc<KernelObj>> {
+    registry::get_kernel(kernel.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::buffer;
+    use crate::rawcl::context;
+    use crate::rawcl::program::{build_program, create_program_with_source};
+    use crate::rawcl::types::{ContextH, DeviceType, MemFlags};
+    use crate::runtime::Manifest;
+
+    fn rng_kernel() -> Option<(ContextH, ProgramH, KernelH)> {
+        let man = Manifest::discover().ok()?;
+        let src = std::fs::read_to_string(&man.get("rng_n4096")?.path).ok()?;
+        let mut st = CL_SUCCESS;
+        let ctx = context::create_context_from_type(DeviceType::GPU, &mut st);
+        let prg = create_program_with_source(ctx, &[src], &mut st);
+        assert_eq!(build_program(prg, None, ""), CL_SUCCESS);
+        let k = create_kernel(prg, "prng_step", &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        Some((ctx, prg, k))
+    }
+
+    #[test]
+    fn create_by_name_and_unknown_name() {
+        let Some((ctx, prg, k)) = rng_kernel() else { return };
+        let mut st = CL_SUCCESS;
+        let bad = create_kernel(prg, "nope", &mut st);
+        assert!(bad.is_null());
+        assert_eq!(st, CL_INVALID_KERNEL_NAME);
+        let mut name = String::new();
+        get_kernel_function_name(k, &mut name);
+        assert_eq!(name, "prng_step");
+        let mut n = 0usize;
+        get_kernel_num_args(k, &mut n);
+        assert_eq!(n, 3);
+        release_kernel(k);
+        program::release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn unbuilt_program_has_no_kernels() {
+        let Ok(man) = Manifest::discover() else { return };
+        let src = std::fs::read_to_string(&man.get("rng_n4096").unwrap().path).unwrap();
+        let mut st = CL_SUCCESS;
+        let ctx = context::create_context_from_type(DeviceType::GPU, &mut st);
+        let prg = create_program_with_source(ctx, &[src], &mut st);
+        let k = create_kernel(prg, "prng_step", &mut st);
+        assert!(k.is_null());
+        assert_eq!(st, CL_INVALID_PROGRAM_EXECUTABLE);
+        program::release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn set_args_validation() {
+        let Some((ctx, prg, k)) = rng_kernel() else { return };
+        let mut st = CL_SUCCESS;
+        let buf = buffer::create_buffer(ctx, MemFlags::READ_WRITE, 4096 * 8, None, &mut st);
+
+        // scalar into arg 0 (nseeds): must be 4 bytes
+        assert_eq!(
+            set_kernel_arg(k, 0, &ArgValue::Scalar(4096u32.to_le_bytes().to_vec())),
+            CL_SUCCESS
+        );
+        assert_eq!(
+            set_kernel_arg(k, 0, &ArgValue::Scalar(vec![0u8; 8])),
+            CL_INVALID_ARG_SIZE
+        );
+        // buffer into scalar slot
+        assert_eq!(set_kernel_arg(k, 0, &ArgValue::Buffer(buf)), CL_INVALID_ARG_VALUE);
+        // buffer args
+        assert_eq!(set_kernel_arg(k, 1, &ArgValue::Buffer(buf)), CL_SUCCESS);
+        assert_eq!(set_kernel_arg(k, 2, &ArgValue::Buffer(buf)), CL_SUCCESS);
+        // out-of-range index
+        assert_eq!(
+            set_kernel_arg(k, 3, &ArgValue::Scalar(vec![0u8; 4])),
+            CL_INVALID_ARG_INDEX
+        );
+        // dead buffer
+        buffer::release_mem_object(buf);
+        assert_eq!(set_kernel_arg(k, 1, &ArgValue::Buffer(buf)), CL_INVALID_ARG_VALUE);
+
+        release_kernel(k);
+        program::release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn work_group_info_reflects_device() {
+        let Some((ctx, prg, k)) = rng_kernel() else { return };
+        let mut v = 0usize;
+        get_kernel_work_group_info(
+            k,
+            DeviceId(1),
+            KernelWorkGroupInfo::PreferredWorkGroupSizeMultiple,
+            &mut v,
+        );
+        assert_eq!(v, 32);
+        get_kernel_work_group_info(k, DeviceId(2), KernelWorkGroupInfo::WorkGroupSize, &mut v);
+        assert_eq!(v, 256);
+        release_kernel(k);
+        program::release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn kernels_in_program() {
+        let Ok(man) = Manifest::discover() else { return };
+        let a = std::fs::read_to_string(&man.get("init_n4096").unwrap().path).unwrap();
+        let b = std::fs::read_to_string(&man.get("rng_n4096").unwrap().path).unwrap();
+        let mut st = CL_SUCCESS;
+        let ctx = context::create_context_from_type(DeviceType::GPU, &mut st);
+        let prg = create_program_with_source(ctx, &[a, b], &mut st);
+        build_program(prg, None, "");
+        let mut ks = Vec::new();
+        assert_eq!(create_kernels_in_program(prg, &mut ks), CL_SUCCESS);
+        assert_eq!(ks.len(), 2);
+        for k in ks {
+            release_kernel(k);
+        }
+        program::release_program(prg);
+        context::release_context(ctx);
+    }
+}

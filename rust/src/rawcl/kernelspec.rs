@@ -1,0 +1,291 @@
+//! Kernel-argument ABI specifications.
+//!
+//! OpenCL kernels receive their buffers *and* outputs as positional
+//! arguments; HLO modules receive inputs as parameters and return
+//! outputs. This module defines, per kernel, the mapping between the
+//! OpenCL-style argument list the host sets with `set_kernel_arg` and the
+//! HLO entry signature — keeping the host-side programming model of the
+//! paper's listings S4/S5 intact on top of the AOT artifacts.
+
+use super::hlometa::HloMeta;
+use crate::runtime::literal::ElemType;
+
+/// Role of one kernel argument slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgRole {
+    /// Private scalar baked into the artifact at lowering time (e.g. the
+    /// `nseeds` argument of listings S4/S5). The substrate validates the
+    /// value the host sets against the baked constant.
+    BakedScalar { bytes: usize, expect_u32: Option<u32> },
+    /// Private scalar that becomes an HLO input parameter (e.g. `a` in
+    /// saxpy).
+    ScalarInput { dtype: ElemType },
+    /// Buffer read by the kernel (HLO input parameter).
+    BufferInput { dtype: ElemType, bytes: usize },
+    /// Buffer written by the kernel (HLO result).
+    BufferOutput { dtype: ElemType, bytes: usize },
+}
+
+/// The full ABI of one kernel: ordered argument roles.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    /// Kernel name as exposed to hosts (module name minus `jit_`).
+    pub name: String,
+    pub args: Vec<ArgRole>,
+    /// Principal problem size (elements).
+    pub n: usize,
+    /// Simple-op count per element (for the sim timing model).
+    pub ops_per_elem: u64,
+    /// Device-memory bytes touched per element (for the timing model).
+    pub bytes_per_elem: u64,
+    /// Fused step count (rng_multi); 1 otherwise.
+    pub k: usize,
+}
+
+/// Recognised kernel families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    PrngInit,
+    PrngStep,
+    PrngMultiStep,
+    VecAdd,
+    Saxpy,
+}
+
+impl KernelKind {
+    /// Classify an HLO module by its (stripped) name.
+    pub fn from_module_name(name: &str) -> Option<Self> {
+        match name {
+            "prng_init" => Some(Self::PrngInit),
+            "prng_step" => Some(Self::PrngStep),
+            "prng_multi_step" => Some(Self::PrngMultiStep),
+            "vecadd" => Some(Self::VecAdd),
+            "saxpy" => Some(Self::Saxpy),
+            _ => None,
+        }
+    }
+}
+
+/// Build-options parser: OpenCL-style `-Dk=16` defines.
+///
+/// Returns `Err(unknown_option)` for anything that is not a `-D` define,
+/// mirroring `CL_INVALID_BUILD_OPTIONS`.
+pub fn parse_build_options(options: &str) -> Result<Vec<(String, String)>, String> {
+    let mut defines = Vec::new();
+    for tok in options.split_whitespace() {
+        if let Some(def) = tok.strip_prefix("-D") {
+            match def.split_once('=') {
+                Some((k, v)) => defines.push((k.to_string(), v.to_string())),
+                None => defines.push((def.to_string(), "1".to_string())),
+            }
+        } else {
+            return Err(tok.to_string());
+        }
+    }
+    Ok(defines)
+}
+
+/// Derive the kernel spec for a parsed HLO module.
+///
+/// `defines` come from the program build options; `prng_multi_step`
+/// requires `-Dk=<steps>` so the simulated backend knows how many steps
+/// the fused artifact performs (the native backend executes the HLO
+/// as-is). Returns a human-readable build-log message on failure.
+pub fn spec_for(meta: &HloMeta, defines: &[(String, String)]) -> Result<KernelSpec, String> {
+    let kind = KernelKind::from_module_name(&meta.name).ok_or_else(|| {
+        format!(
+            "unknown kernel {:?}: expected one of prng_init, prng_step, \
+             prng_multi_step, vecadd, saxpy",
+            meta.name
+        )
+    })?;
+    let n = meta.problem_size();
+    if n == 0 {
+        return Err(format!("kernel {:?} has no result tensor", meta.name));
+    }
+    let spec = match kind {
+        KernelKind::PrngInit => KernelSpec {
+            // Listing S4: init(__global uint2* seeds, uint nseeds)
+            name: meta.name.clone(),
+            args: vec![
+                ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
+            ],
+            n,
+            ops_per_elem: 22, // ~11 hash lines × 2 ops
+            bytes_per_elem: 8,
+            k: 1,
+        },
+        KernelKind::PrngStep | KernelKind::PrngMultiStep => {
+            let k = if kind == KernelKind::PrngMultiStep {
+                let kv = defines
+                    .iter()
+                    .find(|(name, _)| name == "k")
+                    .ok_or_else(|| {
+                        "prng_multi_step requires build option -Dk=<steps>".to_string()
+                    })?;
+                kv.1.parse::<usize>()
+                    .ok()
+                    .filter(|k| *k >= 1)
+                    .ok_or_else(|| format!("bad -Dk value {:?}", kv.1))?
+            } else {
+                1
+            };
+            KernelSpec {
+                // Listing S5: rng(uint nseeds, __global ulong* in, out)
+                name: meta.name.clone(),
+                args: vec![
+                    ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
+                    ArgRole::BufferInput { dtype: ElemType::U64, bytes: n * 8 },
+                    ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
+                ],
+                n,
+                ops_per_elem: 6 * k as u64,
+                bytes_per_elem: 16,
+                k,
+            }
+        }
+        KernelKind::VecAdd => KernelSpec {
+            name: meta.name.clone(),
+            args: vec![
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+            ],
+            n,
+            ops_per_elem: 1,
+            bytes_per_elem: 12,
+            k: 1,
+        },
+        KernelKind::Saxpy => KernelSpec {
+            name: meta.name.clone(),
+            args: vec![
+                ArgRole::ScalarInput { dtype: ElemType::F32 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+            ],
+            n,
+            ops_per_elem: 2,
+            bytes_per_elem: 12,
+            k: 1,
+        },
+    };
+    // Cross-check the spec against the HLO signature: the number of HLO
+    // input params must equal the ScalarInput+BufferInput slots.
+    let hlo_inputs = spec
+        .args
+        .iter()
+        .filter(|a| matches!(a, ArgRole::ScalarInput { .. } | ArgRole::BufferInput { .. }))
+        .count();
+    if hlo_inputs != meta.params.len() {
+        return Err(format!(
+            "kernel {:?}: ABI expects {hlo_inputs} HLO inputs, module has {}",
+            meta.name,
+            meta.params.len()
+        ));
+    }
+    Ok(spec)
+}
+
+impl KernelSpec {
+    pub fn num_args(&self) -> usize {
+        self.args.len()
+    }
+
+    /// Total device-memory bytes a launch touches (timing model input).
+    pub fn bytes_touched(&self) -> u64 {
+        self.n as u64 * self.bytes_per_elem
+    }
+
+    /// Total simple ops a launch performs (timing model input).
+    pub fn total_ops(&self) -> u64 {
+        self.n as u64 * self.ops_per_elem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::hlometa::parse_header;
+
+    fn meta(h: &str) -> HloMeta {
+        parse_header(h).unwrap()
+    }
+
+    #[test]
+    fn rng_spec_matches_listing_s5() {
+        let m = meta(
+            "HloModule jit_prng_step, entry_computation_layout=\
+             {(u64[4096]{0})->(u64[4096]{0})}",
+        );
+        let s = spec_for(&m, &[]).unwrap();
+        assert_eq!(s.num_args(), 3);
+        assert!(matches!(s.args[0], ArgRole::BakedScalar { expect_u32: Some(4096), .. }));
+        assert!(matches!(s.args[1], ArgRole::BufferInput { .. }));
+        assert!(matches!(s.args[2], ArgRole::BufferOutput { .. }));
+        assert_eq!(s.k, 1);
+        assert_eq!(s.bytes_touched(), 4096 * 16);
+    }
+
+    #[test]
+    fn init_spec_matches_listing_s4() {
+        let m = meta(
+            "HloModule jit_prng_init, entry_computation_layout={()->(u64[1024]{0})}",
+        );
+        let s = spec_for(&m, &[]).unwrap();
+        assert_eq!(s.num_args(), 2);
+        assert!(matches!(s.args[0], ArgRole::BufferOutput { .. }));
+    }
+
+    #[test]
+    fn multi_step_requires_k_define() {
+        let m = meta(
+            "HloModule jit_prng_multi_step, entry_computation_layout=\
+             {(u64[4096]{0})->(u64[4096]{0})}",
+        );
+        assert!(spec_for(&m, &[]).is_err());
+        let defs = parse_build_options("-Dk=16").unwrap();
+        let s = spec_for(&m, &defs).unwrap();
+        assert_eq!(s.k, 16);
+        assert_eq!(s.ops_per_elem, 96);
+    }
+
+    #[test]
+    fn saxpy_scalar_is_hlo_input() {
+        let m = meta(
+            "HloModule jit_saxpy, entry_computation_layout=\
+             {(f32[], f32[64]{0}, f32[64]{0})->(f32[64]{0})}",
+        );
+        let s = spec_for(&m, &[]).unwrap();
+        assert!(matches!(s.args[0], ArgRole::ScalarInput { .. }));
+        assert_eq!(s.num_args(), 4);
+    }
+
+    #[test]
+    fn unknown_kernel_is_build_failure() {
+        let m = meta("HloModule jit_mystery, entry_computation_layout={()->(f32[4]{0})}");
+        let e = spec_for(&m, &[]).unwrap_err();
+        assert!(e.contains("unknown kernel"));
+    }
+
+    #[test]
+    fn arity_mismatch_is_detected() {
+        // vecadd with 3 HLO params can't satisfy the 2-input ABI.
+        let m = meta(
+            "HloModule jit_vecadd, entry_computation_layout=\
+             {(f32[4]{0}, f32[4]{0}, f32[4]{0})->(f32[4]{0})}",
+        );
+        assert!(spec_for(&m, &[]).is_err());
+    }
+
+    #[test]
+    fn build_options_parser() {
+        assert_eq!(
+            parse_build_options("-Dk=16 -DFAST").unwrap(),
+            vec![("k".into(), "16".into()), ("FAST".into(), "1".into())]
+        );
+        assert_eq!(parse_build_options("").unwrap(), vec![]);
+        assert_eq!(parse_build_options("-cl-fast-math").unwrap_err(), "-cl-fast-math");
+    }
+}

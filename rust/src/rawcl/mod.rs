@@ -1,0 +1,66 @@
+//! # `rawcl` — the low-level compute host API (substrate)
+//!
+//! This module plays the role OpenCL plays in the paper: a verbose,
+//! C-style host API with integer status codes, out-parameters, manual
+//! object lifecycle (`retain_*`/`release_*`), the two-call size/data
+//! info-query dance, stateful positional kernel arguments and explicit
+//! event management. The cf4rs framework ([`crate::ccl`]) wraps it the
+//! way cf4ocl wraps OpenCL.
+//!
+//! Two platforms are exposed (see [`platform`]): the native PJRT CPU
+//! platform executing AOT-lowered HLO artifacts, and the `SimCL` platform
+//! with simulated profiles of the paper's two test GPUs.
+
+pub mod buffer;
+pub mod clock;
+pub mod context;
+pub mod device;
+pub mod error;
+pub mod event;
+pub mod hlometa;
+pub mod image;
+pub mod kernel;
+pub mod kernelspec;
+pub mod platform;
+pub mod profile;
+pub mod program;
+pub mod queue;
+pub mod registry;
+pub mod simexec;
+pub mod types;
+
+pub use buffer::{
+    create_buffer, get_mem_object_size, release_mem_object, retain_mem_object,
+};
+pub use context::{
+    create_context, create_context_from_type, get_context_devices, release_context,
+    retain_context,
+};
+pub use device::{get_device_ids, get_device_info};
+pub use error::*;
+pub use event::{
+    create_user_event, get_event_command_type, get_event_profiling_info,
+    get_event_status, release_event, retain_event, set_event_name,
+    set_user_event_status, wait_for_events,
+};
+pub use kernel::{
+    create_kernel, create_kernels_in_program, get_kernel_function_name,
+    get_kernel_num_args, get_kernel_work_group_info, release_kernel, retain_kernel,
+    set_kernel_arg, ArgValue,
+};
+pub use image::{
+    create_image2d, get_image_desc, release_image, retain_image, ImageDesc, ImageFormat,
+};
+pub use platform::{get_platform_ids, get_platform_info};
+pub use program::{
+    build_program, create_program_with_source, get_program_build_log,
+    get_program_build_status, get_program_kernel_names, release_program, retain_program,
+    BuildStatus,
+};
+pub use queue::{
+    create_command_queue, enqueue_copy_buffer, enqueue_fill_buffer, enqueue_fill_image,
+    enqueue_marker, enqueue_ndrange_kernel, enqueue_read_buffer, enqueue_read_buffer_raw,
+    enqueue_read_image, enqueue_write_buffer, enqueue_write_image, finish, flush,
+    get_queue_device, get_queue_properties, release_command_queue, retain_command_queue,
+};
+pub use types::*;

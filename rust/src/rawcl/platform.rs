@@ -1,0 +1,174 @@
+//! Platform table — the substrate's "ICD".
+//!
+//! Two platforms exist for the whole process lifetime, like OpenCL
+//! platforms exposed by installed drivers:
+//!
+//! * **cf4rs PJRT** — one native CPU device executing AOT artifacts.
+//! * **SimCL** — the two simulated GPUs of the paper's testbed.
+
+use super::device::{self, Device};
+use super::error::*;
+use super::types::{PlatformId, PlatformInfo};
+
+/// Static description of one platform.
+pub struct Platform {
+    pub name: &'static str,
+    pub vendor: &'static str,
+    pub version: &'static str,
+    pub profile: &'static str,
+    pub extensions: &'static str,
+    /// Global device indices belonging to this platform.
+    pub device_ids: Vec<u32>,
+}
+
+/// The process-wide platform table.
+pub fn platforms() -> &'static [Platform] {
+    static TABLE: std::sync::OnceLock<Vec<Platform>> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let devs = device::devices();
+        let by_platform = |p: u32| -> Vec<u32> {
+            devs.iter()
+                .filter(|d| d.platform.0 == p)
+                .map(|d| d.id.0)
+                .collect()
+        };
+        vec![
+            Platform {
+                name: "cf4rs PJRT Platform",
+                vendor: "cf4rs project",
+                version: "cf4rs-CL 1.0 (PJRT CPU)",
+                profile: "FULL_PROFILE",
+                extensions: "ccl_khr_aot_hlo",
+                device_ids: by_platform(0),
+            },
+            Platform {
+                name: "SimCL Platform",
+                vendor: "cf4rs project",
+                version: "cf4rs-CL 1.0 (SimCL)",
+                profile: "FULL_PROFILE",
+                extensions: "ccl_khr_aot_hlo ccl_sim_timing_model",
+                device_ids: by_platform(1),
+            },
+        ]
+    })
+}
+
+/// `clGetPlatformIDs`: the two-call size/data dance.
+pub fn get_platform_ids(
+    num_entries: u32,
+    ids: Option<&mut [PlatformId]>,
+    num_platforms: Option<&mut u32>,
+) -> ClStatus {
+    let table = platforms();
+    if let Some(n) = num_platforms {
+        *n = table.len() as u32;
+    }
+    if let Some(out) = ids {
+        if num_entries == 0 {
+            return CL_INVALID_VALUE;
+        }
+        let n = (num_entries as usize).min(table.len()).min(out.len());
+        for (i, slot) in out.iter_mut().take(n).enumerate() {
+            *slot = PlatformId(i as u32);
+        }
+    }
+    CL_SUCCESS
+}
+
+/// Look up a platform, if the id is valid.
+pub fn platform(id: PlatformId) -> Option<&'static Platform> {
+    platforms().get(id.0 as usize)
+}
+
+/// `clGetPlatformInfo`: returns the value as raw bytes (strings are
+/// UTF-8, no NUL). The size/data dance matches OpenCL.
+pub fn get_platform_info(
+    id: PlatformId,
+    param: PlatformInfo,
+    value: Option<&mut Vec<u8>>,
+    size_ret: Option<&mut usize>,
+) -> ClStatus {
+    let Some(p) = platform(id) else {
+        return CL_INVALID_PLATFORM;
+    };
+    let s: &str = match param {
+        PlatformInfo::Name => p.name,
+        PlatformInfo::Vendor => p.vendor,
+        PlatformInfo::Version => p.version,
+        PlatformInfo::Profile => p.profile,
+        PlatformInfo::Extensions => p.extensions,
+    };
+    if let Some(sz) = size_ret {
+        *sz = s.len();
+    }
+    if let Some(out) = value {
+        out.clear();
+        out.extend_from_slice(s.as_bytes());
+    }
+    CL_SUCCESS
+}
+
+/// Devices of a platform (helper used by `get_device_ids`).
+pub fn platform_devices(id: PlatformId) -> Option<Vec<&'static Device>> {
+    let p = platform(id)?;
+    let devs = device::devices();
+    Some(p.device_ids.iter().map(|&i| &devs[i as usize]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_platforms_exist() {
+        let mut n = 0u32;
+        assert_eq!(get_platform_ids(0, None, Some(&mut n)), CL_SUCCESS);
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn ids_fill_dance() {
+        let mut ids = [PlatformId(99); 2];
+        assert_eq!(get_platform_ids(2, Some(&mut ids), None), CL_SUCCESS);
+        assert_eq!(ids[0], PlatformId(0));
+        assert_eq!(ids[1], PlatformId(1));
+    }
+
+    #[test]
+    fn zero_entries_with_buffer_is_invalid() {
+        let mut ids = [PlatformId(0); 1];
+        assert_eq!(get_platform_ids(0, Some(&mut ids), None), CL_INVALID_VALUE);
+    }
+
+    #[test]
+    fn info_query() {
+        let mut size = 0usize;
+        assert_eq!(
+            get_platform_info(PlatformId(1), PlatformInfo::Name, None, Some(&mut size)),
+            CL_SUCCESS
+        );
+        let mut buf = Vec::new();
+        assert_eq!(
+            get_platform_info(PlatformId(1), PlatformInfo::Name, Some(&mut buf), None),
+            CL_SUCCESS
+        );
+        assert_eq!(buf.len(), size);
+        assert_eq!(String::from_utf8(buf).unwrap(), "SimCL Platform");
+    }
+
+    #[test]
+    fn invalid_platform_rejected() {
+        assert_eq!(
+            get_platform_info(PlatformId(7), PlatformInfo::Name, None, None),
+            CL_INVALID_PLATFORM
+        );
+    }
+
+    #[test]
+    fn platform_device_partition() {
+        let p0 = platform_devices(PlatformId(0)).unwrap();
+        let p1 = platform_devices(PlatformId(1)).unwrap();
+        assert_eq!(p0.len(), 1);
+        assert_eq!(p1.len(), 2);
+    }
+}

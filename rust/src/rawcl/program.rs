@@ -1,0 +1,394 @@
+//! Programs: created from HLO-text sources, built per device backend.
+//!
+//! An OpenCL program holds one or more kernel sources and is built for
+//! the context's devices; kernels are then extracted by name. `rawcl`
+//! keeps that lifecycle: sources are HLO text modules (the substrate's
+//! "kernel language"), build compiles them on the PJRT client when the
+//! build targets the native device, and derives kernel-argument specs
+//! either way. Build errors land in a per-program build log, queryable
+//! like `CL_PROGRAM_BUILD_LOG`.
+
+use std::sync::{Arc, Mutex};
+
+use super::context;
+use super::device;
+use super::error::*;
+use super::hlometa::{self, HloMeta};
+use super::kernelspec::{self, KernelSpec};
+use super::profile::BackendKind;
+use super::registry::{self, Obj};
+use super::types::{ContextH, DeviceId, ProgramH};
+use crate::runtime::TextModule;
+
+/// One kernel produced by a successful build.
+#[derive(Clone)]
+pub struct BuiltKernel {
+    pub meta: HloMeta,
+    pub spec: KernelSpec,
+    /// Compiled PJRT executable; present iff the build included a native
+    /// device. Simulated devices execute via `simexec` instead.
+    pub native: Option<Arc<TextModule>>,
+}
+
+/// Build status mirror of `cl_build_status`.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum BuildStatus {
+    None,
+    InProgress,
+    Error,
+    Success,
+}
+
+struct BuildState {
+    status: BuildStatus,
+    log: String,
+    kernels: Vec<BuiltKernel>,
+}
+
+/// Internal program object.
+pub struct ProgramObj {
+    pub ctx: ContextH,
+    pub sources: Vec<String>,
+    state: Mutex<BuildState>,
+}
+
+impl ProgramObj {
+    pub fn build_status(&self) -> BuildStatus {
+        self.state.lock().unwrap().status
+    }
+
+    pub fn build_log(&self) -> String {
+        self.state.lock().unwrap().log.clone()
+    }
+
+    pub fn kernel(&self, name: &str) -> Option<BuiltKernel> {
+        self.state
+            .lock()
+            .unwrap()
+            .kernels
+            .iter()
+            .find(|k| k.spec.name == name)
+            .cloned()
+    }
+
+    pub fn kernel_names(&self) -> Vec<String> {
+        self.state
+            .lock()
+            .unwrap()
+            .kernels
+            .iter()
+            .map(|k| k.spec.name.clone())
+            .collect()
+    }
+}
+
+/// `clCreateProgramWithSource`: sources are HLO text modules.
+pub fn create_program_with_source(
+    ctx: ContextH,
+    sources: &[String],
+    status: &mut ClStatus,
+) -> ProgramH {
+    if context::lookup(ctx).is_none() {
+        *status = CL_INVALID_CONTEXT;
+        return ProgramH::NULL;
+    }
+    if sources.is_empty() || sources.iter().any(|s| s.trim().is_empty()) {
+        *status = CL_INVALID_VALUE;
+        return ProgramH::NULL;
+    }
+    let obj = Arc::new(ProgramObj {
+        ctx,
+        sources: sources.to_vec(),
+        state: Mutex::new(BuildState {
+            status: BuildStatus::None,
+            log: String::new(),
+            kernels: Vec::new(),
+        }),
+    });
+    *status = CL_SUCCESS;
+    ProgramH(registry::insert(Obj::Program(obj)))
+}
+
+/// `clBuildProgram`.
+///
+/// `devices = None` builds for all context devices. `options` accepts
+/// OpenCL-style `-D` defines (`-Dk=16` is required by the fused
+/// multi-step kernel).
+pub fn build_program(
+    prg: ProgramH,
+    devices: Option<&[DeviceId]>,
+    options: &str,
+) -> ClStatus {
+    let Some(p) = registry::get_program(prg.0) else {
+        return CL_INVALID_PROGRAM;
+    };
+    let Some(ctx) = context::lookup(p.ctx) else {
+        return CL_INVALID_CONTEXT;
+    };
+    let build_devs: Vec<DeviceId> = match devices {
+        Some(ds) => {
+            if ds.iter().any(|d| !ctx.devices.contains(d)) {
+                return CL_INVALID_DEVICE;
+            }
+            ds.to_vec()
+        }
+        None => ctx.devices.clone(),
+    };
+    let defines = match kernelspec::parse_build_options(options) {
+        Ok(d) => d,
+        Err(bad) => {
+            let mut st = p.state.lock().unwrap();
+            st.status = BuildStatus::Error;
+            st.log = format!("unrecognised build option: {bad}\n");
+            return CL_INVALID_BUILD_OPTIONS;
+        }
+    };
+    let needs_native = build_devs.iter().any(|d| {
+        device::device(*d)
+            .map(|dev| dev.profile.backend == BackendKind::Native)
+            .unwrap_or(false)
+    });
+
+    {
+        let mut st = p.state.lock().unwrap();
+        st.status = BuildStatus::InProgress;
+        st.log.clear();
+        st.kernels.clear();
+    }
+
+    let mut log = String::new();
+    let mut kernels = Vec::new();
+    let mut failed = false;
+
+    for (i, src) in p.sources.iter().enumerate() {
+        // 1. Parse the module header ("front end").
+        let meta = match hlometa::parse_header(src) {
+            Ok(m) => m,
+            Err(e) => {
+                log.push_str(&format!("source {i}: {e}\n"));
+                failed = true;
+                continue;
+            }
+        };
+        // 2. Derive the kernel ABI ("semantic analysis").
+        let spec = match kernelspec::spec_for(&meta, &defines) {
+            Ok(s) => s,
+            Err(e) => {
+                log.push_str(&format!("source {i} ({}): {e}\n", meta.name));
+                failed = true;
+                continue;
+            }
+        };
+        // 3. Native codegen via PJRT where needed.
+        let native = if needs_native {
+            match TextModule::compile_cached(src) {
+                Ok(m) => {
+                    log.push_str(&format!(
+                        "kernel {}: compiled for native backend \
+                         ({} instructions, {:.1} ms)\n",
+                        spec.name,
+                        m.instruction_count,
+                        m.compile_time.as_secs_f64() * 1e3,
+                    ));
+                    Some(m)
+                }
+                Err(e) => {
+                    log.push_str(&format!("kernel {}: native compile failed: {e:#}\n", spec.name));
+                    failed = true;
+                    continue;
+                }
+            }
+        } else {
+            log.push_str(&format!("kernel {}: simulated backend only\n", spec.name));
+            None
+        };
+        kernels.push(BuiltKernel { meta, spec, native });
+    }
+
+    let mut st = p.state.lock().unwrap();
+    st.log = log;
+    if failed {
+        st.status = BuildStatus::Error;
+        st.kernels.clear();
+        CL_BUILD_PROGRAM_FAILURE
+    } else {
+        st.status = BuildStatus::Success;
+        st.kernels = kernels;
+        CL_SUCCESS
+    }
+}
+
+/// `clGetProgramBuildInfo(CL_PROGRAM_BUILD_LOG)`.
+pub fn get_program_build_log(prg: ProgramH, log: &mut String) -> ClStatus {
+    let Some(p) = registry::get_program(prg.0) else {
+        return CL_INVALID_PROGRAM;
+    };
+    *log = p.build_log();
+    CL_SUCCESS
+}
+
+/// `clGetProgramBuildInfo(CL_PROGRAM_BUILD_STATUS)`.
+pub fn get_program_build_status(prg: ProgramH, status: &mut BuildStatus) -> ClStatus {
+    let Some(p) = registry::get_program(prg.0) else {
+        return CL_INVALID_PROGRAM;
+    };
+    *status = p.build_status();
+    CL_SUCCESS
+}
+
+/// `clGetProgramInfo(CL_PROGRAM_KERNEL_NAMES)`.
+pub fn get_program_kernel_names(prg: ProgramH, names: &mut Vec<String>) -> ClStatus {
+    let Some(p) = registry::get_program(prg.0) else {
+        return CL_INVALID_PROGRAM;
+    };
+    *names = p.kernel_names();
+    CL_SUCCESS
+}
+
+pub fn retain_program(prg: ProgramH) -> ClStatus {
+    if registry::get_program(prg.0).is_none() {
+        return CL_INVALID_PROGRAM;
+    }
+    if registry::retain(prg.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_PROGRAM
+    }
+}
+
+pub fn release_program(prg: ProgramH) -> ClStatus {
+    if registry::get_program(prg.0).is_none() {
+        return CL_INVALID_PROGRAM;
+    }
+    if registry::release(prg.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_PROGRAM
+    }
+}
+
+pub(crate) fn lookup(prg: ProgramH) -> Option<Arc<ProgramObj>> {
+    registry::get_program(prg.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::types::DeviceType;
+    use crate::runtime::Manifest;
+
+    fn sim_ctx() -> ContextH {
+        let mut st = CL_SUCCESS;
+        let ctx = context::create_context_from_type(DeviceType::GPU, &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        ctx
+    }
+
+    fn load(name: &str) -> Option<String> {
+        let man = Manifest::discover().ok()?;
+        let art = man.get(name)?;
+        std::fs::read_to_string(&art.path).ok()
+    }
+
+    #[test]
+    fn build_for_sim_devices_succeeds_without_pjrt() {
+        let Some(src) = load("rng_n4096") else { return };
+        let ctx = sim_ctx();
+        let mut st = CL_SUCCESS;
+        let prg = create_program_with_source(ctx, &[src], &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        assert_eq!(build_program(prg, None, ""), CL_SUCCESS);
+        let mut names = Vec::new();
+        get_program_kernel_names(prg, &mut names);
+        assert_eq!(names, vec!["prng_step"]);
+        let p = lookup(prg).unwrap();
+        assert!(p.kernel("prng_step").unwrap().native.is_none());
+        release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn build_failure_populates_log() {
+        let ctx = sim_ctx();
+        let mut st = CL_SUCCESS;
+        let bad = "HloModule jit_mystery, entry_computation_layout={()->(f32[4]{0})}"
+            .to_string();
+        let prg = create_program_with_source(ctx, &[bad], &mut st);
+        assert_eq!(build_program(prg, None, ""), CL_BUILD_PROGRAM_FAILURE);
+        let mut log = String::new();
+        get_program_build_log(prg, &mut log);
+        assert!(log.contains("unknown kernel"), "log: {log}");
+        let mut bs = BuildStatus::None;
+        get_program_build_status(prg, &mut bs);
+        assert_eq!(bs, BuildStatus::Error);
+        release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn multi_step_needs_define() {
+        let Some(src) = load("rngk16_n4096") else { return };
+        let ctx = sim_ctx();
+        let mut st = CL_SUCCESS;
+        let prg = create_program_with_source(ctx, &[src], &mut st);
+        assert_eq!(build_program(prg, None, ""), CL_BUILD_PROGRAM_FAILURE);
+        assert_eq!(build_program(prg, None, "-Dk=16"), CL_SUCCESS);
+        let p = lookup(prg).unwrap();
+        assert_eq!(p.kernel("prng_multi_step").unwrap().spec.k, 16);
+        release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn bad_build_option_rejected() {
+        let Some(src) = load("rng_n4096") else { return };
+        let ctx = sim_ctx();
+        let mut st = CL_SUCCESS;
+        let prg = create_program_with_source(ctx, &[src], &mut st);
+        assert_eq!(build_program(prg, None, "--definitely-not-a-flag"), CL_INVALID_BUILD_OPTIONS);
+        release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn empty_source_rejected() {
+        let ctx = sim_ctx();
+        let mut st = CL_SUCCESS;
+        let prg = create_program_with_source(ctx, &[], &mut st);
+        assert!(prg.is_null());
+        assert_eq!(st, CL_INVALID_VALUE);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn native_build_compiles_pjrt() {
+        let Some(src) = load("vecadd_n1024") else { return };
+        let mut st = CL_SUCCESS;
+        let ctx = context::create_context(&[DeviceId(0)], &mut st);
+        let prg = create_program_with_source(ctx, &[src], &mut st);
+        assert_eq!(build_program(prg, None, ""), CL_SUCCESS);
+        let p = lookup(prg).unwrap();
+        let k = p.kernel("vecadd").unwrap();
+        assert!(k.native.is_some());
+        let mut log = String::new();
+        get_program_build_log(prg, &mut log);
+        assert!(log.contains("compiled for native"), "log: {log}");
+        release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn two_source_program_like_the_paper(){
+        // Listing S1/S2 create one program from init.cl + rng.cl.
+        let (Some(a), Some(b)) = (load("init_n4096"), load("rng_n4096")) else { return };
+        let ctx = sim_ctx();
+        let mut st = CL_SUCCESS;
+        let prg = create_program_with_source(ctx, &[a, b], &mut st);
+        assert_eq!(build_program(prg, None, ""), CL_SUCCESS);
+        let mut names = Vec::new();
+        get_program_kernel_names(prg, &mut names);
+        assert_eq!(names, vec!["prng_init", "prng_step"]);
+        release_program(prg);
+        context::release_context(ctx);
+    }
+}

@@ -1,0 +1,929 @@
+//! Command queues: in-order execution engines with profiling.
+//!
+//! Each queue owns one worker thread (the "device engine" for that
+//! queue). Commands execute strictly in order within a queue; overlap
+//! across queues — which the paper's §5 example and Fig. 5 chart rely on
+//! — emerges from using two queues, exactly as in OpenCL.
+//!
+//! Execution backends:
+//! * **Native** — kernels run on the PJRT CPU client; transfers are plain
+//!   memcpy (host and device share memory on a CPU device).
+//! * **Simulated** — kernels run the scalar reference implementation (so
+//!   results are still correct) and commands take the duration the
+//!   device's roofline timing model predicts, scaled by
+//!   `CF4RS_SIM_TIMESCALE`.
+
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::buffer::{self, BufferObj};
+use super::clock;
+use super::context;
+use super::device;
+use super::error::*;
+use super::event::{self, EventObj};
+use super::image::{self, ImageObj};
+use super::kernel::{self, ArgValue};
+use super::kernelspec::{ArgRole, KernelSpec};
+use super::profile::{sim_timescale, BackendKind, DeviceProfile};
+use super::registry::{self, Obj};
+use super::simexec;
+use super::types::{
+    CommandType, ContextH, DeviceId, EventH, KernelH, MemH, QueueH, QueueProps,
+};
+use crate::runtime::literal::{literal_from_bytes, ElemType};
+use crate::runtime::TextModule;
+
+/// Raw destination pointer for read commands. The blocking read API
+/// guarantees the pointee outlives the command (it waits); the
+/// non-blocking variant is `unsafe` and puts that burden on the caller,
+/// exactly like OpenCL.
+struct SendPtr(*mut u8);
+// SAFETY: the pointer is only dereferenced by the worker while the
+// enqueueing call (blocking) or the caller contract (non-blocking
+// `unsafe` API) keeps the allocation alive.
+unsafe impl Send for SendPtr {}
+
+/// Argument resolved at enqueue time (snapshot semantics).
+enum ResolvedArg {
+    Buffer(Arc<BufferObj>),
+    Scalar(Vec<u8>),
+}
+
+enum Op {
+    Kernel {
+        native: Option<Arc<TextModule>>,
+        spec: KernelSpec,
+        args: Vec<ResolvedArg>,
+    },
+    Read { buf: Arc<BufferObj>, offset: usize, len: usize, dst: SendPtr },
+    Write { buf: Arc<BufferObj>, offset: usize, data: Vec<u8> },
+    Copy {
+        src: Arc<BufferObj>,
+        dst: Arc<BufferObj>,
+        src_off: usize,
+        dst_off: usize,
+        len: usize,
+    },
+    Fill { buf: Arc<BufferObj>, offset: usize, len: usize, pattern: Vec<u8> },
+    ReadImage {
+        img: Arc<ImageObj>,
+        origin: (usize, usize),
+        region: (usize, usize),
+        dst: SendPtr,
+        len: usize,
+    },
+    WriteImage {
+        img: Arc<ImageObj>,
+        origin: (usize, usize),
+        region: (usize, usize),
+        data: Vec<u8>,
+    },
+    FillImage {
+        img: Arc<ImageObj>,
+        origin: (usize, usize),
+        region: (usize, usize),
+        pixel: Vec<u8>,
+    },
+    Marker,
+}
+
+struct Work {
+    event: Arc<EventObj>,
+    wait: Vec<Arc<EventObj>>,
+    op: Op,
+}
+
+enum Msg {
+    Work(Box<Work>),
+    Flush(SyncSender<()>),
+    Shutdown,
+}
+
+/// Internal queue object.
+pub struct QueueObj {
+    pub ctx: ContextH,
+    pub device: DeviceId,
+    pub props: QueueProps,
+    /// Handle value of this queue (filled right after registration) so
+    /// events can record their owning queue.
+    self_handle: Mutex<QueueH>,
+    tx: Sender<Msg>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl QueueObj {
+    pub fn profiling_enabled(&self) -> bool {
+        self.props.contains(QueueProps::PROFILING_ENABLE)
+    }
+
+    pub fn handle(&self) -> QueueH {
+        *self.self_handle.lock().unwrap()
+    }
+}
+
+impl Drop for QueueObj {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+fn worker_loop(rx: Receiver<Msg>, profile: DeviceProfile) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Flush(done) => {
+                let _ = done.send(());
+            }
+            Msg::Work(w) => run_work(*w, &profile),
+        }
+    }
+}
+
+fn run_work(w: Work, profile: &DeviceProfile) {
+    w.event.mark_submitted();
+    // Honour the wait list before starting.
+    for dep in &w.wait {
+        if dep.wait() < 0 {
+            w.event.complete(CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST);
+            return;
+        }
+    }
+    w.event.mark_running();
+    let t0 = Instant::now();
+    let start_ns = w.event.timestamps().start;
+    let (status, sim_ns) = execute_op(&w.op, profile);
+    if status == CL_SUCCESS && profile.backend == BackendKind::Simulated {
+        // Pad real time out to the simulated duration (scaled), then
+        // stamp the *model-predicted* END so the profiled timeline
+        // follows the device model even if the host-side reference
+        // execution overran it.
+        let target = (sim_ns as f64 / sim_timescale()) as u64;
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        if target > elapsed {
+            clock::precise_sleep(target - elapsed);
+        }
+        w.event.complete_at(status, start_ns + target);
+        return;
+    }
+    w.event.complete(status);
+}
+
+/// Execute one command; returns (status, simulated duration in ns).
+fn execute_op(op: &Op, profile: &DeviceProfile) -> (ClStatus, u64) {
+    match op {
+        Op::Marker => (CL_SUCCESS, 0),
+        Op::Read { buf, offset, len, dst } => {
+            // Copy straight from the buffer under its lock — no staging
+            // vector (EXPERIMENTS.md §Perf).
+            let data = buf.data.lock().unwrap();
+            let Some(src) = data.get(*offset..*offset + *len) else {
+                return (CL_INVALID_VALUE, 0);
+            };
+            // SAFETY: see SendPtr — allocation alive per API contract.
+            unsafe {
+                std::ptr::copy_nonoverlapping(src.as_ptr(), dst.0, *len);
+            }
+            (CL_SUCCESS, profile.timing.transfer_ns(*len as u64))
+        }
+        Op::Write { buf, offset, data } => {
+            if !buf.write_range(*offset, data) {
+                return (CL_INVALID_VALUE, 0);
+            }
+            (CL_SUCCESS, profile.timing.transfer_ns(data.len() as u64))
+        }
+        Op::Copy { src, dst, src_off, dst_off, len } => {
+            let Some(bytes) = src.read_range(*src_off, *len) else {
+                return (CL_INVALID_VALUE, 0);
+            };
+            if !dst.write_range(*dst_off, &bytes) {
+                return (CL_INVALID_VALUE, 0);
+            }
+            // Device-internal copy: charged at memory bandwidth.
+            let ns = profile.timing.kernel_ns(0, 2 * *len as u64);
+            (CL_SUCCESS, ns)
+        }
+        Op::Fill { buf, offset, len, pattern } => {
+            let mut data = vec![0u8; *len];
+            for chunk in data.chunks_mut(pattern.len()) {
+                chunk.copy_from_slice(&pattern[..chunk.len()]);
+            }
+            if !buf.write_range(*offset, &data) {
+                return (CL_INVALID_VALUE, 0);
+            }
+            (CL_SUCCESS, profile.timing.kernel_ns(0, *len as u64))
+        }
+        Op::ReadImage { img, origin, region, dst, len } => {
+            // Stage through a packed row buffer, then copy to the caller.
+            let mut tmp = vec![0u8; *len];
+            if !image::read_rect(img, *origin, *region, &mut tmp) {
+                return (CL_INVALID_VALUE, 0);
+            }
+            // SAFETY: see SendPtr — allocation alive per API contract.
+            unsafe {
+                std::ptr::copy_nonoverlapping(tmp.as_ptr(), dst.0, *len);
+            }
+            (CL_SUCCESS, profile.timing.transfer_ns(*len as u64))
+        }
+        Op::WriteImage { img, origin, region, data } => {
+            if !image::write_rect(img, *origin, *region, data) {
+                return (CL_INVALID_VALUE, 0);
+            }
+            (CL_SUCCESS, profile.timing.transfer_ns(data.len() as u64))
+        }
+        Op::FillImage { img, origin, region, pixel } => {
+            if !image::fill_rect(img, *origin, *region, pixel) {
+                return (CL_INVALID_VALUE, 0);
+            }
+            let bytes = (region.0 * region.1 * pixel.len()) as u64;
+            (CL_SUCCESS, profile.timing.kernel_ns(0, bytes))
+        }
+        Op::Kernel { native, spec, args } => {
+            let sim_ns = profile.timing.kernel_ns(spec.total_ops(), spec.bytes_touched());
+            let status = match profile.backend {
+                BackendKind::Native => run_kernel_native(native, spec, args),
+                BackendKind::Simulated => run_kernel_sim(spec, args),
+            };
+            (status, sim_ns)
+        }
+    }
+}
+
+/// Marshal args per the spec and run the PJRT executable.
+fn run_kernel_native(
+    native: &Option<Arc<TextModule>>,
+    spec: &KernelSpec,
+    args: &[ResolvedArg],
+) -> ClStatus {
+    let Some(module) = native else {
+        // Program was built without a native device in the list.
+        return CL_INVALID_PROGRAM_EXECUTABLE;
+    };
+    let mut inputs = Vec::new();
+    let mut outputs: Vec<(Arc<BufferObj>, ElemType, usize)> = Vec::new();
+    for (role, arg) in spec.args.iter().zip(args) {
+        match (role, arg) {
+            (ArgRole::BakedScalar { .. }, ResolvedArg::Scalar(_)) => {
+                // validated at enqueue; not an HLO input
+            }
+            (ArgRole::ScalarInput { dtype }, ResolvedArg::Scalar(v)) => {
+                match literal_from_bytes(*dtype, v, true) {
+                    Ok(l) => inputs.push(l),
+                    Err(_) => return CL_INVALID_KERNEL_ARGS,
+                }
+            }
+            (ArgRole::BufferInput { dtype, bytes }, ResolvedArg::Buffer(b)) => {
+                // Build the literal straight from the locked buffer — no
+                // staging clone (EXPERIMENTS.md §Perf).
+                let data = b.data.lock().unwrap();
+                let Some(src) = data.get(0..*bytes) else {
+                    return CL_INVALID_KERNEL_ARGS;
+                };
+                match literal_from_bytes(*dtype, src, false) {
+                    Ok(l) => inputs.push(l),
+                    Err(_) => return CL_INVALID_KERNEL_ARGS,
+                }
+            }
+            (ArgRole::BufferOutput { dtype, bytes }, ResolvedArg::Buffer(b)) => {
+                outputs.push((b.clone(), *dtype, *bytes));
+            }
+            _ => return CL_INVALID_KERNEL_ARGS,
+        }
+    }
+    match module.execute_literals(&inputs) {
+        Ok(results) => {
+            if results.len() != outputs.len() {
+                return CL_OUT_OF_RESOURCES;
+            }
+            for ((buf, ty, bytes), lit) in outputs.iter().zip(&results) {
+                // Decode straight into the locked destination buffer.
+                let mut data = buf.data.lock().unwrap();
+                let Some(dst) = data.get_mut(0..*bytes) else {
+                    return CL_OUT_OF_RESOURCES;
+                };
+                if crate::runtime::literal::literal_to_slice(*ty, lit, dst).is_err() {
+                    return CL_OUT_OF_RESOURCES;
+                }
+            }
+            CL_SUCCESS
+        }
+        Err(_) => CL_OUT_OF_RESOURCES,
+    }
+}
+
+/// Run the scalar reference implementation (simulated backend).
+fn run_kernel_sim(spec: &KernelSpec, args: &[ResolvedArg]) -> ClStatus {
+    // Collect buffer args in ABI order.
+    let bufs: Vec<&Arc<BufferObj>> = args
+        .iter()
+        .filter_map(|a| match a {
+            ResolvedArg::Buffer(b) => Some(b),
+            _ => None,
+        })
+        .collect();
+    let scalars: Vec<&Vec<u8>> = args
+        .iter()
+        .filter_map(|a| match a {
+            ResolvedArg::Scalar(s) => Some(s),
+            _ => None,
+        })
+        .collect();
+    match spec.name.as_str() {
+        "prng_init" => {
+            // Write directly into the destination under its lock.
+            let nb = spec.n * 8;
+            let mut data = bufs[0].data.lock().unwrap();
+            let Some(dst) = data.get_mut(0..nb) else {
+                return CL_INVALID_KERNEL_ARGS;
+            };
+            simexec::run_init(dst);
+            CL_SUCCESS
+        }
+        "prng_step" | "prng_multi_step" => {
+            // Zero-copy fast path: transform src->dst in place under both
+            // locks; fall back to the copying path when src == dst.
+            let nb = spec.n * 8;
+            let k = spec.k;
+            match buffer::with_src_dst(bufs[0], bufs[1], 0, nb, 0, nb, |s, d| {
+                simexec::run_rng(s, d, k);
+            }) {
+                Some(()) => CL_SUCCESS,
+                None => {
+                    let Some(input) = bufs[0].read_range(0, nb) else {
+                        return CL_INVALID_KERNEL_ARGS;
+                    };
+                    let mut out = vec![0u8; nb];
+                    simexec::run_rng(&input, &mut out, k);
+                    if !bufs[1].write_range(0, &out) {
+                        return CL_INVALID_KERNEL_ARGS;
+                    }
+                    CL_SUCCESS
+                }
+            }
+        }
+        "vecadd" => {
+            let (Some(x), Some(y)) =
+                (bufs[0].read_range(0, spec.n * 4), bufs[1].read_range(0, spec.n * 4))
+            else {
+                return CL_INVALID_KERNEL_ARGS;
+            };
+            let mut out = vec![0u8; spec.n * 4];
+            simexec::run_vecadd(&x, &y, &mut out);
+            if !bufs[2].write_range(0, &out) {
+                return CL_INVALID_KERNEL_ARGS;
+            }
+            CL_SUCCESS
+        }
+        "saxpy" => {
+            // saxpy's only scalar arg is `a` (ABI slot 0).
+            let a = f32::from_le_bytes(scalars[0][..4].try_into().unwrap());
+            let (Some(x), Some(y)) =
+                (bufs[0].read_range(0, spec.n * 4), bufs[1].read_range(0, spec.n * 4))
+            else {
+                return CL_INVALID_KERNEL_ARGS;
+            };
+            let mut out = vec![0u8; spec.n * 4];
+            simexec::run_saxpy(a, &x, &y, &mut out);
+            if !bufs[2].write_range(0, &out) {
+                return CL_INVALID_KERNEL_ARGS;
+            }
+            CL_SUCCESS
+        }
+        _ => CL_INVALID_KERNEL,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host API
+// ---------------------------------------------------------------------------
+
+/// `clCreateCommandQueue`.
+pub fn create_command_queue(
+    ctx: ContextH,
+    dev: DeviceId,
+    props: QueueProps,
+    status: &mut ClStatus,
+) -> QueueH {
+    let Some(c) = context::lookup(ctx) else {
+        *status = CL_INVALID_CONTEXT;
+        return QueueH::NULL;
+    };
+    if !c.devices.contains(&dev) {
+        *status = CL_INVALID_DEVICE;
+        return QueueH::NULL;
+    }
+    let profile = device::device(dev).unwrap().profile.clone();
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let worker = std::thread::Builder::new()
+        .name(format!("rawcl-q-dev{}", dev.0))
+        .spawn(move || worker_loop(rx, profile))
+        .expect("spawn queue worker");
+    let obj = Arc::new(QueueObj {
+        ctx,
+        device: dev,
+        props,
+        self_handle: Mutex::new(QueueH::NULL),
+        tx,
+        worker: Mutex::new(Some(worker)),
+    });
+    let h = QueueH(registry::insert(Obj::Queue(obj.clone())));
+    *obj.self_handle.lock().unwrap() = h;
+    *status = CL_SUCCESS;
+    h
+}
+
+fn resolve_wait_list(wait: &[EventH]) -> Result<Vec<Arc<EventObj>>, ClStatus> {
+    wait.iter()
+        .map(|&e| event::lookup(e).ok_or(CL_INVALID_EVENT_WAIT_LIST))
+        .collect()
+}
+
+/// Common enqueue path: build the event, ship the work.
+fn enqueue(
+    q: &Arc<QueueObj>,
+    cmd: CommandType,
+    wait: &[EventH],
+    op: Op,
+) -> Result<(EventH, Arc<EventObj>), ClStatus> {
+    let deps = resolve_wait_list(wait)?;
+    let ev = EventObj::new(cmd, q.handle(), q.profiling_enabled());
+    let h = event::register(ev.clone());
+    let work = Work { event: ev.clone(), wait: deps, op };
+    if q.tx.send(Msg::Work(Box::new(work))).is_err() {
+        event::release_event(h);
+        return Err(CL_INVALID_COMMAND_QUEUE);
+    }
+    Ok((h, ev))
+}
+
+/// `clEnqueueNDRangeKernel`.
+///
+/// Substrate constraints, checked here as a real driver would:
+/// * `work_dim` 1–3, `gws` non-zero;
+/// * pre-OpenCL-2.0 rule: each `lws` dim divides the `gws` dim;
+/// * `lws` within device limits;
+/// * total `gws` covers the kernel's problem size `n`;
+/// * all kernel args set, baked scalars matching the artifact.
+pub fn enqueue_ndrange_kernel(
+    queue: QueueH,
+    kern: KernelH,
+    work_dim: u32,
+    gws: &[usize],
+    lws: Option<&[usize]>,
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(k) = kernel::lookup(kern) else {
+        return CL_INVALID_KERNEL;
+    };
+    if !(1..=3).contains(&work_dim) {
+        return CL_INVALID_WORK_DIMENSION;
+    }
+    if gws.len() < work_dim as usize || gws.iter().take(work_dim as usize).any(|&g| g == 0) {
+        return CL_INVALID_GLOBAL_WORK_SIZE;
+    }
+    let dev = device::device(q.device).unwrap();
+    if let Some(l) = lws {
+        if l.len() < work_dim as usize {
+            return CL_INVALID_WORK_GROUP_SIZE;
+        }
+        let mut product = 1usize;
+        for d in 0..work_dim as usize {
+            if l[d] == 0 || gws[d] % l[d] != 0 {
+                return CL_INVALID_WORK_GROUP_SIZE;
+            }
+            if l[d] > dev.profile.max_work_item_sizes[d] {
+                return CL_INVALID_WORK_ITEM_SIZE;
+            }
+            product *= l[d];
+        }
+        if product > dev.profile.max_work_group_size {
+            return CL_INVALID_WORK_GROUP_SIZE;
+        }
+    }
+    let total: usize = gws.iter().take(work_dim as usize).product();
+    let spec = &k.built.spec;
+    if total < spec.n {
+        return CL_INVALID_GLOBAL_WORK_SIZE;
+    }
+    // Snapshot + validate args.
+    let set_args = k.snapshot_args();
+    let mut resolved = Vec::with_capacity(set_args.len());
+    for (role, maybe) in spec.args.iter().zip(&set_args) {
+        let Some(val) = maybe else {
+            return CL_INVALID_KERNEL_ARGS;
+        };
+        match (role, val) {
+            (ArgRole::BakedScalar { expect_u32: Some(want), .. }, ArgValue::Scalar(v)) => {
+                let got = u32::from_le_bytes(v[..4].try_into().unwrap());
+                if got != *want {
+                    return CL_INVALID_KERNEL_ARGS;
+                }
+                resolved.push(ResolvedArg::Scalar(v.clone()));
+            }
+            (_, ArgValue::Scalar(v)) => resolved.push(ResolvedArg::Scalar(v.clone())),
+            (_, ArgValue::Buffer(m)) => {
+                let Some(b) = buffer::lookup(*m) else {
+                    return CL_INVALID_KERNEL_ARGS;
+                };
+                // Size check against the ABI.
+                let needed = match role {
+                    ArgRole::BufferInput { bytes, .. }
+                    | ArgRole::BufferOutput { bytes, .. } => *bytes,
+                    _ => 0,
+                };
+                if b.size < needed {
+                    return CL_INVALID_KERNEL_ARGS;
+                }
+                resolved.push(ResolvedArg::Buffer(b));
+            }
+        }
+    }
+    let op = Op::Kernel {
+        native: k.built.native.clone(),
+        spec: spec.clone(),
+        args: resolved,
+    };
+    match enqueue(&q, CommandType::NdRangeKernel, wait, op) {
+        Ok((h, _)) => {
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// Store the event handle if the caller wants it, else release it
+/// immediately (OpenCL callers pass NULL when they don't care).
+fn store_or_release(slot: Option<&mut EventH>, h: EventH) {
+    match slot {
+        Some(s) => *s = h,
+        None => {
+            event::release_event(h);
+        }
+    }
+}
+
+/// `clEnqueueReadBuffer` (blocking form — safe).
+pub fn enqueue_read_buffer(
+    queue: QueueH,
+    mem: MemH,
+    blocking: bool,
+    offset: usize,
+    dst: &mut [u8],
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    if !blocking {
+        // The safe API cannot prove the borrow outlives an async read.
+        return CL_INVALID_OPERATION;
+    }
+    let len = dst.len();
+    // SAFETY: we wait for completion below, so `dst` outlives the use.
+    unsafe {
+        enqueue_read_buffer_raw(queue, mem, true, offset, dst.as_mut_ptr(), len, wait, evt)
+    }
+}
+
+/// `clEnqueueReadBuffer` (raw form; non-blocking allowed).
+///
+/// # Safety
+/// `dst..dst+len` must stay valid until the returned event completes.
+pub unsafe fn enqueue_read_buffer_raw(
+    queue: QueueH,
+    mem: MemH,
+    blocking: bool,
+    offset: usize,
+    dst: *mut u8,
+    len: usize,
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(b) = buffer::lookup(mem) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    if offset + len > b.size {
+        return CL_INVALID_VALUE;
+    }
+    let op = Op::Read { buf: b, offset, len, dst: SendPtr(dst) };
+    match enqueue(&q, CommandType::ReadBuffer, wait, op) {
+        Ok((h, ev)) => {
+            if blocking {
+                let st = ev.wait();
+                if st < 0 {
+                    store_or_release(evt, h);
+                    return st;
+                }
+            }
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueWriteBuffer`: the data is snapshot at enqueue (the blocking
+/// flag therefore only affects when the function returns, not safety).
+pub fn enqueue_write_buffer(
+    queue: QueueH,
+    mem: MemH,
+    blocking: bool,
+    offset: usize,
+    src: &[u8],
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(b) = buffer::lookup(mem) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    if offset + src.len() > b.size {
+        return CL_INVALID_VALUE;
+    }
+    let op = Op::Write { buf: b, offset, data: src.to_vec() };
+    match enqueue(&q, CommandType::WriteBuffer, wait, op) {
+        Ok((h, ev)) => {
+            if blocking {
+                let st = ev.wait();
+                if st < 0 {
+                    store_or_release(evt, h);
+                    return st;
+                }
+            }
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueCopyBuffer`.
+pub fn enqueue_copy_buffer(
+    queue: QueueH,
+    src: MemH,
+    dst: MemH,
+    src_off: usize,
+    dst_off: usize,
+    len: usize,
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let (Some(s), Some(d)) = (buffer::lookup(src), buffer::lookup(dst)) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    if src_off + len > s.size || dst_off + len > d.size {
+        return CL_INVALID_VALUE;
+    }
+    if src == dst {
+        let (a, b) = (src_off.min(dst_off), src_off.max(dst_off));
+        if a + len > b {
+            return CL_MEM_COPY_OVERLAP;
+        }
+    }
+    let op = Op::Copy { src: s, dst: d, src_off, dst_off, len };
+    match enqueue(&q, CommandType::CopyBuffer, wait, op) {
+        Ok((h, _)) => {
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueFillBuffer`.
+pub fn enqueue_fill_buffer(
+    queue: QueueH,
+    mem: MemH,
+    pattern: &[u8],
+    offset: usize,
+    len: usize,
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(b) = buffer::lookup(mem) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    if pattern.is_empty() || len % pattern.len() != 0 || offset + len > b.size {
+        return CL_INVALID_VALUE;
+    }
+    let op = Op::Fill { buf: b, offset, len, pattern: pattern.to_vec() };
+    match enqueue(&q, CommandType::FillBuffer, wait, op) {
+        Ok((h, _)) => {
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueReadImage` (blocking form — safe). `dst` receives tightly
+/// packed rows of the requested rectangle.
+pub fn enqueue_read_image(
+    queue: QueueH,
+    mem: MemH,
+    blocking: bool,
+    origin: (usize, usize),
+    region: (usize, usize),
+    dst: &mut [u8],
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    if !blocking {
+        return CL_INVALID_OPERATION;
+    }
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(img) = image::lookup(mem) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    let need = region.0 * region.1 * img.desc.format.pixel_size();
+    if dst.len() != need {
+        return CL_INVALID_VALUE;
+    }
+    let len = dst.len();
+    let op = Op::ReadImage { img, origin, region, dst: SendPtr(dst.as_mut_ptr()), len };
+    match enqueue(&q, CommandType::ReadBuffer, wait, op) {
+        Ok((h, ev)) => {
+            let st = ev.wait();
+            if st < 0 {
+                store_or_release(evt, h);
+                return st;
+            }
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueWriteImage` (data snapshot at enqueue).
+pub fn enqueue_write_image(
+    queue: QueueH,
+    mem: MemH,
+    blocking: bool,
+    origin: (usize, usize),
+    region: (usize, usize),
+    src: &[u8],
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(img) = image::lookup(mem) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    let need = region.0 * region.1 * img.desc.format.pixel_size();
+    if src.len() != need {
+        return CL_INVALID_VALUE;
+    }
+    let op = Op::WriteImage { img, origin, region, data: src.to_vec() };
+    match enqueue(&q, CommandType::WriteBuffer, wait, op) {
+        Ok((h, ev)) => {
+            if blocking {
+                let st = ev.wait();
+                if st < 0 {
+                    store_or_release(evt, h);
+                    return st;
+                }
+            }
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueFillImage`.
+pub fn enqueue_fill_image(
+    queue: QueueH,
+    mem: MemH,
+    pixel: &[u8],
+    origin: (usize, usize),
+    region: (usize, usize),
+    wait: &[EventH],
+    evt: Option<&mut EventH>,
+) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let Some(img) = image::lookup(mem) else {
+        return CL_INVALID_MEM_OBJECT;
+    };
+    if pixel.len() != img.desc.format.pixel_size() {
+        return CL_INVALID_VALUE;
+    }
+    let op = Op::FillImage { img, origin, region, pixel: pixel.to_vec() };
+    match enqueue(&q, CommandType::FillBuffer, wait, op) {
+        Ok((h, _)) => {
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clEnqueueMarkerWithWaitList`.
+pub fn enqueue_marker(queue: QueueH, wait: &[EventH], evt: Option<&mut EventH>) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    match enqueue(&q, CommandType::Marker, wait, Op::Marker) {
+        Ok((h, _)) => {
+            store_or_release(evt, h);
+            CL_SUCCESS
+        }
+        Err(e) => e,
+    }
+}
+
+/// `clFinish`: block until every enqueued command has completed.
+pub fn finish(queue: QueueH) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    let (tx, rx) = mpsc::sync_channel(0);
+    if q.tx.send(Msg::Flush(tx)).is_err() {
+        return CL_INVALID_COMMAND_QUEUE;
+    }
+    match rx.recv() {
+        Ok(()) => CL_SUCCESS,
+        Err(_) => CL_INVALID_COMMAND_QUEUE,
+    }
+}
+
+/// `clFlush` — commands dispatch eagerly, so this is a no-op beyond
+/// handle validation.
+pub fn flush(queue: QueueH) -> ClStatus {
+    if registry::get_queue(queue.0).is_none() {
+        return CL_INVALID_COMMAND_QUEUE;
+    }
+    CL_SUCCESS
+}
+
+pub fn retain_command_queue(queue: QueueH) -> ClStatus {
+    if registry::get_queue(queue.0).is_none() {
+        return CL_INVALID_COMMAND_QUEUE;
+    }
+    if registry::retain(queue.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_COMMAND_QUEUE
+    }
+}
+
+pub fn release_command_queue(queue: QueueH) -> ClStatus {
+    if registry::get_queue(queue.0).is_none() {
+        return CL_INVALID_COMMAND_QUEUE;
+    }
+    if registry::release(queue.0) {
+        CL_SUCCESS
+    } else {
+        CL_INVALID_COMMAND_QUEUE
+    }
+}
+
+/// `clGetCommandQueueInfo` subset.
+pub fn get_queue_device(queue: QueueH, out: &mut DeviceId) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    *out = q.device;
+    CL_SUCCESS
+}
+
+pub fn get_queue_properties(queue: QueueH, out: &mut QueueProps) -> ClStatus {
+    let Some(q) = registry::get_queue(queue.0) else {
+        return CL_INVALID_COMMAND_QUEUE;
+    };
+    *out = q.props;
+    CL_SUCCESS
+}
+
+#[allow(dead_code)]
+pub(crate) fn lookup(queue: QueueH) -> Option<Arc<QueueObj>> {
+    registry::get_queue(queue.0)
+}

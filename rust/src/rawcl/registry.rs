@@ -1,0 +1,163 @@
+//! Global object registry — the substrate's handle table.
+//!
+//! OpenCL objects are reference-counted driver objects addressed by
+//! opaque handles; using a released handle is an error the driver
+//! detects. The registry reproduces that: objects live in a global table
+//! keyed by the handle value, `retain_*`/`release_*` adjust refcounts,
+//! and lookups of dead handles fail with `CL_INVALID_*`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::buffer::BufferObj;
+use super::context::ContextObj;
+use super::event::EventObj;
+use super::image::ImageObj;
+use super::kernel::KernelObj;
+use super::program::ProgramObj;
+use super::queue::QueueObj;
+
+/// Any registry-managed object.
+#[derive(Clone)]
+pub enum Obj {
+    Context(Arc<ContextObj>),
+    Queue(Arc<QueueObj>),
+    Program(Arc<ProgramObj>),
+    Kernel(Arc<KernelObj>),
+    Buffer(Arc<BufferObj>),
+    Image(Arc<ImageObj>),
+    Event(Arc<EventObj>),
+}
+
+struct Entry {
+    obj: Obj,
+    refcount: u32,
+}
+
+#[derive(Default)]
+pub struct Registry {
+    map: HashMap<u64, Entry>,
+    next_id: u64,
+}
+
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Registry> {
+    REGISTRY.get_or_init(|| {
+        Mutex::new(Registry { map: HashMap::new(), next_id: 1 })
+    })
+}
+
+/// Insert an object with refcount 1; returns its handle value.
+pub fn insert(obj: Obj) -> u64 {
+    let mut reg = registry().lock().unwrap();
+    let id = reg.next_id;
+    reg.next_id += 1;
+    reg.map.insert(id, Entry { obj, refcount: 1 });
+    id
+}
+
+/// Look up a live object.
+pub fn get(id: u64) -> Option<Obj> {
+    registry().lock().unwrap().map.get(&id).map(|e| e.obj.clone())
+}
+
+/// Increment the refcount; false if the handle is dead.
+pub fn retain(id: u64) -> bool {
+    let mut reg = registry().lock().unwrap();
+    match reg.map.get_mut(&id) {
+        Some(e) => {
+            e.refcount += 1;
+            true
+        }
+        None => false,
+    }
+}
+
+/// Decrement the refcount, removing the object at zero; false if dead.
+pub fn release(id: u64) -> bool {
+    let mut reg = registry().lock().unwrap();
+    match reg.map.get_mut(&id) {
+        Some(e) => {
+            e.refcount -= 1;
+            if e.refcount == 0 {
+                reg.map.remove(&id);
+            }
+            true
+        }
+        None => false,
+    }
+}
+
+/// Current refcount (None if dead) — used by tests and `memcheck`.
+pub fn refcount(id: u64) -> Option<u32> {
+    registry().lock().unwrap().map.get(&id).map(|e| e.refcount)
+}
+
+/// Number of live objects — the substrate-level leak check.
+pub fn live_count() -> usize {
+    registry().lock().unwrap().map.len()
+}
+
+/// Typed lookup helpers: each returns `None` when the handle is dead *or*
+/// refers to an object of another type (OpenCL's `CL_INVALID_<type>`).
+macro_rules! typed_get {
+    ($fn_name:ident, $variant:ident, $ty:ty) => {
+        pub fn $fn_name(id: u64) -> Option<Arc<$ty>> {
+            match get(id) {
+                Some(Obj::$variant(o)) => Some(o),
+                _ => None,
+            }
+        }
+    };
+}
+
+typed_get!(get_context, Context, ContextObj);
+typed_get!(get_queue, Queue, QueueObj);
+typed_get!(get_program, Program, ProgramObj);
+typed_get!(get_kernel, Kernel, KernelObj);
+typed_get!(get_buffer, Buffer, BufferObj);
+typed_get!(get_image, Image, ImageObj);
+typed_get!(get_event, Event, EventObj);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::context::ContextObj;
+
+    fn dummy_ctx() -> Obj {
+        Obj::Context(Arc::new(ContextObj::for_tests()))
+    }
+
+    #[test]
+    fn insert_get_release_lifecycle() {
+        let id = insert(dummy_ctx());
+        assert!(get(id).is_some());
+        assert_eq!(refcount(id), Some(1));
+        assert!(retain(id));
+        assert_eq!(refcount(id), Some(2));
+        assert!(release(id));
+        assert!(get(id).is_some());
+        assert!(release(id));
+        assert!(get(id).is_none(), "object must die at refcount 0");
+        assert!(!release(id), "double release is detected");
+        assert!(!retain(id), "retain after death is detected");
+    }
+
+    #[test]
+    fn typed_get_rejects_wrong_type() {
+        let id = insert(dummy_ctx());
+        assert!(get_context(id).is_some());
+        assert!(get_queue(id).is_none(), "context is not a queue");
+        release(id);
+    }
+
+    #[test]
+    fn handles_are_unique() {
+        let a = insert(dummy_ctx());
+        let b = insert(dummy_ctx());
+        assert_ne!(a, b);
+        release(a);
+        release(b);
+    }
+}

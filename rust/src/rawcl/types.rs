@@ -1,0 +1,241 @@
+//! Handle types and info-query keys for the `rawcl` substrate.
+//!
+//! Handles are opaque 64-bit ids into the global [`super::registry`], like
+//! OpenCL's `cl_context`/`cl_mem`/… pointers: `Copy`, comparable, and
+//! *invalid after release* (using one returns `CL_INVALID_*`).
+
+use std::fmt;
+
+/// Minimal bitflags without the external crate.
+macro_rules! bitflags_like {
+    ($(#[$doc:meta])* pub $name:ident: $ty:ty { $(const $flag:ident = $val:expr;)* }) => {
+        $(#[$doc])*
+        #[derive(Copy, Clone, PartialEq, Eq, Hash, Debug, Default)]
+        pub struct $name(pub $ty);
+
+        impl $name {
+            $(pub const $flag: Self = Self($val);)*
+
+            pub const fn empty() -> Self {
+                Self(0)
+            }
+
+            pub const fn contains(self, other: Self) -> bool {
+                self.0 & other.0 == other.0
+            }
+
+            pub const fn union(self, other: Self) -> Self {
+                Self(self.0 | other.0)
+            }
+
+            pub const fn intersects(self, other: Self) -> bool {
+                self.0 & other.0 != 0
+            }
+        }
+
+        impl std::ops::BitOr for $name {
+            type Output = Self;
+            fn bitor(self, rhs: Self) -> Self {
+                Self(self.0 | rhs.0)
+            }
+        }
+    };
+}
+
+macro_rules! handle {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Copy, Clone, PartialEq, Eq, Hash)]
+        pub struct $name(pub u64);
+
+        impl $name {
+            /// The null handle (never valid).
+            pub const NULL: Self = Self(0);
+
+            pub fn is_null(self) -> bool {
+                self.0 == 0
+            }
+        }
+
+        impl fmt::Debug for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, concat!(stringify!($name), "({:#x})"), self.0)
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::NULL
+            }
+        }
+    };
+}
+
+handle!(/** Context handle (`cl_context`). */ ContextH);
+handle!(/** Command-queue handle (`cl_command_queue`). */ QueueH);
+handle!(/** Program handle (`cl_program`). */ ProgramH);
+handle!(/** Kernel handle (`cl_kernel`). */ KernelH);
+handle!(/** Memory-object handle (`cl_mem`). */ MemH);
+handle!(/** Event handle (`cl_event`). */ EventH);
+
+/// Platform id — a small index, not registry-managed (platforms live for
+/// the whole process, like OpenCL platform ids).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub struct PlatformId(pub u32);
+
+/// Device id — `(platform index, device index)` packed; devices are also
+/// process-lifetime objects.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub struct DeviceId(pub u32);
+
+bitflags_like! {
+    /// `cl_device_type` bitfield.
+    pub DeviceType: u64 {
+        const DEFAULT = 1 << 0;
+        const CPU = 1 << 1;
+        const GPU = 1 << 2;
+        const ACCELERATOR = 1 << 3;
+        const ALL = 0xFFFF_FFFF;
+    }
+}
+
+bitflags_like! {
+    /// `cl_command_queue_properties` bitfield.
+    pub QueueProps: u64 {
+        const OUT_OF_ORDER = 1 << 0;
+        const PROFILING_ENABLE = 1 << 1;
+    }
+}
+
+bitflags_like! {
+    /// `cl_mem_flags` bitfield.
+    pub MemFlags: u64 {
+        const READ_WRITE = 1 << 0;
+        const WRITE_ONLY = 1 << 1;
+        const READ_ONLY = 1 << 2;
+        const COPY_HOST_PTR = 1 << 5;
+    }
+}
+
+/// `clGetPlatformInfo` keys.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum PlatformInfo {
+    Name,
+    Vendor,
+    Version,
+    Profile,
+    Extensions,
+}
+
+/// `clGetDeviceInfo` keys (subset the framework and utilities use).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum DeviceInfo {
+    Name,
+    Vendor,
+    Type,
+    MaxComputeUnits,
+    MaxWorkGroupSize,
+    PreferredWorkGroupSizeMultiple,
+    MaxWorkItemDimensions,
+    MaxWorkItemSizes,
+    GlobalMemSize,
+    LocalMemSize,
+    MaxMemAllocSize,
+    MaxClockFrequency,
+    Version,
+    DriverVersion,
+    Available,
+    Extensions,
+    /// cf4rs extension: simulated-vs-native backend discriminator.
+    BackendKind,
+}
+
+/// `clGetEventProfilingInfo` keys.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum ProfilingInfo {
+    Queued,
+    Submit,
+    Start,
+    End,
+}
+
+/// `clGetKernelWorkGroupInfo` keys.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum KernelWorkGroupInfo {
+    WorkGroupSize,
+    PreferredWorkGroupSizeMultiple,
+}
+
+/// Command types recorded on events (`cl_command_type`).
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum CommandType {
+    NdRangeKernel,
+    ReadBuffer,
+    WriteBuffer,
+    CopyBuffer,
+    FillBuffer,
+    Marker,
+    User,
+}
+
+impl CommandType {
+    /// Display name used when an event has no user-assigned name
+    /// (paper §4.3: unnamed events aggregate by type).
+    pub fn display_name(self) -> &'static str {
+        match self {
+            Self::NdRangeKernel => "NDRANGE_KERNEL",
+            Self::ReadBuffer => "READ_BUFFER",
+            Self::WriteBuffer => "WRITE_BUFFER",
+            Self::CopyBuffer => "COPY_BUFFER",
+            Self::FillBuffer => "FILL_BUFFER",
+            Self::Marker => "MARKER",
+            Self::User => "USER",
+        }
+    }
+}
+
+/// Event execution status (`cl_int` in OpenCL: CL_QUEUED..CL_COMPLETE,
+/// negative = error).
+pub const CL_COMPLETE: i32 = 0;
+pub const CL_RUNNING: i32 = 1;
+pub const CL_SUBMITTED: i32 = 2;
+pub const CL_QUEUED: i32 = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_handles() {
+        assert!(ContextH::NULL.is_null());
+        assert!(!ContextH(7).is_null());
+        assert_eq!(QueueH::default(), QueueH::NULL);
+    }
+
+    #[test]
+    fn handle_debug_format() {
+        assert_eq!(format!("{:?}", MemH(0x2a)), "MemH(0x2a)");
+    }
+
+    #[test]
+    fn device_type_flags() {
+        let t = DeviceType::GPU | DeviceType::ACCELERATOR;
+        assert!(t.contains(DeviceType::GPU));
+        assert!(!t.contains(DeviceType::CPU));
+        assert!(DeviceType::ALL.contains(DeviceType::CPU));
+    }
+
+    #[test]
+    fn queue_props() {
+        let p = QueueProps::PROFILING_ENABLE;
+        assert!(p.contains(QueueProps::PROFILING_ENABLE));
+        assert!(!p.contains(QueueProps::OUT_OF_ORDER));
+        assert!(QueueProps::empty().0 == 0);
+    }
+
+    #[test]
+    fn command_display_names_match_paper_figure3() {
+        assert_eq!(CommandType::ReadBuffer.display_name(), "READ_BUFFER");
+        assert_eq!(CommandType::NdRangeKernel.display_name(), "NDRANGE_KERNEL");
+    }
+}

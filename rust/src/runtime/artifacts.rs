@@ -1,0 +1,260 @@
+//! Artifact manifest — the build-time contract between python and rust.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.tsv`; this module
+//! parses it and locates artifact files. The manifest plays the role of
+//! OpenCL kernel metadata queries: it tells the host each device program's
+//! entry signature (element type, problem size, input/output counts).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use super::literal::ElemType;
+
+/// What a device program computes — decides both the kernel-argument ABI
+/// (see [`crate::rawcl::kernelspec`]) and the simulated-device reference
+/// implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Listing S4: hash the global index into the first seed batch.
+    Init,
+    /// Listing S5: one xorshift step over the state vector.
+    Rng,
+    /// Fused k-step xorshift (perf artifact).
+    RngMulti,
+    /// Quickstart: elementwise f32 add.
+    VecAdd,
+    /// Quickstart: `a*x + y`.
+    Saxpy,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "init" => Self::Init,
+            "rng" => Self::Rng,
+            "rng_multi" => Self::RngMulti,
+            "vecadd" => Self::VecAdd,
+            "saxpy" => Self::Saxpy,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+
+    /// The kernel name exposed to hosts (what `clCreateKernel` takes).
+    pub fn kernel_name(self) -> &'static str {
+        match self {
+            Self::Init => "init",
+            Self::Rng => "rng",
+            Self::RngMulti => "rng_multi",
+            Self::VecAdd => "vecadd",
+            Self::Saxpy => "saxpy",
+        }
+    }
+}
+
+impl fmt::Display for ArtifactKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.kernel_name())
+    }
+}
+
+/// One row of the manifest: a lowered HLO module plus its signature.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Unique artifact name, e.g. `rng_n4096`.
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Problem size (elements in the state/output vector).
+    pub n: usize,
+    /// Fused step count (0/1 when not applicable).
+    pub k: usize,
+    pub dtype: ElemType,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+}
+
+impl Artifact {
+    /// Bytes per element of the principal vector.
+    pub fn elem_size(&self) -> usize {
+        self.dtype.size_bytes()
+    }
+
+    /// Size in bytes of the principal input/output vector.
+    pub fn vector_bytes(&self) -> usize {
+        self.n * self.elem_size()
+    }
+}
+
+/// Parsed `manifest.tsv`: the set of available device programs.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    by_name: HashMap<String, Artifact>,
+    dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, &dir)
+    }
+
+    /// Locate the artifacts directory: `$CF4RS_ARTIFACTS`, then
+    /// `./artifacts`, then `../artifacts` (for tests run from `rust/`).
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("CF4RS_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.tsv").exists() {
+                return Self::load(cand);
+            }
+        }
+        bail!(
+            "no artifacts/manifest.tsv found — run `make artifacts` \
+             (or set CF4RS_ARTIFACTS)"
+        )
+    }
+
+    /// Parse manifest text; `dir` is prepended to the file column.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        let expect = "name\tkind\tn\tk\tdtype\tnum_inputs\tnum_outputs\tfile";
+        if header != expect {
+            bail!("manifest header mismatch:\n got {header:?}\nwant {expect:?}");
+        }
+        let mut by_name = HashMap::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 8 {
+                bail!("manifest line {}: want 8 columns, got {}", lineno + 2, cols.len());
+            }
+            let art = Artifact {
+                name: cols[0].to_string(),
+                kind: ArtifactKind::parse(cols[1])?,
+                n: cols[2].parse().context("n column")?,
+                k: cols[3].parse().context("k column")?,
+                dtype: ElemType::parse(cols[4])?,
+                num_inputs: cols[5].parse().context("num_inputs column")?,
+                num_outputs: cols[6].parse().context("num_outputs column")?,
+                path: dir.join(cols[7]),
+            };
+            if by_name.insert(art.name.clone(), art).is_some() {
+                bail!("duplicate artifact name {:?}", cols[0]);
+            }
+        }
+        Ok(Self { by_name, dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.by_name.get(name)
+    }
+
+    /// Find the artifact of `kind` with problem size `n`.
+    pub fn find(&self, kind: ArtifactKind, n: usize) -> Option<&Artifact> {
+        self.by_name.values().find(|a| a.kind == kind && a.n == n)
+    }
+
+    /// All artifacts, name-sorted (stable output for devinfo/cclc).
+    pub fn iter_sorted(&self) -> Vec<&Artifact> {
+        let mut v: Vec<&Artifact> = self.by_name.values().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// The ladder of PRNG sizes present (sorted ascending).
+    pub fn rng_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == ArtifactKind::Rng)
+            .map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tkind\tn\tk\tdtype\tnum_inputs\tnum_outputs\tfile\n\
+        init_n4096\tinit\t4096\t0\tu64\t0\t1\tinit_n4096.hlo.txt\n\
+        rng_n4096\trng\t4096\t1\tu64\t1\t1\trng_n4096.hlo.txt\n\
+        vecadd_n1024\tvecadd\t1024\t0\tf32\t2\t1\tvecadd_n1024.hlo.txt\n";
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 3);
+        let rng = m.get("rng_n4096").unwrap();
+        assert_eq!(rng.kind, ArtifactKind::Rng);
+        assert_eq!(rng.n, 4096);
+        assert_eq!(rng.num_inputs, 1);
+        assert_eq!(rng.vector_bytes(), 4096 * 8);
+        assert_eq!(rng.path, Path::new("/tmp/a/rng_n4096.hlo.txt"));
+    }
+
+    #[test]
+    fn find_by_kind_and_size() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.find(ArtifactKind::Init, 4096).is_some());
+        assert!(m.find(ArtifactKind::Init, 1024).is_none());
+        assert_eq!(m.rng_sizes(), vec![4096]);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("nope\nx", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_name() {
+        let dup = format!(
+            "{}rng_n4096\trng\t4096\t1\tu64\t1\t1\tx.hlo.txt\n",
+            SAMPLE
+        );
+        assert!(Manifest::parse(&dup, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = "name\tkind\tn\tk\tdtype\tnum_inputs\tnum_outputs\tfile\n\
+            a\tmystery\t1\t0\tu64\t0\t1\ta.hlo.txt\n";
+        assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn discovers_real_artifacts_when_present() {
+        // Only meaningful after `make artifacts`; skip silently otherwise.
+        if let Ok(m) = Manifest::discover() {
+            assert!(!m.is_empty());
+            assert!(!m.rng_sizes().is_empty());
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Shared PJRT CPU client.
+//!
+//! PJRT client construction is expensive (thread pools, allocator); the
+//! whole process shares one lazily-initialised CPU client, mirroring how
+//! an OpenCL ICD exposes one platform handle per driver.
+//!
+//! ## Thread-safety model
+//!
+//! The `xla` crate's `PjRtClient` is an `Rc`-backed handle and is not
+//! `Send`: cloning it (which `compile`, `execute` and buffer creation do
+//! internally) mutates a non-atomic refcount. The underlying PJRT C API
+//! object *is* thread-compatible, so cf4rs makes cross-thread use sound by
+//! funnelling **every client-touching operation** through one global lock,
+//! [`pjrt_lock`]. Holders: [`super::executable`] (compile + execute).
+//! Plain `Literal` byte conversions do not touch the client and stay
+//! lock-free.
+//!
+//! Consequence (documented in DESIGN.md §Perf): the native CPU device
+//! behaves like a single-compute-unit device — two command queues can
+//! overlap a PJRT kernel with a host-side buffer read (the Fig. 5
+//! pattern), but not two PJRT kernels with each other.
+
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{Context as _, Result};
+
+/// See module docs: sound because all uses happen under [`pjrt_lock`].
+struct SendClient(xla::PjRtClient);
+
+// SAFETY: the inner Rc is only ever cloned/dropped while `pjrt_lock` is
+// held (enforced by this module exposing the client solely through
+// `with_client`), so refcount updates never race.
+unsafe impl Send for SendClient {}
+unsafe impl Sync for SendClient {}
+
+static CLIENT: OnceLock<SendClient> = OnceLock::new();
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+/// The lock serialising all PJRT client operations. Exposed so the
+/// executable module can hold it across compile/execute sequences.
+pub(crate) fn pjrt_lock() -> &'static Mutex<()> {
+    &PJRT_LOCK
+}
+
+fn init_client() -> &'static SendClient {
+    CLIENT.get_or_init(|| {
+        SendClient(xla::PjRtClient::cpu().expect(
+            "failed to initialise PJRT CPU client \
+             (is /opt/xla_extension/lib on the rpath?)",
+        ))
+    })
+}
+
+/// Run `f` with the global client while holding the PJRT lock.
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> R) -> R {
+    let _guard = PJRT_LOCK.lock().unwrap();
+    f(&init_client().0)
+}
+
+/// Legacy accessor used by single-threaded tools (devinfo, cclc).
+///
+/// Prefer [`with_client`]; this exists for read-only queries such as
+/// `platform_name` where the caller provably stays on one thread.
+pub fn global_client() -> &'static xla::PjRtClient {
+    let _guard = PJRT_LOCK.lock().unwrap();
+    &init_client().0
+}
+
+/// Fallible initialisation for diagnostics-friendly tools.
+pub fn try_platform_summary() -> Result<String> {
+    let _guard = PJRT_LOCK.lock().unwrap();
+    if CLIENT.get().is_none() {
+        // Probe construction separately so a broken environment produces
+        // an error value instead of a panic.
+        let c = xla::PjRtClient::cpu().context("initialising PJRT CPU client")?;
+        let _ = CLIENT.set(SendClient(c));
+    }
+    let c = &CLIENT.get().unwrap().0;
+    Ok(format!("{} ({} device(s))", c.platform_name(), c.device_count()))
+}
+
+/// Human-readable description of the PJRT platform (for devinfo).
+pub fn platform_summary() -> String {
+    with_client(|c| format!("{} ({} device(s))", c.platform_name(), c.device_count()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_is_cpu() {
+        assert!(platform_summary().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn summary_is_ok() {
+        assert!(try_platform_summary().unwrap().contains("device"));
+    }
+
+    #[test]
+    fn with_client_reentrant_sequential() {
+        let a = with_client(|c| c.device_count());
+        let b = with_client(|c| c.device_count());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,337 @@
+//! Compiled HLO modules and the process-wide executable cache.
+//!
+//! A [`CompiledModule`] owns one `PjRtLoadedExecutable` built from an HLO
+//! text artifact. The [`ExecutableCache`] memoises compilation per
+//! artifact name — OpenCL programs are built once per context and reused;
+//! the cache gives the substrate the same cost profile.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context as _, Result};
+
+use super::artifacts::Artifact;
+use super::client;
+use super::literal::{literal_to_bytes, ElemType};
+
+/// `xla::PjRtLoadedExecutable` holds an `Rc` handle to the client and is
+/// not `Send`/`Sync` by declaration. All operations that clone or drop
+/// that handle (compile, execute, executable drop) run under the global
+/// [`client::pjrt_lock`] — see the thread-safety notes in
+/// [`super::client`].
+struct SendExe(Option<xla::PjRtLoadedExecutable>);
+
+// SAFETY: every use of the inner executable (execute, drop) happens while
+// the global PJRT lock is held, so the non-atomic client refcount inside
+// never experiences a racing update.
+unsafe impl Send for SendExe {}
+unsafe impl Sync for SendExe {}
+
+impl Drop for SendExe {
+    fn drop(&mut self) {
+        // Dropping the executable decrements the client Rc — take the
+        // lock so this cannot race a compile/execute on another thread.
+        let _guard = client::pjrt_lock().lock().unwrap();
+        self.0.take();
+    }
+}
+
+/// One compiled device program (an HLO module on the PJRT CPU client).
+pub struct CompiledModule {
+    artifact: Artifact,
+    exe: SendExe,
+    /// Wall time spent in `client.compile` — surfaced by `cclc` and the
+    /// program-build log.
+    pub compile_time: std::time::Duration,
+    /// HLO instruction count (crude program-complexity metric for cclc).
+    pub instruction_count: usize,
+}
+
+impl CompiledModule {
+    /// Load + compile an artifact on the global PJRT client.
+    pub fn compile(artifact: &Artifact) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&artifact.path)
+            .with_context(|| format!("parsing {}", artifact.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client::with_client(|c| c.compile(&comp))
+            .with_context(|| format!("compiling {}", artifact.name))?;
+        let text = std::fs::read_to_string(&artifact.path)?;
+        Ok(Self {
+            artifact: artifact.clone(),
+            exe: SendExe(Some(exe)),
+            compile_time: t0.elapsed(),
+            instruction_count: count_instructions(&text),
+        })
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Execute with literal inputs; returns one byte vector per output.
+    ///
+    /// The AOT recipe lowers with `return_tuple=True`, so the executable
+    /// yields a single tuple literal which is decomposed here.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<u8>>> {
+        if inputs.len() != self.artifact.num_inputs {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.artifact.name,
+                self.artifact.num_inputs,
+                inputs.len()
+            );
+        }
+        let result = {
+            // Global PJRT lock: execute clones the client handle into the
+            // output buffers and drops those clones before returning.
+            let _guard = client::pjrt_lock().lock().unwrap();
+            let exe = self.exe.0.as_ref().expect("executable present until drop");
+            let bufs = exe.execute::<xla::Literal>(inputs)?;
+            bufs[0][0].to_literal_sync()?
+        };
+        let parts = result
+            .to_tuple()
+            .context("expected tuple result (return_tuple=True lowering)")?;
+        if parts.len() != self.artifact.num_outputs {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.artifact.name,
+                self.artifact.num_outputs,
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .map(|lit| literal_to_bytes(self.output_type(), lit))
+            .collect()
+    }
+
+    /// Element type of the outputs (single-typed in all our artifacts).
+    pub fn output_type(&self) -> ElemType {
+        self.artifact.dtype
+    }
+}
+
+/// A compiled HLO module built from in-memory text (no manifest entry).
+///
+/// This is the substrate's program-build path: `rawcl` programs are
+/// created from source strings, so they compile through here rather than
+/// through the artifact-keyed [`CompiledModule`].
+pub struct TextModule {
+    exe: SendExe,
+    /// Stripped module name (what `rawcl` exposes as the kernel name).
+    pub name: String,
+    pub compile_time: std::time::Duration,
+    pub instruction_count: usize,
+}
+
+impl TextModule {
+    /// Parse + compile HLO text on the global PJRT client.
+    pub fn compile(text: &str) -> Result<Self> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::parse_and_return_unverified_module(
+            text.as_bytes(),
+        )
+        .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let name = comp.name();
+        let exe = client::with_client(|c| c.compile(&comp))
+            .with_context(|| format!("compiling module {name}"))?;
+        Ok(Self {
+            exe: SendExe(Some(exe)),
+            name: name.strip_prefix("jit_").unwrap_or(&name).to_string(),
+            compile_time: t0.elapsed(),
+            instruction_count: count_instructions(text),
+        })
+    }
+
+    /// Execute and return the raw output literals (callers decode them
+    /// straight into their destinations — the no-staging path).
+    pub fn execute_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = {
+            let _guard = client::pjrt_lock().lock().unwrap();
+            let exe = self.exe.0.as_ref().expect("executable present until drop");
+            let bufs = exe.execute::<xla::Literal>(inputs)?;
+            bufs[0][0].to_literal_sync()?
+        };
+        result
+            .to_tuple()
+            .context("expected tuple result (return_tuple=True lowering)")
+    }
+
+    /// Execute with literal inputs; returns one byte vector per output.
+    /// `out_types` gives the element type of each tuple element.
+    pub fn execute(
+        &self,
+        inputs: &[xla::Literal],
+        out_types: &[ElemType],
+    ) -> Result<Vec<Vec<u8>>> {
+        let result = {
+            let _guard = client::pjrt_lock().lock().unwrap();
+            let exe = self.exe.0.as_ref().expect("executable present until drop");
+            let bufs = exe.execute::<xla::Literal>(inputs)?;
+            bufs[0][0].to_literal_sync()?
+        };
+        let parts = result
+            .to_tuple()
+            .context("expected tuple result (return_tuple=True lowering)")?;
+        if parts.len() != out_types.len() {
+            bail!("expected {} outputs, got {}", out_types.len(), parts.len());
+        }
+        parts
+            .iter()
+            .zip(out_types)
+            .map(|(lit, ty)| literal_to_bytes(*ty, lit))
+            .collect()
+    }
+}
+
+/// Global compile cache for text modules, keyed by a content hash.
+///
+/// Real OpenCL drivers cache program binaries; without this, every
+/// service run pays a full PJRT compilation (tens of ms) per kernel,
+/// which dominated the native-device benchmarks (EXPERIMENTS.md §Perf).
+/// Collisions are broken by comparing the stored source.
+static TEXT_CACHE: Mutex<Vec<(u64, String, Arc<TextModule>)>> = Mutex::new(Vec::new());
+
+fn fnv1a(text: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl TextModule {
+    /// Cached variant of [`TextModule::compile`]: returns the previously
+    /// compiled module when the same source was built before (and is
+    /// still alive somewhere).
+    pub fn compile_cached(text: &str) -> Result<Arc<TextModule>> {
+        let h = fnv1a(text);
+        {
+            let cache = TEXT_CACHE.lock().unwrap();
+            for (hash, src, module) in cache.iter() {
+                if *hash == h && src == text {
+                    return Ok(module.clone());
+                }
+            }
+        }
+        let module = Arc::new(Self::compile(text)?);
+        // Entries are kept for the process lifetime — the working set is
+        // bounded by the artifact ladder (a handful of sources), exactly
+        // like a driver's on-disk binary cache.
+        TEXT_CACHE.lock().unwrap().push((h, text.to_string(), module.clone()));
+        Ok(module)
+    }
+}
+
+/// Count `=`-assignments in HLO text — a stable proxy for instruction
+/// count that does not require a full parser.
+pub fn count_instructions(hlo_text: &str) -> usize {
+    hlo_text
+        .lines()
+        .map(str::trim_start)
+        .filter(|l| {
+            (l.starts_with("ROOT ") || l.split_whitespace().nth(1) == Some("="))
+                && l.contains(" = ")
+        })
+        .count()
+}
+
+/// Process-wide compile cache, keyed by artifact name.
+#[derive(Default)]
+pub struct ExecutableCache {
+    map: Mutex<HashMap<String, Arc<CompiledModule>>>,
+}
+
+impl ExecutableCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get the compiled module for `artifact`, compiling on first use.
+    pub fn get_or_compile(&self, artifact: &Artifact) -> Result<Arc<CompiledModule>> {
+        // Fast path under the lock; compile outside it would allow
+        // duplicate work but never inconsistency — we keep it simple and
+        // compile under the lock (compiles are rare, once per artifact).
+        let mut map = self.map.lock().unwrap();
+        if let Some(m) = map.get(&artifact.name) {
+            return Ok(m.clone());
+        }
+        let module = Arc::new(CompiledModule::compile(artifact)?);
+        map.insert(artifact.name.clone(), module.clone());
+        Ok(module)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The global cache used by the `rawcl` native device.
+pub fn global_cache() -> &'static ExecutableCache {
+    static CACHE: std::sync::OnceLock<ExecutableCache> = std::sync::OnceLock::new();
+    CACHE.get_or_init(ExecutableCache::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::literal::{bytes_from_f32, f32_from_bytes, literal_from_bytes};
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::discover().ok()
+    }
+
+    #[test]
+    fn count_instructions_on_snippet() {
+        let text = "HloModule m\n\nENTRY e {\n  a = f32[2] parameter(0)\n  \
+                    b = f32[2] parameter(1)\n  ROOT c = f32[2] add(a, b)\n}\n";
+        assert_eq!(count_instructions(text), 3);
+    }
+
+    #[test]
+    fn compile_and_execute_vecadd() {
+        let Some(m) = manifest() else { return };
+        let art = m.get("vecadd_n1024").expect("vecadd artifact");
+        let module = CompiledModule::compile(art).unwrap();
+        assert!(module.instruction_count > 0);
+
+        let x: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..1024).map(|i| 2.0 * i as f32).collect();
+        let lx = literal_from_bytes(ElemType::F32, &bytes_from_f32(&x), false).unwrap();
+        let ly = literal_from_bytes(ElemType::F32, &bytes_from_f32(&y), false).unwrap();
+        let out = module.execute(&[lx, ly]).unwrap();
+        assert_eq!(out.len(), 1);
+        let sum = f32_from_bytes(&out[0]).unwrap();
+        assert_eq!(sum[10], 30.0);
+        assert_eq!(sum[1023], 3.0 * 1023.0);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity() {
+        let Some(m) = manifest() else { return };
+        let art = m.get("vecadd_n1024").unwrap();
+        let module = global_cache().get_or_compile(art).unwrap();
+        assert!(module.execute(&[]).is_err());
+    }
+
+    #[test]
+    fn cache_memoises() {
+        let Some(m) = manifest() else { return };
+        let art = m.get("vecadd_n1024").unwrap();
+        let cache = ExecutableCache::new();
+        let a = cache.get_or_compile(art).unwrap();
+        let b = cache.get_or_compile(art).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+}

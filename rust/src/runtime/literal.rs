@@ -1,0 +1,228 @@
+//! Byte-buffer ⇄ `xla::Literal` conversion.
+//!
+//! The `rawcl` substrate stores device memory as plain byte vectors (like
+//! OpenCL buffers); PJRT wants typed literals. These helpers convert in
+//! both directions without interpreting element values.
+
+use anyhow::{bail, Result};
+
+/// Element types crossing the python→rust boundary.
+///
+/// Only what the artifacts actually use — extend as the model grows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElemType {
+    U64,
+    U32,
+    F32,
+}
+
+impl ElemType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "u64" => Self::U64,
+            "u32" => Self::U32,
+            "f32" => Self::F32,
+            other => bail!("unknown element type {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Self::U64 => 8,
+            Self::U32 | Self::F32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::U64 => "u64",
+            Self::U32 => "u32",
+            Self::F32 => "f32",
+        }
+    }
+
+    fn primitive(self) -> xla::PrimitiveType {
+        match self {
+            Self::U64 => xla::PrimitiveType::U64,
+            Self::U32 => xla::PrimitiveType::U32,
+            Self::F32 => xla::PrimitiveType::F32,
+        }
+    }
+}
+
+/// Build a rank-1 literal of `ty` from raw little-endian bytes.
+///
+/// A scalar (rank-0) literal is produced when `scalar` is true; the byte
+/// slice must then hold exactly one element.
+pub fn literal_from_bytes(ty: ElemType, bytes: &[u8], scalar: bool) -> Result<xla::Literal> {
+    let esz = ty.size_bytes();
+    if bytes.len() % esz != 0 {
+        bail!(
+            "byte length {} not a multiple of element size {esz}",
+            bytes.len()
+        );
+    }
+    let n = bytes.len() / esz;
+    if scalar && n != 1 {
+        bail!("scalar literal needs exactly 1 element, got {n}");
+    }
+    let dims: &[usize] = if scalar { &[] } else { &[n] };
+    let mut lit = xla::Literal::create_from_shape(ty.primitive(), dims);
+    // copy_raw_from is typed; go through the matching slice view.
+    match ty {
+        ElemType::U64 => lit.copy_raw_from(cast_slice::<u64>(bytes))?,
+        ElemType::U32 => lit.copy_raw_from(cast_slice::<u32>(bytes))?,
+        ElemType::F32 => lit.copy_raw_from(cast_slice::<f32>(bytes))?,
+    }
+    Ok(lit)
+}
+
+/// Extract raw little-endian bytes from a rank-≤1 literal of `ty`.
+pub fn literal_to_bytes(ty: ElemType, lit: &xla::Literal) -> Result<Vec<u8>> {
+    let count = lit.element_count();
+    let mut out = vec![0u8; count * ty.size_bytes()];
+    match ty {
+        ElemType::U64 => lit.copy_raw_to(cast_slice_mut::<u64>(&mut out))?,
+        ElemType::U32 => lit.copy_raw_to(cast_slice_mut::<u32>(&mut out))?,
+        ElemType::F32 => lit.copy_raw_to(cast_slice_mut::<f32>(&mut out))?,
+    }
+    Ok(out)
+}
+
+/// Extract bytes from a rank-≤1 literal into a caller slice (no alloc).
+pub fn literal_to_slice(ty: ElemType, lit: &xla::Literal, out: &mut [u8]) -> Result<()> {
+    let need = lit.element_count() * ty.size_bytes();
+    if out.len() != need {
+        bail!("output slice is {} bytes, literal needs {need}", out.len());
+    }
+    match ty {
+        ElemType::U64 => lit.copy_raw_to(cast_slice_mut::<u64>(out))?,
+        ElemType::U32 => lit.copy_raw_to(cast_slice_mut::<u32>(out))?,
+        ElemType::F32 => lit.copy_raw_to(cast_slice_mut::<f32>(out))?,
+    }
+    Ok(())
+}
+
+/// View a byte slice as a typed slice (alignment-checked).
+fn cast_slice<T>(bytes: &[u8]) -> &[T] {
+    let esz = std::mem::size_of::<T>();
+    assert_eq!(bytes.len() % esz, 0);
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<T>(), 0,
+        "buffer misaligned for element type");
+    // SAFETY: length and alignment checked above; T is a plain-old-data
+    // numeric type in all instantiations in this module.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, bytes.len() / esz) }
+}
+
+fn cast_slice_mut<T>(bytes: &mut [u8]) -> &mut [T] {
+    let esz = std::mem::size_of::<T>();
+    assert_eq!(bytes.len() % esz, 0);
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<T>(), 0,
+        "buffer misaligned for element type");
+    // SAFETY: as above.
+    unsafe {
+        std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut T, bytes.len() / esz)
+    }
+}
+
+/// Convenience: encode a `u64` slice as little-endian bytes.
+pub fn bytes_from_u64(v: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Convenience: decode little-endian bytes into `u64`s.
+pub fn u64_from_bytes(b: &[u8]) -> Result<Vec<u64>> {
+    if b.len() % 8 != 0 {
+        bail!("length {} not a multiple of 8", b.len());
+    }
+    Ok(b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Convenience: encode an `f32` slice as little-endian bytes.
+pub fn bytes_from_f32(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Convenience: decode little-endian bytes into `f32`s.
+pub fn f32_from_bytes(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        bail!("length {} not a multiple of 4", b.len());
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Convenience: encode a `u32` scalar for kernel private args.
+pub fn bytes_from_u32(x: u32) -> Vec<u8> {
+    x.to_le_bytes().to_vec()
+}
+
+impl std::fmt::Display for ElemType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip() {
+        let v = vec![0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D];
+        let bytes = bytes_from_u64(&v);
+        let lit = literal_from_bytes(ElemType::U64, &bytes, false).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let back = literal_to_bytes(ElemType::U64, &lit).unwrap();
+        assert_eq!(u64_from_bytes(&back).unwrap(), v);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let v = vec![0.0f32, -1.5, f32::MAX, 1e-20];
+        let bytes = bytes_from_f32(&v);
+        let lit = literal_from_bytes(ElemType::F32, &bytes, false).unwrap();
+        let back = literal_to_bytes(ElemType::F32, &lit).unwrap();
+        assert_eq!(f32_from_bytes(&back).unwrap(), v);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit =
+            literal_from_bytes(ElemType::F32, &2.5f32.to_le_bytes(), true).unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.shape().unwrap().tuple_size(), None);
+    }
+
+    #[test]
+    fn scalar_rejects_vector_input() {
+        let bytes = bytes_from_f32(&[1.0, 2.0]);
+        assert!(literal_from_bytes(ElemType::F32, &bytes, true).is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_length() {
+        assert!(literal_from_bytes(ElemType::U64, &[0u8; 7], false).is_err());
+        assert!(u64_from_bytes(&[0u8; 9]).is_err());
+        assert!(f32_from_bytes(&[0u8; 5]).is_err());
+    }
+
+    #[test]
+    fn elem_type_parse() {
+        assert_eq!(ElemType::parse("u64").unwrap(), ElemType::U64);
+        assert_eq!(ElemType::parse("f32").unwrap(), ElemType::F32);
+        assert!(ElemType::parse("i8").is_err());
+        assert_eq!(ElemType::U64.size_bytes(), 8);
+    }
+}

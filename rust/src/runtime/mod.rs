@@ -1,0 +1,19 @@
+//! PJRT runtime bridge — loads AOT-lowered HLO artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it (the [`crate::rawcl`] substrate and the [`crate::ccl`] framework)
+//! deals in buffers-of-bytes and artifact names.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py` and
+//! DESIGN.md): `HloModuleProto::from_text_file` reassigns instruction ids,
+//! which is what makes jax ≥ 0.5 output loadable on xla_extension 0.5.1.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+pub mod literal;
+
+pub use artifacts::{Artifact, ArtifactKind, Manifest};
+pub use client::global_client;
+pub use executable::{CompiledModule, ExecutableCache, TextModule};
+pub use literal::ElemType;

@@ -1,0 +1,273 @@
+//! `cf4rs cclc` — the `ccl_c` utility (paper §3.1): offline kernel
+//! compiler, linker and analyzer.
+//!
+//! Modes:
+//! * `build` — compile HLO sources for a device (native devices go
+//!   through the PJRT compiler) and print the build log;
+//! * `analyze` — parse + compile and report per-kernel statistics:
+//!   signature, instruction count, buffer footprint, estimated op
+//!   counts, and a roofline time estimate per device profile;
+//! * `link` — combine several single-kernel sources into one program and
+//!   verify they build together (the OpenCL "link" step's moral
+//!   equivalent in an AOT world).
+
+use crate::ccl::{Context, Program};
+use crate::ccl::errors::{CclError, CclResult};
+use crate::rawcl::hlometa;
+use crate::rawcl::kernelspec;
+use crate::rawcl::types::DeviceType;
+use crate::runtime::executable::count_instructions;
+
+#[derive(Debug, PartialEq)]
+pub enum Mode {
+    Build,
+    Analyze,
+    Link,
+}
+
+#[derive(Debug)]
+pub struct CclcOpts {
+    pub mode: Mode,
+    pub sources: Vec<String>,
+    pub options: String,
+    /// Target device type (`--device-type cpu|gpu`), default GPU
+    /// (mirrors ccl_c's default device selection).
+    pub device_type: DeviceType,
+}
+
+impl CclcOpts {
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut it = args.iter();
+        let mode = match it.next().map(|s| s.as_str()) {
+            Some("build") => Mode::Build,
+            Some("analyze") => Mode::Analyze,
+            Some("link") => Mode::Link,
+            other => return Err(format!("unknown cclc mode {other:?} (build|analyze|link)")),
+        };
+        let mut sources = Vec::new();
+        let mut options = String::new();
+        let mut device_type = DeviceType::GPU;
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "-o" | "--options" => {
+                    options = it.next().ok_or("--options needs a value")?.clone();
+                }
+                "-t" | "--device-type" => {
+                    let v = it.next().ok_or("--device-type needs cpu|gpu")?;
+                    device_type = match v.as_str() {
+                        "cpu" => DeviceType::CPU,
+                        "gpu" => DeviceType::GPU,
+                        other => return Err(format!("bad device type {other:?}")),
+                    };
+                }
+                path => sources.push(path.to_string()),
+            }
+        }
+        if sources.is_empty() {
+            return Err("no source files given".into());
+        }
+        Ok(Self { mode, sources, options, device_type })
+    }
+}
+
+/// Run cclc and return the report text.
+pub fn run(opts: &CclcOpts) -> CclResult<String> {
+    let ctx = Context::new_from_type(opts.device_type)?;
+    let mut out = String::new();
+    match opts.mode {
+        Mode::Build | Mode::Link => {
+            let prg = Program::new_from_source_files(&ctx, &opts.sources)?;
+            let res = prg.build_with_options(&opts.options);
+            let log = prg.build_log()?;
+            match res {
+                Ok(()) => {
+                    out.push_str(&format!(
+                        "build OK ({} kernel(s)): {}\n",
+                        prg.kernel_names()?.len(),
+                        prg.kernel_names()?.join(", ")
+                    ));
+                    out.push_str(&log);
+                }
+                Err(e) => {
+                    out.push_str(&format!("build FAILED: {e}\n"));
+                    out.push_str(&log);
+                    return Err(CclError::framework(out));
+                }
+            }
+        }
+        Mode::Analyze => {
+            let defines = kernelspec::parse_build_options(&opts.options)
+                .map_err(|bad| CclError::framework(format!("bad option {bad:?}")))?;
+            for path in &opts.sources {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    CclError::artifacts(format!("reading {path}: {e}"))
+                })?;
+                let meta = hlometa::parse_header(&text)
+                    .map_err(|e| CclError::framework(e.to_string()))?;
+                out.push_str(&format!("== {} (kernel `{}`)\n", path, meta.name));
+                out.push_str(&format!(
+                    "   inputs : {}\n",
+                    fmt_tensors(&meta.params)
+                ));
+                out.push_str(&format!(
+                    "   outputs: {}\n",
+                    fmt_tensors(&meta.results)
+                ));
+                out.push_str(&format!(
+                    "   instructions: {}\n",
+                    count_instructions(&text)
+                ));
+                match kernelspec::spec_for(&meta, &defines) {
+                    Ok(spec) => {
+                        out.push_str(&format!(
+                            "   abi: {} args, n={}, {} ops/elem, {} B/elem\n",
+                            spec.num_args(), spec.n, spec.ops_per_elem, spec.bytes_per_elem
+                        ));
+                        // Roofline estimates per device profile.
+                        for dev in crate::rawcl::device::devices() {
+                            let t = dev
+                                .profile
+                                .timing
+                                .kernel_ns(spec.total_ops(), spec.bytes_touched());
+                            out.push_str(&format!(
+                                "   est. time on {:<18}: {:>10.1} us\n",
+                                dev.profile.name,
+                                t as f64 / 1e3
+                            ));
+                        }
+                    }
+                    Err(e) => out.push_str(&format!("   abi: <{e}>\n")),
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn fmt_tensors(ts: &[hlometa::TensorMeta]) -> String {
+    if ts.is_empty() {
+        return "(none)".into();
+    }
+    ts.iter()
+        .map(|t| format!("{}{:?}", t.dtype.name(), t.dims))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// CLI entrypoint.
+pub fn main(args: &[String]) -> i32 {
+    let opts = match CclcOpts::parse(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("cclc: {e}");
+            eprintln!(
+                "usage: cf4rs cclc build|analyze|link [-o OPTS] [-t cpu|gpu] FILE..."
+            );
+            return 2;
+        }
+    };
+    match run(&opts) {
+        Ok(s) => {
+            print!("{s}");
+            0
+        }
+        Err(e) => {
+            eprintln!("cclc: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn art_path(name: &str) -> Option<String> {
+        Manifest::discover()
+            .ok()?
+            .get(name)
+            .map(|a| a.path.to_string_lossy().into_owned())
+    }
+
+    #[test]
+    fn parse_modes_and_options() {
+        let o = CclcOpts::parse(&[
+            "analyze".into(),
+            "-o".into(),
+            "-Dk=16".into(),
+            "a.hlo.txt".into(),
+        ])
+        .unwrap();
+        assert_eq!(o.mode, Mode::Analyze);
+        assert_eq!(o.options, "-Dk=16");
+        assert_eq!(o.sources, vec!["a.hlo.txt"]);
+        assert!(CclcOpts::parse(&[]).is_err());
+        assert!(CclcOpts::parse(&["build".into()]).is_err());
+    }
+
+    #[test]
+    fn analyze_reports_signature_and_estimates() {
+        let Some(p) = art_path("rng_n4096") else { return };
+        let o = CclcOpts {
+            mode: Mode::Analyze,
+            sources: vec![p],
+            options: String::new(),
+            device_type: DeviceType::GPU,
+        };
+        let r = run(&o).unwrap();
+        assert!(r.contains("kernel `prng_step`"), "{r}");
+        assert!(r.contains("u64[4096]"));
+        assert!(r.contains("est. time on SimCL GTX 1080"));
+        assert!(r.contains("16 B/elem"));
+    }
+
+    #[test]
+    fn build_gpu_succeeds_with_log() {
+        let Some(p) = art_path("init_n4096") else { return };
+        let o = CclcOpts {
+            mode: Mode::Build,
+            sources: vec![p],
+            options: String::new(),
+            device_type: DeviceType::GPU,
+        };
+        let r = run(&o).unwrap();
+        assert!(r.contains("build OK"));
+        assert!(r.contains("prng_init"));
+    }
+
+    #[test]
+    fn link_two_kernels() {
+        let (Some(a), Some(b)) = (art_path("init_n4096"), art_path("rng_n4096")) else {
+            return;
+        };
+        let o = CclcOpts {
+            mode: Mode::Link,
+            sources: vec![a, b],
+            options: String::new(),
+            device_type: DeviceType::GPU,
+        };
+        let r = run(&o).unwrap();
+        assert!(r.contains("2 kernel(s)"));
+    }
+
+    #[test]
+    fn build_failure_is_error_with_log() {
+        let dir = std::env::temp_dir().join("cf4rs_cclc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(
+            &bad,
+            "HloModule jit_mystery, entry_computation_layout={()->(f32[4]{0})}",
+        )
+        .unwrap();
+        let o = CclcOpts {
+            mode: Mode::Build,
+            sources: vec![bad.to_string_lossy().into_owned()],
+            options: String::new(),
+            device_type: DeviceType::GPU,
+        };
+        let e = run(&o).unwrap_err();
+        assert!(e.message.contains("unknown kernel"), "{e}");
+    }
+}

@@ -1,0 +1,183 @@
+//! `cf4rs devinfo` — the `ccl_devinfo` utility (paper §3.1).
+//!
+//! Queries platforms and devices; supports custom parameter lists via
+//! `--custom name[,name...]` (prefix-tolerant, like cf4ocl's
+//! `ccl_devinfo -c`).
+
+use crate::ccl::{devquery, platforms};
+use crate::ccl::errors::CclResult;
+
+/// Options parsed from the CLI.
+#[derive(Default, Debug)]
+pub struct DevInfoOpts {
+    /// Show all known parameters (`-a`).
+    pub all: bool,
+    /// Restrict to one device index across the flattened device list.
+    pub device: Option<usize>,
+    /// Custom parameter names (`-c name,name`).
+    pub custom: Vec<String>,
+    /// List known parameter names (`--list`).
+    pub list: bool,
+}
+
+impl DevInfoOpts {
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut o = Self::default();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "-a" | "--all" => o.all = true,
+                "--list" => o.list = true,
+                "-d" | "--device" => {
+                    let v = it.next().ok_or("--device needs an index")?;
+                    o.device = Some(v.parse().map_err(|_| format!("bad index {v:?}"))?);
+                }
+                "-c" | "--custom" => {
+                    let v = it.next().ok_or("--custom needs a name list")?;
+                    o.custom.extend(v.split(',').map(|s| s.trim().to_string()));
+                }
+                other => return Err(format!("unknown devinfo option {other:?}")),
+            }
+        }
+        Ok(o)
+    }
+}
+
+/// Default (non `--all`) parameter set — the quick overview.
+const DEFAULT_PARAMS: &[&str] = &[
+    "name",
+    "vendor",
+    "type",
+    "max_compute_units",
+    "max_work_group_size",
+    "preferred_work_group_size_multiple",
+    "global_mem_size",
+    "backend",
+];
+
+/// Render the report to a string (testable; `main` prints it).
+pub fn report(opts: &DevInfoOpts) -> CclResult<String> {
+    let mut out = String::new();
+    if opts.list {
+        out.push_str("Known device parameters:\n");
+        for p in devquery::known_params() {
+            out.push_str(&format!("  {:<36} {}\n", p.name, p.description));
+        }
+        return Ok(out);
+    }
+    let params: Vec<String> = if !opts.custom.is_empty() {
+        opts.custom.clone()
+    } else if opts.all {
+        devquery::known_params().iter().map(|p| p.name.to_string()).collect()
+    } else {
+        DEFAULT_PARAMS.iter().map(|s| s.to_string()).collect()
+    };
+
+    let mut flat_index = 0usize;
+    for plat in platforms::all()? {
+        out.push_str(&format!(
+            "Platform #{}: {} ({}, {})\n",
+            plat.id.0, plat.name, plat.vendor, plat.version
+        ));
+        for dev in &plat.devices {
+            let selected = opts.device.map(|d| d == flat_index).unwrap_or(true);
+            if selected {
+                out.push_str(&format!(
+                    "  Device #{flat_index}: {}\n",
+                    dev.name().unwrap_or_else(|_| "?".into())
+                ));
+                for name in &params {
+                    match devquery::query_by_name(dev, name) {
+                        Ok(v) => out.push_str(&format!("    {:<36} {}\n", name, v)),
+                        Err(e) => out.push_str(&format!("    {:<36} <{}>\n", name, e)),
+                    }
+                }
+            }
+            flat_index += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// CLI entrypoint.
+pub fn main(args: &[String]) -> i32 {
+    let opts = match DevInfoOpts::parse(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("devinfo: {e}");
+            eprintln!(
+                "usage: cf4rs devinfo [-a] [-d INDEX] [-c name,name...] [--list]"
+            );
+            return 2;
+        }
+    };
+    match report(&opts) {
+        Ok(s) => {
+            print!("{s}");
+            0
+        }
+        Err(e) => {
+            eprintln!("devinfo: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_report_covers_all_devices() {
+        let r = report(&DevInfoOpts::default()).unwrap();
+        assert!(r.contains("SimCL GTX 1080"));
+        assert!(r.contains("SimCL HD 7970"));
+        assert!(r.contains("cf4rs PJRT CPU"));
+        assert!(r.contains("preferred_work_group_size_multiple"));
+    }
+
+    #[test]
+    fn device_filter() {
+        let opts = DevInfoOpts { device: Some(1), ..Default::default() };
+        let r = report(&opts).unwrap();
+        assert!(r.contains("GTX 1080"));
+        assert!(!r.contains("Device #2"));
+    }
+
+    #[test]
+    fn custom_params() {
+        let opts = DevInfoOpts {
+            custom: vec!["max_clock_frequency".into(), "local_mem_size".into()],
+            ..Default::default()
+        };
+        let r = report(&opts).unwrap();
+        assert!(r.contains("max_clock_frequency"));
+        assert!(r.contains("1607"));
+        assert!(!r.contains("global_mem_size"));
+    }
+
+    #[test]
+    fn list_mode() {
+        let opts = DevInfoOpts { list: true, ..Default::default() };
+        let r = report(&opts).unwrap();
+        assert!(r.contains("Known device parameters"));
+        assert!(r.contains("backend"));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(DevInfoOpts::parse(&["--bogus".into()]).is_err());
+        assert!(DevInfoOpts::parse(&["-d".into()]).is_err());
+        let o = DevInfoOpts::parse(&[
+            "-a".into(),
+            "-d".into(),
+            "2".into(),
+            "-c".into(),
+            "name,vendor".into(),
+        ])
+        .unwrap();
+        assert!(o.all);
+        assert_eq!(o.device, Some(2));
+        assert_eq!(o.custom, vec!["name", "vendor"]);
+    }
+}

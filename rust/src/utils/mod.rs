@@ -1,0 +1,11 @@
+//! The three command-line utilities (paper §3.1), exposed as subcommands
+//! of the `cf4rs` binary:
+//!
+//! * [`devinfo`] — `ccl_devinfo`: query platforms and devices;
+//! * [`cclc`] — `ccl_c`: offline kernel build / link / analyze;
+//! * [`plot_events`] — `ccl_plot_events`: queue-utilization charts from
+//!   profiler exports (Fig. 5).
+
+pub mod cclc;
+pub mod devinfo;
+pub mod plot_events;

@@ -1,0 +1,293 @@
+//! `cf4rs plot-events` — the `ccl_plot_events` utility (paper §3.1).
+//!
+//! Reads a profile export table (written by `Prof::export_tsv`) and
+//! renders the Fig. 5 queue-utilization chart, either as a unicode
+//! terminal Gantt chart or as an SVG file.
+
+use std::collections::BTreeMap;
+
+use crate::ccl::errors::{CclError, CclResult};
+use crate::ccl::prof::export::parse_tsv;
+use crate::ccl::prof::info::ProfInfo;
+
+#[derive(Debug)]
+pub struct PlotOpts {
+    pub input: String,
+    /// Write an SVG here instead of/in addition to the terminal chart.
+    pub svg: Option<String>,
+    /// Terminal chart width in columns.
+    pub width: usize,
+}
+
+impl PlotOpts {
+    pub fn parse(args: &[String]) -> Result<Self, String> {
+        let mut input = None;
+        let mut svg = None;
+        let mut width = 100;
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--svg" => svg = Some(it.next().ok_or("--svg needs a path")?.clone()),
+                "--width" => {
+                    width = it
+                        .next()
+                        .ok_or("--width needs a number")?
+                        .parse()
+                        .map_err(|_| "bad width")?;
+                }
+                path => {
+                    if input.is_some() {
+                        return Err(format!("unexpected extra argument {path:?}"));
+                    }
+                    input = Some(path.to_string());
+                }
+            }
+        }
+        Ok(Self {
+            input: input.ok_or("no input file given")?,
+            svg,
+            width: width.clamp(20, 400),
+        })
+    }
+}
+
+/// Group events per queue, preserving queue insertion order.
+fn by_queue(infos: &[ProfInfo]) -> BTreeMap<&str, Vec<&ProfInfo>> {
+    let mut map: BTreeMap<&str, Vec<&ProfInfo>> = BTreeMap::new();
+    for i in infos {
+        map.entry(&i.queue).or_default().push(i);
+    }
+    map
+}
+
+/// Stable colour/glyph per event name.
+fn glyph_for(name: &str, palette: &mut BTreeMap<String, (char, &'static str)>) -> (char, &'static str) {
+    const GLYPHS: &[char] = &['█', '▓', '▒', '░', '▞', '▚', '▛', '▜'];
+    const COLORS: &[&str] = &[
+        "#4C72B0", "#DD8452", "#55A868", "#C44E52", "#8172B3", "#937860",
+    ];
+    if let Some(g) = palette.get(name) {
+        return *g;
+    }
+    let idx = palette.len();
+    let g = (GLYPHS[idx % GLYPHS.len()], COLORS[idx % COLORS.len()]);
+    palette.insert(name.to_string(), g);
+    g
+}
+
+/// Render the terminal Gantt chart.
+pub fn render_text(infos: &[ProfInfo], width: usize) -> CclResult<String> {
+    if infos.is_empty() {
+        return Err(CclError::framework("no events to plot"));
+    }
+    let t0 = infos.iter().map(|i| i.t_start).min().unwrap();
+    let t1 = infos.iter().map(|i| i.t_end).max().unwrap();
+    let span = (t1 - t0).max(1) as f64;
+    let mut palette = BTreeMap::new();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Queue utilization, {:.3} ms total ({} events)\n",
+        span / 1e6,
+        infos.len()
+    ));
+    for (queue, events) in by_queue(infos) {
+        let mut row = vec![' '; width];
+        for e in &events {
+            let (g, _) = glyph_for(&e.name, &mut palette);
+            let a = ((e.t_start - t0) as f64 / span * (width - 1) as f64) as usize;
+            let b = ((e.t_end - t0) as f64 / span * (width - 1) as f64) as usize;
+            for cell in row.iter_mut().take(b.max(a) + 1).skip(a) {
+                *cell = g;
+            }
+        }
+        out.push_str(&format!("{:>8} |{}|\n", queue, row.iter().collect::<String>()));
+    }
+    out.push_str("legend: ");
+    for (name, (g, _)) in &palette {
+        out.push_str(&format!("{g}={name}  "));
+    }
+    out.push('\n');
+    Ok(out)
+}
+
+/// Render the SVG chart (Fig. 5 analogue).
+pub fn render_svg(infos: &[ProfInfo]) -> CclResult<String> {
+    if infos.is_empty() {
+        return Err(CclError::framework("no events to plot"));
+    }
+    let t0 = infos.iter().map(|i| i.t_start).min().unwrap();
+    let t1 = infos.iter().map(|i| i.t_end).max().unwrap();
+    let span = (t1 - t0).max(1) as f64;
+    const W: f64 = 900.0;
+    const ROW_H: f64 = 42.0;
+    const LEFT: f64 = 110.0;
+    let queues = by_queue(infos);
+    let h = 60.0 + queues.len() as f64 * ROW_H + 40.0;
+    let mut palette = BTreeMap::new();
+    let mut svg = String::new();
+    svg.push_str(&format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{}\" height=\"{}\" \
+         font-family=\"monospace\" font-size=\"12\">\n",
+        W + LEFT + 20.0,
+        h
+    ));
+    svg.push_str(&format!(
+        "<text x=\"{LEFT}\" y=\"20\">Queue utilization ({:.3} ms, {} events)</text>\n",
+        span / 1e6,
+        infos.len()
+    ));
+    for (row, (queue, events)) in queues.iter().enumerate() {
+        let y = 40.0 + row as f64 * ROW_H;
+        svg.push_str(&format!(
+            "<text x=\"4\" y=\"{:.1}\">{}</text>\n",
+            y + ROW_H / 2.0,
+            queue
+        ));
+        svg.push_str(&format!(
+            "<line x1=\"{LEFT}\" y1=\"{:.1}\" x2=\"{:.1}\" y2=\"{:.1}\" \
+             stroke=\"#ccc\"/>\n",
+            y + ROW_H - 6.0,
+            LEFT + W,
+            y + ROW_H - 6.0
+        ));
+        for e in events {
+            let (_, color) = glyph_for(&e.name, &mut palette);
+            let x = LEFT + (e.t_start - t0) as f64 / span * W;
+            let w = (((e.t_end - e.t_start) as f64 / span) * W).max(0.5);
+            svg.push_str(&format!(
+                "<rect x=\"{x:.2}\" y=\"{:.1}\" width=\"{w:.2}\" height=\"{:.1}\" \
+                 fill=\"{color}\" opacity=\"0.9\"><title>{} [{} - {} ns]</title></rect>\n",
+                y + 6.0,
+                ROW_H - 16.0,
+                e.name,
+                e.t_start,
+                e.t_end
+            ));
+        }
+    }
+    // legend
+    let ly = 40.0 + queues.len() as f64 * ROW_H + 10.0;
+    let mut lx = LEFT;
+    for (name, (_, color)) in &palette {
+        svg.push_str(&format!(
+            "<rect x=\"{lx:.1}\" y=\"{ly:.1}\" width=\"12\" height=\"12\" fill=\"{color}\"/>\n\
+             <text x=\"{:.1}\" y=\"{:.1}\">{name}</text>\n",
+            lx + 16.0,
+            ly + 11.0
+        ));
+        lx += 30.0 + name.len() as f64 * 8.0;
+    }
+    svg.push_str("</svg>\n");
+    Ok(svg)
+}
+
+/// CLI entrypoint.
+pub fn main(args: &[String]) -> i32 {
+    let opts = match PlotOpts::parse(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("plot-events: {e}");
+            eprintln!("usage: cf4rs plot-events PROFILE.tsv [--svg OUT.svg] [--width N]");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(&opts.input) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("plot-events: reading {}: {e}", opts.input);
+            return 1;
+        }
+    };
+    let infos = match parse_tsv(&text) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("plot-events: {e}");
+            return 1;
+        }
+    };
+    match render_text(&infos, opts.width) {
+        Ok(chart) => print!("{chart}"),
+        Err(e) => {
+            eprintln!("plot-events: {e}");
+            return 1;
+        }
+    }
+    if let Some(svg_path) = &opts.svg {
+        match render_svg(&infos) {
+            Ok(svg) => {
+                if let Err(e) = std::fs::write(svg_path, svg) {
+                    eprintln!("plot-events: writing {svg_path}: {e}");
+                    return 1;
+                }
+                eprintln!("wrote {svg_path}");
+            }
+            Err(e) => {
+                eprintln!("plot-events: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<ProfInfo> {
+        let mk = |name: &str, queue: &str, s: u64, e: u64| ProfInfo {
+            name: name.into(),
+            queue: queue.into(),
+            t_queued: s,
+            t_submit: s,
+            t_start: s,
+            t_end: e,
+        };
+        vec![
+            mk("INIT_KERNEL", "Main", 0, 100),
+            mk("RNG_KERNEL", "Main", 150, 250),
+            mk("READ_BUFFER", "Comms", 120, 400),
+        ]
+    }
+
+    #[test]
+    fn text_chart_has_rows_and_legend() {
+        let c = render_text(&sample(), 80).unwrap();
+        assert!(c.contains("Main |"));
+        assert!(c.contains("Comms |"));
+        assert!(c.contains("legend:"));
+        assert!(c.contains("READ_BUFFER"));
+    }
+
+    #[test]
+    fn svg_chart_has_rects_and_titles() {
+        let s = render_svg(&sample()).unwrap();
+        assert!(s.starts_with("<svg"));
+        assert!(s.matches("<rect").count() >= 3 + 3); // bars + legend
+        assert!(s.contains("RNG_KERNEL"));
+        assert!(s.ends_with("</svg>\n"));
+    }
+
+    #[test]
+    fn empty_input_is_error() {
+        assert!(render_text(&[], 80).is_err());
+        assert!(render_svg(&[]).is_err());
+    }
+
+    #[test]
+    fn parse_opts() {
+        let o = PlotOpts::parse(&[
+            "prof.tsv".into(),
+            "--svg".into(),
+            "out.svg".into(),
+            "--width".into(),
+            "60".into(),
+        ])
+        .unwrap();
+        assert_eq!(o.input, "prof.tsv");
+        assert_eq!(o.svg.as_deref(), Some("out.svg"));
+        assert_eq!(o.width, 60);
+        assert!(PlotOpts::parse(&[]).is_err());
+        assert!(PlotOpts::parse(&["a".into(), "b".into()]).is_err());
+    }
+}

@@ -1,0 +1,283 @@
+//! Integration tests for the `ccl` framework layer: the paper's wrapper
+//! API driving real work end-to-end on both backends.
+
+use cf4rs::ccl::*;
+use cf4rs::rawcl::types::{DeviceType, MemFlags};
+use cf4rs::rawcl::simexec;
+
+#[test]
+fn quickstart_vecadd_flow() {
+    // The whole cf4ocl pitch in one test: context, queue, program,
+    // kernel, buffers, launch, read — in ~20 lines.
+    const N: usize = 1024;
+    let ctx = Context::new_cpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q = Queue::new_profiled(&ctx, dev).unwrap();
+    let prg = Program::new_from_artifacts(&ctx, &["vecadd_n1024"]).unwrap();
+    prg.build().unwrap();
+    let k = prg.kernel("vecadd").unwrap();
+
+    let x: Vec<u8> = (0..N).flat_map(|i| (i as f32).to_le_bytes()).collect();
+    let y: Vec<u8> = (0..N).flat_map(|i| (2.0 * i as f32).to_le_bytes()).collect();
+    let bx = Buffer::from_slice(&ctx, MemFlags::READ_ONLY, &x).unwrap();
+    let by = Buffer::from_slice(&ctx, MemFlags::READ_ONLY, &y).unwrap();
+    let bo = Buffer::new(&ctx, MemFlags::WRITE_ONLY, N * 4).unwrap();
+
+    let (gws, lws) = k.suggest_worksizes(dev, &[N]).unwrap();
+    k.set_args_and_enqueue_ndrange(
+        &q, &gws, Some(&lws), &[],
+        &[Arg::buf(&bx), Arg::buf(&by), Arg::buf(&bo)],
+    )
+    .unwrap();
+
+    let mut out = vec![0u8; N * 4];
+    bo.enqueue_read(&q, 0, &mut out, &[]).unwrap();
+    let v = f32::from_le_bytes(out[40..44].try_into().unwrap());
+    assert_eq!(v, 30.0);
+}
+
+#[test]
+fn paper_listing_s2_flow_on_sim_gpu() {
+    // The cf4ocl realisation of the PRNG example (listing S2), scaled
+    // down: init once, rng twice with double buffering, read, profile.
+    const N: usize = 4096;
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let cq_main = Queue::new_profiled(&ctx, dev).unwrap();
+    let cq_comms = Queue::new_profiled(&ctx, dev).unwrap();
+
+    let prg = Program::new_from_artifacts(&ctx, &["init_n4096", "rng_n4096"]).unwrap();
+    prg.build().unwrap();
+    let kinit = prg.kernel("prng_init").unwrap();
+    let krng = prg.kernel("prng_step").unwrap();
+
+    let bufdev1 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let bufdev2 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+
+    let (gws, lws) = kinit.suggest_worksizes(dev, &[N]).unwrap();
+
+    let evt = kinit
+        .set_args_and_enqueue_ndrange(
+            &cq_main, &gws, Some(&lws), &[],
+            &[Arg::buf(&bufdev1), Arg::priv_u32(N as u32)],
+        )
+        .unwrap();
+    evt.set_name("INIT_KERNEL").unwrap();
+    cq_main.finish().unwrap();
+
+    // fixed arg set once; swapped buffer args per iteration (Skip).
+    krng.set_arg(0, &Arg::priv_u32(N as u32)).unwrap();
+    let evt = krng
+        .set_args_and_enqueue_ndrange(
+            &cq_main, &gws, Some(&lws), &[],
+            &[Arg::skip(), Arg::buf(&bufdev1), Arg::buf(&bufdev2)],
+        )
+        .unwrap();
+    evt.set_name("RNG_KERNEL").unwrap();
+    cq_main.finish().unwrap();
+
+    // comms queue reads while main queue could compute the next batch
+    let mut out = vec![0u8; N * 8];
+    let r = bufdev2.enqueue_read(&cq_comms, 0, &mut out, &[]).unwrap();
+    r.set_name("READ").unwrap();
+
+    let first = u64::from_le_bytes(out[..8].try_into().unwrap());
+    assert_eq!(first, simexec::xorshift(simexec::init_seed(0)));
+
+    // Profiler over both queues, no manual event bookkeeping.
+    let mut prof = Prof::new();
+    prof.add_queue("Main", &cq_main);
+    prof.add_queue("Comms", &cq_comms);
+    prof.calc().unwrap();
+    let aggs = prof.aggs().unwrap();
+    let names: Vec<&str> = aggs.iter().map(|a| a.name.as_str()).collect();
+    assert!(names.contains(&"INIT_KERNEL"));
+    assert!(names.contains(&"RNG_KERNEL"));
+    assert!(names.contains(&"READ"));
+    let rel_total: f64 = aggs.iter().map(|a| a.rel_time).sum();
+    assert!((rel_total - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn build_log_on_failure_like_listing_s2() {
+    let ctx = Context::new_gpu().unwrap();
+    let bad = "HloModule jit_mystery, entry_computation_layout={()->(f32[4]{0})}";
+    let prg = Program::new_from_sources(&ctx, &[bad.to_string()]).unwrap();
+    let err = prg.build().unwrap_err();
+    assert_eq!(err.code, cf4rs::rawcl::CL_BUILD_PROGRAM_FAILURE);
+    let log = prg.build_log().unwrap();
+    assert!(log.contains("unknown kernel"), "log: {log}");
+}
+
+#[test]
+fn program_from_source_files_and_kernel_cache() {
+    let man = cf4rs::runtime::Manifest::discover().unwrap();
+    let paths = [
+        man.get("init_n4096").unwrap().path.clone(),
+        man.get("rng_n4096").unwrap().path.clone(),
+    ];
+    let ctx = Context::new_gpu().unwrap();
+    let prg = Program::new_from_source_files(&ctx, &paths).unwrap();
+    prg.build().unwrap();
+    assert_eq!(prg.kernel_names().unwrap(), vec!["prng_init", "prng_step"]);
+    let k1 = prg.kernel("prng_step").unwrap();
+    let k2 = prg.kernel("prng_step").unwrap();
+    assert_eq!(k1.handle(), k2.handle(), "kernel cache must return same object");
+    assert_eq!(k1.num_args().unwrap(), 3);
+}
+
+#[test]
+fn missing_kernel_file_is_friendly_error() {
+    let ctx = Context::new_gpu().unwrap();
+    let err = match Program::new_from_source_files(&ctx, &["/no/such/file.hlo.txt"]) {
+        Err(e) => e,
+        Ok(_) => panic!("expected error for missing file"),
+    };
+    assert_eq!(err.domain, ErrorDomain::Artifacts);
+    assert!(err.message.contains("/no/such/file.hlo.txt"));
+}
+
+#[test]
+fn context_from_filters_and_devquery() {
+    let ctx = Context::new_from_filters(
+        FilterChain::new().add(Filter::vendor_contains("amd")),
+    )
+    .unwrap();
+    assert_eq!(ctx.num_devices(), 1);
+    let dev = ctx.device(0).unwrap();
+    assert_eq!(
+        cf4rs::ccl::devquery::query_by_name(&dev, "name").unwrap(),
+        "SimCL HD 7970"
+    );
+}
+
+#[test]
+fn memcheck_after_full_lifecycle() {
+    {
+        let ctx = Context::new_from_type(DeviceType::GPU).unwrap();
+        let dev = ctx.device(1).unwrap();
+        let q = Queue::new_profiled(&ctx, dev).unwrap();
+        let b = Buffer::new(&ctx, MemFlags::READ_WRITE, 64).unwrap();
+        b.enqueue_fill(&q, &[7u8], 0, 64, &[]).unwrap();
+        q.finish().unwrap();
+        // all wrappers dropped here
+    }
+    // Like assert(ccl_wrapper_memcheck()) in listing S2 line 354.
+    // Other tests may run concurrently, so only assert when isolated:
+    if std::env::var("CF4RS_MEMCHECK_STRICT").is_ok() {
+        assert!(memcheck());
+    }
+}
+
+#[test]
+fn event_dependency_chain_via_framework() {
+    const N: usize = 4096;
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q1 = Queue::new_profiled(&ctx, dev).unwrap();
+    let q2 = Queue::new_profiled(&ctx, dev).unwrap();
+    let prg = Program::new_from_artifacts(&ctx, &["init_n4096"]).unwrap();
+    prg.build().unwrap();
+    let k = prg.kernel("prng_init").unwrap();
+    let buf = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+
+    let kev = k
+        .set_args_and_enqueue_ndrange(
+            &q1, &[N], None, &[],
+            &[Arg::buf(&buf), Arg::priv_u32(N as u32)],
+        )
+        .unwrap();
+    let mut out = vec![0u8; N * 8];
+    // read on q2 depends on kernel on q1
+    let rev = buf.enqueue_read(&q2, 0, &mut out, &[kev]).unwrap();
+    assert!(rev.time_start().unwrap() >= kev.time_end().unwrap());
+    assert_eq!(
+        u64::from_le_bytes(out[..8].try_into().unwrap()),
+        simexec::init_seed(0)
+    );
+}
+
+#[test]
+fn suggest_worksizes_multiple_of_preferred() {
+    let ctx = Context::new_gpu().unwrap();
+    let prg = Program::new_from_artifacts(&ctx, &["rng_n4096"]).unwrap();
+    prg.build().unwrap();
+    let k = prg.kernel("prng_step").unwrap();
+    for dev in ctx.devices() {
+        let (gws, lws) = k.suggest_worksizes(*dev, &[4096]).unwrap();
+        let pref = dev.preferred_wg_multiple().unwrap();
+        assert_eq!(lws[0] % pref, 0, "{}", dev.name().unwrap());
+        assert_eq!(gws[0] % lws[0], 0);
+        assert!(gws[0] >= 4096);
+        assert!(lws[0] <= dev.max_work_group_size().unwrap());
+    }
+}
+
+#[test]
+fn user_event_gates_device_command() {
+    // CCLUserEvent semantics: a read enqueued with a user-event
+    // dependency must not run until the host completes the event.
+    const N: usize = 4096;
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q = Queue::new_profiled(&ctx, dev).unwrap();
+    let prg = Program::new_from_artifacts(&ctx, &["init_n4096"]).unwrap();
+    prg.build().unwrap();
+    let k = prg.kernel("prng_init").unwrap();
+    let buf = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    k.set_args_and_enqueue_ndrange(
+        &q, &[N], None, &[],
+        &[Arg::buf(&buf), Arg::priv_u32(N as u32)],
+    )
+    .unwrap();
+    q.finish().unwrap();
+
+    let gate = cf4rs::ccl::UserEvent::new(&ctx).unwrap();
+    let gate_ev = gate.event();
+    let flag = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    std::thread::scope(|scope| {
+        let (q, buf, flag2) = (&q, &buf, flag.clone());
+        let t = scope.spawn(move || {
+            let mut out = vec![0u8; N * 8];
+            // blocking read gated on the user event
+            buf.enqueue_read(q, 0, &mut out, &[gate_ev]).unwrap();
+            assert!(
+                flag2.load(std::sync::atomic::Ordering::SeqCst),
+                "read completed before the user event was signalled"
+            );
+            out
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        gate.complete().unwrap();
+        let out = t.join().unwrap();
+        assert_eq!(
+            u64::from_le_bytes(out[..8].try_into().unwrap()),
+            simexec::init_seed(0)
+        );
+    });
+    // double-complete is an error
+    assert!(gate.complete().is_err());
+}
+
+#[test]
+fn failed_user_event_fails_dependants() {
+    const N: usize = 4096;
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q = Queue::new_profiled(&ctx, dev).unwrap();
+    let buf = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let gate = cf4rs::ccl::UserEvent::new(&ctx).unwrap();
+    let gate_ev = gate.event();
+    std::thread::scope(|scope| {
+        let (q, buf) = (&q, &buf);
+        let t = scope.spawn(move || {
+            let mut out = vec![0u8; N * 8];
+            buf.enqueue_read(q, 0, &mut out, &[gate_ev])
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        gate.fail(cf4rs::rawcl::CL_OUT_OF_RESOURCES).unwrap();
+        let res = t.join().unwrap();
+        assert!(res.is_err(), "read must fail when its gate fails");
+    });
+}

@@ -1,0 +1,208 @@
+//! Profiler integration: the full §4.3 feature set over a real
+//! two-queue, double-buffered PRNG workload on the simulated GPU —
+//! the workload of Fig. 3 and Fig. 5, scaled down.
+
+use cf4rs::ccl::prof::{AggSort, OverlapSort, Prof, SortDir};
+use cf4rs::ccl::*;
+use cf4rs::rawcl::types::MemFlags;
+
+const N: usize = 65536;
+const ITERS: usize = 6;
+
+/// Run the §5 pipeline: kernels on `main`, reads on `comms`, device-side
+/// double buffering, semaphore-free (framework events carry the deps).
+fn run_pipeline() -> (Queue, Queue, Prof) {
+    // Slow-motion simulation: model durations are stretched 50x so they
+    // exceed the host-side reference-execution time, making the profiled
+    // timeline follow the device model exactly (see DESIGN.md §2 and the
+    // sim_timescale docs). Must be set before the first queue operation.
+    std::env::set_var("CF4RS_SIM_TIMESCALE", "0.02");
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let cq_main = Queue::new_profiled(&ctx, dev).unwrap();
+    let cq_comms = Queue::new_profiled(&ctx, dev).unwrap();
+
+    let prg =
+        Program::new_from_artifacts(&ctx, &["init_n65536", "rng_n65536"]).unwrap();
+    prg.build().unwrap();
+    let kinit = prg.kernel("prng_init").unwrap();
+    let krng = prg.kernel("prng_step").unwrap();
+
+    let b1 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let b2 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+
+    let mut prof = Prof::new();
+    prof.start();
+
+    let (gws, lws) = kinit.suggest_worksizes(dev, &[N]).unwrap();
+    let ev = kinit
+        .set_args_and_enqueue_ndrange(
+            &cq_main, &gws, Some(&lws), &[],
+            &[Arg::buf(&b1), Arg::priv_u32(N as u32)],
+        )
+        .unwrap();
+    ev.set_name("INIT_KERNEL").unwrap();
+
+    krng.set_arg(0, &Arg::priv_u32(N as u32)).unwrap();
+    // Two host threads like the paper's Fig. 2: kernels on the main
+    // thread/queue, blocking reads on the comms thread/queue. The read of
+    // iteration i waits (via event) on the kernel of iteration i-1 and
+    // overlaps the kernel of iteration i.
+    std::thread::scope(|scope| {
+        let mut kernel_events = Vec::with_capacity(ITERS + 1);
+        kernel_events.push(ev);
+        let mut front = &b1;
+        let mut back = &b2;
+        for _ in 0..ITERS {
+            let prev = *kernel_events.last().unwrap();
+            let kev = krng
+                .set_args_and_enqueue_ndrange(
+                    &cq_main, &gws, Some(&lws), &[prev],
+                    &[Arg::skip(), Arg::buf(front), Arg::buf(back)],
+                )
+                .unwrap();
+            kev.set_name("RNG_KERNEL").unwrap();
+            kernel_events.push(kev);
+            std::mem::swap(&mut front, &mut back);
+        }
+        // comms thread: read the buffer each kernel consumed
+        let cq_comms = &cq_comms;
+        let (b1r, b2r) = (&b1, &b2);
+        let kevs = kernel_events.clone();
+        scope.spawn(move || {
+            let mut host = vec![0u8; N * 8];
+            let mut front = b1r;
+            let mut back = b2r;
+            for kev in kevs.iter().take(ITERS) {
+                let rev = front.enqueue_read(cq_comms, 0, &mut host, &[*kev]).unwrap();
+                rev.set_name("READ_BUFFER").unwrap();
+                std::mem::swap(&mut front, &mut back);
+            }
+        });
+    });
+    cq_main.finish().unwrap();
+    cq_comms.finish().unwrap();
+    prof.stop();
+
+    prof.add_queue("Main", &cq_main);
+    prof.add_queue("Comms", &cq_comms);
+    prof.calc().unwrap();
+    (cq_main, cq_comms, prof)
+}
+
+#[test]
+fn aggregates_match_workload_structure() {
+    let (_q1, _q2, prof) = run_pipeline();
+    let aggs = prof.aggs().unwrap();
+    let get = |name: &str| aggs.iter().find(|a| a.name == name).unwrap();
+    assert_eq!(get("INIT_KERNEL").count, 1);
+    assert_eq!(get("RNG_KERNEL").count, ITERS);
+    assert_eq!(get("READ_BUFFER").count, ITERS);
+    // On a GPU profile, host-link reads dominate (the Fig. 3/5 shape).
+    assert!(
+        get("READ_BUFFER").abs_time > get("RNG_KERNEL").abs_time,
+        "reads must dominate kernels on the simulated GPU"
+    );
+    let rel: f64 = aggs.iter().map(|a| a.rel_time).sum();
+    assert!((rel - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn overlaps_detected_between_queues() {
+    let (_q1, _q2, prof) = run_pipeline();
+    let ovs = prof.overlaps().unwrap();
+    // RNG kernel (main queue) must overlap READ_BUFFER (comms queue) —
+    // that is the entire point of the paper's double-buffer design.
+    let kr = ovs.iter().find(|o| {
+        (o.event1 == "READ_BUFFER" && o.event2 == "RNG_KERNEL")
+            || (o.event1 == "RNG_KERNEL" && o.event2 == "READ_BUFFER")
+    });
+    assert!(kr.is_some(), "no RNG/READ overlap found: {ovs:?}");
+    assert!(kr.unwrap().duration > 0);
+}
+
+#[test]
+fn effective_time_below_elapsed_and_consistent() {
+    let (_q1, _q2, prof) = run_pipeline();
+    let eff = prof.effective_ns().unwrap();
+    let elapsed = (prof.time_elapsed() * 1e9) as u64;
+    assert!(eff > 0);
+    assert!(eff <= elapsed, "device busy time cannot exceed wall time");
+    // eff == sum(aggs) - total_overlap (inclusion-exclusion for 2 queues)
+    let sum: u64 = prof.aggs().unwrap().iter().map(|a| a.abs_time).sum();
+    let ov: u64 = prof.overlaps().unwrap().iter().map(|o| o.duration).sum();
+    let diff = (sum - ov) as i64 - eff as i64;
+    assert!(
+        diff.abs() < 1000,
+        "union({eff}) != sum({sum}) - overlaps({ov})"
+    );
+}
+
+#[test]
+fn summary_has_figure3_sections() {
+    let (_q1, _q2, prof) = run_pipeline();
+    let s = prof
+        .summary(
+            (AggSort::Time, SortDir::Desc),
+            (OverlapSort::Duration, SortDir::Desc),
+        )
+        .unwrap();
+    assert!(s.contains("Aggregate times by event"));
+    assert!(s.contains("Event overlaps"));
+    assert!(s.contains("READ_BUFFER"));
+    assert!(s.contains("Tot. of all events (eff.)"));
+    assert!(s.contains("Total elapsed time"));
+}
+
+#[test]
+fn export_roundtrip_preserves_timeline() {
+    let (_q1, _q2, prof) = run_pipeline();
+    let tsv = prof.export_string().unwrap();
+    let infos = cf4rs::ccl::prof::export::parse_tsv(&tsv).unwrap();
+    assert_eq!(infos.len(), 1 + 2 * ITERS);
+    // sorted by start instant
+    for w in infos.windows(2) {
+        assert!(w[0].t_start <= w[1].t_start);
+    }
+    // queue labels survive
+    assert!(infos.iter().any(|i| i.queue == "Main"));
+    assert!(infos.iter().any(|i| i.queue == "Comms"));
+}
+
+#[test]
+fn instants_are_sorted_and_paired() {
+    let (_q1, _q2, prof) = run_pipeline();
+    let insts = prof.instants().unwrap();
+    assert_eq!(insts.len(), 2 * (1 + 2 * ITERS));
+    for w in insts.windows(2) {
+        assert!(w[0].instant <= w[1].instant);
+    }
+}
+
+#[test]
+fn calc_twice_is_an_error() {
+    let (_q1, _q2, mut prof) = run_pipeline();
+    assert!(prof.calc().is_err());
+}
+
+#[test]
+fn results_before_calc_are_errors() {
+    let prof = Prof::new();
+    assert!(prof.aggs().is_err());
+    assert!(prof.overlaps().is_err());
+    assert!(prof.export_string().is_err());
+}
+
+#[test]
+fn unprofiled_queue_fails_calc_like_cf4ocl() {
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q = Queue::new(&ctx, dev, cf4rs::rawcl::types::QueueProps::empty()).unwrap();
+    let b = Buffer::new(&ctx, MemFlags::READ_WRITE, 64).unwrap();
+    b.enqueue_fill(&q, &[1u8], 0, 64, &[]).unwrap();
+    q.finish().unwrap();
+    let mut prof = Prof::new();
+    prof.add_queue("Q", &q);
+    let err = prof.calc().unwrap_err();
+    assert_eq!(err.code, cf4rs::rawcl::CL_PROFILING_INFO_NOT_AVAILABLE);
+}

@@ -1,0 +1,360 @@
+//! Property-based tests over the framework's invariants.
+//!
+//! No external property-testing crate is available offline, so the
+//! generator is a tiny deterministic fuzzer driven by — fittingly — the
+//! paper's own xorshift PRNG (`rawcl::simexec`). Each property runs a
+//! few hundred generated cases; failures print the case seed so they
+//! reproduce exactly.
+
+use cf4rs::ccl::prof::export;
+use cf4rs::ccl::prof::info::ProfInfo;
+use cf4rs::ccl::prof::overlap::{compute_overlaps, effective_total};
+use cf4rs::ccl::{suggest_worksizes, Device};
+use cf4rs::coordinator::Semaphore;
+use cf4rs::rawcl::hlometa;
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+use cf4rs::rawcl::types::DeviceId;
+
+/// Deterministic case generator.
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    /// Uniform-ish integer in [lo, hi).
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len() as u64) as usize]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Overlap detection vs brute force
+// ---------------------------------------------------------------------------
+
+/// O(n²) reference implementation of pairwise overlap totals.
+fn brute_force_overlaps(
+    infos: &[ProfInfo],
+) -> std::collections::HashMap<(String, String), u64> {
+    let mut totals = std::collections::HashMap::new();
+    for i in 0..infos.len() {
+        for j in i + 1..infos.len() {
+            let (a, b) = (&infos[i], &infos[j]);
+            if a.queue == b.queue {
+                continue;
+            }
+            let start = a.t_start.max(b.t_start);
+            let end = a.t_end.min(b.t_end);
+            if end > start {
+                let key = if a.name <= b.name {
+                    (a.name.clone(), b.name.clone())
+                } else {
+                    (b.name.clone(), a.name.clone())
+                };
+                *totals.entry(key).or_insert(0) += end - start;
+            }
+        }
+    }
+    totals
+}
+
+fn random_infos(g: &mut Gen, max_events: u64) -> Vec<ProfInfo> {
+    let n = g.range(0, max_events);
+    let names = ["K", "R", "W", "C"];
+    let queues = ["q0", "q1", "q2"];
+    let mut infos = Vec::new();
+    // Per-queue cursor keeps same-queue events non-overlapping, matching
+    // what in-order queues actually produce.
+    let mut cursors = [0u64; 3];
+    for _ in 0..n {
+        let qi = g.range(0, 3) as usize;
+        let start = cursors[qi] + g.range(0, 50);
+        let end = start + g.range(1, 100);
+        cursors[qi] = end + g.range(0, 20);
+        infos.push(ProfInfo {
+            name: g.pick(&names).to_string(),
+            queue: queues[qi].to_string(),
+            t_queued: start,
+            t_submit: start,
+            t_start: start,
+            t_end: end,
+        });
+    }
+    infos
+}
+
+#[test]
+fn prop_overlap_sweep_matches_brute_force() {
+    for case in 0..300u64 {
+        let mut g = Gen::new(case);
+        let infos = random_infos(&mut g, 24);
+        let sweep: std::collections::HashMap<(String, String), u64> =
+            compute_overlaps(&infos)
+                .into_iter()
+                .map(|o| ((o.event1, o.event2), o.duration))
+                .collect();
+        let brute = brute_force_overlaps(&infos);
+        assert_eq!(sweep, brute, "case {case}: {infos:?}");
+    }
+}
+
+#[test]
+fn prop_effective_total_bounds() {
+    for case in 0..300u64 {
+        let mut g = Gen::new(case ^ 0xABCD);
+        let infos = random_infos(&mut g, 24);
+        let eff = effective_total(&infos);
+        let sum: u64 = infos.iter().map(|i| i.duration()).sum();
+        let max_span = infos
+            .iter()
+            .map(|i| i.t_end)
+            .max()
+            .unwrap_or(0)
+            .saturating_sub(infos.iter().map(|i| i.t_start).min().unwrap_or(0));
+        assert!(eff <= sum, "case {case}: union > sum");
+        assert!(eff <= max_span, "case {case}: union > span");
+        if !infos.is_empty() {
+            let longest = infos.iter().map(|i| i.duration()).max().unwrap();
+            assert!(eff >= longest, "case {case}: union < longest interval");
+        }
+        // union >= sum - 2 * total pairwise overlap (loose inclusion-
+        // exclusion bound that holds with triple overlaps).
+        let total_ov: u64 = compute_overlaps(&infos).iter().map(|o| o.duration).sum();
+        assert!(
+            eff + total_ov * 2 >= sum,
+            "case {case}: union {eff} + 2*overlaps {total_ov} < sum {sum}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Profile export roundtrip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_export_roundtrip() {
+    for case in 0..200u64 {
+        let mut g = Gen::new(case ^ 0xE4E4);
+        let infos = random_infos(&mut g, 16);
+        let tsv = export::to_tsv(&infos);
+        let back = export::parse_tsv(&tsv).unwrap();
+        assert_eq!(back.len(), infos.len(), "case {case}");
+        // to_tsv sorts by start; compare as multisets of key fields.
+        let key = |i: &ProfInfo| (i.queue.clone(), i.t_start, i.t_end, i.name.clone());
+        let mut a: Vec<_> = infos.iter().map(key).collect();
+        let mut b: Vec<_> = back.iter().map(key).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// suggest_worksizes invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_worksizes_cover_and_divide() {
+    let devices = [DeviceId(0), DeviceId(1), DeviceId(2)];
+    for case in 0..300u64 {
+        let mut g = Gen::new(case ^ 0x5151);
+        let dev = Device::from_id(*g.pick(&devices)).unwrap();
+        let dims = g.range(1, 4) as usize;
+        let rws: Vec<usize> = (0..dims).map(|_| g.range(1, 1 << 14) as usize).collect();
+        let (gws, lws) = suggest_worksizes(None, dev, &rws).unwrap();
+        let max_wg = dev.max_work_group_size().unwrap();
+        let max_item = dev.max_work_item_sizes().unwrap();
+        let pref = dev.preferred_wg_multiple().unwrap();
+        assert!(lws.iter().product::<usize>() <= max_wg, "case {case} wg limit");
+        assert_eq!(lws[0] % pref, 0, "case {case}: lws[0]={} pref={pref}", lws[0]);
+        for d in 0..dims {
+            assert!(gws[d] >= rws[d], "case {case} dim {d}: gws < rws");
+            assert_eq!(gws[d] % lws[d], 0, "case {case} dim {d}: lws !| gws");
+            assert!(lws[d] <= max_item[d], "case {case} dim {d}: item limit");
+            assert!(
+                gws[d] < rws[d] + lws[d].max(pref) * 2,
+                "case {case} dim {d}: gws {} wildly over rws {}",
+                gws[d],
+                rws[d]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO header parser vs generated headers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hlometa_roundtrip_generated_headers() {
+    let dtypes = ["u64", "u32", "f32"];
+    for case in 0..300u64 {
+        let mut g = Gen::new(case ^ 0x4710);
+        let nparams = g.range(0, 4);
+        let mut fmt_tensor = |g: &mut Gen| -> (String, usize) {
+            let dt = g.pick(&dtypes).to_string();
+            let rank = g.range(0, 3);
+            let dims: Vec<u64> = (0..rank).map(|_| g.range(1, 4096)).collect();
+            let layout = if dims.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "{{{}}}",
+                    (0..dims.len())
+                        .rev()
+                        .map(|d| d.to_string())
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            };
+            let dimstr =
+                dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",");
+            (format!("{dt}[{dimstr}]{layout}"), dims.iter().product::<u64>() as usize)
+        };
+        let params: Vec<(String, usize)> =
+            (0..nparams).map(|_| fmt_tensor(&mut g)).collect();
+        let (result, result_elems) = fmt_tensor(&mut g);
+        let header = format!(
+            "HloModule jit_gen_case_{case}, entry_computation_layout={{({})->({result})}}",
+            params.iter().map(|(s, _)| s.clone()).collect::<Vec<_>>().join(", ")
+        );
+        let meta = hlometa::parse_header(&header)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{header}"));
+        assert_eq!(meta.name, format!("gen_case_{case}"));
+        assert_eq!(meta.params.len(), params.len(), "case {case}");
+        for (p, (_, elems)) in meta.params.iter().zip(&params) {
+            assert_eq!(p.element_count(), *elems, "case {case}");
+        }
+        assert_eq!(meta.problem_size(), result_elems, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry lifecycle under random retain/release
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_registry_refcount_model() {
+    use cf4rs::rawcl::{
+        create_context, get_context_devices, release_context, retain_context,
+        CL_INVALID_CONTEXT, CL_SUCCESS,
+    };
+    for case in 0..100u64 {
+        let mut g = Gen::new(case ^ 0x9e9e);
+        let mut st = 0;
+        let ctx = create_context(&[DeviceId(1)], &mut st);
+        assert_eq!(st, CL_SUCCESS);
+        let mut model_refs: i64 = 1;
+        for _ in 0..g.range(1, 40) {
+            if g.range(0, 2) == 0 {
+                let st = retain_context(ctx);
+                if model_refs > 0 {
+                    assert_eq!(st, CL_SUCCESS, "case {case}");
+                    model_refs += 1;
+                } else {
+                    assert_eq!(st, CL_INVALID_CONTEXT, "case {case}");
+                }
+            } else {
+                let st = release_context(ctx);
+                if model_refs > 0 {
+                    assert_eq!(st, CL_SUCCESS, "case {case}");
+                    model_refs -= 1;
+                } else {
+                    assert_eq!(st, CL_INVALID_CONTEXT, "case {case}");
+                }
+            }
+            // liveness check mirrors the model
+            let mut devs = Vec::new();
+            let expect =
+                if model_refs > 0 { CL_SUCCESS } else { CL_INVALID_CONTEXT };
+            assert_eq!(get_context_devices(ctx, &mut devs), expect, "case {case}");
+        }
+        // drain
+        while model_refs > 0 {
+            assert_eq!(release_context(ctx), CL_SUCCESS);
+            model_refs -= 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Semaphore under random contention
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_semaphore_conserves_permits() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    for case in 0..10u64 {
+        let mut g = Gen::new(case ^ 0x5e5e);
+        let permits = g.range(1, 4) as usize;
+        let threads = g.range(2, 6) as usize;
+        let rounds = g.range(5, 30) as usize;
+        let sem = Arc::new(Semaphore::new(permits));
+        let inside = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let (sem, inside, max_seen) =
+                    (sem.clone(), inside.clone(), max_seen.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..rounds {
+                        sem.wait();
+                        let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                        max_seen.fetch_max(now, Ordering::SeqCst);
+                        std::thread::yield_now();
+                        inside.fetch_sub(1, Ordering::SeqCst);
+                        sem.post();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            max_seen.load(Ordering::SeqCst) <= permits,
+            "case {case}: {} threads inside a {}-permit section",
+            max_seen.load(Ordering::SeqCst),
+            permits
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Xorshift algebraic properties (the device kernel's contract)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_xorshift_is_injective_on_sample() {
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..100_000u32 {
+        let v = xorshift(init_seed(i));
+        assert!(seen.insert(v), "collision at gid {i}");
+    }
+}
+
+#[test]
+fn prop_xorshift_no_short_cycles() {
+    // A full-period xorshift has period 2^64-1; any cycle shorter than
+    // 2^20 from a hashed seed would be a transcription bug.
+    let start = init_seed(12345);
+    let mut s = start;
+    for step in 1..=(1 << 20) {
+        s = xorshift(s);
+        assert_ne!(s, start, "cycle of length {step}");
+        assert_ne!(s, 0, "hit the zero fixed point at step {step}");
+    }
+}

@@ -1,0 +1,420 @@
+//! Integration tests for the `rawcl` substrate: full host-API flows over
+//! both backends (native PJRT and simulated devices), including the
+//! paper's init→rng→read pipeline and cross-backend bit-exactness.
+
+use cf4rs::rawcl::*;
+use cf4rs::runtime::Manifest;
+
+/// Build a (ctx, queue, program) triple on the given device.
+fn setup(dev: DeviceId, arts: &[&str], opts: &str) -> (ContextH, QueueH, ProgramH) {
+    let man = Manifest::discover().expect("artifacts present — run `make artifacts`");
+    let sources: Vec<String> = arts
+        .iter()
+        .map(|n| std::fs::read_to_string(&man.get(n).unwrap().path).unwrap())
+        .collect();
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[dev], &mut st);
+    assert_eq!(st, CL_SUCCESS);
+    let q = create_command_queue(ctx, dev, QueueProps::PROFILING_ENABLE, &mut st);
+    assert_eq!(st, CL_SUCCESS);
+    let prg = create_program_with_source(ctx, &sources, &mut st);
+    assert_eq!(st, CL_SUCCESS);
+    assert_eq!(build_program(prg, None, opts), CL_SUCCESS);
+    (ctx, q, prg)
+}
+
+fn teardown(ctx: ContextH, q: QueueH, prg: ProgramH) {
+    assert_eq!(finish(q), CL_SUCCESS);
+    release_program(prg);
+    release_command_queue(q);
+    release_context(ctx);
+}
+
+fn run_prng_pipeline(dev: DeviceId) -> Vec<u64> {
+    const N: usize = 4096;
+    let (ctx, q, prg) = setup(dev, &["init_n4096", "rng_n4096"], "");
+    let mut st = CL_SUCCESS;
+    let kinit = create_kernel(prg, "prng_init", &mut st);
+    let krng = create_kernel(prg, "prng_step", &mut st);
+    let buf1 = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    let buf2 = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+
+    // init(buf1, N)
+    assert_eq!(set_kernel_arg(kinit, 0, &ArgValue::Buffer(buf1)), CL_SUCCESS);
+    assert_eq!(
+        set_kernel_arg(kinit, 1, &ArgValue::Scalar((N as u32).to_le_bytes().to_vec())),
+        CL_SUCCESS
+    );
+    let mut evt = EventH::NULL;
+    assert_eq!(
+        enqueue_ndrange_kernel(q, kinit, 1, &[N], Some(&[256]), &[], Some(&mut evt)),
+        CL_SUCCESS
+    );
+    assert_eq!(wait_for_events(&[evt]), CL_SUCCESS);
+    release_event(evt);
+
+    // rng(N, buf1, buf2)
+    assert_eq!(
+        set_kernel_arg(krng, 0, &ArgValue::Scalar((N as u32).to_le_bytes().to_vec())),
+        CL_SUCCESS
+    );
+    assert_eq!(set_kernel_arg(krng, 1, &ArgValue::Buffer(buf1)), CL_SUCCESS);
+    assert_eq!(set_kernel_arg(krng, 2, &ArgValue::Buffer(buf2)), CL_SUCCESS);
+    assert_eq!(enqueue_ndrange_kernel(q, krng, 1, &[N], None, &[], None), CL_SUCCESS);
+
+    // blocking read of buf2
+    let mut out = vec![0u8; N * 8];
+    assert_eq!(enqueue_read_buffer(q, buf2, true, 0, &mut out, &[], None), CL_SUCCESS);
+
+    release_mem_object(buf1);
+    release_mem_object(buf2);
+    release_kernel(kinit);
+    release_kernel(krng);
+    teardown(ctx, q, prg);
+    out.chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[test]
+fn prng_pipeline_native_matches_reference() {
+    let vals = run_prng_pipeline(DeviceId(0));
+    for (i, &v) in vals.iter().enumerate().take(100) {
+        assert_eq!(v, simexec::xorshift(simexec::init_seed(i as u32)), "elem {i}");
+    }
+}
+
+#[test]
+fn prng_pipeline_sim_matches_native() {
+    // Cross-backend validation: the PJRT-executed Pallas kernel and the
+    // scalar Rust reference must agree bit-exactly on every element.
+    let native = run_prng_pipeline(DeviceId(0));
+    let sim = run_prng_pipeline(DeviceId(1));
+    assert_eq!(native, sim);
+}
+
+#[test]
+fn multi_step_fused_equals_16_single_steps_native() {
+    const N: usize = 4096;
+    let (ctx, q, prg) =
+        setup(DeviceId(0), &["init_n4096", "rng_n4096", "rngk16_n4096"], "-Dk=16");
+    let mut st = CL_SUCCESS;
+    let kinit = create_kernel(prg, "prng_init", &mut st);
+    let krng = create_kernel(prg, "prng_step", &mut st);
+    let kmulti = create_kernel(prg, "prng_multi_step", &mut st);
+    assert_eq!(st, CL_SUCCESS);
+    let seed = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    let fused_out = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    let ping = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    let pong = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+
+    let narg = ArgValue::Scalar((N as u32).to_le_bytes().to_vec());
+    set_kernel_arg(kinit, 0, &ArgValue::Buffer(seed));
+    set_kernel_arg(kinit, 1, &narg);
+    enqueue_ndrange_kernel(q, kinit, 1, &[N], None, &[], None);
+
+    // fused: seed -> fused_out in one dispatch
+    set_kernel_arg(kmulti, 0, &narg);
+    set_kernel_arg(kmulti, 1, &ArgValue::Buffer(seed));
+    set_kernel_arg(kmulti, 2, &ArgValue::Buffer(fused_out));
+    enqueue_ndrange_kernel(q, kmulti, 1, &[N], None, &[], None);
+
+    // 16 single steps: seed -> ping -> pong -> ping ...
+    set_kernel_arg(krng, 0, &narg);
+    let mut src = seed;
+    let mut dst = ping;
+    for i in 0..16 {
+        set_kernel_arg(krng, 1, &ArgValue::Buffer(src));
+        set_kernel_arg(krng, 2, &ArgValue::Buffer(dst));
+        enqueue_ndrange_kernel(q, krng, 1, &[N], None, &[], None);
+        src = dst;
+        dst = if i % 2 == 0 { pong } else { ping };
+    }
+    finish(q);
+    let mut fused = vec![0u8; N * 8];
+    let mut stepped = vec![0u8; N * 8];
+    enqueue_read_buffer(q, fused_out, true, 0, &mut fused, &[], None);
+    enqueue_read_buffer(q, src, true, 0, &mut stepped, &[], None);
+    assert_eq!(fused, stepped);
+
+    for m in [seed, fused_out, ping, pong] {
+        release_mem_object(m);
+    }
+    for k in [kinit, krng, kmulti] {
+        release_kernel(k);
+    }
+    teardown(ctx, q, prg);
+}
+
+#[test]
+fn vecadd_and_saxpy_on_native_device() {
+    const N: usize = 1024;
+    let (ctx, q, prg) = setup(DeviceId(0), &["vecadd_n1024", "saxpy_n1024"], "");
+    let mut st = CL_SUCCESS;
+    let kadd = create_kernel(prg, "vecadd", &mut st);
+    let ksax = create_kernel(prg, "saxpy", &mut st);
+    let xs: Vec<u8> = (0..N).flat_map(|i| (i as f32).to_le_bytes()).collect();
+    let ys: Vec<u8> = (0..N).flat_map(|i| (3.0 * i as f32).to_le_bytes()).collect();
+    let flags = MemFlags::READ_ONLY | MemFlags::COPY_HOST_PTR;
+    let bx = create_buffer(ctx, flags, N * 4, Some(&xs), &mut st);
+    let by = create_buffer(ctx, flags, N * 4, Some(&ys), &mut st);
+    let bo = create_buffer(ctx, MemFlags::WRITE_ONLY, N * 4, None, &mut st);
+
+    set_kernel_arg(kadd, 0, &ArgValue::Buffer(bx));
+    set_kernel_arg(kadd, 1, &ArgValue::Buffer(by));
+    set_kernel_arg(kadd, 2, &ArgValue::Buffer(bo));
+    assert_eq!(enqueue_ndrange_kernel(q, kadd, 1, &[N], None, &[], None), CL_SUCCESS);
+    let mut out = vec![0u8; N * 4];
+    enqueue_read_buffer(q, bo, true, 0, &mut out, &[], None);
+    let v = f32::from_le_bytes(out[400..404].try_into().unwrap());
+    assert_eq!(v, 400.0);
+
+    set_kernel_arg(ksax, 0, &ArgValue::Scalar(2.0f32.to_le_bytes().to_vec()));
+    set_kernel_arg(ksax, 1, &ArgValue::Buffer(bx));
+    set_kernel_arg(ksax, 2, &ArgValue::Buffer(by));
+    set_kernel_arg(ksax, 3, &ArgValue::Buffer(bo));
+    assert_eq!(enqueue_ndrange_kernel(q, ksax, 1, &[N], None, &[], None), CL_SUCCESS);
+    enqueue_read_buffer(q, bo, true, 0, &mut out, &[], None);
+    let v = f32::from_le_bytes(out[400..404].try_into().unwrap());
+    assert_eq!(v, 2.0 * 100.0 + 300.0);
+
+    for m in [bx, by, bo] {
+        release_mem_object(m);
+    }
+    release_kernel(kadd);
+    release_kernel(ksax);
+    teardown(ctx, q, prg);
+}
+
+#[test]
+fn saxpy_sim_matches_native() {
+    const N: usize = 1024;
+    let mut results: Vec<Vec<u8>> = Vec::new();
+    for dev in [DeviceId(0), DeviceId(2)] {
+        let (ctx, q, prg) = setup(dev, &["saxpy_n1024"], "");
+        let mut st = CL_SUCCESS;
+        let k = create_kernel(prg, "saxpy", &mut st);
+        let xs: Vec<u8> = (0..N).flat_map(|i| (0.5 * i as f32).to_le_bytes()).collect();
+        let ys: Vec<u8> = (0..N).flat_map(|i| (-(i as f32)).to_le_bytes()).collect();
+        let flags = MemFlags::READ_ONLY | MemFlags::COPY_HOST_PTR;
+        let bx = create_buffer(ctx, flags, N * 4, Some(&xs), &mut st);
+        let by = create_buffer(ctx, flags, N * 4, Some(&ys), &mut st);
+        let bo = create_buffer(ctx, MemFlags::WRITE_ONLY, N * 4, None, &mut st);
+        set_kernel_arg(k, 0, &ArgValue::Scalar(1.5f32.to_le_bytes().to_vec()));
+        set_kernel_arg(k, 1, &ArgValue::Buffer(bx));
+        set_kernel_arg(k, 2, &ArgValue::Buffer(by));
+        set_kernel_arg(k, 3, &ArgValue::Buffer(bo));
+        assert_eq!(enqueue_ndrange_kernel(q, k, 1, &[N], None, &[], None), CL_SUCCESS);
+        let mut out = vec![0u8; N * 4];
+        enqueue_read_buffer(q, bo, true, 0, &mut out, &[], None);
+        results.push(out);
+        for m in [bx, by, bo] {
+            release_mem_object(m);
+        }
+        release_kernel(k);
+        teardown(ctx, q, prg);
+    }
+    assert_eq!(results[0], results[1], "sim saxpy deviates from native");
+}
+
+#[test]
+fn profiling_timestamps_and_sim_duration() {
+    const N: usize = 4096;
+    let (ctx, q, prg) = setup(DeviceId(1), &["init_n4096"], "");
+    let mut st = CL_SUCCESS;
+    let kinit = create_kernel(prg, "prng_init", &mut st);
+    let buf = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    set_kernel_arg(kinit, 0, &ArgValue::Buffer(buf));
+    set_kernel_arg(kinit, 1, &ArgValue::Scalar((N as u32).to_le_bytes().to_vec()));
+    let mut evt = EventH::NULL;
+    enqueue_ndrange_kernel(q, kinit, 1, &[N], None, &[], Some(&mut evt));
+    finish(q);
+    let (mut queued, mut submit, mut start, mut end) = (0u64, 0u64, 0u64, 0u64);
+    assert_eq!(get_event_profiling_info(evt, ProfilingInfo::Queued, &mut queued), CL_SUCCESS);
+    get_event_profiling_info(evt, ProfilingInfo::Submit, &mut submit);
+    get_event_profiling_info(evt, ProfilingInfo::Start, &mut start);
+    get_event_profiling_info(evt, ProfilingInfo::End, &mut end);
+    assert!(queued <= submit && submit <= start && start < end);
+    let dur = end - start;
+    if cf4rs::rawcl::profile::sim_timescale() == 1.0 {
+        assert!(dur >= 5_000, "sim kernel too fast: {dur} ns (launch is 5 µs)");
+    }
+    assert!(dur < 50_000_000, "sim kernel too slow: {dur} ns");
+    release_event(evt);
+    release_mem_object(buf);
+    release_kernel(kinit);
+    teardown(ctx, q, prg);
+}
+
+#[test]
+fn wait_list_orders_across_queues() {
+    const N: usize = 4096;
+    let man = Manifest::discover().expect("artifacts");
+    let src = std::fs::read_to_string(&man.get("init_n4096").unwrap().path).unwrap();
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[DeviceId(1)], &mut st);
+    let q1 = create_command_queue(ctx, DeviceId(1), QueueProps::PROFILING_ENABLE, &mut st);
+    let q2 = create_command_queue(ctx, DeviceId(1), QueueProps::PROFILING_ENABLE, &mut st);
+    let prg = create_program_with_source(ctx, &[src], &mut st);
+    build_program(prg, None, "");
+    let k = create_kernel(prg, "prng_init", &mut st);
+    let buf = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    set_kernel_arg(k, 0, &ArgValue::Buffer(buf));
+    set_kernel_arg(k, 1, &ArgValue::Scalar((N as u32).to_le_bytes().to_vec()));
+
+    // Kernel on q1; read on q2 must wait for the kernel via wait list.
+    let mut kevt = EventH::NULL;
+    enqueue_ndrange_kernel(q1, k, 1, &[N], None, &[], Some(&mut kevt));
+    let mut out = vec![0u8; N * 8];
+    let mut revt = EventH::NULL;
+    assert_eq!(
+        enqueue_read_buffer(q2, buf, true, 0, &mut out, &[kevt], Some(&mut revt)),
+        CL_SUCCESS
+    );
+    let (mut kend, mut rstart) = (0u64, 0u64);
+    get_event_profiling_info(kevt, ProfilingInfo::End, &mut kend);
+    get_event_profiling_info(revt, ProfilingInfo::Start, &mut rstart);
+    assert!(rstart >= kend, "read started before kernel completed");
+    assert_eq!(u64::from_le_bytes(out[..8].try_into().unwrap()), simexec::init_seed(0));
+    release_event(kevt);
+    release_event(revt);
+    release_mem_object(buf);
+    release_kernel(k);
+    release_program(prg);
+    release_command_queue(q1);
+    release_command_queue(q2);
+    release_context(ctx);
+}
+
+#[test]
+fn enqueue_validation_errors() {
+    const N: usize = 4096;
+    let (ctx, q, prg) = setup(DeviceId(1), &["rng_n4096"], "");
+    let mut st = CL_SUCCESS;
+    let k = create_kernel(prg, "prng_step", &mut st);
+    let buf = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+
+    // unset args
+    assert_eq!(
+        enqueue_ndrange_kernel(q, k, 1, &[N], None, &[], None),
+        CL_INVALID_KERNEL_ARGS
+    );
+    set_kernel_arg(k, 0, &ArgValue::Scalar((N as u32).to_le_bytes().to_vec()));
+    set_kernel_arg(k, 1, &ArgValue::Buffer(buf));
+    set_kernel_arg(k, 2, &ArgValue::Buffer(buf));
+
+    assert_eq!(
+        enqueue_ndrange_kernel(q, k, 0, &[N], None, &[], None),
+        CL_INVALID_WORK_DIMENSION
+    );
+    // lws does not divide gws (pre-2.0 rule)
+    assert_eq!(
+        enqueue_ndrange_kernel(q, k, 1, &[N], Some(&[100]), &[], None),
+        CL_INVALID_WORK_GROUP_SIZE
+    );
+    // lws over the per-dimension limit (GTX1080-sim: 1024 in dim 0)
+    assert_eq!(
+        enqueue_ndrange_kernel(q, k, 1, &[N], Some(&[2048]), &[], None),
+        CL_INVALID_WORK_ITEM_SIZE
+    );
+    // gws smaller than problem size
+    assert_eq!(
+        enqueue_ndrange_kernel(q, k, 1, &[N / 2], None, &[], None),
+        CL_INVALID_GLOBAL_WORK_SIZE
+    );
+    // baked scalar mismatch (nseeds != artifact n)
+    set_kernel_arg(k, 0, &ArgValue::Scalar(7u32.to_le_bytes().to_vec()));
+    assert_eq!(
+        enqueue_ndrange_kernel(q, k, 1, &[N], None, &[], None),
+        CL_INVALID_KERNEL_ARGS
+    );
+
+    release_mem_object(buf);
+    release_kernel(k);
+    teardown(ctx, q, prg);
+}
+
+#[test]
+fn write_copy_fill_roundtrip() {
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[DeviceId(2)], &mut st);
+    let q = create_command_queue(ctx, DeviceId(2), QueueProps::empty(), &mut st);
+    let a = create_buffer(ctx, MemFlags::READ_WRITE, 32, None, &mut st);
+    let b = create_buffer(ctx, MemFlags::READ_WRITE, 32, None, &mut st);
+
+    let data: Vec<u8> = (0..32).collect();
+    assert_eq!(enqueue_write_buffer(q, a, true, 0, &data, &[], None), CL_SUCCESS);
+    assert_eq!(enqueue_copy_buffer(q, a, b, 0, 0, 32, &[], None), CL_SUCCESS);
+    assert_eq!(enqueue_fill_buffer(q, a, &[0xAB], 0, 16, &[], None), CL_SUCCESS);
+    finish(q);
+    let mut out = vec![0u8; 32];
+    enqueue_read_buffer(q, b, true, 0, &mut out, &[], None);
+    assert_eq!(out, data);
+    enqueue_read_buffer(q, a, true, 0, &mut out, &[], None);
+    assert_eq!(&out[..16], &[0xAB; 16]);
+    assert_eq!(&out[16..], &data[16..]);
+
+    // overlapping same-buffer copy is rejected
+    assert_eq!(enqueue_copy_buffer(q, a, a, 0, 8, 16, &[], None), CL_MEM_COPY_OVERLAP);
+
+    release_mem_object(a);
+    release_mem_object(b);
+    release_command_queue(q);
+    release_context(ctx);
+}
+
+#[test]
+fn queue_on_foreign_device_rejected() {
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[DeviceId(1)], &mut st);
+    let q = create_command_queue(ctx, DeviceId(0), QueueProps::empty(), &mut st);
+    assert!(q.is_null());
+    assert_eq!(st, CL_INVALID_DEVICE);
+    release_context(ctx);
+}
+
+#[test]
+fn nonblocking_safe_read_rejected() {
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[DeviceId(1)], &mut st);
+    let q = create_command_queue(ctx, DeviceId(1), QueueProps::empty(), &mut st);
+    let b = create_buffer(ctx, MemFlags::READ_WRITE, 8, None, &mut st);
+    let mut out = [0u8; 8];
+    assert_eq!(
+        enqueue_read_buffer(q, b, false, 0, &mut out, &[], None),
+        CL_INVALID_OPERATION
+    );
+    release_mem_object(b);
+    release_command_queue(q);
+    release_context(ctx);
+}
+
+#[test]
+fn profiling_denied_without_queue_flag() {
+    const N: usize = 4096;
+    let man = Manifest::discover().expect("artifacts");
+    let src = std::fs::read_to_string(&man.get("init_n4096").unwrap().path).unwrap();
+    let mut st = CL_SUCCESS;
+    let ctx = create_context(&[DeviceId(1)], &mut st);
+    let q = create_command_queue(ctx, DeviceId(1), QueueProps::empty(), &mut st);
+    let prg = create_program_with_source(ctx, &[src], &mut st);
+    build_program(prg, None, "");
+    let k = create_kernel(prg, "prng_init", &mut st);
+    let buf = create_buffer(ctx, MemFlags::READ_WRITE, N * 8, None, &mut st);
+    set_kernel_arg(k, 0, &ArgValue::Buffer(buf));
+    set_kernel_arg(k, 1, &ArgValue::Scalar((N as u32).to_le_bytes().to_vec()));
+    let mut evt = EventH::NULL;
+    enqueue_ndrange_kernel(q, k, 1, &[N], None, &[], Some(&mut evt));
+    finish(q);
+    let mut v = 0u64;
+    assert_eq!(
+        get_event_profiling_info(evt, ProfilingInfo::Start, &mut v),
+        CL_PROFILING_INFO_NOT_AVAILABLE
+    );
+    release_event(evt);
+    release_mem_object(buf);
+    release_kernel(k);
+    release_program(prg);
+    release_command_queue(q);
+    release_context(ctx);
+}

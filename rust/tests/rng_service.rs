@@ -1,0 +1,107 @@
+//! End-to-end tests of the PRNG service (both realisations, §5/Fig. 2),
+//! including cross-implementation and cross-backend equivalence.
+
+use cf4rs::coordinator::{run_ccl, run_raw, RngConfig, Sink};
+use cf4rs::coordinator::rng_service::expected_first_batch;
+use cf4rs::coordinator::stats;
+
+fn cfg(n: usize, iters: usize, dev: u32) -> RngConfig {
+    let mut c = RngConfig::new(n, iters);
+    c.device_index = dev;
+    c.sink = Sink::Sample(256);
+    c
+}
+
+#[test]
+fn ccl_service_on_sim_gpu_produces_expected_stream() {
+    let out = run_ccl(&cfg(4096, 4, 1)).unwrap();
+    assert_eq!(out.total_bytes, 8 * 4096 * 4);
+    assert_eq!(out.sample.len(), 256);
+    for (i, &w) in out.sample.iter().enumerate().take(64) {
+        assert_eq!(w, expected_first_batch(i), "sample word {i}");
+    }
+    let s = out.prof_summary.unwrap();
+    assert!(s.contains("RNG_KERNEL"));
+    assert!(s.contains("READ_BUFFER"));
+}
+
+#[test]
+fn raw_service_matches_ccl_sample() {
+    let a = run_ccl(&cfg(4096, 3, 1)).unwrap();
+    let b = run_raw(&cfg(4096, 3, 1)).unwrap();
+    assert_eq!(a.sample, b.sample, "raw and ccl streams must be identical");
+    let (tkinit, tkrng, tcomms) = b.raw_prof.unwrap();
+    assert!(tkinit > 0);
+    assert!(tkrng > 0, "rng kernel time: {tkrng}");
+    assert!(tcomms > 0);
+}
+
+#[test]
+fn native_device_matches_sim_device() {
+    let sim = run_ccl(&cfg(4096, 3, 1)).unwrap();
+    let native = run_ccl(&cfg(4096, 3, 0)).unwrap();
+    assert_eq!(sim.sample, native.sample, "PJRT vs reference divergence");
+}
+
+#[test]
+fn stream_passes_statistical_screen() {
+    let mut c = cfg(16384, 2, 2);
+    c.sink = Sink::Sample(16384);
+    let out = run_ccl(&c).unwrap();
+    for (name, r) in stats::screen(&out.sample) {
+        assert!(r.passed, "{name} failed: {}", r.statistic);
+    }
+}
+
+#[test]
+fn writer_sink_receives_all_bytes() {
+    use std::sync::{Arc, Mutex};
+    #[derive(Clone, Default)]
+    struct CountWriter(Arc<Mutex<u64>>);
+    impl std::io::Write for CountWriter {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            *self.0.lock().unwrap() += b.len() as u64;
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let counter = CountWriter::default();
+    let count = counter.0.clone();
+    let mut c = cfg(4096, 5, 1);
+    c.sink = Sink::Writer(Mutex::new(Box::new(counter)));
+    let out = run_ccl(&c).unwrap();
+    assert_eq!(*count.lock().unwrap(), out.total_bytes);
+}
+
+#[test]
+fn profile_disabled_skips_summaries() {
+    let mut c = cfg(4096, 2, 1);
+    c.profile = false;
+    let out = run_ccl(&c).unwrap();
+    assert!(out.prof_summary.is_none());
+    assert!(out.prof_export.is_none());
+    let out = run_raw(&{
+        let mut c = cfg(4096, 2, 1);
+        c.profile = false;
+        c
+    })
+    .unwrap();
+    assert!(out.raw_prof.is_none());
+}
+
+#[test]
+fn unknown_size_is_friendly_error() {
+    let e = run_ccl(&cfg(1234, 2, 1)).unwrap_err();
+    assert!(e.message.contains("1234"), "{e}");
+    let e = run_raw(&cfg(1234, 2, 1)).unwrap_err();
+    assert!(e.contains("1234"), "{e}");
+}
+
+#[test]
+fn single_iteration_works() {
+    // iters=1: only the init batch is read; no rng kernel launches.
+    let out = run_ccl(&cfg(4096, 1, 1)).unwrap();
+    assert_eq!(out.sample[0], expected_first_batch(0));
+}
