@@ -8,7 +8,9 @@ no tolerance anywhere.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property-based suite needs hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import hash_init, ref, xorshift
 

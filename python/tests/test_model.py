@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based suite needs hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile import model
 from compile.kernels import ref

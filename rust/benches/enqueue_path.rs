@@ -44,8 +44,7 @@ fn main() {
         let mut st = 0;
         let ctx = rawcl::create_context(&[rawcl::DeviceId(1)], &mut st);
         let q = rawcl::create_command_queue(ctx, rawcl::DeviceId(1), QueueProps::PROFILING_ENABLE, &mut st);
-        let man = cf4rs::runtime::Manifest::discover().unwrap();
-        let src = std::fs::read_to_string(&man.get("rng_n4096").unwrap().path).unwrap();
+        let src = cf4rs::runtime::hlogen::resolve_named_source("rng_n4096").unwrap();
         let prg = rawcl::create_program_with_source(ctx, &[src], &mut st);
         rawcl::build_program(prg, None, "");
         let k = rawcl::create_kernel(prg, "prng_step", &mut st);

@@ -1,0 +1,254 @@
+//! # `backend` — the unified execution layer
+//!
+//! The paper's framework hides one verbose host API; cf4rs grew two
+//! execution substrates (the `SimCL` simulated devices and the PJRT
+//! runtime) that the coordinator and harness used to special-case. This
+//! module gives them one contract — the [`Backend`] trait: **compile,
+//! alloc, enqueue, wait, timestamps** — mirroring PJRT's "uniform device
+//! API" ambition at the scale of this codebase:
+//!
+//! * [`SimBackend`] wraps the scalar reference kernels of
+//!   [`crate::rawcl::simexec`] plus a simulated device's roofline timing
+//!   model (timestamps are *modeled*, execution is instant);
+//! * [`PjrtBackend`] wraps [`crate::runtime`]'s client/executable pair
+//!   (timestamps are real wall-clock instants).
+//!
+//! Backends register in a [`BackendRegistry`] which
+//! [`crate::ccl::selector`] filter chains select over, exactly like the
+//! paper's device-selection filters (§4.3/§4.4) — a registry entry is
+//! addressed by the `ccl` device it executes for. The multi-device
+//! work-stealing scheduler ([`crate::coordinator::scheduler`]) dispatches
+//! over every registered backend concurrently and merges both results
+//! and per-backend event timelines (via [`crate::ccl::Prof`]).
+//!
+//! ## Kernel-launch ABI
+//!
+//! Launch arguments are positional, per kernel family:
+//!
+//! | family           | arguments                                 |
+//! |------------------|-------------------------------------------|
+//! | `PrngInit`       | `[Buf out]`                               |
+//! | `PrngStep`/Multi | `[Buf in, Buf out]`                       |
+//! | `VecAdd`         | `[Buf x, Buf y, Buf out]`                 |
+//! | `Saxpy`          | `[F32 a, Buf x, Buf y, Buf out]`          |
+//!
+//! ## Registering a new backend
+//!
+//! Implement [`Backend`] for your executor (a GPU PJRT plugin, a remote
+//! worker, ...), then `BackendRegistry::global().register(Arc::new(b))`
+//! — the scheduler, the selector integration and the harness comparison
+//! table pick it up without any caller changes. See
+//! `rust/tests/backend_compare.rs` for a minimal custom backend.
+
+pub mod pjrt;
+pub mod registry;
+pub mod sim;
+
+pub use pjrt::PjrtBackend;
+pub use registry::BackendRegistry;
+pub use sim::SimBackend;
+
+use std::fmt;
+
+use crate::rawcl::kernelspec::KernelKind;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::types::DeviceId;
+
+/// Opaque per-backend kernel handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelId(pub u64);
+
+/// Opaque per-backend buffer handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufId(pub u64);
+
+/// Opaque per-backend event handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(pub u64);
+
+/// Error from a backend operation.
+#[derive(Debug, Clone)]
+pub struct BackendError {
+    /// Name of the backend that failed.
+    pub backend: String,
+    pub message: String,
+}
+
+impl BackendError {
+    pub fn new(backend: impl Into<String>, message: impl Into<String>) -> Self {
+        Self { backend: backend.into(), message: message.into() }
+    }
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[backend {}] {}", self.backend, self.message)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+pub type BackendResult<T> = Result<T, BackendError>;
+
+/// What to compile: a kernel family instantiated at a problem size.
+///
+/// `gid_offset` shifts the global indices hashed by `PrngInit` so a
+/// scheduler can shard one logical stream across backends; `k` is the
+/// fused step count of `PrngMultiStep`. Both are compile-time parameters
+/// because artifacts bake them in at lowering time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CompileSpec {
+    pub kind: KernelKind,
+    pub n: usize,
+    pub k: usize,
+    pub gid_offset: u64,
+}
+
+impl CompileSpec {
+    pub fn init(n: usize) -> Self {
+        Self { kind: KernelKind::PrngInit, n, k: 1, gid_offset: 0 }
+    }
+
+    pub fn init_at(n: usize, gid_offset: u64) -> Self {
+        Self { kind: KernelKind::PrngInit, n, k: 1, gid_offset }
+    }
+
+    pub fn step(n: usize) -> Self {
+        Self { kind: KernelKind::PrngStep, n, k: 1, gid_offset: 0 }
+    }
+
+    pub fn multi_step(n: usize, k: usize) -> Self {
+        Self { kind: KernelKind::PrngMultiStep, n, k, gid_offset: 0 }
+    }
+
+    pub fn vecadd(n: usize) -> Self {
+        Self { kind: KernelKind::VecAdd, n, k: 1, gid_offset: 0 }
+    }
+
+    pub fn saxpy(n: usize) -> Self {
+        Self { kind: KernelKind::Saxpy, n, k: 1, gid_offset: 0 }
+    }
+
+    /// Display name used for profiling events (matches the event names
+    /// the paper's service assigns, so profiles aggregate cleanly).
+    pub fn event_name(&self) -> &'static str {
+        match self.kind {
+            KernelKind::PrngInit => "INIT_KERNEL",
+            KernelKind::PrngStep | KernelKind::PrngMultiStep => "RNG_KERNEL",
+            KernelKind::VecAdd => "VECADD_KERNEL",
+            KernelKind::Saxpy => "SAXPY_KERNEL",
+        }
+    }
+}
+
+/// One positional kernel-launch argument (see the module-level ABI table).
+#[derive(Debug, Clone, Copy)]
+pub enum LaunchArg {
+    Buf(BufId),
+    U32(u32),
+    F32(f32),
+}
+
+/// Event timestamps, ns on the shared process profiling clock
+/// ([`crate::rawcl::clock`]), so timelines from different backends are
+/// directly comparable — which the profiler's overlap detection needs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventTimes {
+    pub queued: u64,
+    pub submit: u64,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl EventTimes {
+    pub fn duration(&self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// A completed command on a backend's timeline: (event name, times).
+pub type TimelineEntry = (String, EventTimes);
+
+/// The uniform execution contract every substrate implements.
+///
+/// Commands execute in order per backend (one logical queue); overlap
+/// across backends comes from the scheduler driving backends from
+/// separate threads. All operations are thread-safe.
+pub trait Backend: Send + Sync {
+    /// Human-readable backend name (unique within a registry).
+    fn name(&self) -> String;
+
+    /// Which execution substrate this is.
+    fn kind(&self) -> BackendKind;
+
+    /// The `rawcl` device this backend executes for — the hook that
+    /// lets `ccl::selector` filter chains select backends.
+    fn device_id(&self) -> DeviceId;
+
+    /// Compile the kernel described by `spec`. Implementations cache by
+    /// spec: compiling the same spec twice returns the same handle, so
+    /// callers may compile freely without leaking kernel state.
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId>;
+
+    /// Allocate a device buffer of `bytes`.
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId>;
+
+    /// Release a buffer (no-op for unknown handles).
+    fn free(&self, buf: BufId);
+
+    /// Write host bytes into a buffer.
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId>;
+
+    /// Read a buffer back into host memory.
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId>;
+
+    /// Launch a compiled kernel with positional args.
+    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId>;
+
+    /// Block until an event has completed.
+    fn wait(&self, ev: EventId) -> BackendResult<()>;
+
+    /// Timestamps of a completed event.
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes>;
+
+    /// Drain the completed-command timeline (name + times per command,
+    /// in completion order). Feeds [`crate::ccl::Prof::add_timeline`].
+    ///
+    /// Draining also releases the per-event records: [`timestamps`]
+    /// (self::Backend::timestamps) is only valid for events recorded
+    /// since the last drain. Long-running drivers must drain
+    /// periodically (discarding if unwanted) to keep memory bounded.
+    ///
+    /// The drain is per *backend*, not per driver: concurrent drivers
+    /// sharing one backend (e.g. the global registry) will partition
+    /// each other's events arbitrarily. Use a dedicated
+    /// [`BackendRegistry`] when a run needs an isolated profile.
+    fn drain_timeline(&self) -> Vec<TimelineEntry>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_spec_event_names() {
+        assert_eq!(CompileSpec::init(8).event_name(), "INIT_KERNEL");
+        assert_eq!(CompileSpec::step(8).event_name(), "RNG_KERNEL");
+        assert_eq!(CompileSpec::multi_step(8, 4).event_name(), "RNG_KERNEL");
+        assert_eq!(CompileSpec::vecadd(8).event_name(), "VECADD_KERNEL");
+        assert_eq!(CompileSpec::saxpy(8).event_name(), "SAXPY_KERNEL");
+    }
+
+    #[test]
+    fn event_times_duration_saturates() {
+        let t = EventTimes { queued: 0, submit: 0, start: 10, end: 4 };
+        assert_eq!(t.duration(), 0);
+    }
+
+    #[test]
+    fn backend_error_display_names_backend() {
+        let e = BackendError::new("sim:gtx1080", "boom");
+        assert!(e.to_string().contains("sim:gtx1080"));
+        assert!(e.to_string().contains("boom"));
+    }
+}

@@ -1,0 +1,141 @@
+//! [`BackendRegistry`] — discovery and selection of execution backends.
+//!
+//! The registry plays the role the platform/device tables play for the
+//! substrate: a process-wide list of executors. The default registry
+//! holds one backend per `rawcl` device (a [`PjrtBackend`] per native
+//! device, a [`SimBackend`] per simulated device); additional backends
+//! (GPU PJRT plugins, remote workers, ...) register at runtime and are
+//! picked up by the scheduler and the harness without caller changes.
+//!
+//! Selection reuses the paper's device-selection machinery: a
+//! [`FilterChain`](crate::ccl::selector::FilterChain) runs over the
+//! `ccl` devices the backends execute for, and the registry keeps the
+//! backends whose device survived the chain.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::ccl::device::Device;
+use crate::ccl::selector::FilterChain;
+use crate::rawcl::device as rawdev;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::types::DeviceId;
+
+use super::{Backend, PjrtBackend, SimBackend};
+
+/// A thread-safe, extensible list of backends.
+#[derive(Default)]
+pub struct BackendRegistry {
+    backends: RwLock<Vec<Arc<dyn Backend>>>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (tests, custom topologies).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A registry with one backend per `rawcl` device.
+    pub fn with_default_backends() -> Self {
+        let reg = Self::new();
+        for d in rawdev::devices() {
+            let backend: Arc<dyn Backend> = match d.profile.backend {
+                BackendKind::Native => match PjrtBackend::new(d.id) {
+                    Ok(b) => Arc::new(b),
+                    Err(_) => continue,
+                },
+                BackendKind::Simulated => match SimBackend::new(d.id) {
+                    Ok(b) => Arc::new(b),
+                    Err(_) => continue,
+                },
+            };
+            reg.register(backend);
+        }
+        reg
+    }
+
+    /// The process-wide registry (lazily built from the device table).
+    pub fn global() -> &'static BackendRegistry {
+        static GLOBAL: OnceLock<BackendRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(BackendRegistry::with_default_backends)
+    }
+
+    /// Add a backend (the extension point for new substrates).
+    pub fn register(&self, backend: Arc<dyn Backend>) {
+        self.backends.write().unwrap().push(backend);
+    }
+
+    /// Snapshot of all registered backends.
+    pub fn backends(&self) -> Vec<Arc<dyn Backend>> {
+        self.backends.read().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The backend bound to a given device, if any.
+    pub fn find_by_device(&self, id: DeviceId) -> Option<Arc<dyn Backend>> {
+        self.backends().into_iter().find(|b| b.device_id() == id)
+    }
+
+    /// Run a device filter chain over the backends' devices (paper
+    /// §4.3/§4.4 semantics) and keep the backends whose device survived.
+    ///
+    /// Device filters can only see devices in the `rawcl` device table:
+    /// a backend registered for a foreign device id is not filterable
+    /// and is **excluded** by `select`. Dispatch to such backends with
+    /// no selector (`backends()` / `ShardedRngConfig.selector: None`)
+    /// or filter `backends()` by [`Backend::name`] instead.
+    pub fn select(&self, chain: &FilterChain) -> Vec<Arc<dyn Backend>> {
+        let all = self.backends();
+        let devices: Vec<Device> = all
+            .iter()
+            .filter_map(|b| Device::from_id(b.device_id()).ok())
+            .collect();
+        let kept = chain.apply(devices);
+        all.into_iter()
+            .filter(|b| kept.iter().any(|d| d.id() == b.device_id()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccl::selector::Filter;
+
+    #[test]
+    fn default_registry_covers_all_devices() {
+        let reg = BackendRegistry::with_default_backends();
+        assert_eq!(reg.len(), rawdev::devices().len());
+        assert!(reg.find_by_device(DeviceId(0)).is_some());
+        assert!(reg.find_by_device(DeviceId(42)).is_none());
+    }
+
+    #[test]
+    fn selector_filters_backends_like_devices() {
+        let reg = BackendRegistry::with_default_backends();
+        let gpus = reg.select(&FilterChain::new().add(Filter::type_gpu()));
+        assert_eq!(gpus.len(), 2);
+        assert!(gpus.iter().all(|b| b.kind() == BackendKind::Simulated));
+
+        let native = reg.select(&FilterChain::new().add(Filter::name_contains("PJRT")));
+        assert_eq!(native.len(), 1);
+        assert_eq!(native[0].kind(), BackendKind::Native);
+
+        let none = reg.select(&FilterChain::new().add(Filter::name_contains("no-such")));
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn global_registry_is_stable() {
+        let a = BackendRegistry::global().len();
+        let b = BackendRegistry::global().len();
+        assert_eq!(a, b);
+        assert!(a >= 3, "seed device table has 3 devices");
+    }
+}

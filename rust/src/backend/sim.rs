@@ -1,0 +1,358 @@
+//! [`SimBackend`] — the simulated-device implementation of [`Backend`].
+//!
+//! Executes the scalar reference kernels of [`crate::rawcl::simexec`]
+//! (results are always correct, bit-identical to the native path) and
+//! stamps events with *modeled* timestamps from the device's roofline
+//! [`TimingModel`] on a per-backend virtual in-order queue: each
+//! command starts no earlier than the previous one ended and lasts
+//! exactly what the model predicts. Unlike the `rawcl` queue workers,
+//! no wall-clock sleeping happens — a scheduler driving a `SimBackend`
+//! runs at host speed while profiles keep device-realistic shapes.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::rawcl::clock;
+use crate::rawcl::device;
+use crate::rawcl::kernelspec::KernelKind;
+use crate::rawcl::profile::{BackendKind, TimingModel};
+use crate::rawcl::simexec;
+use crate::rawcl::types::DeviceId;
+
+use super::{
+    Backend, BackendError, BackendResult, BufId, CompileSpec, EventId, EventTimes,
+    KernelId, LaunchArg, TimelineEntry,
+};
+
+#[derive(Default)]
+struct SimState {
+    next_id: u64,
+    bufs: HashMap<u64, Vec<u8>>,
+    kernels: HashMap<u64, CompileSpec>,
+    /// Compile cache: same spec → same handle (no growth on re-compile).
+    kernel_ids: HashMap<CompileSpec, u64>,
+    events: HashMap<u64, EventTimes>,
+    timeline: Vec<TimelineEntry>,
+    /// Virtual queue head: the modeled end of the last command.
+    cursor_ns: u64,
+}
+
+impl SimState {
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+}
+
+/// Simulated-device backend (one per `SimCL` device).
+pub struct SimBackend {
+    device: DeviceId,
+    name: String,
+    timing: TimingModel,
+    state: Mutex<SimState>,
+}
+
+impl SimBackend {
+    /// Backend for a simulated `rawcl` device (devices 1/2 in the seed
+    /// table). Rejects native devices — those get a [`super::PjrtBackend`].
+    pub fn new(dev: DeviceId) -> BackendResult<Self> {
+        let d = device::device(dev).ok_or_else(|| {
+            BackendError::new("sim", format!("no such device {}", dev.0))
+        })?;
+        if d.profile.backend != BackendKind::Simulated {
+            return Err(BackendError::new(
+                "sim",
+                format!("device {} ({}) is not simulated", dev.0, d.profile.name),
+            ));
+        }
+        Ok(Self {
+            device: dev,
+            name: format!("sim:{}", d.profile.name),
+            timing: d.profile.timing,
+            state: Mutex::new(SimState::default()),
+        })
+    }
+
+    fn err(&self, message: impl Into<String>) -> BackendError {
+        BackendError::new(self.name.as_str(), message)
+    }
+
+    /// Stamp one command on the virtual in-order queue and record it.
+    fn record(&self, st: &mut SimState, name: &str, model_ns: u64) -> EventId {
+        let now = clock::now_ns();
+        let start = now.max(st.cursor_ns);
+        let times = EventTimes { queued: now, submit: now, start, end: start + model_ns };
+        st.cursor_ns = times.end;
+        let id = st.fresh_id();
+        st.events.insert(id, times);
+        st.timeline.push((name.to_string(), times));
+        EventId(id)
+    }
+}
+
+/// Whole-launch roofline inputs, from the shared per-element costs
+/// ([`KernelKind::per_elem_cost`]) so backend and `rawcl` queue timing
+/// models can never drift apart.
+fn model_cost(spec: &CompileSpec) -> (u64, u64) {
+    let n = spec.n as u64;
+    let (ops, bytes) = spec.kind.per_elem_cost(spec.k);
+    (ops * n, bytes * n)
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Simulated
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.device
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        if spec.n == 0 || spec.k == 0 {
+            return Err(self.err(format!("degenerate kernel spec {spec:?}")));
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(&id) = st.kernel_ids.get(spec) {
+            return Ok(KernelId(id));
+        }
+        let id = st.fresh_id();
+        st.kernels.insert(id, *spec);
+        st.kernel_ids.insert(*spec, id);
+        Ok(KernelId(id))
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        let mut st = self.state.lock().unwrap();
+        let id = st.fresh_id();
+        st.bufs.insert(id, vec![0u8; bytes]);
+        Ok(BufId(id))
+    }
+
+    fn free(&self, buf: BufId) {
+        self.state.lock().unwrap().bufs.remove(&buf.0);
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        let mut st = self.state.lock().unwrap();
+        let dst = st
+            .bufs
+            .get_mut(&buf.0)
+            .and_then(|b| b.get_mut(offset..offset + data.len()))
+            .ok_or_else(|| {
+                BackendError::new(self.name.as_str(), format!("bad write range on buffer {buf:?}"))
+            })?;
+        dst.copy_from_slice(data);
+        let ns = self.timing.transfer_ns(data.len() as u64);
+        Ok(self.record(&mut st, "WRITE_BUFFER", ns))
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        let mut st = self.state.lock().unwrap();
+        let src = st
+            .bufs
+            .get(&buf.0)
+            .and_then(|b| b.get(offset..offset + out.len()))
+            .ok_or_else(|| {
+                BackendError::new(self.name.as_str(), format!("bad read range on buffer {buf:?}"))
+            })?;
+        out.copy_from_slice(src);
+        let ns = self.timing.transfer_ns(out.len() as u64);
+        Ok(self.record(&mut st, "READ_BUFFER", ns))
+    }
+
+    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
+        let mut st = self.state.lock().unwrap();
+        let spec = *st
+            .kernels
+            .get(&kernel.0)
+            .ok_or_else(|| BackendError::new(self.name.as_str(), "unknown kernel handle"))?;
+
+        // Resolve buffer args positionally (the module-level ABI).
+        let buf_ids: Vec<u64> = args
+            .iter()
+            .filter_map(|a| match a {
+                LaunchArg::Buf(b) => Some(b.0),
+                _ => None,
+            })
+            .collect();
+        let take = |st: &SimState, idx: usize, bytes: usize| -> BackendResult<Vec<u8>> {
+            st.bufs
+                .get(buf_ids.get(idx).ok_or_else(|| self.err("missing buffer arg"))?)
+                .filter(|b| b.len() >= bytes)
+                .map(|b| b[..bytes].to_vec())
+                .ok_or_else(|| self.err("buffer arg too small or dead"))
+        };
+        let put = |st: &mut SimState, idx: usize, data: &[u8]| -> BackendResult<()> {
+            let id = *buf_ids.get(idx).ok_or_else(|| self.err("missing buffer arg"))?;
+            let dst = st
+                .bufs
+                .get_mut(&id)
+                .and_then(|b| b.get_mut(..data.len()))
+                .ok_or_else(|| self.err("output buffer too small or dead"))?;
+            dst.copy_from_slice(data);
+            Ok(())
+        };
+
+        match spec.kind {
+            KernelKind::PrngInit => {
+                let mut out = vec![0u8; spec.n * 8];
+                simexec::run_init_from(spec.gid_offset, &mut out);
+                put(&mut st, 0, &out)?;
+            }
+            KernelKind::PrngStep | KernelKind::PrngMultiStep => {
+                let input = take(&st, 0, spec.n * 8)?;
+                let mut out = vec![0u8; spec.n * 8];
+                simexec::run_rng(&input, &mut out, spec.k);
+                put(&mut st, 1, &out)?;
+            }
+            KernelKind::VecAdd => {
+                let x = take(&st, 0, spec.n * 4)?;
+                let y = take(&st, 1, spec.n * 4)?;
+                let mut out = vec![0u8; spec.n * 4];
+                simexec::run_vecadd(&x, &y, &mut out);
+                put(&mut st, 2, &out)?;
+            }
+            KernelKind::Saxpy => {
+                let a = args
+                    .iter()
+                    .find_map(|arg| match arg {
+                        LaunchArg::F32(v) => Some(*v),
+                        _ => None,
+                    })
+                    .ok_or_else(|| self.err("saxpy needs an F32 scalar arg"))?;
+                let x = take(&st, 0, spec.n * 4)?;
+                let y = take(&st, 1, spec.n * 4)?;
+                let mut out = vec![0u8; spec.n * 4];
+                simexec::run_saxpy(a, &x, &y, &mut out);
+                put(&mut st, 2, &out)?;
+            }
+        }
+
+        let (ops, bytes) = model_cost(&spec);
+        let ns = self.timing.kernel_ns(ops, bytes);
+        Ok(self.record(&mut st, spec.event_name(), ns))
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        // Commands complete synchronously at enqueue; waiting just
+        // validates the handle.
+        let st = self.state.lock().unwrap();
+        if st.events.contains_key(&ev.0) {
+            Ok(())
+        } else {
+            Err(self.err("unknown event handle"))
+        }
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        let st = self.state.lock().unwrap();
+        st.events
+            .get(&ev.0)
+            .copied()
+            .ok_or_else(|| self.err("unknown event handle"))
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        let mut st = self.state.lock().unwrap();
+        // Event records drain with the timeline (see the trait docs) so
+        // streaming drivers stay memory-bounded. The virtual queue
+        // cursor resets too: a previous run's modeled backlog must not
+        // push this run's timestamps into the future, or sim timelines
+        // stop being comparable with wall-clock (PJRT) ones.
+        st.events.clear();
+        st.cursor_ns = 0;
+        std::mem::take(&mut st.timeline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> SimBackend {
+        SimBackend::new(DeviceId(1)).unwrap()
+    }
+
+    #[test]
+    fn rejects_native_device() {
+        assert!(SimBackend::new(DeviceId(0)).is_err());
+        assert!(SimBackend::new(DeviceId(9)).is_err());
+    }
+
+    #[test]
+    fn init_and_step_produce_reference_stream() {
+        let b = backend();
+        let n = 64;
+        let k_init = b.compile(&CompileSpec::init(n)).unwrap();
+        let k_step = b.compile(&CompileSpec::step(n)).unwrap();
+        let state = b.alloc(n * 8).unwrap();
+        let next = b.alloc(n * 8).unwrap();
+        b.enqueue(k_init, &[LaunchArg::Buf(state)]).unwrap();
+        b.enqueue(k_step, &[LaunchArg::Buf(state), LaunchArg::Buf(next)]).unwrap();
+        let mut out = vec![0u8; n * 8];
+        let ev = b.read(next, 0, &mut out).unwrap();
+        b.wait(ev).unwrap();
+        let first = u64::from_le_bytes(out[..8].try_into().unwrap());
+        assert_eq!(first, simexec::xorshift(simexec::init_seed(0)));
+    }
+
+    #[test]
+    fn offset_init_matches_shifted_reference() {
+        let b = backend();
+        let n = 16;
+        let k = b.compile(&CompileSpec::init_at(n, 1000)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        b.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        let mut out = vec![0u8; n * 8];
+        b.read(buf, 0, &mut out).unwrap();
+        let w3 = u64::from_le_bytes(out[24..32].try_into().unwrap());
+        assert_eq!(w3, simexec::init_seed(1003));
+    }
+
+    #[test]
+    fn virtual_timeline_is_in_order_and_modeled() {
+        let b = backend();
+        let n = 4096;
+        let k = b.compile(&CompileSpec::init(n)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        let e1 = b.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        let mut out = vec![0u8; n * 8];
+        let e2 = b.read(buf, 0, &mut out).unwrap();
+        let (t1, t2) = (b.timestamps(e1).unwrap(), b.timestamps(e2).unwrap());
+        assert!(t1.end <= t2.start, "queue must serialise: {t1:?} vs {t2:?}");
+        assert!(t1.duration() > 0 && t2.duration() > 0);
+        let tl = b.drain_timeline();
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].0, "INIT_KERNEL");
+        assert_eq!(tl[1].0, "READ_BUFFER");
+        assert!(b.drain_timeline().is_empty(), "drain clears");
+    }
+
+    #[test]
+    fn compile_is_cached_by_spec() {
+        let b = backend();
+        let a = b.compile(&CompileSpec::step(64)).unwrap();
+        let c = b.compile(&CompileSpec::step(64)).unwrap();
+        assert_eq!(a, c, "same spec must reuse the kernel handle");
+        let d = b.compile(&CompileSpec::step(128)).unwrap();
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn bad_ranges_and_handles_error() {
+        let b = backend();
+        let buf = b.alloc(16).unwrap();
+        assert!(b.write(buf, 12, &[0u8; 8]).is_err());
+        let mut out = [0u8; 32];
+        assert!(b.read(buf, 0, &mut out).is_err());
+        assert!(b.wait(EventId(999)).is_err());
+        assert!(b.enqueue(KernelId(999), &[]).is_err());
+        b.free(buf);
+        assert!(b.write(buf, 0, &[0u8; 4]).is_err(), "freed buffer is dead");
+    }
+}

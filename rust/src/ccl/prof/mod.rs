@@ -44,6 +44,9 @@ use super::queue::Queue;
 #[derive(Default)]
 pub struct Prof {
     queues: Vec<(String, Vec<super::event::Event>)>,
+    /// Pre-built timelines from non-queue sources (the backend layer);
+    /// merged with the queue events in [`calc`](Prof::calc).
+    external: Vec<ProfInfo>,
     t_start: Option<u64>,
     t_stop: Option<u64>,
     infos: Vec<ProfInfo>,
@@ -91,6 +94,33 @@ impl Prof {
         self.queues.push((name.into(), queue.events()));
     }
 
+    /// cf4rs extension: harvest a pre-built event timeline that did not
+    /// come from a `ccl` queue — e.g. a [`crate::backend::Backend`]'s
+    /// drained command log. `queue_name` plays the role the queue name
+    /// plays in [`add_queue`](Self::add_queue) (one timeline per
+    /// backend), so one profile can aggregate events across every
+    /// backend a scheduler dispatched to.
+    ///
+    /// Entries are `(event name, (queued, submit, start, end))` in ns on
+    /// the shared profiling clock.
+    pub fn add_timeline(
+        &mut self,
+        queue_name: impl Into<String>,
+        entries: Vec<(String, (u64, u64, u64, u64))>,
+    ) {
+        let queue = queue_name.into();
+        for (name, (t_queued, t_submit, t_start, t_end)) in entries {
+            self.external.push(ProfInfo {
+                name,
+                queue: queue.clone(),
+                t_queued,
+                t_submit,
+                t_start,
+                t_end,
+            });
+        }
+    }
+
     /// `ccl_prof_calc`: run the profiling analysis.
     pub fn calc(&mut self) -> CclResult<()> {
         if self.calculated {
@@ -121,6 +151,10 @@ impl Prof {
                 });
             }
         }
+        // Merge externally-harvested timelines (backend layer), keeping
+        // one globally time-sorted event list.
+        infos.append(&mut self.external);
+        infos.sort_by_key(|i| (i.t_start, i.t_end));
 
         // Aggregates by name.
         let mut agg_map: HashMap<String, (u64, usize)> = HashMap::new();
@@ -254,4 +288,45 @@ fn event_display_name(ev: &super::event::Event) -> String {
     crate::rawcl::event::lookup(ev.handle())
         .map(|o| o.display_name())
         .unwrap_or_else(|| "UNKNOWN".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn external_timelines_aggregate_and_overlap() {
+        let mut prof = Prof::new();
+        prof.start();
+        prof.add_timeline(
+            "backend-a",
+            vec![
+                ("RNG_KERNEL".into(), (0, 0, 10, 110)),
+                ("READ_BUFFER".into(), (0, 0, 120, 220)),
+            ],
+        );
+        prof.add_timeline("backend-b", vec![("RNG_KERNEL".into(), (0, 0, 50, 150))]);
+        prof.stop();
+        prof.calc().unwrap();
+        let aggs = prof.aggs().unwrap();
+        let rng = aggs.iter().find(|a| a.name == "RNG_KERNEL").unwrap();
+        assert_eq!(rng.count, 2, "events from both backends aggregate");
+        assert_eq!(rng.abs_time, 200);
+        // The two RNG kernels overlap for [50, 110).
+        let ov = prof.overlaps().unwrap();
+        assert!(ov.iter().any(|o| o.duration == 60), "overlaps: {ov:?}");
+        let s = prof.summary_default();
+        assert!(s.contains("RNG_KERNEL"));
+    }
+
+    #[test]
+    fn timelines_merge_time_sorted_with_queue_events() {
+        let mut prof = Prof::new();
+        prof.add_timeline("late", vec![("B".into(), (0, 0, 200, 300))]);
+        prof.add_timeline("early", vec![("A".into(), (0, 0, 0, 100))]);
+        prof.calc().unwrap();
+        let infos = prof.infos().unwrap();
+        assert_eq!(infos[0].name, "A");
+        assert_eq!(infos[1].name, "B");
+    }
 }

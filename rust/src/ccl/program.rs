@@ -23,7 +23,7 @@ use std::sync::Mutex;
 use crate::rawcl;
 use crate::rawcl::error::CL_BUILD_PROGRAM_FAILURE;
 use crate::rawcl::types::{KernelH, ProgramH};
-use crate::runtime::{ArtifactKind, Manifest};
+use crate::runtime::{hlogen, ArtifactKind, Manifest};
 
 use super::context::Context;
 use super::errors::{check, CclError, CclResult};
@@ -65,39 +65,68 @@ impl Program {
         Self::new_from_sources(ctx, &sources)
     }
 
-    /// cf4rs extension: create from named artifacts in the manifest
-    /// (the usual path for applications built on the AOT pipeline).
+    /// cf4rs extension: create from named artifacts (the usual path for
+    /// applications built on the AOT pipeline). Names the manifest does
+    /// not cover fall back to the HLO generator when they follow the
+    /// artifact naming convention (`init_n4096`, `rngk16_n65536`, ...).
     pub fn new_from_artifacts(ctx: &Context, names: &[&str]) -> CclResult<Self> {
-        let man = Manifest::discover()
-            .map_err(|e| CclError::artifacts(format!("{e:#}")))?;
-        let mut paths = Vec::with_capacity(names.len());
+        let mut sources = Vec::with_capacity(names.len());
         for n in names {
-            let art = man.get(n).ok_or_else(|| {
-                CclError::artifacts(format!("artifact {n:?} not in manifest"))
+            let text = hlogen::resolve_named_source(n).map_err(|e| {
+                CclError::artifacts(format!("resolving artifact {n:?}: {e}"))
             })?;
-            paths.push(art.path.clone());
+            sources.push(text);
         }
-        Self::new_from_source_files(ctx, &paths)
+        Self::new_from_sources(ctx, &sources)
     }
 
-    /// cf4rs extension: pick artifacts by kind + problem size.
+    /// cf4rs extension: pick device programs by kind + problem size.
+    ///
+    /// Prefers AOT artifacts from the manifest; any (kind, n) the
+    /// manifest does not cover — including the no-manifest case of a
+    /// fresh checkout — is satisfied by the HLO generator
+    /// ([`crate::runtime::hlogen`]), so programs exist for *every*
+    /// problem size. Exception: [`ArtifactKind::RngMulti`] resolves
+    /// only through the manifest here (its step count is baked in at
+    /// lowering time); use [`new_from_artifacts`]
+    /// (Self::new_from_artifacts) with a `rngk<steps>_n<n>` name to
+    /// generate a fused module at a chosen k.
     pub fn new_from_kinds(
         ctx: &Context,
         kinds: &[(ArtifactKind, usize)],
     ) -> CclResult<Self> {
-        let man = Manifest::discover()
-            .map_err(|e| CclError::artifacts(format!("{e:#}")))?;
-        let mut paths = Vec::with_capacity(kinds.len());
+        let mut sources = Vec::with_capacity(kinds.len());
         for (kind, n) in kinds {
-            let art = man.find(*kind, *n).ok_or_else(|| {
-                CclError::artifacts(format!(
-                    "no artifact of kind {kind} with n={n} \
-                     (run `make artifacts` with --sizes {n})"
-                ))
-            })?;
-            paths.push(art.path.clone());
+            let text = if *kind == ArtifactKind::RngMulti {
+                // Fused artifacts bake the step count in, so (kind, n)
+                // alone cannot parameterise a generated module. Keep the
+                // pre-generator behavior (manifest lookup, whatever k it
+                // was lowered with) and point callers at the k-carrying
+                // named form otherwise.
+                let man = Manifest::discover()
+                    .map_err(|e| CclError::artifacts(format!("{e:#}")))?;
+                let art = man.find(*kind, *n).ok_or_else(|| {
+                    CclError::artifacts(format!(
+                        "no fused artifact of kind {kind} with n={n}; use \
+                         new_from_artifacts(&[\"rngk<steps>_n{n}\"]) to pick \
+                         (or generate) a specific step count"
+                    ))
+                })?;
+                std::fs::read_to_string(&art.path).map_err(|e| {
+                    CclError::artifacts(format!(
+                        "reading artifact {}: {e}",
+                        art.path.display()
+                    ))
+                })?
+            } else {
+                let spec = hlogen::GenSpec::new(*kind, *n);
+                hlogen::resolve_source(&spec).map_err(|e| {
+                    CclError::artifacts(format!("resolving {kind} (n={n}) source: {e}"))
+                })?
+            };
+            sources.push(text);
         }
-        Self::new_from_source_files(ctx, &paths)
+        Self::new_from_sources(ctx, &sources)
     }
 
     pub fn handle(&self) -> ProgramH {

@@ -116,9 +116,13 @@ impl FilterChain {
         self.add(Filter::Dependent(Box::new(f)))
     }
 
-    /// Run the chain over all system devices.
-    pub fn select(&self) -> Vec<Device> {
-        let mut devs = Device::all();
+    /// Run the chain over an explicit candidate list.
+    ///
+    /// This is the core of the mechanism; [`select`](Self::select) is
+    /// `apply` over all system devices, and the backend registry
+    /// ([`crate::backend::BackendRegistry::select`]) applies chains to
+    /// the devices its backends execute for.
+    pub fn apply(&self, mut devs: Vec<Device>) -> Vec<Device> {
         for f in &self.filters {
             devs = match f {
                 Filter::Independent(p) => devs.into_iter().filter(|d| p(d)).collect(),
@@ -129,6 +133,11 @@ impl FilterChain {
             }
         }
         devs
+    }
+
+    /// Run the chain over all system devices.
+    pub fn select(&self) -> Vec<Device> {
+        self.apply(Device::all())
     }
 
     /// Like [`select`](Self::select) but requiring ≥1 result.
@@ -199,6 +208,20 @@ mod tests {
     #[test]
     fn empty_chain_returns_all() {
         assert_eq!(FilterChain::new().select().len(), 3);
+    }
+
+    #[test]
+    fn apply_runs_over_an_explicit_candidate_list() {
+        use crate::rawcl::types::DeviceId;
+        let subset = vec![Device::from_id(DeviceId(2)).unwrap()];
+        let kept = FilterChain::new().add(Filter::type_gpu()).apply(subset);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].name().unwrap(), "SimCL HD 7970");
+        // A chain can only narrow the candidates it is given.
+        let none = FilterChain::new()
+            .add(Filter::type_cpu())
+            .apply(vec![Device::from_id(DeviceId(1)).unwrap()]);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -7,14 +7,19 @@
 //! * [`rng_service`] — the massive-PRNG service (Fig. 2's two-thread,
 //!   two-queue, double-buffered pipeline) in both realisations: on the
 //!   `ccl` framework and on the raw substrate.
+//! * [`scheduler`] — the multi-device realisation: the same service
+//!   sharded across every backend in the [`crate::backend`] registry
+//!   with work stealing, merged output and cross-backend profiling.
 //! * [`stats`] — statistical screening of the output stream (the
 //!   Dieharder substitution, see DESIGN.md).
 
 pub mod pipeline;
 pub mod rng_service;
+pub mod scheduler;
 pub mod sem;
 pub mod stats;
 
 pub use pipeline::{run_double_buffered, PipelineError};
 pub use rng_service::{run_ccl, run_raw, RngConfig, RunOutcome, Sink};
+pub use scheduler::{run_sharded, run_sharded_on, ShardedOutcome, ShardedRngConfig};
 pub use sem::Semaphore;

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use crate::ccl::{self, Arg};
 use crate::rawcl;
 use crate::rawcl::types::{DeviceId, MemFlags, QueueProps};
-use crate::runtime::{ArtifactKind, Manifest};
+use crate::runtime::{hlogen, ArtifactKind};
 
 use super::sem::Semaphore;
 
@@ -75,7 +75,7 @@ pub struct RunOutcome {
     pub sample: Vec<u64>,
 }
 
-fn sink_consume(sink: &Sink, sample_out: &mut Vec<u64>, bytes: &[u8]) {
+pub(crate) fn sink_consume(sink: &Sink, sample_out: &mut Vec<u64>, bytes: &[u8]) {
     match sink {
         Sink::Discard => {}
         Sink::Sample(n) => {
@@ -256,15 +256,14 @@ pub fn run_raw(cfg: &RngConfig) -> Result<RunOutcome, String> {
     let cq_comms = create_command_queue(ctx, dev, props, &mut st);
     chk!(st, "create comms queue");
 
-    // kernel sources from the manifest (the listing reads .cl files)
-    let man = Manifest::discover().map_err(|e| format!("{e:#}"))?;
+    // kernel sources: manifest artifacts when present, generated HLO
+    // otherwise (the listing reads .cl files)
     let mut sources = Vec::new();
     for kind in [ArtifactKind::Init, ArtifactKind::Rng] {
-        let art = man
-            .find(kind, n)
-            .ok_or_else(|| format!("no {kind} artifact for n={n}"))?;
-        sources
-            .push(std::fs::read_to_string(&art.path).map_err(|e| e.to_string())?);
+        sources.push(
+            hlogen::resolve_source(&hlogen::GenSpec::new(kind, n))
+                .map_err(|e| format!("resolving {kind} (n={n}) source: {e}"))?,
+        );
     }
     let prg = create_program_with_source(ctx, &sources, &mut st);
     chk!(st, "create program");

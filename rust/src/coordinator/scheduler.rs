@@ -1,0 +1,438 @@
+//! Multi-device work-stealing scheduler over the unified backend layer.
+//!
+//! The §5 PRNG service drives *one* device; this module drives **all
+//! registered backends at once** (EngineCL-style): each request is split
+//! into contiguous stream chunks, every iteration dispatches one task
+//! per chunk across the backends' queues, idle backends steal queued
+//! tasks from loaded ones, and the per-chunk batches merge — in stream
+//! order — into one output that is **bit-identical** to a single-device
+//! run:
+//!
+//! * chunk `c = [lo, lo+n)` is seeded by `prng_init` with
+//!   `gid_offset = lo`, so the concatenation of chunk seeds equals the
+//!   whole-stream seed batch;
+//! * the xorshift step is elementwise, so stepping chunks independently
+//!   equals stepping the whole stream.
+//!
+//! Chunk state round-trips through the host every iteration (the
+//! service streams every batch out anyway), which is what makes
+//! stealing cheap: a stolen task just writes its state to the thief's
+//! buffers. Sticky home assignment keeps chunks on one backend when
+//! nobody is starved.
+//!
+//! Profiling: each backend's drained command timeline feeds
+//! [`Prof::add_timeline`], so one profile aggregates kernels and
+//! transfers across every backend (names match the single-device
+//! service: `INIT_KERNEL`, `RNG_KERNEL`, `READ_BUFFER`, ...).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::{
+    Backend, BackendRegistry, BufId, CompileSpec, KernelId, LaunchArg,
+};
+use crate::ccl::errors::{CclError, CclResult};
+use crate::ccl::selector::FilterChain;
+use crate::ccl::Prof;
+
+use super::rng_service::{sink_consume, Sink};
+
+/// Configuration of one sharded PRNG request.
+pub struct ShardedRngConfig {
+    /// Random numbers per iteration (the whole-stream `n`).
+    pub numrn: usize,
+    /// Iterations producing random numbers.
+    pub iters: usize,
+    /// Target chunks per backend (>1 keeps the stealing deques busy).
+    pub chunks_per_backend: usize,
+    /// Minimum chunk size in 64-bit words (small requests shard less).
+    pub min_chunk: usize,
+    /// Aggregate per-backend event timelines into one profile.
+    pub profile: bool,
+    pub sink: Sink,
+    /// Device filter selecting the backends to dispatch to
+    /// (`None` = every registered backend).
+    pub selector: Option<FilterChain>,
+}
+
+impl ShardedRngConfig {
+    pub fn new(numrn: usize, iters: usize) -> Self {
+        Self {
+            numrn,
+            iters,
+            chunks_per_backend: 2,
+            min_chunk: 1024,
+            profile: true,
+            sink: Sink::Discard,
+            selector: None,
+        }
+    }
+}
+
+/// Per-backend dispatch statistics.
+#[derive(Debug, Clone)]
+pub struct BackendLoad {
+    pub name: String,
+    /// Tasks executed (including stolen ones).
+    pub tasks: usize,
+    /// Tasks this backend stole from another backend's queue.
+    pub stolen: usize,
+    /// Total busy time from the backend's event timeline, ns (modeled
+    /// for simulated backends, measured for native ones).
+    pub busy_ns: u64,
+}
+
+/// What a sharded run produced.
+#[derive(Debug)]
+pub struct ShardedOutcome {
+    pub wall: Duration,
+    pub total_bytes: u64,
+    /// First-batch sample (when `Sink::Sample`).
+    pub sample: Vec<u64>,
+    pub num_chunks: usize,
+    pub per_backend: Vec<BackendLoad>,
+    /// Fig. 3-style aggregate summary across all backends.
+    pub prof_summary: Option<String>,
+    /// Fig. 5-style event table across all backends.
+    pub prof_export: Option<String>,
+}
+
+/// One stream shard and its current state vector.
+struct Chunk {
+    lo: usize,
+    n: usize,
+    state: Mutex<Vec<u8>>,
+}
+
+/// Per-backend scratch owned by the scheduler (kernel + buffer caches).
+struct BackendScratch {
+    kernels: Mutex<HashMap<CompileSpec, KernelId>>,
+    /// Free buffers by size (chunks are near-uniform, so this stays tiny).
+    free_bufs: Mutex<Vec<(usize, BufId)>>,
+}
+
+impl BackendScratch {
+    fn new() -> Self {
+        Self {
+            kernels: Mutex::new(HashMap::new()),
+            free_bufs: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn kernel(&self, b: &dyn Backend, spec: CompileSpec) -> Result<KernelId, String> {
+        if let Some(&k) = self.kernels.lock().unwrap().get(&spec) {
+            return Ok(k);
+        }
+        let k = b.compile(&spec).map_err(|e| e.to_string())?;
+        self.kernels.lock().unwrap().insert(spec, k);
+        Ok(k)
+    }
+
+    fn acquire(&self, b: &dyn Backend, bytes: usize) -> Result<BufId, String> {
+        let mut free = self.free_bufs.lock().unwrap();
+        if let Some(i) = free.iter().position(|(sz, _)| *sz == bytes) {
+            return Ok(free.swap_remove(i).1);
+        }
+        drop(free);
+        b.alloc(bytes).map_err(|e| e.to_string())
+    }
+
+    fn release(&self, bytes: usize, buf: BufId) {
+        self.free_bufs.lock().unwrap().push((bytes, buf));
+    }
+}
+
+/// Split `words` into ~`target` contiguous chunks of ≥ `min_chunk` words.
+fn plan_chunks(words: usize, target: usize, min_chunk: usize) -> Vec<(usize, usize)> {
+    let max_chunks = words.div_ceil(min_chunk.max(1)).max(1);
+    let count = target.clamp(1, max_chunks);
+    let base = words / count;
+    let rem = words % count;
+    let mut out = Vec::with_capacity(count);
+    let mut lo = 0usize;
+    for i in 0..count {
+        let n = base + usize::from(i < rem);
+        out.push((lo, n));
+        lo += n;
+    }
+    debug_assert_eq!(lo, words);
+    out
+}
+
+/// Run one task: advance `chunk` by one stage on backend `b`.
+fn run_task(
+    b: &dyn Backend,
+    scratch: &BackendScratch,
+    chunk: &Chunk,
+    is_init: bool,
+) -> Result<(), String> {
+    let bytes = chunk.n * 8;
+    if is_init {
+        let kernel = scratch.kernel(b, CompileSpec::init_at(chunk.n, chunk.lo as u64))?;
+        let out = scratch.acquire(b, bytes)?;
+        let result: Result<(), String> = (|| {
+            let ev = b.enqueue(kernel, &[LaunchArg::Buf(out)]).map_err(|e| e.to_string())?;
+            b.wait(ev).map_err(|e| e.to_string())?;
+            let mut state = chunk.state.lock().unwrap();
+            state.resize(bytes, 0);
+            b.read(out, 0, &mut state).map_err(|e| e.to_string())?;
+            Ok(())
+        })();
+        scratch.release(bytes, out);
+        result
+    } else {
+        let kernel = scratch.kernel(b, CompileSpec::step(chunk.n))?;
+        let inb = scratch.acquire(b, bytes)?;
+        let outb = scratch.acquire(b, bytes)?;
+        let result: Result<(), String> = (|| {
+            {
+                let state = chunk.state.lock().unwrap();
+                b.write(inb, 0, &state).map_err(|e| e.to_string())?;
+            }
+            let ev = b
+                .enqueue(kernel, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)])
+                .map_err(|e| e.to_string())?;
+            b.wait(ev).map_err(|e| e.to_string())?;
+            let mut state = chunk.state.lock().unwrap();
+            b.read(outb, 0, &mut state).map_err(|e| e.to_string())?;
+            Ok(())
+        })();
+        scratch.release(bytes, inb);
+        scratch.release(bytes, outb);
+        result
+    }
+}
+
+/// Run a sharded request over the global backend registry.
+pub fn run_sharded(cfg: &ShardedRngConfig) -> CclResult<ShardedOutcome> {
+    run_sharded_on(BackendRegistry::global(), cfg)
+}
+
+/// Run a sharded request over an explicit registry.
+pub fn run_sharded_on(
+    registry: &BackendRegistry,
+    cfg: &ShardedRngConfig,
+) -> CclResult<ShardedOutcome> {
+    let backends: Vec<Arc<dyn Backend>> = match &cfg.selector {
+        Some(chain) => registry.select(chain),
+        None => registry.backends(),
+    };
+    if backends.is_empty() {
+        return Err(CclError::framework("no backend matched the scheduler selector"));
+    }
+    if cfg.numrn == 0 || cfg.iters == 0 {
+        return Err(CclError::framework("sharded run needs numrn > 0 and iters > 0"));
+    }
+
+    let nb = backends.len();
+    let plan = plan_chunks(
+        cfg.numrn,
+        nb * cfg.chunks_per_backend.max(1),
+        cfg.min_chunk,
+    );
+    let chunks: Vec<Chunk> = plan
+        .iter()
+        .map(|&(lo, n)| Chunk { lo, n, state: Mutex::new(Vec::new()) })
+        .collect();
+
+    let scratch: Vec<BackendScratch> =
+        (0..nb).map(|_| BackendScratch::new()).collect();
+    let deques: Vec<Mutex<VecDeque<usize>>> =
+        (0..nb).map(|_| Mutex::new(VecDeque::new())).collect();
+    let tasks_run: Vec<AtomicUsize> = (0..nb).map(|_| AtomicUsize::new(0)).collect();
+    let stolen: Vec<AtomicUsize> = (0..nb).map(|_| AtomicUsize::new(0)).collect();
+    let failure: Mutex<Option<String>> = Mutex::new(None);
+
+    // Discard any leftover timeline from earlier uses of these backends
+    // so the profile covers exactly this run.
+    for b in &backends {
+        let _ = b.drain_timeline();
+    }
+
+    let mut prof = Prof::new();
+    prof.start();
+    let t0 = Instant::now();
+    let mut sample = Vec::new();
+    let mut busy_acc = vec![0u64; nb];
+    let mut run_err: Option<CclError> = None;
+
+    for iter in 0..cfg.iters {
+        // Seed the deques: sticky home assignment, round-robin.
+        for ci in 0..chunks.len() {
+            deques[ci % nb].lock().unwrap().push_back(ci);
+        }
+
+        std::thread::scope(|scope| {
+            for (bi, backend) in backends.iter().enumerate() {
+                let deques = &deques;
+                let chunks = &chunks;
+                let scratch = &scratch[bi];
+                let tasks_run = &tasks_run[bi];
+                let stolen_ctr = &stolen[bi];
+                let failure = &failure;
+                let backend = backend.clone();
+                scope.spawn(move || {
+                    loop {
+                        if failure.lock().unwrap().is_some() {
+                            return;
+                        }
+                        // Own queue first; then steal from the most
+                        // loaded peer's tail.
+                        let mut task = deques[bi].lock().unwrap().pop_front();
+                        let mut was_steal = false;
+                        if task.is_none() {
+                            let victim = (0..deques.len())
+                                .filter(|&j| j != bi)
+                                .max_by_key(|&j| deques[j].lock().unwrap().len());
+                            if let Some(j) = victim {
+                                task = deques[j].lock().unwrap().pop_back();
+                                was_steal = task.is_some();
+                            }
+                        }
+                        let Some(ci) = task else { return };
+                        let r = run_task(backend.as_ref(), scratch, &chunks[ci], iter == 0);
+                        match r {
+                            Ok(()) => {
+                                tasks_run.fetch_add(1, Ordering::Relaxed);
+                                if was_steal {
+                                    stolen_ctr.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(e) => {
+                                failure.lock().unwrap().get_or_insert(e);
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = failure.lock().unwrap().take() {
+            run_err = Some(CclError::framework(format!("sharded iteration {iter}: {e}")));
+            break;
+        }
+
+        // Without profiling, drain (and discard) timelines every
+        // iteration so a long streaming run stays memory-bounded; the
+        // busy totals still accumulate.
+        if !cfg.profile {
+            for (bi, b) in backends.iter().enumerate() {
+                busy_acc[bi] +=
+                    b.drain_timeline().iter().map(|(_, t)| t.duration()).sum::<u64>();
+            }
+        }
+
+        // Barrier reached: merge this iteration's batches in stream
+        // order — but only when the sink will actually look at them
+        // (Discard never does; Sample only until the sample is taken).
+        let need_batch = match &cfg.sink {
+            Sink::Discard => false,
+            Sink::Sample(_) => sample.is_empty(),
+            Sink::Writer(_) => true,
+        };
+        if need_batch {
+            let mut batch = Vec::with_capacity(cfg.numrn * 8);
+            for c in &chunks {
+                batch.extend_from_slice(&c.state.lock().unwrap());
+            }
+            sink_consume(&cfg.sink, &mut sample, &batch);
+        }
+    }
+
+    let wall = t0.elapsed();
+    prof.stop();
+
+    let mut per_backend = Vec::with_capacity(nb);
+    for (bi, b) in backends.iter().enumerate() {
+        let timeline = b.drain_timeline();
+        let busy_ns =
+            busy_acc[bi] + timeline.iter().map(|(_, t)| t.duration()).sum::<u64>();
+        per_backend.push(BackendLoad {
+            name: b.name(),
+            tasks: tasks_run[bi].load(Ordering::Relaxed),
+            stolen: stolen[bi].load(Ordering::Relaxed),
+            busy_ns,
+        });
+        if cfg.profile {
+            prof.add_timeline(
+                b.name(),
+                timeline
+                    .into_iter()
+                    .map(|(name, t)| (name, (t.queued, t.submit, t.start, t.end)))
+                    .collect(),
+            );
+        }
+    }
+
+    // Release the pooled device buffers — the registry backends are
+    // process-lifetime objects, so anything left allocated here leaks.
+    for (s, b) in scratch.iter().zip(&backends) {
+        for (_, buf) in s.free_bufs.lock().unwrap().drain(..) {
+            b.free(buf);
+        }
+    }
+    if let Some(e) = run_err {
+        return Err(e);
+    }
+
+    let (prof_summary, prof_export) = if cfg.profile {
+        prof.calc()?;
+        (Some(prof.summary_default()), Some(prof.export_string()?))
+    } else {
+        (None, None)
+    };
+
+    Ok(ShardedOutcome {
+        wall,
+        total_bytes: (8 * cfg.numrn * cfg.iters) as u64,
+        sample,
+        num_chunks: chunks.len(),
+        per_backend,
+        prof_summary,
+        prof_export,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::rng_service::expected_first_batch;
+
+    fn cfg(n: usize, iters: usize) -> ShardedRngConfig {
+        let mut c = ShardedRngConfig::new(n, iters);
+        c.sink = Sink::Sample(64);
+        c.min_chunk = 256;
+        c
+    }
+
+    #[test]
+    fn chunk_plan_covers_the_stream() {
+        assert_eq!(plan_chunks(10, 3, 1), vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(plan_chunks(8, 16, 4), vec![(0, 4), (4, 4)]);
+        assert_eq!(plan_chunks(5, 1, 1024), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn sharded_first_batch_is_the_seed_batch() {
+        // Fresh registry: the global one is shared process-wide and
+        // other tests' timelines would cross-pollute drains.
+        let reg = BackendRegistry::with_default_backends();
+        let out = run_sharded_on(&reg, &cfg(4096, 2)).unwrap();
+        assert!(out.num_chunks >= 2, "should shard across backends");
+        assert_eq!(out.sample.len(), 64);
+        for (i, &w) in out.sample.iter().enumerate() {
+            assert_eq!(w, expected_first_batch(i), "sample word {i}");
+        }
+        let total: usize = out.per_backend.iter().map(|l| l.tasks).sum();
+        assert_eq!(total, out.num_chunks * 2, "every task accounted for");
+    }
+
+    #[test]
+    fn zero_work_is_rejected() {
+        assert!(run_sharded(&cfg(0, 2)).is_err());
+        assert!(run_sharded(&cfg(1024, 0)).is_err());
+    }
+}

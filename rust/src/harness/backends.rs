@@ -1,0 +1,230 @@
+//! Backend-comparison table (cf. Raven's backend-comparison harness):
+//! run the same PRNG workload on **every registered backend** through
+//! the uniform [`Backend`](crate::backend::Backend) trait, plus once
+//! through the multi-device scheduler, and cross-validate every output
+//! stream against the host reference — all rows must be bit-identical.
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::backend::{Backend, BackendRegistry, CompileSpec, LaunchArg};
+use crate::coordinator::scheduler::{run_sharded_on, ShardedRngConfig};
+use crate::coordinator::Sink;
+use crate::rawcl::simexec;
+use crate::runtime::executable;
+
+/// FNV-1a 64 over a byte stream — the row fingerprint (same core as the
+/// runtime's text-cache key, [`executable::fnv1a_update`]).
+#[derive(Clone)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self(executable::FNV1A_OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        executable::fnv1a_update(&mut self.0, bytes);
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `Sink::Writer` adapter hashing everything written through it.
+struct FnvWriter(Arc<Mutex<Fnv>>);
+
+impl Write for FnvWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().update(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One table row.
+struct Row {
+    name: String,
+    kind: String,
+    wall_ms: f64,
+    busy_ms: f64,
+    mib_s: f64,
+    checksum: u64,
+    ok: bool,
+}
+
+/// Host-side reference stream fingerprint (init batch + stepped batches).
+fn reference_checksum(n: usize, iters: usize) -> u64 {
+    let mut state = vec![0u8; n * 8];
+    simexec::run_init(&mut state);
+    let mut h = Fnv::new();
+    h.update(&state);
+    let mut next = vec![0u8; n * 8];
+    for _ in 1..iters {
+        simexec::run_rng(&state, &mut next, 1);
+        std::mem::swap(&mut state, &mut next);
+        h.update(&state);
+    }
+    h.digest()
+}
+
+/// Drive `iters` batches of `n` words on one backend via the trait.
+fn run_single(b: &dyn Backend, n: usize, iters: usize) -> Result<Row, String> {
+    let _ = b.drain_timeline(); // profile exactly this run
+    let bytes = n * 8;
+    let err = |e: crate::backend::BackendError| e.to_string();
+    let t0 = Instant::now();
+    let k_init = b.compile(&CompileSpec::init(n)).map_err(err)?;
+    let k_step = b.compile(&CompileSpec::step(n)).map_err(err)?;
+    let front = b.alloc(bytes).map_err(err)?;
+    let back = b.alloc(bytes).map_err(err)?;
+    let mut host = vec![0u8; bytes];
+    let mut h = Fnv::new();
+
+    let ev = b.enqueue(k_init, &[LaunchArg::Buf(front)]).map_err(err)?;
+    b.wait(ev).map_err(err)?;
+    b.read(front, 0, &mut host).map_err(err)?;
+    h.update(&host);
+    let (mut front, mut back) = (front, back);
+    for _ in 1..iters {
+        let ev = b
+            .enqueue(k_step, &[LaunchArg::Buf(front), LaunchArg::Buf(back)])
+            .map_err(err)?;
+        b.wait(ev).map_err(err)?;
+        b.read(back, 0, &mut host).map_err(err)?;
+        h.update(&host);
+        std::mem::swap(&mut front, &mut back);
+    }
+    let wall = t0.elapsed();
+    let busy_ns: u64 = b.drain_timeline().iter().map(|(_, t)| t.duration()).sum();
+    b.free(front);
+    b.free(back);
+
+    let total = (bytes * iters) as f64;
+    Ok(Row {
+        name: b.name(),
+        kind: format!("{:?}", b.kind()),
+        wall_ms: wall.as_secs_f64() * 1e3,
+        busy_ms: busy_ns as f64 * 1e-6,
+        mib_s: total / wall.as_secs_f64() / (1024.0 * 1024.0),
+        checksum: h.digest(),
+        ok: false, // filled by the caller against the reference
+    })
+}
+
+/// Run the scheduler over all backends and fingerprint the merged stream.
+fn run_sharded_row(
+    registry: &BackendRegistry,
+    n: usize,
+    iters: usize,
+) -> Result<Row, String> {
+    let hash = Arc::new(Mutex::new(Fnv::new()));
+    let mut cfg = ShardedRngConfig::new(n, iters);
+    cfg.sink = Sink::Writer(Mutex::new(Box::new(FnvWriter(hash.clone()))));
+    cfg.min_chunk = 1024;
+    let out = run_sharded_on(registry, &cfg).map_err(|e| e.to_string())?;
+    let busy_ns: u64 = out.per_backend.iter().map(|l| l.busy_ns).sum();
+    let loads: Vec<String> = out
+        .per_backend
+        .iter()
+        .map(|l| format!("{}×{}", l.tasks, l.name))
+        .collect();
+    let total = (n * 8 * iters) as f64;
+    Ok(Row {
+        name: format!(
+            "sharded: {} chunks over {}",
+            out.num_chunks,
+            loads.join(" + ")
+        ),
+        kind: "Scheduler".to_string(),
+        wall_ms: out.wall.as_secs_f64() * 1e3,
+        busy_ms: busy_ns as f64 * 1e-6,
+        mib_s: total / out.wall.as_secs_f64() / (1024.0 * 1024.0),
+        checksum: hash.lock().unwrap().digest(),
+        ok: false,
+    })
+}
+
+/// Build the backend-comparison report. `Err` when any backend's stream
+/// diverges from the host reference (CI fails on it).
+pub fn report(quick: bool) -> Result<String, String> {
+    let (n, iters) = if quick { (16384, 4) } else { (65536, 8) };
+    let registry = BackendRegistry::global();
+    let reference = reference_checksum(n, iters);
+
+    let mut rows = Vec::new();
+    for b in registry.backends() {
+        rows.push(run_single(b.as_ref(), n, iters)?);
+    }
+    rows.push(run_sharded_row(registry, n, iters)?);
+    for r in &mut rows {
+        r.ok = r.checksum == reference;
+    }
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# Backend comparison — n={n}, iters={iters}, reference fnv1a={reference:016x}\n\n"
+    ));
+    s.push_str(
+        "| backend | kind | wall (ms) | busy (ms) | MiB/s | fnv1a | bit-identical |\n\
+         |---|---|---:|---:|---:|---|---|\n",
+    );
+    for r in &rows {
+        s.push_str(&format!(
+            "| {} | {} | {:.2} | {:.2} | {:.1} | {:016x} | {} |\n",
+            r.name,
+            r.kind,
+            r.wall_ms,
+            r.busy_ms,
+            r.mib_s,
+            r.checksum,
+            if r.ok { "yes" } else { "**NO**" },
+        ));
+    }
+    s.push_str(
+        "\nAll rows must be bit-identical: every backend executes the same \
+         logical kernels (PJRT artifacts vs scalar reference vs sharded \
+         merge), so any divergence is a correctness bug, not noise.\n",
+    );
+
+    if rows.iter().all(|r| r.ok) {
+        Ok(s)
+    } else {
+        Err(format!("backend divergence detected:\n{s}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_incremental() {
+        let mut a = Fnv::new();
+        a.update(b"hello ");
+        a.update(b"world");
+        let mut b = Fnv::new();
+        b.update(b"hello world");
+        assert_eq!(a.digest(), b.digest());
+        assert_ne!(a.digest(), Fnv::new().digest());
+    }
+
+    #[test]
+    fn comparison_table_is_clean() {
+        let report = report(true).expect("backends must agree bit-for-bit");
+        assert!(report.contains("| sim:SimCL GTX 1080 |"));
+        assert!(report.contains("sharded:"));
+        assert!(!report.contains("**NO**"));
+    }
+}

@@ -5,8 +5,13 @@
 //! * `bench overhead` — E3+E5, the Fig. 4 overhead sweep + trend checks;
 //! * `bench figure3`  — E2, the Fig. 3 profiling summary;
 //! * `bench figure5`  — E4, the Fig. 5 queue utilization chart;
+//! * `bench backends` — the backend cross-validation/comparison table;
 //! * `bench all`      — everything, written to `results/`.
+//!
+//! Every failed regeneration — including a failed `results/` write —
+//! makes the process exit non-zero, so CI catches harness regressions.
 
+pub mod backends;
 pub mod figures;
 pub mod loc;
 pub mod microbench;
@@ -14,27 +19,42 @@ pub mod overhead;
 
 use std::path::Path;
 
-fn write_result(name: &str, content: &str) {
+/// Write one result file; `false` (a harness failure) when the write
+/// fails — silently missing result files must fail CI.
+#[must_use]
+fn write_result(name: &str, content: &str) -> bool {
     let dir = Path::new("results");
-    std::fs::create_dir_all(dir).ok();
+    if let Err(e) = std::fs::create_dir_all(dir) {
+        eprintln!("  cannot create {}: {e}", dir.display());
+        return false;
+    }
     let path = dir.join(name);
-    if std::fs::write(&path, content).is_ok() {
-        eprintln!("  wrote {}", path.display());
+    match std::fs::write(&path, content) {
+        Ok(()) => {
+            eprintln!("  wrote {}", path.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("  cannot write {}: {e}", path.display());
+            false
+        }
     }
 }
 
 /// `cf4rs bench` entrypoint.
 pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
-        eprintln!("usage: cf4rs bench loc|overhead|figure3|figure5|ablation|all [--quick]");
+        eprintln!(
+            "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|all [--quick]"
+        );
         return 2;
     };
     let quick = args.iter().any(|a| a == "--quick");
 
-    fn run_loc() {
+    fn run_loc() -> bool {
         let r = loc::report();
         print!("{r}");
-        write_result("loc.md", &r);
+        write_result("loc.md", &r)
     }
     fn run_overhead(quick: bool) -> bool {
         let opts = if quick {
@@ -46,7 +66,7 @@ pub fn main(args: &[String]) -> i32 {
             Ok(cells) => {
                 let r = overhead::render(&cells);
                 print!("{r}");
-                write_result("overhead.md", &r);
+                let mut ok = write_result("overhead.md", &r);
                 // machine-readable series for replotting
                 let mut csv = String::from("device,n,iters,t_raw,t_ccl,ratio,min,max\n");
                 for c in &cells {
@@ -56,8 +76,8 @@ pub fn main(args: &[String]) -> i32 {
                         c.ratio_min, c.ratio_max
                     ));
                 }
-                write_result("overhead.csv", &csv);
-                true
+                ok &= write_result("overhead.csv", &csv);
+                ok
             }
             Err(e) => {
                 eprintln!("overhead: {e}");
@@ -70,8 +90,7 @@ pub fn main(args: &[String]) -> i32 {
         match figures::figure3(n, i) {
             Ok(s) => {
                 print!("{s}");
-                write_result("figure3.txt", &s);
-                true
+                write_result("figure3.txt", &s)
             }
             Err(e) => {
                 eprintln!("figure3: {e}");
@@ -84,10 +103,11 @@ pub fn main(args: &[String]) -> i32 {
         match figures::figure5(n, i) {
             Ok((report, tsv, svg)) => {
                 print!("{report}");
-                write_result("figure5.txt", &report);
-                write_result("figure5.tsv", &tsv);
-                write_result("figure5.svg", &svg);
-                true
+                // Attempt every write even if one fails (& not &&).
+                let mut ok = write_result("figure5.txt", &report);
+                ok &= write_result("figure5.tsv", &tsv);
+                ok &= write_result("figure5.svg", &svg);
+                ok
             }
             Err(e) => {
                 eprintln!("figure5: {e}");
@@ -100,8 +120,7 @@ pub fn main(args: &[String]) -> i32 {
         match overhead::profiling_ablation(quick) {
             Ok(s) => {
                 print!("{s}");
-                write_result("ablation_profiling.md", &s);
-                true
+                write_result("ablation_profiling.md", &s)
             }
             Err(e) => {
                 eprintln!("ablation: {e}");
@@ -110,22 +129,34 @@ pub fn main(args: &[String]) -> i32 {
         }
     }
 
-    let ok = match which.as_str() {
-        "loc" => {
-            run_loc();
-            true
+    fn run_backends(quick: bool) -> bool {
+        match backends::report(quick) {
+            Ok(s) => {
+                print!("{s}");
+                write_result("backends.md", &s)
+            }
+            Err(e) => {
+                eprintln!("backends: {e}");
+                false
+            }
         }
+    }
+
+    let ok = match which.as_str() {
+        "loc" => run_loc(),
         "ablation" => run_ablation(quick),
         "overhead" => run_overhead(quick),
         "figure3" => run_fig3(quick),
         "figure5" => run_fig5(quick),
+        "backends" => run_backends(quick),
         "all" => {
-            run_loc();
+            let l = run_loc();
             let a = run_fig3(quick);
             let b = run_fig5(quick);
             let c = run_overhead(quick);
             let d = run_ablation(quick);
-            a && b && c && d
+            let e = run_backends(quick);
+            l && a && b && c && d && e
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -16,13 +16,23 @@
 //! * [`ccl`] — the framework itself (the paper's contribution): wrapper
 //!   classes, device selection, error management and integrated
 //!   multi-queue profiling.
-//! * [`coordinator`] — the double-buffered streaming pipeline of §5 and
-//!   the PRNG service built on it.
+//! * [`backend`] — the unified execution layer: one `Backend` trait
+//!   (compile, alloc, enqueue, wait, timestamps) over both substrates
+//!   (`SimBackend` on the simulated devices, `PjrtBackend` on the PJRT
+//!   runtime), discovered through a `BackendRegistry` that the `ccl`
+//!   device-selection filters select over. New substrates (GPU PJRT
+//!   plugins, remote workers) plug in by implementing the trait and
+//!   registering — no caller changes.
+//! * [`coordinator`] — the double-buffered streaming pipeline of §5, the
+//!   PRNG service built on it, and the multi-device work-stealing
+//!   scheduler that shards one request across every registered backend.
 //! * [`harness`] — benchmark drivers that regenerate every table and
-//!   figure of the paper's evaluation (§6).
+//!   figure of the paper's evaluation (§6), plus the backend-comparison
+//!   table.
 //! * [`utils`] — the three command-line utilities (`devinfo`, `cclc`,
 //!   `plot_events`).
 
+pub mod backend;
 pub mod ccl;
 pub mod coordinator;
 pub mod harness;

@@ -8,7 +8,7 @@
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5`.
 
-use cf4rs::coordinator::{run_ccl, run_raw, RngConfig, Sink};
+use cf4rs::coordinator::{run_ccl, run_raw, run_sharded, RngConfig, ShardedRngConfig, Sink};
 use cf4rs::harness;
 use cf4rs::utils::{cclc, devinfo, plot_events};
 
@@ -19,9 +19,11 @@ fn usage() -> i32 {
          \x20 devinfo [-a] [-d N] [-c p1,p2] [--list]   query devices\n\
          \x20 cclc build|analyze|link [opts] FILE...    offline kernel tool\n\
          \x20 plot-events FILE.tsv [--svg OUT]          queue utilization chart\n\
-         \x20 rng [--raw] [--numrn N] [--iters I] [--device D]\n\
+         \x20 rng [--raw|--sharded] [--numrn N] [--iters I] [--device D]\n\
          \x20     [--no-profile] [--summary] [--export FILE] [--stdout]\n\
-         \x20 bench loc|overhead|figure3|figure5 [args] regenerate paper results"
+         \x20     (--sharded dispatches across ALL backends, work-stealing)\n\
+         \x20 bench loc|overhead|figure3|figure5|backends [args]\n\
+         \x20     regenerate paper results + backend comparison"
     );
     2
 }
@@ -53,6 +55,7 @@ fn rng_main(args: &[String]) -> i32 {
     let mut iters = 16usize;
     let mut device = 1u32;
     let mut raw = false;
+    let mut sharded = false;
     let mut profile = true;
     let mut want_summary = false;
     let mut export: Option<String> = None;
@@ -66,6 +69,7 @@ fn rng_main(args: &[String]) -> i32 {
         let r: Result<(), String> = (|| {
             match a.as_str() {
                 "--raw" => raw = true,
+                "--sharded" => sharded = true,
                 "--numrn" | "-n" => numrn = next("--numrn")?.parse().map_err(|e| format!("{e}"))?,
                 "--iters" | "-i" => iters = next("--iters")?.parse().map_err(|e| format!("{e}"))?,
                 "--device" | "-d" => device = next("--device")?.parse().map_err(|e| format!("{e}"))?,
@@ -92,10 +96,63 @@ fn rng_main(args: &[String]) -> i32 {
         Sink::Discard
     };
 
-    eprintln!(" * Implementation            : {}", if raw { "raw" } else { "cf4rs" });
+    let implementation = if sharded {
+        "sharded (all backends)"
+    } else if raw {
+        "raw"
+    } else {
+        "cf4rs"
+    };
+    eprintln!(" * Implementation            : {implementation}");
     eprintln!(" * Random numbers / iteration: {numrn}");
     eprintln!(" * Iterations                : {iters}");
-    eprintln!(" * Device index              : {device}");
+    if !sharded {
+        eprintln!(" * Device index              : {device}");
+    }
+
+    if sharded {
+        let mut scfg = ShardedRngConfig::new(numrn, iters);
+        scfg.profile = profile;
+        scfg.sink = if to_stdout {
+            Sink::Writer(std::sync::Mutex::new(Box::new(std::io::stdout())))
+        } else {
+            Sink::Discard
+        };
+        match run_sharded(&scfg) {
+            Ok(out) => {
+                eprintln!(" * Total elapsed time        : {:e}s", out.wall.as_secs_f64());
+                eprintln!(" * Stream chunks             : {}", out.num_chunks);
+                for l in &out.per_backend {
+                    eprintln!(
+                        " * {:<28}: {} tasks ({} stolen), busy {:e}s",
+                        l.name,
+                        l.tasks,
+                        l.stolen,
+                        l.busy_ns as f64 * 1e-9
+                    );
+                }
+                if want_summary {
+                    if let Some(s) = &out.prof_summary {
+                        eprintln!("{s}");
+                    }
+                }
+                if let Some(path) = export {
+                    if let Some(tsv) = &out.prof_export {
+                        if let Err(e) = std::fs::write(&path, tsv) {
+                            eprintln!("rng: writing {path}: {e}");
+                            return 1;
+                        }
+                        eprintln!(" * Profile exported to {path}");
+                    }
+                }
+                return 0;
+            }
+            Err(e) => {
+                eprintln!("rng(sharded): {e}");
+                return 1;
+            }
+        }
+    }
 
     if raw {
         match run_raw(&cfg) {

@@ -43,7 +43,7 @@ pub struct KernelSpec {
 }
 
 /// Recognised kernel families.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
     PrngInit,
     PrngStep,
@@ -53,6 +53,19 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
+    /// Per-element roofline costs `(simple ops, device-memory bytes)` of
+    /// this family at fused step count `k` — the single source for every
+    /// sim timing model (the `rawcl` queue workers via [`spec_for`] and
+    /// the backend layer's `SimBackend`).
+    pub fn per_elem_cost(self, k: usize) -> (u64, u64) {
+        match self {
+            Self::PrngInit => (22, 8), // ~11 hash lines × 2 ops
+            Self::PrngStep | Self::PrngMultiStep => (6 * k as u64, 16),
+            Self::VecAdd => (1, 12),
+            Self::Saxpy => (2, 12),
+        }
+    }
+
     /// Classify an HLO module by its (stripped) name.
     pub fn from_module_name(name: &str) -> Option<Self> {
         match name {
@@ -104,18 +117,21 @@ pub fn spec_for(meta: &HloMeta, defines: &[(String, String)]) -> Result<KernelSp
         return Err(format!("kernel {:?} has no result tensor", meta.name));
     }
     let spec = match kind {
-        KernelKind::PrngInit => KernelSpec {
-            // Listing S4: init(__global uint2* seeds, uint nseeds)
-            name: meta.name.clone(),
-            args: vec![
-                ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
-                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
-            ],
-            n,
-            ops_per_elem: 22, // ~11 hash lines × 2 ops
-            bytes_per_elem: 8,
-            k: 1,
-        },
+        KernelKind::PrngInit => {
+            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(1);
+            KernelSpec {
+                // Listing S4: init(__global uint2* seeds, uint nseeds)
+                name: meta.name.clone(),
+                args: vec![
+                    ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
+                    ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
+                ],
+                n,
+                ops_per_elem,
+                bytes_per_elem,
+                k: 1,
+            }
+        }
         KernelKind::PrngStep | KernelKind::PrngMultiStep => {
             let k = if kind == KernelKind::PrngMultiStep {
                 let kv = defines
@@ -131,6 +147,7 @@ pub fn spec_for(meta: &HloMeta, defines: &[(String, String)]) -> Result<KernelSp
             } else {
                 1
             };
+            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(k);
             KernelSpec {
                 // Listing S5: rng(uint nseeds, __global ulong* in, out)
                 name: meta.name.clone(),
@@ -140,36 +157,42 @@ pub fn spec_for(meta: &HloMeta, defines: &[(String, String)]) -> Result<KernelSp
                     ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
                 ],
                 n,
-                ops_per_elem: 6 * k as u64,
-                bytes_per_elem: 16,
+                ops_per_elem,
+                bytes_per_elem,
                 k,
             }
         }
-        KernelKind::VecAdd => KernelSpec {
-            name: meta.name.clone(),
-            args: vec![
-                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
-            ],
-            n,
-            ops_per_elem: 1,
-            bytes_per_elem: 12,
-            k: 1,
-        },
-        KernelKind::Saxpy => KernelSpec {
-            name: meta.name.clone(),
-            args: vec![
-                ArgRole::ScalarInput { dtype: ElemType::F32 },
-                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
-            ],
-            n,
-            ops_per_elem: 2,
-            bytes_per_elem: 12,
-            k: 1,
-        },
+        KernelKind::VecAdd => {
+            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(1);
+            KernelSpec {
+                name: meta.name.clone(),
+                args: vec![
+                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                    ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+                ],
+                n,
+                ops_per_elem,
+                bytes_per_elem,
+                k: 1,
+            }
+        }
+        KernelKind::Saxpy => {
+            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(1);
+            KernelSpec {
+                name: meta.name.clone(),
+                args: vec![
+                    ArgRole::ScalarInput { dtype: ElemType::F32 },
+                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                    ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+                ],
+                n,
+                ops_per_elem,
+                bytes_per_elem,
+                k: 1,
+            }
+        }
     };
     // Cross-check the spec against the HLO signature: the number of HLO
     // input params must equal the ScalarInput+BufferInput slots.

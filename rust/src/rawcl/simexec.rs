@@ -49,9 +49,19 @@ pub fn xorshift(mut s: u64) -> u64 {
 
 /// Fill `out` (little-endian u64s) with the first seed batch.
 pub fn run_init(out: &mut [u8]) {
+    run_init_from(0, out);
+}
+
+/// Fill `out` with seeds for global indices `gid0..gid0 + out.len()/8`.
+///
+/// The whole-stream case is `gid0 == 0`; the multi-device scheduler
+/// shards the stream by handing each backend a different `gid0`, and the
+/// concatenation of the shards is bit-identical to a single
+/// [`run_init`] over the full range.
+pub fn run_init_from(gid0: u64, out: &mut [u8]) {
     assert_eq!(out.len() % 8, 0);
     for (i, chunk) in out.chunks_exact_mut(8).enumerate() {
-        chunk.copy_from_slice(&init_seed(i as u32).to_le_bytes());
+        chunk.copy_from_slice(&init_seed((gid0 + i as u64) as u32).to_le_bytes());
     }
 }
 
@@ -132,6 +142,19 @@ mod tests {
         for gid in 0..100_000u32 {
             assert_ne!(init_seed(gid), 0, "gid {gid} hashed to 0");
         }
+    }
+
+    #[test]
+    fn sharded_init_concatenation_matches_full_init() {
+        let mut full = vec![0u8; 96 * 8];
+        run_init(&mut full);
+        let mut sharded = Vec::new();
+        for lo in [0u64, 32, 64] {
+            let mut part = vec![0u8; 32 * 8];
+            run_init_from(lo, &mut part);
+            sharded.extend_from_slice(&part);
+        }
+        assert_eq!(full, sharded);
     }
 
     #[test]

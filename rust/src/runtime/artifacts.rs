@@ -109,18 +109,29 @@ impl Manifest {
     /// Locate the artifacts directory: `$CF4RS_ARTIFACTS`, then
     /// `./artifacts`, then `../artifacts` (for tests run from `rust/`).
     pub fn discover() -> Result<Self> {
+        match Self::discover_if_present()? {
+            Some(man) => Ok(man),
+            None => bail!(
+                "no artifacts/manifest.tsv found — run `make artifacts` \
+                 (or set CF4RS_ARTIFACTS)"
+            ),
+        }
+    }
+
+    /// Like [`discover`](Self::discover), but distinguishes *absent*
+    /// (`Ok(None)` — callers may fall back to generated kernels) from
+    /// *present but unloadable* (`Err` — a corrupt manifest must never
+    /// be silently papered over).
+    pub fn discover_if_present() -> Result<Option<Self>> {
         if let Ok(dir) = std::env::var("CF4RS_ARTIFACTS") {
-            return Self::load(dir);
+            return Self::load(dir).map(Some);
         }
         for cand in ["artifacts", "../artifacts", "../../artifacts"] {
             if Path::new(cand).join("manifest.tsv").exists() {
-                return Self::load(cand);
+                return Self::load(cand).map(Some);
             }
         }
-        bail!(
-            "no artifacts/manifest.tsv found — run `make artifacts` \
-             (or set CF4RS_ARTIFACTS)"
-        )
+        Ok(None)
     }
 
     /// Parse manifest text; `dir` is prepended to the file column.
@@ -247,6 +258,16 @@ mod tests {
         let bad = "name\tkind\tn\tk\tdtype\tnum_inputs\tnum_outputs\tfile\n\
             a\tmystery\t1\t0\tu64\t0\t1\ta.hlo.txt\n";
         assert!(Manifest::parse(bad, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn discover_if_present_is_consistent_with_discover() {
+        // Ok(None) = absent (the generated-kernel fallback signal);
+        // Err = present but broken. Both must agree with discover().
+        match Manifest::discover_if_present() {
+            Ok(Some(_)) => assert!(Manifest::discover().is_ok()),
+            Ok(None) | Err(_) => assert!(Manifest::discover().is_err()),
+        }
     }
 
     #[test]

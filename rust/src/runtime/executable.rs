@@ -196,12 +196,21 @@ impl TextModule {
 /// Collisions are broken by comparing the stored source.
 static TEXT_CACHE: Mutex<Vec<(u64, String, Arc<TextModule>)>> = Mutex::new(Vec::new());
 
-fn fnv1a(text: &str) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in text.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
+/// FNV-1a 64 offset basis — shared with the harness stream fingerprints
+/// (`crate::harness::backends::Fnv`) so the constants live in one place.
+pub const FNV1A_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a 64 absorption step over raw bytes.
+pub fn fnv1a_update(h: &mut u64, bytes: &[u8]) {
+    for b in bytes {
+        *h ^= *b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
     }
+}
+
+fn fnv1a(text: &str) -> u64 {
+    let mut h = FNV1A_OFFSET;
+    fnv1a_update(&mut h, text.as_bytes());
     h
 }
 

@@ -1,0 +1,262 @@
+//! HLO source generation — the artifact fallback path.
+//!
+//! The primary source of device programs is the AOT pipeline
+//! (`python/compile/aot.py` → `artifacts/manifest.tsv`). When the
+//! manifest is absent (fresh checkout, CI) or lacks a problem size, this
+//! module *generates* an HLO text module for any of the five kernel
+//! families at any size — so programs, the backend layer and the whole
+//! test suite work hermetically.
+//!
+//! The generated text is structurally faithful: a real `HloModule`
+//! header with an `entry_computation_layout` (which is all
+//! [`crate::rawcl::hlometa`] needs) and a body whose ops sketch the
+//! computation. Parameters the real compiler would recover from the
+//! body (fused step count, global-index offset) are carried in
+//! `// cf4rs.*` directives, which the `xla` facade interpreter honours.
+//! When swapping in real PJRT bindings, route these kernels through the
+//! AOT pipeline instead (the manifest is always preferred when present).
+
+use super::artifacts::{ArtifactKind, Manifest};
+
+/// Options for one generated module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GenSpec {
+    pub kind: ArtifactKind,
+    /// Problem size (elements of the principal vector).
+    pub n: usize,
+    /// Fused step count (meaningful for `RngMulti`; 1 otherwise).
+    pub k: usize,
+    /// First global index hashed by `Init` (0 for whole-stream init;
+    /// non-zero when a scheduler shards the stream across backends).
+    pub gid_offset: u64,
+}
+
+impl GenSpec {
+    pub fn new(kind: ArtifactKind, n: usize) -> Self {
+        Self { kind, n, k: 1, gid_offset: 0 }
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn with_gid_offset(mut self, off: u64) -> Self {
+        self.gid_offset = off;
+        self
+    }
+}
+
+/// Generate the HLO text module for `spec`.
+pub fn source(spec: &GenSpec) -> String {
+    let n = spec.n;
+    match spec.kind {
+        ArtifactKind::Init => {
+            let mut s = format!(
+                "HloModule jit_prng_init, entry_computation_layout=\
+                 {{()->(u64[{n}]{{0}})}}\n"
+            );
+            if spec.gid_offset != 0 {
+                s.push_str(&format!("// cf4rs.gid_offset = {}\n", spec.gid_offset));
+            }
+            s.push_str(&format!(
+                "\nENTRY main {{\n  \
+                 gid = u32[{n}]{{0}} iota(), iota_dimension=0\n  \
+                 off = u32[{n}]{{0}} broadcast(u32[] constant({off})), dimensions={{}}\n  \
+                 idx = u32[{n}]{{0}} add(gid, off)\n  \
+                 seed = u64[{n}]{{0}} custom-call(idx), \
+                 custom_call_target=\"cf4rs_jenkins6_wang\"\n  \
+                 ROOT out = (u64[{n}]{{0}}) tuple(seed)\n}}\n",
+                off = spec.gid_offset,
+            ));
+            s
+        }
+        ArtifactKind::Rng => format!(
+            "HloModule jit_prng_step, entry_computation_layout=\
+             {{(u64[{n}]{{0}})->(u64[{n}]{{0}})}}\n\n\
+             ENTRY main {{\n  \
+             state = u64[{n}]{{0}} parameter(0)\n  \
+             next = u64[{n}]{{0}} custom-call(state), \
+             custom_call_target=\"cf4rs_xorshift_21_35_4\"\n  \
+             ROOT out = (u64[{n}]{{0}}) tuple(next)\n}}\n"
+        ),
+        ArtifactKind::RngMulti => format!(
+            "HloModule jit_prng_multi_step, entry_computation_layout=\
+             {{(u64[{n}]{{0}})->(u64[{n}]{{0}})}}\n\
+             // cf4rs.k = {k}\n\n\
+             ENTRY main {{\n  \
+             state = u64[{n}]{{0}} parameter(0)\n  \
+             next = u64[{n}]{{0}} custom-call(state), \
+             custom_call_target=\"cf4rs_xorshift_21_35_4_x{k}\"\n  \
+             ROOT out = (u64[{n}]{{0}}) tuple(next)\n}}\n",
+            k = spec.k,
+        ),
+        ArtifactKind::VecAdd => format!(
+            "HloModule jit_vecadd, entry_computation_layout=\
+             {{(f32[{n}]{{0}}, f32[{n}]{{0}})->(f32[{n}]{{0}})}}\n\n\
+             ENTRY main {{\n  \
+             x = f32[{n}]{{0}} parameter(0)\n  \
+             y = f32[{n}]{{0}} parameter(1)\n  \
+             sum = f32[{n}]{{0}} add(x, y)\n  \
+             ROOT out = (f32[{n}]{{0}}) tuple(sum)\n}}\n"
+        ),
+        ArtifactKind::Saxpy => format!(
+            "HloModule jit_saxpy, entry_computation_layout=\
+             {{(f32[], f32[{n}]{{0}}, f32[{n}]{{0}})->(f32[{n}]{{0}})}}\n\n\
+             ENTRY main {{\n  \
+             a = f32[] parameter(0)\n  \
+             x = f32[{n}]{{0}} parameter(1)\n  \
+             y = f32[{n}]{{0}} parameter(2)\n  \
+             ab = f32[{n}]{{0}} broadcast(a), dimensions={{}}\n  \
+             ax = f32[{n}]{{0}} multiply(ab, x)\n  \
+             sum = f32[{n}]{{0}} add(ax, y)\n  \
+             ROOT out = (f32[{n}]{{0}}) tuple(sum)\n}}\n"
+        ),
+    }
+}
+
+/// Resolve the source text for `spec`: prefer a matching manifest
+/// artifact (real AOT output), fall back to generation.
+///
+/// The manifest is only consulted for unsharded specs (`gid_offset == 0`
+/// and, for `RngMulti`, matching `k`) — artifacts bake those parameters
+/// in at lowering time.
+pub fn resolve_source(spec: &GenSpec) -> std::io::Result<String> {
+    if spec.gid_offset == 0 {
+        if let Some(man) = manifest_if_present()? {
+            if let Some(art) = man.find(spec.kind, spec.n) {
+                let k_matches = spec.kind != ArtifactKind::RngMulti || art.k == spec.k;
+                if k_matches {
+                    return std::fs::read_to_string(&art.path);
+                }
+            }
+        }
+    }
+    Ok(source(spec))
+}
+
+/// The manifest when one exists; a *corrupt* manifest is an error, not
+/// a fall-through to generation (the user built artifacts on purpose).
+fn manifest_if_present() -> std::io::Result<Option<Manifest>> {
+    Manifest::discover_if_present()
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{e:#}")))
+}
+
+/// Parse the conventional artifact name into a [`GenSpec`]: `init_n4096`,
+/// `rng_n65536`, `rngk16_n4096`, `vecadd_n1024`, `saxpy_n1024`.
+pub fn parse_artifact_name(name: &str) -> Option<GenSpec> {
+    let (head, n_str) = name.rsplit_once("_n")?;
+    let n: usize = n_str.parse().ok()?;
+    if n == 0 {
+        return None;
+    }
+    Some(match head {
+        "init" => GenSpec::new(ArtifactKind::Init, n),
+        "rng" => GenSpec::new(ArtifactKind::Rng, n),
+        "vecadd" => GenSpec::new(ArtifactKind::VecAdd, n),
+        "saxpy" => GenSpec::new(ArtifactKind::Saxpy, n),
+        other => {
+            let k: usize = other.strip_prefix("rngk")?.parse().ok()?;
+            if k == 0 {
+                return None;
+            }
+            GenSpec::new(ArtifactKind::RngMulti, n).with_k(k)
+        }
+    })
+}
+
+/// Resolve an artifact by conventional name: manifest text when the
+/// manifest has it, generated HLO otherwise.
+pub fn resolve_named_source(name: &str) -> std::io::Result<String> {
+    if let Some(man) = manifest_if_present()? {
+        if let Some(art) = man.get(name) {
+            return std::fs::read_to_string(&art.path);
+        }
+    }
+    match parse_artifact_name(name) {
+        Some(spec) => Ok(source(&spec)),
+        None => Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("no artifact named {name:?}, and the name is not generatable"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::hlometa::parse_header;
+    use crate::rawcl::kernelspec::{parse_build_options, spec_for};
+    use crate::runtime::executable::count_instructions;
+
+    #[test]
+    fn generated_headers_parse_and_spec() {
+        for (kind, params) in [
+            (ArtifactKind::Init, 0),
+            (ArtifactKind::Rng, 1),
+            (ArtifactKind::VecAdd, 2),
+            (ArtifactKind::Saxpy, 3),
+        ] {
+            let text = source(&GenSpec::new(kind, 4096));
+            let meta = parse_header(&text).unwrap();
+            assert_eq!(meta.problem_size(), 4096, "{kind}");
+            assert_eq!(meta.params.len(), params, "{kind}");
+            assert!(spec_for(&meta, &[]).is_ok(), "{kind}");
+            assert!(count_instructions(&text) > 0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn multi_step_carries_k_and_builds_with_define() {
+        let text = source(&GenSpec::new(ArtifactKind::RngMulti, 1024).with_k(16));
+        assert!(text.contains("// cf4rs.k = 16"));
+        let meta = parse_header(&text).unwrap();
+        let defines = parse_build_options("-Dk=16").unwrap();
+        assert_eq!(spec_for(&meta, &defines).unwrap().k, 16);
+    }
+
+    #[test]
+    fn init_offset_is_emitted() {
+        let text = source(&GenSpec::new(ArtifactKind::Init, 64).with_gid_offset(4096));
+        assert!(text.contains("// cf4rs.gid_offset = 4096"));
+        // Offset 0 stays directive-free (matches real artifacts).
+        let plain = source(&GenSpec::new(ArtifactKind::Init, 64));
+        assert!(!plain.contains("gid_offset"));
+    }
+
+    #[test]
+    fn generated_modules_compile_on_the_runtime() {
+        for kind in [ArtifactKind::Init, ArtifactKind::Rng, ArtifactKind::VecAdd] {
+            let text = source(&GenSpec::new(kind, 256));
+            let module = crate::runtime::TextModule::compile(&text).unwrap();
+            assert!(module.instruction_count > 0);
+        }
+    }
+
+    #[test]
+    fn artifact_names_parse_to_specs() {
+        let s = parse_artifact_name("init_n4096").unwrap();
+        assert_eq!((s.kind, s.n, s.k), (ArtifactKind::Init, 4096, 1));
+        let s = parse_artifact_name("rngk16_n65536").unwrap();
+        assert_eq!((s.kind, s.n, s.k), (ArtifactKind::RngMulti, 65536, 16));
+        assert!(parse_artifact_name("mystery_n4096").is_none());
+        assert!(parse_artifact_name("init_nquux").is_none());
+        assert!(parse_artifact_name("init").is_none());
+        assert!(parse_artifact_name("rngk0_n16").is_none());
+    }
+
+    #[test]
+    fn named_resolution_generates_without_a_manifest() {
+        let text = resolve_named_source("rng_n4096").unwrap();
+        assert!(text.contains("prng_step"));
+        assert!(resolve_named_source("nonsense").is_err());
+    }
+
+    #[test]
+    fn resolve_source_falls_back_to_generation() {
+        // A size no artifact ladder will ever contain.
+        let text =
+            resolve_source(&GenSpec::new(ArtifactKind::Rng, 12345)).unwrap();
+        assert!(text.contains("u64[12345]"));
+    }
+}

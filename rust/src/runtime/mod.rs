@@ -7,13 +7,21 @@
 //! Interchange format is HLO **text** (see `python/compile/aot.py` and
 //! DESIGN.md): `HloModuleProto::from_text_file` reassigns instruction ids,
 //! which is what makes jax ≥ 0.5 output loadable on xla_extension 0.5.1.
+//!
+//! The `xla` dependency is a path crate (`rust/vendor/xla`): a
+//! deterministic facade over the binding surface, backed by a reference
+//! interpreter, so builds and CI are hermetic. [`hlogen`] generates HLO
+//! modules for the known kernel families when no AOT artifact covers a
+//! requested size.
 
 pub mod artifacts;
 pub mod client;
 pub mod executable;
+pub mod hlogen;
 pub mod literal;
 
 pub use artifacts::{Artifact, ArtifactKind, Manifest};
 pub use client::global_client;
 pub use executable::{CompiledModule, ExecutableCache, TextModule};
+pub use hlogen::GenSpec;
 pub use literal::ElemType;

@@ -1,0 +1,243 @@
+//! Backend cross-validation (modeled on Raven's backend-comparison
+//! harness): the same workloads run on every implementation of the
+//! `Backend` trait — through **trait-object dispatch**, exactly as the
+//! scheduler drives them — and all outputs must be bit-identical.
+
+use std::sync::Arc;
+
+use cf4rs::backend::{
+    Backend, BackendRegistry, BackendResult, BufId, CompileSpec, EventId, EventTimes,
+    KernelId, LaunchArg, PjrtBackend, SimBackend, TimelineEntry,
+};
+use cf4rs::ccl::selector::{Filter, FilterChain};
+use cf4rs::coordinator::scheduler::{run_sharded_on, ShardedRngConfig};
+use cf4rs::coordinator::Sink;
+use cf4rs::rawcl::profile::BackendKind;
+use cf4rs::rawcl::simexec;
+use cf4rs::rawcl::types::DeviceId;
+
+/// Produce `iters` batches of `n` u64 words through the trait object.
+fn rng_stream(b: &dyn Backend, n: usize, iters: usize, seed_offset: u64) -> Vec<u8> {
+    let bytes = n * 8;
+    let k_init = b.compile(&CompileSpec::init_at(n, seed_offset)).unwrap();
+    let k_step = b.compile(&CompileSpec::step(n)).unwrap();
+    let mut front = b.alloc(bytes).unwrap();
+    let mut back = b.alloc(bytes).unwrap();
+    let mut host = vec![0u8; bytes];
+    let mut stream = Vec::with_capacity(bytes * iters);
+
+    let ev = b.enqueue(k_init, &[LaunchArg::Buf(front)]).unwrap();
+    b.wait(ev).unwrap();
+    b.read(front, 0, &mut host).unwrap();
+    stream.extend_from_slice(&host);
+    for _ in 1..iters {
+        let ev = b
+            .enqueue(k_step, &[LaunchArg::Buf(front), LaunchArg::Buf(back)])
+            .unwrap();
+        b.wait(ev).unwrap();
+        b.read(back, 0, &mut host).unwrap();
+        stream.extend_from_slice(&host);
+        std::mem::swap(&mut front, &mut back);
+    }
+    b.free(front);
+    b.free(back);
+    stream
+}
+
+/// The acceptance-criterion test: `SimBackend` and `PjrtBackend` produce
+/// bit-identical RNG output for the same seed/steps, dispatched through
+/// the `Backend` trait.
+#[test]
+fn sim_and_pjrt_backends_are_bit_identical() {
+    let sim: Arc<dyn Backend> = Arc::new(SimBackend::new(DeviceId(1)).unwrap());
+    let pjrt: Arc<dyn Backend> = Arc::new(PjrtBackend::native().unwrap());
+    let (n, iters) = (4096, 6);
+    let a = rng_stream(sim.as_ref(), n, iters, 0);
+    let b = rng_stream(pjrt.as_ref(), n, iters, 0);
+    assert_eq!(a.len(), n * 8 * iters);
+    assert_eq!(a, b, "SimBackend vs PjrtBackend stream divergence");
+    // And both match the host reference for spot words.
+    let w0 = u64::from_le_bytes(a[..8].try_into().unwrap());
+    assert_eq!(w0, simexec::init_seed(0));
+    let w_last_batch = u64::from_le_bytes(a[(iters - 1) * n * 8..][..8].try_into().unwrap());
+    let mut expect = simexec::init_seed(0);
+    for _ in 1..iters {
+        expect = simexec::xorshift(expect);
+    }
+    assert_eq!(w_last_batch, expect);
+}
+
+#[test]
+fn both_sim_devices_agree_with_each_other() {
+    let a = rng_stream(&SimBackend::new(DeviceId(1)).unwrap(), 2048, 3, 0);
+    let b = rng_stream(&SimBackend::new(DeviceId(2)).unwrap(), 2048, 3, 0);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn seed_offsets_compose_across_backends() {
+    // A PJRT shard starting at gid 1000 must equal the corresponding
+    // slice of a sim backend's whole-stream seed batch.
+    let sim = SimBackend::new(DeviceId(2)).unwrap();
+    let pjrt = PjrtBackend::native().unwrap();
+    let whole = rng_stream(&sim, 2048, 1, 0);
+    let shard = rng_stream(&pjrt, 512, 1, 1000);
+    assert_eq!(&whole[1000 * 8..1512 * 8], &shard[..]);
+}
+
+#[test]
+fn registry_selection_uses_device_filters() {
+    let reg = BackendRegistry::with_default_backends();
+    assert_eq!(reg.len(), 3);
+
+    let gpus = reg.select(&FilterChain::new().add(Filter::type_gpu()));
+    assert_eq!(gpus.len(), 2);
+    assert!(gpus.iter().all(|b| b.kind() == BackendKind::Simulated));
+
+    let best = reg.select(
+        &FilterChain::new()
+            .add(Filter::type_gpu())
+            .add(Filter::most_compute_units()),
+    );
+    assert_eq!(best.len(), 1);
+    assert_eq!(best[0].name(), "sim:SimCL HD 7970");
+
+    let cpu = reg.select(&FilterChain::new().add(Filter::type_cpu()));
+    assert_eq!(cpu.len(), 1);
+    assert_eq!(cpu[0].kind(), BackendKind::Native);
+}
+
+#[test]
+fn sharded_run_matches_single_backend_stream() {
+    let reg = BackendRegistry::with_default_backends();
+    let (n, iters) = (8192, 4);
+
+    let mut cfg = ShardedRngConfig::new(n, iters);
+    cfg.min_chunk = 512;
+    cfg.sink = Sink::Sample(n);
+    let out = run_sharded_on(&reg, &cfg).unwrap();
+    assert!(out.num_chunks > 1, "must actually shard");
+    assert_eq!(out.total_bytes, (n * 8 * iters) as u64);
+
+    // The merged first batch equals the whole-stream seed batch.
+    let single = rng_stream(&SimBackend::new(DeviceId(1)).unwrap(), n, 1, 0);
+    for (i, &w) in out.sample.iter().enumerate() {
+        let expect = u64::from_le_bytes(single[i * 8..][..8].try_into().unwrap());
+        assert_eq!(w, expect, "word {i}");
+    }
+
+    // Every task is accounted for and all backends are represented in
+    // the load report.
+    let total: usize = out.per_backend.iter().map(|l| l.tasks).sum();
+    assert_eq!(total, out.num_chunks * iters);
+    assert_eq!(out.per_backend.len(), 3);
+}
+
+#[test]
+fn sharded_profile_aggregates_per_backend_timelines() {
+    let reg = BackendRegistry::with_default_backends();
+    let mut cfg = ShardedRngConfig::new(4096, 3);
+    cfg.min_chunk = 512;
+    let out = run_sharded_on(&reg, &cfg).unwrap();
+    let summary = out.prof_summary.expect("profiling enabled by default");
+    assert!(summary.contains("INIT_KERNEL"), "summary:\n{summary}");
+    assert!(summary.contains("RNG_KERNEL"), "summary:\n{summary}");
+    assert!(summary.contains("READ_BUFFER"), "summary:\n{summary}");
+    let export = out.prof_export.unwrap();
+    assert!(export.lines().count() > 3, "export should list events");
+}
+
+#[test]
+fn scheduler_respects_backend_selector() {
+    let reg = BackendRegistry::with_default_backends();
+    let mut cfg = ShardedRngConfig::new(4096, 2);
+    cfg.min_chunk = 512;
+    cfg.selector = Some(FilterChain::new().add(Filter::name_contains("1080")));
+    let out = run_sharded_on(&reg, &cfg).unwrap();
+    assert_eq!(out.per_backend.len(), 1);
+    assert!(out.per_backend[0].name.contains("1080"));
+
+    let mut none = ShardedRngConfig::new(4096, 2);
+    none.selector = Some(FilterChain::new().add(Filter::name_contains("no-such")));
+    assert!(run_sharded_on(&reg, &none).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Custom-backend registration (the documented extension point)
+// ---------------------------------------------------------------------------
+
+/// A minimal third backend: delegates execution to a wrapped
+/// `SimBackend` but reports its own identity — the shape a remote-worker
+/// or GPU-plugin backend would take.
+struct EchoBackend {
+    inner: SimBackend,
+}
+
+impl Backend for EchoBackend {
+    fn name(&self) -> String {
+        "custom:echo".to_string()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Simulated
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.inner.device_id()
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        self.inner.compile(spec)
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        self.inner.alloc(bytes)
+    }
+
+    fn free(&self, buf: BufId) {
+        self.inner.free(buf)
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        self.inner.write(buf, offset, data)
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        self.inner.read(buf, offset, out)
+    }
+
+    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
+        self.inner.enqueue(kernel, args)
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        self.inner.wait(ev)
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        self.inner.timestamps(ev)
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        self.inner.drain_timeline()
+    }
+}
+
+#[test]
+fn custom_backend_registers_and_schedules() {
+    let reg = BackendRegistry::new();
+    reg.register(Arc::new(EchoBackend {
+        inner: SimBackend::new(DeviceId(1)).unwrap(),
+    }));
+    reg.register(Arc::new(SimBackend::new(DeviceId(2)).unwrap()));
+    assert_eq!(reg.len(), 2);
+
+    let mut cfg = ShardedRngConfig::new(4096, 2);
+    cfg.min_chunk = 512;
+    cfg.sink = Sink::Sample(32);
+    let out = run_sharded_on(&reg, &cfg).unwrap();
+    assert!(out.per_backend.iter().any(|l| l.name == "custom:echo"));
+    for (i, &w) in out.sample.iter().enumerate() {
+        assert_eq!(w, simexec::init_seed(i as u32));
+    }
+}

@@ -111,11 +111,15 @@ fn build_log_on_failure_like_listing_s2() {
 
 #[test]
 fn program_from_source_files_and_kernel_cache() {
-    let man = cf4rs::runtime::Manifest::discover().unwrap();
-    let paths = [
-        man.get("init_n4096").unwrap().path.clone(),
-        man.get("rng_n4096").unwrap().path.clone(),
-    ];
+    // Exercise the file-loading path with generated sources written to
+    // a scratch directory (works with or without built artifacts).
+    let dir = std::env::temp_dir().join("cf4rs_test_sources");
+    std::fs::create_dir_all(&dir).unwrap();
+    let paths = [dir.join("init_n4096.hlo.txt"), dir.join("rng_n4096.hlo.txt")];
+    for (path, name) in paths.iter().zip(["init_n4096", "rng_n4096"]) {
+        let text = cf4rs::runtime::hlogen::resolve_named_source(name).unwrap();
+        std::fs::write(path, text).unwrap();
+    }
     let ctx = Context::new_gpu().unwrap();
     let prg = Program::new_from_source_files(&ctx, &paths).unwrap();
     prg.build().unwrap();

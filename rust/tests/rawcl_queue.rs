@@ -3,14 +3,15 @@
 //! paper's init→rng→read pipeline and cross-backend bit-exactness.
 
 use cf4rs::rawcl::*;
-use cf4rs::runtime::Manifest;
+use cf4rs::runtime::hlogen;
 
-/// Build a (ctx, queue, program) triple on the given device.
+/// Build a (ctx, queue, program) triple on the given device. Kernel
+/// sources come from the manifest when artifacts are built, and from
+/// the HLO generator otherwise.
 fn setup(dev: DeviceId, arts: &[&str], opts: &str) -> (ContextH, QueueH, ProgramH) {
-    let man = Manifest::discover().expect("artifacts present — run `make artifacts`");
     let sources: Vec<String> = arts
         .iter()
-        .map(|n| std::fs::read_to_string(&man.get(n).unwrap().path).unwrap())
+        .map(|n| hlogen::resolve_named_source(n).unwrap())
         .collect();
     let mut st = CL_SUCCESS;
     let ctx = create_context(&[dev], &mut st);
@@ -249,8 +250,7 @@ fn profiling_timestamps_and_sim_duration() {
 #[test]
 fn wait_list_orders_across_queues() {
     const N: usize = 4096;
-    let man = Manifest::discover().expect("artifacts");
-    let src = std::fs::read_to_string(&man.get("init_n4096").unwrap().path).unwrap();
+    let src = hlogen::resolve_named_source("init_n4096").unwrap();
     let mut st = CL_SUCCESS;
     let ctx = create_context(&[DeviceId(1)], &mut st);
     let q1 = create_command_queue(ctx, DeviceId(1), QueueProps::PROFILING_ENABLE, &mut st);
@@ -392,8 +392,7 @@ fn nonblocking_safe_read_rejected() {
 #[test]
 fn profiling_denied_without_queue_flag() {
     const N: usize = 4096;
-    let man = Manifest::discover().expect("artifacts");
-    let src = std::fs::read_to_string(&man.get("init_n4096").unwrap().path).unwrap();
+    let src = hlogen::resolve_named_source("init_n4096").unwrap();
     let mut st = CL_SUCCESS;
     let ctx = create_context(&[DeviceId(1)], &mut st);
     let q = create_command_queue(ctx, DeviceId(1), QueueProps::empty(), &mut st);

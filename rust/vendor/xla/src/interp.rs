@@ -1,0 +1,409 @@
+//! The facade's HLO interpreter: header parsing + kernel dispatch.
+//!
+//! A module is recognised by its (`jit_`-stripped) name and executed by
+//! the matching scalar reference kernel. Structured metadata the real
+//! compiler would recover from the module body travels in comment
+//! directives the cf4rs HLO generator emits:
+//!
+//! ```text
+//! // cf4rs.k = 16           (fused step count of prng_multi_step)
+//! // cf4rs.gid_offset = 4096 (first global index hashed by prng_init)
+//! ```
+
+use crate::kernels;
+use crate::{Error, Literal, PrimitiveType, Result};
+
+/// One tensor slot of the entry signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub prim: PrimitiveType,
+    /// Empty = rank-0 scalar.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSig {
+    fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A parsed module: name, signature, metadata directives.
+#[derive(Debug, Clone)]
+pub struct ParsedModule {
+    /// Module name as written (`jit_` prefix retained).
+    pub raw_name: String,
+    /// Name with any `jit_` prefix stripped (the kernel family key).
+    pub name: String,
+    pub params: Vec<TensorSig>,
+    pub results: Vec<TensorSig>,
+    /// Fused step count (`// cf4rs.k`); `None` when the module carries
+    /// no directive. `prng_multi_step` REQUIRES it: a real lowered
+    /// artifact bakes the unrolled steps into the body, which this
+    /// interpreter never reads, so executing without the directive
+    /// would silently run one step — refuse instead.
+    pub k: Option<usize>,
+    /// Global-index offset for init (`// cf4rs.gid_offset`), default 0.
+    pub gid_offset: u64,
+}
+
+impl ParsedModule {
+    /// Parse the `HloModule` header line and metadata directives.
+    pub fn parse(text: &str) -> Result<Self> {
+        let header = text
+            .lines()
+            .find(|l| !l.trim().is_empty())
+            .ok_or_else(|| Error::msg("empty module text"))?;
+        let rest = header.strip_prefix("HloModule ").ok_or_else(|| {
+            Error::msg(format!("first line is not an HloModule header: {header:?}"))
+        })?;
+        let (raw_name, attrs) = match rest.find(',') {
+            Some(i) => (rest[..i].trim(), &rest[i + 1..]),
+            None => (rest.trim(), ""),
+        };
+        if raw_name.is_empty() {
+            return Err(Error::msg("empty module name"));
+        }
+        let name = raw_name.strip_prefix("jit_").unwrap_or(raw_name).to_string();
+
+        let (params, results) = match attrs.find("entry_computation_layout={") {
+            Some(start) => {
+                let sig = &attrs[start + "entry_computation_layout={".len()..];
+                let end = matching_brace(sig)
+                    .ok_or_else(|| Error::msg("unterminated entry_computation_layout"))?;
+                let sig = &sig[..end];
+                let arrow = sig
+                    .find("->")
+                    .ok_or_else(|| Error::msg("no -> in entry_computation_layout"))?;
+                (parse_tensor_list(&sig[..arrow])?, parse_tensor_list(&sig[arrow + 2..])?)
+            }
+            None => (Vec::new(), Vec::new()),
+        };
+
+        let mut k = None;
+        let mut gid_offset = 0u64;
+        for line in text.lines() {
+            let line = line.trim();
+            let Some(directive) = line.strip_prefix("// cf4rs.") else {
+                continue;
+            };
+            let Some((key, value)) = directive.split_once('=') else {
+                continue;
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "k" => {
+                    k = Some(value.parse().map_err(|_| {
+                        Error::msg(format!("bad cf4rs.k directive {value:?}"))
+                    })?);
+                }
+                "gid_offset" => {
+                    gid_offset = value.parse().map_err(|_| {
+                        Error::msg(format!("bad cf4rs.gid_offset directive {value:?}"))
+                    })?;
+                }
+                _ => {} // unknown directives are forward-compatible no-ops
+            }
+        }
+
+        Ok(Self { raw_name: raw_name.to_string(), name, params, results, k, gid_offset })
+    }
+}
+
+/// Index of the `}` closing the layout (which itself contains `{0}`
+/// layout annotations, so depth must be counted).
+fn matching_brace(s: &str) -> Option<usize> {
+    let mut depth = 1usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse `(u64[4096]{0}, f32[])` — a parenthesised tensor list.
+fn parse_tensor_list(s: &str) -> Result<Vec<TensorSig>> {
+    let s = s.trim();
+    let s = s
+        .strip_prefix('(')
+        .and_then(|t| t.strip_suffix(')'))
+        .ok_or_else(|| Error::msg(format!("tensor list not parenthesised: {s:?}")))?;
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let push = |part: &str, out: &mut Vec<TensorSig>| -> Result<()> {
+        let part = part.trim();
+        if !part.is_empty() {
+            out.push(parse_tensor(part)?);
+        }
+        Ok(())
+    };
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' | '{' | '(' => depth += 1,
+            ']' | '}' | ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                push(&s[start..i], &mut out)?;
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    push(&s[start..], &mut out)?;
+    Ok(out)
+}
+
+/// Parse one `u64[4096]{0}` / `f32[]` tensor.
+fn parse_tensor(s: &str) -> Result<TensorSig> {
+    let bracket = s
+        .find('[')
+        .ok_or_else(|| Error::msg(format!("no dims bracket in tensor {s:?}")))?;
+    let prim = PrimitiveType::parse(&s[..bracket])?;
+    let rest = &s[bracket + 1..];
+    let close = rest
+        .find(']')
+        .ok_or_else(|| Error::msg(format!("unterminated dims in tensor {s:?}")))?;
+    let dims_str = &rest[..close];
+    let dims = if dims_str.is_empty() {
+        Vec::new()
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::msg(format!("bad dim {d:?} in tensor {s:?}")))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(TensorSig { prim, dims })
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+fn check_inputs(module: &ParsedModule, inputs: &[&Literal]) -> Result<()> {
+    if inputs.len() != module.params.len() {
+        return Err(Error::msg(format!(
+            "{}: expected {} inputs, got {}",
+            module.name,
+            module.params.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (sig, lit)) in module.params.iter().zip(inputs).enumerate() {
+        if lit.primitive_type() != sig.prim || lit.dims() != sig.dims.as_slice() {
+            return Err(Error::msg(format!(
+                "{}: input {i} shape mismatch (want {:?}{:?}, got {:?}{:?})",
+                module.name,
+                sig.prim,
+                sig.dims,
+                lit.primitive_type(),
+                lit.dims()
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn u64s(lit: &Literal) -> Vec<u64> {
+    lit.raw_bytes()
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn f32s(lit: &Literal) -> Vec<f32> {
+    lit.raw_bytes()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn u64_literal(dims: Vec<usize>, values: impl Iterator<Item = u64>) -> Literal {
+    let mut data = Vec::new();
+    for v in values {
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    Literal::from_bytes(PrimitiveType::U64, dims, data)
+}
+
+fn f32_literal(dims: Vec<usize>, values: impl Iterator<Item = f32>) -> Literal {
+    let mut data = Vec::new();
+    for v in values {
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    Literal::from_bytes(PrimitiveType::F32, dims, data)
+}
+
+/// Execute a parsed module on literal inputs; returns the result tensors
+/// in signature order.
+pub fn execute(module: &ParsedModule, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    check_inputs(module, inputs)?;
+    let result_sig = module
+        .results
+        .first()
+        .ok_or_else(|| Error::msg(format!("{}: module has no result tensor", module.name)))?;
+    let n = result_sig.element_count();
+    // No explicit return-type annotation: closures pin elided reference
+    // lifetimes too eagerly; inference ties it to `inputs` correctly.
+    let input = |i: usize| {
+        inputs.get(i).copied().ok_or_else(|| {
+            Error::msg(format!("{}: module declares too few parameters", module.name))
+        })
+    };
+    match module.name.as_str() {
+        "prng_init" => {
+            let off = module.gid_offset;
+            Ok(vec![u64_literal(
+                result_sig.dims.clone(),
+                (0..n as u64).map(|i| kernels::init_seed((off + i) as u32)),
+            )])
+        }
+        "prng_step" | "prng_multi_step" => {
+            let k = if module.name == "prng_multi_step" {
+                module.k.ok_or_else(|| {
+                    Error::msg(
+                        "prng_multi_step module has no // cf4rs.k directive: the \
+                         facade interpreter cannot recover the fused step count \
+                         from a lowered artifact body — use generated HLO \
+                         (runtime::hlogen) or real PJRT bindings",
+                    )
+                })?
+            } else {
+                1
+            };
+            let state = u64s(input(0)?);
+            Ok(vec![u64_literal(
+                result_sig.dims.clone(),
+                state.into_iter().map(|mut s| {
+                    for _ in 0..k {
+                        s = kernels::xorshift(s);
+                    }
+                    s
+                }),
+            )])
+        }
+        "vecadd" => {
+            let (x, y) = (f32s(input(0)?), f32s(input(1)?));
+            Ok(vec![f32_literal(
+                result_sig.dims.clone(),
+                x.iter().zip(&y).map(|(a, b)| a + b),
+            )])
+        }
+        "saxpy" => {
+            let a = *f32s(input(0)?)
+                .first()
+                .ok_or_else(|| Error::msg("saxpy: empty scalar input"))?;
+            let (x, y) = (f32s(input(1)?), f32s(input(2)?));
+            Ok(vec![f32_literal(
+                result_sig.dims.clone(),
+                x.iter().zip(&y).map(|(xi, yi)| a * xi + yi),
+            )])
+        }
+        other => Err(Error::msg(format!(
+            "facade interpreter cannot execute kernel family {other:?} \
+             (known: prng_init, prng_step, prng_multi_step, vecadd, saxpy)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit_u64(v: &[u64]) -> Literal {
+        let mut l = Literal::create_from_shape(PrimitiveType::U64, &[v.len()]);
+        l.copy_raw_from(v).unwrap();
+        l
+    }
+
+    #[test]
+    fn parses_header_and_directives() {
+        let m = ParsedModule::parse(
+            "HloModule jit_prng_multi_step, entry_computation_layout=\
+             {(u64[8]{0})->(u64[8]{0})}\n// cf4rs.k = 5\nENTRY e {}\n",
+        )
+        .unwrap();
+        assert_eq!(m.name, "prng_multi_step");
+        assert_eq!(m.k, Some(5));
+        assert_eq!(m.params.len(), 1);
+        assert_eq!(m.results[0].element_count(), 8);
+    }
+
+    #[test]
+    fn init_respects_gid_offset() {
+        let m = ParsedModule::parse(
+            "HloModule jit_prng_init, entry_computation_layout={()->(u64[4]{0})}\n\
+             // cf4rs.gid_offset = 100\n",
+        )
+        .unwrap();
+        let out = execute(&m, &[]).unwrap();
+        let v = u64s(&out[0]);
+        assert_eq!(v[0], kernels::init_seed(100));
+        assert_eq!(v[3], kernels::init_seed(103));
+    }
+
+    #[test]
+    fn multi_step_equals_repeated_single() {
+        let step = ParsedModule::parse(
+            "HloModule jit_prng_step, entry_computation_layout=\
+             {(u64[3]{0})->(u64[3]{0})}\n",
+        )
+        .unwrap();
+        let multi = ParsedModule::parse(
+            "HloModule jit_prng_multi_step, entry_computation_layout=\
+             {(u64[3]{0})->(u64[3]{0})}\n// cf4rs.k = 4\n",
+        )
+        .unwrap();
+        let seed = [7u64, 11, 13];
+        let fused = u64s(&execute(&multi, &[&lit_u64(&seed)]).unwrap()[0]);
+        let mut state = seed.to_vec();
+        for _ in 0..4 {
+            state = u64s(&execute(&step, &[&lit_u64(&state)]).unwrap()[0]);
+        }
+        assert_eq!(fused, state);
+    }
+
+    #[test]
+    fn multi_step_without_k_directive_is_refused() {
+        // A real lowered artifact has the steps unrolled in its body and
+        // no directive — executing it here must be an error, never a
+        // silent single step.
+        let m = ParsedModule::parse(
+            "HloModule jit_prng_multi_step, entry_computation_layout=\
+             {(u64[3]{0})->(u64[3]{0})}\n",
+        )
+        .unwrap();
+        let err = execute(&m, &[&lit_u64(&[1, 2, 3])]).unwrap_err();
+        assert!(err.to_string().contains("cf4rs.k"), "{err}");
+    }
+
+    #[test]
+    fn input_shape_mismatch_rejected() {
+        let m = ParsedModule::parse(
+            "HloModule jit_prng_step, entry_computation_layout=\
+             {(u64[4]{0})->(u64[4]{0})}\n",
+        )
+        .unwrap();
+        assert!(execute(&m, &[&lit_u64(&[1, 2])]).is_err());
+        assert!(execute(&m, &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_family_rejected_at_execute() {
+        let m = ParsedModule::parse(
+            "HloModule jit_mystery, entry_computation_layout={()->(u64[4]{0})}\n",
+        )
+        .unwrap();
+        assert!(execute(&m, &[]).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Scalar reference kernels — the facade's "device code".
+//!
+//! Bit-compatible with `rust/src/rawcl/simexec.rs` and the python
+//! oracles in `python/compile/kernels/ref.py`. Duplicated here (rather
+//! than imported) so the facade crate stays dependency-free in both
+//! directions; the cross-crate equivalence is pinned by the
+//! known-answer tests below and by the cf4rs backend cross-validation
+//! suite.
+
+/// Jenkins 6-shift integer hash (listing S4, low word).
+#[inline]
+pub fn jenkins6(mut a: u32) -> u32 {
+    a = a.wrapping_add(0x7ED5_5D16).wrapping_add(a << 12);
+    a = (a ^ 0xC761_C23C) ^ (a >> 19);
+    a = a.wrapping_add(0x1656_67B1).wrapping_add(a << 5);
+    a = a.wrapping_add(0xD3A2_646C) ^ (a << 9);
+    a = a.wrapping_add(0xFD70_46C5).wrapping_add(a << 3);
+    a = a.wrapping_sub(0xB55A_4F09).wrapping_sub(a >> 16);
+    a
+}
+
+/// Thomas Wang 32-bit hash (listing S4, high word).
+#[inline]
+pub fn wang(mut a: u32) -> u32 {
+    a = (a ^ 61) ^ (a >> 16);
+    a = a.wrapping_add(a << 3);
+    a ^= a >> 4;
+    a = a.wrapping_mul(0x27D4_EB2D);
+    a ^= a >> 15;
+    a
+}
+
+/// The u64 seed for one global index (low = jenkins6, high = wang(low)).
+#[inline]
+pub fn init_seed(gid: u32) -> u64 {
+    let low = jenkins6(gid);
+    let high = wang(low);
+    ((high as u64) << 32) | low as u64
+}
+
+/// One xorshift (21, 35, 4) step (listing S5).
+#[inline]
+pub fn xorshift(mut s: u64) -> u64 {
+    s ^= s << 21;
+    s ^= s >> 35;
+    s ^= s << 4;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answers_match_simexec() {
+        // Pinned values from rust/src/rawcl/simexec.rs — if these drift,
+        // the two reference implementations have diverged.
+        assert_eq!(xorshift(1), 0x0220_0011);
+        assert_eq!(xorshift(0), 0);
+        assert_eq!(init_seed(0), 0x1BB8_2F6B_28B9_1B1D);
+    }
+}

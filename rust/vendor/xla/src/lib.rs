@@ -1,0 +1,415 @@
+//! # `xla` facade — a deterministic PJRT stand-in for cf4rs
+//!
+//! This crate exposes the *exact* subset of the xla-rs binding surface
+//! that cf4rs' [`runtime`] module consumes (`PjRtClient`, `Literal`,
+//! `HloModuleProto`, `XlaComputation`, `PjRtLoadedExecutable`), but backs
+//! it with a reference interpreter instead of `libxla_extension`:
+//!
+//! * "compiling" a module parses its `HloModule` header (name + entry
+//!   signature) and `// cf4rs.*` metadata directives;
+//! * "executing" it runs the scalar reference implementation of the
+//!   recognised kernel family (`prng_init`, `prng_step`,
+//!   `prng_multi_step`, `vecadd`, `saxpy`) — bit-compatible with the
+//!   Pallas kernels and the python oracles in
+//!   `python/compile/kernels/ref.py`.
+//!
+//! The point is hermeticity: `cargo build && cargo test` work on any
+//! machine (CI included) with zero native dependencies, while every
+//! byte that crosses the executable boundary is identical to what the
+//! real AOT artifacts produce. To run on a real PJRT plugin, point the
+//! `xla` path dependency in `rust/Cargo.toml` at the real bindings —
+//! no cf4rs source change is needed.
+
+use std::fmt;
+use std::path::Path;
+
+mod interp;
+mod kernels;
+
+pub use interp::{ParsedModule, TensorSig};
+
+// ---------------------------------------------------------------------------
+// Error type
+// ---------------------------------------------------------------------------
+
+/// Error type mirroring `xla::Error`: a message, nothing fancy.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(facade): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// Primitive types, shapes, literals
+// ---------------------------------------------------------------------------
+
+/// Element types the facade understands (what the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    U32,
+    U64,
+    F32,
+}
+
+impl PrimitiveType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Self::U32 | Self::F32 => 4,
+            Self::U64 => 8,
+        }
+    }
+
+    pub(crate) fn parse(s: &str) -> Result<Self> {
+        match s {
+            "u32" => Ok(Self::U32),
+            "u64" => Ok(Self::U64),
+            "f32" => Ok(Self::F32),
+            other => Err(Error::msg(format!("unsupported element type {other:?}"))),
+        }
+    }
+}
+
+/// Minimal shape view: enough for `tuple_size()` queries.
+#[derive(Debug, Clone)]
+pub struct Shape {
+    tuple_arity: Option<usize>,
+}
+
+impl Shape {
+    /// `Some(n)` for tuple shapes, `None` for array/scalar shapes.
+    pub fn tuple_size(&self) -> Option<usize> {
+        self.tuple_arity
+    }
+}
+
+/// Sealed marker for plain-old-data element views used by
+/// `copy_raw_from`/`copy_raw_to`.
+pub trait NativeType: Copy + 'static + private::Sealed {}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for u64 {}
+    impl Sealed for f32 {}
+}
+
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+impl NativeType for f32 {}
+
+/// A typed host-side tensor (or tuple of tensors), stored as raw
+/// native-endian bytes, mirroring `xla::Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    prim: PrimitiveType,
+    /// Dimensions; empty = rank-0 scalar.
+    dims: Vec<usize>,
+    data: Vec<u8>,
+    /// `Some` when this literal is a tuple; `prim`/`dims`/`data` are then
+    /// unused.
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Zero-initialised literal of the given element type and dims
+    /// (empty dims = scalar).
+    pub fn create_from_shape(prim: PrimitiveType, dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Self {
+            prim,
+            dims: dims.to_vec(),
+            data: vec![0u8; n * prim.size_bytes()],
+            tuple: None,
+        }
+    }
+
+    /// Build a tuple literal from element literals.
+    pub fn tuple(elements: Vec<Literal>) -> Self {
+        Self {
+            prim: PrimitiveType::U32,
+            dims: Vec::new(),
+            data: Vec::new(),
+            tuple: Some(elements),
+        }
+    }
+
+    /// Number of elements (product of dims; 1 for scalars).
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// The element type of an array literal.
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.prim
+    }
+
+    /// Raw bytes of an array literal (native endian).
+    pub fn raw_bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape {
+            tuple_arity: self.tuple.as_ref().map(Vec::len),
+        })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error::msg("literal is not a tuple"))
+    }
+
+    /// Copy typed host data into the literal (sizes must match).
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        let esz = std::mem::size_of::<T>();
+        if esz != self.prim.size_bytes() {
+            return Err(Error::msg(format!(
+                "element size mismatch: literal {} B, source {} B",
+                self.prim.size_bytes(),
+                esz
+            )));
+        }
+        if src.len() != self.element_count() {
+            return Err(Error::msg(format!(
+                "element count mismatch: literal {}, source {}",
+                self.element_count(),
+                src.len()
+            )));
+        }
+        // SAFETY: T is a sealed POD numeric type; byte length checked.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(src.as_ptr() as *const u8, src.len() * esz)
+        };
+        self.data.clear();
+        self.data.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Copy the literal's data out into a typed host slice.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let esz = std::mem::size_of::<T>();
+        if esz != self.prim.size_bytes() {
+            return Err(Error::msg(format!(
+                "element size mismatch: literal {} B, destination {} B",
+                self.prim.size_bytes(),
+                esz
+            )));
+        }
+        if dst.len() != self.element_count() {
+            return Err(Error::msg(format!(
+                "element count mismatch: literal {}, destination {}",
+                self.element_count(),
+                dst.len()
+            )));
+        }
+        // SAFETY: as above; lengths checked.
+        let out = unsafe {
+            std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut u8, dst.len() * esz)
+        };
+        out.copy_from_slice(&self.data);
+        Ok(())
+    }
+
+    /// Internal constructor used by the interpreter.
+    pub(crate) fn from_bytes(prim: PrimitiveType, dims: Vec<usize>, data: Vec<u8>) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>() * prim.size_bytes());
+        Self { prim, dims, data, tuple: None }
+    }
+
+    pub(crate) fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Module / computation / client / executable
+// ---------------------------------------------------------------------------
+
+/// Parsed stand-in for `xla::HloModuleProto`: retains the module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load a module from an HLO text file.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading {}: {e}", path.display())))?;
+        // Validate eagerly so errors surface at load time, like the
+        // real proto parser.
+        interp::ParsedModule::parse(&text)?;
+        Ok(Self { text })
+    }
+
+    /// Parse a module from in-memory HLO text bytes.
+    pub fn parse_and_return_unverified_module(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| Error::msg(format!("module text is not UTF-8: {e}")))?;
+        interp::ParsedModule::parse(text)?;
+        Ok(Self { text: text.to_string() })
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: interp::ParsedModule,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        // Parse already validated by the proto constructors.
+        let module = interp::ParsedModule::parse(&proto.text)
+            .expect("proto text validated at construction");
+        Self { module }
+    }
+
+    /// Full module name, `jit_` prefix included (callers strip it).
+    pub fn name(&self) -> String {
+        self.module.raw_name.clone()
+    }
+}
+
+/// Stand-in for `xla::PjRtClient` (one in-process "CPU device").
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cf4rs interpreter (cpu)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// "Compile": retain the parsed module for interpretation.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { module: comp.module.clone() })
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable {
+    module: interp::ParsedModule,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute the module on literal inputs.
+    ///
+    /// Matches the xla-rs shape: one replica, one result buffer holding
+    /// a tuple literal (the `return_tuple=True` lowering convention).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let inputs: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let outputs = interp::execute(&self.module, &inputs)?;
+        Ok(vec![vec![PjRtBuffer { lit: Literal::tuple(outputs) }]])
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`: already host-resident.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RNG_N4: &str = "HloModule jit_prng_step, entry_computation_layout=\
+                          {(u64[4]{0})->(u64[4]{0})}\n\
+                          ENTRY main {\n  p0 = u64[4]{0} parameter(0)\n\
+                          ROOT t = (u64[4]{0}) tuple(p0)\n}\n";
+
+    #[test]
+    fn literal_roundtrip_u64() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::U64, &[3]);
+        lit.copy_raw_from(&[1u64, 2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        let mut out = [0u64; 3];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, [1, 2, 3]);
+    }
+
+    #[test]
+    fn scalar_literal_shape() {
+        let lit = Literal::create_from_shape(PrimitiveType::F32, &[]);
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.shape().unwrap().tuple_size(), None);
+    }
+
+    #[test]
+    fn tuple_literal_decomposes() {
+        let a = Literal::create_from_shape(PrimitiveType::U64, &[2]);
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert_eq!(t.shape().unwrap().tuple_size(), Some(2));
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn mismatched_copy_is_error() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::U64, &[3]);
+        assert!(lit.copy_raw_from(&[1u64, 2]).is_err());
+        assert!(lit.copy_raw_from(&[1u32, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn compile_and_execute_end_to_end() {
+        let proto =
+            HloModuleProto::parse_and_return_unverified_module(RNG_N4.as_bytes()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        assert_eq!(comp.name(), "jit_prng_step");
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+
+        let mut input = Literal::create_from_shape(PrimitiveType::U64, &[4]);
+        input.copy_raw_from(&[1u64, 2, 3, 4]).unwrap();
+        let bufs = exe.execute::<Literal>(&[input]).unwrap();
+        let result = bufs[0][0].to_literal_sync().unwrap();
+        let parts = result.to_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        let mut out = [0u64; 4];
+        parts[0].copy_raw_to(&mut out).unwrap();
+        // prng_step == one xorshift(21, 35, 4) step.
+        assert_eq!(out[0], crate::kernels::xorshift(1));
+    }
+
+    #[test]
+    fn platform_is_cpuish() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().to_lowercase().contains("cpu"));
+        assert_eq!(c.device_count(), 1);
+    }
+
+    #[test]
+    fn bad_module_text_rejected() {
+        assert!(HloModuleProto::parse_and_return_unverified_module(b"__kernel void f()").is_err());
+    }
+}
