@@ -1,8 +1,13 @@
 //! Device-selection demo (paper §4.4): built-in and plug-in filters.
 //!
+//! The selector mechanism is shared by both API tiers: the same
+//! `FilterChain` that builds a v1 `Context` plugs into the v2
+//! `Session` builder unchanged.
+//!
 //! Run with: `cargo run --release --example device_filter`
 
-use cf4rs::ccl::{Context, Device, Filter, FilterChain};
+use cf4rs::ccl::v2::Session;
+use cf4rs::ccl::{Device, Filter, FilterChain};
 
 fn show(label: &str, devs: &[Device]) {
     println!("{label}:");
@@ -50,14 +55,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         &FilterChain::new().add(Filter::type_gpu()).add(Filter::index(1)).select(),
     );
 
-    // And a context can be built straight from a chain.
-    let ctx = Context::new_from_filters(
-        FilterChain::new().add(Filter::name_contains("7970")),
-    )?;
+    // And a whole v2 session — context, device, queue — can be built
+    // straight from a chain.
+    let sess = Session::builder()
+        .filter(FilterChain::new().add(Filter::name_contains("7970")))
+        .build()?;
     println!(
-        "context created on: {} ({} device(s))",
-        ctx.device(0)?.name()?,
-        ctx.num_devices()
+        "session created on: {} ({} queue(s))",
+        sess.device().name()?,
+        sess.num_queues()
     );
     Ok(())
 }

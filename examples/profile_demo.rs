@@ -1,11 +1,17 @@
-//! Profiler walk-through (paper §4.3): aggregates, per-event info,
-//! instants, overlaps, the Fig. 3 summary, and the Fig. 5 export.
+//! Profiler walk-through (paper §4.3) on the fluent `ccl::v2` tier:
+//! aggregates, per-event info, instants, overlaps, the Fig. 3 summary,
+//! and the Fig. 5 export.
+//!
+//! Note what is absent versus the v1 version of this demo: no explicit
+//! `&[prev]` wait-lists (the session chains the three steps and the
+//! cross-queue fetches from its per-buffer writer/reader tracking), no
+//! `Prof` object wiring (the session harvests its own queues).
 //!
 //! Run with: `cargo run --release --example profile_demo`
 
 use cf4rs::ccl::prof::{AggSort, OverlapSort, SortDir};
-use cf4rs::ccl::{Arg, Buffer, Context, Prof, Program, Queue};
-use cf4rs::rawcl::types::MemFlags;
+use cf4rs::ccl::v2::Session;
+use cf4rs::runtime::ArtifactKind;
 
 const N: usize = 65536;
 
@@ -14,55 +20,40 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // (see DESIGN.md §2 — interesting charts need model-dominated time).
     std::env::set_var("CF4RS_SIM_TIMESCALE", "0.02");
 
-    let ctx = Context::new_gpu()?;
-    let dev = ctx.device(0)?;
-    let q_compute = Queue::new_profiled(&ctx, dev)?;
-    let q_io = Queue::new_profiled(&ctx, dev)?;
+    // Queue 0 computes, queue 1 fetches; profiling on both.
+    let sess = Session::builder().gpu().queues(2).profiled().build()?;
+    sess.load_kinds(&[(ArtifactKind::Init, N), (ArtifactKind::Rng, N)])?;
 
-    let prg = Program::new_from_artifacts(&ctx, &["init_n65536", "rng_n65536"])?;
-    prg.build()?;
-    let kinit = prg.kernel("prng_init")?;
-    let krng = prg.kernel("prng_step")?;
+    let a = sess.buffer::<u64>(N)?;
+    let b = sess.buffer::<u64>(N)?;
 
-    let a = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8)?;
-    let b = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8)?;
+    // Seed.
+    sess.kernel("prng_init")?
+        .global(N)
+        .arg(&a)
+        .arg(N as u32)
+        .name("SEED")
+        .launch()?;
 
-    let mut prof = Prof::new();
-    prof.start();
-
-    // seed
-    let (gws, lws) = kinit.suggest_worksizes(dev, &[N])?;
-    let ev = kinit.set_args_and_enqueue_ndrange(
-        &q_compute, &gws, Some(&lws), &[],
-        &[Arg::buf(&a), Arg::priv_u32(N as u32)],
-    )?;
-    ev.set_name("SEED")?;
-
-    // Three compute steps; each read of the previous batch overlaps the
-    // next kernel because it runs on the other queue.
-    krng.set_arg(0, &Arg::priv_u32(N as u32))?;
+    // Three compute steps; each fetch of the previous batch overlaps
+    // the next kernel because it runs on the other queue — and every
+    // dependency (step k → step k+1, step k → fetch k) is implicit.
     let mut host = vec![0u8; N * 8];
-    let mut prev = ev;
     let (mut front, mut back) = (&a, &b);
     for _ in 0..3 {
-        let kev = krng.set_args_and_enqueue_ndrange(
-            &q_compute, &gws, Some(&lws), &[prev],
-            &[Arg::skip(), Arg::buf(front), Arg::buf(back)],
-        )?;
-        kev.set_name("STEP")?;
-        let rev = front.enqueue_read(&q_io, 0, &mut host, &[prev])?;
-        rev.set_name("FETCH")?;
-        prev = kev;
+        sess.kernel("prng_step")?
+            .global(N)
+            .arg(N as u32)
+            .arg(front)
+            .arg(back)
+            .name("STEP")
+            .launch()?;
+        front.read_into_on(1, &mut host)?.set_name("FETCH")?;
         std::mem::swap(&mut front, &mut back);
     }
-    q_compute.finish()?;
-    q_io.finish()?;
-    prof.stop();
 
-    // Analyse.
-    prof.add_queue("Compute", &q_compute);
-    prof.add_queue("IO", &q_io);
-    prof.calc()?;
+    // Analyse: one call finishes the queues and harvests everything.
+    let prof = sess.profile()?;
 
     // 1. Aggregates.
     println!("aggregate event times:");

@@ -1,55 +1,48 @@
-//! Quickstart: vector addition in ~30 lines of cf4rs.
+//! Quickstart: vector addition through the fluent `ccl::v2` tier.
 //!
-//! Pipeline: context → queue → program (AOT artifact) → kernel → buffers
-//! → launch → read. Compare with the raw-API flow in `rng_raw.rs`.
+//! One session, typed buffers, one validated launch expression — no
+//! context/queue/program ceremony, no byte casts, no wait-lists.
+//! Compare with the v1 wrapper flow in `rng_ccl.rs` and the raw-API
+//! flow in `rng_raw.rs`.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use cf4rs::ccl::{Arg, Buffer, Context, Program, Queue};
-use cf4rs::rawcl::MemFlags;
+use cf4rs::ccl::v2::Session;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     const N: usize = 1024;
 
-    // Context on the native CPU device (PJRT); use `new_gpu()` for the
-    // simulated GPUs.
-    let ctx = Context::new_cpu()?;
-    let dev = ctx.device(0)?;
-    eprintln!("device: {}", dev.name()?);
+    // Session on the native CPU device (PJRT); `.gpu()` selects the
+    // simulated GPUs. `.profiled()` enables event timestamps.
+    let sess = Session::builder().cpu().profiled().build()?;
+    eprintln!("device: {}", sess.device().name()?);
 
-    let queue = Queue::new_profiled(&ctx, dev)?;
+    // Programs are AOT-lowered HLO artifacts (see python/compile/aot.py),
+    // generated on the fly when not prebuilt.
+    sess.load(&["vecadd_n1024"])?;
 
-    // Programs are AOT-lowered HLO artifacts (see python/compile/aot.py).
-    let prg = Program::new_from_artifacts(&ctx, &["vecadd_n1024"])?;
-    prg.build()?;
-    let kernel = prg.kernel("vecadd")?;
+    // Typed input data + typed device buffers.
+    let x: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..N).map(|i| i as f32 * 10.0).collect();
+    let bx = sess.buffer_from(&x)?;
+    let by = sess.buffer_from(&y)?;
+    let bo = sess.buffer::<f32>(N)?;
 
-    // Input data.
-    let x: Vec<u8> = (0..N).flat_map(|i| (i as f32).to_le_bytes()).collect();
-    let y: Vec<u8> = (0..N).flat_map(|i| (i as f32 * 10.0).to_le_bytes()).collect();
-    let bx = Buffer::from_slice(&ctx, MemFlags::READ_ONLY, &x)?;
-    let by = Buffer::from_slice(&ctx, MemFlags::READ_ONLY, &y)?;
-    let bo = Buffer::new(&ctx, MemFlags::WRITE_ONLY, N * 4)?;
+    // Arity, buffer kinds, element types and sizes are all checked
+    // against the kernel spec before anything is enqueued; the typed
+    // Pending reads the output, ordered after the kernel implicitly.
+    let pending = sess
+        .kernel("vecadd")?
+        .global(N)
+        .arg(&bx)
+        .arg(&by)
+        .output(&bo)
+        .launch()?;
+    let out: Vec<f32> = pending.read()?;
 
-    // Work sizes adjusted to the device; set args + launch in one call.
-    let (gws, lws) = kernel.suggest_worksizes(dev, &[N])?;
-    let evt = kernel.set_args_and_enqueue_ndrange(
-        &queue,
-        &gws,
-        Some(&lws),
-        &[],
-        &[Arg::buf(&bx), Arg::buf(&by), Arg::buf(&bo)],
-    )?;
-    evt.set_name("VECADD")?;
-
-    // Blocking read.
-    let mut out = vec![0u8; N * 4];
-    bo.enqueue_read(&queue, 0, &mut out, &[])?;
-
-    let v = |i: usize| f32::from_le_bytes(out[i * 4..][..4].try_into().unwrap());
-    assert_eq!(v(7), 77.0);
-    assert_eq!(v(1023), 1023.0 * 11.0);
-    println!("vecadd OK: out[7] = {}, out[1023] = {}", v(7), v(1023));
-    println!("kernel took {} ns on-device", evt.duration()?);
+    assert_eq!(out[7], 77.0);
+    assert_eq!(out[1023], 1023.0 * 11.0);
+    println!("vecadd OK: out[7] = {}, out[1023] = {}", out[7], out[1023]);
+    println!("kernel took {} ns on-device", pending.duration()?);
     Ok(())
 }

@@ -1,4 +1,8 @@
-//! Massive PRNG example — cf4rs framework realisation (paper listing S2).
+//! Massive PRNG example — cf4rs v1-tier realisation (paper listing S2).
+//!
+//! Kept on the v1 wrappers on purpose: it is the middle column of the
+//! §6.1 LOC table (raw vs v1 vs v2 — see `rng_v2.rs` for the fluent
+//! realisation with the same bit-identical stream).
 //!
 //! Same behaviour as `rng_raw.rs`, ~40% less code, more features:
 //! automatic device selection, file-loading program constructor,

@@ -1,10 +1,11 @@
-//! Random-stream consumer: runs the PRNG service and feeds the stream to
-//! the built-in statistical screen (the paper pipes to Dieharder; see
-//! DESIGN.md for the substitution).
+//! Random-stream consumer: runs the PRNG service through the fluent
+//! `ccl::v2` tier and feeds the stream to the built-in statistical
+//! screen (the paper pipes to Dieharder; see DESIGN.md for the
+//! substitution).
 //!
 //! Run with: `cargo run --release --example rng_stream -- [numrn] [iters]`
 
-use cf4rs::coordinator::{run_ccl, stats, RngConfig, Sink};
+use cf4rs::coordinator::{run_v2, stats, RngConfig, Sink};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -16,7 +17,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.sink = Sink::Sample(numrn);
 
     eprintln!("generating {} random bytes ({numrn} u64 x {iters} iters)...", 8 * numrn * iters);
-    let out = run_ccl(&cfg).map_err(|e| e.to_string())?;
+    let out = run_v2(&cfg).map_err(|e| e.to_string())?;
     eprintln!(
         "done in {:.3}s ({:.1} MiB/s)",
         out.wall.as_secs_f64(),

@@ -6,10 +6,21 @@
 //! plays the role of `CCLErr`: it carries the originating status code,
 //! the domain, and a formatted message — and every fallible framework
 //! function returns `CclResult<T>`.
+//!
+//! Two refinements over the plain `CCLErr` model:
+//!
+//! * **source chaining** — errors that wrap a substrate failure keep the
+//!   originating [`StatusError`] and expose it through
+//!   [`std::error::Error::source`], so `anyhow`-style chains print the
+//!   symbolic OpenCL-like code at the bottom of the chain;
+//! * **object context** — the kernel or queue involved in the failing
+//!   operation can be attached with [`CclError::with_object`] and shows
+//!   up in `Display` output (e.g. `[rawcl] kernel "prng_step":
+//!   enqueueing kernel: CL_INVALID_KERNEL_ARGS (-52)`).
 
 use std::fmt;
 
-use crate::rawcl::error::{status_name, ClStatus};
+use crate::rawcl::error::{status_name, ClStatus, StatusError};
 
 /// Where an error originated (`GQuark` domains in cf4ocl).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,6 +51,11 @@ pub struct CclError {
     pub code: ClStatus,
     pub domain: ErrorDomain,
     pub message: String,
+    /// The kernel/queue (or other object) the failing operation
+    /// involved, when known; included in `Display` output.
+    pub object: Option<String>,
+    /// The wrapped substrate error, kept for `Error::source` chaining.
+    source: Option<StatusError>,
 }
 
 impl CclError {
@@ -50,17 +66,38 @@ impl CclError {
             code,
             domain: ErrorDomain::Rawcl,
             message: format!("{}: {} ({})", context, status_name(code), code),
+            object: None,
+            source: Some(StatusError(code)),
         }
     }
 
     /// A framework-level error with no substrate code.
     pub fn framework(message: impl Into<String>) -> Self {
-        Self { code: 0, domain: ErrorDomain::Ccl, message: message.into() }
+        Self {
+            code: 0,
+            domain: ErrorDomain::Ccl,
+            message: message.into(),
+            object: None,
+            source: None,
+        }
     }
 
     /// An artifact/build-path error.
     pub fn artifacts(message: impl Into<String>) -> Self {
-        Self { code: 0, domain: ErrorDomain::Artifacts, message: message.into() }
+        Self {
+            code: 0,
+            domain: ErrorDomain::Artifacts,
+            message: message.into(),
+            object: None,
+            source: None,
+        }
+    }
+
+    /// Attach the name of the object (kernel, queue, buffer, session)
+    /// the failing operation involved; shown in `Display` output.
+    pub fn with_object(mut self, name: impl Into<String>) -> Self {
+        self.object = Some(name.into());
+        self
     }
 
     /// The symbolic name of the substrate code (errors-module function).
@@ -71,11 +108,21 @@ impl CclError {
 
 impl fmt::Display for CclError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "[{}] {}", self.domain, self.message)
+        write!(f, "[{}] ", self.domain)?;
+        if let Some(obj) = &self.object {
+            write!(f, "{obj}: ")?;
+        }
+        f.write_str(&self.message)
     }
 }
 
-impl std::error::Error for CclError {}
+impl std::error::Error for CclError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_ref()
+            .map(|s| s as &(dyn std::error::Error + 'static))
+    }
+}
 
 /// Framework result type.
 pub type CclResult<T> = Result<T, CclError>;
@@ -118,5 +165,26 @@ mod tests {
         assert_eq!(e.code, 0);
         assert_eq!(e.domain, ErrorDomain::Ccl);
         assert_eq!(e.code_name(), "CL_SUCCESS");
+    }
+
+    #[test]
+    fn rawcl_errors_chain_a_source() {
+        use std::error::Error as _;
+        let e = CclError::from_status(CL_INVALID_KERNEL, "creating kernel");
+        let src = e.source().expect("substrate errors must chain a source");
+        assert_eq!(src.to_string(), "CL_INVALID_KERNEL (-48)");
+        assert!(src.downcast_ref::<StatusError>().is_some());
+        // framework-level errors have nothing to chain
+        assert!(CclError::framework("bad usage").source().is_none());
+    }
+
+    #[test]
+    fn display_includes_the_failing_object() {
+        let e = CclError::from_status(CL_INVALID_KERNEL_ARGS, "enqueueing kernel")
+            .with_object("kernel \"prng_step\"");
+        let s = e.to_string();
+        assert!(s.contains("kernel \"prng_step\""), "display: {s}");
+        assert!(s.contains("CL_INVALID_KERNEL_ARGS"), "display: {s}");
+        assert!(s.starts_with("[rawcl]"), "display: {s}");
     }
 }

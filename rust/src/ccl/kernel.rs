@@ -88,6 +88,14 @@ impl Kernel {
         self.h
     }
 
+    /// Error context: the kernel's name, for [`CclError::with_object`].
+    fn obj_name(&self) -> String {
+        match self.name() {
+            Ok(n) => format!("kernel {n:?}"),
+            Err(_) => "kernel <unknown>".into(),
+        }
+    }
+
     /// Kernel function name.
     pub fn name(&self) -> CclResult<String> {
         let mut s = String::new();
@@ -112,9 +120,18 @@ impl Kernel {
             rawcl::set_kernel_arg(self.h, index, &value),
             &format!("setting kernel arg {index}"),
         )
+        .map_err(|e| e.with_object(self.obj_name()))
     }
 
     /// Set several args at once, honouring [`Arg::Skip`].
+    ///
+    /// Every entry consumes its positional index whether or not it is a
+    /// skip: `&[skip, buf_a, buf_b]` sets indices 1 and 2 and leaves
+    /// index 0 at its previously-set value (`ccl_arg_skip` semantics).
+    /// Skipped positions must never shift later indices — a compacting
+    /// implementation would silently bind `buf_a` to slot 0.
+    /// (`set_arg` is a no-op for `Arg::Skip`, which is what preserves
+    /// the positional mapping here.)
     pub fn set_args(&self, args: &[Arg<'_>]) -> CclResult<()> {
         for (i, a) in args.iter().enumerate() {
             self.set_arg(i, a)?;
@@ -143,7 +160,8 @@ impl Kernel {
                 Some(&mut evt),
             ),
             "enqueueing kernel",
-        )?;
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
         Ok(queue.track_kernel_event(evt))
     }
 

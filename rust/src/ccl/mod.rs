@@ -17,6 +17,12 @@
 //!   ([`prof`]);
 //! * a versatile device-query table ([`devquery`]) and a platforms
 //!   module ([`platforms`]).
+//!
+//! These modules form the **v1 tier** — a faithful, stable mirror of
+//! the paper's API. The **v2 tier** ([`v2`]) layers a fluent, typed
+//! facade (session handle, generic `Buffer<T>`, validated launch
+//! builders, implicit event-dependency chaining) over the same
+//! wrappers; see [`v2`] for the tier split.
 
 pub mod buffer;
 pub mod context;
@@ -31,6 +37,7 @@ pub mod prof;
 pub mod program;
 pub mod queue;
 pub mod selector;
+pub mod v2;
 pub mod worksize;
 pub mod wrapper;
 

@@ -9,7 +9,7 @@
 use std::sync::Mutex;
 
 use crate::rawcl;
-use crate::rawcl::types::{DeviceId, EventH, QueueH, QueueProps};
+use crate::rawcl::types::{DeviceId, EventH, MemH, QueueH, QueueProps};
 
 use super::buffer::Buffer;
 use super::context::Context;
@@ -23,6 +23,9 @@ pub struct Queue {
     h: QueueH,
     device: Device,
     props: QueueProps,
+    /// Optional human-readable label ("Main", "Q1", ...), included in
+    /// error messages so a failing enqueue names its queue.
+    label: Mutex<Option<String>>,
     /// Every event generated through this wrapper (owned; released on
     /// drop). This is what makes "just add the queue to the profiler"
     /// possible.
@@ -40,6 +43,7 @@ impl Queue {
             h,
             device: dev,
             props,
+            label: Mutex::new(None),
             events: Mutex::new(Vec::new()),
             _live: LiveToken::new(),
         })
@@ -56,6 +60,28 @@ impl Queue {
 
     pub fn device(&self) -> Device {
         self.device
+    }
+
+    /// Attach a human-readable label; it names this queue in error
+    /// messages (and is the natural `Prof::add_queue` name).
+    pub fn set_label(&self, label: impl Into<String>) {
+        *self.label.lock().unwrap() = Some(label.into());
+    }
+
+    pub fn label(&self) -> Option<String> {
+        self.label.lock().unwrap().clone()
+    }
+
+    /// Error context: the queue's label, or its device name as a
+    /// fallback, for [`CclError::with_object`].
+    fn obj_name(&self) -> String {
+        if let Some(l) = self.label.lock().unwrap().as_ref() {
+            return format!("queue {l:?}");
+        }
+        match self.device.name() {
+            Ok(n) => format!("queue on {n:?}"),
+            Err(_) => "queue <unknown>".into(),
+        }
     }
 
     pub fn profiling_enabled(&self) -> bool {
@@ -90,11 +116,13 @@ impl Queue {
     /// `ccl_queue_finish`.
     pub fn finish(&self) -> CclResult<()> {
         check(rawcl::finish(self.h), "finishing queue")
+            .map_err(|e| e.with_object(self.obj_name()))
     }
 
     /// `ccl_queue_flush`.
     pub fn flush(&self) -> CclResult<()> {
         check(rawcl::flush(self.h), "flushing queue")
+            .map_err(|e| e.with_object(self.obj_name()))
     }
 
     /// Enqueue a marker that waits on `wait`.
@@ -108,7 +136,26 @@ impl Queue {
         Ok(self.track(evt))
     }
 
-    // -- buffer commands (called via the Buffer wrapper) ----------------
+    // -- buffer commands (called via the Buffer wrappers of both API
+    //    tiers; the `_h` forms take a raw handle so `ccl::v2` can issue
+    //    commands without borrowing a v1 `Buffer`) ----------------------
+
+    pub(crate) fn enqueue_read_buffer_h(
+        &self,
+        buf: MemH,
+        offset: usize,
+        dst: &mut [u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_read_buffer(self.h, buf, true, offset, dst, &hs, Some(&mut evt)),
+            "enqueueing buffer read",
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
+        Ok(self.track(evt))
+    }
 
     pub(crate) fn enqueue_read_buffer(
         &self,
@@ -117,20 +164,23 @@ impl Queue {
         dst: &mut [u8],
         wait: &[Event],
     ) -> CclResult<Event> {
+        self.enqueue_read_buffer_h(buf.handle(), offset, dst, wait)
+    }
+
+    pub(crate) fn enqueue_write_buffer_h(
+        &self,
+        buf: MemH,
+        offset: usize,
+        src: &[u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
         let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
         let mut evt = EventH::NULL;
         check(
-            rawcl::enqueue_read_buffer(
-                self.h,
-                buf.handle(),
-                true,
-                offset,
-                dst,
-                &hs,
-                Some(&mut evt),
-            ),
-            "enqueueing buffer read",
-        )?;
+            rawcl::enqueue_write_buffer(self.h, buf, true, offset, src, &hs, Some(&mut evt)),
+            "enqueueing buffer write",
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
         Ok(self.track(evt))
     }
 
@@ -141,21 +191,7 @@ impl Queue {
         src: &[u8],
         wait: &[Event],
     ) -> CclResult<Event> {
-        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
-        let mut evt = EventH::NULL;
-        check(
-            rawcl::enqueue_write_buffer(
-                self.h,
-                buf.handle(),
-                true,
-                offset,
-                src,
-                &hs,
-                Some(&mut evt),
-            ),
-            "enqueueing buffer write",
-        )?;
-        Ok(self.track(evt))
+        self.enqueue_write_buffer_h(buf.handle(), offset, src, wait)
     }
 
     pub(crate) fn enqueue_copy_buffer(
@@ -181,7 +217,8 @@ impl Queue {
                 Some(&mut evt),
             ),
             "enqueueing buffer copy",
-        )?;
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
         Ok(self.track(evt))
     }
 
@@ -206,7 +243,8 @@ impl Queue {
                 Some(&mut evt),
             ),
             "enqueueing buffer fill",
-        )?;
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
         Ok(self.track(evt))
     }
 

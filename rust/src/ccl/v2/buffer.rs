@@ -1,0 +1,104 @@
+//! Generic typed device buffer: `Buffer<T: Pod>`.
+//!
+//! Wraps the v1 byte-oriented [`buffer`](crate::ccl::Buffer) with an
+//! element type, so reads and writes move `&[T]`/`Vec<T>` instead of
+//! byte slices — no size arithmetic, no `to_le_bytes` casts — and every
+//! transfer participates in the session's implicit dependency chain.
+
+use std::marker::PhantomData;
+
+use crate::rawcl::types::MemH;
+
+use super::super::buffer::Buffer as RawBuffer;
+use super::super::errors::{CclError, CclResult};
+use super::super::event::Event;
+use super::pod::{decode, encode, Pod};
+use super::session::Session;
+
+/// A typed device buffer owned by a [`Session`].
+///
+/// Transfers default to queue 0 and to implicit ordering: a read waits
+/// for the buffer's last writer, a write waits for the last writer and
+/// all readers since. The `*_on` variants pick another session queue
+/// (e.g. a dedicated comms queue) with the same ordering guarantees.
+pub struct Buffer<'s, T: Pod> {
+    sess: &'s Session,
+    inner: RawBuffer,
+    len: usize,
+    _t: PhantomData<T>,
+}
+
+impl<'s, T: Pod> Buffer<'s, T> {
+    pub(crate) fn wrap(sess: &'s Session, inner: RawBuffer, len: usize) -> Self {
+        Self { sess, inner, len, _t: PhantomData }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Device allocation size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.len * T::ELEM.size_bytes()
+    }
+
+    /// The raw memory handle (escape hatch into the low tier).
+    pub fn handle(&self) -> MemH {
+        self.inner.handle()
+    }
+
+    /// Write a full buffer's worth of elements (blocking), ordered
+    /// after the buffer's current writer and readers.
+    pub fn write_slice(&self, data: &[T]) -> CclResult<Event> {
+        if data.len() != self.len {
+            return Err(CclError::framework(format!(
+                "write_slice length mismatch: buffer holds {} element(s), \
+                 slice has {}",
+                self.len,
+                data.len()
+            )));
+        }
+        self.sess.raw_write(self.handle(), 0, &encode(data), 0, &[], true)
+    }
+
+    /// Read the whole buffer (blocking) into a typed vector, ordered
+    /// after the buffer's last writer — no explicit wait-list needed.
+    pub fn read_vec(&self) -> CclResult<Vec<T>> {
+        self.read_vec_on(0)
+    }
+
+    /// [`read_vec`](Self::read_vec) on the i-th session queue.
+    pub fn read_vec_on(&self, qi: usize) -> CclResult<Vec<T>> {
+        let mut bytes = vec![0u8; self.size_bytes()];
+        self.sess.raw_read(self.handle(), 0, &mut bytes, qi, &[], true)?;
+        Ok(decode(&bytes))
+    }
+
+    /// Read the raw little-endian bytes into `dst` (blocking) on the
+    /// i-th session queue — the zero-copy path for streaming consumers
+    /// that forward bytes (the §5 PRNG service's comms thread).
+    pub fn read_into_on(&self, qi: usize, dst: &mut [u8]) -> CclResult<Event> {
+        if dst.len() != self.size_bytes() {
+            return Err(CclError::framework(format!(
+                "read_into_on size mismatch: buffer is {} byte(s), \
+                 destination {}",
+                self.size_bytes(),
+                dst.len()
+            )));
+        }
+        self.sess.raw_read(self.handle(), 0, dst, qi, &[], true)
+    }
+}
+
+impl<T: Pod> Drop for Buffer<'_, T> {
+    fn drop(&mut self) {
+        // The raw buffer releases itself; just retire the dependency
+        // state so a recycled handle can't inherit stale events.
+        self.sess.deps.lock().unwrap().forget(self.inner.handle());
+    }
+}

@@ -1,0 +1,108 @@
+//! Per-buffer dependency tracking: the machinery behind implicit event
+//! chaining.
+//!
+//! The [`super::Session`] records, for every device buffer it has seen,
+//! the event of the last command that *wrote* it and the events of the
+//! commands that have *read* it since. From those two facts the correct
+//! wait-list for any new command follows:
+//!
+//! * a **read** must wait for the last writer (true dependency);
+//! * a **write** must wait for the last writer *and* all readers since
+//!   (output + anti-dependency), after which the reader set resets.
+//!
+//! Ordering is derived from the enqueue order the session observes.
+//! Commands enqueued from different host threads still need host-side
+//! synchronisation to have a defined order (exactly as with explicit
+//! wait-lists); what the tracker removes is the *device-side* event
+//! bookkeeping.
+
+use std::collections::HashMap;
+
+use crate::rawcl::types::MemH;
+
+use super::super::event::Event;
+
+#[derive(Default)]
+struct BufState {
+    last_writer: Option<Event>,
+    readers: Vec<Event>,
+}
+
+/// The session-wide last-writer/reader table.
+#[derive(Default)]
+pub(crate) struct DepTracker {
+    states: HashMap<u64, BufState>,
+}
+
+impl DepTracker {
+    /// Events a command *reading* `h` must wait for.
+    pub fn read_deps(&self, h: MemH) -> Vec<Event> {
+        self.states
+            .get(&h.0)
+            .and_then(|s| s.last_writer)
+            .into_iter()
+            .collect()
+    }
+
+    /// Events a command *writing* `h` must wait for.
+    pub fn write_deps(&self, h: MemH) -> Vec<Event> {
+        let Some(s) = self.states.get(&h.0) else {
+            return Vec::new();
+        };
+        s.last_writer.into_iter().chain(s.readers.iter().copied()).collect()
+    }
+
+    /// Record that `ev` reads `h`.
+    pub fn note_read(&mut self, h: MemH, ev: Event) {
+        self.states.entry(h.0).or_default().readers.push(ev);
+    }
+
+    /// Record that `ev` (over)writes `h`: it becomes the last writer and
+    /// obsoletes the accumulated reader set.
+    pub fn note_write(&mut self, h: MemH, ev: Event) {
+        let st = self.states.entry(h.0).or_default();
+        st.last_writer = Some(ev);
+        st.readers.clear();
+    }
+
+    /// Drop all state for `h` (called when its buffer wrapper drops).
+    pub fn forget(&mut self, h: MemH) {
+        self.states.remove(&h.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rawcl::types::EventH;
+
+    fn ev(i: u64) -> Event {
+        Event::new(EventH(i))
+    }
+
+    #[test]
+    fn read_waits_on_writer_write_waits_on_both() {
+        let mut t = DepTracker::default();
+        let h = MemH(42);
+        assert!(t.read_deps(h).is_empty());
+        assert!(t.write_deps(h).is_empty());
+
+        t.note_write(h, ev(1));
+        assert_eq!(t.read_deps(h), vec![ev(1)]);
+
+        t.note_read(h, ev(2));
+        t.note_read(h, ev(3));
+        // readers don't gate other readers
+        assert_eq!(t.read_deps(h), vec![ev(1)]);
+        // but they do gate the next writer
+        assert_eq!(t.write_deps(h), vec![ev(1), ev(2), ev(3)]);
+
+        // a new write resets the reader set
+        t.note_write(h, ev(4));
+        assert_eq!(t.read_deps(h), vec![ev(4)]);
+        assert_eq!(t.write_deps(h), vec![ev(4)]);
+
+        t.forget(h);
+        assert!(t.write_deps(h).is_empty());
+    }
+}

@@ -1,0 +1,405 @@
+//! Fluent, type-checked kernel launches: [`Launch`] and [`Pending`].
+//!
+//! A launch is built in one expression —
+//!
+//! ```no_run
+//! # use cf4rs::ccl::v2::Session;
+//! # let sess = Session::builder().cpu().build().unwrap();
+//! # sess.load(&["vecadd_n1024"]).unwrap();
+//! # let (bx, by) = (sess.buffer::<f32>(1024).unwrap(), sess.buffer::<f32>(1024).unwrap());
+//! # let bo = sess.buffer::<f32>(1024).unwrap();
+//! let out = sess.kernel("vecadd").unwrap()
+//!     .global(1024)
+//!     .arg(&bx)
+//!     .arg(&by)
+//!     .output(&bo)
+//!     .launch().unwrap()
+//!     .read().unwrap();
+//! ```
+//!
+//! — and validated *before* anything is enqueued: the argument list is
+//! checked against the kernel's ABI spec for arity, buffer-vs-scalar
+//! kind, element type and byte size, so a mismatched call fails with
+//! one structured error naming the kernel and the offending position
+//! instead of a late `CL_INVALID_ARG_*` per slot.
+//!
+//! Unless [`Launch::independent`] is called, the wait-list is assembled
+//! implicitly from the session's per-buffer last-writer/reader tracking
+//! (see [`super::deps`]); [`Launch::after`] adds explicit dependencies
+//! on top.
+
+use std::marker::PhantomData;
+
+use crate::rawcl;
+use crate::rawcl::kernelspec::ArgRole;
+use crate::rawcl::types::MemH;
+use crate::runtime::literal::ElemType;
+
+use super::super::errors::{check, CclError, CclResult};
+use super::super::event::Event;
+use super::super::kernel::Kernel;
+use super::buffer::Buffer;
+use super::pod::Pod;
+use super::session::{dedup_events, Session};
+
+/// One collected launch argument. Implementation detail of [`IntoArg`];
+/// construct values through [`Launch::arg`] / [`Launch::output`] /
+/// [`Launch::skip_arg`].
+pub enum LArg {
+    /// A device buffer with its element type and byte size.
+    Buf { h: MemH, elem: ElemType, bytes: usize },
+    /// A private scalar with its element type.
+    Scalar { bytes: Vec<u8>, elem: ElemType },
+    /// Keep the previously-set value for this slot (`ccl_arg_skip`).
+    Skip,
+}
+
+/// Anything [`Launch::arg`] accepts: typed buffers and scalars.
+pub trait IntoArg {
+    fn into_arg(self) -> LArg;
+}
+
+impl IntoArg for u32 {
+    fn into_arg(self) -> LArg {
+        LArg::Scalar { bytes: self.to_le_bytes().to_vec(), elem: ElemType::U32 }
+    }
+}
+
+impl IntoArg for u64 {
+    fn into_arg(self) -> LArg {
+        LArg::Scalar { bytes: self.to_le_bytes().to_vec(), elem: ElemType::U64 }
+    }
+}
+
+impl IntoArg for f32 {
+    fn into_arg(self) -> LArg {
+        LArg::Scalar { bytes: self.to_le_bytes().to_vec(), elem: ElemType::F32 }
+    }
+}
+
+impl<'a, 'b, T: Pod> IntoArg for &'a Buffer<'b, T> {
+    fn into_arg(self) -> LArg {
+        LArg::Buf { h: self.handle(), elem: T::ELEM, bytes: self.size_bytes() }
+    }
+}
+
+/// A launch being built. `O` is the element type of the designated
+/// output buffer (set by [`output`](Self::output)); it types the
+/// [`Pending`] handle `launch()` returns.
+pub struct Launch<'s, O = ()> {
+    sess: &'s Session,
+    kernel: Kernel,
+    kname: String,
+    qi: usize,
+    gws: Option<Vec<usize>>,
+    lws: Option<Vec<usize>>,
+    args: Vec<LArg>,
+    extra_waits: Vec<Event>,
+    independent: bool,
+    ev_name: Option<String>,
+    out: Option<(MemH, usize)>,
+    _o: PhantomData<O>,
+}
+
+impl<'s> Launch<'s> {
+    pub(crate) fn new(sess: &'s Session, kernel: Kernel, kname: String) -> Self {
+        Self {
+            sess,
+            kernel,
+            kname,
+            qi: 0,
+            gws: None,
+            lws: None,
+            args: Vec::new(),
+            extra_waits: Vec::new(),
+            independent: false,
+            ev_name: None,
+            out: None,
+            _o: PhantomData,
+        }
+    }
+}
+
+impl<'s, O> Launch<'s, O> {
+    /// Real 1-D work size. When no [`local`](Self::local) is given, the
+    /// local size is suggested for the device and the global size
+    /// rounded up, as `ccl_kernel_suggest_worksizes` does.
+    pub fn global(mut self, n: usize) -> Self {
+        self.gws = Some(vec![n]);
+        self
+    }
+
+    /// Real N-D work size (1–3 dimensions).
+    pub fn global_nd(mut self, dims: &[usize]) -> Self {
+        self.gws = Some(dims.to_vec());
+        self
+    }
+
+    /// Explicit 1-D local work size (skips the suggestion step; the
+    /// global size is then used exactly as given).
+    pub fn local(mut self, n: usize) -> Self {
+        self.lws = Some(vec![n]);
+        self
+    }
+
+    /// Explicit N-D local work size.
+    pub fn local_nd(mut self, dims: &[usize]) -> Self {
+        self.lws = Some(dims.to_vec());
+        self
+    }
+
+    /// Append the next positional argument: a typed buffer or scalar.
+    pub fn arg(mut self, a: impl IntoArg) -> Self {
+        self.args.push(a.into_arg());
+        self
+    }
+
+    /// Keep the previously-set value for the next positional slot
+    /// (`ccl_arg_skip`): the slot still consumes its index. Skipped
+    /// buffer slots are excluded from implicit dependency tracking.
+    pub fn skip_arg(mut self) -> Self {
+        self.args.push(LArg::Skip);
+        self
+    }
+
+    /// Add an explicit dependency on top of the implicit ones.
+    pub fn after(mut self, ev: &Event) -> Self {
+        self.extra_waits.push(*ev);
+        self
+    }
+
+    /// Add an explicit dependency on a previous launch.
+    pub fn after_pending<T>(mut self, p: &Pending<'_, T>) -> Self {
+        self.extra_waits.push(p.event());
+        self
+    }
+
+    /// Opt out of implicit dependency chaining for this launch: only
+    /// [`after`](Self::after) dependencies are waited on. The launch is
+    /// still *recorded* as its output buffers' writer, so subsequent
+    /// commands order correctly.
+    pub fn independent(mut self) -> Self {
+        self.independent = true;
+        self
+    }
+
+    /// Enqueue on the i-th session queue (default 0).
+    pub fn queue(mut self, qi: usize) -> Self {
+        self.qi = qi;
+        self
+    }
+
+    /// Profiling name for the launch event (default: the kernel name).
+    pub fn name(mut self, n: &str) -> Self {
+        self.ev_name = Some(n.to_string());
+        self
+    }
+
+    /// Append the next positional argument — a buffer the kernel writes
+    /// — and designate it as *the* output: the returned [`Pending`] is
+    /// typed `Pending<T>` and can [`read`](Pending::read) it directly.
+    pub fn output<T: Pod>(self, b: &Buffer<'_, T>) -> Launch<'s, T> {
+        let mut args = self.args;
+        args.push(LArg::Buf { h: b.handle(), elem: T::ELEM, bytes: b.size_bytes() });
+        Launch {
+            sess: self.sess,
+            kernel: self.kernel,
+            kname: self.kname,
+            qi: self.qi,
+            gws: self.gws,
+            lws: self.lws,
+            args,
+            extra_waits: self.extra_waits,
+            independent: self.independent,
+            ev_name: self.ev_name,
+            out: Some((b.handle(), b.len())),
+            _o: PhantomData,
+        }
+    }
+
+    /// Validate the call against the kernel spec, assemble the
+    /// wait-list, set the arguments and enqueue — one statement, one
+    /// structured error path.
+    pub fn launch(self) -> CclResult<Pending<'s, O>> {
+        let kerr = |msg: String| {
+            CclError::framework(msg).with_object(format!("kernel {:?}", self.kname))
+        };
+
+        // -- arity/type check against the ABI spec, before any enqueue --
+        let mut roles = Vec::new();
+        check(
+            rawcl::get_kernel_arg_roles(self.kernel.handle(), &mut roles),
+            "querying kernel arg roles",
+        )?;
+        if self.args.len() != roles.len() {
+            return Err(kerr(format!(
+                "expects {} argument(s), got {}",
+                roles.len(),
+                self.args.len()
+            )));
+        }
+        for (i, (arg, role)) in self.args.iter().zip(&roles).enumerate() {
+            match (arg, role) {
+                (LArg::Skip, _) => {}
+                (
+                    LArg::Buf { elem, bytes, .. },
+                    ArgRole::BufferInput { dtype, bytes: want }
+                    | ArgRole::BufferOutput { dtype, bytes: want },
+                ) => {
+                    if elem != dtype {
+                        return Err(kerr(format!(
+                            "arg {i}: expects a {} buffer, got {}",
+                            dtype.name(),
+                            elem.name()
+                        )));
+                    }
+                    if bytes != want {
+                        return Err(kerr(format!(
+                            "arg {i}: expects a buffer of {want} byte(s), \
+                             got {bytes}"
+                        )));
+                    }
+                }
+                (LArg::Scalar { elem, .. }, ArgRole::ScalarInput { dtype }) => {
+                    if elem != dtype {
+                        return Err(kerr(format!(
+                            "arg {i}: expects a {} scalar, got {}",
+                            dtype.name(),
+                            elem.name()
+                        )));
+                    }
+                }
+                (LArg::Scalar { bytes, .. }, ArgRole::BakedScalar { bytes: want, .. }) => {
+                    if bytes.len() != *want {
+                        return Err(kerr(format!(
+                            "arg {i}: expects a {want}-byte scalar, got {} byte(s)",
+                            bytes.len()
+                        )));
+                    }
+                }
+                (LArg::Buf { .. }, ArgRole::ScalarInput { .. } | ArgRole::BakedScalar { .. }) => {
+                    return Err(kerr(format!(
+                        "arg {i}: expects a scalar, got a buffer"
+                    )));
+                }
+                (LArg::Scalar { .. }, ArgRole::BufferInput { .. } | ArgRole::BufferOutput { .. }) => {
+                    return Err(kerr(format!(
+                        "arg {i}: expects a buffer, got a scalar"
+                    )));
+                }
+            }
+        }
+
+        // -- work sizes: explicit local, or device-suggested ------------
+        let rws = self
+            .gws
+            .clone()
+            .ok_or_else(|| kerr("no global work size (call .global(n))".into()))?;
+        let (gws, lws) = match self.lws.clone() {
+            Some(l) => (rws, l),
+            None => self.kernel.suggest_worksizes(self.sess.device(), &rws)?,
+        };
+
+        // -- set arguments + enqueue, atomically per session ------------
+        // Kernel objects are cached per name, so the stateful positional
+        // argument set and the enqueue that snapshots it must not
+        // interleave with another thread's launch of the same kernel.
+        let _launch_guard = self.sess.launch_lock.lock().unwrap();
+        for (i, arg) in self.args.iter().enumerate() {
+            let value = match arg {
+                LArg::Buf { h, .. } => rawcl::ArgValue::Buffer(*h),
+                LArg::Scalar { bytes, .. } => rawcl::ArgValue::Scalar(bytes.clone()),
+                LArg::Skip => continue,
+            };
+            check(
+                rawcl::set_kernel_arg(self.kernel.handle(), i, &value),
+                &format!("setting kernel arg {i}"),
+            )
+            .map_err(|e| e.with_object(format!("kernel {:?}", self.kname)))?;
+        }
+
+        // -- implicit + explicit wait-list ------------------------------
+        let mut waits = self.extra_waits.clone();
+        if !self.independent {
+            let deps = self.sess.deps.lock().unwrap();
+            for (arg, role) in self.args.iter().zip(&roles) {
+                if let LArg::Buf { h, .. } = arg {
+                    match role {
+                        ArgRole::BufferInput { .. } => waits.extend(deps.read_deps(*h)),
+                        ArgRole::BufferOutput { .. } => waits.extend(deps.write_deps(*h)),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        dedup_events(&mut waits);
+
+        // -- enqueue + record -------------------------------------------
+        let queue = self.sess.queue(self.qi)?;
+        let event = self.kernel.enqueue_ndrange(queue, &gws, Some(&lws), &waits)?;
+        let _ = event.set_name(self.ev_name.as_deref().unwrap_or(&self.kname));
+        {
+            let mut deps = self.sess.deps.lock().unwrap();
+            for (arg, role) in self.args.iter().zip(&roles) {
+                if let LArg::Buf { h, .. } = arg {
+                    match role {
+                        ArgRole::BufferInput { .. } => deps.note_read(*h, event),
+                        ArgRole::BufferOutput { .. } => deps.note_write(*h, event),
+                        _ => {}
+                    }
+                }
+            }
+        }
+        Ok(Pending { sess: self.sess, event, out: self.out, _o: PhantomData })
+    }
+}
+
+/// Handle for a launched kernel: its event, plus — when the launch
+/// designated an [`output`](Launch::output) buffer — a typed `read()`.
+pub struct Pending<'s, O = ()> {
+    sess: &'s Session,
+    event: Event,
+    out: Option<(MemH, usize)>,
+    _o: PhantomData<O>,
+}
+
+impl<O> std::fmt::Debug for Pending<'_, O> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pending")
+            .field("event", &self.event)
+            .field("out", &self.out)
+            .finish()
+    }
+}
+
+impl<O> Pending<'_, O> {
+    /// The launch event, for explicit chaining ([`Launch::after`]) or
+    /// the v1 APIs.
+    pub fn event(&self) -> Event {
+        self.event
+    }
+
+    /// Block until the kernel completes.
+    pub fn wait(&self) -> CclResult<()> {
+        self.event.wait()
+    }
+
+    /// On-device duration in ns (profiled sessions, after completion).
+    pub fn duration(&self) -> CclResult<u64> {
+        self.event.duration()
+    }
+}
+
+impl<O: Pod> Pending<'_, O> {
+    /// Read the designated output buffer (blocking), ordered after this
+    /// launch — the terse end of the fluent chain:
+    /// `.output(&bo).launch()?.read()?`.
+    pub fn read(&self) -> CclResult<Vec<O>> {
+        let (h, len) = self.out.ok_or_else(|| {
+            CclError::framework("no output buffer: use .output(&buf) before .launch()")
+        })?;
+        let mut bytes = vec![0u8; len * O::ELEM.size_bytes()];
+        self.sess.raw_read(h, 0, &mut bytes, 0, &[self.event], true)?;
+        Ok(super::pod::decode(&bytes))
+    }
+}

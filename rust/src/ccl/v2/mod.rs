@@ -1,0 +1,57 @@
+//! # `ccl::v2` — the fluent, typed high tier of the framework
+//!
+//! The framework now has **two API tiers over one runtime**, in the
+//! spirit of EngineCL's tiered design and the typed-buffer/expression
+//! launches of the modern C++ OpenCL libraries:
+//!
+//! * the **v1 tier** (the rest of [`crate::ccl`]) mirrors cf4ocl's
+//!   class-per-OpenCL-object design: explicit [`Context`],
+//!   [`Queue`], [`Program`], byte-slice [buffers](crate::ccl::Buffer),
+//!   positional [`Arg`] lists and hand-threaded wait-lists. It is the stable
+//!   low tier — nothing in it changed semantics — and every v2 handle
+//!   has an escape hatch down to it ([`Session::context`],
+//!   [`Session::queue`], [`Buffer::handle`]).
+//! * the **v2 tier** (this module) is a facade over the same wrappers
+//!   that removes the per-call ceremony:
+//!
+//!   1. [`Session`] — one builder bundles device selection (reusing the
+//!      v1 [`FilterChain`] plug-in selectors), context, `n` labelled
+//!      queues, a program cache and the profiler:
+//!      `Session::builder().filter(chain).queues(2).profiled().build()?`.
+//!   2. [`Buffer<T>`](Buffer) — generic typed buffers whose
+//!      [`read_vec`](Buffer::read_vec)/[`write_slice`](Buffer::write_slice)
+//!      move `&[T]`/`Vec<T>`, eliminating byte casts and size
+//!      arithmetic.
+//!   3. [`Launch`] — a fluent launch builder,
+//!      `sess.kernel("prng_step")?.global(n).arg(&a).arg(&b).launch()?`,
+//!      validated against the kernel's ABI spec (arity, buffer/scalar
+//!      kind, element type, byte size) *before* anything is enqueued,
+//!      returning a typed [`Pending`] handle.
+//!   4. **implicit dependency chaining** — the session tracks each
+//!      buffer's last writer and readers, so sequential launches,
+//!      reads and writes are correctly ordered *across queues* with no
+//!      explicit wait-lists; [`Launch::after`] adds dependencies and
+//!      [`Launch::independent`] opts out.
+//!
+//! The `harness bench loc` table quantifies the result: the §6.1 PRNG
+//! example drops from 266 physical LOC (raw) to 147 (v1, −45%) to 81
+//! (v2, −70%), with a bit-identical output stream (see
+//! `coordinator::rng_service::run_v2` and the `v2_api` integration
+//! tests).
+//!
+//! [`Context`]: crate::ccl::Context
+//! [`Queue`]: crate::ccl::Queue
+//! [`Program`]: crate::ccl::Program
+//! [`Arg`]: crate::ccl::Arg
+//! [`FilterChain`]: crate::ccl::FilterChain
+
+mod buffer;
+mod deps;
+mod launch;
+mod pod;
+mod session;
+
+pub use buffer::Buffer;
+pub use launch::{IntoArg, LArg, Launch, Pending};
+pub use pod::Pod;
+pub use session::{Session, SessionBuilder};

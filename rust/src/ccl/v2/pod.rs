@@ -1,0 +1,99 @@
+//! Plain-old-data element types for [`super::Buffer`].
+//!
+//! The substrate stores device memory as little-endian bytes (like
+//! OpenCL buffers); [`Pod`] is the contract that lets the v2 tier
+//! expose those bytes as typed slices/vectors without the caller ever
+//! writing a `to_le_bytes`/`from_le_bytes` cast. Each implementation is
+//! pinned to the [`ElemType`] the kernel ABI layer
+//! ([`crate::rawcl::kernelspec`]) uses, so launches can type-check
+//! buffer and scalar arguments against the kernel spec.
+
+use crate::runtime::literal::ElemType;
+
+/// An element type that can live in a typed device buffer.
+///
+/// Implemented for the element types the kernel ABIs use: `u32`, `u64`
+/// and `f32`. The little-endian encoding matches what the substrate
+/// (and the v1 byte-slice API) stores, so v1 and v2 code can share
+/// buffers bit-for-bit.
+pub trait Pod: Copy + Send + Sync + 'static {
+    /// The ABI element type this Rust type maps to.
+    const ELEM: ElemType;
+
+    /// Append this value's little-endian bytes to `out`.
+    fn write_le(&self, out: &mut Vec<u8>);
+
+    /// Decode one value from exactly `ELEM.size_bytes()` bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl Pod for u32 {
+    const ELEM: ElemType = ElemType::U32;
+
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        u32::from_le_bytes(bytes.try_into().expect("u32 needs 4 bytes"))
+    }
+}
+
+impl Pod for u64 {
+    const ELEM: ElemType = ElemType::U64;
+
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        u64::from_le_bytes(bytes.try_into().expect("u64 needs 8 bytes"))
+    }
+}
+
+impl Pod for f32 {
+    const ELEM: ElemType = ElemType::F32;
+
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().expect("f32 needs 4 bytes"))
+    }
+}
+
+/// Encode a typed slice as little-endian bytes.
+pub(crate) fn encode<T: Pod>(data: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * T::ELEM.size_bytes());
+    for v in data {
+        v.write_le(&mut out);
+    }
+    out
+}
+
+/// Decode little-endian bytes as a typed vector (whole elements only).
+pub(crate) fn decode<T: Pod>(bytes: &[u8]) -> Vec<T> {
+    bytes.chunks_exact(T::ELEM.size_bytes()).map(T::read_le).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_elem_types() {
+        let u: Vec<u64> = vec![0, 1, u64::MAX, 0x0123_4567_89ab_cdef];
+        assert_eq!(decode::<u64>(&encode(&u)), u);
+        let v: Vec<u32> = vec![0, 7, u32::MAX];
+        assert_eq!(decode::<u32>(&encode(&v)), v);
+        let f: Vec<f32> = vec![0.0, -1.5, f32::MAX];
+        assert_eq!(decode::<f32>(&encode(&f)), f);
+    }
+
+    #[test]
+    fn encoding_is_little_endian_like_v1() {
+        // v1 code writes `x.to_le_bytes()`; v2 must match bit-for-bit.
+        assert_eq!(encode(&[0x1122_3344u32]), 0x1122_3344u32.to_le_bytes().to_vec());
+    }
+}

@@ -1,0 +1,390 @@
+//! The [`Session`] facade: context + device selection + queues +
+//! program cache + profiler in one handle.
+//!
+//! A session replaces the four-object setup dance of the v1 tier
+//! (context → device → queue → program) with one builder:
+//!
+//! ```no_run
+//! use cf4rs::ccl::v2::Session;
+//!
+//! let sess = Session::builder().gpu().profiled().build().unwrap();
+//! sess.load(&["init_n4096", "rng_n4096"]).unwrap();
+//! let buf = sess.buffer::<u64>(4096).unwrap();
+//! sess.kernel("prng_init").unwrap()
+//!     .global(4096)
+//!     .arg(&buf)
+//!     .arg(4096u32)
+//!     .launch()
+//!     .unwrap();
+//! let seeds = buf.read_vec().unwrap(); // ordered after the kernel
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::rawcl::error::CL_BUILD_PROGRAM_FAILURE;
+use crate::rawcl::types::{DeviceId, DeviceType, MemFlags, MemH, QueueProps};
+use crate::runtime::ArtifactKind;
+
+use super::super::context::Context;
+use super::super::device::Device;
+use super::super::errors::{CclError, CclResult};
+use super::super::event::Event;
+use super::super::prof::Prof;
+use super::super::program::Program;
+use super::super::queue::Queue;
+use super::super::selector::FilterChain;
+use super::buffer::Buffer;
+use super::deps::DepTracker;
+use super::launch::Launch;
+use super::pod::{encode, Pod};
+
+/// How the [`SessionBuilder`] picks devices.
+enum DevicePick {
+    /// Default: all GPUs of the first GPU-bearing platform.
+    Gpu,
+    /// All CPU devices.
+    Cpu,
+    /// An explicit device-type mask.
+    Type(DeviceType),
+    /// An explicit flat device index.
+    Index(DeviceId),
+    /// A selector filter chain (`same_platform` appended by `Context`).
+    Filters(FilterChain),
+}
+
+/// Builder for [`Session`] — the `ccl_*_new` calls of the v1 tier
+/// collapsed into one fluent statement.
+pub struct SessionBuilder {
+    pick: DevicePick,
+    num_queues: usize,
+    profiled: bool,
+}
+
+impl SessionBuilder {
+    /// Select all GPU devices of the first GPU-bearing platform
+    /// (the default).
+    pub fn gpu(mut self) -> Self {
+        self.pick = DevicePick::Gpu;
+        self
+    }
+
+    /// Select all CPU devices.
+    pub fn cpu(mut self) -> Self {
+        self.pick = DevicePick::Cpu;
+        self
+    }
+
+    /// Select devices by type mask.
+    pub fn device_type(mut self, t: DeviceType) -> Self {
+        self.pick = DevicePick::Type(t);
+        self
+    }
+
+    /// Select one device by flat index (0 = native CPU, 1/2 = the
+    /// simulated GPUs).
+    pub fn device_index(mut self, i: u32) -> Self {
+        self.pick = DevicePick::Index(DeviceId(i));
+        self
+    }
+
+    /// Select devices through a [`FilterChain`] — the full plug-in
+    /// selector mechanism of the v1 tier, reused as-is.
+    pub fn filter(mut self, chain: FilterChain) -> Self {
+        self.pick = DevicePick::Filters(chain);
+        self
+    }
+
+    /// Create `n` command queues (labelled `"Q0"`, `"Q1"`, ...) on the
+    /// session device. Default is 1; the double-buffered streaming
+    /// pattern wants 2 (compute + comms).
+    pub fn queues(mut self, n: usize) -> Self {
+        self.num_queues = n.max(1);
+        self
+    }
+
+    /// Enable event profiling on every queue and start the session's
+    /// wall-clock profiling window; harvest with [`Session::profile`].
+    pub fn profiled(mut self) -> Self {
+        self.profiled = true;
+        self
+    }
+
+    /// Create the context, pick the device, and create the queues.
+    pub fn build(self) -> CclResult<Session> {
+        let ctx = match self.pick {
+            DevicePick::Gpu => Context::new_gpu()?,
+            DevicePick::Cpu => Context::new_cpu()?,
+            DevicePick::Type(t) => Context::new_from_type(t)?,
+            DevicePick::Index(id) => {
+                Context::new_from_devices(&[Device::from_id(id)?])?
+            }
+            DevicePick::Filters(chain) => Context::new_from_filters(chain)?,
+        };
+        let dev = ctx.device(0)?;
+        let props = if self.profiled {
+            QueueProps::PROFILING_ENABLE
+        } else {
+            QueueProps::empty()
+        };
+        let mut queues = Vec::with_capacity(self.num_queues);
+        for i in 0..self.num_queues {
+            let q = Queue::new(&ctx, dev, props)?;
+            q.set_label(format!("Q{i}"));
+            queues.push(q);
+        }
+        let prof = if self.profiled {
+            let mut p = Prof::new();
+            p.start();
+            Some(p)
+        } else {
+            None
+        };
+        Ok(Session {
+            ctx,
+            dev,
+            queues,
+            programs: Mutex::new(Vec::new()),
+            kernel_index: Mutex::new(HashMap::new()),
+            deps: Mutex::new(DepTracker::default()),
+            launch_lock: Mutex::new(()),
+            prof: Mutex::new(prof),
+        })
+    }
+}
+
+/// The v2 facade handle — see [`crate::ccl::v2`] for the tier split.
+///
+/// A `Session` owns one context, one device, `n` queues, the programs
+/// loaded into it, and the per-buffer dependency tracker that gives the
+/// tier its implicit event chaining. It is `Sync`: the double-buffered
+/// streaming services share one session across scoped threads.
+pub struct Session {
+    ctx: Context,
+    dev: Device,
+    queues: Vec<Queue>,
+    programs: Mutex<Vec<Program>>,
+    /// kernel name → index into `programs`.
+    kernel_index: Mutex<HashMap<String, usize>>,
+    pub(crate) deps: Mutex<DepTracker>,
+    /// Serialises the set-args + enqueue window of every launch:
+    /// kernel objects are cached per name, so without this two threads
+    /// launching the same kernel could interleave their argument sets
+    /// (the stateful-positional-args hazard of the v1/OpenCL model).
+    pub(crate) launch_lock: Mutex<()>,
+    prof: Mutex<Option<Prof>>,
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder {
+            pick: DevicePick::Gpu,
+            num_queues: 1,
+            profiled: false,
+        }
+    }
+
+    /// The underlying v1 context (escape hatch into the low tier).
+    pub fn context(&self) -> &Context {
+        &self.ctx
+    }
+
+    /// The session device (index 0 of the context).
+    pub fn device(&self) -> Device {
+        self.dev
+    }
+
+    pub fn num_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// The i-th command queue (escape hatch into the low tier).
+    pub fn queue(&self, i: usize) -> CclResult<&Queue> {
+        self.queues.get(i).ok_or_else(|| {
+            CclError::framework(format!(
+                "queue index {i} out of range (session has {})",
+                self.queues.len()
+            ))
+        })
+    }
+
+    /// Load + build named artifacts (HLO modules); their kernels become
+    /// available through [`kernel`](Self::kernel). Names outside the
+    /// AOT manifest are generated on the fly, as in the v1 tier.
+    pub fn load(&self, names: &[&str]) -> CclResult<&Self> {
+        let prg = Program::new_from_artifacts(&self.ctx, names)?;
+        self.register_program(prg)?;
+        Ok(self)
+    }
+
+    /// Load + build programs by artifact kind and problem size.
+    pub fn load_kinds(&self, kinds: &[(ArtifactKind, usize)]) -> CclResult<&Self> {
+        let prg = Program::new_from_kinds(&self.ctx, kinds)?;
+        self.register_program(prg)?;
+        Ok(self)
+    }
+
+    /// Build `prg` (folding the build log into the error on failure, so
+    /// callers don't need the v1 build-log dance) and index its kernels.
+    fn register_program(&self, prg: Program) -> CclResult<()> {
+        if let Err(e) = prg.build() {
+            if e.code == CL_BUILD_PROGRAM_FAILURE {
+                let log = prg.build_log().unwrap_or_default();
+                return Err(CclError::from_status(
+                    e.code,
+                    format!("building program; build log:\n{log}"),
+                ));
+            }
+            return Err(e);
+        }
+        let names = prg.kernel_names()?;
+        let mut programs = self.programs.lock().unwrap();
+        let idx = programs.len();
+        programs.push(prg);
+        drop(programs);
+        let mut index = self.kernel_index.lock().unwrap();
+        for n in names {
+            index.insert(n, idx);
+        }
+        Ok(())
+    }
+
+    /// Kernels currently loaded, sorted by name.
+    pub fn kernel_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.kernel_index.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Start a fluent launch of the named kernel:
+    /// `sess.kernel("prng_step")?.global(n).arg(&a).arg(&b).launch()?`.
+    pub fn kernel(&self, name: &str) -> CclResult<Launch<'_>> {
+        // NB: release the index lock before building the error message —
+        // kernel_names() takes the same lock.
+        let idx = self.kernel_index.lock().unwrap().get(name).copied();
+        let Some(idx) = idx else {
+            return Err(CclError::framework(format!(
+                "kernel {:?} is not loaded (loaded: {:?}); call \
+                 Session::load / load_kinds first",
+                name,
+                self.kernel_names(),
+            )));
+        };
+        let programs = self.programs.lock().unwrap();
+        let kernel = programs[idx].kernel(name)?;
+        drop(programs);
+        Ok(Launch::new(self, kernel, name.to_string()))
+    }
+
+    /// Allocate an uninitialised typed device buffer of `len` elements.
+    pub fn buffer<T: Pod>(&self, len: usize) -> CclResult<Buffer<'_, T>> {
+        let inner = super::super::buffer::Buffer::new(
+            &self.ctx,
+            MemFlags::READ_WRITE,
+            len * T::ELEM.size_bytes(),
+        )?;
+        Ok(Buffer::wrap(self, inner, len))
+    }
+
+    /// Allocate + initialise a typed device buffer from host data.
+    pub fn buffer_from<T: Pod>(&self, data: &[T]) -> CclResult<Buffer<'_, T>> {
+        let inner = super::super::buffer::Buffer::from_slice(
+            &self.ctx,
+            MemFlags::READ_WRITE,
+            &encode(data),
+        )?;
+        Ok(Buffer::wrap(self, inner, data.len()))
+    }
+
+    /// Finish every queue.
+    pub fn finish(&self) -> CclResult<()> {
+        for q in &self.queues {
+            q.finish()?;
+        }
+        Ok(())
+    }
+
+    /// Harvest the profile: finish all queues, close the wall-clock
+    /// window, collect every queue's events and run the analysis.
+    ///
+    /// One-shot (the profiler's `calc` is one-shot): a second call — or
+    /// any call on a session built without
+    /// [`profiled`](SessionBuilder::profiled) — is an error.
+    pub fn profile(&self) -> CclResult<Prof> {
+        self.finish()?;
+        let mut slot = self.prof.lock().unwrap();
+        let mut prof = slot.take().ok_or_else(|| {
+            CclError::framework(
+                "no profile to harvest: build the session with .profiled() \
+                 (and call profile() at most once)",
+            )
+        })?;
+        drop(slot);
+        prof.stop();
+        for (i, q) in self.queues.iter().enumerate() {
+            prof.add_queue(q.label().unwrap_or_else(|| format!("Q{i}")), q);
+        }
+        prof.calc()?;
+        Ok(prof)
+    }
+
+    // ---- internal command paths shared by Buffer/Launch/Pending -------
+
+    /// Enqueue a (blocking) read of `dst.len()` bytes from `h` on queue
+    /// `qi`, waiting on `extra` plus — unless `implicit` is off — the
+    /// buffer's last writer. The read is recorded for anti-dependency
+    /// tracking either way.
+    pub(crate) fn raw_read(
+        &self,
+        h: MemH,
+        offset: usize,
+        dst: &mut [u8],
+        qi: usize,
+        extra: &[Event],
+        implicit: bool,
+    ) -> CclResult<Event> {
+        let q = self.queue(qi)?;
+        let mut waits: Vec<Event> = extra.to_vec();
+        if implicit {
+            waits.extend(self.deps.lock().unwrap().read_deps(h));
+        }
+        dedup_events(&mut waits);
+        let ev = q.enqueue_read_buffer_h(h, offset, dst, &waits)?;
+        let _ = ev.set_name("READ_BUFFER");
+        self.deps.lock().unwrap().note_read(h, ev);
+        Ok(ev)
+    }
+
+    /// Enqueue a (blocking) write of `src` into `h` on queue `qi`,
+    /// waiting on `extra` plus — unless `implicit` is off — the
+    /// buffer's last writer and readers. The write becomes the buffer's
+    /// last writer either way.
+    pub(crate) fn raw_write(
+        &self,
+        h: MemH,
+        offset: usize,
+        src: &[u8],
+        qi: usize,
+        extra: &[Event],
+        implicit: bool,
+    ) -> CclResult<Event> {
+        let q = self.queue(qi)?;
+        let mut waits: Vec<Event> = extra.to_vec();
+        if implicit {
+            waits.extend(self.deps.lock().unwrap().write_deps(h));
+        }
+        dedup_events(&mut waits);
+        let ev = q.enqueue_write_buffer_h(h, offset, src, &waits)?;
+        let _ = ev.set_name("WRITE_BUFFER");
+        self.deps.lock().unwrap().note_write(h, ev);
+        Ok(ev)
+    }
+}
+
+/// Drop duplicate events (same handle) from a wait list, keeping order.
+pub(crate) fn dedup_events(evs: &mut Vec<Event>) {
+    let mut seen = std::collections::HashSet::new();
+    evs.retain(|e| seen.insert(e.handle()));
+}

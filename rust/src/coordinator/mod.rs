@@ -20,6 +20,6 @@ pub mod sem;
 pub mod stats;
 
 pub use pipeline::{run_double_buffered, PipelineError};
-pub use rng_service::{run_ccl, run_raw, RngConfig, RunOutcome, Sink};
+pub use rng_service::{run_ccl, run_raw, run_v2, RngConfig, RunOutcome, Sink};
 pub use scheduler::{run_sharded, run_sharded_on, ShardedOutcome, ShardedRngConfig};
 pub use sem::Semaphore;

@@ -5,13 +5,20 @@
 //! synchronisation — exactly the structure of Fig. 2. Both realisations
 //! are provided:
 //!
-//! * [`run_ccl`] — built on the `ccl` framework (listing S2's logic);
+//! * [`run_ccl`] — built on the `ccl` v1 framework (listing S2's
+//!   logic);
 //! * [`run_raw`] — built directly on the `rawcl` substrate (listing
-//!   S1's logic, with manual event bookkeeping).
+//!   S1's logic, with manual event bookkeeping);
+//! * [`run_v2`] — built on the `ccl::v2` fluent tier: the session
+//!   facade replaces the context/queue/program setup, typed buffers
+//!   replace the byte slices, and implicit dependency chaining replaces
+//!   the per-iteration `finish()` barrier — with a bit-identical
+//!   output stream.
 //!
-//! The §6.2 overhead harness runs both over the paper's parameter sweep;
-//! the standalone `examples/rng_{ccl,raw}.rs` programs mirror the same
-//! logic as self-contained sources for the §6.1 LOC comparison.
+//! The §6.2 overhead harness runs the first two over the paper's
+//! parameter sweep; the standalone `examples/rng_{raw,ccl,v2}.rs`
+//! programs mirror the same logic as self-contained sources for the
+//! §6.1 LOC comparison.
 
 use std::io::Write;
 use std::sync::Mutex;
@@ -158,13 +165,17 @@ pub fn run_ccl(cfg: &RngConfig) -> ccl::CclResult<RunOutcome> {
                 for _ in 0..iters {
                     sem_rng.wait();
                     let r = front.enqueue_read(cq, 0, &mut host, &[]);
-                    sem_comm.post();
+                    // Publish a failure BEFORE waking the producer, so
+                    // it cannot observe the post, miss the error, and
+                    // block forever on the next wait.
                     match r {
                         Ok(ev) => {
+                            sem_comm.post();
                             let _ = ev.set_name("READ_BUFFER");
                         }
                         Err(e) => {
                             *comms_err.lock().unwrap() = Some(e);
+                            sem_comm.post();
                             return;
                         }
                     }
@@ -210,6 +221,120 @@ pub fn run_ccl(cfg: &RngConfig) -> ccl::CclResult<RunOutcome> {
         prof.add_queue("Main", &cq_main);
         prof.add_queue("Comms", &cq_comms);
         prof.calc()?;
+        (Some(prof.summary_default()), Some(prof.export_string()?))
+    } else {
+        (None, None)
+    };
+
+    Ok(RunOutcome {
+        wall,
+        total_bytes: (8 * n * cfg.iters) as u64,
+        prof_summary,
+        prof_export,
+        raw_prof: None,
+        sample,
+    })
+}
+
+/// The `ccl::v2` fluent-tier realisation: same two-thread,
+/// double-buffered pipeline as [`run_ccl`], same bit-identical stream,
+/// but the session facade owns the setup and the per-buffer dependency
+/// tracker orders kernels and cross-queue reads — no per-iteration
+/// `finish()`, no explicit wait-lists, no byte-slice casts.
+pub fn run_v2(cfg: &RngConfig) -> ccl::CclResult<RunOutcome> {
+    use crate::ccl::v2::Session;
+
+    let n = cfg.numrn;
+    let mut builder = Session::builder().device_index(cfg.device_index).queues(2);
+    if cfg.profile {
+        builder = builder.profiled();
+    }
+    let sess = builder.build()?;
+    sess.load_kinds(&[(ArtifactKind::Init, n), (ArtifactKind::Rng, n)])?;
+
+    let bufdev1 = sess.buffer::<u64>(n)?;
+    let bufdev2 = sess.buffer::<u64>(n)?;
+
+    let sem_rng = Semaphore::new(1);
+    let sem_comm = Semaphore::new(1);
+    let mut sample = Vec::new();
+    let comms_err: Mutex<Option<ccl::CclError>> = Mutex::new(None);
+
+    let t0 = Instant::now();
+
+    // Seed batch: the launch is recorded as bufdev1's writer, so the
+    // comms thread's first read is ordered after it automatically.
+    sess.kernel("prng_init")?
+        .global(n)
+        .arg(&bufdev1)
+        .arg(n as u32)
+        .name("INIT_KERNEL")
+        .launch()?;
+
+    std::thread::scope(|scope| -> ccl::CclResult<()> {
+        // Comms thread: read each batch on queue 1 and push it to the
+        // sink. The implicit last-writer dependency replaces both the
+        // explicit wait-list and the producer's finish() barrier.
+        let comms = {
+            let (b1, b2) = (&bufdev1, &bufdev2);
+            let (sem_rng, sem_comm) = (&sem_rng, &sem_comm);
+            let sink = &cfg.sink;
+            let (sample, comms_err) = (&mut sample, &comms_err);
+            let iters = cfg.iters;
+            scope.spawn(move || {
+                let mut host = vec![0u8; n * 8];
+                let (mut front, mut back) = (b1, b2);
+                for _ in 0..iters {
+                    sem_rng.wait();
+                    let r = front.read_into_on(1, &mut host);
+                    // Publish a failure BEFORE waking the producer, so
+                    // it cannot observe the post, miss the error, and
+                    // block forever on the next wait.
+                    if let Err(e) = r {
+                        *comms_err.lock().unwrap() = Some(e);
+                        sem_comm.post();
+                        return;
+                    }
+                    sem_comm.post();
+                    sink_consume(sink, sample, &host);
+                    std::mem::swap(&mut front, &mut back);
+                }
+            })
+        };
+
+        // Main thread: produce the next batches. Each launch reads the
+        // front buffer (waiting on its writer implicitly) and claims
+        // the back buffer as its output.
+        let (mut front, mut back) = (&bufdev1, &bufdev2);
+        for _ in 0..cfg.iters.saturating_sub(1) {
+            sem_comm.wait();
+            if let Some(e) = comms_err.lock().unwrap().take() {
+                return Err(e);
+            }
+            sess.kernel("prng_step")?
+                .global(n)
+                .arg(n as u32)
+                .arg(front)
+                .arg(back)
+                .name("RNG_KERNEL")
+                .launch()?;
+            sem_rng.post();
+            std::mem::swap(&mut front, &mut back);
+        }
+        comms
+            .join()
+            .map_err(|_| ccl::CclError::framework("comms thread panicked"))?;
+        Ok(())
+    })?;
+    if let Some(e) = comms_err.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    sess.finish()?;
+    let wall = t0.elapsed();
+
+    let (prof_summary, prof_export) = if cfg.profile {
+        let prof = sess.profile()?;
         (Some(prof.summary_default()), Some(prof.export_string()?))
     } else {
         (None, None)

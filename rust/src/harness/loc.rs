@@ -1,5 +1,7 @@
-//! §6.1 code-complexity comparison: physical LOC of the two example
-//! realisations (the paper's 290-vs-183 table).
+//! §6.1 code-complexity comparison: physical LOC of the three example
+//! realisations — raw substrate, cf4rs v1 wrappers, cf4rs v2 fluent
+//! tier (extending the paper's 290-vs-183 two-column table with the
+//! API-redesign column).
 //!
 //! Physical LOC = lines that are neither blank nor comment-only,
 //! counting both `//` and `/* ... */` comment styles (the examples use
@@ -57,47 +59,86 @@ pub struct LocRow {
     pub loc: usize,
 }
 
-/// Count the two example sources and derive the reduction.
+/// Count one source file.
+fn read_row(p: &Path, label: &str) -> std::io::Result<LocRow> {
+    let text = std::fs::read_to_string(p)?;
+    Ok(LocRow {
+        label: label.to_string(),
+        path: p.display().to_string(),
+        loc: physical_loc(&text),
+    })
+}
+
+/// Count the raw and v1 example sources and derive the reduction
+/// (the paper's original two-column comparison).
 pub fn compare(
     raw_path: impl AsRef<Path>,
     ccl_path: impl AsRef<Path>,
 ) -> std::io::Result<(LocRow, LocRow, f64)> {
-    let read = |p: &Path, label: &str| -> std::io::Result<LocRow> {
-        let text = std::fs::read_to_string(p)?;
-        Ok(LocRow {
-            label: label.to_string(),
-            path: p.display().to_string(),
-            loc: physical_loc(&text),
-        })
-    };
-    let raw = read(raw_path.as_ref(), "pure rawcl (listing S1 analogue)")?;
-    let ccl = read(ccl_path.as_ref(), "cf4rs (listing S2 analogue)")?;
+    let raw = read_row(raw_path.as_ref(), "pure rawcl (listing S1 analogue)")?;
+    let ccl = read_row(ccl_path.as_ref(), "cf4rs v1 (listing S2 analogue)")?;
     let reduction = 1.0 - ccl.loc as f64 / raw.loc as f64;
     Ok((raw, ccl, reduction))
 }
 
-/// Render the §6.1 table.
-pub fn report() -> String {
-    let candidates = [
-        ("examples/rng_raw.rs", "examples/rng_ccl.rs"),
-        ("../examples/rng_raw.rs", "../examples/rng_ccl.rs"),
-    ];
-    for (raw, ccl) in candidates {
-        if Path::new(raw).exists() {
-            return match compare(raw, ccl) {
-                Ok((r, c, red)) => format!(
-                    "## E1 — §6.1 code-complexity comparison (physical LOC)\n\
-                     | implementation | file | LOC |\n|---|---|---|\n\
-                     | {} | {} | {} |\n| {} | {} | {} |\n\n\
-                     cf4rs version is {:.0}% smaller \
-                     (paper: 290 vs 183 LOC, 37% smaller)\n",
-                    r.label, r.path, r.loc, c.label, c.path, c.loc, red * 100.0
-                ),
-                Err(e) => format!("loc: {e}\n"),
-            };
-        }
+/// The three RNG-example realisations as `(label, file)` pairs,
+/// resolved relative to `dir` ("" = repo root).
+fn tiers(dir: &str) -> [(String, std::path::PathBuf); 3] {
+    let base = Path::new(dir);
+    [
+        (
+            "pure rawcl (listing S1 analogue)".to_string(),
+            base.join("examples/rng_raw.rs"),
+        ),
+        (
+            "cf4rs v1 (listing S2 analogue)".to_string(),
+            base.join("examples/rng_ccl.rs"),
+        ),
+        (
+            "cf4rs v2 (fluent tier)".to_string(),
+            base.join("examples/rng_v2.rs"),
+        ),
+    ]
+}
+
+/// Count all three tiers; rows ordered raw, v1, v2.
+pub fn compare_tiers(dir: &str) -> std::io::Result<Vec<LocRow>> {
+    tiers(dir)
+        .iter()
+        .map(|(label, path)| read_row(path, label))
+        .collect()
+}
+
+/// Render the §6.1 table, now with the v2 column: each wrapper tier's
+/// LOC and its reduction versus the raw path. `Err` when any example
+/// source cannot be counted — the harness must fail the regeneration,
+/// not emit a reportless file.
+pub fn report() -> Result<String, String> {
+    let dir = ["", ".."]
+        .into_iter()
+        .find(|d| tiers(d)[0].1.exists())
+        .ok_or_else(|| "example sources not found (run from the repo root)".to_string())?;
+    let rows = compare_tiers(dir).map_err(|e| e.to_string())?;
+    let raw_loc = rows[0].loc as f64;
+    let mut out = String::from(
+        "## E1 — §6.1 code-complexity comparison (physical LOC)\n\
+         | implementation | file | LOC | vs raw |\n|---|---|---|---|\n",
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let delta = if i == 0 {
+            "—".to_string()
+        } else {
+            format!("-{:.0}%", (1.0 - r.loc as f64 / raw_loc) * 100.0)
+        };
+        out.push_str(&format!("| {} | {} | {} | {} |\n", r.label, r.path, r.loc, delta));
     }
-    "loc: example sources not found (run from the repo root)\n".into()
+    out.push_str(&format!(
+        "\nv1 is {:.0}% smaller than raw (paper: 290 vs 183 LOC, 37% \
+         smaller); the v2 fluent tier is {:.0}% smaller than raw\n",
+        (1.0 - rows[1].loc as f64 / raw_loc) * 100.0,
+        (1.0 - rows[2].loc as f64 / raw_loc) * 100.0,
+    ));
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -123,14 +164,24 @@ mod tests {
         assert_eq!(physical_loc("\n\n// only comments\n/* x */\n"), 0);
     }
 
+    /// Find the directory holding `examples/` (tests run from `rust/`).
+    fn examples_dir() -> Option<&'static str> {
+        ["", ".."].into_iter().find(|d| {
+            std::path::Path::new(d).join("examples/rng_raw.rs").exists()
+        })
+    }
+
     #[test]
     fn examples_reproduce_the_papers_direction() {
-        // The cf4rs example must be meaningfully smaller than the raw
-        // one — the paper reports 37%; we accept ≥ 20%.
-        let Ok((raw, ccl, red)) = compare("examples/rng_raw.rs", "examples/rng_ccl.rs")
-        else {
-            return; // not running from repo root
-        };
+        // The cf4rs v1 example must be meaningfully smaller than the
+        // raw one — the paper reports 37%; we accept ≥ 20%.
+        let Some(dir) = examples_dir() else { return };
+        let base = std::path::Path::new(dir);
+        let (raw, ccl, red) = compare(
+            base.join("examples/rng_raw.rs"),
+            base.join("examples/rng_ccl.rs"),
+        )
+        .unwrap();
         assert!(
             raw.loc > ccl.loc,
             "raw {} LOC must exceed ccl {} LOC",
@@ -138,5 +189,34 @@ mod tests {
             ccl.loc
         );
         assert!(red >= 0.20, "reduction only {:.1}% (paper: 37%)", red * 100.0);
+    }
+
+    #[test]
+    fn v2_tier_cuts_at_least_30_percent_vs_raw() {
+        // The api_redesign acceptance bar: the fluent tier must shave
+        // ≥ 30% of host LOC off the raw path on the RNG example (it
+        // should comfortably beat the v1 tier too).
+        let Some(dir) = examples_dir() else { return };
+        let rows = compare_tiers(dir).unwrap();
+        let (raw, v1, v2) = (rows[0].loc, rows[1].loc, rows[2].loc);
+        let red_v2 = 1.0 - v2 as f64 / raw as f64;
+        assert!(
+            red_v2 >= 0.30,
+            "v2 reduction only {:.1}% (raw {raw}, v2 {v2})",
+            red_v2 * 100.0
+        );
+        assert!(v2 < v1, "v2 ({v2} LOC) must beat v1 ({v1} LOC)");
+    }
+
+    #[test]
+    fn report_has_three_rows_and_v2_column() {
+        if examples_dir().is_none() {
+            return;
+        }
+        let r = report().unwrap();
+        assert!(r.contains("pure rawcl"), "report: {r}");
+        assert!(r.contains("cf4rs v1"), "report: {r}");
+        assert!(r.contains("cf4rs v2 (fluent tier)"), "report: {r}");
+        assert!(r.contains("vs raw"), "report: {r}");
     }
 }

@@ -52,9 +52,16 @@ pub fn main(args: &[String]) -> i32 {
     let quick = args.iter().any(|a| a == "--quick");
 
     fn run_loc() -> bool {
-        let r = loc::report();
-        print!("{r}");
-        write_result("loc.md", &r)
+        match loc::report() {
+            Ok(r) => {
+                print!("{r}");
+                write_result("loc.md", &r)
+            }
+            Err(e) => {
+                eprintln!("loc: {e}");
+                false
+            }
+        }
     }
     fn run_overhead(quick: bool) -> bool {
         let opts = if quick {

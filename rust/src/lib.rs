@@ -15,7 +15,10 @@
 //!   executes them on the CPU PJRT client (the "native" device).
 //! * [`ccl`] — the framework itself (the paper's contribution): wrapper
 //!   classes, device selection, error management and integrated
-//!   multi-queue profiling.
+//!   multi-queue profiling — plus [`ccl::v2`], the fluent typed high
+//!   tier (session facade, generic `Buffer<T>`, validated launch
+//!   builders, implicit event-dependency chaining) over the same
+//!   wrappers.
 //! * [`backend`] — the unified execution layer: one `Backend` trait
 //!   (compile, alloc, enqueue, wait, timestamps) over both substrates
 //!   (`SimBackend` on the simulated devices, `PjrtBackend` on the PJRT

@@ -8,7 +8,9 @@
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5`.
 
-use cf4rs::coordinator::{run_ccl, run_raw, run_sharded, RngConfig, ShardedRngConfig, Sink};
+use cf4rs::coordinator::{
+    run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
+};
 use cf4rs::harness;
 use cf4rs::utils::{cclc, devinfo, plot_events};
 
@@ -19,9 +21,10 @@ fn usage() -> i32 {
          \x20 devinfo [-a] [-d N] [-c p1,p2] [--list]   query devices\n\
          \x20 cclc build|analyze|link [opts] FILE...    offline kernel tool\n\
          \x20 plot-events FILE.tsv [--svg OUT]          queue utilization chart\n\
-         \x20 rng [--raw|--sharded] [--numrn N] [--iters I] [--device D]\n\
+         \x20 rng [--raw|--v2|--sharded] [--numrn N] [--iters I] [--device D]\n\
          \x20     [--no-profile] [--summary] [--export FILE] [--stdout]\n\
-         \x20     (--sharded dispatches across ALL backends, work-stealing)\n\
+         \x20     (--v2 runs through the fluent ccl::v2 tier;\n\
+         \x20      --sharded dispatches across ALL backends, work-stealing)\n\
          \x20 bench loc|overhead|figure3|figure5|backends [args]\n\
          \x20     regenerate paper results + backend comparison"
     );
@@ -55,6 +58,7 @@ fn rng_main(args: &[String]) -> i32 {
     let mut iters = 16usize;
     let mut device = 1u32;
     let mut raw = false;
+    let mut v2 = false;
     let mut sharded = false;
     let mut profile = true;
     let mut want_summary = false;
@@ -69,6 +73,7 @@ fn rng_main(args: &[String]) -> i32 {
         let r: Result<(), String> = (|| {
             match a.as_str() {
                 "--raw" => raw = true,
+                "--v2" => v2 = true,
                 "--sharded" => sharded = true,
                 "--numrn" | "-n" => numrn = next("--numrn")?.parse().map_err(|e| format!("{e}"))?,
                 "--iters" | "-i" => iters = next("--iters")?.parse().map_err(|e| format!("{e}"))?,
@@ -100,6 +105,8 @@ fn rng_main(args: &[String]) -> i32 {
         "sharded (all backends)"
     } else if raw {
         "raw"
+    } else if v2 {
+        "cf4rs v2 (fluent tier)"
     } else {
         "cf4rs"
     };
@@ -171,7 +178,12 @@ fn rng_main(args: &[String]) -> i32 {
             }
         }
     } else {
-        match run_ccl(&cfg) {
+        let (label, result) = if v2 {
+            ("v2", run_v2(&cfg))
+        } else {
+            ("ccl", run_ccl(&cfg))
+        };
+        match result {
             Ok(out) => {
                 eprintln!(" * Total elapsed time        : {:e}s", out.wall.as_secs_f64());
                 if want_summary {
@@ -191,7 +203,7 @@ fn rng_main(args: &[String]) -> i32 {
                 0
             }
             Err(e) => {
-                eprintln!("rng(ccl): {e}");
+                eprintln!("rng({label}): {e}");
                 1
             }
         }

@@ -105,6 +105,30 @@ pub fn is_success(code: ClStatus) -> bool {
     code == CL_SUCCESS
 }
 
+/// A substrate status code as a typed error value.
+///
+/// The raw API itself only moves `i32` codes around (like OpenCL); this
+/// wrapper exists so higher layers can keep the originating substrate
+/// error in a `std::error::Error` source chain — `ccl::CclError::source`
+/// returns one of these for every propagated substrate failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatusError(pub ClStatus);
+
+impl StatusError {
+    /// The symbolic name of the wrapped code.
+    pub fn name(&self) -> &'static str {
+        status_name(self.0)
+    }
+}
+
+impl std::fmt::Display for StatusError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({})", status_name(self.0), self.0)
+    }
+}
+
+impl std::error::Error for StatusError {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +145,12 @@ mod tests {
     fn success_predicate() {
         assert!(is_success(CL_SUCCESS));
         assert!(!is_success(CL_DEVICE_NOT_FOUND));
+    }
+
+    #[test]
+    fn status_error_displays_name_and_code() {
+        let e = StatusError(CL_INVALID_KERNEL);
+        assert_eq!(e.name(), "CL_INVALID_KERNEL");
+        assert_eq!(e.to_string(), "CL_INVALID_KERNEL (-48)");
     }
 }

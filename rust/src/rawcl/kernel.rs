@@ -147,6 +147,19 @@ pub fn get_kernel_num_args(kernel: KernelH, num: &mut usize) -> ClStatus {
     CL_SUCCESS
 }
 
+/// `clGetKernelArgInfo` analogue: the [`ArgRole`] of every argument slot,
+/// in positional order. This is what lets higher layers (the `ccl::v2`
+/// launch builder) validate an argument list against the kernel's ABI
+/// *before* enqueueing, instead of failing one `set_kernel_arg` at a
+/// time.
+pub fn get_kernel_arg_roles(kernel: KernelH, out: &mut Vec<ArgRole>) -> ClStatus {
+    let Some(k) = registry::get_kernel(kernel.0) else {
+        return CL_INVALID_KERNEL;
+    };
+    *out = k.built.spec.args.clone();
+    CL_SUCCESS
+}
+
 pub fn retain_kernel(kernel: KernelH) -> ClStatus {
     if registry::get_kernel(kernel.0).is_none() {
         return CL_INVALID_KERNEL;
@@ -256,6 +269,21 @@ mod tests {
         assert_eq!(set_kernel_arg(k, 1, &ArgValue::Buffer(buf)), CL_INVALID_ARG_VALUE);
 
         release_kernel(k);
+        program::release_program(prg);
+        context::release_context(ctx);
+    }
+
+    #[test]
+    fn arg_roles_mirror_the_spec() {
+        let Some((ctx, prg, k)) = rng_kernel() else { return };
+        let mut roles = Vec::new();
+        assert_eq!(get_kernel_arg_roles(k, &mut roles), CL_SUCCESS);
+        assert_eq!(roles.len(), 3);
+        assert!(matches!(roles[0], ArgRole::BakedScalar { .. }));
+        assert!(matches!(roles[1], ArgRole::BufferInput { .. }));
+        assert!(matches!(roles[2], ArgRole::BufferOutput { .. }));
+        release_kernel(k);
+        assert_eq!(get_kernel_arg_roles(k, &mut roles), CL_INVALID_KERNEL);
         program::release_program(prg);
         context::release_context(ctx);
     }

@@ -44,10 +44,11 @@ pub use event::{
     set_user_event_status, wait_for_events,
 };
 pub use kernel::{
-    create_kernel, create_kernels_in_program, get_kernel_function_name,
-    get_kernel_num_args, get_kernel_work_group_info, release_kernel, retain_kernel,
-    set_kernel_arg, ArgValue,
+    create_kernel, create_kernels_in_program, get_kernel_arg_roles,
+    get_kernel_function_name, get_kernel_num_args, get_kernel_work_group_info,
+    release_kernel, retain_kernel, set_kernel_arg, ArgValue,
 };
+pub use kernelspec::ArgRole;
 pub use image::{
     create_image2d, get_image_desc, release_image, retain_image, ImageDesc, ImageFormat,
 };

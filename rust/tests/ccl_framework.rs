@@ -99,6 +99,57 @@ fn paper_listing_s2_flow_on_sim_gpu() {
 }
 
 #[test]
+fn set_args_skip_keeps_positional_indices() {
+    // Regression: Arg::skip() must consume its positional index, not
+    // shift later arguments down a slot. A compacting implementation
+    // would bind the first buffer to slot 0 — the BakedScalar slot —
+    // and fail with CL_INVALID_ARG_VALUE (or corrupt the arg order).
+    const N: usize = 4096;
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q = Queue::new_profiled(&ctx, dev).unwrap();
+    let prg = Program::new_from_artifacts(&ctx, &["init_n4096", "rng_n4096"]).unwrap();
+    prg.build().unwrap();
+    let kinit = prg.kernel("prng_init").unwrap();
+    let krng = prg.kernel("prng_step").unwrap();
+    let b1 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let b2 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let b3 = Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    kinit
+        .set_args_and_enqueue_ndrange(
+            &q, &[N], None, &[],
+            &[Arg::buf(&b1), Arg::priv_u32(N as u32)],
+        )
+        .unwrap();
+    q.finish().unwrap();
+
+    // Set the constant slot once, then skip it at launch.
+    krng.set_arg(0, &Arg::priv_u32(N as u32)).unwrap();
+    krng.set_args(&[Arg::skip(), Arg::buf(&b1), Arg::buf(&b2)]).unwrap();
+    krng.enqueue_ndrange(&q, &[N], None, &[]).unwrap();
+    q.finish().unwrap();
+    let mut out = vec![0u8; N * 8];
+    b2.enqueue_read(&q, 0, &mut out, &[]).unwrap();
+    assert_eq!(
+        u64::from_le_bytes(out[..8].try_into().unwrap()),
+        simexec::xorshift(simexec::init_seed(0))
+    );
+
+    // Skips in the middle hold too: keep slots 0 and 1 (constant +
+    // input buffer b1) and retarget only the output to b3.
+    krng.set_args(&[Arg::skip(), Arg::skip(), Arg::buf(&b3)]).unwrap();
+    krng.enqueue_ndrange(&q, &[N], None, &[]).unwrap();
+    q.finish().unwrap();
+    let mut out3 = vec![0u8; N * 8];
+    b3.enqueue_read(&q, 0, &mut out3, &[]).unwrap();
+    assert_eq!(
+        u64::from_le_bytes(out3[..8].try_into().unwrap()),
+        simexec::xorshift(simexec::init_seed(0)),
+        "middle skips must leave slots 0 and 1 untouched"
+    );
+}
+
+#[test]
 fn build_log_on_failure_like_listing_s2() {
     let ctx = Context::new_gpu().unwrap();
     let bad = "HloModule jit_mystery, entry_computation_layout={()->(f32[4]{0})}";

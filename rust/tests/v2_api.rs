@@ -1,0 +1,301 @@
+//! Integration tests for the `ccl::v2` fluent typed tier: session
+//! facade, typed buffers, validated launch builders, and — the crux —
+//! implicit event-dependency chaining being bit-identical to explicit
+//! wait-list chains, including across two queues.
+
+use cf4rs::ccl::v2::Session;
+use cf4rs::ccl::{Arg, Buffer as V1Buffer, Context, Program, Queue};
+use cf4rs::rawcl::simexec;
+use cf4rs::rawcl::types::MemFlags;
+
+const N: usize = 4096;
+
+#[test]
+fn typed_buffer_roundtrip() {
+    let sess = Session::builder().cpu().build().unwrap();
+    let data: Vec<u64> = (0..512u64).map(|i| i.wrapping_mul(3)).collect();
+    let buf = sess.buffer_from(&data).unwrap();
+    assert_eq!(buf.len(), 512);
+    assert_eq!(buf.size_bytes(), 512 * 8);
+    assert_eq!(buf.read_vec().unwrap(), data);
+
+    let newdata: Vec<u64> = (0..512u64).map(|i| i + 7).collect();
+    buf.write_slice(&newdata).unwrap();
+    assert_eq!(buf.read_vec().unwrap(), newdata);
+
+    // length mismatches are structured framework errors
+    let err = buf.write_slice(&[1u64]).unwrap_err();
+    assert!(err.to_string().contains("length mismatch"), "{err}");
+}
+
+#[test]
+fn fluent_vecadd_with_typed_output() {
+    let sess = Session::builder().cpu().profiled().build().unwrap();
+    sess.load(&["vecadd_n1024"]).unwrap();
+    let x: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..1024).map(|i| 2.0 * i as f32).collect();
+    let bx = sess.buffer_from(&x).unwrap();
+    let by = sess.buffer_from(&y).unwrap();
+    let bo = sess.buffer::<f32>(1024).unwrap();
+
+    let pending = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(1024)
+        .arg(&bx)
+        .arg(&by)
+        .output(&bo)
+        .launch()
+        .unwrap();
+    let out: Vec<f32> = pending.read().unwrap();
+    assert_eq!(out.len(), 1024);
+    assert_eq!(out[10], 30.0);
+    assert_eq!(out[1023], 3.0 * 1023.0);
+    assert!(pending.duration().is_ok());
+}
+
+#[test]
+fn launch_arity_and_kind_checked_before_enqueue() {
+    let sess = Session::builder().cpu().build().unwrap();
+    sess.load(&["vecadd_n1024"]).unwrap();
+    let bx = sess.buffer::<f32>(1024).unwrap();
+
+    // wrong arity
+    let e = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(1024)
+        .arg(&bx)
+        .launch()
+        .unwrap_err();
+    assert!(e.to_string().contains("expects 3 argument(s)"), "{e}");
+    assert!(e.to_string().contains("vecadd"), "{e}");
+
+    // scalar where a buffer is expected
+    let e = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(1024)
+        .arg(1.0f32)
+        .arg(&bx)
+        .arg(&bx)
+        .launch()
+        .unwrap_err();
+    assert!(e.to_string().contains("expects a buffer, got a scalar"), "{e}");
+
+    // unknown kernel: helpful message listing what *is* loaded
+    let e = sess.kernel("nope").unwrap_err();
+    assert!(e.to_string().contains("not loaded"), "{e}");
+    assert!(e.to_string().contains("vecadd"), "{e}");
+}
+
+#[test]
+fn launch_type_and_size_checked_against_spec() {
+    let sess = Session::builder().cpu().build().unwrap();
+    sess.load(&["vecadd_n1024"]).unwrap();
+    let bf = sess.buffer::<f32>(1024).unwrap();
+
+    // element-type mismatch: u64 buffer into an f32 slot
+    let bu = sess.buffer::<u64>(1024).unwrap();
+    let e = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(1024)
+        .arg(&bu)
+        .arg(&bf)
+        .arg(&bf)
+        .launch()
+        .unwrap_err();
+    assert!(e.to_string().contains("expects a f32 buffer, got u64"), "{e}");
+
+    // size mismatch: right element type, wrong length
+    let small = sess.buffer::<f32>(512).unwrap();
+    let e = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(1024)
+        .arg(&small)
+        .arg(&bf)
+        .arg(&bf)
+        .launch()
+        .unwrap_err();
+    assert!(e.to_string().contains("byte(s)"), "{e}");
+
+    // baked-scalar width mismatch: u64 into the u32 nseeds slot
+    let sess2 = Session::builder().gpu().build().unwrap();
+    sess2.load(&["init_n4096"]).unwrap();
+    let b = sess2.buffer::<u64>(N).unwrap();
+    let e = sess2
+        .kernel("prng_init")
+        .unwrap()
+        .global(N)
+        .arg(&b)
+        .arg(N as u64)
+        .launch()
+        .unwrap_err();
+    assert!(e.to_string().contains("4-byte scalar"), "{e}");
+}
+
+/// The satellite acceptance test: write→launch→read chained implicitly
+/// on one session must be bit-identical to the same commands chained
+/// with explicit wait-lists on the v1 tier — including when the
+/// commands are spread across two queues.
+#[test]
+fn implicit_deps_match_explicit_waitlist_across_queues() {
+    // ---- v2: zero wait-lists, two queues ---------------------------
+    let sess = Session::builder().gpu().queues(2).build().unwrap();
+    sess.load(&["init_n4096", "rng_n4096"]).unwrap();
+    let b1 = sess.buffer::<u64>(N).unwrap();
+    let b2 = sess.buffer::<u64>(N).unwrap();
+    sess.kernel("prng_init")
+        .unwrap()
+        .global(N)
+        .arg(&b1)
+        .arg(N as u32)
+        .launch()
+        .unwrap();
+    sess.kernel("prng_step")
+        .unwrap()
+        .global(N)
+        .arg(N as u32)
+        .arg(&b1)
+        .arg(&b2)
+        .launch()
+        .unwrap();
+    // read the stepped batch on the *other* queue, no waits spelled out
+    let implicit = b2.read_vec_on(1).unwrap();
+
+    // ---- v1: the same chain with explicit events -------------------
+    let ctx = Context::new_gpu().unwrap();
+    let dev = ctx.device(0).unwrap();
+    let q0 = Queue::new_profiled(&ctx, dev).unwrap();
+    let q1 = Queue::new_profiled(&ctx, dev).unwrap();
+    let prg = Program::new_from_artifacts(&ctx, &["init_n4096", "rng_n4096"]).unwrap();
+    prg.build().unwrap();
+    let kinit = prg.kernel("prng_init").unwrap();
+    let krng = prg.kernel("prng_step").unwrap();
+    let v1b1 = V1Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let v1b2 = V1Buffer::new(&ctx, MemFlags::READ_WRITE, N * 8).unwrap();
+    let e1 = kinit
+        .set_args_and_enqueue_ndrange(
+            &q0,
+            &[N],
+            None,
+            &[],
+            &[Arg::buf(&v1b1), Arg::priv_u32(N as u32)],
+        )
+        .unwrap();
+    let e2 = krng
+        .set_args_and_enqueue_ndrange(
+            &q0,
+            &[N],
+            None,
+            &[e1],
+            &[Arg::priv_u32(N as u32), Arg::buf(&v1b1), Arg::buf(&v1b2)],
+        )
+        .unwrap();
+    let mut bytes = vec![0u8; N * 8];
+    v1b2.enqueue_read(&q1, 0, &mut bytes, &[e2]).unwrap();
+    let explicit: Vec<u64> = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    assert_eq!(implicit, explicit, "implicit chain diverged from explicit chain");
+    assert_eq!(implicit[0], simexec::xorshift(simexec::init_seed(0)));
+
+    // ---- and host-write → cross-queue launch → read ----------------
+    let wrote: Vec<u64> = (0..N as u64)
+        .map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        .collect();
+    b1.write_slice(&wrote).unwrap(); // queue 0
+    sess.kernel("prng_step")
+        .unwrap()
+        .queue(1) // kernel on queue 1
+        .global(N)
+        .arg(N as u32)
+        .arg(&b1)
+        .arg(&b2)
+        .launch()
+        .unwrap();
+    let stepped = b2.read_vec().unwrap(); // back on queue 0
+    for (i, (&got, &src)) in stepped.iter().zip(&wrote).enumerate().take(64) {
+        assert_eq!(got, simexec::xorshift(src), "word {i}");
+    }
+}
+
+#[test]
+fn independent_and_after_overrides() {
+    let sess = Session::builder().gpu().build().unwrap();
+    sess.load(&["init_n4096", "rng_n4096"]).unwrap();
+    let b1 = sess.buffer::<u64>(N).unwrap();
+    let b2 = sess.buffer::<u64>(N).unwrap();
+    let p1 = sess
+        .kernel("prng_init")
+        .unwrap()
+        .global(N)
+        .arg(&b1)
+        .arg(N as u32)
+        .launch()
+        .unwrap();
+    // opt out of implicit chaining, wire the dependency by hand
+    let p2 = sess
+        .kernel("prng_step")
+        .unwrap()
+        .global(N)
+        .arg(N as u32)
+        .arg(&b1)
+        .arg(&b2)
+        .independent()
+        .after_pending(&p1)
+        .launch()
+        .unwrap();
+    p2.wait().unwrap();
+    let out = b2.read_vec().unwrap();
+    assert_eq!(out[0], simexec::xorshift(simexec::init_seed(0)));
+}
+
+#[test]
+fn session_profile_harvests_queues_once() {
+    let sess = Session::builder().gpu().queues(2).profiled().build().unwrap();
+    sess.load(&["init_n4096"]).unwrap();
+    let b = sess.buffer::<u64>(N).unwrap();
+    sess.kernel("prng_init")
+        .unwrap()
+        .global(N)
+        .arg(&b)
+        .arg(N as u32)
+        .name("SEED")
+        .launch()
+        .unwrap();
+    let _ = b.read_vec_on(1).unwrap();
+    let prof = sess.profile().unwrap();
+    let names: Vec<&str> = prof.aggs().unwrap().iter().map(|a| a.name.as_str()).collect();
+    assert!(names.contains(&"SEED"), "aggs: {names:?}");
+    assert!(names.contains(&"READ_BUFFER"), "aggs: {names:?}");
+    // one-shot: a second harvest is a structured error
+    assert!(sess.profile().is_err());
+}
+
+#[test]
+fn launch_events_default_to_the_kernel_name() {
+    let sess = Session::builder().gpu().profiled().build().unwrap();
+    sess.load(&["init_n4096"]).unwrap();
+    let b = sess.buffer::<u64>(N).unwrap();
+    sess.kernel("prng_init")
+        .unwrap()
+        .global(N)
+        .arg(&b)
+        .arg(N as u32)
+        .launch()
+        .unwrap();
+    let prof = sess.profile().unwrap();
+    assert!(prof.aggs().unwrap().iter().any(|a| a.name == "prng_init"));
+}
+
+#[test]
+fn unprofiled_session_has_no_profile() {
+    let sess = Session::builder().gpu().build().unwrap();
+    let e = sess.profile().unwrap_err();
+    assert!(e.to_string().contains("profiled"), "{e}");
+}
