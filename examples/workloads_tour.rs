@@ -1,0 +1,56 @@
+//! Tour of the workload-agnostic execution contract: each built-in
+//! workload runs through the fluent `ccl::v2` tier and the sharded
+//! multi-backend scheduler, and both results are checked bit-for-bit
+//! against the host oracle.
+//!
+//! Usage: `cargo run --release --example workloads_tour`
+
+use cf4rs::backend::BackendRegistry;
+use cf4rs::workload::{
+    exec, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload,
+    StencilWorkload, Workload,
+};
+
+fn tour<W: Workload + Clone>(w: &W, registry: &BackendRegistry) -> bool {
+    let iters = w.default_iters();
+    let reference = w.reference(iters);
+    let v2 = match exec::run_v2_path(w, iters, 0) {
+        Ok(out) => out == reference,
+        Err(e) => {
+            eprintln!("{}: v2 path failed: {e}", w.name());
+            return false;
+        }
+    };
+    let sharded = match exec::run_sharded_path(w, iters, registry) {
+        Ok(out) => out == reference,
+        Err(e) => {
+            eprintln!("{}: sharded path failed: {e}", w.name());
+            return false;
+        }
+    };
+    println!(
+        " * {:<8} {:>7} units × {} iters   v2: {}   sharded: {}",
+        w.name(),
+        w.units(),
+        iters,
+        if v2 { "ok" } else { "DIVERGED" },
+        if sharded { "ok" } else { "DIVERGED" },
+    );
+    v2 && sharded
+}
+
+fn main() {
+    let registry = BackendRegistry::with_default_backends();
+    println!("workload tour — every output validated against the host oracle");
+    let mut ok = true;
+    ok &= tour(&PrngWorkload::new(4096), &registry);
+    ok &= tour(&SaxpyWorkload::new(4096, 2.5), &registry);
+    ok &= tour(&ReduceWorkload::new(8192), &registry);
+    ok &= tour(&StencilWorkload::new(32, 32), &registry);
+    ok &= tour(&MatmulWorkload::new(24), &registry);
+    if !ok {
+        eprintln!("DIVERGENCE DETECTED");
+        std::process::exit(1);
+    }
+    println!("all workloads bit-identical on both paths");
+}

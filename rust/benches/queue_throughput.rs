@@ -73,7 +73,7 @@ fn main() {
         let r = bench(&format!("rng service n=65536 i=8 ({name})"), 1, 5, || {
             run_ccl(&cfg).unwrap();
         });
-        let mibs = bytes / r.median().as_secs_f64() / (1 << 20) as f64;
+        let mibs = bytes / r.median().expect("5 samples").as_secs_f64() / (1 << 20) as f64;
         println!("    -> {mibs:.1} MiB/s");
     }
 }

@@ -31,6 +31,9 @@
 //! | `PrngStep`/Multi | `[Buf in, Buf out]`                       |
 //! | `VecAdd`         | `[Buf x, Buf y, Buf out]`                 |
 //! | `Saxpy`          | `[F32 a, Buf x, Buf y, Buf out]`          |
+//! | `Reduce`         | `[Buf in, Buf out]`                       |
+//! | `Stencil5`       | `[Buf grid, Buf out]`                     |
+//! | `Matmul`         | `[Buf a, Buf b, Buf out]`                 |
 //!
 //! ## Registering a new backend
 //!
@@ -94,39 +97,62 @@ pub type BackendResult<T> = Result<T, BackendError>;
 ///
 /// `gid_offset` shifts the global indices hashed by `PrngInit` so a
 /// scheduler can shard one logical stream across backends; `k` is the
-/// fused step count of `PrngMultiStep`. Both are compile-time parameters
-/// because artifacts bake them in at lowering time.
+/// fused step count of `PrngMultiStep`; `m` is the secondary dimension
+/// of the 2-D families (stencil grid width, matmul inner dimension).
+/// All are compile-time parameters because artifacts bake them in at
+/// lowering time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CompileSpec {
     pub kind: KernelKind,
     pub n: usize,
     pub k: usize,
     pub gid_offset: u64,
+    /// Secondary dimension (1 for the 1-D families).
+    pub m: usize,
 }
 
 impl CompileSpec {
+    fn new(kind: KernelKind, n: usize) -> Self {
+        Self { kind, n, k: 1, gid_offset: 0, m: 1 }
+    }
+
     pub fn init(n: usize) -> Self {
-        Self { kind: KernelKind::PrngInit, n, k: 1, gid_offset: 0 }
+        Self::new(KernelKind::PrngInit, n)
     }
 
     pub fn init_at(n: usize, gid_offset: u64) -> Self {
-        Self { kind: KernelKind::PrngInit, n, k: 1, gid_offset }
+        Self { gid_offset, ..Self::new(KernelKind::PrngInit, n) }
     }
 
     pub fn step(n: usize) -> Self {
-        Self { kind: KernelKind::PrngStep, n, k: 1, gid_offset: 0 }
+        Self::new(KernelKind::PrngStep, n)
     }
 
     pub fn multi_step(n: usize, k: usize) -> Self {
-        Self { kind: KernelKind::PrngMultiStep, n, k, gid_offset: 0 }
+        Self { k, ..Self::new(KernelKind::PrngMultiStep, n) }
     }
 
     pub fn vecadd(n: usize) -> Self {
-        Self { kind: KernelKind::VecAdd, n, k: 1, gid_offset: 0 }
+        Self::new(KernelKind::VecAdd, n)
     }
 
     pub fn saxpy(n: usize) -> Self {
-        Self { kind: KernelKind::Saxpy, n, k: 1, gid_offset: 0 }
+        Self::new(KernelKind::Saxpy, n)
+    }
+
+    /// Wrapping-u64 tree reduction of `n` words to one word.
+    pub fn reduce(n: usize) -> Self {
+        Self::new(KernelKind::Reduce, n)
+    }
+
+    /// 5-point stencil over a `rows × cols` f32 grid.
+    pub fn stencil5(rows: usize, cols: usize) -> Self {
+        Self { m: cols.max(1), ..Self::new(KernelKind::Stencil5, rows * cols) }
+    }
+
+    /// `rows × d` row band of A times a `d × d` B.
+    pub fn matmul(rows: usize, d: usize) -> Self {
+        Self { m: d.max(1), ..Self::new(KernelKind::Matmul, rows * d) }
     }
 
     /// Display name used for profiling events (matches the event names
@@ -137,7 +163,65 @@ impl CompileSpec {
             KernelKind::PrngStep | KernelKind::PrngMultiStep => "RNG_KERNEL",
             KernelKind::VecAdd => "VECADD_KERNEL",
             KernelKind::Saxpy => "SAXPY_KERNEL",
+            KernelKind::Reduce => "REDUCE_KERNEL",
+            KernelKind::Stencil5 => "STENCIL_KERNEL",
+            KernelKind::Matmul => "MATMUL_KERNEL",
         }
+    }
+
+    /// The artifact family this spec compiles to.
+    pub fn artifact_kind(&self) -> crate::runtime::ArtifactKind {
+        use crate::runtime::ArtifactKind;
+        match self.kind {
+            KernelKind::PrngInit => ArtifactKind::Init,
+            KernelKind::PrngStep => ArtifactKind::Rng,
+            KernelKind::PrngMultiStep => ArtifactKind::RngMulti,
+            KernelKind::VecAdd => ArtifactKind::VecAdd,
+            KernelKind::Saxpy => ArtifactKind::Saxpy,
+            KernelKind::Reduce => ArtifactKind::Reduce,
+            KernelKind::Stencil5 => ArtifactKind::Stencil5,
+            KernelKind::Matmul => ArtifactKind::Matmul,
+        }
+    }
+
+    /// The HLO generator spec equivalent to this compile spec.
+    pub fn gen_spec(&self) -> crate::runtime::GenSpec {
+        crate::runtime::GenSpec::new(self.artifact_kind(), self.n)
+            .with_k(self.k)
+            .with_gid_offset(self.gid_offset)
+            .with_m(self.m)
+    }
+
+    /// Positional device-buffer layout of the launch ABI (see the
+    /// module-level table): `(input buffer byte sizes, output bytes)`.
+    pub fn buffer_layout(&self) -> (Vec<usize>, usize) {
+        let n = self.n;
+        let m = self.m.max(1);
+        match self.kind {
+            KernelKind::PrngInit => (vec![], n * 8),
+            KernelKind::PrngStep | KernelKind::PrngMultiStep => (vec![n * 8], n * 8),
+            KernelKind::VecAdd => (vec![n * 4, n * 4], n * 4),
+            KernelKind::Saxpy => (vec![n * 4, n * 4], n * 4),
+            KernelKind::Reduce => (vec![n * 8], 8),
+            KernelKind::Stencil5 => (vec![n * 4], n * 4),
+            KernelKind::Matmul => (vec![n * 4, m * m * 4], n * 4),
+        }
+    }
+
+    /// Assemble the positional [`LaunchArg`] list of the launch ABI:
+    /// f32 scalars first (saxpy's `a`), then the input buffers, then the
+    /// output buffer.
+    pub fn launch_args(
+        &self,
+        inputs: &[BufId],
+        out: BufId,
+        scalars: &[f32],
+    ) -> Vec<LaunchArg> {
+        let mut args: Vec<LaunchArg> =
+            scalars.iter().map(|&v| LaunchArg::F32(v)).collect();
+        args.extend(inputs.iter().map(|&b| LaunchArg::Buf(b)));
+        args.push(LaunchArg::Buf(out));
+        args
     }
 }
 
@@ -237,6 +321,32 @@ mod tests {
         assert_eq!(CompileSpec::multi_step(8, 4).event_name(), "RNG_KERNEL");
         assert_eq!(CompileSpec::vecadd(8).event_name(), "VECADD_KERNEL");
         assert_eq!(CompileSpec::saxpy(8).event_name(), "SAXPY_KERNEL");
+        assert_eq!(CompileSpec::reduce(8).event_name(), "REDUCE_KERNEL");
+        assert_eq!(CompileSpec::stencil5(4, 2).event_name(), "STENCIL_KERNEL");
+        assert_eq!(CompileSpec::matmul(4, 4).event_name(), "MATMUL_KERNEL");
+    }
+
+    #[test]
+    fn buffer_layouts_match_the_abi_table() {
+        assert_eq!(CompileSpec::init(16).buffer_layout(), (vec![], 128));
+        assert_eq!(CompileSpec::step(16).buffer_layout(), (vec![128], 128));
+        assert_eq!(CompileSpec::reduce(16).buffer_layout(), (vec![128], 8));
+        assert_eq!(
+            CompileSpec::stencil5(4, 8).buffer_layout(),
+            (vec![4 * 8 * 4], 4 * 8 * 4)
+        );
+        assert_eq!(
+            CompileSpec::matmul(4, 8).buffer_layout(),
+            (vec![4 * 8 * 4, 8 * 8 * 4], 4 * 8 * 4)
+        );
+        let args = CompileSpec::saxpy(4).launch_args(
+            &[BufId(1), BufId(2)],
+            BufId(3),
+            &[2.0],
+        );
+        assert_eq!(args.len(), 4);
+        assert!(matches!(args[0], LaunchArg::F32(v) if v == 2.0));
+        assert!(matches!(args[3], LaunchArg::Buf(BufId(3))));
     }
 
     #[test]

@@ -15,9 +15,9 @@ use crate::rawcl::device;
 use crate::rawcl::kernelspec::KernelKind;
 use crate::rawcl::profile::BackendKind;
 use crate::rawcl::types::DeviceId;
-use crate::runtime::hlogen::{self, GenSpec};
+use crate::runtime::hlogen;
 use crate::runtime::literal::{literal_from_bytes, literal_to_slice, ElemType};
-use crate::runtime::{ArtifactKind, TextModule};
+use crate::runtime::TextModule;
 
 use super::{
     Backend, BackendError, BackendResult, BufId, CompileSpec, EventId, EventTimes,
@@ -86,23 +86,16 @@ impl PjrtBackend {
     }
 }
 
-fn artifact_kind(kind: KernelKind) -> ArtifactKind {
-    match kind {
-        KernelKind::PrngInit => ArtifactKind::Init,
-        KernelKind::PrngStep => ArtifactKind::Rng,
-        KernelKind::PrngMultiStep => ArtifactKind::RngMulti,
-        KernelKind::VecAdd => ArtifactKind::VecAdd,
-        KernelKind::Saxpy => ArtifactKind::Saxpy,
-    }
-}
-
 /// Element type of the principal vectors of a kernel family.
 fn elem_type(kind: KernelKind) -> ElemType {
     match kind {
-        KernelKind::PrngInit | KernelKind::PrngStep | KernelKind::PrngMultiStep => {
-            ElemType::U64
+        KernelKind::PrngInit
+        | KernelKind::PrngStep
+        | KernelKind::PrngMultiStep
+        | KernelKind::Reduce => ElemType::U64,
+        KernelKind::VecAdd | KernelKind::Saxpy | KernelKind::Stencil5 | KernelKind::Matmul => {
+            ElemType::F32
         }
-        KernelKind::VecAdd | KernelKind::Saxpy => ElemType::F32,
     }
 }
 
@@ -120,16 +113,13 @@ impl Backend for PjrtBackend {
     }
 
     fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
-        if spec.n == 0 || spec.k == 0 {
+        if spec.n == 0 || spec.k == 0 || spec.m == 0 || spec.n % spec.m != 0 {
             return Err(self.err(format!("degenerate kernel spec {spec:?}")));
         }
         if let Some(&id) = self.state.lock().unwrap().kernel_ids.get(spec) {
             return Ok(KernelId(id));
         }
-        let gen = GenSpec::new(artifact_kind(spec.kind), spec.n)
-            .with_k(spec.k)
-            .with_gid_offset(spec.gid_offset);
-        let source = hlogen::resolve_source(&gen)
+        let source = hlogen::resolve_source(&spec.gen_spec())
             .map_err(|e| self.err(format!("resolving kernel source: {e}")))?;
         let module = TextModule::compile_cached(&source)
             .map_err(|e| self.err(format!("compiling {:?}: {e:#}", spec.kind)))?;
@@ -203,54 +193,43 @@ impl Backend for PjrtBackend {
             })
             .collect();
         let ety = elem_type(spec.kind);
-        let vec_bytes = spec.n * ety.size_bytes();
-        let input_of = |st: &PjrtState, idx: usize| -> BackendResult<xla::Literal> {
-            let bytes = st
+        let (in_sizes, out_bytes) = spec.buffer_layout();
+        let input_of = |st: &PjrtState, idx: usize, bytes: usize| -> BackendResult<xla::Literal> {
+            let data = st
                 .bufs
                 .get(buf_ids.get(idx).ok_or_else(|| self.err("missing buffer arg"))?)
-                .filter(|b| b.len() >= vec_bytes)
-                .map(|b| &b[..vec_bytes])
+                .filter(|b| b.len() >= bytes)
+                .map(|b| &b[..bytes])
                 .ok_or_else(|| self.err("buffer arg too small or dead"))?;
-            literal_from_bytes(ety, bytes, false)
+            literal_from_bytes(ety, data, false)
                 .map_err(|e| self.err(format!("building input literal: {e:#}")))
         };
 
-        // Marshal inputs per the launch ABI (see backend module docs).
+        // Marshal inputs per the launch ABI (see the backend module
+        // docs): saxpy's scalar HLO parameter first, then the input
+        // buffers in positional order; the output buffer is the last
+        // positional buffer argument.
         let mut inputs: Vec<xla::Literal> = Vec::new();
-        let out_slot: usize;
-        match spec.kind {
-            KernelKind::PrngInit => {
-                out_slot = 0;
-            }
-            KernelKind::PrngStep | KernelKind::PrngMultiStep => {
-                inputs.push(input_of(&st, 0)?);
-                out_slot = 1;
-            }
-            KernelKind::VecAdd => {
-                inputs.push(input_of(&st, 0)?);
-                inputs.push(input_of(&st, 1)?);
-                out_slot = 2;
-            }
-            KernelKind::Saxpy => {
-                let a = args
-                    .iter()
-                    .find_map(|arg| match arg {
-                        LaunchArg::F32(v) => Some(*v),
-                        _ => None,
-                    })
-                    .ok_or_else(|| self.err("saxpy needs an F32 scalar arg"))?;
-                // Heap-allocate the scalar so the byte→f32 cast inside
-                // literal_from_bytes sees an aligned buffer.
-                let a_bytes = a.to_le_bytes().to_vec();
-                inputs.push(
-                    literal_from_bytes(ElemType::F32, &a_bytes, true)
-                        .map_err(|e| self.err(format!("scalar literal: {e:#}")))?,
-                );
-                inputs.push(input_of(&st, 0)?);
-                inputs.push(input_of(&st, 1)?);
-                out_slot = 2;
-            }
+        if spec.kind == KernelKind::Saxpy {
+            let a = args
+                .iter()
+                .find_map(|arg| match arg {
+                    LaunchArg::F32(v) => Some(*v),
+                    _ => None,
+                })
+                .ok_or_else(|| self.err("saxpy needs an F32 scalar arg"))?;
+            // Heap-allocate the scalar so the byte→f32 cast inside
+            // literal_from_bytes sees an aligned buffer.
+            let a_bytes = a.to_le_bytes().to_vec();
+            inputs.push(
+                literal_from_bytes(ElemType::F32, &a_bytes, true)
+                    .map_err(|e| self.err(format!("scalar literal: {e:#}")))?,
+            );
         }
+        for (idx, bytes) in in_sizes.iter().enumerate() {
+            inputs.push(input_of(&st, idx, *bytes)?);
+        }
+        let out_slot = in_sizes.len();
 
         let start = clock::now_ns();
         let results = module
@@ -267,7 +246,7 @@ impl Backend for PjrtBackend {
         let dst = st
             .bufs
             .get_mut(&out_id)
-            .and_then(|b| b.get_mut(..vec_bytes))
+            .and_then(|b| b.get_mut(..out_bytes))
             .ok_or_else(|| self.err("output buffer too small or dead"))?;
         literal_to_slice(ety, lit, dst)
             .map_err(|e| self.err(format!("decoding output: {e:#}")))?;
@@ -354,6 +333,46 @@ mod tests {
         let mut got = vec![0u8; n * 4];
         b.read(out, 0, &mut got).unwrap();
         assert_eq!(f32::from_le_bytes(got[..4].try_into().unwrap()), 5.0);
+    }
+
+    #[test]
+    fn reduce_stencil_matmul_through_the_trait() {
+        let bk = backend();
+        // reduce: 16 words of 1 → 16.
+        let k = bk.compile(&CompileSpec::reduce(16)).unwrap();
+        let (inb, outb) = (bk.alloc(16 * 8).unwrap(), bk.alloc(8).unwrap());
+        let ones: Vec<u8> = (0..16u64).flat_map(|_| 1u64.to_le_bytes()).collect();
+        bk.write(inb, 0, &ones).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)]).unwrap();
+        let mut got = [0u8; 8];
+        bk.read(outb, 0, &mut got).unwrap();
+        assert_eq!(u64::from_le_bytes(got), 16);
+
+        // stencil5 on a 2×2 all-ones grid: every cell has 2 neighbours.
+        let k = bk.compile(&CompileSpec::stencil5(2, 2)).unwrap();
+        let (g, o) = (bk.alloc(16).unwrap(), bk.alloc(16).unwrap());
+        let grid: Vec<u8> = (0..4).flat_map(|_| 1.0f32.to_le_bytes()).collect();
+        bk.write(g, 0, &grid).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(g), LaunchArg::Buf(o)]).unwrap();
+        let mut got = vec![0u8; 16];
+        bk.read(o, 0, &mut got).unwrap();
+        assert_eq!(f32::from_le_bytes(got[..4].try_into().unwrap()), 0.75);
+
+        // matmul by the 2×2 identity.
+        let k = bk.compile(&CompileSpec::matmul(2, 2)).unwrap();
+        let (a, b, c) =
+            (bk.alloc(16).unwrap(), bk.alloc(16).unwrap(), bk.alloc(16).unwrap());
+        let av: Vec<u8> =
+            [1.0f32, 2.0, 3.0, 4.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let ident: Vec<u8> =
+            [1.0f32, 0.0, 0.0, 1.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        bk.write(a, 0, &av).unwrap();
+        bk.write(b, 0, &ident).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(a), LaunchArg::Buf(b), LaunchArg::Buf(c)])
+            .unwrap();
+        let mut got = vec![0u8; 16];
+        bk.read(c, 0, &mut got).unwrap();
+        assert_eq!(got, av);
     }
 
     #[test]

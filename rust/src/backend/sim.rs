@@ -95,7 +95,7 @@ impl SimBackend {
 /// models can never drift apart.
 fn model_cost(spec: &CompileSpec) -> (u64, u64) {
     let n = spec.n as u64;
-    let (ops, bytes) = spec.kind.per_elem_cost(spec.k);
+    let (ops, bytes) = spec.kind.per_elem_cost(spec.k, spec.m);
     (ops * n, bytes * n)
 }
 
@@ -113,7 +113,7 @@ impl Backend for SimBackend {
     }
 
     fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
-        if spec.n == 0 || spec.k == 0 {
+        if spec.n == 0 || spec.k == 0 || spec.m == 0 || spec.n % spec.m != 0 {
             return Err(self.err(format!("degenerate kernel spec {spec:?}")));
         }
         let mut st = self.state.lock().unwrap();
@@ -231,6 +231,27 @@ impl Backend for SimBackend {
                 simexec::run_saxpy(a, &x, &y, &mut out);
                 put(&mut st, 2, &out)?;
             }
+            KernelKind::Reduce => {
+                let input = take(&st, 0, spec.n * 8)?;
+                let mut out = [0u8; 8];
+                simexec::run_reduce(&input, &mut out);
+                put(&mut st, 1, &out)?;
+            }
+            KernelKind::Stencil5 => {
+                let (h, w) = (spec.n / spec.m, spec.m);
+                let input = take(&st, 0, spec.n * 4)?;
+                let mut out = vec![0u8; spec.n * 4];
+                simexec::run_stencil5(&input, &mut out, h, w);
+                put(&mut st, 1, &out)?;
+            }
+            KernelKind::Matmul => {
+                let (rows, d) = (spec.n / spec.m, spec.m);
+                let a = take(&st, 0, spec.n * 4)?;
+                let b = take(&st, 1, d * d * 4)?;
+                let mut out = vec![0u8; spec.n * 4];
+                simexec::run_matmul(&a, &b, &mut out, rows, d);
+                put(&mut st, 2, &out)?;
+            }
         }
 
         let (ops, bytes) = model_cost(&spec);
@@ -341,6 +362,29 @@ mod tests {
         assert_eq!(a, c, "same spec must reuse the kernel handle");
         let d = b.compile(&CompileSpec::step(128)).unwrap();
         assert_ne!(a, d);
+    }
+
+    #[test]
+    fn workload_kernels_match_reference() {
+        let bk = backend();
+        // reduce over the first 32 seeds equals the host tree fold.
+        let seeds: Vec<u64> = (0..32).map(simexec::init_seed).collect();
+        let bytes: Vec<u8> = seeds.iter().flat_map(|s| s.to_le_bytes()).collect();
+        let k = bk.compile(&CompileSpec::reduce(32)).unwrap();
+        let (inb, outb) = (bk.alloc(32 * 8).unwrap(), bk.alloc(8).unwrap());
+        bk.write(inb, 0, &bytes).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)]).unwrap();
+        let mut got = [0u8; 8];
+        bk.read(outb, 0, &mut got).unwrap();
+        assert_eq!(u64::from_le_bytes(got), simexec::reduce_tree(&seeds));
+    }
+
+    #[test]
+    fn degenerate_2d_specs_rejected_at_compile() {
+        let bk = backend();
+        // n not divisible by m.
+        let bad = CompileSpec { m: 7, ..CompileSpec::stencil5(4, 4) };
+        assert!(bk.compile(&bad).is_err());
     }
 
     #[test]

@@ -129,6 +129,20 @@ impl Program {
         Self::new_from_sources(ctx, &sources)
     }
 
+    /// cf4rs extension: generate + load modules for explicit generator
+    /// specs. Needed by kernels whose geometry `(kind, n)` alone cannot
+    /// carry — a sharded init's `gid_offset`, a stencil grid's width, a
+    /// matmul's inner dimension.
+    pub fn new_from_specs(ctx: &Context, specs: &[hlogen::GenSpec]) -> CclResult<Self> {
+        let mut sources = Vec::with_capacity(specs.len());
+        for s in specs {
+            sources.push(hlogen::resolve_source(s).map_err(|e| {
+                CclError::artifacts(format!("resolving generator spec {s:?}: {e}"))
+            })?);
+        }
+        Self::new_from_sources(ctx, &sources)
+    }
+
     pub fn handle(&self) -> ProgramH {
         self.h
     }

@@ -225,6 +225,15 @@ impl Session {
         Ok(self)
     }
 
+    /// Load + build generated modules from explicit generator specs —
+    /// for kernels whose geometry `(kind, n)` cannot carry (2-D grids,
+    /// sharded-init offsets).
+    pub fn load_specs(&self, specs: &[crate::runtime::GenSpec]) -> CclResult<&Self> {
+        let prg = Program::new_from_specs(&self.ctx, specs)?;
+        self.register_program(prg)?;
+        Ok(self)
+    }
+
     /// Build `prg` (folding the build log into the error on failure, so
     /// callers don't need the v1 build-log dance) and index its kernels.
     fn register_program(&self, prg: Program) -> CclResult<()> {

@@ -7,9 +7,10 @@
 //! * [`rng_service`] — the massive-PRNG service (Fig. 2's two-thread,
 //!   two-queue, double-buffered pipeline) in both realisations: on the
 //!   `ccl` framework and on the raw substrate.
-//! * [`scheduler`] — the multi-device realisation: the same service
-//!   sharded across every backend in the [`crate::backend`] registry
-//!   with work stealing, merged output and cross-backend profiling.
+//! * [`scheduler`] — the multi-device realisation: any
+//!   [`crate::workload::Workload`] (the PRNG service included) sharded
+//!   across every backend in the [`crate::backend`] registry with work
+//!   stealing, merged output and cross-backend profiling.
 //! * [`stats`] — statistical screening of the output stream (the
 //!   Dieharder substitution, see DESIGN.md).
 
@@ -21,5 +22,8 @@ pub mod stats;
 
 pub use pipeline::{run_double_buffered, PipelineError};
 pub use rng_service::{run_ccl, run_raw, run_v2, RngConfig, RunOutcome, Sink};
-pub use scheduler::{run_sharded, run_sharded_on, ShardedOutcome, ShardedRngConfig};
+pub use scheduler::{
+    run_sharded, run_sharded_on, run_sharded_workload, run_sharded_workload_on,
+    ShardedConfig, ShardedOutcome, ShardedRngConfig, WorkloadOutcome,
+};
 pub use sem::Semaphore;

@@ -1,24 +1,29 @@
 //! Multi-device work-stealing scheduler over the unified backend layer.
 //!
 //! The §5 PRNG service drives *one* device; this module drives **all
-//! registered backends at once** (EngineCL-style): each request is split
-//! into contiguous stream chunks, every iteration dispatches one task
-//! per chunk across the backends' queues, idle backends steal queued
-//! tasks from loaded ones, and the per-chunk batches merge — in stream
-//! order — into one output that is **bit-identical** to a single-device
-//! run:
+//! registered backends at once** (EngineCL-style) — and it is
+//! **workload-agnostic**: any [`Workload`] shards across the registry.
+//! The principal index space is split into contiguous chunks, every
+//! iteration dispatches one task per chunk across the backends' queues,
+//! idle backends steal queued tasks from loaded ones, and the per-chunk
+//! outputs merge — through the workload's own
+//! [`merge`](Workload::merge) — into one result that is
+//! **bit-identical** to a single-device run:
 //!
-//! * chunk `c = [lo, lo+n)` is seeded by `prng_init` with
-//!   `gid_offset = lo`, so the concatenation of chunk seeds equals the
-//!   whole-stream seed batch;
-//! * the xorshift step is elementwise, so stepping chunks independently
-//!   equals stepping the whole stream.
+//! * PRNG: chunk `[lo, lo+n)` is seeded by `prng_init` with
+//!   `gid_offset = lo` (concatenated chunk seeds equal the whole-stream
+//!   seed batch) and the xorshift step is elementwise;
+//! * reduce: chunks produce partial sums folded with wrapping
+//!   (associative) adds;
+//! * stencil: row bands carry a one-row halo whose exchange is the
+//!   per-iteration re-slice of the merged grid;
+//! * saxpy/matmul: elementwise / row-band concatenation.
 //!
-//! Chunk state round-trips through the host every iteration (the
-//! service streams every batch out anyway), which is what makes
-//! stealing cheap: a stolen task just writes its state to the thief's
-//! buffers. Sticky home assignment keeps chunks on one backend when
-//! nobody is starved.
+//! Chunk inputs round-trip through the host every iteration (the PRNG
+//! service streams every batch out anyway, and halo exchange needs the
+//! merged state), which is what makes stealing cheap: a stolen task
+//! just writes its inputs to the thief's buffers. Sticky home
+//! assignment keeps chunks on one backend when nobody is starved.
 //!
 //! Profiling: each backend's drained command timeline feeds
 //! [`Prof::add_timeline`], so one profile aggregates kernels and
@@ -30,12 +35,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::backend::{
-    Backend, BackendRegistry, BufId, CompileSpec, KernelId, LaunchArg,
-};
+use crate::backend::{Backend, BackendRegistry, BufId, CompileSpec, KernelId};
 use crate::ccl::errors::{CclError, CclResult};
 use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
+use crate::workload::{PrngWorkload, Shard, Workload};
 
 use super::rng_service::{sink_consume, Sink};
 
@@ -99,11 +103,56 @@ pub struct ShardedOutcome {
     pub prof_export: Option<String>,
 }
 
-/// One stream shard and its current state vector.
-struct Chunk {
-    lo: usize,
-    n: usize,
-    state: Mutex<Vec<u8>>,
+/// Configuration of one sharded workload request — the generalisation
+/// of [`ShardedRngConfig`] to any [`Workload`].
+pub struct ShardedConfig<W: Workload> {
+    pub workload: W,
+    /// Iterations to run.
+    pub iters: usize,
+    /// Target chunks per backend (>1 keeps the stealing deques busy).
+    pub chunks_per_backend: usize,
+    /// Minimum chunk size in workload units (small requests shard less).
+    pub min_chunk: usize,
+    /// Aggregate per-backend event timelines into one profile.
+    pub profile: bool,
+    /// Offered every iteration's merged output (the PRNG service's
+    /// streaming sink; use [`Sink::Discard`] when only the final output
+    /// matters).
+    pub sink: Sink,
+    /// Device filter selecting the backends to dispatch to
+    /// (`None` = every registered backend).
+    pub selector: Option<FilterChain>,
+}
+
+impl<W: Workload> ShardedConfig<W> {
+    pub fn new(workload: W, iters: usize) -> Self {
+        Self {
+            workload,
+            iters,
+            chunks_per_backend: 2,
+            min_chunk: 1,
+            profile: false,
+            sink: Sink::Discard,
+            selector: None,
+        }
+    }
+}
+
+/// What a sharded workload run produced.
+#[derive(Debug)]
+pub struct WorkloadOutcome {
+    pub wall: Duration,
+    /// The last iteration's merged output (must equal
+    /// [`Workload::reference`]).
+    pub final_output: Vec<u8>,
+    /// First-iteration sample (when `Sink::Sample`).
+    pub sample: Vec<u64>,
+    pub num_chunks: usize,
+    pub per_backend: Vec<BackendLoad>,
+    /// Fig. 3-style aggregate summary across all backends.
+    pub prof_summary: Option<String>,
+    /// Fig. 5-style event table across all backends.
+    pub prof_export: Option<String>,
 }
 
 /// Per-backend scratch owned by the scheduler (kernel + buffer caches).
@@ -161,81 +210,144 @@ fn plan_chunks(words: usize, target: usize, min_chunk: usize) -> Vec<(usize, usi
     out
 }
 
-/// Run one task: advance `chunk` by one stage on backend `b`.
+/// Run one task: execute `workload.plan(shard, iter, state)` on
+/// backend `b`, leaving the shard's output bytes in `out`.
 fn run_task(
     b: &dyn Backend,
     scratch: &BackendScratch,
-    chunk: &Chunk,
-    is_init: bool,
+    workload: &dyn Workload,
+    shard: Shard,
+    iter: usize,
+    state: &[u8],
+    out: &Mutex<Vec<u8>>,
 ) -> Result<(), String> {
-    let bytes = chunk.n * 8;
-    if is_init {
-        let kernel = scratch.kernel(b, CompileSpec::init_at(chunk.n, chunk.lo as u64))?;
-        let out = scratch.acquire(b, bytes)?;
-        let result: Result<(), String> = (|| {
-            let ev = b.enqueue(kernel, &[LaunchArg::Buf(out)]).map_err(|e| e.to_string())?;
-            b.wait(ev).map_err(|e| e.to_string())?;
-            let mut state = chunk.state.lock().unwrap();
-            state.resize(bytes, 0);
-            b.read(out, 0, &mut state).map_err(|e| e.to_string())?;
-            Ok(())
-        })();
-        scratch.release(bytes, out);
-        result
-    } else {
-        let kernel = scratch.kernel(b, CompileSpec::step(chunk.n))?;
-        let inb = scratch.acquire(b, bytes)?;
-        let outb = scratch.acquire(b, bytes)?;
-        let result: Result<(), String> = (|| {
-            {
-                let state = chunk.state.lock().unwrap();
-                b.write(inb, 0, &state).map_err(|e| e.to_string())?;
-            }
-            let ev = b
-                .enqueue(kernel, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)])
-                .map_err(|e| e.to_string())?;
-            b.wait(ev).map_err(|e| e.to_string())?;
-            let mut state = chunk.state.lock().unwrap();
-            b.read(outb, 0, &mut state).map_err(|e| e.to_string())?;
-            Ok(())
-        })();
-        scratch.release(bytes, inb);
-        scratch.release(bytes, outb);
-        result
+    let specs = workload.kernels(shard);
+    let plan = workload.plan(shard, iter, state);
+    let spec = *specs
+        .get(plan.kernel)
+        .ok_or_else(|| "plan names a kernel the workload did not declare".to_string())?;
+    let kernel = scratch.kernel(b, spec)?;
+
+    let mut in_bufs = Vec::with_capacity(plan.inputs.len());
+    let mut acquired: Vec<(usize, BufId)> = Vec::new();
+    let result: Result<(), String> = (|| {
+        for data in &plan.inputs {
+            let buf = scratch.acquire(b, data.len())?;
+            acquired.push((data.len(), buf));
+            b.write(buf, 0, data).map_err(|e| e.to_string())?;
+            in_bufs.push(buf);
+        }
+        let out_buf = scratch.acquire(b, plan.out_bytes)?;
+        acquired.push((plan.out_bytes, out_buf));
+        let args = spec.launch_args(&in_bufs, out_buf, &plan.scalars);
+        let ev = b.enqueue(kernel, &args).map_err(|e| e.to_string())?;
+        b.wait(ev).map_err(|e| e.to_string())?;
+        let mut dst = out.lock().unwrap();
+        dst.resize(plan.out_bytes, 0);
+        b.read(out_buf, 0, &mut dst).map_err(|e| e.to_string())?;
+        Ok(())
+    })();
+    for (bytes, buf) in acquired {
+        scratch.release(bytes, buf);
     }
+    result
 }
 
-/// Run a sharded request over the global backend registry.
+/// Run a sharded PRNG request over the global backend registry.
 pub fn run_sharded(cfg: &ShardedRngConfig) -> CclResult<ShardedOutcome> {
     run_sharded_on(BackendRegistry::global(), cfg)
 }
 
-/// Run a sharded request over an explicit registry.
+/// Run a sharded PRNG request over an explicit registry — a thin
+/// wrapper putting [`PrngWorkload`] through the workload-agnostic
+/// engine (the service's streaming sink semantics are the engine's
+/// per-iteration sink).
 pub fn run_sharded_on(
     registry: &BackendRegistry,
     cfg: &ShardedRngConfig,
 ) -> CclResult<ShardedOutcome> {
-    let backends: Vec<Arc<dyn Backend>> = match &cfg.selector {
+    let workload = PrngWorkload::new(cfg.numrn);
+    let out = run_workload_engine(
+        registry,
+        &workload,
+        cfg.iters,
+        cfg.chunks_per_backend,
+        cfg.min_chunk,
+        cfg.profile,
+        cfg.selector.as_ref(),
+        &cfg.sink,
+    )?;
+    Ok(ShardedOutcome {
+        wall: out.wall,
+        total_bytes: (8 * cfg.numrn * cfg.iters) as u64,
+        sample: out.sample,
+        num_chunks: out.num_chunks,
+        per_backend: out.per_backend,
+        prof_summary: out.prof_summary,
+        prof_export: out.prof_export,
+    })
+}
+
+/// Run a sharded workload over the global backend registry.
+pub fn run_sharded_workload<W: Workload>(
+    cfg: &ShardedConfig<W>,
+) -> CclResult<WorkloadOutcome> {
+    run_sharded_workload_on(BackendRegistry::global(), cfg)
+}
+
+/// Run a sharded workload over an explicit registry.
+pub fn run_sharded_workload_on<W: Workload>(
+    registry: &BackendRegistry,
+    cfg: &ShardedConfig<W>,
+) -> CclResult<WorkloadOutcome> {
+    run_workload_engine(
+        registry,
+        &cfg.workload,
+        cfg.iters,
+        cfg.chunks_per_backend,
+        cfg.min_chunk,
+        cfg.profile,
+        cfg.selector.as_ref(),
+        &cfg.sink,
+    )
+}
+
+/// The workload-agnostic scheduling engine: shard, dispatch with work
+/// stealing, merge, iterate.
+#[allow(clippy::too_many_arguments)]
+fn run_workload_engine(
+    registry: &BackendRegistry,
+    workload: &dyn Workload,
+    iters: usize,
+    chunks_per_backend: usize,
+    min_chunk: usize,
+    profile: bool,
+    selector: Option<&FilterChain>,
+    sink: &Sink,
+) -> CclResult<WorkloadOutcome> {
+    let backends: Vec<Arc<dyn Backend>> = match selector {
         Some(chain) => registry.select(chain),
         None => registry.backends(),
     };
     if backends.is_empty() {
         return Err(CclError::framework("no backend matched the scheduler selector"));
     }
-    if cfg.numrn == 0 || cfg.iters == 0 {
-        return Err(CclError::framework("sharded run needs numrn > 0 and iters > 0"));
+    if workload.units() == 0 || iters == 0 {
+        return Err(CclError::framework(
+            "sharded run needs a non-empty workload and iters > 0",
+        ));
     }
 
     let nb = backends.len();
     let plan = plan_chunks(
-        cfg.numrn,
-        nb * cfg.chunks_per_backend.max(1),
-        cfg.min_chunk,
+        workload.units(),
+        nb * chunks_per_backend.max(1),
+        min_chunk,
     );
-    let chunks: Vec<Chunk> = plan
-        .iter()
-        .map(|&(lo, n)| Chunk { lo, n, state: Mutex::new(Vec::new()) })
-        .collect();
+    let shards: Vec<Shard> =
+        plan.iter().map(|&(lo, len)| Shard { lo, len }).collect();
+    let outputs: Vec<Mutex<Vec<u8>>> =
+        (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
 
     let scratch: Vec<BackendScratch> =
         (0..nb).map(|_| BackendScratch::new()).collect();
@@ -257,17 +369,21 @@ pub fn run_sharded_on(
     let mut sample = Vec::new();
     let mut busy_acc = vec![0u64; nb];
     let mut run_err: Option<CclError> = None;
+    let mut state = workload.init_state();
+    let mut final_output = Vec::new();
 
-    for iter in 0..cfg.iters {
+    for iter in 0..iters {
         // Seed the deques: sticky home assignment, round-robin.
-        for ci in 0..chunks.len() {
+        for ci in 0..shards.len() {
             deques[ci % nb].lock().unwrap().push_back(ci);
         }
 
+        let state_ref: &[u8] = &state;
         std::thread::scope(|scope| {
             for (bi, backend) in backends.iter().enumerate() {
                 let deques = &deques;
-                let chunks = &chunks;
+                let shards = &shards;
+                let outputs = &outputs;
                 let scratch = &scratch[bi];
                 let tasks_run = &tasks_run[bi];
                 let stolen_ctr = &stolen[bi];
@@ -292,7 +408,15 @@ pub fn run_sharded_on(
                             }
                         }
                         let Some(ci) = task else { return };
-                        let r = run_task(backend.as_ref(), scratch, &chunks[ci], iter == 0);
+                        let r = run_task(
+                            backend.as_ref(),
+                            scratch,
+                            workload,
+                            shards[ci],
+                            iter,
+                            state_ref,
+                            &outputs[ci],
+                        );
                         match r {
                             Ok(()) => {
                                 tasks_run.fetch_add(1, Ordering::Relaxed);
@@ -318,27 +442,32 @@ pub fn run_sharded_on(
         // Without profiling, drain (and discard) timelines every
         // iteration so a long streaming run stays memory-bounded; the
         // busy totals still accumulate.
-        if !cfg.profile {
+        if !profile {
             for (bi, b) in backends.iter().enumerate() {
                 busy_acc[bi] +=
                     b.drain_timeline().iter().map(|(_, t)| t.duration()).sum::<u64>();
             }
         }
 
-        // Barrier reached: merge this iteration's batches in stream
-        // order — but only when the sink will actually look at them
-        // (Discard never does; Sample only until the sample is taken).
-        let need_batch = match &cfg.sink {
-            Sink::Discard => false,
-            Sink::Sample(_) => sample.is_empty(),
-            Sink::Writer(_) => true,
-        };
-        if need_batch {
-            let mut batch = Vec::with_capacity(cfg.numrn * 8);
-            for c in &chunks {
-                batch.extend_from_slice(&c.state.lock().unwrap());
-            }
-            sink_consume(&cfg.sink, &mut sample, &batch);
+        // Barrier reached: merge this iteration's shard outputs through
+        // the workload (concat / partial-sum fold / halo trim). The
+        // merged output feeds the sink (the PRNG service's streaming
+        // contract) and derives the next state (halo exchange happens
+        // here: the next iteration re-slices the merged grid). Shard
+        // buffers are *taken*, not cloned — run_task resizes and
+        // rewrites them from scratch next iteration — and on the final
+        // iteration the merged vec moves straight into the result, so
+        // the streaming hot path does no avoidable full-stream copies.
+        let iter_outputs: Vec<Vec<u8>> = outputs
+            .iter()
+            .map(|o| std::mem::take(&mut *o.lock().unwrap()))
+            .collect();
+        let merged = workload.merge(&shards, &iter_outputs);
+        sink_consume(sink, &mut sample, &merged);
+        if iter + 1 == iters {
+            final_output = merged;
+        } else {
+            state = workload.next_state(state, merged);
         }
     }
 
@@ -356,7 +485,7 @@ pub fn run_sharded_on(
             stolen: stolen[bi].load(Ordering::Relaxed),
             busy_ns,
         });
-        if cfg.profile {
+        if profile {
             prof.add_timeline(
                 b.name(),
                 timeline
@@ -378,18 +507,18 @@ pub fn run_sharded_on(
         return Err(e);
     }
 
-    let (prof_summary, prof_export) = if cfg.profile {
+    let (prof_summary, prof_export) = if profile {
         prof.calc()?;
         (Some(prof.summary_default()), Some(prof.export_string()?))
     } else {
         (None, None)
     };
 
-    Ok(ShardedOutcome {
+    Ok(WorkloadOutcome {
         wall,
-        total_bytes: (8 * cfg.numrn * cfg.iters) as u64,
+        final_output,
         sample,
-        num_chunks: chunks.len(),
+        num_chunks: shards.len(),
         per_backend,
         prof_summary,
         prof_export,
@@ -434,5 +563,30 @@ mod tests {
     fn zero_work_is_rejected() {
         assert!(run_sharded(&cfg(0, 2)).is_err());
         assert!(run_sharded(&cfg(1024, 0)).is_err());
+    }
+
+    #[test]
+    fn sharded_stencil_halo_exchange_matches_reference() {
+        use crate::workload::StencilWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let w = StencilWorkload::new(24, 16);
+        let mut scfg = ShardedConfig::new(w, 3);
+        scfg.min_chunk = 4; // force several row bands
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert!(out.num_chunks >= 2, "should shard into bands");
+        assert_eq!(out.final_output, w.reference(3), "halo exchange must be exact");
+    }
+
+    #[test]
+    fn sharded_reduce_folds_partial_sums() {
+        use crate::workload::ReduceWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let w = ReduceWorkload::new(4096);
+        let mut scfg = ShardedConfig::new(w, 2);
+        scfg.min_chunk = 256;
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert!(out.num_chunks >= 2);
+        assert_eq!(out.final_output, w.reference(2));
+        assert_eq!(out.final_output.len(), 8, "one u64 word");
     }
 }

@@ -77,6 +77,66 @@ mod tests {
     }
 
     #[test]
+    fn try_wait_never_oversubscribes_under_contention() {
+        // N permits, 4 threads racing try_wait in a loop: exactly N
+        // claims may succeed, never more.
+        const PERMITS: usize = 100;
+        let s = Arc::new(Semaphore::new(PERMITS));
+        let claimed = Arc::new(Mutex::new(0usize));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let (s, claimed) = (s.clone(), claimed.clone());
+            handles.push(std::thread::spawn(move || {
+                let mut mine = 0usize;
+                while s.try_wait() {
+                    mine += 1;
+                }
+                *claimed.lock().unwrap() += mine;
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*claimed.lock().unwrap(), PERMITS);
+        assert!(!s.try_wait(), "no permits may remain");
+    }
+
+    #[test]
+    fn try_wait_drains_on_shutdown() {
+        // The shutdown idiom the services use: the producer posts one
+        // final time after setting a stop flag; the consumer switches
+        // from wait() to try_wait() and drains whatever is left without
+        // ever blocking.
+        let s = Arc::new(Semaphore::new(0));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (s2, stop2) = (s.clone(), stop.clone());
+        let producer = std::thread::spawn(move || {
+            for _ in 0..5 {
+                s2.post();
+            }
+            stop2.store(true, std::sync::atomic::Ordering::Release);
+            s2.post(); // wake a possibly-blocked consumer
+        });
+        let mut consumed = 0usize;
+        loop {
+            if stop.load(std::sync::atomic::Ordering::Acquire) {
+                // Drain without blocking — the shutdown path.
+                while s.try_wait() {
+                    consumed += 1;
+                }
+                break;
+            }
+            s.wait();
+            consumed += 1;
+        }
+        producer.join().unwrap();
+        // 5 real posts + 1 wake post, every one accounted for, and the
+        // consumer exited without deadlocking.
+        assert!((5..=6).contains(&consumed), "consumed {consumed}");
+        assert!(!s.try_wait() || consumed == 5);
+    }
+
+    #[test]
     fn ping_pong_between_threads() {
         // The §5 pattern: two semaphores alternating two workers.
         let a = Arc::new(Semaphore::new(1));

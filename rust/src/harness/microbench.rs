@@ -15,28 +15,38 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
-    pub fn median(&self) -> Duration {
+    /// Median sample; `None` when no samples were collected.
+    pub fn median(&self) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
         let mut s = self.samples.clone();
         s.sort();
-        s[s.len() / 2]
+        Some(s[s.len() / 2])
     }
 
-    pub fn min(&self) -> Duration {
-        *self.samples.iter().min().unwrap()
+    /// Minimum sample; `None` when no samples were collected (this used
+    /// to `unwrap()` and panic on an empty sample vec).
+    pub fn min(&self) -> Option<Duration> {
+        self.samples.iter().min().copied()
     }
 
-    pub fn mean(&self) -> Duration {
-        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    /// Mean sample; `None` when no samples were collected.
+    pub fn mean(&self) -> Option<Duration> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        Some(self.samples.iter().sum::<Duration>() / self.samples.len() as u32)
     }
 
     /// One-line report (ns for sub-ms results, ms otherwise).
     pub fn report(&self) -> String {
-        let fmt = |d: Duration| {
-            if d < Duration::from_millis(1) {
+        let fmt = |d: Option<Duration>| match d {
+            None => "        (none)".to_string(),
+            Some(d) if d < Duration::from_millis(1) => {
                 format!("{:>9} ns", d.as_nanos())
-            } else {
-                format!("{:>9.3} ms", d.as_secs_f64() * 1e3)
             }
+            Some(d) => format!("{:>9.3} ms", d.as_secs_f64() * 1e3),
         };
         format!(
             "{:<44} median {}  mean {}  min {}  ({} samples)",
@@ -98,7 +108,7 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert_eq!(r.samples.len(), 9);
-        assert!(r.min() <= r.median());
+        assert!(r.min().unwrap() <= r.median().unwrap());
         assert!(r.report().contains("noop"));
     }
 
@@ -108,6 +118,16 @@ mod tests {
             std::thread::sleep(Duration::from_micros(100));
         });
         // 100 µs / 10 ops = ~10 µs/op
-        assert!(r.median() < Duration::from_micros(100));
+        assert!(r.median().unwrap() < Duration::from_micros(100));
+    }
+
+    #[test]
+    fn empty_samples_do_not_panic() {
+        // Regression: min() used to unwrap() on the empty vec.
+        let r = BenchResult { name: "empty".into(), samples: vec![] };
+        assert_eq!(r.min(), None);
+        assert_eq!(r.median(), None);
+        assert_eq!(r.mean(), None);
+        assert!(r.report().contains("0 samples"));
     }
 }

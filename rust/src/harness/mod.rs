@@ -6,6 +6,9 @@
 //! * `bench figure3`  — E2, the Fig. 3 profiling summary;
 //! * `bench figure5`  — E4, the Fig. 5 queue utilization chart;
 //! * `bench backends` — the backend cross-validation/comparison table;
+//! * `bench workloads` — the (workload × path) matrix: every workload
+//!   through rawcl/ccl-v1/ccl-v2/sharded, timed and validated
+//!   bit-identical (writes `workloads.md` + `BENCH_workloads.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -16,6 +19,7 @@ pub mod figures;
 pub mod loc;
 pub mod microbench;
 pub mod overhead;
+pub mod workloads;
 
 use std::path::Path;
 
@@ -45,7 +49,8 @@ fn write_result(name: &str, content: &str) -> bool {
 pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
-            "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|all [--quick]"
+            "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
+             workloads|all [--quick]"
         );
         return 2;
     };
@@ -149,6 +154,19 @@ pub fn main(args: &[String]) -> i32 {
         }
     }
 
+    fn run_workloads(quick: bool) -> bool {
+        let (md, json, validated) = workloads::report(quick);
+        print!("{md}");
+        // Write both artifacts even when validation failed — they are
+        // the evidence — but fail the run on any divergence.
+        let mut ok = write_result("workloads.md", &md);
+        ok &= write_result("BENCH_workloads.json", &json);
+        if !validated {
+            eprintln!("workloads: cross-path validation FAILED (see table)");
+        }
+        ok && validated
+    }
+
     let ok = match which.as_str() {
         "loc" => run_loc(),
         "ablation" => run_ablation(quick),
@@ -156,6 +174,7 @@ pub fn main(args: &[String]) -> i32 {
         "figure3" => run_fig3(quick),
         "figure5" => run_fig5(quick),
         "backends" => run_backends(quick),
+        "workloads" => run_workloads(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -163,7 +182,8 @@ pub fn main(args: &[String]) -> i32 {
             let c = run_overhead(quick);
             let d = run_ablation(quick);
             let e = run_backends(quick);
-            l && a && b && c && d && e
+            let f = run_workloads(quick);
+            l && a && b && c && d && e && f
         }
         other => {
             eprintln!("unknown bench {other:?}");

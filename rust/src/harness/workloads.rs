@@ -1,0 +1,294 @@
+//! The (workload × path) cross-validation and timing matrix.
+//!
+//! Runs every [`Workload`] through all four execution paths — the raw
+//! substrate, the `ccl` v1 tier, the fluent `ccl::v2` tier and the
+//! multi-backend sharded scheduler — timing each cell and checking its
+//! output **bit-for-bit** against the host oracle. Any divergence is a
+//! correctness bug and fails the run (CI gates on it).
+//!
+//! Emits two artifacts:
+//! * `results/workloads.md` — the human table;
+//! * `results/BENCH_workloads.json` — machine-readable per-cell
+//!   median/min/mean (schema [`SCHEMA`]), the repo's perf trajectory.
+
+use std::time::{Duration, Instant};
+
+use crate::backend::BackendRegistry;
+use crate::harness::microbench::BenchResult;
+use crate::workload::{
+    exec, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload,
+    StencilWorkload, Workload,
+};
+
+/// Version tag of `BENCH_workloads.json`. Bump on layout changes so
+/// trend tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-workloads/1";
+
+const PATHS: [&str; 4] = ["rawcl", "ccl-v1", "ccl-v2", "sharded"];
+
+/// One (workload × path) cell.
+struct Cell {
+    workload: &'static str,
+    path: &'static str,
+    units: usize,
+    iters: usize,
+    /// Wall-clock samples (absent entries = the path errored).
+    samples: Vec<Duration>,
+    /// Every sample's output matched the host oracle bit-for-bit.
+    validated: bool,
+    error: Option<String>,
+}
+
+impl Cell {
+    fn stats(&self) -> BenchResult {
+        BenchResult {
+            name: format!("{}/{}", self.workload, self.path),
+            samples: self.samples.clone(),
+        }
+    }
+}
+
+fn ms(d: Option<Duration>) -> Option<f64> {
+    d.map(|d| d.as_secs_f64() * 1e3)
+}
+
+/// Time + validate one workload on every path.
+fn bench_workload<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    samples: usize,
+    registry: &BackendRegistry,
+    cells: &mut Vec<Cell>,
+) {
+    let reference = w.reference(iters);
+    type Runner<'a> = Box<dyn Fn() -> Result<Vec<u8>, String> + 'a>;
+    let runners: Vec<(&'static str, Runner<'_>)> = vec![
+        // The raw path runs on a simulated device (exercising the
+        // queue-worker reference kernels); v1/v2 run on the native PJRT
+        // device (exercising the HLO interpreter); the sharded path
+        // spans every backend. Identical bytes from all of them is the
+        // cross-validation.
+        ("rawcl", Box::new(|| exec::run_raw_path(w, iters, 1))),
+        ("ccl-v1", Box::new(|| exec::run_ccl_path(w, iters, 0).map_err(|e| e.to_string()))),
+        ("ccl-v2", Box::new(|| exec::run_v2_path(w, iters, 0).map_err(|e| e.to_string()))),
+        (
+            "sharded",
+            Box::new(|| exec::run_sharded_path(w, iters, registry).map_err(|e| e.to_string())),
+        ),
+    ];
+
+    for (path, run) in &runners {
+        let mut cell = Cell {
+            workload: w.name(),
+            path: *path,
+            units: w.units(),
+            iters,
+            samples: Vec::new(),
+            validated: true,
+            error: None,
+        };
+        // One unmeasured warmup covers kernel compilation.
+        match run() {
+            Ok(out) => cell.validated &= out == reference,
+            Err(e) => {
+                cell.validated = false;
+                cell.error = Some(e);
+            }
+        }
+        if cell.error.is_none() {
+            for _ in 0..samples {
+                let t0 = Instant::now();
+                match run() {
+                    Ok(out) => {
+                        cell.samples.push(t0.elapsed());
+                        cell.validated &= out == reference;
+                    }
+                    Err(e) => {
+                        cell.validated = false;
+                        cell.error = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        cells.push(cell);
+    }
+}
+
+/// Render the markdown table.
+fn render_md(cells: &[Cell], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# Workload × path matrix — {} mode, every cell validated \
+         bit-identical against the host oracle\n\n",
+        if quick { "quick" } else { "full" }
+    ));
+    s.push_str("| workload | units | iters |");
+    for p in PATHS {
+        s.push_str(&format!(" {p} |"));
+    }
+    s.push_str("\n|---|---:|---:|");
+    for _ in PATHS {
+        s.push_str("---:|");
+    }
+    s.push('\n');
+
+    let mut row_keys: Vec<&'static str> = Vec::new();
+    for c in cells {
+        if !row_keys.contains(&c.workload) {
+            row_keys.push(c.workload);
+        }
+    }
+    for wname in row_keys {
+        let row: Vec<&Cell> = cells.iter().filter(|c| c.workload == wname).collect();
+        let first = row.first().expect("row exists");
+        s.push_str(&format!("| {} | {} | {} |", wname, first.units, first.iters));
+        for p in PATHS {
+            let cell = row.iter().find(|c| c.path == p);
+            let txt = match cell {
+                Some(c) if c.validated => match ms(c.stats().median()) {
+                    Some(m) => format!("{m:.2} ms ✓"),
+                    None => "✓".to_string(),
+                },
+                Some(_) => "**DIVERGED**".to_string(),
+                None => "—".to_string(),
+            };
+            s.push_str(&format!(" {txt} |"));
+        }
+        s.push('\n');
+    }
+    s.push_str(
+        "\nEvery path executes the same logical kernels (scalar reference \
+         kernels on simulated devices, the HLO interpreter on the native \
+         device, both under the sharded scheduler), so timing differences \
+         are fair game but byte differences are bugs.\n",
+    );
+    for c in cells {
+        if let Some(e) = &c.error {
+            s.push_str(&format!("\n* `{}/{}` failed: {e}\n", c.workload, c.path));
+        }
+    }
+    s
+}
+
+/// JSON string escape for error messages.
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn json_num(v: Option<f64>) -> String {
+    match v {
+        Some(v) if v.is_finite() => format!("{v:.6}"),
+        _ => "null".to_string(),
+    }
+}
+
+/// Render `BENCH_workloads.json`.
+fn render_json(cells: &[Cell], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        let st = c.stats();
+        s.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"path\": \"{}\", \"units\": {}, \
+             \"iters\": {}, \"samples\": {}, \"median_ms\": {}, \
+             \"mean_ms\": {}, \"min_ms\": {}, \"validated\": {}{}}}{}\n",
+            c.workload,
+            c.path,
+            c.units,
+            c.iters,
+            c.samples.len(),
+            json_num(ms(st.median())),
+            json_num(ms(st.mean())),
+            json_num(ms(st.min())),
+            c.validated,
+            match &c.error {
+                Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+                None => String::new(),
+            },
+            if i + 1 < cells.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Build the full report. Returns `(markdown, json, all_validated)` —
+/// the caller writes both files even when validation failed (the
+/// artifacts are the evidence) but must exit non-zero on `!ok`.
+pub fn report(quick: bool) -> (String, String, bool) {
+    let samples = if quick { 3 } else { 5 };
+    // A fresh registry keeps profiling/timeline state isolated from the
+    // process-global one other harness commands use.
+    let registry = BackendRegistry::with_default_backends();
+    let mut cells = Vec::new();
+
+    if quick {
+        bench_workload(&PrngWorkload::new(8192), 3, samples, &registry, &mut cells);
+        bench_workload(&SaxpyWorkload::new(8192, 2.5), 3, samples, &registry, &mut cells);
+        bench_workload(&ReduceWorkload::new(16384), 2, samples, &registry, &mut cells);
+        bench_workload(&StencilWorkload::new(48, 32), 3, samples, &registry, &mut cells);
+        bench_workload(&MatmulWorkload::new(24), 2, samples, &registry, &mut cells);
+    } else {
+        bench_workload(&PrngWorkload::new(65536), 6, samples, &registry, &mut cells);
+        bench_workload(&SaxpyWorkload::new(65536, 2.5), 4, samples, &registry, &mut cells);
+        bench_workload(&ReduceWorkload::new(262144), 2, samples, &registry, &mut cells);
+        bench_workload(&StencilWorkload::new(96, 96), 4, samples, &registry, &mut cells);
+        bench_workload(&MatmulWorkload::new(64), 2, samples, &registry, &mut cells);
+    }
+
+    let ok = cells.iter().all(|c| c.validated);
+    (render_md(&cells, quick), render_json(&cells, quick), ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping_and_nulls() {
+        let cells = vec![Cell {
+            workload: "prng",
+            path: "rawcl",
+            units: 8,
+            iters: 1,
+            samples: vec![],
+            validated: false,
+            error: Some("a \"quoted\"\nfailure".to_string()),
+        }];
+        let j = render_json(&cells, true);
+        assert!(j.contains("\"median_ms\": null"));
+        assert!(j.contains("a \\\"quoted\\\"\\nfailure"));
+        assert!(j.contains(SCHEMA));
+        // No trailing comma in a 1-element array.
+        assert!(!j.contains("}},\n  ]"));
+    }
+
+    #[test]
+    fn quick_matrix_is_fully_validated() {
+        // The acceptance-criteria invariant: 5 workloads × 4 paths, all
+        // bit-identical. (Small sizes keep this test fast; the CI
+        // bench-gate runs the real --quick matrix end-to-end.)
+        let registry = BackendRegistry::with_default_backends();
+        let mut cells = Vec::new();
+        bench_workload(&PrngWorkload::new(512), 2, 1, &registry, &mut cells);
+        bench_workload(&SaxpyWorkload::new(512, 2.5), 2, 1, &registry, &mut cells);
+        bench_workload(&ReduceWorkload::new(512), 1, 1, &registry, &mut cells);
+        bench_workload(&StencilWorkload::new(12, 8), 2, 1, &registry, &mut cells);
+        bench_workload(&MatmulWorkload::new(8), 1, 1, &registry, &mut cells);
+        assert_eq!(cells.len(), 5 * 4);
+        for c in &cells {
+            assert!(
+                c.validated,
+                "{}/{} diverged: {:?}",
+                c.workload, c.path, c.error
+            );
+        }
+        let md = render_md(&cells, true);
+        assert!(md.contains("| prng |") && md.contains("sharded"));
+        assert!(!md.contains("DIVERGED"));
+    }
+}

@@ -26,9 +26,15 @@
 //!   device-selection filters select over. New substrates (GPU PJRT
 //!   plugins, remote workers) plug in by implementing the trait and
 //!   registering — no caller changes.
+//! * [`workload`] — the workload-agnostic execution contract: a
+//!   [`workload::Workload`] trait (kernels / shard / plan / merge /
+//!   verify) with five implementations (PRNG, SAXPY, tree reduction,
+//!   2-D 5-point stencil, tiled matmul) and drivers that run any of
+//!   them — bit-identically — through the raw substrate, the `ccl` v1
+//!   tier, the `ccl::v2` session tier and the sharded scheduler.
 //! * [`coordinator`] — the double-buffered streaming pipeline of §5, the
 //!   PRNG service built on it, and the multi-device work-stealing
-//!   scheduler that shards one request across every registered backend.
+//!   scheduler that shards any workload across every registered backend.
 //! * [`harness`] — benchmark drivers that regenerate every table and
 //!   figure of the paper's evaluation (§6), plus the backend-comparison
 //!   table.
@@ -42,3 +48,4 @@ pub mod harness;
 pub mod rawcl;
 pub mod runtime;
 pub mod utils;
+pub mod workload;

@@ -6,7 +6,8 @@
 //! * `plot-events`  — the paper's `ccl_plot_events` chart generator;
 //! * `rng`          — run the §5 PRNG service (ccl or raw realisation);
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
-//!   `overhead`, `figure3`, `figure5`.
+//!   `overhead`, `figure3`, `figure5` — plus the backend comparison
+//!   (`backends`) and the workload × path matrix (`workloads`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -25,8 +26,9 @@ fn usage() -> i32 {
          \x20     [--no-profile] [--summary] [--export FILE] [--stdout]\n\
          \x20     (--v2 runs through the fluent ccl::v2 tier;\n\
          \x20      --sharded dispatches across ALL backends, work-stealing)\n\
-         \x20 bench loc|overhead|figure3|figure5|backends [args]\n\
-         \x20     regenerate paper results + backend comparison"
+         \x20 bench loc|overhead|figure3|figure5|backends|workloads [args]\n\
+         \x20     regenerate paper results, backend comparison, and the\n\
+         \x20     (workload x path) validation/timing matrix (--quick)"
     );
     2
 }

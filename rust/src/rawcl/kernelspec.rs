@@ -32,8 +32,11 @@ pub struct KernelSpec {
     /// Kernel name as exposed to hosts (module name minus `jit_`).
     pub name: String,
     pub args: Vec<ArgRole>,
-    /// Principal problem size (elements).
+    /// Principal problem size (elements of the principal vector/grid).
     pub n: usize,
+    /// Secondary dimension: stencil grid width / matmul inner dimension
+    /// (1 for the 1-D families).
+    pub m: usize,
     /// Simple-op count per element (for the sim timing model).
     pub ops_per_elem: u64,
     /// Device-memory bytes touched per element (for the timing model).
@@ -50,19 +53,29 @@ pub enum KernelKind {
     PrngMultiStep,
     VecAdd,
     Saxpy,
+    /// Wrapping-u64 tree reduction to one word.
+    Reduce,
+    /// 2-D 5-point stencil over an `(n/m) × m` f32 grid.
+    Stencil5,
+    /// Tiled matmul: an `(n/m) × m` row band of A times an `m × m` B.
+    Matmul,
 }
 
 impl KernelKind {
     /// Per-element roofline costs `(simple ops, device-memory bytes)` of
-    /// this family at fused step count `k` — the single source for every
-    /// sim timing model (the `rawcl` queue workers via [`spec_for`] and
-    /// the backend layer's `SimBackend`).
-    pub fn per_elem_cost(self, k: usize) -> (u64, u64) {
+    /// this family at fused step count `k` and secondary dimension `m` —
+    /// the single source for every sim timing model (the `rawcl` queue
+    /// workers via [`spec_for`] and the backend layer's `SimBackend`).
+    pub fn per_elem_cost(self, k: usize, m: usize) -> (u64, u64) {
         match self {
             Self::PrngInit => (22, 8), // ~11 hash lines × 2 ops
             Self::PrngStep | Self::PrngMultiStep => (6 * k as u64, 16),
             Self::VecAdd => (1, 12),
             Self::Saxpy => (2, 12),
+            Self::Reduce => (1, 8),
+            Self::Stencil5 => (6, 8), // neighbours assumed cache-resident
+            // Per C element: m multiply-adds; A row streamed, B cached.
+            Self::Matmul => (2 * m.max(1) as u64, 4 * m.max(1) as u64),
         }
     }
 
@@ -74,7 +87,78 @@ impl KernelKind {
             "prng_multi_step" => Some(Self::PrngMultiStep),
             "vecadd" => Some(Self::VecAdd),
             "saxpy" => Some(Self::Saxpy),
+            "reduce" => Some(Self::Reduce),
+            "stencil5" => Some(Self::Stencil5),
+            "matmul" => Some(Self::Matmul),
             _ => None,
+        }
+    }
+
+    /// The module/kernel name this family is exposed under — the inverse
+    /// of [`from_module_name`](Self::from_module_name).
+    pub fn module_name(self) -> &'static str {
+        match self {
+            Self::PrngInit => "prng_init",
+            Self::PrngStep => "prng_step",
+            Self::PrngMultiStep => "prng_multi_step",
+            Self::VecAdd => "vecadd",
+            Self::Saxpy => "saxpy",
+            Self::Reduce => "reduce",
+            Self::Stencil5 => "stencil5",
+            Self::Matmul => "matmul",
+        }
+    }
+
+    /// The ordered OpenCL-style argument roles of this family at problem
+    /// size `n`, secondary dimension `m` — the single ABI source used by
+    /// [`spec_for`], the workload path drivers and the v2 launch
+    /// validator.
+    pub fn arg_roles(self, n: usize, m: usize) -> Vec<ArgRole> {
+        let m = m.max(1);
+        match self {
+            // Listing S4: init(__global uint2* seeds, uint nseeds)
+            Self::PrngInit => vec![
+                ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
+            ],
+            // Listing S5: rng(uint nseeds, __global ulong* in, out)
+            Self::PrngStep | Self::PrngMultiStep => vec![
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
+                ArgRole::BufferInput { dtype: ElemType::U64, bytes: n * 8 },
+                ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
+            ],
+            Self::VecAdd => vec![
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+            ],
+            Self::Saxpy => vec![
+                ArgRole::ScalarInput { dtype: ElemType::F32 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+            ],
+            // reduce(uint n, __global ulong* in, __global ulong* out)
+            Self::Reduce => vec![
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
+                ArgRole::BufferInput { dtype: ElemType::U64, bytes: n * 8 },
+                ArgRole::BufferOutput { dtype: ElemType::U64, bytes: 8 },
+            ],
+            // stencil5(uint h, uint w, __global float* in, out)
+            Self::Stencil5 => vec![
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some((n / m) as u32) },
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(m as u32) },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+            ],
+            // matmul(uint rows, uint d, __global float* a, b, c)
+            Self::Matmul => vec![
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some((n / m) as u32) },
+                ArgRole::BakedScalar { bytes: 4, expect_u32: Some(m as u32) },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
+                ArgRole::BufferInput { dtype: ElemType::F32, bytes: m * m * 4 },
+                ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
+            ],
         }
     }
 }
@@ -108,91 +192,71 @@ pub fn spec_for(meta: &HloMeta, defines: &[(String, String)]) -> Result<KernelSp
     let kind = KernelKind::from_module_name(&meta.name).ok_or_else(|| {
         format!(
             "unknown kernel {:?}: expected one of prng_init, prng_step, \
-             prng_multi_step, vecadd, saxpy",
+             prng_multi_step, vecadd, saxpy, reduce, stencil5, matmul",
             meta.name
         )
     })?;
-    let n = meta.problem_size();
-    if n == 0 {
-        return Err(format!("kernel {:?} has no result tensor", meta.name));
-    }
-    let spec = match kind {
-        KernelKind::PrngInit => {
-            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(1);
-            KernelSpec {
-                // Listing S4: init(__global uint2* seeds, uint nseeds)
-                name: meta.name.clone(),
-                args: vec![
-                    ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
-                    ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
-                ],
-                n,
-                ops_per_elem,
-                bytes_per_elem,
-                k: 1,
+    // Principal size n and secondary dimension m, per family:
+    // * most families: n = elements of the first result, m = 1;
+    // * reduce: n = elements of the *input* vector (the result is one
+    //   word), m = 1;
+    // * stencil5/matmul: the result is a rank-2 `[rows, cols]` tensor;
+    //   n = rows*cols, m = cols (matmul's inner dimension).
+    let (n, m) = match kind {
+        KernelKind::Reduce => {
+            let n = meta.params.first().map(|p| p.element_count()).unwrap_or(0);
+            if meta.results.first().map(|r| r.element_count()) != Some(1) {
+                return Err(format!(
+                    "kernel {:?}: reduce must produce exactly one word",
+                    meta.name
+                ));
             }
+            (n, 1)
         }
-        KernelKind::PrngStep | KernelKind::PrngMultiStep => {
-            let k = if kind == KernelKind::PrngMultiStep {
-                let kv = defines
-                    .iter()
-                    .find(|(name, _)| name == "k")
-                    .ok_or_else(|| {
-                        "prng_multi_step requires build option -Dk=<steps>".to_string()
-                    })?;
-                kv.1.parse::<usize>()
-                    .ok()
-                    .filter(|k| *k >= 1)
-                    .ok_or_else(|| format!("bad -Dk value {:?}", kv.1))?
-            } else {
-                1
+        KernelKind::Stencil5 | KernelKind::Matmul => {
+            let Some(res) = meta.results.first() else {
+                return Err(format!("kernel {:?} has no result tensor", meta.name));
             };
-            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(k);
-            KernelSpec {
-                // Listing S5: rng(uint nseeds, __global ulong* in, out)
-                name: meta.name.clone(),
-                args: vec![
-                    ArgRole::BakedScalar { bytes: 4, expect_u32: Some(n as u32) },
-                    ArgRole::BufferInput { dtype: ElemType::U64, bytes: n * 8 },
-                    ArgRole::BufferOutput { dtype: ElemType::U64, bytes: n * 8 },
-                ],
-                n,
-                ops_per_elem,
-                bytes_per_elem,
-                k,
+            if res.dims.len() != 2 {
+                return Err(format!(
+                    "kernel {:?}: expected a rank-2 [rows, cols] result, got rank {}",
+                    meta.name,
+                    res.dims.len()
+                ));
             }
+            (res.element_count(), res.dims[1])
         }
-        KernelKind::VecAdd => {
-            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(1);
-            KernelSpec {
-                name: meta.name.clone(),
-                args: vec![
-                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                    ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
-                ],
-                n,
-                ops_per_elem,
-                bytes_per_elem,
-                k: 1,
-            }
-        }
-        KernelKind::Saxpy => {
-            let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(1);
-            KernelSpec {
-                name: meta.name.clone(),
-                args: vec![
-                    ArgRole::ScalarInput { dtype: ElemType::F32 },
-                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                    ArgRole::BufferInput { dtype: ElemType::F32, bytes: n * 4 },
-                    ArgRole::BufferOutput { dtype: ElemType::F32, bytes: n * 4 },
-                ],
-                n,
-                ops_per_elem,
-                bytes_per_elem,
-                k: 1,
-            }
-        }
+        _ => (meta.problem_size(), 1),
+    };
+    if n == 0 || m == 0 || n % m != 0 {
+        return Err(format!(
+            "kernel {:?}: degenerate problem size (n={n}, m={m})",
+            meta.name
+        ));
+    }
+    let k = if kind == KernelKind::PrngMultiStep {
+        let kv = defines
+            .iter()
+            .find(|(name, _)| name == "k")
+            .ok_or_else(|| {
+                "prng_multi_step requires build option -Dk=<steps>".to_string()
+            })?;
+        kv.1.parse::<usize>()
+            .ok()
+            .filter(|k| *k >= 1)
+            .ok_or_else(|| format!("bad -Dk value {:?}", kv.1))?
+    } else {
+        1
+    };
+    let (ops_per_elem, bytes_per_elem) = kind.per_elem_cost(k, m);
+    let spec = KernelSpec {
+        name: meta.name.clone(),
+        args: kind.arg_roles(n, m),
+        n,
+        m,
+        ops_per_elem,
+        bytes_per_elem,
+        k,
     };
     // Cross-check the spec against the HLO signature: the number of HLO
     // input params must equal the ScalarInput+BufferInput slots.
@@ -300,6 +364,50 @@ mod tests {
              {(f32[4]{0}, f32[4]{0}, f32[4]{0})->(f32[4]{0})}",
         );
         assert!(spec_for(&m, &[]).is_err());
+    }
+
+    #[test]
+    fn reduce_spec_sizes_from_the_input_vector() {
+        let m = meta(
+            "HloModule jit_reduce, entry_computation_layout=\
+             {(u64[4096]{0})->(u64[1]{0})}",
+        );
+        let s = spec_for(&m, &[]).unwrap();
+        assert_eq!(s.n, 4096);
+        assert!(matches!(s.args[0], ArgRole::BakedScalar { expect_u32: Some(4096), .. }));
+        assert!(matches!(s.args[1], ArgRole::BufferInput { bytes: 32768, .. }));
+        assert!(matches!(s.args[2], ArgRole::BufferOutput { bytes: 8, .. }));
+    }
+
+    #[test]
+    fn stencil_and_matmul_specs_carry_m() {
+        let st = meta(
+            "HloModule jit_stencil5, entry_computation_layout=\
+             {(f32[48,32]{1,0})->(f32[48,32]{1,0})}",
+        );
+        let s = spec_for(&st, &[]).unwrap();
+        assert_eq!((s.n, s.m), (48 * 32, 32));
+        assert!(matches!(s.args[0], ArgRole::BakedScalar { expect_u32: Some(48), .. }));
+        assert!(matches!(s.args[1], ArgRole::BakedScalar { expect_u32: Some(32), .. }));
+
+        let mm = meta(
+            "HloModule jit_matmul, entry_computation_layout=\
+             {(f32[16,24]{1,0}, f32[24,24]{1,0})->(f32[16,24]{1,0})}",
+        );
+        let s = spec_for(&mm, &[]).unwrap();
+        assert_eq!((s.n, s.m), (16 * 24, 24));
+        // B is the m×m operand.
+        assert!(matches!(s.args[3], ArgRole::BufferInput { bytes, .. } if bytes == 24 * 24 * 4));
+        assert_eq!(s.ops_per_elem, 48, "2*m multiply-adds per C element");
+    }
+
+    #[test]
+    fn rank1_stencil_is_rejected() {
+        let m = meta(
+            "HloModule jit_stencil5, entry_computation_layout=\
+             {(f32[64]{0})->(f32[64]{0})}",
+        );
+        assert!(spec_for(&m, &[]).unwrap_err().contains("rank-2"));
     }
 
     #[test]

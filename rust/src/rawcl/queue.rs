@@ -397,6 +397,43 @@ fn run_kernel_sim(spec: &KernelSpec, args: &[ResolvedArg]) -> ClStatus {
             }
             CL_SUCCESS
         }
+        "reduce" => {
+            let Some(input) = bufs[0].read_range(0, spec.n * 8) else {
+                return CL_INVALID_KERNEL_ARGS;
+            };
+            let mut out = [0u8; 8];
+            simexec::run_reduce(&input, &mut out);
+            if !bufs[1].write_range(0, &out) {
+                return CL_INVALID_KERNEL_ARGS;
+            }
+            CL_SUCCESS
+        }
+        "stencil5" => {
+            let (h, w) = (spec.n / spec.m.max(1), spec.m.max(1));
+            let Some(input) = bufs[0].read_range(0, spec.n * 4) else {
+                return CL_INVALID_KERNEL_ARGS;
+            };
+            let mut out = vec![0u8; spec.n * 4];
+            simexec::run_stencil5(&input, &mut out, h, w);
+            if !bufs[1].write_range(0, &out) {
+                return CL_INVALID_KERNEL_ARGS;
+            }
+            CL_SUCCESS
+        }
+        "matmul" => {
+            let (rows, d) = (spec.n / spec.m.max(1), spec.m.max(1));
+            let (Some(a), Some(b)) =
+                (bufs[0].read_range(0, spec.n * 4), bufs[1].read_range(0, d * d * 4))
+            else {
+                return CL_INVALID_KERNEL_ARGS;
+            };
+            let mut out = vec![0u8; spec.n * 4];
+            simexec::run_matmul(&a, &b, &mut out, rows, d);
+            if !bufs[2].write_range(0, &out) {
+                return CL_INVALID_KERNEL_ARGS;
+            }
+            CL_SUCCESS
+        }
         _ => CL_INVALID_KERNEL,
     }
 }

@@ -117,6 +117,125 @@ pub fn run_saxpy(a: f32, x: &[u8], y: &[u8], out: &mut [u8]) {
     }
 }
 
+/// Wrapping-u64 pairwise tree reduction.
+///
+/// Implemented as a literal binary tree to mirror the device kernel's
+/// shape; since wrapping addition is associative and commutative, every
+/// schedule — sequential, tree, or sharded partial sums — produces the
+/// same bits, which is what makes the reduce workload mergeable.
+pub fn reduce_tree(xs: &[u64]) -> u64 {
+    let mut v: Vec<u64> = xs.to_vec();
+    while v.len() > 1 {
+        let mut next = Vec::with_capacity(v.len().div_ceil(2));
+        for pair in v.chunks(2) {
+            next.push(if pair.len() == 2 {
+                pair[0].wrapping_add(pair[1])
+            } else {
+                pair[0]
+            });
+        }
+        v = next;
+    }
+    v.first().copied().unwrap_or(0)
+}
+
+/// Byte-level wrapper: reduce `input` (u64 LE) into `out` (8 bytes).
+pub fn run_reduce(input: &[u8], out: &mut [u8]) {
+    assert!(input.len() % 8 == 0 && out.len() == 8);
+    let words: Vec<u64> = input
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    out.copy_from_slice(&reduce_tree(&words).to_le_bytes());
+}
+
+/// One 5-point stencil output value. The summation order is fixed
+/// (up, down, left, right) so every execution path produces identical
+/// f32 bits for identical inputs.
+#[inline]
+pub fn stencil5_point(c: f32, up: f32, down: f32, left: f32, right: f32) -> f32 {
+    let mut s = up;
+    s += down;
+    s += left;
+    s += right;
+    0.5f32 * c + 0.125f32 * s
+}
+
+/// 2-D 5-point stencil over an `h × w` row-major f32 grid with a zero
+/// (Dirichlet) boundary. Each output element depends only on its input
+/// neighbourhood, so row-band sharding with a one-row halo is
+/// bit-identical to the whole-grid pass.
+pub fn stencil5_grid(g: &[f32], out: &mut [f32], h: usize, w: usize) {
+    assert!(g.len() == h * w && out.len() == h * w);
+    let at = |r: isize, c: isize| -> f32 {
+        if r < 0 || c < 0 || r as usize >= h || c as usize >= w {
+            0.0
+        } else {
+            g[r as usize * w + c as usize]
+        }
+    };
+    for r in 0..h as isize {
+        for c in 0..w as isize {
+            out[r as usize * w + c as usize] = stencil5_point(
+                at(r, c),
+                at(r - 1, c),
+                at(r + 1, c),
+                at(r, c - 1),
+                at(r, c + 1),
+            );
+        }
+    }
+}
+
+/// Byte-level wrapper: stencil `input` (f32 LE grid) into `out`.
+pub fn run_stencil5(input: &[u8], out: &mut [u8], h: usize, w: usize) {
+    assert!(input.len() == h * w * 4 && out.len() == h * w * 4);
+    let g: Vec<f32> = input
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let mut o = vec![0f32; h * w];
+    stencil5_grid(&g, &mut o, h, w);
+    for (v, dst) in o.iter().zip(out.chunks_exact_mut(4)) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Row-band matmul: `out[r][j] = Σ_k a[r][k] * b[k][j]` over a fixed
+/// ascending-`k` order, `a` being `rows × d` and `b` being `d × d` —
+/// every row is computed with the same accumulation order, so row-band
+/// sharding is bit-identical to the whole multiply.
+pub fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, d: usize) {
+    assert!(a.len() == rows * d && b.len() == d * d && out.len() == rows * d);
+    for r in 0..rows {
+        for j in 0..d {
+            let mut acc = 0f32;
+            for k in 0..d {
+                acc += a[r * d + k] * b[k * d + j];
+            }
+            out[r * d + j] = acc;
+        }
+    }
+}
+
+/// Byte-level wrapper for [`matmul_rows`] (f32 LE buffers).
+pub fn run_matmul(a: &[u8], b: &[u8], out: &mut [u8], rows: usize, d: usize) {
+    assert!(a.len() == rows * d * 4 && b.len() == d * d * 4 && out.len() == rows * d * 4);
+    let fa: Vec<f32> = a
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let fb: Vec<f32> = b
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let mut o = vec![0f32; rows * d];
+    matmul_rows(&fa, &fb, &mut o, rows, d);
+    for (v, dst) in o.iter().zip(out.chunks_exact_mut(4)) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +288,70 @@ mod tests {
             run_rng(&prev, &mut step, 1);
         }
         assert_eq!(fused, step);
+    }
+
+    #[test]
+    fn reduce_tree_equals_sequential_wrapping_sum() {
+        let xs: Vec<u64> = (0..1000u64).map(|i| init_seed(i as u32)).collect();
+        let seq = xs.iter().fold(0u64, |a, &b| a.wrapping_add(b));
+        assert_eq!(reduce_tree(&xs), seq);
+        assert_eq!(reduce_tree(&[]), 0);
+        assert_eq!(reduce_tree(&[7]), 7);
+    }
+
+    #[test]
+    fn reduce_partial_sums_merge_exactly() {
+        let xs: Vec<u64> = (0..777u64).map(|i| init_seed(i as u32)).collect();
+        let whole = reduce_tree(&xs);
+        let parts = [
+            reduce_tree(&xs[..100]),
+            reduce_tree(&xs[100..512]),
+            reduce_tree(&xs[512..]),
+        ];
+        assert_eq!(reduce_tree(&parts), whole);
+    }
+
+    #[test]
+    fn stencil_interior_and_boundary() {
+        // 3×3 all-ones grid: centre has 4 neighbours, corner has 2.
+        let g = vec![1.0f32; 9];
+        let mut o = vec![0f32; 9];
+        stencil5_grid(&g, &mut o, 3, 3);
+        assert_eq!(o[4], 0.5 + 0.125 * 4.0);
+        assert_eq!(o[0], 0.5 + 0.125 * 2.0);
+    }
+
+    #[test]
+    fn stencil_row_band_with_halo_matches_whole_grid() {
+        let (h, w) = (10usize, 7usize);
+        let g: Vec<f32> = (0..h * w).map(|i| ((i * 31 + 7) % 256) as f32).collect();
+        let mut whole = vec![0f32; h * w];
+        stencil5_grid(&g, &mut whole, h, w);
+        // Band rows [3, 7) with one halo row each side: rows [2, 8).
+        let band = &g[2 * w..8 * w];
+        let mut bo = vec![0f32; band.len()];
+        stencil5_grid(band, &mut bo, 6, w);
+        assert_eq!(&bo[w..5 * w], &whole[3 * w..7 * w], "interior rows bit-identical");
+    }
+
+    #[test]
+    fn matmul_identity_and_band() {
+        let d = 4usize;
+        let mut ident = vec![0f32; d * d];
+        for i in 0..d {
+            ident[i * d + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..d * d).map(|i| i as f32).collect();
+        let mut o = vec![0f32; d * d];
+        matmul_rows(&a, &ident, &mut o, d, d);
+        assert_eq!(o, a);
+        // Row band [1, 3) of A times B equals those rows of the whole C.
+        let b: Vec<f32> = (0..d * d).map(|i| (i % 3) as f32 - 1.0).collect();
+        let mut whole = vec![0f32; d * d];
+        matmul_rows(&a, &b, &mut whole, d, d);
+        let mut band = vec![0f32; 2 * d];
+        matmul_rows(&a[d..3 * d], &b, &mut band, 2, d);
+        assert_eq!(band, whole[d..3 * d]);
     }
 
     #[test]

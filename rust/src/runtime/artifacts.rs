@@ -28,6 +28,12 @@ pub enum ArtifactKind {
     VecAdd,
     /// Quickstart: `a*x + y`.
     Saxpy,
+    /// Workload: wrapping-u64 tree reduction to one word.
+    Reduce,
+    /// Workload: 2-D 5-point stencil over an f32 grid.
+    Stencil5,
+    /// Workload: f32 row-band × square matrix multiply.
+    Matmul,
 }
 
 impl ArtifactKind {
@@ -38,6 +44,9 @@ impl ArtifactKind {
             "rng_multi" => Self::RngMulti,
             "vecadd" => Self::VecAdd,
             "saxpy" => Self::Saxpy,
+            "reduce" => Self::Reduce,
+            "stencil5" => Self::Stencil5,
+            "matmul" => Self::Matmul,
             other => bail!("unknown artifact kind {other:?}"),
         })
     }
@@ -50,6 +59,9 @@ impl ArtifactKind {
             Self::RngMulti => "rng_multi",
             Self::VecAdd => "vecadd",
             Self::Saxpy => "saxpy",
+            Self::Reduce => "reduce",
+            Self::Stencil5 => "stencil5",
+            Self::Matmul => "matmul",
         }
     }
 }

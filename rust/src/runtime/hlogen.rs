@@ -22,18 +22,21 @@ use super::artifacts::{ArtifactKind, Manifest};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GenSpec {
     pub kind: ArtifactKind,
-    /// Problem size (elements of the principal vector).
+    /// Problem size (elements of the principal vector/grid).
     pub n: usize,
     /// Fused step count (meaningful for `RngMulti`; 1 otherwise).
     pub k: usize,
     /// First global index hashed by `Init` (0 for whole-stream init;
     /// non-zero when a scheduler shards the stream across backends).
     pub gid_offset: u64,
+    /// Secondary dimension: grid width for `Stencil5`, inner dimension
+    /// for `Matmul` (1 for the 1-D families). Must divide `n`.
+    pub m: usize,
 }
 
 impl GenSpec {
     pub fn new(kind: ArtifactKind, n: usize) -> Self {
-        Self { kind, n, k: 1, gid_offset: 0 }
+        Self { kind, n, k: 1, gid_offset: 0, m: 1 }
     }
 
     pub fn with_k(mut self, k: usize) -> Self {
@@ -43,6 +46,11 @@ impl GenSpec {
 
     pub fn with_gid_offset(mut self, off: u64) -> Self {
         self.gid_offset = off;
+        self
+    }
+
+    pub fn with_m(mut self, m: usize) -> Self {
+        self.m = m.max(1);
         self
     }
 }
@@ -112,6 +120,57 @@ pub fn source(spec: &GenSpec) -> String {
              sum = f32[{n}]{{0}} add(ax, y)\n  \
              ROOT out = (f32[{n}]{{0}}) tuple(sum)\n}}\n"
         ),
+        ArtifactKind::Reduce => format!(
+            "HloModule jit_reduce, entry_computation_layout=\
+             {{(u64[{n}]{{0}})->(u64[1]{{0}})}}\n\n\
+             add {{\n  \
+             a = u64[] parameter(0)\n  \
+             b = u64[] parameter(1)\n  \
+             ROOT r = u64[] add(a, b)\n}}\n\n\
+             ENTRY main {{\n  \
+             x = u64[{n}]{{0}} parameter(0)\n  \
+             zero = u64[] constant(0)\n  \
+             sum = u64[] reduce(x, zero), dimensions={{0}}, to_apply=add\n  \
+             out1 = u64[1]{{0}} reshape(sum)\n  \
+             ROOT out = (u64[1]{{0}}) tuple(out1)\n}}\n"
+        ),
+        ArtifactKind::Stencil5 => {
+            let (h, w) = grid_dims(spec);
+            format!(
+                "HloModule jit_stencil5, entry_computation_layout=\
+                 {{(f32[{h},{w}]{{1,0}})->(f32[{h},{w}]{{1,0}})}}\n\n\
+                 ENTRY main {{\n  \
+                 g = f32[{h},{w}]{{1,0}} parameter(0)\n  \
+                 s = f32[{h},{w}]{{1,0}} custom-call(g), \
+                 custom_call_target=\"cf4rs_stencil5\"\n  \
+                 ROOT out = (f32[{h},{w}]{{1,0}}) tuple(s)\n}}\n"
+            )
+        }
+        ArtifactKind::Matmul => {
+            let (r, d) = grid_dims(spec);
+            format!(
+                "HloModule jit_matmul, entry_computation_layout=\
+                 {{(f32[{r},{d}]{{1,0}}, f32[{d},{d}]{{1,0}})->(f32[{r},{d}]{{1,0}})}}\n\n\
+                 ENTRY main {{\n  \
+                 a = f32[{r},{d}]{{1,0}} parameter(0)\n  \
+                 b = f32[{d},{d}]{{1,0}} parameter(1)\n  \
+                 c = f32[{r},{d}]{{1,0}} dot(a, b), lhs_contracting_dims={{1}}, \
+                 rhs_contracting_dims={{0}}\n  \
+                 ROOT out = (f32[{r},{d}]{{1,0}}) tuple(c)\n}}\n"
+            )
+        }
+    }
+}
+
+/// `(rows, cols)` of a 2-D spec; degenerate `m` collapses to one row so
+/// bare [`source`] never panics ([`resolve_source`] — every compile
+/// path's entry point — rejects such specs up front instead).
+fn grid_dims(spec: &GenSpec) -> (usize, usize) {
+    let m = spec.m.max(1);
+    if m > 0 && spec.n % m == 0 && spec.n > 0 {
+        (spec.n / m, m)
+    } else {
+        (1, spec.n.max(1))
     }
 }
 
@@ -122,7 +181,23 @@ pub fn source(spec: &GenSpec) -> String {
 /// and, for `RngMulti`, matching `k`) — artifacts bake those parameters
 /// in at lowering time.
 pub fn resolve_source(spec: &GenSpec) -> std::io::Result<String> {
-    if spec.gid_offset == 0 {
+    if matches!(spec.kind, ArtifactKind::Stencil5 | ArtifactKind::Matmul)
+        && (spec.n == 0 || spec.m == 0 || spec.n % spec.m != 0)
+    {
+        // Never hand out a module with silently-collapsed geometry: a
+        // grid whose width does not divide its element count has no
+        // faithful [rows, cols] signature.
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "degenerate 2-D spec for {}: n={} is not a multiple of m={}",
+                spec.kind.kernel_name(),
+                spec.n,
+                spec.m
+            ),
+        ));
+    }
+    if spec.gid_offset == 0 && spec.m <= 1 {
         if let Some(man) = manifest_if_present()? {
             if let Some(art) = man.find(spec.kind, spec.n) {
                 let k_matches = spec.kind != ArtifactKind::RngMulti || art.k == spec.k;
@@ -143,18 +218,27 @@ fn manifest_if_present() -> std::io::Result<Option<Manifest>> {
 }
 
 /// Parse the conventional artifact name into a [`GenSpec`]: `init_n4096`,
-/// `rng_n65536`, `rngk16_n4096`, `vecadd_n1024`, `saxpy_n1024`.
+/// `rng_n65536`, `rngk16_n4096`, `vecadd_n1024`, `saxpy_n1024`,
+/// `reduce_n65536`, `stencil5_m128_n16384`, `matmul_m64_n4096` (the
+/// `_m<cols>` segment carries the 2-D families' secondary dimension).
 pub fn parse_artifact_name(name: &str) -> Option<GenSpec> {
     let (head, n_str) = name.rsplit_once("_n")?;
     let n: usize = n_str.parse().ok()?;
     if n == 0 {
         return None;
     }
+    if let Some(rest) = head.strip_prefix("stencil5_m") {
+        return grid_spec(ArtifactKind::Stencil5, n, rest);
+    }
+    if let Some(rest) = head.strip_prefix("matmul_m") {
+        return grid_spec(ArtifactKind::Matmul, n, rest);
+    }
     Some(match head {
         "init" => GenSpec::new(ArtifactKind::Init, n),
         "rng" => GenSpec::new(ArtifactKind::Rng, n),
         "vecadd" => GenSpec::new(ArtifactKind::VecAdd, n),
         "saxpy" => GenSpec::new(ArtifactKind::Saxpy, n),
+        "reduce" => GenSpec::new(ArtifactKind::Reduce, n),
         other => {
             let k: usize = other.strip_prefix("rngk")?.parse().ok()?;
             if k == 0 {
@@ -163,6 +247,14 @@ pub fn parse_artifact_name(name: &str) -> Option<GenSpec> {
             GenSpec::new(ArtifactKind::RngMulti, n).with_k(k)
         }
     })
+}
+
+fn grid_spec(kind: ArtifactKind, n: usize, m_str: &str) -> Option<GenSpec> {
+    let m: usize = m_str.parse().ok()?;
+    if m == 0 || n % m != 0 {
+        return None;
+    }
+    Some(GenSpec::new(kind, n).with_m(m))
 }
 
 /// Resolve an artifact by conventional name: manifest text when the
@@ -234,6 +326,30 @@ mod tests {
     }
 
     #[test]
+    fn workload_families_generate_and_spec() {
+        // reduce: 1 HLO input, one-word result, n taken from the input.
+        let text = source(&GenSpec::new(ArtifactKind::Reduce, 4096));
+        let meta = parse_header(&text).unwrap();
+        assert_eq!(meta.params.len(), 1);
+        let s = spec_for(&meta, &[]).unwrap();
+        assert_eq!(s.n, 4096);
+
+        // stencil5: rank-2 signature carries the grid geometry.
+        let text = source(&GenSpec::new(ArtifactKind::Stencil5, 48 * 32).with_m(32));
+        let meta = parse_header(&text).unwrap();
+        assert_eq!(meta.results[0].dims, vec![48, 32]);
+        let s = spec_for(&meta, &[]).unwrap();
+        assert_eq!((s.n, s.m), (48 * 32, 32));
+
+        // matmul: B is the m×m operand.
+        let text = source(&GenSpec::new(ArtifactKind::Matmul, 16 * 24).with_m(24));
+        let meta = parse_header(&text).unwrap();
+        assert_eq!(meta.params[1].dims, vec![24, 24]);
+        let s = spec_for(&meta, &[]).unwrap();
+        assert_eq!((s.n, s.m), (16 * 24, 24));
+    }
+
+    #[test]
     fn artifact_names_parse_to_specs() {
         let s = parse_artifact_name("init_n4096").unwrap();
         assert_eq!((s.kind, s.n, s.k), (ArtifactKind::Init, 4096, 1));
@@ -243,6 +359,14 @@ mod tests {
         assert!(parse_artifact_name("init_nquux").is_none());
         assert!(parse_artifact_name("init").is_none());
         assert!(parse_artifact_name("rngk0_n16").is_none());
+        let s = parse_artifact_name("reduce_n65536").unwrap();
+        assert_eq!((s.kind, s.n), (ArtifactKind::Reduce, 65536));
+        let s = parse_artifact_name("stencil5_m32_n1536").unwrap();
+        assert_eq!((s.kind, s.n, s.m), (ArtifactKind::Stencil5, 1536, 32));
+        let s = parse_artifact_name("matmul_m24_n384").unwrap();
+        assert_eq!((s.kind, s.n, s.m), (ArtifactKind::Matmul, 384, 24));
+        assert!(parse_artifact_name("matmul_m0_n384").is_none());
+        assert!(parse_artifact_name("stencil5_m7_n16").is_none(), "m must divide n");
     }
 
     #[test]
@@ -258,5 +382,20 @@ mod tests {
         let text =
             resolve_source(&GenSpec::new(ArtifactKind::Rng, 12345)).unwrap();
         assert!(text.contains("u64[12345]"));
+    }
+
+    #[test]
+    fn degenerate_2d_specs_are_rejected_not_collapsed() {
+        // n not a multiple of m must error at resolve time — never
+        // silently generate a 1-row grid of the wrong geometry.
+        let bad = GenSpec::new(ArtifactKind::Stencil5, 16).with_m(7);
+        assert!(resolve_source(&bad).is_err());
+        let bad = GenSpec::new(ArtifactKind::Matmul, 10).with_m(4);
+        assert!(resolve_source(&bad).is_err());
+        // A 2-D spec that forgot with_m entirely (m defaults to 1) is
+        // legal-but-degenerate geometry: one column. n % 1 == 0, so it
+        // resolves; callers wanting a real grid must set m.
+        let ok = GenSpec::new(ArtifactKind::Stencil5, 48 * 32).with_m(32);
+        assert!(resolve_source(&ok).is_ok());
     }
 }

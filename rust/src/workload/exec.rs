@@ -1,0 +1,374 @@
+//! Path drivers: run any [`Workload`] through each execution tier.
+//!
+//! All drivers follow the same shape — resolve the whole-problem shard,
+//! compile the workload's kernels, then per iteration: upload the
+//! plan's inputs, build the argument list from the kernel family's
+//! [`arg_roles`](crate::rawcl::kernelspec::KernelKind::arg_roles),
+//! launch over [`Workload::global_dims`], read the output back and fold
+//! it through [`Workload::merge`]/[`Workload::next_state`]. Every driver
+//! returns the final merged output bytes, which the harness compares
+//! against [`Workload::reference`] and across paths — all four must be
+//! bit-identical.
+//!
+//! * [`run_raw_path`] — the verbose substrate (listings S1-style);
+//! * [`run_ccl_path`] — the `ccl` v1 wrappers (listing S2-style);
+//! * [`run_v2_path`] — the fluent `ccl::v2` session tier;
+//! * [`run_sharded_path`] — the multi-backend work-stealing scheduler.
+
+use crate::backend::BackendRegistry;
+use crate::ccl::errors::{CclError, CclResult};
+use crate::ccl::v2::Session;
+use crate::ccl::{self, Arg};
+use crate::coordinator::scheduler::{run_sharded_workload_on, ShardedConfig};
+use crate::rawcl;
+use crate::rawcl::kernelspec::ArgRole;
+use crate::rawcl::types::{DeviceId, MemFlags, QueueProps};
+use crate::runtime::hlogen;
+use crate::runtime::literal::ElemType;
+
+use super::{f32_bytes, f32s, u64s, Shard, Workload};
+
+/// Encode u64s little-endian (counterpart of [`super::u64s`]).
+fn u64_bytes(vals: &[u64]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// Run a workload on the raw substrate (manual status codes, manual
+/// object lifecycle — the listing-S1 style).
+pub fn run_raw_path(
+    w: &dyn Workload,
+    iters: usize,
+    device_index: u32,
+) -> Result<Vec<u8>, String> {
+    macro_rules! chk {
+        ($st:expr, $what:expr) => {
+            if $st != rawcl::CL_SUCCESS {
+                return Err(format!("{}: {}", $what, rawcl::status_name($st)));
+            }
+        };
+    }
+
+    let shard = Shard::whole(w.units());
+    let specs = w.kernels(shard);
+    let dev = DeviceId(device_index);
+    let mut st = rawcl::CL_SUCCESS;
+    let ctx = rawcl::create_context(&[dev], &mut st);
+    chk!(st, "create context");
+    let cq = rawcl::create_command_queue(ctx, dev, QueueProps::empty(), &mut st);
+    chk!(st, "create queue");
+
+    let mut sources = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        sources.push(
+            hlogen::resolve_source(&spec.gen_spec())
+                .map_err(|e| format!("resolving {:?} source: {e}", spec.kind))?,
+        );
+    }
+    let prg = rawcl::create_program_with_source(ctx, &sources, &mut st);
+    chk!(st, "create program");
+    let bst = rawcl::build_program(prg, None, "");
+    if bst == rawcl::CL_BUILD_PROGRAM_FAILURE {
+        let mut log = String::new();
+        rawcl::get_program_build_log(prg, &mut log);
+        return Err(format!("build failure:\n{log}"));
+    }
+    chk!(bst, "build program");
+
+    let mut kernels = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let k = rawcl::create_kernel(prg, spec.kind.module_name(), &mut st);
+        chk!(st, "create kernel");
+        kernels.push(k);
+    }
+
+    let mut state = w.init_state();
+    let mut last = Vec::new();
+    for iter in 0..iters {
+        let plan = w.plan(shard, iter, &state);
+        let spec = specs[plan.kernel];
+        let kern = kernels[plan.kernel];
+
+        let mut in_bufs = Vec::with_capacity(plan.inputs.len());
+        for data in &plan.inputs {
+            let b = rawcl::create_buffer(
+                ctx,
+                MemFlags::READ_WRITE | MemFlags::COPY_HOST_PTR,
+                data.len(),
+                Some(data),
+                &mut st,
+            );
+            chk!(st, "create input buffer");
+            in_bufs.push(b);
+        }
+        let out_buf =
+            rawcl::create_buffer(ctx, MemFlags::READ_WRITE, plan.out_bytes, None, &mut st);
+        chk!(st, "create output buffer");
+
+        let roles = spec.kind.arg_roles(spec.n, spec.m);
+        let (mut ii, mut si) = (0usize, 0usize);
+        for (slot, role) in roles.iter().enumerate() {
+            let value = match role {
+                ArgRole::BakedScalar { expect_u32, .. } => {
+                    rawcl::ArgValue::Scalar(expect_u32.unwrap_or(0).to_le_bytes().to_vec())
+                }
+                ArgRole::ScalarInput { .. } => {
+                    let v = plan.scalars[si];
+                    si += 1;
+                    rawcl::ArgValue::Scalar(v.to_le_bytes().to_vec())
+                }
+                ArgRole::BufferInput { .. } => {
+                    let b = in_bufs[ii];
+                    ii += 1;
+                    rawcl::ArgValue::Buffer(b)
+                }
+                ArgRole::BufferOutput { .. } => rawcl::ArgValue::Buffer(out_buf),
+            };
+            chk!(rawcl::set_kernel_arg(kern, slot, &value), "set kernel arg");
+        }
+
+        let dims = w.global_dims(shard, iter);
+        chk!(
+            rawcl::enqueue_ndrange_kernel(
+                cq,
+                kern,
+                dims.len() as u32,
+                &dims,
+                None,
+                &[],
+                None,
+            ),
+            "enqueue kernel"
+        );
+        chk!(rawcl::finish(cq), "finish");
+        let mut out = vec![0u8; plan.out_bytes];
+        chk!(
+            rawcl::enqueue_read_buffer(cq, out_buf, true, 0, &mut out, &[], None),
+            "read output"
+        );
+        for b in in_bufs {
+            rawcl::release_mem_object(b);
+        }
+        rawcl::release_mem_object(out_buf);
+
+        let merged = w.merge(&[shard], &[out]);
+        if iter + 1 == iters {
+            last = merged;
+        } else {
+            state = w.next_state(state, merged);
+        }
+    }
+
+    for k in kernels {
+        rawcl::release_kernel(k);
+    }
+    rawcl::release_program(prg);
+    rawcl::release_command_queue(cq);
+    rawcl::release_context(ctx);
+    Ok(last)
+}
+
+/// Run a workload on the `ccl` v1 framework tier.
+pub fn run_ccl_path(
+    w: &dyn Workload,
+    iters: usize,
+    device_index: u32,
+) -> CclResult<Vec<u8>> {
+    let shard = Shard::whole(w.units());
+    let specs = w.kernels(shard);
+    let dev = ccl::Device::from_id(DeviceId(device_index))?;
+    let ctx = ccl::Context::new_from_devices(&[dev])?;
+    let cq = ccl::Queue::new(&ctx, dev, QueueProps::empty())?;
+    let gen: Vec<hlogen::GenSpec> = specs.iter().map(|s| s.gen_spec()).collect();
+    let prg = ccl::Program::new_from_specs(&ctx, &gen)?;
+    prg.build()?;
+    let mut kernels = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        kernels.push(prg.kernel(spec.kind.module_name())?);
+    }
+
+    let mut state = w.init_state();
+    let mut last = Vec::new();
+    for iter in 0..iters {
+        let plan = w.plan(shard, iter, &state);
+        let spec = specs[plan.kernel];
+        let kern = &kernels[plan.kernel];
+
+        let mut in_bufs = Vec::with_capacity(plan.inputs.len());
+        for data in &plan.inputs {
+            in_bufs.push(ccl::Buffer::from_slice(&ctx, MemFlags::READ_WRITE, data)?);
+        }
+        let out_buf = ccl::Buffer::new(&ctx, MemFlags::READ_WRITE, plan.out_bytes)?;
+
+        let roles = spec.kind.arg_roles(spec.n, spec.m);
+        let (mut ii, mut si) = (0usize, 0usize);
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(roles.len());
+        for role in &roles {
+            args.push(match role {
+                ArgRole::BakedScalar { expect_u32, .. } => {
+                    Arg::priv_u32(expect_u32.unwrap_or(0))
+                }
+                ArgRole::ScalarInput { .. } => {
+                    let v = plan.scalars[si];
+                    si += 1;
+                    Arg::priv_f32(v)
+                }
+                ArgRole::BufferInput { .. } => {
+                    let b = &in_bufs[ii];
+                    ii += 1;
+                    Arg::buf(b)
+                }
+                ArgRole::BufferOutput { .. } => Arg::buf(&out_buf),
+            });
+        }
+
+        let dims = w.global_dims(shard, iter);
+        let (gws, lws) = kern.suggest_worksizes(dev, &dims)?;
+        kern.set_args_and_enqueue_ndrange(&cq, &gws, Some(&lws), &[], &args)?;
+        cq.finish()?;
+        let mut out = vec![0u8; plan.out_bytes];
+        out_buf.enqueue_read(&cq, 0, &mut out, &[])?;
+
+        let merged = w.merge(&[shard], &[out]);
+        if iter + 1 == iters {
+            last = merged;
+        } else {
+            state = w.next_state(state, merged);
+        }
+    }
+    Ok(last)
+}
+
+/// Run a workload on the fluent `ccl::v2` session tier.
+pub fn run_v2_path(
+    w: &dyn Workload,
+    iters: usize,
+    device_index: u32,
+) -> CclResult<Vec<u8>> {
+    /// A typed v2 buffer of whichever element type the ABI slot needs.
+    enum VBuf<'s> {
+        U64(crate::ccl::v2::Buffer<'s, u64>),
+        F32(crate::ccl::v2::Buffer<'s, f32>),
+    }
+
+    impl<'s> VBuf<'s> {
+        fn from_bytes(sess: &'s Session, dtype: ElemType, data: &[u8]) -> CclResult<Self> {
+            match dtype {
+                ElemType::U64 => Ok(VBuf::U64(sess.buffer_from(&u64s(data))?)),
+                ElemType::F32 => Ok(VBuf::F32(sess.buffer_from(&f32s(data))?)),
+                ElemType::U32 => Err(CclError::framework(
+                    "u32 buffers are not used by any workload ABI",
+                )),
+            }
+        }
+
+        fn alloc(sess: &'s Session, dtype: ElemType, bytes: usize) -> CclResult<Self> {
+            match dtype {
+                ElemType::U64 => Ok(VBuf::U64(sess.buffer(bytes / 8)?)),
+                ElemType::F32 => Ok(VBuf::F32(sess.buffer(bytes / 4)?)),
+                ElemType::U32 => Err(CclError::framework(
+                    "u32 buffers are not used by any workload ABI",
+                )),
+            }
+        }
+
+        fn read_bytes(&self) -> CclResult<Vec<u8>> {
+            match self {
+                VBuf::U64(b) => Ok(u64_bytes(&b.read_vec()?)),
+                VBuf::F32(b) => Ok(f32_bytes(&b.read_vec()?)),
+            }
+        }
+    }
+
+    let shard = Shard::whole(w.units());
+    let specs = w.kernels(shard);
+    let sess = Session::builder().device_index(device_index).build()?;
+    let gen: Vec<hlogen::GenSpec> = specs.iter().map(|s| s.gen_spec()).collect();
+    sess.load_specs(&gen)?;
+
+    let mut state = w.init_state();
+    let mut last = Vec::new();
+    for iter in 0..iters {
+        let plan = w.plan(shard, iter, &state);
+        let spec = specs[plan.kernel];
+        let roles = spec.kind.arg_roles(spec.n, spec.m);
+
+        // Typed buffers per ABI slot.
+        let mut in_bufs: Vec<VBuf<'_>> = Vec::with_capacity(plan.inputs.len());
+        let mut out_buf: Option<VBuf<'_>> = None;
+        {
+            let mut data_iter = plan.inputs.iter();
+            for role in &roles {
+                match role {
+                    ArgRole::BufferInput { dtype, .. } => {
+                        let data = data_iter.next().ok_or_else(|| {
+                            CclError::framework("plan supplies too few input payloads")
+                        })?;
+                        in_bufs.push(VBuf::from_bytes(&sess, *dtype, data)?);
+                    }
+                    ArgRole::BufferOutput { dtype, bytes } => {
+                        out_buf = Some(VBuf::alloc(&sess, *dtype, *bytes)?);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let out_buf = out_buf
+            .ok_or_else(|| CclError::framework("kernel ABI has no output buffer"))?;
+
+        let dims = w.global_dims(shard, iter);
+        let mut launch = sess
+            .kernel(spec.kind.module_name())?
+            .global_nd(&dims)
+            .name(spec.event_name());
+        let (mut ii, mut si) = (0usize, 0usize);
+        for role in &roles {
+            launch = match role {
+                ArgRole::BakedScalar { expect_u32, .. } => {
+                    launch.arg(expect_u32.unwrap_or(0))
+                }
+                ArgRole::ScalarInput { .. } => {
+                    let v = plan.scalars[si];
+                    si += 1;
+                    launch.arg(v)
+                }
+                ArgRole::BufferInput { .. } => {
+                    let b = &in_bufs[ii];
+                    ii += 1;
+                    match b {
+                        VBuf::U64(b) => launch.arg(b),
+                        VBuf::F32(b) => launch.arg(b),
+                    }
+                }
+                ArgRole::BufferOutput { .. } => match &out_buf {
+                    VBuf::U64(b) => launch.arg(b),
+                    VBuf::F32(b) => launch.arg(b),
+                },
+            };
+        }
+        launch.launch()?;
+        // read_bytes is ordered after the launch by the session's
+        // implicit last-writer dependency tracking.
+        let out = out_buf.read_bytes()?;
+
+        let merged = w.merge(&[shard], &[out]);
+        if iter + 1 == iters {
+            last = merged;
+        } else {
+            state = w.next_state(state, merged);
+        }
+    }
+    sess.finish()?;
+    Ok(last)
+}
+
+/// Run a workload through the multi-backend work-stealing scheduler.
+pub fn run_sharded_path<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    registry: &BackendRegistry,
+) -> CclResult<Vec<u8>> {
+    let mut cfg = ShardedConfig::new(w.clone(), iters);
+    cfg.min_chunk = (w.units() / 8).max(1);
+    let outcome = run_sharded_workload_on(registry, &cfg)?;
+    Ok(outcome.final_output)
+}

@@ -1,0 +1,101 @@
+//! Row-band tiled matmul as a [`Workload`].
+//!
+//! `C = A · B` for fixed deterministic `d × d` operands. Shards are row
+//! bands of `A`/`C` (the tile shape that needs no cross-shard reduction):
+//! every band receives the whole of `B`, computes its band of `C` with a
+//! fixed ascending-`k` accumulation order, and the bands concatenate.
+//! The operand values are small integers in f32, so products and the
+//! short dot-product sums are exact and bit-stable.
+
+use crate::backend::CompileSpec;
+use crate::rawcl::simexec;
+
+use super::{concat_outputs, f32_bytes, IterPlan, Shard, Workload};
+
+/// `d × d` square multiply, recomputed each iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct MatmulWorkload {
+    d: usize,
+}
+
+impl MatmulWorkload {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+
+    fn a_at(i: usize, j: usize) -> f32 {
+        (((i * 7 + j * 3) % 13) as f32) - 6.0
+    }
+
+    fn b_at(i: usize, j: usize) -> f32 {
+        (((i * 5 + j * 11) % 9) as f32) - 4.0
+    }
+
+    /// Rows `[lo, lo+len)` of A, row-major.
+    fn a_band(&self, shard: Shard) -> Vec<u8> {
+        let mut vals = Vec::with_capacity(shard.len * self.d);
+        for r in shard.lo..shard.lo + shard.len {
+            for j in 0..self.d {
+                vals.push(Self::a_at(r, j));
+            }
+        }
+        f32_bytes(&vals)
+    }
+
+    fn b_full(&self) -> Vec<u8> {
+        let mut vals = Vec::with_capacity(self.d * self.d);
+        for i in 0..self.d {
+            for j in 0..self.d {
+                vals.push(Self::b_at(i, j));
+            }
+        }
+        f32_bytes(&vals)
+    }
+}
+
+impl Workload for MatmulWorkload {
+    fn name(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn units(&self) -> usize {
+        self.d
+    }
+
+    fn unit_bytes(&self) -> usize {
+        self.d * 4
+    }
+
+    fn default_iters(&self) -> usize {
+        2
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        vec![CompileSpec::matmul(shard.len, self.d)]
+    }
+
+    fn plan(&self, shard: Shard, _iter: usize, _state: &[u8]) -> IterPlan {
+        IterPlan {
+            kernel: 0,
+            inputs: vec![self.a_band(shard), self.b_full()],
+            scalars: vec![],
+            out_bytes: shard.len * self.d * 4,
+        }
+    }
+
+    fn global_dims(&self, shard: Shard, _iter: usize) -> Vec<usize> {
+        vec![shard.len, self.d]
+    }
+
+    fn merge(&self, _shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        concat_outputs(outputs)
+    }
+
+    fn reference(&self, _iters: usize) -> Vec<u8> {
+        let shard = Shard::whole(self.d);
+        let (a, b) = (self.a_band(shard), self.b_full());
+        let mut out = vec![0u8; self.d * self.d * 4];
+        simexec::run_matmul(&a, &b, &mut out, self.d, self.d);
+        out
+    }
+}

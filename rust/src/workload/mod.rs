@@ -1,0 +1,243 @@
+//! # `workload` — the workload-agnostic execution contract
+//!
+//! The paper's evaluation rests on one application (the §5 PRNG
+//! service); this module decouples *what* is computed from *how* it is
+//! executed, EngineCL-style. A [`Workload`] describes an iterated,
+//! shardable device computation in four moves:
+//!
+//! * [`kernels`](Workload::kernels) — the [`CompileSpec`]s a shard of
+//!   the index space needs (sharding parameters such as the PRNG
+//!   `gid_offset` or a stencil band's halo geometry are baked in here);
+//! * [`plan`](Workload::plan) — one iteration's launch: which kernel,
+//!   the host payloads for its input buffers, its scalars, and the
+//!   output size;
+//! * [`merge`](Workload::merge) — how per-shard outputs combine into
+//!   the global result (concatenation for elementwise workloads,
+//!   partial-sum folding for reductions, halo-trimming for stencils);
+//! * [`reference`](Workload::reference) — the host oracle every
+//!   execution path must match **bit for bit**.
+//!
+//! Because the contract speaks in byte payloads and ABI argument roles
+//! ([`KernelKind::arg_roles`](crate::rawcl::kernelspec::KernelKind::arg_roles)),
+//! one workload definition runs unchanged through all four execution
+//! paths: the raw substrate ([`exec::run_raw_path`]), the `ccl` v1
+//! framework ([`exec::run_ccl_path`]), the fluent `ccl::v2` session tier
+//! ([`exec::run_v2_path`]), and the multi-backend work-stealing
+//! scheduler
+//! ([`run_sharded_workload`](crate::coordinator::scheduler::run_sharded_workload)).
+//!
+//! ## Worked example: SAXPY through the trait
+//!
+//! The iterated SAXPY workload computes `y ← a·x + y` on the device
+//! each iteration. Running it is the same three lines on every path:
+//!
+//! ```no_run
+//! use cf4rs::workload::{exec, SaxpyWorkload, Workload};
+//!
+//! let w = SaxpyWorkload::new(4096, 2.5);
+//! let iters = w.default_iters();
+//! // Any path; all four produce bit-identical bytes.
+//! let v2 = exec::run_v2_path(&w, iters, 0).unwrap();
+//! let raw = exec::run_raw_path(&w, iters, 1).unwrap();
+//! assert_eq!(v2, raw);
+//! assert_eq!(v2, w.reference(iters));
+//! ```
+//!
+//! Implementing a new workload means describing its launch, not its
+//! execution. SAXPY's core (see `saxpy.rs`) is literally:
+//!
+//! * `kernels`: `vec![CompileSpec::saxpy(shard.len)]`;
+//! * `plan`: inputs = the `x` slice and the current `y` slice of the
+//!   shard, scalars = `[a]`, output = `len × 4` bytes;
+//! * `merge`: concatenate shard outputs in order;
+//! * `reference`: fold the scalar
+//!   [`run_saxpy`](crate::rawcl::simexec::run_saxpy) oracle `iters`
+//!   times.
+
+pub mod exec;
+mod matmul;
+mod prng;
+mod reduce;
+mod saxpy;
+mod stencil;
+
+pub use matmul::MatmulWorkload;
+pub use prng::PrngWorkload;
+pub use reduce::ReduceWorkload;
+pub use saxpy::SaxpyWorkload;
+pub use stencil::StencilWorkload;
+
+use crate::backend::CompileSpec;
+
+/// One contiguous shard `[lo, lo+len)` of a workload's principal index
+/// space (elements for 1-D workloads, grid/matrix rows for 2-D ones).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub lo: usize,
+    pub len: usize,
+}
+
+impl Shard {
+    /// The un-sharded whole index space.
+    pub fn whole(units: usize) -> Self {
+        Self { lo: 0, len: units }
+    }
+
+    /// Byte range of this shard in a state vector of `unit_bytes`-sized
+    /// units.
+    pub fn byte_range(&self, unit_bytes: usize) -> std::ops::Range<usize> {
+        self.lo * unit_bytes..(self.lo + self.len) * unit_bytes
+    }
+}
+
+/// One iteration's launch plan for one shard.
+pub struct IterPlan {
+    /// Index into [`Workload::kernels`] of the kernel to launch.
+    pub kernel: usize,
+    /// Host payloads for the kernel's buffer-input slots, in ABI order.
+    pub inputs: Vec<Vec<u8>>,
+    /// Values for the kernel's f32 `ScalarInput` slots, in ABI order.
+    pub scalars: Vec<f32>,
+    /// Byte size of the shard's output buffer.
+    pub out_bytes: usize,
+}
+
+/// A deterministic, shardable, iterated device computation — see the
+/// [module docs](self) for the contract and a worked SAXPY example.
+///
+/// Determinism is load-bearing: every path (and every shard split) must
+/// produce the same output bits, so floating-point workloads fix their
+/// per-element accumulation order and integer reductions use wrapping
+/// (associative) arithmetic.
+pub trait Workload: Send + Sync {
+    /// Short identifier used in reports (`"prng"`, `"saxpy"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Size of the principal index space, in shardable units.
+    fn units(&self) -> usize;
+
+    /// Bytes of global state per unit (used to slice shard inputs).
+    fn unit_bytes(&self) -> usize;
+
+    /// Iteration count a standard run uses.
+    fn default_iters(&self) -> usize {
+        1
+    }
+
+    /// Global state before iteration 0 (empty when iteration 0 does not
+    /// read state, e.g. the PRNG's device-side seeding).
+    fn init_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Compile specs a shard needs, in a fixed order [`IterPlan::kernel`]
+    /// indexes into.
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec>;
+
+    /// The launch plan for `shard` at `iter`, given the current global
+    /// state.
+    fn plan(&self, shard: Shard, iter: usize, state: &[u8]) -> IterPlan;
+
+    /// Real (pre-rounding) global work dimensions for the shard's launch
+    /// at `iter`. Defaults to 1-D over the shard length; 2-D workloads
+    /// override.
+    fn global_dims(&self, shard: Shard, iter: usize) -> Vec<usize> {
+        let _ = iter;
+        vec![shard.len]
+    }
+
+    /// Merge per-shard outputs (shard order) into the iteration's global
+    /// output.
+    fn merge(&self, shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8>;
+
+    /// Derive the next global state from the previous state and the
+    /// merged output (both by value, so the common "the output *is* the
+    /// state" default is a move, not a copy — this sits on the
+    /// scheduler's per-iteration hot path). Constant-input workloads
+    /// (reduce) keep the previous state instead.
+    fn next_state(&self, prev: Vec<u8>, merged: Vec<u8>) -> Vec<u8> {
+        let _ = prev;
+        merged
+    }
+
+    /// Host oracle: the exact bytes every path must produce after
+    /// `iters` iterations.
+    fn reference(&self, iters: usize) -> Vec<u8>;
+}
+
+/// Concatenate shard outputs — the merge of every elementwise workload.
+pub(crate) fn concat_outputs(outputs: &[Vec<u8>]) -> Vec<u8> {
+    let mut merged = Vec::with_capacity(outputs.iter().map(Vec::len).sum());
+    for o in outputs {
+        merged.extend_from_slice(o);
+    }
+    merged
+}
+
+/// Decode little-endian f32s.
+pub(crate) fn f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Encode f32s little-endian.
+pub(crate) fn f32_bytes(vals: &[f32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// Decode little-endian u64s.
+pub(crate) fn u64s(bytes: &[u8]) -> Vec<u64> {
+    bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_byte_range() {
+        let s = Shard { lo: 3, len: 4 };
+        assert_eq!(s.byte_range(8), 24..56);
+        assert_eq!(Shard::whole(10), Shard { lo: 0, len: 10 });
+    }
+
+    #[test]
+    fn every_workload_names_a_consistent_geometry() {
+        let ws: Vec<Box<dyn Workload>> = vec![
+            Box::new(PrngWorkload::new(256)),
+            Box::new(SaxpyWorkload::new(256, 2.0)),
+            Box::new(ReduceWorkload::new(256)),
+            Box::new(StencilWorkload::new(16, 16)),
+            Box::new(MatmulWorkload::new(16)),
+        ];
+        for w in &ws {
+            let shard = Shard::whole(w.units());
+            let specs = w.kernels(shard);
+            assert!(!specs.is_empty(), "{}", w.name());
+            let state = w.init_state();
+            let plan = w.plan(shard, 0, &state);
+            assert!(plan.kernel < specs.len(), "{}", w.name());
+            let dims = w.global_dims(shard, 0);
+            let spec = specs[plan.kernel];
+            assert_eq!(
+                dims.iter().product::<usize>(),
+                spec.n,
+                "{}: global dims must cover the kernel size",
+                w.name()
+            );
+            let roles = spec.kind.arg_roles(spec.n, spec.m);
+            let buffer_inputs = roles
+                .iter()
+                .filter(|r| {
+                    matches!(r, crate::rawcl::kernelspec::ArgRole::BufferInput { .. })
+                })
+                .count();
+            assert_eq!(plan.inputs.len(), buffer_inputs, "{}", w.name());
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! The paper's §5 PRNG stream as a [`Workload`].
+//!
+//! Iteration 0 seeds the stream on the device (listing S4); every later
+//! iteration advances it one xorshift step (listing S5). Sharding works
+//! because the seed kernel hashes *global* indices — a chunk compiled
+//! with `gid_offset = lo` seeds exactly its slice of the stream — and
+//! the step is elementwise.
+
+use crate::backend::CompileSpec;
+use crate::rawcl::simexec;
+
+use super::{concat_outputs, IterPlan, Shard, Workload};
+
+/// `n` 64-bit words per batch, stepped once per iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct PrngWorkload {
+    n: usize,
+}
+
+impl PrngWorkload {
+    pub fn new(n: usize) -> Self {
+        Self { n }
+    }
+}
+
+impl Workload for PrngWorkload {
+    fn name(&self) -> &'static str {
+        "prng"
+    }
+
+    fn units(&self) -> usize {
+        self.n
+    }
+
+    fn unit_bytes(&self) -> usize {
+        8
+    }
+
+    fn default_iters(&self) -> usize {
+        4
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        vec![
+            CompileSpec::init_at(shard.len, shard.lo as u64),
+            CompileSpec::step(shard.len),
+        ]
+    }
+
+    fn plan(&self, shard: Shard, iter: usize, state: &[u8]) -> IterPlan {
+        if iter == 0 {
+            IterPlan {
+                kernel: 0,
+                inputs: vec![],
+                scalars: vec![],
+                out_bytes: shard.len * 8,
+            }
+        } else {
+            IterPlan {
+                kernel: 1,
+                inputs: vec![state[shard.byte_range(8)].to_vec()],
+                scalars: vec![],
+                out_bytes: shard.len * 8,
+            }
+        }
+    }
+
+    fn merge(&self, _shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        concat_outputs(outputs)
+    }
+
+    fn reference(&self, iters: usize) -> Vec<u8> {
+        let mut state = vec![0u8; self.n * 8];
+        simexec::run_init(&mut state);
+        let mut next = vec![0u8; self.n * 8];
+        for _ in 1..iters {
+            simexec::run_rng(&state, &mut next, 1);
+            std::mem::swap(&mut state, &mut next);
+        }
+        state
+    }
+}

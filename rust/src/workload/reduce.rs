@@ -1,0 +1,79 @@
+//! Tree reduction as a [`Workload`].
+//!
+//! The input vector (a deterministic seed pattern) is the state and
+//! never changes; each iteration reduces it to one 64-bit word. Shards
+//! produce partial sums and [`Workload::merge`] folds them — exact for
+//! any split because wrapping addition is associative.
+
+use crate::backend::CompileSpec;
+use crate::rawcl::simexec;
+
+use super::{u64s, IterPlan, Shard, Workload};
+
+/// Wrapping-u64 sum of `n` words.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceWorkload {
+    n: usize,
+}
+
+impl ReduceWorkload {
+    pub fn new(n: usize) -> Self {
+        Self { n }
+    }
+}
+
+impl Workload for ReduceWorkload {
+    fn name(&self) -> &'static str {
+        "reduce"
+    }
+
+    fn units(&self) -> usize {
+        self.n
+    }
+
+    fn unit_bytes(&self) -> usize {
+        8
+    }
+
+    fn default_iters(&self) -> usize {
+        2
+    }
+
+    fn init_state(&self) -> Vec<u8> {
+        // The seed hash gives well-mixed words whose sum exercises all
+        // 64 bits (carries included).
+        let mut state = vec![0u8; self.n * 8];
+        simexec::run_init(&mut state);
+        state
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        vec![CompileSpec::reduce(shard.len)]
+    }
+
+    fn plan(&self, shard: Shard, _iter: usize, state: &[u8]) -> IterPlan {
+        IterPlan {
+            kernel: 0,
+            inputs: vec![state[shard.byte_range(8)].to_vec()],
+            scalars: vec![],
+            out_bytes: 8,
+        }
+    }
+
+    fn merge(&self, _shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        // Fold the per-shard partial sums — the tree's last level.
+        let partials: Vec<u64> = outputs.iter().map(|o| u64s(o)[0]).collect();
+        simexec::reduce_tree(&partials).to_le_bytes().to_vec()
+    }
+
+    /// The input is constant, so the reduced word never changes between
+    /// iterations — the state must stay the input vector.
+    fn next_state(&self, prev: Vec<u8>, _merged: Vec<u8>) -> Vec<u8> {
+        prev
+    }
+
+    fn reference(&self, _iters: usize) -> Vec<u8> {
+        let words = u64s(&self.init_state());
+        simexec::reduce_tree(&words).to_le_bytes().to_vec()
+    }
+}

@@ -1,0 +1,85 @@
+//! Iterated SAXPY (`y ← a·x + y`) as a [`Workload`] — the worked
+//! example of the [module docs](super).
+//!
+//! `x` is a fixed deterministic pattern; the state is `y`. Both the
+//! multiply and the add are elementwise, so shard outputs concatenate
+//! and every path is bit-identical.
+
+use crate::backend::CompileSpec;
+use crate::rawcl::simexec;
+
+use super::{concat_outputs, f32_bytes, IterPlan, Shard, Workload};
+
+/// `n` f32 elements, one saxpy pass per iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct SaxpyWorkload {
+    n: usize,
+    a: f32,
+}
+
+impl SaxpyWorkload {
+    pub fn new(n: usize, a: f32) -> Self {
+        Self { n, a }
+    }
+
+    /// The fixed input `x[i]` (exactly representable small values).
+    fn x_at(i: usize) -> f32 {
+        ((i % 29) as f32) - 14.0
+    }
+
+    fn x_slice(&self, shard: Shard) -> Vec<u8> {
+        let xs: Vec<f32> = (shard.lo..shard.lo + shard.len).map(Self::x_at).collect();
+        f32_bytes(&xs)
+    }
+}
+
+impl Workload for SaxpyWorkload {
+    fn name(&self) -> &'static str {
+        "saxpy"
+    }
+
+    fn units(&self) -> usize {
+        self.n
+    }
+
+    fn unit_bytes(&self) -> usize {
+        4
+    }
+
+    fn default_iters(&self) -> usize {
+        4
+    }
+
+    fn init_state(&self) -> Vec<u8> {
+        let ys: Vec<f32> = (0..self.n).map(|i| ((i % 17) as f32) * 0.25).collect();
+        f32_bytes(&ys)
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        vec![CompileSpec::saxpy(shard.len)]
+    }
+
+    fn plan(&self, shard: Shard, _iter: usize, state: &[u8]) -> IterPlan {
+        IterPlan {
+            kernel: 0,
+            inputs: vec![self.x_slice(shard), state[shard.byte_range(4)].to_vec()],
+            scalars: vec![self.a],
+            out_bytes: shard.len * 4,
+        }
+    }
+
+    fn merge(&self, _shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        concat_outputs(outputs)
+    }
+
+    fn reference(&self, iters: usize) -> Vec<u8> {
+        let x = self.x_slice(Shard::whole(self.n));
+        let mut y = self.init_state();
+        let mut out = vec![0u8; self.n * 4];
+        for _ in 0..iters {
+            simexec::run_saxpy(self.a, &x, &y, &mut out);
+            std::mem::swap(&mut y, &mut out);
+        }
+        y
+    }
+}

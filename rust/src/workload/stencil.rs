@@ -1,0 +1,114 @@
+//! Iterated 2-D 5-point stencil as a [`Workload`] — the 2-D work-size
+//! exerciser.
+//!
+//! The state is an `h × w` f32 grid smoothed once per iteration with a
+//! zero (Dirichlet) boundary. Sharding is by row bands with a one-row
+//! halo on each interior edge: a band's kernel input includes its halo
+//! rows, its output's halo rows are trimmed at merge, and because each
+//! output element depends only on its input neighbourhood (fixed
+//! summation order), the banded pass is bit-identical to the whole-grid
+//! pass. Halo *exchange* is the per-iteration re-slice of the merged
+//! grid — fresh neighbour rows reach each band through
+//! [`Workload::plan`] every iteration.
+
+use crate::backend::CompileSpec;
+use crate::rawcl::simexec;
+
+use super::{f32_bytes, IterPlan, Shard, Workload};
+
+/// An `h × w` grid, one smoothing pass per iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct StencilWorkload {
+    h: usize,
+    w: usize,
+}
+
+impl StencilWorkload {
+    pub fn new(h: usize, w: usize) -> Self {
+        Self { h, w }
+    }
+
+    /// Halo rows below/above this band (0 at the grid edges, where the
+    /// kernel's zero boundary is the correct neighbour).
+    fn halo(&self, shard: Shard) -> (usize, usize) {
+        let lo = usize::from(shard.lo > 0);
+        let hi = usize::from(shard.lo + shard.len < self.h);
+        (lo, hi)
+    }
+
+    /// Rows the band's kernel actually processes (band + halo).
+    fn band_rows(&self, shard: Shard) -> usize {
+        let (hl, hh) = self.halo(shard);
+        shard.len + hl + hh
+    }
+}
+
+impl Workload for StencilWorkload {
+    fn name(&self) -> &'static str {
+        "stencil"
+    }
+
+    fn units(&self) -> usize {
+        self.h
+    }
+
+    fn unit_bytes(&self) -> usize {
+        self.w * 4
+    }
+
+    fn default_iters(&self) -> usize {
+        3
+    }
+
+    fn init_state(&self) -> Vec<u8> {
+        let g: Vec<f32> = (0..self.h * self.w)
+            .map(|i| {
+                let (r, c) = (i / self.w, i % self.w);
+                ((r * 31 + c * 17) % 256) as f32
+            })
+            .collect();
+        f32_bytes(&g)
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        vec![CompileSpec::stencil5(self.band_rows(shard), self.w)]
+    }
+
+    fn plan(&self, shard: Shard, _iter: usize, state: &[u8]) -> IterPlan {
+        let (hl, hh) = self.halo(shard);
+        let row = self.w * 4;
+        let from = (shard.lo - hl) * row;
+        let to = (shard.lo + shard.len + hh) * row;
+        IterPlan {
+            kernel: 0,
+            inputs: vec![state[from..to].to_vec()],
+            scalars: vec![],
+            out_bytes: self.band_rows(shard) * row,
+        }
+    }
+
+    fn global_dims(&self, shard: Shard, _iter: usize) -> Vec<usize> {
+        vec![self.band_rows(shard), self.w]
+    }
+
+    fn merge(&self, shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        // Trim each band's halo rows, keep its own rows, concatenate.
+        let row = self.w * 4;
+        let mut merged = Vec::with_capacity(self.h * row);
+        for (shard, out) in shards.iter().zip(outputs) {
+            let (hl, _) = self.halo(*shard);
+            merged.extend_from_slice(&out[hl * row..(hl + shard.len) * row]);
+        }
+        merged
+    }
+
+    fn reference(&self, iters: usize) -> Vec<u8> {
+        let mut g = self.init_state();
+        let mut out = vec![0u8; g.len()];
+        for _ in 0..iters {
+            simexec::run_stencil5(&g, &mut out, self.h, self.w);
+            std::mem::swap(&mut g, &mut out);
+        }
+        g
+    }
+}

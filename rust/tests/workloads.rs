@@ -1,0 +1,233 @@
+//! Workload-trait integration tests: every workload through every
+//! execution path, bit-identical; sharded merge equals single-device
+//! order at arbitrary chunk counts (property-tested with the repo's
+//! deterministic xorshift fuzzer); scheduler failure/shutdown paths.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use cf4rs::backend::{
+    Backend, BackendError, BackendRegistry, BackendResult, BufId, CompileSpec,
+    EventId, EventTimes, KernelId, LaunchArg, SimBackend, TimelineEntry,
+};
+use cf4rs::coordinator::scheduler::{run_sharded_workload_on, ShardedConfig};
+use cf4rs::rawcl::profile::BackendKind;
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+use cf4rs::rawcl::types::DeviceId;
+use cf4rs::workload::{
+    exec, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload,
+    StencilWorkload, Workload,
+};
+
+/// Run all four paths and assert each equals the host oracle (and thus
+/// each other).
+fn assert_paths_bit_identical<W: Workload + Clone>(w: &W, iters: usize) {
+    let registry = BackendRegistry::with_default_backends();
+    let reference = w.reference(iters);
+    let raw = exec::run_raw_path(w, iters, 1).expect("raw path");
+    assert_eq!(raw, reference, "{}: rawcl (sim device) diverged", w.name());
+    let v1 = exec::run_ccl_path(w, iters, 0).expect("ccl path");
+    assert_eq!(v1, reference, "{}: ccl v1 (native) diverged", w.name());
+    let v2 = exec::run_v2_path(w, iters, 0).expect("v2 path");
+    assert_eq!(v2, reference, "{}: ccl v2 diverged", w.name());
+    let sharded = exec::run_sharded_path(w, iters, &registry).expect("sharded path");
+    assert_eq!(sharded, reference, "{}: sharded diverged", w.name());
+}
+
+#[test]
+fn prng_is_bit_identical_across_all_paths() {
+    assert_paths_bit_identical(&PrngWorkload::new(2048), 3);
+}
+
+#[test]
+fn saxpy_is_bit_identical_across_all_paths() {
+    assert_paths_bit_identical(&SaxpyWorkload::new(2048, 2.5), 3);
+}
+
+#[test]
+fn reduce_is_bit_identical_across_all_paths() {
+    assert_paths_bit_identical(&ReduceWorkload::new(2048), 2);
+}
+
+#[test]
+fn stencil_is_bit_identical_across_all_paths() {
+    assert_paths_bit_identical(&StencilWorkload::new(24, 16), 3);
+}
+
+#[test]
+fn matmul_is_bit_identical_across_all_paths() {
+    assert_paths_bit_identical(&MatmulWorkload::new(16), 2);
+}
+
+// ---------------------------------------------------------------------------
+// Property: sharded merge order equals single-device order, for every
+// workload, at arbitrary chunk counts.
+// ---------------------------------------------------------------------------
+
+/// Deterministic case generator (the repo's standard no-dependency
+/// fuzzer: the paper's own xorshift PRNG).
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+}
+
+/// Shard `w` with generator-chosen chunking and compare against the
+/// single-device (ccl v1) result.
+fn sharded_equals_single<W: Workload + Clone>(w: &W, iters: usize, g: &mut Gen) {
+    let registry = BackendRegistry::with_default_backends();
+    let single = exec::run_ccl_path(w, iters, 0).expect("single-device run");
+    let mut cfg = ShardedConfig::new(w.clone(), iters);
+    cfg.chunks_per_backend = g.range(1, 4) as usize;
+    cfg.min_chunk = g.range(1, (w.units() as u64 / 2).max(2)) as usize;
+    let out = run_sharded_workload_on(&registry, &cfg).expect("sharded run");
+    assert_eq!(
+        out.final_output,
+        single,
+        "{}: sharded(chunks={}, cpb={}, min={}) != single-device",
+        w.name(),
+        out.num_chunks,
+        cfg.chunks_per_backend,
+        cfg.min_chunk,
+    );
+}
+
+#[test]
+fn prop_sharded_merge_equals_single_device_for_every_workload() {
+    for case in 0..6u64 {
+        let mut g = Gen::new(0xC0FFEE + case);
+        // Ragged sizes on purpose: primes and non-multiples stress the
+        // chunk planner's remainder handling.
+        let n = g.range(64, 1500) as usize;
+        sharded_equals_single(&PrngWorkload::new(n), 2, &mut g);
+        sharded_equals_single(&SaxpyWorkload::new(n, 1.5), 2, &mut g);
+        sharded_equals_single(&ReduceWorkload::new(n), 1, &mut g);
+        let rows = g.range(4, 40) as usize;
+        let cols = g.range(3, 24) as usize;
+        sharded_equals_single(&StencilWorkload::new(rows, cols), 2, &mut g);
+        let d = g.range(3, 24) as usize;
+        sharded_equals_single(&MatmulWorkload::new(d), 1, &mut g);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler failure / shutdown path
+// ---------------------------------------------------------------------------
+
+/// A backend whose launches always fail — exercises the scheduler's
+/// failure propagation (workers must all drain and return, never hang).
+struct FailingBackend {
+    inner: SimBackend,
+    enqueues: AtomicUsize,
+}
+
+impl FailingBackend {
+    fn new() -> Self {
+        Self {
+            inner: SimBackend::new(DeviceId(2)).unwrap(),
+            enqueues: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Backend for FailingBackend {
+    fn name(&self) -> String {
+        "custom:failing".to_string()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Simulated
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.inner.device_id()
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        self.inner.compile(spec)
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        self.inner.alloc(bytes)
+    }
+
+    fn free(&self, buf: BufId) {
+        self.inner.free(buf)
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        self.inner.write(buf, offset, data)
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        self.inner.read(buf, offset, out)
+    }
+
+    fn enqueue(&self, _kernel: KernelId, _args: &[LaunchArg]) -> BackendResult<EventId> {
+        self.enqueues.fetch_add(1, Ordering::Relaxed);
+        Err(BackendError::new("custom:failing", "injected launch failure"))
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        self.inner.wait(ev)
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        self.inner.timestamps(ev)
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        self.inner.drain_timeline()
+    }
+}
+
+#[test]
+fn scheduler_shuts_down_cleanly_on_backend_failure() {
+    // A registry whose ONLY backend fails every launch: the engine must
+    // surface the error (not hang, not panic) and name the iteration.
+    let reg = BackendRegistry::new();
+    let failing = Arc::new(FailingBackend::new());
+    reg.register(failing.clone());
+    let cfg = ShardedConfig::new(PrngWorkload::new(512), 3);
+    let err = run_sharded_workload_on(&reg, &cfg).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("sharded iteration 0"), "unexpected error: {msg}");
+    assert!(msg.contains("injected launch failure"), "unexpected error: {msg}");
+    assert!(failing.enqueues.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn scheduler_returns_promptly_when_one_of_several_backends_fails() {
+    // With a healthy peer present, either the failing backend pops a
+    // task first (the run fails fast and every worker drains — the
+    // shutdown path), or the healthy backend steals ALL its work before
+    // it ever launches (the run succeeds). Both are legal; what is not
+    // is a hang or a wrong answer.
+    let reg = BackendRegistry::new();
+    reg.register(Arc::new(SimBackend::new(DeviceId(1)).unwrap()));
+    reg.register(Arc::new(FailingBackend::new()));
+    let w = PrngWorkload::new(2048);
+    match run_sharded_workload_on(&reg, &ShardedConfig::new(w, 2)) {
+        Err(e) => assert!(e.to_string().contains("injected launch failure")),
+        Ok(out) => assert_eq!(out.final_output, w.reference(2)),
+    }
+
+    // The same registry minus the failing backend works fine.
+    let reg2 = BackendRegistry::new();
+    reg2.register(Arc::new(SimBackend::new(DeviceId(1)).unwrap()));
+    let out = run_sharded_workload_on(&reg2, &ShardedConfig::new(w, 2)).unwrap();
+    assert_eq!(out.final_output, w.reference(2));
+}

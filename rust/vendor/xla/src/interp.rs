@@ -200,7 +200,12 @@ fn check_inputs(module: &ParsedModule, inputs: &[&Literal]) -> Result<()> {
         )));
     }
     for (i, (sig, lit)) in module.params.iter().zip(inputs).enumerate() {
-        if lit.primitive_type() != sig.prim || lit.dims() != sig.dims.as_slice() {
+        // Element type and count must match; a rank-1 literal feeding a
+        // rank-2 parameter is accepted as an implicit (free) reshape —
+        // hosts hand over flat byte buffers, the signature is
+        // authoritative for geometry.
+        if lit.primitive_type() != sig.prim || lit.element_count() != sig.element_count()
+        {
             return Err(Error::msg(format!(
                 "{}: input {i} shape mismatch (want {:?}{:?}, got {:?}{:?})",
                 module.name,
@@ -309,9 +314,49 @@ pub fn execute(module: &ParsedModule, inputs: &[&Literal]) -> Result<Vec<Literal
                 x.iter().zip(&y).map(|(xi, yi)| a * xi + yi),
             )])
         }
+        "reduce" => {
+            let xs = u64s(input(0)?);
+            Ok(vec![u64_literal(
+                result_sig.dims.clone(),
+                std::iter::once(kernels::reduce_tree(&xs)),
+            )])
+        }
+        "stencil5" => {
+            let dims = &result_sig.dims;
+            if dims.len() != 2 {
+                return Err(Error::msg(format!(
+                    "stencil5: expected a rank-2 result, got {dims:?}"
+                )));
+            }
+            let (h, w) = (dims[0], dims[1]);
+            let g = f32s(input(0)?);
+            if g.len() != h * w {
+                return Err(Error::msg("stencil5: grid size mismatch"));
+            }
+            let mut out = vec![0f32; h * w];
+            kernels::stencil5_grid(&g, &mut out, h, w);
+            Ok(vec![f32_literal(result_sig.dims.clone(), out.into_iter())])
+        }
+        "matmul" => {
+            let dims = &result_sig.dims;
+            if dims.len() != 2 {
+                return Err(Error::msg(format!(
+                    "matmul: expected a rank-2 result, got {dims:?}"
+                )));
+            }
+            let (rows, d) = (dims[0], dims[1]);
+            let (a, b) = (f32s(input(0)?), f32s(input(1)?));
+            if a.len() != rows * d || b.len() != d * d {
+                return Err(Error::msg("matmul: operand size mismatch"));
+            }
+            let mut out = vec![0f32; rows * d];
+            kernels::matmul_rows(&a, &b, &mut out, rows, d);
+            Ok(vec![f32_literal(result_sig.dims.clone(), out.into_iter())])
+        }
         other => Err(Error::msg(format!(
             "facade interpreter cannot execute kernel family {other:?} \
-             (known: prng_init, prng_step, prng_multi_step, vecadd, saxpy)"
+             (known: prng_init, prng_step, prng_multi_step, vecadd, saxpy, \
+             reduce, stencil5, matmul)"
         ))),
     }
 }
@@ -396,6 +441,43 @@ mod tests {
         .unwrap();
         assert!(execute(&m, &[&lit_u64(&[1, 2])]).is_err());
         assert!(execute(&m, &[]).is_err());
+    }
+
+    #[test]
+    fn reduce_sums_with_wrapping_adds() {
+        let m = ParsedModule::parse(
+            "HloModule jit_reduce, entry_computation_layout=\
+             {(u64[4]{0})->(u64[1]{0})}\n",
+        )
+        .unwrap();
+        let out = execute(&m, &[&lit_u64(&[u64::MAX, 1, 2, 3])]).unwrap();
+        assert_eq!(u64s(&out[0]), vec![5u64], "wrapping sum");
+    }
+
+    #[test]
+    fn stencil_and_matmul_read_geometry_from_signature() {
+        let st = ParsedModule::parse(
+            "HloModule jit_stencil5, entry_computation_layout=\
+             {(f32[2,2]{1,0})->(f32[2,2]{1,0})}\n",
+        )
+        .unwrap();
+        let mut g = Literal::create_from_shape(PrimitiveType::F32, &[4]);
+        g.copy_raw_from(&[1.0f32, 1.0, 1.0, 1.0]).unwrap();
+        let out = execute(&st, &[&g]).unwrap();
+        // Every cell of a 2×2 all-ones grid has exactly 2 neighbours.
+        assert_eq!(f32s(&out[0]), vec![0.75f32; 4]);
+
+        let mm = ParsedModule::parse(
+            "HloModule jit_matmul, entry_computation_layout=\
+             {(f32[1,2]{1,0}, f32[2,2]{1,0})->(f32[1,2]{1,0})}\n",
+        )
+        .unwrap();
+        let mut a = Literal::create_from_shape(PrimitiveType::F32, &[2]);
+        a.copy_raw_from(&[1.0f32, 2.0]).unwrap();
+        let mut b = Literal::create_from_shape(PrimitiveType::F32, &[4]);
+        b.copy_raw_from(&[1.0f32, 0.0, 0.0, 1.0]).unwrap();
+        let out = execute(&mm, &[&a, &b]).unwrap();
+        assert_eq!(f32s(&out[0]), vec![1.0f32, 2.0]);
     }
 
     #[test]

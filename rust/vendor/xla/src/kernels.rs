@@ -47,6 +47,72 @@ pub fn xorshift(mut s: u64) -> u64 {
     s
 }
 
+/// Wrapping-u64 pairwise tree reduction (bit-compatible with
+/// `simexec::reduce_tree`; wrapping adds make every schedule identical).
+pub fn reduce_tree(xs: &[u64]) -> u64 {
+    let mut v: Vec<u64> = xs.to_vec();
+    while v.len() > 1 {
+        let mut next = Vec::with_capacity(v.len().div_ceil(2));
+        for pair in v.chunks(2) {
+            next.push(if pair.len() == 2 {
+                pair[0].wrapping_add(pair[1])
+            } else {
+                pair[0]
+            });
+        }
+        v = next;
+    }
+    v.first().copied().unwrap_or(0)
+}
+
+/// One 5-point stencil output value — the summation order (up, down,
+/// left, right) is fixed and must match `simexec::stencil5_point`.
+#[inline]
+pub fn stencil5_point(c: f32, up: f32, down: f32, left: f32, right: f32) -> f32 {
+    let mut s = up;
+    s += down;
+    s += left;
+    s += right;
+    0.5f32 * c + 0.125f32 * s
+}
+
+/// 2-D 5-point stencil over an `h × w` row-major grid, zero boundary
+/// (bit-compatible with `simexec::stencil5_grid`).
+pub fn stencil5_grid(g: &[f32], out: &mut [f32], h: usize, w: usize) {
+    let at = |r: isize, c: isize| -> f32 {
+        if r < 0 || c < 0 || r as usize >= h || c as usize >= w {
+            0.0
+        } else {
+            g[r as usize * w + c as usize]
+        }
+    };
+    for r in 0..h as isize {
+        for c in 0..w as isize {
+            out[r as usize * w + c as usize] = stencil5_point(
+                at(r, c),
+                at(r - 1, c),
+                at(r + 1, c),
+                at(r, c - 1),
+                at(r, c + 1),
+            );
+        }
+    }
+}
+
+/// Row-band matmul with a fixed ascending-`k` accumulation order
+/// (bit-compatible with `simexec::matmul_rows`).
+pub fn matmul_rows(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, d: usize) {
+    for r in 0..rows {
+        for j in 0..d {
+            let mut acc = 0f32;
+            for k in 0..d {
+                acc += a[r * d + k] * b[k * d + j];
+            }
+            out[r * d + j] = acc;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +124,28 @@ mod tests {
         assert_eq!(xorshift(1), 0x0220_0011);
         assert_eq!(xorshift(0), 0);
         assert_eq!(init_seed(0), 0x1BB8_2F6B_28B9_1B1D);
+    }
+
+    #[test]
+    fn reduce_is_order_independent() {
+        let xs: Vec<u64> = (0..33).map(|i| init_seed(i) | (1 << 63)).collect();
+        let seq = xs.iter().fold(0u64, |a, &b| a.wrapping_add(b));
+        assert_eq!(reduce_tree(&xs), seq);
+    }
+
+    #[test]
+    fn stencil_known_value() {
+        // Pinned against simexec::stencil5_point.
+        assert_eq!(stencil5_point(1.0, 1.0, 1.0, 1.0, 1.0), 1.0);
+        assert_eq!(stencil5_point(2.0, 0.0, 0.0, 1.0, 0.0), 1.125);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let ident = [1.0f32, 0.0, 0.0, 1.0];
+        let mut o = [0f32; 4];
+        matmul_rows(&a, &ident, &mut o, 2, 2);
+        assert_eq!(o, a);
     }
 }
