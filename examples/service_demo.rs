@@ -1,0 +1,81 @@
+//! The compute service in ~60 lines: four client threads submit a mix
+//! of workload requests concurrently; the service micro-batches
+//! same-kind requests into shared multi-backend dispatches and every
+//! response is validated bit-for-bit against the host oracle.
+//!
+//! Usage: `cargo run --release --example service_demo`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use cf4rs::coordinator::{ComputeService, ServiceOpts, WorkloadRequest};
+use cf4rs::workload::{PrngWorkload, ReduceWorkload, SaxpyWorkload, Workload};
+
+fn main() {
+    let opts = ServiceOpts {
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        min_chunk: 512,
+        profile: true,
+        ..ServiceOpts::default()
+    };
+    let svc = ComputeService::start_global(opts);
+
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 6;
+    let mismatches = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let (svc, mismatches) = (&svc, &mismatches);
+            scope.spawn(move || {
+                for k in 0..PER_CLIENT {
+                    // A mixed stream: PRNG, SAXPY and reduction requests
+                    // of varying sizes — same-kind ones get coalesced.
+                    let req = match (c + k) % 3 {
+                        0 => WorkloadRequest::new(PrngWorkload::new(2048 + 512 * k))
+                            .iters(3),
+                        1 => WorkloadRequest::new(SaxpyWorkload::new(1536 + 256 * k, 2.5))
+                            .iters(3),
+                        _ => WorkloadRequest::new(ReduceWorkload::new(4096 + 1024 * k))
+                            .iters(2),
+                    };
+                    let iters = req.iters.unwrap();
+                    let expect = req.workload.reference(iters);
+                    let resp = svc
+                        .submit(req)
+                        .expect("submit")
+                        .wait()
+                        .expect("service answered");
+                    if resp.output != expect {
+                        mismatches.fetch_add(1, Ordering::SeqCst);
+                    }
+                    println!(
+                        "client {c} request {k}: {} bytes in {:.2} ms (batch #{} of {})",
+                        resp.output.len(),
+                        resp.latency.as_secs_f64() * 1e3,
+                        resp.batch_id,
+                        resp.batch_size,
+                    );
+                }
+            });
+        }
+    });
+
+    let report = svc.shutdown();
+    println!(
+        "\nserved {} requests in {} batches ({} coalesced, largest batch {})",
+        report.stats.requests,
+        report.stats.batches,
+        report.stats.coalesced,
+        report.stats.max_batch,
+    );
+    if let Some(summary) = &report.prof_summary {
+        println!("\nservice-wide profile across all backends:\n{summary}");
+    }
+    if mismatches.load(Ordering::SeqCst) > 0 {
+        eprintln!("DIVERGENCE DETECTED");
+        std::process::exit(1);
+    }
+    println!("all responses bit-identical to the host oracle");
+}

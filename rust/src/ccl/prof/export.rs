@@ -9,7 +9,61 @@ use crate::ccl::errors::{CclError, CclResult};
 
 pub const EXPORT_HEADER: &str = "queue\tstart\tend\tname";
 
+/// Largest timestamp the overlap sweep's packed `(t << 1)` sort key can
+/// carry without wrapping. Untrusted TSV input beyond this is rejected
+/// at parse; see [`crate::ccl::prof::overlap`].
+pub const MAX_TIMESTAMP: u64 = (1 << 63) - 1;
+
+/// Escape a user-assigned queue/event name for one TSV field: `\t`,
+/// `\n`, `\r` and `\` become two-character escapes so the record stays
+/// one line of exactly four columns. Names without those characters
+/// round-trip byte-identical (and are left unallocated).
+fn escape_field(s: &str) -> std::borrow::Cow<'_, str> {
+    if !s.contains(['\t', '\n', '\r', '\\']) {
+        return std::borrow::Cow::Borrowed(s);
+    }
+    let mut out = String::with_capacity(s.len() + 8);
+    for c in s.chars() {
+        match c {
+            '\t' => out.push_str("\\t"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\\' => out.push_str("\\\\"),
+            c => out.push(c),
+        }
+    }
+    std::borrow::Cow::Owned(out)
+}
+
+/// Invert [`escape_field`]. Unknown escapes are an error — they can only
+/// come from a corrupt or foreign file.
+fn unescape_field(s: &str) -> Result<String, String> {
+    if !s.contains('\\') {
+        return Ok(s.to_string());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('t') => out.push('\t'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape \\{}", other.unwrap_or(' '))),
+        }
+    }
+    Ok(out)
+}
+
 /// Serialise per-event records to the export TSV format.
+///
+/// Queue and event names are escaped (`escape_field`) so user-assigned
+/// names containing tabs or newlines still produce a table
+/// [`parse_tsv`] round-trips exactly.
 pub fn to_tsv(infos: &[ProfInfo]) -> String {
     let mut out = String::with_capacity(infos.len() * 48 + 32);
     out.push_str(EXPORT_HEADER);
@@ -18,7 +72,13 @@ pub fn to_tsv(infos: &[ProfInfo]) -> String {
     let mut sorted: Vec<&ProfInfo> = infos.iter().collect();
     sorted.sort_by_key(|i| i.t_start);
     for i in sorted {
-        out.push_str(&format!("{}\t{}\t{}\t{}\n", i.queue, i.t_start, i.t_end, i.name));
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\n",
+            escape_field(&i.queue),
+            i.t_start,
+            i.t_end,
+            escape_field(&i.name)
+        ));
     }
     out
 }
@@ -58,15 +118,38 @@ pub fn parse_tsv(text: &str) -> CclResult<Vec<ProfInfo>> {
             )));
         }
         let parse = |s: &str| -> CclResult<u64> {
-            s.parse().map_err(|_| {
+            let v: u64 = s.parse().map_err(|_| {
                 CclError::framework(format!("export line {}: bad number {s:?}", ln + 2))
-            })
+            })?;
+            // Timestamps ≥ 2^63 would wrap the overlap sweep's packed
+            // sort key and silently corrupt the analysis — reject them
+            // here, at the untrusted-input boundary.
+            if v > MAX_TIMESTAMP {
+                return Err(CclError::framework(format!(
+                    "export line {}: timestamp {v} exceeds 2^63-1",
+                    ln + 2
+                )));
+            }
+            Ok(v)
         };
         let start = parse(cols[1])?;
         let end = parse(cols[2])?;
+        // An event ending before it starts would underflow downstream
+        // u64 subtractions into absurd durations.
+        if end < start {
+            return Err(CclError::framework(format!(
+                "export line {}: t_end ({end}) < t_start ({start})",
+                ln + 2
+            )));
+        }
+        let unesc = |s: &str| -> CclResult<String> {
+            unescape_field(s).map_err(|e| {
+                CclError::framework(format!("export line {}: {e}", ln + 2))
+            })
+        };
         out.push(ProfInfo {
-            name: cols[3].to_string(),
-            queue: cols[0].to_string(),
+            name: unesc(cols[3])?,
+            queue: unesc(cols[0])?,
             t_queued: start,
             t_submit: start,
             t_start: start,
@@ -128,6 +211,70 @@ mod tests {
     fn rejects_bad_numbers() {
         let bad = format!("{EXPORT_HEADER}\nq\tx\t2\tname\n");
         assert!(parse_tsv(&bad).is_err());
+    }
+
+    #[test]
+    fn adversarial_names_roundtrip() {
+        // Regression: names containing \t or \n used to be written
+        // verbatim, producing a table parse_tsv rejected (ragged rows)
+        // or silently mis-columned.
+        let infos = vec![
+            ProfInfo {
+                name: "evil\tname\nwith\rall\\of them".into(),
+                queue: "q\tueue".into(),
+                t_queued: 1,
+                t_submit: 1,
+                t_start: 1,
+                t_end: 2,
+            },
+            ProfInfo {
+                name: "plain".into(),
+                queue: "also plain".into(),
+                t_queued: 3,
+                t_submit: 3,
+                t_start: 3,
+                t_end: 4,
+            },
+        ];
+        let tsv = to_tsv(&infos);
+        // One header + one line per record, regardless of name content.
+        assert_eq!(tsv.lines().count(), 3);
+        let parsed = parse_tsv(&tsv).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].name, "evil\tname\nwith\rall\\of them");
+        assert_eq!(parsed[0].queue, "q\tueue");
+        assert_eq!(parsed[1].name, "plain");
+    }
+
+    #[test]
+    fn rejects_unknown_escape() {
+        let bad = format!("{EXPORT_HEADER}\nq\\x\t1\t2\tname\n");
+        let err = parse_tsv(&bad).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_end_before_start_with_line_number() {
+        // Regression: records with t_end < t_start were accepted and
+        // underflowed downstream u64 subtraction.
+        let bad = format!("{EXPORT_HEADER}\nq\t1\t2\tok\nq\t50\t40\tbad\n");
+        let err = parse_tsv(&bad).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("t_end (40) < t_start (50)"), "{err}");
+    }
+
+    #[test]
+    fn rejects_timestamps_beyond_sort_key_range() {
+        // Regression: timestamps ≥ 2^63 wrap the overlap sweep's packed
+        // (t << 1) sort key.
+        let big = (1u64 << 63) + 5;
+        let bad = format!("{EXPORT_HEADER}\nq\t{big}\t{}\tname\n", u64::MAX);
+        let err = parse_tsv(&bad).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("exceeds 2^63-1"), "{err}");
+        // The boundary value itself is fine.
+        let ok = format!("{EXPORT_HEADER}\nq\t0\t{MAX_TIMESTAMP}\tname\n");
+        assert_eq!(parse_tsv(&ok).unwrap().len(), 1);
     }
 
     #[test]

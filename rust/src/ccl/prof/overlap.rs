@@ -38,18 +38,27 @@ pub fn compute_overlaps(infos: &[ProfInfo]) -> Vec<ProfOverlap> {
         ev_queue.push(*queue_ids.entry(info.queue.as_str()).or_insert(ql));
     }
 
+    // Timestamps ≥ 2^63 would wrap the packed sort key below and
+    // corrupt the sweep order. Process-clock timestamps are < 2^62 ns of
+    // uptime, but records can arrive from untrusted TSV files (the
+    // parser rejects them, this is defence in depth) — saturate instead
+    // of silently corrupting; saturated events collapse to zero length
+    // and drop out of the sweep.
+    const T_SAT: u64 = (1 << 63) - 1;
+    let clamp = |t: u64| t.min(T_SAT);
+
     // Build the instant list: (time, is_end, event index). Sorting puts
     // ends before starts at equal times so zero-length "touching"
     // intervals don't count as overlapping.
     let mut instants: Vec<(u64, bool, u32)> = Vec::with_capacity(infos.len() * 2);
     for (i, info) in infos.iter().enumerate() {
-        if info.t_end > info.t_start {
-            instants.push((info.t_start, false, i as u32));
-            instants.push((info.t_end, true, i as u32));
+        if clamp(info.t_end) > clamp(info.t_start) {
+            instants.push((clamp(info.t_start), false, i as u32));
+            instants.push((clamp(info.t_end), true, i as u32));
         }
     }
     // Single-u64 sort key: (t << 1) | is_start — ends sort before starts
-    // at equal times (timestamps are < 2^62 ns of process uptime).
+    // at equal times (clamping above keeps t < 2^63).
     instants.sort_unstable_by_key(|&(t, is_end, _)| (t << 1) | (!is_end as u64));
 
     let mut active: Vec<u32> = Vec::new();
@@ -73,7 +82,7 @@ pub fn compute_overlaps(infos: &[ProfInfo]) -> Vec<ProfOverlap> {
                 if ev_queue[a as usize] == ev_queue[idx_us] {
                     continue;
                 }
-                let t0 = infos[a as usize].t_start.max(infos[idx_us].t_start);
+                let t0 = clamp(infos[a as usize].t_start).max(clamp(infos[idx_us].t_start));
                 if t > t0 {
                     let key = pack(ev_name[a as usize], ev_name[idx_us]);
                     *totals.entry(key).or_insert(0) += t - t0;
@@ -206,6 +215,31 @@ mod tests {
         assert_eq!(ab.duration, 80);
         let bc = ovs.iter().find(|o| o.event1 == "B" && o.event2 == "C").unwrap();
         assert_eq!(bc.duration, 60);
+    }
+
+    #[test]
+    fn huge_timestamps_saturate_instead_of_corrupting_the_sweep() {
+        // Regression: with t ≥ 2^63 the packed (t << 1) key wrapped, the
+        // huge event's start sorted before everything, and a spurious
+        // overlap with ordinary events was reported.
+        let infos = vec![
+            info("HUGE", "q2", 1 << 63, (1 << 63) + 100),
+            info("B", "q1", 10, 100),
+        ];
+        let ovs = compute_overlaps(&infos);
+        assert!(
+            ovs.is_empty(),
+            "saturated out-of-range event must not overlap: {ovs:?}"
+        );
+        // Sanity: ordinary events around it are still analysed.
+        let infos = vec![
+            info("HUGE", "q3", u64::MAX - 5, u64::MAX),
+            info("A", "q1", 0, 100),
+            info("B", "q2", 50, 150),
+        ];
+        let ovs = compute_overlaps(&infos);
+        assert_eq!(ovs.len(), 1);
+        assert_eq!(ovs[0].duration, 50);
     }
 
     #[test]

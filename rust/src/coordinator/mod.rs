@@ -11,6 +11,12 @@
 //!   [`crate::workload::Workload`] (the PRNG service included) sharded
 //!   across every backend in the [`crate::backend`] registry with work
 //!   stealing, merged output and cross-backend profiling.
+//! * [`service`] — the persistent multi-client tier on top of the
+//!   scheduler: a thread-safe [`service::ComputeService`] accepting
+//!   concurrent requests with bounded-queue admission control,
+//!   micro-batching same-kind requests into single request-aligned
+//!   dispatches (bit-identical to unbatched execution), and per-batch +
+//!   service-wide profiling.
 //! * [`stats`] — statistical screening of the output stream (the
 //!   Dieharder substitution, see DESIGN.md).
 
@@ -18,6 +24,7 @@ pub mod pipeline;
 pub mod rng_service;
 pub mod scheduler;
 pub mod sem;
+pub mod service;
 pub mod stats;
 
 pub use pipeline::{run_double_buffered, PipelineError};
@@ -27,3 +34,7 @@ pub use scheduler::{
     ShardedConfig, ShardedOutcome, ShardedRngConfig, WorkloadOutcome,
 };
 pub use sem::Semaphore;
+pub use service::{
+    run_batch, BatchOutcome, BatchProf, ComputeService, Response, ResponseHandle,
+    ServiceError, ServiceOpts, ServiceReport, ServiceStats, WorkloadRequest,
+};

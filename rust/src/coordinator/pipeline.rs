@@ -20,8 +20,29 @@ use super::sem::Semaphore;
 pub enum PipelineError<E> {
     Producer(E),
     Consumer(E),
-    /// A side panicked.
+    /// A side panicked. The pipeline still terminates: each side posts
+    /// its peer's semaphore from a panic guard, so the survivor never
+    /// blocks on a dead thread, and the panic itself is contained
+    /// instead of unwinding through [`run_double_buffered`].
     Panicked,
+}
+
+/// Posts `sem` and raises `flag` if the owning thread unwinds while the
+/// guard is armed — the panic-safety half of the semaphore discipline:
+/// a dead side must still wake its blocked peer exactly once.
+struct PanicGuard<'a> {
+    sem: &'a Semaphore,
+    flag: &'a std::sync::atomic::AtomicBool,
+    armed: bool,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.flag.store(true, std::sync::atomic::Ordering::SeqCst);
+            self.sem.post();
+        }
+    }
 }
 
 /// Run `iters` iterations of a double-buffered pipeline.
@@ -43,57 +64,98 @@ pub fn run_double_buffered<E: Send>(
     if iters == 0 {
         return Ok(());
     }
+    use std::sync::atomic::{AtomicBool, Ordering};
+
     let sem_ready = Semaphore::new(0);
     let sem_free = Semaphore::new(1); // one batch headroom
-    let dead = std::sync::atomic::AtomicBool::new(false);
+    // producer_dead: producer aborted (error or panic), posts are
+    // shutdown signals. consumer_dead: consumer died by panic — without
+    // it the producer would block in `sem_free.wait()` forever and
+    // `thread::scope` could never join.
+    let producer_dead = AtomicBool::new(false);
+    let consumer_dead = AtomicBool::new(false);
     let mut producer_err: Option<E> = None;
     let consumer_res: std::sync::Mutex<Option<Result<(), E>>> =
         std::sync::Mutex::new(None);
 
-    std::thread::scope(|scope| {
-        let consumer = {
-            let (sem_ready, sem_free, consumer_res, dead) =
-                (&sem_ready, &sem_free, &consumer_res, &dead);
-            let consume = &mut consume;
-            scope.spawn(move || {
-                for i in 0..iters {
-                    sem_ready.wait();
-                    // Producer aborted: the post was a shutdown signal,
-                    // not a published batch.
-                    if dead.load(std::sync::atomic::Ordering::SeqCst) {
-                        return;
+    // A panicking closure (either side) must neither deadlock the other
+    // side nor unwind out of this function: the guards keep the
+    // semaphore discipline alive through unwinding, and catch_unwind
+    // contains the panic that thread::scope re-raises after joining.
+    let scope_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        std::thread::scope(|scope| {
+            let consumer = {
+                let (sem_ready, sem_free, consumer_res) =
+                    (&sem_ready, &sem_free, &consumer_res);
+                let (producer_dead, consumer_dead) = (&producer_dead, &consumer_dead);
+                let consume = &mut consume;
+                scope.spawn(move || {
+                    let mut guard = PanicGuard {
+                        sem: sem_free,
+                        flag: consumer_dead,
+                        armed: true,
+                    };
+                    for i in 0..iters {
+                        sem_ready.wait();
+                        // Producer aborted: the post was a shutdown
+                        // signal, not a published batch.
+                        if producer_dead.load(Ordering::SeqCst) {
+                            guard.armed = false;
+                            return;
+                        }
+                        let r = consume(i, i % 2);
+                        if r.is_err() {
+                            // Record the error BEFORE posting: the
+                            // producer re-checks consumer_res right
+                            // after its wait, and posting first would
+                            // let it miss the error, produce one extra
+                            // batch and block forever on a semaphore
+                            // this thread will never post again.
+                            *consumer_res.lock().unwrap() = Some(r);
+                            sem_free.post();
+                            guard.armed = false;
+                            return;
+                        }
+                        sem_free.post();
                     }
-                    let r = consume(i, i % 2);
-                    sem_free.post();
-                    if r.is_err() {
-                        *consumer_res.lock().unwrap() = Some(r);
-                        return;
-                    }
-                }
-                *consumer_res.lock().unwrap() = Some(Ok(()));
-            })
-        };
+                    *consumer_res.lock().unwrap() = Some(Ok(()));
+                    guard.armed = false;
+                })
+            };
 
-        for i in 0..iters {
-            sem_free.wait();
-            // Bail out promptly if the consumer died.
-            if matches!(&*consumer_res.lock().unwrap(), Some(Err(_))) {
-                break;
-            }
-            match produce(i, i % 2) {
-                Ok(()) => sem_ready.post(),
-                Err(e) => {
-                    producer_err = Some(e);
-                    // Signal shutdown and unblock the consumer.
-                    dead.store(true, std::sync::atomic::Ordering::SeqCst);
-                    sem_ready.post();
+            let mut guard = PanicGuard {
+                sem: &sem_ready,
+                flag: &producer_dead,
+                armed: true,
+            };
+            for i in 0..iters {
+                sem_free.wait();
+                // Bail out promptly if the consumer died or errored.
+                if consumer_dead.load(Ordering::SeqCst) {
                     break;
                 }
+                if matches!(&*consumer_res.lock().unwrap(), Some(Err(_))) {
+                    break;
+                }
+                match produce(i, i % 2) {
+                    Ok(()) => sem_ready.post(),
+                    Err(e) => {
+                        producer_err = Some(e);
+                        // Signal shutdown and unblock the consumer.
+                        producer_dead.store(true, Ordering::SeqCst);
+                        sem_ready.post();
+                        break;
+                    }
+                }
             }
-        }
-        let _ = consumer;
-    });
+            guard.armed = false;
+            let _ = consumer;
+        });
+    }));
 
+    if scope_result.is_err() {
+        return Err(PipelineError::Panicked);
+    }
     if let Some(e) = producer_err {
         return Err(PipelineError::Producer(e));
     }
@@ -108,7 +170,7 @@ pub fn run_double_buffered<E: Send>(
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Mutex;
+    use std::sync::{Arc, Mutex};
 
     #[test]
     fn batches_flow_in_order_with_overlap_window() {
@@ -174,6 +236,82 @@ mod tests {
             produced.load(Ordering::SeqCst) < 100,
             "producer should stop early"
         );
+    }
+
+    /// Run `f` on a helper thread and fail loudly if it does not finish
+    /// within 10 s — the pre-fix symptom of the panic bugs was a
+    /// *deadlock*, which would otherwise hang the whole test suite.
+    fn with_deadline<T: Send + 'static>(f: impl FnOnce() -> T + Send + 'static) -> T {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = tx.send(f());
+        });
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("pipeline deadlocked instead of reporting Panicked")
+    }
+
+    #[test]
+    fn consumer_panic_terminates_and_reports_panicked() {
+        // Regression: the consumer panicking (not Err-ing) used to leave
+        // `sem_free` unposted, blocking the producer forever.
+        let r = with_deadline(|| {
+            let produced = Arc::new(AtomicUsize::new(0));
+            let p2 = produced.clone();
+            let r = run_double_buffered::<()>(
+                100,
+                move |_, _| {
+                    p2.fetch_add(1, Ordering::SeqCst);
+                    Ok(())
+                },
+                |i, _| {
+                    if i == 2 {
+                        panic!("consumer died");
+                    }
+                    Ok(())
+                },
+            );
+            (r, produced.load(Ordering::SeqCst))
+        });
+        assert!(matches!(r.0, Err(PipelineError::Panicked)), "{:?}", r.0);
+        assert!(r.1 < 100, "producer should stop early, produced {}", r.1);
+    }
+
+    #[test]
+    fn producer_panic_terminates_and_reports_panicked() {
+        // Symmetric case: a panicking producer must not leave the
+        // consumer blocked in `sem_ready.wait()`.
+        let r = with_deadline(|| {
+            run_double_buffered::<()>(
+                100,
+                |i, _| {
+                    if i == 3 {
+                        panic!("producer died");
+                    }
+                    Ok(())
+                },
+                |_, _| Ok(()),
+            )
+        });
+        assert!(matches!(r, Err(PipelineError::Panicked)), "{r:?}");
+    }
+
+    #[test]
+    fn consumer_panic_on_last_iteration_still_reported() {
+        // The producer may already be done when the consumer dies; the
+        // scope join must still surface the panic, not swallow it.
+        let r = with_deadline(|| {
+            run_double_buffered::<()>(
+                3,
+                |_, _| Ok(()),
+                |i, _| {
+                    if i == 2 {
+                        panic!("late death");
+                    }
+                    Ok(())
+                },
+            )
+        });
+        assert!(matches!(r, Err(PipelineError::Panicked)), "{r:?}");
     }
 
     #[test]

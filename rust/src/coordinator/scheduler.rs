@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 
 use crate::backend::{Backend, BackendRegistry, BufId, CompileSpec, KernelId};
 use crate::ccl::errors::{CclError, CclResult};
+use crate::ccl::prof::ProfInfo;
 use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
 use crate::workload::{PrngWorkload, Shard, Workload};
@@ -122,6 +123,11 @@ pub struct ShardedConfig<W: Workload> {
     /// Device filter selecting the backends to dispatch to
     /// (`None` = every registered backend).
     pub selector: Option<FilterChain>,
+    /// Explicit shard plan overriding the automatic chunking. Must be
+    /// ascending, contiguous and cover `[0, workload.units())` exactly.
+    /// The compute service uses this to keep micro-batch shards aligned
+    /// to request boundaries (a shard must never straddle two requests).
+    pub shard_plan: Option<Vec<Shard>>,
 }
 
 impl<W: Workload> ShardedConfig<W> {
@@ -134,6 +140,7 @@ impl<W: Workload> ShardedConfig<W> {
             profile: false,
             sink: Sink::Discard,
             selector: None,
+            shard_plan: None,
         }
     }
 }
@@ -153,6 +160,10 @@ pub struct WorkloadOutcome {
     pub prof_summary: Option<String>,
     /// Fig. 5-style event table across all backends.
     pub prof_export: Option<String>,
+    /// The raw merged event records behind the summary/export (when
+    /// profiling) — callers aggregating across many runs (the compute
+    /// service) feed these to [`Prof::add_timeline`].
+    pub prof_infos: Option<Vec<ProfInfo>>,
 }
 
 /// Per-backend scratch owned by the scheduler (kernel + buffer caches).
@@ -194,7 +205,12 @@ impl BackendScratch {
 }
 
 /// Split `words` into ~`target` contiguous chunks of ≥ `min_chunk` words.
-fn plan_chunks(words: usize, target: usize, min_chunk: usize) -> Vec<(usize, usize)> {
+/// (Also used by the compute service to chunk each micro-batch member.)
+pub(crate) fn plan_chunks(
+    words: usize,
+    target: usize,
+    min_chunk: usize,
+) -> Vec<(usize, usize)> {
     let max_chunks = words.div_ceil(min_chunk.max(1)).max(1);
     let count = target.clamp(1, max_chunks);
     let base = words / count;
@@ -276,6 +292,7 @@ pub fn run_sharded_on(
         cfg.profile,
         cfg.selector.as_ref(),
         &cfg.sink,
+        None,
     )?;
     Ok(ShardedOutcome {
         wall: out.wall,
@@ -309,6 +326,7 @@ pub fn run_sharded_workload_on<W: Workload>(
         cfg.profile,
         cfg.selector.as_ref(),
         &cfg.sink,
+        cfg.shard_plan.as_deref(),
     )
 }
 
@@ -324,6 +342,7 @@ fn run_workload_engine(
     profile: bool,
     selector: Option<&FilterChain>,
     sink: &Sink,
+    shard_plan: Option<&[Shard]>,
 ) -> CclResult<WorkloadOutcome> {
     let backends: Vec<Arc<dyn Backend>> = match selector {
         Some(chain) => registry.select(chain),
@@ -339,13 +358,34 @@ fn run_workload_engine(
     }
 
     let nb = backends.len();
-    let plan = plan_chunks(
-        workload.units(),
-        nb * chunks_per_backend.max(1),
-        min_chunk,
-    );
-    let shards: Vec<Shard> =
-        plan.iter().map(|&(lo, len)| Shard { lo, len }).collect();
+    let shards: Vec<Shard> = match shard_plan {
+        Some(plan) => {
+            // An explicit plan must tile [0, units) exactly — anything
+            // else would silently drop or duplicate work.
+            let mut lo = 0usize;
+            for s in plan {
+                if s.lo != lo || s.len == 0 {
+                    return Err(CclError::framework(format!(
+                        "shard plan must be contiguous from 0 with non-empty \
+                         shards; found [{}, {}+{}) where lo {lo} was expected",
+                        s.lo, s.lo, s.len
+                    )));
+                }
+                lo += s.len;
+            }
+            if lo != workload.units() {
+                return Err(CclError::framework(format!(
+                    "shard plan covers {lo} units, workload has {}",
+                    workload.units()
+                )));
+            }
+            plan.to_vec()
+        }
+        None => plan_chunks(workload.units(), nb * chunks_per_backend.max(1), min_chunk)
+            .iter()
+            .map(|&(lo, len)| Shard { lo, len })
+            .collect(),
+    };
     let outputs: Vec<Mutex<Vec<u8>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
 
@@ -507,11 +547,15 @@ fn run_workload_engine(
         return Err(e);
     }
 
-    let (prof_summary, prof_export) = if profile {
+    let (prof_summary, prof_export, prof_infos) = if profile {
         prof.calc()?;
-        (Some(prof.summary_default()), Some(prof.export_string()?))
+        (
+            Some(prof.summary_default()),
+            Some(prof.export_string()?),
+            Some(prof.infos()?.to_vec()),
+        )
     } else {
-        (None, None)
+        (None, None, None)
     };
 
     Ok(WorkloadOutcome {
@@ -522,6 +566,7 @@ fn run_workload_engine(
         per_backend,
         prof_summary,
         prof_export,
+        prof_infos,
     })
 }
 
@@ -575,6 +620,52 @@ mod tests {
         let out = run_sharded_workload_on(&reg, &scfg).unwrap();
         assert!(out.num_chunks >= 2, "should shard into bands");
         assert_eq!(out.final_output, w.reference(3), "halo exchange must be exact");
+    }
+
+    #[test]
+    fn explicit_shard_plan_is_respected_and_validated() {
+        use crate::workload::SaxpyWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let w = SaxpyWorkload::new(1000, 2.5);
+
+        // A valid, deliberately uneven plan runs and is bit-exact.
+        let mut scfg = ShardedConfig::new(w, 2);
+        scfg.shard_plan = Some(vec![
+            Shard { lo: 0, len: 700 },
+            Shard { lo: 700, len: 50 },
+            Shard { lo: 750, len: 250 },
+        ]);
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert_eq!(out.num_chunks, 3);
+        assert_eq!(out.final_output, w.reference(2));
+
+        // Gaps, overlaps, short coverage and empty shards are rejected.
+        for bad in [
+            vec![Shard { lo: 0, len: 500 }, Shard { lo: 600, len: 400 }],
+            vec![Shard { lo: 0, len: 600 }, Shard { lo: 500, len: 500 }],
+            vec![Shard { lo: 0, len: 999 }],
+            vec![Shard { lo: 0, len: 1000 }, Shard { lo: 1000, len: 0 }],
+        ] {
+            let mut scfg = ShardedConfig::new(w, 1);
+            scfg.shard_plan = Some(bad.clone());
+            assert!(
+                run_sharded_workload_on(&reg, &scfg).is_err(),
+                "plan {bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn profiled_outcome_carries_raw_infos() {
+        use crate::workload::SaxpyWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let mut scfg = ShardedConfig::new(SaxpyWorkload::new(4096, 2.0), 2);
+        scfg.profile = true;
+        scfg.min_chunk = 512;
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        let infos = out.prof_infos.expect("profiling requested");
+        assert!(!infos.is_empty());
+        assert!(infos.iter().any(|i| i.name == "SAXPY_KERNEL"), "{infos:?}");
     }
 
     #[test]

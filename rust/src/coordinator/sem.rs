@@ -36,6 +36,25 @@ impl Semaphore {
         self.cv.notify_one();
     }
 
+    /// Timed wait: block up to `dur` for a permit. Returns `true` when a
+    /// permit was taken, `false` on timeout. (The service dispatcher's
+    /// micro-batch window is built on this.)
+    pub fn wait_timeout(&self, dur: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + dur;
+        let mut c = self.count.lock().unwrap();
+        while *c == 0 {
+            let Some(left) =
+                deadline.checked_duration_since(std::time::Instant::now())
+            else {
+                return false;
+            };
+            let (guard, _timed_out) = self.cv.wait_timeout(c, left).unwrap();
+            c = guard;
+        }
+        *c -= 1;
+        true
+    }
+
     /// Non-blocking variant (used by shutdown paths).
     pub fn try_wait(&self) -> bool {
         let mut c = self.count.lock().unwrap();
@@ -134,6 +153,27 @@ mod tests {
         // consumer exited without deadlocking.
         assert!((5..=6).contains(&consumed), "consumed {consumed}");
         assert!(!s.try_wait() || consumed == 5);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_and_succeeds() {
+        let s = Semaphore::new(0);
+        let t0 = std::time::Instant::now();
+        assert!(!s.wait_timeout(std::time::Duration::from_millis(30)));
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+
+        s.post();
+        assert!(s.wait_timeout(std::time::Duration::from_millis(30)));
+
+        // A post racing the wait is picked up before the deadline.
+        let s = Arc::new(Semaphore::new(0));
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            s2.post();
+        });
+        assert!(s.wait_timeout(std::time::Duration::from_secs(5)));
+        t.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,1001 @@
+//! `ComputeService` — a persistent, thread-safe compute service with
+//! request micro-batching.
+//!
+//! The paper's §5 application is one producer feeding one consumer; this
+//! module is the *service* generalisation the ROADMAP's north star asks
+//! for: many client threads [`submit`](ComputeService::submit)ting
+//! [`WorkloadRequest`]s concurrently to a long-lived dispatcher that
+//! owns scheduling, batching and profiling (EngineCL-style — the
+//! runtime, not each application, owns the plumbing).
+//!
+//! ## Architecture
+//!
+//! ```text
+//! clients ──submit()──► bounded queue ──► dispatcher ──► BatchWorkload
+//!    ▲     (Semaphore       │              (batch         │ shard-aligned
+//!    │      backpressure)   │               window)       ▼ dispatch
+//!    └──◄── ResponseHandle ◄┴──────────────────────── work-stealing
+//!           (result + Prof slice)                     scheduler, all
+//!                                                     backends
+//! ```
+//!
+//! * **Admission control** — the queue is bounded by
+//!   [`ServiceOpts::queue_cap`]; [`ComputeService::submit`] blocks for a
+//!   slot (backpressure) while [`ComputeService::try_submit`] returns
+//!   [`ServiceError::QueueFull`] immediately. Both are gated on the
+//!   existing [`Semaphore`] — the same primitive the §5 pipeline uses.
+//! * **Micro-batching** — the dispatcher coalesces up to
+//!   [`ServiceOpts::max_batch`] queued requests of the same workload
+//!   kind (same `name()` and iteration count), waiting up to
+//!   [`ServiceOpts::batch_window`] for stragglers. The batch becomes one
+//!   `BatchWorkload` dispatch across **all** backends; each request
+//!   occupies its own member-aligned shard range, so every trait call
+//!   delegates with member-local coordinates and the batched bytes are
+//!   **bit-identical** to running each request alone — the split back
+//!   per request is a pure slice.
+//! * **Profiling** — when [`ServiceOpts::profile`] is set, every batch's
+//!   cross-backend timeline (via
+//!   [`Prof::add_timeline`](crate::ccl::Prof::add_timeline)) is
+//!   aggregated service-wide; each [`Response`] carries its batch's
+//!   [`BatchProf`] slice and [`ComputeService::shutdown`] renders the
+//!   whole service profile.
+//! * **Shutdown drain** — [`ComputeService::shutdown`] stops admission,
+//!   drains every already-accepted request (their handles all resolve),
+//!   joins the dispatcher and reports. Dropping the service does the
+//!   same join. A client that panics mid-flight merely drops its
+//!   [`ResponseHandle`]; the service is unaffected.
+//!
+//! ## Example
+//!
+//! ```
+//! use cf4rs::coordinator::service::{ComputeService, ServiceOpts, WorkloadRequest};
+//! use cf4rs::workload::{SaxpyWorkload, Workload};
+//!
+//! let svc = ComputeService::start_global(ServiceOpts::default());
+//! let w = SaxpyWorkload::new(1024, 2.0);
+//! let handle = svc.submit(WorkloadRequest::new(w).iters(2)).unwrap();
+//! let resp = handle.wait().unwrap();
+//! assert_eq!(resp.output, w.reference(2));
+//! let report = svc.shutdown();
+//! assert_eq!(report.stats.requests, 1);
+//! ```
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::{BackendRegistry, CompileSpec};
+use crate::ccl::errors::{CclError, CclResult};
+use crate::ccl::prof::ProfInfo;
+use crate::ccl::selector::FilterChain;
+use crate::ccl::Prof;
+use crate::workload::{IterPlan, Shard, Workload};
+
+use super::scheduler::{plan_chunks, run_sharded_workload_on, ShardedConfig};
+use super::sem::Semaphore;
+
+// ---------------------------------------------------------------------------
+// Requests, responses, errors
+// ---------------------------------------------------------------------------
+
+/// One unit of work submitted to the service.
+pub struct WorkloadRequest {
+    /// The computation to run (shared so the batch can hold it too).
+    pub workload: Arc<dyn Workload>,
+    /// Iterations to run (`None` = the workload's
+    /// [`default_iters`](Workload::default_iters)).
+    pub iters: Option<usize>,
+}
+
+impl WorkloadRequest {
+    pub fn new(workload: impl Workload + 'static) -> Self {
+        Self { workload: Arc::new(workload), iters: None }
+    }
+
+    pub fn from_arc(workload: Arc<dyn Workload>) -> Self {
+        Self { workload, iters: None }
+    }
+
+    /// Override the iteration count.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = Some(iters);
+        self
+    }
+
+    fn resolved_iters(&self) -> usize {
+        self.iters.unwrap_or_else(|| self.workload.default_iters())
+    }
+}
+
+/// Why a submit or wait failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// `try_submit`: the admission queue is at capacity — back off.
+    QueueFull,
+    /// The service no longer accepts requests.
+    ShuttingDown,
+    /// The request was rejected before execution (empty workload,
+    /// zero iterations, ...).
+    Invalid(String),
+    /// The batch dispatch failed in the scheduler/backend layer.
+    Execution(String),
+    /// The service dropped the request without answering (dispatcher
+    /// died) — a bug guard, not a normal outcome.
+    Abandoned,
+    /// [`ResponseHandle::wait_timeout`] gave up waiting.
+    Timeout,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::QueueFull => write!(f, "service admission queue is full"),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::Invalid(m) => write!(f, "invalid request: {m}"),
+            ServiceError::Execution(m) => write!(f, "batch execution failed: {m}"),
+            ServiceError::Abandoned => write!(f, "request abandoned by the service"),
+            ServiceError::Timeout => write!(f, "timed out waiting for the response"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Profile slice for the batch a request rode in.
+#[derive(Debug)]
+pub struct BatchProf {
+    pub batch_id: u64,
+    pub batch_size: usize,
+    /// Fig. 3-style summary of the batch across all backends.
+    pub summary: String,
+    /// Fig. 5-style export table of the batch.
+    pub export: String,
+}
+
+/// What one request produced.
+#[derive(Debug)]
+pub struct Response {
+    /// The request's output bytes — bit-identical to an unbatched run.
+    pub output: Vec<u8>,
+    /// Submit-to-completion latency.
+    pub latency: Duration,
+    /// Sequence number of the batch this request rode in.
+    pub batch_id: u64,
+    /// How many requests shared that batch.
+    pub batch_size: usize,
+    /// The batch's profile slice (when the service profiles).
+    pub prof: Option<Arc<BatchProf>>,
+}
+
+impl Response {
+    /// Decode the output as little-endian u64s.
+    pub fn as_u64s(&self) -> Vec<u64> {
+        self.output
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    /// Decode the output as little-endian f32s.
+    pub fn as_f32s(&self) -> Vec<f32> {
+        self.output
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+}
+
+#[derive(Default)]
+struct Slot {
+    state: Mutex<Option<Result<Response, ServiceError>>>,
+    cv: Condvar,
+}
+
+impl Slot {
+    /// First writer wins; later fulfilments (e.g. the Abandoned guard
+    /// after a normal answer) are no-ops.
+    fn fulfill(&self, r: Result<Response, ServiceError>) {
+        let mut st = self.state.lock().unwrap();
+        if st.is_none() {
+            *st = Some(r);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// The client's handle to a submitted request.
+pub struct ResponseHandle {
+    slot: Arc<Slot>,
+}
+
+impl ResponseHandle {
+    /// Block until the service answers.
+    pub fn wait(self) -> Result<Response, ServiceError> {
+        let mut st = self.slot.state.lock().unwrap();
+        while st.is_none() {
+            st = self.slot.cv.wait(st).unwrap();
+        }
+        st.take().unwrap()
+    }
+
+    /// Block up to `dur`; [`ServiceError::Timeout`] if the service has
+    /// not answered by then.
+    pub fn wait_timeout(self, dur: Duration) -> Result<Response, ServiceError> {
+        let deadline = Instant::now() + dur;
+        let mut st = self.slot.state.lock().unwrap();
+        while st.is_none() {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return Err(ServiceError::Timeout);
+            };
+            let (guard, _) = self.slot.cv.wait_timeout(st, left).unwrap();
+            st = guard;
+        }
+        st.take().unwrap()
+    }
+
+    /// Has the service answered yet?
+    pub fn is_ready(&self) -> bool {
+        self.slot.state.lock().unwrap().is_some()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service configuration and stats
+// ---------------------------------------------------------------------------
+
+/// Tunables for [`ComputeService::start`].
+pub struct ServiceOpts {
+    /// Bounded admission-queue capacity (requests accepted but not yet
+    /// dispatched). `submit` blocks when full; `try_submit` errors.
+    pub queue_cap: usize,
+    /// Most requests coalesced into one micro-batch.
+    pub max_batch: usize,
+    /// How long the dispatcher holds an under-full batch open waiting
+    /// for more same-kind requests.
+    pub batch_window: Duration,
+    /// Scheduler chunking: target chunks per backend within a batch.
+    pub chunks_per_backend: usize,
+    /// Scheduler chunking: minimum shard size in workload units.
+    pub min_chunk: usize,
+    /// Profile every batch and aggregate service-wide.
+    pub profile: bool,
+    /// Device filter selecting the backends batches dispatch to —
+    /// resolved **once** at service start into a filtered registry
+    /// snapshot (filter chains hold closures and are not cloneable
+    /// per batch).
+    pub selector: Option<FilterChain>,
+}
+
+impl Default for ServiceOpts {
+    fn default() -> Self {
+        Self {
+            queue_cap: 64,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            chunks_per_backend: 2,
+            min_chunk: 1024,
+            profile: false,
+            selector: None,
+        }
+    }
+}
+
+/// Running totals the dispatcher maintains.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// Requests answered (successfully executed).
+    pub requests: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Requests that shared a batch with at least one other request.
+    pub coalesced: usize,
+    /// Largest batch dispatched.
+    pub max_batch: usize,
+    /// Requests answered with an execution error.
+    pub errors: usize,
+}
+
+/// What [`ComputeService::shutdown`] returns.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub stats: ServiceStats,
+    /// Service-wide Fig. 3-style summary across every profiled batch.
+    pub prof_summary: Option<String>,
+    /// Service-wide Fig. 5-style export table.
+    pub prof_export: Option<String>,
+}
+
+// ---------------------------------------------------------------------------
+// The batch: K same-kind requests as one schedulable workload
+// ---------------------------------------------------------------------------
+
+/// K same-kind requests coalesced into one scheduler dispatch.
+///
+/// Member `m` owns the batch index range `[base[m], base[m+1])`. Every
+/// [`Workload`] call maps its (request-aligned) shard to the owning
+/// member and delegates with member-local coordinates and a
+/// member-local state slice, so each request computes exactly the bytes
+/// it would compute alone — the bit-identity contract micro-batching
+/// rests on. Shards are planned by [`plan_batch_shards`], which never
+/// lets one straddle a request boundary.
+struct BatchWorkload {
+    members: Vec<Arc<dyn Workload>>,
+    /// Cumulative unit offsets; `base[members.len()]` = total units.
+    base: Vec<usize>,
+    /// Per-member byte lengths of the current global state. Written
+    /// between iterations (`init_state`/`next_state`), read by `plan`
+    /// during one.
+    state_lens: Mutex<Vec<usize>>,
+    /// Per-member byte lengths of the last merged output.
+    merged_lens: Mutex<Vec<usize>>,
+}
+
+impl BatchWorkload {
+    fn new(members: Vec<Arc<dyn Workload>>) -> Self {
+        let mut base = Vec::with_capacity(members.len() + 1);
+        base.push(0usize);
+        for m in &members {
+            base.push(base.last().unwrap() + m.units());
+        }
+        let k = members.len();
+        Self {
+            members,
+            base,
+            state_lens: Mutex::new(vec![0; k]),
+            merged_lens: Mutex::new(vec![0; k]),
+        }
+    }
+
+    /// The member owning `shard`, and the shard in member coordinates.
+    fn member_of(&self, shard: Shard) -> (usize, Shard) {
+        let m = self.base.partition_point(|&b| b <= shard.lo) - 1;
+        debug_assert!(
+            shard.lo + shard.len <= self.base[m + 1],
+            "shard {shard:?} straddles a request boundary"
+        );
+        (m, Shard { lo: shard.lo - self.base[m], len: shard.len })
+    }
+
+    fn member_state_slice<'a>(&self, m: usize, state: &'a [u8]) -> &'a [u8] {
+        let lens = self.state_lens.lock().unwrap();
+        let lo: usize = lens[..m].iter().sum();
+        &state[lo..lo + lens[m]]
+    }
+
+    /// Split the final merged output back into per-request byte vectors.
+    fn split_final(&self, merged: &[u8]) -> Vec<Vec<u8>> {
+        let lens = self.merged_lens.lock().unwrap();
+        debug_assert_eq!(lens.iter().sum::<usize>(), merged.len());
+        let mut out = Vec::with_capacity(lens.len());
+        let mut lo = 0usize;
+        for &l in lens.iter() {
+            out.push(merged[lo..lo + l].to_vec());
+            lo += l;
+        }
+        out
+    }
+}
+
+impl Workload for BatchWorkload {
+    fn name(&self) -> &'static str {
+        "service-batch"
+    }
+
+    fn units(&self) -> usize {
+        *self.base.last().unwrap()
+    }
+
+    fn unit_bytes(&self) -> usize {
+        self.members.first().map(|m| m.unit_bytes()).unwrap_or(1)
+    }
+
+    fn init_state(&self) -> Vec<u8> {
+        let mut lens = self.state_lens.lock().unwrap();
+        let mut state = Vec::new();
+        for (i, m) in self.members.iter().enumerate() {
+            let s = m.init_state();
+            lens[i] = s.len();
+            state.extend_from_slice(&s);
+        }
+        state
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        let (m, local) = self.member_of(shard);
+        self.members[m].kernels(local)
+    }
+
+    fn plan(&self, shard: Shard, iter: usize, state: &[u8]) -> IterPlan {
+        let (m, local) = self.member_of(shard);
+        self.members[m].plan(local, iter, self.member_state_slice(m, state))
+    }
+
+    fn global_dims(&self, shard: Shard, iter: usize) -> Vec<usize> {
+        let (m, local) = self.member_of(shard);
+        self.members[m].global_dims(local, iter)
+    }
+
+    fn merge(&self, shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        let mut lens = self.merged_lens.lock().unwrap();
+        let mut merged = Vec::new();
+        let mut i = 0usize;
+        for (m, member) in self.members.iter().enumerate() {
+            let start = i;
+            let mut local = Vec::new();
+            while i < shards.len() {
+                let (mi, ls) = self.member_of(shards[i]);
+                if mi != m {
+                    break;
+                }
+                local.push(ls);
+                i += 1;
+            }
+            let part = member.merge(&local, &outputs[start..i]);
+            lens[m] = part.len();
+            merged.extend_from_slice(&part);
+        }
+        debug_assert_eq!(i, shards.len(), "every shard must belong to a member");
+        merged
+    }
+
+    fn next_state(&self, prev: Vec<u8>, merged: Vec<u8>) -> Vec<u8> {
+        let mut state_lens = self.state_lens.lock().unwrap();
+        let merged_lens = self.merged_lens.lock().unwrap();
+        let mut next = Vec::with_capacity(prev.len().max(merged.len()));
+        let (mut plo, mut mlo) = (0usize, 0usize);
+        for (m, member) in self.members.iter().enumerate() {
+            let p = prev[plo..plo + state_lens[m]].to_vec();
+            let g = merged[mlo..mlo + merged_lens[m]].to_vec();
+            plo += state_lens[m];
+            mlo += merged_lens[m];
+            let ns = member.next_state(p, g);
+            state_lens[m] = ns.len();
+            next.extend_from_slice(&ns);
+        }
+        next
+    }
+
+    fn reference(&self, iters: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        for m in &self.members {
+            out.extend_from_slice(&m.reference(iters));
+        }
+        out
+    }
+}
+
+/// Request-aligned shard plan for a batch: chunk each member
+/// independently toward `target_chunks` total, so no shard ever
+/// straddles two requests and small requests stay whole (one launch).
+fn plan_batch_shards(
+    members: &[Arc<dyn Workload>],
+    target_chunks: usize,
+    min_chunk: usize,
+) -> Vec<Shard> {
+    let total: usize = members.iter().map(|m| m.units()).sum();
+    let ideal = total.div_ceil(target_chunks.max(1)).max(min_chunk.max(1));
+    let mut shards = Vec::new();
+    let mut base = 0usize;
+    for m in members {
+        let u = m.units();
+        let count = u.div_ceil(ideal).max(1);
+        for (lo, len) in plan_chunks(u, count, 1) {
+            shards.push(Shard { lo: base + lo, len });
+        }
+        base += u;
+    }
+    shards
+}
+
+/// What [`run_batch`] produced.
+#[derive(Debug)]
+pub struct BatchOutcome {
+    /// Per-request output bytes, in request order — each bit-identical
+    /// to that request's unbatched execution.
+    pub outputs: Vec<Vec<u8>>,
+    pub wall: Duration,
+    pub num_chunks: usize,
+    pub prof_summary: Option<String>,
+    pub prof_export: Option<String>,
+    pub prof_infos: Option<Vec<ProfInfo>>,
+}
+
+/// Execute one micro-batch synchronously — the dispatcher's execution
+/// path, exposed so the harness and tests can cross-validate batching
+/// deterministically. All requests must resolve to the same iteration
+/// count (the dispatcher's batch key guarantees this; callers here must
+/// uphold it).
+pub fn run_batch(
+    registry: &BackendRegistry,
+    requests: &[WorkloadRequest],
+    opts: &ServiceOpts,
+) -> CclResult<BatchOutcome> {
+    if requests.is_empty() {
+        return Err(CclError::framework("run_batch needs at least one request"));
+    }
+    let iters = requests[0].resolved_iters();
+    for r in requests {
+        if r.workload.units() == 0 {
+            return Err(CclError::framework("batched workload has zero units"));
+        }
+        if r.resolved_iters() != iters {
+            return Err(CclError::framework(
+                "all requests in a batch must share the iteration count",
+            ));
+        }
+    }
+    let members: Vec<Arc<dyn Workload>> =
+        requests.iter().map(|r| r.workload.clone()).collect();
+    match &opts.selector {
+        Some(chain) => {
+            let sub = BackendRegistry::new();
+            for b in registry.select(chain) {
+                sub.register(b);
+            }
+            run_members(&sub, members, iters, opts)
+        }
+        None => run_members(registry, members, iters, opts),
+    }
+}
+
+fn run_members(
+    registry: &BackendRegistry,
+    members: Vec<Arc<dyn Workload>>,
+    iters: usize,
+    opts: &ServiceOpts,
+) -> CclResult<BatchOutcome> {
+    let nb = registry.len().max(1);
+    let shards = plan_batch_shards(
+        &members,
+        nb * opts.chunks_per_backend.max(1),
+        opts.min_chunk,
+    );
+    let mut cfg = ShardedConfig::new(BatchWorkload::new(members), iters);
+    cfg.shard_plan = Some(shards);
+    cfg.profile = opts.profile;
+    let out = run_sharded_workload_on(registry, &cfg)?;
+    let outputs = cfg.workload.split_final(&out.final_output);
+    Ok(BatchOutcome {
+        outputs,
+        wall: out.wall,
+        num_chunks: out.num_chunks,
+        prof_summary: out.prof_summary,
+        prof_export: out.prof_export,
+        prof_infos: out.prof_infos,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The service proper
+// ---------------------------------------------------------------------------
+
+/// Which registry the dispatcher executes against.
+enum Registry {
+    Global,
+    Owned(Arc<BackendRegistry>),
+}
+
+impl Registry {
+    fn get(&self) -> &BackendRegistry {
+        match self {
+            Registry::Global => BackendRegistry::global(),
+            Registry::Owned(r) => r,
+        }
+    }
+}
+
+/// An accepted request waiting for (or undergoing) dispatch.
+struct Pending {
+    workload: Arc<dyn Workload>,
+    iters: usize,
+    slot: Arc<Slot>,
+    submitted: Instant,
+}
+
+impl Pending {
+    fn fulfill(&self, r: Result<Response, ServiceError>) {
+        self.slot.fulfill(r);
+    }
+
+    fn key(&self) -> (&'static str, usize) {
+        (self.workload.name(), self.iters)
+    }
+}
+
+impl Drop for Pending {
+    /// Bug guard: an accepted request must never vanish silently — if
+    /// the dispatcher dies before answering, the client's `wait()`
+    /// resolves to [`ServiceError::Abandoned`] instead of hanging.
+    fn drop(&mut self) {
+        self.slot.fulfill(Err(ServiceError::Abandoned));
+    }
+}
+
+struct ServiceShared {
+    queue: Mutex<VecDeque<Pending>>,
+    /// Posted once per enqueued request (plus once at shutdown).
+    ready: Semaphore,
+    /// Admission permits — one per free queue slot.
+    slots: Semaphore,
+    stopping: AtomicBool,
+    opts: ServiceOpts,
+    stats: Mutex<ServiceStats>,
+    /// Every profiled batch's event records (service-wide aggregation).
+    prof_infos: Mutex<Vec<ProfInfo>>,
+}
+
+/// A persistent, thread-safe compute service — see the [module
+/// docs](self).
+pub struct ComputeService {
+    shared: Arc<ServiceShared>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Start a service executing on an explicit backend registry.
+    pub fn start(registry: Arc<BackendRegistry>, opts: ServiceOpts) -> Self {
+        Self::spawn(Registry::Owned(registry), opts)
+    }
+
+    /// Start a service on the process-wide registry.
+    pub fn start_global(opts: ServiceOpts) -> Self {
+        Self::spawn(Registry::Global, opts)
+    }
+
+    fn spawn(registry: Registry, mut opts: ServiceOpts) -> Self {
+        // Resolve the device selector once: the dispatcher executes
+        // against a filtered registry snapshot for the service lifetime.
+        let registry = match opts.selector.take() {
+            Some(chain) => {
+                let sub = BackendRegistry::new();
+                for b in registry.get().select(&chain) {
+                    sub.register(b);
+                }
+                Registry::Owned(Arc::new(sub))
+            }
+            None => registry,
+        };
+        let shared = Arc::new(ServiceShared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Semaphore::new(0),
+            slots: Semaphore::new(opts.queue_cap.max(1)),
+            stopping: AtomicBool::new(false),
+            opts,
+            stats: Mutex::new(ServiceStats::default()),
+            prof_infos: Mutex::new(Vec::new()),
+        });
+        let sh = shared.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("cf4rs-service".into())
+            .spawn(move || dispatcher_loop(registry, sh))
+            .expect("spawn service dispatcher");
+        Self { shared, dispatcher: Some(dispatcher) }
+    }
+
+    /// Submit a request, blocking while the admission queue is full
+    /// (backpressure).
+    pub fn submit(&self, req: WorkloadRequest) -> Result<ResponseHandle, ServiceError> {
+        self.admit(req, true)
+    }
+
+    /// Submit without blocking; [`ServiceError::QueueFull`] when the
+    /// admission queue is at capacity.
+    pub fn try_submit(
+        &self,
+        req: WorkloadRequest,
+    ) -> Result<ResponseHandle, ServiceError> {
+        self.admit(req, false)
+    }
+
+    fn admit(
+        &self,
+        req: WorkloadRequest,
+        block: bool,
+    ) -> Result<ResponseHandle, ServiceError> {
+        let iters = req.resolved_iters();
+        if req.workload.units() == 0 {
+            return Err(ServiceError::Invalid("workload has zero units".into()));
+        }
+        if iters == 0 {
+            return Err(ServiceError::Invalid("zero iterations".into()));
+        }
+        if self.shared.stopping.load(Ordering::SeqCst) {
+            return Err(ServiceError::ShuttingDown);
+        }
+        if block {
+            self.shared.slots.wait();
+        } else if !self.shared.slots.try_wait() {
+            return Err(ServiceError::QueueFull);
+        }
+        let slot = Arc::new(Slot::default());
+        let pending = Pending {
+            workload: req.workload,
+            iters,
+            slot: slot.clone(),
+            submitted: Instant::now(),
+        };
+        {
+            // Re-check shutdown *inside* the queue critical section:
+            // the dispatcher's drain-mode exit pops this queue under the
+            // same lock after observing `stopping`, so a push that wins
+            // the lock race is guaranteed to be seen by the drain, and a
+            // push that loses it is guaranteed to see `stopping` here —
+            // no accepted request can slip past the drain un-answered.
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.stopping.load(Ordering::SeqCst) {
+                drop(q);
+                self.shared.slots.post();
+                return Err(ServiceError::ShuttingDown);
+            }
+            q.push_back(pending);
+        }
+        self.shared.ready.post();
+        Ok(ResponseHandle { slot })
+    }
+
+    /// Snapshot of the running totals.
+    pub fn stats(&self) -> ServiceStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Stop accepting new requests (idempotent); already-accepted
+    /// requests still drain in the background. [`shutdown`] implies
+    /// this.
+    ///
+    /// [`shutdown`]: ComputeService::shutdown
+    pub fn initiate_shutdown(&self) {
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        self.shared.ready.post();
+    }
+
+    /// Stop accepting requests, drain every accepted one (their handles
+    /// all resolve), join the dispatcher and report.
+    pub fn shutdown(mut self) -> ServiceReport {
+        self.initiate_shutdown();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        // Entries in `Prof::add_timeline`'s shape, grouped per queue.
+        type Timeline = Vec<(String, (u64, u64, u64, u64))>;
+        let infos = std::mem::take(&mut *self.shared.prof_infos.lock().unwrap());
+        let (prof_summary, prof_export) = if infos.is_empty() {
+            (None, None)
+        } else {
+            let mut by_queue: BTreeMap<String, Timeline> = BTreeMap::new();
+            for i in infos {
+                by_queue
+                    .entry(i.queue)
+                    .or_default()
+                    .push((i.name, (i.t_queued, i.t_submit, i.t_start, i.t_end)));
+            }
+            let mut prof = Prof::new();
+            for (q, entries) in by_queue {
+                prof.add_timeline(q, entries);
+            }
+            match prof.calc() {
+                Ok(()) => (Some(prof.summary_default()), prof.export_string().ok()),
+                Err(_) => (None, None),
+            }
+        };
+        ServiceReport {
+            stats: self.shared.stats.lock().unwrap().clone(),
+            prof_summary,
+            prof_export,
+        }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        if let Some(h) = self.dispatcher.take() {
+            self.shared.stopping.store(true, Ordering::SeqCst);
+            self.shared.ready.post();
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn dispatcher_loop(registry: Registry, sh: Arc<ServiceShared>) {
+    let mut batch_id = 0u64;
+    loop {
+        let draining = sh.stopping.load(Ordering::SeqCst);
+        if !draining {
+            sh.ready.wait();
+            if sh.stopping.load(Ordering::SeqCst) {
+                // The wake may be the shutdown post; re-enter in drain
+                // mode (which no longer consumes permits).
+                continue;
+            }
+        }
+        let first = sh.queue.lock().unwrap().pop_front();
+        let Some(first) = first else {
+            if draining {
+                return;
+            }
+            // Spurious wake: an item we already batch-collected posted
+            // its permit late. Nothing to do.
+            continue;
+        };
+        sh.slots.post();
+        let batch = collect_batch(&sh, first, draining);
+        execute_batch(&registry, &sh, batch, batch_id);
+        batch_id += 1;
+    }
+}
+
+/// Grow a batch around `first`: take queued same-kind requests, waiting
+/// up to the batch window for stragglers (skipped in drain mode).
+fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pending> {
+    let key = first.key();
+    let mut batch = vec![first];
+    let deadline = Instant::now() + sh.opts.batch_window;
+    // `ready` permits consumed for arrivals that did NOT match the key;
+    // returned when the window closes so their wakeups aren't lost.
+    let mut borrowed = 0usize;
+    while batch.len() < sh.opts.max_batch {
+        let taken = {
+            let mut q = sh.queue.lock().unwrap();
+            match q.iter().position(|p| p.key() == key) {
+                Some(pos) => q.remove(pos),
+                None => None,
+            }
+        };
+        if let Some(p) = taken {
+            // Settle the taken item's `ready` permit: prefer one we
+            // already borrowed; tolerate the post still being in flight
+            // (it then surfaces as a spurious main-loop wake).
+            if borrowed > 0 {
+                borrowed -= 1;
+            } else {
+                let _ = sh.ready.try_wait();
+            }
+            sh.slots.post();
+            batch.push(p);
+            continue;
+        }
+        if draining || sh.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+            break;
+        };
+        if !sh.ready.wait_timeout(left) {
+            break;
+        }
+        // Woken by an arrival that may be a different kind: hold the
+        // permit while re-scanning so this wait can't spin on its own
+        // re-post.
+        borrowed += 1;
+    }
+    for _ in 0..borrowed {
+        sh.ready.post();
+    }
+    batch
+}
+
+fn execute_batch(
+    registry: &Registry,
+    sh: &ServiceShared,
+    batch: Vec<Pending>,
+    batch_id: u64,
+) {
+    let n = batch.len();
+    let iters = batch[0].iters;
+    let members: Vec<Arc<dyn Workload>> =
+        batch.iter().map(|p| p.workload.clone()).collect();
+    match run_members(registry.get(), members, iters, &sh.opts) {
+        Ok(mut out) => {
+            if let Some(infos) = out.prof_infos.take() {
+                sh.prof_infos.lock().unwrap().extend(infos);
+            }
+            let prof = out.prof_summary.as_ref().map(|s| {
+                Arc::new(BatchProf {
+                    batch_id,
+                    batch_size: n,
+                    summary: s.clone(),
+                    export: out.prof_export.clone().unwrap_or_default(),
+                })
+            });
+            {
+                let mut st = sh.stats.lock().unwrap();
+                st.requests += n;
+                st.batches += 1;
+                if n > 1 {
+                    st.coalesced += n;
+                }
+                st.max_batch = st.max_batch.max(n);
+            }
+            for (p, bytes) in batch.iter().zip(out.outputs) {
+                p.fulfill(Ok(Response {
+                    output: bytes,
+                    latency: p.submitted.elapsed(),
+                    batch_id,
+                    batch_size: n,
+                    prof: prof.clone(),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            {
+                let mut st = sh.stats.lock().unwrap();
+                st.batches += 1;
+                st.errors += n;
+            }
+            for p in &batch {
+                p.fulfill(Err(ServiceError::Execution(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{PrngWorkload, SaxpyWorkload};
+
+    #[test]
+    fn batch_shards_never_straddle_members() {
+        let members: Vec<Arc<dyn Workload>> = vec![
+            Arc::new(SaxpyWorkload::new(100, 2.0)),
+            Arc::new(SaxpyWorkload::new(7000, 2.0)),
+            Arc::new(SaxpyWorkload::new(3, 2.0)),
+        ];
+        let shards = plan_batch_shards(&members, 6, 64);
+        // Coverage: contiguous from 0 to the total.
+        let mut lo = 0usize;
+        for s in &shards {
+            assert_eq!(s.lo, lo);
+            assert!(s.len > 0);
+            lo += s.len;
+        }
+        assert_eq!(lo, 7103);
+        // Alignment: each shard inside exactly one member range.
+        let bounds = [0usize, 100, 7100, 7103];
+        for s in &shards {
+            assert!(
+                bounds.windows(2).any(|w| w[0] <= s.lo && s.lo + s.len <= w[1]),
+                "{s:?} straddles"
+            );
+        }
+        // The big member got split, the small ones stayed whole.
+        assert!(shards.len() > 3);
+        assert!(shards.iter().any(|s| s.lo == 0 && s.len == 100));
+        assert!(shards.iter().any(|s| s.lo == 7100 && s.len == 3));
+    }
+
+    #[test]
+    fn batch_workload_delegates_bit_identically() {
+        // Two PRNG members of different sizes: the batch's reference is
+        // the concatenation of each member's own stream (seeded from
+        // gid 0 in *member* coordinates — not batch coordinates).
+        let a = PrngWorkload::new(512);
+        let b = PrngWorkload::new(256);
+        let members: Vec<Arc<dyn Workload>> = vec![Arc::new(a), Arc::new(b)];
+        let batch = BatchWorkload::new(members);
+        let mut expect = a.reference(3);
+        expect.extend_from_slice(&b.reference(3));
+        assert_eq!(batch.reference(3), expect);
+        assert_eq!(batch.units(), 768);
+        // Member mapping.
+        let (m, local) = batch.member_of(Shard { lo: 600, len: 100 });
+        assert_eq!((m, local), (1, Shard { lo: 88, len: 100 }));
+    }
+
+    #[test]
+    fn run_batch_rejects_mismatched_iters_and_empty() {
+        let reg = BackendRegistry::with_default_backends();
+        let opts = ServiceOpts::default();
+        assert!(run_batch(&reg, &[], &opts).is_err());
+        let reqs = vec![
+            WorkloadRequest::new(SaxpyWorkload::new(64, 2.0)).iters(1),
+            WorkloadRequest::new(SaxpyWorkload::new(64, 2.0)).iters(2),
+        ];
+        assert!(run_batch(&reg, &reqs, &opts).is_err());
+    }
+}

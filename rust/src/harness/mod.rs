@@ -9,6 +9,10 @@
 //! * `bench workloads` — the (workload × path) matrix: every workload
 //!   through rawcl/ccl-v1/ccl-v2/sharded, timed and validated
 //!   bit-identical (writes `workloads.md` + `BENCH_workloads.json`);
+//! * `bench service`  — the compute-service cell: micro-batching
+//!   cross-validated bit-identical against unbatched execution, plus
+//!   p50/p95 latency + requests/sec at several concurrent-client counts
+//!   (writes `service.md` + `BENCH_service.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -19,9 +23,17 @@ pub mod figures;
 pub mod loc;
 pub mod microbench;
 pub mod overhead;
+pub mod service;
 pub mod workloads;
 
 use std::path::Path;
+
+/// Minimal JSON string escape shared by the harness's `BENCH_*.json`
+/// emitters (backslash, quote, newline — the characters error strings
+/// actually contain).
+pub(crate) fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
 
 /// Write one result file; `false` (a harness failure) when the write
 /// fails — silently missing result files must fail CI.
@@ -50,7 +62,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|all [--quick]"
+             workloads|service|all [--quick]"
         );
         return 2;
     };
@@ -167,6 +179,19 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_service(quick: bool) -> bool {
+        let (md, json, validated) = service::report(quick);
+        print!("{md}");
+        // Write both artifacts even when validation failed — they are
+        // the evidence — but fail the run on any divergence.
+        let mut ok = write_result("service.md", &md);
+        ok &= write_result("BENCH_service.json", &json);
+        if !validated {
+            eprintln!("service: batched-vs-unbatched cross-validation FAILED");
+        }
+        ok && validated
+    }
+
     let ok = match which.as_str() {
         "loc" => run_loc(),
         "ablation" => run_ablation(quick),
@@ -175,6 +200,7 @@ pub fn main(args: &[String]) -> i32 {
         "figure5" => run_fig5(quick),
         "backends" => run_backends(quick),
         "workloads" => run_workloads(quick),
+        "service" => run_service(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -183,7 +209,8 @@ pub fn main(args: &[String]) -> i32 {
             let d = run_ablation(quick);
             let e = run_backends(quick);
             let f = run_workloads(quick);
-            l && a && b && c && d && e && f
+            let g = run_service(quick);
+            l && a && b && c && d && e && f && g
         }
         other => {
             eprintln!("unknown bench {other:?}");

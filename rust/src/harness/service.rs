@@ -1,0 +1,410 @@
+//! The compute-service benchmark: throughput/latency under concurrent
+//! clients, plus the micro-batching cross-validation gate.
+//!
+//! Two parts:
+//!
+//! * **Cross-validation** — for every workload kind, a micro-batch of
+//!   mixed-size requests is executed through
+//!   [`run_batch`](crate::coordinator::service::run_batch) and each
+//!   split-back output is compared bit-for-bit against (a) the same
+//!   request run unbatched through the sharded scheduler and (b) the
+//!   host oracle. Any divergence fails the run — CI gates on it.
+//! * **Sessions** — a [`ComputeService`] session per client count:
+//!   every client submits a deterministic mixed-workload request stream,
+//!   validates each response against the oracle and records
+//!   submit-to-answer latency. The table reports p50/p95 latency and
+//!   requests/sec.
+//!
+//! Emits `results/service.md` (human table) and
+//! `results/BENCH_service.json` (machine-readable, schema [`SCHEMA`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::BackendRegistry;
+use crate::coordinator::scheduler::{run_sharded_workload_on, ShardedConfig};
+use crate::coordinator::service::{
+    run_batch, ComputeService, ServiceOpts, ServiceReport, ServiceStats,
+    WorkloadRequest,
+};
+use crate::workload::{
+    MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, StencilWorkload,
+    Workload,
+};
+
+/// Version tag of `BENCH_service.json`. Bump on layout changes so trend
+/// tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-service/1";
+
+/// A deterministic mixed stream of service requests: all five workload
+/// kinds, several sizes per kind (mixed-size same-kind requests are
+/// exactly what micro-batching coalesces).
+pub fn mixed_request(i: usize, quick: bool) -> WorkloadRequest {
+    let s = if quick { 1 } else { 4 };
+    match i % 5 {
+        0 => WorkloadRequest::new(PrngWorkload::new(1024 * s * (1 + i % 3))).iters(3),
+        1 => WorkloadRequest::new(SaxpyWorkload::new(768 * s * (1 + i % 4), 2.5)).iters(3),
+        2 => WorkloadRequest::new(ReduceWorkload::new(2048 * s * (1 + i % 2))).iters(2),
+        3 => WorkloadRequest::new(StencilWorkload::new(16 + 8 * (i % 3), 24)).iters(2),
+        _ => WorkloadRequest::new(MatmulWorkload::new(12 + 4 * (i % 3))).iters(2),
+    }
+}
+
+/// What one multi-client service session measured.
+pub struct SessionOutcome {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Requests answered successfully.
+    pub completed: usize,
+    /// Submit/wait errors.
+    pub failures: usize,
+    /// Responses that did not match the host oracle.
+    pub mismatches: usize,
+    pub wall: Duration,
+    /// Per-request submit-to-answer latencies in ms, sorted ascending.
+    pub latencies_ms: Vec<f64>,
+    pub stats: ServiceStats,
+    pub report: ServiceReport,
+}
+
+impl SessionOutcome {
+    pub fn req_per_s(&self) -> f64 {
+        if self.wall.as_secs_f64() > 0.0 {
+            self.completed as f64 / self.wall.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.50)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 0.95)
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run one service session: `clients` threads each submitting
+/// `requests_per_client` mixed requests, every response validated
+/// against the host oracle.
+pub fn run_session(
+    registry: Arc<BackendRegistry>,
+    clients: usize,
+    requests_per_client: usize,
+    opts: ServiceOpts,
+    quick: bool,
+) -> SessionOutcome {
+    let svc = ComputeService::start(registry, opts);
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let failures = AtomicUsize::new(0);
+    let mismatches = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let (svc, latencies) = (&svc, &latencies);
+            let (failures, mismatches) = (&failures, &mismatches);
+            scope.spawn(move || {
+                for k in 0..requests_per_client {
+                    let req = mixed_request(c + k * 3, quick);
+                    let iters = req.iters.expect("mixed_request sets iters");
+                    let expect = req.workload.reference(iters);
+                    let t = Instant::now();
+                    match svc.submit(req) {
+                        Ok(handle) => match handle.wait() {
+                            Ok(resp) => {
+                                latencies
+                                    .lock()
+                                    .unwrap()
+                                    .push(t.elapsed().as_secs_f64() * 1e3);
+                                if resp.output != expect {
+                                    mismatches.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(_) => {
+                                failures.fetch_add(1, Ordering::SeqCst);
+                            }
+                        },
+                        Err(_) => {
+                            failures.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let stats = svc.stats();
+    let report = svc.shutdown();
+    let mut latencies = latencies.into_inner().unwrap();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    SessionOutcome {
+        clients,
+        requests_per_client,
+        completed: latencies.len(),
+        failures: failures.into_inner(),
+        mismatches: mismatches.into_inner(),
+        wall,
+        latencies_ms: latencies,
+        stats,
+        report,
+    }
+}
+
+/// One workload kind's batched-vs-unbatched verdict.
+struct CrossVal {
+    workload: &'static str,
+    requests: usize,
+    ok: bool,
+    error: Option<String>,
+}
+
+/// Micro-batch 3 mixed-size requests per kind and compare every output
+/// against its unbatched scheduler run and the host oracle.
+fn cross_validate(registry: &BackendRegistry, quick: bool) -> Vec<CrossVal> {
+    let s = if quick { 1 } else { 2 };
+    let kinds: Vec<(&'static str, Vec<WorkloadRequest>)> = vec![
+        (
+            "prng",
+            vec![
+                WorkloadRequest::new(PrngWorkload::new(1024 * s)).iters(3),
+                WorkloadRequest::new(PrngWorkload::new(512 * s)).iters(3),
+                WorkloadRequest::new(PrngWorkload::new(2048 * s)).iters(3),
+            ],
+        ),
+        (
+            "saxpy",
+            vec![
+                WorkloadRequest::new(SaxpyWorkload::new(1536 * s, 2.5)).iters(3),
+                WorkloadRequest::new(SaxpyWorkload::new(300 * s, -1.25)).iters(3),
+                WorkloadRequest::new(SaxpyWorkload::new(2048 * s, 0.5)).iters(3),
+            ],
+        ),
+        (
+            "reduce",
+            vec![
+                WorkloadRequest::new(ReduceWorkload::new(4096 * s)).iters(2),
+                WorkloadRequest::new(ReduceWorkload::new(1000 * s)).iters(2),
+                WorkloadRequest::new(ReduceWorkload::new(2048 * s)).iters(2),
+            ],
+        ),
+        (
+            "stencil",
+            vec![
+                WorkloadRequest::new(StencilWorkload::new(24, 16)).iters(2),
+                WorkloadRequest::new(StencilWorkload::new(16, 32)).iters(2),
+                WorkloadRequest::new(StencilWorkload::new(40, 24)).iters(2),
+            ],
+        ),
+        (
+            "matmul",
+            vec![
+                WorkloadRequest::new(MatmulWorkload::new(16)).iters(2),
+                WorkloadRequest::new(MatmulWorkload::new(12)).iters(2),
+                WorkloadRequest::new(MatmulWorkload::new(24)).iters(2),
+            ],
+        ),
+    ];
+
+    let mut out = Vec::new();
+    for (name, reqs) in kinds {
+        let opts = ServiceOpts { min_chunk: 256, ..ServiceOpts::default() };
+        let n = reqs.len();
+        let verdict = (|| -> Result<bool, String> {
+            let batched = run_batch(registry, &reqs, &opts).map_err(|e| e.to_string())?;
+            if batched.outputs.len() != n {
+                return Err(format!(
+                    "batch returned {} outputs for {n} requests",
+                    batched.outputs.len()
+                ));
+            }
+            for (i, req) in reqs.iter().enumerate() {
+                let iters = req.iters.expect("cross_validate sets iters");
+                // (a) the same request, unbatched, through the same
+                // scheduler; (b) the host oracle.
+                let cfg = ShardedConfig::new(req.workload.clone(), iters);
+                let unbatched = run_sharded_workload_on(registry, &cfg)
+                    .map_err(|e| e.to_string())?
+                    .final_output;
+                let oracle = req.workload.reference(iters);
+                if batched.outputs[i] != unbatched || batched.outputs[i] != oracle {
+                    return Ok(false);
+                }
+            }
+            Ok(true)
+        })();
+        match verdict {
+            Ok(ok) => out.push(CrossVal { workload: name, requests: n, ok, error: None }),
+            Err(e) => out.push(CrossVal {
+                workload: name,
+                requests: n,
+                ok: false,
+                error: Some(e),
+            }),
+        }
+    }
+    out
+}
+
+fn render_md(crossval: &[CrossVal], sessions: &[SessionOutcome], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# Compute service — micro-batching cross-validation and \
+         multi-client latency ({} mode)\n\n",
+        if quick { "quick" } else { "full" }
+    ));
+    s.push_str("## Batched vs unbatched (bit-identity gate)\n\n");
+    s.push_str("| workload | requests in batch | verdict |\n|---|---:|---|\n");
+    for c in crossval {
+        let verdict = match (&c.error, c.ok) {
+            (Some(e), _) => format!("**ERROR**: {e}"),
+            (None, true) => "✓ bit-identical".to_string(),
+            (None, false) => "**DIVERGED**".to_string(),
+        };
+        s.push_str(&format!("| {} | {} | {verdict} |\n", c.workload, c.requests));
+    }
+    s.push_str(
+        "\nEach batch coalesces mixed-size same-kind requests into one \
+         request-aligned scheduler dispatch; outputs are split back per \
+         request and compared against the unbatched run and the host \
+         oracle.\n\n",
+    );
+    s.push_str("## Concurrent-client sessions (mixed workload stream)\n\n");
+    s.push_str(
+        "| clients | requests | req/s | p50 ms | p95 ms | batches | \
+         coalesced | max batch | errors |\n\
+         |---:|---:|---:|---:|---:|---:|---:|---:|---:|\n",
+    );
+    for o in sessions {
+        s.push_str(&format!(
+            "| {} | {} | {:.1} | {:.2} | {:.2} | {} | {} | {} | {} |\n",
+            o.clients,
+            o.completed,
+            o.req_per_s(),
+            o.p50_ms(),
+            o.p95_ms(),
+            o.stats.batches,
+            o.stats.coalesced,
+            o.stats.max_batch,
+            o.failures + o.mismatches,
+        ));
+    }
+    s
+}
+
+fn render_json(crossval: &[CrossVal], sessions: &[SessionOutcome], quick: bool) -> String {
+    use super::json_escape as esc;
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"crossval\": [\n");
+    for (i, c) in crossval.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"requests\": {}, \"ok\": {}{}}}{}\n",
+            c.workload,
+            c.requests,
+            c.ok,
+            match &c.error {
+                Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+                None => String::new(),
+            },
+            if i + 1 < crossval.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"sessions\": [\n");
+    for (i, o) in sessions.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"clients\": {}, \"requests\": {}, \"req_per_s\": {:.3}, \
+             \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"wall_ms\": {:.3}, \
+             \"batches\": {}, \"coalesced\": {}, \"max_batch\": {}, \
+             \"failures\": {}, \"mismatches\": {}}}{}\n",
+            o.clients,
+            o.completed,
+            o.req_per_s(),
+            o.p50_ms(),
+            o.p95_ms(),
+            o.wall.as_secs_f64() * 1e3,
+            o.stats.batches,
+            o.stats.coalesced,
+            o.stats.max_batch,
+            o.failures,
+            o.mismatches,
+            if i + 1 < sessions.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Build the full report. Returns `(markdown, json, validated)` — the
+/// caller writes both files even when validation failed (the artifacts
+/// are the evidence) but must exit non-zero on `!validated`.
+pub fn report(quick: bool) -> (String, String, bool) {
+    // A fresh registry keeps profiling/timeline state isolated from the
+    // process-global one other harness commands use.
+    let registry = Arc::new(BackendRegistry::with_default_backends());
+
+    let crossval = cross_validate(&registry, quick);
+
+    let counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let rpc = if quick { 10 } else { 32 };
+    let mut sessions = Vec::new();
+    for &clients in counts {
+        let opts = ServiceOpts {
+            max_batch: 8,
+            batch_window: Duration::from_millis(3),
+            min_chunk: 1024,
+            ..ServiceOpts::default()
+        };
+        sessions.push(run_session(registry.clone(), clients, rpc, opts, quick));
+    }
+
+    let validated = crossval.iter().all(|c| c.ok && c.error.is_none())
+        && sessions.iter().all(|o| o.failures == 0 && o.mismatches == 0);
+    (
+        render_md(&crossval, &sessions, quick),
+        render_json(&crossval, &sessions, quick),
+        validated,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_picks_sane_indices() {
+        let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&v, 0.50), 6.0);
+        assert_eq!(percentile(&v, 0.95), 10.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn mixed_stream_covers_all_kinds() {
+        let names: std::collections::BTreeSet<&'static str> =
+            (0..10).map(|i| mixed_request(i, true).workload.name()).collect();
+        assert_eq!(names.len(), 5, "{names:?}");
+    }
+
+    #[test]
+    fn cross_validation_passes_on_the_default_registry() {
+        let registry = BackendRegistry::with_default_backends();
+        for c in cross_validate(&registry, true) {
+            assert!(c.error.is_none(), "{}: {:?}", c.workload, c.error);
+            assert!(c.ok, "{}: batched != unbatched", c.workload);
+        }
+    }
+}

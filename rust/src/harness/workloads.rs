@@ -171,10 +171,7 @@ fn render_md(cells: &[Cell], quick: bool) -> String {
     s
 }
 
-/// JSON string escape for error messages.
-fn esc(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
-}
+use super::json_escape as esc;
 
 fn json_num(v: Option<f64>) -> String {
     match v {

@@ -33,8 +33,11 @@
 //!   them — bit-identically — through the raw substrate, the `ccl` v1
 //!   tier, the `ccl::v2` session tier and the sharded scheduler.
 //! * [`coordinator`] — the double-buffered streaming pipeline of §5, the
-//!   PRNG service built on it, and the multi-device work-stealing
-//!   scheduler that shards any workload across every registered backend.
+//!   PRNG service built on it, the multi-device work-stealing scheduler
+//!   that shards any workload across every registered backend, and the
+//!   persistent multi-client [`coordinator::service::ComputeService`]
+//!   that micro-batches concurrent requests into shared scheduler
+//!   dispatches.
 //! * [`harness`] — benchmark drivers that regenerate every table and
 //!   figure of the paper's evaluation (§6), plus the backend-comparison
 //!   table.

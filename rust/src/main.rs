@@ -5,9 +5,14 @@
 //! * `cclc`         — the paper's `ccl_c` offline compiler/analyzer;
 //! * `plot-events`  — the paper's `ccl_plot_events` chart generator;
 //! * `rng`          — run the §5 PRNG service (ccl or raw realisation);
+//! * `serve`        — run the persistent multi-client compute service:
+//!   concurrent clients submit a mixed workload stream, the service
+//!   micro-batches and dispatches across all backends, every response is
+//!   validated bit-for-bit against the host oracle;
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5` — plus the backend comparison
-//!   (`backends`) and the workload × path matrix (`workloads`).
+//!   (`backends`), the workload × path matrix (`workloads`) and the
+//!   service latency/batching cell (`service`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -26,9 +31,14 @@ fn usage() -> i32 {
          \x20     [--no-profile] [--summary] [--export FILE] [--stdout]\n\
          \x20     (--v2 runs through the fluent ccl::v2 tier;\n\
          \x20      --sharded dispatches across ALL backends, work-stealing)\n\
-         \x20 bench loc|overhead|figure3|figure5|backends|workloads [args]\n\
-         \x20     regenerate paper results, backend comparison, and the\n\
-         \x20     (workload x path) validation/timing matrix (--quick)"
+         \x20 serve [--requests N] [--clients C] [--max-batch B]\n\
+         \x20     [--window-us U] [--queue-cap Q] [--no-batch] [--profile]\n\
+         \x20     persistent compute service: C concurrent clients x N\n\
+         \x20     mixed requests each, micro-batched across all backends,\n\
+         \x20     p50/p95 latency + req/s, oracle-validated\n\
+         \x20 bench loc|overhead|figure3|figure5|backends|workloads|service\n\
+         \x20     regenerate paper results, backend comparison, the\n\
+         \x20     (workload x path) matrix and the service cell (--quick)"
     );
     2
 }
@@ -44,6 +54,7 @@ fn main() {
         "cclc" => cclc::main(rest),
         "plot-events" => plot_events::main(rest),
         "rng" => rng_main(rest),
+        "serve" => serve_main(rest),
         "bench" => harness::main(rest),
         "-h" | "--help" | "help" => usage(),
         other => {
@@ -52,6 +63,106 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// `cf4rs serve`: the persistent multi-client compute service.
+fn serve_main(args: &[String]) -> i32 {
+    use cf4rs::backend::BackendRegistry;
+    use cf4rs::coordinator::ServiceOpts;
+    use cf4rs::harness::service::run_session;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let mut requests = 32usize; // per client
+    let mut clients = 4usize;
+    let mut max_batch = 16usize;
+    let mut window_us = 2000u64;
+    let mut queue_cap = 64usize;
+    let mut profile = false;
+    let mut no_batch = false;
+
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut next = |what: &str| -> Result<String, String> {
+            it.next().cloned().ok_or(format!("{what} needs a value"))
+        };
+        let r: Result<(), String> = (|| {
+            match a.as_str() {
+                "--requests" | "-n" => {
+                    requests = next("--requests")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--clients" | "-c" => {
+                    clients = next("--clients")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--max-batch" => {
+                    max_batch = next("--max-batch")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--window-us" => {
+                    window_us = next("--window-us")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--queue-cap" => {
+                    queue_cap = next("--queue-cap")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--profile" => profile = true,
+                "--no-batch" => no_batch = true,
+                other => return Err(format!("unknown serve option {other:?}")),
+            }
+            Ok(())
+        })();
+        if let Err(e) = r {
+            eprintln!("serve: {e}");
+            return 2;
+        }
+    }
+    if clients == 0 || requests == 0 {
+        eprintln!("serve: --clients and --requests must be > 0");
+        return 2;
+    }
+    if no_batch {
+        max_batch = 1;
+    }
+
+    let opts = ServiceOpts {
+        queue_cap,
+        max_batch,
+        batch_window: Duration::from_micros(window_us),
+        profile,
+        ..ServiceOpts::default()
+    };
+    eprintln!(" * Clients                   : {clients}");
+    eprintln!(" * Requests per client       : {requests}");
+    eprintln!(" * Micro-batching            : {}", if no_batch {
+        "off".to_string()
+    } else {
+        format!("up to {max_batch}/batch, {window_us} us window")
+    });
+    eprintln!(" * Admission queue capacity  : {queue_cap}");
+
+    let registry = Arc::new(BackendRegistry::with_default_backends());
+    let out = run_session(registry, clients, requests, opts, false);
+
+    eprintln!(" * Completed requests        : {}", out.completed);
+    eprintln!(" * Wall time                 : {:e}s", out.wall.as_secs_f64());
+    eprintln!(" * Throughput                : {:.1} req/s", out.req_per_s());
+    eprintln!(" * Latency p50 / p95         : {:.2} ms / {:.2} ms", out.p50_ms(), out.p95_ms());
+    eprintln!(
+        " * Batches                   : {} ({} requests coalesced, max batch {})",
+        out.stats.batches, out.stats.coalesced, out.stats.max_batch
+    );
+    if profile {
+        if let Some(s) = &out.report.prof_summary {
+            eprintln!("{s}");
+        }
+    }
+    if out.failures > 0 || out.mismatches > 0 {
+        eprintln!(
+            "serve: FAILED — {} submit/wait failures, {} oracle mismatches",
+            out.failures, out.mismatches
+        );
+        return 1;
+    }
+    eprintln!(" * All responses validated against the host oracle");
+    0
 }
 
 /// `cf4rs rng`: the §5 service from the command line.

@@ -165,6 +165,55 @@ pub trait Workload: Send + Sync {
     fn reference(&self, iters: usize) -> Vec<u8>;
 }
 
+/// Shared-ownership workloads run anywhere a concrete one does — the
+/// compute service holds its queued requests as `Arc<dyn Workload>` and
+/// submits them straight into the sharded scheduler through this impl.
+impl Workload for std::sync::Arc<dyn Workload> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn units(&self) -> usize {
+        (**self).units()
+    }
+
+    fn unit_bytes(&self) -> usize {
+        (**self).unit_bytes()
+    }
+
+    fn default_iters(&self) -> usize {
+        (**self).default_iters()
+    }
+
+    fn init_state(&self) -> Vec<u8> {
+        (**self).init_state()
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        (**self).kernels(shard)
+    }
+
+    fn plan(&self, shard: Shard, iter: usize, state: &[u8]) -> IterPlan {
+        (**self).plan(shard, iter, state)
+    }
+
+    fn global_dims(&self, shard: Shard, iter: usize) -> Vec<usize> {
+        (**self).global_dims(shard, iter)
+    }
+
+    fn merge(&self, shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        (**self).merge(shards, outputs)
+    }
+
+    fn next_state(&self, prev: Vec<u8>, merged: Vec<u8>) -> Vec<u8> {
+        (**self).next_state(prev, merged)
+    }
+
+    fn reference(&self, iters: usize) -> Vec<u8> {
+        (**self).reference(iters)
+    }
+}
+
 /// Concatenate shard outputs — the merge of every elementwise workload.
 pub(crate) fn concat_outputs(outputs: &[Vec<u8>]) -> Vec<u8> {
     let mut merged = Vec::with_capacity(outputs.iter().map(Vec::len).sum());

@@ -161,6 +161,47 @@ fn prop_export_roundtrip() {
     }
 }
 
+#[test]
+fn prop_export_roundtrip_adversarial_names() {
+    // Regression property: user-assigned queue/event names drawn from a
+    // hostile alphabet (tabs, newlines, CRs, backslashes, escape-like
+    // sequences) must round-trip byte-identical through to_tsv/parse_tsv
+    // — unescaped, a single \t or \n mis-columns or splits the record.
+    let alphabet: Vec<char> =
+        vec!['a', 'B', '7', ' ', '\t', '\n', '\r', '\\', 't', 'n', '_'];
+    for case in 0..300u64 {
+        let mut g = Gen::new(case ^ 0x7AB5);
+        let mut infos = Vec::new();
+        for _ in 0..g.range(1, 12) {
+            let mut mk_name = |max_len: u64| -> String {
+                (0..g.range(0, max_len)).map(|_| *g.pick(&alphabet)).collect()
+            };
+            let name = mk_name(16);
+            let queue = mk_name(8);
+            let start = g.range(0, 1 << 40);
+            let end = start + g.range(0, 1 << 20);
+            infos.push(ProfInfo {
+                name,
+                queue,
+                t_queued: start,
+                t_submit: start,
+                t_start: start,
+                t_end: end,
+            });
+        }
+        let tsv = export::to_tsv(&infos);
+        let back = export::parse_tsv(&tsv)
+            .unwrap_or_else(|e| panic!("case {case}: parse failed: {e}\n{tsv:?}"));
+        assert_eq!(back.len(), infos.len(), "case {case}");
+        let key = |i: &ProfInfo| (i.queue.clone(), i.t_start, i.t_end, i.name.clone());
+        let mut a: Vec<_> = infos.iter().map(key).collect();
+        let mut b: Vec<_> = back.iter().map(key).collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b, "case {case}: adversarial names must round-trip");
+    }
+}
+
 // ---------------------------------------------------------------------------
 // suggest_worksizes invariants
 // ---------------------------------------------------------------------------

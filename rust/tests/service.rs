@@ -1,0 +1,409 @@
+//! Compute-service integration tests: every workload kind through the
+//! service, micro-batching bit-identity (property-tested with the
+//! repo's deterministic xorshift fuzzer), backpressure, shutdown drain
+//! and client-panic resilience.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use cf4rs::backend::{BackendRegistry, CompileSpec};
+use cf4rs::coordinator::scheduler::{run_sharded_workload_on, ShardedConfig};
+use cf4rs::coordinator::service::{
+    run_batch, ComputeService, ServiceError, ServiceOpts, WorkloadRequest,
+};
+use cf4rs::coordinator::Semaphore;
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+use cf4rs::workload::{
+    IterPlan, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, Shard,
+    StencilWorkload, Workload,
+};
+
+/// A handle.wait with a watchdog: a hang is a deadlock bug, not a slow
+/// test.
+const WAIT: Duration = Duration::from_secs(30);
+
+fn opts() -> ServiceOpts {
+    ServiceOpts { min_chunk: 256, ..ServiceOpts::default() }
+}
+
+// ---------------------------------------------------------------------------
+// Every workload kind round-trips through the service
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_workload_roundtrips_through_the_service() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(reg, opts());
+    let reqs: Vec<WorkloadRequest> = vec![
+        WorkloadRequest::new(PrngWorkload::new(2048)).iters(3),
+        WorkloadRequest::new(SaxpyWorkload::new(1536, 2.5)).iters(3),
+        WorkloadRequest::new(ReduceWorkload::new(4096)).iters(2),
+        WorkloadRequest::new(StencilWorkload::new(24, 16)).iters(2),
+        WorkloadRequest::new(MatmulWorkload::new(16)).iters(2),
+    ];
+    let expected: Vec<Vec<u8>> = reqs
+        .iter()
+        .map(|r| r.workload.reference(r.iters.unwrap()))
+        .collect();
+    let handles: Vec<_> =
+        reqs.into_iter().map(|r| svc.submit(r).expect("admitted")).collect();
+    for (h, expect) in handles.into_iter().zip(expected) {
+        let resp = h.wait_timeout(WAIT).expect("answered");
+        assert_eq!(resp.output, expect, "service output must equal the oracle");
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.stats.requests, 5);
+    assert_eq!(report.stats.errors, 0);
+}
+
+#[test]
+fn profiled_responses_carry_a_batch_prof_slice() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(reg, ServiceOpts { profile: true, ..opts() });
+    let resp = svc
+        .submit(WorkloadRequest::new(SaxpyWorkload::new(2048, 2.0)).iters(2))
+        .unwrap()
+        .wait_timeout(WAIT)
+        .unwrap();
+    let prof = resp.prof.expect("profiling was on");
+    assert!(prof.summary.contains("SAXPY_KERNEL"), "{}", prof.summary);
+    assert!(prof.export.contains("SAXPY_KERNEL"), "{}", prof.export);
+    let report = svc.shutdown();
+    let summary = report.prof_summary.expect("service-wide profile");
+    assert!(summary.contains("SAXPY_KERNEL"), "{summary}");
+}
+
+// ---------------------------------------------------------------------------
+// Micro-batching coalesces and stays bit-identical
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_kind_requests_coalesce_into_one_batch() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(
+        reg,
+        ServiceOpts {
+            max_batch: 4,
+            batch_window: Duration::from_secs(2),
+            ..opts()
+        },
+    );
+    // Mixed sizes, same kind + iters: all four must share one dispatch
+    // (the 2 s window is far beyond the submit loop's duration).
+    let sizes = [1024usize, 512, 2048, 256];
+    let handles: Vec<_> = sizes
+        .iter()
+        .map(|&n| {
+            svc.submit(WorkloadRequest::new(PrngWorkload::new(n)).iters(2)).unwrap()
+        })
+        .collect();
+    for (h, &n) in handles.into_iter().zip(&sizes) {
+        let resp = h.wait_timeout(WAIT).expect("answered");
+        assert_eq!(resp.output, PrngWorkload::new(n).reference(2));
+        assert_eq!(resp.batch_size, 4, "all four requests share the batch");
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.stats.batches, 1, "{:?}", report.stats);
+    assert_eq!(report.stats.coalesced, 4);
+    assert_eq!(report.stats.max_batch, 4);
+}
+
+#[test]
+fn different_iteration_counts_never_share_a_batch() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(
+        reg,
+        ServiceOpts {
+            max_batch: 8,
+            batch_window: Duration::from_millis(200),
+            ..opts()
+        },
+    );
+    let h2 = svc.submit(WorkloadRequest::new(PrngWorkload::new(512)).iters(2)).unwrap();
+    let h3 = svc.submit(WorkloadRequest::new(PrngWorkload::new(512)).iters(3)).unwrap();
+    assert_eq!(h2.wait_timeout(WAIT).unwrap().output, PrngWorkload::new(512).reference(2));
+    assert_eq!(h3.wait_timeout(WAIT).unwrap().output, PrngWorkload::new(512).reference(3));
+    let report = svc.shutdown();
+    assert_eq!(report.stats.batches, 2, "{:?}", report.stats);
+}
+
+// ---------------------------------------------------------------------------
+// Property: batched-then-split == unbatched per request, every workload
+// ---------------------------------------------------------------------------
+
+/// Deterministic case generator (the repo's standard no-dependency
+/// fuzzer: the paper's own xorshift PRNG).
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+}
+
+#[test]
+fn prop_batched_split_is_bit_identical_to_unbatched() {
+    let reg = BackendRegistry::with_default_backends();
+    for case in 0..30u64 {
+        let mut g = Gen::new(case ^ 0xBA7C);
+        let kind = case % 5;
+        let k = g.range(1, 5) as usize;
+        let iters = g.range(1, 4) as usize;
+        let reqs: Vec<WorkloadRequest> = (0..k)
+            .map(|m| {
+                let req = match kind {
+                    0 => WorkloadRequest::new(PrngWorkload::new(
+                        g.range(8, 512) as usize,
+                    )),
+                    1 => WorkloadRequest::new(SaxpyWorkload::new(
+                        g.range(8, 512) as usize,
+                        [2.5f32, -1.25, 0.5][m % 3],
+                    )),
+                    2 => WorkloadRequest::new(ReduceWorkload::new(
+                        g.range(8, 512) as usize,
+                    )),
+                    3 => WorkloadRequest::new(StencilWorkload::new(
+                        g.range(4, 16) as usize,
+                        g.range(4, 16) as usize,
+                    )),
+                    _ => WorkloadRequest::new(MatmulWorkload::new(
+                        g.range(4, 16) as usize,
+                    )),
+                };
+                req.iters(iters)
+            })
+            .collect();
+        let batch_opts = ServiceOpts {
+            min_chunk: g.range(1, 64) as usize,
+            chunks_per_backend: g.range(1, 4) as usize,
+            ..ServiceOpts::default()
+        };
+        let out = run_batch(&reg, &reqs, &batch_opts)
+            .unwrap_or_else(|e| panic!("case {case}: batch failed: {e}"));
+        assert_eq!(out.outputs.len(), k, "case {case}");
+        for (i, req) in reqs.iter().enumerate() {
+            let oracle = req.workload.reference(iters);
+            let unbatched =
+                run_sharded_workload_on(&reg, &ShardedConfig::new(req.workload.clone(), iters))
+                    .unwrap_or_else(|e| panic!("case {case}: unbatched failed: {e}"))
+                    .final_output;
+            assert_eq!(
+                out.outputs[i], unbatched,
+                "case {case} member {i}: batched != unbatched"
+            );
+            assert_eq!(
+                out.outputs[i], oracle,
+                "case {case} member {i}: batched != oracle"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backpressure: the admission queue is really bounded
+// ---------------------------------------------------------------------------
+
+/// A SAXPY whose `plan` blocks on a gate — pins the dispatcher inside a
+/// batch so the test can fill the admission queue deterministically.
+#[derive(Clone)]
+struct GatedSaxpy {
+    inner: SaxpyWorkload,
+    /// Posted when `plan` is first reached (the dispatcher is committed).
+    started: Arc<Semaphore>,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl GatedSaxpy {
+    fn new(n: usize) -> Self {
+        Self {
+            inner: SaxpyWorkload::new(n, 2.0),
+            started: Arc::new(Semaphore::new(0)),
+            gate: Arc::new((Mutex::new(false), Condvar::new())),
+        }
+    }
+
+    fn open(&self) {
+        let (lock, cv) = &*self.gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+impl Workload for GatedSaxpy {
+    fn name(&self) -> &'static str {
+        "gated-saxpy"
+    }
+
+    fn units(&self) -> usize {
+        self.inner.units()
+    }
+
+    fn unit_bytes(&self) -> usize {
+        self.inner.unit_bytes()
+    }
+
+    fn init_state(&self) -> Vec<u8> {
+        self.inner.init_state()
+    }
+
+    fn kernels(&self, shard: Shard) -> Vec<CompileSpec> {
+        self.inner.kernels(shard)
+    }
+
+    fn plan(&self, shard: Shard, iter: usize, state: &[u8]) -> IterPlan {
+        self.started.post();
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.plan(shard, iter, state)
+    }
+
+    fn merge(&self, shards: &[Shard], outputs: &[Vec<u8>]) -> Vec<u8> {
+        self.inner.merge(shards, outputs)
+    }
+
+    fn reference(&self, iters: usize) -> Vec<u8> {
+        self.inner.reference(iters)
+    }
+}
+
+#[test]
+fn try_submit_hits_queue_full_and_submissions_survive() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(
+        reg,
+        ServiceOpts {
+            queue_cap: 2,
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            min_chunk: 1,
+            ..ServiceOpts::default()
+        },
+    );
+    let gated = GatedSaxpy::new(64);
+    let expect_gated = gated.reference(1);
+    let (started, opener) = (gated.started.clone(), gated.clone());
+    let h0 = svc.submit(WorkloadRequest::new(gated).iters(1)).unwrap();
+    // Wait until the dispatcher is committed to batch 0 (inside the
+    // engine, queue empty) — from here the accounting is deterministic.
+    started.wait();
+
+    let mk = || WorkloadRequest::new(SaxpyWorkload::new(128, 2.5)).iters(1);
+    let h1 = svc.try_submit(mk()).expect("slot 1 of 2");
+    let h2 = svc.try_submit(mk()).expect("slot 2 of 2");
+    let err = svc.try_submit(mk()).expect_err("queue is full");
+    assert_eq!(err, ServiceError::QueueFull);
+
+    opener.open();
+    assert_eq!(h0.wait_timeout(WAIT).expect("gated answered").output, expect_gated);
+    let expect = SaxpyWorkload::new(128, 2.5).reference(1);
+    assert_eq!(h1.wait_timeout(WAIT).expect("h1 answered").output, expect);
+    assert_eq!(h2.wait_timeout(WAIT).expect("h2 answered").output, expect);
+    let report = svc.shutdown();
+    assert_eq!(report.stats.requests, 3);
+}
+
+#[test]
+fn invalid_requests_are_rejected_at_submit() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(reg, opts());
+    let zero_units = svc.submit(WorkloadRequest::new(SaxpyWorkload::new(0, 1.0)));
+    assert!(matches!(zero_units, Err(ServiceError::Invalid(_))));
+    let zero_iters =
+        svc.submit(WorkloadRequest::new(SaxpyWorkload::new(64, 1.0)).iters(0));
+    assert!(matches!(zero_iters, Err(ServiceError::Invalid(_))));
+    drop(svc);
+}
+
+// ---------------------------------------------------------------------------
+// Shutdown drain + post-shutdown submits
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_every_accepted_request() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(
+        reg,
+        ServiceOpts {
+            queue_cap: 32,
+            max_batch: 4,
+            batch_window: Duration::from_millis(100),
+            ..opts()
+        },
+    );
+    let mut handles = Vec::new();
+    let mut expects = Vec::new();
+    for i in 0..8usize {
+        let n = 256 * (1 + i % 3);
+        handles.push(
+            svc.submit(WorkloadRequest::new(PrngWorkload::new(n)).iters(2)).unwrap(),
+        );
+        expects.push(PrngWorkload::new(n).reference(2));
+    }
+    // Immediate shutdown: every accepted request must still be answered.
+    let report = svc.shutdown();
+    assert_eq!(report.stats.requests, 8, "{:?}", report.stats);
+    assert_eq!(report.stats.errors, 0);
+    for (h, expect) in handles.into_iter().zip(expects) {
+        assert_eq!(h.wait_timeout(WAIT).expect("drained").output, expect);
+    }
+}
+
+#[test]
+fn submits_after_initiate_shutdown_are_refused() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(reg, opts());
+    svc.initiate_shutdown();
+    let r = svc.submit(WorkloadRequest::new(SaxpyWorkload::new(64, 1.0)).iters(1));
+    assert_eq!(r.expect_err("refused"), ServiceError::ShuttingDown);
+    let report = svc.shutdown();
+    assert_eq!(report.stats.requests, 0);
+}
+
+// ---------------------------------------------------------------------------
+// A panicking client must not hurt the service
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_panic_mid_flight_leaves_the_service_healthy() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = Arc::new(ComputeService::start(reg, opts()));
+
+    // Client A submits and then dies without waiting for its handle.
+    let svc2 = svc.clone();
+    let t = std::thread::spawn(move || {
+        let _h = svc2
+            .submit(WorkloadRequest::new(PrngWorkload::new(512)).iters(2))
+            .unwrap();
+        panic!("client died mid-flight");
+    });
+    assert!(t.join().is_err(), "client A panicked as intended");
+
+    // Client B is unaffected.
+    let resp = svc
+        .submit(WorkloadRequest::new(SaxpyWorkload::new(1024, 2.5)).iters(2))
+        .unwrap()
+        .wait_timeout(WAIT)
+        .expect("service still serving");
+    assert_eq!(resp.output, SaxpyWorkload::new(1024, 2.5).reference(2));
+
+    let svc = Arc::try_unwrap(svc).ok().expect("sole owner at shutdown");
+    let report = svc.shutdown();
+    // Both requests (the orphaned one included) were executed.
+    assert_eq!(report.stats.requests, 2, "{:?}", report.stats);
+    assert_eq!(report.stats.errors, 0);
+}
