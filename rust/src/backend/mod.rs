@@ -46,10 +46,12 @@
 pub mod pjrt;
 pub mod registry;
 pub mod sim;
+pub mod throttle;
 
 pub use pjrt::PjrtBackend;
 pub use registry::BackendRegistry;
 pub use sim::SimBackend;
+pub use throttle::ThrottledBackend;
 
 use std::fmt;
 

@@ -1,0 +1,202 @@
+//! [`ThrottledBackend`] — a wrapper that makes a backend *really* take
+//! time, proportionally to the bytes it moves and computes.
+//!
+//! [`SimBackend`](super::SimBackend) executes at host speed and only
+//! *models* its timestamps, so a registry of sim devices has no real
+//! speed skew for a scheduler experiment to exploit. Wrapping backends
+//! in `ThrottledBackend`s with different rates produces a registry
+//! with **deterministic, genuinely wall-clock-visible** throughput
+//! differences — results stay bit-identical (the inner backend does
+//! the computing), and the throttle stamps its own *measured*
+//! timeline, so `bytes / busy_ns` observed by the
+//! [`ShardPlanner`](crate::coordinator::adaptive::ShardPlanner)
+//! reflects the injected skew. `bench adaptive` builds its skewed
+//! registry out of these; tests use them wherever "a slow device"
+//! must be reproducible.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::rawcl::clock;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::types::DeviceId;
+
+use super::{
+    Backend, BackendResult, BufId, CompileSpec, EventId, EventTimes, KernelId,
+    LaunchArg, TimelineEntry,
+};
+
+#[derive(Default)]
+struct ThrottleState {
+    /// Buffer byte sizes, tracked at alloc time (sleeps scale with the
+    /// bytes a command touches).
+    buf_bytes: HashMap<u64, usize>,
+    /// Compiled spec per kernel handle (for event names).
+    specs: HashMap<u64, CompileSpec>,
+    /// Measured (real) times per event, keyed by the inner event id.
+    events: HashMap<u64, EventTimes>,
+    timeline: Vec<TimelineEntry>,
+}
+
+/// See the [module docs](self).
+pub struct ThrottledBackend {
+    inner: Arc<dyn Backend>,
+    name: String,
+    /// Injected kernel cost: ns of real sleep per KiB of device buffer
+    /// a launch touches (all buffer arguments, inputs and output).
+    kernel_ns_per_kib: u64,
+    state: Mutex<ThrottleState>,
+}
+
+impl ThrottledBackend {
+    /// Wrap `inner`, sleeping `kernel_ns_per_kib` ns per KiB of buffer
+    /// a kernel launch touches — summed over **every** buffer argument,
+    /// inputs and output alike — and 1/8 of that per KiB transferred
+    /// by `write`/`read`. The injected skew is therefore relative:
+    /// comparing backends throttled at different rates is meaningful,
+    /// interpreting one backend's bytes/ns absolutely is not (the
+    /// planner's `BackendLoad.bytes` counts output bytes only). The
+    /// rate is baked into the name so several throttles over one
+    /// device stay distinguishable in a registry.
+    pub fn new(inner: Arc<dyn Backend>, kernel_ns_per_kib: u64) -> Self {
+        let name = format!("throttled-{kernel_ns_per_kib}:{}", inner.name());
+        Self {
+            inner,
+            name,
+            kernel_ns_per_kib,
+            state: Mutex::new(ThrottleState::default()),
+        }
+    }
+
+    /// Sleep for `bytes` at `ns_per_kib` and record the measured span
+    /// under the inner event id.
+    fn throttle(&self, ev: EventId, name: &str, bytes: usize, ns_per_kib: u64) {
+        let sleep_ns = (bytes as u64 * ns_per_kib) / 1024;
+        let t0 = clock::now_ns();
+        clock::precise_sleep(sleep_ns);
+        let t1 = clock::now_ns();
+        let times = EventTimes { queued: t0, submit: t0, start: t0, end: t1 };
+        let mut st = self.state.lock().unwrap();
+        st.events.insert(ev.0, times);
+        st.timeline.push((name.to_string(), times));
+    }
+}
+
+impl Backend for ThrottledBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.inner.device_id()
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        let k = self.inner.compile(spec)?;
+        self.state.lock().unwrap().specs.insert(k.0, *spec);
+        Ok(k)
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        let b = self.inner.alloc(bytes)?;
+        self.state.lock().unwrap().buf_bytes.insert(b.0, bytes);
+        Ok(b)
+    }
+
+    fn free(&self, buf: BufId) {
+        self.state.lock().unwrap().buf_bytes.remove(&buf.0);
+        self.inner.free(buf);
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        let ev = self.inner.write(buf, offset, data)?;
+        self.throttle(ev, "WRITE_BUFFER", data.len(), self.kernel_ns_per_kib / 8);
+        Ok(ev)
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        let ev = self.inner.read(buf, offset, out)?;
+        self.throttle(ev, "READ_BUFFER", out.len(), self.kernel_ns_per_kib / 8);
+        Ok(ev)
+    }
+
+    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
+        let ev = self.inner.enqueue(kernel, args)?;
+        let (event_name, bytes) = {
+            let st = self.state.lock().unwrap();
+            let name = st.specs.get(&kernel.0).map(|s| s.event_name()).unwrap_or("KERNEL");
+            let bytes: usize = args
+                .iter()
+                .map(|a| match a {
+                    LaunchArg::Buf(b) => st.buf_bytes.get(&b.0).copied().unwrap_or(0),
+                    _ => 0,
+                })
+                .sum();
+            (name, bytes)
+        };
+        self.throttle(ev, event_name, bytes, self.kernel_ns_per_kib);
+        Ok(ev)
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        // The injected cost was paid synchronously at enqueue time.
+        self.inner.wait(ev)
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        if let Some(&t) = self.state.lock().unwrap().events.get(&ev.0) {
+            return Ok(t);
+        }
+        self.inner.timestamps(ev)
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        // The measured (throttled) timeline replaces the inner one,
+        // which is drained and discarded to keep its memory bounded.
+        let _ = self.inner.drain_timeline();
+        let mut st = self.state.lock().unwrap();
+        st.events.clear();
+        std::mem::take(&mut st.timeline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+    use crate::rawcl::simexec;
+
+    #[test]
+    fn throttled_backend_is_bit_identical_but_measurably_slower() {
+        let inner: Arc<dyn Backend> = Arc::new(SimBackend::new(DeviceId(1)).unwrap());
+        let thr = ThrottledBackend::new(inner, 200_000); // 200 µs/KiB
+        assert!(thr.name().starts_with("throttled-200000:sim:"));
+
+        let n = 1024; // 8 KiB of PRNG output
+        let k = thr.compile(&CompileSpec::init(n)).unwrap();
+        let buf = thr.alloc(n * 8).unwrap();
+        let ev = thr.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        thr.wait(ev).unwrap();
+        let t = thr.timestamps(ev).unwrap();
+        assert!(
+            t.duration() >= 8 * 200_000,
+            "8 KiB at 200 µs/KiB must cost ≥ 1.6 ms, got {} ns",
+            t.duration()
+        );
+
+        let mut host = vec![0u8; n * 8];
+        thr.read(buf, 0, &mut host).unwrap();
+        let w0 = u64::from_le_bytes(host[..8].try_into().unwrap());
+        assert_eq!(w0, simexec::init_seed(0), "throttle must not change bits");
+
+        let timeline = thr.drain_timeline();
+        assert!(timeline.iter().any(|(name, _)| name == "INIT_KERNEL"));
+        assert!(timeline.iter().any(|(name, _)| name == "READ_BUFFER"));
+        assert!(thr.drain_timeline().is_empty(), "drain must take the timeline");
+        thr.free(buf);
+    }
+}

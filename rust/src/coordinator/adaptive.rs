@@ -1,0 +1,550 @@
+//! Profile-driven adaptive control: the feedback loop from live
+//! measurement ([`crate::metrics`]) to online scheduling decisions.
+//!
+//! The paper's profiler answers "where did the time go" *after* a run;
+//! EngineCL-style adaptive runtimes act on that signal *during* one.
+//! This module holds the two controllers the compute service closes
+//! the loop with, plus the service's metrics surface:
+//!
+//! * [`AdaptiveWindow`] — Nagle-style micro-batch window sizing. The
+//!   dispatcher's straggler wait tracks an EWMA of observed same-kind
+//!   inter-arrival gaps: the window stretches while requests keep
+//!   arriving (coalescing stays effective under sustained load) and
+//!   collapses toward [`AdaptiveWindow::min`] when the admission queue
+//!   goes idle (an un-coalescible request stops burning the full
+//!   static window in latency).
+//! * [`ShardPlanner`] — throughput-proportional shard planning. Each
+//!   dispatch's per-backend `(bytes, busy_ns)` observations (from the
+//!   scheduler's drained timelines) feed an EWMA of per-backend
+//!   bytes/ns; [`ShardPlanner::shares`] + [`apportion`] turn the next
+//!   request's unit count into per-backend shard sizes, so faster
+//!   backends get proportionally larger shards and the work-stealing
+//!   scheduler starts balanced instead of discovering the skew by
+//!   stealing.
+//! * [`ServiceMetrics`] — the lock-free instrument set the service
+//!   dispatcher records into and `serve --live` renders
+//!   ([`ServiceMetrics::render_live`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::{Counter, Gauge, Histogram, WindowedHistogram};
+use crate::workload::Shard;
+
+// ---------------------------------------------------------------------------
+// Adaptive batch window
+// ---------------------------------------------------------------------------
+
+/// How many *consecutive* idle closes before the window re-probes at
+/// its initial (static) value. Without the probe the controller would
+/// be a one-way ratchet: a steady stream whose inter-arrival gap
+/// exceeds the shrunken window never shows the controller a straggler,
+/// so nothing would ever re-stretch it and coalescing the static
+/// window achieves would be lost forever. The probe costs one static
+/// window per [`IDLE_PROBE_EVERY`] requests on a truly serial stream
+/// (amortised ~6 %), and re-discovers the arrival rate within one
+/// batch on a coalescible one.
+const IDLE_PROBE_EVERY: u64 = 16;
+
+/// Nagle-style adaptive micro-batch window — see the [module
+/// docs](self) for the control rule.
+pub struct AdaptiveWindow {
+    min_ns: u64,
+    max_ns: u64,
+    initial_ns: u64,
+    window_ns: AtomicU64,
+    gap_ewma_ns: AtomicU64,
+    /// Consecutive idle closes since the last straggler.
+    idle_streak: AtomicU64,
+}
+
+impl AdaptiveWindow {
+    /// Explicit bounds; the current window starts at `initial` clamped
+    /// into `[min, max]`.
+    pub fn new(initial: Duration, min: Duration, max: Duration) -> Self {
+        let min_ns = (min.as_nanos() as u64).max(1);
+        let max_ns = (max.as_nanos() as u64).max(min_ns);
+        let w = (initial.as_nanos() as u64).clamp(min_ns, max_ns);
+        Self {
+            min_ns,
+            max_ns,
+            initial_ns: w,
+            window_ns: AtomicU64::new(w),
+            gap_ewma_ns: AtomicU64::new(0),
+            idle_streak: AtomicU64::new(0),
+        }
+    }
+
+    /// Derive bounds from a static window configuration: start at the
+    /// static value, shrink down to `static/64` (floored at 10 µs) when
+    /// idle, stretch up to `4 × static` under sustained arrival.
+    pub fn from_static(window: Duration) -> Self {
+        let w = (window.as_nanos() as u64).max(1);
+        let floor = (w / 64).max(10_000);
+        let min = floor.min(w);
+        Self::new(window, Duration::from_nanos(min), Duration::from_nanos(w * 4))
+    }
+
+    /// The current straggler-wait window.
+    pub fn window(&self) -> Duration {
+        Duration::from_nanos(self.window_ns())
+    }
+
+    pub fn window_ns(&self) -> u64 {
+        self.window_ns.load(Ordering::Relaxed)
+    }
+
+    /// Smallest window the controller will shrink to.
+    pub fn min(&self) -> Duration {
+        Duration::from_nanos(self.min_ns)
+    }
+
+    /// Largest window the controller will stretch to.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// A same-kind straggler arrived `gap_ns` after the previous batch
+    /// member: fold it into the inter-arrival EWMA and re-derive the
+    /// window as twice the EWMA (wait about two typical gaps before
+    /// declaring the queue idle).
+    pub fn observe_gap(&self, gap_ns: u64) {
+        self.idle_streak.store(0, Ordering::Relaxed);
+        let prev = self.gap_ewma_ns.load(Ordering::Relaxed);
+        // Floor the stored EWMA at 1 ns: 0 is the "never observed"
+        // sentinel, and integer division on near-zero burst gaps must
+        // not decay back into it (that would make the next real gap be
+        // adopted wholesale instead of blended).
+        let ewma = if prev == 0 { gap_ns } else { (3 * prev + gap_ns) / 4 };
+        self.gap_ewma_ns.store(ewma.max(1), Ordering::Relaxed);
+        let w = (2 * ewma).clamp(self.min_ns, self.max_ns);
+        self.window_ns.store(w, Ordering::Relaxed);
+    }
+
+    /// A batch closed by timeout without a single straggler: the queue
+    /// is idle, halve the window (multiplicative decrease) so lone
+    /// requests stop paying the full wait. Every
+    /// [`IDLE_PROBE_EVERY`]th consecutive idle close re-probes at the
+    /// initial window instead, so a sustained stream arriving *just*
+    /// slower than the shrunken window is periodically given a full
+    /// window to show its stragglers (see [`IDLE_PROBE_EVERY`]).
+    pub fn observe_idle_close(&self) {
+        let streak = self.idle_streak.fetch_add(1, Ordering::Relaxed) + 1;
+        let w = if streak % IDLE_PROBE_EVERY == 0 {
+            self.initial_ns
+        } else {
+            (self.window_ns() / 2).clamp(self.min_ns, self.max_ns)
+        };
+        self.window_ns.store(w, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Proportional shard planning
+// ---------------------------------------------------------------------------
+
+/// EWMA of observed per-backend throughput, and the proportional shard
+/// plans derived from it — see the [module docs](self).
+#[derive(Default)]
+pub struct ShardPlanner {
+    /// Backend name → EWMA bytes per nanosecond.
+    speeds: Mutex<BTreeMap<String, f64>>,
+}
+
+impl ShardPlanner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one dispatch's observation for `backend` into its
+    /// throughput EWMA. Zero observations are ignored (a backend that
+    /// ran nothing this dispatch tells us nothing).
+    pub fn observe(&self, backend: &str, bytes: u64, busy_ns: u64) {
+        if bytes == 0 || busy_ns == 0 {
+            return;
+        }
+        let s = bytes as f64 / busy_ns as f64;
+        let mut speeds = self.speeds.lock().unwrap();
+        speeds
+            .entry(backend.to_string())
+            .and_modify(|e| *e = 0.5 * *e + 0.5 * s)
+            .or_insert(s);
+    }
+
+    /// Normalized per-backend shares (summing to 1) for `backends`, in
+    /// the given order. Backends never observed get the mean speed of
+    /// the observed ones. `None` until at least one backend has been
+    /// observed, or when there is nothing to apportion (< 2 backends).
+    pub fn shares(&self, backends: &[String]) -> Option<Vec<f64>> {
+        if backends.len() < 2 {
+            return None;
+        }
+        let speeds = self.speeds.lock().unwrap();
+        let known: Vec<f64> = backends.iter().filter_map(|b| speeds.get(b).copied()).collect();
+        if known.is_empty() {
+            return None;
+        }
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        let raw: Vec<f64> =
+            backends.iter().map(|b| speeds.get(b).copied().unwrap_or(mean)).collect();
+        let total: f64 = raw.iter().sum();
+        if !total.is_finite() || total <= 0.0 {
+            return None;
+        }
+        Some(raw.iter().map(|s| s / total).collect())
+    }
+
+    /// Snapshot of the current per-backend speed EWMAs (bytes/ns),
+    /// sorted by name — for dashboards and reports.
+    pub fn speed_snapshot(&self) -> Vec<(String, f64)> {
+        self.speeds.lock().unwrap().iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+}
+
+/// Split `units` into `shares.len()` integer parts proportional to
+/// `shares` (largest-remainder apportionment, deterministic
+/// tie-breaking by index). Parts that would land in `(0, min_chunk)`
+/// are folded into the currently largest part, so every non-zero part
+/// is at least `min_chunk` (unless `units` itself is smaller — then
+/// one part holds everything). The parts always sum to `units`.
+pub fn apportion(units: usize, shares: &[f64], min_chunk: usize) -> Vec<usize> {
+    assert!(!shares.is_empty(), "apportion needs at least one share");
+    // Sanitise BEFORE summing: a negative or non-finite share must not
+    // poison the total (it would inflate the other parts past `units`).
+    let clamped: Vec<f64> = shares
+        .iter()
+        .map(|&s| if s.is_finite() && s > 0.0 { s } else { 0.0 })
+        .collect();
+    let total: f64 = clamped.iter().sum();
+    let norm: Vec<f64> = if total > 0.0 {
+        clamped.iter().map(|s| s / total).collect()
+    } else {
+        vec![1.0 / shares.len() as f64; shares.len()]
+    };
+    let mut parts: Vec<usize> = norm.iter().map(|s| (s * units as f64).floor() as usize).collect();
+    // Floor rounding can only under-shoot; hand the remainder out by
+    // descending fractional part (ties: lower index first).
+    let assigned: usize = parts.iter().sum();
+    let mut order: Vec<usize> = (0..shares.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = norm[a] * units as f64 - parts[a] as f64;
+        let fb = norm[b] * units as f64 - parts[b] as f64;
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for i in 0..units.saturating_sub(assigned) {
+        parts[order[i % order.len()]] += 1;
+    }
+    // Fold sub-min_chunk crumbs into the largest part.
+    let min_chunk = min_chunk.max(1);
+    while parts.len() > 1 {
+        let Some(small) = (0..parts.len())
+            .filter(|&i| parts[i] > 0 && parts[i] < min_chunk)
+            .min_by_key(|&i| (parts[i], i))
+        else {
+            break;
+        };
+        let largest = (0..parts.len())
+            .filter(|&i| i != small)
+            .max_by_key(|&i| (parts[i], usize::MAX - i))
+            .expect("len > 1, so another part exists");
+        if parts[largest] == 0 {
+            // `small` is the only non-zero part (units < min_chunk):
+            // it keeps its units — the plan must still cover the
+            // whole index space.
+            break;
+        }
+        parts[largest] += parts[small];
+        parts[small] = 0;
+    }
+    debug_assert_eq!(parts.iter().sum::<usize>(), units);
+    parts
+}
+
+/// Turn per-backend shares into a contiguous shard plan over
+/// `[0, units)` plus the home backend of every shard. Zero parts are
+/// skipped (the backend simply gets nothing this dispatch).
+pub fn plan_proportional(
+    units: usize,
+    shares: &[f64],
+    min_chunk: usize,
+) -> (Vec<Shard>, Vec<usize>) {
+    let parts = apportion(units, shares, min_chunk);
+    let mut shards = Vec::new();
+    let mut homes = Vec::new();
+    let mut lo = 0usize;
+    for (backend, &len) in parts.iter().enumerate() {
+        if len == 0 {
+            continue;
+        }
+        shards.push(Shard { lo, len });
+        homes.push(backend);
+        lo += len;
+    }
+    (shards, homes)
+}
+
+// ---------------------------------------------------------------------------
+// The service's metrics surface
+// ---------------------------------------------------------------------------
+
+/// Span of the trailing window `serve --live` reports over.
+pub const LIVE_WINDOW: Duration = Duration::from_secs(2);
+
+/// The lock-free instrument set the compute service records into.
+/// Reading any of it (the `stats()` snapshot, the live dashboard)
+/// never takes a lock the dispatcher hot path holds.
+pub struct ServiceMetrics {
+    /// Requests accepted into the admission queue.
+    pub submitted: Counter,
+    /// Requests answered successfully.
+    pub answered: Counter,
+    /// Requests answered with an execution error.
+    pub errors: Counter,
+    /// Batches dispatched.
+    pub batches: Counter,
+    /// Requests that shared a batch with at least one other request.
+    pub coalesced: Counter,
+    /// Largest batch dispatched so far.
+    pub max_batch: Gauge,
+    /// Requests accepted but not yet dispatched.
+    pub queue_depth: Gauge,
+    /// The dispatcher's current straggler window, ns (static or
+    /// adaptive).
+    pub window_ns: Gauge,
+    /// Submit-to-answer latency, ns, since service start.
+    pub latency_ns: Histogram,
+    /// Submit-to-answer latency, ns, over the trailing [`LIVE_WINDOW`]
+    /// (also the live req/s source).
+    pub recent_ns: WindowedHistogram,
+    /// Output bytes produced per backend (cold path: one lock per
+    /// batch, never per request).
+    pub backend_bytes: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        let slot_ns = (LIVE_WINDOW.as_nanos() as u64 / 8).max(1);
+        Self {
+            submitted: Counter::new(),
+            answered: Counter::new(),
+            errors: Counter::new(),
+            batches: Counter::new(),
+            coalesced: Counter::new(),
+            max_batch: Gauge::new(),
+            queue_depth: Gauge::new(),
+            window_ns: Gauge::new(),
+            latency_ns: Histogram::new(),
+            recent_ns: WindowedHistogram::new(8, slot_ns),
+            backend_bytes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one answered request's latency (both cumulative and
+    /// trailing-window views).
+    pub fn record_latency(&self, latency: Duration) {
+        let ns = latency.as_nanos() as u64;
+        self.latency_ns.record(ns);
+        self.recent_ns.record(ns);
+    }
+
+    /// Add one dispatch's per-backend output bytes.
+    pub fn add_backend_bytes(&self, per_backend: &[(String, u64)]) {
+        let mut map = self.backend_bytes.lock().unwrap();
+        for (name, bytes) in per_backend {
+            *map.entry(name.clone()).or_insert(0) += bytes;
+        }
+    }
+
+    /// One dashboard line: queue depth, trailing req/s, cumulative
+    /// p50/p95/p99 latency, the current batch window and per-backend
+    /// byte shares.
+    pub fn render_live(&self) -> String {
+        let ms = |ns: u64| ns as f64 * 1e-6;
+        let (p50, p95, p99) = (
+            self.latency_ns.quantile(0.50),
+            self.latency_ns.quantile(0.95),
+            self.latency_ns.quantile(0.99),
+        );
+        let mut line = format!(
+            "[live] q {:>3} | {:>7.1} req/s ({}s) | p50 {:>7.2} ms  p95 {:>7.2} ms  \
+             p99 {:>7.2} ms | win {:>6} us | {} req {} batch",
+            self.queue_depth.get(),
+            self.recent_ns.rate_per_s(),
+            LIVE_WINDOW.as_secs(),
+            ms(p50),
+            ms(p95),
+            ms(p99),
+            self.window_ns.get() / 1_000,
+            self.answered.get(),
+            self.batches.get(),
+        );
+        let bytes = self.backend_bytes.lock().unwrap();
+        let total: u64 = bytes.values().sum();
+        if total > 0 {
+            line.push_str(" |");
+            for (name, b) in bytes.iter() {
+                line.push_str(&format!(
+                    " {} {:.0}%",
+                    name,
+                    *b as f64 / total as f64 * 100.0
+                ));
+            }
+        }
+        line
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_shrinks_on_idle_and_stretches_on_slow_gaps() {
+        let w = AdaptiveWindow::from_static(Duration::from_millis(2));
+        assert_eq!(w.window(), Duration::from_millis(2));
+        // Idle closes halve down to the floor (streak stays below the
+        // re-probe period).
+        for _ in 0..10 {
+            w.observe_idle_close();
+        }
+        assert_eq!(w.window(), w.min());
+        assert_eq!(w.min(), Duration::from_nanos(31_250));
+        // Sustained arrivals with ~1 ms gaps stretch it back out.
+        for _ in 0..16 {
+            w.observe_gap(1_000_000);
+        }
+        assert_eq!(w.window(), Duration::from_millis(2));
+        // Gap EWMA beyond max/2 saturates at max.
+        for _ in 0..16 {
+            w.observe_gap(1_000_000_000);
+        }
+        assert_eq!(w.window(), w.max());
+        assert_eq!(w.max(), Duration::from_millis(8));
+    }
+
+    #[test]
+    fn sustained_idle_closes_periodically_reprobe_the_full_window() {
+        let w = AdaptiveWindow::from_static(Duration::from_millis(2));
+        for _ in 0..(IDLE_PROBE_EVERY - 1) {
+            w.observe_idle_close();
+        }
+        assert_eq!(w.window(), w.min(), "ratcheted down between probes");
+        // The IDLE_PROBE_EVERYth consecutive idle close re-opens the
+        // full static window so a slower-than-window stream can show
+        // its stragglers again.
+        w.observe_idle_close();
+        assert_eq!(w.window(), Duration::from_millis(2));
+        // A straggler resets the streak and re-derives from its gap.
+        w.observe_gap(100_000);
+        assert_eq!(w.window(), Duration::from_micros(200));
+        w.observe_idle_close();
+        assert_eq!(w.window(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn window_bounds_clamp_initial() {
+        let w = AdaptiveWindow::new(
+            Duration::from_secs(1),
+            Duration::from_micros(10),
+            Duration::from_millis(1),
+        );
+        assert_eq!(w.window(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn apportion_is_exact_and_proportionalish() {
+        let parts = apportion(1000, &[1.0, 3.0, 1.0], 1);
+        assert_eq!(parts.iter().sum::<usize>(), 1000);
+        assert_eq!(parts, vec![200, 600, 200]);
+        // Remainders hand out deterministically.
+        let parts = apportion(10, &[1.0, 1.0, 1.0], 1);
+        assert_eq!(parts.iter().sum::<usize>(), 10);
+        assert_eq!(parts, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn apportion_folds_crumbs_into_the_largest_part() {
+        // Share 2 would get ~9 units < min_chunk 64: folded into the
+        // largest part, never dropped.
+        let parts = apportion(1000, &[0.6, 0.39, 0.01], 64);
+        assert_eq!(parts.iter().sum::<usize>(), 1000);
+        assert_eq!(parts[2], 0);
+        assert!(parts[0] >= 600);
+        // units < min_chunk: one part holds everything.
+        let parts = apportion(10, &[1.0, 1.0], 1024);
+        assert_eq!(parts.iter().sum::<usize>(), 10);
+        assert_eq!(parts.iter().filter(|&&p| p > 0).count(), 1);
+    }
+
+    #[test]
+    fn apportion_sanitises_hostile_shares() {
+        // Negative and non-finite shares are treated as zero and must
+        // not break the sum invariant.
+        let parts = apportion(10, &[2.0, -1.0], 1);
+        assert_eq!(parts, vec![10, 0]);
+        let parts = apportion(12, &[f64::NAN, 1.0, 1.0], 1);
+        assert_eq!(parts.iter().sum::<usize>(), 12);
+        assert_eq!(parts[0], 0);
+        // All-hostile falls back to uniform.
+        let parts = apportion(9, &[-1.0, f64::INFINITY, f64::NAN], 1);
+        assert_eq!(parts.iter().sum::<usize>(), 9);
+        assert_eq!(parts, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn plan_proportional_is_contiguous_with_homes() {
+        let (shards, homes) = plan_proportional(1000, &[1.0, 0.0, 3.0], 1);
+        assert_eq!(shards.len(), homes.len());
+        let mut lo = 0;
+        for s in &shards {
+            assert_eq!(s.lo, lo);
+            assert!(s.len > 0);
+            lo += s.len;
+        }
+        assert_eq!(lo, 1000);
+        assert_eq!(homes, vec![0, 2]);
+        assert_eq!(shards[1].len, 750);
+    }
+
+    #[test]
+    fn planner_shares_follow_observed_speeds() {
+        let p = ShardPlanner::new();
+        let names = vec!["fast".to_string(), "slow".to_string()];
+        assert!(p.shares(&names).is_none(), "no observations yet");
+        p.observe("fast", 9_000, 1_000);
+        p.observe("slow", 1_000, 1_000);
+        let shares = p.shares(&names).unwrap();
+        assert!((shares[0] - 0.9).abs() < 1e-9, "{shares:?}");
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Unknown backends get the mean of the known.
+        let names3 = vec!["fast".to_string(), "slow".to_string(), "new".to_string()];
+        let shares3 = p.shares(&names3).unwrap();
+        assert!((shares3.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(shares3[2] > shares3[1] && shares3[2] < shares3[0]);
+        // EWMA folds new observations in.
+        p.observe("slow", 9_000, 1_000);
+        let shares = p.shares(&names).unwrap();
+        assert!(shares[1] > 0.3, "{shares:?}");
+    }
+
+    #[test]
+    fn metrics_render_live_mentions_the_essentials() {
+        let m = ServiceMetrics::new();
+        m.answered.inc();
+        m.record_latency(Duration::from_millis(3));
+        m.window_ns.set(250_000);
+        m.add_backend_bytes(&[("sim:a".into(), 3000), ("sim:b".into(), 1000)]);
+        let line = m.render_live();
+        assert!(line.contains("req/s"), "{line}");
+        assert!(line.contains("win    250 us"), "{line}");
+        assert!(line.contains("sim:a 75%"), "{line}");
+    }
+}

@@ -11,6 +11,9 @@
 //!   [`crate::workload::Workload`] (the PRNG service included) sharded
 //!   across every backend in the [`crate::backend`] registry with work
 //!   stealing, merged output and cross-backend profiling.
+//! * [`adaptive`] — profile-driven adaptive control: the Nagle-style
+//!   adaptive batch window, the throughput-proportional shard planner
+//!   and the service's live [`crate::metrics`] surface.
 //! * [`service`] — the persistent multi-client tier on top of the
 //!   scheduler: a thread-safe [`service::ComputeService`] accepting
 //!   concurrent requests with bounded-queue admission control,
@@ -20,6 +23,7 @@
 //! * [`stats`] — statistical screening of the output stream (the
 //!   Dieharder substitution, see DESIGN.md).
 
+pub mod adaptive;
 pub mod pipeline;
 pub mod rng_service;
 pub mod scheduler;
@@ -27,6 +31,9 @@ pub mod sem;
 pub mod service;
 pub mod stats;
 
+pub use adaptive::{
+    plan_proportional, AdaptiveWindow, ServiceMetrics, ShardPlanner,
+};
 pub use pipeline::{run_double_buffered, PipelineError};
 pub use rng_service::{run_ccl, run_raw, run_v2, RngConfig, RunOutcome, Sink};
 pub use scheduler::{

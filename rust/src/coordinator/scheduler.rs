@@ -31,7 +31,6 @@
 //! service: `INIT_KERNEL`, `RNG_KERNEL`, `READ_BUFFER`, ...).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -40,6 +39,7 @@ use crate::ccl::errors::{CclError, CclResult};
 use crate::ccl::prof::ProfInfo;
 use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
+use crate::metrics::Counter;
 use crate::workload::{PrngWorkload, Shard, Workload};
 
 use super::rng_service::{sink_consume, Sink};
@@ -87,6 +87,11 @@ pub struct BackendLoad {
     /// Total busy time from the backend's event timeline, ns (modeled
     /// for simulated backends, measured for native ones).
     pub busy_ns: u64,
+    /// Output bytes produced by the tasks this backend executed —
+    /// `bytes / busy_ns` is the observed throughput the
+    /// [`ShardPlanner`](crate::coordinator::adaptive::ShardPlanner)
+    /// folds into its per-backend EWMA.
+    pub bytes: u64,
 }
 
 /// What a sharded run produced.
@@ -128,6 +133,16 @@ pub struct ShardedConfig<W: Workload> {
     /// The compute service uses this to keep micro-batch shards aligned
     /// to request boundaries (a shard must never straddle two requests).
     pub shard_plan: Option<Vec<Shard>>,
+    /// Explicit home backend per shard (same length as the shard list,
+    /// indices into the selected backend list) overriding the default
+    /// round-robin seeding. The adaptive shard planner uses this to
+    /// hand faster backends their proportionally larger shards; work
+    /// stealing still rebalances if the plan turns out wrong.
+    pub shard_homes: Option<Vec<usize>>,
+    /// Prefix for the per-backend profile queue labels (e.g.
+    /// `"svc.batch-7."`), so exported timelines attribute spans to the
+    /// dispatch that produced them. `None` = plain backend names.
+    pub queue_tag: Option<String>,
 }
 
 impl<W: Workload> ShardedConfig<W> {
@@ -141,6 +156,8 @@ impl<W: Workload> ShardedConfig<W> {
             sink: Sink::Discard,
             selector: None,
             shard_plan: None,
+            shard_homes: None,
+            queue_tag: None,
         }
     }
 }
@@ -227,7 +244,8 @@ pub(crate) fn plan_chunks(
 }
 
 /// Run one task: execute `workload.plan(shard, iter, state)` on
-/// backend `b`, leaving the shard's output bytes in `out`.
+/// backend `b`, leaving the shard's output bytes in `out`. Returns the
+/// output byte count (the scheduler's per-backend throughput metric).
 fn run_task(
     b: &dyn Backend,
     scratch: &BackendScratch,
@@ -236,7 +254,7 @@ fn run_task(
     iter: usize,
     state: &[u8],
     out: &Mutex<Vec<u8>>,
-) -> Result<(), String> {
+) -> Result<usize, String> {
     let specs = workload.kernels(shard);
     let plan = workload.plan(shard, iter, state);
     let spec = *specs
@@ -246,7 +264,7 @@ fn run_task(
 
     let mut in_bufs = Vec::with_capacity(plan.inputs.len());
     let mut acquired: Vec<(usize, BufId)> = Vec::new();
-    let result: Result<(), String> = (|| {
+    let result: Result<usize, String> = (|| {
         for data in &plan.inputs {
             let buf = scratch.acquire(b, data.len())?;
             acquired.push((data.len(), buf));
@@ -261,7 +279,7 @@ fn run_task(
         let mut dst = out.lock().unwrap();
         dst.resize(plan.out_bytes, 0);
         b.read(out_buf, 0, &mut dst).map_err(|e| e.to_string())?;
-        Ok(())
+        Ok(plan.out_bytes)
     })();
     for (bytes, buf) in acquired {
         scratch.release(bytes, buf);
@@ -286,13 +304,17 @@ pub fn run_sharded_on(
     let out = run_workload_engine(
         registry,
         &workload,
-        cfg.iters,
-        cfg.chunks_per_backend,
-        cfg.min_chunk,
-        cfg.profile,
-        cfg.selector.as_ref(),
-        &cfg.sink,
-        None,
+        &EngineOpts {
+            iters: cfg.iters,
+            chunks_per_backend: cfg.chunks_per_backend,
+            min_chunk: cfg.min_chunk,
+            profile: cfg.profile,
+            selector: cfg.selector.as_ref(),
+            sink: &cfg.sink,
+            shard_plan: None,
+            shard_homes: None,
+            queue_tag: None,
+        },
     )?;
     Ok(ShardedOutcome {
         wall: out.wall,
@@ -320,30 +342,53 @@ pub fn run_sharded_workload_on<W: Workload>(
     run_workload_engine(
         registry,
         &cfg.workload,
-        cfg.iters,
-        cfg.chunks_per_backend,
-        cfg.min_chunk,
-        cfg.profile,
-        cfg.selector.as_ref(),
-        &cfg.sink,
-        cfg.shard_plan.as_deref(),
+        &EngineOpts {
+            iters: cfg.iters,
+            chunks_per_backend: cfg.chunks_per_backend,
+            min_chunk: cfg.min_chunk,
+            profile: cfg.profile,
+            selector: cfg.selector.as_ref(),
+            sink: &cfg.sink,
+            shard_plan: cfg.shard_plan.as_deref(),
+            shard_homes: cfg.shard_homes.as_deref(),
+            queue_tag: cfg.queue_tag.as_deref(),
+        },
     )
 }
 
-/// The workload-agnostic scheduling engine: shard, dispatch with work
-/// stealing, merge, iterate.
-#[allow(clippy::too_many_arguments)]
-fn run_workload_engine(
-    registry: &BackendRegistry,
-    workload: &dyn Workload,
+/// Borrowed engine parameters — everything about a dispatch except the
+/// workload itself.
+#[derive(Clone, Copy)]
+struct EngineOpts<'a> {
     iters: usize,
     chunks_per_backend: usize,
     min_chunk: usize,
     profile: bool,
-    selector: Option<&FilterChain>,
-    sink: &Sink,
-    shard_plan: Option<&[Shard]>,
+    selector: Option<&'a FilterChain>,
+    sink: &'a Sink,
+    shard_plan: Option<&'a [Shard]>,
+    shard_homes: Option<&'a [usize]>,
+    queue_tag: Option<&'a str>,
+}
+
+/// The workload-agnostic scheduling engine: shard, dispatch with work
+/// stealing, merge, iterate.
+fn run_workload_engine(
+    registry: &BackendRegistry,
+    workload: &dyn Workload,
+    opts: &EngineOpts<'_>,
 ) -> CclResult<WorkloadOutcome> {
+    let EngineOpts {
+        iters,
+        chunks_per_backend,
+        min_chunk,
+        profile,
+        selector,
+        sink,
+        shard_plan,
+        shard_homes,
+        queue_tag,
+    } = *opts;
     let backends: Vec<Arc<dyn Backend>> = match selector {
         Some(chain) => registry.select(chain),
         None => registry.backends(),
@@ -386,6 +431,20 @@ fn run_workload_engine(
             .map(|&(lo, len)| Shard { lo, len })
             .collect(),
     };
+    if let Some(homes) = shard_homes {
+        if homes.len() != shards.len() {
+            return Err(CclError::framework(format!(
+                "shard homes cover {} shards, the plan has {}",
+                homes.len(),
+                shards.len()
+            )));
+        }
+        if let Some(&bad) = homes.iter().find(|&&h| h >= nb) {
+            return Err(CclError::framework(format!(
+                "shard home {bad} out of range: {nb} backends selected"
+            )));
+        }
+    }
     let outputs: Vec<Mutex<Vec<u8>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
 
@@ -393,8 +452,12 @@ fn run_workload_engine(
         (0..nb).map(|_| BackendScratch::new()).collect();
     let deques: Vec<Mutex<VecDeque<usize>>> =
         (0..nb).map(|_| Mutex::new(VecDeque::new())).collect();
-    let tasks_run: Vec<AtomicUsize> = (0..nb).map(|_| AtomicUsize::new(0)).collect();
-    let stolen: Vec<AtomicUsize> = (0..nb).map(|_| AtomicUsize::new(0)).collect();
+    // Per-backend instrumentation: tasks, steals and produced bytes go
+    // through lock-free `metrics` counters — the same instruments the
+    // service metrics surface uses.
+    let tasks_run: Vec<Counter> = (0..nb).map(|_| Counter::new()).collect();
+    let stolen: Vec<Counter> = (0..nb).map(|_| Counter::new()).collect();
+    let bytes_out: Vec<Counter> = (0..nb).map(|_| Counter::new()).collect();
     let failure: Mutex<Option<String>> = Mutex::new(None);
 
     // Discard any leftover timeline from earlier uses of these backends
@@ -413,9 +476,11 @@ fn run_workload_engine(
     let mut final_output = Vec::new();
 
     for iter in 0..iters {
-        // Seed the deques: sticky home assignment, round-robin.
+        // Seed the deques: sticky home assignment — round-robin, or
+        // the explicit (planner-provided) home of each shard.
         for ci in 0..shards.len() {
-            deques[ci % nb].lock().unwrap().push_back(ci);
+            let home = shard_homes.map_or(ci % nb, |h| h[ci]);
+            deques[home].lock().unwrap().push_back(ci);
         }
 
         let state_ref: &[u8] = &state;
@@ -427,6 +492,7 @@ fn run_workload_engine(
                 let scratch = &scratch[bi];
                 let tasks_run = &tasks_run[bi];
                 let stolen_ctr = &stolen[bi];
+                let bytes_ctr = &bytes_out[bi];
                 let failure = &failure;
                 let backend = backend.clone();
                 scope.spawn(move || {
@@ -458,10 +524,11 @@ fn run_workload_engine(
                             &outputs[ci],
                         );
                         match r {
-                            Ok(()) => {
-                                tasks_run.fetch_add(1, Ordering::Relaxed);
+                            Ok(n) => {
+                                tasks_run.inc();
+                                bytes_ctr.add(n as u64);
                                 if was_steal {
-                                    stolen_ctr.fetch_add(1, Ordering::Relaxed);
+                                    stolen_ctr.inc();
                                 }
                             }
                             Err(e) => {
@@ -521,13 +588,18 @@ fn run_workload_engine(
             busy_acc[bi] + timeline.iter().map(|(_, t)| t.duration()).sum::<u64>();
         per_backend.push(BackendLoad {
             name: b.name(),
-            tasks: tasks_run[bi].load(Ordering::Relaxed),
-            stolen: stolen[bi].load(Ordering::Relaxed),
+            tasks: tasks_run[bi].get() as usize,
+            stolen: stolen[bi].get() as usize,
             busy_ns,
+            bytes: bytes_out[bi].get(),
         });
         if profile {
+            let queue = match queue_tag {
+                Some(tag) => format!("{tag}{}", b.name()),
+                None => b.name(),
+            };
             prof.add_timeline(
-                b.name(),
+                queue,
                 timeline
                     .into_iter()
                     .map(|(name, t)| (name, (t.queued, t.submit, t.start, t.end)))
@@ -653,6 +725,52 @@ mod tests {
                 "plan {bad:?} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn shard_homes_are_validated_and_respected() {
+        use crate::workload::SaxpyWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let w = SaxpyWorkload::new(1000, 2.0);
+
+        // An explicit home assignment runs, stays bit-exact, and the
+        // per-backend byte counters account for every output byte.
+        let mut scfg = ShardedConfig::new(w, 2);
+        scfg.shard_plan =
+            Some(vec![Shard { lo: 0, len: 600 }, Shard { lo: 600, len: 400 }]);
+        scfg.shard_homes = Some(vec![0, 0]);
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert_eq!(out.final_output, w.reference(2));
+        let total: u64 = out.per_backend.iter().map(|l| l.bytes).sum();
+        assert_eq!(total, 1000 * 4 * 2, "every output byte attributed");
+
+        // Length mismatch is rejected.
+        let mut bad = ShardedConfig::new(w, 1);
+        bad.shard_plan = Some(vec![Shard { lo: 0, len: 1000 }]);
+        bad.shard_homes = Some(vec![0, 0]);
+        assert!(run_sharded_workload_on(&reg, &bad).is_err());
+
+        // Out-of-range home index is rejected.
+        let mut bad = ShardedConfig::new(w, 1);
+        bad.shard_plan = Some(vec![Shard { lo: 0, len: 1000 }]);
+        bad.shard_homes = Some(vec![reg.len()]);
+        assert!(run_sharded_workload_on(&reg, &bad).is_err());
+    }
+
+    #[test]
+    fn queue_tag_prefixes_profiled_queue_names() {
+        use crate::workload::SaxpyWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let mut scfg = ShardedConfig::new(SaxpyWorkload::new(2048, 1.5), 1);
+        scfg.profile = true;
+        scfg.queue_tag = Some("svc.batch-0.".into());
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        let infos = out.prof_infos.expect("profiling requested");
+        assert!(!infos.is_empty());
+        assert!(
+            infos.iter().all(|i| i.queue.starts_with("svc.batch-0.")),
+            "{infos:?}"
+        );
     }
 
     #[test]

@@ -44,6 +44,20 @@
 //!   joins the dispatcher and reports. Dropping the service does the
 //!   same join. A client that panics mid-flight merely drops its
 //!   [`ResponseHandle`]; the service is unaffected.
+//! * **Live telemetry** — the dispatcher records into a lock-free
+//!   [`ServiceMetrics`] surface (counters, latency histograms, a
+//!   trailing window): [`ComputeService::stats`] is a snapshot view
+//!   over those counters that never contends with the hot path, and
+//!   [`ComputeService::metrics`] hands the whole surface to dashboards
+//!   (`cf4rs serve --live`).
+//! * **Adaptive control** — with [`ServiceOpts::adaptive_window`] the
+//!   straggler wait is sized online (Nagle-style, from observed
+//!   inter-arrival gaps: close early when the queue goes idle, stretch
+//!   under sustained arrival); with [`ServiceOpts::adaptive_shards`]
+//!   batch shards are sized proportionally to each backend's observed
+//!   bytes/ns ([`ShardPlanner`]). Neither changes a single output bit
+//!   — batching and shard placement are bit-transparent by
+//!   construction, and `bench adaptive` cross-validates it.
 //!
 //! ## Example
 //!
@@ -72,7 +86,12 @@ use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
 use crate::workload::{IterPlan, Shard, Workload};
 
-use super::scheduler::{plan_chunks, run_sharded_workload_on, ShardedConfig};
+use super::adaptive::{
+    plan_proportional, AdaptiveWindow, ServiceMetrics, ShardPlanner,
+};
+use super::scheduler::{
+    plan_chunks, run_sharded_workload_on, BackendLoad, ShardedConfig,
+};
 use super::sem::Semaphore;
 
 // ---------------------------------------------------------------------------
@@ -258,8 +277,18 @@ pub struct ServiceOpts {
     pub chunks_per_backend: usize,
     /// Scheduler chunking: minimum shard size in workload units.
     pub min_chunk: usize,
-    /// Profile every batch and aggregate service-wide.
+    /// Profile every batch and aggregate service-wide. Batch timelines
+    /// get `svc.batch-<n>.`-prefixed queue labels so exports attribute
+    /// every span to the batch that produced it.
     pub profile: bool,
+    /// Size the straggler wait online ([`AdaptiveWindow`] seeded from
+    /// `batch_window`) instead of always waiting the full static
+    /// window. Output bits are unaffected.
+    pub adaptive_window: bool,
+    /// Size batch shards proportionally to each backend's observed
+    /// bytes/ns ([`ShardPlanner`]) instead of uniformly. Output bits
+    /// are unaffected; shards stay request-aligned.
+    pub adaptive_shards: bool,
     /// Device filter selecting the backends batches dispatch to —
     /// resolved **once** at service start into a filtered registry
     /// snapshot (filter chains hold closures and are not cloneable
@@ -276,12 +305,16 @@ impl Default for ServiceOpts {
             chunks_per_backend: 2,
             min_chunk: 1024,
             profile: false,
+            adaptive_window: false,
+            adaptive_shards: false,
             selector: None,
         }
     }
 }
 
-/// Running totals the dispatcher maintains.
+/// Snapshot of the service's running totals — a view over the
+/// lock-free [`ServiceMetrics`] counters, so taking one never contends
+/// with the dispatcher hot path.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     /// Requests answered (successfully executed).
@@ -496,6 +529,9 @@ pub struct BatchOutcome {
     pub outputs: Vec<Vec<u8>>,
     pub wall: Duration,
     pub num_chunks: usize,
+    /// Per-backend load (tasks, steals, busy time, produced bytes) —
+    /// the observation the adaptive shard planner feeds on.
+    pub per_backend: Vec<BackendLoad>,
     pub prof_summary: Option<String>,
     pub prof_export: Option<String>,
     pub prof_infos: Option<Vec<ProfInfo>>,
@@ -533,9 +569,9 @@ pub fn run_batch(
             for b in registry.select(chain) {
                 sub.register(b);
             }
-            run_members(&sub, members, iters, opts)
+            run_members(&sub, members, iters, opts, None, None)
         }
-        None => run_members(registry, members, iters, opts),
+        None => run_members(registry, members, iters, opts, None, None),
     }
 }
 
@@ -544,26 +580,65 @@ fn run_members(
     members: Vec<Arc<dyn Workload>>,
     iters: usize,
     opts: &ServiceOpts,
+    queue_tag: Option<String>,
+    plan: Option<(Vec<Shard>, Vec<usize>)>,
 ) -> CclResult<BatchOutcome> {
     let nb = registry.len().max(1);
-    let shards = plan_batch_shards(
-        &members,
-        nb * opts.chunks_per_backend.max(1),
-        opts.min_chunk,
-    );
     let mut cfg = ShardedConfig::new(BatchWorkload::new(members), iters);
-    cfg.shard_plan = Some(shards);
+    match plan {
+        Some((shards, homes)) => {
+            cfg.shard_plan = Some(shards);
+            cfg.shard_homes = Some(homes);
+        }
+        None => {
+            cfg.shard_plan = Some(plan_batch_shards(
+                &cfg.workload.members,
+                nb * opts.chunks_per_backend.max(1),
+                opts.min_chunk,
+            ));
+        }
+    }
     cfg.profile = opts.profile;
+    cfg.queue_tag = queue_tag;
     let out = run_sharded_workload_on(registry, &cfg)?;
     let outputs = cfg.workload.split_final(&out.final_output);
     Ok(BatchOutcome {
         outputs,
         wall: out.wall,
         num_chunks: out.num_chunks,
+        per_backend: out.per_backend,
         prof_summary: out.prof_summary,
         prof_export: out.prof_export,
         prof_infos: out.prof_infos,
     })
+}
+
+/// Throughput-proportional, request-aligned shard plan for a batch:
+/// each member is apportioned across the backends by their observed
+/// byte/ns shares (unknown backends get the mean), so no shard ever
+/// straddles two requests and fast backends start with more work.
+/// `None` until the planner has at least one observation.
+fn plan_members_proportional(
+    registry: &BackendRegistry,
+    members: &[Arc<dyn Workload>],
+    min_chunk: usize,
+    planner: &ShardPlanner,
+) -> Option<(Vec<Shard>, Vec<usize>)> {
+    let names: Vec<String> = registry.backends().iter().map(|b| b.name()).collect();
+    let shares = planner.shares(&names)?;
+    let mut shards = Vec::new();
+    let mut homes = Vec::new();
+    let mut base = 0usize;
+    for m in members {
+        let u = m.units();
+        let (s, h) = plan_proportional(u, &shares, min_chunk);
+        for (shard, home) in s.iter().zip(&h) {
+            shards.push(Shard { lo: base + shard.lo, len: shard.len });
+            homes.push(*home);
+        }
+        base += u;
+    }
+    Some((shards, homes))
 }
 
 // ---------------------------------------------------------------------------
@@ -620,7 +695,15 @@ struct ServiceShared {
     slots: Semaphore,
     stopping: AtomicBool,
     opts: ServiceOpts,
-    stats: Mutex<ServiceStats>,
+    /// Lock-free telemetry the dispatcher records into; `stats()` and
+    /// the live dashboard read it without contending.
+    metrics: Arc<ServiceMetrics>,
+    /// The Nagle-style window controller (consulted only when
+    /// [`ServiceOpts::adaptive_window`] is set).
+    window: AdaptiveWindow,
+    /// Per-backend throughput EWMAs (drive shard planning only when
+    /// [`ServiceOpts::adaptive_shards`] is set, but always observe).
+    planner: ShardPlanner,
     /// Every profiled batch's event records (service-wide aggregation).
     prof_infos: Mutex<Vec<ProfInfo>>,
 }
@@ -656,13 +739,18 @@ impl ComputeService {
             }
             None => registry,
         };
+        let metrics = Arc::new(ServiceMetrics::new());
+        let window = AdaptiveWindow::from_static(opts.batch_window);
+        metrics.window_ns.set(window.window_ns() as i64);
         let shared = Arc::new(ServiceShared {
             queue: Mutex::new(VecDeque::new()),
             ready: Semaphore::new(0),
             slots: Semaphore::new(opts.queue_cap.max(1)),
             stopping: AtomicBool::new(false),
             opts,
-            stats: Mutex::new(ServiceStats::default()),
+            metrics,
+            window,
+            planner: ShardPlanner::new(),
             prof_infos: Mutex::new(Vec::new()),
         });
         let sh = shared.clone();
@@ -729,14 +817,34 @@ impl ComputeService {
                 return Err(ServiceError::ShuttingDown);
             }
             q.push_back(pending);
+            // Inside the critical section, so the dispatcher (which
+            // decrements under the same lock) can never observe the
+            // pop before the push and drive the gauge negative.
+            self.shared.metrics.submitted.inc();
+            self.shared.metrics.queue_depth.add(1);
         }
         self.shared.ready.post();
         Ok(ResponseHandle { slot })
     }
 
-    /// Snapshot of the running totals.
+    /// Snapshot of the running totals — a read over the lock-free
+    /// [`ServiceMetrics`] counters (never blocks the dispatcher).
     pub fn stats(&self) -> ServiceStats {
-        self.shared.stats.lock().unwrap().clone()
+        let m = &self.shared.metrics;
+        ServiceStats {
+            requests: m.answered.get() as usize,
+            batches: m.batches.get() as usize,
+            coalesced: m.coalesced.get() as usize,
+            max_batch: m.max_batch.get() as usize,
+            errors: m.errors.get() as usize,
+        }
+    }
+
+    /// The service's live metrics surface (latency histograms,
+    /// trailing-window rates, queue depth, current batch window,
+    /// per-backend byte shares) — what `serve --live` renders.
+    pub fn metrics(&self) -> Arc<ServiceMetrics> {
+        self.shared.metrics.clone()
     }
 
     /// Stop accepting new requests (idempotent); already-accepted
@@ -756,6 +864,7 @@ impl ComputeService {
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
+        let stats = self.stats();
         // Entries in `Prof::add_timeline`'s shape, grouped per queue.
         type Timeline = Vec<(String, (u64, u64, u64, u64))>;
         let infos = std::mem::take(&mut *self.shared.prof_infos.lock().unwrap());
@@ -778,11 +887,7 @@ impl ComputeService {
                 Err(_) => (None, None),
             }
         };
-        ServiceReport {
-            stats: self.shared.stats.lock().unwrap().clone(),
-            prof_summary,
-            prof_export,
-        }
+        ServiceReport { stats, prof_summary, prof_export }
     }
 }
 
@@ -812,7 +917,14 @@ fn dispatcher_loop(registry: Registry, sh: Arc<ServiceShared>) {
                 continue;
             }
         }
-        let first = sh.queue.lock().unwrap().pop_front();
+        let first = {
+            let mut q = sh.queue.lock().unwrap();
+            let p = q.pop_front();
+            if p.is_some() {
+                sh.metrics.queue_depth.sub(1);
+            }
+            p
+        };
         let Some(first) = first else {
             if draining {
                 return;
@@ -830,10 +942,23 @@ fn dispatcher_loop(registry: Registry, sh: Arc<ServiceShared>) {
 
 /// Grow a batch around `first`: take queued same-kind requests, waiting
 /// up to the batch window for stragglers (skipped in drain mode).
+///
+/// With [`ServiceOpts::adaptive_window`] the wait is Nagle-style: the
+/// deadline re-arms on every straggler (stretch while requests keep
+/// arriving, up to the controller's hard maximum) and the window
+/// controller learns from what happened — observed inter-arrival gaps
+/// shrink or stretch the next wait, and a wait that times out with no
+/// straggler at all (`the queue went idle`) halves it.
 fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pending> {
     let key = first.key();
     let mut batch = vec![first];
-    let deadline = Instant::now() + sh.opts.batch_window;
+    let adaptive = sh.opts.adaptive_window;
+    let window = if adaptive { sh.window.window() } else { sh.opts.batch_window };
+    let start = Instant::now();
+    let hard_deadline = start + if adaptive { sh.window.max() } else { window };
+    let mut deadline = start + window;
+    let mut last_arrival = start;
+    let mut got_straggler = false;
     // `ready` permits consumed for arrivals that did NOT match the key;
     // returned when the window closes so their wakeups aren't lost.
     let mut borrowed = 0usize;
@@ -841,7 +966,10 @@ fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pend
         let taken = {
             let mut q = sh.queue.lock().unwrap();
             match q.iter().position(|p| p.key() == key) {
-                Some(pos) => q.remove(pos),
+                Some(pos) => {
+                    sh.metrics.queue_depth.sub(1);
+                    q.remove(pos)
+                }
                 None => None,
             }
         };
@@ -855,6 +983,16 @@ fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pend
                 let _ = sh.ready.try_wait();
             }
             sh.slots.post();
+            if adaptive {
+                let now = Instant::now();
+                let gap = now.duration_since(last_arrival).as_nanos() as u64;
+                sh.window.observe_gap(gap);
+                last_arrival = now;
+                got_straggler = true;
+                // Re-arm: keep the batch open one (freshly adapted)
+                // window past this arrival, bounded by the hard max.
+                deadline = (now + sh.window.window()).min(hard_deadline);
+            }
             batch.push(p);
             continue;
         }
@@ -862,9 +1000,15 @@ fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pend
             break;
         }
         let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+            if adaptive && !got_straggler {
+                sh.window.observe_idle_close();
+            }
             break;
         };
         if !sh.ready.wait_timeout(left) {
+            if adaptive && !got_straggler {
+                sh.window.observe_idle_close();
+            }
             break;
         }
         // Woken by an arrival that may be a different kind: hold the
@@ -875,6 +1019,11 @@ fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pend
     for _ in 0..borrowed {
         sh.ready.post();
     }
+    sh.metrics.window_ns.set(if adaptive {
+        sh.window.window_ns() as i64
+    } else {
+        sh.opts.batch_window.as_nanos() as i64
+    });
     batch
 }
 
@@ -888,8 +1037,28 @@ fn execute_batch(
     let iters = batch[0].iters;
     let members: Vec<Arc<dyn Workload>> =
         batch.iter().map(|p| p.workload.clone()).collect();
-    match run_members(registry.get(), members, iters, &sh.opts) {
+    // Stamp the batch id into the profile queue labels so exported
+    // timelines attribute every span to its batch.
+    let tag = sh.opts.profile.then(|| format!("svc.batch-{batch_id}."));
+    let plan = if sh.opts.adaptive_shards {
+        plan_members_proportional(
+            registry.get(),
+            &members,
+            sh.opts.min_chunk,
+            &sh.planner,
+        )
+    } else {
+        None
+    };
+    match run_members(registry.get(), members, iters, &sh.opts, tag, plan) {
         Ok(mut out) => {
+            // Feed the controllers and the metrics surface.
+            let mut backend_bytes = Vec::with_capacity(out.per_backend.len());
+            for load in &out.per_backend {
+                sh.planner.observe(&load.name, load.bytes, load.busy_ns);
+                backend_bytes.push((load.name.clone(), load.bytes));
+            }
+            sh.metrics.add_backend_bytes(&backend_bytes);
             if let Some(infos) = out.prof_infos.take() {
                 sh.prof_infos.lock().unwrap().extend(infos);
             }
@@ -901,19 +1070,27 @@ fn execute_batch(
                     export: out.prof_export.clone().unwrap_or_default(),
                 })
             });
-            {
-                let mut st = sh.stats.lock().unwrap();
-                st.requests += n;
-                st.batches += 1;
-                if n > 1 {
-                    st.coalesced += n;
-                }
-                st.max_batch = st.max_batch.max(n);
+            sh.metrics.batches.inc();
+            if n > 1 {
+                sh.metrics.coalesced.add(n as u64);
             }
-            for (p, bytes) in batch.iter().zip(out.outputs) {
+            sh.metrics.max_batch.set_max(n as i64);
+            // Count the whole batch before fulfilling anyone: a client
+            // woken by its response must find its batch peers already
+            // in `stats()` (the invariant the old batch-atomic
+            // `Mutex<ServiceStats>` update provided).
+            let latencies: Vec<Duration> =
+                batch.iter().map(|p| p.submitted.elapsed()).collect();
+            for &latency in &latencies {
+                sh.metrics.answered.inc();
+                sh.metrics.record_latency(latency);
+            }
+            for ((p, bytes), latency) in
+                batch.iter().zip(out.outputs).zip(latencies)
+            {
                 p.fulfill(Ok(Response {
                     output: bytes,
-                    latency: p.submitted.elapsed(),
+                    latency,
                     batch_id,
                     batch_size: n,
                     prof: prof.clone(),
@@ -922,11 +1099,8 @@ fn execute_batch(
         }
         Err(e) => {
             let msg = e.to_string();
-            {
-                let mut st = sh.stats.lock().unwrap();
-                st.batches += 1;
-                st.errors += n;
-            }
+            sh.metrics.batches.inc();
+            sh.metrics.errors.add(n as u64);
             for p in &batch {
                 p.fulfill(Err(ServiceError::Execution(msg.clone())));
             }

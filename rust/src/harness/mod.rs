@@ -13,11 +13,17 @@
 //!   cross-validated bit-identical against unbatched execution, plus
 //!   p50/p95 latency + requests/sec at several concurrent-client counts
 //!   (writes `service.md` + `BENCH_service.json`);
+//! * `bench adaptive` — the adaptive-control cell: static vs adaptive
+//!   batch window at 8 clients, uniform vs throughput-proportional
+//!   shards on a deterministically skewed registry, all outputs
+//!   cross-validated bit-identical (writes `adaptive.md` +
+//!   `BENCH_adaptive.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
 //! makes the process exit non-zero, so CI catches harness regressions.
 
+pub mod adaptive;
 pub mod backends;
 pub mod figures;
 pub mod loc;
@@ -62,7 +68,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|service|all [--quick]"
+             workloads|service|adaptive|all [--quick]"
         );
         return 2;
     };
@@ -192,6 +198,22 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_adaptive(quick: bool) -> bool {
+        let (md, json, validated) = adaptive::report(quick);
+        print!("{md}");
+        // Write both artifacts even when a gate failed — they are the
+        // evidence — but fail the run on any gate.
+        let mut ok = write_result("adaptive.md", &md);
+        ok &= write_result("BENCH_adaptive.json", &json);
+        if !validated {
+            eprintln!(
+                "adaptive: a gate FAILED (bit-identity, window req/s or \
+                 proportional-shards wall-time; see table)"
+            );
+        }
+        ok && validated
+    }
+
     let ok = match which.as_str() {
         "loc" => run_loc(),
         "ablation" => run_ablation(quick),
@@ -201,6 +223,7 @@ pub fn main(args: &[String]) -> i32 {
         "backends" => run_backends(quick),
         "workloads" => run_workloads(quick),
         "service" => run_service(quick),
+        "adaptive" => run_adaptive(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -210,7 +233,8 @@ pub fn main(args: &[String]) -> i32 {
             let e = run_backends(quick);
             let f = run_workloads(quick);
             let g = run_service(quick);
-            l && a && b && c && d && e && f && g
+            let h = run_adaptive(quick);
+            l && a && b && c && d && e && f && g && h
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -18,8 +18,8 @@
 //! Emits `results/service.md` (human table) and
 //! `results/BENCH_service.json` (machine-readable, schema [`SCHEMA`]).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::BackendRegistry;
@@ -28,6 +28,7 @@ use crate::coordinator::service::{
     run_batch, ComputeService, ServiceOpts, ServiceReport, ServiceStats,
     WorkloadRequest,
 };
+use crate::metrics::Histogram;
 use crate::workload::{
     MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, StencilWorkload,
     Workload,
@@ -62,8 +63,12 @@ pub struct SessionOutcome {
     /// Responses that did not match the host oracle.
     pub mismatches: usize,
     pub wall: Duration,
-    /// Per-request submit-to-answer latencies in ms, sorted ascending.
-    pub latencies_ms: Vec<f64>,
+    /// The service's own latency histogram
+    /// ([`ServiceMetrics`](crate::coordinator::ServiceMetrics)
+    /// snapshot, ns) — the **same** instrument the `serve --live`
+    /// dashboard renders, so harness percentiles and dashboard
+    /// percentiles can never disagree.
+    pub latency_hist: Histogram,
     pub stats: ServiceStats,
     pub report: ServiceReport,
 }
@@ -78,54 +83,67 @@ impl SessionOutcome {
     }
 
     pub fn p50_ms(&self) -> f64 {
-        percentile(&self.latencies_ms, 0.50)
+        self.latency_hist.quantile(0.50) as f64 * 1e-6
     }
 
     pub fn p95_ms(&self) -> f64 {
-        percentile(&self.latencies_ms, 0.95)
+        self.latency_hist.quantile(0.95) as f64 * 1e-6
     }
 }
 
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
+/// Linear-interpolation percentile over an ascending slice: 0 when
+/// empty, the sample itself for a single element, and the
+/// `(len-1)·q`-positioned interpolation between neighbours otherwise
+/// (`q` clamped into `[0, 1]`).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    match sorted {
+        [] => 0.0,
+        [only] => *only,
+        _ => {
+            let pos = (sorted.len() - 1) as f64 * q.clamp(0.0, 1.0);
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+        }
     }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Run one service session: `clients` threads each submitting
 /// `requests_per_client` mixed requests, every response validated
-/// against the host oracle.
+/// against the host oracle. With `live`, a dashboard thread prints the
+/// service's [`render_live`](crate::coordinator::ServiceMetrics::render_live)
+/// line at that period for the session's duration (the `serve --live`
+/// surface).
 pub fn run_session(
     registry: Arc<BackendRegistry>,
     clients: usize,
     requests_per_client: usize,
     opts: ServiceOpts,
     quick: bool,
+    live: Option<Duration>,
 ) -> SessionOutcome {
     let svc = ComputeService::start(registry, opts);
-    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let metrics = svc.metrics();
+    let completed = AtomicUsize::new(0);
     let failures = AtomicUsize::new(0);
     let mismatches = AtomicUsize::new(0);
+    let done = AtomicBool::new(false);
     let t0 = Instant::now();
+    let mut wall = Duration::ZERO;
     std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(clients);
         for c in 0..clients {
-            let (svc, latencies) = (&svc, &latencies);
+            let (svc, completed) = (&svc, &completed);
             let (failures, mismatches) = (&failures, &mismatches);
-            scope.spawn(move || {
+            workers.push(scope.spawn(move || {
                 for k in 0..requests_per_client {
                     let req = mixed_request(c + k * 3, quick);
                     let iters = req.iters.expect("mixed_request sets iters");
                     let expect = req.workload.reference(iters);
-                    let t = Instant::now();
                     match svc.submit(req) {
                         Ok(handle) => match handle.wait() {
                             Ok(resp) => {
-                                latencies
-                                    .lock()
-                                    .unwrap()
-                                    .push(t.elapsed().as_secs_f64() * 1e3);
+                                completed.fetch_add(1, Ordering::SeqCst);
                                 if resp.output != expect {
                                     mismatches.fetch_add(1, Ordering::SeqCst);
                                 }
@@ -139,22 +157,43 @@ pub fn run_session(
                         }
                     }
                 }
+            }));
+        }
+        if let Some(period) = live {
+            let (done, metrics) = (&done, &metrics);
+            scope.spawn(move || {
+                while !done.load(Ordering::SeqCst) {
+                    eprintln!("{}", metrics.render_live());
+                    std::thread::sleep(period);
+                }
+                // One final line so short sessions still show totals.
+                eprintln!("{}", metrics.render_live());
             });
         }
+        for w in workers {
+            if w.join().is_err() {
+                // Explicit joins don't re-panic like scope auto-joins
+                // do: a crashed client thread must surface as a failed
+                // session, never as a silently shorter one.
+                failures.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        // The session ends when the last client finishes — the
+        // dashboard thread's final tick is not part of the wall time.
+        wall = t0.elapsed();
+        done.store(true, Ordering::SeqCst);
     });
-    let wall = t0.elapsed();
+    let latency_hist = metrics.latency_ns.snapshot();
     let stats = svc.stats();
     let report = svc.shutdown();
-    let mut latencies = latencies.into_inner().unwrap();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     SessionOutcome {
         clients,
         requests_per_client,
-        completed: latencies.len(),
+        completed: completed.into_inner(),
         failures: failures.into_inner(),
         mismatches: mismatches.into_inner(),
         wall,
-        latencies_ms: latencies,
+        latency_hist,
         stats,
         report,
     }
@@ -367,7 +406,7 @@ pub fn report(quick: bool) -> (String, String, bool) {
             min_chunk: 1024,
             ..ServiceOpts::default()
         };
-        sessions.push(run_session(registry.clone(), clients, rpc, opts, quick));
+        sessions.push(run_session(registry.clone(), clients, rpc, opts, quick, None));
     }
 
     let validated = crossval.iter().all(|c| c.ok && c.error.is_none())
@@ -384,12 +423,53 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentile_picks_sane_indices() {
+    fn percentile_interpolates_and_survives_the_edges() {
         let v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
-        assert_eq!(percentile(&v, 0.50), 6.0);
-        assert_eq!(percentile(&v, 0.95), 10.0);
+        assert_eq!(percentile(&v, 0.50), 5.5);
+        assert!((percentile(&v, 0.95) - 9.55).abs() < 1e-12);
         assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+        // Out-of-range quantiles clamp instead of indexing out.
+        assert_eq!(percentile(&v, 2.0), 10.0);
+        assert_eq!(percentile(&v, -1.0), 1.0);
+        // Empty and single-sample edge cases (the old implementation's
+        // regression surface).
         assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[42.0], 0.95), 42.0);
+        assert_eq!(percentile(&[42.0], 0.0), 42.0);
+        // Interpolation at q = 0.95 for tiny N: pos = 0.95 between the
+        // two samples, not a rounded jump to the max.
+        assert!((percentile(&[1.0, 3.0], 0.95) - 2.9).abs() < 1e-12);
+        assert!((percentile(&[1.0, 3.0, 5.0], 0.95) - 4.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_percentiles_come_from_the_service_histogram() {
+        use crate::metrics::bucket_index;
+        let h = Histogram::new();
+        for ms in [1u64, 2, 3, 40] {
+            h.record(ms * 1_000_000);
+        }
+        let o = SessionOutcome {
+            clients: 1,
+            requests_per_client: 4,
+            completed: 4,
+            failures: 0,
+            mismatches: 0,
+            wall: Duration::from_millis(50),
+            latency_hist: h,
+            stats: ServiceStats::default(),
+            report: ServiceReport {
+                stats: ServiceStats::default(),
+                prof_summary: None,
+                prof_export: None,
+            },
+        };
+        // p50 lands in 2 ms's bucket, p95 in 40 ms's — dashboard and
+        // harness read the same instrument.
+        let ns = |ms: f64| (ms * 1e6) as u64;
+        assert_eq!(bucket_index(ns(o.p50_ms())), bucket_index(2_000_000));
+        assert_eq!(bucket_index(ns(o.p95_ms())), bucket_index(40_000_000));
     }
 
     #[test]

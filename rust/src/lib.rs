@@ -38,6 +38,11 @@
 //!   persistent multi-client [`coordinator::service::ComputeService`]
 //!   that micro-batches concurrent requests into shared scheduler
 //!   dispatches.
+//! * [`metrics`] — live telemetry: lock-free counters/gauges and
+//!   log-bucketed mergeable histograms (quantile queries, sliding
+//!   window) that instrument the service and scheduler hot paths and
+//!   feed the [`coordinator::adaptive`] controller (adaptive batch
+//!   window, throughput-proportional shard planning).
 //! * [`harness`] — benchmark drivers that regenerate every table and
 //!   figure of the paper's evaluation (§6), plus the backend-comparison
 //!   table.
@@ -48,6 +53,7 @@ pub mod backend;
 pub mod ccl;
 pub mod coordinator;
 pub mod harness;
+pub mod metrics;
 pub mod rawcl;
 pub mod runtime;
 pub mod utils;

@@ -8,11 +8,14 @@
 //! * `serve`        — run the persistent multi-client compute service:
 //!   concurrent clients submit a mixed workload stream, the service
 //!   micro-batches and dispatches across all backends, every response is
-//!   validated bit-for-bit against the host oracle;
+//!   validated bit-for-bit against the host oracle; `--live` prints a
+//!   refreshing telemetry dashboard, `--adaptive` turns on the adaptive
+//!   batch window and proportional shard planning;
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5` — plus the backend comparison
-//!   (`backends`), the workload × path matrix (`workloads`) and the
-//!   service latency/batching cell (`service`).
+//!   (`backends`), the workload × path matrix (`workloads`), the
+//!   service latency/batching cell (`service`) and the adaptive-control
+//!   cell (`adaptive`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -33,12 +36,16 @@ fn usage() -> i32 {
          \x20      --sharded dispatches across ALL backends, work-stealing)\n\
          \x20 serve [--requests N] [--clients C] [--max-batch B]\n\
          \x20     [--window-us U] [--queue-cap Q] [--no-batch] [--profile]\n\
+         \x20     [--live] [--adaptive]\n\
          \x20     persistent compute service: C concurrent clients x N\n\
          \x20     mixed requests each, micro-batched across all backends,\n\
          \x20     p50/p95 latency + req/s, oracle-validated\n\
-         \x20 bench loc|overhead|figure3|figure5|backends|workloads|service\n\
-         \x20     regenerate paper results, backend comparison, the\n\
-         \x20     (workload x path) matrix and the service cell (--quick)"
+         \x20     (--live prints the telemetry dashboard while serving;\n\
+         \x20      --adaptive sizes the batch window and shard plan online)\n\
+         \x20 bench loc|overhead|figure3|figure5|backends|workloads|service|\n\
+         \x20     adaptive   regenerate paper results, backend comparison,\n\
+         \x20     the (workload x path) matrix, the service cell and the\n\
+         \x20     adaptive-control cell (--quick)"
     );
     2
 }
@@ -80,6 +87,8 @@ fn serve_main(args: &[String]) -> i32 {
     let mut queue_cap = 64usize;
     let mut profile = false;
     let mut no_batch = false;
+    let mut live = false;
+    let mut adaptive = false;
 
     let mut it = args.iter();
     while let Some(a) = it.next() {
@@ -105,6 +114,8 @@ fn serve_main(args: &[String]) -> i32 {
                 }
                 "--profile" => profile = true,
                 "--no-batch" => no_batch = true,
+                "--live" => live = true,
+                "--adaptive" => adaptive = true,
                 other => return Err(format!("unknown serve option {other:?}")),
             }
             Ok(())
@@ -127,6 +138,8 @@ fn serve_main(args: &[String]) -> i32 {
         max_batch,
         batch_window: Duration::from_micros(window_us),
         profile,
+        adaptive_window: adaptive,
+        adaptive_shards: adaptive,
         ..ServiceOpts::default()
     };
     eprintln!(" * Clients                   : {clients}");
@@ -137,9 +150,15 @@ fn serve_main(args: &[String]) -> i32 {
         format!("up to {max_batch}/batch, {window_us} us window")
     });
     eprintln!(" * Admission queue capacity  : {queue_cap}");
+    eprintln!(" * Adaptive control          : {}", if adaptive {
+        "window + shard plan (profile-driven)"
+    } else {
+        "off (static window, uniform shards)"
+    });
 
     let registry = Arc::new(BackendRegistry::with_default_backends());
-    let out = run_session(registry, clients, requests, opts, false);
+    let dashboard = live.then(|| Duration::from_millis(250));
+    let out = run_session(registry, clients, requests, opts, false, dashboard);
 
     eprintln!(" * Completed requests        : {}", out.completed);
     eprintln!(" * Wall time                 : {:e}s", out.wall.as_secs_f64());

@@ -1,0 +1,243 @@
+//! Log-bucketed, lock-free, mergeable latency histogram.
+//!
+//! The bucket scheme is HdrHistogram-style: values below
+//! 2^[`SUB_BITS`] get one exact bucket each; above that, every octave
+//! (power of two) splits into 2^`SUB_BITS` sub-buckets, so a bucket's
+//! width over its lower bound — the worst-case *relative* quantile
+//! error — is bounded by 2^-`SUB_BITS` (and the midpoint
+//! representative halves it again; see [`MAX_REL_ERROR`]). With
+//! `SUB_BITS = 5` the whole u64 range fits in [`NUM_BUCKETS`] = 1920
+//! buckets (15 KiB of atomics), so recording is one relaxed
+//! `fetch_add` with no allocation and no lock — safe on the service
+//! dispatcher's and scheduler's hot paths.
+//!
+//! Histograms **merge** by bucket-wise addition, which is associative
+//! and commutative (property-tested in `rust/tests/metrics.rs`), so
+//! per-shard or per-thread histograms combine into service-wide ones
+//! without coordination.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: 2^SUB_BITS sub-buckets per octave.
+pub const SUB_BITS: u32 = 5;
+const SUB: u64 = 1 << SUB_BITS; // 32
+
+/// Total bucket count covering all of u64.
+pub const NUM_BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB as usize;
+
+/// Worst-case relative error of a quantile query (midpoint
+/// representative of a bucket whose width/lower-bound ≤ 2^-SUB_BITS).
+pub const MAX_REL_ERROR: f64 = 1.0 / (SUB as f64 * 2.0);
+
+/// The bucket a value lands in.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // ≥ SUB_BITS
+    let exp = msb - SUB_BITS;
+    let mantissa = (v >> exp) & (SUB - 1);
+    ((exp as usize + 1) << SUB_BITS) + mantissa as usize
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lo(i: usize) -> u64 {
+    if i < SUB as usize {
+        return i as u64;
+    }
+    let exp = (i as u64 >> SUB_BITS) - 1;
+    let mantissa = i as u64 & (SUB - 1);
+    (SUB + mantissa) << exp
+}
+
+/// The value a quantile query reports for bucket `i`: its midpoint,
+/// which stays inside the bucket (`bucket_index(representative(i)) ==
+/// i`) and bounds the relative error by [`MAX_REL_ERROR`].
+pub fn representative(i: usize) -> u64 {
+    if i < SUB as usize {
+        return i as u64;
+    }
+    let exp = (i as u64 >> SUB_BITS) - 1;
+    bucket_lo(i) + (1u64 << exp) / 2
+}
+
+/// A lock-free log-bucketed histogram of u64 samples (latencies in ns,
+/// batch sizes, ...). See the [module docs](self) for the scheme.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free: two relaxed adds.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples (wrapping at u64 scale).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Arithmetic mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Nearest-rank quantile (`q` in `[0, 1]`): the representative of
+    /// the bucket holding the sample of rank `ceil(q·count)` (rank 1
+    /// for `q = 0`). Returns 0 when the histogram is empty. The result
+    /// lands in the **same bucket** as the exact order statistic, so
+    /// its relative error is bounded by [`MAX_REL_ERROR`].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return representative(i);
+            }
+        }
+        representative(NUM_BUCKETS - 1)
+    }
+
+    /// Bucket-wise add `other` into `self` (associative, commutative).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            let v = src.load(Ordering::Relaxed);
+            if v != 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Reset every bucket to zero.
+    pub fn clear(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+
+    /// An independent copy of the current state (a consistent-enough
+    /// snapshot for monitoring; concurrent writers may be mid-record).
+    pub fn snapshot(&self) -> Histogram {
+        let h = Histogram::new();
+        h.merge_from(self);
+        h
+    }
+
+    /// Non-zero buckets as `(bucket index, count)` — the canonical
+    /// form the merge-equality property tests compare.
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c != 0).then_some((i, c))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_scheme_is_contiguous_and_monotone() {
+        // Exact region.
+        for v in 0..SUB {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lo(v as usize), v);
+            assert_eq!(representative(v as usize), v);
+        }
+        // Every bucket's lower bound maps back to that bucket, bounds
+        // are strictly increasing, and the representative stays inside.
+        for i in 1..NUM_BUCKETS {
+            assert!(bucket_lo(i) > bucket_lo(i - 1), "bucket {i}");
+            assert_eq!(bucket_index(bucket_lo(i)), i, "lo of bucket {i}");
+            assert_eq!(bucket_index(representative(i)), i, "rep of bucket {i}");
+        }
+        // Extremes.
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        assert_eq!(bucket_index(0), 0);
+    }
+
+    #[test]
+    fn quantiles_on_small_exact_values_are_exact() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(0.5), 5);
+        assert_eq!(h.quantile(0.95), 10);
+        assert_eq!(h.quantile(1.0), 10);
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 55);
+        assert!((h.mean() - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_single_sample_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(1_000_000);
+        let p = h.quantile(0.95);
+        let rel = (p as f64 - 1e6).abs() / 1e6;
+        assert!(rel <= MAX_REL_ERROR, "rel error {rel}");
+        assert_eq!(bucket_index(p), bucket_index(1_000_000));
+    }
+
+    #[test]
+    fn merge_adds_bucket_wise() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        a.record(100);
+        b.record(100);
+        b.record(1 << 40);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 3);
+        let nz = a.nonzero_buckets();
+        assert_eq!(nz.len(), 2);
+        assert_eq!(nz[0], (bucket_index(100), 2));
+    }
+}

@@ -1,0 +1,32 @@
+//! # `metrics` — live telemetry for the running system
+//!
+//! The paper's profiler ([`crate::ccl::prof`]) is *offline*: it
+//! explains a run after the fact. This subsystem is the *online*
+//! complement — cheap enough to sit on the dispatcher's and
+//! scheduler's hot paths, continuously queryable while the system
+//! serves traffic, and the measurement source the
+//! [`crate::coordinator::adaptive`] controller closes its feedback
+//! loop on (the paper's closing claim — profiling "allowed for a quick
+//! analysis on how to optimize the application" — turned into a
+//! control input):
+//!
+//! * [`Counter`] / [`Gauge`] — single relaxed atomics; readers never
+//!   contend with writers;
+//! * [`Histogram`] — log-bucketed (HdrHistogram-style) u64 histogram:
+//!   lock-free recording, bucket-wise **merge** (associative and
+//!   commutative), nearest-rank **quantile** queries with relative
+//!   error bounded by [`histogram::MAX_REL_ERROR`];
+//! * [`WindowedHistogram`] — a ring of histogram slots giving the
+//!   trailing-window view (`req/s and p95 over the last 2 s`) the
+//!   `serve --live` dashboard prints.
+//!
+//! All instruments take `&self`; share them behind an `Arc` and record
+//! from any thread.
+
+pub mod counter;
+pub mod histogram;
+pub mod window;
+
+pub use counter::{Counter, Gauge};
+pub use histogram::{bucket_index, Histogram, MAX_REL_ERROR, NUM_BUCKETS};
+pub use window::WindowedHistogram;

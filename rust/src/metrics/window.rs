@@ -1,0 +1,186 @@
+//! Sliding-window view over a [`Histogram`]: "req/s and p95 over the
+//! last few seconds", not since process start.
+//!
+//! The window is a ring of time slots. A sample lands in the slot of
+//! its epoch (`now / slot_ns`); a slot whose stored epoch has fallen
+//! out of the ring is lazily reset by the first writer of the new
+//! epoch (CAS on the slot's epoch word). Readers merge the slots whose
+//! epoch is still inside the window.
+//!
+//! The reset race (a reader or a straggling writer touching a slot
+//! mid-reset) can over- or under-count a handful of samples at slot
+//! boundaries — monitoring-grade semantics, documented and accepted;
+//! every structural invariant (expiry, merge) is deterministic and
+//! tested through the explicit `_at` methods, which take the clock as
+//! an argument.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::histogram::Histogram;
+use crate::rawcl::clock;
+
+struct Slot {
+    /// `epoch + 1`; 0 = never written.
+    epoch1: AtomicU64,
+    hist: Histogram,
+}
+
+/// A histogram that only remembers the last `slots × slot_ns`
+/// nanoseconds. See the [module docs](self).
+pub struct WindowedHistogram {
+    slot_ns: u64,
+    slots: Vec<Slot>,
+}
+
+impl WindowedHistogram {
+    /// `slots` ring slots of `slot_ns` each; the window spans
+    /// `slots × slot_ns`.
+    pub fn new(slots: usize, slot_ns: u64) -> Self {
+        assert!(slots > 0 && slot_ns > 0, "window needs non-empty slots");
+        Self {
+            slot_ns,
+            slots: (0..slots)
+                .map(|_| Slot { epoch1: AtomicU64::new(0), hist: Histogram::new() })
+                .collect(),
+        }
+    }
+
+    /// Total window span in nanoseconds.
+    pub fn span_ns(&self) -> u64 {
+        self.slot_ns * self.slots.len() as u64
+    }
+
+    /// Record `v` at an explicit clock reading (tests drive this
+    /// directly; [`record`](Self::record) feeds it the process clock).
+    pub fn record_at(&self, now_ns: u64, v: u64) {
+        let epoch = now_ns / self.slot_ns;
+        let slot = &self.slots[(epoch % self.slots.len() as u64) as usize];
+        loop {
+            let e1 = slot.epoch1.load(Ordering::Acquire);
+            if e1 == epoch + 1 {
+                break;
+            }
+            // The slot belongs to an expired epoch: first writer of the
+            // new epoch claims and resets it.
+            if slot
+                .epoch1
+                .compare_exchange(e1, epoch + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                slot.hist.clear();
+                break;
+            }
+        }
+        slot.hist.record(v);
+    }
+
+    /// Merge the slots still inside the window ending at `now_ns` into
+    /// one [`Histogram`].
+    pub fn snapshot_at(&self, now_ns: u64) -> Histogram {
+        let epoch = now_ns / self.slot_ns;
+        let oldest = epoch.saturating_sub(self.slots.len() as u64 - 1);
+        let merged = Histogram::new();
+        for slot in &self.slots {
+            let e1 = slot.epoch1.load(Ordering::Acquire);
+            if e1 > oldest && e1 <= epoch + 1 {
+                merged.merge_from(&slot.hist);
+            }
+        }
+        merged
+    }
+
+    /// Samples inside the window ending at `now_ns`.
+    pub fn count_at(&self, now_ns: u64) -> u64 {
+        self.snapshot_at(now_ns).count()
+    }
+
+    /// Trailing average event rate per second over the window ending
+    /// at `now_ns`. The divisor is the lesser of the window span and
+    /// the time since the oldest live slot began, so a service younger
+    /// than the window reports its true rate instead of diluting the
+    /// count over time that has not happened yet.
+    pub fn rate_per_s_at(&self, now_ns: u64) -> f64 {
+        let epoch = now_ns / self.slot_ns;
+        let oldest = epoch.saturating_sub(self.slots.len() as u64 - 1);
+        let mut count = 0u64;
+        let mut first_epoch = u64::MAX;
+        for slot in &self.slots {
+            let e1 = slot.epoch1.load(Ordering::Acquire);
+            if e1 > oldest && e1 <= epoch + 1 {
+                count += slot.hist.count();
+                first_epoch = first_epoch.min(e1 - 1);
+            }
+        }
+        if count == 0 {
+            return 0.0;
+        }
+        let covered = now_ns
+            .saturating_sub(first_epoch * self.slot_ns)
+            .clamp(1, self.span_ns());
+        count as f64 / (covered as f64 * 1e-9)
+    }
+
+    /// [`record_at`](Self::record_at) on the process profiling clock.
+    pub fn record(&self, v: u64) {
+        self.record_at(clock::now_ns(), v);
+    }
+
+    /// [`snapshot_at`](Self::snapshot_at) on the process profiling clock.
+    pub fn snapshot(&self) -> Histogram {
+        self.snapshot_at(clock::now_ns())
+    }
+
+    /// [`rate_per_s_at`](Self::rate_per_s_at) on the process profiling
+    /// clock.
+    pub fn rate_per_s(&self) -> f64 {
+        self.rate_per_s_at(clock::now_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_expire_after_the_window() {
+        let w = WindowedHistogram::new(4, 1_000);
+        w.record_at(100, 7);
+        w.record_at(1_100, 8);
+        assert_eq!(w.count_at(1_100), 2);
+        // 4 slots of 1000 ns: the epoch-0 sample expires once the clock
+        // enters epoch 4, the epoch-1 sample at epoch 5.
+        assert_eq!(w.count_at(4_000), 1);
+        assert_eq!(w.count_at(5_000), 0);
+    }
+
+    #[test]
+    fn slot_reuse_resets_stale_counts() {
+        let w = WindowedHistogram::new(2, 100);
+        w.record_at(0, 1);
+        // Same ring slot (epoch 2 → slot 0), two epochs later: the old
+        // epoch-0 count must not survive the reuse.
+        w.record_at(200, 2);
+        assert_eq!(w.count_at(200), 1);
+        assert_eq!(w.snapshot_at(200).quantile(0.5), 2);
+    }
+
+    #[test]
+    fn rate_covers_only_elapsed_time() {
+        let w = WindowedHistogram::new(5, 200_000_000); // 1 s window
+        for i in 0..50 {
+            w.record_at(i * 10_000_000, 1);
+        }
+        // Half a second in: 50 events over 0.499 s, not over the full
+        // (not yet elapsed) 1 s window.
+        let r = w.rate_per_s_at(499_000_000);
+        assert!((r - 50.0 / 0.499).abs() < 1e-9, "{r}");
+        // After the first slot (20 events at epoch 0) expires, the 30
+        // surviving events rate over the time since the oldest
+        // surviving slot began.
+        let r = w.rate_per_s_at(1_199_000_000);
+        assert!((r - 30.0 / 0.999).abs() < 1e-9, "{r}");
+        // An empty window rates 0.
+        let empty = WindowedHistogram::new(4, 1_000);
+        assert_eq!(empty.rate_per_s_at(10_000), 0.0);
+    }
+}

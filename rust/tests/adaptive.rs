@@ -1,0 +1,135 @@
+//! Adaptive-control integration tests: the adaptive batch window and
+//! the proportional shard planner must never change an output bit, the
+//! window must actually adapt, and the service's metrics surface must
+//! agree with its `stats()` view.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cf4rs::backend::BackendRegistry;
+use cf4rs::coordinator::service::{ComputeService, ServiceOpts, WorkloadRequest};
+use cf4rs::workload::{
+    MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, StencilWorkload,
+    Workload,
+};
+
+const WAIT: Duration = Duration::from_secs(30);
+
+/// One request per workload kind, with its host oracle.
+fn five_kinds() -> Vec<(WorkloadRequest, Vec<u8>)> {
+    let reqs = vec![
+        WorkloadRequest::new(PrngWorkload::new(2048)).iters(3),
+        WorkloadRequest::new(SaxpyWorkload::new(1536, 2.5)).iters(3),
+        WorkloadRequest::new(ReduceWorkload::new(4096)).iters(2),
+        WorkloadRequest::new(StencilWorkload::new(24, 16)).iters(2),
+        WorkloadRequest::new(MatmulWorkload::new(16)).iters(2),
+    ];
+    reqs.into_iter()
+        .map(|r| {
+            let oracle = r.workload.reference(r.iters.unwrap());
+            (r, oracle)
+        })
+        .collect()
+}
+
+/// Run all five kinds through a service twice (the second round runs
+/// after the shard planner has observations, so `adaptive_shards`
+/// actually exercises the proportional path) and return the outputs.
+fn run_rounds(adaptive: bool) -> Vec<Vec<u8>> {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let opts = ServiceOpts {
+        max_batch: 4,
+        min_chunk: 256,
+        batch_window: Duration::from_millis(1),
+        adaptive_window: adaptive,
+        adaptive_shards: adaptive,
+        ..ServiceOpts::default()
+    };
+    let svc = ComputeService::start(reg, opts);
+    let mut outputs = Vec::new();
+    for round in 0..2 {
+        let handles: Vec<_> = five_kinds()
+            .into_iter()
+            .map(|(r, oracle)| (svc.submit(r).expect("admitted"), oracle))
+            .collect();
+        for (h, oracle) in handles {
+            let resp = h.wait_timeout(WAIT).expect("answered");
+            assert_eq!(
+                resp.output, oracle,
+                "round {round}, adaptive={adaptive}: oracle mismatch"
+            );
+            outputs.push(resp.output);
+        }
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.stats.errors, 0);
+    outputs
+}
+
+/// The determinism gate: adaptive and static services produce
+/// bit-identical outputs for all five workload kinds (and both match
+/// the oracle, asserted inside `run_rounds`).
+#[test]
+fn adaptive_and_static_runs_are_bit_identical_for_all_workloads() {
+    let stat = run_rounds(false);
+    let adap = run_rounds(true);
+    assert_eq!(stat.len(), 10);
+    assert_eq!(stat, adap, "adaptivity must never change output bits");
+}
+
+/// A strictly serial client (every batch closes idle at size 1) must
+/// drive the adaptive window far below its static seed.
+#[test]
+fn serial_stream_shrinks_the_adaptive_window() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let opts = ServiceOpts {
+        batch_window: Duration::from_millis(4),
+        adaptive_window: true,
+        min_chunk: 256,
+        ..ServiceOpts::default()
+    };
+    let svc = ComputeService::start(reg, opts);
+    let initial = svc.metrics().window_ns.get();
+    assert_eq!(initial, 4_000_000);
+    for _ in 0..8 {
+        svc.submit(WorkloadRequest::new(PrngWorkload::new(1024)).iters(1))
+            .unwrap()
+            .wait_timeout(WAIT)
+            .unwrap();
+    }
+    let adapted = svc.metrics().window_ns.get();
+    assert!(
+        adapted <= initial / 64,
+        "8 idle closes must shrink the window: {initial} -> {adapted}"
+    );
+    drop(svc.shutdown());
+}
+
+/// `stats()` is a view over the metrics counters: both must agree, the
+/// queue-depth gauge must return to zero, and the latency histogram
+/// must have recorded exactly the answered requests.
+#[test]
+fn stats_snapshot_agrees_with_the_metrics_surface() {
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let opts = ServiceOpts { min_chunk: 256, ..ServiceOpts::default() };
+    let svc = ComputeService::start(reg, opts);
+    for i in 0..6 {
+        svc.submit(WorkloadRequest::new(SaxpyWorkload::new(1024 + 128 * i, 2.0)).iters(2))
+            .unwrap()
+            .wait_timeout(WAIT)
+            .unwrap();
+    }
+    let stats = svc.stats();
+    let m = svc.metrics();
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.requests, m.answered.get() as usize);
+    assert_eq!(stats.batches, m.batches.get() as usize);
+    assert_eq!(stats.errors, m.errors.get() as usize);
+    assert_eq!(m.submitted.get(), 6);
+    assert_eq!(m.queue_depth.get(), 0, "all accepted requests were dispatched");
+    assert_eq!(m.latency_ns.count(), 6);
+    assert!(m.latency_ns.quantile(0.5) > 0, "latencies were recorded");
+    let line = m.render_live();
+    assert!(line.contains("req/s"), "{line}");
+    drop(svc.shutdown());
+}

@@ -1,0 +1,166 @@
+//! Property tests for the `metrics` subsystem, driven by the repo's
+//! standard no-dependency fuzzer (the paper's own xorshift PRNG):
+//!
+//! * histogram quantiles vs an exact sorted-vec oracle — the reported
+//!   value must land in the **same bucket** as the exact order
+//!   statistic (which bounds its relative error by `MAX_REL_ERROR`);
+//! * merge associativity + commutativity (bucket-wise equality);
+//! * sliding-window expiry vs a replayed slot model.
+
+use cf4rs::metrics::{bucket_index, Histogram, MAX_REL_ERROR, WindowedHistogram};
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+
+/// Deterministic case generator.
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    /// Uniform-ish integer in [lo, hi).
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+}
+
+/// Exact nearest-rank quantile over a sorted slice (rank
+/// `ceil(q·n)`, min 1) — the oracle `Histogram::quantile` documents.
+fn quantile_oracle(sorted: &[u64], q: f64) -> u64 {
+    let total = sorted.len() as u64;
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    sorted[(rank - 1) as usize]
+}
+
+#[test]
+fn histogram_quantiles_land_in_the_oracle_bucket() {
+    let qs = [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0];
+    for case in 0..60u64 {
+        let mut g = Gen::new(case);
+        let n = g.range(1, 400) as usize;
+        let h = Histogram::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Shift spreads magnitudes from full-range u64 down to
+            // single digits, exercising both bucket regimes.
+            let v = g.next_u64() >> g.range(0, 60);
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        assert_eq!(h.count(), n as u64);
+        for &q in &qs {
+            let exact = quantile_oracle(&vals, q);
+            let got = h.quantile(q);
+            assert_eq!(
+                bucket_index(got),
+                bucket_index(exact),
+                "case {case}, q {q}: got {got}, exact {exact}"
+            );
+            let err = (got as f64 - exact as f64).abs() / (exact.max(1) as f64);
+            assert!(
+                err <= MAX_REL_ERROR,
+                "case {case}, q {q}: relative error {err} (got {got}, exact {exact})"
+            );
+        }
+    }
+}
+
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    for case in 0..30u64 {
+        let mut g = Gen::new(1_000 + case);
+        let make = |g: &mut Gen| {
+            let h = Histogram::new();
+            for _ in 0..g.range(0, 200) {
+                let v = g.next_u64() >> g.range(0, 60);
+                h.record(v);
+            }
+            h
+        };
+        let (a, b, c) = (make(&mut g), make(&mut g), make(&mut g));
+
+        // ((a ⊕ b) ⊕ c)
+        let left = a.snapshot();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        // (a ⊕ (b ⊕ c))
+        let bc = b.snapshot();
+        bc.merge_from(&c);
+        let right = a.snapshot();
+        right.merge_from(&bc);
+        assert_eq!(left.nonzero_buckets(), right.nonzero_buckets(), "case {case}");
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.sum(), right.sum());
+
+        // a ⊕ b == b ⊕ a
+        let ab = a.snapshot();
+        ab.merge_from(&b);
+        let ba = b.snapshot();
+        ba.merge_from(&a);
+        assert_eq!(ab.nonzero_buckets(), ba.nonzero_buckets(), "case {case}");
+        assert_eq!(ab.count(), ba.count());
+        assert_eq!(ab.sum(), ba.sum());
+    }
+}
+
+#[test]
+fn sliding_window_matches_a_replayed_slot_model() {
+    for case in 0..40u64 {
+        let mut g = Gen::new(2_000 + case);
+        let slots = g.range(2, 8) as usize;
+        let slot_ns = g.range(10, 1_000);
+        let w = WindowedHistogram::new(slots, slot_ns);
+        // Model: per ring slot, the epoch it currently holds and how
+        // many samples that epoch has taken (u64::MAX = never used).
+        let mut model: Vec<(u64, u64)> = vec![(u64::MAX, 0); slots];
+        let mut now = 0u64;
+        for _ in 0..g.range(1, 100) {
+            now += g.range(0, slot_ns * 3);
+            let epoch = now / slot_ns;
+            let idx = (epoch % slots as u64) as usize;
+            if model[idx].0 != epoch {
+                model[idx] = (epoch, 0);
+            }
+            model[idx].1 += 1;
+            w.record_at(now, g.range(0, 1 << 30));
+
+            let oldest = epoch.saturating_sub(slots as u64 - 1);
+            let expect: u64 = model
+                .iter()
+                .filter(|(e, _)| *e != u64::MAX && *e >= oldest && *e <= epoch)
+                .map(|(_, c)| *c)
+                .sum();
+            assert_eq!(w.count_at(now), expect, "case {case}, now {now}");
+        }
+        // Far in the future, everything has expired.
+        let later = now + slot_ns * (slots as u64 + 2);
+        assert_eq!(w.count_at(later), 0, "case {case}: window must expire");
+    }
+}
+
+#[test]
+fn windowed_quantiles_reflect_only_live_slots() {
+    let w = WindowedHistogram::new(4, 1_000);
+    // Epoch 0: large samples; epoch 3: small ones.
+    for _ in 0..10 {
+        w.record_at(100, 1 << 20);
+    }
+    for _ in 0..10 {
+        w.record_at(3_100, 16);
+    }
+    // Both epochs live: the p99 sees the large samples.
+    assert!(w.snapshot_at(3_200).quantile(0.99) >= 1 << 19);
+    // Epoch 0 expired (4 slots of 1000 ns, clock at epoch 4): only the
+    // small samples remain.
+    let h = w.snapshot_at(4_500);
+    assert_eq!(h.count(), 10);
+    assert!(h.quantile(0.99) < 32, "{}", h.quantile(0.99));
+}

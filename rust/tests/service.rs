@@ -407,3 +407,49 @@ fn client_panic_mid_flight_leaves_the_service_healthy() {
     assert_eq!(report.stats.requests, 2, "{:?}", report.stats);
     assert_eq!(report.stats.errors, 0);
 }
+
+// ---------------------------------------------------------------------------
+// Per-batch event tagging round-trips through the TSV export
+// ---------------------------------------------------------------------------
+
+#[test]
+fn profiled_batches_are_tagged_and_roundtrip_through_tsv() {
+    use cf4rs::ccl::prof::export::parse_tsv;
+
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(reg, ServiceOpts { profile: true, ..opts() });
+    // Three serial requests → three distinct batches.
+    for i in 0..3usize {
+        let resp = svc
+            .submit(WorkloadRequest::new(SaxpyWorkload::new(2048 + 512 * i, 2.0)).iters(2))
+            .unwrap()
+            .wait_timeout(WAIT)
+            .expect("answered");
+        // The per-response batch slice is tagged with this batch's id.
+        let prof = resp.prof.expect("profiling was on");
+        assert!(
+            prof.export.contains(&format!("svc.batch-{}.", prof.batch_id)),
+            "batch export must carry its own tag:\n{}",
+            prof.export
+        );
+    }
+    let report = svc.shutdown();
+    let tsv = report.prof_export.expect("profiled service exports");
+
+    // The service-wide export re-parses through the PR 4
+    // escape/unescape path with every span attributed to a batch.
+    let infos = parse_tsv(&tsv).expect("export must re-parse");
+    assert!(!infos.is_empty());
+    assert!(
+        infos.iter().all(|i| i.queue.starts_with("svc.batch-")),
+        "every span must carry a batch tag"
+    );
+    let batches: std::collections::BTreeSet<&str> = infos
+        .iter()
+        .map(|i| i.queue.split('.').nth(1).expect("svc.batch-<n>.<backend>"))
+        .collect();
+    assert!(
+        batches.len() >= 3,
+        "three serial requests must span three batches: {batches:?}"
+    );
+}
