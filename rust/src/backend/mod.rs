@@ -11,7 +11,11 @@
 //!   [`crate::rawcl::simexec`] plus a simulated device's roofline timing
 //!   model (timestamps are *modeled*, execution is instant);
 //! * [`PjrtBackend`] wraps [`crate::runtime`]'s client/executable pair
-//!   (timestamps are real wall-clock instants).
+//!   (timestamps are real wall-clock instants);
+//! * [`NativeBackend`] executes the known kernel families as real
+//!   data-parallel native code on a persistent worker-thread pool
+//!   (row/element bands, SIMD-friendly inner loops, real wall-clock
+//!   timestamps) — the compiled-kernel tier.
 //!
 //! Backends register in a [`BackendRegistry`] which
 //! [`crate::ccl::selector`] filter chains select over, exactly like the
@@ -43,11 +47,13 @@
 //! table pick it up without any caller changes. See
 //! `rust/tests/backend_compare.rs` for a minimal custom backend.
 
+pub mod native;
 pub mod pjrt;
 pub mod registry;
 pub mod sim;
 pub mod throttle;
 
+pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 pub use registry::BackendRegistry;
 pub use sim::SimBackend;
@@ -252,8 +258,12 @@ impl EventTimes {
     }
 }
 
-/// A completed command on a backend's timeline: (event name, times).
-pub type TimelineEntry = (String, EventTimes);
+/// A completed command on a backend's timeline:
+/// `(event name, times, caller tag)`. The tag is the caller-supplied
+/// per-launch label threaded through [`Backend::enqueue`] (the compute
+/// service uses `svc.req-<id>.` so each request's profile slice is
+/// exact); transfers and untagged launches carry `None`.
+pub type TimelineEntry = (String, EventTimes, Option<String>);
 
 /// The uniform execution contract every substrate implements.
 ///
@@ -289,7 +299,17 @@ pub trait Backend: Send + Sync {
     fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId>;
 
     /// Launch a compiled kernel with positional args.
-    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId>;
+    ///
+    /// `tag` is an optional caller label (e.g. a per-request id) the
+    /// backend attaches to the launch's [`TimelineEntry`] so profile
+    /// aggregation can attribute the span to its originator exactly.
+    /// Implementations that wrap another backend must forward it.
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId>;
 
     /// Block until an event has completed.
     fn wait(&self, ev: EventId) -> BackendResult<()>;

@@ -1,0 +1,729 @@
+//! [`NativeBackend`] — the compiled-kernel tier: real data-parallel
+//! native execution of the known kernel families.
+//!
+//! Where [`PjrtBackend`](super::PjrtBackend) interprets HLO one element
+//! at a time, `NativeBackend` executes each launch as tight native Rust
+//! over a persistent worker-thread pool: the global worksize splits
+//! into cache-friendly contiguous bands (element bands for the 1-D
+//! families, row bands for stencil/matmul), and each band runs a
+//! chunked-slice inner loop the autovectorizer can lift
+//! ([`crate::rawcl::simexec`]'s reference kernels double as the band
+//! kernels, so the bits are identical *by construction*):
+//!
+//! * `PrngInit` → [`simexec::run_init_from`] at the band's gid offset;
+//! * `PrngStep`/`Multi` → [`simexec::run_rng`] over the band slice;
+//! * `VecAdd`/`Saxpy` → the chunked elementwise loops;
+//! * `Reduce` → per-band wrapping partial sums, folded in band order
+//!   (exact under any split — wrapping adds are associative);
+//! * `Stencil5` → [`simexec::stencil5_rows`] against the full grid
+//!   (global zero boundary, no halo exchange needed);
+//! * `Matmul` → [`simexec::matmul_rows`] on the band's rows of A.
+//!
+//! Timestamps are real wall-clock instants (like the PJRT backend), so
+//! profiles, the [`ShardPlanner`](crate::coordinator::adaptive::ShardPlanner)
+//! throughput estimates, and the `bench native` speedup gate all
+//! measure genuine execution. Workers survive panicking kernels
+//! (`catch_unwind` per job: the launch fails with an error, the pool
+//! stays usable), and dropping the backend drains queued jobs before
+//! joining the workers.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::rawcl::clock;
+use crate::rawcl::device;
+use crate::rawcl::kernelspec::KernelKind;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::simexec;
+use crate::rawcl::types::DeviceId;
+
+use super::{
+    Backend, BackendError, BackendResult, BufId, CompileSpec, EventId, EventTimes,
+    KernelId, LaunchArg, TimelineEntry,
+};
+
+/// Don't split below this many elements per band — tiny bands pay more
+/// in dispatch than they win in parallelism (2-D families translate
+/// this to a minimum row count).
+const MIN_BAND_ELEMS: usize = 1024;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent fixed-size worker pool executing boxed jobs from a
+/// shared channel. Jobs run under `catch_unwind`, so a panicking job
+/// never kills its worker; dropping the pool closes the channel, lets
+/// the workers drain every queued job, then joins them.
+struct NativePool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl NativePool {
+    fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("native-worker-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only for the recv, never while
+                        // a job runs, so workers pull concurrently.
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn native worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(job)
+            .expect("native workers alive");
+    }
+}
+
+impl Drop for NativePool {
+    fn drop(&mut self) {
+        // Close the channel first: workers finish every queued job
+        // (shutdown drains, it does not abort), then exit their loops.
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Split `[0, units)` into up to `workers` contiguous near-equal bands
+/// of at least `min_units` each (a single band when `units` is small).
+fn bands(units: usize, workers: usize, min_units: usize) -> Vec<(usize, usize)> {
+    let max_bands = (units / min_units.max(1)).max(1);
+    let n = workers.max(1).min(max_bands);
+    let (base, rem) = (units / n, units % n);
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+fn f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn encode_f32s(vals: &[f32], out: &mut [u8]) {
+    for (v, dst) in vals.iter().zip(out.chunks_exact_mut(4)) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[derive(Default)]
+struct NativeState {
+    next_id: u64,
+    bufs: HashMap<u64, Vec<u8>>,
+    kernels: HashMap<u64, CompileSpec>,
+    /// Compile cache: same spec → same handle (no growth on re-compile).
+    kernel_ids: HashMap<CompileSpec, u64>,
+    events: HashMap<u64, EventTimes>,
+    timeline: Vec<TimelineEntry>,
+}
+
+impl NativeState {
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+}
+
+/// See the [module docs](self).
+pub struct NativeBackend {
+    device: DeviceId,
+    name: String,
+    pool: NativePool,
+    state: Mutex<NativeState>,
+}
+
+impl NativeBackend {
+    /// Backend for a native `rawcl` device. Rejects simulated devices.
+    pub fn new(dev: DeviceId) -> BackendResult<Self> {
+        let d = device::device(dev).ok_or_else(|| {
+            BackendError::new("native", format!("no such device {}", dev.0))
+        })?;
+        if d.profile.backend != BackendKind::Native {
+            return Err(BackendError::new(
+                "native",
+                format!("device {} ({}) is not native", dev.0, d.profile.name),
+            ));
+        }
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(2, 16);
+        Ok(Self {
+            device: dev,
+            name: format!("native:{}", d.profile.name),
+            pool: NativePool::new(workers),
+            state: Mutex::new(NativeState::default()),
+        })
+    }
+
+    /// The default native-parallel backend (device 0).
+    pub fn native() -> BackendResult<Self> {
+        Self::new(DeviceId(0))
+    }
+
+    fn err(&self, message: impl Into<String>) -> BackendError {
+        BackendError::new(self.name.as_str(), message)
+    }
+
+    fn record(
+        &self,
+        st: &mut NativeState,
+        name: &str,
+        times: EventTimes,
+        tag: Option<&str>,
+    ) -> EventId {
+        let id = st.fresh_id();
+        st.events.insert(id, times);
+        st.timeline.push((name.to_string(), times, tag.map(str::to_string)));
+        EventId(id)
+    }
+
+    /// Fan one launch out over the pool: split `units` into bands, run
+    /// `f(band_lo, band_len, band_out)` per band (band output sized by
+    /// `out_bytes_of(band_len)`), and return the band outputs in band
+    /// order. A panicking band fails the launch without killing any
+    /// worker.
+    fn run_bands<S, F>(
+        &self,
+        units: usize,
+        min_units: usize,
+        out_bytes_of: S,
+        f: F,
+    ) -> BackendResult<Vec<Vec<u8>>>
+    where
+        S: Fn(usize) -> usize,
+        F: Fn(usize, usize, &mut [u8]) + Send + Sync + 'static,
+    {
+        let plan = bands(units, self.pool.size(), min_units);
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, Result<Vec<u8>, String>)>();
+        for (i, &(lo, hi)) in plan.iter().enumerate() {
+            let f = f.clone();
+            let tx = tx.clone();
+            let out_bytes = out_bytes_of(hi - lo);
+            self.pool.submit(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    let mut out = vec![0u8; out_bytes];
+                    f(lo, hi - lo, &mut out);
+                    out
+                }));
+                // The receiver may be gone if a sibling band already
+                // failed the launch; that is fine.
+                let _ = tx.send((i, result.map_err(panic_message)));
+            }));
+        }
+        drop(tx);
+        let mut parts: Vec<Option<Vec<u8>>> = vec![None; plan.len()];
+        for _ in 0..plan.len() {
+            let (i, r) = rx
+                .recv()
+                .map_err(|_| self.err("native worker pool disconnected"))?;
+            parts[i] =
+                Some(r.map_err(|m| self.err(format!("kernel band panicked: {m}")))?);
+        }
+        Ok(parts.into_iter().map(|p| p.expect("every band reported")).collect())
+    }
+
+    /// Execute one launch data-parallel and return the output bytes.
+    fn execute(
+        &self,
+        st: &NativeState,
+        spec: &CompileSpec,
+        args: &[LaunchArg],
+        buf_ids: &[u64],
+    ) -> BackendResult<Vec<u8>> {
+        // Snapshot the inputs into shared ownership so band jobs are
+        // 'static (same copy the sim backend's take() makes).
+        let take = |idx: usize, bytes: usize| -> BackendResult<Arc<Vec<u8>>> {
+            st.bufs
+                .get(buf_ids.get(idx).ok_or_else(|| self.err("missing buffer arg"))?)
+                .filter(|b| b.len() >= bytes)
+                .map(|b| Arc::new(b[..bytes].to_vec()))
+                .ok_or_else(|| self.err("buffer arg too small or dead"))
+        };
+        let n = spec.n;
+        match spec.kind {
+            KernelKind::PrngInit => {
+                let gid0 = spec.gid_offset;
+                let parts = self.run_bands(n, MIN_BAND_ELEMS, |len| len * 8, move |lo, _, out| {
+                    simexec::run_init_from(gid0 + lo as u64, out);
+                })?;
+                Ok(parts.concat())
+            }
+            KernelKind::PrngStep | KernelKind::PrngMultiStep => {
+                let input = take(0, n * 8)?;
+                let k = spec.k;
+                let parts = self.run_bands(n, MIN_BAND_ELEMS, |len| len * 8, move |lo, len, out| {
+                    simexec::run_rng(&input[lo * 8..(lo + len) * 8], out, k);
+                })?;
+                Ok(parts.concat())
+            }
+            KernelKind::VecAdd => {
+                let x = take(0, n * 4)?;
+                let y = take(1, n * 4)?;
+                let parts = self.run_bands(n, MIN_BAND_ELEMS, |len| len * 4, move |lo, len, out| {
+                    let r = lo * 4..(lo + len) * 4;
+                    simexec::run_vecadd(&x[r.clone()], &y[r], out);
+                })?;
+                Ok(parts.concat())
+            }
+            KernelKind::Saxpy => {
+                let a = args
+                    .iter()
+                    .find_map(|arg| match arg {
+                        LaunchArg::F32(v) => Some(*v),
+                        _ => None,
+                    })
+                    .ok_or_else(|| self.err("saxpy needs an F32 scalar arg"))?;
+                let x = take(0, n * 4)?;
+                let y = take(1, n * 4)?;
+                let parts = self.run_bands(n, MIN_BAND_ELEMS, |len| len * 4, move |lo, len, out| {
+                    let r = lo * 4..(lo + len) * 4;
+                    simexec::run_saxpy(a, &x[r.clone()], &y[r], out);
+                })?;
+                Ok(parts.concat())
+            }
+            KernelKind::Reduce => {
+                let input = take(0, n * 8)?;
+                // Per-band wrapping partial sums; the band-order fold
+                // below equals the whole tree reduction exactly because
+                // wrapping addition is associative.
+                let parts = self.run_bands(n, MIN_BAND_ELEMS, |_| 8, move |lo, len, out| {
+                    let mut acc = 0u64;
+                    for c in input[lo * 8..(lo + len) * 8].chunks_exact(8) {
+                        acc = acc.wrapping_add(u64::from_le_bytes(c.try_into().unwrap()));
+                    }
+                    out.copy_from_slice(&acc.to_le_bytes());
+                })?;
+                let total = parts.iter().fold(0u64, |acc, p| {
+                    acc.wrapping_add(u64::from_le_bytes(p[..8].try_into().unwrap()))
+                });
+                Ok(total.to_le_bytes().to_vec())
+            }
+            KernelKind::Stencil5 => {
+                let (h, w) = (n / spec.m, spec.m);
+                let grid = Arc::new(f32s(&take(0, n * 4)?));
+                let min_rows = (MIN_BAND_ELEMS / w.max(1)).max(1);
+                let parts = self.run_bands(h, min_rows, |len| len * w * 4, move |lo, len, out| {
+                    let mut band = vec![0f32; len * w];
+                    simexec::stencil5_rows(&grid, &mut band, h, w, lo, lo + len);
+                    encode_f32s(&band, out);
+                })?;
+                Ok(parts.concat())
+            }
+            KernelKind::Matmul => {
+                let (rows, d) = (n / spec.m, spec.m);
+                let a = Arc::new(f32s(&take(0, n * 4)?));
+                let b = Arc::new(f32s(&take(1, d * d * 4)?));
+                let min_rows = (MIN_BAND_ELEMS / d.max(1)).max(1);
+                let parts = self.run_bands(rows, min_rows, |len| len * d * 4, move |lo, len, out| {
+                    let mut band = vec![0f32; len * d];
+                    simexec::matmul_rows(&a[lo * d..(lo + len) * d], &b, &mut band, len, d);
+                    encode_f32s(&band, out);
+                })?;
+                Ok(parts.concat())
+            }
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.device
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        if spec.n == 0 || spec.k == 0 || spec.m == 0 || spec.n % spec.m != 0 {
+            return Err(self.err(format!("degenerate kernel spec {spec:?}")));
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(&id) = st.kernel_ids.get(spec) {
+            return Ok(KernelId(id));
+        }
+        let id = st.fresh_id();
+        st.kernels.insert(id, *spec);
+        st.kernel_ids.insert(*spec, id);
+        Ok(KernelId(id))
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        let mut st = self.state.lock().unwrap();
+        let id = st.fresh_id();
+        st.bufs.insert(id, vec![0u8; bytes]);
+        Ok(BufId(id))
+    }
+
+    fn free(&self, buf: BufId) {
+        self.state.lock().unwrap().bufs.remove(&buf.0);
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        let t0 = clock::now_ns();
+        let mut st = self.state.lock().unwrap();
+        let dst = st
+            .bufs
+            .get_mut(&buf.0)
+            .and_then(|b| b.get_mut(offset..offset + data.len()))
+            .ok_or_else(|| {
+                BackendError::new(self.name.as_str(), format!("bad write range on buffer {buf:?}"))
+            })?;
+        dst.copy_from_slice(data);
+        let t1 = clock::now_ns();
+        let times = EventTimes { queued: t0, submit: t0, start: t0, end: t1.max(t0 + 1) };
+        Ok(self.record(&mut st, "WRITE_BUFFER", times, None))
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        let t0 = clock::now_ns();
+        let mut st = self.state.lock().unwrap();
+        let src = st
+            .bufs
+            .get(&buf.0)
+            .and_then(|b| b.get(offset..offset + out.len()))
+            .ok_or_else(|| {
+                BackendError::new(self.name.as_str(), format!("bad read range on buffer {buf:?}"))
+            })?;
+        out.copy_from_slice(src);
+        let t1 = clock::now_ns();
+        let times = EventTimes { queued: t0, submit: t0, start: t0, end: t1.max(t0 + 1) };
+        Ok(self.record(&mut st, "READ_BUFFER", times, None))
+    }
+
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
+        let queued = clock::now_ns();
+        let mut st = self.state.lock().unwrap();
+        let spec = *st
+            .kernels
+            .get(&kernel.0)
+            .ok_or_else(|| BackendError::new(self.name.as_str(), "unknown kernel handle"))?;
+        let buf_ids: Vec<u64> = args
+            .iter()
+            .filter_map(|a| match a {
+                LaunchArg::Buf(b) => Some(b.0),
+                _ => None,
+            })
+            .collect();
+        let (in_sizes, out_bytes) = spec.buffer_layout();
+
+        let start = clock::now_ns();
+        let out = self.execute(&st, &spec, args, &buf_ids)?;
+        let end = clock::now_ns().max(start + 1);
+
+        let out_id = *buf_ids
+            .get(in_sizes.len())
+            .ok_or_else(|| self.err("missing output buffer arg"))?;
+        let dst = st
+            .bufs
+            .get_mut(&out_id)
+            .and_then(|b| b.get_mut(..out_bytes))
+            .ok_or_else(|| self.err("output buffer too small or dead"))?;
+        dst.copy_from_slice(&out);
+
+        let times = EventTimes { queued, submit: queued, start, end };
+        Ok(self.record(&mut st, spec.event_name(), times, tag))
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        // Launches complete synchronously at enqueue (the band fan-out
+        // is joined before enqueue returns); waiting validates the
+        // handle.
+        let st = self.state.lock().unwrap();
+        if st.events.contains_key(&ev.0) {
+            Ok(())
+        } else {
+            Err(self.err("unknown event handle"))
+        }
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        let st = self.state.lock().unwrap();
+        st.events
+            .get(&ev.0)
+            .copied()
+            .ok_or_else(|| self.err("unknown event handle"))
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        let mut st = self.state.lock().unwrap();
+        // Event records drain with the timeline (see the trait docs) so
+        // streaming drivers stay memory-bounded.
+        st.events.clear();
+        std::mem::take(&mut st.timeline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::native().unwrap()
+    }
+
+    #[test]
+    fn rejects_simulated_device() {
+        assert!(NativeBackend::new(DeviceId(1)).is_err());
+        assert!(NativeBackend::new(DeviceId(9)).is_err());
+    }
+
+    #[test]
+    fn bands_cover_and_respect_min() {
+        assert_eq!(bands(10, 4, 1), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(bands(10, 4, 8), vec![(0, 10)], "min_units forces one band");
+        assert_eq!(bands(1, 16, 1), vec![(0, 1)]);
+        let b = bands(100_000, 7, 1024);
+        assert_eq!(b.len(), 7);
+        assert_eq!(b.first().unwrap().0, 0);
+        assert_eq!(b.last().unwrap().1, 100_000);
+        for w in b.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "bands must be contiguous");
+        }
+    }
+
+    #[test]
+    fn init_and_step_produce_reference_stream() {
+        let b = backend();
+        let n = 4096;
+        let k_init = b.compile(&CompileSpec::init(n)).unwrap();
+        let k_step = b.compile(&CompileSpec::step(n)).unwrap();
+        let state = b.alloc(n * 8).unwrap();
+        let next = b.alloc(n * 8).unwrap();
+        b.enqueue(k_init, &[LaunchArg::Buf(state)], None).unwrap();
+        b.enqueue(k_step, &[LaunchArg::Buf(state), LaunchArg::Buf(next)], None)
+            .unwrap();
+        let mut got = vec![0u8; n * 8];
+        let ev = b.read(next, 0, &mut got).unwrap();
+        b.wait(ev).unwrap();
+        let mut seed = vec![0u8; n * 8];
+        simexec::run_init(&mut seed);
+        let mut expect = vec![0u8; n * 8];
+        simexec::run_rng(&seed, &mut expect, 1);
+        assert_eq!(got, expect, "banded stream must match the scalar reference");
+    }
+
+    #[test]
+    fn offset_init_matches_shifted_reference() {
+        let b = backend();
+        let n = 2000; // non-divisible by any plausible worker count
+        let k = b.compile(&CompileSpec::init_at(n, 5000)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
+        let mut got = vec![0u8; n * 8];
+        b.read(buf, 0, &mut got).unwrap();
+        let mut expect = vec![0u8; n * 8];
+        simexec::run_init_from(5000, &mut expect);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn reduce_equals_tree_reference_across_band_splits() {
+        let b = backend();
+        for n in [1usize, 7, 1024, 4097] {
+            let words: Vec<u64> = (0..n).map(|i| simexec::init_seed(i as u32)).collect();
+            let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let k = b.compile(&CompileSpec::reduce(n)).unwrap();
+            let (inb, outb) = (b.alloc(n * 8).unwrap(), b.alloc(8).unwrap());
+            b.write(inb, 0, &bytes).unwrap();
+            b.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)], None).unwrap();
+            let mut got = [0u8; 8];
+            b.read(outb, 0, &mut got).unwrap();
+            assert_eq!(u64::from_le_bytes(got), simexec::reduce_tree(&words), "n={n}");
+            b.free(inb);
+            b.free(outb);
+        }
+    }
+
+    #[test]
+    fn stencil_row_bands_match_whole_grid_reference() {
+        let b = backend();
+        let (h, w) = (37usize, 19usize); // m ≠ n, ragged rows
+        let grid: Vec<f32> = (0..h * w).map(|i| ((i * 13 + 5) % 101) as f32).collect();
+        let grid_bytes: Vec<u8> = grid.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let k = b.compile(&CompileSpec::stencil5(h, w)).unwrap();
+        let (g, o) = (b.alloc(h * w * 4).unwrap(), b.alloc(h * w * 4).unwrap());
+        b.write(g, 0, &grid_bytes).unwrap();
+        b.enqueue(k, &[LaunchArg::Buf(g), LaunchArg::Buf(o)], None).unwrap();
+        let mut got = vec![0u8; h * w * 4];
+        b.read(o, 0, &mut got).unwrap();
+        let mut expect = vec![0u8; h * w * 4];
+        simexec::run_stencil5(&grid_bytes, &mut expect, h, w);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn timestamps_are_real_ordered_and_tagged() {
+        let b = backend();
+        let k = b.compile(&CompileSpec::init(64)).unwrap();
+        let buf = b.alloc(64 * 8).unwrap();
+        let ev = b.enqueue(k, &[LaunchArg::Buf(buf)], Some("svc.req-7.")).unwrap();
+        let t = b.timestamps(ev).unwrap();
+        assert!(t.queued <= t.start && t.start < t.end);
+        let tl = b.drain_timeline();
+        let entry = tl.last().unwrap();
+        assert_eq!(entry.0, "INIT_KERNEL");
+        assert_eq!(entry.2.as_deref(), Some("svc.req-7."));
+        assert!(b.drain_timeline().is_empty(), "drain clears");
+    }
+
+    #[test]
+    fn pool_executes_jobs_in_parallel_workers() {
+        let pool = NativePool::new(4);
+        assert_eq!(pool.size(), 4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..32 {
+            let hits = hits.clone();
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            }));
+        }
+        for _ in 0..32 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = NativePool::new(2);
+        // One panicking job per worker: both must survive.
+        for _ in 0..2 {
+            pool.submit(Box::new(|| panic!("injected worker panic")));
+        }
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..8 {
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                let _ = tx.send(());
+            }));
+        }
+        for _ in 0..8 {
+            rx.recv_timeout(std::time::Duration::from_secs(10))
+                .expect("workers must survive panicking jobs");
+        }
+    }
+
+    #[test]
+    fn pool_drop_drains_queued_jobs() {
+        let done = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = NativePool::new(2);
+            for _ in 0..16 {
+                let done = done.clone();
+                pool.submit(Box::new(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    done.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            // Drop with jobs still queued: shutdown must drain them.
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 16, "drop must drain, not abort");
+    }
+
+    #[test]
+    fn panicking_kernel_band_fails_the_launch_but_not_the_backend() {
+        let b = backend();
+        // A stencil whose m does not divide into a valid grid cannot be
+        // compiled, so inject the failure through the pool instead: a
+        // band panic surfaces as a launch error (exercised via
+        // run_bands directly) and the backend stays usable.
+        let err = b
+            .run_bands(4, 1, |len| len, |_: usize, _: usize, _: &mut [u8]| {
+                panic!("kernel band boom")
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("kernel band panicked"), "{err}");
+        assert!(err.to_string().contains("boom"), "{err}");
+
+        // The pool and backend still work after the failed launch.
+        let k = b.compile(&CompileSpec::saxpy(512)).unwrap();
+        let (x, y, o) = (
+            b.alloc(512 * 4).unwrap(),
+            b.alloc(512 * 4).unwrap(),
+            b.alloc(512 * 4).unwrap(),
+        );
+        let ones: Vec<u8> = (0..512).flat_map(|_| 1.0f32.to_le_bytes()).collect();
+        b.write(x, 0, &ones).unwrap();
+        b.write(y, 0, &ones).unwrap();
+        b.enqueue(
+            k,
+            &[LaunchArg::F32(2.0), LaunchArg::Buf(x), LaunchArg::Buf(y), LaunchArg::Buf(o)],
+            None,
+        )
+        .unwrap();
+        let mut got = vec![0u8; 512 * 4];
+        b.read(o, 0, &mut got).unwrap();
+        assert_eq!(f32::from_le_bytes(got[..4].try_into().unwrap()), 3.0);
+    }
+
+    #[test]
+    fn compile_is_cached_by_spec() {
+        let b = backend();
+        let a = b.compile(&CompileSpec::step(64)).unwrap();
+        let c = b.compile(&CompileSpec::step(64)).unwrap();
+        assert_eq!(a, c, "same spec must reuse the kernel handle");
+        assert!(b.compile(&CompileSpec { m: 7, ..CompileSpec::stencil5(4, 4) }).is_err());
+    }
+}

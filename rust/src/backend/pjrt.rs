@@ -78,10 +78,16 @@ impl PjrtBackend {
         BackendError::new(self.name.as_str(), message)
     }
 
-    fn record(&self, st: &mut PjrtState, name: &str, times: EventTimes) -> EventId {
+    fn record(
+        &self,
+        st: &mut PjrtState,
+        name: &str,
+        times: EventTimes,
+        tag: Option<&str>,
+    ) -> EventId {
         let id = st.fresh_id();
         st.events.insert(id, times);
-        st.timeline.push((name.to_string(), times));
+        st.timeline.push((name.to_string(), times, tag.map(str::to_string)));
         EventId(id)
     }
 }
@@ -157,7 +163,7 @@ impl Backend for PjrtBackend {
         dst.copy_from_slice(data);
         let t1 = clock::now_ns();
         let times = EventTimes { queued: t0, submit: t0, start: t0, end: t1.max(t0 + 1) };
-        Ok(self.record(&mut st, "WRITE_BUFFER", times))
+        Ok(self.record(&mut st, "WRITE_BUFFER", times, None))
     }
 
     fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
@@ -173,10 +179,15 @@ impl Backend for PjrtBackend {
         out.copy_from_slice(src);
         let t1 = clock::now_ns();
         let times = EventTimes { queued: t0, submit: t0, start: t0, end: t1.max(t0 + 1) };
-        Ok(self.record(&mut st, "READ_BUFFER", times))
+        Ok(self.record(&mut st, "READ_BUFFER", times, None))
     }
 
-    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
         let queued = clock::now_ns();
         let mut st = self.state.lock().unwrap();
         let (spec, module) = st
@@ -252,7 +263,7 @@ impl Backend for PjrtBackend {
             .map_err(|e| self.err(format!("decoding output: {e:#}")))?;
 
         let times = EventTimes { queued, submit: queued, start, end };
-        Ok(self.record(&mut st, spec.event_name(), times))
+        Ok(self.record(&mut st, spec.event_name(), times, tag))
     }
 
     fn wait(&self, ev: EventId) -> BackendResult<()> {
@@ -303,8 +314,8 @@ mod tests {
         let k_step = b.compile(&CompileSpec::step(n)).unwrap();
         let s0 = b.alloc(n * 8).unwrap();
         let s1 = b.alloc(n * 8).unwrap();
-        b.enqueue(k_init, &[LaunchArg::Buf(s0)]).unwrap();
-        b.enqueue(k_step, &[LaunchArg::Buf(s0), LaunchArg::Buf(s1)]).unwrap();
+        b.enqueue(k_init, &[LaunchArg::Buf(s0)], None).unwrap();
+        b.enqueue(k_step, &[LaunchArg::Buf(s0), LaunchArg::Buf(s1)], None).unwrap();
         let mut out = vec![0u8; n * 8];
         let ev = b.read(s1, 0, &mut out).unwrap();
         b.wait(ev).unwrap();
@@ -328,6 +339,7 @@ mod tests {
         b.enqueue(
             k,
             &[LaunchArg::F32(3.0), LaunchArg::Buf(x), LaunchArg::Buf(y), LaunchArg::Buf(out)],
+            None,
         )
         .unwrap();
         let mut got = vec![0u8; n * 4];
@@ -343,7 +355,7 @@ mod tests {
         let (inb, outb) = (bk.alloc(16 * 8).unwrap(), bk.alloc(8).unwrap());
         let ones: Vec<u8> = (0..16u64).flat_map(|_| 1u64.to_le_bytes()).collect();
         bk.write(inb, 0, &ones).unwrap();
-        bk.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)]).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)], None).unwrap();
         let mut got = [0u8; 8];
         bk.read(outb, 0, &mut got).unwrap();
         assert_eq!(u64::from_le_bytes(got), 16);
@@ -353,7 +365,7 @@ mod tests {
         let (g, o) = (bk.alloc(16).unwrap(), bk.alloc(16).unwrap());
         let grid: Vec<u8> = (0..4).flat_map(|_| 1.0f32.to_le_bytes()).collect();
         bk.write(g, 0, &grid).unwrap();
-        bk.enqueue(k, &[LaunchArg::Buf(g), LaunchArg::Buf(o)]).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(g), LaunchArg::Buf(o)], None).unwrap();
         let mut got = vec![0u8; 16];
         bk.read(o, 0, &mut got).unwrap();
         assert_eq!(f32::from_le_bytes(got[..4].try_into().unwrap()), 0.75);
@@ -368,7 +380,7 @@ mod tests {
             [1.0f32, 0.0, 0.0, 1.0].iter().flat_map(|v| v.to_le_bytes()).collect();
         bk.write(a, 0, &av).unwrap();
         bk.write(b, 0, &ident).unwrap();
-        bk.enqueue(k, &[LaunchArg::Buf(a), LaunchArg::Buf(b), LaunchArg::Buf(c)])
+        bk.enqueue(k, &[LaunchArg::Buf(a), LaunchArg::Buf(b), LaunchArg::Buf(c)], None)
             .unwrap();
         let mut got = vec![0u8; 16];
         bk.read(c, 0, &mut got).unwrap();
@@ -380,7 +392,7 @@ mod tests {
         let b = backend();
         let k = b.compile(&CompileSpec::init(64)).unwrap();
         let buf = b.alloc(64 * 8).unwrap();
-        let ev = b.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        let ev = b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
         let t = b.timestamps(ev).unwrap();
         assert!(t.queued <= t.start && t.start < t.end);
         let tl = b.drain_timeline();

@@ -2,8 +2,10 @@
 //!
 //! The registry plays the role the platform/device tables play for the
 //! substrate: a process-wide list of executors. The default registry
-//! holds one backend per `rawcl` device (a [`PjrtBackend`] per native
-//! device, a [`SimBackend`] per simulated device); additional backends
+//! holds one backend per `rawcl` device (a [`NativeBackend`] per native
+//! device — the compiled-kernel tier — and a [`SimBackend`] per
+//! simulated device; the interpreting [`PjrtBackend`] stays directly
+//! constructible for comparison runs); additional backends
 //! (GPU PJRT plugins, remote workers, ...) register at runtime and are
 //! picked up by the scheduler and the harness without caller changes.
 //!
@@ -20,7 +22,7 @@ use crate::rawcl::device as rawdev;
 use crate::rawcl::profile::BackendKind;
 use crate::rawcl::types::DeviceId;
 
-use super::{Backend, PjrtBackend, SimBackend};
+use super::{Backend, NativeBackend, SimBackend};
 
 /// A thread-safe, extensible list of backends.
 #[derive(Default)]
@@ -39,7 +41,7 @@ impl BackendRegistry {
         let reg = Self::new();
         for d in rawdev::devices() {
             let backend: Arc<dyn Backend> = match d.profile.backend {
-                BackendKind::Native => match PjrtBackend::new(d.id) {
+                BackendKind::Native => match NativeBackend::new(d.id) {
                     Ok(b) => Arc::new(b),
                     Err(_) => continue,
                 },

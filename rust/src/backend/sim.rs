@@ -78,14 +78,20 @@ impl SimBackend {
     }
 
     /// Stamp one command on the virtual in-order queue and record it.
-    fn record(&self, st: &mut SimState, name: &str, model_ns: u64) -> EventId {
+    fn record(
+        &self,
+        st: &mut SimState,
+        name: &str,
+        model_ns: u64,
+        tag: Option<&str>,
+    ) -> EventId {
         let now = clock::now_ns();
         let start = now.max(st.cursor_ns);
         let times = EventTimes { queued: now, submit: now, start, end: start + model_ns };
         st.cursor_ns = times.end;
         let id = st.fresh_id();
         st.events.insert(id, times);
-        st.timeline.push((name.to_string(), times));
+        st.timeline.push((name.to_string(), times, tag.map(str::to_string)));
         EventId(id)
     }
 }
@@ -148,7 +154,7 @@ impl Backend for SimBackend {
             })?;
         dst.copy_from_slice(data);
         let ns = self.timing.transfer_ns(data.len() as u64);
-        Ok(self.record(&mut st, "WRITE_BUFFER", ns))
+        Ok(self.record(&mut st, "WRITE_BUFFER", ns, None))
     }
 
     fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
@@ -162,10 +168,15 @@ impl Backend for SimBackend {
             })?;
         out.copy_from_slice(src);
         let ns = self.timing.transfer_ns(out.len() as u64);
-        Ok(self.record(&mut st, "READ_BUFFER", ns))
+        Ok(self.record(&mut st, "READ_BUFFER", ns, None))
     }
 
-    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
         let mut st = self.state.lock().unwrap();
         let spec = *st
             .kernels
@@ -256,7 +267,7 @@ impl Backend for SimBackend {
 
         let (ops, bytes) = model_cost(&spec);
         let ns = self.timing.kernel_ns(ops, bytes);
-        Ok(self.record(&mut st, spec.event_name(), ns))
+        Ok(self.record(&mut st, spec.event_name(), ns, tag))
     }
 
     fn wait(&self, ev: EventId) -> BackendResult<()> {
@@ -313,8 +324,9 @@ mod tests {
         let k_step = b.compile(&CompileSpec::step(n)).unwrap();
         let state = b.alloc(n * 8).unwrap();
         let next = b.alloc(n * 8).unwrap();
-        b.enqueue(k_init, &[LaunchArg::Buf(state)]).unwrap();
-        b.enqueue(k_step, &[LaunchArg::Buf(state), LaunchArg::Buf(next)]).unwrap();
+        b.enqueue(k_init, &[LaunchArg::Buf(state)], None).unwrap();
+        b.enqueue(k_step, &[LaunchArg::Buf(state), LaunchArg::Buf(next)], None)
+            .unwrap();
         let mut out = vec![0u8; n * 8];
         let ev = b.read(next, 0, &mut out).unwrap();
         b.wait(ev).unwrap();
@@ -328,7 +340,7 @@ mod tests {
         let n = 16;
         let k = b.compile(&CompileSpec::init_at(n, 1000)).unwrap();
         let buf = b.alloc(n * 8).unwrap();
-        b.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
         let mut out = vec![0u8; n * 8];
         b.read(buf, 0, &mut out).unwrap();
         let w3 = u64::from_le_bytes(out[24..32].try_into().unwrap());
@@ -341,7 +353,7 @@ mod tests {
         let n = 4096;
         let k = b.compile(&CompileSpec::init(n)).unwrap();
         let buf = b.alloc(n * 8).unwrap();
-        let e1 = b.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        let e1 = b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
         let mut out = vec![0u8; n * 8];
         let e2 = b.read(buf, 0, &mut out).unwrap();
         let (t1, t2) = (b.timestamps(e1).unwrap(), b.timestamps(e2).unwrap());
@@ -373,7 +385,7 @@ mod tests {
         let k = bk.compile(&CompileSpec::reduce(32)).unwrap();
         let (inb, outb) = (bk.alloc(32 * 8).unwrap(), bk.alloc(8).unwrap());
         bk.write(inb, 0, &bytes).unwrap();
-        bk.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)]).unwrap();
+        bk.enqueue(k, &[LaunchArg::Buf(inb), LaunchArg::Buf(outb)], None).unwrap();
         let mut got = [0u8; 8];
         bk.read(outb, 0, &mut got).unwrap();
         assert_eq!(u64::from_le_bytes(got), simexec::reduce_tree(&seeds));
@@ -395,7 +407,7 @@ mod tests {
         let mut out = [0u8; 32];
         assert!(b.read(buf, 0, &mut out).is_err());
         assert!(b.wait(EventId(999)).is_err());
-        assert!(b.enqueue(KernelId(999), &[]).is_err());
+        assert!(b.enqueue(KernelId(999), &[], None).is_err());
         b.free(buf);
         assert!(b.write(buf, 0, &[0u8; 4]).is_err(), "freed buffer is dead");
     }

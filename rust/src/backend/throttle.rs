@@ -70,7 +70,14 @@ impl ThrottledBackend {
 
     /// Sleep for `bytes` at `ns_per_kib` and record the measured span
     /// under the inner event id.
-    fn throttle(&self, ev: EventId, name: &str, bytes: usize, ns_per_kib: u64) {
+    fn throttle(
+        &self,
+        ev: EventId,
+        name: &str,
+        bytes: usize,
+        ns_per_kib: u64,
+        tag: Option<&str>,
+    ) {
         let sleep_ns = (bytes as u64 * ns_per_kib) / 1024;
         let t0 = clock::now_ns();
         clock::precise_sleep(sleep_ns);
@@ -78,7 +85,7 @@ impl ThrottledBackend {
         let times = EventTimes { queued: t0, submit: t0, start: t0, end: t1 };
         let mut st = self.state.lock().unwrap();
         st.events.insert(ev.0, times);
-        st.timeline.push((name.to_string(), times));
+        st.timeline.push((name.to_string(), times, tag.map(str::to_string)));
     }
 }
 
@@ -114,18 +121,23 @@ impl Backend for ThrottledBackend {
 
     fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
         let ev = self.inner.write(buf, offset, data)?;
-        self.throttle(ev, "WRITE_BUFFER", data.len(), self.kernel_ns_per_kib / 8);
+        self.throttle(ev, "WRITE_BUFFER", data.len(), self.kernel_ns_per_kib / 8, None);
         Ok(ev)
     }
 
     fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
         let ev = self.inner.read(buf, offset, out)?;
-        self.throttle(ev, "READ_BUFFER", out.len(), self.kernel_ns_per_kib / 8);
+        self.throttle(ev, "READ_BUFFER", out.len(), self.kernel_ns_per_kib / 8, None);
         Ok(ev)
     }
 
-    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
-        let ev = self.inner.enqueue(kernel, args)?;
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
+        let ev = self.inner.enqueue(kernel, args, tag)?;
         let (event_name, bytes) = {
             let st = self.state.lock().unwrap();
             let name = st.specs.get(&kernel.0).map(|s| s.event_name()).unwrap_or("KERNEL");
@@ -138,7 +150,7 @@ impl Backend for ThrottledBackend {
                 .sum();
             (name, bytes)
         };
-        self.throttle(ev, event_name, bytes, self.kernel_ns_per_kib);
+        self.throttle(ev, event_name, bytes, self.kernel_ns_per_kib, tag);
         Ok(ev)
     }
 
@@ -179,7 +191,7 @@ mod tests {
         let n = 1024; // 8 KiB of PRNG output
         let k = thr.compile(&CompileSpec::init(n)).unwrap();
         let buf = thr.alloc(n * 8).unwrap();
-        let ev = thr.enqueue(k, &[LaunchArg::Buf(buf)]).unwrap();
+        let ev = thr.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
         thr.wait(ev).unwrap();
         let t = thr.timestamps(ev).unwrap();
         assert!(
@@ -194,8 +206,8 @@ mod tests {
         assert_eq!(w0, simexec::init_seed(0), "throttle must not change bits");
 
         let timeline = thr.drain_timeline();
-        assert!(timeline.iter().any(|(name, _)| name == "INIT_KERNEL"));
-        assert!(timeline.iter().any(|(name, _)| name == "READ_BUFFER"));
+        assert!(timeline.iter().any(|(name, _, _)| name == "INIT_KERNEL"));
+        assert!(timeline.iter().any(|(name, _, _)| name == "READ_BUFFER"));
         assert!(thr.drain_timeline().is_empty(), "drain must take the timeline");
         thr.free(buf);
     }

@@ -30,7 +30,7 @@
 //! transfers across every backend (names match the single-device
 //! service: `INIT_KERNEL`, `RNG_KERNEL`, `READ_BUFFER`, ...).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -143,6 +143,14 @@ pub struct ShardedConfig<W: Workload> {
     /// `"svc.batch-7."`), so exported timelines attribute spans to the
     /// dispatch that produced them. `None` = plain backend names.
     pub queue_tag: Option<String>,
+    /// Per-shard launch tag (same length as the shard plan), threaded
+    /// through [`Backend::enqueue`] so each shard's kernel spans carry
+    /// their originator. The compute service tags every shard with its
+    /// request's `svc.req-<id>.` label, making per-request profile
+    /// slices exact even inside a fused micro-batch. Tagged spans are
+    /// profiled under `<tag><backend name>` queues; untagged spans fall
+    /// back to [`queue_tag`](Self::queue_tag).
+    pub shard_tags: Option<Vec<String>>,
 }
 
 impl<W: Workload> ShardedConfig<W> {
@@ -158,6 +166,7 @@ impl<W: Workload> ShardedConfig<W> {
             shard_plan: None,
             shard_homes: None,
             queue_tag: None,
+            shard_tags: None,
         }
     }
 }
@@ -246,6 +255,9 @@ pub(crate) fn plan_chunks(
 /// Run one task: execute `workload.plan(shard, iter, state)` on
 /// backend `b`, leaving the shard's output bytes in `out`. Returns the
 /// output byte count (the scheduler's per-backend throughput metric).
+/// `tag` is the shard's caller label, attached to the kernel launch so
+/// the profiled span is attributable to its originating request.
+#[allow(clippy::too_many_arguments)]
 fn run_task(
     b: &dyn Backend,
     scratch: &BackendScratch,
@@ -254,6 +266,7 @@ fn run_task(
     iter: usize,
     state: &[u8],
     out: &Mutex<Vec<u8>>,
+    tag: Option<&str>,
 ) -> Result<usize, String> {
     let specs = workload.kernels(shard);
     let plan = workload.plan(shard, iter, state);
@@ -274,7 +287,7 @@ fn run_task(
         let out_buf = scratch.acquire(b, plan.out_bytes)?;
         acquired.push((plan.out_bytes, out_buf));
         let args = spec.launch_args(&in_bufs, out_buf, &plan.scalars);
-        let ev = b.enqueue(kernel, &args).map_err(|e| e.to_string())?;
+        let ev = b.enqueue(kernel, &args, tag).map_err(|e| e.to_string())?;
         b.wait(ev).map_err(|e| e.to_string())?;
         let mut dst = out.lock().unwrap();
         dst.resize(plan.out_bytes, 0);
@@ -314,6 +327,7 @@ pub fn run_sharded_on(
             shard_plan: None,
             shard_homes: None,
             queue_tag: None,
+            shard_tags: None,
         },
     )?;
     Ok(ShardedOutcome {
@@ -352,6 +366,7 @@ pub fn run_sharded_workload_on<W: Workload>(
             shard_plan: cfg.shard_plan.as_deref(),
             shard_homes: cfg.shard_homes.as_deref(),
             queue_tag: cfg.queue_tag.as_deref(),
+            shard_tags: cfg.shard_tags.as_deref(),
         },
     )
 }
@@ -369,6 +384,7 @@ struct EngineOpts<'a> {
     shard_plan: Option<&'a [Shard]>,
     shard_homes: Option<&'a [usize]>,
     queue_tag: Option<&'a str>,
+    shard_tags: Option<&'a [String]>,
 }
 
 /// The workload-agnostic scheduling engine: shard, dispatch with work
@@ -388,6 +404,7 @@ fn run_workload_engine(
         shard_plan,
         shard_homes,
         queue_tag,
+        shard_tags,
     } = *opts;
     let backends: Vec<Arc<dyn Backend>> = match selector {
         Some(chain) => registry.select(chain),
@@ -442,6 +459,15 @@ fn run_workload_engine(
         if let Some(&bad) = homes.iter().find(|&&h| h >= nb) {
             return Err(CclError::framework(format!(
                 "shard home {bad} out of range: {nb} backends selected"
+            )));
+        }
+    }
+    if let Some(tags) = shard_tags {
+        if tags.len() != shards.len() {
+            return Err(CclError::framework(format!(
+                "shard tags cover {} shards, the plan has {}",
+                tags.len(),
+                shards.len()
             )));
         }
     }
@@ -522,6 +548,7 @@ fn run_workload_engine(
                             iter,
                             state_ref,
                             &outputs[ci],
+                            shard_tags.map(|t| t[ci].as_str()),
                         );
                         match r {
                             Ok(n) => {
@@ -552,7 +579,7 @@ fn run_workload_engine(
         if !profile {
             for (bi, b) in backends.iter().enumerate() {
                 busy_acc[bi] +=
-                    b.drain_timeline().iter().map(|(_, t)| t.duration()).sum::<u64>();
+                    b.drain_timeline().iter().map(|(_, t, _)| t.duration()).sum::<u64>();
             }
         }
 
@@ -585,7 +612,7 @@ fn run_workload_engine(
     for (bi, b) in backends.iter().enumerate() {
         let timeline = b.drain_timeline();
         let busy_ns =
-            busy_acc[bi] + timeline.iter().map(|(_, t)| t.duration()).sum::<u64>();
+            busy_acc[bi] + timeline.iter().map(|(_, t, _)| t.duration()).sum::<u64>();
         per_backend.push(BackendLoad {
             name: b.name(),
             tasks: tasks_run[bi].get() as usize,
@@ -594,17 +621,26 @@ fn run_workload_engine(
             bytes: bytes_out[bi].get(),
         });
         if profile {
-            let queue = match queue_tag {
-                Some(tag) => format!("{tag}{}", b.name()),
-                None => b.name(),
-            };
-            prof.add_timeline(
-                queue,
-                timeline
-                    .into_iter()
-                    .map(|(name, t)| (name, (t.queued, t.submit, t.start, t.end)))
-                    .collect(),
-            );
+            // Partition the drained spans by their launch tag: a tagged
+            // span (e.g. `svc.req-3.`) gets its own `<tag><backend>`
+            // queue, untagged spans (transfers, untagged launches) fall
+            // back to the dispatch-wide `queue_tag` prefix. BTreeMap
+            // keeps queue order deterministic for the exported table.
+            let mut queues: BTreeMap<String, Vec<(String, (u64, u64, u64, u64))>> =
+                BTreeMap::new();
+            for (name, t, tag) in timeline {
+                let queue = match tag.as_deref().or(queue_tag) {
+                    Some(tag) => format!("{tag}{}", b.name()),
+                    None => b.name(),
+                };
+                queues
+                    .entry(queue)
+                    .or_default()
+                    .push((name, (t.queued, t.submit, t.start, t.end)));
+            }
+            for (queue, entries) in queues {
+                prof.add_timeline(queue, entries);
+            }
         }
     }
 
@@ -771,6 +807,46 @@ mod tests {
             infos.iter().all(|i| i.queue.starts_with("svc.batch-0.")),
             "{infos:?}"
         );
+    }
+
+    #[test]
+    fn shard_tags_partition_profile_queues_per_request() {
+        use crate::workload::SaxpyWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let w = SaxpyWorkload::new(2048, 2.0);
+        let mut scfg = ShardedConfig::new(w, 1);
+        scfg.profile = true;
+        scfg.queue_tag = Some("svc.batch-0.".into());
+        scfg.shard_plan =
+            Some(vec![Shard { lo: 0, len: 1024 }, Shard { lo: 1024, len: 1024 }]);
+        scfg.shard_tags = Some(vec!["svc.req-1.".into(), "svc.req-2.".into()]);
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert_eq!(out.final_output, w.reference(1));
+        let infos = out.prof_infos.expect("profiling requested");
+        // Kernel spans carry their shard's request tag; transfers fall
+        // back to the batch-wide queue tag.
+        for tag in ["svc.req-1.", "svc.req-2."] {
+            assert!(
+                infos
+                    .iter()
+                    .any(|i| i.name == "SAXPY_KERNEL" && i.queue.starts_with(tag)),
+                "missing kernel span for {tag}: {infos:?}"
+            );
+        }
+        assert!(
+            infos
+                .iter()
+                .filter(|i| i.name != "SAXPY_KERNEL")
+                .all(|i| i.queue.starts_with("svc.batch-0.")),
+            "{infos:?}"
+        );
+
+        // A tag list that does not match the plan is rejected.
+        let mut bad = ShardedConfig::new(w, 1);
+        bad.shard_plan =
+            Some(vec![Shard { lo: 0, len: 1024 }, Shard { lo: 1024, len: 1024 }]);
+        bad.shard_tags = Some(vec!["svc.req-1.".into()]);
+        assert!(run_sharded_workload_on(&reg, &bad).is_err());
     }
 
     #[test]

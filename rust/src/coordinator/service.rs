@@ -36,9 +36,13 @@
 //! * **Profiling** — when [`ServiceOpts::profile`] is set, every batch's
 //!   cross-backend timeline (via
 //!   [`Prof::add_timeline`](crate::ccl::Prof::add_timeline)) is
-//!   aggregated service-wide; each [`Response`] carries its batch's
-//!   [`BatchProf`] slice and [`ComputeService::shutdown`] renders the
-//!   whole service profile.
+//!   aggregated service-wide. Each request gets a unique id whose
+//!   `svc.req-<id>.` tag rides on its shards' kernel launches, so the
+//!   [`BatchProf`] slice on each [`Response`] is **per-request exact**
+//!   (only that request's kernel spans), not a whole-batch blur;
+//!   transfers and other shared spans stay under the batch's
+//!   `svc.batch-<n>.` queues, and [`ComputeService::shutdown`] renders
+//!   the whole service profile across both.
 //! * **Shutdown drain** — [`ComputeService::shutdown`] stops admission,
 //!   drains every already-accepted request (their handles all resolve),
 //!   joins the dispatcher and reports. Dropping the service does the
@@ -75,7 +79,7 @@
 //! ```
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -161,14 +165,17 @@ impl std::fmt::Display for ServiceError {
 
 impl std::error::Error for ServiceError {}
 
-/// Profile slice for the batch a request rode in.
+/// Profile slice attached to a [`Response`]: the request's own kernel
+/// spans (grouped under its `svc.req-<id>.` queues), rendered with the
+/// id of the batch it rode in. Falls back to the whole-batch profile
+/// when the request produced no tagged span of its own.
 #[derive(Debug)]
 pub struct BatchProf {
     pub batch_id: u64,
     pub batch_size: usize,
-    /// Fig. 3-style summary of the batch across all backends.
+    /// Fig. 3-style summary of the slice across all backends.
     pub summary: String,
-    /// Fig. 5-style export table of the batch.
+    /// Fig. 5-style export table of the slice.
     pub export: String,
 }
 
@@ -183,7 +190,11 @@ pub struct Response {
     pub batch_id: u64,
     /// How many requests shared that batch.
     pub batch_size: usize,
-    /// The batch's profile slice (when the service profiles).
+    /// The service-unique id assigned to this request at admission —
+    /// the `<id>` in the `svc.req-<id>.` profile queues.
+    pub req_id: u64,
+    /// This request's profile slice (when the service profiles): its
+    /// own kernel spans under `svc.req-<id>.` queues.
     pub prof: Option<Arc<BatchProf>>,
 }
 
@@ -277,9 +288,10 @@ pub struct ServiceOpts {
     pub chunks_per_backend: usize,
     /// Scheduler chunking: minimum shard size in workload units.
     pub min_chunk: usize,
-    /// Profile every batch and aggregate service-wide. Batch timelines
-    /// get `svc.batch-<n>.`-prefixed queue labels so exports attribute
-    /// every span to the batch that produced it.
+    /// Profile every batch and aggregate service-wide. Kernel spans get
+    /// `svc.req-<id>.`-prefixed queue labels (their request's id);
+    /// shared spans (transfers) get the batch's `svc.batch-<n>.`
+    /// prefix, so exports attribute every span to its originator.
     pub profile: bool,
     /// Size the straggler wait online ([`AdaptiveWindow`] seeded from
     /// `batch_window`) instead of always waiting the full static
@@ -569,9 +581,9 @@ pub fn run_batch(
             for b in registry.select(chain) {
                 sub.register(b);
             }
-            run_members(&sub, members, iters, opts, None, None)
+            run_members(&sub, members, iters, opts, None, None, None)
         }
-        None => run_members(registry, members, iters, opts, None, None),
+        None => run_members(registry, members, iters, opts, None, None, None),
     }
 }
 
@@ -581,6 +593,7 @@ fn run_members(
     iters: usize,
     opts: &ServiceOpts,
     queue_tag: Option<String>,
+    member_tags: Option<Vec<String>>,
     plan: Option<(Vec<Shard>, Vec<usize>)>,
 ) -> CclResult<BatchOutcome> {
     let nb = registry.len().max(1);
@@ -597,6 +610,18 @@ fn run_members(
                 opts.min_chunk,
             ));
         }
+    }
+    if let Some(tags) = member_tags {
+        // Label every shard with its owning member's tag (shards are
+        // request-aligned, so the mapping is unambiguous): the shard's
+        // kernel spans then profile under that request's queues.
+        let shard_plan = cfg.shard_plan.as_ref().expect("batch always plans shards");
+        cfg.shard_tags = Some(
+            shard_plan
+                .iter()
+                .map(|&s| tags[cfg.workload.member_of(s).0].clone())
+                .collect(),
+        );
     }
     cfg.profile = opts.profile;
     cfg.queue_tag = queue_tag;
@@ -666,6 +691,9 @@ struct Pending {
     iters: usize,
     slot: Arc<Slot>,
     submitted: Instant,
+    /// Service-unique id assigned at admission; tags the request's
+    /// shards (`svc.req-<id>.`) so its profile slice is exact.
+    req_id: u64,
 }
 
 impl Pending {
@@ -694,6 +722,8 @@ struct ServiceShared {
     /// Admission permits — one per free queue slot.
     slots: Semaphore,
     stopping: AtomicBool,
+    /// Next request id (monotonic, service-unique).
+    next_req_id: AtomicU64,
     opts: ServiceOpts,
     /// Lock-free telemetry the dispatcher records into; `stats()` and
     /// the live dashboard read it without contending.
@@ -747,6 +777,7 @@ impl ComputeService {
             ready: Semaphore::new(0),
             slots: Semaphore::new(opts.queue_cap.max(1)),
             stopping: AtomicBool::new(false),
+            next_req_id: AtomicU64::new(1),
             opts,
             metrics,
             window,
@@ -802,6 +833,7 @@ impl ComputeService {
             iters,
             slot: slot.clone(),
             submitted: Instant::now(),
+            req_id: self.shared.next_req_id.fetch_add(1, Ordering::SeqCst),
         };
         {
             // Re-check shutdown *inside* the queue critical section:
@@ -1037,9 +1069,14 @@ fn execute_batch(
     let iters = batch[0].iters;
     let members: Vec<Arc<dyn Workload>> =
         batch.iter().map(|p| p.workload.clone()).collect();
-    // Stamp the batch id into the profile queue labels so exported
-    // timelines attribute every span to its batch.
+    // Stamp the batch id into the profile queue labels (the fallback
+    // for untagged spans — transfers) and each request's id onto its
+    // own shards, so exported timelines attribute every span to its
+    // batch and every kernel span to its exact request.
     let tag = sh.opts.profile.then(|| format!("svc.batch-{batch_id}."));
+    let member_tags = sh.opts.profile.then(|| {
+        batch.iter().map(|p| format!("svc.req-{}.", p.req_id)).collect::<Vec<_>>()
+    });
     let plan = if sh.opts.adaptive_shards {
         plan_members_proportional(
             registry.get(),
@@ -1050,7 +1087,8 @@ fn execute_batch(
     } else {
         None
     };
-    match run_members(registry.get(), members, iters, &sh.opts, tag, plan) {
+    match run_members(registry.get(), members, iters, &sh.opts, tag, member_tags, plan)
+    {
         Ok(mut out) => {
             // Feed the controllers and the metrics surface.
             let mut backend_bytes = Vec::with_capacity(out.per_backend.len());
@@ -1059,10 +1097,8 @@ fn execute_batch(
                 backend_bytes.push((load.name.clone(), load.bytes));
             }
             sh.metrics.add_backend_bytes(&backend_bytes);
-            if let Some(infos) = out.prof_infos.take() {
-                sh.prof_infos.lock().unwrap().extend(infos);
-            }
-            let prof = out.prof_summary.as_ref().map(|s| {
+            let infos = out.prof_infos.take();
+            let batch_prof = out.prof_summary.as_ref().map(|s| {
                 Arc::new(BatchProf {
                     batch_id,
                     batch_size: n,
@@ -1070,6 +1106,50 @@ fn execute_batch(
                     export: out.prof_export.clone().unwrap_or_default(),
                 })
             });
+            // Slice the batch profile per request: each request's
+            // `svc.req-<id>.` queues render into its own BatchProf, so
+            // the Prof a Response carries covers exactly that request's
+            // kernel spans. Fall back to the whole-batch profile when a
+            // request has no tagged span (should not happen, but a
+            // blurry profile beats a missing one).
+            let req_profs: Vec<Option<Arc<BatchProf>>> = batch
+                .iter()
+                .map(|p| {
+                    let Some(infos) = infos.as_ref() else {
+                        return batch_prof.clone();
+                    };
+                    let prefix = format!("svc.req-{}.", p.req_id);
+                    let mut by_queue: BTreeMap<
+                        String,
+                        Vec<(String, (u64, u64, u64, u64))>,
+                    > = BTreeMap::new();
+                    for i in infos.iter().filter(|i| i.queue.starts_with(&prefix)) {
+                        by_queue.entry(i.queue.clone()).or_default().push((
+                            i.name.clone(),
+                            (i.t_queued, i.t_submit, i.t_start, i.t_end),
+                        ));
+                    }
+                    if by_queue.is_empty() {
+                        return batch_prof.clone();
+                    }
+                    let mut prof = Prof::new();
+                    for (q, entries) in by_queue {
+                        prof.add_timeline(q, entries);
+                    }
+                    match prof.calc() {
+                        Ok(()) => Some(Arc::new(BatchProf {
+                            batch_id,
+                            batch_size: n,
+                            summary: prof.summary_default(),
+                            export: prof.export_string().unwrap_or_default(),
+                        })),
+                        Err(_) => batch_prof.clone(),
+                    }
+                })
+                .collect();
+            if let Some(infos) = infos {
+                sh.prof_infos.lock().unwrap().extend(infos);
+            }
             sh.metrics.batches.inc();
             if n > 1 {
                 sh.metrics.coalesced.add(n as u64);
@@ -1085,15 +1165,16 @@ fn execute_batch(
                 sh.metrics.answered.inc();
                 sh.metrics.record_latency(latency);
             }
-            for ((p, bytes), latency) in
-                batch.iter().zip(out.outputs).zip(latencies)
+            for (i, ((p, bytes), latency)) in
+                batch.iter().zip(out.outputs).zip(latencies).enumerate()
             {
                 p.fulfill(Ok(Response {
                     output: bytes,
                     latency,
                     batch_id,
                     batch_size: n,
-                    prof: prof.clone(),
+                    req_id: p.req_id,
+                    prof: req_profs[i].clone(),
                 }));
             }
         }

@@ -92,14 +92,14 @@ fn run_single(b: &dyn Backend, n: usize, iters: usize) -> Result<Row, String> {
     let mut host = vec![0u8; bytes];
     let mut h = Fnv::new();
 
-    let ev = b.enqueue(k_init, &[LaunchArg::Buf(front)]).map_err(err)?;
+    let ev = b.enqueue(k_init, &[LaunchArg::Buf(front)], None).map_err(err)?;
     b.wait(ev).map_err(err)?;
     b.read(front, 0, &mut host).map_err(err)?;
     h.update(&host);
     let (mut front, mut back) = (front, back);
     for _ in 1..iters {
         let ev = b
-            .enqueue(k_step, &[LaunchArg::Buf(front), LaunchArg::Buf(back)])
+            .enqueue(k_step, &[LaunchArg::Buf(front), LaunchArg::Buf(back)], None)
             .map_err(err)?;
         b.wait(ev).map_err(err)?;
         b.read(back, 0, &mut host).map_err(err)?;
@@ -107,7 +107,7 @@ fn run_single(b: &dyn Backend, n: usize, iters: usize) -> Result<Row, String> {
         std::mem::swap(&mut front, &mut back);
     }
     let wall = t0.elapsed();
-    let busy_ns: u64 = b.drain_timeline().iter().map(|(_, t)| t.duration()).sum();
+    let busy_ns: u64 = b.drain_timeline().iter().map(|(_, t, _)| t.duration()).sum();
     b.free(front);
     b.free(back);
 

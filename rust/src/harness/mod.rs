@@ -18,6 +18,11 @@
 //!   shards on a deterministically skewed registry, all outputs
 //!   cross-validated bit-identical (writes `adaptive.md` +
 //!   `BENCH_adaptive.json`);
+//! * `bench native`   — the native-tier speedup gate: interpreter vs
+//!   native median wall per workload at small/large shapes, the 5×5
+//!   (workload × path) bit-identity check, and the native ≥ 2×
+//!   interpreter requirement at large shapes (writes `native.md` +
+//!   `BENCH_native.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -28,6 +33,7 @@ pub mod backends;
 pub mod figures;
 pub mod loc;
 pub mod microbench;
+pub mod native;
 pub mod overhead;
 pub mod service;
 pub mod workloads;
@@ -68,7 +74,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|service|adaptive|all [--quick]"
+             workloads|service|adaptive|native|all [--quick]"
         );
         return 2;
     };
@@ -214,6 +220,22 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_native(quick: bool) -> bool {
+        let (md, json, validated) = native::report(quick);
+        print!("{md}");
+        // Write both artifacts even when a gate failed — they are the
+        // evidence — but fail the run on any gate.
+        let mut ok = write_result("native.md", &md);
+        ok &= write_result("BENCH_native.json", &json);
+        if !validated {
+            eprintln!(
+                "native: a gate FAILED (validation, 5-path bit-identity or \
+                 the >=2x large-shape speedup; see table)"
+            );
+        }
+        ok && validated
+    }
+
     let ok = match which.as_str() {
         "loc" => run_loc(),
         "ablation" => run_ablation(quick),
@@ -224,6 +246,7 @@ pub fn main(args: &[String]) -> i32 {
         "workloads" => run_workloads(quick),
         "service" => run_service(quick),
         "adaptive" => run_adaptive(quick),
+        "native" => run_native(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -234,7 +257,8 @@ pub fn main(args: &[String]) -> i32 {
             let f = run_workloads(quick);
             let g = run_service(quick);
             let h = run_adaptive(quick);
-            l && a && b && c && d && e && f && g && h
+            let i = run_native(quick);
+            l && a && b && c && d && e && f && g && h && i
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -1,0 +1,497 @@
+//! The native-tier speedup gate (`bench native`).
+//!
+//! Races the native parallel-kernel tier
+//! ([`NativeBackend`](crate::backend::NativeBackend)) against the
+//! interpreting PJRT backend on identical command streams
+//! ([`exec::run_backend_path`]) for every workload at a small and a
+//! large shape, and re-checks the full 5×5 (workload × path)
+//! bit-identity matrix. Three gates, all CI-enforced:
+//!
+//! * every timed run's output matches the host oracle bit-for-bit;
+//! * all five paths (rawcl / ccl-v1 / ccl-v2 / sharded / native) agree
+//!   with the oracle for all five workloads;
+//! * at large shapes the native tier's median wall is at least
+//!   [`MIN_SPEEDUP`]× faster than the interpreter's.
+//!
+//! Emits two artifacts:
+//! * `results/native.md` — the human table;
+//! * `results/BENCH_native.json` — machine-readable medians/speedups
+//!   (schema [`SCHEMA`]), validated and grepped by the CI native gate.
+
+use std::time::{Duration, Instant};
+
+use crate::backend::{Backend, BackendRegistry, NativeBackend, PjrtBackend};
+use crate::harness::microbench::BenchResult;
+use crate::workload::{
+    exec, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload,
+    StencilWorkload, Workload,
+};
+
+/// Version tag of `BENCH_native.json`. Bump on layout changes so trend
+/// tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-native/1";
+
+/// The CI bar: at large shapes the native tier must beat the
+/// interpreter's median wall by at least this factor.
+pub const MIN_SPEEDUP: f64 = 2.0;
+
+/// One (workload × shape) interpreter-vs-native race.
+struct Cell {
+    workload: &'static str,
+    shape: &'static str,
+    units: usize,
+    iters: usize,
+    /// Interpreter wall-clock samples (empty = the arm errored).
+    interp: Vec<Duration>,
+    /// Native-tier wall-clock samples.
+    native: Vec<Duration>,
+    /// Every sample's output matched the host oracle bit-for-bit.
+    validated: bool,
+    error: Option<String>,
+}
+
+fn median_ms(samples: &[Duration]) -> Option<f64> {
+    BenchResult { name: String::new(), samples: samples.to_vec() }
+        .median()
+        .map(|d| d.as_secs_f64() * 1e3)
+}
+
+impl Cell {
+    fn interp_ms(&self) -> Option<f64> {
+        median_ms(&self.interp)
+    }
+
+    fn native_ms(&self) -> Option<f64> {
+        median_ms(&self.native)
+    }
+
+    fn speedup(&self) -> Option<f64> {
+        match (self.interp_ms(), self.native_ms()) {
+            (Some(i), Some(n)) if n > 0.0 => Some(i / n),
+            _ => None,
+        }
+    }
+
+    /// The large-shape perf gate; small shapes are informational only.
+    fn gated(&self) -> bool {
+        self.shape == "large"
+    }
+
+    fn gate_pass(&self) -> bool {
+        !self.gated()
+            || (self.validated
+                && self.speedup().is_some_and(|s| s >= MIN_SPEEDUP))
+    }
+}
+
+/// One workload's 5-path bit-identity verdict.
+struct Identity {
+    workload: &'static str,
+    ok: bool,
+    detail: Option<String>,
+}
+
+/// Time one backend arm: one unmeasured warmup (covers kernel
+/// compilation), then `samples` measured runs, each validated against
+/// the host oracle.
+fn time_arm(
+    w: &dyn Workload,
+    iters: usize,
+    samples: usize,
+    b: &dyn Backend,
+    reference: &[u8],
+) -> Result<(Vec<Duration>, bool), String> {
+    let mut validated = exec::run_backend_path(w, iters, b)? == *reference;
+    let mut walls = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        let out = exec::run_backend_path(w, iters, b)?;
+        walls.push(t0.elapsed());
+        validated &= out == *reference;
+    }
+    Ok((walls, validated))
+}
+
+fn run_pair(
+    w: &dyn Workload,
+    iters: usize,
+    samples: usize,
+    reference: &[u8],
+) -> Result<(Vec<Duration>, Vec<Duration>, bool), String> {
+    let interp = PjrtBackend::native().map_err(|e| e.to_string())?;
+    let native = NativeBackend::native().map_err(|e| e.to_string())?;
+    let (ti, vi) = time_arm(w, iters, samples, &interp, reference)?;
+    let (tn, vn) = time_arm(w, iters, samples, &native, reference)?;
+    Ok((ti, tn, vi && vn))
+}
+
+/// Race interpreter vs native on one workload at one shape.
+fn bench_pair(
+    w: &dyn Workload,
+    shape: &'static str,
+    iters: usize,
+    samples: usize,
+    cells: &mut Vec<Cell>,
+) {
+    let reference = w.reference(iters);
+    let mut cell = Cell {
+        workload: w.name(),
+        shape,
+        units: w.units(),
+        iters,
+        interp: Vec::new(),
+        native: Vec::new(),
+        validated: true,
+        error: None,
+    };
+    match run_pair(w, iters, samples, &reference) {
+        Ok((interp, native, validated)) => {
+            cell.interp = interp;
+            cell.native = native;
+            cell.validated = validated;
+        }
+        Err(e) => {
+            cell.validated = false;
+            cell.error = Some(e);
+        }
+    }
+    cells.push(cell);
+}
+
+/// Check one workload's output is bit-identical across all five
+/// execution paths and the host oracle.
+fn identity<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    registry: &BackendRegistry,
+) -> Identity {
+    let reference = w.reference(iters);
+    type Runner<'a> = Box<dyn Fn() -> Result<Vec<u8>, String> + 'a>;
+    let runners: Vec<(&'static str, Runner<'_>)> = vec![
+        ("rawcl", Box::new(|| exec::run_raw_path(w, iters, 1))),
+        ("ccl-v1", Box::new(|| exec::run_ccl_path(w, iters, 0).map_err(|e| e.to_string()))),
+        ("ccl-v2", Box::new(|| exec::run_v2_path(w, iters, 0).map_err(|e| e.to_string()))),
+        (
+            "sharded",
+            Box::new(|| exec::run_sharded_path(w, iters, registry).map_err(|e| e.to_string())),
+        ),
+        ("native", Box::new(|| exec::run_native_path(w, iters))),
+    ];
+    let mut ok = true;
+    let mut detail = None;
+    for (path, run) in &runners {
+        match run() {
+            Ok(out) if out == reference => {}
+            Ok(_) => {
+                ok = false;
+                if detail.is_none() {
+                    detail = Some(format!("{path} diverged from the host oracle"));
+                }
+            }
+            Err(e) => {
+                ok = false;
+                if detail.is_none() {
+                    detail = Some(format!("{path} failed: {e}"));
+                }
+            }
+        }
+    }
+    Identity { workload: w.name(), ok, detail }
+}
+
+fn all_validated(cells: &[Cell]) -> bool {
+    cells.iter().all(|c| c.validated)
+}
+
+fn identity_ok(identities: &[Identity]) -> bool {
+    identities.iter().all(|i| i.ok)
+}
+
+fn speedup_ok(cells: &[Cell]) -> bool {
+    cells.iter().filter(|c| c.gated()).all(Cell::gate_pass)
+}
+
+/// Render the markdown table.
+fn render_md(cells: &[Cell], identities: &[Identity], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# Native tier vs interpreter — {} mode, gate: native ≥ \
+         {MIN_SPEEDUP:.0}× at large shapes\n\n",
+        if quick { "quick" } else { "full" }
+    ));
+    s.push_str(
+        "| workload | shape | units | iters | interpreter (ms) | \
+         native (ms) | speedup | gate |\n\
+         |---|---|---:|---:|---:|---:|---:|---|\n",
+    );
+    let fmt = |v: Option<f64>| match v {
+        Some(v) => format!("{v:.2}"),
+        None => "—".to_string(),
+    };
+    for c in cells {
+        let gate = if !c.gated() {
+            "n/a".to_string()
+        } else if c.gate_pass() {
+            "pass".to_string()
+        } else {
+            "**FAIL**".to_string()
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            c.workload,
+            c.shape,
+            c.units,
+            c.iters,
+            fmt(c.interp_ms()),
+            fmt(c.native_ms()),
+            match c.speedup() {
+                Some(x) => format!("{x:.2}×"),
+                None => "—".to_string(),
+            },
+            gate,
+        ));
+    }
+
+    s.push_str("\n## 5×5 bit-identity\n\n");
+    s.push_str("| workload | rawcl = ccl-v1 = ccl-v2 = sharded = native = oracle |\n|---|---|\n");
+    for i in identities {
+        s.push_str(&format!(
+            "| {} | {} |\n",
+            i.workload,
+            if i.ok {
+                "identical".to_string()
+            } else {
+                format!(
+                    "**BROKEN** ({})",
+                    i.detail.as_deref().unwrap_or("divergence")
+                )
+            },
+        ));
+    }
+    s.push_str(
+        "\nThe native tier runs real banded data-parallel Rust on a \
+         persistent worker pool; the interpreter walks the same logical \
+         kernels element-by-element. Identical bytes across all five \
+         paths is the correctness gate; the median-wall speedup at \
+         large shapes is the performance gate.\n",
+    );
+    for c in cells {
+        if !c.validated {
+            s.push_str(&format!(
+                "\n* `{}/{}` diverged or failed: {}\n",
+                c.workload,
+                c.shape,
+                c.error.as_deref().unwrap_or("output mismatch"),
+            ));
+        }
+    }
+    s
+}
+
+use super::json_escape as esc;
+
+fn json_num(v: Option<f64>) -> String {
+    match v {
+        Some(v) if v.is_finite() => format!("{v:.6}"),
+        _ => "null".to_string(),
+    }
+}
+
+/// Render `BENCH_native.json`.
+fn render_json(cells: &[Cell], identities: &[Identity], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str(&format!("  \"min_speedup\": {MIN_SPEEDUP:.1},\n"));
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"shape\": \"{}\", \"units\": {}, \
+             \"iters\": {}, \"samples\": {}, \"interp_median_ms\": {}, \
+             \"native_median_ms\": {}, \"speedup\": {}, \
+             \"validated\": {}, \"gate_pass\": {}{}}}{}\n",
+            c.workload,
+            c.shape,
+            c.units,
+            c.iters,
+            c.interp.len().min(c.native.len()),
+            json_num(c.interp_ms()),
+            json_num(c.native_ms()),
+            json_num(c.speedup()),
+            c.validated,
+            c.gate_pass(),
+            match &c.error {
+                Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+                None => String::new(),
+            },
+            if i + 1 < cells.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"identity\": [\n");
+    for (i, id) in identities.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"ok\": {}{}}}{}\n",
+            id.workload,
+            id.ok,
+            match &id.detail {
+                Some(d) => format!(", \"detail\": \"{}\"", esc(d)),
+                None => String::new(),
+            },
+            if i + 1 < identities.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!("  \"validated\": {},\n", all_validated(cells)));
+    s.push_str(&format!("  \"identity_ok\": {},\n", identity_ok(identities)));
+    s.push_str(&format!("  \"speedup_ok\": {},\n", speedup_ok(cells)));
+    s.push_str(&format!(
+        "  \"gate_ok\": {}\n",
+        all_validated(cells) && identity_ok(identities) && speedup_ok(cells)
+    ));
+    s.push_str("}\n");
+    s
+}
+
+/// Build the full report. Returns `(markdown, json, gate_ok)` — the
+/// caller writes both files even when a gate failed (the artifacts are
+/// the evidence) but must exit non-zero on `!gate_ok`.
+pub fn report(quick: bool) -> (String, String, bool) {
+    let samples = if quick { 3 } else { 5 };
+    // A fresh registry keeps profiling/timeline state isolated from the
+    // process-global one other harness commands use.
+    let registry = BackendRegistry::with_default_backends();
+    let mut cells = Vec::new();
+
+    if quick {
+        bench_pair(&PrngWorkload::new(4096), "small", 3, samples, &mut cells);
+        bench_pair(&PrngWorkload::new(65536), "large", 4, samples, &mut cells);
+        bench_pair(&SaxpyWorkload::new(4096, 2.5), "small", 2, samples, &mut cells);
+        bench_pair(&SaxpyWorkload::new(131072, 2.5), "large", 2, samples, &mut cells);
+        bench_pair(&ReduceWorkload::new(4096), "small", 2, samples, &mut cells);
+        bench_pair(&ReduceWorkload::new(262144), "large", 2, samples, &mut cells);
+        bench_pair(&StencilWorkload::new(32, 24), "small", 2, samples, &mut cells);
+        bench_pair(&StencilWorkload::new(192, 128), "large", 2, samples, &mut cells);
+        bench_pair(&MatmulWorkload::new(16), "small", 2, samples, &mut cells);
+        bench_pair(&MatmulWorkload::new(96), "large", 2, samples, &mut cells);
+    } else {
+        bench_pair(&PrngWorkload::new(8192), "small", 3, samples, &mut cells);
+        bench_pair(&PrngWorkload::new(262144), "large", 4, samples, &mut cells);
+        bench_pair(&SaxpyWorkload::new(8192, 2.5), "small", 2, samples, &mut cells);
+        bench_pair(&SaxpyWorkload::new(524288, 2.5), "large", 2, samples, &mut cells);
+        bench_pair(&ReduceWorkload::new(8192), "small", 2, samples, &mut cells);
+        bench_pair(&ReduceWorkload::new(1048576), "large", 2, samples, &mut cells);
+        bench_pair(&StencilWorkload::new(48, 32), "small", 2, samples, &mut cells);
+        bench_pair(&StencilWorkload::new(384, 256), "large", 2, samples, &mut cells);
+        bench_pair(&MatmulWorkload::new(16), "small", 2, samples, &mut cells);
+        bench_pair(&MatmulWorkload::new(144), "large", 2, samples, &mut cells);
+    }
+
+    // The identity matrix runs at small shapes — it is a correctness
+    // check, not a timing one.
+    let identities = vec![
+        identity(&PrngWorkload::new(2048), 3, &registry),
+        identity(&SaxpyWorkload::new(2048, 2.5), 2, &registry),
+        identity(&ReduceWorkload::new(4096), 2, &registry),
+        identity(&StencilWorkload::new(24, 16), 2, &registry),
+        identity(&MatmulWorkload::new(12), 2, &registry),
+    ];
+
+    let ok =
+        all_validated(&cells) && identity_ok(&identities) && speedup_ok(&cells);
+    (
+        render_md(&cells, &identities, quick),
+        render_json(&cells, &identities, quick),
+        ok,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic(
+        shape: &'static str,
+        interp_ms: u64,
+        native_ms: u64,
+        validated: bool,
+    ) -> Cell {
+        Cell {
+            workload: "prng",
+            shape,
+            units: 1024,
+            iters: 2,
+            interp: vec![Duration::from_millis(interp_ms); 3],
+            native: vec![Duration::from_millis(native_ms); 3],
+            validated,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn speedup_gate_logic() {
+        // 10ms / 2ms = 5× — passes the 2× large-shape bar.
+        assert!(synthetic("large", 10, 2, true).gate_pass());
+        // 10ms / 8ms = 1.25× — fails it.
+        assert!(!synthetic("large", 10, 8, true).gate_pass());
+        // A fast but diverging cell still fails.
+        assert!(!synthetic("large", 10, 1, false).gate_pass());
+        // Small shapes are informational only.
+        assert!(synthetic("small", 10, 8, false).gate_pass());
+        assert!(speedup_ok(&[
+            synthetic("small", 10, 8, true),
+            synthetic("large", 10, 2, true),
+        ]));
+        assert!(!speedup_ok(&[synthetic("large", 10, 8, true)]));
+    }
+
+    #[test]
+    fn json_escaping_nulls_and_gates() {
+        let mut cell = synthetic("large", 10, 8, false);
+        cell.interp.clear();
+        cell.native.clear();
+        cell.error = Some("a \"quoted\"\nfailure".to_string());
+        let identities = vec![Identity {
+            workload: "prng",
+            ok: false,
+            detail: Some("native failed: boom".to_string()),
+        }];
+        let j = render_json(&[cell], &identities, true);
+        assert!(j.contains(SCHEMA));
+        assert!(j.contains("\"interp_median_ms\": null"));
+        assert!(j.contains("\"speedup\": null"));
+        assert!(j.contains("a \\\"quoted\\\"\\nfailure"));
+        assert!(j.contains("\"identity_ok\": false"));
+        assert!(j.contains("\"gate_ok\": false"));
+        // No trailing comma in 1-element arrays.
+        assert!(!j.contains("}},\n  ]"));
+    }
+
+    #[test]
+    fn tiny_end_to_end_race_validates() {
+        // Real interpreter-vs-native races at tiny shapes: correctness
+        // must hold even where the speedup gate would not (small shapes
+        // are ungated). The CI bench-gate runs the real --quick report.
+        let mut cells = Vec::new();
+        bench_pair(&PrngWorkload::new(512), "small", 2, 1, &mut cells);
+        bench_pair(&SaxpyWorkload::new(512, 2.5), "small", 2, 1, &mut cells);
+        bench_pair(&ReduceWorkload::new(512), "small", 1, 1, &mut cells);
+        bench_pair(&StencilWorkload::new(12, 8), "small", 2, 1, &mut cells);
+        bench_pair(&MatmulWorkload::new(8), "small", 1, 1, &mut cells);
+        for c in &cells {
+            assert!(
+                c.validated,
+                "{}/{} diverged: {:?}",
+                c.workload, c.shape, c.error
+            );
+            assert!(c.speedup().is_some());
+        }
+        let registry = BackendRegistry::with_default_backends();
+        let id = identity(&PrngWorkload::new(256), 2, &registry);
+        assert!(id.ok, "identity broken: {:?}", id.detail);
+        let md = render_md(&cells, &[id], true);
+        assert!(md.contains("| prng | small |"));
+        assert!(!md.contains("BROKEN"));
+    }
+}

@@ -1,10 +1,11 @@
 //! The (workload × path) cross-validation and timing matrix.
 //!
-//! Runs every [`Workload`] through all four execution paths — the raw
-//! substrate, the `ccl` v1 tier, the fluent `ccl::v2` tier and the
-//! multi-backend sharded scheduler — timing each cell and checking its
-//! output **bit-for-bit** against the host oracle. Any divergence is a
-//! correctness bug and fails the run (CI gates on it).
+//! Runs every [`Workload`] through all five execution paths — the raw
+//! substrate, the `ccl` v1 tier, the fluent `ccl::v2` tier, the
+//! multi-backend sharded scheduler and the native parallel-kernel tier
+//! — timing each cell and checking its output **bit-for-bit** against
+//! the host oracle. Any divergence is a correctness bug and fails the
+//! run (CI gates on it).
 //!
 //! Emits two artifacts:
 //! * `results/workloads.md` — the human table;
@@ -24,7 +25,7 @@ use crate::workload::{
 /// trend tooling can dispatch.
 pub const SCHEMA: &str = "cf4rs-bench-workloads/1";
 
-const PATHS: [&str; 4] = ["rawcl", "ccl-v1", "ccl-v2", "sharded"];
+const PATHS: [&str; 5] = ["rawcl", "ccl-v1", "ccl-v2", "sharded", "native"];
 
 /// One (workload × path) cell.
 struct Cell {
@@ -66,7 +67,8 @@ fn bench_workload<W: Workload + Clone>(
         // The raw path runs on a simulated device (exercising the
         // queue-worker reference kernels); v1/v2 run on the native PJRT
         // device (exercising the HLO interpreter); the sharded path
-        // spans every backend. Identical bytes from all of them is the
+        // spans every backend; the native path runs the banded
+        // worker-pool tier. Identical bytes from all of them is the
         // cross-validation.
         ("rawcl", Box::new(|| exec::run_raw_path(w, iters, 1))),
         ("ccl-v1", Box::new(|| exec::run_ccl_path(w, iters, 0).map_err(|e| e.to_string()))),
@@ -75,6 +77,7 @@ fn bench_workload<W: Workload + Clone>(
             "sharded",
             Box::new(|| exec::run_sharded_path(w, iters, registry).map_err(|e| e.to_string())),
         ),
+        ("native", Box::new(|| exec::run_native_path(w, iters))),
     ];
 
     for (path, run) in &runners {
@@ -160,8 +163,9 @@ fn render_md(cells: &[Cell], quick: bool) -> String {
     s.push_str(
         "\nEvery path executes the same logical kernels (scalar reference \
          kernels on simulated devices, the HLO interpreter on the native \
-         device, both under the sharded scheduler), so timing differences \
-         are fair game but byte differences are bugs.\n",
+         device, both under the sharded scheduler, and the banded native \
+         worker pool), so timing differences are fair game but byte \
+         differences are bugs.\n",
     );
     for c in cells {
         if let Some(e) = &c.error {
@@ -266,7 +270,7 @@ mod tests {
 
     #[test]
     fn quick_matrix_is_fully_validated() {
-        // The acceptance-criteria invariant: 5 workloads × 4 paths, all
+        // The acceptance-criteria invariant: 5 workloads × 5 paths, all
         // bit-identical. (Small sizes keep this test fast; the CI
         // bench-gate runs the real --quick matrix end-to-end.)
         let registry = BackendRegistry::with_default_backends();
@@ -276,7 +280,7 @@ mod tests {
         bench_workload(&ReduceWorkload::new(512), 1, 1, &registry, &mut cells);
         bench_workload(&StencilWorkload::new(12, 8), 2, 1, &registry, &mut cells);
         bench_workload(&MatmulWorkload::new(8), 1, 1, &registry, &mut cells);
-        assert_eq!(cells.len(), 5 * 4);
+        assert_eq!(cells.len(), 5 * 5);
         for c in &cells {
             assert!(
                 c.validated,

@@ -14,8 +14,8 @@
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5` — plus the backend comparison
 //!   (`backends`), the workload × path matrix (`workloads`), the
-//!   service latency/batching cell (`service`) and the adaptive-control
-//!   cell (`adaptive`).
+//!   service latency/batching cell (`service`), the adaptive-control
+//!   cell (`adaptive`) and the native-tier speedup gate (`native`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -43,9 +43,10 @@ fn usage() -> i32 {
          \x20     (--live prints the telemetry dashboard while serving;\n\
          \x20      --adaptive sizes the batch window and shard plan online)\n\
          \x20 bench loc|overhead|figure3|figure5|backends|workloads|service|\n\
-         \x20     adaptive   regenerate paper results, backend comparison,\n\
-         \x20     the (workload x path) matrix, the service cell and the\n\
-         \x20     adaptive-control cell (--quick)"
+         \x20     adaptive|native   regenerate paper results, backend\n\
+         \x20     comparison, the (workload x path) matrix, the service cell,\n\
+         \x20     the adaptive-control cell and the native-vs-interpreter\n\
+         \x20     speedup gate (--quick)"
     );
     2
 }

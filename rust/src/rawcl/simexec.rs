@@ -187,6 +187,41 @@ pub fn stencil5_grid(g: &[f32], out: &mut [f32], h: usize, w: usize) {
     }
 }
 
+/// The 5-point stencil for output rows `[r0, r1)` of an `h × w` grid,
+/// reading the *full* grid (global zero boundary). Each point is
+/// computed by [`stencil5_point`] in the same order as
+/// [`stencil5_grid`], so the concatenation of row bands is bit-identical
+/// to the whole-grid pass — this is what lets a backend split one
+/// stencil launch across worker threads without a halo exchange.
+pub fn stencil5_rows(
+    g: &[f32],
+    out: &mut [f32],
+    h: usize,
+    w: usize,
+    r0: usize,
+    r1: usize,
+) {
+    assert!(g.len() == h * w && r0 <= r1 && r1 <= h && out.len() == (r1 - r0) * w);
+    let at = |r: isize, c: isize| -> f32 {
+        if r < 0 || c < 0 || r as usize >= h || c as usize >= w {
+            0.0
+        } else {
+            g[r as usize * w + c as usize]
+        }
+    };
+    for r in r0 as isize..r1 as isize {
+        for c in 0..w as isize {
+            out[(r as usize - r0) * w + c as usize] = stencil5_point(
+                at(r, c),
+                at(r - 1, c),
+                at(r + 1, c),
+                at(r, c - 1),
+                at(r, c + 1),
+            );
+        }
+    }
+}
+
 /// Byte-level wrapper: stencil `input` (f32 LE grid) into `out`.
 pub fn run_stencil5(input: &[u8], out: &mut [u8], h: usize, w: usize) {
     assert!(input.len() == h * w * 4 && out.len() == h * w * 4);
@@ -332,6 +367,22 @@ mod tests {
         let mut bo = vec![0f32; band.len()];
         stencil5_grid(band, &mut bo, 6, w);
         assert_eq!(&bo[w..5 * w], &whole[3 * w..7 * w], "interior rows bit-identical");
+    }
+
+    #[test]
+    fn stencil_rows_bands_concatenate_to_whole_grid() {
+        let (h, w) = (11usize, 5usize);
+        let g: Vec<f32> = (0..h * w).map(|i| ((i * 17 + 3) % 97) as f32).collect();
+        let mut whole = vec![0f32; h * w];
+        stencil5_grid(&g, &mut whole, h, w);
+        // Ragged bands on purpose: 0..4, 4..5, 5..11.
+        let mut banded = Vec::new();
+        for (r0, r1) in [(0usize, 4usize), (4, 5), (5, 11)] {
+            let mut band = vec![0f32; (r1 - r0) * w];
+            stencil5_rows(&g, &mut band, h, w, r0, r1);
+            banded.extend_from_slice(&band);
+        }
+        assert_eq!(banded, whole);
     }
 
     #[test]

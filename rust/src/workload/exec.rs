@@ -7,15 +7,20 @@
 //! launch over [`Workload::global_dims`], read the output back and fold
 //! it through [`Workload::merge`]/[`Workload::next_state`]. Every driver
 //! returns the final merged output bytes, which the harness compares
-//! against [`Workload::reference`] and across paths — all four must be
+//! against [`Workload::reference`] and across paths — all five must be
 //! bit-identical.
 //!
 //! * [`run_raw_path`] — the verbose substrate (listings S1-style);
 //! * [`run_ccl_path`] — the `ccl` v1 wrappers (listing S2-style);
 //! * [`run_v2_path`] — the fluent `ccl::v2` session tier;
-//! * [`run_sharded_path`] — the multi-backend work-stealing scheduler.
+//! * [`run_sharded_path`] — the multi-backend work-stealing scheduler;
+//! * [`run_native_path`] — the native parallel-kernel tier
+//!   ([`NativeBackend`]) driven through the uniform [`Backend`]
+//!   contract ([`run_backend_path`] is the same driver over any single
+//!   backend — `bench native` uses it to race the native tier against
+//!   the interpreting PJRT backend on identical command streams).
 
-use crate::backend::BackendRegistry;
+use crate::backend::{Backend, BackendRegistry, NativeBackend};
 use crate::ccl::errors::{CclError, CclResult};
 use crate::ccl::v2::Session;
 use crate::ccl::{self, Arg};
@@ -359,6 +364,66 @@ pub fn run_v2_path(
     }
     sess.finish()?;
     Ok(last)
+}
+
+/// Run a workload on one explicit [`Backend`] through the uniform
+/// contract (compile → alloc/write → enqueue → wait → read), unsharded.
+/// This is the single-backend analogue of the other path drivers: same
+/// command stream on any substrate, so outputs are directly comparable
+/// across backends — `bench native` races [`NativeBackend`] against the
+/// interpreting [`PjrtBackend`](crate::backend::PjrtBackend) with it.
+pub fn run_backend_path(
+    w: &dyn Workload,
+    iters: usize,
+    b: &dyn Backend,
+) -> Result<Vec<u8>, String> {
+    let shard = Shard::whole(w.units());
+    let specs = w.kernels(shard);
+    let mut kernels = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        kernels.push(b.compile(spec).map_err(|e| e.to_string())?);
+    }
+
+    let mut state = w.init_state();
+    let mut last = Vec::new();
+    for iter in 0..iters {
+        let plan = w.plan(shard, iter, &state);
+        let spec = specs[plan.kernel];
+        let kernel = kernels[plan.kernel];
+
+        let mut in_bufs = Vec::with_capacity(plan.inputs.len());
+        for data in &plan.inputs {
+            let buf = b.alloc(data.len()).map_err(|e| e.to_string())?;
+            b.write(buf, 0, data).map_err(|e| e.to_string())?;
+            in_bufs.push(buf);
+        }
+        let out_buf = b.alloc(plan.out_bytes).map_err(|e| e.to_string())?;
+        let args = spec.launch_args(&in_bufs, out_buf, &plan.scalars);
+        let ev = b.enqueue(kernel, &args, None).map_err(|e| e.to_string())?;
+        b.wait(ev).map_err(|e| e.to_string())?;
+        let mut out = vec![0u8; plan.out_bytes];
+        b.read(out_buf, 0, &mut out).map_err(|e| e.to_string())?;
+        for buf in in_bufs {
+            b.free(buf);
+        }
+        b.free(out_buf);
+
+        let merged = w.merge(&[shard], &[out]);
+        if iter + 1 == iters {
+            last = merged;
+        } else {
+            state = w.next_state(state, merged);
+        }
+    }
+    Ok(last)
+}
+
+/// Run a workload on the native parallel-kernel tier — a fresh
+/// [`NativeBackend`] (worker pool and all) driven by
+/// [`run_backend_path`].
+pub fn run_native_path(w: &dyn Workload, iters: usize) -> Result<Vec<u8>, String> {
+    let b = NativeBackend::native().map_err(|e| e.to_string())?;
+    run_backend_path(w, iters, &b)
 }
 
 /// Run a workload through the multi-backend work-stealing scheduler.

@@ -26,13 +26,13 @@ fn rng_stream(b: &dyn Backend, n: usize, iters: usize, seed_offset: u64) -> Vec<
     let mut host = vec![0u8; bytes];
     let mut stream = Vec::with_capacity(bytes * iters);
 
-    let ev = b.enqueue(k_init, &[LaunchArg::Buf(front)]).unwrap();
+    let ev = b.enqueue(k_init, &[LaunchArg::Buf(front)], None).unwrap();
     b.wait(ev).unwrap();
     b.read(front, 0, &mut host).unwrap();
     stream.extend_from_slice(&host);
     for _ in 1..iters {
         let ev = b
-            .enqueue(k_step, &[LaunchArg::Buf(front), LaunchArg::Buf(back)])
+            .enqueue(k_step, &[LaunchArg::Buf(front), LaunchArg::Buf(back)], None)
             .unwrap();
         b.wait(ev).unwrap();
         b.read(back, 0, &mut host).unwrap();
@@ -206,8 +206,13 @@ impl Backend for EchoBackend {
         self.inner.read(buf, offset, out)
     }
 
-    fn enqueue(&self, kernel: KernelId, args: &[LaunchArg]) -> BackendResult<EventId> {
-        self.inner.enqueue(kernel, args)
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
+        self.inner.enqueue(kernel, args, tag)
     }
 
     fn wait(&self, ev: EventId) -> BackendResult<()> {

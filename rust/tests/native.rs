@@ -1,0 +1,281 @@
+//! Native-tier integration tests: the banded worker-pool backend vs the
+//! host reference kernels for every kernel family, at fuzzed shapes
+//! (1-element problems, band-non-divisible sizes, m ≠ n grids), driven
+//! through the uniform `Backend` trait exactly as the scheduler and the
+//! service drive it — plus cross-checks against the interpreting PJRT
+//! backend on identical command streams.
+
+use cf4rs::backend::{Backend, CompileSpec, NativeBackend, PjrtBackend};
+use cf4rs::rawcl::simexec;
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+
+/// Deterministic case generator (the repo's standard no-dependency
+/// fuzzer: the paper's own xorshift PRNG).
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+
+    /// A small deterministic f32 (exactly representable arithmetic so
+    /// bit-identity across backends is a fair requirement).
+    fn f32(&mut self) -> f32 {
+        (self.next_u64() % 512) as f32 / 8.0 - 30.0
+    }
+
+    fn f32_bytes(&mut self, count: usize) -> Vec<u8> {
+        (0..count).flat_map(|_| self.f32().to_le_bytes()).collect()
+    }
+
+    fn u64_bytes(&mut self, count: usize) -> Vec<u8> {
+        (0..count).flat_map(|_| self.next_u64().to_le_bytes()).collect()
+    }
+}
+
+/// Compile and run one kernel launch through the trait: alloc + write
+/// every input per the spec's buffer layout, enqueue, wait, read back.
+fn run_kernel(
+    b: &dyn Backend,
+    spec: &CompileSpec,
+    inputs: &[Vec<u8>],
+    scalars: &[f32],
+) -> Vec<u8> {
+    let (in_layout, out_bytes) = spec.buffer_layout();
+    assert_eq!(in_layout.len(), inputs.len(), "test drives the ABI wrong");
+    for (want, data) in in_layout.iter().zip(inputs) {
+        assert_eq!(*want, data.len(), "test drives the ABI wrong");
+    }
+    let kernel = b.compile(spec).unwrap();
+    let mut bufs = Vec::with_capacity(inputs.len());
+    for data in inputs {
+        let buf = b.alloc(data.len()).unwrap();
+        b.write(buf, 0, data).unwrap();
+        bufs.push(buf);
+    }
+    let out = b.alloc(out_bytes).unwrap();
+    let args = spec.launch_args(&bufs, out, scalars);
+    let ev = b.enqueue(kernel, &args, None).unwrap();
+    b.wait(ev).unwrap();
+    let mut host = vec![0u8; out_bytes];
+    b.read(out, 0, &mut host).unwrap();
+    for buf in bufs {
+        b.free(buf);
+    }
+    b.free(out);
+    host
+}
+
+/// Run the same launch on the native tier and the interpreter; both must
+/// equal `reference` (and therefore each other) bit-for-bit.
+fn assert_native_matches(
+    spec: &CompileSpec,
+    inputs: &[Vec<u8>],
+    scalars: &[f32],
+    reference: &[u8],
+    what: &str,
+) {
+    let native = NativeBackend::native().unwrap();
+    let pjrt = PjrtBackend::native().unwrap();
+    let got = run_kernel(&native, spec, inputs, scalars);
+    assert_eq!(got, reference, "{what}: native tier diverged from the host reference");
+    let interp = run_kernel(&pjrt, spec, inputs, scalars);
+    assert_eq!(got, interp, "{what}: native tier diverged from the interpreter");
+}
+
+/// Fuzzed sizes stressing the band planner: 1-element problems, sizes
+/// below / at / just past the minimum band, and band-non-divisible
+/// primes well above it.
+fn fuzzed_sizes(g: &mut Gen) -> Vec<usize> {
+    let mut sizes = vec![1, 7, 1023, 1024, 1025, 4097];
+    sizes.push(g.range(2, 1024) as usize);
+    sizes.push(g.range(1025, 9001) as usize);
+    sizes
+}
+
+#[test]
+fn fuzz_prng_init_and_multi_step_match_reference() {
+    for case in 0..4u64 {
+        let mut g = Gen::new(0xD1CE + case);
+        for n in fuzzed_sizes(&mut g) {
+            let gid0 = g.range(0, 100_000);
+            let k = g.range(1, 5) as usize;
+
+            let mut state = vec![0u8; n * 8];
+            simexec::run_init_from(gid0, &mut state);
+            assert_native_matches(
+                &CompileSpec::init_at(n, gid0),
+                &[],
+                &[],
+                &state,
+                &format!("init n={n} gid0={gid0}"),
+            );
+
+            let mut next = vec![0u8; n * 8];
+            simexec::run_rng(&state, &mut next, k);
+            assert_native_matches(
+                &CompileSpec::multi_step(n, k),
+                &[state],
+                &[],
+                &next,
+                &format!("multi_step n={n} k={k}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_vecadd_and_saxpy_match_reference() {
+    for case in 0..4u64 {
+        let mut g = Gen::new(0xFACADE + case);
+        for n in fuzzed_sizes(&mut g) {
+            let x = g.f32_bytes(n);
+            let y = g.f32_bytes(n);
+            let a = g.f32();
+
+            let mut sum = vec![0u8; n * 4];
+            simexec::run_vecadd(&x, &y, &mut sum);
+            assert_native_matches(
+                &CompileSpec::vecadd(n),
+                &[x.clone(), y.clone()],
+                &[],
+                &sum,
+                &format!("vecadd n={n}"),
+            );
+
+            let mut sax = vec![0u8; n * 4];
+            simexec::run_saxpy(a, &x, &y, &mut sax);
+            assert_native_matches(
+                &CompileSpec::saxpy(n),
+                &[x, y],
+                &[a],
+                &sax,
+                &format!("saxpy n={n} a={a}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_reduce_matches_reference_across_band_splits() {
+    for case in 0..4u64 {
+        let mut g = Gen::new(0x5EED + case);
+        for n in fuzzed_sizes(&mut g) {
+            let input = g.u64_bytes(n);
+            let mut expect = vec![0u8; 8];
+            simexec::run_reduce(&input, &mut expect);
+            assert_native_matches(
+                &CompileSpec::reduce(n),
+                &[input],
+                &[],
+                &expect,
+                &format!("reduce n={n}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_stencil_matches_reference_on_ragged_grids() {
+    // Non-square (m ≠ n) grids on purpose, including degenerate 1-row /
+    // 1-column strips where every cell is a boundary cell.
+    let shapes: &[(usize, usize)] = &[(1, 1), (1, 17), (23, 1), (3, 5), (37, 19), (64, 33)];
+    for case in 0..3u64 {
+        let mut g = Gen::new(0x57E4 + case);
+        let mut all: Vec<(usize, usize)> = shapes.to_vec();
+        all.push((g.range(2, 80) as usize, g.range(2, 80) as usize));
+        for &(rows, cols) in &all {
+            let grid = g.f32_bytes(rows * cols);
+            let mut expect = vec![0u8; rows * cols * 4];
+            simexec::run_stencil5(&grid, &mut expect, rows, cols);
+            assert_native_matches(
+                &CompileSpec::stencil5(rows, cols),
+                &[grid],
+                &[],
+                &expect,
+                &format!("stencil5 {rows}x{cols}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_matmul_matches_reference_on_rectangular_bands() {
+    // rows ≠ d exercises the row-band × square-B shape the sharded
+    // scheduler produces.
+    let shapes: &[(usize, usize)] = &[(1, 1), (1, 9), (17, 4), (5, 23), (40, 11)];
+    for case in 0..3u64 {
+        let mut g = Gen::new(0xAB1E + case);
+        let mut all: Vec<(usize, usize)> = shapes.to_vec();
+        all.push((g.range(1, 48) as usize, g.range(1, 32) as usize));
+        for &(rows, d) in &all {
+            let a = g.f32_bytes(rows * d);
+            let b = g.f32_bytes(d * d);
+            let mut expect = vec![0u8; rows * d * 4];
+            simexec::run_matmul(&a, &b, &mut expect, rows, d);
+            assert_native_matches(
+                &CompileSpec::matmul(rows, d),
+                &[a, b],
+                &[],
+                &expect,
+                &format!("matmul rows={rows} d={d}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn native_rng_stream_is_bit_identical_to_interpreter_stream() {
+    // The full front/back-buffer command stream (compile once, many
+    // enqueues, buffer reuse) — the exact shape `run_backend_path` and
+    // the scheduler drive — must agree across tiers word-for-word.
+    let (n, iters) = (4099usize, 5usize);
+    let stream = |b: &dyn Backend| -> Vec<u8> {
+        let k_init = b.compile(&CompileSpec::init(n)).unwrap();
+        let k_step = b.compile(&CompileSpec::step(n)).unwrap();
+        let front = b.alloc(n * 8).unwrap();
+        let back = b.alloc(n * 8).unwrap();
+        let mut host = vec![0u8; n * 8];
+        let mut all = Vec::new();
+        let ev = b
+            .enqueue(k_init, &CompileSpec::init(n).launch_args(&[], front, &[]), None)
+            .unwrap();
+        b.wait(ev).unwrap();
+        b.read(front, 0, &mut host).unwrap();
+        all.extend_from_slice(&host);
+        let (mut front, mut back) = (front, back);
+        for _ in 1..iters {
+            let spec = CompileSpec::step(n);
+            let ev = b
+                .enqueue(k_step, &spec.launch_args(&[front], back, &[]), None)
+                .unwrap();
+            b.wait(ev).unwrap();
+            b.read(back, 0, &mut host).unwrap();
+            all.extend_from_slice(&host);
+            std::mem::swap(&mut front, &mut back);
+        }
+        b.free(front);
+        b.free(back);
+        all
+    };
+    let native = NativeBackend::native().unwrap();
+    let pjrt = PjrtBackend::native().unwrap();
+    let a = stream(&native);
+    let b = stream(&pjrt);
+    assert_eq!(a.len(), n * 8 * iters);
+    assert_eq!(a, b, "native vs interpreter stream divergence");
+    // Spot-check the first word against the raw hash.
+    let w0 = u64::from_le_bytes(a[..8].try_into().unwrap());
+    assert_eq!(w0, init_seed(0));
+}

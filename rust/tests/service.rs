@@ -409,7 +409,7 @@ fn client_panic_mid_flight_leaves_the_service_healthy() {
 }
 
 // ---------------------------------------------------------------------------
-// Per-batch event tagging round-trips through the TSV export
+// Per-request event tagging round-trips through the TSV export
 // ---------------------------------------------------------------------------
 
 #[test]
@@ -418,38 +418,54 @@ fn profiled_batches_are_tagged_and_roundtrip_through_tsv() {
 
     let reg = Arc::new(BackendRegistry::with_default_backends());
     let svc = ComputeService::start(reg, ServiceOpts { profile: true, ..opts() });
-    // Three serial requests → three distinct batches.
+    // Three serial requests → three distinct batches (and request ids).
+    let mut req_ids = Vec::new();
     for i in 0..3usize {
         let resp = svc
             .submit(WorkloadRequest::new(SaxpyWorkload::new(2048 + 512 * i, 2.0)).iters(2))
             .unwrap()
             .wait_timeout(WAIT)
             .expect("answered");
-        // The per-response batch slice is tagged with this batch's id.
+        // The per-response slice is exact: its kernel spans live under
+        // this request's own `svc.req-<id>.<backend>` queues, not a
+        // whole-batch blur.
         let prof = resp.prof.expect("profiling was on");
         assert!(
-            prof.export.contains(&format!("svc.batch-{}.", prof.batch_id)),
-            "batch export must carry its own tag:\n{}",
+            prof.export.contains(&format!("svc.req-{}.", resp.req_id)),
+            "response export must carry its own request tag:\n{}",
             prof.export
         );
+        req_ids.push(resp.req_id);
     }
+    assert_eq!(
+        req_ids.iter().collect::<std::collections::BTreeSet<_>>().len(),
+        3,
+        "request ids must be distinct: {req_ids:?}"
+    );
     let report = svc.shutdown();
     let tsv = report.prof_export.expect("profiled service exports");
 
     // The service-wide export re-parses through the PR 4
-    // escape/unescape path with every span attributed to a batch.
+    // escape/unescape path with every span attributed to a request
+    // (kernel launches) or to its batch (transfers and other untagged
+    // spans).
     let infos = parse_tsv(&tsv).expect("export must re-parse");
     assert!(!infos.is_empty());
     assert!(
-        infos.iter().all(|i| i.queue.starts_with("svc.batch-")),
-        "every span must carry a batch tag"
+        infos
+            .iter()
+            .all(|i| i.queue.starts_with("svc.req-") || i.queue.starts_with("svc.batch-")),
+        "every span must carry a request or batch tag"
     );
-    let batches: std::collections::BTreeSet<&str> = infos
-        .iter()
-        .map(|i| i.queue.split('.').nth(1).expect("svc.batch-<n>.<backend>"))
-        .collect();
-    assert!(
-        batches.len() >= 3,
-        "three serial requests must span three batches: {batches:?}"
-    );
+    // The per-request regression: each request's kernel spans round-trip
+    // through parse_tsv under that request's queue prefix.
+    for id in req_ids {
+        let prefix = format!("svc.req-{id}.");
+        assert!(
+            infos
+                .iter()
+                .any(|i| i.queue.starts_with(&prefix) && i.name.contains("SAXPY_KERNEL")),
+            "request {id}'s kernel spans must round-trip under {prefix}<backend>:\n{tsv}"
+        );
+    }
 }

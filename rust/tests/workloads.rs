@@ -1,7 +1,8 @@
 //! Workload-trait integration tests: every workload through every
-//! execution path, bit-identical; sharded merge equals single-device
-//! order at arbitrary chunk counts (property-tested with the repo's
-//! deterministic xorshift fuzzer); scheduler failure/shutdown paths.
+//! execution path (including the native parallel-kernel tier),
+//! bit-identical; sharded merge equals single-device order at arbitrary
+//! chunk counts (property-tested with the repo's deterministic xorshift
+//! fuzzer); scheduler failure/shutdown paths.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -19,7 +20,7 @@ use cf4rs::workload::{
     StencilWorkload, Workload,
 };
 
-/// Run all four paths and assert each equals the host oracle (and thus
+/// Run all five paths and assert each equals the host oracle (and thus
 /// each other).
 fn assert_paths_bit_identical<W: Workload + Clone>(w: &W, iters: usize) {
     let registry = BackendRegistry::with_default_backends();
@@ -32,6 +33,8 @@ fn assert_paths_bit_identical<W: Workload + Clone>(w: &W, iters: usize) {
     assert_eq!(v2, reference, "{}: ccl v2 diverged", w.name());
     let sharded = exec::run_sharded_path(w, iters, &registry).expect("sharded path");
     assert_eq!(sharded, reference, "{}: sharded diverged", w.name());
+    let native = exec::run_native_path(w, iters).expect("native path");
+    assert_eq!(native, reference, "{}: native tier diverged", w.name());
 }
 
 #[test]
@@ -176,7 +179,12 @@ impl Backend for FailingBackend {
         self.inner.read(buf, offset, out)
     }
 
-    fn enqueue(&self, _kernel: KernelId, _args: &[LaunchArg]) -> BackendResult<EventId> {
+    fn enqueue(
+        &self,
+        _kernel: KernelId,
+        _args: &[LaunchArg],
+        _tag: Option<&str>,
+    ) -> BackendResult<EventId> {
         self.enqueues.fetch_add(1, Ordering::Relaxed);
         Err(BackendError::new("custom:failing", "injected launch failure"))
     }
