@@ -1,0 +1,197 @@
+//! [`AsymmetricMemBackend`] — a wrapper that enforces a per-device
+//! memory cap, modeling a zoo of devices with very different RAM.
+//!
+//! Heterogeneous rigs rarely fail on speed first — they fail on the
+//! small device's memory. This wrapper makes that failure honest:
+//! every `alloc` is charged against a byte budget, and an allocation
+//! that would exceed the cap fails with a typed "out of device
+//! memory" error instead of silently succeeding. The matching
+//! capability descriptor advertises the cap
+//! ([`Capabilities::mem_limit_bytes`](super::plugin::Capabilities)),
+//! which capacity-aware planning uses to keep this backend's shard
+//! small enough to fit — so in a well-planned run the cap is never
+//! hit, and in a badly planned one the scheduler's retry path moves
+//! the too-big shard to a roomier device.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::types::DeviceId;
+
+use super::{
+    Backend, BackendError, BackendResult, BufId, CompileSpec, EventId, EventTimes,
+    KernelId, LaunchArg, TimelineEntry,
+};
+
+#[derive(Default)]
+struct MemState {
+    /// Live allocation sizes by buffer id.
+    live: HashMap<u64, usize>,
+    in_use: usize,
+    peak: usize,
+    rejected: u64,
+}
+
+/// See the [module docs](self).
+pub struct AsymmetricMemBackend {
+    inner: Arc<dyn Backend>,
+    name: String,
+    cap_bytes: usize,
+    state: Mutex<MemState>,
+}
+
+impl AsymmetricMemBackend {
+    /// Wrap `inner` with a `cap_bytes` device-memory budget. The cap is
+    /// baked into the name so differently-sized wrappers over one
+    /// device stay distinguishable in a registry.
+    pub fn new(inner: Arc<dyn Backend>, cap_bytes: usize) -> Self {
+        let name = format!("asym-{}k:{}", cap_bytes / 1024, inner.name());
+        Self { inner, name, cap_bytes, state: Mutex::new(MemState::default()) }
+    }
+
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes
+    }
+
+    /// Currently allocated bytes.
+    pub fn in_use(&self) -> usize {
+        self.state.lock().unwrap().in_use
+    }
+
+    /// High-water mark of allocated bytes.
+    pub fn peak_bytes(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+
+    /// Allocations rejected by the cap so far.
+    pub fn rejected_allocs(&self) -> u64 {
+        self.state.lock().unwrap().rejected
+    }
+}
+
+impl Backend for AsymmetricMemBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.inner.device_id()
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        self.inner.compile(spec)
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.in_use.saturating_add(bytes) > self.cap_bytes {
+                st.rejected += 1;
+                return Err(BackendError::new(
+                    &self.name,
+                    format!(
+                        "out of device memory: requested {bytes} B with {} of {} B in use",
+                        st.in_use, self.cap_bytes
+                    ),
+                ));
+            }
+        }
+        let buf = self.inner.alloc(bytes)?;
+        let mut st = self.state.lock().unwrap();
+        st.live.insert(buf.0, bytes);
+        st.in_use += bytes;
+        st.peak = st.peak.max(st.in_use);
+        Ok(buf)
+    }
+
+    fn free(&self, buf: BufId) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(bytes) = st.live.remove(&buf.0) {
+            st.in_use -= bytes;
+        }
+        drop(st);
+        self.inner.free(buf);
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        self.inner.write(buf, offset, data)
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        self.inner.read(buf, offset, out)
+    }
+
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
+        self.inner.enqueue(kernel, args, tag)
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        self.inner.wait(ev)
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        self.inner.timestamps(ev)
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        self.inner.drain_timeline()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+
+    fn capped(cap: usize) -> AsymmetricMemBackend {
+        let inner: Arc<dyn Backend> = Arc::new(SimBackend::new(DeviceId(1)).unwrap());
+        AsymmetricMemBackend::new(inner, cap)
+    }
+
+    #[test]
+    fn alloc_respects_the_cap_and_free_restores_budget() {
+        let b = capped(1024);
+        assert!(b.name().starts_with("asym-1k:sim:"));
+        let a = b.alloc(700).unwrap();
+        assert_eq!(b.in_use(), 700);
+        let err = b.alloc(400).unwrap_err();
+        assert!(err.to_string().contains("out of device memory"), "{err}");
+        assert_eq!(b.rejected_allocs(), 1);
+        let c = b.alloc(300).unwrap();
+        assert_eq!(b.in_use(), 1000);
+        assert_eq!(b.peak_bytes(), 1000);
+        b.free(a);
+        assert_eq!(b.in_use(), 300);
+        let d = b.alloc(700).unwrap();
+        b.free(c);
+        b.free(d);
+        assert_eq!(b.in_use(), 0);
+        assert_eq!(b.peak_bytes(), 1000, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn within_budget_execution_is_bit_identical() {
+        let b = capped(1 << 20);
+        let n = 512;
+        let k = b.compile(&CompileSpec::init(n)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        let ev = b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
+        b.wait(ev).unwrap();
+        let mut host = vec![0u8; n * 8];
+        b.read(buf, 0, &mut host).unwrap();
+        let w0 = u64::from_le_bytes(host[..8].try_into().unwrap());
+        assert_eq!(w0, crate::rawcl::simexec::init_seed(0));
+        b.free(buf);
+        assert_eq!(b.in_use(), 0);
+    }
+}

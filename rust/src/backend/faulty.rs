@@ -1,0 +1,328 @@
+//! [`FaultyBackend`] — deterministic seeded fault injection for
+//! chaos-testing the scheduler's retry/quarantine path.
+//!
+//! A wrapper in the [`ThrottledBackend`](super::ThrottledBackend) mold:
+//! the inner backend does the real computing, the wrapper injects
+//! faults drawn from the paper's own xorshift PRNG, so a given seed
+//! replays the same fault pattern for the same call sequence. Three
+//! fault classes, all tunable per [`FaultSpec`]:
+//!
+//! * **enqueue errors** — a launch fails before reaching the inner
+//!   backend (no side effects, safe to retry elsewhere);
+//! * **slow launches** — a fixed extra latency per launch (a degraded
+//!   device the planner should learn to underweight);
+//! * **wrong-once reads** — a read-back returns corrupted host bytes
+//!   while the device buffer stays intact, so a second read disagrees
+//!   with the first; the scheduler's `verify_reads` double-read is the
+//!   countermeasure. The corruption position/value derive from a fresh
+//!   PRNG draw, so two corrupted reads of one buffer (almost surely)
+//!   differ — verification cannot be fooled by symmetric corruption.
+//!
+//! `fail_after` turns the device into a *dying* one: the first few
+//! launches succeed, every later one fails — the deterministic trigger
+//! for quarantine tests.
+
+use std::sync::{Arc, Mutex};
+
+use crate::rawcl::clock;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::simexec::{init_seed, xorshift};
+use crate::rawcl::types::DeviceId;
+
+use super::{
+    Backend, BackendError, BackendResult, BufId, CompileSpec, EventId, EventTimes,
+    KernelId, LaunchArg, TimelineEntry,
+};
+
+/// Fault-injection knobs. Rates are per-mille (0..=1000) per call.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// PRNG seed — the same seed replays the same fault pattern for
+    /// the same call sequence.
+    pub seed: u64,
+    /// Probability (‰) that an `enqueue` fails before launching.
+    pub enqueue_error_permille: u16,
+    /// Probability (‰) that a `read` corrupts its host bytes (the
+    /// device buffer stays intact — a "wrong once" result).
+    pub corrupt_read_permille: u16,
+    /// Extra real latency added to every successful launch, ns.
+    pub slow_launch_ns: u64,
+    /// After this many successful enqueues, every further one fails —
+    /// a dying device (deterministic quarantine trigger).
+    pub fail_after: Option<u64>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0x5EED_CAFE,
+            enqueue_error_permille: 100,
+            corrupt_read_permille: 50,
+            slow_launch_ns: 0,
+            fail_after: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// A flaky-but-alive device: occasional enqueue errors, occasional
+    /// wrong-once reads, slightly slow launches.
+    pub fn flaky(seed: u64) -> Self {
+        Self {
+            seed,
+            enqueue_error_permille: 180,
+            corrupt_read_permille: 120,
+            slow_launch_ns: 10_000,
+            ..Self::default()
+        }
+    }
+
+    /// A dying device: `healthy_launches` enqueues succeed, then every
+    /// launch fails permanently.
+    pub fn dying(healthy_launches: u64) -> Self {
+        Self {
+            seed: 0xD1E5,
+            enqueue_error_permille: 0,
+            corrupt_read_permille: 0,
+            slow_launch_ns: 0,
+            fail_after: Some(healthy_launches),
+        }
+    }
+}
+
+/// Injected-fault tallies (what tests and the zoo bench assert on).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub enqueue_errors: u64,
+    pub corrupted_reads: u64,
+    pub slow_launches: u64,
+}
+
+struct FaultState {
+    rng: u64,
+    enqueues: u64,
+    counts: FaultCounts,
+}
+
+/// See the [module docs](self).
+pub struct FaultyBackend {
+    inner: Arc<dyn Backend>,
+    name: String,
+    spec: FaultSpec,
+    state: Mutex<FaultState>,
+}
+
+impl FaultyBackend {
+    /// Wrap `inner` with the fault pattern seeded by `spec.seed`. The
+    /// seed is baked into the name so several faulty wrappers over one
+    /// device stay distinguishable in a registry.
+    pub fn new(inner: Arc<dyn Backend>, spec: FaultSpec) -> Self {
+        let name = format!("faulty-{:x}:{}", spec.seed, inner.name());
+        Self {
+            inner,
+            name,
+            spec,
+            state: Mutex::new(FaultState {
+                rng: init_seed(spec.seed as u32) | 1,
+                enqueues: 0,
+                counts: FaultCounts::default(),
+            }),
+        }
+    }
+
+    /// Injected-fault tallies so far.
+    pub fn counts(&self) -> FaultCounts {
+        self.state.lock().unwrap().counts
+    }
+
+    /// Draw the next PRNG word (advances the fault stream).
+    fn draw(st: &mut FaultState) -> u64 {
+        st.rng = xorshift(st.rng);
+        st.rng
+    }
+
+    /// Bernoulli draw at `permille` ‰.
+    fn hit(st: &mut FaultState, permille: u16) -> bool {
+        permille > 0 && Self::draw(st) % 1000 < u64::from(permille)
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn kind(&self) -> BackendKind {
+        self.inner.kind()
+    }
+
+    fn device_id(&self) -> DeviceId {
+        self.inner.device_id()
+    }
+
+    fn compile(&self, spec: &CompileSpec) -> BackendResult<KernelId> {
+        self.inner.compile(spec)
+    }
+
+    fn alloc(&self, bytes: usize) -> BackendResult<BufId> {
+        self.inner.alloc(bytes)
+    }
+
+    fn free(&self, buf: BufId) {
+        self.inner.free(buf);
+    }
+
+    fn write(&self, buf: BufId, offset: usize, data: &[u8]) -> BackendResult<EventId> {
+        self.inner.write(buf, offset, data)
+    }
+
+    fn read(&self, buf: BufId, offset: usize, out: &mut [u8]) -> BackendResult<EventId> {
+        let ev = self.inner.read(buf, offset, out)?;
+        let corrupt = {
+            let mut st = self.state.lock().unwrap();
+            if !out.is_empty() && Self::hit(&mut st, self.spec.corrupt_read_permille) {
+                let nth = st.counts.corrupted_reads;
+                st.counts.corrupted_reads += 1;
+                Some((Self::draw(&mut st), nth))
+            } else {
+                None
+            }
+        };
+        if let Some((word, nth)) = corrupt {
+            // Flip one byte at a PRNG-chosen position. The device
+            // buffer is untouched ("wrong once"), and the XOR value
+            // encodes the corruption ordinal, so two consecutive
+            // corruptions of one buffer can never produce identical
+            // bytes — a double-read verifier always sees them.
+            let pos = (word as usize) % out.len();
+            out[pos] ^= ((nth as u8) << 1) | 1;
+        }
+        Ok(ev)
+    }
+
+    fn enqueue(
+        &self,
+        kernel: KernelId,
+        args: &[LaunchArg],
+        tag: Option<&str>,
+    ) -> BackendResult<EventId> {
+        let slow = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(limit) = self.spec.fail_after {
+                if st.enqueues >= limit {
+                    st.counts.enqueue_errors += 1;
+                    return Err(BackendError::new(
+                        &self.name,
+                        "injected fault: device died (fail_after exhausted)",
+                    ));
+                }
+            }
+            if Self::hit(&mut st, self.spec.enqueue_error_permille) {
+                st.counts.enqueue_errors += 1;
+                return Err(BackendError::new(&self.name, "injected fault: enqueue failed"));
+            }
+            st.enqueues += 1;
+            if self.spec.slow_launch_ns > 0 {
+                st.counts.slow_launches += 1;
+            }
+            self.spec.slow_launch_ns
+        };
+        if slow > 0 {
+            clock::precise_sleep(slow);
+        }
+        self.inner.enqueue(kernel, args, tag)
+    }
+
+    fn wait(&self, ev: EventId) -> BackendResult<()> {
+        self.inner.wait(ev)
+    }
+
+    fn timestamps(&self, ev: EventId) -> BackendResult<EventTimes> {
+        self.inner.timestamps(ev)
+    }
+
+    fn drain_timeline(&self) -> Vec<TimelineEntry> {
+        self.inner.drain_timeline()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::SimBackend;
+
+    fn sim() -> Arc<dyn Backend> {
+        Arc::new(SimBackend::new(DeviceId(1)).unwrap())
+    }
+
+    /// Drive one fixed call sequence and return the fault tallies.
+    fn drive(spec: FaultSpec) -> FaultCounts {
+        let b = FaultyBackend::new(sim(), spec);
+        let n = 256;
+        let k = b.compile(&CompileSpec::init(n)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        let mut host = vec![0u8; n * 8];
+        for _ in 0..50 {
+            if let Ok(ev) = b.enqueue(k, &[LaunchArg::Buf(buf)], None) {
+                b.wait(ev).unwrap();
+            }
+            let _ = b.read(buf, 0, &mut host);
+        }
+        b.free(buf);
+        b.counts()
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_fault_pattern() {
+        let spec = FaultSpec { seed: 0xFA0175, ..FaultSpec::flaky(0xFA0175) };
+        let a = drive(spec);
+        let b = drive(spec);
+        assert_eq!(a, b, "fault injection must be deterministic per seed");
+        assert!(a.enqueue_errors > 0, "50 draws at 180‰ should fault: {a:?}");
+        assert!(a.corrupted_reads > 0, "50 draws at 120‰ should corrupt: {a:?}");
+    }
+
+    #[test]
+    fn corrupted_read_is_wrong_once_and_detectable() {
+        let spec = FaultSpec {
+            seed: 7,
+            enqueue_error_permille: 0,
+            corrupt_read_permille: 1000, // corrupt every read
+            slow_launch_ns: 0,
+            fail_after: None,
+        };
+        let b = FaultyBackend::new(sim(), spec);
+        let n = 128;
+        let k = b.compile(&CompileSpec::init(n)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        let ev = b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap();
+        b.wait(ev).unwrap();
+        let mut first = vec![0u8; n * 8];
+        let mut second = vec![0u8; n * 8];
+        b.read(buf, 0, &mut first).unwrap();
+        b.read(buf, 0, &mut second).unwrap();
+        // Both reads are corrupted, but by different draws — a
+        // double-read verifier always sees the disagreement.
+        assert_ne!(first, second, "two corrupted reads must disagree");
+        assert_eq!(b.counts().corrupted_reads, 2);
+        b.free(buf);
+    }
+
+    #[test]
+    fn dying_backend_fails_after_its_healthy_launches() {
+        let b = FaultyBackend::new(sim(), FaultSpec::dying(2));
+        let n = 64;
+        let k = b.compile(&CompileSpec::init(n)).unwrap();
+        let buf = b.alloc(n * 8).unwrap();
+        for i in 0..2 {
+            let ev = b.enqueue(k, &[LaunchArg::Buf(buf)], None);
+            assert!(ev.is_ok(), "launch {i} should still be healthy");
+        }
+        for _ in 0..3 {
+            let err = b.enqueue(k, &[LaunchArg::Buf(buf)], None).unwrap_err();
+            assert!(err.to_string().contains("device died"), "{err}");
+        }
+        assert_eq!(b.counts().enqueue_errors, 3);
+        b.free(buf);
+    }
+}

@@ -46,15 +46,34 @@
 //! — the scheduler, the selector integration and the harness comparison
 //! table pick it up without any caller changes. See
 //! `rust/tests/backend_compare.rs` for a minimal custom backend.
+//!
+//! The preferred extension point is the **versioned plugin ABI**
+//! ([`plugin`]): declare a [`plugin::PluginDecl`] (ABI stamp +
+//! [`plugin::Capabilities`] + factory), register it in a
+//! [`plugin::PluginRegistry`] (the handshake rejects ABI mismatches),
+//! and attach — capability negotiation instantiates the compatible
+//! subset into a [`BackendRegistry`] whose entries keep their
+//! descriptors. The chaos tier ([`FaultyBackend`],
+//! [`AsymmetricMemBackend`]) plugs in the same way; [`plugin::zoo_plugins`]
+//! composes the stock heterogeneous device zoo.
 
+pub mod asymmetric;
+pub mod faulty;
 pub mod native;
 pub mod pjrt;
+pub mod plugin;
 pub mod registry;
 pub mod sim;
 pub mod throttle;
 
+pub use asymmetric::AsymmetricMemBackend;
+pub use faulty::{FaultCounts, FaultSpec, FaultyBackend};
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
+pub use plugin::{
+    zoo_plugins, zoo_registry, Capabilities, CapabilityError, PluginDecl, PluginError,
+    PluginRegistry, ABI_VERSION,
+};
 pub use registry::BackendRegistry;
 pub use sim::SimBackend;
 pub use throttle::ThrottledBackend;

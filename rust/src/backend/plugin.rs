@@ -1,0 +1,611 @@
+//! The versioned plugin ABI and capability-negotiation layer between
+//! device implementations and the engine.
+//!
+//! PJRT ships devices as opaque plugins behind a versioned C ABI;
+//! EngineCL co-executes heterogeneous devices behind one scheduler.
+//! This module reproduces that contract at cf4rs scale:
+//!
+//! * a plugin is a [`PluginDecl`]: an [`ABI_VERSION`] stamp, a
+//!   [`Capabilities`] descriptor (supported kernel families, preferred
+//!   layout, memory limit, cost hint) and a factory closure — the
+//!   backend itself stays opaque until attach time;
+//! * [`PluginRegistry::register`] is the handshake: ABI mismatches,
+//!   duplicate names and empty capability sets are rejected *before*
+//!   any backend instantiates;
+//! * [`PluginRegistry::attach`] negotiates: plugins whose families
+//!   cover the required set instantiate into a [`BackendRegistry`]
+//!   (each entry keeping its capabilities); the rest are reported in
+//!   the [`AttachOutcome`], never silently dropped.
+//!
+//! Capability descriptors keep paying off after attach: the scheduler
+//! filters dispatches by kernel family (a typed [`CapabilityError`]
+//! instead of a runtime enqueue failure), the compute service seeds
+//! [`ShardPlanner`](crate::coordinator::adaptive::ShardPlanner) speeds
+//! from cost hints (warm-start planning), and advertised memory limits
+//! cap each backend's proportional share.
+//!
+//! The stock device zoo ([`zoo_plugins`]) mixes native, throttled,
+//! fault-injecting and memory-capped backends; `bench zoo` drives the
+//! scheduler's retry/quarantine and capacity-aware planning against it.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::{Arc, RwLock};
+
+use crate::rawcl::device as rawdev;
+use crate::rawcl::kernelspec::KernelKind;
+use crate::rawcl::profile::BackendKind;
+use crate::rawcl::types::DeviceId;
+
+use super::asymmetric::AsymmetricMemBackend;
+use super::faulty::{FaultSpec, FaultyBackend};
+use super::{
+    Backend, BackendRegistry, BackendResult, NativeBackend, SimBackend, ThrottledBackend,
+};
+
+/// The plugin contract version. Bump on any change to the [`Backend`]
+/// trait surface or the capability descriptor; the registration
+/// handshake rejects plugins built against any other version.
+pub const ABI_VERSION: u32 = 1;
+
+/// Every kernel family the framework knows about.
+pub const ALL_KERNEL_FAMILIES: [KernelKind; 8] = [
+    KernelKind::PrngInit,
+    KernelKind::PrngStep,
+    KernelKind::PrngMultiStep,
+    KernelKind::VecAdd,
+    KernelKind::Saxpy,
+    KernelKind::Reduce,
+    KernelKind::Stencil5,
+    KernelKind::Matmul,
+];
+
+/// The data layout a device prefers to receive shards in. Advisory —
+/// the engine ships contiguous bands either way — but surfaced in the
+/// zoo capability table and available to future layout-aware planners.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreferredLayout {
+    /// Flat elementwise ranges (PRNG, saxpy, reduce).
+    Elementwise,
+    /// Contiguous row bands (stencil, matmul).
+    RowBanded,
+    /// No preference.
+    Any,
+}
+
+/// What a backend advertises at registration time: the negotiation
+/// currency of the plugin ABI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Capabilities {
+    /// Kernel families this backend can execute. Dispatching any other
+    /// family to it is a capability error, not a runtime enqueue
+    /// failure.
+    pub kernel_families: BTreeSet<KernelKind>,
+    pub preferred_layout: PreferredLayout,
+    /// Device memory ceiling, if the backend has one. Capacity-aware
+    /// planning caps this backend's proportional share so its shard
+    /// footprint fits.
+    pub mem_limit_bytes: Option<usize>,
+    /// Expected throughput in output bytes per nanosecond — a *prior*
+    /// for the [`ShardPlanner`](crate::coordinator::adaptive::ShardPlanner)
+    /// EWMA, so proportional planning starts warm instead of uniform.
+    pub cost_hint_bytes_per_ns: Option<f64>,
+}
+
+impl Capabilities {
+    /// Every kernel family, no limits, no hints — the descriptor
+    /// assumed for backends registered outside the plugin path.
+    pub fn full() -> Self {
+        Self {
+            kernel_families: ALL_KERNEL_FAMILIES.into_iter().collect(),
+            preferred_layout: PreferredLayout::Any,
+            mem_limit_bytes: None,
+            cost_hint_bytes_per_ns: None,
+        }
+    }
+
+    /// A descriptor supporting exactly `families`.
+    pub fn with_families(families: impl IntoIterator<Item = KernelKind>) -> Self {
+        Self { kernel_families: families.into_iter().collect(), ..Self::full() }
+    }
+
+    pub fn layout(mut self, layout: PreferredLayout) -> Self {
+        self.preferred_layout = layout;
+        self
+    }
+
+    pub fn mem_limit(mut self, bytes: usize) -> Self {
+        self.mem_limit_bytes = Some(bytes);
+        self
+    }
+
+    pub fn cost_hint(mut self, bytes_per_ns: f64) -> Self {
+        self.cost_hint_bytes_per_ns = Some(bytes_per_ns);
+        self
+    }
+
+    pub fn supports(&self, kind: KernelKind) -> bool {
+        self.kernel_families.contains(&kind)
+    }
+
+    /// The subset of `required` this backend cannot execute.
+    pub fn missing(&self, required: &BTreeSet<KernelKind>) -> Vec<KernelKind> {
+        required.iter().copied().filter(|k| !self.supports(*k)).collect()
+    }
+}
+
+/// Why a plugin was turned away at the handshake.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PluginError {
+    /// The plugin was built against a different ABI revision.
+    AbiMismatch { plugin: String, declared: u32, expected: u32 },
+    /// A plugin with this name is already registered.
+    DuplicateName(String),
+    /// The plugin advertises no kernel family at all — it could never
+    /// be dispatched to, so the registration is a bug.
+    EmptyCapabilities(String),
+    /// The factory failed to build the backend at attach time.
+    Instantiate { plugin: String, error: String },
+}
+
+impl fmt::Display for PluginError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::AbiMismatch { plugin, declared, expected } => write!(
+                f,
+                "plugin `{plugin}` declares ABI v{declared}, host expects v{expected}"
+            ),
+            Self::DuplicateName(name) => {
+                write!(f, "plugin `{name}` is already registered")
+            }
+            Self::EmptyCapabilities(name) => {
+                write!(f, "plugin `{name}` advertises no kernel families")
+            }
+            Self::Instantiate { plugin, error } => {
+                write!(f, "plugin `{plugin}` failed to instantiate: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PluginError {}
+
+/// The typed "no backend can run this" error: names every rejected
+/// backend and the families it lacks, so a capability gap surfaces at
+/// plan time instead of as a runtime enqueue failure deep in a worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapabilityError {
+    /// Kernel families the dispatch needs.
+    pub required: Vec<KernelKind>,
+    /// `(backend name, missing families)` for every rejected backend.
+    pub rejected: Vec<(String, Vec<KernelKind>)>,
+}
+
+impl fmt::Display for CapabilityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "no capable backend for kernel families {:?}:", self.required)?;
+        for (name, missing) in &self.rejected {
+            write!(f, " backend `{name}` lacks {missing:?};")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for CapabilityError {}
+
+type Factory = Box<dyn Fn() -> BackendResult<Arc<dyn Backend>> + Send + Sync>;
+
+/// One plugin: name + ABI stamp + capabilities + deferred constructor.
+pub struct PluginDecl {
+    abi_version: u32,
+    name: String,
+    capabilities: Capabilities,
+    factory: Factory,
+}
+
+impl PluginDecl {
+    /// Declare a plugin against the host's current [`ABI_VERSION`].
+    pub fn new<F>(name: impl Into<String>, capabilities: Capabilities, factory: F) -> Self
+    where
+        F: Fn() -> BackendResult<Arc<dyn Backend>> + Send + Sync + 'static,
+    {
+        Self {
+            abi_version: ABI_VERSION,
+            name: name.into(),
+            capabilities,
+            factory: Box::new(factory),
+        }
+    }
+
+    /// Override the declared ABI version (simulates an out-of-date
+    /// plugin; the handshake must reject it).
+    pub fn with_abi_version(mut self, version: u32) -> Self {
+        self.abi_version = version;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn abi_version(&self) -> u32 {
+        self.abi_version
+    }
+
+    pub fn capabilities(&self) -> &Capabilities {
+        &self.capabilities
+    }
+}
+
+impl fmt::Debug for PluginDecl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PluginDecl")
+            .field("abi_version", &self.abi_version)
+            .field("name", &self.name)
+            .field("capabilities", &self.capabilities)
+            .finish_non_exhaustive()
+    }
+}
+
+/// What [`PluginRegistry::attach`] produced: the negotiated backend
+/// registry plus a full account of who made it in and who did not.
+pub struct AttachOutcome {
+    /// Backends that passed negotiation, registered with their
+    /// advertised capabilities.
+    pub registry: BackendRegistry,
+    /// Names of the attached plugins, in registration order.
+    pub attached: Vec<String>,
+    /// `(plugin name, reason)` for every plugin left out.
+    pub rejected: Vec<(String, String)>,
+}
+
+/// The host-side plugin table: registration handshake + negotiated
+/// attach. Deliberately separate from [`BackendRegistry`] — plugins
+/// are *potential* backends; attach instantiates the compatible subset.
+#[derive(Default)]
+pub struct PluginRegistry {
+    plugins: RwLock<Vec<PluginDecl>>,
+}
+
+impl PluginRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The registration handshake. Rejects ABI mismatches, duplicate
+    /// names and empty capability sets; accepted plugins become
+    /// attachable.
+    pub fn register(&self, decl: PluginDecl) -> Result<(), PluginError> {
+        if decl.abi_version != ABI_VERSION {
+            return Err(PluginError::AbiMismatch {
+                plugin: decl.name,
+                declared: decl.abi_version,
+                expected: ABI_VERSION,
+            });
+        }
+        if decl.capabilities.kernel_families.is_empty() {
+            return Err(PluginError::EmptyCapabilities(decl.name));
+        }
+        let mut plugins = self.plugins.write().unwrap();
+        if plugins.iter().any(|p| p.name == decl.name) {
+            return Err(PluginError::DuplicateName(decl.name));
+        }
+        plugins.push(decl);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.plugins.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered plugin names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.plugins.read().unwrap().iter().map(|p| p.name.clone()).collect()
+    }
+
+    /// Negotiate and instantiate. A plugin attaches when its families
+    /// cover `required`; otherwise (or when its factory fails) it lands
+    /// in [`AttachOutcome::rejected`] with the reason.
+    pub fn attach(&self, required: &BTreeSet<KernelKind>) -> AttachOutcome {
+        let registry = BackendRegistry::new();
+        let mut attached = Vec::new();
+        let mut rejected = Vec::new();
+        for decl in self.plugins.read().unwrap().iter() {
+            let missing = decl.capabilities.missing(required);
+            if !missing.is_empty() {
+                rejected.push((
+                    decl.name.clone(),
+                    format!("lacks required kernel families {missing:?}"),
+                ));
+                continue;
+            }
+            match (decl.factory)() {
+                Ok(backend) => {
+                    registry.register_with_caps(backend, decl.capabilities.clone());
+                    attached.push(decl.name.clone());
+                }
+                Err(e) => rejected.push((
+                    decl.name.clone(),
+                    PluginError::Instantiate {
+                        plugin: decl.name.clone(),
+                        error: e.to_string(),
+                    }
+                    .to_string(),
+                )),
+            }
+        }
+        AttachOutcome { registry, attached, rejected }
+    }
+
+    /// Attach with no required families: every registered plugin whose
+    /// factory succeeds comes up.
+    pub fn attach_all(&self) -> AttachOutcome {
+        self.attach(&BTreeSet::new())
+    }
+}
+
+/// Split capability-annotated registry entries into the backends able
+/// to run every `required` family and the rejects (name + missing
+/// families). Order is preserved on both sides, so shard-home indices
+/// computed over a filtered entry list line up with the engine's
+/// dispatch order.
+pub fn partition_capable(
+    entries: Vec<(Arc<dyn Backend>, Capabilities)>,
+    required: &BTreeSet<KernelKind>,
+) -> (Vec<Arc<dyn Backend>>, Vec<(String, Vec<KernelKind>)>) {
+    let mut capable = Vec::new();
+    let mut rejected = Vec::new();
+    for (backend, caps) in entries {
+        let missing = caps.missing(required);
+        if missing.is_empty() {
+            capable.push(backend);
+        } else {
+            rejected.push((backend.name(), missing));
+        }
+    }
+    (capable, rejected)
+}
+
+// ---------------------------------------------------------------------------
+// Built-in plugins: the existing backend classes wrapped in the ABI,
+// plus the chaos classes, composed into the stock device zoo.
+// ---------------------------------------------------------------------------
+
+/// The compiled-kernel tier as a plugin.
+pub fn native_plugin(dev: DeviceId) -> PluginDecl {
+    let caps = Capabilities::full().cost_hint(4.0);
+    PluginDecl::new(format!("native:dev{}", dev.0), caps, move || {
+        Ok(Arc::new(NativeBackend::new(dev)?) as Arc<dyn Backend>)
+    })
+}
+
+/// A simulated device as a plugin.
+pub fn sim_plugin(dev: DeviceId) -> PluginDecl {
+    let caps = Capabilities::full().cost_hint(1.0);
+    PluginDecl::new(format!("sim:dev{}", dev.0), caps, move || {
+        Ok(Arc::new(SimBackend::new(dev)?) as Arc<dyn Backend>)
+    })
+}
+
+/// The PJRT interpreter tier as a plugin.
+pub fn pjrt_plugin(dev: DeviceId) -> PluginDecl {
+    use super::PjrtBackend;
+    let caps = Capabilities::full().cost_hint(0.5);
+    PluginDecl::new(format!("pjrt:dev{}", dev.0), caps, move || {
+        Ok(Arc::new(PjrtBackend::new(dev)?) as Arc<dyn Backend>)
+    })
+}
+
+/// A rate-limited simulated device; the cost hint is derived from the
+/// throttle rate (`kernel_ns_per_kib` ns per KiB ⇒ `1024 / rate`
+/// bytes/ns), so planners can warm-start with the real skew.
+pub fn throttled_sim_plugin(dev: DeviceId, kernel_ns_per_kib: u64) -> PluginDecl {
+    let caps = Capabilities::full().cost_hint(1024.0 / kernel_ns_per_kib.max(1) as f64);
+    PluginDecl::new(format!("throttled-{kernel_ns_per_kib}:dev{}", dev.0), caps, move || {
+        let inner = Arc::new(SimBackend::new(dev)?);
+        Ok(Arc::new(ThrottledBackend::new(inner, kernel_ns_per_kib)) as Arc<dyn Backend>)
+    })
+}
+
+/// A fault-injecting simulated device (chaos tier): deterministic
+/// seeded enqueue errors, slow launches and wrong-once reads.
+pub fn faulty_sim_plugin(dev: DeviceId, spec: FaultSpec) -> PluginDecl {
+    let caps = Capabilities::full().cost_hint(0.9);
+    PluginDecl::new(format!("faulty-{:x}:dev{}", spec.seed, dev.0), caps, move || {
+        let inner = Arc::new(SimBackend::new(dev)?);
+        Ok(Arc::new(FaultyBackend::new(inner, spec)) as Arc<dyn Backend>)
+    })
+}
+
+/// A memory-capped simulated device: allocations beyond `cap_bytes`
+/// fail, and the advertised limit lets capacity-aware planning keep
+/// shards small enough to fit.
+pub fn asymmetric_sim_plugin(dev: DeviceId, cap_bytes: usize) -> PluginDecl {
+    let caps = Capabilities::full().cost_hint(0.7).mem_limit(cap_bytes);
+    PluginDecl::new(format!("asym-{}k:dev{}", cap_bytes / 1024, dev.0), caps, move || {
+        let inner = Arc::new(SimBackend::new(dev)?);
+        Ok(Arc::new(AsymmetricMemBackend::new(inner, cap_bytes)) as Arc<dyn Backend>)
+    })
+}
+
+/// The default device table as plugins — one per `rawcl` device,
+/// mirroring [`BackendRegistry::with_default_backends`] through the
+/// ABI path.
+pub fn default_plugins() -> PluginRegistry {
+    let reg = PluginRegistry::new();
+    for d in rawdev::devices() {
+        let decl = match d.profile.backend {
+            BackendKind::Native => native_plugin(d.id),
+            BackendKind::Simulated => sim_plugin(d.id),
+        };
+        reg.register(decl).expect("device table yields unique plugin names");
+    }
+    reg
+}
+
+/// Memory cap of the zoo's asymmetric device (1 MiB — small enough to
+/// constrain proportional plans at bench shapes, large enough for the
+/// engine's per-shard footprints at default chunking).
+pub const ZOO_ASYM_CAP_BYTES: usize = 1 << 20;
+
+/// The heterogeneous device zoo: one native device, two throttled
+/// simulated devices at different rates, a flaky and a dying faulty
+/// device, and a memory-capped device. Exercises every negotiation and
+/// fault-tolerance path the plugin ABI introduces.
+pub fn zoo_plugins() -> PluginRegistry {
+    let devices = rawdev::devices();
+    let native = devices
+        .iter()
+        .find(|d| d.profile.backend == BackendKind::Native)
+        .map(|d| d.id)
+        .expect("device table has a native device");
+    let sims: Vec<DeviceId> = devices
+        .iter()
+        .filter(|d| d.profile.backend == BackendKind::Simulated)
+        .map(|d| d.id)
+        .collect();
+    let sim = |i: usize| sims[i % sims.len()];
+    let reg = PluginRegistry::new();
+    let decls = vec![
+        native_plugin(native),
+        throttled_sim_plugin(sim(0), 2_000),
+        throttled_sim_plugin(sim(1), 6_000),
+        faulty_sim_plugin(sim(0), FaultSpec::flaky(0xF1A6)),
+        faulty_sim_plugin(sim(1), FaultSpec::dying(2)),
+        asymmetric_sim_plugin(sim(0), ZOO_ASYM_CAP_BYTES),
+    ];
+    for decl in decls {
+        reg.register(decl).expect("zoo plugin names are unique");
+    }
+    reg
+}
+
+/// Attach the whole zoo (no required families — every zoo citizen
+/// advertises the full set).
+pub fn zoo_registry() -> BackendRegistry {
+    let out = zoo_plugins().attach_all();
+    debug_assert!(out.rejected.is_empty(), "zoo attach rejected: {:?}", out.rejected);
+    out.registry
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_rejects_abi_mismatch() {
+        let reg = PluginRegistry::new();
+        let decl = sim_plugin(DeviceId(1)).with_abi_version(ABI_VERSION + 1);
+        let err = reg.register(decl).unwrap_err();
+        assert_eq!(
+            err,
+            PluginError::AbiMismatch {
+                plugin: "sim:dev1".into(),
+                declared: ABI_VERSION + 1,
+                expected: ABI_VERSION,
+            }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("ABI v2") && msg.contains("expects v1"), "{msg}");
+        assert!(reg.is_empty(), "rejected plugin must not register");
+    }
+
+    #[test]
+    fn handshake_rejects_duplicates_and_empty_capabilities() {
+        let reg = PluginRegistry::new();
+        reg.register(sim_plugin(DeviceId(1))).unwrap();
+        let dup = reg.register(sim_plugin(DeviceId(1))).unwrap_err();
+        assert_eq!(dup, PluginError::DuplicateName("sim:dev1".into()));
+
+        let empty = PluginDecl::new("hollow", Capabilities::with_families([]), || {
+            Ok(Arc::new(SimBackend::new(DeviceId(1))?) as Arc<dyn Backend>)
+        });
+        let err = reg.register(empty).unwrap_err();
+        assert_eq!(err, PluginError::EmptyCapabilities("hollow".into()));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn attach_negotiates_required_families() {
+        let reg = PluginRegistry::new();
+        reg.register(sim_plugin(DeviceId(1))).unwrap();
+        let narrow = PluginDecl::new(
+            "elementwise-only",
+            Capabilities::with_families([KernelKind::VecAdd, KernelKind::Saxpy])
+                .layout(PreferredLayout::Elementwise),
+            || Ok(Arc::new(SimBackend::new(DeviceId(2))?) as Arc<dyn Backend>),
+        );
+        reg.register(narrow).unwrap();
+
+        // Saxpy: both attach.
+        let out = reg.attach(&BTreeSet::from([KernelKind::Saxpy]));
+        assert_eq!(out.attached, vec!["sim:dev1", "elementwise-only"]);
+        assert!(out.rejected.is_empty());
+        assert_eq!(out.registry.len(), 2);
+
+        // Matmul: the narrow plugin is rejected, with the gap named.
+        let out = reg.attach(&BTreeSet::from([KernelKind::Matmul]));
+        assert_eq!(out.attached, vec!["sim:dev1"]);
+        assert_eq!(out.rejected.len(), 1);
+        assert_eq!(out.rejected[0].0, "elementwise-only");
+        assert!(out.rejected[0].1.contains("Matmul"), "{:?}", out.rejected);
+    }
+
+    #[test]
+    fn attach_reports_factory_failures() {
+        let reg = PluginRegistry::new();
+        reg.register(PluginDecl::new("broken", Capabilities::full(), || {
+            Err(super::super::BackendError::new("broken", "no such device"))
+        }))
+        .unwrap();
+        let out = reg.attach_all();
+        assert!(out.attached.is_empty());
+        assert_eq!(out.rejected.len(), 1);
+        assert!(out.rejected[0].1.contains("no such device"), "{:?}", out.rejected);
+    }
+
+    #[test]
+    fn zoo_attaches_six_distinct_backends() {
+        let reg = zoo_registry();
+        assert_eq!(reg.len(), 6);
+        let names: BTreeSet<String> =
+            reg.backends().iter().map(|b| b.name()).collect();
+        assert_eq!(names.len(), 6, "zoo backend names must be distinct: {names:?}");
+        // The asymmetric citizen advertises its memory cap.
+        let caps: Vec<Capabilities> =
+            reg.entries().into_iter().map(|(_, c)| c).collect();
+        assert!(caps.iter().any(|c| c.mem_limit_bytes == Some(ZOO_ASYM_CAP_BYTES)));
+        // Every citizen ships a cost hint, and they differ (warm-start
+        // planning has real skew to work with).
+        let hints: Vec<f64> =
+            caps.iter().filter_map(|c| c.cost_hint_bytes_per_ns).collect();
+        assert_eq!(hints.len(), 6);
+        assert!(hints.iter().any(|&h| h != hints[0]));
+    }
+
+    #[test]
+    fn partition_capable_names_the_gap() {
+        let reg = BackendRegistry::new();
+        reg.register(Arc::new(SimBackend::new(DeviceId(1)).unwrap()));
+        reg.register_with_caps(
+            Arc::new(SimBackend::new(DeviceId(2)).unwrap()),
+            Capabilities::with_families([KernelKind::VecAdd]),
+        );
+        let required = BTreeSet::from([KernelKind::Matmul]);
+        let (capable, rejected) = partition_capable(reg.entries(), &required);
+        assert_eq!(capable.len(), 1);
+        assert_eq!(rejected.len(), 1);
+        let rejected_name = rejected[0].0.clone();
+        let err = CapabilityError {
+            required: required.iter().copied().collect(),
+            rejected,
+        };
+        let msg = err.to_string();
+        assert!(msg.contains("Matmul"), "{msg}");
+        assert!(msg.contains(&rejected_name), "{msg}");
+    }
+}

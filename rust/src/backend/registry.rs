@@ -9,6 +9,16 @@
 //! (GPU PJRT plugins, remote workers, ...) register at runtime and are
 //! picked up by the scheduler and the harness without caller changes.
 //!
+//! Every entry carries a [`Capabilities`] descriptor — the plugin
+//! ABI's negotiation currency ([`crate::backend::plugin`]). Backends
+//! registered through the legacy [`register`](BackendRegistry::register)
+//! path get [`Capabilities::full`], so pre-plugin callers see no
+//! behavior change; backends attached through a
+//! [`PluginRegistry`](crate::backend::plugin::PluginRegistry) keep
+//! their advertised descriptor, which the scheduler uses to filter
+//! dispatches by kernel family and the service uses for warm-start and
+//! capacity-aware planning.
+//!
 //! Selection reuses the paper's device-selection machinery: a
 //! [`FilterChain`](crate::ccl::selector::FilterChain) runs over the
 //! `ccl` devices the backends execute for, and the registry keeps the
@@ -22,12 +32,14 @@ use crate::rawcl::device as rawdev;
 use crate::rawcl::profile::BackendKind;
 use crate::rawcl::types::DeviceId;
 
+use super::plugin::Capabilities;
 use super::{Backend, NativeBackend, SimBackend};
 
-/// A thread-safe, extensible list of backends.
+/// A thread-safe, extensible list of backends with their capability
+/// descriptors.
 #[derive(Default)]
 pub struct BackendRegistry {
-    backends: RwLock<Vec<Arc<dyn Backend>>>,
+    entries: RwLock<Vec<(Arc<dyn Backend>, Capabilities)>>,
 }
 
 impl BackendRegistry {
@@ -61,18 +73,41 @@ impl BackendRegistry {
         GLOBAL.get_or_init(BackendRegistry::with_default_backends)
     }
 
-    /// Add a backend (the extension point for new substrates).
+    /// Add a backend (the extension point for new substrates). The
+    /// entry is assumed fully capable — use
+    /// [`register_with_caps`](Self::register_with_caps) (or the plugin
+    /// attach path) to advertise a narrower descriptor.
     pub fn register(&self, backend: Arc<dyn Backend>) {
-        self.backends.write().unwrap().push(backend);
+        self.register_with_caps(backend, Capabilities::full());
+    }
+
+    /// Add a backend with an explicit capability descriptor.
+    pub fn register_with_caps(&self, backend: Arc<dyn Backend>, caps: Capabilities) {
+        self.entries.write().unwrap().push((backend, caps));
     }
 
     /// Snapshot of all registered backends.
     pub fn backends(&self) -> Vec<Arc<dyn Backend>> {
-        self.backends.read().unwrap().clone()
+        self.entries.read().unwrap().iter().map(|(b, _)| b.clone()).collect()
+    }
+
+    /// Snapshot of all registered backends with their capabilities.
+    pub fn entries(&self) -> Vec<(Arc<dyn Backend>, Capabilities)> {
+        self.entries.read().unwrap().clone()
+    }
+
+    /// The capability descriptor of the backend named `name`, if any.
+    pub fn capabilities_of(&self, name: &str) -> Option<Capabilities> {
+        self.entries
+            .read()
+            .unwrap()
+            .iter()
+            .find(|(b, _)| b.name() == name)
+            .map(|(_, c)| c.clone())
     }
 
     pub fn len(&self) -> usize {
-        self.backends.read().unwrap().len()
+        self.entries.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -93,14 +128,22 @@ impl BackendRegistry {
     /// no selector (`backends()` / `ShardedRngConfig.selector: None`)
     /// or filter `backends()` by [`Backend::name`] instead.
     pub fn select(&self, chain: &FilterChain) -> Vec<Arc<dyn Backend>> {
-        let all = self.backends();
+        self.select_entries(chain).into_iter().map(|(b, _)| b).collect()
+    }
+
+    /// [`select`](Self::select), keeping each survivor's capabilities.
+    pub fn select_entries(
+        &self,
+        chain: &FilterChain,
+    ) -> Vec<(Arc<dyn Backend>, Capabilities)> {
+        let all = self.entries();
         let devices: Vec<Device> = all
             .iter()
-            .filter_map(|b| Device::from_id(b.device_id()).ok())
+            .filter_map(|(b, _)| Device::from_id(b.device_id()).ok())
             .collect();
         let kept = chain.apply(devices);
         all.into_iter()
-            .filter(|b| kept.iter().any(|d| d.id() == b.device_id()))
+            .filter(|(b, _)| kept.iter().any(|d| d.id() == b.device_id()))
             .collect()
     }
 }
@@ -109,6 +152,7 @@ impl BackendRegistry {
 mod tests {
     use super::*;
     use crate::ccl::selector::Filter;
+    use crate::rawcl::kernelspec::KernelKind;
 
     #[test]
     fn default_registry_covers_all_devices() {
@@ -139,5 +183,31 @@ mod tests {
         let b = BackendRegistry::global().len();
         assert_eq!(a, b);
         assert!(a >= 3, "seed device table has 3 devices");
+    }
+
+    #[test]
+    fn legacy_registration_is_fully_capable() {
+        let reg = BackendRegistry::with_default_backends();
+        for (b, caps) in reg.entries() {
+            assert_eq!(caps, Capabilities::full(), "{}", b.name());
+            assert_eq!(reg.capabilities_of(&b.name()), Some(Capabilities::full()));
+        }
+        assert_eq!(reg.capabilities_of("no-such-backend"), None);
+    }
+
+    #[test]
+    fn explicit_capabilities_survive_registration_and_selection() {
+        let reg = BackendRegistry::new();
+        let caps = Capabilities::with_families([KernelKind::Saxpy]).mem_limit(4096);
+        reg.register_with_caps(
+            Arc::new(SimBackend::new(DeviceId(1)).unwrap()),
+            caps.clone(),
+        );
+        let entries = reg.entries();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].1, caps);
+        let selected = reg.select_entries(&FilterChain::new());
+        assert_eq!(selected.len(), 1);
+        assert_eq!(selected[0].1, caps);
     }
 }

@@ -158,6 +158,22 @@ impl ShardPlanner {
         Self::default()
     }
 
+    /// Seed the throughput EWMA with a capability cost hint
+    /// (bytes/ns) — the plugin ABI's warm start
+    /// ([`Capabilities::cost_hint_bytes_per_ns`]
+    /// (crate::backend::plugin::Capabilities)). A prior only fills an
+    /// empty slot: once a backend has been observed (or primed), later
+    /// primes are no-ops, and real observations fold the prior into
+    /// the EWMA like any other sample — measurement always ends up
+    /// dominating the hint. Non-finite or non-positive hints are
+    /// ignored.
+    pub fn prime(&self, backend: &str, bytes_per_ns: f64) {
+        if !bytes_per_ns.is_finite() || bytes_per_ns <= 0.0 {
+            return;
+        }
+        self.speeds.lock().unwrap().entry(backend.to_string()).or_insert(bytes_per_ns);
+    }
+
     /// Fold one dispatch's observation for `backend` into its
     /// throughput EWMA. Zero observations are ignored (a backend that
     /// ran nothing this dispatch tells us nothing).
@@ -262,15 +278,75 @@ pub fn apportion(units: usize, shares: &[f64], min_chunk: usize) -> Vec<usize> {
     parts
 }
 
-/// Turn per-backend shares into a contiguous shard plan over
-/// `[0, units)` plus the home backend of every shard. Zero parts are
-/// skipped (the backend simply gets nothing this dispatch).
-pub fn plan_proportional(
+/// [`apportion`], then enforce per-part capacity caps (`None` =
+/// unlimited). Overflow from capped parts spills onto the uncapped
+/// ones proportionally to their shares; a spill that saturates further
+/// caps cascades (the saturated set grows every round, so the loop
+/// terminates). When the caps are infeasible — total capacity below
+/// `units` — the roomiest part absorbs the surplus so the plan still
+/// covers the whole index space and the over-budget backend reports
+/// the honest out-of-memory error instead of the planner silently
+/// dropping work. The parts always sum to `units`.
+pub fn apportion_capped(
     units: usize,
     shares: &[f64],
     min_chunk: usize,
-) -> (Vec<Shard>, Vec<usize>) {
-    let parts = apportion(units, shares, min_chunk);
+    caps: &[Option<usize>],
+) -> Vec<usize> {
+    assert_eq!(shares.len(), caps.len(), "one cap slot per share");
+    let mut parts = apportion(units, shares, min_chunk);
+    if caps.iter().all(|c| c.is_none()) {
+        return parts;
+    }
+    let mut saturated = vec![false; parts.len()];
+    loop {
+        let mut overflow = 0usize;
+        for (i, part) in parts.iter_mut().enumerate() {
+            if let Some(cap) = caps[i] {
+                if *part > cap {
+                    overflow += *part - cap;
+                    *part = cap;
+                    saturated[i] = true;
+                }
+            }
+        }
+        if overflow == 0 {
+            break;
+        }
+        if saturated.iter().all(|&s| s) {
+            let roomiest = (0..parts.len())
+                .max_by_key(|&i| (caps[i].unwrap_or(usize::MAX), usize::MAX - i))
+                .expect("apportion rejected empty shares");
+            parts[roomiest] += overflow;
+            break;
+        }
+        // Zero/hostile shares still need a positive weight here, or a
+        // saturated-cap spill could never land anywhere.
+        let spill_shares: Vec<f64> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| {
+                if saturated[i] {
+                    0.0
+                } else if s.is_finite() && s > 0.0 {
+                    s
+                } else {
+                    f64::MIN_POSITIVE
+                }
+            })
+            .collect();
+        for (part, extra) in parts.iter_mut().zip(apportion(overflow, &spill_shares, 1)) {
+            *part += extra;
+        }
+    }
+    debug_assert_eq!(parts.iter().sum::<usize>(), units);
+    parts
+}
+
+/// Turn integer parts into a contiguous shard plan over `[0, units)`
+/// plus the home backend of every shard. Zero parts are skipped (the
+/// backend simply gets nothing this dispatch).
+fn parts_to_plan(parts: &[usize]) -> (Vec<Shard>, Vec<usize>) {
     let mut shards = Vec::new();
     let mut homes = Vec::new();
     let mut lo = 0usize;
@@ -283,6 +359,27 @@ pub fn plan_proportional(
         lo += len;
     }
     (shards, homes)
+}
+
+/// Turn per-backend shares into a contiguous shard plan over
+/// `[0, units)` plus the home backend of every shard.
+pub fn plan_proportional(
+    units: usize,
+    shares: &[f64],
+    min_chunk: usize,
+) -> (Vec<Shard>, Vec<usize>) {
+    parts_to_plan(&apportion(units, shares, min_chunk))
+}
+
+/// [`plan_proportional`] with per-backend capacity caps — see
+/// [`apportion_capped`].
+pub fn plan_proportional_capped(
+    units: usize,
+    shares: &[f64],
+    min_chunk: usize,
+    caps: &[Option<usize>],
+) -> (Vec<Shard>, Vec<usize>) {
+    parts_to_plan(&apportion_capped(units, shares, min_chunk, caps))
 }
 
 // ---------------------------------------------------------------------------
@@ -306,6 +403,12 @@ pub struct ServiceMetrics {
     pub batches: Counter,
     /// Requests that shared a batch with at least one other request.
     pub coalesced: Counter,
+    /// Shard tasks re-dispatched by the fault policy (sum of
+    /// [`WorkloadOutcome::retries`](super::scheduler::WorkloadOutcome)
+    /// over all batches).
+    pub retries: Counter,
+    /// Batches in which at least one backend was quarantined.
+    pub quarantine_events: Counter,
     /// Largest batch dispatched so far.
     pub max_batch: Gauge,
     /// Requests accepted but not yet dispatched.
@@ -338,6 +441,8 @@ impl ServiceMetrics {
             errors: Counter::new(),
             batches: Counter::new(),
             coalesced: Counter::new(),
+            retries: Counter::new(),
+            quarantine_events: Counter::new(),
             max_batch: Gauge::new(),
             queue_depth: Gauge::new(),
             window_ns: Gauge::new(),
@@ -533,6 +638,61 @@ mod tests {
         p.observe("slow", 9_000, 1_000);
         let shares = p.shares(&names).unwrap();
         assert!(shares[1] > 0.3, "{shares:?}");
+    }
+
+    #[test]
+    fn prime_warm_starts_but_never_overrides_observations() {
+        let p = ShardPlanner::new();
+        let names = vec!["native".to_string(), "sim".to_string()];
+        assert!(p.shares(&names).is_none(), "no hints, no observations");
+        p.prime("native", 4.0);
+        p.prime("sim", 1.0);
+        let shares = p.shares(&names).unwrap();
+        assert!((shares[0] - 0.8).abs() < 1e-9, "{shares:?}");
+        // Re-priming and hostile hints are no-ops.
+        p.prime("native", 400.0);
+        p.prime("sim", f64::NAN);
+        p.prime("sim", -3.0);
+        assert_eq!(p.shares(&names).unwrap(), shares);
+        // A real observation folds the prior into the EWMA like any
+        // other sample: 0.5·1.0 + 0.5·7.0 = 4.0 bytes/ns.
+        p.observe("sim", 7_000, 1_000);
+        let shares = p.shares(&names).unwrap();
+        assert!((shares[1] - 0.5).abs() < 1e-9, "{shares:?}");
+        // ...after which a prime can no longer move it.
+        p.prime("sim", 0.001);
+        assert_eq!(p.shares(&names).unwrap(), shares);
+    }
+
+    #[test]
+    fn apportion_capped_respects_caps_and_spills_proportionally() {
+        // Uncapped plan would be [600, 200, 200]; capping part 0 at
+        // 100 spills 500 evenly onto the equal-share takers.
+        let parts = apportion_capped(1000, &[3.0, 1.0, 1.0], 1, &[Some(100), None, None]);
+        assert_eq!(parts, vec![100, 450, 450]);
+        // No caps → plain apportionment.
+        assert_eq!(
+            apportion_capped(1000, &[1.0, 3.0, 1.0], 1, &[None, None, None]),
+            apportion(1000, &[1.0, 3.0, 1.0], 1)
+        );
+        // Cascading: the first spill pushes part 1 over its own cap,
+        // and a second round moves the rest onto the uncapped part.
+        let parts =
+            apportion_capped(1000, &[3.0, 1.0, 1.0], 1, &[Some(100), Some(300), None]);
+        assert_eq!(parts, vec![100, 300, 600]);
+        // Infeasible caps: the roomiest part absorbs the surplus so
+        // the plan still sums to `units`.
+        let parts = apportion_capped(100, &[1.0, 1.0], 1, &[Some(10), Some(20)]);
+        assert_eq!(parts, vec![10, 90]);
+    }
+
+    #[test]
+    fn plan_proportional_capped_keeps_contiguity_under_caps() {
+        let (shards, homes) =
+            plan_proportional_capped(1000, &[3.0, 1.0], 64, &[Some(128), None]);
+        assert_eq!(homes, vec![0, 1]);
+        assert_eq!((shards[0].lo, shards[0].len), (0, 128));
+        assert_eq!((shards[1].lo, shards[1].len), (128, 872));
     }
 
     #[test]

@@ -32,13 +32,15 @@ pub mod service;
 pub mod stats;
 
 pub use adaptive::{
-    plan_proportional, AdaptiveWindow, ServiceMetrics, ShardPlanner,
+    apportion, apportion_capped, plan_proportional, plan_proportional_capped,
+    AdaptiveWindow, ServiceMetrics, ShardPlanner,
 };
 pub use pipeline::{run_double_buffered, PipelineError};
 pub use rng_service::{run_ccl, run_raw, run_v2, RngConfig, RunOutcome, Sink};
 pub use scheduler::{
     run_sharded, run_sharded_on, run_sharded_workload, run_sharded_workload_on,
-    ShardedConfig, ShardedOutcome, ShardedRngConfig, WorkloadOutcome,
+    BufferPool, FaultPolicy, ShardedConfig, ShardedOutcome, ShardedRngConfig,
+    WorkloadOutcome,
 };
 pub use sem::Semaphore;
 pub use service::{

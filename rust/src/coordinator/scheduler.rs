@@ -29,17 +29,38 @@
 //! [`Prof::add_timeline`], so one profile aggregates kernels and
 //! transfers across every backend (names match the single-device
 //! service: `INIT_KERNEL`, `RNG_KERNEL`, `READ_BUFFER`, ...).
+//!
+//! Two plugin-ABI-era additions:
+//!
+//! * **Capability filtering** — the engine reads each selected
+//!   backend's [`Capabilities`] and dispatches only to backends whose
+//!   kernel families cover the workload's; an impossible dispatch is a
+//!   typed [`CapabilityError`] naming every rejected backend, not a
+//!   runtime enqueue failure. Legacy registrations advertise the full
+//!   set, so nothing changes for them.
+//! * **Opt-in fault tolerance** — with a [`FaultPolicy`], a failed
+//!   task is retried on the next healthy backend (bounded by
+//!   `max_retries`), backends failing repeatedly are quarantined for
+//!   the rest of the run, and `verify_reads` double-reads every shard
+//!   output to catch wrong-once results. Without a policy the engine
+//!   keeps its historical fail-fast semantics. Recovery is
+//!   bit-identical: a retried task re-executes the same pure
+//!   `(shard, iter, state)` plan, so merged outputs never depend on
+//!   which backend finally ran it.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::backend::plugin::{partition_capable, Capabilities, CapabilityError};
 use crate::backend::{Backend, BackendRegistry, BufId, CompileSpec, KernelId};
 use crate::ccl::errors::{CclError, CclResult};
 use crate::ccl::prof::ProfInfo;
 use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
 use crate::metrics::Counter;
+use crate::rawcl::kernelspec::KernelKind;
 use crate::workload::{PrngWorkload, Shard, Workload};
 
 use super::rng_service::{sink_consume, Sink};
@@ -76,6 +97,96 @@ impl ShardedRngConfig {
     }
 }
 
+/// Opt-in fault tolerance for the sharded engine. `None` (the
+/// default) keeps the historical fail-fast semantics: the first task
+/// failure aborts the run.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPolicy {
+    /// Times one task may be re-dispatched after a failure before the
+    /// run gives up.
+    pub max_retries: usize,
+    /// Consecutive failures (without an intervening success) after
+    /// which a backend is quarantined for the rest of the run.
+    pub quarantine_after: usize,
+    /// Read every shard output twice and treat a mismatch as a task
+    /// failure — catches wrong-once results (a corrupted host read
+    /// whose device buffer is intact) before they reach the merge.
+    pub verify_reads: bool,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        Self { max_retries: 4, quarantine_after: 2, verify_reads: false }
+    }
+}
+
+impl FaultPolicy {
+    /// The chaos-zoo posture: quarantine on the first failure, verify
+    /// every read, retry generously.
+    pub fn paranoid() -> Self {
+        Self { max_retries: 6, quarantine_after: 1, verify_reads: true }
+    }
+}
+
+/// A reusable pool of host output buffers, shared across runs. The
+/// engine already reuses shard buffers *within* a run (each iteration
+/// rewrites the previous iteration's vectors in place); handing the
+/// engine a pool extends that reuse *across* runs — batch wave N+1's
+/// shard outputs start from wave N's capacity instead of fresh
+/// allocations. Hit/miss counters make the reuse observable
+/// (`bench zoo` reports them in its before/after note).
+#[derive(Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    hits: Counter,
+    misses: Counter,
+}
+
+/// Buffers retained across runs; beyond this, returned buffers drop.
+const POOL_MAX_BUFS: usize = 256;
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a pooled buffer (hit) or start a fresh one (miss).
+    pub(crate) fn take(&self) -> Vec<u8> {
+        match self.free.lock().unwrap().pop() {
+            Some(buf) => {
+                self.hits.inc();
+                buf
+            }
+            None => {
+                self.misses.inc();
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer's capacity to the pool (contents are cleared).
+    pub(crate) fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < POOL_MAX_BUFS {
+            free.push(buf);
+        }
+    }
+
+    /// Takes served from pooled capacity.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Takes that had to allocate fresh.
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+}
+
 /// Per-backend dispatch statistics.
 #[derive(Debug, Clone)]
 pub struct BackendLoad {
@@ -92,6 +203,9 @@ pub struct BackendLoad {
     /// [`ShardPlanner`](crate::coordinator::adaptive::ShardPlanner)
     /// folds into its per-backend EWMA.
     pub bytes: u64,
+    /// Task attempts that failed on this backend (0 unless a
+    /// [`FaultPolicy`] let the run outlive them).
+    pub failures: usize,
 }
 
 /// What a sharded run produced.
@@ -151,6 +265,14 @@ pub struct ShardedConfig<W: Workload> {
     /// profiled under `<tag><backend name>` queues; untagged spans fall
     /// back to [`queue_tag`](Self::queue_tag).
     pub shard_tags: Option<Vec<String>>,
+    /// Opt-in retry/quarantine fault tolerance. `None` preserves the
+    /// historical fail-fast behavior.
+    pub faults: Option<FaultPolicy>,
+    /// Shared host-buffer pool: shard output buffers are taken from it
+    /// at run start and returned at run end, so capacity survives
+    /// across batch waves. `None` allocates per run (and still reuses
+    /// within the run).
+    pub buffer_pool: Option<Arc<BufferPool>>,
 }
 
 impl<W: Workload> ShardedConfig<W> {
@@ -167,6 +289,8 @@ impl<W: Workload> ShardedConfig<W> {
             shard_homes: None,
             queue_tag: None,
             shard_tags: None,
+            faults: None,
+            buffer_pool: None,
         }
     }
 }
@@ -190,6 +314,11 @@ pub struct WorkloadOutcome {
     /// profiling) — callers aggregating across many runs (the compute
     /// service) feed these to [`Prof::add_timeline`].
     pub prof_infos: Option<Vec<ProfInfo>>,
+    /// Task re-dispatches performed after failures (0 without a
+    /// [`FaultPolicy`]).
+    pub retries: u64,
+    /// Backends quarantined during the run, by name.
+    pub quarantined: Vec<String>,
 }
 
 /// Per-backend scratch owned by the scheduler (kernel + buffer caches).
@@ -252,11 +381,38 @@ pub(crate) fn plan_chunks(
     out
 }
 
+/// The kernel families a workload dispatch requires. Probed with a
+/// one-unit shard: kernel *families* are shard-size-independent for
+/// every workload, and a whole-index-space probe would straddle member
+/// boundaries inside a batch workload.
+fn required_kinds(workload: &dyn Workload) -> BTreeSet<KernelKind> {
+    workload.kernels(Shard { lo: 0, len: 1 }).iter().map(|s| s.kind).collect()
+}
+
+/// Peak device bytes one task over a `units`-long shard allocates (max
+/// over the workload's kernels of inputs + output) — the capacity
+/// estimate memory-capped planning divides against.
+pub(crate) fn shard_footprint_bytes(workload: &dyn Workload, units: usize) -> usize {
+    let shard = Shard { lo: 0, len: units.max(1) };
+    workload
+        .kernels(shard)
+        .iter()
+        .map(|spec| {
+            let (inputs, out) = spec.buffer_layout();
+            inputs.iter().sum::<usize>() + out
+        })
+        .max()
+        .unwrap_or(0)
+}
+
 /// Run one task: execute `workload.plan(shard, iter, state)` on
 /// backend `b`, leaving the shard's output bytes in `out`. Returns the
 /// output byte count (the scheduler's per-backend throughput metric).
 /// `tag` is the shard's caller label, attached to the kernel launch so
 /// the profiled span is attributable to its originating request.
+/// `verify_read` double-reads the output and fails on disagreement
+/// (the [`FaultPolicy::verify_reads`] countermeasure to wrong-once
+/// results).
 #[allow(clippy::too_many_arguments)]
 fn run_task(
     b: &dyn Backend,
@@ -267,6 +423,7 @@ fn run_task(
     state: &[u8],
     out: &Mutex<Vec<u8>>,
     tag: Option<&str>,
+    verify_read: bool,
 ) -> Result<usize, String> {
     let specs = workload.kernels(shard);
     let plan = workload.plan(shard, iter, state);
@@ -292,6 +449,20 @@ fn run_task(
         let mut dst = out.lock().unwrap();
         dst.resize(plan.out_bytes, 0);
         b.read(out_buf, 0, &mut dst).map_err(|e| e.to_string())?;
+        if verify_read {
+            // A wrong-once fault corrupts one host read-back while the
+            // device buffer keeps the true bytes, so a disagreeing
+            // second read exposes it; the retry path then re-runs the
+            // task cleanly.
+            let mut check = vec![0u8; plan.out_bytes];
+            b.read(out_buf, 0, &mut check).map_err(|e| e.to_string())?;
+            if *dst != check {
+                return Err(format!(
+                    "read-back verification mismatch on {}",
+                    b.name()
+                ));
+            }
+        }
         Ok(plan.out_bytes)
     })();
     for (bytes, buf) in acquired {
@@ -328,6 +499,8 @@ pub fn run_sharded_on(
             shard_homes: None,
             queue_tag: None,
             shard_tags: None,
+            faults: None,
+            pool: None,
         },
     )?;
     Ok(ShardedOutcome {
@@ -367,6 +540,8 @@ pub fn run_sharded_workload_on<W: Workload>(
             shard_homes: cfg.shard_homes.as_deref(),
             queue_tag: cfg.queue_tag.as_deref(),
             shard_tags: cfg.shard_tags.as_deref(),
+            faults: cfg.faults,
+            pool: cfg.buffer_pool.as_deref(),
         },
     )
 }
@@ -385,6 +560,8 @@ struct EngineOpts<'a> {
     shard_homes: Option<&'a [usize]>,
     queue_tag: Option<&'a str>,
     shard_tags: Option<&'a [String]>,
+    faults: Option<FaultPolicy>,
+    pool: Option<&'a BufferPool>,
 }
 
 /// The workload-agnostic scheduling engine: shard, dispatch with work
@@ -405,18 +582,33 @@ fn run_workload_engine(
         shard_homes,
         queue_tag,
         shard_tags,
+        faults,
+        pool,
     } = *opts;
-    let backends: Vec<Arc<dyn Backend>> = match selector {
-        Some(chain) => registry.select(chain),
-        None => registry.backends(),
+    let entries: Vec<(Arc<dyn Backend>, Capabilities)> = match selector {
+        Some(chain) => registry.select_entries(chain),
+        None => registry.entries(),
     };
-    if backends.is_empty() {
+    if entries.is_empty() {
         return Err(CclError::framework("no backend matched the scheduler selector"));
     }
     if workload.units() == 0 || iters == 0 {
         return Err(CclError::framework(
             "sharded run needs a non-empty workload and iters > 0",
         ));
+    }
+    // Capability negotiation: dispatch only to backends whose kernel
+    // families cover the workload's. Entry order is preserved, so any
+    // caller-computed shard homes (planned over the same filtered
+    // entry list) stay aligned.
+    let required = required_kinds(workload);
+    let (backends, rejected) = partition_capable(entries, &required);
+    if backends.is_empty() {
+        let err = CapabilityError {
+            required: required.iter().copied().collect(),
+            rejected,
+        };
+        return Err(CclError::framework(err.to_string()));
     }
 
     let nb = backends.len();
@@ -471,8 +663,11 @@ fn run_workload_engine(
             )));
         }
     }
-    let outputs: Vec<Mutex<Vec<u8>>> =
-        (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
+    // Shard output buffers come from the cross-run pool when one is
+    // provided; either way they are reused in place across iterations.
+    let outputs: Vec<Mutex<Vec<u8>>> = (0..shards.len())
+        .map(|_| Mutex::new(pool.map_or_else(Vec::new, BufferPool::take)))
+        .collect();
 
     let scratch: Vec<BackendScratch> =
         (0..nb).map(|_| BackendScratch::new()).collect();
@@ -485,6 +680,13 @@ fn run_workload_engine(
     let stolen: Vec<Counter> = (0..nb).map(|_| Counter::new()).collect();
     let bytes_out: Vec<Counter> = (0..nb).map(|_| Counter::new()).collect();
     let failure: Mutex<Option<String>> = Mutex::new(None);
+    // Fault-tolerance state (inert without a policy): quarantine flags
+    // and consecutive-failure streaks persist across iterations;
+    // per-task retry budgets reset each iteration.
+    let quarantined: Vec<AtomicBool> = (0..nb).map(|_| AtomicBool::new(false)).collect();
+    let consec_fail: Vec<AtomicUsize> = (0..nb).map(|_| AtomicUsize::new(0)).collect();
+    let failed_ctr: Vec<Counter> = (0..nb).map(|_| Counter::new()).collect();
+    let retries_ctr = Counter::new();
 
     // Discard any leftover timeline from earlier uses of these backends
     // so the profile covers exactly this run.
@@ -501,13 +703,29 @@ fn run_workload_engine(
     let mut state = workload.init_state();
     let mut final_output = Vec::new();
 
-    for iter in 0..iters {
+    'iterations: for iter in 0..iters {
         // Seed the deques: sticky home assignment — round-robin, or
-        // the explicit (planner-provided) home of each shard.
+        // the explicit (planner-provided) home of each shard. A
+        // quarantined home forwards to the next healthy backend.
         for ci in 0..shards.len() {
-            let home = shard_homes.map_or(ci % nb, |h| h[ci]);
+            let preferred = shard_homes.map_or(ci % nb, |h| h[ci]);
+            let home = (0..nb)
+                .map(|k| (preferred + k) % nb)
+                .find(|&j| !quarantined[j].load(Ordering::SeqCst));
+            let Some(home) = home else {
+                run_err = Some(CclError::framework(format!(
+                    "sharded iteration {iter}: all {nb} backends quarantined"
+                )));
+                break 'iterations;
+            };
             deques[home].lock().unwrap().push_back(ci);
         }
+        // Tasks not yet completed this iteration — under a fault
+        // policy, idle workers spin on this instead of exiting, since
+        // a failed task may be re-queued after their deques drain.
+        let remaining = AtomicUsize::new(shards.len());
+        let task_retries: Vec<AtomicUsize> =
+            (0..shards.len()).map(|_| AtomicUsize::new(0)).collect();
 
         let state_ref: &[u8] = &state;
         std::thread::scope(|scope| {
@@ -520,10 +738,19 @@ fn run_workload_engine(
                 let stolen_ctr = &stolen[bi];
                 let bytes_ctr = &bytes_out[bi];
                 let failure = &failure;
+                let quarantined = &quarantined;
+                let consec_fail = &consec_fail;
+                let failed_ctr = &failed_ctr[bi];
+                let retries_ctr = &retries_ctr;
+                let remaining = &remaining;
+                let task_retries = &task_retries;
                 let backend = backend.clone();
                 scope.spawn(move || {
                     loop {
                         if failure.lock().unwrap().is_some() {
+                            return;
+                        }
+                        if quarantined[bi].load(Ordering::SeqCst) {
                             return;
                         }
                         // Own queue first; then steal from the most
@@ -539,7 +766,19 @@ fn run_workload_engine(
                                 was_steal = task.is_some();
                             }
                         }
-                        let Some(ci) = task else { return };
+                        let Some(ci) = task else {
+                            // Fail-fast mode: drained deques mean the
+                            // iteration is done. Under a fault policy a
+                            // failed task may still be re-queued, so
+                            // spin until every shard is accounted for.
+                            if faults.is_none()
+                                || remaining.load(Ordering::SeqCst) == 0
+                            {
+                                return;
+                            }
+                            std::thread::sleep(Duration::from_micros(50));
+                            continue;
+                        };
                         let r = run_task(
                             backend.as_ref(),
                             scratch,
@@ -549,6 +788,7 @@ fn run_workload_engine(
                             state_ref,
                             &outputs[ci],
                             shard_tags.map(|t| t[ci].as_str()),
+                            faults.is_some_and(|p| p.verify_reads),
                         );
                         match r {
                             Ok(n) => {
@@ -557,10 +797,45 @@ fn run_workload_engine(
                                 if was_steal {
                                     stolen_ctr.inc();
                                 }
+                                consec_fail[bi].store(0, Ordering::SeqCst);
+                                remaining.fetch_sub(1, Ordering::SeqCst);
                             }
                             Err(e) => {
-                                failure.lock().unwrap().get_or_insert(e);
-                                return;
+                                let Some(policy) = faults else {
+                                    failure.lock().unwrap().get_or_insert(e);
+                                    return;
+                                };
+                                failed_ctr.inc();
+                                let streak =
+                                    consec_fail[bi].fetch_add(1, Ordering::SeqCst) + 1;
+                                if streak >= policy.quarantine_after.max(1) {
+                                    quarantined[bi].store(true, Ordering::SeqCst);
+                                }
+                                let attempts =
+                                    task_retries[ci].fetch_add(1, Ordering::SeqCst) + 1;
+                                if attempts > policy.max_retries {
+                                    failure.lock().unwrap().get_or_insert(format!(
+                                        "shard {ci} failed {attempts} times, retries \
+                                         exhausted: {e}"
+                                    ));
+                                    return;
+                                }
+                                retries_ctr.inc();
+                                // Re-queue on the next healthy backend
+                                // (round-robin from our right; never a
+                                // quarantined one).
+                                let target = (1..=nb)
+                                    .map(|k| (bi + k) % nb)
+                                    .find(|&j| !quarantined[j].load(Ordering::SeqCst));
+                                match target {
+                                    Some(j) => deques[j].lock().unwrap().push_back(ci),
+                                    None => {
+                                        failure.lock().unwrap().get_or_insert(format!(
+                                            "shard {ci}: every backend quarantined: {e}"
+                                        ));
+                                        return;
+                                    }
+                                }
                             }
                         }
                     }
@@ -568,6 +843,19 @@ fn run_workload_engine(
             }
         });
 
+        // A quarantine race can leave tasks queued with no worker left
+        // to run them (every survivor exited in the same instant a
+        // task was re-queued): without this check the merge below
+        // would silently use stale shard buffers.
+        if faults.is_some()
+            && failure.lock().unwrap().is_none()
+            && remaining.load(Ordering::SeqCst) > 0
+        {
+            failure.lock().unwrap().get_or_insert(format!(
+                "{} shards left unfinished after backend quarantines",
+                remaining.load(Ordering::SeqCst)
+            ));
+        }
         if let Some(e) = failure.lock().unwrap().take() {
             run_err = Some(CclError::framework(format!("sharded iteration {iter}: {e}")));
             break;
@@ -592,12 +880,18 @@ fn run_workload_engine(
         // rewrites them from scratch next iteration — and on the final
         // iteration the merged vec moves straight into the result, so
         // the streaming hot path does no avoidable full-stream copies.
-        let iter_outputs: Vec<Vec<u8>> = outputs
+        let mut iter_outputs: Vec<Vec<u8>> = outputs
             .iter()
             .map(|o| std::mem::take(&mut *o.lock().unwrap()))
             .collect();
         let merged = workload.merge(&shards, &iter_outputs);
         sink_consume(sink, &mut sample, &merged);
+        // Hand each shard its buffer back: next iteration's run_task
+        // resize() becomes a length reset instead of a reallocation
+        // (the dispatch hot path's allocation churn).
+        for (slot, buf) in outputs.iter().zip(iter_outputs.drain(..)) {
+            *slot.lock().unwrap() = buf;
+        }
         if iter + 1 == iters {
             final_output = merged;
         } else {
@@ -619,6 +913,7 @@ fn run_workload_engine(
             stolen: stolen[bi].get() as usize,
             busy_ns,
             bytes: bytes_out[bi].get(),
+            failures: failed_ctr[bi].get() as usize,
         });
         if profile {
             // Partition the drained spans by their launch tag: a tagged
@@ -651,6 +946,12 @@ fn run_workload_engine(
             b.free(buf);
         }
     }
+    // Return host shard buffers to the cross-run pool.
+    if let Some(pool) = pool {
+        for o in &outputs {
+            pool.put(std::mem::take(&mut *o.lock().unwrap()));
+        }
+    }
     if let Some(e) = run_err {
         return Err(e);
     }
@@ -675,6 +976,13 @@ fn run_workload_engine(
         prof_summary,
         prof_export,
         prof_infos,
+        retries: retries_ctr.get(),
+        quarantined: backends
+            .iter()
+            .enumerate()
+            .filter(|(bi, _)| quarantined[*bi].load(Ordering::SeqCst))
+            .map(|(_, b)| b.name())
+            .collect(),
     })
 }
 
@@ -873,5 +1181,169 @@ mod tests {
         assert!(out.num_chunks >= 2);
         assert_eq!(out.final_output, w.reference(2));
         assert_eq!(out.final_output.len(), 8, "one u64 word");
+    }
+
+    #[test]
+    fn capability_gap_is_a_typed_plan_time_error() {
+        use crate::backend::SimBackend;
+        use crate::rawcl::types::DeviceId;
+        use crate::workload::MatmulWorkload;
+        let reg = BackendRegistry::new();
+        reg.register_with_caps(
+            Arc::new(SimBackend::new(DeviceId(1)).unwrap()),
+            Capabilities::with_families([KernelKind::Saxpy, KernelKind::VecAdd]),
+        );
+        let w = MatmulWorkload::new(8);
+        let err = run_sharded_workload_on(&reg, &ShardedConfig::new(w, 1)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("no capable backend"), "{msg}");
+        assert!(msg.contains("Matmul"), "{msg}");
+        assert!(msg.contains("sim:"), "typed error names the backend: {msg}");
+
+        // A capable peer makes the same dispatch run — on it alone.
+        reg.register(Arc::new(SimBackend::new(DeviceId(2)).unwrap()));
+        let out = run_sharded_workload_on(&reg, &ShardedConfig::new(w, 1)).unwrap();
+        assert_eq!(out.final_output, w.reference(1));
+        assert_eq!(out.per_backend.len(), 1, "incapable backend filtered out");
+    }
+
+    #[test]
+    fn fault_policy_retries_deterministically_to_a_bit_identical_result() {
+        use crate::backend::{FaultSpec, FaultyBackend, SimBackend};
+        use crate::rawcl::types::DeviceId;
+        // Single flaky backend, enqueue faults at 500‰: the xorshift
+        // draw sequence for seed 42 makes the schedule fully
+        // deterministic — 8 tasks (4 shards × 2 iters) hit exactly 7
+        // injected failures, every one retried on the same backend.
+        let reg = BackendRegistry::new();
+        let flaky = Arc::new(FaultyBackend::new(
+            Arc::new(SimBackend::new(DeviceId(1)).unwrap()),
+            FaultSpec {
+                seed: 42,
+                enqueue_error_permille: 500,
+                corrupt_read_permille: 0,
+                slow_launch_ns: 0,
+                fail_after: None,
+            },
+        ));
+        reg.register(flaky.clone());
+        let w = PrngWorkload::new(1024);
+        let mut scfg = ShardedConfig::new(w, 2);
+        scfg.chunks_per_backend = 4;
+        scfg.min_chunk = 1;
+        scfg.faults = Some(FaultPolicy {
+            max_retries: 10,
+            quarantine_after: 100,
+            verify_reads: false,
+        });
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert_eq!(out.final_output, w.reference(2), "recovery must be bit-identical");
+        assert_eq!(out.retries, 7, "seed 42 at 500‰ over 8 tasks");
+        assert_eq!(flaky.counts().enqueue_errors, 7);
+        assert_eq!(out.per_backend[0].failures, 7);
+        assert!(out.quarantined.is_empty(), "streaks stay under the threshold");
+    }
+
+    #[test]
+    fn dying_backend_is_quarantined_and_the_run_recovers() {
+        use crate::backend::{FaultSpec, FaultyBackend, SimBackend};
+        use crate::rawcl::types::DeviceId;
+        let reg = BackendRegistry::new();
+        reg.register(Arc::new(SimBackend::new(DeviceId(1)).unwrap()));
+        let dying = Arc::new(FaultyBackend::new(
+            Arc::new(SimBackend::new(DeviceId(2)).unwrap()),
+            FaultSpec::dying(0), // every launch fails
+        ));
+        reg.register(dying.clone());
+        let w = PrngWorkload::new(2048);
+        let mut scfg = ShardedConfig::new(w, 3);
+        scfg.chunks_per_backend = 4;
+        scfg.min_chunk = 1;
+        scfg.faults = Some(FaultPolicy {
+            max_retries: 4,
+            quarantine_after: 1,
+            verify_reads: false,
+        });
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert_eq!(out.final_output, w.reference(3), "recovery must be bit-identical");
+        // The dying backend engages unless the healthy peer stole its
+        // entire deque first (legal but rare); when it does engage, it
+        // must be quarantined after its first failure and every failed
+        // task re-dispatched.
+        if dying.counts().enqueue_errors > 0 {
+            assert_eq!(out.quarantined, vec![dying.name()]);
+            assert!(out.retries >= 1);
+        }
+    }
+
+    #[test]
+    fn buffer_pool_reuses_shard_buffers_across_runs() {
+        use crate::workload::SaxpyWorkload;
+        let reg = BackendRegistry::with_default_backends();
+        let pool = Arc::new(BufferPool::new());
+        let w = SaxpyWorkload::new(4096, 2.0);
+        for round in 0..3 {
+            let mut scfg = ShardedConfig::new(w, 2);
+            scfg.min_chunk = 512;
+            scfg.buffer_pool = Some(pool.clone());
+            let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+            assert_eq!(out.final_output, w.reference(2), "round {round}");
+        }
+        assert!(pool.misses() > 0, "the first round allocates fresh");
+        assert!(
+            pool.hits() > 0,
+            "later rounds must reuse capacity (hits {}, misses {})",
+            pool.hits(),
+            pool.misses()
+        );
+    }
+
+    #[test]
+    fn verify_reads_catches_wrong_once_results() {
+        use crate::backend::{FaultSpec, FaultyBackend, SimBackend};
+        use crate::rawcl::types::DeviceId;
+        // A backend that corrupts EVERY read: without verification its
+        // single-backend runs would merge corrupted bytes; with
+        // verification every task fails its double-read and the run
+        // errors out with retries exhausted (no healthy peer exists).
+        let reg = BackendRegistry::new();
+        reg.register(Arc::new(FaultyBackend::new(
+            Arc::new(SimBackend::new(DeviceId(1)).unwrap()),
+            FaultSpec {
+                seed: 7,
+                enqueue_error_permille: 0,
+                corrupt_read_permille: 1000,
+                slow_launch_ns: 0,
+                fail_after: None,
+            },
+        )));
+        let w = PrngWorkload::new(256);
+        let mut scfg = ShardedConfig::new(w, 1);
+        scfg.faults = Some(FaultPolicy {
+            max_retries: 2,
+            quarantine_after: 100,
+            verify_reads: true,
+        });
+        let err = run_sharded_workload_on(&reg, &scfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("read-back verification mismatch"), "{msg}");
+
+        // With a healthy peer, the same chaos recovers bit-identically.
+        let reg = BackendRegistry::new();
+        reg.register(Arc::new(SimBackend::new(DeviceId(1)).unwrap()));
+        reg.register(Arc::new(FaultyBackend::new(
+            Arc::new(SimBackend::new(DeviceId(2)).unwrap()),
+            FaultSpec {
+                seed: 7,
+                enqueue_error_permille: 0,
+                corrupt_read_permille: 1000,
+                slow_launch_ns: 0,
+                fail_after: None,
+            },
+        )));
+        let mut scfg = ShardedConfig::new(w, 2);
+        scfg.faults = Some(FaultPolicy::paranoid());
+        let out = run_sharded_workload_on(&reg, &scfg).unwrap();
+        assert_eq!(out.final_output, w.reference(2));
     }
 }

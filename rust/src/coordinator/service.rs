@@ -78,23 +78,26 @@
 //! assert_eq!(report.stats.requests, 1);
 //! ```
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::backend::plugin::Capabilities;
 use crate::backend::{BackendRegistry, CompileSpec};
 use crate::ccl::errors::{CclError, CclResult};
 use crate::ccl::prof::ProfInfo;
 use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
+use crate::rawcl::kernelspec::KernelKind;
 use crate::workload::{IterPlan, Shard, Workload};
 
 use super::adaptive::{
-    plan_proportional, AdaptiveWindow, ServiceMetrics, ShardPlanner,
+    plan_proportional_capped, AdaptiveWindow, ServiceMetrics, ShardPlanner,
 };
 use super::scheduler::{
-    plan_chunks, run_sharded_workload_on, BackendLoad, ShardedConfig,
+    plan_chunks, run_sharded_workload_on, shard_footprint_bytes, BackendLoad,
+    BufferPool, FaultPolicy, ShardedConfig,
 };
 use super::sem::Semaphore;
 
@@ -306,6 +309,12 @@ pub struct ServiceOpts {
     /// snapshot (filter chains hold closures and are not cloneable
     /// per batch).
     pub selector: Option<FilterChain>,
+    /// Opt-in fault tolerance for batch dispatches
+    /// ([`FaultPolicy`]): failed shard tasks are retried and
+    /// repeatedly-failing backends quarantined instead of failing the
+    /// whole batch. `None` (the default) keeps the scheduler's
+    /// fail-fast behavior.
+    pub faults: Option<FaultPolicy>,
 }
 
 impl Default for ServiceOpts {
@@ -320,6 +329,7 @@ impl Default for ServiceOpts {
             adaptive_window: false,
             adaptive_shards: false,
             selector: None,
+            faults: None,
         }
     }
 }
@@ -339,6 +349,10 @@ pub struct ServiceStats {
     pub max_batch: usize,
     /// Requests answered with an execution error.
     pub errors: usize,
+    /// Shard tasks re-dispatched by the fault policy.
+    pub retries: usize,
+    /// Batches in which at least one backend was quarantined.
+    pub quarantine_events: usize,
 }
 
 /// What [`ComputeService::shutdown`] returns.
@@ -544,6 +558,10 @@ pub struct BatchOutcome {
     /// Per-backend load (tasks, steals, busy time, produced bytes) —
     /// the observation the adaptive shard planner feeds on.
     pub per_backend: Vec<BackendLoad>,
+    /// Shard tasks re-dispatched by the fault policy (0 without one).
+    pub retries: u64,
+    /// Backends quarantined during this batch.
+    pub quarantined: Vec<String>,
     pub prof_summary: Option<String>,
     pub prof_export: Option<String>,
     pub prof_infos: Option<Vec<ProfInfo>>,
@@ -578,15 +596,16 @@ pub fn run_batch(
     match &opts.selector {
         Some(chain) => {
             let sub = BackendRegistry::new();
-            for b in registry.select(chain) {
-                sub.register(b);
+            for (b, caps) in registry.select_entries(chain) {
+                sub.register_with_caps(b, caps);
             }
-            run_members(&sub, members, iters, opts, None, None, None)
+            run_members(&sub, members, iters, opts, None, None, None, None)
         }
-        None => run_members(registry, members, iters, opts, None, None, None),
+        None => run_members(registry, members, iters, opts, None, None, None, None),
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_members(
     registry: &BackendRegistry,
     members: Vec<Arc<dyn Workload>>,
@@ -595,6 +614,7 @@ fn run_members(
     queue_tag: Option<String>,
     member_tags: Option<Vec<String>>,
     plan: Option<(Vec<Shard>, Vec<usize>)>,
+    pool: Option<Arc<BufferPool>>,
 ) -> CclResult<BatchOutcome> {
     let nb = registry.len().max(1);
     let mut cfg = ShardedConfig::new(BatchWorkload::new(members), iters);
@@ -625,6 +645,8 @@ fn run_members(
     }
     cfg.profile = opts.profile;
     cfg.queue_tag = queue_tag;
+    cfg.faults = opts.faults;
+    cfg.buffer_pool = pool;
     let out = run_sharded_workload_on(registry, &cfg)?;
     let outputs = cfg.workload.split_final(&out.final_output);
     Ok(BatchOutcome {
@@ -632,6 +654,8 @@ fn run_members(
         wall: out.wall,
         num_chunks: out.num_chunks,
         per_backend: out.per_backend,
+        retries: out.retries,
+        quarantined: out.quarantined,
         prof_summary: out.prof_summary,
         prof_export: out.prof_export,
         prof_infos: out.prof_infos,
@@ -640,23 +664,52 @@ fn run_members(
 
 /// Throughput-proportional, request-aligned shard plan for a batch:
 /// each member is apportioned across the backends by their observed
-/// byte/ns shares (unknown backends get the mean), so no shard ever
-/// straddles two requests and fast backends start with more work.
-/// `None` until the planner has at least one observation.
+/// byte/ns shares (unknown backends get their capability cost hint,
+/// or the mean), so no shard ever straddles two requests and fast
+/// backends start with more work. Backends whose capabilities lack
+/// the batch's kernel families are skipped — in registry order, the
+/// same filter the scheduler applies, so the homes computed here
+/// index the backend list the engine actually dispatches to. A
+/// backend advertising a memory limit is capped at the units whose
+/// device footprint fits it ([`plan_proportional_capped`]). `None`
+/// until the planner has at least one speed (observed or primed).
 fn plan_members_proportional(
     registry: &BackendRegistry,
     members: &[Arc<dyn Workload>],
     min_chunk: usize,
     planner: &ShardPlanner,
 ) -> Option<(Vec<Shard>, Vec<usize>)> {
-    let names: Vec<String> = registry.backends().iter().map(|b| b.name()).collect();
+    // Batches are same-kind, so member 0's probe shard names every
+    // member's kernel families (exactly the engine's own probe).
+    let required: BTreeSet<KernelKind> = members
+        .first()?
+        .kernels(Shard { lo: 0, len: 1 })
+        .iter()
+        .map(|s| s.kind)
+        .collect();
+    let capable: Vec<(Arc<dyn crate::backend::Backend>, Capabilities)> = registry
+        .entries()
+        .into_iter()
+        .filter(|(_, c)| c.missing(&required).is_empty())
+        .collect();
+    if capable.is_empty() {
+        return None; // let the engine surface the typed CapabilityError
+    }
+    let names: Vec<String> = capable.iter().map(|(b, _)| b.name()).collect();
     let shares = planner.shares(&names)?;
     let mut shards = Vec::new();
     let mut homes = Vec::new();
     let mut base = 0usize;
     for m in members {
         let u = m.units();
-        let (s, h) = plan_proportional(u, &shares, min_chunk);
+        // Peak device bytes one unit of this member costs — the
+        // denominator turning a byte budget into a unit cap.
+        let per_unit = shard_footprint_bytes(m.as_ref(), u).div_ceil(u.max(1)).max(1);
+        let caps_units: Vec<Option<usize>> = capable
+            .iter()
+            .map(|(_, c)| c.mem_limit_bytes.map(|lim| lim / per_unit))
+            .collect();
+        let (s, h) = plan_proportional_capped(u, &shares, min_chunk, &caps_units);
         for (shard, home) in s.iter().zip(&h) {
             shards.push(Shard { lo: base + shard.lo, len: shard.len });
             homes.push(*home);
@@ -733,7 +786,11 @@ struct ServiceShared {
     window: AdaptiveWindow,
     /// Per-backend throughput EWMAs (drive shard planning only when
     /// [`ServiceOpts::adaptive_shards`] is set, but always observe).
+    /// Warm-started at spawn from the registry's capability cost hints.
     planner: ShardPlanner,
+    /// Shard output buffers reused across batch dispatches (the
+    /// dispatcher's arena — capacity survives from batch to batch).
+    pool: Arc<BufferPool>,
     /// Every profiled batch's event records (service-wide aggregation).
     prof_infos: Mutex<Vec<ProfInfo>>,
 }
@@ -772,6 +829,16 @@ impl ComputeService {
         let metrics = Arc::new(ServiceMetrics::new());
         let window = AdaptiveWindow::from_static(opts.batch_window);
         metrics.window_ns.set(window.window_ns() as i64);
+        // Warm-start the shard planner from the registry's capability
+        // cost hints: the very first proportional plan already skews
+        // toward the backends their plugins declared fast, instead of
+        // starting uniform and discovering the zoo's skew by stealing.
+        let planner = ShardPlanner::new();
+        for (b, caps) in registry.get().entries() {
+            if let Some(hint) = caps.cost_hint_bytes_per_ns {
+                planner.prime(&b.name(), hint);
+            }
+        }
         let shared = Arc::new(ServiceShared {
             queue: Mutex::new(VecDeque::new()),
             ready: Semaphore::new(0),
@@ -781,7 +848,8 @@ impl ComputeService {
             opts,
             metrics,
             window,
-            planner: ShardPlanner::new(),
+            planner,
+            pool: Arc::new(BufferPool::new()),
             prof_infos: Mutex::new(Vec::new()),
         });
         let sh = shared.clone();
@@ -869,6 +937,8 @@ impl ComputeService {
             coalesced: m.coalesced.get() as usize,
             max_batch: m.max_batch.get() as usize,
             errors: m.errors.get() as usize,
+            retries: m.retries.get() as usize,
+            quarantine_events: m.quarantine_events.get() as usize,
         }
     }
 
@@ -1087,8 +1157,16 @@ fn execute_batch(
     } else {
         None
     };
-    match run_members(registry.get(), members, iters, &sh.opts, tag, member_tags, plan)
-    {
+    match run_members(
+        registry.get(),
+        members,
+        iters,
+        &sh.opts,
+        tag,
+        member_tags,
+        plan,
+        Some(sh.pool.clone()),
+    ) {
         Ok(mut out) => {
             // Feed the controllers and the metrics surface.
             let mut backend_bytes = Vec::with_capacity(out.per_backend.len());
@@ -1097,6 +1175,10 @@ fn execute_batch(
                 backend_bytes.push((load.name.clone(), load.bytes));
             }
             sh.metrics.add_backend_bytes(&backend_bytes);
+            sh.metrics.retries.add(out.retries);
+            if !out.quarantined.is_empty() {
+                sh.metrics.quarantine_events.inc();
+            }
             let infos = out.prof_infos.take();
             let batch_prof = out.prof_summary.as_ref().map(|s| {
                 Arc::new(BatchProf {

@@ -23,6 +23,12 @@
 //!   (workload × path) bit-identity check, and the native ≥ 2×
 //!   interpreter requirement at large shapes (writes `native.md` +
 //!   `BENCH_native.json`);
+//! * `bench zoo`      — the plugin-ABI device-zoo cell: every workload
+//!   sharded over the heterogeneous zoo (native + throttled + flaky +
+//!   dying + memory-capped) under the paranoid fault policy with
+//!   bit-identity asserted, ABI/capability negotiation demos, the
+//!   hint-primed warm-start plan, memory-capped planning and the
+//!   buffer-pool before/after (writes `zoo.md` + `BENCH_zoo.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -37,6 +43,7 @@ pub mod native;
 pub mod overhead;
 pub mod service;
 pub mod workloads;
+pub mod zoo;
 
 use std::path::Path;
 
@@ -74,7 +81,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|service|adaptive|native|all [--quick]"
+             workloads|service|adaptive|native|zoo|all [--quick]"
         );
         return 2;
     };
@@ -236,6 +243,22 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_zoo(quick: bool) -> bool {
+        let (md, json, validated) = zoo::report(quick);
+        print!("{md}");
+        // Write both artifacts even when a gate failed — they are the
+        // evidence — but fail the run on any gate.
+        let mut ok = write_result("zoo.md", &md);
+        ok &= write_result("BENCH_zoo.json", &json);
+        if !validated {
+            eprintln!(
+                "zoo: a gate FAILED (bit-identity under faults, negotiation, \
+                 warm start, memory-capped plan or pool reuse; see table)"
+            );
+        }
+        ok && validated
+    }
+
     let ok = match which.as_str() {
         "loc" => run_loc(),
         "ablation" => run_ablation(quick),
@@ -247,6 +270,7 @@ pub fn main(args: &[String]) -> i32 {
         "service" => run_service(quick),
         "adaptive" => run_adaptive(quick),
         "native" => run_native(quick),
+        "zoo" => run_zoo(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -258,7 +282,8 @@ pub fn main(args: &[String]) -> i32 {
             let g = run_service(quick);
             let h = run_adaptive(quick);
             let i = run_native(quick);
-            l && a && b && c && d && e && f && g && h && i
+            let j = run_zoo(quick);
+            l && a && b && c && d && e && f && g && h && i && j
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -1,0 +1,643 @@
+//! `bench zoo` — the heterogeneous device zoo through the plugin ABI.
+//!
+//! Five parts, all reported, four gated:
+//!
+//! * **Chaos identity** — every workload kind sharded across the full
+//!   [`zoo_registry`](crate::backend::plugin::zoo_registry) (native +
+//!   throttled ×2 + flaky + dying + memory-capped) under
+//!   [`FaultPolicy::paranoid`]: injected enqueue errors, wrong-once
+//!   reads and a dying device must all be absorbed by retry/quarantine
+//!   and every output must stay **bit-identical** to the single-device
+//!   oracle. Gates: `identity_ok` (bits) and `engagement_ok` (the
+//!   fault machinery demonstrably fired: retries ≥ 1 and at least one
+//!   backend quarantined, read from the outcome counters).
+//! * **Negotiation** — the ABI handshake rejecting a version-skewed
+//!   plugin, capability negotiation rejecting a family-poor plugin at
+//!   attach, and the scheduler's typed plan-time
+//!   [`CapabilityError`](crate::backend::plugin::CapabilityError)
+//!   naming the backend and the missing families. Gate: `caps_ok`.
+//! * **Warm start** — a fresh [`ShardPlanner`] primed only from the
+//!   zoo's capability cost hints: the *first* proportional plan must
+//!   already differ from uniform, with the native tier (largest hint)
+//!   holding the largest part. Gate: `warm_start_ok`.
+//! * **Memory-capped planning** — [`plan_proportional_capped`] against
+//!   the zoo's advertised byte budgets: the memory-capped device's
+//!   part must fit its 1 MiB cap (units × per-unit footprint ≤ cap)
+//!   while the plan still covers every unit. Gate: `mem_plan_ok`.
+//! * **Buffer pool** — the same dispatch sequence without and with a
+//!   shared [`BufferPool`]: later rounds must reuse shard output
+//!   capacity (pool hits > 0) with bits unchanged; the before/after
+//!   walls are reported. Gate: `pool_ok`.
+//!
+//! Emits `results/zoo.md` + schema-versioned `results/BENCH_zoo.json`;
+//! CI runs `--quick` and fails on any gate.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::backend::plugin::{
+    sim_plugin, zoo_registry, Capabilities, PluginDecl, PluginRegistry, ABI_VERSION,
+    ZOO_ASYM_CAP_BYTES,
+};
+use crate::backend::{Backend, BackendRegistry, SimBackend};
+use crate::coordinator::scheduler::{
+    run_sharded_workload_on, shard_footprint_bytes, BufferPool, FaultPolicy,
+    ShardedConfig,
+};
+use crate::coordinator::{
+    apportion, plan_proportional, plan_proportional_capped, ShardPlanner,
+};
+use crate::rawcl::kernelspec::KernelKind;
+use crate::rawcl::types::DeviceId;
+use crate::workload::{
+    MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, StencilWorkload,
+    Workload,
+};
+
+/// Version tag of `BENCH_zoo.json`. Bump on layout changes so trend
+/// tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-zoo/1";
+
+fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        (v[mid - 1] + v[mid]) / 2.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos identity: the full zoo under paranoid fault tolerance
+// ---------------------------------------------------------------------------
+
+struct ChaosRun {
+    workload: &'static str,
+    ok: bool,
+    retries: u64,
+    quarantined: Vec<String>,
+    error: Option<String>,
+}
+
+fn chaos_run<W: Workload + 'static>(
+    reg: &BackendRegistry,
+    name: &'static str,
+    w: W,
+    iters: usize,
+) -> ChaosRun {
+    let oracle = w.reference(iters);
+    let mut cfg = ShardedConfig::new(w, iters);
+    cfg.chunks_per_backend = 3;
+    cfg.min_chunk = 64;
+    cfg.faults = Some(FaultPolicy::paranoid());
+    match run_sharded_workload_on(reg, &cfg) {
+        Ok(out) => ChaosRun {
+            workload: name,
+            ok: out.final_output == oracle,
+            retries: out.retries,
+            quarantined: out.quarantined,
+            error: None,
+        },
+        Err(e) => ChaosRun {
+            workload: name,
+            ok: false,
+            retries: 0,
+            quarantined: Vec::new(),
+            error: Some(e.to_string()),
+        },
+    }
+}
+
+/// Every workload kind through the zoo with faults enabled. One shared
+/// registry: the dying device's launch budget and the flaky device's
+/// fault stream carry across runs, like a real degrading rig.
+fn chaos_identity(quick: bool) -> Vec<ChaosRun> {
+    let s = if quick { 1 } else { 4 };
+    let reg = zoo_registry();
+    vec![
+        chaos_run(&reg, "prng", PrngWorkload::new(8192 * s), 3),
+        chaos_run(&reg, "saxpy", SaxpyWorkload::new(8192 * s, 2.0), 3),
+        chaos_run(&reg, "reduce", ReduceWorkload::new(16384 * s), 2),
+        chaos_run(&reg, "stencil", StencilWorkload::new(48, 24), 2),
+        chaos_run(&reg, "matmul", MatmulWorkload::new(24), 2),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Negotiation: handshake, attach-time filtering, typed plan-time error
+// ---------------------------------------------------------------------------
+
+struct CapsDemo {
+    abi_msg: String,
+    attached: Vec<String>,
+    rejected: Vec<(String, String)>,
+    typed_err: String,
+    ok: bool,
+}
+
+fn negotiation_demo() -> CapsDemo {
+    // Handshake: a plugin declaring the wrong ABI version never makes
+    // it onto the shelf.
+    let shelf = PluginRegistry::new();
+    let abi_msg = shelf
+        .register(sim_plugin(DeviceId(1)).with_abi_version(ABI_VERSION + 1))
+        .expect_err("version skew must be rejected")
+        .to_string();
+
+    // Negotiation: attaching against a Matmul requirement keeps the
+    // fully-capable plugin and rejects the saxpy-only one with a
+    // reason.
+    shelf.register(sim_plugin(DeviceId(1))).expect("unique name");
+    shelf
+        .register(PluginDecl::new(
+            "saxpy-only:dev2",
+            Capabilities::with_families([KernelKind::Saxpy]).cost_hint(1.0),
+            || Ok(Arc::new(SimBackend::new(DeviceId(2))?) as Arc<dyn Backend>),
+        ))
+        .expect("unique name");
+    let out = shelf.attach(&BTreeSet::from([KernelKind::Matmul]));
+
+    // Typed plan-time error: a registry holding only the saxpy-only
+    // backend refuses a matmul dispatch by name, before any enqueue.
+    let narrow = BackendRegistry::new();
+    narrow.register_with_caps(
+        Arc::new(SimBackend::new(DeviceId(2)).expect("sim device 2")),
+        Capabilities::with_families([KernelKind::Saxpy]),
+    );
+    let typed_err = run_sharded_workload_on(
+        &narrow,
+        &ShardedConfig::new(MatmulWorkload::new(8), 1),
+    )
+    .err()
+    .map(|e| e.to_string())
+    .unwrap_or_default();
+
+    let ok = abi_msg.contains("ABI")
+        && out.attached == vec!["sim:dev1".to_string()]
+        && out.rejected.len() == 1
+        && typed_err.contains("no capable backend")
+        && typed_err.contains("Matmul");
+    CapsDemo { abi_msg, attached: out.attached, rejected: out.rejected, typed_err, ok }
+}
+
+// ---------------------------------------------------------------------------
+// Warm start: capability cost hints skew the very first plan
+// ---------------------------------------------------------------------------
+
+struct WarmStart {
+    names: Vec<String>,
+    hints: Vec<f64>,
+    shares: Vec<f64>,
+    plan: Vec<usize>,
+    uniform: Vec<usize>,
+    ok: bool,
+}
+
+const WARM_UNITS: usize = 60_000;
+
+fn warm_start_demo() -> WarmStart {
+    let reg = zoo_registry();
+    // Exactly what `ComputeService::spawn` does with the registry's
+    // capability hints — replayed on a fresh planner with zero
+    // observations, so the plan below is genuinely first-round.
+    let planner = ShardPlanner::new();
+    let mut names = Vec::new();
+    let mut hints = Vec::new();
+    for (b, caps) in reg.entries() {
+        let name = b.name();
+        let hint = caps.cost_hint_bytes_per_ns.unwrap_or(0.0);
+        planner.prime(&name, hint);
+        names.push(name);
+        hints.push(hint);
+    }
+    let shares = planner.shares(&names).unwrap_or_default();
+    let (shards, homes) = plan_proportional(WARM_UNITS, &shares, 256);
+    let mut plan = vec![0usize; names.len()];
+    for (s, &h) in shards.iter().zip(&homes) {
+        plan[h] += s.len;
+    }
+    let uniform = apportion(WARM_UNITS, &vec![1.0; names.len()], 256);
+    let fastest = hints
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let ok = !shares.is_empty()
+        && plan != uniform
+        && plan.get(fastest) == plan.iter().max();
+    WarmStart { names, hints, shares, plan, uniform, ok }
+}
+
+// ---------------------------------------------------------------------------
+// Memory-capped planning: the advertised budget bounds the plan
+// ---------------------------------------------------------------------------
+
+struct MemPlan {
+    per_unit_bytes: usize,
+    cap_units: usize,
+    asym_units: usize,
+    uncapped_asym_units: usize,
+    total_units: usize,
+    ok: bool,
+}
+
+fn mem_plan_demo() -> MemPlan {
+    let reg = zoo_registry();
+    let entries = reg.entries();
+    let planner = ShardPlanner::new();
+    let mut names = Vec::new();
+    for (b, caps) in &entries {
+        let name = b.name();
+        planner.prime(&name, caps.cost_hint_bytes_per_ns.unwrap_or(0.0));
+        names.push(name);
+    }
+    let shares = planner.shares(&names).unwrap_or_default();
+    // Big enough that the memory-capped device's proportional part
+    // would blow its 1 MiB budget without the cap.
+    let units = 1_500_000;
+    let w = PrngWorkload::new(units);
+    let per_unit = shard_footprint_bytes(&w, units).div_ceil(units).max(1);
+    let caps_units: Vec<Option<usize>> = entries
+        .iter()
+        .map(|(_, c)| c.mem_limit_bytes.map(|lim| lim / per_unit))
+        .collect();
+    let asym = entries
+        .iter()
+        .position(|(_, c)| c.mem_limit_bytes.is_some())
+        .unwrap_or(0);
+    let cap_units = caps_units[asym].unwrap_or(0);
+
+    let per_backend = |shards: &[crate::workload::Shard], homes: &[usize]| {
+        let mut plan = vec![0usize; entries.len()];
+        for (s, &h) in shards.iter().zip(homes) {
+            plan[h] += s.len;
+        }
+        plan
+    };
+    let (us, uh) = plan_proportional(units, &shares, 256);
+    let uncapped = per_backend(&us, &uh);
+    let (cs, ch) = plan_proportional_capped(units, &shares, 256, &caps_units);
+    let capped = per_backend(&cs, &ch);
+
+    let total: usize = capped.iter().sum();
+    let ok = total == units
+        && uncapped[asym] * per_unit > ZOO_ASYM_CAP_BYTES // the cap had to bind
+        && capped[asym] * per_unit <= ZOO_ASYM_CAP_BYTES
+        && capped[asym] > 0; // the small device still participates
+    MemPlan {
+        per_unit_bytes: per_unit,
+        cap_units,
+        asym_units: capped[asym],
+        uncapped_asym_units: uncapped[asym],
+        total_units: total,
+        ok,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buffer pool: arena reuse across batch waves
+// ---------------------------------------------------------------------------
+
+struct PoolCell {
+    rounds: usize,
+    no_pool_wall_ms: Vec<f64>,
+    pool_wall_ms: Vec<f64>,
+    hits: u64,
+    misses: u64,
+    bits_ok: bool,
+    error: Option<String>,
+}
+
+impl PoolCell {
+    fn ok(&self) -> bool {
+        self.bits_ok && self.error.is_none() && self.hits > 0
+    }
+}
+
+fn pool_demo(quick: bool) -> PoolCell {
+    let reg = BackendRegistry::with_default_backends();
+    let n = if quick { 64 * 1024 } else { 256 * 1024 };
+    let rounds = if quick { 6 } else { 12 };
+    let iters = 2;
+    let w = SaxpyWorkload::new(n, 2.0);
+    let oracle = w.reference(iters);
+    let mut cell = PoolCell {
+        rounds,
+        no_pool_wall_ms: Vec::new(),
+        pool_wall_ms: Vec::new(),
+        hits: 0,
+        misses: 0,
+        bits_ok: true,
+        error: None,
+    };
+    for pooled in [false, true] {
+        let pool = Arc::new(BufferPool::new());
+        for _ in 0..rounds {
+            let mut cfg = ShardedConfig::new(w, iters);
+            cfg.min_chunk = 1024;
+            if pooled {
+                cfg.buffer_pool = Some(pool.clone());
+            }
+            match run_sharded_workload_on(&reg, &cfg) {
+                Ok(out) => {
+                    cell.bits_ok &= out.final_output == oracle;
+                    let wall = out.wall.as_secs_f64() * 1e3;
+                    if pooled {
+                        cell.pool_wall_ms.push(wall);
+                    } else {
+                        cell.no_pool_wall_ms.push(wall);
+                    }
+                }
+                Err(e) => {
+                    cell.error = Some(e.to_string());
+                    return cell;
+                }
+            }
+        }
+        if pooled {
+            cell.hits = pool.hits();
+            cell.misses = pool.misses();
+        }
+    }
+    cell
+}
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+fn render_md(
+    chaos: &[ChaosRun],
+    caps: &CapsDemo,
+    warm: &WarmStart,
+    mem: &MemPlan,
+    pool: &PoolCell,
+    quick: bool,
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# Device zoo — plugin ABI, fault tolerance, capability-aware \
+         planning ({} mode)\n\n",
+        if quick { "quick" } else { "full" }
+    ));
+
+    s.push_str("## Bit-identity under faults (paranoid policy, full zoo)\n\n");
+    s.push_str("| workload | verdict | retries | quarantined |\n|---|---|---:|---|\n");
+    for c in chaos {
+        let verdict = match (&c.error, c.ok) {
+            (Some(e), _) => format!("**ERROR**: {e}"),
+            (None, true) => "✓ bit-identical".to_string(),
+            (None, false) => "**DIVERGED**".to_string(),
+        };
+        s.push_str(&format!(
+            "| {} | {verdict} | {} | {} |\n",
+            c.workload,
+            c.retries,
+            if c.quarantined.is_empty() { "—".into() } else { c.quarantined.join(", ") },
+        ));
+    }
+    let total_retries: u64 = chaos.iter().map(|c| c.retries).sum();
+    let quarantined: BTreeSet<&String> =
+        chaos.iter().flat_map(|c| c.quarantined.iter()).collect();
+    s.push_str(&format!(
+        "\nTotal retries **{total_retries}**, quarantined backends \
+         **{}** — the fault machinery demonstrably engaged.\n",
+        quarantined.len()
+    ));
+
+    s.push_str("\n## Negotiation\n\n");
+    s.push_str(&format!("* ABI handshake: `{}`\n", caps.abi_msg));
+    s.push_str(&format!(
+        "* Attach vs Matmul requirement: attached `{:?}`, rejected {}\n",
+        caps.attached,
+        caps.rejected
+            .iter()
+            .map(|(n, r)| format!("`{n}` ({r})"))
+            .collect::<Vec<_>>()
+            .join(", "),
+    ));
+    s.push_str(&format!("* Typed plan-time error: `{}`\n", caps.typed_err));
+
+    s.push_str("\n## Warm start from capability cost hints (first-round plan)\n\n");
+    s.push_str("| backend | hint (B/ns) | share | plan (units) | uniform |\n");
+    s.push_str("|---|---:|---:|---:|---:|\n");
+    for (i, name) in warm.names.iter().enumerate() {
+        s.push_str(&format!(
+            "| {name} | {:.2} | {} | {} | {} |\n",
+            warm.hints.get(i).copied().unwrap_or(0.0),
+            warm.shares
+                .get(i)
+                .map(|v| format!("{:.1}%", v * 100.0))
+                .unwrap_or_else(|| "—".into()),
+            warm.plan.get(i).map(|v| v.to_string()).unwrap_or_else(|| "—".into()),
+            warm.uniform.get(i).map(|v| v.to_string()).unwrap_or_else(|| "—".into()),
+        ));
+    }
+    s.push_str(&format!(
+        "\nFirst-round plan {} uniform — the priors warm-start the \
+         planner before any observation exists.\n",
+        if warm.plan != warm.uniform { "**differs from**" } else { "EQUALS (gate fails)" }
+    ));
+
+    s.push_str("\n## Memory-capped planning (1 MiB device budget)\n\n");
+    s.push_str(&format!(
+        "Per-unit footprint {} B ⇒ cap {} units. Uncapped plan would \
+         give the capped device **{}** units; the capped plan gives \
+         **{}** ({} B ≤ {} B), total {} of {} units covered.\n",
+        mem.per_unit_bytes,
+        mem.cap_units,
+        mem.uncapped_asym_units,
+        mem.asym_units,
+        mem.asym_units * mem.per_unit_bytes,
+        ZOO_ASYM_CAP_BYTES,
+        mem.total_units,
+        mem.total_units,
+    ));
+
+    s.push_str("\n## Buffer pool: dispatch-arena reuse (before/after)\n\n");
+    s.push_str(&format!(
+        "| arm | rounds | wall ms (median) |\n|---|---:|---:|\n\
+         | fresh allocations | {} | {:.2} |\n| pooled buffers | {} | {:.2} |\n",
+        pool.rounds,
+        median(&pool.no_pool_wall_ms),
+        pool.rounds,
+        median(&pool.pool_wall_ms),
+    ));
+    s.push_str(&format!(
+        "\nPool hits **{}**, misses **{}** — after the first round the \
+         shard output buffers (and their capacity) are reused across \
+         waves instead of reallocated; bits {}.\n",
+        pool.hits,
+        pool.misses,
+        if pool.bits_ok { "unchanged" } else { "**DIVERGED**" },
+    ));
+    if let Some(e) = &pool.error {
+        s.push_str(&format!("\n**ERROR**: {e}\n"));
+    }
+    s
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render_json(
+    chaos: &[ChaosRun],
+    caps: &CapsDemo,
+    warm: &WarmStart,
+    mem: &MemPlan,
+    pool: &PoolCell,
+    quick: bool,
+    identity_ok: bool,
+    engagement_ok: bool,
+    gate_ok: bool,
+) -> String {
+    use super::json_escape as esc;
+    let join_f = |xs: &[f64], p: usize| {
+        xs.iter().map(|v| format!("{v:.p$}")).collect::<Vec<_>>().join(", ")
+    };
+    let join_u = |xs: &[usize]| {
+        xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str("  \"chaos\": {\n    \"runs\": [\n");
+    for (i, c) in chaos.iter().enumerate() {
+        s.push_str(&format!(
+            "      {{\"workload\": \"{}\", \"ok\": {}, \"retries\": {}, \
+             \"quarantined\": [{}]{}}}{}\n",
+            c.workload,
+            c.ok,
+            c.retries,
+            c.quarantined
+                .iter()
+                .map(|q| format!("\"{}\"", esc(q)))
+                .collect::<Vec<_>>()
+                .join(", "),
+            match &c.error {
+                Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+                None => String::new(),
+            },
+            if i + 1 < chaos.len() { "," } else { "" },
+        ));
+    }
+    let total_retries: u64 = chaos.iter().map(|c| c.retries).sum();
+    s.push_str(&format!(
+        "    ],\n    \"total_retries\": {total_retries},\n    \
+         \"identity_ok\": {identity_ok},\n    \"engagement_ok\": {engagement_ok}\n  }},\n",
+    ));
+    s.push_str(&format!(
+        "  \"negotiation\": {{\"attached\": [{}], \"rejected\": {}, \
+         \"typed_error\": \"{}\", \"caps_ok\": {}}},\n",
+        caps.attached
+            .iter()
+            .map(|a| format!("\"{}\"", esc(a)))
+            .collect::<Vec<_>>()
+            .join(", "),
+        caps.rejected.len(),
+        esc(&caps.typed_err),
+        caps.ok,
+    ));
+    s.push_str(&format!(
+        "  \"warm_start\": {{\"hints\": [{}], \"shares\": [{}], \"plan\": [{}], \
+         \"uniform\": [{}], \"warm_start_ok\": {}}},\n",
+        join_f(&warm.hints, 3),
+        join_f(&warm.shares, 4),
+        join_u(&warm.plan),
+        join_u(&warm.uniform),
+        warm.ok,
+    ));
+    s.push_str(&format!(
+        "  \"mem_plan\": {{\"per_unit_bytes\": {}, \"cap_units\": {}, \
+         \"asym_units\": {}, \"uncapped_asym_units\": {}, \"total_units\": {}, \
+         \"mem_plan_ok\": {}}},\n",
+        mem.per_unit_bytes,
+        mem.cap_units,
+        mem.asym_units,
+        mem.uncapped_asym_units,
+        mem.total_units,
+        mem.ok,
+    ));
+    s.push_str(&format!(
+        "  \"pool\": {{\"hits\": {}, \"misses\": {}, \"no_pool_wall_ms\": [{}], \
+         \"pool_wall_ms\": [{}], \"no_pool_median_ms\": {:.3}, \
+         \"pool_median_ms\": {:.3}, \"bits_ok\": {}, \"pool_ok\": {}}},\n",
+        pool.hits,
+        pool.misses,
+        join_f(&pool.no_pool_wall_ms, 3),
+        join_f(&pool.pool_wall_ms, 3),
+        median(&pool.no_pool_wall_ms),
+        median(&pool.pool_wall_ms),
+        pool.bits_ok,
+        pool.ok(),
+    ));
+    s.push_str(&format!("  \"gate_ok\": {gate_ok}\n"));
+    s.push_str("}\n");
+    s
+}
+
+/// Build the full report. Returns `(markdown, json, validated)` — the
+/// caller writes both files even when a gate failed (the artifacts are
+/// the evidence) but must exit non-zero on `!validated`.
+pub fn report(quick: bool) -> (String, String, bool) {
+    let chaos = chaos_identity(quick);
+    let caps = negotiation_demo();
+    let warm = warm_start_demo();
+    let mem = mem_plan_demo();
+    let pool = pool_demo(quick);
+
+    let identity_ok = chaos.iter().all(|c| c.ok && c.error.is_none());
+    let total_retries: u64 = chaos.iter().map(|c| c.retries).sum();
+    let engagement_ok =
+        total_retries >= 1 && chaos.iter().any(|c| !c.quarantined.is_empty());
+    let gate_ok =
+        identity_ok && engagement_ok && caps.ok && warm.ok && mem.ok && pool.ok();
+    (
+        render_md(&chaos, &caps, &warm, &mem, &pool, quick),
+        render_json(
+            &chaos,
+            &caps,
+            &warm,
+            &mem,
+            &pool,
+            quick,
+            identity_ok,
+            engagement_ok,
+            gate_ok,
+        ),
+        gate_ok,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negotiation_demo_gates_pass() {
+        let caps = negotiation_demo();
+        assert!(caps.ok, "abi: {} / typed: {}", caps.abi_msg, caps.typed_err);
+    }
+
+    #[test]
+    fn warm_start_first_round_plan_is_skewed() {
+        let warm = warm_start_demo();
+        assert!(warm.ok, "plan {:?} vs uniform {:?}", warm.plan, warm.uniform);
+        assert_eq!(warm.plan.iter().sum::<usize>(), WARM_UNITS);
+    }
+
+    #[test]
+    fn mem_plan_respects_the_advertised_cap() {
+        let mem = mem_plan_demo();
+        assert!(
+            mem.ok,
+            "asym {} units × {} B vs cap {} B (uncapped {})",
+            mem.asym_units, mem.per_unit_bytes, ZOO_ASYM_CAP_BYTES, mem.uncapped_asym_units
+        );
+    }
+}

@@ -10,12 +10,15 @@
 //!   micro-batches and dispatches across all backends, every response is
 //!   validated bit-for-bit against the host oracle; `--live` prints a
 //!   refreshing telemetry dashboard, `--adaptive` turns on the adaptive
-//!   batch window and proportional shard planning;
+//!   batch window and proportional shard planning, `--zoo` serves off
+//!   the heterogeneous plugin device zoo (throttled + faulty +
+//!   memory-capped devices) with the paranoid fault policy;
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5` — plus the backend comparison
 //!   (`backends`), the workload × path matrix (`workloads`), the
 //!   service latency/batching cell (`service`), the adaptive-control
-//!   cell (`adaptive`) and the native-tier speedup gate (`native`).
+//!   cell (`adaptive`), the native-tier speedup gate (`native`) and
+//!   the plugin-ABI device-zoo cell (`zoo`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -36,17 +39,19 @@ fn usage() -> i32 {
          \x20      --sharded dispatches across ALL backends, work-stealing)\n\
          \x20 serve [--requests N] [--clients C] [--max-batch B]\n\
          \x20     [--window-us U] [--queue-cap Q] [--no-batch] [--profile]\n\
-         \x20     [--live] [--adaptive]\n\
+         \x20     [--live] [--adaptive] [--zoo]\n\
          \x20     persistent compute service: C concurrent clients x N\n\
          \x20     mixed requests each, micro-batched across all backends,\n\
          \x20     p50/p95 latency + req/s, oracle-validated\n\
          \x20     (--live prints the telemetry dashboard while serving;\n\
-         \x20      --adaptive sizes the batch window and shard plan online)\n\
+         \x20      --adaptive sizes the batch window and shard plan online;\n\
+         \x20      --zoo serves off the heterogeneous plugin device zoo\n\
+         \x20      with fault tolerance + adaptive control forced on)\n\
          \x20 bench loc|overhead|figure3|figure5|backends|workloads|service|\n\
-         \x20     adaptive|native   regenerate paper results, backend\n\
+         \x20     adaptive|native|zoo   regenerate paper results, backend\n\
          \x20     comparison, the (workload x path) matrix, the service cell,\n\
-         \x20     the adaptive-control cell and the native-vs-interpreter\n\
-         \x20     speedup gate (--quick)"
+         \x20     the adaptive-control cell, the native-vs-interpreter\n\
+         \x20     speedup gate and the plugin device-zoo cell (--quick)"
     );
     2
 }
@@ -75,8 +80,9 @@ fn main() {
 
 /// `cf4rs serve`: the persistent multi-client compute service.
 fn serve_main(args: &[String]) -> i32 {
+    use cf4rs::backend::plugin::zoo_registry;
     use cf4rs::backend::BackendRegistry;
-    use cf4rs::coordinator::ServiceOpts;
+    use cf4rs::coordinator::{FaultPolicy, ServiceOpts};
     use cf4rs::harness::service::run_session;
     use std::sync::Arc;
     use std::time::Duration;
@@ -90,6 +96,7 @@ fn serve_main(args: &[String]) -> i32 {
     let mut no_batch = false;
     let mut live = false;
     let mut adaptive = false;
+    let mut zoo = false;
 
     let mut it = args.iter();
     while let Some(a) = it.next() {
@@ -117,6 +124,7 @@ fn serve_main(args: &[String]) -> i32 {
                 "--no-batch" => no_batch = true,
                 "--live" => live = true,
                 "--adaptive" => adaptive = true,
+                "--zoo" => zoo = true,
                 other => return Err(format!("unknown serve option {other:?}")),
             }
             Ok(())
@@ -133,6 +141,11 @@ fn serve_main(args: &[String]) -> i32 {
     if no_batch {
         max_batch = 1;
     }
+    if zoo {
+        // The zoo has deliberately slow, flaky and dying devices:
+        // fault tolerance and adaptive planning are the point.
+        adaptive = true;
+    }
 
     let opts = ServiceOpts {
         queue_cap,
@@ -141,6 +154,7 @@ fn serve_main(args: &[String]) -> i32 {
         profile,
         adaptive_window: adaptive,
         adaptive_shards: adaptive,
+        faults: zoo.then(FaultPolicy::paranoid),
         ..ServiceOpts::default()
     };
     eprintln!(" * Clients                   : {clients}");
@@ -156,8 +170,14 @@ fn serve_main(args: &[String]) -> i32 {
     } else {
         "off (static window, uniform shards)"
     });
+    eprintln!(" * Backends                  : {}", if zoo {
+        "plugin device zoo (paranoid fault policy)"
+    } else {
+        "default registry"
+    });
 
-    let registry = Arc::new(BackendRegistry::with_default_backends());
+    let registry =
+        Arc::new(if zoo { zoo_registry() } else { BackendRegistry::with_default_backends() });
     let dashboard = live.then(|| Duration::from_millis(250));
     let out = run_session(registry, clients, requests, opts, false, dashboard);
 
@@ -169,6 +189,12 @@ fn serve_main(args: &[String]) -> i32 {
         " * Batches                   : {} ({} requests coalesced, max batch {})",
         out.stats.batches, out.stats.coalesced, out.stats.max_batch
     );
+    if zoo {
+        eprintln!(
+            " * Fault tolerance           : {} retries, {} quarantine events",
+            out.stats.retries, out.stats.quarantine_events
+        );
+    }
     if profile {
         if let Some(s) = &out.report.prof_summary {
             eprintln!("{s}");

@@ -45,8 +45,9 @@ pub struct KernelSpec {
     pub k: usize,
 }
 
-/// Recognised kernel families.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Recognised kernel families. `Ord` so capability descriptors can
+/// hold them in ordered sets with deterministic iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum KernelKind {
     PrngInit,
     PrngStep,
