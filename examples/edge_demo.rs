@@ -1,0 +1,126 @@
+//! The serving edge in ~100 lines: start a TCP edge server, speak the
+//! length-prefixed binary protocol to it (priorities, deadlines,
+//! correlation ids), watch refusals come back as typed errors instead
+//! of closed sockets, and drain gracefully.
+//!
+//! Usage: `cargo run --release --example edge_demo`
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cf4rs::coordinator::edge::client::Received;
+use cf4rs::coordinator::edge::proto::{RequestFrame, ResponseFrame, WireError, WorkloadDesc};
+use cf4rs::coordinator::edge::{EdgeClient, EdgeOpts, EdgeServer};
+use cf4rs::coordinator::Priority;
+use cf4rs::workload::Workload;
+
+fn main() {
+    // ---- Part 1: a server on an ephemeral port ------------------------
+    let server = EdgeServer::start(0, EdgeOpts::default()).expect("bind edge server");
+    let addr = server.local_addr();
+    println!("serving on    : {addr}");
+
+    // ---- Part 2: multiplexed requests over one connection -------------
+    // Fire several requests without waiting (one high-priority, the
+    // rest bulk), then collect responses by correlation id — they may
+    // complete out of order.
+    let mut cli = EdgeClient::connect(addr).expect("connect");
+    let descs = [
+        (101, Priority::High, WorkloadDesc::Saxpy { n: 1024, a: 2.0 }),
+        (102, Priority::Bulk, WorkloadDesc::Prng { n: 4096 }),
+        (103, Priority::Bulk, WorkloadDesc::Stencil { h: 16, w: 32 }),
+        (104, Priority::Bulk, WorkloadDesc::Matmul { d: 24 }),
+    ];
+    let iters = 2u32;
+    for (req_id, priority, desc) in descs {
+        let frame = RequestFrame { req_id, priority, deadline_us: 0, iters, desc };
+        cli.send(&frame).expect("send");
+    }
+    let mut answered = 0;
+    while answered < descs.len() {
+        match cli.recv().expect("recv").expect("decodable response") {
+            Received::Response(ResponseFrame { req_id, result }) => {
+                let bytes = result.expect("in-capacity requests succeed");
+                let (_, _, desc) =
+                    descs.iter().find(|(id, _, _)| *id == req_id).expect("known id");
+                let oracle = desc.instantiate().reference(iters as usize);
+                assert_eq!(bytes, oracle, "edge output must be bit-identical");
+                println!("response {req_id} : {} bytes, oracle-identical", bytes.len());
+                answered += 1;
+            }
+            Received::Closed => panic!("server hung up mid-demo"),
+        }
+    }
+
+    // ---- Part 3: refusals are answers, not closed sockets -------------
+    // An impossible deadline comes back `DeadlineExceeded`; a hostile
+    // shape comes back `BadFrame`; raw garbage with our length prefix
+    // comes back `BadMagic`. The connection survives all three.
+    let doomed = RequestFrame {
+        req_id: 201,
+        priority: Priority::Bulk,
+        deadline_us: 1, // 1 µs: expired long before the dispatcher looks
+        iters: 1,
+        desc: WorkloadDesc::Prng { n: 4096 },
+    };
+    cli.send(&doomed).expect("send");
+    println!("deadline 1 us : {}", expect_err(&mut cli, 201));
+
+    let hostile = RequestFrame {
+        req_id: 202,
+        priority: Priority::Bulk,
+        deadline_us: 0,
+        iters: 1,
+        desc: WorkloadDesc::Matmul { d: 1 << 20 }, // d² bytes: refused by cap
+    };
+    cli.send(&hostile).expect("send");
+    println!("hostile shape : {}", expect_err(&mut cli, 202));
+
+    let mut raw = TcpStream::connect(addr).expect("connect raw");
+    let garbage = [16u32.to_le_bytes().to_vec(), vec![0xAB; 16]].concat();
+    raw.write_all(&garbage).expect("write garbage");
+    let mut raw_cli = EdgeClient::from_stream(raw);
+    match raw_cli.recv().expect("recv").expect("decodable error frame") {
+        Received::Response(ResponseFrame { result: Err(e), .. }) => {
+            println!("raw garbage   : {e}");
+            assert!(matches!(e, WireError::BadMagic(_)));
+        }
+        other => panic!("expected a typed error, got {other:?}"),
+    }
+
+    // ---- Part 4: graceful drain ---------------------------------------
+    // One more request in flight, then shutdown: the drain answers it
+    // before the writers exit.
+    let last = RequestFrame {
+        req_id: 301,
+        priority: Priority::High,
+        deadline_us: 0,
+        iters: 1,
+        desc: WorkloadDesc::Reduce { n: 2048 },
+    };
+    cli.send(&last).expect("send");
+    std::thread::sleep(Duration::from_millis(50));
+    let report = server.shutdown();
+    match cli.recv().expect("recv").expect("decodable response") {
+        Received::Response(ResponseFrame { req_id: 301, result: Ok(bytes) }) => {
+            println!("drained reply : {} bytes after shutdown began", bytes.len());
+        }
+        other => panic!("drain must answer the in-flight request, got {other:?}"),
+    }
+    println!(
+        "report        : {} connections, {} requests, {} deadline-shed",
+        report.connections, report.service.stats.requests, report.service.stats.deadline_shed
+    );
+}
+
+/// Read one response for `req_id` and return its typed error.
+fn expect_err(cli: &mut EdgeClient, req_id: u64) -> WireError {
+    match cli.recv().expect("recv").expect("decodable response") {
+        Received::Response(r) => {
+            assert_eq!(r.req_id, req_id);
+            r.result.expect_err("this request must be refused")
+        }
+        Received::Closed => panic!("server hung up instead of answering {req_id}"),
+    }
+}

@@ -33,6 +33,8 @@ use std::time::Duration;
 use crate::metrics::{Counter, Gauge, Histogram, WindowedHistogram};
 use crate::workload::Shard;
 
+use super::service::Priority;
+
 // ---------------------------------------------------------------------------
 // Adaptive batch window
 // ---------------------------------------------------------------------------
@@ -421,6 +423,18 @@ pub struct ServiceMetrics {
     /// Submit-to-answer latency, ns, over the trailing [`LIVE_WINDOW`]
     /// (also the live req/s source).
     pub recent_ns: WindowedHistogram,
+    /// Per-lane submit-to-answer latency, ns, since service start —
+    /// indexed by [`Priority::index`] (`[high, bulk]`). The instrument
+    /// that makes "high overtakes bulk" a measured claim, not a hope.
+    pub lane_latency_ns: [Histogram; Priority::COUNT],
+    /// Per-lane answered counts.
+    pub lane_answered: [Counter; Priority::COUNT],
+    /// Requests shed at the dispatcher's dequeue point because their
+    /// deadline had already passed, per lane.
+    pub shed_deadline: [Counter; Priority::COUNT],
+    /// Requests rejected at the serving edge's overload gate (trailing
+    /// p99 over the lane's budget), per lane.
+    pub shed_overload: [Counter; Priority::COUNT],
     /// Output bytes produced per backend (cold path: one lock per
     /// batch, never per request).
     pub backend_bytes: Mutex<BTreeMap<String, u64>>,
@@ -448,16 +462,27 @@ impl ServiceMetrics {
             window_ns: Gauge::new(),
             latency_ns: Histogram::new(),
             recent_ns: WindowedHistogram::new(8, slot_ns),
+            lane_latency_ns: [Histogram::new(), Histogram::new()],
+            lane_answered: [Counter::new(), Counter::new()],
+            shed_deadline: [Counter::new(), Counter::new()],
+            shed_overload: [Counter::new(), Counter::new()],
             backend_bytes: Mutex::new(BTreeMap::new()),
         }
     }
 
-    /// Record one answered request's latency (both cumulative and
-    /// trailing-window views).
-    pub fn record_latency(&self, latency: Duration) {
+    /// Record one answered request's latency (cumulative,
+    /// trailing-window and per-lane views).
+    pub fn record_latency(&self, latency: Duration, priority: Priority) {
         let ns = latency.as_nanos() as u64;
         self.latency_ns.record(ns);
         self.recent_ns.record(ns);
+        self.lane_latency_ns[priority.index()].record(ns);
+        self.lane_answered[priority.index()].inc();
+    }
+
+    /// Total requests shed (deadline + overload, both lanes).
+    pub fn total_shed(&self) -> u64 {
+        self.shed_deadline.iter().chain(self.shed_overload.iter()).map(|c| c.get()).sum()
     }
 
     /// Add one dispatch's per-backend output bytes.
@@ -491,6 +516,17 @@ impl ServiceMetrics {
             self.answered.get(),
             self.batches.get(),
         );
+        if self.lane_answered[Priority::High.index()].get() > 0 {
+            line.push_str(&format!(
+                " | hi p99 {:.2} ms / blk p99 {:.2} ms",
+                ms(self.lane_latency_ns[Priority::High.index()].quantile(0.99)),
+                ms(self.lane_latency_ns[Priority::Bulk.index()].quantile(0.99)),
+            ));
+        }
+        let shed = self.total_shed();
+        if shed > 0 {
+            line.push_str(&format!(" | shed {shed}"));
+        }
         let bytes = self.backend_bytes.lock().unwrap();
         let total: u64 = bytes.values().sum();
         if total > 0 {
@@ -699,7 +735,7 @@ mod tests {
     fn metrics_render_live_mentions_the_essentials() {
         let m = ServiceMetrics::new();
         m.answered.inc();
-        m.record_latency(Duration::from_millis(3));
+        m.record_latency(Duration::from_millis(3), Priority::Bulk);
         m.window_ns.set(250_000);
         m.add_backend_bytes(&[("sim:a".into(), 3000), ("sim:b".into(), 1000)]);
         let line = m.render_live();

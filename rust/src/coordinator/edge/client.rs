@@ -1,0 +1,93 @@
+//! Minimal blocking client for the edge protocol.
+//!
+//! One [`EdgeClient`] wraps one TCP connection. Requests and responses
+//! are decoupled — send many, receive as they complete (responses
+//! carry the request's correlation id because the server answers out
+//! of order). [`EdgeClient::try_clone`] splits the connection into a
+//! sender half and a receiver half for open-loop load generation.
+
+use std::io::{self, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::proto::{
+    read_frame, FrameRead, RequestFrame, ResponseFrame, WireError, RESPONSE_MAX_FRAME,
+};
+
+/// A blocking connection to an [`EdgeServer`](super::EdgeServer).
+pub struct EdgeClient {
+    stream: TcpStream,
+}
+
+/// What [`EdgeClient::recv`] found.
+#[derive(Debug)]
+pub enum Received {
+    /// One decoded response.
+    Response(ResponseFrame),
+    /// The server hung up (clean EOF or lost framing).
+    Closed,
+}
+
+impl EdgeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<EdgeClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(EdgeClient { stream })
+    }
+
+    /// Wrap an already-connected stream (e.g. one that has sent raw
+    /// bytes outside the protocol and now wants typed decoding).
+    pub fn from_stream(stream: TcpStream) -> EdgeClient {
+        EdgeClient { stream }
+    }
+
+    /// A second handle onto the same connection (shared socket): one
+    /// thread sends on a fixed schedule, another receives.
+    pub fn try_clone(&self) -> io::Result<EdgeClient> {
+        Ok(EdgeClient { stream: self.stream.try_clone()? })
+    }
+
+    /// Bound how long [`recv`](Self::recv) may block (`None` = forever).
+    pub fn set_recv_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(dur)
+    }
+
+    /// Fire one request (does not wait for the response).
+    pub fn send(&mut self, frame: &RequestFrame) -> io::Result<()> {
+        self.stream.write_all(&frame.encode())
+    }
+
+    /// Block for the next response frame. Malformed frames from the
+    /// server surface as `Err` in the inner result.
+    pub fn recv(&mut self) -> io::Result<Result<Received, WireError>> {
+        match read_frame(&mut self.stream, RESPONSE_MAX_FRAME)? {
+            FrameRead::Frame(body) => {
+                Ok(ResponseFrame::decode_body(&body).map(Received::Response))
+            }
+            FrameRead::Eof | FrameRead::TooLarge(_) => Ok(Ok(Received::Closed)),
+        }
+    }
+
+    /// Convenience: send one request and block for one response (only
+    /// sound when no other request is in flight on this connection).
+    pub fn request(&mut self, frame: &RequestFrame) -> io::Result<ResponseFrame> {
+        self.send(frame)?;
+        loop {
+            match self.recv()? {
+                Ok(Received::Response(r)) => return Ok(r),
+                Ok(Received::Closed) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "server closed before answering",
+                    ))
+                }
+                Err(e) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("undecodable response: {e}"),
+                    ))
+                }
+            }
+        }
+    }
+}

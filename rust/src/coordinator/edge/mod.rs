@@ -1,0 +1,431 @@
+//! `coordinator::edge` — the network serving tier in front of
+//! [`ComputeService`]: TCP, a length-prefixed binary protocol, priority
+//! lanes, per-tenant fairness, deadlines and SLO-aware overload
+//! control. This is the layer that turns the in-process service into
+//! something "heavy traffic from millions of users" can actually hit.
+//!
+//! ## Architecture
+//!
+//! ```text
+//! clients ──TCP──► reader thread ──try_submit_with()──► ComputeService
+//!    ▲    (one per connection;       │ overload gate,      │ priority
+//!    │     many in-flight reqs)      │ deadline tagging    ▼ lanes, DRR
+//!    └──◄── writer thread ◄──mpsc── completion callback (dispatcher)
+//! ```
+//!
+//! * **Connection multiplexing** — one reader/writer thread pair per
+//!   connection; any number of requests may be in flight at once, and
+//!   responses carry the client's correlation id because they complete
+//!   out of order (a high-priority probe overtakes queued bulk work).
+//! * **Priority lanes + fairness** — the request's priority byte maps
+//!   to the service's [`Priority`] lanes; the connection id becomes
+//!   the request's tenant, so the bulk lane's deficit round-robin is
+//!   per-connection fairness on the wire.
+//! * **Overload control** — the [`OverloadGate`] sheds with a typed
+//!   [`WireError::Overloaded`] once the trailing-window p99 blows the
+//!   lane's budget (bulk budget < high budget ⇒ bulk sheds first);
+//!   deadline-tagged requests that expire in the queue come back as
+//!   [`WireError::DeadlineExceeded`]. Refusals are answers, not
+//!   closed sockets.
+//! * **Graceful drain** — [`EdgeServer::shutdown`] stops the
+//!   acceptor, winds down readers, then drains the service: every
+//!   accepted request's response is written before its writer exits.
+//! * **Robustness** — truncated, oversized, bad-magic and bad-version
+//!   frames each get their typed error; the connection survives
+//!   everything except lost framing (oversized/bad-magic), and the
+//!   server never panics on hostile bytes (`examples/edge_fuzz.rs`
+//!   drives this with a seeded corpus in CI).
+
+pub mod client;
+pub mod overload;
+pub mod proto;
+
+pub use client::EdgeClient;
+pub use overload::OverloadGate;
+pub use proto::{RequestFrame, ResponseFrame, WireError, WorkloadDesc};
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::backend::BackendRegistry;
+use crate::coordinator::adaptive::ServiceMetrics;
+use crate::coordinator::service::{
+    ComputeService, Priority, Response, ServiceError, ServiceOpts, ServiceReport,
+    WorkloadRequest,
+};
+
+/// How often blocked reads and the acceptor re-check the stop flag.
+const POLL: Duration = Duration::from_millis(50);
+/// Cap on a stuck client's ability to wedge its writer thread.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Tunables for [`EdgeServer::start`].
+pub struct EdgeOpts {
+    /// The wrapped service's configuration (lanes, batching, queue).
+    pub service: ServiceOpts,
+    /// Backends to execute on (`None` = the process-wide registry).
+    pub registry: Option<Arc<BackendRegistry>>,
+    /// Overload budget for the high lane's trailing p99 — looser than
+    /// the bulk budget, so overload sheds bulk traffic first.
+    pub high_p99_budget: Duration,
+    /// Overload budget for the bulk lane's trailing p99.
+    pub bulk_p99_budget: Duration,
+    /// Trailing-window samples below which the gate always admits.
+    pub min_gate_samples: u64,
+    /// Largest request frame body the server will read.
+    pub max_frame: usize,
+}
+
+impl Default for EdgeOpts {
+    fn default() -> Self {
+        Self {
+            service: ServiceOpts::default(),
+            registry: None,
+            high_p99_budget: Duration::from_secs(2),
+            bulk_p99_budget: Duration::from_millis(500),
+            min_gate_samples: 32,
+            max_frame: proto::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// What [`EdgeServer::shutdown`] returns.
+#[derive(Debug)]
+pub struct EdgeReport {
+    /// The drained service's report (stats + service-wide profile).
+    pub service: ServiceReport,
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+}
+
+/// The TCP serving edge — see the [module docs](self).
+pub struct EdgeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    svc: Arc<ComputeService>,
+    metrics: Arc<ServiceMetrics>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    writers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    connections: Arc<AtomicU64>,
+}
+
+impl EdgeServer {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and start serving.
+    pub fn start(port: u16, opts: EdgeOpts) -> io::Result<EdgeServer> {
+        let EdgeOpts {
+            service,
+            registry,
+            high_p99_budget,
+            bulk_p99_budget,
+            min_gate_samples,
+            max_frame,
+        } = opts;
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let svc = Arc::new(match registry {
+            Some(r) => ComputeService::start(r, service),
+            None => ComputeService::start_global(service),
+        });
+        let metrics = svc.metrics();
+        let gate = OverloadGate::new(high_p99_budget, bulk_p99_budget, min_gate_samples);
+        let stop = Arc::new(AtomicBool::new(false));
+        let readers = Arc::new(Mutex::new(Vec::new()));
+        let writers = Arc::new(Mutex::new(Vec::new()));
+        let connections = Arc::new(AtomicU64::new(0));
+
+        let ctx = Arc::new(ConnCtx {
+            svc: svc.clone(),
+            metrics: metrics.clone(),
+            gate,
+            stop: stop.clone(),
+            max_frame,
+        });
+        let (readers2, writers2, connections2) =
+            (readers.clone(), writers.clone(), connections.clone());
+        let stop2 = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("cf4rs-edge-accept".into())
+            .spawn(move || {
+                accept_loop(listener, ctx, stop2, readers2, writers2, connections2)
+            })
+            .expect("spawn edge acceptor");
+
+        Ok(EdgeServer {
+            addr,
+            stop,
+            accept: Some(accept),
+            svc,
+            metrics,
+            readers,
+            writers,
+            connections,
+        })
+    }
+
+    /// The bound address (port resolved when 0 was requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The wrapped service's live metrics surface.
+    pub fn metrics(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Graceful drain: stop accepting connections and frames, answer
+    /// every accepted request, flush every writer, then report.
+    pub fn shutdown(mut self) -> EdgeReport {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Readers poll the stop flag; joining them drops their service
+        // Arcs and their writer senders.
+        for h in std::mem::take(&mut *self.readers.lock().unwrap()) {
+            let _ = h.join();
+        }
+        // Drain the service: the dispatcher answers every queued
+        // request (firing its connection's callback) before exiting.
+        self.svc.initiate_shutdown();
+        let svc = std::mem::replace(
+            &mut self.svc,
+            Arc::new(ComputeService::start_global(ServiceOpts {
+                queue_cap: 1,
+                ..ServiceOpts::default()
+            })),
+        );
+        let service = match Arc::try_unwrap(svc) {
+            Ok(svc) => svc.shutdown(),
+            // A reader failed to join and still holds the Arc — settle
+            // for a stats snapshot rather than hang.
+            Err(svc) => ServiceReport {
+                stats: svc.stats(),
+                prof_summary: None,
+                prof_export: None,
+            },
+        };
+        // Every callback has fired (or been dropped), so every writer's
+        // senders are gone: they flush their queues and exit.
+        for h in std::mem::take(&mut *self.writers.lock().unwrap()) {
+            let _ = h.join();
+        }
+        EdgeReport { service, connections: self.connections.load(Ordering::SeqCst) }
+    }
+}
+
+/// State shared by every connection handler.
+struct ConnCtx {
+    svc: Arc<ComputeService>,
+    metrics: Arc<ServiceMetrics>,
+    gate: OverloadGate,
+    stop: Arc<AtomicBool>,
+    max_frame: usize,
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    ctx: Arc<ConnCtx>,
+    stop: Arc<AtomicBool>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    writers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    connections: Arc<AtomicU64>,
+) {
+    let mut next_conn = 1u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn_id = next_conn;
+                next_conn += 1;
+                connections.fetch_add(1, Ordering::SeqCst);
+                match spawn_connection(stream, conn_id, ctx.clone()) {
+                    Ok((r, w)) => {
+                        readers.lock().unwrap().push(r);
+                        writers.lock().unwrap().push(w);
+                    }
+                    Err(e) => eprintln!("edge: connection {conn_id} setup: {e}"),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+fn spawn_connection(
+    stream: TcpStream,
+    conn_id: u64,
+    ctx: Arc<ConnCtx>,
+) -> io::Result<(JoinHandle<()>, JoinHandle<()>)> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(POLL))?;
+    let write_half = stream.try_clone()?;
+    write_half.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
+    let writer = std::thread::Builder::new()
+        .name(format!("cf4rs-edge-w{conn_id}"))
+        .spawn(move || writer_loop(write_half, rx))?;
+    let reader = std::thread::Builder::new()
+        .name(format!("cf4rs-edge-r{conn_id}"))
+        .spawn(move || reader_loop(stream, conn_id, ctx, tx))?;
+    Ok((reader, writer))
+}
+
+/// Serialise every frame of one connection onto the socket. Exits when
+/// all senders (the reader + every in-flight completion callback) are
+/// gone and the queue is flushed — i.e. after the last response.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+    use std::io::Write;
+    for frame in rx {
+        if stream.write_all(&frame).is_err() {
+            // The client hung up; responses have nowhere to go, but we
+            // must keep draining so callbacks' sends stay cheap no-ops.
+            break;
+        }
+    }
+    let _ = stream.flush();
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    conn_id: u64,
+    ctx: Arc<ConnCtx>,
+    tx: mpsc::Sender<Vec<u8>>,
+) {
+    let reply = |req_id: u64, result: Result<Vec<u8>, WireError>| {
+        let _ = tx.send(ResponseFrame { req_id, result }.encode());
+    };
+    loop {
+        let body = match read_frame_poll(&mut stream, ctx.max_frame, &ctx.stop) {
+            PollRead::Frame(b) => b,
+            PollRead::Eof | PollRead::Stopped | PollRead::IoError => break,
+            PollRead::TooLarge(n) => {
+                // Framing is lost — answer, then close.
+                reply(0, Err(WireError::TooLarge(n)));
+                break;
+            }
+        };
+        let req = match RequestFrame::decode_body(&body) {
+            Ok(req) => req,
+            Err((err, req_id)) => {
+                // Bad magic means these bytes were never our protocol;
+                // answer once and hang up. Structural errors inside a
+                // well-addressed frame keep the connection.
+                let close = matches!(err, WireError::BadMagic(_));
+                reply(req_id, Err(err));
+                if close {
+                    break;
+                }
+                continue;
+            }
+        };
+        if ctx.stop.load(Ordering::SeqCst) {
+            reply(req.req_id, Err(WireError::ShuttingDown));
+            break;
+        }
+        if !ctx.gate.admit(&ctx.metrics.recent_ns, req.priority) {
+            ctx.metrics.shed_overload[req.priority.index()].inc();
+            reply(req.req_id, Err(WireError::Overloaded));
+            continue;
+        }
+        let mut wreq = WorkloadRequest::from_arc(req.desc.instantiate())
+            .iters(req.iters as usize)
+            .priority(req.priority)
+            .tenant(conn_id);
+        if let Some(budget) = req.deadline() {
+            wreq = wreq.deadline_in(budget);
+        }
+        let (tx2, wire_id) = (tx.clone(), req.req_id);
+        let cb = Box::new(move |r: Result<Response, ServiceError>| {
+            let result = match r {
+                Ok(resp) => Ok(resp.output),
+                Err(e) => Err(wire_error(e)),
+            };
+            let _ = tx2.send(ResponseFrame { req_id: wire_id, result }.encode());
+        });
+        if let Err(e) = ctx.svc.try_submit_with(wreq, cb) {
+            reply(req.req_id, Err(wire_error(e)));
+        }
+    }
+}
+
+/// Map service refusals onto the wire vocabulary.
+fn wire_error(e: ServiceError) -> WireError {
+    match e {
+        ServiceError::QueueFull => WireError::QueueFull,
+        ServiceError::ShuttingDown => WireError::ShuttingDown,
+        ServiceError::DeadlineExceeded => WireError::DeadlineExceeded,
+        ServiceError::Invalid(m) => WireError::BadFrame(m),
+        ServiceError::Execution(m) => WireError::Execution(m),
+        ServiceError::Abandoned => WireError::Execution("request abandoned".into()),
+        ServiceError::Timeout => WireError::Execution("wait timed out".into()),
+    }
+}
+
+/// What the polling frame reader found.
+enum PollRead {
+    Frame(Vec<u8>),
+    Eof,
+    TooLarge(u64),
+    Stopped,
+    IoError,
+}
+
+/// [`proto::read_frame`] against a read-timeout socket: timeouts poll
+/// the stop flag instead of failing, so a quiet connection notices
+/// shutdown within [`POLL`].
+fn read_frame_poll(stream: &mut TcpStream, max: usize, stop: &AtomicBool) -> PollRead {
+    let mut len_buf = [0u8; 4];
+    match read_buf_poll(stream, &mut len_buf, stop) {
+        BufRead::Full => {}
+        BufRead::Eof => return PollRead::Eof,
+        BufRead::Stopped => return PollRead::Stopped,
+        BufRead::IoError => return PollRead::IoError,
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max {
+        return PollRead::TooLarge(len as u64);
+    }
+    let mut body = vec![0u8; len];
+    match read_buf_poll(stream, &mut body, stop) {
+        BufRead::Full => PollRead::Frame(body),
+        BufRead::Eof => PollRead::Eof,
+        BufRead::Stopped => PollRead::Stopped,
+        BufRead::IoError => PollRead::IoError,
+    }
+}
+
+enum BufRead {
+    Full,
+    Eof,
+    Stopped,
+    IoError,
+}
+
+fn read_buf_poll(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> BufRead {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return BufRead::Eof,
+            Ok(n) => filled += n,
+            Err(e) => match e.kind() {
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                    // During drain a half-received frame is abandoned:
+                    // the request was never accepted, so the drain
+                    // guarantee doesn't cover it.
+                    if stop.load(Ordering::SeqCst) {
+                        return BufRead::Stopped;
+                    }
+                }
+                io::ErrorKind::Interrupted => {}
+                _ => return BufRead::IoError,
+            },
+        }
+    }
+    BufRead::Full
+}

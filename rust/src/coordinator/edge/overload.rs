@@ -1,0 +1,120 @@
+//! SLO-aware overload control for the serving edge.
+//!
+//! The gate watches the service's trailing-window latency histogram
+//! ([`ServiceMetrics::recent_ns`](super::super::adaptive::ServiceMetrics))
+//! and refuses admission — a typed [`Overloaded`](super::proto::WireError::Overloaded)
+//! wire error, not a closed socket — once the window's p99 blows the
+//! requesting lane's budget. Giving the bulk lane a tighter budget than
+//! the high lane makes overload shed bulk traffic first: as latency
+//! climbs, bulk admission stops while latency-sensitive traffic keeps
+//! flowing, and goodput degrades instead of collapsing.
+//!
+//! Every decision is a pure function of `(histogram, now_ns, lane)`, so
+//! tests drive the gate deterministically with
+//! [`WindowedHistogram::record_at`] and [`OverloadGate::admit_at`] — no
+//! real clock, no sleeps.
+
+use std::time::Duration;
+
+use crate::coordinator::service::Priority;
+use crate::metrics::WindowedHistogram;
+
+/// Per-lane trailing-p99 admission budgets — see the [module
+/// docs](self).
+#[derive(Debug, Clone)]
+pub struct OverloadGate {
+    /// Per-lane p99 budget, ns, indexed by [`Priority::index`].
+    budget_ns: [u64; Priority::COUNT],
+    /// Below this many samples in the trailing window the gate always
+    /// admits — a handful of slow warm-up requests must not slam the
+    /// door on an idle server.
+    min_samples: u64,
+}
+
+impl OverloadGate {
+    pub fn new(high_budget: Duration, bulk_budget: Duration, min_samples: u64) -> Self {
+        let mut budget_ns = [0u64; Priority::COUNT];
+        budget_ns[Priority::High.index()] = high_budget.as_nanos() as u64;
+        budget_ns[Priority::Bulk.index()] = bulk_budget.as_nanos() as u64;
+        Self { budget_ns, min_samples }
+    }
+
+    /// The lane's p99 budget.
+    pub fn budget(&self, priority: Priority) -> Duration {
+        Duration::from_nanos(self.budget_ns[priority.index()])
+    }
+
+    /// Should a request on `priority` be admitted at `now_ns`, given
+    /// the trailing latency window? Deterministic — the testable core.
+    pub fn admit_at(&self, recent: &WindowedHistogram, now_ns: u64, priority: Priority) -> bool {
+        let snap = recent.snapshot_at(now_ns);
+        if snap.count() < self.min_samples {
+            return true;
+        }
+        snap.quantile(0.99) <= self.budget_ns[priority.index()]
+    }
+
+    /// [`admit_at`](Self::admit_at) against the real clock.
+    pub fn admit(&self, recent: &WindowedHistogram, priority: Priority) -> bool {
+        self.admit_at(recent, crate::rawcl::clock::now_ns(), priority)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window() -> WindowedHistogram {
+        // 8 slots of 250 ms — matches the service's live window shape.
+        WindowedHistogram::new(8, 250_000_000)
+    }
+
+    #[test]
+    fn admits_until_min_samples() {
+        let gate = OverloadGate::new(Duration::from_millis(50), Duration::from_millis(5), 8);
+        let w = window();
+        let t0 = 1_000_000_000u64;
+        for i in 0..7 {
+            // Every sample is way over both budgets, but the window is
+            // under-sampled: still admitting.
+            w.record_at(t0, 1_000_000_000);
+            assert!(gate.admit_at(&w, t0, Priority::Bulk), "sample {i}");
+        }
+        w.record_at(t0, 1_000_000_000);
+        assert!(!gate.admit_at(&w, t0, Priority::Bulk), "8th sample trips the gate");
+    }
+
+    #[test]
+    fn bulk_sheds_before_high() {
+        let gate = OverloadGate::new(Duration::from_millis(500), Duration::from_millis(10), 1);
+        let w = window();
+        let t0 = 5_000_000_000u64;
+        // Trailing p99 ≈ 50 ms: over bulk's 10 ms budget, under high's
+        // 500 ms one.
+        for _ in 0..100 {
+            w.record_at(t0, 50_000_000);
+        }
+        assert!(!gate.admit_at(&w, t0, Priority::Bulk));
+        assert!(gate.admit_at(&w, t0, Priority::High));
+        // Past 500 ms, even the high lane sheds.
+        for _ in 0..100 {
+            w.record_at(t0, 2_000_000_000);
+        }
+        assert!(!gate.admit_at(&w, t0, Priority::High));
+    }
+
+    #[test]
+    fn gate_reopens_when_the_window_rolls_over() {
+        let gate = OverloadGate::new(Duration::from_millis(500), Duration::from_millis(10), 1);
+        let w = window();
+        let t0 = 10_000_000_000u64;
+        for _ in 0..50 {
+            w.record_at(t0, 100_000_000);
+        }
+        assert!(!gate.admit_at(&w, t0, Priority::Bulk));
+        // 3 seconds later the bad epoch has aged out of the 2 s window:
+        // the gate re-admits on its own, no manual reset.
+        let t1 = t0 + 3_000_000_000;
+        assert!(gate.admit_at(&w, t1, Priority::Bulk));
+    }
+}

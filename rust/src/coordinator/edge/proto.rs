@@ -1,0 +1,652 @@
+//! The edge wire protocol: length-prefixed binary frames.
+//!
+//! Every frame is a little-endian `u32` body length followed by the
+//! body. Both directions share a header (`magic | version | ftype`);
+//! decoding is strict — unknown frame types, short bodies and trailing
+//! garbage are all typed errors, never panics.
+//!
+//! ```text
+//! request  := len:u32 | magic:u32 | ver:u16 | ftype:u8(=1)
+//!           | req_id:u64 | priority:u8 | deadline_us:u64
+//!           | iters:u32 | kind:u8 | params...
+//! response := len:u32 | magic:u32 | ver:u16 | ftype:u8(=2)
+//!           | req_id:u64 | status:u8 | payload_len:u32 | payload
+//! ```
+//!
+//! `status` 0 is success (`payload` = the workload's output bytes,
+//! bit-identical to an in-process run); any other value is a
+//! [`WireError`] code with the error's detail in the payload. Error
+//! payloads round-trip faithfully — a client can recover the observed
+//! magic from a [`WireError::BadMagic`], the announced length from a
+//! [`WireError::TooLarge`], and the message from the stringy variants.
+
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::service::Priority;
+use crate::workload::{
+    MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, StencilWorkload,
+    Workload,
+};
+
+/// Frame magic (`CF4C ED3E` — "cf4ocl edge").
+pub const MAGIC: u32 = 0xCF4C_ED3E;
+/// Protocol version this build speaks.
+pub const VERSION: u16 = 1;
+/// Request frame type byte.
+pub const FTYPE_REQUEST: u8 = 1;
+/// Response frame type byte.
+pub const FTYPE_RESPONSE: u8 = 2;
+/// Default cap on request frame bodies the server will read. Requests
+/// are ~50 bytes; anything near this is hostile or corrupt.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 20;
+/// Cap on response frame bodies a client will read (response payloads
+/// carry workload output, which is legitimately megabytes).
+pub const RESPONSE_MAX_FRAME: usize = 1 << 26;
+
+/// Validation caps: largest unit count a single request may ask for.
+pub const MAX_UNITS: usize = 1 << 22;
+/// Validation caps: largest matmul dimension (d² memory).
+pub const MAX_MATMUL_DIM: usize = 1024;
+/// Validation caps: most iterations a single request may ask for.
+pub const MAX_ITERS: usize = 1024;
+
+// ---------------------------------------------------------------------------
+// Typed wire errors
+// ---------------------------------------------------------------------------
+
+/// Every way the edge answers "no" — each with a stable status code
+/// and a faithful payload, so clients see typed errors, not closed
+/// sockets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Frame magic mismatch (payload: the observed magic).
+    BadMagic(u32),
+    /// Unsupported protocol version (payload: the observed version).
+    BadVersion(u16),
+    /// Structurally invalid frame — short body, unknown kind, bad
+    /// enum byte, trailing garbage, out-of-cap shape (payload: why).
+    BadFrame(String),
+    /// Announced frame length over the cap (payload: the length). The
+    /// server closes the connection after answering — framing is lost.
+    TooLarge(u64),
+    /// The overload gate shed this request (trailing-window p99 over
+    /// the lane's budget). Back off and retry.
+    Overloaded,
+    /// The admission queue was full.
+    QueueFull,
+    /// The deadline passed before dispatch; the request was shed.
+    DeadlineExceeded,
+    /// The server is draining; no new requests are accepted.
+    ShuttingDown,
+    /// The batch dispatch failed in the scheduler/backend layer.
+    Execution(String),
+}
+
+impl WireError {
+    /// Stable status-byte encoding.
+    pub fn code(&self) -> u8 {
+        match self {
+            WireError::BadMagic(_) => 1,
+            WireError::BadVersion(_) => 2,
+            WireError::BadFrame(_) => 3,
+            WireError::TooLarge(_) => 4,
+            WireError::Overloaded => 5,
+            WireError::QueueFull => 6,
+            WireError::DeadlineExceeded => 7,
+            WireError::ShuttingDown => 8,
+            WireError::Execution(_) => 9,
+        }
+    }
+
+    /// Detail bytes carried in the response payload.
+    pub fn payload(&self) -> Vec<u8> {
+        match self {
+            WireError::BadMagic(m) => m.to_le_bytes().to_vec(),
+            WireError::BadVersion(v) => v.to_le_bytes().to_vec(),
+            WireError::BadFrame(m) | WireError::Execution(m) => m.as_bytes().to_vec(),
+            WireError::TooLarge(n) => n.to_le_bytes().to_vec(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Rebuild from a status byte + payload (the client side of the
+    /// round trip). Unknown codes and malformed payloads become
+    /// [`WireError::BadFrame`].
+    pub fn from_code(code: u8, payload: &[u8]) -> WireError {
+        let fixed = |n: usize| -> Option<&[u8]> {
+            (payload.len() == n).then_some(payload)
+        };
+        match code {
+            1 => match fixed(4) {
+                Some(b) => WireError::BadMagic(u32::from_le_bytes(b.try_into().unwrap())),
+                None => WireError::BadFrame("BadMagic payload".into()),
+            },
+            2 => match fixed(2) {
+                Some(b) => {
+                    WireError::BadVersion(u16::from_le_bytes(b.try_into().unwrap()))
+                }
+                None => WireError::BadFrame("BadVersion payload".into()),
+            },
+            3 => WireError::BadFrame(String::from_utf8_lossy(payload).into_owned()),
+            4 => match fixed(8) {
+                Some(b) => WireError::TooLarge(u64::from_le_bytes(b.try_into().unwrap())),
+                None => WireError::BadFrame("TooLarge payload".into()),
+            },
+            5 => WireError::Overloaded,
+            6 => WireError::QueueFull,
+            7 => WireError::DeadlineExceeded,
+            8 => WireError::ShuttingDown,
+            9 => WireError::Execution(String::from_utf8_lossy(payload).into_owned()),
+            other => WireError::BadFrame(format!("unknown status code {other}")),
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            WireError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            WireError::BadFrame(m) => write!(f, "malformed frame: {m}"),
+            WireError::TooLarge(n) => write!(f, "frame length {n} over the cap"),
+            WireError::Overloaded => write!(f, "server overloaded; request shed"),
+            WireError::QueueFull => write!(f, "admission queue full"),
+            WireError::DeadlineExceeded => write!(f, "deadline passed; request shed"),
+            WireError::ShuttingDown => write!(f, "server shutting down"),
+            WireError::Execution(m) => write!(f, "execution failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// Workload descriptors
+// ---------------------------------------------------------------------------
+
+/// A wire-encodable description of one workload instance — the shapes
+/// a remote client may ask the zoo to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkloadDesc {
+    Prng { n: usize },
+    Saxpy { n: usize, a: f32 },
+    Reduce { n: usize },
+    Stencil { h: usize, w: usize },
+    Matmul { d: usize },
+}
+
+impl WorkloadDesc {
+    /// Wire kind byte.
+    pub fn kind(&self) -> u8 {
+        match self {
+            WorkloadDesc::Prng { .. } => 1,
+            WorkloadDesc::Saxpy { .. } => 2,
+            WorkloadDesc::Reduce { .. } => 3,
+            WorkloadDesc::Stencil { .. } => 4,
+            WorkloadDesc::Matmul { .. } => 5,
+        }
+    }
+
+    fn encode_params(&self, out: &mut Vec<u8>) {
+        match *self {
+            WorkloadDesc::Prng { n } | WorkloadDesc::Reduce { n } => {
+                out.extend_from_slice(&(n as u64).to_le_bytes());
+            }
+            WorkloadDesc::Saxpy { n, a } => {
+                out.extend_from_slice(&(n as u64).to_le_bytes());
+                out.extend_from_slice(&a.to_bits().to_le_bytes());
+            }
+            WorkloadDesc::Stencil { h, w } => {
+                out.extend_from_slice(&(h as u64).to_le_bytes());
+                out.extend_from_slice(&(w as u64).to_le_bytes());
+            }
+            WorkloadDesc::Matmul { d } => {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+        }
+    }
+
+    fn decode_params(kind: u8, cur: &mut Cur<'_>) -> Result<WorkloadDesc, String> {
+        Ok(match kind {
+            1 => WorkloadDesc::Prng { n: cur.u64()? as usize },
+            2 => WorkloadDesc::Saxpy {
+                n: cur.u64()? as usize,
+                a: f32::from_bits(cur.u32()?),
+            },
+            3 => WorkloadDesc::Reduce { n: cur.u64()? as usize },
+            4 => WorkloadDesc::Stencil {
+                h: cur.u64()? as usize,
+                w: cur.u64()? as usize,
+            },
+            5 => WorkloadDesc::Matmul { d: cur.u64()? as usize },
+            other => return Err(format!("unknown workload kind {other}")),
+        })
+    }
+
+    /// Reject shapes a hostile client could use to blow up memory.
+    pub fn validate(&self) -> Result<(), String> {
+        let in_cap = |what: &str, n: usize| {
+            if n == 0 {
+                Err(format!("{what} must be non-zero"))
+            } else if n > MAX_UNITS {
+                Err(format!("{what} {n} over the {MAX_UNITS} cap"))
+            } else {
+                Ok(())
+            }
+        };
+        match *self {
+            WorkloadDesc::Prng { n } | WorkloadDesc::Reduce { n } => in_cap("n", n),
+            WorkloadDesc::Saxpy { n, a } => {
+                if !a.is_finite() {
+                    return Err("saxpy scale must be finite".into());
+                }
+                in_cap("n", n)
+            }
+            WorkloadDesc::Stencil { h, w } => {
+                in_cap("h", h)?;
+                in_cap("w", w)?;
+                in_cap("h*w", h.saturating_mul(w))
+            }
+            WorkloadDesc::Matmul { d } => {
+                if d == 0 || d > MAX_MATMUL_DIM {
+                    Err(format!("matmul dim {d} outside 1..={MAX_MATMUL_DIM}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Materialise the described workload (caller must have
+    /// [`validate`](Self::validate)d first).
+    pub fn instantiate(&self) -> Arc<dyn Workload> {
+        match *self {
+            WorkloadDesc::Prng { n } => Arc::new(PrngWorkload::new(n)),
+            WorkloadDesc::Saxpy { n, a } => Arc::new(SaxpyWorkload::new(n, a)),
+            WorkloadDesc::Reduce { n } => Arc::new(ReduceWorkload::new(n)),
+            WorkloadDesc::Stencil { h, w } => Arc::new(StencilWorkload::new(h, w)),
+            WorkloadDesc::Matmul { d } => Arc::new(MatmulWorkload::new(d)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+/// One client→server request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Client-chosen correlation id, echoed on the response (responses
+    /// may arrive out of order — many requests ride one connection).
+    pub req_id: u64,
+    pub priority: Priority,
+    /// Completion budget in microseconds from server receipt
+    /// (0 = no deadline).
+    pub deadline_us: u64,
+    /// Iterations to run (1..=[`MAX_ITERS`]).
+    pub iters: u32,
+    pub desc: WorkloadDesc,
+}
+
+impl RequestFrame {
+    /// Deadline budget as a `Duration` (`None` when untagged).
+    pub fn deadline(&self) -> Option<Duration> {
+        (self.deadline_us > 0).then(|| Duration::from_micros(self.deadline_us))
+    }
+
+    /// Encode, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(48);
+        body.extend_from_slice(&MAGIC.to_le_bytes());
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.push(FTYPE_REQUEST);
+        body.extend_from_slice(&self.req_id.to_le_bytes());
+        body.push(self.priority.index() as u8);
+        body.extend_from_slice(&self.deadline_us.to_le_bytes());
+        body.extend_from_slice(&self.iters.to_le_bytes());
+        body.push(self.desc.kind());
+        self.desc.encode_params(&mut body);
+        prefix(body)
+    }
+
+    /// Strict decode of a request body. On error, the best-effort
+    /// `req_id` recovered from the header rides along so the server
+    /// can still correlate its error response (0 when the header never
+    /// got that far).
+    pub fn decode_body(body: &[u8]) -> Result<RequestFrame, (WireError, u64)> {
+        let mut cur = Cur::new(body);
+        let (magic, version, ftype) = decode_header(&mut cur).map_err(|e| (e, 0))?;
+        if magic != MAGIC {
+            return Err((WireError::BadMagic(magic), 0));
+        }
+        if version != VERSION {
+            return Err((WireError::BadVersion(version), 0));
+        }
+        if ftype != FTYPE_REQUEST {
+            return Err((WireError::BadFrame(format!("frame type {ftype}")), 0));
+        }
+        let req_id = cur.u64().map_err(|e| (WireError::BadFrame(e), 0))?;
+        let bad = |e: String| (WireError::BadFrame(e), req_id);
+        let priority = match cur.u8().map_err(&bad)? {
+            0 => Priority::High,
+            1 => Priority::Bulk,
+            other => return Err(bad(format!("priority byte {other}"))),
+        };
+        let deadline_us = cur.u64().map_err(&bad)?;
+        let iters = cur.u32().map_err(&bad)?;
+        if iters == 0 || iters as usize > MAX_ITERS {
+            return Err(bad(format!("iters {iters} outside 1..={MAX_ITERS}")));
+        }
+        let kind = cur.u8().map_err(&bad)?;
+        let desc = WorkloadDesc::decode_params(kind, &mut cur).map_err(&bad)?;
+        cur.finish().map_err(&bad)?;
+        desc.validate().map_err(&bad)?;
+        Ok(RequestFrame { req_id, priority, deadline_us, iters, desc })
+    }
+}
+
+/// One server→client response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    /// The request's correlation id, echoed back.
+    pub req_id: u64,
+    /// Output bytes (bit-identical to an in-process run) or the typed
+    /// refusal.
+    pub result: Result<Vec<u8>, WireError>,
+}
+
+impl ResponseFrame {
+    /// Encode, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let (status, payload) = match &self.result {
+            Ok(bytes) => (0u8, bytes.clone()),
+            Err(e) => (e.code(), e.payload()),
+        };
+        let mut body = Vec::with_capacity(20 + payload.len());
+        body.extend_from_slice(&MAGIC.to_le_bytes());
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.push(FTYPE_RESPONSE);
+        body.extend_from_slice(&self.req_id.to_le_bytes());
+        body.push(status);
+        body.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        body.extend_from_slice(&payload);
+        prefix(body)
+    }
+
+    /// Strict decode of a response body.
+    pub fn decode_body(body: &[u8]) -> Result<ResponseFrame, WireError> {
+        let mut cur = Cur::new(body);
+        let (magic, version, ftype) = decode_header(&mut cur)?;
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        if ftype != FTYPE_RESPONSE {
+            return Err(WireError::BadFrame(format!("frame type {ftype}")));
+        }
+        let bad = WireError::BadFrame;
+        let req_id = cur.u64().map_err(bad)?;
+        let status = cur.u8().map_err(bad)?;
+        let payload_len = cur.u32().map_err(bad)? as usize;
+        let payload = cur.bytes(payload_len).map_err(bad)?.to_vec();
+        cur.finish().map_err(bad)?;
+        let result = match status {
+            0 => Ok(payload),
+            code => Err(WireError::from_code(code, &payload)),
+        };
+        Ok(ResponseFrame { req_id, result })
+    }
+}
+
+fn decode_header(cur: &mut Cur<'_>) -> Result<(u32, u16, u8), WireError> {
+    let magic = cur.u32().map_err(WireError::BadFrame)?;
+    let version = cur.u16().map_err(WireError::BadFrame)?;
+    let ftype = cur.u8().map_err(WireError::BadFrame)?;
+    Ok((magic, version, ftype))
+}
+
+fn prefix(body: Vec<u8>) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(4 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    frame
+}
+
+// ---------------------------------------------------------------------------
+// Framed I/O
+// ---------------------------------------------------------------------------
+
+/// What [`read_frame`] found on the stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// One complete frame body.
+    Frame(Vec<u8>),
+    /// Clean EOF at a frame boundary (the peer hung up).
+    Eof,
+    /// The announced body length exceeded the cap. Framing is lost —
+    /// answer, then close the connection.
+    TooLarge(u64),
+}
+
+/// Read one length-prefixed frame body (blocking).
+pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<FrameRead> {
+    let mut len_buf = [0u8; 4];
+    if !read_full(r, &mut len_buf)? {
+        return Ok(FrameRead::Eof);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max {
+        return Ok(FrameRead::TooLarge(len as u64));
+    }
+    let mut body = vec![0u8; len];
+    if !read_full(r, &mut body)? {
+        return Ok(FrameRead::Eof);
+    }
+    Ok(FrameRead::Frame(body))
+}
+
+/// Fill `buf` completely; `false` on EOF before the first byte *or*
+/// mid-buffer (a truncated frame is indistinguishable from a hangup to
+/// the reader — both end the connection).
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Ok(false),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Write one already-encoded frame (length prefix included).
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> io::Result<()> {
+    w.write_all(frame)
+}
+
+// ---------------------------------------------------------------------------
+// Cursor
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(end) => {
+                let s = &self.b[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => Err(format!(
+                "need {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.b.len()
+            )),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Strictness: a valid frame consumes its body exactly.
+    fn finish(&self) -> Result<(), String> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes", self.b.len() - self.pos))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_every_kind() {
+        let descs = [
+            WorkloadDesc::Prng { n: 4096 },
+            WorkloadDesc::Saxpy { n: 1024, a: 2.5 },
+            WorkloadDesc::Reduce { n: 2048 },
+            WorkloadDesc::Stencil { h: 32, w: 64 },
+            WorkloadDesc::Matmul { d: 48 },
+        ];
+        for (i, desc) in descs.into_iter().enumerate() {
+            let f = RequestFrame {
+                req_id: 1000 + i as u64,
+                priority: if i % 2 == 0 { Priority::High } else { Priority::Bulk },
+                deadline_us: i as u64 * 500,
+                iters: 3,
+                desc,
+            };
+            let enc = f.encode();
+            let (len, body) = enc.split_at(4);
+            assert_eq!(
+                u32::from_le_bytes(len.try_into().unwrap()) as usize,
+                body.len()
+            );
+            assert_eq!(RequestFrame::decode_body(body).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_ok_and_every_error() {
+        let results: Vec<Result<Vec<u8>, WireError>> = vec![
+            Ok(vec![1, 2, 3, 4]),
+            Ok(Vec::new()),
+            Err(WireError::BadMagic(0xDEAD_BEEF)),
+            Err(WireError::BadVersion(77)),
+            Err(WireError::BadFrame("trailing bytes".into())),
+            Err(WireError::TooLarge(1 << 40)),
+            Err(WireError::Overloaded),
+            Err(WireError::QueueFull),
+            Err(WireError::DeadlineExceeded),
+            Err(WireError::ShuttingDown),
+            Err(WireError::Execution("backend died".into())),
+        ];
+        for (i, result) in results.into_iter().enumerate() {
+            let f = ResponseFrame { req_id: i as u64, result };
+            let enc = f.encode();
+            assert_eq!(ResponseFrame::decode_body(&enc[4..]).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_version_type_and_trailing() {
+        let good = RequestFrame {
+            req_id: 7,
+            priority: Priority::Bulk,
+            deadline_us: 0,
+            iters: 1,
+            desc: WorkloadDesc::Prng { n: 64 },
+        }
+        .encode();
+        let body = &good[4..];
+
+        let mut bad = body.to_vec();
+        bad[0] ^= 0xFF;
+        assert!(matches!(
+            RequestFrame::decode_body(&bad),
+            Err((WireError::BadMagic(_), 0))
+        ));
+
+        let mut bad = body.to_vec();
+        bad[4] = 0xFE;
+        assert!(matches!(
+            RequestFrame::decode_body(&bad),
+            Err((WireError::BadVersion(_), 0))
+        ));
+
+        let mut bad = body.to_vec();
+        bad[6] = 9; // frame type
+        assert!(matches!(
+            RequestFrame::decode_body(&bad),
+            Err((WireError::BadFrame(_), 0))
+        ));
+
+        let mut bad = body.to_vec();
+        bad.push(0);
+        // Trailing garbage still recovers the req_id for correlation.
+        assert!(matches!(
+            RequestFrame::decode_body(&bad),
+            Err((WireError::BadFrame(_), 7))
+        ));
+    }
+
+    #[test]
+    fn validate_caps_hostile_shapes() {
+        assert!(WorkloadDesc::Prng { n: 0 }.validate().is_err());
+        assert!(WorkloadDesc::Prng { n: MAX_UNITS + 1 }.validate().is_err());
+        assert!(WorkloadDesc::Matmul { d: MAX_MATMUL_DIM + 1 }.validate().is_err());
+        assert!(WorkloadDesc::Stencil { h: 1 << 12, w: 1 << 12 }.validate().is_err());
+        assert!(WorkloadDesc::Saxpy { n: 8, a: f32::NAN }.validate().is_err());
+        assert!(WorkloadDesc::Saxpy { n: 8, a: 2.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn truncated_bodies_are_typed_errors_never_panics() {
+        let good = RequestFrame {
+            req_id: 9,
+            priority: Priority::High,
+            deadline_us: 123,
+            iters: 2,
+            desc: WorkloadDesc::Stencil { h: 8, w: 8 },
+        }
+        .encode();
+        let body = &good[4..];
+        for cut in 0..body.len() {
+            let r = RequestFrame::decode_body(&body[..cut]);
+            assert!(r.is_err(), "truncation at {cut} must not decode");
+        }
+    }
+}

@@ -20,10 +20,15 @@
 //!   micro-batching same-kind requests into single request-aligned
 //!   dispatches (bit-identical to unbatched execution), and per-batch +
 //!   service-wide profiling.
+//! * [`edge`] — the network serving tier in front of the service: a
+//!   TCP edge speaking a length-prefixed binary protocol with priority
+//!   lanes, per-tenant fairness, deadline tagging and SLO-aware
+//!   overload control (`cf4rs edge`).
 //! * [`stats`] — statistical screening of the output stream (the
 //!   Dieharder substitution, see DESIGN.md).
 
 pub mod adaptive;
+pub mod edge;
 pub mod pipeline;
 pub mod rng_service;
 pub mod scheduler;
@@ -35,6 +40,7 @@ pub use adaptive::{
     apportion, apportion_capped, plan_proportional, plan_proportional_capped,
     AdaptiveWindow, ServiceMetrics, ShardPlanner,
 };
+pub use edge::{EdgeClient, EdgeOpts, EdgeServer};
 pub use pipeline::{run_double_buffered, PipelineError};
 pub use rng_service::{run_ccl, run_raw, run_v2, RngConfig, RunOutcome, Sink};
 pub use scheduler::{
@@ -44,6 +50,7 @@ pub use scheduler::{
 };
 pub use sem::Semaphore;
 pub use service::{
-    run_batch, BatchOutcome, BatchProf, ComputeService, Response, ResponseHandle,
-    ServiceError, ServiceOpts, ServiceReport, ServiceStats, WorkloadRequest,
+    run_batch, BatchOutcome, BatchProf, ComputeService, Priority, Response,
+    ResponseHandle, ServiceError, ServiceOpts, ServiceReport, ServiceStats,
+    WorkloadRequest,
 };

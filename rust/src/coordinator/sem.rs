@@ -55,6 +55,14 @@ impl Semaphore {
         true
     }
 
+    /// Snapshot of the current permit count. Racy by nature — another
+    /// thread may take or post a permit right after the read — so it is
+    /// only good for advisory decisions (the service's bulk-lane
+    /// high-reserve admission check), never for exact accounting.
+    pub fn available(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+
     /// Non-blocking variant (used by shutdown paths).
     pub fn try_wait(&self) -> bool {
         let mut c = self.count.lock().unwrap();

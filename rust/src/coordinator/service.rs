@@ -24,6 +24,21 @@
 //!   slot (backpressure) while [`ComputeService::try_submit`] returns
 //!   [`ServiceError::QueueFull`] immediately. Both are gated on the
 //!   existing [`Semaphore`] — the same primitive the §5 pipeline uses.
+//! * **Priority lanes + per-tenant fairness** — the admission queue is
+//!   two lanes: [`Priority::High`] requests overtake
+//!   [`Priority::Bulk`] ones at the dispatcher's dequeue point, and
+//!   the bulk lane is deficit-round-robin across tenant ids
+//!   (connection ids at the serving edge), so one tenant's flood
+//!   cannot starve another's trickle. Defaults are bit-transparent:
+//!   a plain [`WorkloadRequest`] is `Bulk`, tenant 0, no deadline —
+//!   exactly the old FIFO behaviour.
+//! * **Deadlines** — a request tagged with
+//!   [`WorkloadRequest::deadline`] that is already past due when the
+//!   dispatcher dequeues it is shed with
+//!   [`ServiceError::DeadlineExceeded`] instead of executed (the
+//!   answer would be useless; the capacity goes to requests that can
+//!   still meet theirs). The shedding clock is injectable
+//!   ([`ServiceOpts::clock`]) so tests drive it deterministically.
 //! * **Micro-batching** — the dispatcher coalesces up to
 //!   [`ServiceOpts::max_batch`] queued requests of the same workload
 //!   kind (same `name()` and iteration count), waiting up to
@@ -105,6 +120,44 @@ use super::sem::Semaphore;
 // Requests, responses, errors
 // ---------------------------------------------------------------------------
 
+/// Which admission lane a request rides in.
+///
+/// `High` requests overtake `Bulk` ones at the dispatcher's dequeue
+/// point (strict priority); `Bulk` requests are served deficit
+/// round-robin across tenants. The default is `Bulk` so existing
+/// callers are bit-transparent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive: dequeued before any bulk request.
+    High,
+    /// Throughput traffic (the default): deficit-round-robin per
+    /// tenant behind the high lane.
+    #[default]
+    Bulk,
+}
+
+impl Priority {
+    /// Number of lanes (the length of per-lane metric arrays).
+    pub const COUNT: usize = 2;
+
+    /// Dense lane index: `High` = 0, `Bulk` = 1 (indexes the per-lane
+    /// arrays on [`ServiceMetrics`]).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Bulk => 1,
+        }
+    }
+
+    /// Short human label (`"high"` / `"bulk"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Bulk => "bulk",
+        }
+    }
+}
+
 /// One unit of work submitted to the service.
 pub struct WorkloadRequest {
     /// The computation to run (shared so the batch can hold it too).
@@ -112,20 +165,56 @@ pub struct WorkloadRequest {
     /// Iterations to run (`None` = the workload's
     /// [`default_iters`](Workload::default_iters)).
     pub iters: Option<usize>,
+    /// Admission lane (`None` = [`ServiceOpts::default_priority`],
+    /// which defaults to [`Priority::Bulk`] — the old behaviour).
+    pub priority: Option<Priority>,
+    /// Absolute completion deadline: a request still queued past this
+    /// instant is shed with [`ServiceError::DeadlineExceeded`] at the
+    /// dispatcher's dequeue point (`None` =
+    /// [`ServiceOpts::default_deadline`], which defaults to none).
+    pub deadline: Option<Instant>,
+    /// Fairness accounting id for the bulk lane's deficit round-robin
+    /// (the serving edge uses the connection id). Tenant 0 — the
+    /// default — is just another tenant; in-process callers that never
+    /// set it all share one FIFO, the old behaviour.
+    pub tenant: u64,
 }
 
 impl WorkloadRequest {
     pub fn new(workload: impl Workload + 'static) -> Self {
-        Self { workload: Arc::new(workload), iters: None }
+        Self::from_arc(Arc::new(workload))
     }
 
     pub fn from_arc(workload: Arc<dyn Workload>) -> Self {
-        Self { workload, iters: None }
+        Self { workload, iters: None, priority: None, deadline: None, tenant: 0 }
     }
 
     /// Override the iteration count.
     pub fn iters(mut self, iters: usize) -> Self {
         self.iters = Some(iters);
+        self
+    }
+
+    /// Ride the given admission lane.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = Some(priority);
+        self
+    }
+
+    /// Set an absolute completion deadline.
+    pub fn deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set a deadline relative to now.
+    pub fn deadline_in(self, budget: Duration) -> Self {
+        self.deadline(Instant::now() + budget)
+    }
+
+    /// Set the fairness tenant id (bulk-lane round-robin key).
+    pub fn tenant(mut self, tenant: u64) -> Self {
+        self.tenant = tenant;
         self
     }
 
@@ -151,6 +240,11 @@ pub enum ServiceError {
     Abandoned,
     /// [`ResponseHandle::wait_timeout`] gave up waiting.
     Timeout,
+    /// The request's deadline had already passed when the dispatcher
+    /// dequeued it — shed instead of executed (the answer would have
+    /// been useless; the capacity goes to requests that can still meet
+    /// theirs).
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -162,6 +256,9 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Execution(m) => write!(f, "batch execution failed: {m}"),
             ServiceError::Abandoned => write!(f, "request abandoned by the service"),
             ServiceError::Timeout => write!(f, "timed out waiting for the response"),
+            ServiceError::DeadlineExceeded => {
+                write!(f, "deadline passed before dispatch; request shed")
+            }
         }
     }
 }
@@ -219,21 +316,63 @@ impl Response {
     }
 }
 
-#[derive(Default)]
+/// Completion callback for [`ComputeService::try_submit_with`] — runs
+/// on the dispatcher thread, so it must be quick (the serving edge's
+/// callbacks just encode a frame and hand it to a writer thread).
+pub type ResponseCallback = Box<dyn FnOnce(Result<Response, ServiceError>) + Send>;
+
+/// What one request's completion slot currently holds.
+enum SlotState {
+    /// Nobody has answered yet; a [`ResponseHandle`] may be waiting.
+    Empty,
+    /// Callback-mode slot ([`ComputeService::try_submit_with`]): the
+    /// first fulfilment consumes the callback instead of parking the
+    /// result for a waiting handle.
+    Callback(ResponseCallback),
+    /// Answered; waiting for the handle to take it.
+    Ready(Result<Response, ServiceError>),
+    /// Taken by the handle, delivered to a callback, or cancelled.
+    Done,
+}
+
 struct Slot {
-    state: Mutex<Option<Result<Response, ServiceError>>>,
+    state: Mutex<SlotState>,
     cv: Condvar,
 }
 
 impl Slot {
+    fn new(cb: Option<ResponseCallback>) -> Self {
+        let state = match cb {
+            Some(cb) => SlotState::Callback(cb),
+            None => SlotState::Empty,
+        };
+        Self { state: Mutex::new(state), cv: Condvar::new() }
+    }
+
     /// First writer wins; later fulfilments (e.g. the Abandoned guard
-    /// after a normal answer) are no-ops.
+    /// after a normal answer) are no-ops. Callback-mode slots run the
+    /// callback (outside the lock) instead of parking the result.
     fn fulfill(&self, r: Result<Response, ServiceError>) {
         let mut st = self.state.lock().unwrap();
-        if st.is_none() {
-            *st = Some(r);
-            self.cv.notify_all();
+        match std::mem::replace(&mut *st, SlotState::Done) {
+            SlotState::Empty => {
+                *st = SlotState::Ready(r);
+                self.cv.notify_all();
+            }
+            SlotState::Callback(cb) => {
+                drop(st);
+                cb(r);
+            }
+            prev @ SlotState::Ready(_) => *st = prev,
+            SlotState::Done => {}
         }
+    }
+
+    /// Defuse a slot whose request never reached the queue: neither the
+    /// callback nor the Abandoned drop-guard must fire when admission
+    /// itself failed — the admission error IS the answer.
+    fn cancel(&self) {
+        *self.state.lock().unwrap() = SlotState::Done;
     }
 }
 
@@ -246,10 +385,13 @@ impl ResponseHandle {
     /// Block until the service answers.
     pub fn wait(self) -> Result<Response, ServiceError> {
         let mut st = self.slot.state.lock().unwrap();
-        while st.is_none() {
+        loop {
+            match std::mem::replace(&mut *st, SlotState::Done) {
+                SlotState::Ready(r) => return r,
+                other => *st = other,
+            }
             st = self.slot.cv.wait(st).unwrap();
         }
-        st.take().unwrap()
     }
 
     /// Block up to `dur`; [`ServiceError::Timeout`] if the service has
@@ -257,19 +399,22 @@ impl ResponseHandle {
     pub fn wait_timeout(self, dur: Duration) -> Result<Response, ServiceError> {
         let deadline = Instant::now() + dur;
         let mut st = self.slot.state.lock().unwrap();
-        while st.is_none() {
+        loop {
+            match std::mem::replace(&mut *st, SlotState::Done) {
+                SlotState::Ready(r) => return r,
+                other => *st = other,
+            }
             let Some(left) = deadline.checked_duration_since(Instant::now()) else {
                 return Err(ServiceError::Timeout);
             };
             let (guard, _) = self.slot.cv.wait_timeout(st, left).unwrap();
             st = guard;
         }
-        st.take().unwrap()
     }
 
     /// Has the service answered yet?
     pub fn is_ready(&self) -> bool {
-        self.slot.state.lock().unwrap().is_some()
+        matches!(*self.slot.state.lock().unwrap(), SlotState::Ready(_))
     }
 }
 
@@ -315,7 +460,31 @@ pub struct ServiceOpts {
     /// whole batch. `None` (the default) keeps the scheduler's
     /// fail-fast behavior.
     pub faults: Option<FaultPolicy>,
+    /// Lane for requests that don't set one. The default
+    /// ([`Priority::Bulk`]) keeps every existing `submit()` caller
+    /// bit-transparent: a single-lane FIFO, exactly the old queue.
+    pub default_priority: Priority,
+    /// Deadline budget applied to requests that don't set one (`None`,
+    /// the default = no deadline — nothing is ever shed).
+    pub default_deadline: Option<Duration>,
+    /// Deficit-round-robin quantum for the bulk lane, in workload
+    /// units credited per tenant visit. Larger quanta favour batch
+    /// locality; smaller quanta favour fine-grained fairness.
+    pub drr_quantum: usize,
+    /// Queue slots `try_submit` keeps free for the high lane: a bulk
+    /// request is rejected with [`ServiceError::QueueFull`] while free
+    /// slots ≤ this reserve, so latency traffic can still be admitted
+    /// when bulk traffic has the queue nearly full. 0 (the default)
+    /// disables the reserve. Blocking `submit` is unaffected.
+    pub high_reserve: usize,
+    /// Clock the dispatcher reads for deadline shedding — injectable
+    /// so tests drive shedding deterministically with a fake clock.
+    /// `None` (the default) uses [`Instant::now`].
+    pub clock: Option<ServiceClock>,
 }
+
+/// Injectable dispatcher clock — see [`ServiceOpts::clock`].
+pub type ServiceClock = Arc<dyn Fn() -> Instant + Send + Sync>;
 
 impl Default for ServiceOpts {
     fn default() -> Self {
@@ -330,6 +499,11 @@ impl Default for ServiceOpts {
             adaptive_shards: false,
             selector: None,
             faults: None,
+            default_priority: Priority::Bulk,
+            default_deadline: None,
+            drr_quantum: 4096,
+            high_reserve: 0,
+            clock: None,
         }
     }
 }
@@ -353,6 +527,9 @@ pub struct ServiceStats {
     pub retries: usize,
     /// Batches in which at least one backend was quarantined.
     pub quarantine_events: usize,
+    /// Requests shed at the dequeue point because their deadline had
+    /// already passed (both lanes).
+    pub deadline_shed: usize,
 }
 
 /// What [`ComputeService::shutdown`] returns.
@@ -747,6 +924,15 @@ struct Pending {
     /// Service-unique id assigned at admission; tags the request's
     /// shards (`svc.req-<id>.`) so its profile slice is exact.
     req_id: u64,
+    /// Resolved admission lane.
+    priority: Priority,
+    /// Resolved absolute deadline (None = never shed).
+    deadline: Option<Instant>,
+    /// Bulk-lane fairness key.
+    tenant: u64,
+    /// Cached [`Workload::units`] — the DRR cost of dequeuing this
+    /// request.
+    units: usize,
 }
 
 impl Pending {
@@ -768,8 +954,130 @@ impl Drop for Pending {
     }
 }
 
+/// The two-lane admission queue at the dispatcher's dequeue point.
+///
+/// The high lane is a plain FIFO always served first. The bulk lane is
+/// a set of per-tenant FIFOs served deficit round-robin in workload
+/// units: each visit credits the front tenant
+/// [`ServiceOpts::drr_quantum`] units, and a tenant dequeues only when
+/// its accumulated deficit covers the front request's unit cost — so a
+/// tenant flooding big requests cannot starve another's trickle of
+/// small ones, yet a lone tenant keeps plain FIFO latency (its requests
+/// are never held back when no one else is waiting).
+struct LaneQueues {
+    high: VecDeque<Pending>,
+    /// Per-tenant bulk FIFOs; a tenant has an entry here (and in
+    /// `deficit`) iff it is in `ring`.
+    bulk: BTreeMap<u64, VecDeque<Pending>>,
+    /// Round-robin order over active bulk tenants.
+    ring: VecDeque<u64>,
+    /// Per-tenant DRR deficit, in workload units.
+    deficit: BTreeMap<u64, usize>,
+    quantum: usize,
+    len: usize,
+}
+
+impl LaneQueues {
+    fn new(quantum: usize) -> Self {
+        Self {
+            high: VecDeque::new(),
+            bulk: BTreeMap::new(),
+            ring: VecDeque::new(),
+            deficit: BTreeMap::new(),
+            quantum: quantum.max(1),
+            len: 0,
+        }
+    }
+
+    fn push(&mut self, p: Pending) {
+        self.len += 1;
+        match p.priority {
+            Priority::High => self.high.push_back(p),
+            Priority::Bulk => {
+                let t = p.tenant;
+                if !self.bulk.contains_key(&t) {
+                    self.bulk.insert(t, VecDeque::new());
+                    self.deficit.insert(t, 0);
+                    self.ring.push_back(t);
+                }
+                self.bulk.get_mut(&t).expect("tenant queue just ensured").push_back(p);
+            }
+        }
+    }
+
+    /// Dequeue the next request under the lane discipline: high lane
+    /// first, then DRR over bulk tenants.
+    fn pop_next(&mut self) -> Option<Pending> {
+        if let Some(p) = self.high.pop_front() {
+            self.len -= 1;
+            return Some(p);
+        }
+        // DRR: every rotation credits one tenant a quantum, so some
+        // tenant's deficit eventually covers its front cost and the
+        // loop terminates.
+        while let Some(&t) = self.ring.front() {
+            let q = self.bulk.get_mut(&t).expect("ring tenants have a queue");
+            let Some(front) = q.front() else {
+                self.retire(t);
+                continue;
+            };
+            let cost = front.units.max(1);
+            let d = self.deficit.get_mut(&t).expect("ring tenants have a deficit");
+            // A lone tenant skips the deficit dance — round-robin with
+            // one participant is FIFO, and holding its requests back
+            // would only add latency.
+            if *d >= cost || self.ring.len() == 1 {
+                *d = d.saturating_sub(cost);
+                let p = q.pop_front().expect("front() was Some");
+                self.len -= 1;
+                if q.is_empty() {
+                    self.retire(t);
+                }
+                return Some(p);
+            }
+            *d += self.quantum;
+            self.ring.rotate_left(1);
+        }
+        None
+    }
+
+    /// Remove a queued same-kind request for batch collection — high
+    /// lane first, then bulk tenants in ring order (their deficit is
+    /// not charged: riding an already-paid-for batch is free, which is
+    /// exactly why coalescing is worth it).
+    fn take_key(&mut self, key: (&'static str, usize)) -> Option<Pending> {
+        if let Some(pos) = self.high.iter().position(|p| p.key() == key) {
+            self.len -= 1;
+            return self.high.remove(pos);
+        }
+        for i in 0..self.ring.len() {
+            let t = self.ring[i];
+            let q = self.bulk.get_mut(&t).expect("ring tenants have a queue");
+            if let Some(pos) = q.iter().position(|p| p.key() == key) {
+                let p = q.remove(pos);
+                self.len -= 1;
+                if q.is_empty() {
+                    self.retire(t);
+                }
+                return p;
+            }
+        }
+        None
+    }
+
+    /// Drop a drained tenant from the rotation; its deficit resets (a
+    /// returning tenant starts from zero credit like everyone else).
+    fn retire(&mut self, t: u64) {
+        self.bulk.remove(&t);
+        self.deficit.remove(&t);
+        if let Some(pos) = self.ring.iter().position(|&x| x == t) {
+            self.ring.remove(pos);
+        }
+    }
+}
+
 struct ServiceShared {
-    queue: Mutex<VecDeque<Pending>>,
+    queue: Mutex<LaneQueues>,
     /// Posted once per enqueued request (plus once at shutdown).
     ready: Semaphore,
     /// Admission permits — one per free queue slot.
@@ -793,6 +1101,28 @@ struct ServiceShared {
     pool: Arc<BufferPool>,
     /// Every profiled batch's event records (service-wide aggregation).
     prof_infos: Mutex<Vec<ProfInfo>>,
+}
+
+impl ServiceShared {
+    /// The dispatcher's notion of now ([`ServiceOpts::clock`] override
+    /// for tests, else the real clock).
+    fn now(&self) -> Instant {
+        match &self.opts.clock {
+            Some(c) => c(),
+            None => Instant::now(),
+        }
+    }
+
+    fn expired(&self, p: &Pending, now: Instant) -> bool {
+        p.deadline.is_some_and(|d| now > d)
+    }
+
+    /// Answer a dequeued-but-expired request with the typed shed error
+    /// and record it against its lane.
+    fn shed_deadline(&self, p: &Pending) {
+        self.metrics.shed_deadline[p.priority.index()].inc();
+        p.fulfill(Err(ServiceError::DeadlineExceeded));
+    }
 }
 
 /// A persistent, thread-safe compute service — see the [module
@@ -839,8 +1169,9 @@ impl ComputeService {
                 planner.prime(&b.name(), hint);
             }
         }
+        let queue = LaneQueues::new(opts.drr_quantum);
         let shared = Arc::new(ServiceShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(queue),
             ready: Semaphore::new(0),
             slots: Semaphore::new(opts.queue_cap.max(1)),
             stopping: AtomicBool::new(false),
@@ -863,7 +1194,7 @@ impl ComputeService {
     /// Submit a request, blocking while the admission queue is full
     /// (backpressure).
     pub fn submit(&self, req: WorkloadRequest) -> Result<ResponseHandle, ServiceError> {
-        self.admit(req, true)
+        self.admit(req, true, None).map(|(slot, _)| ResponseHandle { slot })
     }
 
     /// Submit without blocking; [`ServiceError::QueueFull`] when the
@@ -872,14 +1203,29 @@ impl ComputeService {
         &self,
         req: WorkloadRequest,
     ) -> Result<ResponseHandle, ServiceError> {
-        self.admit(req, false)
+        self.admit(req, false, None).map(|(slot, _)| ResponseHandle { slot })
+    }
+
+    /// Submit without blocking, delivering the response to `cb` on the
+    /// dispatcher thread instead of through a handle — the serving
+    /// edge's path: thousands of in-flight requests with no parked
+    /// waiter threads. Returns the admitted request's service id. On
+    /// admission failure the callback is dropped unfired — the
+    /// returned error IS the answer, and the caller replies itself.
+    pub fn try_submit_with(
+        &self,
+        req: WorkloadRequest,
+        cb: ResponseCallback,
+    ) -> Result<u64, ServiceError> {
+        self.admit(req, false, Some(cb)).map(|(_, req_id)| req_id)
     }
 
     fn admit(
         &self,
         req: WorkloadRequest,
         block: bool,
-    ) -> Result<ResponseHandle, ServiceError> {
+        cb: Option<ResponseCallback>,
+    ) -> Result<(Arc<Slot>, u64), ServiceError> {
         let iters = req.resolved_iters();
         if req.workload.units() == 0 {
             return Err(ServiceError::Invalid("workload has zero units".into()));
@@ -890,18 +1236,39 @@ impl ComputeService {
         if self.shared.stopping.load(Ordering::SeqCst) {
             return Err(ServiceError::ShuttingDown);
         }
+        let priority = req.priority.unwrap_or(self.shared.opts.default_priority);
         if block {
             self.shared.slots.wait();
-        } else if !self.shared.slots.try_wait() {
-            return Err(ServiceError::QueueFull);
+        } else {
+            // The high-reserve check is advisory (the count is a racy
+            // snapshot), which is fine: it only has to bias rejection
+            // toward bulk traffic, not enforce an exact floor.
+            if priority == Priority::Bulk
+                && self.shared.opts.high_reserve > 0
+                && self.shared.slots.available() <= self.shared.opts.high_reserve
+            {
+                return Err(ServiceError::QueueFull);
+            }
+            if !self.shared.slots.try_wait() {
+                return Err(ServiceError::QueueFull);
+            }
         }
-        let slot = Arc::new(Slot::default());
+        let deadline = req
+            .deadline
+            .or_else(|| self.shared.opts.default_deadline.map(|d| self.shared.now() + d));
+        let units = req.workload.units();
+        let slot = Arc::new(Slot::new(cb));
+        let req_id = self.shared.next_req_id.fetch_add(1, Ordering::SeqCst);
         let pending = Pending {
             workload: req.workload,
             iters,
             slot: slot.clone(),
             submitted: Instant::now(),
-            req_id: self.shared.next_req_id.fetch_add(1, Ordering::SeqCst),
+            req_id,
+            priority,
+            deadline,
+            tenant: req.tenant,
+            units,
         };
         {
             // Re-check shutdown *inside* the queue critical section:
@@ -914,9 +1281,13 @@ impl ComputeService {
             if self.shared.stopping.load(Ordering::SeqCst) {
                 drop(q);
                 self.shared.slots.post();
+                // The error return is this request's answer; defuse the
+                // slot so neither the callback nor the Abandoned guard
+                // fires when `pending` drops here.
+                pending.slot.cancel();
                 return Err(ServiceError::ShuttingDown);
             }
-            q.push_back(pending);
+            q.push(pending);
             // Inside the critical section, so the dispatcher (which
             // decrements under the same lock) can never observe the
             // pop before the push and drive the gauge negative.
@@ -924,7 +1295,7 @@ impl ComputeService {
             self.shared.metrics.queue_depth.add(1);
         }
         self.shared.ready.post();
-        Ok(ResponseHandle { slot })
+        Ok((slot, req_id))
     }
 
     /// Snapshot of the running totals — a read over the lock-free
@@ -939,6 +1310,7 @@ impl ComputeService {
             errors: m.errors.get() as usize,
             retries: m.retries.get() as usize,
             quarantine_events: m.quarantine_events.get() as usize,
+            deadline_shed: m.shed_deadline.iter().map(|c| c.get() as usize).sum(),
         }
     }
 
@@ -1019,13 +1391,28 @@ fn dispatcher_loop(registry: Registry, sh: Arc<ServiceShared>) {
                 continue;
             }
         }
-        let first = {
-            let mut q = sh.queue.lock().unwrap();
-            let p = q.pop_front();
-            if p.is_some() {
-                sh.metrics.queue_depth.sub(1);
+        let first = loop {
+            let popped = {
+                let mut q = sh.queue.lock().unwrap();
+                let p = q.pop_next();
+                if p.is_some() {
+                    sh.metrics.queue_depth.sub(1);
+                }
+                p
+            };
+            let Some(p) = popped else { break None };
+            sh.slots.post();
+            if sh.expired(&p, sh.now()) {
+                // Shed at the dequeue point: answer the typed error and
+                // keep popping. The extra item consumed here settles
+                // against its own `ready` permit; a post still in
+                // flight is tolerated (it surfaces as a spurious
+                // main-loop wake, which finds the queue empty).
+                sh.shed_deadline(&p);
+                let _ = sh.ready.try_wait();
+                continue;
             }
-            p
+            break Some(p);
         };
         let Some(first) = first else {
             if draining {
@@ -1035,7 +1422,6 @@ fn dispatcher_loop(registry: Registry, sh: Arc<ServiceShared>) {
             // its permit late. Nothing to do.
             continue;
         };
-        sh.slots.post();
         let batch = collect_batch(&sh, first, draining);
         execute_batch(&registry, &sh, batch, batch_id);
         batch_id += 1;
@@ -1067,13 +1453,11 @@ fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pend
     while batch.len() < sh.opts.max_batch {
         let taken = {
             let mut q = sh.queue.lock().unwrap();
-            match q.iter().position(|p| p.key() == key) {
-                Some(pos) => {
-                    sh.metrics.queue_depth.sub(1);
-                    q.remove(pos)
-                }
-                None => None,
+            let p = q.take_key(key);
+            if p.is_some() {
+                sh.metrics.queue_depth.sub(1);
             }
+            p
         };
         if let Some(p) = taken {
             // Settle the taken item's `ready` permit: prefer one we
@@ -1085,6 +1469,13 @@ fn collect_batch(sh: &ServiceShared, first: Pending, draining: bool) -> Vec<Pend
                 let _ = sh.ready.try_wait();
             }
             sh.slots.post();
+            if sh.expired(&p, sh.now()) {
+                // A straggler that already blew its deadline is shed,
+                // not batched (and doesn't count as an arrival for the
+                // adaptive window — it never rides a batch).
+                sh.shed_deadline(&p);
+                continue;
+            }
             if adaptive {
                 let now = Instant::now();
                 let gap = now.duration_since(last_arrival).as_nanos() as u64;
@@ -1243,9 +1634,9 @@ fn execute_batch(
             // `Mutex<ServiceStats>` update provided).
             let latencies: Vec<Duration> =
                 batch.iter().map(|p| p.submitted.elapsed()).collect();
-            for &latency in &latencies {
+            for (p, &latency) in batch.iter().zip(&latencies) {
                 sh.metrics.answered.inc();
-                sh.metrics.record_latency(latency);
+                sh.metrics.record_latency(latency, p.priority);
             }
             for (i, ((p, bytes), latency)) in
                 batch.iter().zip(out.outputs).zip(latencies).enumerate()

@@ -1,0 +1,856 @@
+//! `bench edge` — the serving-edge cell: an **open-loop** load
+//! generator against a live `cf4rs edge` server.
+//!
+//! Open-loop means senders fire on a fixed arrival schedule
+//! (`t0 + k/rate`) and never wait for responses, so a slow server
+//! cannot slow the offered load down — the backlog it causes is
+//! *measured* (latency from the scheduled arrival time, the standard
+//! guard against coordinated omission) instead of hidden.
+//!
+//! Three scenarios, each against a fresh server (fresh trailing-latency
+//! window):
+//!
+//! 1. **underload** — mixed lanes well under capacity on the default
+//!    registry. Gate: every response present, bit-identical to the host
+//!    oracle, zero shed.
+//! 2. **mixed** — a bulk flood (large PRNG requests, offered load >
+//!    capacity on a deterministically throttled device) plus a stream
+//!    of small high-priority probes of a *different* kind (so they
+//!    never coalesce into the flood's batches). The overload gate is
+//!    parked. Gate: high p99 strictly below bulk p99 — the priority
+//!    lane visibly overtakes the backlog. A deadline-tagged bulk lane
+//!    rides along to demonstrate deadline shedding in the report.
+//! 3. **overload** — the same flood against a tight bulk p99 budget, a
+//!    loose high budget and a reserved admission slice. Gate: bulk
+//!    sheds (> 0), high does not (or at a strictly lower rate) — the
+//!    SLO discipline sheds bulk first.
+//!
+//! The server runs as a **subprocess** (`current_exe() edge --port 0`,
+//! port parsed from the `EDGE LISTENING` announce line) when the
+//! harness itself was started as `cf4rs bench …`; anywhere else (unit
+//! tests, odd embeddings) it falls back in-process. Which mode ran is
+//! recorded in the JSON.
+//!
+//! Writes `edge.md` + `BENCH_edge.json` (schema
+//! [`SCHEMA`](self::SCHEMA)); CI greps the gate booleans.
+
+use std::io::BufRead;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::backend::{Backend, BackendRegistry, SimBackend, ThrottledBackend};
+use crate::coordinator::edge::client::Received;
+use crate::coordinator::edge::proto::{RequestFrame, WireError, WorkloadDesc};
+use crate::coordinator::edge::{EdgeClient, EdgeOpts, EdgeServer};
+use crate::coordinator::service::{Priority, ServiceOpts};
+use crate::rawcl::types::DeviceId;
+use crate::workload::Workload;
+
+use super::json_escape;
+use super::service::percentile;
+
+/// Version tag of `BENCH_edge.json`. Bump on layout changes so trend
+/// tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-edge/1";
+
+/// How long a receiver waits for a missing response before declaring
+/// it lost (generous: the drain guarantee answers everything).
+const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// Server under test: subprocess when possible, in-process otherwise
+// ---------------------------------------------------------------------------
+
+/// Everything that parameterises one server instance — the single
+/// source of truth for both the subprocess argv and the in-process
+/// [`EdgeOpts`].
+struct ServerCfg {
+    queue_cap: usize,
+    max_batch: usize,
+    window_us: u64,
+    high_budget_ms: u64,
+    bulk_budget_ms: u64,
+    min_gate_samples: u64,
+    high_reserve: usize,
+    /// `Some(rate)` swaps the registry for one throttled sim device —
+    /// a fixed, small capacity the flood can saturate on any machine.
+    throttle_ns: Option<u64>,
+}
+
+enum ServerHandle {
+    Child(std::process::Child),
+    Local(Box<EdgeServer>),
+}
+
+struct Server {
+    addr: String,
+    handle: ServerHandle,
+    mode: &'static str,
+}
+
+/// Subprocess mode is only sound when this process *is* the `cf4rs`
+/// binary (argv[1] == "bench") — re-executing a test binary with
+/// `edge` argv would run its test filter, not a server.
+fn subprocess_mode() -> bool {
+    std::env::args().nth(1).as_deref() == Some("bench")
+}
+
+fn start_server(cfg: &ServerCfg) -> Result<Server, String> {
+    if subprocess_mode() {
+        match start_child(cfg) {
+            Ok(s) => return Ok(s),
+            Err(e) => eprintln!("  edge: subprocess spawn failed ({e}); running in-process"),
+        }
+    }
+    start_local(cfg)
+}
+
+fn start_child(cfg: &ServerCfg) -> Result<Server, String> {
+    use std::process::{Command, Stdio};
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("edge")
+        .args(["--port", "0"])
+        .args(["--queue-cap", &cfg.queue_cap.to_string()])
+        .args(["--max-batch", &cfg.max_batch.to_string()])
+        .args(["--window-us", &cfg.window_us.to_string()])
+        .args(["--high-budget-ms", &cfg.high_budget_ms.to_string()])
+        .args(["--bulk-budget-ms", &cfg.bulk_budget_ms.to_string()])
+        .args(["--min-gate-samples", &cfg.min_gate_samples.to_string()])
+        .args(["--high-reserve", &cfg.high_reserve.to_string()])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    if let Some(ns) = cfg.throttle_ns {
+        cmd.args(["--throttle-ns", &ns.to_string()]);
+    }
+    let mut child = cmd.spawn().map_err(|e| format!("spawn: {e}"))?;
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let mut line = String::new();
+    let read = std::io::BufReader::new(stdout).read_line(&mut line);
+    let addr = match read {
+        Ok(_) => line.trim().strip_prefix("EDGE LISTENING ").map(str::to_string),
+        Err(_) => None,
+    };
+    match addr {
+        Some(addr) if !addr.is_empty() => {
+            Ok(Server { addr, handle: ServerHandle::Child(child), mode: "subprocess" })
+        }
+        _ => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(format!("no announce line (got {:?})", line.trim()))
+        }
+    }
+}
+
+fn start_local(cfg: &ServerCfg) -> Result<Server, String> {
+    let registry = Arc::new(match cfg.throttle_ns {
+        Some(rate) => {
+            let reg = BackendRegistry::new();
+            let inner: Arc<dyn Backend> =
+                Arc::new(SimBackend::new(DeviceId(1)).expect("sim device 1"));
+            reg.register(Arc::new(ThrottledBackend::new(inner, rate)));
+            reg
+        }
+        None => BackendRegistry::with_default_backends(),
+    });
+    let opts = EdgeOpts {
+        service: ServiceOpts {
+            queue_cap: cfg.queue_cap,
+            max_batch: cfg.max_batch,
+            batch_window: Duration::from_micros(cfg.window_us),
+            high_reserve: cfg.high_reserve,
+            ..ServiceOpts::default()
+        },
+        registry: Some(registry),
+        high_p99_budget: Duration::from_millis(cfg.high_budget_ms),
+        bulk_p99_budget: Duration::from_millis(cfg.bulk_budget_ms),
+        min_gate_samples: cfg.min_gate_samples,
+        ..EdgeOpts::default()
+    };
+    let server = EdgeServer::start(0, opts).map_err(|e| format!("bind: {e}"))?;
+    Ok(Server {
+        addr: server.local_addr().to_string(),
+        handle: ServerHandle::Local(Box::new(server)),
+        mode: "in-process",
+    })
+}
+
+/// Stop the server; `Err` describes an unclean exit.
+fn stop_server(server: Server) -> Result<(), String> {
+    match server.handle {
+        ServerHandle::Local(s) => {
+            s.shutdown();
+            Ok(())
+        }
+        ServerHandle::Child(mut child) => {
+            // Closing stdin is the subprocess's drain signal.
+            drop(child.stdin.take());
+            let t0 = Instant::now();
+            loop {
+                match child.try_wait() {
+                    Ok(Some(status)) if status.success() => return Ok(()),
+                    Ok(Some(status)) => return Err(format!("server exited {status}")),
+                    Ok(None) if t0.elapsed() > Duration::from_secs(30) => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        return Err("server did not drain within 30 s; killed".into());
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_millis(50)),
+                    Err(e) => {
+                        let _ = child.kill();
+                        return Err(format!("waiting on server: {e}"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop lanes
+// ---------------------------------------------------------------------------
+
+/// One lane of offered load: `conns` connections, each firing
+/// `per_conn` identical requests at `rate_hz` on a fixed schedule.
+#[derive(Clone, Copy)]
+struct LaneSpec {
+    label: &'static str,
+    priority: Priority,
+    desc: WorkloadDesc,
+    iters: u32,
+    conns: usize,
+    per_conn: usize,
+    rate_hz: f64,
+    /// 0 = untagged.
+    deadline_us: u64,
+}
+
+/// Merged per-lane tallies.
+#[derive(Default)]
+struct LaneOutcome {
+    sent: usize,
+    ok: usize,
+    /// Typed refusals: `Overloaded`, `QueueFull`, `DeadlineExceeded`.
+    shed: usize,
+    /// Everything else that is not a bit-identical answer: execution
+    /// errors, undecodable frames, lost connections, lost responses.
+    errors: usize,
+    mismatches: usize,
+    /// Sorted after merge; from the *scheduled* send time.
+    latencies_ms: Vec<f64>,
+}
+
+impl LaneOutcome {
+    fn absorb(&mut self, other: LaneOutcome) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.mismatches += other.mismatches;
+        self.latencies_ms.extend(other.latencies_ms);
+    }
+
+    fn p_ms(&self, q: f64) -> f64 {
+        percentile(&self.latencies_ms, q)
+    }
+
+    fn shed_rate(&self) -> f64 {
+        if self.sent == 0 { 0.0 } else { self.shed as f64 / self.sent as f64 }
+    }
+}
+
+struct ScenarioOutcome {
+    name: &'static str,
+    mode: &'static str,
+    wall_s: f64,
+    lanes: Vec<(LaneSpec, LaneOutcome)>,
+    /// Setup/teardown failures (connection refused, unclean drain…).
+    errors: Vec<String>,
+}
+
+impl ScenarioOutcome {
+    fn lane(&self, label: &str) -> Option<&LaneOutcome> {
+        self.lanes.iter().find(|(s, _)| s.label == label).map(|(_, o)| o)
+    }
+
+    fn total_shed(&self) -> usize {
+        self.lanes.iter().map(|(_, o)| o.shed).sum()
+    }
+}
+
+/// One connection's sender/receiver pair. The sender fires on the
+/// fixed schedule and never waits; the receiver correlates by request
+/// id, validates payload bytes against `expect` and measures latency
+/// from the scheduled arrival time.
+fn run_conn(addr: &str, lane: LaneSpec, expect: &[u8]) -> Result<LaneOutcome, String> {
+    let mut send_cli = EdgeClient::connect(addr).map_err(|e| format!("connect: {e}"))?;
+    let mut recv_cli = send_cli.try_clone().map_err(|e| format!("clone: {e}"))?;
+    recv_cli
+        .set_recv_timeout(Some(RECV_TIMEOUT))
+        .map_err(|e| format!("timeout: {e}"))?;
+    let t0 = Instant::now();
+    let sched = |k: usize| t0 + Duration::from_secs_f64(k as f64 / lane.rate_hz);
+
+    std::thread::scope(|scope| {
+        let sender = scope.spawn(move || {
+            let mut sent = 0usize;
+            for k in 0..lane.per_conn {
+                if let Some(wait) = sched(k).checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                let frame = RequestFrame {
+                    req_id: k as u64,
+                    priority: lane.priority,
+                    deadline_us: lane.deadline_us,
+                    iters: lane.iters,
+                    desc: lane.desc,
+                };
+                if send_cli.send(&frame).is_err() {
+                    break;
+                }
+                sent += 1;
+            }
+            sent
+        });
+
+        let receiver = scope.spawn(move || {
+            let mut o = LaneOutcome::default();
+            let mut got = 0usize;
+            while got < lane.per_conn {
+                match recv_cli.recv() {
+                    Ok(Ok(Received::Response(r))) => {
+                        got += 1;
+                        match r.result {
+                            Ok(bytes) if bytes == expect => {
+                                o.ok += 1;
+                                let lat = Instant::now()
+                                    .saturating_duration_since(sched(r.req_id as usize));
+                                o.latencies_ms.push(lat.as_secs_f64() * 1e3);
+                            }
+                            Ok(_) => o.mismatches += 1,
+                            Err(
+                                WireError::Overloaded
+                                | WireError::QueueFull
+                                | WireError::DeadlineExceeded,
+                            ) => o.shed += 1,
+                            Err(_) => o.errors += 1,
+                        }
+                    }
+                    Ok(Ok(Received::Closed)) => {
+                        o.errors += lane.per_conn - got;
+                        break;
+                    }
+                    Ok(Err(_undecodable)) => {
+                        got += 1;
+                        o.errors += 1;
+                    }
+                    Err(_timeout_or_io) => {
+                        o.errors += lane.per_conn - got;
+                        break;
+                    }
+                }
+            }
+            o
+        });
+
+        let sent = sender.join().expect("sender panicked");
+        let mut o = receiver.join().expect("receiver panicked");
+        o.sent = sent;
+        Ok(o)
+    })
+}
+
+/// Run every lane of one scenario concurrently against a fresh server.
+fn run_scenario(name: &'static str, cfg: &ServerCfg, lanes: &[LaneSpec]) -> ScenarioOutcome {
+    let mut errors = Vec::new();
+    let server = match start_server(cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            return ScenarioOutcome {
+                name,
+                mode: "failed",
+                wall_s: 0.0,
+                lanes: Vec::new(),
+                errors: vec![format!("start: {e}")],
+            };
+        }
+    };
+    let mode = server.mode;
+    let addr = server.addr.clone();
+    // The oracle: one reference output per lane (every request in a
+    // lane is the same shape, so one host run covers them all).
+    let expects: Vec<Vec<u8>> = lanes
+        .iter()
+        .map(|l| l.desc.instantiate().reference(l.iters as usize))
+        .collect();
+
+    let t0 = Instant::now();
+    let mut merged: Vec<LaneOutcome> = lanes.iter().map(|_| LaneOutcome::default()).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (li, lane) in lanes.iter().enumerate() {
+            for _ in 0..lane.conns {
+                let (addr, expect) = (&addr, &expects[li]);
+                handles.push((li, scope.spawn(move || run_conn(addr, *lane, expect))));
+            }
+        }
+        for (li, h) in handles {
+            match h.join().expect("connection thread panicked") {
+                Ok(o) => merged[li].absorb(o),
+                Err(e) => errors.push(format!("{}: {e}", lanes[li].label)),
+            }
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    if let Err(e) = stop_server(server) {
+        errors.push(format!("stop: {e}"));
+    }
+    for o in &mut merged {
+        o.latencies_ms.sort_by(f64::total_cmp);
+    }
+    ScenarioOutcome {
+        name,
+        mode,
+        wall_s,
+        lanes: lanes.iter().copied().zip(merged).collect(),
+        errors,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+fn scenario_underload(quick: bool) -> (ServerCfg, Vec<LaneSpec>) {
+    let s = if quick { 1 } else { 3 };
+    let cfg = ServerCfg {
+        queue_cap: 256,
+        max_batch: 16,
+        window_us: 1000,
+        high_budget_ms: 60_000,
+        bulk_budget_ms: 60_000,
+        min_gate_samples: 1_000_000, // gate parked: this cell is about identity
+        high_reserve: 0,
+        throttle_ns: None,
+    };
+    let lanes = vec![
+        LaneSpec {
+            label: "high-saxpy",
+            priority: Priority::High,
+            desc: WorkloadDesc::Saxpy { n: 1024, a: 2.0 },
+            iters: 2,
+            conns: 1,
+            per_conn: 20 * s,
+            rate_hz: 25.0,
+            deadline_us: 0,
+        },
+        LaneSpec {
+            label: "bulk-prng",
+            priority: Priority::Bulk,
+            desc: WorkloadDesc::Prng { n: 4096 },
+            iters: 2,
+            conns: 2,
+            per_conn: 15 * s,
+            rate_hz: 15.0,
+            deadline_us: 0,
+        },
+        LaneSpec {
+            label: "bulk-stencil",
+            priority: Priority::Bulk,
+            desc: WorkloadDesc::Stencil { h: 32, w: 32 },
+            iters: 2,
+            conns: 1,
+            per_conn: 10 * s,
+            rate_hz: 10.0,
+            deadline_us: 0,
+        },
+    ];
+    (cfg, lanes)
+}
+
+/// The flood (PRNG, ~256 KiB touched per request on a 40 µs/KiB
+/// device ⇒ ~20 ms each) is offered at ~80 req/s — utilisation ≈ 1.6,
+/// so its queue grows for the whole run while the small high-priority
+/// probes (different kind: never coalesced into the flood's batches)
+/// keep overtaking at the dispatcher.
+fn scenario_mixed(quick: bool) -> (ServerCfg, Vec<LaneSpec>) {
+    let s = if quick { 1 } else { 3 };
+    let cfg = ServerCfg {
+        queue_cap: 512,
+        max_batch: 4, // bounds how long a probe waits behind an in-flight batch
+        window_us: 1000,
+        high_budget_ms: 60_000,
+        bulk_budget_ms: 60_000,
+        min_gate_samples: 1_000_000, // overload gate parked: pure priority cell
+        high_reserve: 0,
+        throttle_ns: Some(40_000),
+    };
+    let lanes = vec![
+        LaneSpec {
+            label: "high-probe",
+            priority: Priority::High,
+            desc: WorkloadDesc::Saxpy { n: 256, a: 1.5 },
+            iters: 1,
+            conns: 1,
+            per_conn: 20 * s,
+            rate_hz: 20.0,
+            deadline_us: 0,
+        },
+        LaneSpec {
+            label: "bulk-flood",
+            priority: Priority::Bulk,
+            desc: WorkloadDesc::Prng { n: 16384 },
+            iters: 2,
+            conns: 2,
+            per_conn: 30 * s,
+            rate_hz: 40.0,
+            deadline_us: 0,
+        },
+        // Not gated — demonstrates deadline shedding under backlog in
+        // the report (the budget is far below the flood's queueing
+        // delay, so most of these come back DeadlineExceeded).
+        LaneSpec {
+            label: "bulk-deadline",
+            priority: Priority::Bulk,
+            desc: WorkloadDesc::Prng { n: 16384 },
+            iters: 1,
+            conns: 1,
+            per_conn: 10 * s,
+            rate_hz: 20.0,
+            deadline_us: 50_000,
+        },
+    ];
+    (cfg, lanes)
+}
+
+/// The same flood against a 40 ms bulk p99 budget (the flood's own
+/// batches take ~20-80 ms, so the trailing window trips almost
+/// immediately) and a loose 30 s high budget, with 8 admission slots
+/// reserved for the high lane so the flood cannot starve it out of the
+/// queue either.
+fn scenario_overload(quick: bool) -> (ServerCfg, Vec<LaneSpec>) {
+    let s = if quick { 1 } else { 3 };
+    let cfg = ServerCfg {
+        queue_cap: 64,
+        max_batch: 8,
+        window_us: 1000,
+        high_budget_ms: 30_000,
+        bulk_budget_ms: 40,
+        min_gate_samples: 8,
+        high_reserve: 8,
+        throttle_ns: Some(40_000),
+    };
+    let lanes = vec![
+        LaneSpec {
+            label: "high-probe",
+            priority: Priority::High,
+            desc: WorkloadDesc::Saxpy { n: 256, a: 1.5 },
+            iters: 1,
+            conns: 1,
+            per_conn: 20 * s,
+            rate_hz: 20.0,
+            deadline_us: 0,
+        },
+        LaneSpec {
+            label: "bulk-flood",
+            priority: Priority::Bulk,
+            desc: WorkloadDesc::Prng { n: 16384 },
+            iters: 2,
+            conns: 2,
+            per_conn: 40 * s,
+            rate_hz: 50.0,
+            deadline_us: 0,
+        },
+    ];
+    (cfg, lanes)
+}
+
+// ---------------------------------------------------------------------------
+// Gates + rendering
+// ---------------------------------------------------------------------------
+
+struct Gates {
+    identity_ok: bool,
+    priority_ok: bool,
+    shed_ok: bool,
+    gate_ok: bool,
+}
+
+fn evaluate(scenarios: &[ScenarioOutcome]) -> Gates {
+    let by = |name: &str| scenarios.iter().find(|s| s.name == name);
+
+    // Identity: zero mismatches and zero transport/execution errors
+    // anywhere; underload additionally answers *everything* (no shed).
+    let clean = scenarios.iter().all(|s| {
+        s.errors.is_empty()
+            && s.lanes.iter().all(|(_, o)| o.mismatches == 0 && o.errors == 0)
+    });
+    let under_full = by("underload").is_some_and(|s| {
+        s.total_shed() == 0 && s.lanes.iter().all(|(_, o)| o.sent > 0 && o.ok == o.sent)
+    });
+    let identity_ok = clean && under_full;
+
+    // Priority: under the mixed flood, high p99 strictly below bulk p99.
+    let priority_ok = by("mixed").is_some_and(|s| {
+        match (s.lane("high-probe"), s.lane("bulk-flood")) {
+            (Some(h), Some(b)) => {
+                h.ok > 0 && b.ok > 0 && h.p_ms(0.99) < b.p_ms(0.99)
+            }
+            _ => false,
+        }
+    });
+
+    // Shedding: only under overload (underload shed 0 is part of
+    // identity_ok), bulk first — high sheds nothing, or at a strictly
+    // lower rate than bulk.
+    let shed_ok = by("overload").is_some_and(|s| {
+        match (s.lane("high-probe"), s.lane("bulk-flood")) {
+            (Some(h), Some(b)) => {
+                b.shed > 0 && (h.shed == 0 || h.shed_rate() < b.shed_rate())
+            }
+            _ => false,
+        }
+    });
+
+    let gate_ok = identity_ok && priority_ok && shed_ok;
+    Gates { identity_ok, priority_ok, shed_ok, gate_ok }
+}
+
+fn render_md(scenarios: &[ScenarioOutcome], gates: &Gates, quick: bool) -> String {
+    let mut md = String::new();
+    md.push_str("# Serving edge: open-loop load generator\n\n");
+    md.push_str(
+        "Open-loop lanes (fixed arrival schedules, latency measured \
+         from the scheduled arrival time) against a live `cf4rs edge` \
+         server; every successful response validated bit-for-bit \
+         against the host oracle.\n\n",
+    );
+    if quick {
+        md.push_str("_Quick mode (CI): reduced request counts._\n\n");
+    }
+    for s in scenarios {
+        md.push_str(&format!("## Scenario `{}` ({}, {:.2} s)\n\n", s.name, s.mode, s.wall_s));
+        md.push_str(
+            "| lane | prio | sent | ok | shed | err | mism | p50 ms | \
+             p95 ms | p99 ms | goodput/s | shed rate |\n\
+             |---|---|--:|--:|--:|--:|--:|--:|--:|--:|--:|--:|\n",
+        );
+        for (spec, o) in &s.lanes {
+            let goodput = if s.wall_s > 0.0 { o.ok as f64 / s.wall_s } else { 0.0 };
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {:.2} | {:.2} | {:.2} | {:.1} | {:.2} |\n",
+                spec.label,
+                spec.priority.label(),
+                o.sent,
+                o.ok,
+                o.shed,
+                o.errors,
+                o.mismatches,
+                o.p_ms(0.50),
+                o.p_ms(0.95),
+                o.p_ms(0.99),
+                goodput,
+                o.shed_rate(),
+            ));
+        }
+        md.push('\n');
+        for e in &s.errors {
+            md.push_str(&format!("- **error**: {e}\n"));
+        }
+        if !s.errors.is_empty() {
+            md.push('\n');
+        }
+    }
+    md.push_str("## Gates\n\n");
+    let tick = |b: bool| if b { "PASS" } else { "FAIL" };
+    md.push_str(&format!(
+        "- oracle identity (all responses bit-identical, underload \
+         answers everything): **{}**\n",
+        tick(gates.identity_ok)
+    ));
+    md.push_str(&format!(
+        "- priority (mixed: high p99 < bulk p99): **{}**\n",
+        tick(gates.priority_ok)
+    ));
+    md.push_str(&format!(
+        "- shed discipline (overload sheds bulk first, never high): **{}**\n",
+        tick(gates.shed_ok)
+    ));
+    md.push_str(&format!("- overall: **{}**\n", tick(gates.gate_ok)));
+    md
+}
+
+fn render_json(scenarios: &[ScenarioOutcome], gates: &Gates, quick: bool) -> String {
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    j.push_str(&format!("  \"quick\": {quick},\n"));
+    j.push_str("  \"scenarios\": [\n");
+    for (si, s) in scenarios.iter().enumerate() {
+        j.push_str("    {\n");
+        j.push_str(&format!("      \"name\": \"{}\",\n", s.name));
+        j.push_str(&format!("      \"mode\": \"{}\",\n", s.mode));
+        j.push_str(&format!("      \"wall_s\": {:.4},\n", s.wall_s));
+        j.push_str("      \"lanes\": [\n");
+        for (li, (spec, o)) in s.lanes.iter().enumerate() {
+            let goodput = if s.wall_s > 0.0 { o.ok as f64 / s.wall_s } else { 0.0 };
+            j.push_str(&format!(
+                "        {{\"label\": \"{}\", \"priority\": \"{}\", \
+                 \"conns\": {}, \"rate_hz\": {:.1}, \"sent\": {}, \
+                 \"ok\": {}, \"shed\": {}, \"errors\": {}, \
+                 \"mismatches\": {}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+                 \"p99_ms\": {:.3}, \"goodput_rps\": {:.2}, \
+                 \"shed_rate\": {:.4}}}{}\n",
+                spec.label,
+                spec.priority.label(),
+                spec.conns,
+                spec.rate_hz,
+                o.sent,
+                o.ok,
+                o.shed,
+                o.errors,
+                o.mismatches,
+                o.p_ms(0.50),
+                o.p_ms(0.95),
+                o.p_ms(0.99),
+                goodput,
+                o.shed_rate(),
+                if li + 1 == s.lanes.len() { "" } else { "," },
+            ));
+        }
+        j.push_str("      ],\n");
+        j.push_str("      \"errors\": [");
+        for (ei, e) in s.errors.iter().enumerate() {
+            if ei > 0 {
+                j.push_str(", ");
+            }
+            j.push_str(&format!("\"{}\"", json_escape(e)));
+        }
+        j.push_str("]\n");
+        j.push_str(&format!(
+            "    }}{}\n",
+            if si + 1 == scenarios.len() { "" } else { "," }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"gates\": {{\"identity_ok\": {}, \"priority_ok\": {}, \
+         \"shed_ok\": {}, \"gate_ok\": {}}}\n",
+        gates.identity_ok, gates.priority_ok, gates.shed_ok, gates.gate_ok
+    ));
+    j.push_str("}\n");
+    j
+}
+
+/// Run the cell. Returns `(markdown, json, all_gates_passed)`.
+pub fn report(quick: bool) -> (String, String, bool) {
+    let mut scenarios = Vec::new();
+    for (name, (cfg, lanes)) in [
+        ("underload", scenario_underload(quick)),
+        ("mixed", scenario_mixed(quick)),
+        ("overload", scenario_overload(quick)),
+    ] {
+        eprintln!("  edge: scenario {name}...");
+        scenarios.push(run_scenario(name, &cfg, &lanes));
+    }
+    let gates = evaluate(&scenarios);
+    let md = render_md(&scenarios, &gates, quick);
+    let json = render_json(&scenarios, &gates, quick);
+    (md, json, gates.gate_ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The gate logic itself, on synthetic outcomes — the network paths
+    /// are covered by `tests/edge.rs` and the CI bench leg.
+    #[test]
+    fn gates_require_priority_inversion_and_bulk_first_shedding() {
+        fn lane(label: &'static str, priority: Priority) -> LaneSpec {
+            LaneSpec {
+                label,
+                priority,
+                desc: WorkloadDesc::Prng { n: 64 },
+                iters: 1,
+                conns: 1,
+                per_conn: 4,
+                rate_hz: 10.0,
+                deadline_us: 0,
+            }
+        }
+        fn outcome(ok: usize, shed: usize, lat_ms: f64) -> LaneOutcome {
+            LaneOutcome {
+                sent: ok + shed,
+                ok,
+                shed,
+                errors: 0,
+                mismatches: 0,
+                latencies_ms: vec![lat_ms; ok.max(1)],
+            }
+        }
+        let good = vec![
+            ScenarioOutcome {
+                name: "underload",
+                mode: "in-process",
+                wall_s: 1.0,
+                lanes: vec![(lane("high-saxpy", Priority::High), outcome(4, 0, 1.0))],
+                errors: Vec::new(),
+            },
+            ScenarioOutcome {
+                name: "mixed",
+                mode: "in-process",
+                wall_s: 1.0,
+                lanes: vec![
+                    (lane("high-probe", Priority::High), outcome(4, 0, 5.0)),
+                    (lane("bulk-flood", Priority::Bulk), outcome(4, 0, 200.0)),
+                ],
+                errors: Vec::new(),
+            },
+            ScenarioOutcome {
+                name: "overload",
+                mode: "in-process",
+                wall_s: 1.0,
+                lanes: vec![
+                    (lane("high-probe", Priority::High), outcome(4, 0, 5.0)),
+                    (lane("bulk-flood", Priority::Bulk), outcome(2, 2, 30.0)),
+                ],
+                errors: Vec::new(),
+            },
+        ];
+        let g = evaluate(&good);
+        assert!(g.identity_ok && g.priority_ok && g.shed_ok && g.gate_ok);
+
+        // Inverted priorities must fail the priority gate.
+        let mut bad = good;
+        bad[1].lanes[0].1.latencies_ms = vec![300.0; 4];
+        let g = evaluate(&bad);
+        assert!(!g.priority_ok && !g.gate_ok);
+
+        // High-lane shedding at a higher rate than bulk fails the
+        // shed gate.
+        bad[1].lanes[0].1.latencies_ms = vec![5.0; 4];
+        bad[2].lanes[0].1 = outcome(1, 3, 5.0);
+        let g = evaluate(&bad);
+        assert!(!g.shed_ok && !g.gate_ok);
+    }
+
+    #[test]
+    fn json_shape_is_greppable() {
+        let scenarios = vec![ScenarioOutcome {
+            name: "underload",
+            mode: "in-process",
+            wall_s: 0.5,
+            lanes: Vec::new(),
+            errors: vec!["a \"quoted\" failure".into()],
+        }];
+        let gates =
+            Gates { identity_ok: false, priority_ok: false, shed_ok: false, gate_ok: false };
+        let j = render_json(&scenarios, &gates, true);
+        assert!(j.contains("\"schema\": \"cf4rs-bench-edge/1\""));
+        assert!(j.contains("\"gate_ok\": false"));
+        assert!(j.contains("a \\\"quoted\\\" failure"));
+    }
+}

@@ -29,6 +29,14 @@
 //!   bit-identity asserted, ABI/capability negotiation demos, the
 //!   hint-primed warm-start plan, memory-capped planning and the
 //!   buffer-pool before/after (writes `zoo.md` + `BENCH_zoo.json`);
+//! * `bench edge`     — the serving-edge cell: an open-loop
+//!   load generator (fixed arrival schedules, many concurrent
+//!   connections, sender/receiver thread pairs) against a live
+//!   `cf4rs edge` subprocess, every response oracle-validated
+//!   bit-for-bit; gates priority inversion (high p99 < bulk p99 under
+//!   mixed load) and overload shedding (bulk sheds first, and only
+//!   when offered load exceeds capacity) (writes `edge.md` +
+//!   `BENCH_edge.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -36,6 +44,7 @@
 
 pub mod adaptive;
 pub mod backends;
+pub mod edge;
 pub mod figures;
 pub mod loc;
 pub mod microbench;
@@ -81,7 +90,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|service|adaptive|native|zoo|all [--quick]"
+             workloads|service|adaptive|native|zoo|edge|all [--quick]"
         );
         return 2;
     };
@@ -259,6 +268,22 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_edge(quick: bool) -> bool {
+        let (md, json, validated) = edge::report(quick);
+        print!("{md}");
+        // Write both artifacts even when a gate failed — they are the
+        // evidence — but fail the run on any gate.
+        let mut ok = write_result("edge.md", &md);
+        ok &= write_result("BENCH_edge.json", &json);
+        if !validated {
+            eprintln!(
+                "edge: a gate FAILED (oracle identity, high-vs-bulk p99 \
+                 ordering or shed discipline; see table)"
+            );
+        }
+        ok && validated
+    }
+
     let ok = match which.as_str() {
         "loc" => run_loc(),
         "ablation" => run_ablation(quick),
@@ -271,6 +296,7 @@ pub fn main(args: &[String]) -> i32 {
         "adaptive" => run_adaptive(quick),
         "native" => run_native(quick),
         "zoo" => run_zoo(quick),
+        "edge" => run_edge(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -283,7 +309,8 @@ pub fn main(args: &[String]) -> i32 {
             let h = run_adaptive(quick);
             let i = run_native(quick);
             let j = run_zoo(quick);
-            l && a && b && c && d && e && f && g && h && i && j
+            let k = run_edge(quick);
+            l && a && b && c && d && e && f && g && h && i && j && k
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -13,12 +13,19 @@
 //!   batch window and proportional shard planning, `--zoo` serves off
 //!   the heterogeneous plugin device zoo (throttled + faulty +
 //!   memory-capped devices) with the paranoid fault policy;
+//! * `edge`         — run the TCP serving edge in front of the compute
+//!   service: a length-prefixed binary protocol with priority lanes,
+//!   per-tenant fairness, deadline tagging and SLO-aware overload
+//!   control; announces `EDGE LISTENING <addr>` on stdout and serves
+//!   until stdin closes (or `--serve-secs` elapses), then drains
+//!   gracefully;
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5` — plus the backend comparison
 //!   (`backends`), the workload × path matrix (`workloads`), the
 //!   service latency/batching cell (`service`), the adaptive-control
-//!   cell (`adaptive`), the native-tier speedup gate (`native`) and
-//!   the plugin-ABI device-zoo cell (`zoo`).
+//!   cell (`adaptive`), the native-tier speedup gate (`native`), the
+//!   plugin-ABI device-zoo cell (`zoo`) and the serving-edge
+//!   load-generator cell (`edge`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -47,11 +54,18 @@ fn usage() -> i32 {
          \x20      --adaptive sizes the batch window and shard plan online;\n\
          \x20      --zoo serves off the heterogeneous plugin device zoo\n\
          \x20      with fault tolerance + adaptive control forced on)\n\
+         \x20 edge [--port N] [--queue-cap Q] [--max-batch B] [--window-us U]\n\
+         \x20     [--high-budget-ms H] [--bulk-budget-ms L] [--min-gate-samples S]\n\
+         \x20     [--high-reserve R] [--throttle-ns NS] [--serve-secs T]\n\
+         \x20     TCP serving edge (binary protocol, priority lanes,\n\
+         \x20     per-tenant fairness, deadlines, overload shedding);\n\
+         \x20     port 0 = ephemeral, announced as 'EDGE LISTENING addr'\n\
          \x20 bench loc|overhead|figure3|figure5|backends|workloads|service|\n\
-         \x20     adaptive|native|zoo   regenerate paper results, backend\n\
+         \x20     adaptive|native|zoo|edge   regenerate paper results, backend\n\
          \x20     comparison, the (workload x path) matrix, the service cell,\n\
          \x20     the adaptive-control cell, the native-vs-interpreter\n\
-         \x20     speedup gate and the plugin device-zoo cell (--quick)"
+         \x20     speedup gate, the plugin device-zoo cell and the\n\
+         \x20     serving-edge open-loop load-generator cell (--quick)"
     );
     2
 }
@@ -68,6 +82,7 @@ fn main() {
         "plot-events" => plot_events::main(rest),
         "rng" => rng_main(rest),
         "serve" => serve_main(rest),
+        "edge" => edge_main(rest),
         "bench" => harness::main(rest),
         "-h" | "--help" | "help" => usage(),
         other => {
@@ -208,6 +223,155 @@ fn serve_main(args: &[String]) -> i32 {
         return 1;
     }
     eprintln!(" * All responses validated against the host oracle");
+    0
+}
+
+/// `cf4rs edge`: the TCP serving edge in front of the compute service.
+fn edge_main(args: &[String]) -> i32 {
+    use cf4rs::backend::{Backend, BackendRegistry, SimBackend, ThrottledBackend};
+    use cf4rs::coordinator::edge::{EdgeOpts, EdgeServer};
+    use cf4rs::coordinator::ServiceOpts;
+    use cf4rs::rawcl::types::DeviceId;
+    use std::io::{BufRead, Write};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let mut port = 0u16;
+    let mut queue_cap = 64usize;
+    let mut max_batch = 16usize;
+    let mut window_us = 2000u64;
+    let mut high_budget_ms = 2000u64;
+    let mut bulk_budget_ms = 500u64;
+    let mut min_gate_samples = 32u64;
+    let mut high_reserve = 0usize;
+    let mut throttle_ns: Option<u64> = None;
+    let mut serve_secs = 0u64; // 0 = serve until stdin closes
+
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut next = |what: &str| -> Result<String, String> {
+            it.next().cloned().ok_or(format!("{what} needs a value"))
+        };
+        let r: Result<(), String> = (|| {
+            match a.as_str() {
+                "--port" | "-p" => {
+                    port = next("--port")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--queue-cap" => {
+                    queue_cap = next("--queue-cap")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--max-batch" => {
+                    max_batch = next("--max-batch")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--window-us" => {
+                    window_us = next("--window-us")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--high-budget-ms" => {
+                    high_budget_ms =
+                        next("--high-budget-ms")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--bulk-budget-ms" => {
+                    bulk_budget_ms =
+                        next("--bulk-budget-ms")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--min-gate-samples" => {
+                    min_gate_samples =
+                        next("--min-gate-samples")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--high-reserve" => {
+                    high_reserve =
+                        next("--high-reserve")?.parse().map_err(|e| format!("{e}"))?
+                }
+                "--throttle-ns" => {
+                    throttle_ns =
+                        Some(next("--throttle-ns")?.parse().map_err(|e| format!("{e}"))?)
+                }
+                "--serve-secs" => {
+                    serve_secs = next("--serve-secs")?.parse().map_err(|e| format!("{e}"))?
+                }
+                other => return Err(format!("unknown edge option {other:?}")),
+            }
+            Ok(())
+        })();
+        if let Err(e) = r {
+            eprintln!("edge: {e}");
+            return 2;
+        }
+    }
+
+    // `--throttle-ns` swaps the default registry for one deterministic
+    // throttled sim device — a fixed, small capacity the load generator
+    // can saturate on any CI machine.
+    let registry = Arc::new(match throttle_ns {
+        Some(rate) => {
+            let reg = BackendRegistry::new();
+            let inner: Arc<dyn Backend> =
+                Arc::new(SimBackend::new(DeviceId(1)).expect("sim device 1"));
+            reg.register(Arc::new(ThrottledBackend::new(inner, rate)));
+            reg
+        }
+        None => BackendRegistry::with_default_backends(),
+    });
+    let opts = EdgeOpts {
+        service: ServiceOpts {
+            queue_cap,
+            max_batch,
+            batch_window: Duration::from_micros(window_us),
+            high_reserve,
+            ..ServiceOpts::default()
+        },
+        registry: Some(registry),
+        high_p99_budget: Duration::from_millis(high_budget_ms),
+        bulk_p99_budget: Duration::from_millis(bulk_budget_ms),
+        min_gate_samples,
+        ..EdgeOpts::default()
+    };
+    let server = match EdgeServer::start(port, opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("edge: bind failed: {e}");
+            return 1;
+        }
+    };
+    let metrics = server.metrics();
+
+    // The machine-readable announce line a parent process parses to
+    // learn the resolved port. Must be on stdout, must be flushed.
+    println!("EDGE LISTENING {}", server.local_addr());
+    let _ = std::io::stdout().flush();
+    eprintln!(" * Listening on              : {}", server.local_addr());
+    eprintln!(" * Admission queue capacity  : {queue_cap}");
+    eprintln!(" * Micro-batching            : up to {max_batch}/batch, {window_us} us window");
+    eprintln!(" * p99 budgets (high / bulk) : {high_budget_ms} ms / {bulk_budget_ms} ms");
+    if let Some(ns) = throttle_ns {
+        eprintln!(" * Backend                   : throttled sim ({ns} ns/KiB)");
+    }
+
+    if serve_secs > 0 {
+        std::thread::sleep(Duration::from_secs(serve_secs));
+    } else {
+        // Serve until the parent drops our stdin (or a tty user sends
+        // EOF) — the subprocess-friendly shutdown signal.
+        let stdin = std::io::stdin();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match stdin.lock().read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+
+    eprintln!("edge: draining...");
+    let report = server.shutdown();
+    let shed_overload: u64 = metrics.shed_overload.iter().map(|c| c.get() as u64).sum();
+    eprintln!(" * Connections served        : {}", report.connections);
+    eprintln!(" * Requests answered         : {}", report.service.stats.requests);
+    eprintln!(
+        " * Deadline / overload shed  : {} / {}",
+        report.service.stats.deadline_shed, shed_overload
+    );
     0
 }
 

@@ -1,0 +1,367 @@
+//! Serving-edge integration tests: wire-frame round-trips under the
+//! repo's deterministic xorshift fuzzer (adversarial lengths, every
+//! error variant), the priority-inversion regression (a latency probe
+//! overtakes a queued bulk flood), per-tenant DRR fairness, fake-clock
+//! deadline-shed determinism, TCP drain-on-shutdown, and the
+//! [`ServiceOpts`] bit-transparency guarantee for pre-edge callers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use cf4rs::backend::{Backend, BackendRegistry, SimBackend, ThrottledBackend};
+use cf4rs::coordinator::edge::client::Received;
+use cf4rs::coordinator::edge::proto::{
+    RequestFrame, ResponseFrame, WireError, WorkloadDesc, MAX_ITERS, MAX_MATMUL_DIM,
+};
+use cf4rs::coordinator::edge::{EdgeClient, EdgeOpts, EdgeServer};
+use cf4rs::coordinator::service::{ResponseCallback, ServiceClock};
+use cf4rs::coordinator::{
+    ComputeService, Priority, ServiceError, ServiceOpts, WorkloadRequest,
+};
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+use cf4rs::rawcl::types::DeviceId;
+use cf4rs::workload::{PrngWorkload, SaxpyWorkload, StencilWorkload, Workload};
+
+/// Watchdog for every blocking wait: a hang is a deadlock bug, not a
+/// slow test.
+const WAIT: Duration = Duration::from_secs(30);
+
+/// A single-backend registry whose only device sleeps
+/// `ns_per_kib` nanoseconds per KiB touched — deterministic capacity,
+/// so a big "blocker" request reliably holds the dispatcher while the
+/// test lines up the admission queue behind it.
+fn throttled_registry(ns_per_kib: u64) -> Arc<BackendRegistry> {
+    let reg = BackendRegistry::new();
+    let inner: Arc<dyn Backend> = Arc::new(SimBackend::new(DeviceId(1)).expect("sim device 1"));
+    reg.register(Arc::new(ThrottledBackend::new(inner, ns_per_kib)));
+    Arc::new(reg)
+}
+
+/// Completion log shared with [`ResponseCallback`]s: (label, outcome)
+/// in dispatcher completion order.
+type Log = Arc<(Mutex<Vec<(&'static str, Result<(), ServiceError>)>>, Condvar)>;
+
+fn new_log() -> Log {
+    Arc::new((Mutex::new(Vec::new()), Condvar::new()))
+}
+
+fn logging_cb(log: &Log, label: &'static str) -> ResponseCallback {
+    let log = log.clone();
+    Box::new(move |r| {
+        let (lock, cv) = &*log;
+        lock.lock().unwrap().push((label, r.map(|_| ())));
+        cv.notify_all();
+    })
+}
+
+fn wait_for(log: &Log, n: usize) -> Vec<(&'static str, Result<(), ServiceError>)> {
+    let (lock, cv) = &*log;
+    let deadline = Instant::now() + WAIT;
+    let mut g = lock.lock().unwrap();
+    while g.len() < n {
+        let left = deadline
+            .checked_duration_since(Instant::now())
+            .unwrap_or_else(|| panic!("only {} of {n} callbacks before the watchdog", g.len()));
+        g = cv.wait_timeout(g, left).unwrap().0;
+    }
+    g.clone()
+}
+
+// ---------------------------------------------------------------------------
+// Wire frames: round-trips and adversarial bytes
+// ---------------------------------------------------------------------------
+
+fn noise(rng: &mut u64, n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n + 8);
+    while out.len() < n {
+        *rng = xorshift(*rng);
+        out.extend_from_slice(&rng.to_le_bytes());
+    }
+    out.truncate(n);
+    out
+}
+
+#[test]
+fn request_frames_roundtrip_and_reject_every_truncation() {
+    let mut rng = init_seed(0xF4A3);
+    for i in 0..256u64 {
+        rng = xorshift(rng);
+        let n = 1 + ((rng >> 17) % 4096) as usize;
+        let desc = match rng % 5 {
+            0 => WorkloadDesc::Prng { n },
+            1 => WorkloadDesc::Saxpy { n, a: 0.25 + ((rng >> 33) & 0xFF) as f32 },
+            2 => WorkloadDesc::Reduce { n },
+            3 => WorkloadDesc::Stencil { h: 1 + n / 64, w: 1 + n % 64 },
+            _ => WorkloadDesc::Matmul { d: 1 + n % MAX_MATMUL_DIM },
+        };
+        let f = RequestFrame {
+            req_id: rng ^ i,
+            priority: if rng & 1 == 0 { Priority::High } else { Priority::Bulk },
+            deadline_us: (rng >> 7) % 10_000_000,
+            iters: 1 + ((rng >> 13) % MAX_ITERS as u64) as u32,
+            desc,
+        };
+        let enc = f.encode();
+        let (len, body) = enc.split_at(4);
+        assert_eq!(u32::from_le_bytes(len.try_into().unwrap()) as usize, body.len());
+        assert_eq!(RequestFrame::decode_body(body).unwrap(), f);
+        // Every strict prefix of the body is a typed error, never a
+        // panic and never a bogus decode.
+        rng = xorshift(rng);
+        let cut = (rng % body.len() as u64) as usize;
+        assert!(RequestFrame::decode_body(&body[..cut]).is_err(), "cut at {cut} decoded");
+    }
+}
+
+#[test]
+fn response_frames_roundtrip_every_error_at_adversarial_payload_lengths() {
+    let mut rng = init_seed(0xF4A4);
+    // Success payloads of awkward sizes (0, 1, just-past-alignment, big).
+    for _ in 0..64 {
+        rng = xorshift(rng);
+        let n = (rng % 4099) as usize;
+        let payload = noise(&mut rng, n);
+        let f = ResponseFrame { req_id: rng, result: Ok(payload) };
+        let enc = f.encode();
+        assert_eq!(ResponseFrame::decode_body(&enc[4..]).unwrap(), f);
+    }
+    // Every error variant survives the trip with its payload intact.
+    let errors = vec![
+        WireError::BadMagic(0x0BAD_CAFE),
+        WireError::BadVersion(0xFFEE),
+        WireError::BadFrame("trailing bytes\nwith a newline".into()),
+        WireError::TooLarge(u64::MAX),
+        WireError::Overloaded,
+        WireError::QueueFull,
+        WireError::DeadlineExceeded,
+        WireError::ShuttingDown,
+        WireError::Execution("backend died".into()),
+    ];
+    for (i, e) in errors.into_iter().enumerate() {
+        let f = ResponseFrame { req_id: i as u64, result: Err(e) };
+        let enc = f.encode();
+        assert_eq!(ResponseFrame::decode_body(&enc[4..]).unwrap(), f);
+        // Truncating the error frame is itself a typed error.
+        assert!(ResponseFrame::decode_body(&enc[4..enc.len() - 1]).is_err());
+    }
+}
+
+#[test]
+fn random_bodies_never_panic_either_decoder() {
+    let mut rng = init_seed(0xF4A5);
+    for _ in 0..512 {
+        rng = xorshift(rng);
+        let len = (rng % 96) as usize;
+        let body = noise(&mut rng, len);
+        // Noise virtually never carries the magic; if a seed ever
+        // produces a decodable body, it must at least re-encode to the
+        // same frame (decode is a right inverse of encode).
+        if let Ok(f) = RequestFrame::decode_body(&body) {
+            assert_eq!(RequestFrame::decode_body(&f.encode()[4..]).unwrap(), f);
+        }
+        if let Ok(f) = ResponseFrame::decode_body(&body) {
+            assert_eq!(ResponseFrame::decode_body(&f.encode()[4..]).unwrap(), f);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Priority inversion: a late high-priority probe overtakes queued bulk
+// ---------------------------------------------------------------------------
+
+#[test]
+fn high_priority_probe_overtakes_a_queued_bulk_flood() {
+    // One throttled device: the blocker (64 KiB at 2 ms/KiB ~ 128 ms)
+    // holds the dispatcher while the submissions below line up.
+    let svc = ComputeService::start(
+        throttled_registry(2_000_000),
+        ServiceOpts {
+            max_batch: 1, // no coalescing: completion order IS dequeue order
+            batch_window: Duration::from_millis(0),
+            ..ServiceOpts::default()
+        },
+    );
+    let log = new_log();
+    let blocker = WorkloadRequest::new(PrngWorkload::new(8192)).iters(1).priority(Priority::High);
+    svc.try_submit_with(blocker, logging_cb(&log, "blocker")).expect("admitted");
+    for _ in 0..8 {
+        let flood = WorkloadRequest::new(PrngWorkload::new(256)).iters(1).priority(Priority::Bulk);
+        svc.try_submit_with(flood, logging_cb(&log, "bulk")).expect("admitted");
+    }
+    // Submitted LAST, after the whole flood is already queued.
+    let probe =
+        WorkloadRequest::new(SaxpyWorkload::new(256, 2.0)).iters(1).priority(Priority::High);
+    svc.try_submit_with(probe, logging_cb(&log, "probe")).expect("admitted");
+
+    let order = wait_for(&log, 10);
+    for (label, r) in &order {
+        assert!(r.is_ok(), "{label} failed: {r:?}");
+    }
+    assert_eq!(order[0].0, "blocker");
+    assert_eq!(order[1].0, "probe", "high lane must be served before queued bulk: {order:?}");
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Per-tenant fairness: DRR keeps a trickle tenant ahead of a flooder
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bulk_lane_interleaves_tenants_instead_of_fifo_starving_the_trickle() {
+    let svc = ComputeService::start(
+        throttled_registry(2_000_000),
+        ServiceOpts {
+            max_batch: 1,
+            batch_window: Duration::from_millis(0),
+            drr_quantum: 1, // credit slowly: equal-cost tenants alternate
+            ..ServiceOpts::default()
+        },
+    );
+    let log = new_log();
+    let blocker = WorkloadRequest::new(PrngWorkload::new(8192)).iters(1).priority(Priority::High);
+    svc.try_submit_with(blocker, logging_cb(&log, "blocker")).expect("admitted");
+    // Tenant 1 floods six requests; tenant 2 trickles two. All bulk,
+    // all equal cost. Strict FIFO would answer the trickle last (at
+    // positions 8 and 9); DRR must interleave it near the front.
+    for _ in 0..6 {
+        let req = WorkloadRequest::new(PrngWorkload::new(256)).iters(1).tenant(1);
+        svc.try_submit_with(req, logging_cb(&log, "flood")).expect("admitted");
+    }
+    for _ in 0..2 {
+        let req = WorkloadRequest::new(PrngWorkload::new(256)).iters(1).tenant(2);
+        svc.try_submit_with(req, logging_cb(&log, "trickle")).expect("admitted");
+    }
+
+    let order = wait_for(&log, 9);
+    for (label, r) in &order {
+        assert!(r.is_ok(), "{label} failed: {r:?}");
+    }
+    assert_eq!(order[0].0, "blocker");
+    let last_trickle = order
+        .iter()
+        .rposition(|(l, _)| *l == "trickle")
+        .expect("trickle requests completed");
+    assert!(
+        last_trickle <= 5,
+        "DRR must interleave tenant 2 among tenant 1's flood, got {order:?}"
+    );
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Deadline shedding is deterministic under an injected clock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_shed_is_deterministic_with_a_fake_clock() {
+    let base = Instant::now();
+    let offset_ns = Arc::new(AtomicU64::new(0));
+    let off = offset_ns.clone();
+    let clock: ServiceClock =
+        Arc::new(move || base + Duration::from_nanos(off.load(Ordering::SeqCst)));
+    let svc = ComputeService::start(
+        throttled_registry(2_000_000),
+        ServiceOpts {
+            max_batch: 1,
+            batch_window: Duration::from_millis(0),
+            clock: Some(clock),
+            ..ServiceOpts::default()
+        },
+    );
+    let log = new_log();
+    // The blocker (no deadline) holds the dispatcher...
+    let blocker = WorkloadRequest::new(PrngWorkload::new(8192)).iters(1).priority(Priority::High);
+    svc.try_submit_with(blocker, logging_cb(&log, "blocker")).expect("admitted");
+    // ...while a request with a 10 ms absolute deadline queues behind it.
+    let victim = WorkloadRequest::new(PrngWorkload::new(256))
+        .iters(1)
+        .deadline(base + Duration::from_millis(10));
+    svc.try_submit_with(victim, logging_cb(&log, "victim")).expect("admitted");
+    // Jump the service clock 10 seconds: by the time the dispatcher
+    // dequeues the victim its deadline has long passed — regardless of
+    // how fast or slow this machine actually is.
+    offset_ns.store(10_000_000_000, Ordering::SeqCst);
+
+    let order = wait_for(&log, 2);
+    assert_eq!(order[0], ("blocker", Ok(())));
+    assert_eq!(order[1], ("victim", Err(ServiceError::DeadlineExceeded)));
+    let report = svc.shutdown();
+    assert_eq!(report.stats.deadline_shed, 1, "{:?}", report.stats);
+}
+
+// ---------------------------------------------------------------------------
+// TCP drain: shutdown answers in-flight requests before closing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_an_inflight_tcp_request() {
+    let opts = EdgeOpts {
+        registry: Some(throttled_registry(2_000_000)),
+        ..EdgeOpts::default()
+    };
+    let server = EdgeServer::start(0, opts).expect("bind edge server");
+    let mut cli = EdgeClient::connect(server.local_addr()).expect("connect");
+    cli.set_recv_timeout(Some(WAIT)).expect("timeout");
+    // ~128 ms of injected kernel time: still executing when the
+    // shutdown below begins.
+    let desc = WorkloadDesc::Prng { n: 8192 };
+    let req = RequestFrame {
+        req_id: 42,
+        priority: Priority::High,
+        deadline_us: 0,
+        iters: 1,
+        desc,
+    };
+    cli.send(&req).expect("send");
+    std::thread::sleep(Duration::from_millis(50));
+    let report = server.shutdown();
+    match cli.recv().expect("recv").expect("decodable response") {
+        Received::Response(ResponseFrame { req_id: 42, result: Ok(bytes) }) => {
+            assert_eq!(bytes, desc.instantiate().reference(1), "drained reply must be exact");
+        }
+        other => panic!("drain must answer the in-flight request, got {other:?}"),
+    }
+    assert!(report.service.stats.requests >= 1, "{:?}", report.service.stats);
+    // After the drain the server closes the connection.
+    match cli.recv() {
+        Ok(Ok(Received::Closed)) | Err(_) => {}
+        other => panic!("expected EOF after drain, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServiceOpts additions are bit-transparent for pre-edge callers
+// ---------------------------------------------------------------------------
+
+#[test]
+fn service_opts_defaults_leave_the_classic_submit_path_unchanged() {
+    let o = ServiceOpts::default();
+    assert_eq!(o.default_priority, Priority::Bulk);
+    assert!(o.default_deadline.is_none());
+    assert!(o.clock.is_none());
+    assert_eq!(o.high_reserve, 0);
+
+    // An untagged submit (the pre-edge `serve` path) and a fully-tagged
+    // equivalent produce identical bytes — the lane fields only affect
+    // ordering, never results.
+    let reg = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(reg, ServiceOpts { min_chunk: 256, ..ServiceOpts::default() });
+    let make = || WorkloadRequest::new(StencilWorkload::new(24, 16)).iters(2);
+    let plain = svc.submit(make()).expect("admitted").wait_timeout(WAIT).expect("answered");
+    let tagged = svc
+        .submit(
+            make()
+                .priority(Priority::Bulk)
+                .tenant(0)
+                .deadline_in(Duration::from_secs(3600)),
+        )
+        .expect("admitted")
+        .wait_timeout(WAIT)
+        .expect("answered");
+    assert_eq!(plain.output, tagged.output);
+    assert_eq!(plain.output, StencilWorkload::new(24, 16).reference(2));
+    let report = svc.shutdown();
+    assert_eq!(report.stats.deadline_shed, 0, "{:?}", report.stats);
+    assert_eq!(report.stats.errors, 0, "{:?}", report.stats);
+}
