@@ -1,0 +1,118 @@
+//! Seeded-bug corpus for the static analyzer — the "detector detects"
+//! half of the CI gate.
+//!
+//! Replays two kinds of planted hazards and requires the analyzer to
+//! flag **every** one with its expected rule (no partial credit):
+//!
+//! * the synthetic corpus from `cf4rs::analysis::corpus` — severed
+//!   dependency edges, swapped kernel arg roles, a missing host wait,
+//!   cyclic waits, a dead write, and the last-reader-only WAR tracker
+//!   regression;
+//! * one *live* case recorded end-to-end: a real `ccl::v2` session
+//!   whose second launch uses `.independent()` to sever a genuine
+//!   cross-queue dependency, captured by the command recorder and
+//!   surfaced through `Session::check()`.
+//!
+//! The clean half of the gate (zero findings over the 5 workloads × 5
+//! paths matrix) runs in `cf4rs bench lint-graph`.
+//!
+//! Usage: `cargo run --release --example lint_corpus`
+
+use cf4rs::analysis::{analyze, corpus, Recording, Rule};
+use cf4rs::ccl::v2::Session;
+
+/// The live severed-dependency case: producer on Q0, consumer launched
+/// `.independent()` on Q1. Returns whether `data-race` was reported.
+fn live_severed_dep() -> Result<bool, Box<dyn std::error::Error>> {
+    const N: usize = 1024;
+    let rec = Recording::start();
+    let sess = Session::builder().cpu().queues(2).build()?;
+    sess.load(&["vecadd_n1024"])?;
+
+    let x: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let y: Vec<f32> = (0..N).map(|i| i as f32 * 10.0).collect();
+    let bx = sess.buffer_from(&x)?;
+    let by = sess.buffer_from(&y)?;
+    let bo = sess.buffer::<f32>(N)?;
+    let bo2 = sess.buffer::<f32>(N)?;
+
+    // Producer: writes bo on queue 0.
+    let p1 = sess
+        .kernel("vecadd")?
+        .global(N)
+        .arg(&bx)
+        .arg(&by)
+        .output(&bo)
+        .launch()?;
+    // Consumer: reads bo on queue 1 — with the implicit producer edge
+    // deliberately severed. This is the real bug `.independent()` can
+    // plant, and exactly what the recorder + analyzer must catch.
+    let p2 = sess
+        .kernel("vecadd")?
+        .global(N)
+        .queue(1)
+        .independent()
+        .arg(&bo)
+        .arg(&by)
+        .output(&bo2)
+        .launch()?;
+
+    let report = sess.check()?;
+    // Keep the outputs alive until after the snapshot, then settle the
+    // device work before the recording window closes.
+    p1.wait()?;
+    let _ = p2.read()?;
+    drop(rec);
+
+    Ok(report.findings.iter().any(|f| f.rule == Rule::DataRace))
+}
+
+fn main() {
+    let mut total = 0usize;
+    let mut flagged = 0usize;
+
+    for case in corpus::seeded_bugs() {
+        total += 1;
+        let report = analyze(&case.stream);
+        let found: Vec<&str> = report.findings.iter().map(|f| f.rule.id()).collect();
+        let hit = found.contains(&case.expect.id());
+        if hit {
+            flagged += 1;
+        }
+        let found_s = if found.is_empty() {
+            "none".to_string()
+        } else {
+            found.join(", ")
+        };
+        println!(
+            "case {:<18} expect {:<18} {}  (found: {})",
+            case.name,
+            case.expect.id(),
+            if hit { "FLAGGED" } else { "MISSED" },
+            found_s
+        );
+    }
+
+    total += 1;
+    match live_severed_dep() {
+        Ok(true) => {
+            flagged += 1;
+            println!(
+                "case {:<18} expect {:<18} FLAGGED  (live v2 session, \
+                 Session::check)",
+                "live-severed-dep", "data-race"
+            );
+        }
+        Ok(false) => println!(
+            "case {:<18} expect {:<18} MISSED   (live v2 session)",
+            "live-severed-dep", "data-race"
+        ),
+        Err(e) => println!("case live-severed-dep replay FAILED: {e}"),
+    }
+
+    println!("corpus: {flagged}/{total} seeded bugs flagged");
+    if flagged != total {
+        eprintln!("lint_corpus: the analyzer missed a seeded bug");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,204 @@
+//! Seeded-bug corpus: synthetic streams that each plant one known hazard
+//! class, used by the CI detector gate (`bench lint-graph`, the
+//! `lint_corpus` example) and the analyzer's own tests.
+//!
+//! The gate is two-sided: the clean workload matrix must analyze to zero
+//! findings, AND every corpus case must be flagged with its expected rule.
+//! A detector that goes quiet (or noisy) fails one side or the other.
+//!
+//! Cases mirror real mistakes the recorded tiers can make:
+//!
+//! * `severed-dep-edge` — a cross-queue consumer launched without the
+//!   producer in its wait list (what `.independent()` does when the
+//!   dependency was real);
+//! * `swapped-arg-roles` — a kernel recorded with its read/write sets
+//!   transposed, so it "reads" the never-written output buffer;
+//! * `missing-host-wait` — a host read-back on another queue with no
+//!   event dependency on the producing kernel;
+//! * `cyclic-waits` — wait edges forming a cycle (deadlock at runtime,
+//!   expressible synthetically via forward deps);
+//! * `dead-write` — an uploaded buffer nothing ever reads;
+//! * `last-reader-only` — the WAR hazard of a dependency tracker that
+//!   remembers only the *most recent* reader: a later writer waits on
+//!   that reader alone and races the earlier one (the pre-fix
+//!   `ccl::v2::deps` regression class).
+
+use super::lint::Rule;
+use super::record::{CmdKind, Stream, StreamBuilder};
+
+/// One corpus entry: a stream seeded with exactly one hazard class and
+/// the rule the analyzer must report for it.
+pub struct CorpusCase {
+    pub name: &'static str,
+    pub expect: Rule,
+    pub stream: Stream,
+}
+
+fn severed_dep_edge() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let q1 = b.queue("Q1");
+    let x = b.buffer("X", false);
+    let out = b.buffer("out", false);
+    b.cmd(q0, CmdKind::Kernel, "PRNG_INIT", &[], &[x], &[]);
+    // Consumer on another queue, wait list severed: races the producer.
+    let r = b.cmd(q1, CmdKind::Kernel, "SAXPY_KERNEL", &[x], &[out], &[]);
+    b.read_back(q1, out, &[r]);
+    b.build()
+}
+
+fn swapped_arg_roles() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let inp = b.buffer("in", false);
+    let out = b.buffer("out", false);
+    let w = b.cmd(q0, CmdKind::HostWrite, "WRITE_BUFFER", &[], &[inp], &[]);
+    // Roles transposed: the kernel is recorded reading its output buffer
+    // (never written) and writing its input.
+    b.cmd(q0, CmdKind::Kernel, "SAXPY_KERNEL", &[out], &[inp], &[w]);
+    b.build()
+}
+
+fn missing_host_wait() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let q1 = b.queue("Q1");
+    let x = b.buffer("X", false);
+    b.cmd(q0, CmdKind::Kernel, "RNG_KERNEL", &[], &[x], &[]);
+    // Blocking read-back on another queue with no dependency on the
+    // producing kernel: the host observes half-written bytes.
+    b.read_back(q1, x, &[]);
+    b.build()
+}
+
+fn cyclic_waits() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let q1 = b.queue("Q1");
+    // Markers only — no buffer accesses, so the only possible finding is
+    // the cycle itself. Command ids are assigned densely from 0, so the
+    // first marker's forward dep names the second.
+    b.cmd(q0, CmdKind::Marker, "MARKER", &[], &[], &[1]);
+    b.cmd(q1, CmdKind::Marker, "MARKER", &[], &[], &[0]);
+    b.build()
+}
+
+fn dead_write() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let x = b.buffer("X", false);
+    b.cmd(q0, CmdKind::HostWrite, "WRITE_BUFFER", &[], &[x], &[]);
+    b.release(x);
+    b.build()
+}
+
+fn last_reader_only() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let q1 = b.queue("Q1");
+    let q2 = b.queue("Q2");
+    let a = b.buffer("A", false);
+    let o1 = b.buffer("out1", false);
+    let o2 = b.buffer("out2", false);
+    let init = b.cmd(q0, CmdKind::Kernel, "PRNG_INIT", &[], &[a], &[]);
+    let r1 = b.cmd(q0, CmdKind::Kernel, "REDUCE_KERNEL", &[a], &[o1], &[init]);
+    let r2 = b.cmd(q1, CmdKind::Kernel, "REDUCE_KERNEL", &[a], &[o2], &[init]);
+    // The buggy tracker remembered only r2; the in-place step waits on it
+    // alone and overwrites A while r1 may still be reading.
+    let w = b.cmd(q2, CmdKind::Kernel, "RNG_KERNEL", &[a], &[a], &[r2]);
+    b.read_back(q0, o1, &[r1]);
+    b.read_back(q1, o2, &[r2]);
+    b.read_back(q2, a, &[w]);
+    b.build()
+}
+
+/// The fixed counterpart of [`last_reader_only`] — writer waits on *both*
+/// readers — which must analyze clean. Used by the regression tests to
+/// pin the two-sidedness of the WAR rule.
+pub fn full_reader_set() -> Stream {
+    let mut b = StreamBuilder::new();
+    let q0 = b.queue("Q0");
+    let q1 = b.queue("Q1");
+    let q2 = b.queue("Q2");
+    let a = b.buffer("A", false);
+    let o1 = b.buffer("out1", false);
+    let o2 = b.buffer("out2", false);
+    let init = b.cmd(q0, CmdKind::Kernel, "PRNG_INIT", &[], &[a], &[]);
+    let r1 = b.cmd(q0, CmdKind::Kernel, "REDUCE_KERNEL", &[a], &[o1], &[init]);
+    let r2 = b.cmd(q1, CmdKind::Kernel, "REDUCE_KERNEL", &[a], &[o2], &[init]);
+    let w = b.cmd(q2, CmdKind::Kernel, "RNG_KERNEL", &[a], &[a], &[r1, r2]);
+    b.read_back(q0, o1, &[r1]);
+    b.read_back(q1, o2, &[r2]);
+    b.read_back(q2, a, &[w]);
+    b.build()
+}
+
+/// Every seeded-bug case. The detector gate requires `expect` to appear
+/// among the findings of each case's stream — 100%, no partial credit.
+pub fn seeded_bugs() -> Vec<CorpusCase> {
+    vec![
+        CorpusCase {
+            name: "severed-dep-edge",
+            expect: Rule::DataRace,
+            stream: severed_dep_edge(),
+        },
+        CorpusCase {
+            name: "swapped-arg-roles",
+            expect: Rule::ReadBeforeWrite,
+            stream: swapped_arg_roles(),
+        },
+        CorpusCase {
+            name: "missing-host-wait",
+            expect: Rule::UnwaitedHostRead,
+            stream: missing_host_wait(),
+        },
+        CorpusCase {
+            name: "cyclic-waits",
+            expect: Rule::DependencyCycle,
+            stream: cyclic_waits(),
+        },
+        CorpusCase {
+            name: "dead-write",
+            expect: Rule::DeadWrite,
+            stream: dead_write(),
+        },
+        CorpusCase {
+            name: "last-reader-only",
+            expect: Rule::DataRace,
+            stream: last_reader_only(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+
+    #[test]
+    fn every_case_is_flagged_with_its_rule() {
+        for case in seeded_bugs() {
+            let report = analyze(&case.stream);
+            assert!(
+                report.findings.iter().any(|f| f.rule == case.expect),
+                "{}: expected {} among {:?}",
+                case.name,
+                case.expect.id(),
+                report.findings.iter().map(|f| f.rule.id()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_reader_set_is_clean() {
+        let report = analyze(&full_reader_set());
+        assert!(report.is_clean(), "{}", report.render_human());
+    }
+
+    #[test]
+    fn cyclic_case_reports_only_the_cycle() {
+        let report = analyze(&cyclic_waits());
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, Rule::DependencyCycle);
+    }
+}

@@ -1,0 +1,254 @@
+//! Typed findings over the happens-before graph.
+//!
+//! Rule catalog (also documented in the README):
+//!
+//! | id                  | severity | meaning                                      |
+//! |---------------------|----------|----------------------------------------------|
+//! | `data-race`         | error    | conflicting accesses with no HB edge         |
+//! | `unwaited-host-read`| error    | host read-back racing a writer               |
+//! | `read-before-write` | error    | uninitialized buffer read                    |
+//! | `dependency-cycle`  | error    | wait edges form a cycle (deadlock)           |
+//! | `dead-write`        | warning  | buffer written, never read (or read back)    |
+//!
+//! The race pass walks each buffer's accesses in record order keeping the
+//! *write frontier* (maximal unordered writes) and the reads since: a new
+//! access races iff some frontier element is not happens-before it — near
+//! linear in practice, exact with respect to the HB relation.
+
+use super::hb::{self, HbGraph};
+use super::record::{CmdKind, Record, Stream};
+use super::report::Report;
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Rule {
+    DataRace,
+    UnwaitedHostRead,
+    ReadBeforeWrite,
+    DependencyCycle,
+    DeadWrite,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::DataRace => "data-race",
+            Rule::UnwaitedHostRead => "unwaited-host-read",
+            Rule::ReadBeforeWrite => "read-before-write",
+            Rule::DependencyCycle => "dependency-cycle",
+            Rule::DeadWrite => "dead-write",
+        }
+    }
+
+    pub fn severity(self) -> Severity {
+        match self {
+            Rule::DeadWrite => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// A command referenced by a finding, with enough context to act on it.
+#[derive(Clone, Debug)]
+pub struct CmdRef {
+    pub id: usize,
+    pub queue: usize,
+    pub queue_label: String,
+    pub name: String,
+    pub kind: &'static str,
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Label of the buffer involved, when the rule concerns one.
+    pub buffer: Option<String>,
+    /// Commands involved, most significant first.
+    pub cmds: Vec<CmdRef>,
+    pub detail: String,
+}
+
+fn cmd_ref(g: &HbGraph, stream: &Stream, id: usize) -> CmdRef {
+    let c = &g.cmds[id];
+    CmdRef {
+        id,
+        queue: c.queue,
+        queue_label: stream.queues[c.queue].label.clone(),
+        name: c.name.clone(),
+        kind: c.kind.label(),
+    }
+}
+
+/// Per-buffer incremental race-detection state.
+#[derive(Default)]
+struct BufState {
+    /// Maximal writes with no HB-later write (the write frontier).
+    frontier: Vec<usize>,
+    /// Reads since the frontier last advanced past them.
+    reads_since: Vec<usize>,
+    /// Writes with no read observed after them yet.
+    unread_writes: Vec<usize>,
+    any_write: bool,
+    reported_uninit: bool,
+    closed: bool,
+}
+
+/// Run every rule over a recorded stream.
+pub fn analyze(stream: &Stream) -> Report {
+    let g = hb::build(stream);
+    let mut findings = Vec::new();
+
+    if !g.cycle.is_empty() {
+        let mut cmds: Vec<CmdRef> =
+            g.cycle.iter().take(8).map(|&id| cmd_ref(&g, stream, id)).collect();
+        cmds.sort_by_key(|c| c.id);
+        findings.push(Finding {
+            rule: Rule::DependencyCycle,
+            buffer: None,
+            detail: format!(
+                "{} command(s) wait on each other in a cycle; none can run",
+                g.cycle.len()
+            ),
+            cmds,
+        });
+    }
+
+    let mut bufs: Vec<BufState> = (0..stream.buffers.len()).map(|_| BufState::default()).collect();
+    let race = |findings: &mut Vec<Finding>, rule: Rule, buf: usize, a: usize, b: usize| {
+        let meta = &stream.buffers[buf];
+        let (ra, rb) = (cmd_ref(&g, stream, a), cmd_ref(&g, stream, b));
+        findings.push(Finding {
+            rule,
+            buffer: Some(meta.label.clone()),
+            detail: format!(
+                "{} `{}` on {} and {} `{}` on {} both touch {} with no \
+                 happens-before edge",
+                ra.kind, ra.name, ra.queue_label, rb.kind, rb.name,
+                rb.queue_label, meta.label
+            ),
+            cmds: vec![ra, rb],
+        });
+    };
+
+    let close_buffer = |findings: &mut Vec<Finding>, buf: usize, st: &mut BufState| {
+        if st.closed {
+            return;
+        }
+        st.closed = true;
+        if !st.unread_writes.is_empty() {
+            let last = *st.unread_writes.last().unwrap();
+            let meta = &stream.buffers[buf];
+            findings.push(Finding {
+                rule: Rule::DeadWrite,
+                buffer: Some(meta.label.clone()),
+                detail: format!(
+                    "{} write(s) to {} were never read or read back (last by \
+                     `{}`)",
+                    st.unread_writes.len(),
+                    meta.label,
+                    g.cmds[last].name
+                ),
+                cmds: st
+                    .unread_writes
+                    .iter()
+                    .map(|&id| cmd_ref(&g, stream, id))
+                    .collect(),
+            });
+        }
+    };
+
+    for rec in &stream.records {
+        match rec {
+            Record::Cmd(c) => {
+                for &b in &c.reads {
+                    let st = &mut bufs[b];
+                    if st.closed {
+                        continue;
+                    }
+                    if !st.any_write
+                        && !stream.buffers[b].initialized
+                        && !st.reported_uninit
+                    {
+                        st.reported_uninit = true;
+                        findings.push(Finding {
+                            rule: Rule::ReadBeforeWrite,
+                            buffer: Some(stream.buffers[b].label.clone()),
+                            detail: format!(
+                                "`{}` reads {} before anything wrote it \
+                                 (contents undefined)",
+                                c.name, stream.buffers[b].label
+                            ),
+                            cmds: vec![cmd_ref(&g, stream, c.id)],
+                        });
+                    }
+                    let frontier = st.frontier.clone();
+                    for w in frontier {
+                        if !g.hb(w, c.id) {
+                            let rule = if c.kind == CmdKind::HostRead {
+                                Rule::UnwaitedHostRead
+                            } else {
+                                Rule::DataRace
+                            };
+                            race(&mut findings, rule, b, w, c.id);
+                        }
+                    }
+                    let st = &mut bufs[b];
+                    st.reads_since.push(c.id);
+                    st.unread_writes.clear();
+                }
+                for &b in &c.writes {
+                    let st = &mut bufs[b];
+                    if st.closed {
+                        continue;
+                    }
+                    let (frontier, reads) =
+                        (st.frontier.clone(), st.reads_since.clone());
+                    for w in frontier {
+                        if !g.hb(w, c.id) {
+                            race(&mut findings, Rule::DataRace, b, w, c.id);
+                        }
+                    }
+                    for r in reads {
+                        if !g.hb(r, c.id) {
+                            race(&mut findings, Rule::DataRace, b, r, c.id);
+                        }
+                    }
+                    let st = &mut bufs[b];
+                    st.any_write = true;
+                    st.frontier.retain(|&w| !g.hb(w, c.id));
+                    st.frontier.push(c.id);
+                    st.reads_since.retain(|&r| !g.hb(r, c.id));
+                    st.unread_writes.push(c.id);
+                }
+            }
+            Record::BufRelease { buf } => {
+                close_buffer(&mut findings, *buf, &mut bufs[*buf]);
+            }
+            _ => {}
+        }
+    }
+    for (b, st) in bufs.iter_mut().enumerate() {
+        close_buffer(&mut findings, b, st);
+    }
+
+    Report {
+        findings,
+        n_cmds: stream.n_cmds,
+        n_queues: stream.queues.len(),
+        n_buffers: stream.buffers.len(),
+    }
+}

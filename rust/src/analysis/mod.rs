@@ -1,0 +1,39 @@
+//! Static analysis over recorded command graphs.
+//!
+//! cf4ocl's pitch is safe-by-construction event/memory management — but the
+//! raw and v1 tiers have no checking at all, and the v2 tier lets callers
+//! *opt out* of implicit dependency chaining (`.independent()`, `.after()`),
+//! so a missing event edge silently yields nondeterministic output. This
+//! module closes that gap without touching execution semantics:
+//!
+//! 1. [`record`] — a lightweight global recorder threaded through the rawcl
+//!    enqueue paths, the ccl v1 `Queue` (labels), the `ccl::v2`
+//!    launch/read/write paths, and the scheduler's per-shard backend
+//!    dispatch. Each command's buffer access set is derived from the
+//!    `arg_roles` ABI single source; declared event dependencies are
+//!    resolved to producing commands at record time (snapshot semantics
+//!    under handle reuse).
+//! 2. [`hb`] — the happens-before graph: per-queue vector clocks, edges
+//!    from same-queue program order, event wait lists, and host-mediated
+//!    synchronisation (event waits, `finish`, blocking transfers).
+//! 3. [`lint`] — typed findings over the graph: data races,
+//!    read-before-write, dependency cycles, dead writes, unwaited host
+//!    reads.
+//! 4. [`report`] — human-readable and machine-readable (JSON/TSV)
+//!    rendering, sharing the profiler exporter's field escaping so hostile
+//!    queue/kernel names round-trip.
+//!
+//! Surfaces: [`crate::ccl::v2::Session::check`], the `cf4rs lint` CLI mode
+//! (replays any workload × path cell under the recorder), and the
+//! `bench lint-graph` CI gate (clean 5×5 matrix must be finding-free AND a
+//! seeded-bug corpus must be flagged at 100% — see `examples/lint_corpus.rs`).
+
+pub mod corpus;
+pub mod hb;
+pub mod lint;
+pub mod record;
+pub mod report;
+
+pub use lint::{analyze, CmdRef, Finding, Rule, Severity};
+pub use record::{BufMeta, Cmd, CmdKind, QueueInfo, Record, Recording, Stream, StreamBuilder};
+pub use report::Report;

@@ -1,0 +1,533 @@
+//! Command-stream recorder.
+//!
+//! A process-global, refcount-free recorder: [`Recording::start`] arms it,
+//! dropping the guard disarms it. While armed, the rawcl enqueue paths and
+//! the backend dispatch sites append [`Record`]s under a single mutex; when
+//! disarmed the only cost at every hook site is one relaxed atomic load.
+//!
+//! Identity is interned: queues and buffers are keyed by `(space, raw
+//! handle)` where the space is `"rawcl"` for the simulated-OpenCL substrate
+//! and a per-backend name (`"be:<backend>"`) at the backend tier, so the
+//! two tiers' handle values never alias. Buffer handles that are released
+//! and re-created get a fresh dense id (generation bump) — reuse of a raw
+//! handle value must not merge two unrelated lifetimes. Event handles are
+//! resolved to the *producing command* at record time, which gives snapshot
+//! semantics under event-handle reuse.
+//!
+//! Recordings are serialized process-wide (the guard holds a lock), so
+//! concurrent tests cannot pollute each other's streams.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::rawcl::types::{EventH, MemH, QueueH};
+
+/// Identity space of the simulated-OpenCL substrate.
+pub const RAWCL_SPACE: &str = "rawcl";
+
+/// What a recorded command does, for access classification and reporting.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum CmdKind {
+    /// Kernel launch; reads/writes derived from `arg_roles`.
+    Kernel,
+    /// Device→host transfer (the host observes buffer contents).
+    HostRead,
+    /// Host→device transfer.
+    HostWrite,
+    /// Device-side buffer copy (reads src, writes dst).
+    Copy,
+    /// Device-side fill (writes dst).
+    Fill,
+    /// Synchronisation-only command (no buffer accesses).
+    Marker,
+}
+
+impl CmdKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            CmdKind::Kernel => "kernel",
+            CmdKind::HostRead => "read",
+            CmdKind::HostWrite => "write",
+            CmdKind::Copy => "copy",
+            CmdKind::Fill => "fill",
+            CmdKind::Marker => "marker",
+        }
+    }
+}
+
+/// One recorded device command.
+#[derive(Clone, Debug)]
+pub struct Cmd {
+    /// Dense command index (== position among `Record::Cmd`s).
+    pub id: usize,
+    /// Interned host thread that enqueued the command.
+    pub thread: u32,
+    /// Index into [`Stream::queues`].
+    pub queue: usize,
+    pub kind: CmdKind,
+    /// Kernel name, or the transfer kind's display name.
+    pub name: String,
+    /// Indices into [`Stream::buffers`] the command reads.
+    pub reads: Vec<usize>,
+    /// Indices into [`Stream::buffers`] the command writes.
+    pub writes: Vec<usize>,
+    /// Command ids from the declared wait list (resolved at record time).
+    pub deps: Vec<usize>,
+    /// The enqueuing host thread waited inline for completion.
+    pub blocking: bool,
+}
+
+/// One entry in a recorded stream, in global record order.
+#[derive(Clone, Debug)]
+pub enum Record {
+    Cmd(Cmd),
+    /// Host thread blocked on these commands (`wait_for_events`).
+    HostWait { thread: u32, cmds: Vec<usize> },
+    /// Host thread drained a queue (`finish`).
+    HostSync { thread: u32, queue: usize },
+    BufCreate { buf: usize },
+    BufRelease { buf: usize },
+}
+
+/// A queue as seen by the analyzer.
+#[derive(Clone, Debug)]
+pub struct QueueInfo {
+    pub label: String,
+    pub space: String,
+    pub raw: u64,
+}
+
+/// A buffer lifetime as seen by the analyzer.
+#[derive(Clone, Debug)]
+pub struct BufMeta {
+    pub label: String,
+    /// Contents defined before the first recorded write (`COPY_HOST_PTR`
+    /// creation, or the buffer pre-dates the recording window).
+    pub initialized: bool,
+    pub bytes: usize,
+}
+
+/// A recorded command stream — the analyzer's sole input. Can come from
+/// the live recorder or be built synthetically with [`StreamBuilder`]
+/// (seeded-bug corpus, fuzz tests).
+#[derive(Clone, Debug, Default)]
+pub struct Stream {
+    pub queues: Vec<QueueInfo>,
+    pub buffers: Vec<BufMeta>,
+    pub records: Vec<Record>,
+    /// Number of `Record::Cmd` entries (dense command-id upper bound).
+    pub n_cmds: usize,
+}
+
+impl Stream {
+    /// Dense queue index for a raw handle in a space, if recorded.
+    pub fn queue_index(&self, space: &str, raw: u64) -> Option<usize> {
+        self.queues.iter().position(|q| q.space == space && q.raw == raw)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global recorder
+// ---------------------------------------------------------------------------
+
+struct RecState {
+    stream: Stream,
+    spaces: HashMap<String, u32>,
+    /// (space, raw handle) → dense queue index.
+    queues: HashMap<(u32, u64), usize>,
+    /// (space, raw handle) → dense buffer index (current generation).
+    buffers: HashMap<(u32, u64), usize>,
+    /// (space, raw event handle) → producing command id.
+    events: HashMap<(u32, u64), usize>,
+    threads: HashMap<std::thread::ThreadId, u32>,
+}
+
+impl RecState {
+    fn new() -> Self {
+        Self {
+            stream: Stream::default(),
+            spaces: HashMap::new(),
+            queues: HashMap::new(),
+            buffers: HashMap::new(),
+            events: HashMap::new(),
+            threads: HashMap::new(),
+        }
+    }
+
+    fn space(&mut self, name: &str) -> u32 {
+        if let Some(&s) = self.spaces.get(name) {
+            return s;
+        }
+        let s = self.spaces.len() as u32;
+        self.spaces.insert(name.to_string(), s);
+        s
+    }
+
+    fn thread(&mut self) -> u32 {
+        let id = std::thread::current().id();
+        if let Some(&t) = self.threads.get(&id) {
+            return t;
+        }
+        let t = self.threads.len() as u32;
+        self.threads.insert(id, t);
+        t
+    }
+
+    fn queue(&mut self, space: u32, space_name: &str, raw: u64) -> usize {
+        if let Some(&q) = self.queues.get(&(space, raw)) {
+            return q;
+        }
+        let q = self.stream.queues.len();
+        self.stream.queues.push(QueueInfo {
+            label: format!("{space_name}-q{raw}"),
+            space: space_name.to_string(),
+            raw,
+        });
+        self.queues.insert((space, raw), q);
+        q
+    }
+
+    /// Current generation of a buffer handle; handles first seen mid-use
+    /// pre-date the recording window and count as initialized.
+    fn buffer(&mut self, space: u32, raw: u64) -> usize {
+        if let Some(&b) = self.buffers.get(&(space, raw)) {
+            return b;
+        }
+        let b = self.stream.buffers.len();
+        self.stream.buffers.push(BufMeta {
+            label: format!("buf{raw}"),
+            initialized: true,
+            bytes: 0,
+        });
+        self.buffers.insert((space, raw), b);
+        b
+    }
+
+    fn push_cmd(
+        &mut self,
+        space_name: &str,
+        raw_queue: u64,
+        kind: CmdKind,
+        name: &str,
+        reads: &[u64],
+        writes: &[u64],
+        wait_raw: &[u64],
+        ev_raw: Option<u64>,
+        blocking: bool,
+    ) {
+        let sp = self.space(space_name);
+        let queue = self.queue(sp, space_name, raw_queue);
+        let thread = self.thread();
+        let reads: Vec<usize> = reads.iter().map(|&m| self.buffer(sp, m)).collect();
+        let writes: Vec<usize> = writes.iter().map(|&m| self.buffer(sp, m)).collect();
+        // Unresolvable wait entries (events from before the recording
+        // window, user events) are dropped — conservative: missing edges
+        // can only surface as extra findings, never hide one.
+        let deps: Vec<usize> = wait_raw
+            .iter()
+            .filter_map(|&e| self.events.get(&(sp, e)).copied())
+            .collect();
+        let id = self.stream.n_cmds;
+        self.stream.n_cmds += 1;
+        if let Some(ev) = ev_raw {
+            self.events.insert((sp, ev), id);
+        }
+        self.stream.records.push(Record::Cmd(Cmd {
+            id,
+            thread,
+            queue,
+            kind,
+            name: name.to_string(),
+            reads,
+            writes,
+            deps,
+            blocking,
+        }));
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<RecState>> = Mutex::new(None);
+/// Serializes recording windows process-wide (parallel tests must not
+/// interleave their streams).
+static WINDOW: Mutex<()> = Mutex::new(());
+
+fn lock_state() -> MutexGuard<'static, Option<RecState>> {
+    match STATE.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Cheap armed-check for every hook site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII recording window. Arms the global recorder on `start`, disarms on
+/// drop. Windows are exclusive: a second `start` blocks until the first
+/// guard drops.
+pub struct Recording {
+    _window: MutexGuard<'static, ()>,
+}
+
+impl Recording {
+    pub fn start() -> Recording {
+        let window = match WINDOW.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *lock_state() = Some(RecState::new());
+        ENABLED.store(true, Ordering::SeqCst);
+        Recording { _window: window }
+    }
+
+    /// Copy of the stream recorded so far.
+    pub fn snapshot(&self) -> Stream {
+        lock_state().as_ref().map(|s| s.stream.clone()).unwrap_or_default()
+    }
+
+    /// Stop recording and return the stream.
+    pub fn finish(self) -> Stream {
+        let stream = self.snapshot();
+        drop(self);
+        stream
+    }
+}
+
+impl Drop for Recording {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        *lock_state() = None;
+    }
+}
+
+/// Snapshot of the active recording, if one is armed (for
+/// `Session::check`).
+pub fn snapshot_active() -> Option<Stream> {
+    if !enabled() {
+        return None;
+    }
+    lock_state().as_ref().map(|s| s.stream.clone())
+}
+
+// ---------------------------------------------------------------------------
+// rawcl hook surface (called from the substrate's public API functions)
+// ---------------------------------------------------------------------------
+
+/// Helper shared by all hooks: run `f` against the armed state, if any.
+fn with_state(f: impl FnOnce(&mut RecState)) {
+    if !enabled() {
+        return;
+    }
+    let mut st = lock_state();
+    if let Some(s) = st.as_mut() {
+        f(s);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rawcl_cmd(
+    queue: QueueH,
+    kind: CmdKind,
+    name: &str,
+    reads: &[MemH],
+    writes: &[MemH],
+    wait: &[EventH],
+    ev: EventH,
+    blocking: bool,
+) {
+    with_state(|s| {
+        let reads: Vec<u64> = reads.iter().map(|m| m.0).collect();
+        let writes: Vec<u64> = writes.iter().map(|m| m.0).collect();
+        let wait: Vec<u64> = wait.iter().map(|e| e.0).collect();
+        s.push_cmd(
+            RAWCL_SPACE,
+            queue.0,
+            kind,
+            name,
+            &reads,
+            &writes,
+            &wait,
+            Some(ev.0),
+            blocking,
+        );
+    });
+}
+
+pub(crate) fn rawcl_buf_create(h: MemH, bytes: usize, initialized: bool) {
+    with_state(|s| {
+        let sp = s.space(RAWCL_SPACE);
+        // Fresh generation even if the raw handle value is reused.
+        let b = s.stream.buffers.len();
+        s.stream.buffers.push(BufMeta {
+            label: format!("buf{}", h.0),
+            initialized,
+            bytes,
+        });
+        s.buffers.insert((sp, h.0), b);
+        s.stream.records.push(Record::BufCreate { buf: b });
+    });
+}
+
+pub(crate) fn rawcl_buf_release(h: MemH) {
+    with_state(|s| {
+        let sp = s.space(RAWCL_SPACE);
+        if let Some(b) = s.buffers.remove(&(sp, h.0)) {
+            s.stream.records.push(Record::BufRelease { buf: b });
+        }
+    });
+}
+
+pub(crate) fn rawcl_host_wait(evs: &[EventH]) {
+    with_state(|s| {
+        let sp = s.space(RAWCL_SPACE);
+        let cmds: Vec<usize> =
+            evs.iter().filter_map(|e| s.events.get(&(sp, e.0)).copied()).collect();
+        if cmds.is_empty() {
+            return;
+        }
+        let thread = s.thread();
+        s.stream.records.push(Record::HostWait { thread, cmds });
+    });
+}
+
+pub(crate) fn rawcl_finish(q: QueueH) {
+    with_state(|s| {
+        let sp = s.space(RAWCL_SPACE);
+        let queue = s.queue(sp, RAWCL_SPACE, q.0);
+        let thread = s.thread();
+        s.stream.records.push(Record::HostSync { thread, queue });
+    });
+}
+
+pub(crate) fn rawcl_queue_label(q: QueueH, label: &str) {
+    with_state(|s| {
+        let sp = s.space(RAWCL_SPACE);
+        let queue = s.queue(sp, RAWCL_SPACE, q.0);
+        s.stream.queues[queue].label = label.to_string();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backend-tier hook surface (scheduler shard dispatch, exec backend path)
+// ---------------------------------------------------------------------------
+
+/// Record a backend-tier command. Each backend instance is one in-order
+/// logical queue, so `space` doubles as the queue identity.
+pub(crate) fn backend_cmd(
+    space: &str,
+    kind: CmdKind,
+    name: &str,
+    reads: &[u64],
+    writes: &[u64],
+    ev: Option<u64>,
+    blocking: bool,
+) {
+    with_state(|s| {
+        s.push_cmd(space, 0, kind, name, reads, writes, &[], ev, blocking);
+    });
+}
+
+/// `Backend::wait(ev)` — a host-side join on the producing command.
+pub(crate) fn backend_host_wait(space: &str, ev: u64) {
+    with_state(|s| {
+        let sp = s.space(space);
+        let Some(&cmd) = s.events.get(&(sp, ev)) else { return };
+        let thread = s.thread();
+        s.stream.records.push(Record::HostWait { thread, cmds: vec![cmd] });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic streams (corpus + fuzzing)
+// ---------------------------------------------------------------------------
+
+/// Builds a [`Stream`] by hand, for the seeded-bug corpus and property
+/// tests. Commands reference queues/buffers/commands by the indices the
+/// builder returns.
+#[derive(Default)]
+pub struct StreamBuilder {
+    stream: Stream,
+}
+
+impl StreamBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn queue(&mut self, label: &str) -> usize {
+        let q = self.stream.queues.len();
+        self.stream.queues.push(QueueInfo {
+            label: label.to_string(),
+            space: "synthetic".to_string(),
+            raw: q as u64,
+        });
+        q
+    }
+
+    pub fn buffer(&mut self, label: &str, initialized: bool) -> usize {
+        let b = self.stream.buffers.len();
+        self.stream.buffers.push(BufMeta {
+            label: label.to_string(),
+            initialized,
+            bytes: 0,
+        });
+        self.stream.records.push(Record::BufCreate { buf: b });
+        b
+    }
+
+    /// Append a command on host thread 0; returns its id for wait lists.
+    pub fn cmd(
+        &mut self,
+        queue: usize,
+        kind: CmdKind,
+        name: &str,
+        reads: &[usize],
+        writes: &[usize],
+        deps: &[usize],
+    ) -> usize {
+        let id = self.stream.n_cmds;
+        self.stream.n_cmds += 1;
+        self.stream.records.push(Record::Cmd(Cmd {
+            id,
+            thread: 0,
+            queue,
+            kind,
+            name: name.to_string(),
+            reads: reads.to_vec(),
+            writes: writes.to_vec(),
+            deps: deps.to_vec(),
+            blocking: false,
+        }));
+        id
+    }
+
+    /// A blocking device→host read-back of `buf` (what `enqueue_read_buffer`
+    /// with `blocking=true` records).
+    pub fn read_back(&mut self, queue: usize, buf: usize, deps: &[usize]) -> usize {
+        let id = self.cmd(queue, CmdKind::HostRead, "READ_BUFFER", &[buf], &[], deps);
+        if let Some(Record::Cmd(c)) = self.stream.records.last_mut() {
+            c.blocking = true;
+        }
+        id
+    }
+
+    pub fn host_wait(&mut self, cmds: &[usize]) {
+        self.stream.records.push(Record::HostWait { thread: 0, cmds: cmds.to_vec() });
+    }
+
+    pub fn finish(&mut self, queue: usize) {
+        self.stream.records.push(Record::HostSync { thread: 0, queue });
+    }
+
+    pub fn release(&mut self, buf: usize) {
+        self.stream.records.push(Record::BufRelease { buf });
+    }
+
+    pub fn build(self) -> Stream {
+        self.stream
+    }
+}

@@ -1,0 +1,186 @@
+//! Rendering for lint findings: human report, machine-readable JSON, and
+//! a TSV table.
+//!
+//! Field escaping is shared with the profiler exporter
+//! ([`crate::ccl::prof::export::escape_field`]) so queue/kernel names
+//! containing tabs or newlines round-trip through both formats from one
+//! implementation. The JSON renderer layers quote-escaping on top of the
+//! same helper (`escape_field` handles `\\`, `\t`, `\n`, `\r`, all of
+//! which are also valid JSON escapes).
+
+use crate::ccl::prof::export::{escape_field, unescape_field};
+
+use super::lint::{Finding, Severity};
+
+pub const LINT_TSV_HEADER: &str = "rule\tseverity\tbuffer\tqueue\tname\tdetail";
+
+/// JSON string contents via the shared TSV escaper plus quote escaping.
+fn json_str(s: &str) -> String {
+    escape_field(s).replace('"', "\\\"")
+}
+
+/// The result of analyzing one recorded stream.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub n_cmds: usize,
+    pub n_queues: usize,
+    pub n_buffers: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn errors(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.rule.severity() == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.len() - self.errors()
+    }
+
+    /// Keep only findings that involve one of the given queues (by dense
+    /// queue index). Findings with no command references (none today) are
+    /// kept. Used by `Session::check` to scope a shared recording to the
+    /// session's own queues.
+    pub fn retain_queues(&mut self, queues: &[usize]) {
+        self.findings.retain(|f| {
+            f.cmds.is_empty() || f.cmds.iter().any(|c| queues.contains(&c.queue))
+        });
+    }
+
+    /// Human-readable report, one block per finding.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "analyzed {} command(s) on {} queue(s), {} buffer(s): {} finding(s)\n",
+            self.n_cmds,
+            self.n_queues,
+            self.n_buffers,
+            self.findings.len()
+        ));
+        for f in &self.findings {
+            out.push_str(&format!(
+                "\n[{}] {}\n  {}\n",
+                f.rule.severity().label(),
+                f.rule.id(),
+                f.detail
+            ));
+            for c in &f.cmds {
+                out.push_str(&format!(
+                    "  #{} {} `{}` on queue `{}`\n",
+                    c.id, c.kind, c.name, c.queue_label
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable JSON. `"findings"` is the total count — the CI
+    /// gate greps for `"findings": 0` on the clean matrix.
+    pub fn to_json(&self, meta: &[(&str, String)]) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"schema\": \"cf4rs-lint/1\",\n");
+        for (k, v) in meta {
+            out.push_str(&format!("  \"{}\": \"{}\",\n", json_str(k), json_str(v)));
+        }
+        out.push_str(&format!("  \"commands\": {},\n", self.n_cmds));
+        out.push_str(&format!("  \"queues\": {},\n", self.n_queues));
+        out.push_str(&format!("  \"buffers\": {},\n", self.n_buffers));
+        out.push_str(&format!("  \"errors\": {},\n", self.errors()));
+        out.push_str(&format!("  \"warnings\": {},\n", self.warnings()));
+        out.push_str(&format!("  \"findings\": {},\n", self.findings.len()));
+        out.push_str("  \"items\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"rule\": \"{}\", \"severity\": \"{}\", \"buffer\": \
+                 \"{}\", \"detail\": \"{}\", \"cmds\": [",
+                f.rule.id(),
+                f.rule.severity().label(),
+                json_str(f.buffer.as_deref().unwrap_or("")),
+                json_str(&f.detail)
+            ));
+            for (j, c) in f.cmds.iter().enumerate() {
+                if j > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!(
+                    "{{\"id\": {}, \"kind\": \"{}\", \"name\": \"{}\", \
+                     \"queue\": \"{}\"}}",
+                    c.id,
+                    json_str(c.kind),
+                    json_str(&c.name),
+                    json_str(&c.queue_label)
+                ));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// TSV table, one line per finding (first involved command shown).
+    /// Fields are escaped with the shared profiler-export helper so
+    /// hostile names stay one line of exactly six columns.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from(LINT_TSV_HEADER);
+        out.push('\n');
+        for f in &self.findings {
+            let (queue, name) = f
+                .cmds
+                .first()
+                .map(|c| (c.queue_label.as_str(), c.name.as_str()))
+                .unwrap_or(("", ""));
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\n",
+                f.rule.id(),
+                f.rule.severity().label(),
+                escape_field(f.buffer.as_deref().unwrap_or("")),
+                escape_field(queue),
+                escape_field(name),
+                escape_field(&f.detail)
+            ));
+        }
+        out
+    }
+}
+
+/// Parse a lint TSV back into its six unescaped string columns per line —
+/// the round-trip counterpart of [`Report::to_tsv`], used by the escaping
+/// regression tests.
+pub fn parse_lint_tsv(text: &str) -> Result<Vec<[String; 6]>, String> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(h) if h == LINT_TSV_HEADER => {}
+        other => return Err(format!("bad lint TSV header: {other:?}")),
+    }
+    let mut out = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 6 {
+            return Err(format!(
+                "lint TSV line {}: want 6 columns, got {}",
+                ln + 2,
+                cols.len()
+            ));
+        }
+        let mut row: [String; 6] = Default::default();
+        for (i, c) in cols.iter().enumerate() {
+            row[i] =
+                unescape_field(c).map_err(|e| format!("line {}: {e}", ln + 2))?;
+        }
+        out.push(row);
+    }
+    Ok(out)
+}

@@ -260,6 +260,24 @@ pub enum LaunchArg {
     F32(f32),
 }
 
+/// Split a positional launch-arg list into `(read buffers, written
+/// buffers)` per the launch ABI ([`CompileSpec::launch_args`]): every
+/// `Buf` except the last is an input, the last is the output. This is the
+/// backend tier's access-classification source for the command recorder.
+pub fn launch_arg_access(args: &[LaunchArg]) -> (Vec<u64>, Vec<u64>) {
+    let bufs: Vec<u64> = args
+        .iter()
+        .filter_map(|a| match a {
+            LaunchArg::Buf(b) => Some(b.0),
+            _ => None,
+        })
+        .collect();
+    match bufs.split_last() {
+        Some((out, ins)) => (ins.to_vec(), vec![*out]),
+        None => (Vec::new(), Vec::new()),
+    }
+}
+
 /// Event timestamps, ns on the shared process profiling clock
 /// ([`crate::rawcl::clock`]), so timelines from different backends are
 /// directly comparable — which the profiler's overlap detection needs.

@@ -18,7 +18,11 @@ pub const MAX_TIMESTAMP: u64 = (1 << 63) - 1;
 /// `\n`, `\r` and `\` become two-character escapes so the record stays
 /// one line of exactly four columns. Names without those characters
 /// round-trip byte-identical (and are left unallocated).
-fn escape_field(s: &str) -> std::borrow::Cow<'_, str> {
+///
+/// Shared with [`crate::analysis::report`] — the lint report's TSV/JSON
+/// renderers must escape the same hostile names the profiler does, from
+/// one implementation, not a copy.
+pub fn escape_field(s: &str) -> std::borrow::Cow<'_, str> {
     if !s.contains(['\t', '\n', '\r', '\\']) {
         return std::borrow::Cow::Borrowed(s);
     }
@@ -37,7 +41,7 @@ fn escape_field(s: &str) -> std::borrow::Cow<'_, str> {
 
 /// Invert [`escape_field`]. Unknown escapes are an error — they can only
 /// come from a corrupt or foreign file.
-fn unescape_field(s: &str) -> Result<String, String> {
+pub fn unescape_field(s: &str) -> Result<String, String> {
     if !s.contains('\\') {
         return Ok(s.to_string());
     }

@@ -63,9 +63,13 @@ impl Queue {
     }
 
     /// Attach a human-readable label; it names this queue in error
-    /// messages (and is the natural `Prof::add_queue` name).
+    /// messages (and is the natural `Prof::add_queue` name). The label
+    /// also propagates to the command recorder so lint findings name the
+    /// queue the way the user does.
     pub fn set_label(&self, label: impl Into<String>) {
-        *self.label.lock().unwrap() = Some(label.into());
+        let label = label.into();
+        crate::analysis::record::rawcl_queue_label(self.h, &label);
+        *self.label.lock().unwrap() = Some(label);
     }
 
     pub fn label(&self) -> Option<String> {
@@ -157,6 +161,40 @@ impl Queue {
         Ok(self.track(evt))
     }
 
+    /// Non-blocking read enqueue for the v2 session tier: the dependency
+    /// tracker must observe the enqueue and note the access under one
+    /// lock, and cannot hold that lock across a blocking wait — the
+    /// caller waits on the returned event *after* releasing it.
+    ///
+    /// # Safety
+    /// `dst..dst+len` must stay valid until the returned event completes.
+    pub(crate) unsafe fn enqueue_read_buffer_h_nb(
+        &self,
+        buf: MemH,
+        offset: usize,
+        dst: *mut u8,
+        len: usize,
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_read_buffer_raw(
+                self.h,
+                buf,
+                false,
+                offset,
+                dst,
+                len,
+                &hs,
+                Some(&mut evt),
+            ),
+            "enqueueing buffer read",
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
+        Ok(self.track(evt))
+    }
+
     pub(crate) fn enqueue_read_buffer(
         &self,
         buf: &Buffer,
@@ -178,6 +216,26 @@ impl Queue {
         let mut evt = EventH::NULL;
         check(
             rawcl::enqueue_write_buffer(self.h, buf, true, offset, src, &hs, Some(&mut evt)),
+            "enqueueing buffer write",
+        )
+        .map_err(|e| e.with_object(self.obj_name()))?;
+        Ok(self.track(evt))
+    }
+
+    /// Non-blocking write enqueue (data is snapshot at enqueue, so this
+    /// is safe); counterpart of [`Self::enqueue_read_buffer_h_nb`] for
+    /// the v2 tier's atomic snapshot-enqueue-note sequence.
+    pub(crate) fn enqueue_write_buffer_h_nb(
+        &self,
+        buf: MemH,
+        offset: usize,
+        src: &[u8],
+        wait: &[Event],
+    ) -> CclResult<Event> {
+        let hs: Vec<EventH> = wait.iter().map(|e| e.handle()).collect();
+        let mut evt = EventH::NULL;
+        check(
+            rawcl::enqueue_write_buffer(self.h, buf, false, offset, src, &hs, Some(&mut evt)),
             "enqueueing buffer write",
         )
         .map_err(|e| e.with_object(self.obj_name()))?;

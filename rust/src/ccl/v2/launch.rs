@@ -318,10 +318,17 @@ impl<'s, O> Launch<'s, O> {
             .map_err(|e| e.with_object(format!("kernel {:?}", self.kname)))?;
         }
 
-        // -- implicit + explicit wait-list ------------------------------
+        // -- implicit wait-list + enqueue + record, atomically ----------
+        // One tracker lock spans the dependency snapshot, the enqueue
+        // (a non-blocking channel send) and the access notes. The old
+        // two-acquisition sequence left a window between snapshot and
+        // note where a concurrent transfer on another thread could
+        // snapshot *its* deps without seeing this launch, losing an
+        // ordering edge.
+        let queue = self.sess.queue(self.qi)?;
         let mut waits = self.extra_waits.clone();
+        let mut deps = self.sess.deps.lock().unwrap();
         if !self.independent {
-            let deps = self.sess.deps.lock().unwrap();
             for (arg, role) in self.args.iter().zip(&roles) {
                 if let LArg::Buf { h, .. } = arg {
                     match role {
@@ -333,23 +340,18 @@ impl<'s, O> Launch<'s, O> {
             }
         }
         dedup_events(&mut waits);
-
-        // -- enqueue + record -------------------------------------------
-        let queue = self.sess.queue(self.qi)?;
         let event = self.kernel.enqueue_ndrange(queue, &gws, Some(&lws), &waits)?;
         let _ = event.set_name(self.ev_name.as_deref().unwrap_or(&self.kname));
-        {
-            let mut deps = self.sess.deps.lock().unwrap();
-            for (arg, role) in self.args.iter().zip(&roles) {
-                if let LArg::Buf { h, .. } = arg {
-                    match role {
-                        ArgRole::BufferInput { .. } => deps.note_read(*h, event),
-                        ArgRole::BufferOutput { .. } => deps.note_write(*h, event),
-                        _ => {}
-                    }
+        for (arg, role) in self.args.iter().zip(&roles) {
+            if let LArg::Buf { h, .. } = arg {
+                match role {
+                    ArgRole::BufferInput { .. } => deps.note_read(*h, event),
+                    ArgRole::BufferOutput { .. } => deps.note_write(*h, event),
+                    _ => {}
                 }
             }
         }
+        drop(deps);
         Ok(Pending { sess: self.sess, event, out: self.out, _o: PhantomData })
     }
 }

@@ -356,13 +356,29 @@ impl Session {
     ) -> CclResult<Event> {
         let q = self.queue(qi)?;
         let mut waits: Vec<Event> = extra.to_vec();
-        if implicit {
-            waits.extend(self.deps.lock().unwrap().read_deps(h));
-        }
-        dedup_events(&mut waits);
-        let ev = q.enqueue_read_buffer_h(h, offset, dst, &waits)?;
-        let _ = ev.set_name("READ_BUFFER");
-        self.deps.lock().unwrap().note_read(h, ev);
+        // Snapshot deps, enqueue, and note the access under ONE tracker
+        // lock. The old two-acquisition sequence had a window where a
+        // concurrent writer could snapshot its anti-dependencies between
+        // our snapshot and our note_read — missing this read entirely and
+        // losing the WAR edge. The enqueue itself must therefore be
+        // non-blocking (a channel send); we wait on the event after the
+        // lock is gone.
+        let ev = {
+            let mut deps = self.deps.lock().unwrap();
+            if implicit {
+                waits.extend(deps.read_deps(h));
+            }
+            dedup_events(&mut waits);
+            // SAFETY: `dst` outlives the command — we wait on `ev` below
+            // before returning.
+            let ev = unsafe {
+                q.enqueue_read_buffer_h_nb(h, offset, dst.as_mut_ptr(), dst.len(), &waits)?
+            };
+            let _ = ev.set_name("READ_BUFFER");
+            deps.note_read(h, ev);
+            ev
+        };
+        ev.wait()?;
         Ok(ev)
     }
 
@@ -381,14 +397,60 @@ impl Session {
     ) -> CclResult<Event> {
         let q = self.queue(qi)?;
         let mut waits: Vec<Event> = extra.to_vec();
-        if implicit {
-            waits.extend(self.deps.lock().unwrap().write_deps(h));
-        }
-        dedup_events(&mut waits);
-        let ev = q.enqueue_write_buffer_h(h, offset, src, &waits)?;
-        let _ = ev.set_name("WRITE_BUFFER");
-        self.deps.lock().unwrap().note_write(h, ev);
+        // Same atomic snapshot-enqueue-note sequence as raw_read: a
+        // reader racing between our write_deps snapshot and note_write
+        // must either be in the snapshot or observe us as last writer.
+        let ev = {
+            let mut deps = self.deps.lock().unwrap();
+            if implicit {
+                waits.extend(deps.write_deps(h));
+            }
+            dedup_events(&mut waits);
+            let ev = q.enqueue_write_buffer_h_nb(h, offset, src, &waits)?;
+            let _ = ev.set_name("WRITE_BUFFER");
+            deps.note_write(h, ev);
+            ev
+        };
+        // Preserve the blocking semantics the callers rely on.
+        ev.wait()?;
         Ok(ev)
+    }
+
+    /// Run the static analyzer over the active recording, scoped to this
+    /// session's queues.
+    ///
+    /// Requires an armed [`crate::analysis::Recording`] — start one
+    /// *before* building the session (so queue labels are captured), run
+    /// the commands to audit, then call `check()`:
+    ///
+    /// ```no_run
+    /// use cf4rs::analysis::Recording;
+    /// use cf4rs::ccl::v2::Session;
+    ///
+    /// let rec = Recording::start();
+    /// let sess = Session::builder().build().unwrap();
+    /// // ... launches, reads, writes ...
+    /// let report = sess.check().unwrap();
+    /// assert!(report.is_clean(), "{}", report.render_human());
+    /// drop(rec);
+    /// ```
+    pub fn check(&self) -> CclResult<crate::analysis::Report> {
+        let stream = crate::analysis::record::snapshot_active().ok_or_else(|| {
+            CclError::framework(
+                "Session::check needs an active recording: create a \
+                 cf4rs::analysis::Recording before issuing commands",
+            )
+        })?;
+        let mine: Vec<usize> = self
+            .queues
+            .iter()
+            .filter_map(|q| {
+                stream.queue_index(crate::analysis::record::RAWCL_SPACE, q.handle().0)
+            })
+            .collect();
+        let mut report = crate::analysis::analyze(&stream);
+        report.retain_queues(&mine);
+        Ok(report)
     }
 }
 

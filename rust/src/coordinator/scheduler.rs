@@ -53,6 +53,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::analysis::record as arec;
 use crate::backend::plugin::{partition_capable, Capabilities, CapabilityError};
 use crate::backend::{Backend, BackendRegistry, BufId, CompileSpec, KernelId};
 use crate::ccl::errors::{CclError, CclResult};
@@ -432,23 +433,66 @@ fn run_task(
         .ok_or_else(|| "plan names a kernel the workload did not declare".to_string())?;
     let kernel = scratch.kernel(b, spec)?;
 
+    // Each backend is one in-order logical queue to the command
+    // recorder; shard dispatches interleave across worker threads but
+    // same-backend commands stay totally ordered.
+    let rec_space =
+        if arec::enabled() { Some(format!("be:{}", b.name())) } else { None };
+
     let mut in_bufs = Vec::with_capacity(plan.inputs.len());
     let mut acquired: Vec<(usize, BufId)> = Vec::new();
     let result: Result<usize, String> = (|| {
         for data in &plan.inputs {
             let buf = scratch.acquire(b, data.len())?;
             acquired.push((data.len(), buf));
-            b.write(buf, 0, data).map_err(|e| e.to_string())?;
+            let wev = b.write(buf, 0, data).map_err(|e| e.to_string())?;
+            if let Some(space) = &rec_space {
+                arec::backend_cmd(
+                    space,
+                    arec::CmdKind::HostWrite,
+                    "WRITE_BUFFER",
+                    &[],
+                    &[buf.0],
+                    Some(wev.0),
+                    false,
+                );
+            }
             in_bufs.push(buf);
         }
         let out_buf = scratch.acquire(b, plan.out_bytes)?;
         acquired.push((plan.out_bytes, out_buf));
         let args = spec.launch_args(&in_bufs, out_buf, &plan.scalars);
         let ev = b.enqueue(kernel, &args, tag).map_err(|e| e.to_string())?;
+        if let Some(space) = &rec_space {
+            let (reads, writes) = crate::backend::launch_arg_access(&args);
+            arec::backend_cmd(
+                space,
+                arec::CmdKind::Kernel,
+                spec.event_name(),
+                &reads,
+                &writes,
+                Some(ev.0),
+                false,
+            );
+        }
         b.wait(ev).map_err(|e| e.to_string())?;
+        if let Some(space) = &rec_space {
+            arec::backend_host_wait(space, ev.0);
+        }
         let mut dst = out.lock().unwrap();
         dst.resize(plan.out_bytes, 0);
-        b.read(out_buf, 0, &mut dst).map_err(|e| e.to_string())?;
+        let rev = b.read(out_buf, 0, &mut dst).map_err(|e| e.to_string())?;
+        if let Some(space) = &rec_space {
+            arec::backend_cmd(
+                space,
+                arec::CmdKind::HostRead,
+                "READ_BUFFER",
+                &[out_buf.0],
+                &[],
+                Some(rev.0),
+                true,
+            );
+        }
         if verify_read {
             // A wrong-once fault corrupts one host read-back while the
             // device buffer keeps the true bytes, so a disagreeing

@@ -1,0 +1,419 @@
+//! The static-analysis cell: `cf4rs lint` and `bench lint-graph`.
+//!
+//! Both surfaces replay workloads under the command recorder
+//! ([`crate::analysis::Recording`]) and run the happens-before analyzer
+//! over the captured streams:
+//!
+//! * `cf4rs lint [--workload W] [--path P] [--json] [--strict] [--quick]`
+//!   — replay the selected (workload × path) cells and report findings;
+//!   `--strict` turns any finding into a non-zero exit.
+//! * `bench lint-graph [--quick]` — the CI detector gate, two-sided:
+//!   the clean 5-workloads × 5-paths matrix must analyze to **zero**
+//!   findings, AND every stream in the seeded-bug corpus
+//!   ([`crate::analysis::corpus`]) must be flagged with its expected
+//!   rule. Writes `results/lint-graph.md` +
+//!   `results/BENCH_lint-graph.json` (schema [`SCHEMA`]).
+//!
+//! A detector that goes quiet fails the corpus side; one that goes noisy
+//! fails the clean side. Either way CI turns red.
+
+use std::time::Instant;
+
+use crate::analysis::{analyze, corpus, Recording, Report};
+use crate::backend::BackendRegistry;
+use crate::workload::{
+    exec, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload,
+    StencilWorkload, Workload,
+};
+
+/// Version tag of `BENCH_lint-graph.json`. Bump on layout changes so
+/// trend tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-lint-graph/1";
+
+/// The five execution paths every workload replays through.
+pub const PATHS: [&str; 5] = ["rawcl", "ccl-v1", "ccl-v2", "sharded", "native"];
+
+/// One replayed-and-analyzed (workload × path) cell.
+pub struct LintCell {
+    pub workload: &'static str,
+    pub path: &'static str,
+    pub report: Report,
+    pub error: Option<String>,
+    pub ms: f64,
+}
+
+/// Replay one workload through one path under a fresh recording window
+/// and analyze the captured stream.
+fn run_cell<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    path: &'static str,
+    registry: &BackendRegistry,
+) -> (Report, Option<String>) {
+    let rec = Recording::start();
+    let outcome = match path {
+        "rawcl" => exec::run_raw_path(w, iters, 1),
+        "ccl-v1" => exec::run_ccl_path(w, iters, 0).map_err(|e| e.to_string()),
+        "ccl-v2" => exec::run_v2_path(w, iters, 0).map_err(|e| e.to_string()),
+        "sharded" => {
+            exec::run_sharded_path(w, iters, registry).map_err(|e| e.to_string())
+        }
+        "native" => exec::run_native_path(w, iters),
+        other => Err(format!("unknown path {other:?}")),
+    };
+    let stream = rec.finish();
+    (analyze(&stream), outcome.err())
+}
+
+/// Replay one workload through the selected paths.
+fn lint_workload<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    registry: &BackendRegistry,
+    path_filter: Option<&str>,
+    cells: &mut Vec<LintCell>,
+) {
+    for path in PATHS {
+        if let Some(p) = path_filter {
+            if p != path {
+                continue;
+            }
+        }
+        let t0 = Instant::now();
+        let (report, error) = run_cell(w, iters, path, registry);
+        cells.push(LintCell {
+            workload: w.name(),
+            path,
+            report,
+            error,
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+    }
+}
+
+/// Replay the selected workloads × paths. `None` filters mean "all".
+/// Quick sizes mirror the workloads-matrix quick mode.
+pub fn run_matrix(
+    quick: bool,
+    workload_filter: Option<&str>,
+    path_filter: Option<&str>,
+) -> Vec<LintCell> {
+    let registry = BackendRegistry::with_default_backends();
+    let mut cells = Vec::new();
+    let want = |name: &str| workload_filter.is_none() || workload_filter == Some(name);
+
+    if quick {
+        if want("prng") {
+            lint_workload(&PrngWorkload::new(4096), 2, &registry, path_filter, &mut cells);
+        }
+        if want("saxpy") {
+            lint_workload(&SaxpyWorkload::new(4096, 2.5), 2, &registry, path_filter, &mut cells);
+        }
+        if want("reduce") {
+            lint_workload(&ReduceWorkload::new(8192), 2, &registry, path_filter, &mut cells);
+        }
+        if want("stencil") {
+            lint_workload(&StencilWorkload::new(24, 16), 2, &registry, path_filter, &mut cells);
+        }
+        if want("matmul") {
+            lint_workload(&MatmulWorkload::new(12), 2, &registry, path_filter, &mut cells);
+        }
+    } else {
+        if want("prng") {
+            lint_workload(&PrngWorkload::new(65536), 4, &registry, path_filter, &mut cells);
+        }
+        if want("saxpy") {
+            lint_workload(&SaxpyWorkload::new(65536, 2.5), 3, &registry, path_filter, &mut cells);
+        }
+        if want("reduce") {
+            lint_workload(&ReduceWorkload::new(262144), 2, &registry, path_filter, &mut cells);
+        }
+        if want("stencil") {
+            lint_workload(&StencilWorkload::new(64, 64), 3, &registry, path_filter, &mut cells);
+        }
+        if want("matmul") {
+            lint_workload(&MatmulWorkload::new(32), 2, &registry, path_filter, &mut cells);
+        }
+    }
+    cells
+}
+
+/// One analyzed corpus case for the report.
+struct CorpusOutcome {
+    name: &'static str,
+    expect: &'static str,
+    flagged: bool,
+    found: Vec<&'static str>,
+}
+
+fn run_corpus() -> Vec<CorpusOutcome> {
+    corpus::seeded_bugs()
+        .into_iter()
+        .map(|case| {
+            let report = analyze(&case.stream);
+            let found: Vec<&'static str> =
+                report.findings.iter().map(|f| f.rule.id()).collect();
+            CorpusOutcome {
+                name: case.name,
+                expect: case.expect.id(),
+                flagged: found.contains(&case.expect.id()),
+                found,
+            }
+        })
+        .collect()
+}
+
+fn render_md(cells: &[LintCell], corpus: &[CorpusOutcome], quick: bool) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# Command-graph lint gate — {} mode\n\n## Clean matrix (must be \
+         zero findings everywhere)\n\n",
+        if quick { "quick" } else { "full" }
+    ));
+    s.push_str("| workload | path | commands | findings | analyze+replay |\n");
+    s.push_str("|---|---|---:|---:|---:|\n");
+    for c in cells {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {:.2} ms |\n",
+            c.workload,
+            c.path,
+            c.report.n_cmds,
+            if c.error.is_some() {
+                "**ERROR**".to_string()
+            } else {
+                c.report.findings.len().to_string()
+            },
+            c.ms
+        ));
+    }
+    for c in cells {
+        if let Some(e) = &c.error {
+            s.push_str(&format!("\n* `{}/{}` failed: {e}\n", c.workload, c.path));
+        }
+        if !c.report.is_clean() {
+            s.push_str(&format!(
+                "\n### {}/{} findings\n\n```\n{}```\n",
+                c.workload,
+                c.path,
+                c.report.render_human()
+            ));
+        }
+    }
+    s.push_str("\n## Seeded-bug corpus (every case must be flagged)\n\n");
+    s.push_str("| case | expected rule | flagged | rules found |\n|---|---|---|---|\n");
+    for o in corpus {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} |\n",
+            o.name,
+            o.expect,
+            if o.flagged { "✓" } else { "**MISSED**" },
+            o.found.join(", ")
+        ));
+    }
+    s
+}
+
+use super::json_escape as esc;
+
+fn render_json(cells: &[LintCell], corpus: &[CorpusOutcome], quick: bool) -> String {
+    let clean_findings: usize = cells.iter().map(|c| c.report.findings.len()).sum();
+    let clean_ok =
+        clean_findings == 0 && cells.iter().all(|c| c.error.is_none()) && !cells.is_empty();
+    let corpus_ok = corpus.iter().all(|o| o.flagged) && !corpus.is_empty();
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str(&format!("  \"findings\": {clean_findings},\n"));
+    s.push_str(&format!("  \"clean_ok\": {clean_ok},\n"));
+    s.push_str(&format!("  \"corpus_ok\": {corpus_ok},\n"));
+    s.push_str(&format!("  \"gate_ok\": {},\n", clean_ok && corpus_ok));
+    s.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"path\": \"{}\", \"commands\": {}, \
+             \"cell_findings\": {}, \"ms\": {:.3}{}}}{}\n",
+            c.workload,
+            c.path,
+            c.report.n_cmds,
+            c.report.findings.len(),
+            c.ms,
+            match &c.error {
+                Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+                None => String::new(),
+            },
+            if i + 1 < cells.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n  \"corpus\": [\n");
+    for (i, o) in corpus.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": \"{}\", \"expect\": \"{}\", \"flagged\": {}, \
+             \"found\": [{}]}}{}\n",
+            o.name,
+            o.expect,
+            o.flagged,
+            o.found.iter().map(|r| format!("\"{r}\"")).collect::<Vec<_>>().join(", "),
+            if i + 1 < corpus.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Build the `bench lint-graph` report. Returns `(markdown, json, ok)` —
+/// the caller writes both files even when a gate failed (the artifacts
+/// are the evidence) but must exit non-zero on `!ok`.
+pub fn report(quick: bool) -> (String, String, bool) {
+    let cells = run_matrix(quick, None, None);
+    let corpus = run_corpus();
+    let clean_ok = cells.iter().all(|c| c.error.is_none() && c.report.is_clean())
+        && !cells.is_empty();
+    let corpus_ok = corpus.iter().all(|o| o.flagged) && !corpus.is_empty();
+    (
+        render_md(&cells, &corpus, quick),
+        render_json(&cells, &corpus, quick),
+        clean_ok && corpus_ok,
+    )
+}
+
+/// `cf4rs lint` entrypoint: replay + analyze, human or JSON output.
+pub fn lint_main(args: &[String]) -> i32 {
+    let mut workload: Option<String> = None;
+    let mut path: Option<String> = None;
+    let mut json = false;
+    let mut strict = false;
+    let mut quick = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--workload" => match it.next() {
+                Some(w) => workload = Some(w.clone()),
+                None => {
+                    eprintln!("--workload needs a value");
+                    return 2;
+                }
+            },
+            "--path" => match it.next() {
+                Some(p) => path = Some(p.clone()),
+                None => {
+                    eprintln!("--path needs a value");
+                    return 2;
+                }
+            },
+            "--json" => json = true,
+            "--strict" => strict = true,
+            "--quick" => quick = true,
+            other => {
+                eprintln!(
+                    "unknown lint option {other:?}\nusage: cf4rs lint \
+                     [--workload prng|saxpy|reduce|stencil|matmul|all] \
+                     [--path rawcl|ccl-v1|ccl-v2|sharded|native|all] \
+                     [--json] [--strict] [--quick]"
+                );
+                return 2;
+            }
+        }
+    }
+    let wf = workload.as_deref().filter(|w| *w != "all");
+    let pf = path.as_deref().filter(|p| *p != "all");
+    if let Some(w) = wf {
+        if !["prng", "saxpy", "reduce", "stencil", "matmul"].contains(&w) {
+            eprintln!("unknown workload {w:?}");
+            return 2;
+        }
+    }
+    if let Some(p) = pf {
+        if !PATHS.contains(&p) {
+            eprintln!("unknown path {p:?}");
+            return 2;
+        }
+    }
+
+    let cells = run_matrix(quick, wf, pf);
+    if cells.is_empty() {
+        eprintln!("no cells selected");
+        return 2;
+    }
+    let errored = cells.iter().any(|c| c.error.is_some());
+    let total: usize = cells.iter().map(|c| c.report.findings.len()).sum();
+
+    if json {
+        // One merged report over every replayed cell; `"findings"` is the
+        // total, which the CI clean gate greps as `"findings": 0`.
+        let mut merged = Report::default();
+        for c in &cells {
+            merged.findings.extend(c.report.findings.iter().cloned());
+            merged.n_cmds += c.report.n_cmds;
+            merged.n_queues += c.report.n_queues;
+            merged.n_buffers += c.report.n_buffers;
+        }
+        let meta = [
+            ("workload", wf.unwrap_or("all").to_string()),
+            ("path", pf.unwrap_or("all").to_string()),
+            ("cells", cells.len().to_string()),
+        ];
+        print!("{}", merged.to_json(&meta));
+    } else {
+        for c in &cells {
+            println!("== {}/{} ==", c.workload, c.path);
+            match &c.error {
+                Some(e) => println!("  replay FAILED: {e}"),
+                None => print!("{}", c.report.render_human()),
+            }
+            println!();
+        }
+        println!(
+            "{} cell(s), {} finding(s){}",
+            cells.len(),
+            total,
+            if errored { ", with replay errors" } else { "" }
+        );
+    }
+    if errored || (strict && total > 0) {
+        1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_side_of_the_gate_is_green() {
+        let outcomes = run_corpus();
+        assert_eq!(outcomes.len(), 6);
+        for o in &outcomes {
+            assert!(o.flagged, "{} missed (found {:?})", o.name, o.found);
+        }
+    }
+
+    #[test]
+    fn single_cell_replay_is_clean() {
+        // The full quick matrix runs in CI's bench-gate leg; one cheap
+        // cell here keeps the invariant pinned in plain `cargo test`.
+        let registry = BackendRegistry::with_default_backends();
+        let (report, err) =
+            run_cell(&PrngWorkload::new(256), 2, "ccl-v2", &registry);
+        assert!(err.is_none(), "{err:?}");
+        assert!(report.n_cmds > 0, "recorder captured nothing");
+        assert!(report.is_clean(), "{}", report.render_human());
+    }
+
+    #[test]
+    fn json_gates_follow_the_outcomes() {
+        let cells = vec![LintCell {
+            workload: "prng",
+            path: "rawcl",
+            report: Report::default(),
+            error: Some("boom".to_string()),
+            ms: 1.0,
+        }];
+        let j = render_json(&cells, &run_corpus(), true);
+        assert!(j.contains("\"clean_ok\": false"));
+        assert!(j.contains("\"corpus_ok\": true"));
+        assert!(j.contains("\"gate_ok\": false"));
+        assert!(j.contains(SCHEMA));
+    }
+}

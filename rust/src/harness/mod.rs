@@ -37,6 +37,11 @@
 //!   mixed load) and overload shedding (bulk sheds first, and only
 //!   when offered load exceeds capacity) (writes `edge.md` +
 //!   `BENCH_edge.json`);
+//! * `bench lint-graph` — the static-analysis detector gate, two-sided:
+//!   the clean 5-workloads × 5-paths matrix replayed under the command
+//!   recorder must analyze to zero findings, and every seeded-bug
+//!   corpus stream must be flagged with its expected rule (writes
+//!   `lint-graph.md` + `BENCH_lint-graph.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -46,6 +51,7 @@ pub mod adaptive;
 pub mod backends;
 pub mod edge;
 pub mod figures;
+pub mod lint;
 pub mod loc;
 pub mod microbench;
 pub mod native;
@@ -90,7 +96,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|service|adaptive|native|zoo|edge|all [--quick]"
+             workloads|service|adaptive|native|zoo|edge|lint-graph|all [--quick]"
         );
         return 2;
     };
@@ -268,6 +274,22 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_lint_graph(quick: bool) -> bool {
+        let (md, json, validated) = lint::report(quick);
+        print!("{md}");
+        // Write both artifacts even when a gate failed — they are the
+        // evidence — but fail the run on any gate.
+        let mut ok = write_result("lint-graph.md", &md);
+        ok &= write_result("BENCH_lint-graph.json", &json);
+        if !validated {
+            eprintln!(
+                "lint-graph: a gate FAILED (findings on the clean matrix, a \
+                 replay error, or a seeded bug the analyzer missed; see table)"
+            );
+        }
+        ok && validated
+    }
+
     fn run_edge(quick: bool) -> bool {
         let (md, json, validated) = edge::report(quick);
         print!("{md}");
@@ -297,6 +319,7 @@ pub fn main(args: &[String]) -> i32 {
         "native" => run_native(quick),
         "zoo" => run_zoo(quick),
         "edge" => run_edge(quick),
+        "lint-graph" => run_lint_graph(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -310,7 +333,8 @@ pub fn main(args: &[String]) -> i32 {
             let i = run_native(quick);
             let j = run_zoo(quick);
             let k = run_edge(quick);
-            l && a && b && c && d && e && f && g && h && i && j && k
+            let m = run_lint_graph(quick);
+            l && a && b && c && d && e && f && g && h && i && j && k && m
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -43,12 +43,19 @@
 //!   window) that instrument the service and scheduler hot paths and
 //!   feed the [`coordinator::adaptive`] controller (adaptive batch
 //!   window, throughput-proportional shard planning).
+//! * [`analysis`] — static analysis over recorded command graphs: a
+//!   lightweight recorder threaded through the rawcl/ccl/v2/backend
+//!   enqueue paths, a happens-before analyzer (vector clocks per queue),
+//!   and typed lint findings (data races, read-before-write, dependency
+//!   cycles, dead writes, unwaited host reads) surfaced via
+//!   `Session::check()` and the `cf4rs lint` CLI.
 //! * [`harness`] — benchmark drivers that regenerate every table and
 //!   figure of the paper's evaluation (§6), plus the backend-comparison
 //!   table.
 //! * [`utils`] — the three command-line utilities (`devinfo`, `cclc`,
 //!   `plot_events`).
 
+pub mod analysis;
 pub mod backend;
 pub mod ccl;
 pub mod coordinator;

@@ -19,13 +19,19 @@
 //!   control; announces `EDGE LISTENING <addr>` on stdout and serves
 //!   until stdin closes (or `--serve-secs` elapses), then drains
 //!   gracefully;
+//! * `lint`         — replay workloads under the command recorder and
+//!   run the happens-before static analyzer over the captured streams:
+//!   data races, unwaited host reads, uninitialized reads, dependency
+//!   cycles, dead writes; `--strict` turns findings into a non-zero
+//!   exit, `--json` emits the machine-readable report;
 //! * `bench`        — regenerate the paper's evaluation (§6): `loc`,
 //!   `overhead`, `figure3`, `figure5` — plus the backend comparison
 //!   (`backends`), the workload × path matrix (`workloads`), the
 //!   service latency/batching cell (`service`), the adaptive-control
 //!   cell (`adaptive`), the native-tier speedup gate (`native`), the
-//!   plugin-ABI device-zoo cell (`zoo`) and the serving-edge
-//!   load-generator cell (`edge`).
+//!   plugin-ABI device-zoo cell (`zoo`), the serving-edge
+//!   load-generator cell (`edge`) and the static-analysis detector
+//!   gate (`lint-graph`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -60,12 +66,19 @@ fn usage() -> i32 {
          \x20     TCP serving edge (binary protocol, priority lanes,\n\
          \x20     per-tenant fairness, deadlines, overload shedding);\n\
          \x20     port 0 = ephemeral, announced as 'EDGE LISTENING addr'\n\
+         \x20 lint [--workload prng|saxpy|reduce|stencil|matmul|all]\n\
+         \x20     [--path rawcl|ccl-v1|ccl-v2|sharded|native|all]\n\
+         \x20     [--json] [--strict] [--quick]\n\
+         \x20     replay workloads under the command recorder and run the\n\
+         \x20     happens-before analyzer (races, unwaited host reads,\n\
+         \x20     uninitialized reads, cycles, dead writes) over the streams\n\
          \x20 bench loc|overhead|figure3|figure5|backends|workloads|service|\n\
-         \x20     adaptive|native|zoo|edge   regenerate paper results, backend\n\
-         \x20     comparison, the (workload x path) matrix, the service cell,\n\
-         \x20     the adaptive-control cell, the native-vs-interpreter\n\
-         \x20     speedup gate, the plugin device-zoo cell and the\n\
-         \x20     serving-edge open-loop load-generator cell (--quick)"
+         \x20     adaptive|native|zoo|edge|lint-graph   regenerate paper\n\
+         \x20     results, backend comparison, the (workload x path) matrix,\n\
+         \x20     the service cell, the adaptive-control cell, the\n\
+         \x20     native-vs-interpreter speedup gate, the plugin device-zoo\n\
+         \x20     cell, the serving-edge open-loop load-generator cell and\n\
+         \x20     the static-analysis detector gate (--quick)"
     );
     2
 }
@@ -83,6 +96,7 @@ fn main() {
         "rng" => rng_main(rest),
         "serve" => serve_main(rest),
         "edge" => edge_main(rest),
+        "lint" => harness::lint::lint_main(rest),
         "bench" => harness::main(rest),
         "-h" | "--help" | "help" => usage(),
         other => {

@@ -113,7 +113,12 @@ pub fn create_buffer(
     };
     let obj = Arc::new(BufferObj { ctx, flags, size, data: Mutex::new(data) });
     *status = CL_SUCCESS;
-    MemH(registry::insert(Obj::Buffer(obj)))
+    let h = MemH(registry::insert(Obj::Buffer(obj)));
+    // COPY_HOST_PTR defines the contents; a plain allocation is zeroed
+    // storage but *logically* uninitialized — the analyzer's
+    // read-before-write rule keys off this distinction.
+    crate::analysis::record::rawcl_buf_create(h, size, host_data.is_some());
+    h
 }
 
 pub fn retain_mem_object(mem: MemH) -> ClStatus {
@@ -132,6 +137,9 @@ pub fn release_mem_object(mem: MemH) -> ClStatus {
         return CL_INVALID_MEM_OBJECT;
     }
     if registry::release(mem.0) {
+        // Generation bump: a later buffer reusing this raw handle value
+        // must not alias this lifetime in the recorded stream.
+        crate::analysis::record::rawcl_buf_release(mem);
         CL_SUCCESS
     } else {
         CL_INVALID_MEM_OBJECT

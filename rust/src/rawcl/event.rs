@@ -183,6 +183,11 @@ pub fn wait_for_events(events: &[EventH]) -> ClStatus {
             worst = CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST;
         }
     }
+    if worst == CL_SUCCESS {
+        // Host-mediated sync edge: the calling thread now happens-after
+        // every command in the wait list.
+        crate::analysis::record::rawcl_host_wait(events);
+    }
     worst
 }
 

@@ -32,6 +32,7 @@ use super::simexec;
 use super::types::{
     CommandType, ContextH, DeviceId, EventH, KernelH, MemH, QueueH, QueueProps,
 };
+use crate::analysis::record as arec;
 use crate::runtime::literal::{literal_from_bytes, ElemType};
 use crate::runtime::TextModule;
 
@@ -587,6 +588,24 @@ pub fn enqueue_ndrange_kernel(
             }
         }
     }
+    // Access sets for the static analyzer come straight from the
+    // `arg_roles` ABI — the same single source the validation above used.
+    let rec = if arec::enabled() {
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        for (role, maybe) in spec.args.iter().zip(&set_args) {
+            if let Some(ArgValue::Buffer(m)) = maybe {
+                match role {
+                    ArgRole::BufferInput { .. } => reads.push(*m),
+                    ArgRole::BufferOutput { .. } => writes.push(*m),
+                    _ => {}
+                }
+            }
+        }
+        Some((spec.name.clone(), reads, writes))
+    } else {
+        None
+    };
     let op = Op::Kernel {
         native: k.built.native.clone(),
         spec: spec.clone(),
@@ -594,6 +613,18 @@ pub fn enqueue_ndrange_kernel(
     };
     match enqueue(&q, CommandType::NdRangeKernel, wait, op) {
         Ok((h, _)) => {
+            if let Some((name, reads, writes)) = rec {
+                arec::rawcl_cmd(
+                    queue,
+                    arec::CmdKind::Kernel,
+                    &name,
+                    &reads,
+                    &writes,
+                    wait,
+                    h,
+                    false,
+                );
+            }
             store_or_release(evt, h);
             CL_SUCCESS
         }
@@ -659,6 +690,16 @@ pub unsafe fn enqueue_read_buffer_raw(
     let op = Op::Read { buf: b, offset, len, dst: SendPtr(dst) };
     match enqueue(&q, CommandType::ReadBuffer, wait, op) {
         Ok((h, ev)) => {
+            arec::rawcl_cmd(
+                queue,
+                arec::CmdKind::HostRead,
+                "READ_BUFFER",
+                &[mem],
+                &[],
+                wait,
+                h,
+                blocking,
+            );
             if blocking {
                 let st = ev.wait();
                 if st < 0 {
@@ -696,6 +737,16 @@ pub fn enqueue_write_buffer(
     let op = Op::Write { buf: b, offset, data: src.to_vec() };
     match enqueue(&q, CommandType::WriteBuffer, wait, op) {
         Ok((h, ev)) => {
+            arec::rawcl_cmd(
+                queue,
+                arec::CmdKind::HostWrite,
+                "WRITE_BUFFER",
+                &[],
+                &[mem],
+                wait,
+                h,
+                blocking,
+            );
             if blocking {
                 let st = ev.wait();
                 if st < 0 {
@@ -739,6 +790,16 @@ pub fn enqueue_copy_buffer(
     let op = Op::Copy { src: s, dst: d, src_off, dst_off, len };
     match enqueue(&q, CommandType::CopyBuffer, wait, op) {
         Ok((h, _)) => {
+            arec::rawcl_cmd(
+                queue,
+                arec::CmdKind::Copy,
+                "COPY_BUFFER",
+                &[src],
+                &[dst],
+                wait,
+                h,
+                false,
+            );
             store_or_release(evt, h);
             CL_SUCCESS
         }
@@ -768,6 +829,16 @@ pub fn enqueue_fill_buffer(
     let op = Op::Fill { buf: b, offset, len, pattern: pattern.to_vec() };
     match enqueue(&q, CommandType::FillBuffer, wait, op) {
         Ok((h, _)) => {
+            arec::rawcl_cmd(
+                queue,
+                arec::CmdKind::Fill,
+                "FILL_BUFFER",
+                &[],
+                &[mem],
+                wait,
+                h,
+                false,
+            );
             store_or_release(evt, h);
             CL_SUCCESS
         }
@@ -890,6 +961,7 @@ pub fn enqueue_marker(queue: QueueH, wait: &[EventH], evt: Option<&mut EventH>) 
     };
     match enqueue(&q, CommandType::Marker, wait, Op::Marker) {
         Ok((h, _)) => {
+            arec::rawcl_cmd(queue, arec::CmdKind::Marker, "MARKER", &[], &[], wait, h, false);
             store_or_release(evt, h);
             CL_SUCCESS
         }
@@ -907,7 +979,10 @@ pub fn finish(queue: QueueH) -> ClStatus {
         return CL_INVALID_COMMAND_QUEUE;
     }
     match rx.recv() {
-        Ok(()) => CL_SUCCESS,
+        Ok(()) => {
+            arec::rawcl_finish(queue);
+            CL_SUCCESS
+        }
         Err(_) => CL_INVALID_COMMAND_QUEUE,
     }
 }

@@ -20,6 +20,7 @@
 //!   backend — `bench native` uses it to race the native tier against
 //!   the interpreting PJRT backend on identical command streams).
 
+use crate::analysis::record as arec;
 use crate::backend::{Backend, BackendRegistry, NativeBackend};
 use crate::ccl::errors::{CclError, CclResult};
 use crate::ccl::v2::Session;
@@ -384,6 +385,11 @@ pub fn run_backend_path(
         kernels.push(b.compile(spec).map_err(|e| e.to_string())?);
     }
 
+    // Backend-tier command recording: each backend is one in-order
+    // logical queue, identified by its name. Only built when a
+    // recording window is armed (the common case pays one atomic load).
+    let rec_space = if arec::enabled() { Some(format!("be:{}", b.name())) } else { None };
+
     let mut state = w.init_state();
     let mut last = Vec::new();
     for iter in 0..iters {
@@ -394,15 +400,52 @@ pub fn run_backend_path(
         let mut in_bufs = Vec::with_capacity(plan.inputs.len());
         for data in &plan.inputs {
             let buf = b.alloc(data.len()).map_err(|e| e.to_string())?;
-            b.write(buf, 0, data).map_err(|e| e.to_string())?;
+            let wev = b.write(buf, 0, data).map_err(|e| e.to_string())?;
+            if let Some(space) = &rec_space {
+                arec::backend_cmd(
+                    space,
+                    arec::CmdKind::HostWrite,
+                    "WRITE_BUFFER",
+                    &[],
+                    &[buf.0],
+                    Some(wev.0),
+                    false,
+                );
+            }
             in_bufs.push(buf);
         }
         let out_buf = b.alloc(plan.out_bytes).map_err(|e| e.to_string())?;
         let args = spec.launch_args(&in_bufs, out_buf, &plan.scalars);
         let ev = b.enqueue(kernel, &args, None).map_err(|e| e.to_string())?;
+        if let Some(space) = &rec_space {
+            let (reads, writes) = crate::backend::launch_arg_access(&args);
+            arec::backend_cmd(
+                space,
+                arec::CmdKind::Kernel,
+                spec.event_name(),
+                &reads,
+                &writes,
+                Some(ev.0),
+                false,
+            );
+        }
         b.wait(ev).map_err(|e| e.to_string())?;
+        if let Some(space) = &rec_space {
+            arec::backend_host_wait(space, ev.0);
+        }
         let mut out = vec![0u8; plan.out_bytes];
-        b.read(out_buf, 0, &mut out).map_err(|e| e.to_string())?;
+        let rev = b.read(out_buf, 0, &mut out).map_err(|e| e.to_string())?;
+        if let Some(space) = &rec_space {
+            arec::backend_cmd(
+                space,
+                arec::CmdKind::HostRead,
+                "READ_BUFFER",
+                &[out_buf.0],
+                &[],
+                Some(rev.0),
+                true,
+            );
+        }
         for buf in in_bufs {
             b.free(buf);
         }

@@ -1,0 +1,431 @@
+//! Integration tests for the command-graph static analyzer: the recorder
+//! threaded through a live `ccl::v2` session, the WAR dependency-tracker
+//! regression (both sides), the shared-escaper TSV/JSON round-trip, and a
+//! property fuzz of the happens-before engine against a brute-force
+//! transitive-closure oracle.
+
+use cf4rs::analysis::report::parse_lint_tsv;
+use cf4rs::analysis::{analyze, corpus, hb, CmdKind, Record, Recording, Rule, StreamBuilder};
+use cf4rs::ccl::prof::export::escape_field;
+use cf4rs::ccl::v2::Session;
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+
+// ---------------------------------------------------------------------------
+// WAR regression: the multi-reader dependency-tracker class
+// ---------------------------------------------------------------------------
+
+/// Two kernels on different queues read buffer A, then a third kernel on
+/// yet another queue overwrites A. A dependency tracker that remembers
+/// only the most recent reader would order the writer after r2 alone and
+/// race r1. The v2 tracker must wait on the *full* reader set: the
+/// recorded stream shows happens-before edges from BOTH readers to the
+/// writer, and the session analyzes clean.
+#[test]
+fn v2_multi_reader_war_waits_on_all_readers() {
+    const N: usize = 1024;
+    let rec = Recording::start();
+    let sess = Session::builder().cpu().queues(3).build().unwrap();
+    sess.load(&["vecadd_n1024"]).unwrap();
+
+    let xs: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let a = sess.buffer_from(&xs).unwrap();
+    let b = sess.buffer_from(&xs).unwrap();
+    let o1 = sess.buffer::<f32>(N).unwrap();
+    let o2 = sess.buffer::<f32>(N).unwrap();
+
+    // Readers of A on queues 0 and 1.
+    let r1 = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(N)
+        .arg(&a)
+        .arg(&b)
+        .output(&o1)
+        .launch()
+        .unwrap();
+    let r2 = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(N)
+        .queue(1)
+        .arg(&a)
+        .arg(&b)
+        .output(&o2)
+        .launch()
+        .unwrap();
+    // Writer of A on queue 2 — implicit deps must cover r1 AND r2.
+    let w = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(N)
+        .queue(2)
+        .arg(&b)
+        .arg(&b)
+        .output(&a)
+        .launch()
+        .unwrap();
+
+    let report = sess.check().unwrap();
+    let stream = rec.snapshot();
+    r1.wait().unwrap();
+    r2.wait().unwrap();
+    let _ = w.read().unwrap();
+    let _ = o1.read_vec_on(0).unwrap();
+    let _ = o2.read_vec_on(1).unwrap();
+    drop(rec);
+
+    assert!(
+        !report.findings.iter().any(|f| f.rule == Rule::DataRace),
+        "full-reader-set session must be race-free:\n{}",
+        report.render_human()
+    );
+
+    // Structural check on the recorded graph: find the buffer read by two
+    // kernels on different queues, its two kernel readers, and its kernel
+    // writer — both readers must happen-before the writer.
+    let g = hb::build(&stream);
+    let kernels: Vec<_> = stream
+        .records
+        .iter()
+        .filter_map(|r| match r {
+            Record::Cmd(c) if c.kind == CmdKind::Kernel => Some(c),
+            _ => None,
+        })
+        .collect();
+    let mut checked = false;
+    for buf in 0..stream.buffers.len() {
+        let readers: Vec<usize> = kernels
+            .iter()
+            .filter(|c| c.reads.contains(&buf))
+            .map(|c| c.id)
+            .collect();
+        let writers: Vec<usize> = kernels
+            .iter()
+            .filter(|c| c.writes.contains(&buf))
+            .map(|c| c.id)
+            .collect();
+        if readers.len() == 2 && writers.len() == 1 {
+            let w = writers[0];
+            for &r in &readers {
+                assert!(
+                    g.hb(r, w),
+                    "reader #{r} of buffer {buf} has no happens-before edge \
+                     to writer #{w} — last-reader-only tracking regressed"
+                );
+            }
+            checked = true;
+        }
+    }
+    assert!(checked, "expected a 2-readers/1-writer buffer in the recording");
+}
+
+/// The pre-fix behavior, seeded synthetically: writer waits on the last
+/// reader only. The analyzer must flag it, and the fixed counterpart
+/// (full reader set) must stay clean — the two-sided pin that keeps the
+/// detector honest about this class.
+#[test]
+fn last_reader_only_flags_and_full_set_is_clean() {
+    let buggy = corpus::seeded_bugs()
+        .into_iter()
+        .find(|c| c.name == "last-reader-only")
+        .expect("corpus case present");
+    let report = analyze(&buggy.stream);
+    assert!(
+        report.findings.iter().any(|f| f.rule == Rule::DataRace),
+        "last-reader-only stream must report a data race:\n{}",
+        report.render_human()
+    );
+    let fixed = analyze(&corpus::full_reader_set());
+    assert!(fixed.is_clean(), "{}", fixed.render_human());
+}
+
+/// A live severed dependency (`.independent()` across queues) must come
+/// back as a data race through `Session::check`.
+#[test]
+fn v2_severed_dependency_is_reported() {
+    const N: usize = 1024;
+    let rec = Recording::start();
+    let sess = Session::builder().cpu().queues(2).build().unwrap();
+    sess.load(&["vecadd_n1024"]).unwrap();
+
+    let xs: Vec<f32> = (0..N).map(|i| i as f32).collect();
+    let a = sess.buffer_from(&xs).unwrap();
+    let b = sess.buffer_from(&xs).unwrap();
+    let o = sess.buffer::<f32>(N).unwrap();
+
+    let p1 = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(N)
+        .arg(&a)
+        .arg(&b)
+        .output(&o)
+        .launch()
+        .unwrap();
+    // Overwrites `a` while p1 may still be reading it — the implicit
+    // reader edge deliberately severed.
+    let p2 = sess
+        .kernel("vecadd")
+        .unwrap()
+        .global(N)
+        .queue(1)
+        .independent()
+        .arg(&b)
+        .arg(&b)
+        .output(&a)
+        .launch()
+        .unwrap();
+
+    let report = sess.check().unwrap();
+    p1.wait().unwrap();
+    let _ = p2.read().unwrap();
+    drop(rec);
+
+    assert!(
+        report.findings.iter().any(|f| f.rule == Rule::DataRace),
+        "severed cross-queue dependency must be reported:\n{}",
+        report.render_human()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Every corpus case, through the public surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corpus_rules_cover_all_five_classes() {
+    let cases = corpus::seeded_bugs();
+    let mut seen: Vec<&str> = Vec::new();
+    for case in &cases {
+        let report = analyze(&case.stream);
+        assert!(
+            report.findings.iter().any(|f| f.rule == case.expect),
+            "{}: expected {}",
+            case.name,
+            case.expect.id()
+        );
+        if !seen.contains(&case.expect.id()) {
+            seen.push(case.expect.id());
+        }
+    }
+    let all = [
+        "data-race",
+        "read-before-write",
+        "unwaited-host-read",
+        "dependency-cycle",
+        "dead-write",
+    ];
+    for rule in all {
+        assert!(seen.contains(&rule), "no corpus case exercises {rule}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-escaper round-trip (satellite: report reuses prof::export)
+// ---------------------------------------------------------------------------
+
+/// Findings whose queue labels, kernel names, and buffer labels contain
+/// tabs, newlines, quotes, and backslashes must render to one TSV line of
+/// six columns each and round-trip byte-identical through the *shared*
+/// profiler-export escaper — and the JSON must contain no raw control
+/// characters.
+#[test]
+fn hostile_names_round_trip_tsv_and_json() {
+    let q_label = "Q\t0\nwith\\esc";
+    let k_name = "SAXPY\"quoted\"\t\\n";
+    let b_label = "bu\tf\nfer";
+
+    let mut sb = StreamBuilder::new();
+    let q0 = sb.queue(q_label);
+    let q1 = sb.queue("Q1");
+    let x = sb.buffer(b_label, false);
+    let out = sb.buffer("out", false);
+    sb.cmd(q0, CmdKind::Kernel, "PRNG_INIT", &[], &[x], &[]);
+    // Severed edge: guarantees a data-race finding naming the hostile
+    // producer queue/kernel strings.
+    let r = sb.cmd(q1, CmdKind::Kernel, k_name, &[x], &[out], &[]);
+    sb.read_back(q1, out, &[r]);
+    let report = analyze(&sb.build());
+    assert!(!report.findings.is_empty(), "severed edge must be flagged");
+
+    let tsv = report.to_tsv();
+    // One header + exactly one physical line per finding: hostile
+    // newlines must not split records.
+    assert_eq!(tsv.lines().count(), 1 + report.findings.len(), "{tsv:?}");
+    // The shared escaper's output appears verbatim in the TSV.
+    assert!(tsv.contains(&escape_field(q_label)), "{tsv:?}");
+    let rows = parse_lint_tsv(&tsv).unwrap();
+    assert_eq!(rows.len(), report.findings.len());
+    for (row, f) in rows.iter().zip(&report.findings) {
+        let (queue, name) = f
+            .cmds
+            .first()
+            .map(|c| (c.queue_label.as_str(), c.name.as_str()))
+            .unwrap_or(("", ""));
+        assert_eq!(row[0], f.rule.id());
+        assert_eq!(row[2], f.buffer.as_deref().unwrap_or(""));
+        assert_eq!(row[3], queue, "queue label must round-trip");
+        assert_eq!(row[4], name, "kernel name must round-trip");
+        assert_eq!(row[5], f.detail);
+    }
+
+    let json = report.to_json(&[("workload", "hostile".to_string())]);
+    assert!(!json.contains('\t'), "raw tab leaked into JSON");
+    assert!(json.contains("\\t") && json.contains("\\n"), "{json:?}");
+    assert!(json.contains("\\\""), "quotes must be escaped: {json:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Property fuzz: analyzer vs brute-force happens-before oracle
+// ---------------------------------------------------------------------------
+
+/// Deterministic case generator (the repo's proptest convention: no
+/// external crate, xorshift-driven, seed printed on failure).
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+}
+
+struct FuzzCase {
+    stream: cf4rs::analysis::Stream,
+    /// Per command: (queue, reads, writes, deps).
+    cmds: Vec<(usize, Vec<usize>, Vec<usize>, Vec<usize>)>,
+    n_bufs: usize,
+}
+
+/// Random dependency DAG over 1–3 in-order queues and 1–2 shared
+/// *initialized* buffers (so read-before-write never fires and the only
+/// error class in play is `data-race`).
+fn random_dag(g: &mut Gen) -> FuzzCase {
+    let n_queues = g.range(1, 4) as usize;
+    let n_bufs = g.range(1, 3) as usize;
+    let n_cmds = g.range(1, 11) as usize;
+    let mut sb = StreamBuilder::new();
+    let queues: Vec<usize> = (0..n_queues).map(|q| sb.queue(&format!("Q{q}"))).collect();
+    let bufs: Vec<usize> = (0..n_bufs).map(|b| sb.buffer(&format!("B{b}"), true)).collect();
+    let mut cmds = Vec::new();
+    for i in 0..n_cmds {
+        let q = g.range(0, n_queues as u64) as usize;
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        for &b in &bufs {
+            match g.range(0, 4) {
+                1 => reads.push(b),
+                2 => writes.push(b),
+                3 => {
+                    reads.push(b);
+                    writes.push(b);
+                }
+                _ => {}
+            }
+        }
+        let deps: Vec<usize> = (0..i).filter(|_| g.range(0, 3) == 0).collect();
+        let id = sb.cmd(queues[q], CmdKind::Kernel, "K", &reads, &writes, &deps);
+        assert_eq!(id, i);
+        cmds.push((q, reads, writes, deps));
+    }
+    FuzzCase { stream: sb.build(), cmds, n_bufs }
+}
+
+/// Brute-force happens-before: reachability over same-queue program order
+/// plus declared dependency edges. `reach[i]` = set of j < i with j → i.
+fn oracle_reach(case: &FuzzCase) -> Vec<Vec<bool>> {
+    let n = case.cmds.len();
+    let mut reach = vec![vec![false; n]; n];
+    let mut last_on_queue: Vec<Option<usize>> = vec![None; 8];
+    for i in 0..n {
+        let (q, _, _, deps) = &case.cmds[i];
+        let mut preds = deps.clone();
+        if let Some(p) = last_on_queue[*q] {
+            preds.push(p);
+        }
+        last_on_queue[*q] = Some(i);
+        for p in preds {
+            reach[i][p] = true;
+            for j in 0..p {
+                if reach[p][j] {
+                    reach[i][j] = true;
+                }
+            }
+        }
+    }
+    reach
+}
+
+#[test]
+fn prop_analyzer_flags_race_iff_oracle_finds_unordered_conflict() {
+    for case_seed in 0..300u64 {
+        let mut g = Gen::new(case_seed ^ 0xDA6);
+        let case = random_dag(&mut g);
+        let reach = oracle_reach(&case);
+
+        // The vector-clock engine must agree with brute-force reachability
+        // on every pair.
+        let graph = hb::build(&case.stream);
+        assert!(graph.cycle.is_empty(), "case {case_seed}: backward deps only");
+        let n = case.cmds.len();
+        for i in 0..n {
+            for j in i + 1..n {
+                assert_eq!(
+                    graph.hb(i, j),
+                    reach[j][i],
+                    "case {case_seed}: hb({i},{j}) disagrees with oracle"
+                );
+            }
+        }
+
+        // Oracle: a race is an unordered pair of accesses to one buffer
+        // where at least one side writes.
+        let mut oracle_race = false;
+        for b in 0..case.n_bufs {
+            for i in 0..n {
+                for j in i + 1..n {
+                    let (_, ri, wi, _) = &case.cmds[i];
+                    let (_, rj, wj, _) = &case.cmds[j];
+                    let conflict = (wi.contains(&b) && (rj.contains(&b) || wj.contains(&b)))
+                        || (wj.contains(&b) && ri.contains(&b));
+                    if conflict && !reach[j][i] {
+                        oracle_race = true;
+                    }
+                }
+            }
+        }
+
+        let report = analyze(&case.stream);
+        let flagged = report.findings.iter().any(|f| f.rule == Rule::DataRace);
+        assert!(
+            !report
+                .findings
+                .iter()
+                .any(|f| f.rule == Rule::ReadBeforeWrite
+                    || f.rule == Rule::UnwaitedHostRead
+                    || f.rule == Rule::DependencyCycle),
+            "case {case_seed}: only data-race/dead-write possible here:\n{}",
+            report.render_human()
+        );
+        let analyzer_says = if flagged { "reports" } else { "misses" };
+        let oracle_says = if oracle_race { "finds" } else { "sees none" };
+        assert_eq!(
+            flagged,
+            oracle_race,
+            "case {case_seed}: analyzer {} a race, oracle {}:\n{}",
+            analyzer_says,
+            oracle_says,
+            report.render_human()
+        );
+    }
+}
