@@ -34,7 +34,7 @@ fn main() {
     ];
     let iters = 2u32;
     for (req_id, priority, desc) in descs {
-        let frame = RequestFrame { req_id, priority, deadline_us: 0, iters, desc };
+        let frame = RequestFrame { req_id, priority, deadline_us: 0, iters, desc, trace: false };
         cli.send(&frame).expect("send");
     }
     let mut answered = 0;
@@ -63,6 +63,7 @@ fn main() {
         deadline_us: 1, // 1 µs: expired long before the dispatcher looks
         iters: 1,
         desc: WorkloadDesc::Prng { n: 4096 },
+        trace: false,
     };
     cli.send(&doomed).expect("send");
     println!("deadline 1 us : {}", expect_err(&mut cli, 201));
@@ -73,6 +74,7 @@ fn main() {
         deadline_us: 0,
         iters: 1,
         desc: WorkloadDesc::Matmul { d: 1 << 20 }, // d² bytes: refused by cap
+        trace: false,
     };
     cli.send(&hostile).expect("send");
     println!("hostile shape : {}", expect_err(&mut cli, 202));
@@ -98,6 +100,7 @@ fn main() {
         deadline_us: 0,
         iters: 1,
         desc: WorkloadDesc::Reduce { n: 2048 },
+        trace: false,
     };
     cli.send(&last).expect("send");
     std::thread::sleep(Duration::from_millis(50));

@@ -36,6 +36,7 @@ fn main() {
         deadline_us: 0,
         iters: 1,
         desc: WorkloadDesc::Saxpy { n: 256, a: 1.5 },
+        trace: false,
     }
     .encode();
 
@@ -119,8 +120,14 @@ fn main() {
     let desc = WorkloadDesc::Prng { n: 2048 };
     let iters = 2u32;
     let mut cli = EdgeClient::connect(addr).expect("connect");
-    let req =
-        RequestFrame { req_id: 99, priority: Priority::High, deadline_us: 0, iters, desc };
+    let req = RequestFrame {
+        req_id: 99,
+        priority: Priority::High,
+        deadline_us: 0,
+        iters,
+        desc,
+        trace: false,
+    };
     let resp = cli.request(&req).expect("live server answers");
     assert_eq!(resp.req_id, 99);
     let oracle = desc.instantiate().reference(iters as usize);

@@ -1,0 +1,96 @@
+//! End-to-end request tracing in ~90 lines: arm the span sink, send a
+//! traced request through a live TCP edge (the `trace` wire flag rides
+//! the priority byte's high bit), and watch one request become one
+//! rooted span tree — decode and admission at the edge, batch wait and
+//! planning in the service, per-shard dispatch in the scheduler, and
+//! the device slices grafted from the profiler — then export the whole
+//! window as Chrome trace-event JSON loadable in Perfetto.
+//!
+//! Usage: `cargo run --release --example trace_demo`
+
+use std::sync::Arc;
+
+use cf4rs::backend::BackendRegistry;
+use cf4rs::coordinator::edge::proto::{RequestFrame, WorkloadDesc};
+use cf4rs::coordinator::edge::{EdgeClient, EdgeOpts, EdgeServer};
+use cf4rs::coordinator::{ComputeService, Priority, ServiceOpts, WorkloadRequest};
+use cf4rs::trace::chrome::{export_chrome, validate_chrome};
+use cf4rs::trace::tree::Forest;
+use cf4rs::trace::Tracing;
+use cf4rs::workload::{SaxpyWorkload, Workload};
+
+fn main() {
+    // ---- Part 1: a window, a server, one traced request ---------------
+    // Tracing is process-global and off by default: until `start` arms
+    // it, every hook in the stack is a single relaxed atomic load.
+    let window = Tracing::start();
+
+    let opts = EdgeOpts {
+        registry: Some(Arc::new(BackendRegistry::with_default_backends())),
+        ..EdgeOpts::default()
+    };
+    let server = EdgeServer::start(0, opts).expect("bind edge server");
+    let mut cli = EdgeClient::connect(server.local_addr()).expect("connect");
+
+    let desc = WorkloadDesc::Reduce { n: 4096 };
+    let frame = RequestFrame {
+        req_id: 42,
+        priority: Priority::High,
+        deadline_us: 0,
+        iters: 2,
+        desc,
+        trace: true, // <- the wire flag: this request wants a span tree
+    };
+    let resp = cli.request(&frame).expect("round trip");
+    let bytes = resp.result.expect("in-capacity request succeeds");
+    assert_eq!(bytes, desc.instantiate().reference(2), "oracle-identical");
+    drop(cli);
+
+    // Shut down BEFORE snapshotting: the reply/request spans are
+    // recorded after the response bytes are already on the wire.
+    server.shutdown();
+    let spans = window.finish();
+
+    // ---- Part 2: the span tree ----------------------------------------
+    let forest = Forest::build(spans.clone());
+    print!("{}", forest.render_text());
+    let tree = forest
+        .trees
+        .iter()
+        .find(|t| t.corr.is_some())
+        .expect("one traced request, one correlated tree");
+    let c = forest.completeness(tree);
+    println!("layers crossed: edge={} svc={} sched={} dev={}", c.edge, c.svc, c.sched, c.dev);
+    assert!(c.full(), "edge → service → scheduler → device, nothing missing");
+
+    // ---- Part 3: Chrome export ----------------------------------------
+    // The same spans as a Chrome trace-event document — open it in
+    // Perfetto (ui.perfetto.dev) or chrome://tracing.
+    let doc = export_chrome(&spans);
+    let stats = validate_chrome(&doc).expect("export validates structurally");
+    println!(
+        "chrome export : {} events across {} tracks ({} bytes)",
+        stats.complete_events,
+        stats.tracks.len(),
+        doc.len()
+    );
+
+    // ---- Part 4: the in-process flavour -------------------------------
+    // No edge needed: `WorkloadRequest::trace(true)` returns the span
+    // slice on the response itself.
+    let window = Tracing::start();
+    let svc = ComputeService::start(
+        Arc::new(BackendRegistry::with_default_backends()),
+        ServiceOpts::default(),
+    );
+    let req = WorkloadRequest::new(SaxpyWorkload::new(4096, 2.5)).iters(2).trace(true);
+    let resp = svc.submit(req).expect("admit").wait().expect("response");
+    svc.shutdown();
+    drop(window);
+
+    let per_req = resp.trace().expect("traced request carries its spans");
+    let tree = per_req.trees.iter().find(|t| t.corr.is_some()).expect("rooted tree");
+    let c = per_req.completeness(tree);
+    assert!(c.service_full(), "svc → sched → dev on the in-process path");
+    println!("per-request   : {} spans, service-complete", per_req.spans.len());
+}

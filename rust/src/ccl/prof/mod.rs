@@ -53,6 +53,7 @@ pub struct Prof {
     aggs: Vec<ProfAgg>,
     insts: Vec<ProfInst>,
     overlaps: Vec<ProfOverlap>,
+    queue_utils: Vec<overlap::QueueUtil>,
     effective_ns: u64,
     calculated: bool,
 }
@@ -198,6 +199,7 @@ impl Prof {
         insts.sort_by_key(|i| i.instant);
 
         self.overlaps = overlap::compute_overlaps(&infos);
+        self.queue_utils = overlap::per_queue_util(&infos);
         self.effective_ns = overlap::effective_total(&infos);
         self.aggs = aggs;
         self.insts = insts;
@@ -244,6 +246,13 @@ impl Prof {
         Ok(self.effective_ns)
     }
 
+    /// Per-queue busy/idle accounting (cf4rs extension): interval-union
+    /// utilisation for every queue, sorted by queue name.
+    pub fn queue_utils(&self) -> CclResult<&[overlap::QueueUtil]> {
+        self.ensure_calculated()?;
+        Ok(&self.queue_utils)
+    }
+
     /// `ccl_prof_get_summary` with explicit sort flags.
     pub fn summary(
         &self,
@@ -254,6 +263,7 @@ impl Prof {
         Ok(summary::render(
             &self.aggs,
             &self.overlaps,
+            &self.queue_utils,
             self.effective_ns,
             self.elapsed_ns(),
             agg_sort,
@@ -317,6 +327,16 @@ mod tests {
         assert!(ov.iter().any(|o| o.duration == 60), "overlaps: {ov:?}");
         let s = prof.summary_default();
         assert!(s.contains("RNG_KERNEL"));
+        // Per-queue utilisation breaks out each backend's busy fraction.
+        assert!(s.contains("Per-queue utilisation"), "{s}");
+        assert!(s.contains("backend-a"), "{s}");
+        assert!(s.contains("backend-b"), "{s}");
+        let utils = prof.queue_utils().unwrap();
+        assert_eq!(utils.len(), 2);
+        assert_eq!(utils[0].queue, "backend-a");
+        // backend-a: [10,110) ∪ [120,220) = 200 busy over a 210 window.
+        assert_eq!(utils[0].busy, 200);
+        assert_eq!(utils[0].window(), 210);
     }
 
     #[test]

@@ -107,34 +107,89 @@ pub fn compute_overlaps(infos: &[ProfInfo]) -> Vec<ProfOverlap> {
     out
 }
 
+/// Merge sorted-by-start intervals into their disjoint union.
+fn union_intervals(mut iv: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for (s, e) in iv {
+        match out.last_mut() {
+            Some((_, ce)) if s <= *ce => *ce = (*ce).max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
 /// Total device-busy time: the union length of all event intervals.
 /// (Fig. 3's "Tot. of all events (eff.)".)
 pub fn effective_total(infos: &[ProfInfo]) -> u64 {
-    let mut iv: Vec<(u64, u64)> = infos
-        .iter()
-        .filter(|i| i.t_end > i.t_start)
-        .map(|i| (i.t_start, i.t_end))
-        .collect();
-    iv.sort_unstable();
-    let mut total = 0u64;
-    let mut cur: Option<(u64, u64)> = None;
-    for (s, e) in iv {
-        match cur {
-            None => cur = Some((s, e)),
-            Some((cs, ce)) => {
-                if s <= ce {
-                    cur = Some((cs, ce.max(e)));
-                } else {
-                    total += ce - cs;
-                    cur = Some((s, e));
-                }
-            }
+    union_intervals(
+        infos
+            .iter()
+            .filter(|i| i.t_end > i.t_start)
+            .map(|i| (i.t_start, i.t_end))
+            .collect(),
+    )
+    .iter()
+    .map(|(s, e)| e - s)
+    .sum()
+}
+
+/// Per-queue busy/idle accounting — the summary's global
+/// "time spent in device" line, broken out so a starved queue can't
+/// hide behind a busy one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueueUtil {
+    pub queue: String,
+    /// Union length of the queue's event intervals, ns.
+    pub busy: u64,
+    /// First event start on the queue, ns.
+    pub t_first: u64,
+    /// Last event end on the queue, ns.
+    pub t_last: u64,
+    /// The queue's disjoint busy intervals, start-ordered (the gaps
+    /// between them are the queue's idle windows).
+    pub busy_intervals: Vec<(u64, u64)>,
+}
+
+impl QueueUtil {
+    /// The queue's active window (first start to last end), ns.
+    pub fn window(&self) -> u64 {
+        self.t_last.saturating_sub(self.t_first)
+    }
+
+    /// Busy fraction of the active window, in [0, 1].
+    pub fn utilisation(&self) -> f64 {
+        if self.window() == 0 {
+            return 1.0;
+        }
+        self.busy as f64 / self.window() as f64
+    }
+}
+
+/// Per-queue interval-union utilisation, sorted by queue name.
+pub fn per_queue_util(infos: &[ProfInfo]) -> Vec<QueueUtil> {
+    let mut by_queue: HashMap<&str, Vec<(u64, u64)>> = HashMap::new();
+    for i in infos {
+        if i.t_end > i.t_start {
+            by_queue.entry(i.queue.as_str()).or_default().push((i.t_start, i.t_end));
         }
     }
-    if let Some((cs, ce)) = cur {
-        total += ce - cs;
-    }
-    total
+    let mut out: Vec<QueueUtil> = by_queue
+        .into_iter()
+        .map(|(queue, iv)| {
+            let busy_intervals = union_intervals(iv);
+            QueueUtil {
+                queue: queue.to_string(),
+                busy: busy_intervals.iter().map(|(s, e)| e - s).sum(),
+                t_first: busy_intervals.first().map_or(0, |&(s, _)| s),
+                t_last: busy_intervals.last().map_or(0, |&(_, e)| e),
+                busy_intervals,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.queue.cmp(&b.queue));
+    out
 }
 
 #[cfg(test)]
@@ -255,5 +310,37 @@ mod tests {
     #[test]
     fn effective_total_empty() {
         assert_eq!(effective_total(&[]), 0);
+    }
+
+    #[test]
+    fn per_queue_util_unions_within_each_queue() {
+        let infos = vec![
+            info("A", "q1", 0, 100),
+            info("B", "q1", 50, 150),  // overlaps A: union [0, 150)
+            info("C", "q1", 200, 250), // 50 ns gap
+            info("D", "q2", 0, 40),
+            info("Z", "q2", 40, 40), // zero-length, ignored
+        ];
+        let utils = per_queue_util(&infos);
+        assert_eq!(utils.len(), 2);
+        let q1 = &utils[0];
+        assert_eq!(q1.queue, "q1");
+        assert_eq!(q1.busy, 200);
+        assert_eq!((q1.t_first, q1.t_last), (0, 250));
+        assert_eq!(q1.window(), 250);
+        assert!((q1.utilisation() - 0.8).abs() < 1e-9);
+        assert_eq!(q1.busy_intervals, vec![(0, 150), (200, 250)]);
+        let q2 = &utils[1];
+        assert_eq!(q2.queue, "q2");
+        assert_eq!(q2.busy, 40);
+        assert!((q2.utilisation() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_queue_util_empty_and_degenerate() {
+        assert!(per_queue_util(&[]).is_empty());
+        // A queue with only zero-length events contributes nothing.
+        let infos = vec![info("Z", "q", 5, 5)];
+        assert!(per_queue_util(&infos).is_empty());
     }
 }

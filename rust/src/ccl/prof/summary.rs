@@ -3,11 +3,15 @@
 use super::info::{
     sort_aggs, sort_overlaps, AggSort, OverlapSort, ProfAgg, ProfOverlap, SortDir,
 };
+use super::overlap::QueueUtil;
 
-/// Render the profiling summary in the paper's Fig. 3 layout.
+/// Render the profiling summary in the paper's Fig. 3 layout, extended
+/// with per-queue utilisation so a starved queue can't hide behind the
+/// global "time spent in device" figure.
 pub fn render(
     aggs: &[ProfAgg],
     overlaps: &[ProfOverlap],
+    queue_utils: &[QueueUtil],
     effective_ns: u64,
     elapsed_ns: u64,
     agg_sort: (AggSort, SortDir),
@@ -93,6 +97,18 @@ pub fn render(
             sec(effective_ns) / sec(elapsed_ns) * 100.0
         ));
     }
+    if !queue_utils.is_empty() {
+        s.push_str(" Per-queue utilisation     :\n");
+        for q in queue_utils {
+            s.push_str(&format!(
+                "   {:<22} {:>6.2}% busy ({:.4e}s of {:.4e}s window)\n",
+                truncate(&q.queue, 22),
+                q.utilisation() * 100.0,
+                sec(q.busy),
+                sec(q.window()),
+            ));
+        }
+    }
     s
 }
 
@@ -138,6 +154,7 @@ mod tests {
         let out = render(
             &aggs,
             &ovs,
+            &[],
             7_451_659_000,
             9_054_619_000,
             (AggSort::Time, SortDir::Desc),
@@ -163,12 +180,51 @@ mod tests {
         let out = render(
             &aggs,
             &[],
+            &[],
             110,
             200,
             (AggSort::Name, SortDir::Asc),
             (OverlapSort::Name, SortDir::Asc),
         );
         assert!(out.find("| A").unwrap() < out.find("| Z").unwrap());
+    }
+
+    #[test]
+    fn per_queue_utilisation_lines_follow_the_global_figure() {
+        let utils = vec![
+            QueueUtil {
+                queue: "comms".into(),
+                busy: 400,
+                t_first: 0,
+                t_last: 1000,
+                busy_intervals: vec![(0, 400)],
+            },
+            QueueUtil {
+                queue: "main".into(),
+                busy: 1000,
+                t_first: 0,
+                t_last: 1000,
+                busy_intervals: vec![(0, 1000)],
+            },
+        ];
+        let out = render(
+            &[],
+            &[],
+            &utils,
+            1000,
+            2000,
+            (AggSort::Time, SortDir::Desc),
+            (OverlapSort::Duration, SortDir::Desc),
+        );
+        assert!(out.contains("Per-queue utilisation"), "{out}");
+        assert!(out.contains("comms"), "{out}");
+        assert!(out.contains("40.00% busy"), "{out}");
+        assert!(out.contains("100.00% busy"), "{out}");
+        // The starved queue is listed even though the global device-time
+        // figure (50%) says nothing about it.
+        let gi = out.find("Time spent in device").unwrap();
+        let qi = out.find("Per-queue utilisation").unwrap();
+        assert!(gi < qi, "{out}");
     }
 
     #[test]

@@ -30,6 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::ccl::prof::export::escape_field;
 use crate::metrics::{Counter, Gauge, Histogram, WindowedHistogram};
 use crate::workload::Shard;
 
@@ -532,9 +533,12 @@ impl ServiceMetrics {
         if total > 0 {
             line.push_str(" |");
             for (name, b) in bytes.iter() {
+                // Backend names come from plugins — escape them like
+                // every other export label so a hostile name (embedded
+                // newline/tab) cannot forge extra dashboard lines.
                 line.push_str(&format!(
                     " {} {:.0}%",
-                    name,
+                    escape_field(name),
                     *b as f64 / total as f64 * 100.0
                 ));
             }
@@ -742,5 +746,22 @@ mod tests {
         assert!(line.contains("req/s"), "{line}");
         assert!(line.contains("win    250 us"), "{line}");
         assert!(line.contains("sim:a 75%"), "{line}");
+    }
+
+    #[test]
+    fn metrics_render_live_escapes_hostile_backend_names() {
+        use crate::ccl::prof::export::unescape_field;
+        let m = ServiceMetrics::new();
+        let hostile = "evil\nname\twith\\tricks";
+        m.add_backend_bytes(&[(hostile.into(), 4000)]);
+        let line = m.render_live();
+        // The dashboard stays one line: control characters are escaped,
+        // never emitted raw.
+        assert_eq!(line.lines().count(), 1, "{line:?}");
+        assert!(!line.contains('\t'), "{line:?}");
+        // Round trip: the escaped form recovers the exact name.
+        let escaped = escape_field(hostile);
+        assert!(line.contains(escaped.as_ref()), "{line:?}");
+        assert_eq!(unescape_field(&escaped).as_deref(), Ok(hostile));
     }
 }

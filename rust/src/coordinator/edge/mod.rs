@@ -53,6 +53,7 @@ use std::time::Duration;
 
 use crate::backend::BackendRegistry;
 use crate::coordinator::adaptive::ServiceMetrics;
+use crate::trace;
 use crate::coordinator::service::{
     ComputeService, Priority, Response, ServiceError, ServiceOpts, ServiceReport,
     WorkloadRequest,
@@ -310,6 +311,10 @@ fn reader_loop(
                 break;
             }
         };
+        // Tracing anchors: the request's edge-side root span runs from
+        // frame receipt to reply hand-off. One relaxed load per frame
+        // when no trace window is armed.
+        let t_read = if trace::enabled() { trace::now_ns() } else { 0 };
         let req = match RequestFrame::decode_body(&body) {
             Ok(req) => req,
             Err((err, req_id)) => {
@@ -324,6 +329,7 @@ fn reader_loop(
                 continue;
             }
         };
+        let t_decoded = if trace::enabled() { trace::now_ns() } else { 0 };
         if ctx.stop.load(Ordering::SeqCst) {
             reply(req.req_id, Err(WireError::ShuttingDown));
             break;
@@ -333,6 +339,27 @@ fn reader_loop(
             reply(req.req_id, Err(WireError::Overloaded));
             continue;
         }
+        // The wire `trace` flag samples this request into the armed
+        // trace window: allocate its correlation id here so every
+        // downstream span (service, scheduler, device) groups under it.
+        let corr = if req.trace && trace::enabled() {
+            let c = trace::new_corr();
+            trace::complete(
+                "edge.decode",
+                "edge",
+                Some(c),
+                None,
+                t_read,
+                t_decoded,
+                vec![
+                    ("conn", trace::Tag::from(conn_id)),
+                    ("wire_req", trace::Tag::from(req.req_id)),
+                ],
+            );
+            Some(c)
+        } else {
+            None
+        };
         let mut wreq = WorkloadRequest::from_arc(req.desc.instantiate())
             .iters(req.iters as usize)
             .priority(req.priority)
@@ -340,16 +367,80 @@ fn reader_loop(
         if let Some(budget) = req.deadline() {
             wreq = wreq.deadline_in(budget);
         }
+        if let Some(c) = corr {
+            wreq = wreq.corr(c);
+        }
         let (tx2, wire_id) = (tx.clone(), req.req_id);
         let cb = Box::new(move |r: Result<Response, ServiceError>| {
+            let t_cb = if corr.is_some() && trace::enabled() { trace::now_ns() } else { 0 };
+            let ok = r.is_ok();
             let result = match r {
                 Ok(resp) => Ok(resp.output),
                 Err(e) => Err(wire_error(e)),
             };
             let _ = tx2.send(ResponseFrame { req_id: wire_id, result }.encode());
+            if let Some(c) = corr {
+                let t_done = trace::now_ns();
+                trace::complete(
+                    "edge.reply",
+                    "edge",
+                    Some(c),
+                    None,
+                    t_cb,
+                    t_done,
+                    vec![("ok", trace::Tag::from(ok))],
+                );
+                trace::complete(
+                    "edge.req",
+                    "edge",
+                    Some(c),
+                    None,
+                    t_read,
+                    t_done,
+                    vec![
+                        ("conn", trace::Tag::from(conn_id)),
+                        ("wire_req", trace::Tag::from(wire_id)),
+                        ("ok", trace::Tag::from(ok)),
+                    ],
+                );
+            }
         });
-        if let Err(e) = ctx.svc.try_submit_with(wreq, cb) {
-            reply(req.req_id, Err(wire_error(e)));
+        match ctx.svc.try_submit_with(wreq, cb) {
+            Ok(_) => {
+                if let Some(c) = corr {
+                    // Lane admission + submit, closed once the service
+                    // accepted the request.
+                    trace::complete(
+                        "edge.admit",
+                        "edge",
+                        Some(c),
+                        None,
+                        t_decoded,
+                        trace::now_ns(),
+                        vec![("lane", trace::Tag::from(req.priority.label()))],
+                    );
+                }
+            }
+            Err(e) => {
+                if let Some(c) = corr {
+                    // Refused at admission: the callback never fires,
+                    // so close the root span here with the error.
+                    trace::complete(
+                        "edge.req",
+                        "edge",
+                        Some(c),
+                        None,
+                        t_read,
+                        trace::now_ns(),
+                        vec![
+                            ("conn", trace::Tag::from(conn_id)),
+                            ("wire_req", trace::Tag::from(req.req_id)),
+                            ("ok", trace::Tag::from(false)),
+                        ],
+                    );
+                }
+                reply(req.req_id, Err(wire_error(e)));
+            }
         }
     }
 }

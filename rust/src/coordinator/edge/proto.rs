@@ -38,6 +38,10 @@ pub const VERSION: u16 = 1;
 pub const FTYPE_REQUEST: u8 = 1;
 /// Response frame type byte.
 pub const FTYPE_RESPONSE: u8 = 2;
+/// High bit of the priority byte: request a per-request trace. Legacy
+/// encoders never set it, so the flag is backwards-compatible within
+/// wire [`VERSION`] 1.
+pub const TRACE_FLAG: u8 = 0x80;
 /// Default cap on request frame bodies the server will read. Requests
 /// are ~50 bytes; anything near this is hostile or corrupt.
 pub const DEFAULT_MAX_FRAME: usize = 1 << 20;
@@ -289,6 +293,10 @@ pub struct RequestFrame {
     /// Iterations to run (1..=[`MAX_ITERS`]).
     pub iters: u32,
     pub desc: WorkloadDesc,
+    /// Request a per-request trace (span tree) for this request. Rides
+    /// the high bit of the priority byte, so pre-trace encoders (which
+    /// never set it) remain wire-compatible at the same version.
+    pub trace: bool,
 }
 
 impl RequestFrame {
@@ -304,7 +312,7 @@ impl RequestFrame {
         body.extend_from_slice(&VERSION.to_le_bytes());
         body.push(FTYPE_REQUEST);
         body.extend_from_slice(&self.req_id.to_le_bytes());
-        body.push(self.priority.index() as u8);
+        body.push(self.priority.index() as u8 | if self.trace { TRACE_FLAG } else { 0 });
         body.extend_from_slice(&self.deadline_us.to_le_bytes());
         body.extend_from_slice(&self.iters.to_le_bytes());
         body.push(self.desc.kind());
@@ -330,7 +338,9 @@ impl RequestFrame {
         }
         let req_id = cur.u64().map_err(|e| (WireError::BadFrame(e), 0))?;
         let bad = |e: String| (WireError::BadFrame(e), req_id);
-        let priority = match cur.u8().map_err(&bad)? {
+        let prio_byte = cur.u8().map_err(&bad)?;
+        let trace = prio_byte & TRACE_FLAG != 0;
+        let priority = match prio_byte & !TRACE_FLAG {
             0 => Priority::High,
             1 => Priority::Bulk,
             other => return Err(bad(format!("priority byte {other}"))),
@@ -344,7 +354,7 @@ impl RequestFrame {
         let desc = WorkloadDesc::decode_params(kind, &mut cur).map_err(&bad)?;
         cur.finish().map_err(&bad)?;
         desc.validate().map_err(&bad)?;
-        Ok(RequestFrame { req_id, priority, deadline_us, iters, desc })
+        Ok(RequestFrame { req_id, priority, deadline_us, iters, desc, trace })
     }
 }
 
@@ -548,6 +558,7 @@ mod tests {
                 deadline_us: i as u64 * 500,
                 iters: 3,
                 desc,
+                trace: i % 3 == 0,
             };
             let enc = f.encode();
             let (len, body) = enc.split_at(4);
@@ -557,6 +568,45 @@ mod tests {
             );
             assert_eq!(RequestFrame::decode_body(body).unwrap(), f);
         }
+    }
+
+    #[test]
+    fn trace_flag_rides_the_priority_high_bit() {
+        for (priority, trace) in [
+            (Priority::High, false),
+            (Priority::High, true),
+            (Priority::Bulk, false),
+            (Priority::Bulk, true),
+        ] {
+            let f = RequestFrame {
+                req_id: 42,
+                priority,
+                deadline_us: 0,
+                iters: 1,
+                desc: WorkloadDesc::Prng { n: 64 },
+                trace,
+            };
+            let enc = f.encode();
+            let prio_byte = enc[4 + 4 + 2 + 1 + 8];
+            assert_eq!(prio_byte & TRACE_FLAG != 0, trace);
+            assert_eq!((prio_byte & !TRACE_FLAG) as usize, priority.index());
+            assert_eq!(RequestFrame::decode_body(&enc[4..]).unwrap(), f);
+        }
+        // Unknown low bits stay rejected even with the flag set.
+        let mut enc = RequestFrame {
+            req_id: 42,
+            priority: Priority::High,
+            deadline_us: 0,
+            iters: 1,
+            desc: WorkloadDesc::Prng { n: 64 },
+            trace: true,
+        }
+        .encode();
+        enc[4 + 4 + 2 + 1 + 8] = TRACE_FLAG | 5;
+        assert!(matches!(
+            RequestFrame::decode_body(&enc[4..]),
+            Err((WireError::BadFrame(_), 42))
+        ));
     }
 
     #[test]
@@ -589,6 +639,7 @@ mod tests {
             deadline_us: 0,
             iters: 1,
             desc: WorkloadDesc::Prng { n: 64 },
+            trace: false,
         }
         .encode();
         let body = &good[4..];
@@ -641,6 +692,7 @@ mod tests {
             deadline_us: 123,
             iters: 2,
             desc: WorkloadDesc::Stencil { h: 8, w: 8 },
+            trace: false,
         }
         .encode();
         let body = &good[4..];

@@ -62,6 +62,7 @@ use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
 use crate::metrics::Counter;
 use crate::rawcl::kernelspec::KernelKind;
+use crate::trace;
 use crate::workload::{PrngWorkload, Shard, Workload};
 
 use super::rng_service::{sink_consume, Sink};
@@ -656,6 +657,7 @@ fn run_workload_engine(
     }
 
     let nb = backends.len();
+    let t_plan0 = if trace::enabled() { trace::now_ns() } else { 0 };
     let shards: Vec<Shard> = match shard_plan {
         Some(plan) => {
             // An explicit plan must tile [0, units) exactly — anything
@@ -705,6 +707,39 @@ fn run_workload_engine(
                 tags.len(),
                 shards.len()
             )));
+        }
+    }
+    if trace::enabled() {
+        // One `sched.plan` span per traced request riding this
+        // dispatch (recovered from the `svc.req-<id>.` shard tags), or
+        // a single corr-less one a replay window's ambient corr adopts.
+        let t_plan1 = trace::now_ns();
+        let mut corrs: Vec<Option<u64>> = match shard_tags {
+            Some(tags) => {
+                let mut cs: Vec<u64> =
+                    tags.iter().filter_map(|t| trace::corr_from_tag(t)).collect();
+                cs.sort_unstable();
+                cs.dedup();
+                cs.into_iter().map(Some).collect()
+            }
+            None => Vec::new(),
+        };
+        if corrs.is_empty() {
+            corrs.push(None);
+        }
+        for corr in corrs {
+            trace::complete(
+                "sched.plan",
+                "sched",
+                corr,
+                None,
+                t_plan0,
+                t_plan1,
+                vec![
+                    ("shards", trace::Tag::from(shards.len())),
+                    ("backends", trace::Tag::from(nb)),
+                ],
+            );
         }
     }
     // Shard output buffers come from the cross-run pool when one is
@@ -801,6 +836,7 @@ fn run_workload_engine(
                         // loaded peer's tail.
                         let mut task = deques[bi].lock().unwrap().pop_front();
                         let mut was_steal = false;
+                        let mut stole_from = 0usize;
                         if task.is_none() {
                             let victim = (0..deques.len())
                                 .filter(|&j| j != bi)
@@ -808,6 +844,7 @@ fn run_workload_engine(
                             if let Some(j) = victim {
                                 task = deques[j].lock().unwrap().pop_back();
                                 was_steal = task.is_some();
+                                stole_from = j;
                             }
                         }
                         let Some(ci) = task else {
@@ -823,6 +860,40 @@ fn run_workload_engine(
                             std::thread::sleep(Duration::from_micros(50));
                             continue;
                         };
+                        // Trace: a `sched.task` span per shard dispatch
+                        // on the backend's track, corr recovered from
+                        // the shard's `svc.req-<id>.` tag (or adopted
+                        // by a replay window's ambient corr). Inert —
+                        // one relaxed load — when tracing is off.
+                        let (task_corr, mut tsc) = if trace::enabled() {
+                            let corr = shard_tags
+                                .and_then(|t| trace::corr_from_tag(&t[ci]));
+                            let track = format!("be:{}", backend.name());
+                            if was_steal {
+                                trace::instant(
+                                    "sched.steal",
+                                    &track,
+                                    corr,
+                                    None,
+                                    vec![
+                                        ("thief", trace::Tag::from(bi)),
+                                        ("victim", trace::Tag::from(stole_from)),
+                                        ("shard", trace::Tag::from(ci)),
+                                    ],
+                                );
+                            }
+                            let mut sc = trace::SpanScope::begin(
+                                "sched.task",
+                                &track,
+                                corr,
+                            );
+                            sc.tag("shard", ci);
+                            sc.tag("iter", iter);
+                            sc.tag("stolen", was_steal);
+                            (corr, sc)
+                        } else {
+                            (None, trace::SpanScope::disabled())
+                        };
                         let r = run_task(
                             backend.as_ref(),
                             scratch,
@@ -834,6 +905,8 @@ fn run_workload_engine(
                             shard_tags.map(|t| t[ci].as_str()),
                             faults.is_some_and(|p| p.verify_reads),
                         );
+                        tsc.tag("ok", r.is_ok());
+                        tsc.end();
                         match r {
                             Ok(n) => {
                                 tasks_run.inc();
@@ -854,6 +927,16 @@ fn run_workload_engine(
                                     consec_fail[bi].fetch_add(1, Ordering::SeqCst) + 1;
                                 if streak >= policy.quarantine_after.max(1) {
                                     quarantined[bi].store(true, Ordering::SeqCst);
+                                    trace::instant(
+                                        "sched.quarantine",
+                                        "sched",
+                                        task_corr,
+                                        None,
+                                        vec![
+                                            ("backend", trace::Tag::from(bi)),
+                                            ("streak", trace::Tag::from(streak)),
+                                        ],
+                                    );
                                 }
                                 let attempts =
                                     task_retries[ci].fetch_add(1, Ordering::SeqCst) + 1;
@@ -865,6 +948,16 @@ fn run_workload_engine(
                                     return;
                                 }
                                 retries_ctr.inc();
+                                trace::instant(
+                                    "sched.retry",
+                                    "sched",
+                                    task_corr,
+                                    None,
+                                    vec![
+                                        ("shard", trace::Tag::from(ci)),
+                                        ("attempt", trace::Tag::from(attempts)),
+                                    ],
+                                );
                                 // Re-queue on the next healthy backend
                                 // (round-robin from our right; never a
                                 // quarantined one).

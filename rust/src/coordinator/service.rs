@@ -105,6 +105,7 @@ use crate::ccl::prof::ProfInfo;
 use crate::ccl::selector::FilterChain;
 use crate::ccl::Prof;
 use crate::rawcl::kernelspec::KernelKind;
+use crate::trace;
 use crate::workload::{IterPlan, Shard, Workload};
 
 use super::adaptive::{
@@ -178,6 +179,14 @@ pub struct WorkloadRequest {
     /// default — is just another tenant; in-process callers that never
     /// set it all share one FIFO, the old behaviour.
     pub tenant: u64,
+    /// Collect a span tree for this request (needs an armed
+    /// [`trace`](crate::trace) window; a no-op otherwise). The tree
+    /// rides back on [`Response::trace`].
+    pub trace: bool,
+    /// Correlation id grouping this request's spans with spans an
+    /// upstream layer (the serving edge) already opened. `None` — the
+    /// default — allocates a fresh id at admission when tracing.
+    pub corr: Option<u64>,
 }
 
 impl WorkloadRequest {
@@ -186,7 +195,15 @@ impl WorkloadRequest {
     }
 
     pub fn from_arc(workload: Arc<dyn Workload>) -> Self {
-        Self { workload, iters: None, priority: None, deadline: None, tenant: 0 }
+        Self {
+            workload,
+            iters: None,
+            priority: None,
+            deadline: None,
+            tenant: 0,
+            trace: false,
+            corr: None,
+        }
     }
 
     /// Override the iteration count.
@@ -215,6 +232,20 @@ impl WorkloadRequest {
     /// Set the fairness tenant id (bulk-lane round-robin key).
     pub fn tenant(mut self, tenant: u64) -> Self {
         self.tenant = tenant;
+        self
+    }
+
+    /// Request a span tree ([`Response::trace`]) for this request.
+    pub fn trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Group this request's spans under an existing correlation id
+    /// (implies [`trace`](Self::trace)).
+    pub fn corr(mut self, corr: u64) -> Self {
+        self.corr = Some(corr);
+        self.trace = true;
         self
     }
 
@@ -296,9 +327,22 @@ pub struct Response {
     /// This request's profile slice (when the service profiles): its
     /// own kernel spans under `svc.req-<id>.` queues.
     pub prof: Option<Arc<BatchProf>>,
+    /// The request's span tree (when it was submitted with
+    /// [`WorkloadRequest::trace`] inside an armed
+    /// [`trace::Tracing`](crate::trace::Tracing) window): every span
+    /// sharing the request's correlation id that had completed by
+    /// fulfilment — admission, batch-window wait, plan, execution,
+    /// scheduler tasks and grafted device events.
+    pub trace: Option<Arc<Vec<crate::trace::Span>>>,
 }
 
 impl Response {
+    /// The request's span tree, assembled — `None` when the request
+    /// was not traced (or the trace window was not armed).
+    pub fn trace(&self) -> Option<crate::trace::tree::Forest> {
+        self.trace.as_ref().map(|s| crate::trace::tree::Forest::build(s.to_vec()))
+    }
+
     /// Decode the output as little-endian u64s.
     pub fn as_u64s(&self) -> Vec<u64> {
         self.output
@@ -776,9 +820,11 @@ pub fn run_batch(
             for (b, caps) in registry.select_entries(chain) {
                 sub.register_with_caps(b, caps);
             }
-            run_members(&sub, members, iters, opts, None, None, None, None)
+            run_members(&sub, members, iters, opts, opts.profile, None, None, None, None)
         }
-        None => run_members(registry, members, iters, opts, None, None, None, None),
+        None => {
+            run_members(registry, members, iters, opts, opts.profile, None, None, None, None)
+        }
     }
 }
 
@@ -788,6 +834,7 @@ fn run_members(
     members: Vec<Arc<dyn Workload>>,
     iters: usize,
     opts: &ServiceOpts,
+    profile: bool,
     queue_tag: Option<String>,
     member_tags: Option<Vec<String>>,
     plan: Option<(Vec<Shard>, Vec<usize>)>,
@@ -820,7 +867,7 @@ fn run_members(
                 .collect(),
         );
     }
-    cfg.profile = opts.profile;
+    cfg.profile = profile;
     cfg.queue_tag = queue_tag;
     cfg.faults = opts.faults;
     cfg.buffer_pool = pool;
@@ -933,6 +980,12 @@ struct Pending {
     /// Cached [`Workload::units`] — the DRR cost of dequeuing this
     /// request.
     units: usize,
+    /// Trace correlation id (`Some` iff this request is being traced
+    /// inside an armed trace window).
+    corr: Option<u64>,
+    /// Submission timestamp on the trace clock (meaningful only when
+    /// `corr` is set; anchors the `svc.request` / `svc.wait` spans).
+    t_submit_ns: u64,
 }
 
 impl Pending {
@@ -1121,6 +1174,20 @@ impl ServiceShared {
     /// and record it against its lane.
     fn shed_deadline(&self, p: &Pending) {
         self.metrics.shed_deadline[p.priority.index()].inc();
+        if let Some(corr) = p.corr {
+            trace::complete(
+                "svc.request",
+                "svc",
+                Some(corr),
+                None,
+                p.t_submit_ns,
+                trace::now_ns(),
+                vec![
+                    ("req", trace::Tag::from(p.req_id)),
+                    ("shed", trace::Tag::from(true)),
+                ],
+            );
+        }
         p.fulfill(Err(ServiceError::DeadlineExceeded));
     }
 }
@@ -1259,6 +1326,31 @@ impl ComputeService {
         let units = req.workload.units();
         let slot = Arc::new(Slot::new(cb));
         let req_id = self.shared.next_req_id.fetch_add(1, Ordering::SeqCst);
+        // Tracing: resolve the correlation id here (adopting an
+        // upstream one when the edge opened the trace) and stamp the
+        // submit time — the anchor for the request's wait span. When
+        // the sink is disarmed this is one relaxed load.
+        let (corr, t_submit_ns) = if (req.trace || req.corr.is_some()) && trace::enabled()
+        {
+            let corr = req.corr.unwrap_or_else(trace::new_corr);
+            let t0 = trace::now_ns();
+            trace::complete(
+                "svc.admit",
+                "svc",
+                Some(corr),
+                None,
+                t0,
+                t0,
+                vec![
+                    ("req", trace::Tag::from(req_id)),
+                    ("lane", trace::Tag::from(priority.label())),
+                    ("tenant", trace::Tag::from(req.tenant)),
+                ],
+            );
+            (Some(corr), t0)
+        } else {
+            (None, 0)
+        };
         let pending = Pending {
             workload: req.workload,
             iters,
@@ -1269,6 +1361,8 @@ impl ComputeService {
             deadline,
             tenant: req.tenant,
             units,
+            corr,
+            t_submit_ns,
         };
         {
             // Re-check shutdown *inside* the queue critical section:
@@ -1530,14 +1624,29 @@ fn execute_batch(
     let iters = batch[0].iters;
     let members: Vec<Arc<dyn Workload>> =
         batch.iter().map(|p| p.workload.clone()).collect();
+    // Tracing: register every traced member's req→corr mapping before
+    // the scheduler runs (its shard tags carry the req id, and the
+    // workers resolve it back through the registry), and force
+    // per-request profiling on so device events exist to graft even
+    // when the service itself is not profiling.
+    let traced_any = trace::enabled() && batch.iter().any(|p| p.corr.is_some());
+    if traced_any {
+        for p in &batch {
+            if let Some(corr) = p.corr {
+                trace::register_req(p.req_id, corr);
+            }
+        }
+    }
+    let profile = sh.opts.profile || traced_any;
     // Stamp the batch id into the profile queue labels (the fallback
     // for untagged spans — transfers) and each request's id onto its
     // own shards, so exported timelines attribute every span to its
     // batch and every kernel span to its exact request.
-    let tag = sh.opts.profile.then(|| format!("svc.batch-{batch_id}."));
-    let member_tags = sh.opts.profile.then(|| {
+    let tag = profile.then(|| format!("svc.batch-{batch_id}."));
+    let member_tags = profile.then(|| {
         batch.iter().map(|p| format!("svc.req-{}.", p.req_id)).collect::<Vec<_>>()
     });
+    let t_plan0 = if traced_any { trace::now_ns() } else { 0 };
     let plan = if sh.opts.adaptive_shards {
         plan_members_proportional(
             registry.get(),
@@ -1548,16 +1657,65 @@ fn execute_batch(
     } else {
         None
     };
-    match run_members(
+    let t_exec0 = if traced_any { trace::now_ns() } else { 0 };
+    if traced_any {
+        for p in &batch {
+            if let Some(corr) = p.corr {
+                // Queueing + batch-window wait, then shard planning —
+                // one span each, per traced member, so every request's
+                // tree explains its own latency.
+                trace::complete(
+                    "svc.wait",
+                    "svc",
+                    Some(corr),
+                    None,
+                    p.t_submit_ns,
+                    t_plan0,
+                    vec![("req", trace::Tag::from(p.req_id))],
+                );
+                trace::complete(
+                    "svc.plan",
+                    "svc",
+                    Some(corr),
+                    None,
+                    t_plan0,
+                    t_exec0,
+                    vec![("adaptive", trace::Tag::from(sh.opts.adaptive_shards))],
+                );
+            }
+        }
+    }
+    let result = run_members(
         registry.get(),
         members,
         iters,
         &sh.opts,
+        profile,
         tag,
         member_tags,
         plan,
         Some(sh.pool.clone()),
-    ) {
+    );
+    let t_exec1 = if traced_any { trace::now_ns() } else { 0 };
+    if traced_any {
+        for p in &batch {
+            if let Some(corr) = p.corr {
+                trace::complete(
+                    "svc.exec",
+                    "svc",
+                    Some(corr),
+                    None,
+                    t_exec0,
+                    t_exec1,
+                    vec![
+                        ("batch", trace::Tag::from(batch_id)),
+                        ("batch_size", trace::Tag::from(n)),
+                    ],
+                );
+            }
+        }
+    }
+    match result {
         Ok(mut out) => {
             // Feed the controllers and the metrics surface.
             let mut backend_bytes = Vec::with_capacity(out.per_backend.len());
@@ -1571,6 +1729,24 @@ fn execute_batch(
                 sh.metrics.quarantine_events.inc();
             }
             let infos = out.prof_infos.take();
+            // Graft each traced request's device-event slice into its
+            // span tree: the `svc.req-<id>.`-prefixed queues are that
+            // request's kernel spans, already on the shared clock.
+            if traced_any {
+                if let Some(infos) = infos.as_ref() {
+                    for p in &batch {
+                        if let Some(corr) = p.corr {
+                            let prefix = format!("svc.req-{}.", p.req_id);
+                            let slice: Vec<ProfInfo> = infos
+                                .iter()
+                                .filter(|i| i.queue.starts_with(&prefix))
+                                .cloned()
+                                .collect();
+                            trace::graft_prof(&slice, Some(corr));
+                        }
+                    }
+                }
+            }
             let batch_prof = out.prof_summary.as_ref().map(|s| {
                 Arc::new(BatchProf {
                     batch_id,
@@ -1621,7 +1797,11 @@ fn execute_batch(
                 })
                 .collect();
             if let Some(infos) = infos {
-                sh.prof_infos.lock().unwrap().extend(infos);
+                // Service-wide aggregation only when the service itself
+                // profiles — a trace-forced profile stays per-request.
+                if sh.opts.profile {
+                    sh.prof_infos.lock().unwrap().extend(infos);
+                }
             }
             sh.metrics.batches.inc();
             if n > 1 {
@@ -1641,6 +1821,26 @@ fn execute_batch(
             for (i, ((p, bytes), latency)) in
                 batch.iter().zip(out.outputs).zip(latencies).enumerate()
             {
+                // Close the request's root service span (submit →
+                // fulfil) and hand its whole corr group back on the
+                // response — assembled lazily by `Response::trace()`.
+                let trace_spans = p.corr.filter(|_| trace::enabled()).map(|corr| {
+                    trace::complete(
+                        "svc.request",
+                        "svc",
+                        Some(corr),
+                        None,
+                        p.t_submit_ns,
+                        trace::now_ns(),
+                        vec![
+                            ("req", trace::Tag::from(p.req_id)),
+                            ("batch", trace::Tag::from(batch_id)),
+                            ("batch_size", trace::Tag::from(n)),
+                        ],
+                    );
+                    trace::unregister_req(p.req_id);
+                    Arc::new(trace::collect_corr(corr))
+                });
                 p.fulfill(Ok(Response {
                     output: bytes,
                     latency,
@@ -1648,6 +1848,7 @@ fn execute_batch(
                     batch_size: n,
                     req_id: p.req_id,
                     prof: req_profs[i].clone(),
+                    trace: trace_spans,
                 }));
             }
         }
@@ -1656,6 +1857,21 @@ fn execute_batch(
             sh.metrics.batches.inc();
             sh.metrics.errors.add(n as u64);
             for p in &batch {
+                if let Some(corr) = p.corr {
+                    trace::complete(
+                        "svc.request",
+                        "svc",
+                        Some(corr),
+                        None,
+                        p.t_submit_ns,
+                        trace::now_ns(),
+                        vec![
+                            ("req", trace::Tag::from(p.req_id)),
+                            ("error", trace::Tag::from(true)),
+                        ],
+                    );
+                    trace::unregister_req(p.req_id);
+                }
                 p.fulfill(Err(ServiceError::Execution(msg.clone())));
             }
         }

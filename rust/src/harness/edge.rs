@@ -306,6 +306,7 @@ fn run_conn(addr: &str, lane: LaneSpec, expect: &[u8]) -> Result<LaneOutcome, St
                     deadline_us: lane.deadline_us,
                     iters: lane.iters,
                     desc: lane.desc,
+                    trace: false,
                 };
                 if send_cli.send(&frame).is_err() {
                     break;

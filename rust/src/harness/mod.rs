@@ -42,6 +42,15 @@
 //!   recorder must analyze to zero findings, and every seeded-bug
 //!   corpus stream must be flagged with its expected rule (writes
 //!   `lint-graph.md` + `BENCH_lint-graph.json`);
+//! * `bench trace`   — the end-to-end tracing gate, two-sided:
+//!   disabled tracing must cost nothing measurable (interleaved
+//!   off/on/off arms; the two disabled medians must agree within 1% +
+//!   a noise floor, the enabled median within 5%), and every traced
+//!   request through a live in-process edge must assemble into exactly
+//!   one rooted span tree with edge → service → shard → device
+//!   descendants and no orphans; also writes + validates the Chrome
+//!   trace-event export (writes `trace.md`, `BENCH_trace.json` and
+//!   `trace_chrome.json`);
 //! * `bench all`      — everything, written to `results/`.
 //!
 //! Every failed regeneration — including a failed `results/` write —
@@ -57,6 +66,7 @@ pub mod microbench;
 pub mod native;
 pub mod overhead;
 pub mod service;
+pub mod trace;
 pub mod workloads;
 pub mod zoo;
 
@@ -96,7 +106,7 @@ pub fn main(args: &[String]) -> i32 {
     let Some(which) = args.first() else {
         eprintln!(
             "usage: cf4rs bench loc|overhead|figure3|figure5|ablation|backends|\
-             workloads|service|adaptive|native|zoo|edge|lint-graph|all [--quick]"
+             workloads|service|adaptive|native|zoo|edge|lint-graph|trace|all [--quick]"
         );
         return 2;
     };
@@ -290,6 +300,22 @@ pub fn main(args: &[String]) -> i32 {
         ok && validated
     }
 
+    fn run_trace(quick: bool) -> bool {
+        let (md, json, validated) = trace::report(quick);
+        print!("{md}");
+        // Write both artifacts even when a gate failed — they are the
+        // evidence — but fail the run on any gate.
+        let mut ok = write_result("trace.md", &md);
+        ok &= write_result("BENCH_trace.json", &json);
+        if !validated {
+            eprintln!(
+                "trace: a gate FAILED (disabled-tracing overhead, enabled \
+                 overhead, tree completeness or the Chrome export; see table)"
+            );
+        }
+        ok && validated
+    }
+
     fn run_edge(quick: bool) -> bool {
         let (md, json, validated) = edge::report(quick);
         print!("{md}");
@@ -320,6 +346,7 @@ pub fn main(args: &[String]) -> i32 {
         "zoo" => run_zoo(quick),
         "edge" => run_edge(quick),
         "lint-graph" => run_lint_graph(quick),
+        "trace" => run_trace(quick),
         "all" => {
             let l = run_loc();
             let a = run_fig3(quick);
@@ -334,7 +361,8 @@ pub fn main(args: &[String]) -> i32 {
             let j = run_zoo(quick);
             let k = run_edge(quick);
             let m = run_lint_graph(quick);
-            l && a && b && c && d && e && f && g && h && i && j && k && m
+            let n = run_trace(quick);
+            l && a && b && c && d && e && f && g && h && i && j && k && m && n
         }
         other => {
             eprintln!("unknown bench {other:?}");

@@ -1,0 +1,731 @@
+//! The tracing cell: `cf4rs trace` and `bench trace`.
+//!
+//! * `cf4rs trace [--workload W] [--path P] [--iters I] [--json]
+//!   [--tsv] [--out FILE] [--quick]` — replay one (workload × path)
+//!   cell under an armed [`Tracing`] window and print the assembled
+//!   span forest (human tree by default, Chrome trace-event JSON with
+//!   `--json`, TSV with `--tsv`; `--out` writes the Chrome document to
+//!   a file). The `service` path submits through an in-process
+//!   [`ComputeService`] with the request's `trace` flag set; the
+//!   replay paths adopt scheduler/device spans via the window's
+//!   ambient correlation id.
+//! * `bench trace [--quick]` — the CI observability gate, two-sided:
+//!   **zero-cost-when-off** (two disabled arms interleaved with an
+//!   enabled arm per workload; the disabled medians must agree within
+//!   1% + a noise floor, the enabled median within 5% + floor) and
+//!   **completeness** (every traced request through a live in-process
+//!   [`EdgeServer`] must assemble into exactly one rooted tree with
+//!   edge → service → shard → device descendants and no orphans).
+//!   Writes `results/trace.md`, `results/BENCH_trace.json` (schema
+//!   [`SCHEMA`]) and `results/trace_chrome.json` — the latter is
+//!   structurally validated here with the dependency-free parser
+//!   ([`validate_chrome`]) and again in CI with `python -m json.tool`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::json_escape as esc;
+
+use crate::backend::{BackendRegistry, NativeBackend};
+use crate::coordinator::edge::proto::{RequestFrame, WorkloadDesc};
+use crate::coordinator::edge::{EdgeClient, EdgeOpts, EdgeServer};
+use crate::coordinator::scheduler::{run_sharded_workload_on, ShardedConfig};
+use crate::coordinator::{ComputeService, Priority, ServiceOpts, WorkloadRequest};
+use crate::trace::chrome::{export_chrome, queue_summary_spans, validate_chrome, ChromeStats};
+use crate::trace::tree::Forest;
+use crate::trace::{self, Span, Tracing};
+use crate::workload::{
+    exec, MatmulWorkload, PrngWorkload, ReduceWorkload, SaxpyWorkload, StencilWorkload,
+    Workload,
+};
+
+/// Version tag of `BENCH_trace.json`. Bump on layout changes so trend
+/// tooling can dispatch.
+pub const SCHEMA: &str = "cf4rs-bench-trace/1";
+
+/// The execution paths `cf4rs trace` can replay a workload through.
+pub const PATHS: [&str; 6] = ["rawcl", "ccl-v1", "ccl-v2", "sharded", "native", "service"];
+
+/// Disabled-tracing A/A tolerance: 1% of the off median, floored so
+/// millisecond-scale quick cells don't gate on scheduler noise.
+const OFF_PCT: f64 = 0.01;
+const OFF_FLOOR_MS: f64 = 3.0;
+/// Enabled-tracing tolerance: 5% of the off median, same floor idea.
+const ON_PCT: f64 = 0.05;
+const ON_FLOOR_MS: f64 = 5.0;
+
+// ---------------------------------------------------------------------------
+// Traced replay (shared by the CLI and the bench completeness leg)
+// ---------------------------------------------------------------------------
+
+/// One traced replay: the recorded spans plus any run error.
+pub struct ReplayOutcome {
+    pub spans: Vec<Span>,
+    pub dropped: u64,
+    pub error: Option<String>,
+}
+
+/// Run a workload through the sharded engine on `registry` with
+/// profiling forced, then graft the device slice into the trace (the
+/// window's ambient corr adopts every span).
+fn run_engine_cell<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    registry: &BackendRegistry,
+) -> Result<(), String> {
+    let mut cfg = ShardedConfig::new(w.clone(), iters);
+    cfg.min_chunk = (w.units() / 8).max(1);
+    cfg.profile = true;
+    let out = run_sharded_workload_on(registry, &cfg).map_err(|e| e.to_string())?;
+    trace::graft_prof(out.prof_infos.as_deref().unwrap_or(&[]), None);
+    Ok(())
+}
+
+/// Submit one traced request through an in-process service and wait.
+fn run_service_cell<W: Workload + Clone + 'static>(w: &W, iters: usize) -> Result<(), String> {
+    let registry = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(registry, ServiceOpts::default());
+    let req = WorkloadRequest::new(w.clone()).iters(iters).trace(true);
+    let r = svc.submit(req).and_then(|h| h.wait());
+    svc.shutdown();
+    r.map(|_| ()).map_err(|e| e.to_string())
+}
+
+/// Replay one (workload × path) cell under a fresh tracing window.
+fn replay_traced<W: Workload + Clone + 'static>(w: &W, iters: usize, path: &str) -> ReplayOutcome {
+    let window = Tracing::start();
+    let error = if path == "service" {
+        // The service allocates the corr at admission; nothing ambient.
+        run_service_cell(w, iters).err()
+    } else {
+        // Replay outside the service: scheduler/device spans carry no
+        // corr of their own, so the window adopts them into one.
+        let corr = trace::new_corr();
+        window.set_ambient(Some(corr));
+        let t0 = trace::now_ns();
+        let r = match path {
+            "rawcl" => exec::run_raw_path(w, iters, 1).map(|_| ()),
+            "ccl-v1" => {
+                exec::run_ccl_path(w, iters, 0).map(|_| ()).map_err(|e| e.to_string())
+            }
+            "ccl-v2" => {
+                exec::run_v2_path(w, iters, 0).map(|_| ()).map_err(|e| e.to_string())
+            }
+            "sharded" => {
+                run_engine_cell(w, iters, &BackendRegistry::with_default_backends())
+            }
+            "native" => match NativeBackend::native() {
+                Ok(b) => {
+                    let reg = BackendRegistry::new();
+                    reg.register(Arc::new(b));
+                    run_engine_cell(w, iters, &reg)
+                }
+                Err(e) => Err(e.to_string()),
+            },
+            other => Err(format!("unknown path {other:?}")),
+        };
+        // The replay's root span: whatever the cell recorded nests
+        // under it by interval containment.
+        trace::complete(
+            "replay.cell",
+            path,
+            None,
+            None,
+            t0,
+            trace::now_ns(),
+            vec![
+                ("workload", trace::Tag::from(w.name())),
+                ("iters", trace::Tag::from(iters)),
+            ],
+        );
+        r.err()
+    };
+    let dropped = window.dropped();
+    ReplayOutcome { spans: window.finish(), dropped, error }
+}
+
+/// Dispatch a workload name to its concrete type and replay. `None`
+/// for an unknown workload name.
+fn replay_named(workload: &str, quick: bool, iters: usize, path: &str) -> Option<ReplayOutcome> {
+    Some(match workload {
+        "prng" => {
+            replay_traced(&PrngWorkload::new(if quick { 4096 } else { 65536 }), iters, path)
+        }
+        "saxpy" => replay_traced(
+            &SaxpyWorkload::new(if quick { 4096 } else { 65536 }, 2.5),
+            iters,
+            path,
+        ),
+        "reduce" => replay_traced(
+            &ReduceWorkload::new(if quick { 8192 } else { 262144 }),
+            iters,
+            path,
+        ),
+        "stencil" => {
+            let (h, w) = if quick { (24, 16) } else { (64, 64) };
+            replay_traced(&StencilWorkload::new(h, w), iters, path)
+        }
+        "matmul" => {
+            replay_traced(&MatmulWorkload::new(if quick { 12 } else { 32 }), iters, path)
+        }
+        _ => return None,
+    })
+}
+
+/// Chrome trace-event document for a span collection, per-queue
+/// utilisation/idle summary spans appended.
+fn chrome_doc(spans: &[Span]) -> String {
+    let mut all = spans.to_vec();
+    all.extend(queue_summary_spans(spans));
+    export_chrome(&all)
+}
+
+// ---------------------------------------------------------------------------
+// `cf4rs trace` CLI
+// ---------------------------------------------------------------------------
+
+/// `cf4rs trace` entrypoint: traced replay, tree/JSON/TSV output.
+pub fn trace_main(args: &[String]) -> i32 {
+    let mut workload = "prng".to_string();
+    let mut path = "service".to_string();
+    let mut iters = 2usize;
+    let mut json = false;
+    let mut tsv = false;
+    let mut out: Option<String> = None;
+    let mut quick = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut next = |what: &str| -> Result<String, String> {
+            it.next().cloned().ok_or(format!("{what} needs a value"))
+        };
+        let r: Result<(), String> = (|| {
+            match a.as_str() {
+                "--workload" => workload = next("--workload")?,
+                "--path" => path = next("--path")?,
+                "--iters" => iters = next("--iters")?.parse().map_err(|e| format!("{e}"))?,
+                "--json" => json = true,
+                "--tsv" => tsv = true,
+                "--out" => out = Some(next("--out")?),
+                "--quick" => quick = true,
+                other => {
+                    return Err(format!(
+                        "unknown trace option {other:?}\nusage: cf4rs trace \
+                         [--workload prng|saxpy|reduce|stencil|matmul] \
+                         [--path rawcl|ccl-v1|ccl-v2|sharded|native|service] \
+                         [--iters I] [--json] [--tsv] [--out FILE] [--quick]"
+                    ))
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = r {
+            eprintln!("trace: {e}");
+            return 2;
+        }
+    }
+    if !PATHS.contains(&path.as_str()) {
+        eprintln!("trace: unknown path {path:?}");
+        return 2;
+    }
+    if iters == 0 {
+        eprintln!("trace: --iters must be > 0");
+        return 2;
+    }
+
+    let Some(outcome) = replay_named(&workload, quick, iters, &path) else {
+        eprintln!("trace: unknown workload {workload:?}");
+        return 2;
+    };
+    if let Some(e) = &outcome.error {
+        eprintln!("trace: {workload}/{path} replay failed: {e}");
+        return 1;
+    }
+
+    let forest = Forest::build(outcome.spans.clone());
+    if let Some(file) = &out {
+        let doc = chrome_doc(&outcome.spans);
+        if let Err(e) = std::fs::write(file, &doc) {
+            eprintln!("trace: writing {file}: {e}");
+            return 1;
+        }
+        eprintln!(" * Chrome trace written to {file} (load in Perfetto)");
+    }
+    if json {
+        print!("{}", chrome_doc(&outcome.spans));
+    } else if tsv {
+        print!("{}", forest.to_tsv());
+    } else {
+        print!("{}", forest.render_text());
+        for tree in &forest.trees {
+            let c = forest.completeness(tree);
+            let corr = tree.corr.map_or_else(|| "-".to_string(), |c| c.to_string());
+            eprintln!(
+                " * corr {corr}: edge={} svc={} sched={} dev={}",
+                c.edge, c.svc, c.sched, c.dev
+            );
+        }
+        eprintln!(
+            " * {} span(s), {} tree(s), {} orphan(s), {} dropped",
+            forest.spans.len(),
+            forest.trees.len(),
+            forest.orphans.len(),
+            outcome.dropped
+        );
+    }
+    0
+}
+
+// ---------------------------------------------------------------------------
+// `bench trace`: the overhead + completeness gate
+// ---------------------------------------------------------------------------
+
+/// One workload's interleaved off/on/off overhead measurement, ms.
+pub struct OverheadRow {
+    pub workload: &'static str,
+    pub med_off_a: f64,
+    pub med_on: f64,
+    pub med_off_b: f64,
+    pub error: Option<String>,
+}
+
+impl OverheadRow {
+    /// Off-median baseline the tolerances scale from.
+    fn med_off(&self) -> f64 {
+        (self.med_off_a + self.med_off_b) / 2.0
+    }
+
+    /// Disabled A/A delta within 1% + floor: the hook sites cost
+    /// nothing measurable while the sink is disarmed.
+    pub fn overhead_ok(&self) -> bool {
+        self.error.is_none()
+            && (self.med_off_a - self.med_off_b).abs()
+                <= (OFF_PCT * self.med_off()).max(OFF_FLOOR_MS)
+    }
+
+    /// Enabled median within 5% + floor of the disabled median.
+    pub fn enabled_ok(&self) -> bool {
+        self.error.is_none()
+            && self.med_on - self.med_off() <= (ON_PCT * self.med_off()).max(ON_FLOOR_MS)
+    }
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    match xs.len() {
+        0 => 0.0,
+        n if n % 2 == 1 => xs[n / 2],
+        n => (xs[n / 2 - 1] + xs[n / 2]) / 2.0,
+    }
+}
+
+/// Wall-time one sharded replay, ms, tracing armed or not.
+fn time_run<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    registry: &BackendRegistry,
+    traced: bool,
+) -> Result<f64, String> {
+    let window = traced.then(Tracing::start);
+    let t0 = Instant::now();
+    exec::run_sharded_path(w, iters, registry).map_err(|e| e.to_string())?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    drop(window);
+    Ok(ms)
+}
+
+/// Interleave off/on/off arms so drift hits all three equally.
+fn overhead_cell<W: Workload + Clone>(
+    w: &W,
+    iters: usize,
+    reps: usize,
+    registry: &BackendRegistry,
+) -> OverheadRow {
+    let (mut off_a, mut on, mut off_b) = (Vec::new(), Vec::new(), Vec::new());
+    let mut error = None;
+    for _ in 0..reps {
+        let r = time_run(w, iters, registry, false)
+            .and_then(|a| time_run(w, iters, registry, true).map(|b| (a, b)))
+            .and_then(|(a, b)| time_run(w, iters, registry, false).map(|c| (a, b, c)));
+        match r {
+            Ok((a, b, c)) => {
+                off_a.push(a);
+                on.push(b);
+                off_b.push(c);
+            }
+            Err(e) => {
+                error = Some(e);
+                break;
+            }
+        }
+    }
+    OverheadRow {
+        workload: w.name(),
+        med_off_a: median(&mut off_a),
+        med_on: median(&mut on),
+        med_off_b: median(&mut off_b),
+        error,
+    }
+}
+
+fn run_overhead(quick: bool) -> Vec<OverheadRow> {
+    let registry = BackendRegistry::with_default_backends();
+    let reps = if quick { 3 } else { 5 };
+    let mut rows = Vec::new();
+    if quick {
+        rows.push(overhead_cell(&PrngWorkload::new(4096), 2, reps, &registry));
+        rows.push(overhead_cell(&SaxpyWorkload::new(4096, 2.5), 2, reps, &registry));
+    } else {
+        rows.push(overhead_cell(&PrngWorkload::new(65536), 3, reps, &registry));
+        rows.push(overhead_cell(&SaxpyWorkload::new(65536, 2.5), 3, reps, &registry));
+        rows.push(overhead_cell(&ReduceWorkload::new(262144), 2, reps, &registry));
+    }
+    rows
+}
+
+/// What the edge completeness leg found.
+pub struct CompletenessOutcome {
+    pub requests: usize,
+    /// Correlated trees assembled (must equal `requests`).
+    pub corr_trees: usize,
+    /// Correlated trees with edge → svc → sched → dev coverage.
+    pub full_trees: usize,
+    pub orphans: usize,
+    pub oracle_ok: bool,
+    pub dropped: u64,
+    pub error: Option<String>,
+    pub spans: Vec<Span>,
+}
+
+impl CompletenessOutcome {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+            && self.requests > 0
+            && self.corr_trees == self.requests
+            && self.full_trees == self.requests
+            && self.orphans == 0
+            && self.oracle_ok
+            && self.dropped == 0
+    }
+
+    fn failed(requests: usize, error: String) -> CompletenessOutcome {
+        CompletenessOutcome {
+            requests,
+            corr_trees: 0,
+            full_trees: 0,
+            orphans: 0,
+            oracle_ok: false,
+            dropped: 0,
+            error: Some(error),
+            spans: Vec::new(),
+        }
+    }
+}
+
+/// Drive N traced requests through a live in-process edge server and
+/// assemble the recorded spans: every request must come back as one
+/// rooted, layer-complete tree.
+fn run_completeness(quick: bool) -> CompletenessOutcome {
+    let n = if quick { 5 } else { 10 };
+    let descs = [
+        WorkloadDesc::Prng { n: 2048 },
+        WorkloadDesc::Saxpy { n: 2048, a: 2.5 },
+        WorkloadDesc::Reduce { n: 4096 },
+        WorkloadDesc::Stencil { h: 16, w: 16 },
+        WorkloadDesc::Matmul { d: 12 },
+    ];
+    let iters = 2u32;
+
+    let window = Tracing::start();
+    let opts = EdgeOpts {
+        registry: Some(Arc::new(BackendRegistry::with_default_backends())),
+        ..EdgeOpts::default()
+    };
+    let server = match EdgeServer::start(0, opts) {
+        Ok(s) => s,
+        Err(e) => return CompletenessOutcome::failed(n, format!("edge bind: {e}")),
+    };
+    let addr = server.local_addr();
+
+    let drive = || -> Result<bool, String> {
+        let mut client = EdgeClient::connect(addr).map_err(|e| format!("connect: {e}"))?;
+        let mut oracle_ok = true;
+        for i in 0..n {
+            let desc = descs[i % descs.len()];
+            let frame = RequestFrame {
+                req_id: i as u64 + 1,
+                priority: if i % 2 == 0 { Priority::High } else { Priority::Bulk },
+                deadline_us: 0,
+                iters,
+                desc,
+                trace: true,
+            };
+            let resp = client.request(&frame).map_err(|e| format!("request {i}: {e}"))?;
+            if resp.req_id != frame.req_id {
+                return Err(format!(
+                    "request {i}: response correlates {} not {}",
+                    resp.req_id, frame.req_id
+                ));
+            }
+            match resp.result {
+                Ok(bytes) => {
+                    oracle_ok &= bytes == desc.instantiate().reference(iters as usize);
+                }
+                Err(e) => return Err(format!("request {i}: server refused: {e:?}")),
+            }
+        }
+        Ok(oracle_ok)
+    };
+    let driven = drive();
+    // Drain before snapshotting: the edge.req/edge.reply spans are
+    // recorded after the response frame is on the wire.
+    server.shutdown();
+
+    let dropped = window.dropped();
+    let spans = window.finish();
+    let oracle_ok = match driven {
+        Ok(ok) => ok,
+        Err(e) => {
+            let mut out = CompletenessOutcome::failed(n, e);
+            out.spans = spans;
+            return out;
+        }
+    };
+
+    let forest = Forest::build(spans.clone());
+    let corred: Vec<_> = forest.trees.iter().filter(|t| t.corr.is_some()).collect();
+    let full = corred.iter().filter(|t| forest.completeness(t).full()).count();
+    CompletenessOutcome {
+        requests: n,
+        corr_trees: corred.len(),
+        full_trees: full,
+        orphans: forest.orphans.len(),
+        oracle_ok,
+        dropped,
+        error: None,
+        spans,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report rendering
+// ---------------------------------------------------------------------------
+
+fn render_md(
+    rows: &[OverheadRow],
+    comp: &CompletenessOutcome,
+    chrome: &Result<ChromeStats, String>,
+    quick: bool,
+) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# End-to-end tracing gate — {} mode\n\n## Overhead (sharded replay, \
+         interleaved off/on/off arms)\n\n",
+        if quick { "quick" } else { "full" }
+    ));
+    s.push_str("| workload | off A (ms) | on (ms) | off B (ms) | off gate | on gate |\n");
+    s.push_str("|---|---:|---:|---:|---|---|\n");
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {} | {} |\n",
+            r.workload,
+            r.med_off_a,
+            r.med_on,
+            r.med_off_b,
+            if r.overhead_ok() { "✓" } else { "**FAIL**" },
+            if r.enabled_ok() { "✓" } else { "**FAIL**" },
+        ));
+    }
+    for r in rows {
+        if let Some(e) = &r.error {
+            s.push_str(&format!("\n* `{}` replay failed: {e}\n", r.workload));
+        }
+    }
+    s.push_str(&format!(
+        "\nGates: disabled A/A delta ≤ max({}%, {OFF_FLOOR_MS} ms); enabled \
+         delta ≤ max({}%, {ON_FLOOR_MS} ms).\n",
+        OFF_PCT * 100.0,
+        ON_PCT * 100.0
+    ));
+    s.push_str("\n## Completeness (traced requests through a live edge)\n\n");
+    s.push_str(&format!(
+        "* requests: {} — correlated trees: {}, layer-complete \
+         (edge→svc→sched→dev): {}, orphans: {}, ring drops: {}, oracle: {}\n",
+        comp.requests,
+        comp.corr_trees,
+        comp.full_trees,
+        comp.orphans,
+        comp.dropped,
+        if comp.oracle_ok { "bit-identical" } else { "**MISMATCH**" },
+    ));
+    if let Some(e) = &comp.error {
+        s.push_str(&format!("* drive FAILED: {e}\n"));
+    }
+    s.push_str("\n## Chrome export (`results/trace_chrome.json`)\n\n");
+    match chrome {
+        Ok(st) => s.push_str(&format!(
+            "* {} complete events, {} metadata events, {} tracks — parses \
+             and validates\n",
+            st.complete_events,
+            st.metadata_events,
+            st.tracks.len()
+        )),
+        Err(e) => s.push_str(&format!("* validation FAILED: {e}\n")),
+    }
+    s
+}
+
+fn render_json(
+    rows: &[OverheadRow],
+    comp: &CompletenessOutcome,
+    chrome: &Result<ChromeStats, String>,
+    quick: bool,
+) -> String {
+    let overhead_ok = !rows.is_empty() && rows.iter().all(|r| r.overhead_ok());
+    let enabled_ok = !rows.is_empty() && rows.iter().all(|r| r.enabled_ok());
+    let completeness_ok = comp.ok();
+    let chrome_ok = chrome.is_ok();
+    let gate_ok = overhead_ok && enabled_ok && completeness_ok && chrome_ok;
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str(&format!("  \"quick\": {quick},\n"));
+    s.push_str(&format!("  \"overhead_ok\": {overhead_ok},\n"));
+    s.push_str(&format!("  \"enabled_ok\": {enabled_ok},\n"));
+    s.push_str(&format!("  \"completeness_ok\": {completeness_ok},\n"));
+    s.push_str(&format!("  \"chrome_ok\": {chrome_ok},\n"));
+    s.push_str(&format!("  \"gate_ok\": {gate_ok},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"med_off_a_ms\": {:.3}, \"med_on_ms\": \
+             {:.3}, \"med_off_b_ms\": {:.3}, \"row_off_ok\": {}, \"row_on_ok\": \
+             {}{}}}{}\n",
+            r.workload,
+            r.med_off_a,
+            r.med_on,
+            r.med_off_b,
+            r.overhead_ok(),
+            r.enabled_ok(),
+            match &r.error {
+                Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+                None => String::new(),
+            },
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"completeness\": {{\"requests\": {}, \"corr_trees\": {}, \
+         \"full_trees\": {}, \"orphans\": {}, \"dropped\": {}, \"oracle_ok\": \
+         {}{}}},\n",
+        comp.requests,
+        comp.corr_trees,
+        comp.full_trees,
+        comp.orphans,
+        comp.dropped,
+        comp.oracle_ok,
+        match &comp.error {
+            Some(e) => format!(", \"error\": \"{}\"", esc(e)),
+            None => String::new(),
+        },
+    ));
+    match chrome {
+        Ok(st) => s.push_str(&format!(
+            "  \"chrome\": {{\"complete_events\": {}, \"metadata_events\": {}, \
+             \"tracks\": {}}}\n",
+            st.complete_events,
+            st.metadata_events,
+            st.tracks.len()
+        )),
+        Err(e) => {
+            s.push_str(&format!("  \"chrome\": {{\"error\": \"{}\"}}\n", esc(e)))
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Build the `bench trace` report. Returns `(markdown, json, ok)` — the
+/// caller writes both files even when a gate failed (the artifacts are
+/// the evidence) but must exit non-zero on `!ok`. Also writes the
+/// Chrome export of the completeness run to
+/// `results/trace_chrome.json` as loadable evidence.
+pub fn report(quick: bool) -> (String, String, bool) {
+    let rows = run_overhead(quick);
+    let comp = run_completeness(quick);
+    let doc = chrome_doc(&comp.spans);
+    let chrome = validate_chrome(&doc);
+    let wrote = super::write_result("trace_chrome.json", &doc);
+    let overhead_ok = !rows.is_empty() && rows.iter().all(|r| r.overhead_ok());
+    let enabled_ok = !rows.is_empty() && rows.iter().all(|r| r.enabled_ok());
+    let ok = overhead_ok && enabled_ok && comp.ok() && chrome.is_ok() && wrote;
+    (render_md(&rows, &comp, &chrome, quick), render_json(&rows, &comp, &chrome, quick), ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medians_and_row_gates() {
+        assert_eq!(median(&mut []), 0.0);
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        let row = OverheadRow {
+            workload: "prng",
+            med_off_a: 100.0,
+            med_on: 104.0,
+            med_off_b: 100.5,
+            error: None,
+        };
+        assert!(row.overhead_ok() && row.enabled_ok());
+        let slow = OverheadRow { med_on: 200.0, ..row };
+        assert!(slow.overhead_ok() && !slow.enabled_ok());
+        let skewed = OverheadRow { med_off_a: 100.0, med_off_b: 110.0, ..slow };
+        assert!(!skewed.overhead_ok());
+        let errored = OverheadRow { error: Some("boom".into()), ..skewed };
+        assert!(!errored.overhead_ok() && !errored.enabled_ok());
+    }
+
+    #[test]
+    fn traced_service_replay_yields_a_service_full_tree() {
+        let out = replay_named("prng", true, 2, "service").unwrap();
+        assert!(out.error.is_none(), "{:?}", out.error);
+        let forest = Forest::build(out.spans);
+        let corred: Vec<_> = forest.trees.iter().filter(|t| t.corr.is_some()).collect();
+        assert_eq!(corred.len(), 1, "one traced request, one tree");
+        let c = forest.completeness(corred[0]);
+        assert!(c.service_full(), "svc→sched→dev expected, got {c:?}");
+        assert!(forest.orphans.is_empty(), "orphans: {:?}", forest.orphans);
+    }
+
+    #[test]
+    fn traced_sharded_replay_grafts_device_spans() {
+        let out = replay_named("saxpy", true, 1, "sharded").unwrap();
+        assert!(out.error.is_none(), "{:?}", out.error);
+        assert!(out.spans.iter().any(|s| s.name.starts_with("sched.task")));
+        assert!(out.spans.iter().any(|s| s.name.starts_with("dev.")));
+        // Ambient adoption: every span landed in the replay's corr.
+        assert!(out.spans.iter().all(|s| s.corr.is_some()));
+        let forest = Forest::build(out.spans);
+        assert_eq!(forest.trees.len(), 1, "one ambient corr, one tree");
+        assert_eq!(forest.spans[forest.trees[0].root].name, "replay.cell");
+    }
+
+    #[test]
+    fn json_gates_follow_the_outcomes() {
+        let rows = vec![OverheadRow {
+            workload: "prng",
+            med_off_a: 10.0,
+            med_on: 10.5,
+            med_off_b: 10.2,
+            error: None,
+        }];
+        let comp = CompletenessOutcome::failed(4, "boom".to_string());
+        let j = render_json(&rows, &comp, &Ok(ChromeStats::default()), true);
+        assert!(j.contains("\"overhead_ok\": true"));
+        assert!(j.contains("\"completeness_ok\": false"));
+        assert!(j.contains("\"gate_ok\": false"));
+        assert!(j.contains("\"error\": \"boom\""));
+        assert!(j.contains(SCHEMA));
+    }
+}

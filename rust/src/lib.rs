@@ -49,6 +49,11 @@
 //!   and typed lint findings (data races, read-before-write, dependency
 //!   cycles, dead writes, unwaited host reads) surfaced via
 //!   `Session::check()` and the `cf4rs lint` CLI.
+//! * [`trace`] — end-to-end request tracing: a lock-light span sink
+//!   (relaxed-atomic disabled fast path, ring buffer) threaded through
+//!   edge, service, scheduler and the backend boundary, assembled into
+//!   per-request span trees with device Prof slices grafted in, and
+//!   exported as Chrome trace-event JSON for Perfetto.
 //! * [`harness`] — benchmark drivers that regenerate every table and
 //!   figure of the paper's evaluation (§6), plus the backend-comparison
 //!   table.
@@ -63,5 +68,6 @@ pub mod harness;
 pub mod metrics;
 pub mod rawcl;
 pub mod runtime;
+pub mod trace;
 pub mod utils;
 pub mod workload;

@@ -19,6 +19,11 @@
 //!   control; announces `EDGE LISTENING <addr>` on stdout and serves
 //!   until stdin closes (or `--serve-secs` elapses), then drains
 //!   gracefully;
+//! * `trace`        — replay one workload × path cell with the span
+//!   subsystem armed and print the assembled span tree (edge →
+//!   service → scheduler → device); `--json` emits Chrome trace-event
+//!   JSON loadable in Perfetto/chrome://tracing, `--tsv` the flat
+//!   table, `--out FILE` writes the Chrome document;
 //! * `lint`         — replay workloads under the command recorder and
 //!   run the happens-before static analyzer over the captured streams:
 //!   data races, unwaited host reads, uninitialized reads, dependency
@@ -30,8 +35,9 @@
 //!   service latency/batching cell (`service`), the adaptive-control
 //!   cell (`adaptive`), the native-tier speedup gate (`native`), the
 //!   plugin-ABI device-zoo cell (`zoo`), the serving-edge
-//!   load-generator cell (`edge`) and the static-analysis detector
-//!   gate (`lint-graph`).
+//!   load-generator cell (`edge`), the static-analysis detector
+//!   gate (`lint-graph`) and the tracing overhead/completeness gate
+//!   (`trace`).
 
 use cf4rs::coordinator::{
     run_ccl, run_raw, run_sharded, run_v2, RngConfig, ShardedRngConfig, Sink,
@@ -66,6 +72,12 @@ fn usage() -> i32 {
          \x20     TCP serving edge (binary protocol, priority lanes,\n\
          \x20     per-tenant fairness, deadlines, overload shedding);\n\
          \x20     port 0 = ephemeral, announced as 'EDGE LISTENING addr'\n\
+         \x20 trace [--workload prng|saxpy|reduce|stencil|matmul]\n\
+         \x20     [--path rawcl|ccl-v1|ccl-v2|sharded|native|service]\n\
+         \x20     [--iters I] [--json] [--tsv] [--out FILE] [--quick]\n\
+         \x20     replay one cell with tracing armed and print the span\n\
+         \x20     tree (default: human tree + completeness; --json emits\n\
+         \x20     Chrome trace-event JSON for Perfetto/chrome://tracing)\n\
          \x20 lint [--workload prng|saxpy|reduce|stencil|matmul|all]\n\
          \x20     [--path rawcl|ccl-v1|ccl-v2|sharded|native|all]\n\
          \x20     [--json] [--strict] [--quick]\n\
@@ -73,12 +85,13 @@ fn usage() -> i32 {
          \x20     happens-before analyzer (races, unwaited host reads,\n\
          \x20     uninitialized reads, cycles, dead writes) over the streams\n\
          \x20 bench loc|overhead|figure3|figure5|backends|workloads|service|\n\
-         \x20     adaptive|native|zoo|edge|lint-graph   regenerate paper\n\
-         \x20     results, backend comparison, the (workload x path) matrix,\n\
-         \x20     the service cell, the adaptive-control cell, the\n\
+         \x20     adaptive|native|zoo|edge|lint-graph|trace   regenerate\n\
+         \x20     paper results, backend comparison, the (workload x path)\n\
+         \x20     matrix, the service cell, the adaptive-control cell, the\n\
          \x20     native-vs-interpreter speedup gate, the plugin device-zoo\n\
-         \x20     cell, the serving-edge open-loop load-generator cell and\n\
-         \x20     the static-analysis detector gate (--quick)"
+         \x20     cell, the serving-edge open-loop load-generator cell, the\n\
+         \x20     static-analysis detector gate and the tracing\n\
+         \x20     overhead/completeness gate (--quick)"
     );
     2
 }
@@ -96,6 +109,7 @@ fn main() {
         "rng" => rng_main(rest),
         "serve" => serve_main(rest),
         "edge" => edge_main(rest),
+        "trace" => harness::trace::trace_main(rest),
         "lint" => harness::lint::lint_main(rest),
         "bench" => harness::main(rest),
         "-h" | "--help" | "help" => usage(),

@@ -1,0 +1,543 @@
+//! Chrome trace-event export: spans as a Perfetto /
+//! `chrome://tracing`-loadable JSON document, plus a dependency-free
+//! JSON reader used to validate the export in tests and CI.
+//!
+//! One process (`pid` 1), one `tid` per distinct span track, named via
+//! `thread_name` metadata events. Spans become complete (`"ph": "X"`)
+//! events with microsecond `ts`/`dur`; span ids, parent links, corr
+//! and typed tags ride in `args`. Label fields run through the shared
+//! profiler-export escaper ([`escape_field`]) first — the same
+//! convention every other rendering in the stack uses — and then
+//! through JSON string escaping.
+
+use std::collections::BTreeMap;
+
+use super::{Span, Tag};
+use crate::ccl::prof::export::escape_field;
+use crate::ccl::prof::info::ProfInfo;
+use crate::ccl::prof::overlap::{compute_overlaps, per_queue_util};
+
+/// JSON-escape a raw string (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Shared-escaper pass, then JSON quoting — the label pipeline.
+fn label(s: &str) -> String {
+    json_str(&escape_field(s))
+}
+
+fn tag_json(tag: &Tag) -> String {
+    match tag {
+        Tag::U64(v) => v.to_string(),
+        Tag::F64(v) => {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        Tag::Bool(v) => v.to_string(),
+        Tag::Str(v) => label(v),
+    }
+}
+
+/// The `cat` field: the span's layer (name up to the first dot).
+fn category(name: &str) -> &str {
+    name.split('.').next().unwrap_or("span")
+}
+
+/// Render spans as a Chrome trace-event JSON document.
+pub fn export_chrome(spans: &[Span]) -> String {
+    // Stable track→tid assignment, ordered by name.
+    let mut tids: BTreeMap<&str, u64> = BTreeMap::new();
+    for s in spans {
+        let next = tids.len() as u64 + 1;
+        tids.entry(s.track.as_str()).or_insert(next);
+    }
+
+    let mut events: Vec<String> = Vec::with_capacity(spans.len() + tids.len() + 1);
+    events.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{\"name\":\"cf4rs\"}}"
+            .to_string(),
+    );
+    for (track, tid) in &tids {
+        events.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":{}}}}}",
+            label(track)
+        ));
+    }
+    for s in spans {
+        let tid = tids[s.track.as_str()];
+        let ts = s.t_start as f64 / 1e3;
+        let dur = s.duration() as f64 / 1e3;
+        let mut args = vec![format!("\"id\":{}", s.id)];
+        if let Some(p) = s.parent {
+            args.push(format!("\"parent\":{p}"));
+        }
+        if let Some(c) = s.corr {
+            args.push(format!("\"corr\":{c}"));
+        }
+        args.push(format!("\"thread\":{}", s.thread));
+        for (k, v) in &s.tags {
+            args.push(format!("{}:{}", label(k), tag_json(v)));
+        }
+        events.push(format!(
+            "{{\"name\":{},\"cat\":{},\"ph\":\"X\",\"ts\":{ts:.3},\"dur\":{dur:.3},\
+             \"pid\":1,\"tid\":{tid},\"args\":{{{}}}}}",
+            label(&s.name),
+            json_str(category(&s.name)),
+            args.join(",")
+        ));
+    }
+
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Per-queue overlap/idle summary spans for the device tracks: one
+/// `queue.util` span covering each device queue's active window
+/// (busy/utilisation/cross-queue overlap tags from
+/// [`per_queue_util`] + [`compute_overlaps`]) and a `queue.idle` span
+/// per gap between the queue's busy intervals — so Perfetto shows the
+/// idle holes, not just the kernels around them.
+pub fn queue_summary_spans(spans: &[Span]) -> Vec<Span> {
+    let infos: Vec<ProfInfo> = spans
+        .iter()
+        .filter(|s| s.name.starts_with("dev."))
+        .map(|s| ProfInfo {
+            name: s.name["dev.".len()..].to_string(),
+            queue: s.track.clone(),
+            t_queued: s.t_start,
+            t_submit: s.t_start,
+            t_start: s.t_start,
+            t_end: s.t_end,
+        })
+        .collect();
+    if infos.is_empty() {
+        return Vec::new();
+    }
+    // Cross-queue overlap attribution: an overlapping name pair charges
+    // every queue that ran either event.
+    let mut name_queues: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for i in &infos {
+        let qs = name_queues.entry(i.name.as_str()).or_default();
+        if !qs.contains(&i.queue.as_str()) {
+            qs.push(i.queue.as_str());
+        }
+    }
+    let mut overlap_ns: BTreeMap<&str, u64> = BTreeMap::new();
+    for ov in compute_overlaps(&infos) {
+        let mut charged: Vec<&str> = Vec::new();
+        for name in [ov.event1.as_str(), ov.event2.as_str()] {
+            for &q in name_queues.get(name).into_iter().flatten() {
+                if !charged.contains(&q) {
+                    charged.push(q);
+                }
+            }
+        }
+        for q in charged {
+            *overlap_ns.entry(q).or_insert(0) += ov.duration;
+        }
+    }
+
+    let mut out = Vec::new();
+    for u in per_queue_util(&infos) {
+        let ov = overlap_ns.get(u.queue.as_str()).copied().unwrap_or(0);
+        out.push(Span {
+            id: 0,
+            parent: None,
+            corr: None,
+            name: "queue.util".to_string(),
+            track: u.queue.clone(),
+            thread: 0,
+            t_start: u.t_first,
+            t_end: u.t_last,
+            tags: vec![
+                ("busy_ns", Tag::U64(u.busy)),
+                ("util_pct", Tag::F64(u.utilisation() * 100.0)),
+                ("overlap_ns", Tag::U64(ov)),
+            ],
+        });
+        for w in u.busy_intervals.windows(2) {
+            let (gap_start, gap_end) = (w[0].1, w[1].0);
+            out.push(Span {
+                id: 0,
+                parent: None,
+                corr: None,
+                name: "queue.idle".to_string(),
+                track: u.queue.clone(),
+                thread: 0,
+                t_start: gap_start,
+                t_end: gap_end,
+                tags: vec![("idle_ns", Tag::U64(gap_end - gap_start))],
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Dependency-free JSON reader (validation only)
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value — just enough structure to verify the export.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Strict recursive-descent JSON parse (whole input must be one value).
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let b = s.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing bytes at offset {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected {:?} at offset {}", c as char, *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                expect(b, pos, b':')?;
+                fields.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {pos}")),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {pos}")),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b't') if b[*pos..].starts_with(b"true") => {
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') if b[*pos..].starts_with(b"false") => {
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        Some(b'n') if b[*pos..].starts_with(b"null") => {
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            std::str::from_utf8(&b[start..*pos])
+                .ok()
+                .and_then(|s| s.parse::<f64>().ok())
+                .map(Json::Num)
+                .ok_or_else(|| format!("bad number at offset {start}"))
+        }
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at offset {pos}"));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .and_then(|h| u32::from_str_radix(h, 16).ok())
+                            .ok_or_else(|| format!("bad \\u escape at offset {pos}"))?;
+                        out.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at offset {pos}")),
+                }
+                *pos += 1;
+            }
+            Some(&c) => {
+                // Multi-byte UTF-8 passes through untouched.
+                let len = match c {
+                    0x00..=0x7f => 1,
+                    0xc0..=0xdf => 2,
+                    0xe0..=0xef => 3,
+                    _ => 4,
+                };
+                let chunk = b
+                    .get(*pos..*pos + len)
+                    .and_then(|s| std::str::from_utf8(s).ok())
+                    .ok_or_else(|| format!("bad utf-8 at offset {pos}"))?;
+                out.push_str(chunk);
+                *pos += len;
+            }
+            None => return Err("unterminated string".to_string()),
+        }
+    }
+}
+
+/// Structural summary of a validated Chrome trace document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChromeStats {
+    /// `"ph": "X"` complete events.
+    pub complete_events: usize,
+    /// `"ph": "M"` metadata events.
+    pub metadata_events: usize,
+    /// Track names announced by `thread_name` metadata.
+    pub tracks: Vec<String>,
+}
+
+/// Parse an exported document and check the Chrome trace-event
+/// contract: top-level `traceEvents` array; every event an object with
+/// a string `ph`; every `X` event carrying string `name` and numeric
+/// `ts`/`dur`/`pid`/`tid` with `dur >= 0`.
+pub fn validate_chrome(doc: &str) -> Result<ChromeStats, String> {
+    let root = parse_json(doc)?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let mut stats = ChromeStats::default();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        match ph {
+            "X" => {
+                ev.get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| format!("event {i}: X without name"))?;
+                for key in ["ts", "dur", "pid", "tid"] {
+                    ev.get(key)
+                        .and_then(|v| v.as_num())
+                        .ok_or_else(|| format!("event {i}: X without numeric {key}"))?;
+                }
+                if ev.get("dur").and_then(|v| v.as_num()).unwrap_or(-1.0) < 0.0 {
+                    return Err(format!("event {i}: negative dur"));
+                }
+                stats.complete_events += 1;
+            }
+            "M" => {
+                if ev.get("name").and_then(|n| n.as_str()) == Some("thread_name") {
+                    if let Some(t) =
+                        ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+                    {
+                        stats.tracks.push(t.to_string());
+                    }
+                }
+                stats.metadata_events += 1;
+            }
+            other => return Err(format!("event {i}: unexpected ph {other:?}")),
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, track: &str, corr: Option<u64>, t0: u64, t1: u64) -> Span {
+        Span {
+            id: 1,
+            parent: None,
+            corr,
+            name: name.to_string(),
+            track: track.to_string(),
+            thread: 0,
+            t_start: t0,
+            t_end: t1,
+            tags: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn export_validates_and_round_trips_names() {
+        let mut s1 = span("svc.request", "svc", Some(3), 1_000, 91_000);
+        s1.id = 7;
+        s1.tags.push(("req", Tag::U64(12)));
+        s1.tags.push(("backend", Tag::Str("sim".into())));
+        let s2 = span("dev.PRNG_4096", "svc.req-12.sim", Some(3), 5_000, 60_000);
+        let doc = export_chrome(&[s1, s2]);
+        let stats = validate_chrome(&doc).expect("valid chrome json");
+        assert_eq!(stats.complete_events, 2);
+        assert_eq!(stats.tracks, vec!["svc", "svc.req-12.sim"]);
+        // µs conversion: 1_000 ns → 1.000 µs.
+        assert!(doc.contains("\"ts\":1.000"));
+        assert!(doc.contains("\"corr\":3"));
+    }
+
+    #[test]
+    fn hostile_labels_stay_inside_json_strings() {
+        let s = span("dev.k\"na\\me\t\n", "q\u{1}", Some(1), 0, 10);
+        let doc = export_chrome(&[s]);
+        let stats = validate_chrome(&doc).expect("hostile labels must not break the doc");
+        assert_eq!(stats.complete_events, 1);
+        let root = parse_json(&doc).unwrap();
+        let events = root.get("traceEvents").unwrap().as_arr().unwrap();
+        let x = events.iter().find(|e| e.get("ph").unwrap().as_str() == Some("X")).unwrap();
+        let name = x.get("name").unwrap().as_str().unwrap();
+        // The shared escaper's visible forms survive the JSON round trip.
+        assert!(name.contains("\\t") && name.contains("\\n"), "{name:?}");
+    }
+
+    #[test]
+    fn queue_summary_emits_util_and_idle_gaps() {
+        let spans = vec![
+            span("dev.A", "q1", Some(1), 0, 100),
+            span("dev.B", "q1", Some(1), 200, 300),
+            span("dev.C", "q2", Some(1), 50, 250),
+            span("svc.request", "svc", Some(1), 0, 400), // not a device span
+        ];
+        let summary = queue_summary_spans(&spans);
+        let utils: Vec<&Span> = summary.iter().filter(|s| s.name == "queue.util").collect();
+        let idles: Vec<&Span> = summary.iter().filter(|s| s.name == "queue.idle").collect();
+        assert_eq!(utils.len(), 2);
+        assert_eq!(idles.len(), 1, "q1 has one 100 ns gap");
+        assert_eq!((idles[0].t_start, idles[0].t_end), (100, 200));
+        let q1 = utils.iter().find(|s| s.track == "q1").unwrap();
+        assert_eq!(q1.tag("busy_ns"), Some(&Tag::U64(200)));
+        // q1's events overlap q2's C for (50..100) + (200..250) = 100 ns.
+        assert_eq!(q1.tag("overlap_ns"), Some(&Tag::U64(100)));
+        assert!(queue_summary_spans(&[span("svc.x", "s", None, 0, 1)]).is_empty());
+    }
+
+    #[test]
+    fn parser_rejects_garbage_and_trailing_bytes() {
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("[1, 2,]").is_err());
+        assert!(parse_json("{} junk").is_err());
+        assert!(parse_json("\"unterminated").is_err());
+        assert!(validate_chrome("{\"traceEvents\": [{\"ph\": 3}]}").is_err());
+        assert!(validate_chrome("{\"traceEvents\": 4}").is_err());
+        assert!(
+            validate_chrome("{\"traceEvents\": [{\"ph\": \"X\", \"name\": \"a\"}]}").is_err()
+        );
+    }
+}

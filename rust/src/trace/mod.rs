@@ -1,0 +1,576 @@
+//! End-to-end request tracing: span trees from edge to device event.
+//!
+//! A lock-light, process-global span sink mirroring the
+//! [`crate::analysis::record`] recorder pattern: [`Tracing::start`]
+//! arms it, dropping the guard disarms it, and while disarmed the only
+//! cost at every hook site is one relaxed atomic load
+//! ([`enabled`]). While armed, completed [`Span`]s land in a bounded
+//! ring buffer under a single mutex; overflow drops the *oldest*
+//! spans and counts them, so a runaway trace degrades instead of
+//! allocating without bound.
+//!
+//! Timestamps are nanoseconds on the shared process profiling clock
+//! ([`crate::rawcl::clock::now_ns`]) — the same clock every backend
+//! stamps its `EventTimes` with — so host spans and grafted device
+//! events share one timeline with no rebasing.
+//!
+//! Causality runs on two rails:
+//!
+//! * **Correlation ids** (`corr`): one per traced request, allocated
+//!   at the edge (wire `trace` flag) or at service admission
+//!   ([`new_corr`]). Every span a request touches carries its corr;
+//!   the scheduler recovers it from the `svc.req-<id>.` shard tag via
+//!   the [`register_req`] table. A window may also set an *ambient*
+//!   corr ([`Tracing::set_ambient`]) which adopts corr-less spans —
+//!   how the `cf4rs trace` CLI claims scheduler/device spans when it
+//!   replays a cell outside the service.
+//! * **Parent ids**: spans opened in the same scope link explicitly
+//!   ([`SpanScope::child`]); everything else is attached by
+//!   smallest-enclosing interval containment at assembly time
+//!   ([`tree::Forest::build`]).
+//!
+//! Export: Chrome trace-event JSON ([`chrome::export_chrome`],
+//! loadable in Perfetto / `chrome://tracing`), an indented human tree
+//! and a TSV table ([`tree::Forest`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::ccl::prof::info::ProfInfo;
+use crate::rawcl::clock;
+
+pub mod chrome;
+pub mod tree;
+
+/// Default ring-buffer capacity, in spans.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// A typed span tag value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tag {
+    U64(u64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl From<u64> for Tag {
+    fn from(v: u64) -> Tag {
+        Tag::U64(v)
+    }
+}
+impl From<usize> for Tag {
+    fn from(v: usize) -> Tag {
+        Tag::U64(v as u64)
+    }
+}
+impl From<u32> for Tag {
+    fn from(v: u32) -> Tag {
+        Tag::U64(v as u64)
+    }
+}
+impl From<f64> for Tag {
+    fn from(v: f64) -> Tag {
+        Tag::F64(v)
+    }
+}
+impl From<bool> for Tag {
+    fn from(v: bool) -> Tag {
+        Tag::Bool(v)
+    }
+}
+impl From<&str> for Tag {
+    fn from(v: &str) -> Tag {
+        Tag::Str(v.to_string())
+    }
+}
+impl From<String> for Tag {
+    fn from(v: String) -> Tag {
+        Tag::Str(v)
+    }
+}
+
+impl std::fmt::Display for Tag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Tag::U64(v) => write!(f, "{v}"),
+            Tag::F64(v) => write!(f, "{v:.3}"),
+            Tag::Bool(v) => write!(f, "{v}"),
+            Tag::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// One completed span on the shared process profiling clock.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Explicit parent span id, when the opener knew it.
+    pub parent: Option<u64>,
+    /// Correlation id of the request this span belongs to.
+    pub corr: Option<u64>,
+    /// Layer-prefixed name: `edge.*`, `svc.*`, `sched.*`, `dev.*`.
+    pub name: String,
+    /// Timeline track (queue/component) the span renders on.
+    pub track: String,
+    /// Interned host thread that recorded the span.
+    pub thread: u32,
+    /// Start, ns on the shared process profiling clock.
+    pub t_start: u64,
+    /// End, ns on the shared process profiling clock.
+    pub t_end: u64,
+    /// Typed key/value tags.
+    pub tags: Vec<(&'static str, Tag)>,
+}
+
+impl Span {
+    pub fn duration(&self) -> u64 {
+        self.t_end.saturating_sub(self.t_start)
+    }
+
+    /// Value of a tag, if present.
+    pub fn tag(&self, key: &str) -> Option<&Tag> {
+        self.tags.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global sink
+// ---------------------------------------------------------------------------
+
+struct SinkState {
+    ring: VecDeque<Span>,
+    cap: usize,
+    dropped: u64,
+    ambient: Option<u64>,
+    /// service req_id → corr, for the scheduler's shard-tag recovery.
+    req_corr: HashMap<u64, u64>,
+    threads: HashMap<std::thread::ThreadId, u32>,
+}
+
+impl SinkState {
+    fn new(cap: usize) -> Self {
+        Self {
+            ring: VecDeque::with_capacity(cap.min(4096)),
+            cap: cap.max(1),
+            dropped: 0,
+            ambient: None,
+            req_corr: HashMap::new(),
+            threads: HashMap::new(),
+        }
+    }
+
+    fn thread(&mut self) -> u32 {
+        let id = std::thread::current().id();
+        if let Some(&t) = self.threads.get(&id) {
+            return t;
+        }
+        let t = self.threads.len() as u32;
+        self.threads.insert(id, t);
+        t
+    }
+
+    fn push(&mut self, mut span: Span) {
+        span.corr = span.corr.or(self.ambient);
+        span.thread = self.thread();
+        if self.ring.len() >= self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(span);
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<SinkState>> = Mutex::new(None);
+/// Serializes tracing windows process-wide (parallel tests must not
+/// interleave their spans).
+static WINDOW: Mutex<()> = Mutex::new(());
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_CORR: AtomicU64 = AtomicU64::new(1);
+
+fn lock_state() -> MutexGuard<'static, Option<SinkState>> {
+    match STATE.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Cheap armed-check for every hook site: one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds on the shared process profiling clock (the span
+/// timebase — identical to backend `EventTimes`).
+#[inline]
+pub fn now_ns() -> u64 {
+    clock::now_ns()
+}
+
+/// Allocate a fresh process-unique correlation id.
+pub fn new_corr() -> u64 {
+    NEXT_CORR.fetch_add(1, Ordering::Relaxed)
+}
+
+fn next_span_id() -> u64 {
+    NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+fn with_state<R>(f: impl FnOnce(&mut SinkState) -> R) -> Option<R> {
+    if !enabled() {
+        return None;
+    }
+    let mut st = lock_state();
+    st.as_mut().map(f)
+}
+
+/// Map a service `req_id` to its correlation id for the duration of a
+/// dispatch — the scheduler's shard tags carry the req id, not the
+/// corr, so [`corr_for_req`] closes the loop.
+pub fn register_req(req_id: u64, corr: u64) {
+    with_state(|s| {
+        s.req_corr.insert(req_id, corr);
+    });
+}
+
+/// Drop a [`register_req`] mapping once the request is answered.
+pub fn unregister_req(req_id: u64) {
+    with_state(|s| {
+        s.req_corr.remove(&req_id);
+    });
+}
+
+/// Correlation id registered for a service `req_id`, if any.
+pub fn corr_for_req(req_id: u64) -> Option<u64> {
+    with_state(|s| s.req_corr.get(&req_id).copied()).flatten()
+}
+
+/// Recover the corr of a scheduler shard tag (`svc.req-<id>.`).
+pub fn corr_from_tag(tag: &str) -> Option<u64> {
+    let rest = tag.strip_prefix("svc.req-")?;
+    let id: u64 = rest.strip_suffix('.')?.parse().ok()?;
+    corr_for_req(id)
+}
+
+/// RAII tracing window. Arms the global sink on `start`, disarms on
+/// drop. Windows are exclusive: a second `start` blocks until the
+/// first guard drops.
+pub struct Tracing {
+    _window: MutexGuard<'static, ()>,
+}
+
+impl Tracing {
+    pub fn start() -> Tracing {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// Arm with an explicit ring capacity (spans kept; overflow drops
+    /// the oldest and counts them).
+    pub fn with_capacity(cap: usize) -> Tracing {
+        let window = match WINDOW.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *lock_state() = Some(SinkState::new(cap));
+        ENABLED.store(true, Ordering::SeqCst);
+        Tracing { _window: window }
+    }
+
+    /// Adopt corr-less spans into `corr` for the rest of the window
+    /// (`None` clears). Used by replay drivers that trace a cell
+    /// outside the service, where nothing else allocates a corr.
+    pub fn set_ambient(&self, corr: Option<u64>) {
+        if let Some(s) = lock_state().as_mut() {
+            s.ambient = corr;
+        }
+    }
+
+    /// Copy of the spans recorded so far, in record order.
+    pub fn snapshot(&self) -> Vec<Span> {
+        lock_state().as_ref().map(|s| s.ring.iter().cloned().collect()).unwrap_or_default()
+    }
+
+    /// Spans lost to ring overflow so far.
+    pub fn dropped(&self) -> u64 {
+        lock_state().as_ref().map(|s| s.dropped).unwrap_or(0)
+    }
+
+    /// Stop tracing and return the recorded spans.
+    pub fn finish(self) -> Vec<Span> {
+        let spans = self.snapshot();
+        drop(self);
+        spans
+    }
+}
+
+impl Drop for Tracing {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        *lock_state() = None;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recording
+// ---------------------------------------------------------------------------
+
+/// Record a completed span directly. Returns its id when the sink is
+/// armed.
+pub fn complete(
+    name: &str,
+    track: &str,
+    corr: Option<u64>,
+    parent: Option<u64>,
+    t_start: u64,
+    t_end: u64,
+    tags: Vec<(&'static str, Tag)>,
+) -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    let id = next_span_id();
+    with_state(|s| {
+        s.push(Span {
+            id,
+            parent,
+            corr,
+            name: name.to_string(),
+            track: track.to_string(),
+            thread: 0,
+            t_start,
+            t_end: t_end.max(t_start),
+            tags,
+        });
+        id
+    })
+}
+
+/// Record a zero-duration event span (steal, retry, quarantine …).
+pub fn instant(
+    name: &str,
+    track: &str,
+    corr: Option<u64>,
+    parent: Option<u64>,
+    tags: Vec<(&'static str, Tag)>,
+) -> Option<u64> {
+    let t = if enabled() { now_ns() } else { 0 };
+    complete(name, track, corr, parent, t, t, tags)
+}
+
+struct ScopeInner {
+    id: u64,
+    parent: Option<u64>,
+    corr: Option<u64>,
+    name: String,
+    track: String,
+    t_start: u64,
+    tags: Vec<(&'static str, Tag)>,
+}
+
+/// RAII open span: captures the start time when opened, records the
+/// completed span when dropped (or [`end`](SpanScope::end)ed). Inert —
+/// no allocation, no clock read — when the sink is disarmed at open.
+pub struct SpanScope(Option<ScopeInner>);
+
+impl SpanScope {
+    /// Open a span (top-level within its corr; parented later by
+    /// interval containment).
+    pub fn begin(name: &str, track: &str, corr: Option<u64>) -> SpanScope {
+        Self::begin_child(name, track, corr, None)
+    }
+
+    /// An inert scope — for hook sites that pre-check [`enabled`] to
+    /// avoid computing a track label on the disabled fast path.
+    pub fn disabled() -> SpanScope {
+        SpanScope(None)
+    }
+
+    /// Open a span with an explicit parent.
+    pub fn begin_child(
+        name: &str,
+        track: &str,
+        corr: Option<u64>,
+        parent: Option<u64>,
+    ) -> SpanScope {
+        if !enabled() {
+            return SpanScope(None);
+        }
+        SpanScope(Some(ScopeInner {
+            id: next_span_id(),
+            parent,
+            corr,
+            name: name.to_string(),
+            track: track.to_string(),
+            t_start: now_ns(),
+            tags: Vec::new(),
+        }))
+    }
+
+    /// Open a child of this span on the same corr and track.
+    pub fn child(&self, name: &str) -> SpanScope {
+        match &self.0 {
+            Some(i) => Self::begin_child(name, &i.track, i.corr, Some(i.id)),
+            None => SpanScope(None),
+        }
+    }
+
+    /// Attach a typed tag.
+    pub fn tag(&mut self, key: &'static str, value: impl Into<Tag>) {
+        if let Some(i) = &mut self.0 {
+            i.tags.push((key, value.into()));
+        }
+    }
+
+    /// The open span's id, when armed.
+    pub fn id(&self) -> Option<u64> {
+        self.0.as_ref().map(|i| i.id)
+    }
+
+    /// Close and record now (Drop does the same).
+    pub fn end(self) {}
+}
+
+impl Drop for SpanScope {
+    fn drop(&mut self) {
+        let Some(i) = self.0.take() else { return };
+        let t_end = now_ns();
+        with_state(|s| {
+            s.push(Span {
+                id: i.id,
+                parent: i.parent,
+                corr: i.corr,
+                name: i.name,
+                track: i.track,
+                thread: 0,
+                t_start: i.t_start,
+                t_end: t_end.max(i.t_start),
+                tags: i.tags,
+            });
+        });
+    }
+}
+
+/// All recorded spans carrying `corr`, in record order (non-
+/// destructive — the window keeps them).
+pub fn collect_corr(corr: u64) -> Vec<Span> {
+    with_state(|s| s.ring.iter().filter(|sp| sp.corr == Some(corr)).cloned().collect())
+        .unwrap_or_default()
+}
+
+/// Graft a request's device-event Prof slice into the trace: each
+/// [`ProfInfo`] becomes a `dev.<name>` span on its queue track, on the
+/// same timeline (backend `EventTimes` already use the shared process
+/// clock). The queued→submit→start stations ride along as tags.
+pub fn graft_prof(infos: &[ProfInfo], corr: Option<u64>) {
+    if !enabled() {
+        return;
+    }
+    for info in infos {
+        complete(
+            &format!("dev.{}", info.name),
+            &info.queue,
+            corr,
+            None,
+            info.t_start,
+            info.t_end,
+            vec![("queued", Tag::U64(info.t_queued)), ("submit", Tag::U64(info.t_submit))],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_sink_records_nothing_and_scopes_are_inert() {
+        // No window armed: the fast path must refuse everything.
+        assert!(!enabled());
+        let mut sc = SpanScope::begin("svc.request", "svc", Some(1));
+        sc.tag("k", 1u64);
+        assert!(sc.id().is_none());
+        drop(sc);
+        assert!(complete("x", "t", None, None, 0, 1, vec![]).is_none());
+        assert!(instant("x", "t", None, None, vec![]).is_none());
+        assert!(collect_corr(1).is_empty());
+    }
+
+    #[test]
+    fn window_records_scopes_completes_and_ambient_adoption() {
+        let w = Tracing::start();
+        let corr = new_corr();
+        w.set_ambient(Some(corr));
+
+        let mut root = SpanScope::begin("svc.request", "svc", Some(corr));
+        root.tag("req", 7u64);
+        let child = root.child("svc.exec");
+        let child_id = child.id().unwrap();
+        let root_id = root.id().unwrap();
+        drop(child);
+        drop(root);
+        // Corr-less spans adopt the ambient corr.
+        complete("sched.task", "be:sim", None, None, 1, 2, vec![]).unwrap();
+
+        let spans = w.finish();
+        assert!(!enabled());
+        assert_eq!(spans.len(), 3);
+        let by_id = |id: u64| spans.iter().find(|s| s.id == id).unwrap();
+        assert_eq!(by_id(child_id).parent, Some(root_id));
+        assert!(spans.iter().all(|s| s.corr == Some(corr)));
+        let root = by_id(root_id);
+        assert!(root.t_start <= by_id(child_id).t_start);
+        assert!(root.t_end >= by_id(child_id).t_end);
+        assert_eq!(root.tag("req"), Some(&Tag::U64(7)));
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let w = Tracing::with_capacity(4);
+        for i in 0..10u64 {
+            complete("s", "t", Some(i), None, i, i + 1, vec![]);
+        }
+        assert_eq!(w.dropped(), 6);
+        let spans = w.finish();
+        assert_eq!(spans.len(), 4);
+        // The oldest six are gone; the last four survive in order.
+        let corrs: Vec<u64> = spans.iter().map(|s| s.corr.unwrap()).collect();
+        assert_eq!(corrs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn req_registry_resolves_shard_tags() {
+        let w = Tracing::start();
+        let corr = new_corr();
+        register_req(42, corr);
+        assert_eq!(corr_from_tag("svc.req-42."), Some(corr));
+        assert_eq!(corr_from_tag("svc.req-41."), None);
+        assert_eq!(corr_from_tag("svc.batch-42."), None);
+        unregister_req(42);
+        assert_eq!(corr_from_tag("svc.req-42."), None);
+        drop(w);
+    }
+
+    #[test]
+    fn graft_prof_converts_device_slices() {
+        let w = Tracing::start();
+        let infos = vec![ProfInfo {
+            name: "PRNG_4096".to_string(),
+            queue: "svc.req-3.sim".to_string(),
+            t_queued: 10,
+            t_submit: 11,
+            t_start: 12,
+            t_end: 30,
+        }];
+        graft_prof(&infos, Some(9));
+        let spans = w.finish();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "dev.PRNG_4096");
+        assert_eq!(spans[0].track, "svc.req-3.sim");
+        assert_eq!(spans[0].corr, Some(9));
+        assert_eq!((spans[0].t_start, spans[0].t_end), (12, 30));
+    }
+}

@@ -1,0 +1,402 @@
+//! Span-tree assembly: turn a flat span collection into per-request
+//! rooted trees.
+//!
+//! Attachment runs on two rails, in order:
+//!
+//! 1. **Explicit parent ids** are honored when the parent exists in
+//!    the collection; a span naming a missing parent is an *orphan*.
+//! 2. **Interval containment** attaches every remaining span within a
+//!    correlation group to its smallest enclosing span; spans nothing
+//!    encloses compete for root (earliest start wins) and the losers
+//!    attach to the root — simulated backends may model device
+//!    timestamps slightly past the host span that awaited them, so
+//!    strict containment falls back to the root instead of orphaning.
+//!
+//! Cycles from hostile explicit links can never hang assembly: trees
+//! are materialized by walking down from the roots, and anything
+//! unreachable is reported as an orphan.
+
+use std::collections::HashMap;
+
+use super::Span;
+use crate::ccl::prof::export::escape_field;
+
+/// One rooted request tree.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    /// Correlation id shared by the tree's spans (`None` for
+    /// uncorrelated leftovers that formed their own tree).
+    pub corr: Option<u64>,
+    /// Index of the root span in [`Forest::spans`].
+    pub root: usize,
+}
+
+/// Which layers a request tree crossed, by span-name prefix.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Completeness {
+    pub edge: bool,
+    pub svc: bool,
+    pub sched: bool,
+    pub dev: bool,
+}
+
+impl Completeness {
+    /// Full edge-originated coverage: edge → service → shard → device.
+    pub fn full(&self) -> bool {
+        self.edge && self.svc && self.sched && self.dev
+    }
+
+    /// Service-originated coverage (no edge in the path).
+    pub fn service_full(&self) -> bool {
+        self.svc && self.sched && self.dev
+    }
+}
+
+/// An assembled forest: every span attached, every tree rooted.
+#[derive(Clone, Debug, Default)]
+pub struct Forest {
+    pub spans: Vec<Span>,
+    /// Children of each span (indices into `spans`), start-ordered.
+    pub children: Vec<Vec<usize>>,
+    /// One per rooted tree, ordered by corr then root start.
+    pub trees: Vec<Tree>,
+    /// Spans left unattached: missing explicit parents, explicit
+    /// self-links, or members of an explicit-link cycle.
+    pub orphans: Vec<usize>,
+}
+
+impl Forest {
+    /// Assemble trees from a flat span collection.
+    pub fn build(spans: Vec<Span>) -> Forest {
+        let n = spans.len();
+        let by_id: HashMap<u64, usize> = spans.iter().enumerate().map(|(i, s)| (s.id, i)).collect();
+        // corr → member indices (uncorrelated spans each form their own
+        // singleton group unless an explicit parent links them out).
+        let mut groups: HashMap<Option<u64>, Vec<usize>> = HashMap::new();
+        for (i, s) in spans.iter().enumerate() {
+            groups.entry(s.corr).or_default().push(i);
+        }
+
+        // attach[i] = Some(parent index) or None for roots; orphans are
+        // tracked separately and excluded from attachment.
+        let mut attach: Vec<Option<usize>> = vec![None; n];
+        let mut is_orphan = vec![false; n];
+        let mut is_root = vec![false; n];
+
+        for (corr, members) in &groups {
+            // Rail 1: explicit parents.
+            let mut unattached: Vec<usize> = Vec::new();
+            for &i in members {
+                match spans[i].parent {
+                    Some(p) => match by_id.get(&p) {
+                        Some(&pi) if pi != i => attach[i] = Some(pi),
+                        _ => is_orphan[i] = true,
+                    },
+                    None => unattached.push(i),
+                }
+            }
+            // Rail 2: smallest-enclosing containment among the group's
+            // remaining spans (uncorrelated groups skip containment —
+            // nothing relates their members).
+            if corr.is_none() {
+                for &i in &unattached {
+                    is_root[i] = true;
+                }
+                continue;
+            }
+            let mut rootless: Vec<usize> = Vec::new();
+            for &i in &unattached {
+                let (s0, s1) = (spans[i].t_start, spans[i].t_end);
+                let enclosing = members
+                    .iter()
+                    .copied()
+                    .filter(|&j| j != i && !is_orphan[j])
+                    .filter(|&j| {
+                        let (j0, j1) = (spans[j].t_start, spans[j].t_end);
+                        j0 <= s0
+                            && s1 <= j1
+                            // Identical intervals: only the earlier-id
+                            // span may enclose, so ties cannot cycle.
+                            && ((j0, j1) != (s0, s1) || spans[j].id < spans[i].id)
+                    })
+                    .min_by_key(|&j| (spans[j].duration(), spans[j].id));
+                match enclosing {
+                    Some(j) => attach[i] = Some(j),
+                    None => rootless.push(i),
+                }
+            }
+            // Earliest-starting uncontained span roots the tree; any
+            // other uncontained span (device events modeled past the
+            // host wall, clock-skewed stragglers) attaches to it.
+            rootless.sort_by_key(|&i| (spans[i].t_start, spans[i].id));
+            if let Some((&root, rest)) = rootless.split_first() {
+                is_root[root] = true;
+                for &i in rest {
+                    attach[i] = Some(root);
+                }
+            }
+        }
+
+        // Materialize children lists from the roots down; whatever a
+        // walk from the roots cannot reach (explicit-link cycles) is
+        // orphaned.
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            if is_orphan[i] || is_root[i] {
+                continue;
+            }
+            if let Some(p) = attach[i] {
+                children[p].push(i);
+            }
+        }
+        let mut reached = vec![false; n];
+        let mut stack: Vec<usize> = (0..n).filter(|&i| is_root[i]).collect();
+        while let Some(i) = stack.pop() {
+            if std::mem::replace(&mut reached[i], true) {
+                continue;
+            }
+            stack.extend(children[i].iter().copied());
+        }
+        let mut orphans: Vec<usize> = (0..n).filter(|&i| !reached[i]).collect();
+        orphans.sort_unstable();
+        for &i in &orphans {
+            if let Some(p) = attach[i] {
+                children[p].retain(|&c| c != i);
+            }
+        }
+        for c in &mut children {
+            c.sort_by_key(|&i| (spans[i].t_start, spans[i].id));
+        }
+
+        let mut trees: Vec<Tree> = (0..n)
+            .filter(|&i| is_root[i] && reached[i])
+            .map(|i| Tree { corr: spans[i].corr, root: i })
+            .collect();
+        trees.sort_by_key(|t| (t.corr, spans[t.root].t_start, spans[t.root].id));
+
+        Forest { spans, children, trees, orphans }
+    }
+
+    /// Indices of `root` and all its descendants.
+    pub fn subtree(&self, root: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut stack = vec![root];
+        while let Some(i) = stack.pop() {
+            out.push(i);
+            stack.extend(self.children[i].iter().copied());
+        }
+        out
+    }
+
+    /// Layer coverage of one tree, by span-name prefix.
+    pub fn completeness(&self, tree: &Tree) -> Completeness {
+        let mut c = Completeness::default();
+        for i in self.subtree(tree.root) {
+            let name = &self.spans[i].name;
+            c.edge |= name.starts_with("edge.");
+            c.svc |= name.starts_with("svc.");
+            c.sched |= name.starts_with("sched.");
+            c.dev |= name.starts_with("dev.");
+        }
+        c
+    }
+
+    /// The tree rooted for `corr`, if exactly one exists.
+    pub fn tree_for_corr(&self, corr: u64) -> Option<&Tree> {
+        let mut it = self.trees.iter().filter(|t| t.corr == Some(corr));
+        let first = it.next()?;
+        it.next().is_none().then_some(first)
+    }
+
+    /// Indented human rendering, one block per tree.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for tree in &self.trees {
+            match tree.corr {
+                Some(c) => out.push_str(&format!("request corr={c}\n")),
+                None => out.push_str("uncorrelated\n"),
+            }
+            self.render_node(tree.root, 1, &mut out);
+        }
+        if !self.orphans.is_empty() {
+            out.push_str(&format!("{} orphaned span(s):\n", self.orphans.len()));
+            for &i in &self.orphans {
+                let s = &self.spans[i];
+                out.push_str(&format!(
+                    "  !! {} [{}] id={} parent={:?}\n",
+                    escape_field(&s.name),
+                    escape_field(&s.track),
+                    s.id,
+                    s.parent
+                ));
+            }
+        }
+        out
+    }
+
+    fn render_node(&self, i: usize, depth: usize, out: &mut String) {
+        let s = &self.spans[i];
+        let ms = s.duration() as f64 * 1e-6;
+        out.push_str(&format!(
+            "{}{} [{}] {:.3} ms",
+            "  ".repeat(depth),
+            escape_field(&s.name),
+            escape_field(&s.track),
+            ms
+        ));
+        if !s.tags.is_empty() {
+            let tags: Vec<String> = s
+                .tags
+                .iter()
+                .map(|(k, v)| format!("{k}={}", escape_field(&v.to_string())))
+                .collect();
+            out.push_str(&format!("  ({})", tags.join(" ")));
+        }
+        out.push('\n');
+        for &c in &self.children[i] {
+            self.render_node(c, depth + 1, out);
+        }
+    }
+
+    /// TSV rendering, one row per span, fields escaped with the shared
+    /// profiler-export escaper.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("corr\tid\tparent\ttrack\tstart\tend\tname\n");
+        let mut rows: Vec<&Span> = self.spans.iter().collect();
+        rows.sort_by_key(|s| (s.corr, s.t_start, s.id));
+        for s in rows {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                s.corr.map_or_else(|| "-".to_string(), |c| c.to_string()),
+                s.id,
+                s.parent.map_or_else(|| "-".to_string(), |p| p.to_string()),
+                escape_field(&s.track),
+                s.t_start,
+                s.t_end,
+                escape_field(&s.name),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Tag;
+
+    fn span(
+        id: u64,
+        parent: Option<u64>,
+        corr: Option<u64>,
+        name: &str,
+        t0: u64,
+        t1: u64,
+    ) -> Span {
+        Span {
+            id,
+            parent,
+            corr,
+            name: name.to_string(),
+            track: "t".to_string(),
+            thread: 0,
+            t_start: t0,
+            t_end: t1,
+            tags: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn explicit_parent_then_containment_then_root_fallback() {
+        let f = Forest::build(vec![
+            span(1, None, Some(5), "edge.req", 0, 100),
+            span(2, Some(1), Some(5), "edge.decode", 1, 3),
+            span(3, None, Some(5), "svc.request", 5, 90),
+            span(4, None, Some(5), "sched.task", 10, 60),
+            // Ends past svc.request: climbs to the next encloser.
+            span(5, None, Some(5), "dev.K", 50, 95),
+            // Ends past everything (simulated future timestamp):
+            // attaches to the root by fallback.
+            span(6, None, Some(5), "dev.L", 60, 120),
+        ]);
+        assert_eq!(f.trees.len(), 1);
+        assert!(f.orphans.is_empty());
+        let tree = f.tree_for_corr(5).unwrap();
+        assert_eq!(f.spans[tree.root].id, 1);
+        let kids = |id: u64| -> Vec<u64> {
+            let i = f.spans.iter().position(|s| s.id == id).unwrap();
+            f.children[i].iter().map(|&c| f.spans[c].id).collect()
+        };
+        assert_eq!(kids(1), vec![2, 3, 5, 6]);
+        assert_eq!(kids(3), vec![4]);
+    }
+
+    #[test]
+    fn completeness_tracks_layer_prefixes() {
+        let f = Forest::build(vec![
+            span(1, None, Some(7), "edge.req", 0, 100),
+            span(2, None, Some(7), "svc.request", 5, 90),
+            span(3, None, Some(7), "sched.task", 10, 60),
+            span(4, None, Some(7), "dev.K", 12, 40),
+        ]);
+        let c = f.completeness(f.tree_for_corr(7).unwrap());
+        assert!(c.full());
+        let g = Forest::build(vec![
+            span(1, None, Some(8), "svc.request", 5, 90),
+            span(2, None, Some(8), "sched.task", 10, 60),
+        ]);
+        let c = g.completeness(g.tree_for_corr(8).unwrap());
+        assert!(!c.full() && !c.service_full() && c.svc && c.sched);
+    }
+
+    #[test]
+    fn missing_parents_and_cycles_are_orphans_not_hangs() {
+        let f = Forest::build(vec![
+            span(1, None, Some(1), "svc.request", 0, 10),
+            span(2, Some(99), Some(1), "svc.exec", 1, 2), // missing parent
+            span(3, Some(4), Some(1), "sched.a", 3, 4),   // cycle
+            span(4, Some(3), Some(1), "sched.b", 3, 4),   // cycle
+            span(5, Some(5), Some(1), "sched.self", 5, 6), // self-link
+        ]);
+        assert_eq!(f.trees.len(), 1);
+        let orphan_ids: Vec<u64> = f.orphans.iter().map(|&i| f.spans[i].id).collect();
+        assert_eq!(orphan_ids, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn identical_intervals_tie_break_without_cycling() {
+        let f = Forest::build(vec![
+            span(1, None, Some(3), "svc.request", 0, 10),
+            span(2, None, Some(3), "sched.a", 2, 8),
+            span(3, None, Some(3), "sched.b", 2, 8),
+        ]);
+        assert_eq!(f.trees.len(), 1);
+        assert!(f.orphans.is_empty());
+        // Only the earlier id may enclose an identical interval.
+        let i2 = f.spans.iter().position(|s| s.id == 2).unwrap();
+        assert!(f.children[i2].iter().any(|&c| f.spans[c].id == 3));
+    }
+
+    #[test]
+    fn uncorrelated_spans_form_singleton_trees() {
+        let f = Forest::build(vec![
+            span(1, None, None, "sched.plan", 0, 10),
+            span(2, None, None, "sched.task", 2, 8),
+        ]);
+        assert_eq!(f.trees.len(), 2);
+        assert!(f.orphans.is_empty());
+    }
+
+    #[test]
+    fn tsv_escapes_hostile_names() {
+        let mut s = span(1, None, Some(1), "dev.k\tname\n", 0, 10);
+        s.track = "q\\ueue".to_string();
+        s.tags.push(("note", Tag::Str("v".into())));
+        let f = Forest::build(vec![s]);
+        let tsv = f.to_tsv();
+        let row = tsv.lines().nth(1).unwrap();
+        assert_eq!(row.split('\t').count(), 7, "embedded tab must be escaped: {row}");
+        assert!(row.contains("dev.k\\tname\\n"));
+        assert!(row.contains("q\\\\ueue"));
+    }
+}

@@ -101,6 +101,7 @@ fn request_frames_roundtrip_and_reject_every_truncation() {
             deadline_us: (rng >> 7) % 10_000_000,
             iters: 1 + ((rng >> 13) % MAX_ITERS as u64) as u32,
             desc,
+            trace: rng & 2 == 0,
         };
         let enc = f.encode();
         let (len, body) = enc.split_at(4);
@@ -312,6 +313,7 @@ fn shutdown_drains_an_inflight_tcp_request() {
         deadline_us: 0,
         iters: 1,
         desc,
+        trace: false,
     };
     cli.send(&req).expect("send");
     std::thread::sleep(Duration::from_millis(50));

@@ -1,0 +1,285 @@
+//! Integration tests for the end-to-end tracing subsystem: a property
+//! fuzz of the span-tree assembly invariants (unique ids, parent opens
+//! before child, child closes before parent, one rooted tree per
+//! correlated request, no orphans), live service traffic with the
+//! per-request `trace` flag, and a Chrome trace-event export
+//! round-trip through the dependency-free JSON parser.
+
+use std::sync::Arc;
+
+use cf4rs::backend::BackendRegistry;
+use cf4rs::coordinator::{ComputeService, ServiceOpts, WorkloadRequest};
+use cf4rs::rawcl::simexec::{init_seed, xorshift};
+use cf4rs::trace::chrome::{export_chrome, parse_json, queue_summary_spans, validate_chrome};
+use cf4rs::trace::tree::Forest;
+use cf4rs::trace::{Span, Tracing};
+use cf4rs::workload::PrngWorkload;
+
+struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { state: init_seed(seed as u32) | 1 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.state = xorshift(self.state);
+        self.state
+    }
+
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo).max(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property fuzz: Forest::build invariants on synthetic span sets
+// ---------------------------------------------------------------------------
+
+fn mk_span(id: u64, parent: Option<u64>, corr: u64, t_start: u64, t_end: u64) -> Span {
+    Span {
+        id,
+        parent,
+        corr: Some(corr),
+        name: format!("n{id}"),
+        track: "fuzz".to_string(),
+        thread: 0,
+        t_start,
+        t_end,
+        tags: Vec::new(),
+    }
+}
+
+/// Emit a random well-nested span tree for one correlation id: sibling
+/// intervals disjoint, children strictly inside their parent (so the
+/// smallest-enclosing containment rail has a unique answer), roughly
+/// half the spans linked by the explicit-parent rail instead.
+fn gen_tree(
+    g: &mut Gen,
+    spans: &mut Vec<Span>,
+    next_id: &mut u64,
+    corr: u64,
+    parent: Option<u64>,
+    lo: u64,
+    hi: u64,
+    depth: u64,
+) {
+    let id = *next_id;
+    *next_id += 1;
+    // Explicit parent link on a coin flip; containment otherwise.
+    let link = parent.filter(|_| g.range(0, 2) == 0);
+    spans.push(mk_span(id, link, corr, lo, hi));
+    if depth == 0 || hi - lo < 16 {
+        return;
+    }
+    let kids = g.range(0, 4);
+    if kids == 0 {
+        return;
+    }
+    let width = (hi - lo) / kids;
+    for k in 0..kids {
+        let c_lo = lo + k * width + 1 + g.range(0, 3);
+        let c_hi = lo + (k + 1) * width - 2;
+        if c_hi > c_lo + 4 {
+            gen_tree(g, spans, next_id, corr, Some(id), c_lo, c_hi, depth - 1);
+        }
+    }
+}
+
+#[test]
+fn fuzz_span_forest_invariants() {
+    for seed in 0..32u64 {
+        let mut g = Gen::new(seed);
+        let mut spans = Vec::new();
+        let mut next_id = 1u64;
+        let n_groups = g.range(1, 6);
+        let mut group_sizes = Vec::new();
+        for grp in 0..n_groups {
+            let corr = 1000 + grp;
+            let before = spans.len();
+            // Distinct, widely separated time bases keep groups from
+            // containing one another accidentally.
+            let base = grp * 1_000_000;
+            gen_tree(&mut g, &mut spans, &mut next_id, corr, None, base, base + 500_000, 3);
+            group_sizes.push((corr, spans.len() - before));
+        }
+        // A few uncorrelated strays: they must become their own
+        // singleton trees, never orphans, never adopted into a group.
+        let strays = g.range(0, 3);
+        for s in 0..strays {
+            let id = next_id;
+            next_id += 1;
+            let mut sp = mk_span(id, None, 0, 900_000_000 + s * 100, 900_000_050 + s * 100);
+            sp.corr = None;
+            spans.push(sp);
+        }
+        // Deterministic Fisher–Yates shuffle: assembly must not depend
+        // on record order.
+        for i in (1..spans.len()).rev() {
+            let j = g.range(0, i as u64 + 1) as usize;
+            spans.swap(i, j);
+        }
+
+        let n_spans = spans.len();
+        let forest = Forest::build(spans);
+        assert_eq!(forest.spans.len(), n_spans, "seed {seed}: spans preserved");
+        assert!(forest.orphans.is_empty(), "seed {seed}: orphans {:?}", forest.orphans);
+
+        // Unique ids survive assembly.
+        let mut ids: Vec<u64> = forest.spans.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n_spans, "seed {seed}: span ids must be unique");
+
+        // Exactly one rooted tree per correlated group, sized right.
+        for &(corr, size) in &group_sizes {
+            let matching: Vec<_> = forest.trees.iter().filter(|t| t.corr == Some(corr)).collect();
+            assert_eq!(matching.len(), 1, "seed {seed}: one tree for corr {corr}");
+            let got = forest.subtree(matching[0].root).len();
+            assert_eq!(got, size, "seed {seed}: corr {corr} tree spans");
+        }
+        let corrless = forest.trees.iter().filter(|t| t.corr.is_none()).count();
+        assert_eq!(corrless as u64, strays, "seed {seed}: stray singleton trees");
+
+        // Interval sanity on every attached edge: the parent opens
+        // before (or with) the child and closes after (or with) it.
+        for (pi, kids) in forest.children.iter().enumerate() {
+            let p = &forest.spans[pi];
+            for &ci in kids {
+                let c = &forest.spans[ci];
+                assert!(
+                    p.t_start <= c.t_start && c.t_end <= p.t_end,
+                    "seed {seed}: child {} [{}, {}] escapes parent {} [{}, {}]",
+                    c.name,
+                    c.t_start,
+                    c.t_end,
+                    p.name,
+                    p.t_start,
+                    p.t_end,
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live service traffic under the per-request trace flag
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_service_requests_each_assemble_one_full_tree() {
+    let window = Tracing::start();
+    let registry = Arc::new(BackendRegistry::with_default_backends());
+    let svc = ComputeService::start(registry, ServiceOpts::default());
+
+    let traced = 3usize;
+    let untraced = 2usize;
+    let mut handles = Vec::new();
+    for i in 0..(traced + untraced) {
+        let req = WorkloadRequest::new(PrngWorkload::new(2048)).iters(2).trace(i < traced);
+        handles.push(svc.submit(req).expect("admit"));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.wait().expect("response")).collect();
+    svc.shutdown();
+    assert_eq!(window.dropped(), 0, "ring must not overflow on 5 requests");
+    let spans = window.finish();
+
+    // Per-response slices: traced requests carry a service-complete
+    // tree; untraced requests carry nothing.
+    for (i, resp) in responses.iter().enumerate() {
+        if i < traced {
+            let forest = resp.trace().expect("traced request returns spans");
+            let corred: Vec<_> = forest.trees.iter().filter(|t| t.corr.is_some()).collect();
+            assert_eq!(corred.len(), 1, "request {i}: one rooted tree");
+            let c = forest.completeness(corred[0]);
+            assert!(c.service_full(), "request {i}: svc→sched→dev, got {c:?}");
+            assert!(forest.orphans.is_empty(), "request {i}: no orphans");
+        } else {
+            assert!(resp.trace().is_none(), "untraced request {i} must stay dark");
+        }
+    }
+
+    // Window-level: exactly one correlated tree per traced request and
+    // every recorded span attached somewhere.
+    let forest = Forest::build(spans);
+    let corred: Vec<_> = forest.trees.iter().filter(|t| t.corr.is_some()).collect();
+    assert_eq!(corred.len(), traced, "one correlated tree per traced request");
+    for t in &corred {
+        let c = forest.completeness(t);
+        assert!(c.service_full(), "window tree {:?}: got {c:?}", t.corr);
+    }
+    assert!(forest.orphans.is_empty(), "orphans: {:?}", forest.orphans);
+}
+
+// ---------------------------------------------------------------------------
+// Chrome export round-trip through the dependency-free parser
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_export_round_trips_hostile_names_and_summaries() {
+    let hostile = "evil\"name\\with\nnewline\ttab";
+    let spans = vec![
+        Span {
+            id: 1,
+            parent: None,
+            corr: Some(7),
+            name: hostile.to_string(),
+            track: "svc".to_string(),
+            thread: 0,
+            t_start: 1_000,
+            t_end: 9_000,
+            tags: vec![("req", cf4rs::trace::Tag::from(7u64))],
+        },
+        Span {
+            id: 2,
+            parent: Some(1),
+            corr: Some(7),
+            name: "dev.RNG_KERNEL".to_string(),
+            track: "sim:1".to_string(),
+            thread: 1,
+            t_start: 2_000,
+            t_end: 5_000,
+            tags: Vec::new(),
+        },
+        Span {
+            id: 3,
+            parent: Some(1),
+            corr: Some(7),
+            name: "dev.READ_BUFFER".to_string(),
+            track: "sim:1".to_string(),
+            thread: 1,
+            t_start: 5_500,
+            t_end: 8_000,
+            tags: Vec::new(),
+        },
+    ];
+    let mut all = spans.clone();
+    let summaries = queue_summary_spans(&spans);
+    assert!(
+        summaries.iter().any(|s| s.name == "queue.util"),
+        "dev.* spans must produce a per-queue utilisation summary: {summaries:?}"
+    );
+    all.extend(summaries);
+    let doc = export_chrome(&all);
+
+    // Structural validation (what CI also does with `json.tool`).
+    let stats = validate_chrome(&doc).expect("export must parse and validate");
+    assert_eq!(stats.complete_events, all.len());
+    assert!(stats.tracks.iter().any(|t| t == "sim:1"), "tracks: {:?}", stats.tracks);
+
+    // Round trip: the hostile name survives escape + parse exactly.
+    let root = parse_json(&doc).expect("parse");
+    let events = root.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+    assert!(names.contains(&hostile), "hostile name must round-trip: {names:?}");
+    // Device slices land as complete events with microsecond timing.
+    let rng = events
+        .iter()
+        .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("dev.RNG_KERNEL"))
+        .expect("device event present");
+    assert_eq!(rng.get("ph").and_then(|p| p.as_str()), Some("X"));
+    assert_eq!(rng.get("dur").and_then(|d| d.as_num()), Some(3.0), "3000 ns = 3 us");
+}
